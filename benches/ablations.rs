@@ -1,0 +1,28 @@
+//! Regenerates the appendix ablations:
+//! - Fig. C.1 — tensor-precision study (f32 / f64 / bf16-truncated) on
+//!   online PCA, including the RSDM-drift-is-numerical finding (§C.5);
+//! - Fig. C.2/C.3 — λ policy (solve quartic vs λ = 1/2) × learning rate,
+//!   including the divergence boundary of the fixed-λ approximation.
+
+use pogo::config::{ExperimentId, RunConfig};
+
+fn main() {
+    pogo::util::logging::init();
+    let quick = std::env::var("POGO_BENCH_QUICK").is_ok();
+
+    let mut c1 = RunConfig::new(ExperimentId::FigC1Precision);
+    c1.steps = if quick { 60 } else { 200 };
+    c1.quick = quick;
+    if let Err(e) = pogo::experiments::run(&c1) {
+        eprintln!("figc1 failed: {e:#}");
+        std::process::exit(1);
+    }
+
+    let mut c2 = RunConfig::new(ExperimentId::FigC2Lambda);
+    c2.steps = if quick { 60 } else { 200 };
+    c2.quick = quick;
+    if let Err(e) = pogo::experiments::run(&c2) {
+        eprintln!("figc2 failed: {e:#}");
+        std::process::exit(1);
+    }
+}

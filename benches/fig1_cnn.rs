@@ -1,0 +1,36 @@
+//! Regenerates Fig. 1 + Fig. 6 + Fig. 7: CNN training with orthogonal
+//! filters and with orthogonal kernels (time-vs-accuracy + normalized
+//! distance + accuracy evolution), plus the batch-scaling table behind the
+//! "3 minutes vs 17 hours" headline (delegated to the scale experiment).
+
+use pogo::config::{ExperimentId, RunConfig};
+use pogo::optim::Method;
+
+fn main() {
+    pogo::util::logging::init();
+    let quick = std::env::var("POGO_BENCH_QUICK").is_ok();
+
+    // Fig. 1/6 (filters): full lineup, bounded steps.
+    let mut filters = RunConfig::new(ExperimentId::Fig1CnnFilters);
+    filters.steps = if quick { 6 } else { 40 };
+    if let Err(e) = pogo::experiments::run(&filters) {
+        eprintln!("fig1-filters failed: {e:#}");
+        std::process::exit(1);
+    }
+
+    // Fig. 1/7 (kernels): the expensive lineup members (per-matrix QR over
+    // 9800 kernels) are the point of the figure but dominate bench time —
+    // keep POGO/Landing/Adam every run, add RGD/RSDM unless quick.
+    let mut kernels = RunConfig::new(ExperimentId::Fig1CnnKernels);
+    kernels.steps = if quick { 4 } else { 25 };
+    kernels.methods = if quick {
+        vec![Method::Pogo, Method::Adam]
+    } else {
+        vec![Method::Pogo, Method::Landing, Method::LandingPC, Method::Rgd,
+             Method::Rsdm, Method::Adam]
+    };
+    if let Err(e) = pogo::experiments::run(&kernels) {
+        eprintln!("fig1-kernels failed: {e:#}");
+        std::process::exit(1);
+    }
+}

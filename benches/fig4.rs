@@ -1,0 +1,29 @@
+//! Regenerates Fig. 4: online PCA (left) and orthogonal Procrustes (right)
+//! optimality-gap + manifold-distance series for the full method lineup.
+//! Series CSVs land in results/; the printed summary is the figure's
+//! qualitative content (who converges first, who stays feasible).
+//!
+//! Budget control: POGO_BENCH_QUICK=1 shrinks shapes/steps.
+
+use pogo::config::{ExperimentId, RunConfig};
+
+fn main() {
+    pogo::util::logging::init();
+    let quick = std::env::var("POGO_BENCH_QUICK").is_ok();
+
+    let mut pca = RunConfig::new(ExperimentId::Fig4Pca);
+    pca.steps = if quick { 60 } else { 300 };
+    pca.quick = quick;
+    if let Err(e) = pogo::experiments::run(&pca) {
+        eprintln!("fig4-pca failed: {e:#}");
+        std::process::exit(1);
+    }
+
+    let mut proc = RunConfig::new(ExperimentId::Fig4Procrustes);
+    proc.steps = if quick { 60 } else { 300 };
+    proc.quick = quick;
+    if let Err(e) = pogo::experiments::run(&proc) {
+        eprintln!("fig4-procrustes failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,20 @@
+//! Regenerates Fig. 5: O-ViT test accuracy + manifold distance across the
+//! full orthoptimizer lineup (18 orthogonal 128×128 matrices inside a
+//! transformer classifier).
+
+use pogo::config::{ExperimentId, RunConfig};
+use pogo::optim::Method;
+
+fn main() {
+    pogo::util::logging::init();
+    let quick = std::env::var("POGO_BENCH_QUICK").is_ok();
+    let mut cfg = RunConfig::new(ExperimentId::Fig5Ovit);
+    cfg.steps = if quick { 6 } else { 40 };
+    if quick {
+        cfg.methods = vec![Method::Pogo, Method::Rgd, Method::Adam];
+    }
+    if let Err(e) = pogo::experiments::run(&cfg) {
+        eprintln!("fig5 failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,16 @@
+//! Regenerates Fig. 8: squared unitary circuit (Born MPS) bits-per-dim +
+//! manifold distance on the complex Stiefel manifold, §C.4 protocol
+//! (plateau-halving lr, early stopping).
+
+use pogo::config::{ExperimentId, RunConfig};
+
+fn main() {
+    pogo::util::logging::init();
+    let quick = std::env::var("POGO_BENCH_QUICK").is_ok();
+    let mut cfg = RunConfig::new(ExperimentId::Fig8Born);
+    cfg.steps = if quick { 30 } else { 200 };
+    if let Err(e) = pogo::experiments::run(&cfg) {
+        eprintln!("fig8 failed: {e:#}");
+        std::process::exit(1);
+    }
+}

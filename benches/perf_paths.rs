@@ -1,0 +1,112 @@
+//! §Perf instrumentation: decomposes the Fig. 4 hot path into its parts
+//! and measures the optimized alternatives, so EXPERIMENTS.md §Perf has
+//! before/after numbers for each iteration.
+//!
+//! Paths measured at the Fig. 4 PCA shape (300 × 400):
+//! 1. `lossgrad + step` (two dispatches, AAT re-uploaded each step) — the
+//!    baseline two-phase trainer path;
+//! 2. `fused` (ONE dispatch: grad + POGO step + loss + distance, X stays
+//!    in the executable, AAT still uploaded) — the L2 fusion;
+//! 3. the pure pack/unpack marshalling overhead at the CNN kernel shape.
+
+use pogo::bench::{bench, bench_items, print_table, BenchOpts};
+use pogo::linalg::{matmul_at_b, MatF};
+use pogo::manifold::stiefel;
+use pogo::rng::Rng;
+use pogo::runtime::{Arg, Registry};
+
+fn main() {
+    pogo::util::logging::init();
+    let opts = BenchOpts::from_env();
+    let reg = match Registry::open_default() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("skipping: {e}");
+            return;
+        }
+    };
+    let mut rng = Rng::seed_from_u64(0);
+    let (p, n) = (300, 400);
+    let x = stiefel::random_point(p, n, &mut rng);
+    let a = MatF::randn(n, n, &mut rng);
+    let aat = matmul_at_b(&a, &a);
+
+    let lossgrad = reg.get(&format!("pca_lossgrad_{p}x{n}")).unwrap();
+    let step = reg.get(&format!("pogo_step_b1_{p}x{n}")).unwrap();
+    let fused = reg.get(&format!("pca_pogo_fused_{p}x{n}")).unwrap();
+
+    let mut out = Vec::new();
+
+    // Path 1: two-phase (what Trainer does by default).
+    out.push(bench("fig4 step: lossgrad + pogo_step (2 dispatches)", opts, || {
+        let o = lossgrad.run(&[Arg::Mat(&x), Arg::Mat(&aat)]).unwrap();
+        let g = pogo::runtime::literal_to_mat(&o[1], p, n).unwrap();
+        let xs = [x.clone()];
+        let o2 = step
+            .run(&[Arg::Batch(&xs), Arg::Batch(std::slice::from_ref(&g)),
+                   Arg::Scalar(1e-4)])
+            .unwrap();
+        pogo::bench::black_box(&o2);
+    }));
+
+    // Path 2: fused single dispatch.
+    out.push(bench("fig4 step: fused grad+step+loss (1 dispatch)", opts, || {
+        let o = fused
+            .run(&[Arg::Mat(&x), Arg::Mat(&aat), Arg::Scalar(1e-4)])
+            .unwrap();
+        pogo::bench::black_box(&o);
+    }));
+
+    // Component: lossgrad alone (isolates the AAT upload + grad compute).
+    out.push(bench("  component: pca_lossgrad alone", opts, || {
+        let o = lossgrad.run(&[Arg::Mat(&x), Arg::Mat(&aat)]).unwrap();
+        pogo::bench::black_box(&o);
+    }));
+
+    // Component: step alone.
+    let g = MatF::randn(p, n, &mut rng).scale(1e-3);
+    out.push(bench("  component: pogo_step alone", opts, || {
+        let xs = [x.clone()];
+        let o = step
+            .run(&[Arg::Batch(&xs), Arg::Batch(std::slice::from_ref(&g)),
+                   Arg::Scalar(1e-4)])
+            .unwrap();
+        pogo::bench::black_box(&o);
+    }));
+
+    print_table("Fig. 4 hot-path decomposition (300×400)", &out);
+
+    // Marshalling overhead at the kernel-batch shape.
+    let b = 8192;
+    let kernels: Vec<MatF> = (0..b).map(|_| stiefel::random_point(3, 3, &mut rng)).collect();
+    let mut marsh = Vec::new();
+    marsh.push(bench_items("pack_batch 8192×3×3", opts, b as f64, || {
+        pogo::bench::black_box(pogo::runtime::pack_batch(&kernels).unwrap());
+    }));
+    let vadam = reg.get("pogo_vadam_step_b8192_3x3").unwrap();
+    let gs: Vec<MatF> = (0..b)
+        .map(|_| {
+            let g = MatF::randn(3, 3, &mut rng);
+            let nn = g.norm();
+            g.scale(0.3 / nn)
+        })
+        .collect();
+    let m = vec![0.0f32; b * 9];
+    let v = vec![0.0f32; b];
+    marsh.push(bench_items("vadam fused step 8192×3×3 (full dispatch)", opts,
+                           b as f64, || {
+        let o = vadam
+            .run(&[
+                Arg::Batch(&kernels),
+                Arg::Batch(&gs),
+                Arg::F32(&m, vec![b, 3, 3]),
+                Arg::F32(&v, vec![b, 1, 1]),
+                Arg::Scalar(1.0),
+                Arg::Scalar(0.5),
+            ])
+            .unwrap();
+        pogo::bench::black_box(&o);
+    }));
+    print_table("many-matrix marshalling + dispatch (throughput = matrices/s)",
+                &marsh);
+}

@@ -1,0 +1,18 @@
+//! Regenerates the Fig. 1 scalability mechanism: per-matrix step cost vs
+//! number of orthogonal 3×3 matrices (64 → 32768), batched-XLA POGO vs
+//! host-loop POGO vs QR-retraction baselines, with the extrapolated wall
+//! time of the paper's 218 624-kernel × 100-epoch workload.
+
+use pogo::config::{ExperimentId, RunConfig};
+
+fn main() {
+    pogo::util::logging::init();
+    let quick = std::env::var("POGO_BENCH_QUICK").is_ok();
+    let mut cfg = RunConfig::new(ExperimentId::ScaleMatrices);
+    cfg.steps = if quick { 3 } else { 10 };
+    cfg.quick = quick;
+    if let Err(e) = pogo::experiments::run(&cfg) {
+        eprintln!("scale failed: {e:#}");
+        std::process::exit(1);
+    }
+}

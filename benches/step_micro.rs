@@ -1,0 +1,100 @@
+//! Micro-benchmarks: single-step latency of every orthoptimizer at the
+//! paper's shape regimes, on both engines, plus the linalg substrate's
+//! primitive costs. This quantifies the paper's Table-level claim that the
+//! POGO update is "5 matrix products" away from unconstrained SGD while
+//! QR-class retractions pay host-side, non-batchable costs.
+
+use pogo::bench::{bench, bench_items, print_table, BenchOpts, Stats};
+use pogo::coordinator::OptimizerSpec;
+use pogo::linalg::{matmul, matmul_a_bt, qr_retract_rows, MatF};
+use pogo::manifold::stiefel;
+use pogo::optim::{Engine, Method};
+use pogo::rng::Rng;
+use pogo::runtime::Registry;
+
+fn main() {
+    pogo::util::logging::init();
+    let opts = BenchOpts::from_env();
+    let mut rng = Rng::seed_from_u64(0);
+
+    // ---- Substrate primitives at the Fig. 4 shape. ----------------------
+    let (p, n) = (300, 400);
+    let x = stiefel::random_point(p, n, &mut rng);
+    let g = MatF::randn(p, n, &mut rng);
+    let mut prim = Vec::new();
+    let aat = pogo::linalg::matmul_at_b(&g, &g); // n×n
+    prim.push(bench(&format!("matmul {p}x{n} · {n}x{n}"), opts, || {
+        pogo::bench::black_box(matmul(&x, &aat));
+    }));
+    prim.push(bench(&format!("gram X·Xᵀ ({p}x{n})"), opts, || {
+        pogo::bench::black_box(matmul_a_bt(&x, &x));
+    }));
+    prim.push(bench(&format!("QR retraction ({p}x{n})"), opts, || {
+        pogo::bench::black_box(qr_retract_rows(&x));
+    }));
+    print_table("linalg substrate primitives", &prim);
+
+    // ---- Rust-engine optimizer steps at (300, 400). ----------------------
+    let mut rust_steps: Vec<Stats> = Vec::new();
+    for &m in &[Method::Pogo, Method::Landing, Method::LandingPC, Method::Slpg,
+                Method::Rgd, Method::Rsdm] {
+        let spec = OptimizerSpec::new(m, 1e-4).with_submanifold(150);
+        let mut opt = spec.build(None, (1, p, n)).unwrap();
+        let mut xs = vec![x.clone()];
+        let gs = vec![g.scale(1e-3)];
+        rust_steps.push(bench(&format!("{} step {p}x{n} [rust]", m.name()), opts, || {
+            opt.step_group(&mut xs, &gs);
+        }));
+        // keep iterates sane between iterations
+        xs[0] = x.clone();
+    }
+    print_table("optimizer single-matrix step (rust engine)", &rust_steps);
+
+    // ---- XLA-engine steps (matmul-only methods). -------------------------
+    match Registry::open_default() {
+        Ok(reg) => {
+            let mut xla_steps = Vec::new();
+            for &m in &[Method::Pogo, Method::Landing, Method::Slpg] {
+                let spec = OptimizerSpec::new(m, 1e-4).with_engine(Engine::Xla);
+                let mut opt = spec.build(Some(&reg), (1, p, n)).unwrap();
+                let mut xs = vec![x.clone()];
+                let gs = vec![g.scale(1e-3)];
+                opt.step_group(&mut xs, &gs); // warm-up compile
+                xla_steps.push(bench(
+                    &format!("{} step {p}x{n} [xla]", m.name()),
+                    opts,
+                    || {
+                        opt.step_group(&mut xs, &gs);
+                    },
+                ));
+                xs[0] = x.clone();
+            }
+            // Batched 3×3 regime: throughput per matrix.
+            for &b in &[512usize, 4096] {
+                let spec = OptimizerSpec::new(Method::Pogo, 0.1).with_engine(Engine::Xla);
+                let mut opt = spec.build(Some(&reg), (b, 3, 3)).unwrap();
+                let mut xs: Vec<MatF> =
+                    (0..b).map(|_| stiefel::random_point(3, 3, &mut rng)).collect();
+                let gs: Vec<MatF> = (0..b)
+                    .map(|_| {
+                        let g = MatF::randn(3, 3, &mut rng);
+                        let nn = g.norm();
+                        g.scale(0.3 / nn)
+                    })
+                    .collect();
+                opt.step_group(&mut xs, &gs);
+                xla_steps.push(bench_items(
+                    &format!("POGO batched step B={b} 3x3 [xla]"),
+                    opts,
+                    b as f64,
+                    || {
+                        opt.step_group(&mut xs, &gs);
+                    },
+                ));
+            }
+            print_table("optimizer steps (xla engine; throughput = matrices/s)",
+                        &xla_steps);
+        }
+        Err(e) => eprintln!("skipping xla benches: {e}"),
+    }
+}

@@ -1,0 +1,39 @@
+//! The many-matrix regime: train a CNN whose 9 800 3×3 kernels are all
+//! orthogonally constrained (Fig. 1/7's workload), end to end:
+//!
+//! L2/L1: the CNN forward/backward and the batched POGO(VAdam) step are
+//! AOT JAX/Pallas executables; L3 (this program): synthetic-CIFAR batches,
+//! shape-grouped dispatch, Adam on the classifier head, accuracy telemetry.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example cnn_kernels -- --steps 40
+//! ```
+
+use pogo::config::{ExperimentId, RunConfig};
+use pogo::experiments::cnn;
+use pogo::optim::Method;
+use pogo::util::cli::Cli;
+
+fn main() -> anyhow::Result<()> {
+    pogo::util::logging::init();
+    let cli = Cli::new("cnn_kernels", "orthogonal-kernel CNN (Fig. 1/7)")
+        .flag("steps", "40", "training steps")
+        .flag("seed", "0", "rng seed")
+        .flag("methods", "pogo,adam", "methods to compare");
+    let a = cli.parse_env_or_exit(0);
+
+    let mut cfg = RunConfig::new(ExperimentId::Fig1CnnKernels);
+    cfg.steps = a.get_usize("steps").unwrap_or(40);
+    cfg.seed = a.get_u64("seed").unwrap_or(0);
+    cfg.methods = a
+        .get_or("methods", "pogo,adam")
+        .split(',')
+        .filter_map(Method::parse)
+        .collect();
+
+    println!(
+        "Training the Fig. 1 CNN with {} orthogonal 3x3 kernels…",
+        cnn::KERNEL_COUNTS.iter().sum::<usize>()
+    );
+    pogo::experiments::run(&cfg)
+}

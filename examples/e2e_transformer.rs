@@ -1,0 +1,225 @@
+//! END-TO-END VALIDATION DRIVER (DESIGN.md §6): train a causal transformer
+//! LM whose 16 attention projections are orthogonally constrained and
+//! updated by POGO, on a real (synthetic-corpus) next-token workload.
+//!
+//! Every layer of the stack is on the path:
+//!   L1  batched POGO Pallas kernel            (inside the step program)
+//!   L2  transformer fwd/bwd JAX graph          (lm_lossgrad artifact)
+//!   L3  this coordinator: data, routing, Adam for free params, telemetry
+//!
+//! The loss curve (nats/token) must fall from ~ln 64 ≈ 4.16 toward the
+//! corpus' conditional-entropy floor (~1.0) while every attention matrix
+//! stays on St(256, 256). Results are logged to results/e2e_lm_*.csv and
+//! recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_transformer -- --steps 300
+//! ```
+
+use pogo::coordinator::{OptimizerSpec, ParamStore, Trainer, TrainerConfig};
+use pogo::data::corpus::Corpus;
+use pogo::linalg::MatF;
+use pogo::manifold::stiefel;
+use pogo::optim::base::BaseOptKind;
+use pogo::optim::{Engine, Method};
+use pogo::rng::Rng;
+use pogo::runtime::{Arg, Registry};
+use pogo::util::cli::Cli;
+
+// Mirrors python/compile/models/transformer.py.
+const N_ORTH: usize = 16;
+const DIM: usize = 256;
+const LAYERS: usize = 4;
+const VOCAB: usize = 64;
+const SEQ: usize = 128;
+const BATCH: usize = 8;
+const MLP_HIDDEN: usize = 4 * DIM;
+
+fn main() -> anyhow::Result<()> {
+    pogo::util::logging::init();
+    let cli = Cli::new("e2e_transformer", "end-to-end LM training driver")
+        .flag("steps", "300", "training steps")
+        .flag("seed", "0", "rng seed")
+        .flag("lr", "0.5", "POGO learning rate (VAdam base)")
+        .flag("eval-every", "20", "validation cadence");
+    let a = cli.parse_env_or_exit(0);
+    let steps = a.get_usize("steps").unwrap_or(300);
+    let seed = a.get_u64("seed").unwrap_or(0);
+    let lr = a.get_f64("lr").unwrap_or(0.5);
+    let eval_every = a.get_usize("eval-every").unwrap_or(20);
+
+    let reg = Registry::open_default()?;
+    let lossgrad = reg.get("lm_lossgrad")?;
+    let evaler = reg.get("lm_eval")?;
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut corpus = Corpus::new(seed);
+    let eval_tokens = corpus.batch(BATCH, SEQ + 1);
+
+    // ---- Parameter store: 16 orthogonal (256,256) + free the rest. -----
+    let mut store = ParamStore::new();
+    for i in 0..N_ORTH {
+        store.add_stiefel_keyed(
+            format!("attn_{i}"),
+            stiefel::random_point(DIM, DIM, &mut rng),
+            "attn",
+        );
+    }
+    let tok_idx = store.add_free("tok_emb", MatF::randn(VOCAB, DIM, &mut rng).scale(0.02));
+    let pos_idx = store.add_free("pos_emb", MatF::randn(SEQ, DIM, &mut rng).scale(0.02));
+    let mut w1_idx = Vec::new();
+    let mut w2_idx = Vec::new();
+    for l in 0..LAYERS {
+        w1_idx.push(store.add_free(
+            format!("mlp_w1_{l}"),
+            MatF::randn(DIM, MLP_HIDDEN, &mut rng).scale(0.02),
+        ));
+        w2_idx.push(store.add_free(
+            format!("mlp_w2_{l}"),
+            MatF::randn(MLP_HIDDEN, DIM, &mut rng).scale(0.02),
+        ));
+    }
+    let head_idx = store.add_free("head", MatF::randn(DIM, VOCAB, &mut rng).scale(0.02));
+    let n_params = store.len();
+    println!(
+        "transformer: {} params ({} scalars), {} orthogonal attention matrices",
+        n_params,
+        store.num_scalars(),
+        N_ORTH
+    );
+
+    // POGO(VAdam) on the orthogonal group via the AOT (Pallas) step;
+    // Adam on everything else.
+    let spec = OptimizerSpec::new(Method::Pogo, lr)
+        .with_base(BaseOptKind::vadam())
+        .with_engine(Engine::Xla);
+    let mut tr = Trainer::new(
+        store,
+        spec,
+        Some(&reg),
+        TrainerConfig { max_steps: steps, log_every: eval_every, free_lr: 1e-3,
+                        ..Default::default() },
+    )?;
+
+    // ---- Gradient source: one lm_lossgrad dispatch per step. -----------
+    let pack_args = |store: &ParamStore, tokens: &[i32]| -> anyhow::Result<Vec<MatF>> {
+        let _ = tokens;
+        let orth: Vec<MatF> = (0..N_ORTH).map(|i| store.mat(i).clone()).collect();
+        Ok(orth)
+    };
+    let _ = pack_args; // (packing happens inline below)
+
+    let run_lossgrad = |store: &ParamStore,
+                        tokens: &[i32]|
+     -> anyhow::Result<(f64, Vec<MatF>)> {
+        let orth: Vec<MatF> = (0..N_ORTH).map(|i| store.mat(i).clone()).collect();
+        let orth_packed = pogo::runtime::pack_batch(&orth)?;
+        let w1: Vec<MatF> = w1_idx.iter().map(|&i| store.mat(i).clone()).collect();
+        let w2: Vec<MatF> = w2_idx.iter().map(|&i| store.mat(i).clone()).collect();
+        let w1_packed = pogo::runtime::pack_batch(&w1)?;
+        let w2_packed = pogo::runtime::pack_batch(&w2)?;
+        let outs = lossgrad.run(&[
+            Arg::F32(&orth_packed, vec![N_ORTH, DIM, DIM]),
+            Arg::Mat(store.mat(tok_idx)),
+            Arg::Mat(store.mat(pos_idx)),
+            Arg::F32(&w1_packed, vec![LAYERS, DIM, MLP_HIDDEN]),
+            Arg::F32(&w2_packed, vec![LAYERS, MLP_HIDDEN, DIM]),
+            Arg::Mat(store.mat(head_idx)),
+            Arg::I32(tokens, vec![BATCH, SEQ + 1]),
+        ])?;
+        let loss = pogo::runtime::literal_to_scalar(&outs[0])? as f64;
+        // Unpack gradients back into store order.
+        let mut grads = vec![MatF::zeros(1, 1); n_params];
+        let g_orth = pogo::runtime::literal_to_vec(&outs[1])?;
+        for i in 0..N_ORTH {
+            let per = DIM * DIM;
+            grads[i] = MatF::from_vec(DIM, DIM, g_orth[i * per..(i + 1) * per].to_vec());
+        }
+        grads[tok_idx] = pogo::runtime::literal_to_mat(&outs[2], VOCAB, DIM)?;
+        grads[pos_idx] = pogo::runtime::literal_to_mat(&outs[3], SEQ, DIM)?;
+        let g_w1 = pogo::runtime::literal_to_vec(&outs[4])?;
+        let g_w2 = pogo::runtime::literal_to_vec(&outs[5])?;
+        for l in 0..LAYERS {
+            let per1 = DIM * MLP_HIDDEN;
+            grads[w1_idx[l]] =
+                MatF::from_vec(DIM, MLP_HIDDEN, g_w1[l * per1..(l + 1) * per1].to_vec());
+            grads[w2_idx[l]] =
+                MatF::from_vec(MLP_HIDDEN, DIM, g_w2[l * per1..(l + 1) * per1].to_vec());
+        }
+        grads[head_idx] = pogo::runtime::literal_to_mat(&outs[6], DIM, VOCAB)?;
+        Ok((loss, grads))
+    };
+
+    let eval_loss = |store: &ParamStore| -> anyhow::Result<f64> {
+        let orth: Vec<MatF> = (0..N_ORTH).map(|i| store.mat(i).clone()).collect();
+        let orth_packed = pogo::runtime::pack_batch(&orth)?;
+        let w1: Vec<MatF> = w1_idx.iter().map(|&i| store.mat(i).clone()).collect();
+        let w2: Vec<MatF> = w2_idx.iter().map(|&i| store.mat(i).clone()).collect();
+        let w1_packed = pogo::runtime::pack_batch(&w1)?;
+        let w2_packed = pogo::runtime::pack_batch(&w2)?;
+        let outs = evaler.run(&[
+            Arg::F32(&orth_packed, vec![N_ORTH, DIM, DIM]),
+            Arg::Mat(store.mat(tok_idx)),
+            Arg::Mat(store.mat(pos_idx)),
+            Arg::F32(&w1_packed, vec![LAYERS, DIM, MLP_HIDDEN]),
+            Arg::F32(&w2_packed, vec![LAYERS, MLP_HIDDEN, DIM]),
+            Arg::Mat(store.mat(head_idx)),
+            Arg::I32(&eval_tokens, vec![BATCH, SEQ + 1]),
+        ])?;
+        Ok(pogo::runtime::literal_to_scalar(&outs[0])? as f64)
+    };
+
+    // ---- Training loop. -------------------------------------------------
+    println!(
+        "{:>6} {:>10} {:>10} {:>12} {:>10}",
+        "step", "train", "val", "‖XXᵀ−I‖max", "t(s)"
+    );
+    let floor = Corpus::new(seed).entropy_floor_nats();
+    let sw = pogo::util::Stopwatch::start();
+    for s in 0..steps {
+        let tokens = corpus.batch(BATCH, SEQ + 1);
+        let loss = {
+            let mut src =
+                |store: &ParamStore| run_lossgrad(store, &tokens);
+            tr.step(&mut src)?
+        };
+        if s % eval_every == 0 || s + 1 == steps {
+            let val = eval_loss(&tr.store)?;
+            let d = tr.store.max_stiefel_distance();
+            tr.log.record(tr.step_idx(), &[
+                ("loss", loss),
+                ("val_loss", val),
+                ("distance", d),
+            ]);
+            println!(
+                "{:>6} {:>10.4} {:>10.4} {:>12.2e} {:>10.1}",
+                s,
+                loss,
+                val,
+                d,
+                sw.seconds()
+            );
+        }
+    }
+
+    let csv = pogo::repo_root().join("results/e2e_lm_pogo.csv");
+    tr.log.write_csv(&csv)?;
+    let final_val = tr.log.last("val_loss").unwrap_or(f64::NAN);
+    let d = tr.store.max_stiefel_distance();
+    println!("\nfinal val loss {final_val:.4} nats/token (uniform ln64 = {:.3}, corpus",
+             (VOCAB as f64).ln());
+    println!("conditional-entropy floor ≈ {floor:.3}); max manifold distance {d:.2e}");
+    println!("series → {}", csv.display());
+    if steps >= 200 {
+        // Success = clearly below the uniform prior ln(V) ≈ 4.159 with a
+        // monotone trend (reaching the ~1.0 floor takes tens of thousands
+        // of CPU steps; the composition proof only needs real learning).
+        let uniform = (VOCAB as f64).ln();
+        anyhow::ensure!(
+            final_val < uniform - 0.25,
+            "LM failed to learn (val {final_val} vs uniform {uniform:.3})"
+        );
+    }
+    anyhow::ensure!(d < 1e-2, "attention matrices left the manifold ({d})");
+    println!("E2E OK: all three layers composed on a real training workload.");
+    Ok(())
+}

@@ -1,0 +1,267 @@
+"""AOT pipeline: lower every L2 program to HLO text + write the manifest.
+
+`make artifacts` runs this once; the Rust runtime (`rust/src/runtime/`)
+reads `artifacts/manifest.json`, compiles each `.hlo.txt` with the PJRT CPU
+client and executes them from the request path. Python never runs again.
+
+Interchange is HLO **text** (not serialized protos): jax ≥ 0.5 emits
+64-bit instruction ids that the xla crate's xla_extension 0.5.1 rejects;
+the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--quick] [--full]
+    python -m compile.aot --list
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from . import model, shapes
+from .models import born, cnn, transformer, vit
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+class Entry:
+    """One AOT artifact: a program at fixed input shapes."""
+
+    def __init__(self, name, fn, specs, input_names, tags=()):
+        self.name = name
+        self.fn = fn
+        self.specs = specs
+        self.input_names = input_names
+        self.tags = list(tags)
+
+    def lower(self) -> str:
+        return model.to_hlo_text(self.fn, *self.specs)
+
+    def describe(self):
+        outs = jax.eval_shape(self.fn, *self.specs)
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        return {
+            "file": f"{self.name}.hlo.txt",
+            "inputs": [
+                {"name": n, "shape": list(s.shape), "dtype": str(s.dtype)}
+                for n, s in zip(self.input_names, self.specs)
+            ],
+            "outputs": [
+                {"shape": list(o.shape), "dtype": str(o.dtype)} for o in outs
+            ],
+            "tags": self.tags,
+        }
+
+
+def _pogo_entries(reg, tag, b, p, n):
+    """POGO/Landing/SLPG step programs for one (B, p, n) group shape."""
+    x, g, eta = f32(b, p, n), f32(b, p, n), f32(1)
+    key = f"b{b}_{p}x{n}"
+    reg.append(Entry(f"pogo_step_{key}", model.pogo_step_program,
+                     [x, g, eta], ["x", "g", "eta"], [tag, "step"]))
+    reg.append(Entry(
+        f"pogo_vadam_step_{key}", model.pogo_vadam_step_program,
+        [x, g, f32(b, p, n), f32(b, 1, 1), f32(1), eta],
+        ["x", "g", "m", "v", "t", "eta"], [tag, "step"]))
+    reg.append(Entry(
+        f"landing_step_{key}", model.landing_step_program,
+        [x, g, eta, f32(1), f32(1)], ["x", "g", "eta", "attraction", "eps"],
+        [tag, "step"]))
+    reg.append(Entry(f"slpg_step_{key}", model.slpg_step_program,
+                     [x, g, eta], ["x", "g", "eta"], [tag, "step"]))
+    reg.append(Entry(f"pogo_coeffs_{key}", model.pogo_landing_coeffs_program,
+                     [x, g, eta], ["x", "g", "eta"], [tag, "step"]))
+    reg.append(Entry(f"pogo_normal_{key}", model.pogo_normal_program,
+                     [f32(b, p, n), f32(b)], ["m", "lam"], [tag, "step"]))
+    reg.append(Entry(f"distance_{key}", model.distance_program,
+                     [x], ["x"], [tag, "telemetry"]))
+
+
+def build_registry(quick: bool, full: bool):
+    reg: list[Entry] = []
+
+    # -- Integration-test shapes (always emitted; rust/tests depend on them).
+    b, p, n = shapes.TEST_B, shapes.TEST_P, shapes.TEST_N
+    _pogo_entries(reg, "test", b, p, n)
+    reg.append(Entry(
+        "pogo_step_complex_test",
+        model.pogo_step_complex_program,
+        [f32(2, 4, 8)] * 4 + [f32(1)],
+        ["xr", "xi", "gr", "gi", "eta"], ["test", "step"]))
+    reg.append(Entry(
+        "pca_lossgrad_test",
+        model.pca_lossgrad_program,
+        [f32(p, n), f32(n, n)], ["x", "aat"], ["test", "lossgrad"]))
+    if quick:
+        return reg
+
+    # -- Fig. 4: PCA / Procrustes (scaled shapes; --full adds paper sizes).
+    pca_shapes = [(shapes.PCA_P, shapes.PCA_N)]
+    proc_shapes = [(shapes.PROC_N, shapes.PROC_N)]
+    if full:
+        pca_shapes.append((shapes.PCA_FULL_P, shapes.PCA_FULL_N))
+        proc_shapes.append((shapes.PROC_FULL_N, shapes.PROC_FULL_N))
+    for (pp, nn) in pca_shapes:
+        _pogo_entries(reg, "fig4-pca", 1, pp, nn)
+        reg.append(Entry(
+            f"pca_lossgrad_{pp}x{nn}", model.pca_lossgrad_program,
+            [f32(pp, nn), f32(nn, nn)], ["x", "aat"], ["fig4-pca", "lossgrad"]))
+        reg.append(Entry(
+            f"pca_pogo_fused_{pp}x{nn}", model.pca_pogo_fused_program,
+            [f32(pp, nn), f32(nn, nn), f32(1)], ["x", "aat", "eta"],
+            ["fig4-pca", "fused"]))
+    for (pp, nn) in proc_shapes:
+        _pogo_entries(reg, "fig4-proc", 1, pp, nn)
+        reg.append(Entry(
+            f"procrustes_lossgrad_{pp}x{nn}", model.procrustes_lossgrad_program,
+            [f32(pp, nn), f32(pp, pp), f32(pp, nn)], ["x", "a", "b"],
+            ["fig4-proc", "lossgrad"]))
+        reg.append(Entry(
+            f"procrustes_pogo_fused_{pp}x{nn}",
+            model.procrustes_pogo_fused_program,
+            [f32(pp, nn), f32(pp, pp), f32(pp, nn), f32(1)],
+            ["x", "a", "b", "eta"], ["fig4-proc", "fused"]))
+
+    # -- Fig. 1/6/7: CNN, both parameterizations.
+    bt, be = shapes.CNN_BATCH, shapes.CNN_EVAL_BATCH
+    fshapes = cnn.FILTER_SHAPES
+    img_t, lab_t = f32(bt, 32, 32, 3), i32(bt)
+    img_e, lab_e = f32(be, 32, 32, 3), i32(be)
+    fparams = [f32(*s) for s in fshapes] + [f32(*cnn.HEAD_SHAPE)]
+    fnames = ["w1", "w2", "w3", "head"]
+    reg.append(Entry("cnn_filters_lossgrad", cnn.cnn_filters_lossgrad_program,
+                     fparams + [img_t, lab_t], fnames + ["images", "labels"],
+                     ["fig1-cnn", "lossgrad"]))
+    reg.append(Entry("cnn_filters_eval", cnn.cnn_filters_eval_program,
+                     fparams + [img_e, lab_e], fnames + ["images", "labels"],
+                     ["fig1-cnn", "eval"]))
+    kparams = [f32(c, 3, 3) for c in cnn.KERNEL_COUNTS] + [f32(*cnn.HEAD_SHAPE)]
+    knames = ["k1", "k2", "k3", "head"]
+    reg.append(Entry("cnn_kernels_lossgrad", cnn.cnn_kernels_lossgrad_program,
+                     kparams + [img_t, lab_t], knames + ["images", "labels"],
+                     ["fig1-cnn", "lossgrad"]))
+    reg.append(Entry("cnn_kernels_eval", cnn.cnn_kernels_eval_program,
+                     kparams + [img_e, lab_e], knames + ["images", "labels"],
+                     ["fig1-cnn", "eval"]))
+    # Per-filter-group and per-kernel-group optimizer steps.
+    for (o, ik) in fshapes:
+        _pogo_entries(reg, "fig1-cnn", 1, o, ik)
+    for c in cnn.KERNEL_COUNTS:
+        _pogo_entries(reg, "fig1-cnn", c, 3, 3)
+
+    # -- Fig. 5: O-ViT.
+    vb, ve = shapes.VIT_BATCH, shapes.VIT_EVAL_BATCH
+    vparams = [f32(vit.N_ORTH, *vit.ORTH_SHAPE), f32(*vit.PATCH_W_SHAPE),
+               f32(*vit.POS_SHAPE), f32(*vit.HEAD_SHAPE)]
+    vnames = ["orth", "patch_w", "pos", "head"]
+    reg.append(Entry("vit_lossgrad", vit.vit_lossgrad_program,
+                     vparams + [f32(vb, 32, 32, 3), i32(vb)],
+                     vnames + ["images", "labels"], ["fig5-vit", "lossgrad"]))
+    reg.append(Entry("vit_eval", vit.vit_eval_program,
+                     vparams + [f32(ve, 32, 32, 3), i32(ve)],
+                     vnames + ["images", "labels"], ["fig5-vit", "eval"]))
+    _pogo_entries(reg, "fig5-vit", vit.N_ORTH, *vit.ORTH_SHAPE)
+
+    # -- Fig. 8: Born-machine MPS (squared unitary circuit).
+    bb = shapes.BORN_BATCH
+    core_specs = []
+    core_names = []
+    for t, (pp, nn) in enumerate(born.core_shapes()):
+        core_specs += [f32(pp, nn), f32(pp, nn)]
+        core_names += [f"re_{t}", f"im_{t}"]
+    reg.append(Entry("born_lossgrad", born.born_lossgrad_program,
+                     core_specs + [i32(bb, born.T_SITES)],
+                     core_names + ["bits"], ["fig8-born", "lossgrad"]))
+    reg.append(Entry("born_eval", born.born_eval_program,
+                     core_specs + [i32(512, born.T_SITES)],
+                     core_names + ["bits"], ["fig8-born", "eval"]))
+
+    # -- Scalability sweep (the Fig. 1 "3 min vs 17 h" mechanism): batched
+    # 3×3 POGO steps at growing batch sizes.
+    for bsz in (64, 512, 4096, 32768):
+        reg.append(Entry(
+            f"pogo_step_b{bsz}_3x3", model.pogo_step_program,
+            [f32(bsz, 3, 3), f32(bsz, 3, 3), f32(1)], ["x", "g", "eta"],
+            ["scale", "step"]))
+        reg.append(Entry(
+            f"pogo_vadam_step_b{bsz}_3x3", model.pogo_vadam_step_program,
+            [f32(bsz, 3, 3), f32(bsz, 3, 3), f32(bsz, 3, 3), f32(bsz, 1, 1),
+             f32(1), f32(1)],
+            ["x", "g", "m", "v", "t", "eta"], ["scale", "step"]))
+
+    # -- E2E transformer LM.
+    lb = shapes.LM_BATCH
+    lm_params = [
+        f32(transformer.N_ORTH, *transformer.ORTH_SHAPE),
+        f32(*transformer.TOK_EMB_SHAPE), f32(*transformer.POS_EMB_SHAPE),
+        f32(transformer.LAYERS, *transformer.MLP_W1_SHAPE),
+        f32(transformer.LAYERS, *transformer.MLP_W2_SHAPE),
+        f32(*transformer.HEAD_SHAPE),
+    ]
+    lm_names = ["orth", "tok_emb", "pos_emb", "mlp_w1s", "mlp_w2s", "head"]
+    reg.append(Entry("lm_lossgrad", transformer.lm_lossgrad_program,
+                     lm_params + [i32(lb, transformer.SEQ + 1)],
+                     lm_names + ["tokens"], ["e2e-lm", "lossgrad"]))
+    reg.append(Entry("lm_eval", transformer.lm_eval_program,
+                     lm_params + [i32(lb, transformer.SEQ + 1)],
+                     lm_names + ["tokens"], ["e2e-lm", "eval"]))
+    _pogo_entries(reg, "e2e-lm", transformer.N_ORTH, *transformer.ORTH_SHAPE)
+
+    return reg
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="only the integration-test artifacts")
+    ap.add_argument("--full", action="store_true",
+                    help="also emit the paper's full Fig. 4 shapes")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on entry names")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    reg = build_registry(args.quick, args.full)
+    if args.only:
+        reg = [e for e in reg if args.only in e.name]
+    if args.list:
+        for e in reg:
+            print(e.name, [tuple(s.shape) for s in e.specs])
+        return
+
+    import os
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"version": 1, "entries": {}}
+    t0 = time.time()
+    for i, e in enumerate(reg):
+        t1 = time.time()
+        text = e.lower()
+        path = os.path.join(args.out_dir, f"{e.name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"][e.name] = e.describe()
+        print(f"[{i + 1:>3}/{len(reg)}] {e.name:<42} "
+              f"{len(text) / 1024:>8.1f} KiB  {time.time() - t1:>5.1f}s",
+              file=sys.stderr)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {len(reg)} artifacts in {time.time() - t0:.1f}s "
+          f"to {args.out_dir}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,136 @@
+"""L1 Pallas kernel: the batched POGO update (paper Alg. 1, λ = 1/2).
+
+One grid step processes one matrix of the ``(B, p, n)`` batch; the whole
+update — relative gradient, intermediate step, proximal normal step — runs
+out of VMEM with five MXU matmuls and no HBM round-trips:
+
+    XG   = X Gᵀ              (p×p)   MXU
+    XX   = X Xᵀ              (p×p)   MXU
+    R    = ½(XX·G − XG·X)    (p×n)   2 MXU matmuls
+    M    = X − η R                   VPU
+    C    = M Mᵀ − I          (p×p)   MXU
+    X⁺   = M − λ C·M         (p×n)   MXU + VPU
+
+TPU mapping notes (DESIGN.md §Hardware-Adaptation):
+
+- The paper's shapes fall in two regimes. The *many-small* regime
+  (thousands of 3×3 kernels, Fig. 1) pads each matrix to one (8, 128)
+  tile — the grid over B is the only parallel dimension and the MXU sees
+  a stream of tiny fused products; this is where batching beats per-matrix
+  QR by orders of magnitude. The *single-large* regime (Fig. 4,
+  2000×2000) exceeds VMEM (4 f32 buffers × 16 MB); a production TPU kernel
+  tiles p into 256-row stripes with a k-loop accumulator for the p×p
+  grams — the stripe variant of the same schedule is exercised by
+  `gram.py` (tiled gram-residual kernel). Under `interpret=True` both
+  regimes execute identically, so correctness is validated here and the
+  tiling structure is validated in gram.py.
+
+`interpret=True` is mandatory on this image: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pogo_kernel(x_ref, g_ref, o_ref, *, eta: float, lam: float):
+    """Pallas kernel body for one (1, p, n) block."""
+    x = x_ref[0]  # (p, n) in VMEM
+    g = g_ref[0]
+    p = x.shape[0]
+    # Relative gradient in small-gram form (all products p×p or p×n).
+    xx = jnp.dot(x, x.T, preferred_element_type=jnp.float32)   # MXU
+    xg = jnp.dot(x, g.T, preferred_element_type=jnp.float32)   # MXU
+    r = 0.5 * (jnp.dot(xx, g, preferred_element_type=jnp.float32)
+               - jnp.dot(xg, x, preferred_element_type=jnp.float32))
+    m = x - eta * r
+    c = jnp.dot(m, m.T, preferred_element_type=jnp.float32) - jnp.eye(
+        p, dtype=jnp.float32)
+    o_ref[0] = m - lam * jnp.dot(c, m, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("eta", "lam"))
+def pogo_step(x, g, eta: float, lam: float = 0.5):
+    """Batched POGO step via the Pallas kernel.
+
+    Args:
+      x: (B, p, n) float32, points on (or near) St(p, n).
+      g: (B, p, n) float32, Euclidean gradients (already base-optimized).
+      eta: learning rate (static).
+      lam: normal-step size (static; 0.5 per Thm 3.5).
+
+    Returns:
+      (B, p, n) float32 updated points.
+    """
+    b, p, n = x.shape
+    return pl.pallas_call(
+        functools.partial(_pogo_kernel, eta=eta, lam=lam),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, p, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, p, n), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, p, n), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, p, n), jnp.float32),
+        interpret=True,
+    )(x, g)
+
+
+def _pogo_dyn_kernel(eta_ref, x_ref, g_ref, o_ref, *, lam: float):
+    """Variant with η as a runtime scalar (prefetched operand) so the L3
+    scheduler can anneal the learning rate without recompiling."""
+    eta = eta_ref[0]
+    x = x_ref[0]
+    g = g_ref[0]
+    p = x.shape[0]
+    xx = jnp.dot(x, x.T, preferred_element_type=jnp.float32)
+    xg = jnp.dot(x, g.T, preferred_element_type=jnp.float32)
+    r = 0.5 * (jnp.dot(xx, g, preferred_element_type=jnp.float32)
+               - jnp.dot(xg, x, preferred_element_type=jnp.float32))
+    m = x - eta * r
+    c = jnp.dot(m, m.T, preferred_element_type=jnp.float32) - jnp.eye(
+        p, dtype=jnp.float32)
+    o_ref[0] = m - lam * jnp.dot(c, m, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("lam",))
+def pogo_step_dyn(x, g, eta, lam: float = 0.5):
+    """Batched POGO step with runtime learning rate.
+
+    `eta` is a shape-(1,) float32 array; everything else as `pogo_step`.
+    This is the variant AOT-compiled for the Rust hot path (the coordinator
+    anneals η without carrying N executables).
+    """
+    b, p, n = x.shape
+    eta = jnp.asarray(eta, jnp.float32).reshape((1,))
+    return pl.pallas_call(
+        functools.partial(_pogo_dyn_kernel, lam=lam),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1, p, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, p, n), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, p, n), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, p, n), jnp.float32),
+        interpret=True,
+    )(eta, x, g)
+
+
+def vmem_bytes(p: int, n: int) -> int:
+    """Estimated VMEM working set of one grid step (f32): X, G, R/M, X⁺
+    (p×n each) + XX, XG, C (p×p each). Used by DESIGN.md's table and the
+    artifact manifest metadata."""
+    return 4 * (4 * p * n + 3 * p * p)
+
+
+def mxu_flops(p: int, n: int) -> int:
+    """MXU flop count of one matrix update (5 products, 2pn·p each-ish):
+    2·p²·n (XGᵀ) + 2·p²·n (XXᵀ) + 2·p²·n (XX·G) + 2·p²·n (XG·X)
+    + 2·p²·n (MMᵀ) + 2·p²·n (C·M) = 12·p²·n."""
+    return 12 * p * p * n

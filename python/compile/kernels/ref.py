@@ -1,0 +1,168 @@
+"""Pure-jnp oracles for every kernel and optimizer step (L1 correctness).
+
+These are the *reference semantics*: the Pallas kernels (pogo_step.py,
+gram.py) and the Rust engine are both tested against these functions.
+Everything is written for batched inputs ``(B, p, n)``; single matrices are
+``B = 1``.
+
+Shapes follow the paper: wide row-orthogonal X in St(p, n), X Xᵀ = I_p.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def skew(a):
+    """Skew-symmetric part of a square (batched) matrix."""
+    return 0.5 * (a - jnp.swapaxes(a, -1, -2))
+
+
+def sym(a):
+    """Symmetric part of a square (batched) matrix."""
+    return 0.5 * (a + jnp.swapaxes(a, -1, -2))
+
+
+def gram_residual_ref(x):
+    """C = X Xᵀ − I_p, batched."""
+    p = x.shape[-2]
+    return jnp.einsum("...ik,...jk->...ij", x, x) - jnp.eye(p, dtype=x.dtype)
+
+
+def stiefel_distance_ref(x):
+    """‖X Xᵀ − I‖_F per batch element."""
+    c = gram_residual_ref(x)
+    return jnp.sqrt(jnp.sum(c * c, axis=(-2, -1)))
+
+
+def riemannian_gradient_ref(x, g):
+    """R = X Skew(Xᵀ G) = ½((X Xᵀ)G − (X Gᵀ)X)  (small-gram form)."""
+    xxt = jnp.einsum("...ik,...jk->...ij", x, x)
+    xgt = jnp.einsum("...ik,...jk->...ij", x, g)
+    return 0.5 * (jnp.einsum("...ij,...jk->...ik", xxt, g)
+                  - jnp.einsum("...ij,...jk->...ik", xgt, x))
+
+
+def pogo_step_ref(x, g, eta, lam=0.5):
+    """POGO Alg. 1 with fixed λ: M = X − ηR; X⁺ = M + λ(I − M Mᵀ)M."""
+    m = x - eta * riemannian_gradient_ref(x, g)
+    c = gram_residual_ref(m)
+    return m - lam * jnp.einsum("...ij,...jk->...ik", c, m)
+
+
+def landing_coeffs_ref(m):
+    """Quartic landing-polynomial coefficients [a4, a3, a2, a1, a0] from M.
+
+    With C = M Mᵀ − I, N = C + I: B-direction = −C M, D = −(NC + CN),
+    E = C N C; P(λ) = ‖C + Dλ + Eλ²‖² (Lemma 3.1, with the two typos of the
+    published statement fixed — verified against direct evaluation).
+    """
+    c = gram_residual_ref(m)
+    p = m.shape[-2]
+    n_mat = c + jnp.eye(p, dtype=m.dtype)
+    nc = jnp.einsum("...ij,...jk->...ik", n_mat, c)
+    d = -(nc + jnp.swapaxes(nc, -1, -2))
+    e = jnp.einsum("...ij,...jk->...ik", c, nc)
+
+    def ip(a, b):
+        return jnp.sum(a * b, axis=(-2, -1))
+
+    a4 = ip(e, e)
+    a3 = 2.0 * ip(d, e)
+    a2 = ip(d, d) + 2.0 * ip(c, e)
+    a1 = 2.0 * ip(c, d)
+    a0 = ip(c, c)
+    return jnp.stack([a4, a3, a2, a1, a0], axis=-1)
+
+
+def landing_field_ref(x, g, attraction):
+    """Λ(X) = R + λ_a (X Xᵀ − I) X — the Landing direction (Eq. 6)."""
+    r = riemannian_gradient_ref(x, g)
+    c = gram_residual_ref(x)
+    return r + attraction * jnp.einsum("...ij,...jk->...ik", c, x)
+
+
+def landing_step_ref(x, g, eta, attraction):
+    """Fixed-step Landing update (safeguard handled by the caller/L3)."""
+    return x - eta * landing_field_ref(x, g, attraction)
+
+
+def landing_step_safe_ref(x, g, eta0, attraction, eps_ball=0.5):
+    """Landing with the per-matrix step-size SAFEGUARD in-graph.
+
+    Mirrors `rust/src/optim/landing.rs`: with h = XXᵀ−I, d = ‖h‖,
+    R = X·Skew(XᵀG) (so X Rᵀ + R Xᵀ ≡ 0) and ‖Λ‖² = ‖R‖² + λ²‖∇N‖²,
+    requiring ‖h⁺‖ ≤ ε gives the quadratic-root safe step
+        η* = [λ d(1−d) + sqrt(λ²d²(1−d)² + ‖Λ‖²(ε−d)₊)] / ‖Λ‖²,
+    and η = min(η₀, η*, ½λ⁻¹). Returns (X⁺, distances).
+    """
+    r = riemannian_gradient_ref(x, g)
+    c = gram_residual_ref(x)
+    ngrad = jnp.einsum("...ij,...jk->...ik", c, x)
+    d = jnp.sqrt(jnp.sum(c * c, axis=(-2, -1)))
+    lam = attraction
+    lam_sq = (jnp.sum(r * r, axis=(-2, -1))
+              + lam * lam * jnp.sum(ngrad * ngrad, axis=(-2, -1)))
+    slack = jnp.maximum(eps_ball - d, 0.0)
+    b = lam * d * jnp.maximum(1.0 - d, 0.0)
+    safe = (b + jnp.sqrt(b * b + lam_sq * slack)) / jnp.maximum(lam_sq, 1e-30)
+    cap = jnp.where(lam > 0, 0.5 / jnp.maximum(lam, 1e-30), jnp.inf)
+    eta = jnp.minimum(jnp.minimum(eta0, safe), cap)[..., None, None]
+    x_new = x - eta * (r + lam * ngrad)
+    d_new = stiefel_distance_ref(x_new)
+    return x_new, d_new
+
+
+def slpg_step_ref(x, g, eta):
+    """SLPG smooth-case update (Liu et al. 2024; paper §B), row-orthogonal.
+
+    Y = X − η (G − Sym(G Xᵀ) X); X⁺ = Y − ½(Y Yᵀ − I)Y.
+    """
+    gxt = jnp.einsum("...ik,...jk->...ij", g, x)
+    d = g - jnp.einsum("...ij,...jk->...ik", sym(gxt), x)
+    y = x - eta * d
+    c = gram_residual_ref(y)
+    return y - 0.5 * jnp.einsum("...ij,...jk->...ik", c, y)
+
+
+def vadam_transform_ref(g, m, v, t, beta1=0.9, beta2=0.999, eps=1e-8):
+    """VAdam (Ling et al. 2022): matrix-wise second moment ⇒ linear (Def. 1).
+
+    Returns (G, m', v') with t the *new* (1-based) step count.
+    """
+    m_new = beta1 * m + (1.0 - beta1) * g
+    gn2 = jnp.sum(g * g, axis=(-2, -1), keepdims=True)
+    v_new = beta2 * v + (1.0 - beta2) * gn2
+    mhat = m_new / (1.0 - beta1 ** t)
+    vhat = v_new / (1.0 - beta2 ** t)
+    out = mhat / (jnp.sqrt(vhat) + eps)
+    return out, m_new, v_new
+
+
+def pogo_vadam_step_ref(x, g, m, v, t, eta, lam=0.5):
+    """Fused VAdam + POGO step: returns (X⁺, m', v')."""
+    gt, m_new, v_new = vadam_transform_ref(g, m, v, t)
+    x_new = pogo_step_ref(x, gt, eta, lam)
+    return x_new, m_new, v_new
+
+
+# -- Complex Stiefel (unitary) references, carried as (re, im) pairs. -------
+
+
+def c_pack(re, im):
+    return re + 1j * im
+
+
+def pogo_step_complex_ref(xr, xi, gr, gi, eta, lam=0.5):
+    """POGO on the complex Stiefel manifold; returns (re, im) of X⁺."""
+    x = c_pack(xr, xi)
+    g = c_pack(gr, gi)
+    xxh = jnp.einsum("...ik,...jk->...ij", x, jnp.conj(x))
+    xgh = jnp.einsum("...ik,...jk->...ij", x, jnp.conj(g))
+    r = 0.5 * (jnp.einsum("...ij,...jk->...ik", xxh, g)
+               - jnp.einsum("...ij,...jk->...ik", xgh, x))
+    m = x - eta * r
+    p = m.shape[-2]
+    c = jnp.einsum("...ik,...jk->...ij", m, jnp.conj(m)) - jnp.eye(p, dtype=m.dtype)
+    out = m - lam * jnp.einsum("...ij,...jk->...ik", c, m)
+    return jnp.real(out), jnp.imag(out)

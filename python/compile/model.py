@@ -1,0 +1,167 @@
+"""L2: the JAX compute graphs AOT-lowered for the Rust coordinator.
+
+Every public function here is a *step program* or a *loss+grad program*
+with fixed shapes, lowered by aot.py into `artifacts/*.hlo.txt`. The
+optimizer geometry calls into the L1 Pallas kernels so the kernel lowers
+into the same HLO module (one fused executable per program).
+
+Python never runs at serve/train time: these functions execute inside the
+Rust process through PJRT.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import pogo_step as pk
+from .kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# Optimizer step programs (batched over same-shape groups).
+# ---------------------------------------------------------------------------
+
+
+# Batch-size threshold for the Pallas grid path. Under interpret=True a
+# pallas grid lowers to an XLA while-loop whose per-iteration buffer
+# traffic grows with B; above this threshold the vectorized jnp einsum
+# form (identical math — tests assert equality) is what XLA:CPU fuses
+# best. On a real TPU the Pallas kernel IS the batched hot path; this is
+# a CPU-backend layout decision (EXPERIMENTS.md §Perf, L2).
+PALLAS_MAX_BATCH = 8
+
+
+def _pogo_core(x, g, eta, lam=0.5):
+    b = x.shape[0]
+    if b <= PALLAS_MAX_BATCH:
+        return pk.pogo_step_dyn(x, g, eta, lam=lam)
+    return ref.pogo_step_ref(x, g, eta[0], lam)
+
+
+def pogo_step_program(x, g, eta):
+    """POGO λ=1/2 batched step; η is a runtime (1,) array. Pallas L1 core
+    for small groups, vectorized form for the many-matrix regime."""
+    return (_pogo_core(x, g, eta),)
+
+
+def pogo_vadam_step_program(x, g, m, v, t, eta):
+    """Fused VAdam + POGO step (the Fig. 1 orthogonal-kernel hot path).
+
+    Args:
+      x, g, m: (B, p, n); v: (B, 1, 1); t: (1,) step count (float32);
+      eta: (1,) learning rate.
+    Returns (X⁺, m', v').
+    """
+    gt, m_new, v_new = ref.vadam_transform_ref(g, m, v, t[0])
+    x_new = _pogo_core(x, gt, eta)
+    return x_new, m_new, v_new
+
+
+def landing_step_program(x, g, eta, attraction, eps_ball):
+    """Landing update with the per-matrix step-size safeguard IN-GRAPH
+    (ref.landing_step_safe_ref); η₀, λ_a and the safe-ball radius ε are
+    runtime (1,) arrays — LandingPC disables the safeguard by passing a
+    huge ε. Returns (X⁺, distances) — telemetry rides along for free."""
+    return ref.landing_step_safe_ref(x, g, eta[0], attraction[0], eps_ball[0])
+
+
+def slpg_step_program(x, g, eta):
+    """SLPG batched step."""
+    return (ref.slpg_step_ref(x, g, eta[0]),)
+
+
+def pogo_landing_coeffs_program(x, g, eta):
+    """Intermediate M plus the quartic landing-polynomial coefficients:
+    the FindRoot policy solves the quartic on L3 (microseconds) and applies
+    the normal step with `pogo_normal_program`."""
+    m = x - eta[0] * ref.riemannian_gradient_ref(x, g)
+    coeffs = ref.landing_coeffs_ref(m)
+    return m, coeffs
+
+def pogo_normal_program(m, lam):
+    """Normal step X⁺ = M − λ(M Mᵀ − I)M with per-matrix λ of shape (B,)."""
+    c = ref.gram_residual_ref(m)
+    cm = jnp.einsum("...ij,...jk->...ik", c, m)
+    return (m - lam[:, None, None] * cm,)
+
+
+def pogo_step_complex_program(xr, xi, gr, gi, eta):
+    """POGO on the complex Stiefel manifold, (re, im) split at the ABI."""
+    out_r, out_i = ref.pogo_step_complex_ref(xr, xi, gr, gi, eta[0])
+    return out_r, out_i
+
+
+def distance_program(x):
+    """Batched manifold distances (feasibility telemetry)."""
+    return (ref.stiefel_distance_ref(x),)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 4 loss+grad programs (closed-form gradients).
+# ---------------------------------------------------------------------------
+
+
+def pca_lossgrad_program(x, aat):
+    """Online PCA: f(X) = −‖X A‖² = −Tr(X AAᵀ Xᵀ); ∇f = −2 X AAᵀ.
+
+    `aat` is the n×n PSD matrix A Aᵀ (uploaded to device once by L3).
+    """
+    xa = jnp.dot(x, aat)
+    loss = -jnp.sum(x * xa)
+    grad = -2.0 * xa
+    return loss, grad
+
+
+def procrustes_lossgrad_program(x, a, b):
+    """Procrustes: f(X) = ‖A X − B‖²; ∇f = 2 Aᵀ(A X − B)."""
+    r = jnp.dot(a, x) - b
+    loss = jnp.sum(r * r)
+    grad = 2.0 * jnp.dot(a.T, r)
+    return loss, grad
+
+
+# ---------------------------------------------------------------------------
+# Fused experiment step: loss+grad+POGO in ONE executable (perf pass).
+# ---------------------------------------------------------------------------
+
+
+def pca_pogo_fused_program(x, aat, eta):
+    """One fused PCA training step: grad, POGO update, loss + distance out.
+
+    Keeps X on device across the entire run — L3 only downloads two scalars
+    per step. This is the headline L2 optimization (§Perf).
+    """
+    xa = jnp.dot(x, aat)
+    loss = -jnp.sum(x * xa)
+    grad = -2.0 * xa
+    x_new = pk.pogo_step_dyn(x[None], grad[None], eta, lam=0.5)[0]
+    d = ref.stiefel_distance_ref(x_new[None])[0]
+    return x_new, loss, d
+
+
+def procrustes_pogo_fused_program(x, a, b, eta):
+    """One fused Procrustes training step (see pca_pogo_fused_program)."""
+    r = jnp.dot(a, x) - b
+    loss = jnp.sum(r * r)
+    grad = 2.0 * jnp.dot(a.T, r)
+    x_new = pk.pogo_step_dyn(x[None], grad[None], eta, lam=0.5)[0]
+    d = ref.stiefel_distance_ref(x_new[None])[0]
+    return x_new, loss, d
+
+
+# ---------------------------------------------------------------------------
+# Lowering helper (HLO text — see /opt/xla-example/README.md for why text).
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(fn, *specs) -> str:
+    """Lower a jax function at the given ShapeDtypeStructs to HLO text."""
+    from jax._src.lib import xla_client as xc
+
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()

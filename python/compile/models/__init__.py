@@ -1,0 +1,3 @@
+"""L2 model definitions (forward/backward programs) for the NN experiments."""
+
+from . import born, cnn, transformer, vit  # noqa: F401

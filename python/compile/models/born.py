@@ -1,0 +1,104 @@
+"""The Fig. 8 workload: a squared *unitary* tensor-network density model.
+
+Substitution for Loconte et al. (2025a)'s squared unitary PCs (code not
+public, MNIST not on this image): a **Born-machine MPS with isometric
+(complex-Stiefel) cores** over T binary variables. It is exactly a "squared
+circuit": p(x) = |ψ(x)|², and the unitarity of the cores makes the squared
+model *self-normalized* — Σₓ p(x) = 1 with no partition function — which is
+the very reason the paper needs orthoptimizers in this setting (§5.3:
+renormalizing the squared model is infeasible; orthogonality gives it for
+free).
+
+Core storage matches the Rust/PJRT ABI: core t is a wide row-orthonormal
+complex matrix W_t ∈ C^{D_t × 2·D_{t−1}} carried as two f32 arrays
+(re, im). Stacking S_t = W_t^H ∈ C^{2 D_{t−1} × D_t} is column-isometric
+(S^H S = I), so with A_t[x] = S_t[x·D_{t−1} : (x+1)·D_{t−1}, :],
+
+    ψ(x) = A_1[x_1] · A_2[x_2] ··· A_T[x_T]   (1×1),
+    Σₓ |ψ(x)|² = 1 exactly (left-to-right telescoping).
+
+bits-per-dim = −log₂ p(x) / T, the Fig. 8 metric.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+T_SITES = 16
+D_MAX = 8
+
+
+def bond_dims(t_sites: int = T_SITES, d_max: int = D_MAX):
+    """D_0..D_T with D_0 = D_T = 1 and D_t = min(2^t, 2^(T−t), d_max)."""
+    return [min(2 ** t, 2 ** (t_sites - t), d_max) for t in range(t_sites + 1)]
+
+
+def core_shapes(t_sites: int = T_SITES, d_max: int = D_MAX):
+    """Wide row-orthonormal core shapes (p, n) = (D_t, 2·D_{t−1})."""
+    d = bond_dims(t_sites, d_max)
+    return [(d[t + 1], 2 * d[t]) for t in range(t_sites)]
+
+
+def _log_prob(cores_ri, bits):
+    """log p(x) for a batch. cores_ri: list of (re, im) pairs; bits:
+    (B, T) int32 in {0, 1}."""
+    b = bits.shape[0]
+    # v: (B, 1, D_0=1) complex — running left contraction.
+    v = jnp.ones((b, 1, 1), dtype=jnp.complex64)
+    for t, (wr, wi) in enumerate(cores_ri):
+        w = wr + 1j * wi  # (D_t, 2·D_prev)
+        d_t, two_dp = w.shape
+        d_prev = two_dp // 2
+        # S = W^H: (2·D_prev, D_t) → cores A[x]: (2, D_prev, D_t).
+        s = jnp.conj(w).T.reshape(2, d_prev, d_t)
+        a = s[bits[:, t]]  # (B, D_prev, D_t) gathered per sample
+        v = jnp.einsum("bij,bjk->bik", v, a)
+    amp = v[:, 0, 0]  # (B,) complex ψ(x)
+    p = jnp.real(amp) ** 2 + jnp.imag(amp) ** 2
+    return jnp.log(jnp.maximum(p, 1e-30))
+
+
+def born_lossgrad_program(*args):
+    """Loss (mean NLL in nats) + grads w.r.t. every core's (re, im).
+
+    Args: re_1, im_1, ..., re_T, im_T, bits — 2T f32 arrays + (B, T) i32.
+    Returns (loss, g_re_1, g_im_1, ..., g_re_T, g_im_T).
+    """
+    bits = args[-1]
+    flat = args[:-1]
+    assert len(flat) % 2 == 0
+    cores = [(flat[2 * i], flat[2 * i + 1]) for i in range(len(flat) // 2)]
+
+    def loss_fn(cs):
+        return -jnp.mean(_log_prob(cs, bits))
+
+    loss, grads = jax.value_and_grad(loss_fn)(cores)
+    flat_grads = [g for pair in grads for g in pair]
+    return (loss, *flat_grads)
+
+
+def born_eval_program(*args):
+    """Mean bits-per-dim on a batch (lower is better, Fig. 8 metric)."""
+    bits = args[-1]
+    flat = args[:-1]
+    cores = [(flat[2 * i], flat[2 * i + 1]) for i in range(len(flat) // 2)]
+    nll = -jnp.mean(_log_prob(cores, bits))
+    bpd = nll / (T_SITES * jnp.log(2.0))
+    return (bpd,)
+
+
+def born_total_prob_program(*args):
+    """Σₓ p(x) computed by exhaustive enumeration (T small): the
+    self-normalization check. Inputs: the 2T core arrays (no bits).
+    Returns a scalar that must be ≈ 1 when every core is on the complex
+    Stiefel manifold."""
+    flat = args
+    cores = [(flat[2 * i], flat[2 * i + 1]) for i in range(len(flat) // 2)]
+    t = len(cores)
+    # Enumerate all 2^T bitstrings — only used in tests with small T.
+    n = 2 ** t
+    idx = jnp.arange(n, dtype=jnp.int32)
+    bits = jnp.stack([(idx >> s) & 1 for s in range(t)], axis=1)
+    logp = _log_prob(cores, bits)
+    return (jnp.sum(jnp.exp(logp)),)

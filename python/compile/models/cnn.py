@@ -1,0 +1,140 @@
+"""The Fig. 1/6/7 CNN with orthogonal filters or orthogonal kernels.
+
+A compact 3-conv classifier in the spirit of the CIFAR-10 speedrun net
+(Jordan 2024) the paper builds on, at CPU-PJRT-feasible scale. Two
+parameterizations, as in §5.2:
+
+- **filters**: each conv weight (O, I, k, k) is one wide orthogonal matrix
+  (O, I·k²) — 3 matrices, sizes (32, 27), (64, 288), (128, 576).
+- **kernels**: every (k, k) slice is itself orthogonal (Ozay & Okatani
+  2016) — OI matrices of size 3×3 per layer, 96 + 2048 + 8192 = 10336
+  matrices total, handled as batched (B, 3, 3) tensors.
+
+The loss+grad programs return gradients in exactly the parameter layout the
+Rust coordinator stores (flat list), so the PJRT boundary is copy-only.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Channel progression and kernel size. The first conv has 24 outputs so
+# every filter matrix is *wide* (O ≤ I·k²), as St(p, n) requires:
+# (24, 27), (64, 216), (128, 576) — the same size range as the paper's
+# "64×216 up to 256×2304".
+CHANNELS = (3, 24, 64, 128)
+K = 3
+NUM_CLASSES = 10
+IMAGE_HW = 32
+
+# Orthogonal-filter matrix shapes (O, I·k²) per conv layer.
+FILTER_SHAPES = tuple(
+    (CHANNELS[i + 1], CHANNELS[i] * K * K) for i in range(len(CHANNELS) - 1)
+)
+# Orthogonal-kernel batch sizes (O·I) per conv layer.
+KERNEL_COUNTS = tuple(
+    CHANNELS[i + 1] * CHANNELS[i] for i in range(len(CHANNELS) - 1)
+)
+# Head: global-average-pooled features -> logits.
+HEAD_SHAPE = (CHANNELS[-1], NUM_CLASSES)
+
+
+def _conv(x, w_oikk):
+    """NHWC conv, stride 1, SAME padding; w is (O, I, k, k)."""
+    kernel = jnp.transpose(w_oikk, (2, 3, 1, 0))  # (k, k, I, O)
+    return jax.lax.conv_general_dilated(
+        x, kernel, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _pool(x):
+    return jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    ) * 0.25
+
+
+def _forward_from_convs(conv_ws, head, images):
+    """Shared trunk: conv → relu → pool ×3 → GAP → linear head."""
+    h = images
+    for w in conv_ws:
+        h = jax.nn.relu(_conv(h, w))
+        h = _pool(h)
+    feats = jnp.mean(h, axis=(1, 2))  # (B, C_last)
+    return jnp.dot(feats, head)  # (B, 10)
+
+
+def _xent(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def filters_to_convs(filter_mats):
+    """(O, I·k²) orthogonal matrices → (O, I, k, k) conv weights."""
+    out = []
+    for w, (ci, co) in zip(filter_mats, zip(CHANNELS[:-1], CHANNELS[1:])):
+        out.append(w.reshape(co, ci, K, K))
+    return out
+
+
+def kernels_to_convs(kernel_batches):
+    """Batched (O·I, k, k) orthogonal kernels → (O, I, k, k) conv weights.
+
+    Kernels are scaled by 1/k so each 3×3 orthogonal kernel has unit
+    spectral norm ≈ balanced activations (orthogonal 3×3 has ‖·‖_F = √3)."""
+    out = []
+    for kb, (ci, co) in zip(kernel_batches, zip(CHANNELS[:-1], CHANNELS[1:])):
+        out.append(kb.reshape(co, ci, K, K) / K)
+    return out
+
+
+def cnn_filters_lossgrad_program(w1, w2, w3, head, images, labels):
+    """Loss + grads for the orthogonal-FILTERS parameterization.
+
+    w_i: (O_i, I_i·9) float32; head: (128, 10); images: (B, 32, 32, 3);
+    labels: (B,) int32. Returns (loss, g_w1, g_w2, g_w3, g_head).
+    """
+
+    def loss_fn(params):
+        w1, w2, w3, head = params
+        convs = filters_to_convs([w1, w2, w3])
+        logits = _forward_from_convs(convs, head, images)
+        return _xent(logits, labels)
+
+    loss, grads = jax.value_and_grad(loss_fn)((w1, w2, w3, head))
+    return (loss, *grads)
+
+
+def cnn_kernels_lossgrad_program(k1, k2, k3, head, images, labels):
+    """Loss + grads for the orthogonal-KERNELS parameterization.
+
+    k_i: (O_i·I_i, 3, 3) float32 batches of orthogonal kernels.
+    """
+
+    def loss_fn(params):
+        k1, k2, k3, head = params
+        convs = kernels_to_convs([k1, k2, k3])
+        logits = _forward_from_convs(convs, head, images)
+        return _xent(logits, labels)
+
+    loss, grads = jax.value_and_grad(loss_fn)((k1, k2, k3, head))
+    return (loss, *grads)
+
+
+def cnn_filters_eval_program(w1, w2, w3, head, images, labels):
+    """Test-time loss + accuracy (filters parameterization)."""
+    convs = filters_to_convs([w1, w2, w3])
+    logits = _forward_from_convs(convs, head, images)
+    loss = _xent(logits, labels)
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+    return loss, acc
+
+
+def cnn_kernels_eval_program(k1, k2, k3, head, images, labels):
+    """Test-time loss + accuracy (kernels parameterization)."""
+    convs = kernels_to_convs([k1, k2, k3])
+    logits = _forward_from_convs(convs, head, images)
+    loss = _xent(logits, labels)
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+    return loss, acc

@@ -1,0 +1,104 @@
+"""The end-to-end validation model: a small causal transformer LM whose
+attention projections are orthogonally constrained and trained with POGO.
+
+This is `examples/e2e_transformer.rs`'s compute graph: one AOT executable
+produces loss + gradients for every parameter; the Rust coordinator routes
+the orthogonal gradients (Q, K, V, O per layer) to POGO and the rest
+(embeddings, MLP) to Adam. Proves the full L1→L2→L3 composition on a real
+training workload.
+
+Scale note (DESIGN.md §Substitutions): the brief asks for ~100M params;
+on a CPU-only PJRT client that is days of compute, so the default config
+is ~3M params (d=256, 4 layers) trained a few hundred steps on a synthetic
+character corpus — the loss curve and manifold telemetry are the
+deliverable, not the parameter count.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+VOCAB = 64
+DIM = 256
+HEADS = 4
+LAYERS = 4
+SEQ = 128
+MLP_MULT = 4
+
+# Per layer: Q, K, V, O — all (DIM, DIM) square-orthogonal.
+N_ORTH = 4 * LAYERS
+ORTH_SHAPE = (DIM, DIM)
+# Unconstrained parameters.
+TOK_EMB_SHAPE = (VOCAB, DIM)
+POS_EMB_SHAPE = (SEQ, DIM)
+MLP_W1_SHAPE = (DIM, MLP_MULT * DIM)
+MLP_W2_SHAPE = (MLP_MULT * DIM, DIM)
+HEAD_SHAPE = (DIM, VOCAB)
+
+
+def _rms_norm(x):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+
+
+def _causal_attention(h, wq, wk, wv, wo):
+    b, t, d = h.shape
+    hd = d // HEADS
+
+    def split(x):
+        return jnp.transpose(x.reshape(b, t, HEADS, hd), (0, 2, 1, 3))
+
+    q = split(jnp.dot(h, wq))
+    k = split(jnp.dot(h, wk))
+    v = split(jnp.dot(h, wv))
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(hd))
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    att = jnp.where(mask[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    out = jnp.transpose(out, (0, 2, 1, 3)).reshape(b, t, d)
+    return jnp.dot(out, wo)
+
+
+def forward(orth, tok_emb, pos_emb, mlp_w1s, mlp_w2s, head, tokens):
+    """orth: (N_ORTH, DIM, DIM); mlp_w1s/w2s: (LAYERS, ...) stacked;
+    tokens: (B, SEQ) int32. Returns logits (B, SEQ, VOCAB)."""
+    h = tok_emb[tokens] + pos_emb[None, : tokens.shape[1]]
+    for l in range(LAYERS):
+        wq, wk, wv, wo = (orth[4 * l + i] for i in range(4))
+        h = h + _causal_attention(_rms_norm(h), wq, wk, wv, wo)
+        m = jax.nn.gelu(jnp.dot(_rms_norm(h), mlp_w1s[l]))
+        h = h + jnp.dot(m, mlp_w2s[l])
+    return jnp.dot(_rms_norm(h), head)
+
+
+def _next_token_loss(logits, targets):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(picked)
+
+
+def lm_lossgrad_program(orth, tok_emb, pos_emb, mlp_w1s, mlp_w2s, head, tokens):
+    """Loss + grads for one LM training step.
+
+    tokens: (B, SEQ+1) int32 — inputs are [:, :-1], targets [:, 1:].
+    Returns (loss, g_orth, g_tok, g_pos, g_w1s, g_w2s, g_head).
+    """
+    x = tokens[:, :-1]
+    y = tokens[:, 1:]
+
+    def loss_fn(params):
+        return _next_token_loss(forward(*params, x), y)
+
+    loss, grads = jax.value_and_grad(loss_fn)(
+        (orth, tok_emb, pos_emb, mlp_w1s, mlp_w2s, head)
+    )
+    return (loss, *grads)
+
+
+def lm_eval_program(orth, tok_emb, pos_emb, mlp_w1s, mlp_w2s, head, tokens):
+    """Validation loss (nats/token)."""
+    x = tokens[:, :-1]
+    y = tokens[:, 1:]
+    loss = _next_token_loss(forward(orth, tok_emb, pos_emb, mlp_w1s, mlp_w2s, head, x), y)
+    return (loss,)

@@ -1,0 +1,107 @@
+"""The Fig. 5 O-ViT: a vision transformer with orthogonal attention/MLP
+matrices (Fei et al. 2022), at CPU-PJRT-feasible width.
+
+Paper setting: 18 square orthogonal matrices of 1024×1024 inside a small
+ViT. Here: 3 transformer blocks × 6 square orthogonal matrices each
+(Q, K, V, O, W1, W2) = **18 orthogonal matrices** of (128, 128) — the same
+multi-matrix-interaction structure at reduced width (substitution recorded
+in DESIGN.md).
+
+Unconstrained parameters: patch embedding, learned positional embedding,
+classifier head — trained with Adam on L3, like the paper's baselines.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+DIM = 128
+HEADS = 4
+BLOCKS = 3
+PATCH = 4
+IMAGE_HW = 32
+TOKENS = (IMAGE_HW // PATCH) ** 2  # 64
+PATCH_DIM = PATCH * PATCH * 3  # 48
+NUM_CLASSES = 10
+
+# 18 orthogonal (DIM, DIM) matrices: [Q, K, V, O, W1, W2] × BLOCKS.
+N_ORTH = 6 * BLOCKS
+ORTH_SHAPE = (DIM, DIM)
+# Unconstrained: patch embed, positional embed, head.
+PATCH_W_SHAPE = (PATCH_DIM, DIM)
+POS_SHAPE = (TOKENS, DIM)
+HEAD_SHAPE = (DIM, NUM_CLASSES)
+
+
+def _rms_norm(x):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+
+
+def _patchify(images):
+    """(B, 32, 32, 3) → (B, 64, 48)."""
+    b = images.shape[0]
+    g = IMAGE_HW // PATCH
+    x = images.reshape(b, g, PATCH, g, PATCH, 3)
+    x = jnp.transpose(x, (0, 1, 3, 2, 4, 5))
+    return x.reshape(b, TOKENS, PATCH_DIM)
+
+
+def _attention(h, wq, wk, wv, wo):
+    """Multi-head self-attention with orthogonal projections."""
+    b, t, d = h.shape
+    hd = d // HEADS
+
+    def split(x):
+        return jnp.transpose(x.reshape(b, t, HEADS, hd), (0, 2, 1, 3))
+
+    q = split(jnp.dot(h, wq))
+    k = split(jnp.dot(h, wk))
+    v = split(jnp.dot(h, wv))
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(hd))
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    out = jnp.transpose(out, (0, 2, 1, 3)).reshape(b, t, d)
+    return jnp.dot(out, wo)
+
+
+def _block(h, wq, wk, wv, wo, w1, w2):
+    h = h + _attention(_rms_norm(h), wq, wk, wv, wo)
+    m = jnp.dot(_rms_norm(h), w1)
+    m = jax.nn.gelu(m)
+    h = h + jnp.dot(m, w2)
+    return h
+
+
+def forward(orth, patch_w, pos, head, images):
+    """orth: (18, DIM, DIM) stacked orthogonal matrices."""
+    h = jnp.dot(_patchify(images), patch_w) + pos[None]
+    for blk in range(BLOCKS):
+        ws = [orth[6 * blk + i] for i in range(6)]
+        h = _block(h, *ws)
+    feats = jnp.mean(_rms_norm(h), axis=1)
+    return jnp.dot(feats, head)
+
+
+def _xent(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def vit_lossgrad_program(orth, patch_w, pos, head, images, labels):
+    """Loss + grads. orth: (18, 128, 128); images: (B, 32, 32, 3);
+    labels: (B,) int32. Returns (loss, g_orth, g_patch, g_pos, g_head)."""
+
+    def loss_fn(params):
+        return _xent(forward(*params, images), labels)
+
+    loss, grads = jax.value_and_grad(loss_fn)((orth, patch_w, pos, head))
+    return (loss, *grads)
+
+
+def vit_eval_program(orth, patch_w, pos, head, images, labels):
+    """Test loss + accuracy."""
+    logits = forward(orth, patch_w, pos, head, images)
+    loss = _xent(logits, labels)
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+    return loss, acc

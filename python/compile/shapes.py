@@ -1,0 +1,26 @@
+"""Canonical experiment shapes, shared by aot.py and mirrored in the Rust
+config presets (rust/src/config/mod.rs — keep in sync; the manifest is the
+source of truth at runtime, Rust reads shapes from it).
+
+Default shapes are scaled to the CPU PJRT client of this image; `--full`
+emits the paper's exact Fig. 4 sizes as additional artifacts.
+"""
+
+# Fig. 4 — online PCA (paper: p=1500, n=2000).
+PCA_P, PCA_N = 300, 400
+PCA_FULL_P, PCA_FULL_N = 1500, 2000
+
+# Fig. 4 — Procrustes (paper: p=n=2000).
+PROC_N = 400
+PROC_FULL_N = 2000
+
+# NN experiment batch sizes.
+CNN_BATCH = 64
+CNN_EVAL_BATCH = 256
+VIT_BATCH = 32
+VIT_EVAL_BATCH = 128
+BORN_BATCH = 64
+LM_BATCH = 8
+
+# Small shapes for integration tests (rust/tests).
+TEST_B, TEST_P, TEST_N = 4, 8, 16

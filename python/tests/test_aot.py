@@ -1,0 +1,137 @@
+"""AOT pipeline integrity: registry construction, manifest schema, HLO-text
+lowering, and the Pallas-vs-jnp batch-threshold equivalence that the CPU
+perf pass relies on."""
+
+import json
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+from compile.kernels import pogo_step as pk, ref
+
+
+def test_registry_builds_and_names_unique():
+    reg = aot.build_registry(quick=False, full=False)
+    names = [e.name for e in reg]
+    assert len(names) == len(set(names)), "duplicate artifact names"
+    assert len(reg) > 60
+    # Required by rust/tests + experiments:
+    for needed in [
+        "pogo_step_b4_8x16", "pogo_step_complex_test", "pca_lossgrad_test",
+        "pca_lossgrad_300x400", "procrustes_lossgrad_400x400",
+        "cnn_filters_lossgrad", "cnn_kernels_lossgrad", "vit_lossgrad",
+        "born_lossgrad", "lm_lossgrad", "pogo_step_b18_128x128",
+        "pogo_vadam_step_b8192_3x3", "landing_step_b1_300x400",
+    ]:
+        assert needed in names, f"missing {needed}"
+
+
+def test_quick_registry_is_subset():
+    quick = {e.name for e in aot.build_registry(quick=True, full=False)}
+    full = {e.name for e in aot.build_registry(quick=False, full=False)}
+    assert quick <= full
+    assert "pogo_step_b4_8x16" in quick
+
+
+def test_entry_describe_schema():
+    reg = aot.build_registry(quick=True, full=False)
+    e = next(x for x in reg if x.name == "pogo_step_b4_8x16")
+    d = e.describe()
+    assert d["file"] == "pogo_step_b4_8x16.hlo.txt"
+    assert [i["name"] for i in d["inputs"]] == ["x", "g", "eta"]
+    assert d["inputs"][0]["shape"] == [4, 8, 16]
+    assert d["inputs"][0]["dtype"] == "float32"
+    assert len(d["outputs"]) == 1
+    json.dumps(d)  # must be JSON-serializable
+
+
+def test_lowering_produces_hlo_text():
+    reg = aot.build_registry(quick=True, full=False)
+    e = next(x for x in reg if x.name == "pca_lossgrad_test")
+    text = e.lower()
+    assert "HloModule" in text
+    assert "dot(" in text or "dot." in text  # the matmul survived lowering
+
+
+def test_full_flag_adds_paper_shapes():
+    full = {e.name for e in aot.build_registry(quick=False, full=True)}
+    assert "pca_lossgrad_1500x2000" in full
+    assert "procrustes_lossgrad_2000x2000" in full
+
+
+@pytest.mark.parametrize("b", [1, 8, 9, 64])
+def test_pogo_core_threshold_equivalence(b):
+    """The Pallas path (b ≤ PALLAS_MAX_BATCH) and the vectorized jnp path
+    must be numerically interchangeable — this is what makes the CPU
+    batch-threshold routing (EXPERIMENTS.md §Perf) safe."""
+    rng = np.random.default_rng(b)
+    g_np = rng.standard_normal((b, 6, 10)).astype(np.float32)
+    q, _ = np.linalg.qr(rng.standard_normal((b, 10, 6)).astype(np.float32))
+    x_np = np.swapaxes(q, -1, -2).copy()
+    x, g = jnp.asarray(x_np), jnp.asarray(g_np)
+    eta = jnp.asarray([0.1], jnp.float32)
+    via_program = np.asarray(model.pogo_step_program(x, g, eta)[0])
+    via_pallas = np.asarray(pk.pogo_step_dyn(x, g, eta))
+    via_jnp = np.asarray(ref.pogo_step_ref(x, g, 0.1))
+    np.testing.assert_allclose(via_pallas, via_jnp, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(via_program, via_jnp, rtol=2e-5, atol=2e-5)
+
+
+def test_landing_program_attraction_is_runtime():
+    """landing_step must honour the runtime attraction argument."""
+    rng = np.random.default_rng(0)
+    q, _ = np.linalg.qr(rng.standard_normal((8, 4)).astype(np.float32))
+    x = jnp.asarray(q.T[None]) * 1.1  # slightly off-manifold
+    g = jnp.zeros_like(x)
+    eta = jnp.asarray([0.1], jnp.float32)
+    eps = jnp.asarray([1e9], jnp.float32)  # disable the safeguard
+    weak, _ = model.landing_step_program(
+        x, g, eta, jnp.asarray([0.01], jnp.float32), eps)
+    strong, _ = model.landing_step_program(
+        x, g, eta, jnp.asarray([2.0], jnp.float32), eps)
+    d_weak = float(ref.stiefel_distance_ref(weak)[0])
+    d_strong = float(ref.stiefel_distance_ref(strong)[0])
+    assert d_strong < d_weak, f"attraction ignored: {d_strong} !< {d_weak}"
+
+
+def test_landing_safeguard_keeps_eps_ball():
+    """In-graph safeguard: adversarial gradients cannot push X beyond ε."""
+    rng = np.random.default_rng(2)
+    q, _ = np.linalg.qr(rng.standard_normal((10, 5)).astype(np.float32))
+    x = jnp.asarray(q.T[None])
+    eta = jnp.asarray([5.0], jnp.float32)       # absurd suggested lr
+    att = jnp.asarray([1.0], jnp.float32)
+    eps = jnp.asarray([0.5], jnp.float32)
+    for seed in range(5):
+        g = jnp.asarray(
+            np.random.default_rng(seed).standard_normal((1, 5, 10)).astype(np.float32)
+            * 50.0)
+        x, d = model.landing_step_program(x, g, eta, att, eps)
+        assert float(d[0]) <= 0.5 + 1e-4, f"left the ball: {float(d[0])}"
+
+
+def test_fused_procrustes_step_consistency():
+    rng = np.random.default_rng(1)
+    n = 12
+    q, _ = np.linalg.qr(rng.standard_normal((n, n)).astype(np.float32))
+    x = jnp.asarray(q.T)
+    a = jnp.asarray(rng.standard_normal((n, n)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((n, n)).astype(np.float32))
+    eta = jnp.asarray([1e-3], jnp.float32)
+    x_f, loss_f, d_f = model.procrustes_pogo_fused_program(x, a, b, eta)
+    loss_2, grad_2 = model.procrustes_lossgrad_program(x, a, b)
+    (x_2,) = model.pogo_step_program(x[None], grad_2[None], eta)
+    np.testing.assert_allclose(float(loss_f), float(loss_2), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(x_f), np.asarray(x_2)[0],
+                               rtol=1e-4, atol=1e-5)
+    assert float(d_f) < 1e-2
+
+
+def test_mxu_vmem_metadata_documented_shapes():
+    """The DESIGN.md hardware table's claims: the 2000×2000 single-matrix
+    working set exceeds a 16 MiB VMEM, the 3×3 batched one does not."""
+    assert pk.vmem_bytes(2000, 2000) > 16 * 1024 * 1024
+    assert pk.vmem_bytes(3, 3) < 16 * 1024 * 1024

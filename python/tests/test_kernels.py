@@ -1,0 +1,160 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle, swept over
+shapes/batch sizes/seeds (hand-rolled hypothesis-style sweep — the image
+has no `hypothesis` package)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import gram, pogo_step as pk, ref
+
+
+def random_stiefel(rng, b, p, n):
+    """Batched random Stiefel points via QR of Gaussian."""
+    g = rng.standard_normal((b, n, p)).astype(np.float32)
+    q, r = np.linalg.qr(g)
+    sign = np.sign(np.diagonal(r, axis1=-2, axis2=-1))
+    q = q * sign[:, None, :]
+    return np.swapaxes(q, -1, -2).copy()  # (b, p, n) row-orthonormal
+
+
+SWEEP = [
+    # (batch, p, n, eta, seed)
+    (1, 1, 1, 0.1, 0),
+    (1, 3, 3, 0.2, 1),
+    (2, 4, 8, 0.1, 2),
+    (4, 8, 16, 0.05, 3),
+    (3, 8, 8, 0.3, 4),
+    (8, 3, 3, 0.5, 5),
+    (1, 16, 64, 0.1, 6),
+    (2, 32, 32, 0.01, 7),
+]
+
+
+@pytest.mark.parametrize("b,p,n,eta,seed", SWEEP)
+def test_pogo_kernel_matches_ref(b, p, n, eta, seed):
+    rng = np.random.default_rng(seed)
+    x = random_stiefel(rng, b, p, n)
+    g = rng.standard_normal((b, p, n)).astype(np.float32)
+    got = np.asarray(pk.pogo_step(jnp.asarray(x), jnp.asarray(g), eta))
+    want = np.asarray(ref.pogo_step_ref(jnp.asarray(x), jnp.asarray(g), eta))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,p,n,eta,seed", SWEEP)
+def test_pogo_dyn_kernel_matches_ref(b, p, n, eta, seed):
+    rng = np.random.default_rng(seed + 100)
+    x = random_stiefel(rng, b, p, n)
+    g = rng.standard_normal((b, p, n)).astype(np.float32)
+    eta_arr = jnp.asarray([eta], jnp.float32)
+    got = np.asarray(pk.pogo_step_dyn(jnp.asarray(x), jnp.asarray(g), eta_arr))
+    want = np.asarray(ref.pogo_step_ref(jnp.asarray(x), jnp.asarray(g), eta))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,p,n,eta,seed", SWEEP[:5])
+def test_pogo_kernel_feasibility(b, p, n, eta, seed):
+    """Kernel output must stay near the manifold when ξ < 1 (Thm 3.5)."""
+    rng = np.random.default_rng(seed + 200)
+    x = random_stiefel(rng, b, p, n)
+    g = rng.standard_normal((b, p, n)).astype(np.float32)
+    g = g / np.linalg.norm(g.reshape(b, -1), axis=1)[:, None, None]
+    out = pk.pogo_step(jnp.asarray(x), jnp.asarray(g), eta)
+    d = np.asarray(ref.stiefel_distance_ref(out))
+    assert (d < 1e-3).all(), d
+
+
+@pytest.mark.parametrize("p,n", [(128, 512), (128, 1024), (256, 512)])
+def test_tiled_gram_matches_ref(p, n):
+    rng = np.random.default_rng(42)
+    x = rng.standard_normal((p, n)).astype(np.float32) * 0.1
+    got = np.asarray(gram.gram_residual(jnp.asarray(x)))
+    want = np.asarray(ref.gram_residual_ref(jnp.asarray(x)[None])[0])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_tiled_distance_matches_ref():
+    rng = np.random.default_rng(7)
+    x = random_stiefel(rng, 1, 128, 512)[0]
+    d_kernel = float(gram.stiefel_distance(jnp.asarray(x)))
+    d_ref = float(ref.stiefel_distance_ref(jnp.asarray(x)[None])[0])
+    assert abs(d_kernel - d_ref) < 1e-4
+
+
+def test_landing_coeffs_match_direct_evaluation():
+    """Lemma 3.1 (with fixed typos): symbolic P(λ) == direct ‖X₁X₁ᵀ−I‖²."""
+    rng = np.random.default_rng(3)
+    x = random_stiefel(rng, 2, 6, 10)
+    g = rng.standard_normal((2, 6, 10)).astype(np.float32)
+    m = jnp.asarray(x) - 0.3 * ref.riemannian_gradient_ref(
+        jnp.asarray(x), jnp.asarray(g))
+    coeffs = np.asarray(ref.landing_coeffs_ref(m))  # (2, 5)
+    for lam in [0.0, 0.25, 0.5, 1.0]:
+        c = ref.gram_residual_ref(m)
+        x1 = m - lam * jnp.einsum("...ij,...jk->...ik", c, m)
+        direct = np.asarray(ref.stiefel_distance_ref(x1)) ** 2
+        symbolic = np.polyval(coeffs.T, lam)
+        np.testing.assert_allclose(direct, symbolic, rtol=1e-3, atol=1e-5)
+
+
+def test_vadam_is_linear_def1():
+    """Def. 1: output direction invariant to input scaling."""
+    rng = np.random.default_rng(11)
+    g = jnp.asarray(rng.standard_normal((2, 4, 6)).astype(np.float32))
+    m0 = jnp.zeros_like(g)
+    v0 = jnp.zeros((2, 1, 1), jnp.float32)
+    out1, _, _ = ref.vadam_transform_ref(g, m0, v0, 1.0)
+    out2, _, _ = ref.vadam_transform_ref(3.7 * g, m0, v0, 1.0)
+    cos = np.sum(np.asarray(out1) * np.asarray(out2)) / (
+        np.linalg.norm(out1) * np.linalg.norm(out2))
+    np.testing.assert_allclose(cos, 1.0, atol=1e-6)
+
+
+def test_complex_pogo_preserves_unitarity():
+    rng = np.random.default_rng(13)
+    # Random complex Stiefel point via QR.
+    a = rng.standard_normal((8, 4)) + 1j * rng.standard_normal((8, 4))
+    q, _ = np.linalg.qr(a)
+    x = np.conj(q.T)  # (4, 8) with X X^H = I
+    xr = jnp.asarray(x.real[None].astype(np.float32))
+    xi = jnp.asarray(x.imag[None].astype(np.float32))
+    gr = jnp.asarray(rng.standard_normal((1, 4, 8)).astype(np.float32) * 0.3)
+    gi = jnp.asarray(rng.standard_normal((1, 4, 8)).astype(np.float32) * 0.3)
+    or_, oi = ref.pogo_step_complex_ref(xr, xi, gr, gi, 0.1)
+    xo = np.asarray(or_)[0] + 1j * np.asarray(oi)[0]
+    resid = xo @ np.conj(xo.T) - np.eye(4)
+    assert np.abs(resid).max() < 1e-3
+
+
+def test_slpg_and_landing_refs_descend():
+    """Smoke: both baseline steps reduce a Procrustes loss."""
+    rng = np.random.default_rng(17)
+    p = 8
+    a = jnp.asarray(rng.standard_normal((p, p)).astype(np.float32))
+    bmat = jnp.asarray(rng.standard_normal((p, p)).astype(np.float32))
+    x0 = jnp.asarray(random_stiefel(rng, 1, p, p))
+
+    def loss(x):
+        r = jnp.einsum("ij,bjk->bik", a, x) - bmat[None]
+        return float(jnp.sum(r * r))
+
+    def grad(x):
+        r = jnp.einsum("ij,bjk->bik", a, x) - bmat[None]
+        return 2.0 * jnp.einsum("ji,bjk->bik", a, r)
+
+    for step in [lambda x, g: ref.landing_step_ref(x, g, 0.005, 1.0),
+                 lambda x, g: ref.slpg_step_ref(x, g, 0.005)]:
+        x = x0
+        l0 = loss(x)
+        for _ in range(100):
+            x = step(x, grad(x))
+        assert loss(x) < l0 * 0.9
+
+
+def test_pogo_kernel_mxu_estimates():
+    """The VMEM/MXU estimators must be monotone and positive (used by
+    DESIGN.md's hardware table)."""
+    assert pk.vmem_bytes(3, 3) > 0
+    assert pk.mxu_flops(128, 512) == 12 * 128 * 128 * 512
+    assert pk.vmem_bytes(128, 1024) > pk.vmem_bytes(64, 512)

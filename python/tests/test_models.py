@@ -1,0 +1,276 @@
+"""L2 correctness: model loss/grad programs — shapes, gradient checks
+against numerical differentiation on tiny instances, and the Born model's
+self-normalization property (the reason orthogonality is *required*)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.models import born, cnn, transformer, vit
+
+
+def _stiefel(rng, p, n):
+    g = rng.standard_normal((n, p)).astype(np.float32)
+    q, _ = np.linalg.qr(g)
+    return np.ascontiguousarray(q.T)
+
+
+def _unitary(rng, p, n):
+    g = rng.standard_normal((n, p)) + 1j * rng.standard_normal((n, p))
+    q, _ = np.linalg.qr(g)
+    return np.conj(q.T)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 4 loss+grad programs.
+# ---------------------------------------------------------------------------
+
+
+def test_pca_lossgrad_closed_form():
+    rng = np.random.default_rng(0)
+    p, n = 6, 10
+    x = jnp.asarray(_stiefel(rng, p, n))
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    aat = jnp.asarray(a @ a.T)
+    loss, grad = model.pca_lossgrad_program(x, aat)
+    want_loss = -np.linalg.norm(np.asarray(x) @ a) ** 2
+    np.testing.assert_allclose(float(loss), want_loss, rtol=1e-4)
+    # Autodiff cross-check.
+    auto = jax.grad(lambda x: -jnp.sum(jnp.dot(x, aat) * x))(x)
+    np.testing.assert_allclose(np.asarray(grad), np.asarray(auto),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_procrustes_lossgrad_closed_form():
+    rng = np.random.default_rng(1)
+    p, n = 5, 8
+    x = jnp.asarray(_stiefel(rng, p, n))
+    a = jnp.asarray(rng.standard_normal((p, p)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((p, n)).astype(np.float32))
+    loss, grad = model.procrustes_lossgrad_program(x, a, b)
+    auto_l, auto_g = jax.value_and_grad(
+        lambda x: jnp.sum((jnp.dot(a, x) - b) ** 2))(x)
+    np.testing.assert_allclose(float(loss), float(auto_l), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(grad), np.asarray(auto_g),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fused_pca_step_matches_two_phase():
+    rng = np.random.default_rng(2)
+    p, n = 6, 10
+    x = jnp.asarray(_stiefel(rng, p, n))
+    a = rng.standard_normal((n, n)).astype(np.float32)
+    aat = jnp.asarray(a @ a.T)
+    eta = jnp.asarray([0.01], jnp.float32)
+    x_fused, loss_f, d_f = model.pca_pogo_fused_program(x, aat, eta)
+    loss_2, grad_2 = model.pca_lossgrad_program(x, aat)
+    (x_two,) = model.pogo_step_program(x[None], grad_2[None], eta)
+    np.testing.assert_allclose(np.asarray(x_fused), np.asarray(x_two)[0],
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(loss_f), float(loss_2), rtol=1e-5)
+    assert float(d_f) < 1e-2
+
+
+# ---------------------------------------------------------------------------
+# CNN.
+# ---------------------------------------------------------------------------
+
+
+def _cnn_filter_params(rng):
+    ws = [jnp.asarray(_stiefel(rng, o, ik)) for o, ik in cnn.FILTER_SHAPES]
+    head = jnp.asarray(rng.standard_normal(cnn.HEAD_SHAPE).astype(np.float32) * 0.1)
+    return ws + [head]
+
+
+def test_cnn_filters_shapes_and_grads():
+    rng = np.random.default_rng(3)
+    params = _cnn_filter_params(rng)
+    imgs = jnp.asarray(rng.standard_normal((4, 32, 32, 3)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, 10, 4).astype(np.int32))
+    out = cnn.cnn_filters_lossgrad_program(*params, imgs, labels)
+    loss, grads = out[0], out[1:]
+    assert np.isfinite(float(loss))
+    assert len(grads) == 4
+    for g, p in zip(grads, params):
+        assert g.shape == p.shape
+        assert np.isfinite(np.asarray(g)).all()
+
+
+def test_cnn_kernels_shapes_and_grads():
+    rng = np.random.default_rng(4)
+    ks = []
+    for c in cnn.KERNEL_COUNTS:
+        qs = np.stack([_stiefel(rng, 3, 3) for _ in range(c)])
+        ks.append(jnp.asarray(qs))
+    head = jnp.asarray(rng.standard_normal(cnn.HEAD_SHAPE).astype(np.float32) * 0.1)
+    imgs = jnp.asarray(rng.standard_normal((2, 32, 32, 3)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, 10, 2).astype(np.int32))
+    out = cnn.cnn_kernels_lossgrad_program(*ks, head, imgs, labels)
+    loss, grads = out[0], out[1:]
+    assert np.isfinite(float(loss))
+    for g, p in zip(grads, ks + [head]):
+        assert g.shape == p.shape
+
+
+def test_cnn_eval_accuracy_range():
+    rng = np.random.default_rng(5)
+    params = _cnn_filter_params(rng)
+    imgs = jnp.asarray(rng.standard_normal((8, 32, 32, 3)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, 10, 8).astype(np.int32))
+    loss, acc = cnn.cnn_filters_eval_program(*params, imgs, labels)
+    assert 0.0 <= float(acc) <= 1.0
+    assert np.isfinite(float(loss))
+
+
+# ---------------------------------------------------------------------------
+# ViT.
+# ---------------------------------------------------------------------------
+
+
+def _vit_params(rng):
+    orth = np.stack([_stiefel(rng, *vit.ORTH_SHAPE) for _ in range(vit.N_ORTH)])
+    return [
+        jnp.asarray(orth),
+        jnp.asarray(rng.standard_normal(vit.PATCH_W_SHAPE).astype(np.float32) * 0.05),
+        jnp.asarray(rng.standard_normal(vit.POS_SHAPE).astype(np.float32) * 0.02),
+        jnp.asarray(rng.standard_normal(vit.HEAD_SHAPE).astype(np.float32) * 0.05),
+    ]
+
+
+def test_vit_lossgrad_shapes():
+    rng = np.random.default_rng(6)
+    params = _vit_params(rng)
+    imgs = jnp.asarray(rng.standard_normal((2, 32, 32, 3)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, 10, 2).astype(np.int32))
+    out = vit.vit_lossgrad_program(*params, imgs, labels)
+    loss, grads = out[0], out[1:]
+    assert np.isfinite(float(loss))
+    for g, p in zip(grads, params):
+        assert g.shape == p.shape
+        assert np.isfinite(np.asarray(g)).all()
+
+
+def test_vit_has_18_orthogonal_matrices():
+    assert vit.N_ORTH == 18  # the paper's Fig. 5 count
+
+
+# ---------------------------------------------------------------------------
+# Born machine (squared unitary circuit).
+# ---------------------------------------------------------------------------
+
+
+def _born_cores(rng):
+    cores = []
+    for (p, n) in born.core_shapes():
+        u = _unitary(rng, p, n)
+        cores += [jnp.asarray(u.real.astype(np.float32)),
+                  jnp.asarray(u.imag.astype(np.float32))]
+    return cores
+
+
+def test_born_self_normalization():
+    """THE property: with unitary cores, Σₓ p(x) = 1 exactly — no partition
+    function. This is why Fig. 8 needs an orthoptimizer."""
+    rng = np.random.default_rng(7)
+    cores = _born_cores(rng)
+    (total,) = born.born_total_prob_program(*cores)
+    np.testing.assert_allclose(float(total), 1.0, rtol=1e-3)
+
+
+def test_born_normalization_breaks_off_manifold():
+    """Perturb one core off the Stiefel manifold → Σₓ p(x) ≠ 1."""
+    rng = np.random.default_rng(8)
+    cores = _born_cores(rng)
+    cores[8] = cores[8] + 0.2 * jnp.asarray(
+        rng.standard_normal(cores[8].shape).astype(np.float32))
+    (total,) = born.born_total_prob_program(*cores)
+    assert abs(float(total) - 1.0) > 1e-3
+
+
+def test_born_lossgrad_shapes():
+    rng = np.random.default_rng(9)
+    cores = _born_cores(rng)
+    bits = jnp.asarray(rng.integers(0, 2, (16, born.T_SITES)).astype(np.int32))
+    out = born.born_lossgrad_program(*cores, bits)
+    loss, grads = out[0], out[1:]
+    assert np.isfinite(float(loss))
+    assert len(grads) == len(cores)
+    for g, c in zip(grads, cores):
+        assert g.shape == c.shape
+
+
+def test_born_bpd_reasonable():
+    rng = np.random.default_rng(10)
+    cores = _born_cores(rng)
+    bits = jnp.asarray(rng.integers(0, 2, (64, born.T_SITES)).astype(np.int32))
+    (bpd,) = born.born_eval_program(*cores, bits)
+    # Random unitary model on uniform bits: bpd ≈ 1 (cannot beat uniform).
+    assert 0.5 < float(bpd) < 5.0
+
+
+# ---------------------------------------------------------------------------
+# Transformer LM.
+# ---------------------------------------------------------------------------
+
+
+def _lm_params(rng):
+    tf = transformer
+    orth = np.stack([_stiefel(rng, *tf.ORTH_SHAPE) for _ in range(tf.N_ORTH)])
+    return [
+        jnp.asarray(orth),
+        jnp.asarray(rng.standard_normal(tf.TOK_EMB_SHAPE).astype(np.float32) * 0.02),
+        jnp.asarray(rng.standard_normal(tf.POS_EMB_SHAPE).astype(np.float32) * 0.02),
+        jnp.asarray(rng.standard_normal((tf.LAYERS, *tf.MLP_W1_SHAPE)).astype(np.float32) * 0.02),
+        jnp.asarray(rng.standard_normal((tf.LAYERS, *tf.MLP_W2_SHAPE)).astype(np.float32) * 0.02),
+        jnp.asarray(rng.standard_normal(tf.HEAD_SHAPE).astype(np.float32) * 0.02),
+    ]
+
+
+@pytest.mark.slow
+def test_lm_lossgrad_shapes():
+    rng = np.random.default_rng(11)
+    params = _lm_params(rng)
+    tokens = jnp.asarray(
+        rng.integers(0, transformer.VOCAB, (2, transformer.SEQ + 1)).astype(np.int32))
+    out = transformer.lm_lossgrad_program(*params, tokens)
+    loss, grads = out[0], out[1:]
+    # Initial loss ≈ ln(V) for random params.
+    assert abs(float(loss) - np.log(transformer.VOCAB)) < 1.0
+    for g, p in zip(grads, params):
+        assert g.shape == p.shape
+        assert np.isfinite(np.asarray(g)).all()
+
+
+def test_step_programs_roundtrip_small():
+    """pogo/landing/slpg step programs: shapes + feasibility smoke."""
+    rng = np.random.default_rng(12)
+    x = np.stack([_stiefel(rng, 8, 16) for _ in range(4)])
+    g = rng.standard_normal((4, 8, 16)).astype(np.float32)
+    g = g / np.linalg.norm(g.reshape(4, -1), axis=1)[:, None, None]
+    eta = jnp.asarray([0.1], jnp.float32)
+    (xp,) = model.pogo_step_program(jnp.asarray(x), jnp.asarray(g), eta)
+    assert xp.shape == x.shape
+    one = jnp.asarray([1.0], jnp.float32)
+    x_l, d = model.landing_step_program(jnp.asarray(x), jnp.asarray(g), eta,
+                                        one, 0.5 * one)
+    assert x_l.shape == x.shape and d.shape == (4,)
+    (x_s,) = model.slpg_step_program(jnp.asarray(x), jnp.asarray(g), eta)
+    assert x_s.shape == x.shape
+
+
+def test_pogo_coeffs_and_normal_programs():
+    """FindRoot path: coefficients → (L3 solves quartic) → normal step."""
+    rng = np.random.default_rng(13)
+    x = np.stack([_stiefel(rng, 6, 10) for _ in range(2)])
+    g = rng.standard_normal((2, 6, 10)).astype(np.float32)
+    eta = jnp.asarray([0.2], jnp.float32)
+    m, coeffs = model.pogo_landing_coeffs_program(
+        jnp.asarray(x), jnp.asarray(g), eta)
+    assert m.shape == x.shape and coeffs.shape == (2, 5)
+    lam = jnp.asarray([0.5, 0.5], jnp.float32)
+    (xp,) = model.pogo_normal_program(m, lam)
+    want = np.asarray(model.pogo_step_program(
+        jnp.asarray(x), jnp.asarray(g), eta)[0])
+    np.testing.assert_allclose(np.asarray(xp), want, rtol=1e-4, atol=1e-5)

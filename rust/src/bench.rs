@@ -1,0 +1,179 @@
+//! In-crate micro/meso-benchmark harness (criterion is not in the offline
+//! registry).
+//!
+//! Mirrors criterion's core loop: warmup, adaptive iteration count targeting
+//! a measurement budget, and robust statistics (mean, σ, p50, p99,
+//! throughput). Benches under `benches/` are `harness = false` binaries that
+//! call into this module and print aligned tables; `cargo bench` therefore
+//! runs the full paper-figure regeneration suite.
+
+use crate::util::Stopwatch;
+use std::time::Duration;
+
+/// One benchmark's collected statistics, in seconds.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    pub p50: f64,
+    pub p99: f64,
+    pub min: f64,
+    pub max: f64,
+    /// Optional items-per-iteration for throughput reporting.
+    pub items: Option<f64>,
+}
+
+impl Stats {
+    pub fn throughput(&self) -> Option<f64> {
+        self.items.map(|n| n / self.mean)
+    }
+}
+
+/// Benchmark configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOpts {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts {
+            warmup: Duration::from_millis(300),
+            budget: Duration::from_secs(2),
+            min_iters: 5,
+            max_iters: 10_000,
+        }
+    }
+}
+
+impl BenchOpts {
+    /// A faster profile for CI/`--quick` runs.
+    pub fn quick() -> Self {
+        BenchOpts {
+            warmup: Duration::from_millis(50),
+            budget: Duration::from_millis(400),
+            min_iters: 3,
+            max_iters: 2_000,
+        }
+    }
+
+    /// Pick quick vs default from the `POGO_BENCH_QUICK` env var.
+    pub fn from_env() -> Self {
+        if std::env::var("POGO_BENCH_QUICK").is_ok() {
+            Self::quick()
+        } else {
+            Self::default()
+        }
+    }
+}
+
+/// Run one benchmark: `f` is called once per iteration.
+pub fn bench(name: &str, opts: BenchOpts, mut f: impl FnMut()) -> Stats {
+    bench_with_items(name, opts, None, &mut f)
+}
+
+/// Run one benchmark with a throughput denominator (items per iteration).
+pub fn bench_items(name: &str, opts: BenchOpts, items: f64, mut f: impl FnMut()) -> Stats {
+    bench_with_items(name, opts, Some(items), &mut f)
+}
+
+fn bench_with_items(
+    name: &str,
+    opts: BenchOpts,
+    items: Option<f64>,
+    f: &mut dyn FnMut(),
+) -> Stats {
+    // Warmup + single-iteration estimate.
+    let w = Stopwatch::start();
+    let mut warm_iters = 0usize;
+    while w.seconds() < opts.warmup.as_secs_f64() && warm_iters < opts.max_iters {
+        f();
+        warm_iters += 1;
+    }
+    let est = (w.seconds() / warm_iters.max(1) as f64).max(1e-9);
+    let target =
+        ((opts.budget.as_secs_f64() / est) as usize).clamp(opts.min_iters, opts.max_iters);
+
+    let mut samples = Vec::with_capacity(target);
+    for _ in 0..target {
+        let s = Stopwatch::start();
+        f();
+        samples.push(s.seconds());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    Stats {
+        name: name.to_string(),
+        iters: n,
+        mean,
+        stddev: var.sqrt(),
+        p50: samples[n / 2],
+        p99: samples[(n * 99 / 100).min(n - 1)],
+        min: samples[0],
+        max: samples[n - 1],
+        items,
+    }
+}
+
+/// Pretty-print a block of results as an aligned table.
+pub fn print_table(title: &str, stats: &[Stats]) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<44} {:>8} {:>12} {:>12} {:>12} {:>14}",
+        "benchmark", "iters", "mean", "p50", "p99", "throughput"
+    );
+    for s in stats {
+        let tput = match s.throughput() {
+            Some(t) if t >= 1e6 => format!("{:.2} M/s", t / 1e6),
+            Some(t) if t >= 1e3 => format!("{:.2} k/s", t / 1e3),
+            Some(t) => format!("{t:.2} /s"),
+            None => "-".to_string(),
+        };
+        println!(
+            "{:<44} {:>8} {:>12} {:>12} {:>12} {:>14}",
+            s.name,
+            s.iters,
+            crate::util::fmt_duration(s.mean),
+            crate::util::fmt_duration(s.p50),
+            crate::util::fmt_duration(s.p99),
+            tput
+        );
+    }
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_sane_stats() {
+        let s = bench("noop-ish", BenchOpts::quick(), || {
+            black_box((0..100).sum::<usize>());
+        });
+        assert!(s.iters >= 3);
+        assert!(s.mean > 0.0);
+        assert!(s.min <= s.p50 && s.p50 <= s.max);
+        assert!(s.p99 <= s.max + 1e-12);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let s = bench_items("items", BenchOpts::quick(), 1000.0, || {
+            black_box((0..100).sum::<usize>());
+        });
+        assert!(s.throughput().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,289 @@
+//! Experiment configuration: presets mirroring the paper's hyperparameters
+//! (§C.1–C.4), JSON round-trip, and CLI overrides.
+//!
+//! Shapes default to the CPU-scaled sizes of `python/compile/shapes.py`
+//! (the artifact manifest is the runtime source of truth); `--full`
+//! switches the Fig. 4 experiments to the paper's exact sizes if the full
+//! artifacts were built.
+
+use crate::coordinator::OptimizerSpec;
+use crate::optim::base::BaseOptKind;
+use crate::optim::pogo::LambdaPolicy;
+use crate::optim::{Engine, Method};
+use crate::util::json::Json;
+
+/// Which experiment (one per paper figure).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExperimentId {
+    Fig4Pca,
+    Fig4Procrustes,
+    Fig5Ovit,
+    Fig1CnnFilters,
+    Fig1CnnKernels,
+    Fig8Born,
+    FigC1Precision,
+    FigC2Lambda,
+    ScaleMatrices,
+}
+
+impl ExperimentId {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "fig4-pca" => Self::Fig4Pca,
+            "fig4-procrustes" | "fig4-proc" => Self::Fig4Procrustes,
+            "fig5" | "fig5-ovit" => Self::Fig5Ovit,
+            "fig1-filters" | "fig6-filters" => Self::Fig1CnnFilters,
+            "fig1-kernels" | "fig7" | "fig6-kernels" => Self::Fig1CnnKernels,
+            "fig8" | "fig8-born" => Self::Fig8Born,
+            "figc1" | "precision" => Self::FigC1Precision,
+            "figc2" | "lambda" => Self::FigC2Lambda,
+            "scale" => Self::ScaleMatrices,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Fig4Pca => "fig4-pca",
+            Self::Fig4Procrustes => "fig4-procrustes",
+            Self::Fig5Ovit => "fig5-ovit",
+            Self::Fig1CnnFilters => "fig1-filters",
+            Self::Fig1CnnKernels => "fig1-kernels",
+            Self::Fig8Born => "fig8-born",
+            Self::FigC1Precision => "figc1",
+            Self::FigC2Lambda => "figc2",
+            Self::ScaleMatrices => "scale",
+        }
+    }
+
+    pub fn all() -> &'static [ExperimentId] {
+        &[
+            Self::Fig4Pca,
+            Self::Fig4Procrustes,
+            Self::Fig5Ovit,
+            Self::Fig1CnnFilters,
+            Self::Fig1CnnKernels,
+            Self::Fig8Born,
+            Self::FigC1Precision,
+            Self::FigC2Lambda,
+            Self::ScaleMatrices,
+        ]
+    }
+}
+
+/// Top-level run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub experiment: ExperimentId,
+    /// Methods to run (default: the experiment's paper lineup).
+    pub methods: Vec<Method>,
+    pub steps: usize,
+    pub repetitions: usize,
+    pub seed: u64,
+    /// Output directory for CSV series.
+    pub out_dir: std::path::PathBuf,
+    /// Use the paper's full Fig. 4 shapes (requires full artifacts).
+    pub full: bool,
+    /// Shrink workloads for smoke runs.
+    pub quick: bool,
+}
+
+impl RunConfig {
+    pub fn new(experiment: ExperimentId) -> Self {
+        RunConfig {
+            experiment,
+            methods: default_methods(experiment),
+            steps: default_steps(experiment),
+            repetitions: 1,
+            seed: 0,
+            out_dir: crate::repo_root().join("results"),
+            full: false,
+            quick: false,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("experiment", Json::str(self.experiment.name())),
+            ("methods", Json::arr(self.methods.iter().map(|m| Json::str(m.name())))),
+            ("steps", Json::num(self.steps as f64)),
+            ("repetitions", Json::num(self.repetitions as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("full", Json::Bool(self.full)),
+            ("quick", Json::Bool(self.quick)),
+        ])
+    }
+}
+
+/// The paper's per-figure method lineup.
+pub fn default_methods(id: ExperimentId) -> Vec<Method> {
+    use Method::*;
+    match id {
+        ExperimentId::Fig4Pca | ExperimentId::Fig4Procrustes => {
+            vec![Pogo, Landing, LandingPC, Slpg, Rgd, Rsdm]
+        }
+        ExperimentId::Fig5Ovit
+        | ExperimentId::Fig1CnnFilters
+        | ExperimentId::Fig1CnnKernels => {
+            vec![Pogo, Landing, LandingPC, Slpg, Rgd, Rsdm, Adam]
+        }
+        // §5.3: RSDM removed (never came close); Adam infeasible by design.
+        ExperimentId::Fig8Born => vec![Pogo, Landing, LandingPC, Slpg, Rgd],
+        ExperimentId::FigC1Precision => vec![Pogo, Landing, Rsdm, Rgd],
+        ExperimentId::FigC2Lambda => vec![Pogo],
+        ExperimentId::ScaleMatrices => vec![Pogo, Landing, Rgd, Rsdm],
+    }
+}
+
+/// Default step budgets (scaled; the paper's originals in comments).
+pub fn default_steps(id: ExperimentId) -> usize {
+    match id {
+        // Paper: 3000 iterations with early stop at gap 1e-6.
+        ExperimentId::Fig4Pca | ExperimentId::Fig4Procrustes => 600,
+        // Paper: 10 epochs (ViT), 100 epochs (CNN).
+        ExperimentId::Fig5Ovit => 60,
+        ExperimentId::Fig1CnnFilters | ExperimentId::Fig1CnnKernels => 80,
+        // Paper: 200 epochs with plateau halving + early stop.
+        ExperimentId::Fig8Born => 300,
+        ExperimentId::FigC1Precision => 200,
+        ExperimentId::FigC2Lambda => 200,
+        ExperimentId::ScaleMatrices => 20,
+    }
+}
+
+/// Per-method hyperparameters for an experiment — the grid-search winners
+/// reported in the paper's §C, adapted where our scaled shapes need it.
+pub fn spec_for(id: ExperimentId, method: Method) -> OptimizerSpec {
+    use ExperimentId as E;
+    use Method::*;
+    let spec = |lr: f64| OptimizerSpec::new(method, lr);
+    match id {
+        // §C.1 (PCA): lrs — RGD 0.15, RSDM 1.5 (r=700), Landing/POGO 0.25,
+        // LandingPC 10.5 (λ 0.01), SLPG 0.125; POGO base momentum 0.3.
+        E::Fig4Pca => match method {
+            Rgd => spec(0.15),
+            Rsdm => spec(1.5).with_submanifold(150), // paper 700/2000 → 150/400
+            Landing => spec(0.25).with_base(BaseOptKind::momentum(0.1)),
+            // Paper: lr 10.5, λ 0.01 at n=2000; at n=400 the normalized-
+            // gradient step must stay ≲ O(1) against a √p ≈ 17 matrix norm,
+            // and the weak attraction no longer recovers it — re-centred.
+            LandingPC => spec(0.5).with_attraction(1.0),
+            Slpg => spec(0.125),
+            Pogo => spec(0.25).with_base(BaseOptKind::momentum(0.3)),
+            Adam => spec(0.01),
+        },
+        // §C.1 (Procrustes): paper lrs (RGD 0.5, RSDM 2 at r=900, …) are
+        // for normalized 2000² problems; our scaled 400² problem has
+        // much larger raw gradients, so the grid re-centers lower.
+        E::Fig4Procrustes => match method {
+            Rgd => spec(1e-4),
+            Rsdm => spec(4e-4).with_submanifold(180), // paper 900/2000 → 180/400
+            Landing => spec(1e-4).with_base(BaseOptKind::momentum(0.1)),
+            LandingPC => spec(0.5).with_attraction(1.0),
+            Slpg => spec(1e-4),
+            Pogo => spec(1e-4).with_base(BaseOptKind::momentum(0.1)),
+            Adam => spec(0.01),
+        },
+        // §C.2 (O-ViT): RGD 0.1, RSDM 0.5 (r=300), Landing 1e-3 (mom 0.1),
+        // LandingPC/SLPG/POGO 0.01 (POGO with SGD).
+        E::Fig5Ovit => match method {
+            Rgd => spec(0.1),
+            Rsdm => spec(0.5).with_submanifold(48), // paper 300/1024 → 48/128
+            Landing => spec(1e-3).with_base(BaseOptKind::momentum(0.1)),
+            LandingPC => spec(0.01).with_attraction(1.0),
+            Slpg => spec(0.01),
+            Pogo => spec(0.01),
+            Adam => spec(1e-3),
+        },
+        // §C.3 (CNN filters): RGD/Adam 0.01, RSDM 0.1 (r=64), SLPG/Landing
+        // 1e-3 (Landing mom 0.6), LandingPC/POGO 0.5 (POGO + VAdam).
+        E::Fig1CnnFilters => match method {
+            Rgd => spec(0.01),
+            Rsdm => spec(0.1).with_submanifold(24),
+            Slpg => spec(1e-3),
+            Landing => spec(1e-3).with_base(BaseOptKind::momentum(0.6)),
+            LandingPC => spec(0.5).with_attraction(1.0),
+            Pogo => spec(0.5).with_base(BaseOptKind::vadam()),
+            Adam => spec(0.01),
+        },
+        // §C.3 (CNN kernels): RGD/Adam/Landing 0.01, RSDM 0.5 (r=2),
+        // SLPG 0.1, LandingPC/POGO 0.5 (POGO + VAdam). The paper's POGO
+        // lr 0.5 assumes thousands of steps; at our ~80-step budget a
+        // per-matrix-normalized step of 0.5 spins each 3×3 (‖X‖=√3) too
+        // fast to learn — the grid re-centres at 0.02.
+        E::Fig1CnnKernels => match method {
+            Rgd => spec(0.01),
+            Rsdm => spec(0.5).with_submanifold(2),
+            Landing => spec(0.01),
+            Slpg => spec(0.1),
+            LandingPC => spec(0.05).with_attraction(1.0),
+            Pogo => spec(0.02).with_base(BaseOptKind::vadam()),
+            Adam => spec(0.01),
+        },
+        // §C.4 (squared unitary PCs): RGD/LandingPC 0.05 (λ 0.1),
+        // Landing 0.01, POGO 0.5 + VAdam, SLPG 5e-4.
+        E::Fig8Born => match method {
+            Rgd => spec(0.05),
+            LandingPC => spec(0.05).with_attraction(0.1),
+            Landing => spec(0.01),
+            Pogo => spec(0.5).with_base(BaseOptKind::vadam()),
+            Slpg => spec(5e-4),
+            Rsdm => spec(0.05).with_submanifold(4),
+            Adam => spec(1e-3),
+        },
+        // Ablations reuse the PCA lineup at its lrs.
+        E::FigC1Precision => spec_for(E::Fig4Pca, method),
+        E::FigC2Lambda => OptimizerSpec::new(Method::Pogo, 0.01),
+        E::ScaleMatrices => match method {
+            Pogo => spec(0.5).with_base(BaseOptKind::vadam()).with_engine(Engine::Xla),
+            Landing => spec(0.01),
+            Rgd => spec(0.01),
+            Rsdm => spec(0.5).with_submanifold(2),
+            _ => spec(0.01),
+        },
+    }
+}
+
+/// POGO's λ policy per experiment (default Half everywhere; the C.2
+/// ablation sweeps both).
+pub fn default_lambda() -> LambdaPolicy {
+    LambdaPolicy::Half
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn experiment_ids_roundtrip() {
+        for &id in ExperimentId::all() {
+            assert_eq!(ExperimentId::parse(id.name()), Some(id));
+        }
+        assert!(ExperimentId::parse("nope").is_none());
+    }
+
+    #[test]
+    fn specs_exist_for_all_method_experiment_pairs() {
+        for &id in ExperimentId::all() {
+            for &m in Method::all() {
+                let s = spec_for(id, m);
+                assert!(s.lr > 0.0, "{:?}/{}", id, m.name());
+            }
+        }
+    }
+
+    #[test]
+    fn default_methods_match_paper_lineups() {
+        assert_eq!(default_methods(ExperimentId::Fig4Pca).len(), 6);
+        assert!(!default_methods(ExperimentId::Fig8Born).contains(&Method::Rsdm));
+        assert!(default_methods(ExperimentId::Fig5Ovit).contains(&Method::Adam));
+    }
+
+    #[test]
+    fn run_config_serializes() {
+        let cfg = RunConfig::new(ExperimentId::Fig4Pca);
+        let j = cfg.to_json();
+        assert_eq!(j.get("experiment").as_str(), Some("fig4-pca"));
+        assert!(j.get("methods").as_arr().unwrap().len() >= 5);
+    }
+}

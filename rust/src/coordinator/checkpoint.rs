@@ -1,0 +1,201 @@
+//! Checkpointing: save/restore a `ParamStore` (and optimizer step count)
+//! to disk, so long training runs survive restarts — table stakes for a
+//! deployable trainer.
+//!
+//! Format: a small JSON header (names, shapes, constraints, keys, step)
+//! followed by one raw little-endian f32 blob per parameter, all in a
+//! single file. The header carries a blob checksum so truncated/corrupt
+//! checkpoints are rejected rather than silently loaded.
+
+use super::param_store::{Constraint, ParamStore};
+use crate::linalg::MatF;
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &str = "POGO-CKPT-v1";
+
+/// FNV-1a over the raw bytes (cheap integrity check, not cryptographic).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Save the store (+ step counter) to `path`.
+pub fn save(store: &ParamStore, step: usize, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    // Blob: all parameters' f32 data, in registration order.
+    let mut blob: Vec<u8> = Vec::new();
+    for p in store.params() {
+        for &v in p.mat.as_slice() {
+            blob.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    let header = Json::obj(vec![
+        ("magic", Json::str(MAGIC)),
+        ("step", Json::num(step as f64)),
+        ("checksum", Json::str(format!("{:016x}", fnv1a(&blob)))),
+        (
+            "params",
+            Json::arr(store.params().iter().map(|p| {
+                Json::obj(vec![
+                    ("name", Json::str(p.name.clone())),
+                    ("rows", Json::num(p.mat.rows() as f64)),
+                    ("cols", Json::num(p.mat.cols() as f64)),
+                    (
+                        "constraint",
+                        Json::str(match p.constraint {
+                            Constraint::Stiefel => "stiefel",
+                            Constraint::Free => "free",
+                        }),
+                    ),
+                    ("key", Json::str(p.group_key.clone())),
+                ])
+            })),
+        ),
+    ]);
+    let header_text = header.to_string();
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    // Layout: u32 header length, header bytes, blob.
+    f.write_all(&(header_text.len() as u32).to_le_bytes())?;
+    f.write_all(header_text.as_bytes())?;
+    f.write_all(&blob)?;
+    Ok(())
+}
+
+/// Load a checkpoint; returns (store, step).
+pub fn load(path: &Path) -> Result<(ParamStore, usize)> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut len_buf = [0u8; 4];
+    f.read_exact(&mut len_buf)?;
+    let hlen = u32::from_le_bytes(len_buf) as usize;
+    let mut header_bytes = vec![0u8; hlen];
+    f.read_exact(&mut header_bytes)?;
+    let header = Json::parse(std::str::from_utf8(&header_bytes)?)
+        .map_err(|e| anyhow!("corrupt checkpoint header: {e}"))?;
+    if header.get("magic").as_str() != Some(MAGIC) {
+        return Err(anyhow!("not a POGO checkpoint (bad magic)"));
+    }
+    let step = header.get("step").as_usize().unwrap_or(0);
+    let mut blob = Vec::new();
+    f.read_to_end(&mut blob)?;
+    let want_sum = header.get("checksum").as_str().unwrap_or("");
+    let got_sum = format!("{:016x}", fnv1a(&blob));
+    if want_sum != got_sum {
+        return Err(anyhow!("checkpoint checksum mismatch ({want_sum} vs {got_sum})"));
+    }
+
+    let mut store = ParamStore::new();
+    let mut off = 0usize;
+    for p in header.get("params").as_arr().unwrap_or(&[]) {
+        let name = p.get("name").as_str().unwrap_or("").to_string();
+        let rows = p.get("rows").as_usize().ok_or_else(|| anyhow!("bad rows"))?;
+        let cols = p.get("cols").as_usize().ok_or_else(|| anyhow!("bad cols"))?;
+        let n = rows * cols;
+        let end = off + 4 * n;
+        if end > blob.len() {
+            return Err(anyhow!("checkpoint blob too short for '{name}'"));
+        }
+        let mut data = Vec::with_capacity(n);
+        for i in 0..n {
+            let b = &blob[off + 4 * i..off + 4 * i + 4];
+            data.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+        }
+        off = end;
+        let mat = MatF::from_vec(rows, cols, data);
+        match p.get("constraint").as_str() {
+            Some("stiefel") => {
+                let key = p.get("key").as_str().unwrap_or("").to_string();
+                store.add_stiefel_keyed(name, mat, key);
+            }
+            _ => {
+                store.add_free(name, mat);
+            }
+        }
+    }
+    if off != blob.len() {
+        return Err(anyhow!("trailing bytes in checkpoint blob"));
+    }
+    Ok((store, step))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifold::stiefel;
+    use crate::rng::Rng;
+
+    fn sample_store() -> ParamStore {
+        let mut rng = Rng::seed_from_u64(0);
+        let mut store = ParamStore::new();
+        store.add_stiefel_group("w", 3, 4, 8, &mut rng);
+        store.add_free("head", MatF::randn(5, 2, &mut rng));
+        store.add_stiefel_keyed("x", stiefel::random_point(2, 6, &mut rng), "solo");
+        store
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("pogo_ckpt_{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let store = sample_store();
+        let path = tmp("roundtrip");
+        save(&store, 1234, &path).unwrap();
+        let (back, step) = load(&path).unwrap();
+        assert_eq!(step, 1234);
+        assert_eq!(back.len(), store.len());
+        for (a, b) in store.params().iter().zip(back.params()) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.constraint, b.constraint);
+            assert_eq!(a.group_key, b.group_key);
+            assert_eq!(a.mat, b.mat, "bit-exact restore for {}", a.name);
+        }
+        // Grouping structure survives.
+        assert_eq!(back.stiefel_groups().len(), store.stiefel_groups().len());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_blob_rejected() {
+        let store = sample_store();
+        let path = tmp("corrupt");
+        save(&store, 1, &path).unwrap();
+        // Flip a byte near the end.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let n = bytes.len();
+        bytes[n - 3] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncated_file_rejected() {
+        let store = sample_store();
+        let path = tmp("trunc");
+        save(&store, 1, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 16]).unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn wrong_magic_rejected() {
+        let path = tmp("magic");
+        std::fs::write(&path, b"\x10\x00\x00\x00{\"magic\":\"nope\"}  ").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

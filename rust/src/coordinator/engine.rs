@@ -1,0 +1,196 @@
+//! Optimizer construction + engine dispatch.
+//!
+//! An [`OptimizerSpec`] is the serializable description of "which method,
+//! which hyperparameters, which engine"; `build` turns it into a concrete
+//! stepper for one shape group, choosing between the pure-Rust engine and
+//! the XLA (AOT Pallas) engine.
+
+use crate::optim::base::BaseOptKind;
+use crate::optim::landing::{Landing, LandingConfig};
+use crate::optim::pogo::{LambdaPolicy, Pogo, PogoConfig};
+use crate::optim::rgd::{Rgd, RgdConfig};
+use crate::optim::rsdm::{Rsdm, RsdmConfig};
+use crate::optim::slpg::{Slpg, SlpgConfig};
+use crate::optim::{adam, Engine, Method, Orthoptimizer};
+use crate::runtime::stepper::{StepKind, XlaStepper};
+use crate::runtime::Registry;
+use anyhow::{anyhow, Result};
+
+/// Full optimizer description (mirrors the paper's per-method knobs).
+#[derive(Clone, Copy, Debug)]
+pub struct OptimizerSpec {
+    pub method: Method,
+    pub lr: f64,
+    pub base: BaseOptKind,
+    /// POGO λ policy.
+    pub lambda: LambdaPolicy,
+    /// Landing/LandingPC attraction strength.
+    pub attraction: f64,
+    /// RSDM submanifold dimension.
+    pub submanifold_dim: usize,
+    pub seed: u64,
+    pub engine: Engine,
+}
+
+impl OptimizerSpec {
+    pub fn new(method: Method, lr: f64) -> Self {
+        OptimizerSpec {
+            method,
+            lr,
+            base: BaseOptKind::Sgd,
+            lambda: LambdaPolicy::Half,
+            attraction: 1.0,
+            submanifold_dim: 32,
+            seed: 0,
+            engine: Engine::Rust,
+        }
+    }
+
+    pub fn with_base(mut self, base: BaseOptKind) -> Self {
+        self.base = base;
+        self
+    }
+
+    pub fn with_engine(mut self, engine: Engine) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    pub fn with_lambda(mut self, lambda: LambdaPolicy) -> Self {
+        self.lambda = lambda;
+        self
+    }
+
+    pub fn with_attraction(mut self, a: f64) -> Self {
+        self.attraction = a;
+        self
+    }
+
+    pub fn with_submanifold(mut self, r: usize) -> Self {
+        self.submanifold_dim = r;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Display label (method + engine) for figures.
+    pub fn label(&self) -> String {
+        let eng = match self.engine {
+            Engine::Rust => "",
+            Engine::Xla => "[xla]",
+        };
+        format!("{}{eng}", self.method.name())
+    }
+
+    /// Build a stepper for one `(group_size, p, n)` group.
+    ///
+    /// `registry` is required for `Engine::Xla`; the artifact for the
+    /// group shape must exist (aot.py emits one per experiment shape).
+    pub fn build(
+        &self,
+        registry: Option<&Registry>,
+        group: (usize, usize, usize),
+    ) -> Result<Box<dyn Orthoptimizer<f32>>> {
+        let (b, p, n) = group;
+        if self.engine == Engine::Xla {
+            let reg = registry.ok_or_else(|| anyhow!("XLA engine needs a registry"))?;
+            let kind = match (self.method, self.base, self.lambda) {
+                (Method::Pogo, BaseOptKind::VAdam { .. }, LambdaPolicy::Half) => {
+                    StepKind::PogoVadam
+                }
+                (Method::Pogo, _, LambdaPolicy::Half) => StepKind::Pogo,
+                (Method::Pogo, _, LambdaPolicy::FindRoot) => StepKind::PogoFindRoot,
+                (Method::Landing | Method::LandingPC, _, _) => StepKind::Landing,
+                (Method::Slpg, _, _) => StepKind::Slpg,
+                (m, _, _) => {
+                    return Err(anyhow!("{} has no XLA engine (host retraction)", m.name()))
+                }
+            };
+            let mut stepper = XlaStepper::new(reg, kind, self.lr, b, p, n)?;
+            stepper.attraction = self.attraction;
+            stepper.normalize_grad = self.method == Method::LandingPC;
+            if self.method == Method::LandingPC {
+                // LandingPC has no safeguard (paper §5.1); neutralize it.
+                stepper.eps_ball = 1e9;
+            }
+            stepper.set_base(self.base);
+            return Ok(Box::new(stepper));
+        }
+        Ok(match self.method {
+            Method::Pogo => Box::new(Pogo::<f32>::new(
+                PogoConfig { lr: self.lr, lambda: self.lambda, base: self.base },
+                b,
+            )),
+            Method::Landing => Box::new(Landing::<f32>::new(
+                LandingConfig {
+                    lr: self.lr,
+                    attraction: self.attraction,
+                    base: self.base,
+                    ..Default::default()
+                },
+                b,
+            )),
+            Method::LandingPC => Box::new(Landing::<f32>::new(
+                LandingConfig::landing_pc(self.lr, self.attraction),
+                b,
+            )),
+            Method::Slpg => {
+                Box::new(Slpg::<f32>::new(SlpgConfig { lr: self.lr, base: self.base }, b))
+            }
+            Method::Rgd => {
+                Box::new(Rgd::<f32>::new(RgdConfig { lr: self.lr, base: self.base }, b))
+            }
+            Method::Rsdm => Box::new(Rsdm::<f32>::new(
+                RsdmConfig {
+                    lr: self.lr,
+                    submanifold_dim: self.submanifold_dim,
+                    base: self.base,
+                    seed: self.seed,
+                    ..Default::default()
+                },
+                b,
+            )),
+            Method::Adam => Box::new(adam::Adam::<f32>::new(
+                adam::AdamConfig { lr: self.lr, ..Default::default() },
+                b,
+            )),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifold::stiefel;
+    use crate::rng::Rng;
+
+    #[test]
+    fn builds_every_rust_method() {
+        let mut rng = Rng::seed_from_u64(0);
+        for &m in Method::all() {
+            let spec = OptimizerSpec::new(m, 0.05);
+            let mut opt = spec.build(None, (1, 4, 8)).unwrap();
+            let mut x = stiefel::random_point(4, 8, &mut rng);
+            let g = crate::linalg::MatF::randn(4, 8, &mut rng);
+            opt.step(0, &mut x, &g);
+            assert!(x.all_finite(), "{}", m.name());
+        }
+    }
+
+    #[test]
+    fn xla_engine_requires_registry() {
+        let spec = OptimizerSpec::new(Method::Pogo, 0.1).with_engine(Engine::Xla);
+        assert!(spec.build(None, (1, 4, 8)).is_err());
+    }
+
+    #[test]
+    fn rgd_has_no_xla_engine() {
+        let spec = OptimizerSpec::new(Method::Rgd, 0.1).with_engine(Engine::Xla);
+        // Even with a registry it must refuse (host retraction by design) —
+        // error text differs depending on registry availability; both Err.
+        assert!(spec.build(None, (1, 4, 8)).is_err());
+    }
+}

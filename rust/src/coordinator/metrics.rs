@@ -1,0 +1,218 @@
+//! Metric recording: wall-clock-stamped series, CSV/JSONL sinks.
+//!
+//! Every experiment driver records through a `MetricLog`; the figure
+//! harness (`pogo run figN`) turns logs into the paper's plots' underlying
+//! CSVs (results/figN_*.csv) so the series can be compared directly
+//! against the published curves.
+
+use crate::util::json::Json;
+use crate::util::Stopwatch;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+/// One record: step index, seconds since run start, named values.
+#[derive(Clone, Debug)]
+pub struct Record {
+    pub step: usize,
+    pub wall_s: f64,
+    pub values: BTreeMap<String, f64>,
+}
+
+/// An append-only metric log for one run.
+pub struct MetricLog {
+    /// Run label (method name, usually).
+    pub label: String,
+    clock: Stopwatch,
+    records: Vec<Record>,
+}
+
+impl MetricLog {
+    pub fn new(label: impl Into<String>) -> Self {
+        MetricLog { label: label.into(), clock: Stopwatch::start(), records: Vec::new() }
+    }
+
+    /// Record values at a step (wall time stamped automatically).
+    pub fn record(&mut self, step: usize, values: &[(&str, f64)]) {
+        self.records.push(Record {
+            step,
+            wall_s: self.clock.seconds(),
+            values: values.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn records(&self) -> &[Record] {
+        &self.records
+    }
+
+    /// Last recorded value of a metric.
+    pub fn last(&self, key: &str) -> Option<f64> {
+        self.records.iter().rev().find_map(|r| r.values.get(key).copied())
+    }
+
+    /// Best (minimum) value of a metric.
+    pub fn min(&self, key: &str) -> Option<f64> {
+        self.records
+            .iter()
+            .filter_map(|r| r.values.get(key).copied())
+            .fold(None, |acc, v| Some(acc.map_or(v, |a: f64| a.min(v))))
+    }
+
+    /// Best (maximum) value of a metric.
+    pub fn max(&self, key: &str) -> Option<f64> {
+        self.records
+            .iter()
+            .filter_map(|r| r.values.get(key).copied())
+            .fold(None, |acc, v| Some(acc.map_or(v, |a: f64| a.max(v))))
+    }
+
+    /// Total wall time of the run so far.
+    pub fn elapsed(&self) -> f64 {
+        self.clock.seconds()
+    }
+
+    /// All metric keys seen, sorted.
+    pub fn keys(&self) -> Vec<String> {
+        let mut set = std::collections::BTreeSet::new();
+        for r in &self.records {
+            set.extend(r.values.keys().cloned());
+        }
+        set.into_iter().collect()
+    }
+
+    /// Write `step,wall_s,<keys...>` CSV.
+    pub fn write_csv(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let keys = self.keys();
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "step,wall_s,{}", keys.join(","))?;
+        for r in &self.records {
+            write!(f, "{},{:.6}", r.step, r.wall_s)?;
+            for k in &keys {
+                match r.values.get(k) {
+                    Some(v) => write!(f, ",{v}")?,
+                    None => write!(f, ",")?,
+                }
+            }
+            writeln!(f)?;
+        }
+        Ok(())
+    }
+
+    /// Write one JSON object per record (JSONL).
+    pub fn write_jsonl(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        for r in &self.records {
+            let mut obj: Vec<(&str, Json)> = vec![
+                ("label", Json::str(self.label.clone())),
+                ("step", Json::num(r.step as f64)),
+                ("wall_s", Json::num(r.wall_s)),
+            ];
+            for (k, v) in &r.values {
+                obj.push((k.as_str(), Json::num(*v)));
+            }
+            writeln!(f, "{}", Json::obj(obj).to_string())?;
+        }
+        Ok(())
+    }
+}
+
+/// Linear interpolation of a metric onto a common time grid — how the
+/// paper aggregates independent runs onto shared time steps (§C).
+pub fn interp_onto_grid(records: &[Record], key: &str, grid: &[f64]) -> Vec<f64> {
+    let pts: Vec<(f64, f64)> = records
+        .iter()
+        .filter_map(|r| r.values.get(key).map(|v| (r.wall_s, *v)))
+        .collect();
+    grid.iter()
+        .map(|&t| {
+            if pts.is_empty() {
+                return f64::NAN;
+            }
+            if t <= pts[0].0 {
+                return pts[0].1;
+            }
+            if t >= pts[pts.len() - 1].0 {
+                return pts[pts.len() - 1].1;
+            }
+            let i = pts.partition_point(|(pt, _)| *pt <= t);
+            let (t0, v0) = pts[i - 1];
+            let (t1, v1) = pts[i];
+            if t1 == t0 {
+                v0
+            } else {
+                v0 + (v1 - v0) * (t - t0) / (t1 - t0)
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_query() {
+        let mut log = MetricLog::new("test");
+        log.record(0, &[("loss", 10.0), ("dist", 0.1)]);
+        log.record(1, &[("loss", 5.0)]);
+        log.record(2, &[("loss", 7.0), ("dist", 0.05)]);
+        assert_eq!(log.len(), 3);
+        assert_eq!(log.last("loss"), Some(7.0));
+        assert_eq!(log.min("loss"), Some(5.0));
+        assert_eq!(log.max("loss"), Some(10.0));
+        assert_eq!(log.last("dist"), Some(0.05));
+        assert_eq!(log.keys(), vec!["dist".to_string(), "loss".to_string()]);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut log = MetricLog::new("csv");
+        log.record(0, &[("a", 1.0)]);
+        log.record(1, &[("a", 2.0), ("b", 3.0)]);
+        let dir = std::env::temp_dir().join("pogo_test_metrics");
+        let path = dir.join("m.csv");
+        log.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "step,wall_s,a,b");
+        assert_eq!(lines.len(), 3);
+        assert!(lines[1].ends_with(",1,")); // missing b → empty cell
+    }
+
+    #[test]
+    fn jsonl_parses_back() {
+        let mut log = MetricLog::new("jl");
+        log.record(0, &[("x", 0.5)]);
+        let dir = std::env::temp_dir().join("pogo_test_metrics");
+        let path = dir.join("m.jsonl");
+        log.write_jsonl(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = Json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(j.get("x").as_f64(), Some(0.5));
+        assert_eq!(j.get("label").as_str(), Some("jl"));
+    }
+
+    #[test]
+    fn interpolation_matches_linear() {
+        let recs = vec![
+            Record { step: 0, wall_s: 0.0, values: [("v".to_string(), 0.0)].into() },
+            Record { step: 1, wall_s: 2.0, values: [("v".to_string(), 4.0)].into() },
+        ];
+        let out = interp_onto_grid(&recs, "v", &[-1.0, 0.0, 0.5, 1.0, 2.0, 3.0]);
+        assert_eq!(out, vec![0.0, 0.0, 1.0, 2.0, 4.0, 4.0]);
+    }
+}

@@ -1,0 +1,23 @@
+//! L3 coordinator: the training runtime that makes thousands of
+//! orthogonality-constrained matrices practical.
+//!
+//! - [`param_store`] — named parameters, shape-grouped for batched dispatch;
+//! - [`engine`] — optimizer specs and Rust-vs-XLA engine construction;
+//! - [`trainer`] — the step loop (grads → grouped constrained updates →
+//!   free-param Adam → schedules → telemetry);
+//! - [`scheduler`] — plateau-halving / step / cosine lr + early stopping;
+//! - [`metrics`] — wall-clock series, CSV/JSONL sinks, grid interpolation.
+
+pub mod checkpoint;
+pub mod engine;
+pub mod metrics;
+pub mod param_store;
+pub mod report;
+pub mod scheduler;
+pub mod trainer;
+
+pub use engine::OptimizerSpec;
+pub use metrics::MetricLog;
+pub use param_store::{Constraint, Group, Param, ParamStore};
+pub use scheduler::{EarlyStop, LrSchedule, Scheduler};
+pub use trainer::{GradSource, Trainer, TrainerConfig};

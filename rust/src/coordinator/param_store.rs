@@ -1,0 +1,294 @@
+//! Parameter store: named constrained/unconstrained matrices, grouped by
+//! shape for batched dispatch.
+//!
+//! The shape-grouping is the coordinator's core scalability device (the
+//! paper's Fig. 1 regime): 10⁴ orthogonal 3×3 kernels become a handful of
+//! `(B, 3, 3)` groups, each updated by ONE XLA dispatch (or one Rust loop),
+//! instead of 10⁴ tiny QR calls.
+
+use crate::linalg::MatF;
+use crate::manifold::stiefel;
+use crate::rng::Rng;
+use std::collections::BTreeMap;
+
+/// How a parameter is constrained.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Constraint {
+    /// Must remain on St(p, n) — updated by an orthoptimizer.
+    Stiefel,
+    /// Unconstrained — updated by Adam (or SGD).
+    Free,
+}
+
+/// One named parameter.
+#[derive(Clone, Debug)]
+pub struct Param {
+    pub name: String,
+    pub mat: MatF,
+    pub constraint: Constraint,
+    /// Batching key: parameters group by (shape, key). Empty by default;
+    /// set it to keep logically-distinct collections (e.g. CNN layers) in
+    /// separate batched dispatches matching their per-layer artifacts.
+    pub group_key: String,
+}
+
+/// A shape-homogeneous group of constrained parameters (indices into the
+/// store), the unit of batched dispatch.
+#[derive(Clone, Debug)]
+pub struct Group {
+    pub shape: (usize, usize),
+    pub key: String,
+    pub indices: Vec<usize>,
+}
+
+/// The parameter store.
+#[derive(Clone, Debug, Default)]
+pub struct ParamStore {
+    params: Vec<Param>,
+}
+
+impl ParamStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a Stiefel-constrained parameter (must start feasible).
+    pub fn add_stiefel(&mut self, name: impl Into<String>, mat: MatF) -> usize {
+        self.add_stiefel_keyed(name, mat, "")
+    }
+
+    /// Register a Stiefel parameter with an explicit batching key.
+    pub fn add_stiefel_keyed(
+        &mut self,
+        name: impl Into<String>,
+        mat: MatF,
+        key: impl Into<String>,
+    ) -> usize {
+        let d = stiefel::distance(&mat);
+        debug_assert!(d < 1e-2, "parameter registered off-manifold: {d}");
+        self.params.push(Param {
+            name: name.into(),
+            mat,
+            constraint: Constraint::Stiefel,
+            group_key: key.into(),
+        });
+        self.params.len() - 1
+    }
+
+    /// Register an unconstrained parameter.
+    pub fn add_free(&mut self, name: impl Into<String>, mat: MatF) -> usize {
+        self.params.push(Param {
+            name: name.into(),
+            mat,
+            constraint: Constraint::Free,
+            group_key: String::new(),
+        });
+        self.params.len() - 1
+    }
+
+    /// Register `count` random Stiefel matrices of one shape
+    /// (`name_0 … name_{count−1}`), batch-keyed by `name`. Returns indices.
+    pub fn add_stiefel_group(
+        &mut self,
+        name: &str,
+        count: usize,
+        p: usize,
+        n: usize,
+        rng: &mut Rng,
+    ) -> Vec<usize> {
+        (0..count)
+            .map(|i| {
+                self.add_stiefel_keyed(
+                    format!("{name}_{i}"),
+                    stiefel::random_point(p, n, rng),
+                    name,
+                )
+            })
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.params.is_empty()
+    }
+
+    pub fn get(&self, idx: usize) -> &Param {
+        &self.params[idx]
+    }
+
+    pub fn get_mut(&mut self, idx: usize) -> &mut Param {
+        &mut self.params[idx]
+    }
+
+    pub fn mat(&self, idx: usize) -> &MatF {
+        &self.params[idx].mat
+    }
+
+    pub fn params(&self) -> &[Param] {
+        &self.params
+    }
+
+    /// Partition the *constrained* parameters into (shape, key)-homogeneous
+    /// groups (deterministic order: by shape, then key, then registration).
+    pub fn stiefel_groups(&self) -> Vec<Group> {
+        let mut by_shape: BTreeMap<((usize, usize), String), Vec<usize>> = BTreeMap::new();
+        for (i, p) in self.params.iter().enumerate() {
+            if p.constraint == Constraint::Stiefel {
+                by_shape.entry((p.mat.shape(), p.group_key.clone())).or_default().push(i);
+            }
+        }
+        by_shape
+            .into_iter()
+            .map(|((shape, key), indices)| Group { shape, key, indices })
+            .collect()
+    }
+
+    /// Indices of unconstrained parameters.
+    pub fn free_indices(&self) -> Vec<usize> {
+        self.params
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.constraint == Constraint::Free)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Clone the matrices of a group (batch extraction for dispatch).
+    pub fn extract_group(&self, g: &Group) -> Vec<MatF> {
+        g.indices.iter().map(|&i| self.params[i].mat.clone()).collect()
+    }
+
+    /// Write updated matrices back into a group.
+    pub fn write_group(&mut self, g: &Group, mats: Vec<MatF>) {
+        assert_eq!(mats.len(), g.indices.len());
+        for (&i, m) in g.indices.iter().zip(mats) {
+            debug_assert_eq!(self.params[i].mat.shape(), m.shape());
+            self.params[i].mat = m;
+        }
+    }
+
+    /// Max manifold distance across all constrained parameters — the
+    /// feasibility telemetry of every figure.
+    pub fn max_stiefel_distance(&self) -> f64 {
+        self.params
+            .iter()
+            .filter(|p| p.constraint == Constraint::Stiefel)
+            .map(|p| stiefel::distance(&p.mat))
+            .fold(0.0, f64::max)
+    }
+
+    /// Max *normalized* distance ‖XXᵀ−I‖/√p (Fig. 6's metric).
+    pub fn max_normalized_distance(&self) -> f64 {
+        self.params
+            .iter()
+            .filter(|p| p.constraint == Constraint::Stiefel)
+            .map(|p| stiefel::normalized_distance(&p.mat))
+            .fold(0.0, f64::max)
+    }
+
+    /// Total parameter count (scalars).
+    pub fn num_scalars(&self) -> usize {
+        self.params.iter().map(|p| p.mat.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing;
+
+    #[test]
+    fn groups_partition_constrained_params() {
+        let mut rng = Rng::seed_from_u64(0);
+        let mut store = ParamStore::new();
+        store.add_stiefel_group("k3", 5, 3, 3, &mut rng);
+        store.add_stiefel_group("w", 2, 4, 8, &mut rng);
+        store.add_free("head", MatF::zeros(7, 7));
+        store.add_stiefel_group("k3b", 3, 3, 3, &mut rng);
+
+        let groups = store.stiefel_groups();
+        // (3,3) splits into two keyed groups ("k3", "k3b"); (4,8) is one.
+        assert_eq!(groups.len(), 3);
+        assert_eq!(groups[0].shape, (3, 3));
+        assert_eq!(groups[0].key, "k3");
+        assert_eq!(groups[0].indices.len(), 5);
+        assert_eq!(groups[1].key, "k3b");
+        assert_eq!(groups[1].indices.len(), 3);
+        assert_eq!(groups[2].shape, (4, 8));
+        assert_eq!(groups[2].indices.len(), 2);
+        // Exact cover of constrained indices, no duplicates, no free.
+        let mut all: Vec<usize> = groups.iter().flat_map(|g| g.indices.clone()).collect();
+        all.sort_unstable();
+        let expected: Vec<usize> =
+            (0..store.len()).filter(|&i| store.get(i).constraint == Constraint::Stiefel)
+                .collect();
+        assert_eq!(all, expected);
+    }
+
+    #[test]
+    fn extract_write_roundtrip() {
+        let mut rng = Rng::seed_from_u64(1);
+        let mut store = ParamStore::new();
+        store.add_stiefel_group("g", 4, 3, 6, &mut rng);
+        let groups = store.stiefel_groups();
+        let mut mats = store.extract_group(&groups[0]);
+        mats[2] = MatF::zeros(3, 6);
+        store.write_group(&groups[0], mats);
+        assert_eq!(store.mat(2).norm_sq(), 0.0);
+        assert!(store.mat(1).norm_sq() > 0.0);
+    }
+
+    #[test]
+    fn distances_zero_at_init() {
+        let mut rng = Rng::seed_from_u64(2);
+        let mut store = ParamStore::new();
+        store.add_stiefel_group("g", 3, 4, 9, &mut rng);
+        assert!(store.max_stiefel_distance() < 1e-5);
+        assert!(store.max_normalized_distance() < 1e-5);
+    }
+
+    #[test]
+    fn prop_grouping_is_exact_cover() {
+        testing::forall(
+            "param grouping exact cover",
+            10,
+            |rng| {
+                let mut store = ParamStore::new();
+                let n_groups = 1 + rng.index(4);
+                for gi in 0..n_groups {
+                    let (p, n) = testing::gen_wide_shape(rng, 4, 8);
+                    let count = 1 + rng.index(6);
+                    store.add_stiefel_group(&format!("g{gi}"), count, p, n, rng);
+                    if rng.bernoulli(0.5) {
+                        store.add_free(format!("f{gi}"), MatF::zeros(2, 2));
+                    }
+                }
+                store
+            },
+            |store| {
+                let groups = store.stiefel_groups();
+                let mut seen = std::collections::BTreeSet::new();
+                for g in &groups {
+                    for &i in &g.indices {
+                        if store.get(i).mat.shape() != g.shape {
+                            return Err(format!("index {i} has wrong shape"));
+                        }
+                        if !seen.insert(i) {
+                            return Err(format!("index {i} in two groups"));
+                        }
+                    }
+                }
+                let expected: std::collections::BTreeSet<usize> = (0..store.len())
+                    .filter(|&i| store.get(i).constraint == Constraint::Stiefel)
+                    .collect();
+                if seen != expected {
+                    return Err("cover mismatch".to_string());
+                }
+                Ok(())
+            },
+        );
+    }
+}

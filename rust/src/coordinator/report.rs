@@ -1,0 +1,220 @@
+//! Report generation: read the `results/*.csv` series back and print
+//! paper-style comparison tables (`pogo report`). Lets a user inspect any
+//! past run without re-running experiments, and is what EXPERIMENTS.md's
+//! tables were produced from.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One parsed CSV series.
+#[derive(Debug)]
+pub struct Series {
+    /// File stem, e.g. "fig4-pca_pogo_xla__rep0".
+    pub name: String,
+    pub columns: Vec<String>,
+    /// Row-major values, NaN for empty cells.
+    pub rows: Vec<Vec<f64>>,
+}
+
+impl Series {
+    pub fn parse(path: &Path) -> Result<Series> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut lines = text.lines();
+        let header = lines.next().context("empty csv")?;
+        let columns: Vec<String> = header.split(',').map(str::to_string).collect();
+        let mut rows = Vec::new();
+        for line in lines {
+            if line.trim().is_empty() {
+                continue;
+            }
+            rows.push(
+                line.split(',')
+                    .map(|c| c.parse::<f64>().unwrap_or(f64::NAN))
+                    .collect(),
+            );
+        }
+        let name = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("series")
+            .to_string();
+        Ok(Series { name, columns, rows })
+    }
+
+    fn col_idx(&self, key: &str) -> Option<usize> {
+        self.columns.iter().position(|c| c == key)
+    }
+
+    /// Last finite value of a column.
+    pub fn last(&self, key: &str) -> Option<f64> {
+        let i = self.col_idx(key)?;
+        self.rows.iter().rev().find_map(|r| {
+            let v = *r.get(i)?;
+            v.is_finite().then_some(v)
+        })
+    }
+
+    /// Minimum finite value of a column.
+    pub fn min(&self, key: &str) -> Option<f64> {
+        let i = self.col_idx(key)?;
+        self.rows
+            .iter()
+            .filter_map(|r| r.get(i).copied().filter(|v| v.is_finite()))
+            .fold(None, |acc, v| Some(acc.map_or(v, |a: f64| a.min(v))))
+    }
+
+    /// Maximum finite value of a column.
+    pub fn max(&self, key: &str) -> Option<f64> {
+        let i = self.col_idx(key)?;
+        self.rows
+            .iter()
+            .filter_map(|r| r.get(i).copied().filter(|v| v.is_finite()))
+            .fold(None, |acc, v| Some(acc.map_or(v, |a: f64| a.max(v))))
+    }
+
+    /// Total wall time (max wall_s).
+    pub fn wall(&self) -> Option<f64> {
+        self.max("wall_s")
+    }
+}
+
+/// Group `results/` CSVs by experiment prefix and print summary tables.
+pub fn report(dir: &Path, filter: Option<&str>) -> Result<()> {
+    let mut by_experiment: BTreeMap<String, Vec<Series>> = BTreeMap::new();
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("reading {}", dir.display()))?;
+    for e in entries {
+        let path = e?.path();
+        if path.extension().and_then(|x| x.to_str()) != Some("csv") {
+            continue;
+        }
+        let stem = path.file_stem().unwrap().to_string_lossy().to_string();
+        if let Some(f) = filter {
+            if !stem.contains(f) {
+                continue;
+            }
+        }
+        // Experiment prefix = up to the first '_'.
+        let exp = stem.split('_').next().unwrap_or("misc").to_string();
+        match Series::parse(&path) {
+            Ok(s) => by_experiment.entry(exp).or_default().push(s),
+            Err(err) => eprintln!("skipping {}: {err}", path.display()),
+        }
+    }
+    if by_experiment.is_empty() {
+        println!("no series found in {} — run an experiment first", dir.display());
+        return Ok(());
+    }
+
+    for (exp, mut series) in by_experiment {
+        series.sort_by(|a, b| a.name.cmp(&b.name));
+        println!("\n== {exp} ({} series) ==", series.len());
+        // Union of the interesting metric columns present.
+        let metrics = ["gap", "test_acc", "bpd", "loss", "distance", "us_per_matrix"];
+        print!("{:<42} {:>9}", "series", "wall");
+        let present: Vec<&str> = metrics
+            .iter()
+            .copied()
+            .filter(|m| series.iter().any(|s| s.col_idx(m).is_some()))
+            .collect();
+        for m in &present {
+            print!(" {:>13}", format!("best {m}"));
+        }
+        println!();
+        for s in &series {
+            print!(
+                "{:<42} {:>9}",
+                s.name,
+                s.wall().map(crate::util::fmt_duration).unwrap_or_else(|| "-".into())
+            );
+            for m in &present {
+                let v = if *m == "test_acc" { s.max(m) } else { s.min(m) };
+                match v {
+                    Some(v) if v.abs() < 1e-3 || v.abs() >= 1e4 => print!(" {v:>13.3e}"),
+                    Some(v) => print!(" {v:>13.4}"),
+                    None => print!(" {:>13}", "-"),
+                }
+            }
+            println!();
+        }
+    }
+    Ok(())
+}
+
+/// Machine-readable report (one JSON object per series) for tooling.
+pub fn report_json(dir: &Path) -> Result<String> {
+    let mut out = Vec::new();
+    for e in std::fs::read_dir(dir)? {
+        let path = e?.path();
+        if path.extension().and_then(|x| x.to_str()) != Some("csv") {
+            continue;
+        }
+        if let Ok(s) = Series::parse(&path) {
+            out.push(Json::obj(vec![
+                ("name", Json::str(s.name.clone())),
+                ("rows", Json::num(s.rows.len() as f64)),
+                ("wall_s", s.wall().map(Json::num).unwrap_or(Json::Null)),
+                ("best_gap", s.min("gap").map(Json::num).unwrap_or(Json::Null)),
+                ("best_acc", s.max("test_acc").map(Json::num).unwrap_or(Json::Null)),
+                ("best_bpd", s.min("bpd").map(Json::num).unwrap_or(Json::Null)),
+                ("final_distance",
+                 s.last("distance").map(Json::num).unwrap_or(Json::Null)),
+            ]));
+        }
+    }
+    Ok(Json::arr(out).to_string_pretty())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_csv(dir: &Path, name: &str, text: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join(name), text).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("pogo_report_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn parses_and_summarizes() {
+        let d = tmpdir("basic");
+        write_csv(&d, "figx_pogo_rep0.csv",
+                  "step,wall_s,gap,distance\n1,0.1,0.5,1e-6\n2,0.2,0.1,2e-6\n");
+        write_csv(&d, "figx_rgd_rep0.csv",
+                  "step,wall_s,gap,distance\n1,0.5,0.6,\n2,1.0,0.2,3e-6\n");
+        let s = Series::parse(&d.join("figx_pogo_rep0.csv")).unwrap();
+        assert_eq!(s.min("gap"), Some(0.1));
+        assert_eq!(s.last("distance"), Some(2e-6));
+        assert_eq!(s.wall(), Some(0.2));
+        report(&d, None).unwrap();
+        report(&d, Some("pogo")).unwrap();
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn empty_cells_are_nan_but_skipped() {
+        let d = tmpdir("nan");
+        write_csv(&d, "f_a_rep0.csv", "step,wall_s,gap\n1,0.1,\n2,0.2,0.3\n");
+        let s = Series::parse(&d.join("f_a_rep0.csv")).unwrap();
+        assert_eq!(s.min("gap"), Some(0.3));
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let d = tmpdir("json");
+        write_csv(&d, "f_a_rep0.csv", "step,wall_s,gap\n1,0.1,0.2\n");
+        let j = report_json(&d).unwrap();
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(parsed.as_arr().unwrap().len(), 1);
+        std::fs::remove_dir_all(&d).ok();
+    }
+}

@@ -1,0 +1,158 @@
+//! Learning-rate schedules and early stopping.
+//!
+//! The paper's experiment protocol (§5.3/§C.4): halve the learning rate
+//! when the validation loss plateaus for `patience` epochs, early-stop on
+//! the validation set, and (Fig. 4) stop when the optimality gap reaches a
+//! target. All of those policies live here, decoupled from the optimizers
+//! via `Orthoptimizer::set_lr`.
+
+/// Learning-rate schedule.
+#[derive(Clone, Debug)]
+pub enum LrSchedule {
+    Constant,
+    /// Multiply by `factor` when the monitored value hasn't improved by
+    /// `min_delta` for `patience` consecutive observations (paper: halve
+    /// on a 10-epoch plateau).
+    Plateau { patience: usize, factor: f64, min_delta: f64 },
+    /// Multiply by `gamma` every `every` observations.
+    Step { every: usize, gamma: f64 },
+    /// Cosine decay from the initial lr to `final_frac`·lr over `total`.
+    Cosine { total: usize, final_frac: f64 },
+}
+
+/// Stateful scheduler driving one optimizer's lr.
+#[derive(Clone, Debug)]
+pub struct Scheduler {
+    schedule: LrSchedule,
+    base_lr: f64,
+    lr: f64,
+    best: f64,
+    wait: usize,
+    ticks: usize,
+}
+
+impl Scheduler {
+    pub fn new(schedule: LrSchedule, base_lr: f64) -> Self {
+        Scheduler { schedule, base_lr, lr: base_lr, best: f64::INFINITY, wait: 0, ticks: 0 }
+    }
+
+    pub fn lr(&self) -> f64 {
+        self.lr
+    }
+
+    /// Observe the monitored value (lower = better); returns the new lr.
+    pub fn observe(&mut self, value: f64) -> f64 {
+        self.ticks += 1;
+        match &self.schedule {
+            LrSchedule::Constant => {}
+            LrSchedule::Plateau { patience, factor, min_delta } => {
+                if value < self.best - *min_delta {
+                    self.best = value;
+                    self.wait = 0;
+                } else {
+                    self.wait += 1;
+                    if self.wait >= *patience {
+                        self.lr *= factor;
+                        self.wait = 0;
+                        log::debug!("plateau: lr → {:.3e}", self.lr);
+                    }
+                }
+            }
+            LrSchedule::Step { every, gamma } => {
+                if self.ticks % every == 0 {
+                    self.lr *= gamma;
+                }
+            }
+            LrSchedule::Cosine { total, final_frac } => {
+                let t = (self.ticks.min(*total)) as f64 / *total as f64;
+                let cos = 0.5 * (1.0 + (std::f64::consts::PI * t).cos());
+                self.lr = self.base_lr * (final_frac + (1.0 - final_frac) * cos);
+            }
+        }
+        self.lr
+    }
+}
+
+/// Early stopping on a monitored value (lower = better).
+#[derive(Clone, Debug)]
+pub struct EarlyStop {
+    pub patience: usize,
+    pub min_delta: f64,
+    best: f64,
+    wait: usize,
+}
+
+impl EarlyStop {
+    pub fn new(patience: usize, min_delta: f64) -> Self {
+        EarlyStop { patience, min_delta, best: f64::INFINITY, wait: 0 }
+    }
+
+    /// Observe; returns true when training should stop.
+    pub fn observe(&mut self, value: f64) -> bool {
+        if value < self.best - self.min_delta {
+            self.best = value;
+            self.wait = 0;
+            false
+        } else {
+            self.wait += 1;
+            self.wait >= self.patience
+        }
+    }
+
+    pub fn best(&self) -> f64 {
+        self.best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plateau_halves_after_patience() {
+        let mut s =
+            Scheduler::new(LrSchedule::Plateau { patience: 3, factor: 0.5, min_delta: 0.0 },
+                           1.0);
+        s.observe(10.0); // best=10
+        assert_eq!(s.lr(), 1.0);
+        s.observe(10.0);
+        s.observe(10.0);
+        let lr = s.observe(10.0); // 3rd non-improvement → halve
+        assert_eq!(lr, 0.5);
+        // Improvement resets.
+        s.observe(5.0);
+        s.observe(6.0);
+        s.observe(6.0);
+        assert_eq!(s.lr(), 0.5);
+        assert_eq!(s.observe(6.0), 0.25);
+    }
+
+    #[test]
+    fn step_decays_on_schedule() {
+        let mut s = Scheduler::new(LrSchedule::Step { every: 2, gamma: 0.1 }, 1.0);
+        s.observe(0.0);
+        assert_eq!(s.lr(), 1.0);
+        s.observe(0.0);
+        assert!((s.lr() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_endpoints() {
+        let mut s = Scheduler::new(LrSchedule::Cosine { total: 10, final_frac: 0.1 }, 2.0);
+        let mut last = 2.0;
+        for _ in 0..10 {
+            last = s.observe(0.0);
+        }
+        assert!((last - 0.2).abs() < 1e-9, "final lr {last}");
+    }
+
+    #[test]
+    fn early_stop_fires() {
+        let mut es = EarlyStop::new(2, 1e-9);
+        assert!(!es.observe(1.0));
+        assert!(!es.observe(0.5));
+        assert!(!es.observe(0.5));
+        assert!(es.observe(0.6));
+        assert_eq!(es.best(), 0.5);
+    }
+}

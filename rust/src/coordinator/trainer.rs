@@ -1,0 +1,318 @@
+//! The training loop: shape-grouped constrained updates + free-parameter
+//! Adam + schedules + telemetry, behind one `Trainer::step` call.
+//!
+//! Gradients come from a [`GradSource`] — either closed-form Rust (Fig. 4),
+//! or an AOT loss+grad executable (NN experiments). The trainer neither
+//! knows nor cares: it routes per-parameter gradients to the right stepper
+//! group and keeps the books (loss, feasibility, wall time, lr).
+
+use super::engine::OptimizerSpec;
+use super::metrics::MetricLog;
+use super::param_store::{Group, ParamStore};
+use super::scheduler::{EarlyStop, Scheduler};
+use crate::linalg::MatF;
+use crate::optim::adam::{Adam, AdamConfig};
+use crate::optim::Orthoptimizer;
+use crate::runtime::Registry;
+use anyhow::Result;
+
+/// Produces (loss, per-parameter gradients aligned with store indices).
+pub trait GradSource {
+    fn eval(&mut self, store: &ParamStore) -> Result<(f64, Vec<MatF>)>;
+}
+
+impl<F> GradSource for F
+where
+    F: FnMut(&ParamStore) -> Result<(f64, Vec<MatF>)>,
+{
+    fn eval(&mut self, store: &ParamStore) -> Result<(f64, Vec<MatF>)> {
+        self(store)
+    }
+}
+
+/// Trainer configuration.
+#[derive(Debug)]
+pub struct TrainerConfig {
+    pub max_steps: usize,
+    /// Record metrics every k steps (distance probes cost O(p²n)).
+    pub log_every: usize,
+    /// Optional lr schedule observing the loss.
+    pub scheduler: Option<Scheduler>,
+    /// Optional early stopping observing the loss.
+    pub early_stop: Option<EarlyStop>,
+    /// Stop when the loss (or externally-set monitor) reaches this value.
+    pub target_loss: Option<f64>,
+    /// Learning rate for free (unconstrained) parameters.
+    pub free_lr: f64,
+}
+
+impl Default for TrainerConfig {
+    fn default() -> Self {
+        TrainerConfig {
+            max_steps: 1000,
+            log_every: 10,
+            scheduler: None,
+            early_stop: None,
+            target_loss: None,
+            free_lr: 1e-3,
+        }
+    }
+}
+
+/// The coordinator's training engine for one run.
+pub struct Trainer {
+    pub store: ParamStore,
+    pub cfg: TrainerConfig,
+    pub log: MetricLog,
+    groups: Vec<Group>,
+    steppers: Vec<Box<dyn Orthoptimizer<f32>>>,
+    free_opt: Adam<f32>,
+    free_indices: Vec<usize>,
+    step_idx: usize,
+}
+
+impl Trainer {
+    /// Build a trainer: one stepper per shape group per the spec.
+    pub fn new(
+        store: ParamStore,
+        spec: OptimizerSpec,
+        registry: Option<&Registry>,
+        cfg: TrainerConfig,
+    ) -> Result<Trainer> {
+        let groups = store.stiefel_groups();
+        let mut steppers = Vec::with_capacity(groups.len());
+        for g in &groups {
+            let (p, n) = g.shape;
+            steppers.push(spec.build(registry, (g.indices.len(), p, n))?);
+        }
+        let free_indices = store.free_indices();
+        let free_opt =
+            Adam::new(AdamConfig { lr: cfg.free_lr, ..Default::default() }, store.len());
+        let label = spec.label();
+        Ok(Trainer {
+            store,
+            cfg,
+            log: MetricLog::new(label),
+            groups,
+            steppers,
+            free_opt,
+            free_indices,
+            step_idx: 0,
+        })
+    }
+
+    pub fn groups(&self) -> &[Group] {
+        &self.groups
+    }
+
+    pub fn step_idx(&self) -> usize {
+        self.step_idx
+    }
+
+    /// Set the constrained-optimizer learning rate (all groups).
+    pub fn set_lr(&mut self, lr: f64) {
+        for s in &mut self.steppers {
+            s.set_lr(lr);
+        }
+    }
+
+    pub fn lr(&self) -> f64 {
+        self.steppers.first().map(|s| s.lr()).unwrap_or(0.0)
+    }
+
+    /// One optimization step given gradients from `src`.
+    /// Returns the loss.
+    pub fn step(&mut self, src: &mut dyn GradSource) -> Result<f64> {
+        let (loss, grads) = src.eval(&self.store)?;
+        debug_assert_eq!(grads.len(), self.store.len(), "one gradient per parameter");
+
+        // Constrained groups: batched dispatch.
+        for (g, stepper) in self.groups.iter().zip(&mut self.steppers) {
+            let mut xs = self.store.extract_group(g);
+            let gs: Vec<MatF> = g.indices.iter().map(|&i| grads[i].clone()).collect();
+            stepper.step_group(&mut xs, &gs);
+            self.store.write_group(g, xs);
+        }
+        // Free parameters: Adam.
+        for &i in &self.free_indices.clone() {
+            let mat = &mut self.store.get_mut(i).mat;
+            // Split borrow: Adam state indexed by param id.
+            let mut m = std::mem::replace(mat, MatF::zeros(1, 1));
+            self.free_opt.step(i, &mut m, &grads[i]);
+            self.store.get_mut(i).mat = m;
+        }
+
+        self.step_idx += 1;
+        // Schedules observe the loss.
+        if let Some(s) = &mut self.cfg.scheduler {
+            let lr = s.observe(loss);
+            for st in &mut self.steppers {
+                st.set_lr(lr);
+            }
+        }
+        Ok(loss)
+    }
+
+    /// Record standard telemetry (loss, feasibility, lr) at this step.
+    pub fn record(&mut self, loss: f64, extra: &[(&str, f64)]) {
+        let dist = self.store.max_stiefel_distance();
+        let ndist = self.store.max_normalized_distance();
+        let mut vals: Vec<(&str, f64)> = vec![
+            ("loss", loss),
+            ("distance", dist),
+            ("norm_distance", ndist),
+            ("lr", self.lr()),
+        ];
+        vals.extend_from_slice(extra);
+        self.log.record(self.step_idx, &vals);
+    }
+
+    /// Run up to `cfg.max_steps` steps, recording every `log_every`.
+    /// Returns the final loss. Stops early on target/early-stop signals.
+    pub fn run(&mut self, src: &mut dyn GradSource) -> Result<f64> {
+        let mut last = f64::NAN;
+        for _ in 0..self.cfg.max_steps {
+            let loss = self.step(src)?;
+            last = loss;
+            if self.step_idx % self.cfg.log_every == 0 || self.step_idx == 1 {
+                self.record(loss, &[]);
+            }
+            if let Some(t) = self.cfg.target_loss {
+                if loss <= t {
+                    self.record(loss, &[]);
+                    log::info!("target loss {t} reached at step {}", self.step_idx);
+                    break;
+                }
+            }
+            if let Some(es) = &mut self.cfg.early_stop {
+                if es.observe(loss) {
+                    self.record(loss, &[]);
+                    log::info!("early stop at step {}", self.step_idx);
+                    break;
+                }
+            }
+        }
+        Ok(last)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, matmul_at_b};
+    use crate::optim::Method;
+    use crate::rng::Rng;
+
+    /// Multi-matrix Procrustes: each group member has its own target.
+    struct MultiProcrustes {
+        a: Vec<MatF>,
+        b: Vec<MatF>,
+    }
+
+    impl GradSource for MultiProcrustes {
+        fn eval(&mut self, store: &ParamStore) -> Result<(f64, Vec<MatF>)> {
+            let mut loss = 0.0;
+            let mut grads = Vec::with_capacity(store.len());
+            for (i, p) in store.params().iter().enumerate() {
+                let r = matmul(&self.a[i], &p.mat).sub(&self.b[i]);
+                loss += r.norm_sq() as f64;
+                grads.push(matmul_at_b(&self.a[i], &r).scale(2.0));
+            }
+            Ok((loss, grads))
+        }
+    }
+
+    fn setup(n_mats: usize, p: usize, n: usize, seed: u64) -> (ParamStore, MultiProcrustes) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut store = ParamStore::new();
+        store.add_stiefel_group("x", n_mats, p, n, &mut rng);
+        let a: Vec<MatF> = (0..n_mats).map(|_| MatF::randn(p, p, &mut rng)).collect();
+        let b: Vec<MatF> = (0..n_mats).map(|_| MatF::randn(p, n, &mut rng)).collect();
+        (store, MultiProcrustes { a, b })
+    }
+
+    #[test]
+    fn trains_multi_matrix_group() {
+        let (store, mut src) = setup(6, 5, 10, 0);
+        let spec = OptimizerSpec::new(Method::Pogo, 0.02);
+        let mut tr = Trainer::new(
+            store,
+            spec,
+            None,
+            TrainerConfig { max_steps: 150, log_every: 25, ..Default::default() },
+        )
+        .unwrap();
+        let l0 = src.eval(&tr.store).unwrap().0;
+        let l1 = tr.run(&mut src).unwrap();
+        assert!(l1 < l0 * 0.8, "{l0} → {l1}");
+        assert!(tr.store.max_stiefel_distance() < 1e-3);
+        assert!(!tr.log.is_empty());
+    }
+
+    #[test]
+    fn target_loss_stops_early() {
+        let (store, mut src) = setup(2, 4, 8, 1);
+        let spec = OptimizerSpec::new(Method::Pogo, 0.05);
+        let l0 = src.eval(&store).unwrap().0;
+        let mut tr = Trainer::new(
+            store,
+            spec,
+            None,
+            TrainerConfig {
+                max_steps: 10_000,
+                target_loss: Some(l0 * 0.9),
+                log_every: 1000,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        tr.run(&mut src).unwrap();
+        assert!(tr.step_idx() < 10_000, "should stop well before max_steps");
+    }
+
+    #[test]
+    fn scheduler_reduces_lr() {
+        let (store, mut src) = setup(1, 4, 8, 2);
+        let spec = OptimizerSpec::new(Method::Pogo, 0.1);
+        let mut tr = Trainer::new(
+            store,
+            spec,
+            None,
+            TrainerConfig {
+                max_steps: 50,
+                scheduler: Some(Scheduler::new(
+                    crate::coordinator::scheduler::LrSchedule::Step { every: 10, gamma: 0.5 },
+                    0.1,
+                )),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        tr.run(&mut src).unwrap();
+        assert!(tr.lr() < 0.1 * 0.5 + 1e-12);
+    }
+
+    #[test]
+    fn free_params_update_via_adam() {
+        // One free matrix chasing a target; no constrained params.
+        let mut store = ParamStore::new();
+        let target = MatF::ones(3, 3);
+        store.add_free("w", MatF::zeros(3, 3));
+        let spec = OptimizerSpec::new(Method::Pogo, 0.1);
+        let mut tr = Trainer::new(
+            store,
+            spec,
+            None,
+            TrainerConfig { max_steps: 300, free_lr: 0.05, ..Default::default() },
+        )
+        .unwrap();
+        let t2 = target.clone();
+        let mut src = move |store: &ParamStore| {
+            let w = store.mat(0);
+            let r = w.sub(&t2);
+            Ok(((r.norm_sq()) as f64, vec![r.scale(2.0)]))
+        };
+        tr.run(&mut src).unwrap();
+        assert!(tr.store.mat(0).sub(&target).norm() < 0.2);
+    }
+}

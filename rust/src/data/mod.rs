@@ -1,0 +1,7 @@
+//! Synthetic datasets (DESIGN.md §Substitutions: no network access on this
+//! image, so CIFAR-10/MNIST are replaced by deterministic generators that
+//! exercise identical code paths and preserve relative optimizer ordering).
+
+pub mod cifar_like;
+pub mod corpus;
+pub mod mnist_like;

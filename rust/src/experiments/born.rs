@@ -1,0 +1,233 @@
+//! Fig. 8: squared unitary circuits — the Born-machine MPS on synthetic
+//! binary data, optimized on the COMPLEX Stiefel manifold.
+//!
+//! The model's 16 isometric complex cores are the reason orthoptimizers
+//! exist for this class (§5.3): unitarity makes the squared model
+//! self-normalized, so there is no partition function to renormalize.
+//! Gradients come from the AOT `born_lossgrad` executable; the unitary
+//! optimizer steps run on the Rust complex engine (the cores are tiny —
+//! the XLA complex path is exercised by `pogo_step_complex_test`).
+//! Protocol per §C.4: plateau-halving lr, early stopping on validation.
+
+use super::common::{self, RunRecord};
+use crate::config::{spec_for, RunConfig};
+use crate::coordinator::{EarlyStop, LrSchedule, MetricLog, Scheduler};
+use crate::data::mnist_like::MnistLike;
+use crate::linalg::{CMatF, Mat};
+use crate::manifold::stiefel;
+use crate::optim::base::BaseOptKind;
+use crate::optim::pogo::LambdaPolicy;
+use crate::optim::unitary::{LandingC, PogoC, RgdC, SlpgC, UnitaryOptimizer};
+use crate::optim::Method;
+use crate::rng::Rng;
+use crate::runtime::{Arg, Registry};
+use anyhow::Result;
+use std::rc::Rc;
+
+pub const T_SITES: usize = 16;
+pub const D_MAX: usize = 8;
+pub const TRAIN_BATCH: usize = 64;
+pub const EVAL_BATCH: usize = 512;
+
+/// Bond dimensions D_0..D_T (mirrors python/compile/models/born.py).
+pub fn bond_dims() -> Vec<usize> {
+    (0..=T_SITES)
+        .map(|t| {
+            let a = 1usize << t.min(30);
+            let b = 1usize << (T_SITES - t).min(30);
+            a.min(b).min(D_MAX)
+        })
+        .collect()
+}
+
+/// Core shapes (p, n) = (D_t, 2·D_{t−1}).
+pub fn core_shapes() -> Vec<(usize, usize)> {
+    let d = bond_dims();
+    (0..T_SITES).map(|t| (d[t + 1], 2 * d[t])).collect()
+}
+
+/// Random isometric cores.
+pub fn init_cores(rng: &mut Rng) -> Vec<CMatF> {
+    core_shapes()
+        .into_iter()
+        .map(|(p, n)| stiefel::random_point_complex::<f32>(p, n, rng))
+        .collect()
+}
+
+/// Max complex-Stiefel distance over the cores.
+pub fn max_distance(cores: &[CMatF]) -> f64 {
+    cores.iter().map(stiefel::distance_complex).fold(0.0, f64::max)
+}
+
+struct BornGrads {
+    lossgrad: Rc<crate::runtime::Executable>,
+    eval: Rc<crate::runtime::Executable>,
+    data: MnistLike,
+    eval_bits: Vec<i32>,
+}
+
+impl BornGrads {
+    fn new(reg: &Registry, seed: u64) -> Result<BornGrads> {
+        let mut data = MnistLike::new(seed, T_SITES, 8, 0.05);
+        let eval_bits = data.batch(EVAL_BATCH);
+        Ok(BornGrads {
+            lossgrad: reg.get("born_lossgrad")?,
+            eval: reg.get("born_eval")?,
+            data,
+            eval_bits,
+        })
+    }
+
+    fn core_args<'a>(cores: &'a [CMatF], bufs: &'a mut Vec<(Vec<f32>, Vec<usize>)>) {
+        for c in cores {
+            let (p, n) = c.shape();
+            bufs.push((c.re.as_slice().to_vec(), vec![p, n]));
+            bufs.push((c.im.as_slice().to_vec(), vec![p, n]));
+        }
+    }
+
+    /// Loss (mean NLL nats) + per-core complex gradients.
+    fn eval_step(&mut self, cores: &[CMatF]) -> Result<(f64, Vec<CMatF>)> {
+        let bits = self.data.batch(TRAIN_BATCH);
+        let mut bufs = Vec::new();
+        Self::core_args(cores, &mut bufs);
+        let mut args: Vec<Arg> = bufs.iter().map(|(b, s)| Arg::F32(b, s.clone())).collect();
+        args.push(Arg::I32(&bits, vec![TRAIN_BATCH, T_SITES]));
+        let outs = self.lossgrad.run(&args)?;
+        let loss = crate::runtime::literal_to_scalar(&outs[0])? as f64;
+        let mut grads = Vec::with_capacity(cores.len());
+        for (i, c) in cores.iter().enumerate() {
+            let (p, n) = c.shape();
+            let re = crate::runtime::literal_to_vec(&outs[1 + 2 * i])?;
+            let im = crate::runtime::literal_to_vec(&outs[2 + 2 * i])?;
+            grads.push(CMatF::from_parts(Mat::from_vec(p, n, re), Mat::from_vec(p, n, im)));
+        }
+        Ok((loss, grads))
+    }
+
+    /// Validation bits-per-dim.
+    fn eval_bpd(&self, cores: &[CMatF]) -> Result<f64> {
+        let mut bufs = Vec::new();
+        Self::core_args(cores, &mut bufs);
+        let mut args: Vec<Arg> = bufs.iter().map(|(b, s)| Arg::F32(b, s.clone())).collect();
+        args.push(Arg::I32(&self.eval_bits, vec![EVAL_BATCH, T_SITES]));
+        let outs = self.eval.run(&args)?;
+        Ok(crate::runtime::literal_to_scalar(&outs[0])? as f64)
+    }
+}
+
+/// Build the unitary optimizer for a method (complex engine).
+fn build_unitary(method: Method, cfg_id: crate::config::ExperimentId, n: usize)
+    -> Box<dyn UnitaryOptimizer<f32>> {
+    let spec = spec_for(cfg_id, method);
+    match method {
+        Method::Pogo => {
+            Box::new(PogoC::new(spec.lr, LambdaPolicy::Half, BaseOptKind::vadam(), n))
+        }
+        Method::Landing => Box::new(LandingC::new(spec.lr, spec.attraction,
+                                                  BaseOptKind::Sgd, n)),
+        Method::LandingPC => Box::new(LandingC::landing_pc(spec.lr, spec.attraction, n)),
+        Method::Slpg => Box::new(SlpgC::new(spec.lr, n)),
+        Method::Rgd => Box::new(RgdC::new(spec.lr, n)),
+        _ => Box::new(RgdC::new(spec.lr, n)), // Rsdm/Adam not in this lineup
+    }
+}
+
+/// Run the Fig. 8 experiment.
+pub fn run(cfg: &RunConfig) -> Result<()> {
+    let reg = common::open_registry()?;
+    let steps = if cfg.quick { 10 } else { cfg.steps };
+    let eval_every = (steps / 20).max(1);
+    let mut records = Vec::new();
+
+    for rep in 0..cfg.repetitions {
+        for &method in &cfg.methods {
+            let mut rng = Rng::seed_from_u64(cfg.seed + 31 * rep as u64);
+            let mut cores = init_cores(&mut rng);
+            let mut grads = BornGrads::new(&reg, cfg.seed + rep as u64)?;
+            let mut opt = build_unitary(method, cfg.experiment, cores.len());
+            let mut log = MetricLog::new(method.name());
+            // §C.4 protocol: halve on a 10-observation plateau, early stop.
+            let mut sched = Scheduler::new(
+                LrSchedule::Plateau { patience: 10, factor: 0.5, min_delta: 1e-4 },
+                opt.lr(),
+            );
+            let mut early = EarlyStop::new(25, 1e-5);
+
+            for s in 0..steps {
+                let (loss, gs) = grads.eval_step(&cores)?;
+                for (i, (c, g)) in cores.iter_mut().zip(&gs).enumerate() {
+                    opt.step(i, c, g);
+                }
+                if s % eval_every == 0 || s + 1 == steps {
+                    let bpd = grads.eval_bpd(&cores)?;
+                    let d = max_distance(&cores);
+                    log.record(s, &[
+                        ("loss", loss),
+                        ("bpd", bpd),
+                        ("distance", d),
+                        ("lr", opt.lr()),
+                    ]);
+                    log::info!(
+                        "{} step {s}: bpd {bpd:.4} dist {d:.2e} lr {:.1e}",
+                        method.name(),
+                        opt.lr()
+                    );
+                    opt.set_lr(sched.observe(bpd));
+                    if early.observe(bpd) {
+                        log::info!("{}: early stop at {s}", method.name());
+                        break;
+                    }
+                }
+            }
+            let wall = log.elapsed();
+            let rec = RunRecord { method, label: method.name().to_string(), log, wall_s: wall };
+            common::emit(cfg, &rec, rep)?;
+            records.push(rec);
+        }
+        // Reference line: the generator's entropy bound.
+        let ds = MnistLike::new(cfg.seed + rep as u64, T_SITES, 8, 0.05);
+        log::info!("data entropy bound ≈ {:.3} bpd", ds.entropy_bound_bpd());
+    }
+
+    common::print_summary(
+        "Fig. 8 — squared unitary circuit (Born MPS, complex Stiefel)",
+        &records,
+        &["best/bpd", "distance"],
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bond_dims_match_isometry_requirement() {
+        let shapes = core_shapes();
+        assert_eq!(shapes.len(), T_SITES);
+        for &(p, n) in &shapes {
+            assert!(p <= n, "core ({p},{n}) not wide");
+        }
+        // Boundary dims collapse to 1.
+        assert_eq!(bond_dims()[0], 1);
+        assert_eq!(bond_dims()[T_SITES], 1);
+    }
+
+    #[test]
+    fn init_cores_are_isometric() {
+        let mut rng = Rng::seed_from_u64(0);
+        let cores = init_cores(&mut rng);
+        assert_eq!(cores.len(), T_SITES);
+        assert!(max_distance(&cores) < 1e-5);
+    }
+
+    #[test]
+    fn unitary_optimizers_build_for_lineup() {
+        for m in [Method::Pogo, Method::Landing, Method::LandingPC, Method::Slpg,
+                  Method::Rgd] {
+            let opt = build_unitary(m, crate::config::ExperimentId::Fig8Born, 16);
+            assert!(opt.lr() > 0.0);
+        }
+    }
+}

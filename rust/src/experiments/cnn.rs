@@ -1,0 +1,287 @@
+//! Figs. 1/6/7: CNN classification with orthogonal filters or kernels.
+//!
+//! The compute graph (forward/backward) is one AOT executable
+//! (`cnn_{filters,kernels}_lossgrad`); the coordinator routes filter/kernel
+//! gradients to the per-group orthoptimizer and the classifier head to
+//! Adam. Test accuracy comes from the `_eval` executable on a held-out
+//! synthetic-CIFAR batch.
+//!
+//! Shapes (see `python/compile/models/cnn.py`):
+//! - filters: 3 wide matrices (24, 27), (64, 216), (128, 576);
+//! - kernels: 72 + 1536 + 8192 = 9800 orthogonal 3×3 matrices, dispatched
+//!   as three batched groups — the paper's many-matrix regime.
+
+use super::common::{self, RunRecord};
+use crate::config::{spec_for, RunConfig};
+use crate::coordinator::{OptimizerSpec, ParamStore, Trainer, TrainerConfig};
+use crate::data::cifar_like::CifarLike;
+use crate::linalg::MatF;
+use crate::optim::Method;
+use crate::rng::Rng;
+use crate::runtime::{Arg, Registry};
+use anyhow::Result;
+use std::rc::Rc;
+
+/// Which parameterization (two separate experiments in §5.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Parameterization {
+    Filters,
+    Kernels,
+}
+
+/// Mirrors python/compile/models/cnn.py — keep in sync.
+pub const FILTER_SHAPES: [(usize, usize); 3] = [(24, 27), (64, 216), (128, 576)];
+pub const KERNEL_COUNTS: [usize; 3] = [72, 1536, 8192];
+pub const HEAD_SHAPE: (usize, usize) = (128, 10);
+pub const TRAIN_BATCH: usize = 64;
+pub const EVAL_BATCH: usize = 256;
+
+/// Build the parameter store for one run. For the unconstrained Adam
+/// baseline everything is registered free.
+fn build_store(
+    param: Parameterization,
+    constrained: bool,
+    rng: &mut Rng,
+) -> ParamStore {
+    let mut store = ParamStore::new();
+    match param {
+        Parameterization::Filters => {
+            for (li, &(o, ik)) in FILTER_SHAPES.iter().enumerate() {
+                let x = crate::manifold::stiefel::random_point(o, ik, rng);
+                if constrained {
+                    store.add_stiefel_keyed(format!("w{li}"), x, format!("w{li}"));
+                } else {
+                    store.add_free(format!("w{li}"), x);
+                }
+            }
+        }
+        Parameterization::Kernels => {
+            for (li, &count) in KERNEL_COUNTS.iter().enumerate() {
+                for i in 0..count {
+                    let x = crate::manifold::stiefel::random_point(3, 3, rng);
+                    if constrained {
+                        store.add_stiefel_keyed(format!("k{li}_{i}"), x, format!("k{li}"));
+                    } else {
+                        store.add_free(format!("k{li}_{i}"), x);
+                    }
+                }
+            }
+        }
+    }
+    store.add_free("head", MatF::randn(HEAD_SHAPE.0, HEAD_SHAPE.1, rng).scale(0.1));
+    store
+}
+
+/// Pack the store into executable args + run loss/grad, mapping gradients
+/// back to per-parameter `MatF`s.
+struct CnnGrads {
+    lossgrad: Rc<crate::runtime::Executable>,
+    eval: Rc<crate::runtime::Executable>,
+    param: Parameterization,
+    data: CifarLike,
+    eval_images: Vec<f32>,
+    eval_labels: Vec<i32>,
+}
+
+impl CnnGrads {
+    fn new(reg: &Registry, param: Parameterization, seed: u64) -> Result<CnnGrads> {
+        let (lg, ev) = match param {
+            Parameterization::Filters => ("cnn_filters_lossgrad", "cnn_filters_eval"),
+            Parameterization::Kernels => ("cnn_kernels_lossgrad", "cnn_kernels_eval"),
+        };
+        let mut data = CifarLike::new(seed, 0.15);
+        let (eval_images, eval_labels) = data.batch(EVAL_BATCH);
+        Ok(CnnGrads {
+            lossgrad: reg.get(lg)?,
+            eval: reg.get(ev)?,
+            param,
+            data,
+            eval_images,
+            eval_labels,
+        })
+    }
+
+    /// Layer slices of the store: (per-layer param index ranges, head idx).
+    fn layout(&self, store: &ParamStore) -> (Vec<std::ops::Range<usize>>, usize) {
+        match self.param {
+            Parameterization::Filters => (vec![0..1, 1..2, 2..3], 3),
+            Parameterization::Kernels => {
+                let mut ranges = Vec::new();
+                let mut at = 0;
+                for &c in &KERNEL_COUNTS {
+                    ranges.push(at..at + c);
+                    at += c;
+                }
+                debug_assert_eq!(store.len(), at + 1);
+                (ranges, at)
+            }
+        }
+    }
+
+    fn eval_step(&mut self, store: &ParamStore) -> Result<(f64, Vec<MatF>)> {
+        let (ranges, head_idx) = self.layout(store);
+        let (images, labels) = self.data.batch(TRAIN_BATCH);
+
+        // Assemble args: 3 layer params (+ head), images, labels.
+        let layer_bufs: Vec<(Vec<f32>, Vec<usize>)> = ranges
+            .iter()
+            .map(|r| {
+                let mats: Vec<MatF> =
+                    r.clone().map(|i| store.mat(i).clone()).collect();
+                let (p, n) = mats[0].shape();
+                let packed = crate::runtime::pack_batch(&mats).unwrap();
+                match self.param {
+                    Parameterization::Filters => (packed, vec![p, n]),
+                    Parameterization::Kernels => (packed, vec![mats.len(), p, n]),
+                }
+            })
+            .collect();
+        let head = store.mat(head_idx);
+        let mut args: Vec<Arg> = Vec::new();
+        for (buf, shape) in &layer_bufs {
+            args.push(Arg::F32(buf, shape.clone()));
+        }
+        args.push(Arg::Mat(head));
+        args.push(Arg::F32(&images, vec![TRAIN_BATCH, 32, 32, 3]));
+        args.push(Arg::I32(&labels, vec![TRAIN_BATCH]));
+
+        let outs = self.lossgrad.run(&args)?;
+        let loss = crate::runtime::literal_to_scalar(&outs[0])? as f64;
+
+        // Map gradient outputs back to store order.
+        let mut grads: Vec<MatF> = vec![MatF::zeros(1, 1); store.len()];
+        for (li, r) in ranges.iter().enumerate() {
+            let flat = crate::runtime::literal_to_vec(&outs[1 + li])?;
+            let (p, n) = store.mat(r.start).shape();
+            let per = p * n;
+            for (j, i) in r.clone().enumerate() {
+                grads[i] = MatF::from_vec(p, n, flat[j * per..(j + 1) * per].to_vec());
+            }
+        }
+        let head_grad = crate::runtime::literal_to_vec(&outs[1 + ranges.len()])?;
+        grads[head_idx] = MatF::from_vec(HEAD_SHAPE.0, HEAD_SHAPE.1, head_grad);
+        Ok((loss, grads))
+    }
+
+    /// Held-out loss + accuracy.
+    fn test_metrics(&self, store: &ParamStore) -> Result<(f64, f64)> {
+        let (ranges, head_idx) = self.layout(store);
+        let layer_bufs: Vec<(Vec<f32>, Vec<usize>)> = ranges
+            .iter()
+            .map(|r| {
+                let mats: Vec<MatF> =
+                    r.clone().map(|i| store.mat(i).clone()).collect();
+                let (p, n) = mats[0].shape();
+                let packed = crate::runtime::pack_batch(&mats).unwrap();
+                match self.param {
+                    Parameterization::Filters => (packed, vec![p, n]),
+                    Parameterization::Kernels => (packed, vec![mats.len(), p, n]),
+                }
+            })
+            .collect();
+        let mut args: Vec<Arg> = Vec::new();
+        for (buf, shape) in &layer_bufs {
+            args.push(Arg::F32(buf, shape.clone()));
+        }
+        args.push(Arg::Mat(store.mat(head_idx)));
+        args.push(Arg::F32(&self.eval_images, vec![EVAL_BATCH, 32, 32, 3]));
+        args.push(Arg::I32(&self.eval_labels, vec![EVAL_BATCH]));
+        let outs = self.eval.run(&args)?;
+        let loss = crate::runtime::literal_to_scalar(&outs[0])? as f64;
+        let acc = crate::runtime::literal_to_scalar(&outs[1])? as f64;
+        Ok((loss, acc))
+    }
+}
+
+/// Run the CNN experiment for one parameterization.
+pub fn run(cfg: &RunConfig, param: Parameterization) -> Result<()> {
+    let reg = common::open_registry()?;
+    let steps = if cfg.quick { 6 } else { cfg.steps };
+    let eval_every = (steps / 10).max(1);
+    let mut records = Vec::new();
+
+    for rep in 0..cfg.repetitions {
+        for &method in &cfg.methods {
+            let mut rng = Rng::seed_from_u64(cfg.seed + 7 * rep as u64);
+            let constrained = method != Method::Adam;
+            let store = build_store(param, constrained, &mut rng);
+            let spec: OptimizerSpec =
+                common::with_engine_for(cfg, spec_for(cfg.experiment, method));
+            let mut grads = CnnGrads::new(&reg, param, cfg.seed + rep as u64)?;
+            let mut tr = Trainer::new(
+                store,
+                spec,
+                Some(&reg),
+                TrainerConfig {
+                    max_steps: steps,
+                    log_every: eval_every,
+                    free_lr: 0.01,
+                    ..Default::default()
+                },
+            )?;
+
+            for s in 0..steps {
+                let loss = {
+                    let g = &mut grads;
+                    let mut src = |store: &ParamStore| g.eval_step(store);
+                    tr.step(&mut src)?
+                };
+                if s % eval_every == 0 || s + 1 == steps {
+                    let (test_loss, acc) = grads.test_metrics(&tr.store)?;
+                    let d = tr.store.max_stiefel_distance();
+                    let nd = tr.store.max_normalized_distance();
+                    tr.log.record(tr.step_idx(), &[
+                        ("loss", loss),
+                        ("test_loss", test_loss),
+                        ("test_acc", acc),
+                        ("distance", d),
+                        ("norm_distance", nd),
+                    ]);
+                    log::info!(
+                        "{} step {s}: loss {loss:.3} acc {acc:.3} dist {d:.2e}",
+                        spec.label()
+                    );
+                }
+            }
+            let wall = tr.log.elapsed();
+            let rec = RunRecord { method, label: spec.label(), log: tr.log, wall_s: wall };
+            common::emit(cfg, &rec, rep)?;
+            records.push(rec);
+        }
+    }
+
+    let title = match param {
+        Parameterization::Filters => "Fig. 1/6 — CNN, orthogonal filters",
+        Parameterization::Kernels => "Fig. 1/6/7 — CNN, orthogonal kernels (9800 mats)",
+    };
+    common::print_summary(title, &records, &["max/test_acc", "norm_distance"]);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_layouts_match_artifact_signatures() {
+        let mut rng = Rng::seed_from_u64(0);
+        let s = build_store(Parameterization::Filters, true, &mut rng);
+        assert_eq!(s.len(), 4); // 3 filters + head
+        assert_eq!(s.stiefel_groups().len(), 3);
+
+        let s = build_store(Parameterization::Kernels, true, &mut rng);
+        assert_eq!(s.len(), KERNEL_COUNTS.iter().sum::<usize>() + 1);
+        let groups = s.stiefel_groups();
+        assert_eq!(groups.len(), 3);
+        let sizes: Vec<usize> = groups.iter().map(|g| g.indices.len()).collect();
+        assert_eq!(sizes, KERNEL_COUNTS.to_vec());
+    }
+
+    #[test]
+    fn adam_baseline_has_no_constraints() {
+        let mut rng = Rng::seed_from_u64(1);
+        let s = build_store(Parameterization::Filters, false, &mut rng);
+        assert!(s.stiefel_groups().is_empty());
+        assert_eq!(s.free_indices().len(), 4);
+    }
+}

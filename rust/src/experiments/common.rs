@@ -1,0 +1,117 @@
+//! Shared experiment plumbing: engine selection, CSV emission, summary
+//! tables, and the per-method run record.
+
+use crate::config::RunConfig;
+use crate::coordinator::{MetricLog, OptimizerSpec};
+use crate::optim::{Engine, Method};
+use crate::runtime::Registry;
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// Default engine assignment — the paper's systems claim: matmul-only
+/// methods run as AOT accelerator programs, retraction methods on host.
+pub fn engine_for(method: Method) -> Engine {
+    if method.is_matmul_only() {
+        Engine::Xla
+    } else {
+        Engine::Rust
+    }
+}
+
+/// Apply the default engine to a spec (keeps explicit overrides).
+pub fn with_default_engine(spec: OptimizerSpec) -> OptimizerSpec {
+    let e = engine_for(spec.method);
+    spec.with_engine(e)
+}
+
+/// Engine selection honouring `--quick` (tiny smoke shapes have no AOT
+/// artifacts, so quick runs use the Rust engine everywhere).
+pub fn with_engine_for(cfg: &RunConfig, spec: OptimizerSpec) -> OptimizerSpec {
+    if cfg.quick {
+        spec.with_engine(Engine::Rust)
+    } else {
+        with_default_engine(spec)
+    }
+}
+
+/// Open the artifact registry, with a helpful error.
+pub fn open_registry() -> Result<Registry> {
+    Registry::open_default().map_err(|e| {
+        anyhow::anyhow!("{e}\nhint: run `make artifacts` to build the AOT programs first")
+    })
+}
+
+/// One method's finished run.
+pub struct RunRecord {
+    pub method: Method,
+    pub label: String,
+    pub log: MetricLog,
+    pub wall_s: f64,
+}
+
+/// CSV path for a run: `<out>/<experiment>_<label>_rep<k>.csv`.
+pub fn csv_path(cfg: &RunConfig, label: &str, rep: usize) -> PathBuf {
+    let safe: String = label
+        .chars()
+        .map(|c| if c.is_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+        .collect();
+    cfg.out_dir.join(format!("{}_{safe}_rep{rep}.csv", cfg.experiment.name()))
+}
+
+/// Write a run's CSV and log the location.
+pub fn emit(cfg: &RunConfig, rec: &RunRecord, rep: usize) -> Result<()> {
+    let path = csv_path(cfg, &rec.label, rep);
+    rec.log.write_csv(&path)?;
+    log::debug!("wrote {}", path.display());
+    Ok(())
+}
+
+/// Print the end-of-experiment summary table (the "who wins by what
+/// factor" shape the paper's figures encode).
+pub fn print_summary(title: &str, records: &[RunRecord], metrics: &[&str]) {
+    println!("\n== {title} ==");
+    print!("{:<22} {:>9}", "method", "time");
+    for m in metrics {
+        print!(" {:>14}", m);
+    }
+    println!();
+    for r in records {
+        print!("{:<22} {:>9}", r.label, crate::util::fmt_duration(r.wall_s));
+        for m in metrics {
+            let v = match *m {
+                // "final/..." = last value, "best/..." = min value.
+                s if s.starts_with("best/") => r.log.min(&s[5..]),
+                s if s.starts_with("max/") => r.log.max(&s[4..]),
+                s => r.log.last(s),
+            };
+            match v {
+                Some(v) if v.abs() < 1e-3 || v.abs() >= 1e4 => print!(" {v:>14.3e}"),
+                Some(v) => print!(" {v:>14.4}"),
+                None => print!(" {:>14}", "-"),
+            }
+        }
+        println!();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentId;
+
+    #[test]
+    fn engines_follow_matmul_rule() {
+        assert_eq!(engine_for(Method::Pogo), Engine::Xla);
+        assert_eq!(engine_for(Method::Slpg), Engine::Xla);
+        assert_eq!(engine_for(Method::Rgd), Engine::Rust);
+        assert_eq!(engine_for(Method::Adam), Engine::Rust);
+    }
+
+    #[test]
+    fn csv_paths_are_sanitized() {
+        let cfg = RunConfig::new(ExperimentId::Fig4Pca);
+        let p = csv_path(&cfg, "POGO(vadam)[xla]", 2);
+        let s = p.file_name().unwrap().to_str().unwrap();
+        assert_eq!(s, "fig4-pca_pogo_vadam__xla__rep2.csv");
+    }
+}

@@ -1,0 +1,165 @@
+//! Fig. C.2/C.3: the λ-policy ablation — solve the landing quartic vs fix
+//! λ = 1/2, across learning rates, POGO with no base optimizer.
+//!
+//! Expected shape (paper §C.6): at small η the two policies are
+//! indistinguishable; as η grows, λ = 1/2 first fluctuates then *diverges*
+//! (ξ < 1 violated), while the root-solved λ survives higher η. POGO with
+//! VAdam is plotted as the reference that sidesteps the whole trade-off.
+//! Runs on Procrustes (fast, exact optimum) rather than the PC benchmark;
+//! the same sweep on Born-MPS is in `benches/ablations.rs`.
+
+use super::common::{self, RunRecord};
+use super::procrustes::{self, ProcrustesProblem};
+use crate::config::RunConfig;
+use crate::coordinator::MetricLog;
+use crate::linalg::MatF;
+use crate::manifold::stiefel;
+use crate::optim::base::BaseOptKind;
+use crate::optim::pogo::{LambdaPolicy, Pogo, PogoConfig};
+use crate::optim::{Method, Orthoptimizer};
+use crate::rng::Rng;
+use anyhow::Result;
+
+/// The §C.6 learning-rate grid (scaled to our problem size). The top end
+/// deliberately crosses the ξ < 1 boundary so the λ = 1/2 divergence —
+/// "every other version not appearing in the plot diverged within the
+/// first epoch" — is observable.
+pub const LR_GRID: [f64; 5] = [1e-5, 1e-4, 1e-3, 5e-3, 2e-2];
+
+fn run_one(
+    problem: &ProcrustesProblem,
+    x0: &MatF,
+    lr: f64,
+    policy: LambdaPolicy,
+    base: BaseOptKind,
+    steps: usize,
+) -> MetricLog {
+    let pol = match policy {
+        LambdaPolicy::Half => "half",
+        LambdaPolicy::FindRoot => "root",
+    };
+    let label = match base {
+        BaseOptKind::Sgd => format!("POGO-{pol}(lr={lr:.0e})"),
+        _ => format!("POGO-vadam-{pol}(lr={lr:.0e})"),
+    };
+    let mut log = MetricLog::new(label);
+    let mut x = x0.clone();
+    let mut opt = Pogo::<f32>::new(PogoConfig { lr, lambda: policy, base }, 1);
+    for s in 0..steps {
+        let (loss, grad) = procrustes::lossgrad_rust(&x, problem);
+        if !loss.is_finite() || !x.all_finite() {
+            // Divergence: record a sentinel and stop (the paper notes the
+            // λ=1/2 high-lr runs "diverged within the first epoch").
+            log.record(s, &[("gap", f64::INFINITY), ("distance", f64::INFINITY),
+                            ("diverged", 1.0)]);
+            break;
+        }
+        opt.step(0, &mut x, &grad);
+        if s % 5 == 0 || s + 1 == steps {
+            let d = stiefel::distance(&x);
+            log.record(s, &[
+                ("gap", procrustes::gap(problem, loss).max(1e-12)),
+                ("distance", d.max(1e-14)),
+                ("lambda", opt.last_lambda),
+            ]);
+        }
+    }
+    log
+}
+
+/// Run the λ ablation.
+pub fn run(cfg: &RunConfig) -> Result<()> {
+    let n = if cfg.quick { 24 } else { 128 };
+    let steps = if cfg.quick { 40 } else { cfg.steps };
+    let mut records = Vec::new();
+
+    for rep in 0..cfg.repetitions {
+        let mut rng = Rng::seed_from_u64(cfg.seed + rep as u64);
+        let problem = procrustes::build_problem(n, &mut rng);
+        let x0 = stiefel::random_point(n, n, &mut rng);
+
+        for &lr in &LR_GRID {
+            for policy in [LambdaPolicy::FindRoot, LambdaPolicy::Half] {
+                let log = run_one(&problem, &x0, lr, policy, BaseOptKind::Sgd, steps);
+                let wall = log.elapsed();
+                let diverged = log.last("diverged").is_some();
+                log::info!(
+                    "{}: {} (dist {:.2e})",
+                    log.label,
+                    if diverged { "DIVERGED" } else { "ok" },
+                    log.last("distance").unwrap_or(f64::NAN)
+                );
+                let rec = RunRecord {
+                    method: Method::Pogo,
+                    label: log.label.clone(),
+                    log,
+                    wall_s: wall,
+                };
+                common::emit(cfg, &rec, rep)?;
+                records.push(rec);
+            }
+        }
+        // VAdam reference (the §C.6 plots' extra line).
+        let log = run_one(&problem, &x0, 0.5, LambdaPolicy::Half,
+                          BaseOptKind::vadam(), steps);
+        let wall = log.elapsed();
+        let rec = RunRecord {
+            method: Method::Pogo,
+            label: log.label.clone(),
+            log,
+            wall_s: wall,
+        };
+        common::emit(cfg, &rec, rep)?;
+        records.push(rec);
+    }
+
+    common::print_summary(
+        &format!("Fig. C.2/C.3 — λ policy × lr (Procrustes n={n})"),
+        &records,
+        &["best/gap", "distance"],
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_lr_policies_indistinguishable() {
+        // §C.6: "no difference at all between fixing λ or computing the
+        // root for the smallest learning rate".
+        let mut rng = Rng::seed_from_u64(0);
+        let problem = procrustes::build_problem(16, &mut rng);
+        let x0 = stiefel::random_point(16, 16, &mut rng);
+        let half = run_one(&problem, &x0, 1e-5, LambdaPolicy::Half,
+                           BaseOptKind::Sgd, 60);
+        let root = run_one(&problem, &x0, 1e-5, LambdaPolicy::FindRoot,
+                           BaseOptKind::Sgd, 60);
+        let gh = half.last("gap").unwrap();
+        let gr = root.last("gap").unwrap();
+        // Same descent to within a few percent, and both feasible.
+        assert!((gh - gr).abs() < 0.1 * (1.0 + gh.abs()), "{gh} vs {gr}");
+        assert!(half.last("distance").unwrap() < 1e-3);
+        assert!(root.last("distance").unwrap() < 1e-3);
+    }
+
+    #[test]
+    fn root_survives_higher_lr_than_half() {
+        // At an aggressive lr, λ=1/2 must do no better (and typically
+        // diverges or drifts) compared to the root-solved policy.
+        let mut rng = Rng::seed_from_u64(1);
+        let problem = procrustes::build_problem(16, &mut rng);
+        let x0 = stiefel::random_point(16, 16, &mut rng);
+        let big = 0.05; // far beyond ξ<1 for this problem's gradients
+        let half = run_one(&problem, &x0, big, LambdaPolicy::Half, BaseOptKind::Sgd, 80);
+        let root = run_one(&problem, &x0, big, LambdaPolicy::FindRoot,
+                           BaseOptKind::Sgd, 80);
+        let dh = half.last("distance").unwrap_or(f64::INFINITY);
+        let dr = root.last("distance").unwrap_or(f64::INFINITY);
+        assert!(
+            dr <= dh * 10.0 || dh.is_infinite(),
+            "root dist {dr} unexpectedly much worse than half {dh}"
+        );
+    }
+}

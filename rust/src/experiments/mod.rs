@@ -1,0 +1,32 @@
+//! Experiment drivers — one module per paper figure (see DESIGN.md §5 for
+//! the index). Each driver runs the paper's method lineup on the workload,
+//! logs wall-clock series (loss / optimality gap / manifold distance) and
+//! writes the CSVs that regenerate the figure.
+
+pub mod born;
+pub mod cnn;
+pub mod common;
+pub mod lambda_ablation;
+pub mod ovit;
+pub mod pca;
+pub mod precision;
+pub mod procrustes;
+pub mod scale;
+
+use crate::config::{ExperimentId, RunConfig};
+use anyhow::Result;
+
+/// Dispatch an experiment by id.
+pub fn run(cfg: &RunConfig) -> Result<()> {
+    match cfg.experiment {
+        ExperimentId::Fig4Pca => pca::run(cfg),
+        ExperimentId::Fig4Procrustes => procrustes::run(cfg),
+        ExperimentId::Fig5Ovit => ovit::run(cfg),
+        ExperimentId::Fig1CnnFilters => cnn::run(cfg, cnn::Parameterization::Filters),
+        ExperimentId::Fig1CnnKernels => cnn::run(cfg, cnn::Parameterization::Kernels),
+        ExperimentId::Fig8Born => born::run(cfg),
+        ExperimentId::FigC1Precision => precision::run(cfg),
+        ExperimentId::FigC2Lambda => lambda_ablation::run(cfg),
+        ExperimentId::ScaleMatrices => scale::run(cfg),
+    }
+}

@@ -1,0 +1,187 @@
+//! Fig. 5: O-ViT — vision transformer with 18 orthogonal matrices.
+//!
+//! The 18 square (128, 128) attention/MLP matrices form ONE batched group
+//! (`pogo_step_b18_128x128` etc.); patch/positional embeddings and the
+//! head train with Adam. Matches the paper's observation target: similar
+//! final accuracy across orthoptimizers, big differences in wall time and
+//! manifold distance.
+
+use super::common::{self, RunRecord};
+use crate::config::{spec_for, RunConfig};
+use crate::coordinator::{ParamStore, Trainer, TrainerConfig};
+use crate::data::cifar_like::CifarLike;
+use crate::linalg::MatF;
+use crate::optim::Method;
+use crate::rng::Rng;
+use crate::runtime::{Arg, Registry};
+use anyhow::Result;
+use std::rc::Rc;
+
+/// Mirrors python/compile/models/vit.py.
+pub const N_ORTH: usize = 18;
+pub const DIM: usize = 128;
+pub const PATCH_W: (usize, usize) = (48, DIM);
+pub const POS: (usize, usize) = (64, DIM);
+pub const HEAD: (usize, usize) = (DIM, 10);
+pub const TRAIN_BATCH: usize = 32;
+pub const EVAL_BATCH: usize = 128;
+
+fn build_store(constrained: bool, rng: &mut Rng) -> ParamStore {
+    let mut store = ParamStore::new();
+    for i in 0..N_ORTH {
+        let x = crate::manifold::stiefel::random_point(DIM, DIM, rng);
+        if constrained {
+            store.add_stiefel_keyed(format!("orth_{i}"), x, "orth");
+        } else {
+            store.add_free(format!("orth_{i}"), x);
+        }
+    }
+    store.add_free("patch_w", MatF::randn(PATCH_W.0, PATCH_W.1, rng).scale(0.05));
+    store.add_free("pos", MatF::randn(POS.0, POS.1, rng).scale(0.02));
+    store.add_free("head", MatF::randn(HEAD.0, HEAD.1, rng).scale(0.05));
+    store
+}
+
+struct VitGrads {
+    lossgrad: Rc<crate::runtime::Executable>,
+    eval: Rc<crate::runtime::Executable>,
+    data: CifarLike,
+    eval_images: Vec<f32>,
+    eval_labels: Vec<i32>,
+}
+
+impl VitGrads {
+    fn new(reg: &Registry, seed: u64) -> Result<VitGrads> {
+        let mut data = CifarLike::new(seed, 0.15);
+        let (eval_images, eval_labels) = data.batch(EVAL_BATCH);
+        Ok(VitGrads {
+            lossgrad: reg.get("vit_lossgrad")?,
+            eval: reg.get("vit_eval")?,
+            data,
+            eval_images,
+            eval_labels,
+        })
+    }
+
+    fn pack_params<'a>(&self, store: &'a ParamStore) -> Result<Vec<f32>> {
+        let orth: Vec<MatF> = (0..N_ORTH).map(|i| store.mat(i).clone()).collect();
+        crate::runtime::pack_batch(&orth)
+    }
+
+    fn eval_step(&mut self, store: &ParamStore) -> Result<(f64, Vec<MatF>)> {
+        let orth = self.pack_params(store)?;
+        let (images, labels) = self.data.batch(TRAIN_BATCH);
+        let outs = self.lossgrad.run(&[
+            Arg::F32(&orth, vec![N_ORTH, DIM, DIM]),
+            Arg::Mat(store.mat(N_ORTH)),
+            Arg::Mat(store.mat(N_ORTH + 1)),
+            Arg::Mat(store.mat(N_ORTH + 2)),
+            Arg::F32(&images, vec![TRAIN_BATCH, 32, 32, 3]),
+            Arg::I32(&labels, vec![TRAIN_BATCH]),
+        ])?;
+        let loss = crate::runtime::literal_to_scalar(&outs[0])? as f64;
+        let g_orth = crate::runtime::literal_to_vec(&outs[1])?;
+        let mut grads: Vec<MatF> = Vec::with_capacity(store.len());
+        let per = DIM * DIM;
+        for i in 0..N_ORTH {
+            grads.push(MatF::from_vec(DIM, DIM, g_orth[i * per..(i + 1) * per].to_vec()));
+        }
+        grads.push(crate::runtime::literal_to_mat(&outs[2], PATCH_W.0, PATCH_W.1)?);
+        grads.push(crate::runtime::literal_to_mat(&outs[3], POS.0, POS.1)?);
+        grads.push(crate::runtime::literal_to_mat(&outs[4], HEAD.0, HEAD.1)?);
+        Ok((loss, grads))
+    }
+
+    fn test_metrics(&self, store: &ParamStore) -> Result<(f64, f64)> {
+        let orth = self.pack_params(store)?;
+        let outs = self.eval.run(&[
+            Arg::F32(&orth, vec![N_ORTH, DIM, DIM]),
+            Arg::Mat(store.mat(N_ORTH)),
+            Arg::Mat(store.mat(N_ORTH + 1)),
+            Arg::Mat(store.mat(N_ORTH + 2)),
+            Arg::F32(&self.eval_images, vec![EVAL_BATCH, 32, 32, 3]),
+            Arg::I32(&self.eval_labels, vec![EVAL_BATCH]),
+        ])?;
+        let loss = crate::runtime::literal_to_scalar(&outs[0])? as f64;
+        let acc = crate::runtime::literal_to_scalar(&outs[1])? as f64;
+        Ok((loss, acc))
+    }
+}
+
+/// Run the Fig. 5 experiment.
+pub fn run(cfg: &RunConfig) -> Result<()> {
+    let reg = common::open_registry()?;
+    let steps = if cfg.quick { 4 } else { cfg.steps };
+    let eval_every = (steps / 10).max(1);
+    let mut records = Vec::new();
+
+    for rep in 0..cfg.repetitions {
+        for &method in &cfg.methods {
+            let mut rng = Rng::seed_from_u64(cfg.seed + 13 * rep as u64);
+            let constrained = method != Method::Adam;
+            let store = build_store(constrained, &mut rng);
+            let spec = common::with_engine_for(cfg, spec_for(cfg.experiment, method));
+            let mut grads = VitGrads::new(&reg, cfg.seed + rep as u64)?;
+            let mut tr = Trainer::new(
+                store,
+                spec,
+                Some(&reg),
+                TrainerConfig {
+                    max_steps: steps,
+                    log_every: eval_every,
+                    free_lr: 3e-3,
+                    ..Default::default()
+                },
+            )?;
+
+            for s in 0..steps {
+                let loss = {
+                    let g = &mut grads;
+                    let mut src = |store: &ParamStore| g.eval_step(store);
+                    tr.step(&mut src)?
+                };
+                if s % eval_every == 0 || s + 1 == steps {
+                    let (test_loss, acc) = grads.test_metrics(&tr.store)?;
+                    let d = tr.store.max_stiefel_distance();
+                    tr.log.record(tr.step_idx(), &[
+                        ("loss", loss),
+                        ("test_loss", test_loss),
+                        ("test_acc", acc),
+                        ("distance", d),
+                    ]);
+                    log::info!(
+                        "{} step {s}: loss {loss:.3} acc {acc:.3} dist {d:.2e}",
+                        spec.label()
+                    );
+                }
+            }
+            let wall = tr.log.elapsed();
+            let rec = RunRecord { method, label: spec.label(), log: tr.log, wall_s: wall };
+            common::emit(cfg, &rec, rep)?;
+            records.push(rec);
+        }
+    }
+
+    common::print_summary(
+        "Fig. 5 — O-ViT (18 orthogonal 128×128 matrices)",
+        &records,
+        &["max/test_acc", "distance"],
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_has_one_orth_group_of_18() {
+        let mut rng = Rng::seed_from_u64(0);
+        let s = build_store(true, &mut rng);
+        let groups = s.stiefel_groups();
+        assert_eq!(groups.len(), 1);
+        assert_eq!(groups[0].indices.len(), N_ORTH);
+        assert_eq!(groups[0].shape, (DIM, DIM));
+        assert_eq!(s.free_indices().len(), 3);
+    }
+}

@@ -1,0 +1,205 @@
+//! Fig. C.1: the tensor-precision ablation on online PCA.
+//!
+//! Three arithmetic modes over the same trajectory seeds:
+//! - `f32` — the default experiment dtype;
+//! - `f64` — "all 64-bit": slower, and RSDM's manifold drift disappears
+//!   (the paper's §C.5 finding);
+//! - `bf16` — matmul inputs truncated to bfloat16 mantissas (emulating
+//!   reduced-mantissa tensor units): faster units in exchange for several
+//!   orders of magnitude more feasibility error.
+//!
+//! All runs use the pure-Rust engines so the precision is actually what we
+//! claim end-to-end (XLA CPU would keep f32 accumulators).
+
+use super::common::{self, RunRecord};
+use super::pca::{self, PcaProblem};
+use crate::config::{spec_for, RunConfig};
+use crate::coordinator::MetricLog;
+use crate::linalg::{Mat, Scalar};
+use crate::manifold::stiefel;
+use crate::optim::base::BaseOptKind;
+use crate::optim::landing::{Landing, LandingConfig};
+use crate::optim::pogo::{Pogo, PogoConfig};
+use crate::optim::rgd::{Rgd, RgdConfig};
+use crate::optim::rsdm::{Rsdm, RsdmConfig};
+use crate::optim::{Method, Orthoptimizer};
+use crate::rng::Rng;
+use anyhow::Result;
+
+/// Arithmetic mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    F32,
+    F64,
+    Bf16,
+}
+
+impl Precision {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::F64 => "f64",
+            Precision::Bf16 => "bf16",
+        }
+    }
+}
+
+/// Build the method's optimizer at scalar type S.
+fn build_opt<S: Scalar>(method: Method, id: crate::config::ExperimentId)
+    -> Box<dyn Orthoptimizer<S>> {
+    let spec = spec_for(id, method);
+    match method {
+        Method::Pogo => Box::new(Pogo::<S>::new(
+            PogoConfig { lr: spec.lr, base: spec.base, ..Default::default() },
+            1,
+        )),
+        Method::Landing => Box::new(Landing::<S>::new(
+            LandingConfig { lr: spec.lr, base: spec.base, ..Default::default() },
+            1,
+        )),
+        Method::Rgd => Box::new(Rgd::<S>::new(
+            RgdConfig { lr: spec.lr, base: BaseOptKind::Sgd },
+            1,
+        )),
+        Method::Rsdm => Box::new(Rsdm::<S>::new(
+            RsdmConfig {
+                lr: spec.lr,
+                submanifold_dim: spec.submanifold_dim,
+                base: BaseOptKind::Sgd,
+                seed: spec.seed,
+                ..Default::default()
+            },
+            1,
+        )),
+        _ => unreachable!("precision ablation lineup"),
+    }
+}
+
+/// One (method, precision) run on a shared problem instance.
+fn run_one<S: Scalar>(
+    method: Method,
+    id: crate::config::ExperimentId,
+    problem: &PcaProblem,
+    x0: &Mat<S>,
+    steps: usize,
+    truncate_bf16: bool,
+) -> MetricLog {
+    let aat: Mat<S> = problem.aat.cast();
+    let mut x = x0.clone();
+    let mut opt = build_opt::<S>(method, id);
+    let label = format!("{}/{}", method.name(), if truncate_bf16 { "bf16" }
+                        else if S::EPS.to_f64() < 1e-10 { "f64" } else { "f32" });
+    let mut log = MetricLog::new(label);
+    for s in 0..steps {
+        let (x_in, aat_in) = if truncate_bf16 {
+            (x.truncate_bf16(), aat.truncate_bf16())
+        } else {
+            (x.clone(), aat.clone())
+        };
+        let (loss, grad) = pca::lossgrad_rust(&x_in, &aat_in);
+        opt.step(0, &mut x, &grad);
+        if truncate_bf16 {
+            x = x.truncate_bf16();
+        }
+        if s % 5 == 0 || s + 1 == steps {
+            let d = stiefel::distance_t(&x);
+            let gap = pca::gap(problem, loss);
+            log.record(s, &[("gap", gap.max(1e-12)), ("distance", d.max(1e-12)),
+                            ("loss", loss)]);
+        }
+    }
+    log
+}
+
+/// Run the precision ablation.
+pub fn run(cfg: &RunConfig) -> Result<()> {
+    let (p, n) = if cfg.quick { (30, 40) } else { (150, 200) };
+    let mut records = Vec::new();
+    let steps = if cfg.quick { 40 } else { cfg.steps };
+
+    for rep in 0..cfg.repetitions {
+        let mut rng = Rng::seed_from_u64(cfg.seed + rep as u64);
+        let problem = pca::build_problem(p, n, &mut rng);
+        let x0_d = stiefel::random_point_t::<f64>(p, n, &mut rng);
+        let x0_f: Mat<f32> = x0_d.cast();
+
+        for &method in &cfg.methods {
+            for &prec in &[Precision::F32, Precision::F64, Precision::Bf16] {
+                let log = match prec {
+                    Precision::F32 => {
+                        run_one::<f32>(method, cfg.experiment, &problem, &x0_f, steps, false)
+                    }
+                    Precision::F64 => {
+                        run_one::<f64>(method, cfg.experiment, &problem, &x0_d, steps, false)
+                    }
+                    Precision::Bf16 => {
+                        run_one::<f32>(method, cfg.experiment, &problem, &x0_f, steps, true)
+                    }
+                };
+                let wall = log.elapsed();
+                log::info!(
+                    "{}: final dist {:.2e} gap {:.2e} in {}",
+                    log.label,
+                    log.last("distance").unwrap_or(f64::NAN),
+                    log.last("gap").unwrap_or(f64::NAN),
+                    crate::util::fmt_duration(wall)
+                );
+                let rec =
+                    RunRecord { method, label: log.label.clone(), log, wall_s: wall };
+                common::emit(cfg, &rec, rep)?;
+                records.push(rec);
+            }
+        }
+    }
+
+    common::print_summary(
+        &format!("Fig. C.1 — precision ablation on PCA (p={p}, n={n})"),
+        &records,
+        &["best/gap", "distance"],
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rsdm_precision_ordering() {
+        // THE §C.5 claim: RSDM's drift is numerical — f64 ≪ f32 ≤ bf16.
+        let mut rng = Rng::seed_from_u64(0);
+        let problem = pca::build_problem(20, 30, &mut rng);
+        let x0_d = stiefel::random_point_t::<f64>(20, 30, &mut rng);
+        let x0_f: Mat<f32> = x0_d.cast();
+        let id = crate::config::ExperimentId::FigC1Precision;
+        let steps = 300;
+        let d32 = run_one::<f32>(Method::Rsdm, id, &problem, &x0_f, steps, false)
+            .last("distance")
+            .unwrap();
+        let d64 = run_one::<f64>(Method::Rsdm, id, &problem, &x0_d, steps, false)
+            .last("distance")
+            .unwrap();
+        let dbf = run_one::<f32>(Method::Rsdm, id, &problem, &x0_f, steps, true)
+            .last("distance")
+            .unwrap();
+        assert!(d64 < d32, "f64 {d64} should beat f32 {d32}");
+        assert!(d32 < dbf, "f32 {d32} should beat bf16 {dbf}");
+        assert!(d64 < 1e-6, "f64 drift {d64}");
+    }
+
+    #[test]
+    fn pogo_robust_across_precisions() {
+        // POGO's normal step re-attracts every iteration, so even bf16
+        // stays within a modest band (the paper's "benefits from mantissa
+        // reduction" point).
+        let mut rng = Rng::seed_from_u64(1);
+        let problem = pca::build_problem(16, 24, &mut rng);
+        let x0_d = stiefel::random_point_t::<f64>(16, 24, &mut rng);
+        let x0_f: Mat<f32> = x0_d.cast();
+        let id = crate::config::ExperimentId::FigC1Precision;
+        let dbf = run_one::<f32>(Method::Pogo, id, &problem, &x0_f, 200, true)
+            .last("distance")
+            .unwrap();
+        assert!(dbf < 0.1, "POGO bf16 drift {dbf}");
+    }
+}

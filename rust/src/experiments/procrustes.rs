@@ -1,0 +1,206 @@
+//! Fig. 4 (right): the orthogonal Procrustes problem.
+//!
+//! `min ‖A X − B‖² s.t. X ∈ St(p, n)` (Eq. 15), p = n, A and B standard
+//! Gaussian. The analytic optimum is the polar factor of `Aᵀ B` (Gower &
+//! Dijksterhuis 2004), computed on the Newton–Schulz substrate, giving the
+//! exact optimality-gap reference.
+
+use super::common::{self, RunRecord};
+use crate::config::{spec_for, RunConfig};
+use crate::coordinator::{ParamStore, Trainer, TrainerConfig};
+use crate::linalg::{matmul, matmul_at_b, polar_project, MatF, PolarOpts};
+use crate::manifold::stiefel;
+use crate::rng::Rng;
+use crate::runtime::{Arg, Registry};
+use anyhow::Result;
+
+/// Problem instance.
+pub struct ProcrustesProblem {
+    pub a: MatF,
+    pub b: MatF,
+    pub n: usize,
+    pub optimal_loss: f64,
+}
+
+pub fn build_problem(n: usize, rng: &mut Rng) -> ProcrustesProblem {
+    let a = MatF::randn(n, n, rng);
+    let b = MatF::randn(n, n, rng);
+    // X* = polar(Aᵀ B); compute in f64 for accuracy.
+    let atb = matmul_at_b(&a, &b).cast::<f64>();
+    let xstar = polar_project(&atb, PolarOpts { tol: 1e-10, max_iters: 200 });
+    let xstar_f: MatF = xstar.cast();
+    let r = matmul(&a, &xstar_f).sub(&b);
+    let optimal_loss = r.norm_sq() as f64;
+    ProcrustesProblem { a, b, n, optimal_loss }
+}
+
+pub fn gap(problem: &ProcrustesProblem, loss: f64) -> f64 {
+    (loss - problem.optimal_loss) / problem.optimal_loss.abs()
+}
+
+/// Rust closed-form gradient: ∇ = 2 Aᵀ(A X − B).
+pub fn lossgrad_rust(x: &MatF, prob: &ProcrustesProblem) -> (f64, MatF) {
+    let r = matmul(&prob.a, x).sub(&prob.b);
+    let loss = r.norm_sq() as f64;
+    (loss, matmul_at_b(&prob.a, &r).scale(2.0))
+}
+
+/// AOT gradient source.
+pub struct ProcGrads<'r> {
+    exe: std::rc::Rc<crate::runtime::Executable>,
+    problem: &'r ProcrustesProblem,
+}
+
+impl<'r> ProcGrads<'r> {
+    pub fn new(reg: &Registry, problem: &'r ProcrustesProblem) -> Result<Self> {
+        let name = format!("procrustes_lossgrad_{}x{}", problem.n, problem.n);
+        Ok(ProcGrads { exe: reg.get(&name)?, problem })
+    }
+
+    pub fn eval_one(&self, x: &MatF) -> Result<(f64, MatF)> {
+        let outs =
+            self.exe.run(&[Arg::Mat(x), Arg::Mat(&self.problem.a), Arg::Mat(&self.problem.b)])?;
+        let loss = crate::runtime::literal_to_scalar(&outs[0])? as f64;
+        let grad = crate::runtime::literal_to_mat(&outs[1], self.problem.n, self.problem.n)?;
+        Ok((loss, grad))
+    }
+}
+
+/// Run the Fig. 4 Procrustes comparison.
+pub fn run(cfg: &RunConfig) -> Result<()> {
+    let reg = common::open_registry()?;
+    let n = if cfg.full { 2000 } else { 400 };
+    let n = if cfg.quick { 40 } else { n };
+    let mut records = Vec::new();
+
+    for rep in 0..cfg.repetitions {
+        let mut rng = Rng::seed_from_u64(cfg.seed + 1000 + rep as u64);
+        let problem = build_problem(n, &mut rng);
+        let x0 = stiefel::random_point(n, n, &mut rng);
+
+        for &method in &cfg.methods {
+            let spec = common::with_engine_for(cfg, spec_for(cfg.experiment, method));
+            let mut store = ParamStore::new();
+            store.add_stiefel("x", x0.clone());
+            let mut tr = Trainer::new(
+                store,
+                spec,
+                Some(&reg),
+                TrainerConfig { max_steps: cfg.steps, log_every: 1, ..Default::default() },
+            )?;
+            let grads =
+                if cfg.quick { None } else { Some(ProcGrads::new(&reg, &problem)?) };
+            // §Perf: XLA distance probe (see pca.rs).
+            let dist_exe =
+                if cfg.quick { None } else { Some(reg.get(&format!("distance_b1_{n}x{n}"))?) };
+
+            let mut last_gap = f64::INFINITY;
+            for _ in 0..cfg.steps {
+                let loss = match &grads {
+                    Some(g) => {
+                        let gref = g;
+                        let mut src = |store: &ParamStore| {
+                            let (l, gr) = gref.eval_one(store.mat(0))?;
+                            Ok((l, vec![gr]))
+                        };
+                        tr.step(&mut src)?
+                    }
+                    None => {
+                        let pref = &problem;
+                        let mut src = move |store: &ParamStore| {
+                            let (l, gr) = lossgrad_rust(store.mat(0), pref);
+                            Ok((l, vec![gr]))
+                        };
+                        tr.step(&mut src)?
+                    }
+                };
+                last_gap = gap(&problem, loss);
+                let d = match &dist_exe {
+                    Some(exe) => {
+                        let xs = [tr.store.mat(0).clone()];
+                        let outs = exe.run(&[Arg::Batch(&xs)])?;
+                        crate::runtime::literal_to_scalar(&outs[0])? as f64
+                    }
+                    None => stiefel::distance(tr.store.mat(0)),
+                };
+                tr.log.record(tr.step_idx(), &[
+                    ("loss", loss),
+                    ("gap", last_gap.max(1e-12)),
+                    ("distance", d),
+                ]);
+                if last_gap <= 1e-6 {
+                    break;
+                }
+            }
+            let wall = tr.log.elapsed();
+            log::info!(
+                "{}: gap {:.2e} in {} ({} steps)",
+                spec.label(),
+                last_gap,
+                crate::util::fmt_duration(wall),
+                tr.step_idx()
+            );
+            let rec = RunRecord { method, label: spec.label(), log: tr.log, wall_s: wall };
+            common::emit(cfg, &rec, rep)?;
+            records.push(rec);
+        }
+    }
+
+    common::print_summary(
+        &format!("Fig. 4 — orthogonal Procrustes (n={n})"),
+        &records,
+        &["best/gap", "distance"],
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn optimum_beats_random_points() {
+        let mut rng = Rng::seed_from_u64(0);
+        let prob = build_problem(12, &mut rng);
+        for _ in 0..5 {
+            let x = stiefel::random_point(12, 12, &mut rng);
+            let (l, _) = lossgrad_rust(&x, &prob);
+            assert!(l >= prob.optimal_loss - 1e-2, "{l} < {}", prob.optimal_loss);
+        }
+    }
+
+    #[test]
+    fn gap_zero_at_optimum() {
+        let mut rng = Rng::seed_from_u64(1);
+        let prob = build_problem(10, &mut rng);
+        let atb = matmul_at_b(&prob.a, &prob.b).cast::<f64>();
+        let xstar: MatF =
+            polar_project(&atb, PolarOpts { tol: 1e-10, max_iters: 200 }).cast();
+        let (l, _) = lossgrad_rust(&xstar, &prob);
+        assert!(gap(&prob, l).abs() < 1e-3);
+    }
+
+    #[test]
+    fn pogo_closes_gap_small_instance() {
+        use crate::optim::Orthoptimizer;
+        let mut rng = Rng::seed_from_u64(2);
+        let prob = build_problem(16, &mut rng);
+        let mut x = stiefel::random_point(16, 16, &mut rng);
+        let mut opt = crate::optim::pogo::Pogo::<f32>::new(
+            crate::optim::pogo::PogoConfig { lr: 0.002, ..Default::default() },
+            1,
+        );
+        let (l0, _) = lossgrad_rust(&x, &prob);
+        let mut l = l0;
+        for _ in 0..500 {
+            let (li, g) = lossgrad_rust(&x, &prob);
+            opt.step(0, &mut x, &g);
+            l = li;
+        }
+        assert!(
+            l - prob.optimal_loss < 0.3 * (l0 - prob.optimal_loss),
+            "gap not closed: {l0} → {l} (opt {})",
+            prob.optimal_loss
+        );
+    }
+}

@@ -1,0 +1,67 @@
+//! # POGO — Proximal One-step Geometric Orthoptimizer, at scale
+//!
+//! A production-grade reproduction of *"An Embarrassingly Simple Way to
+//! Optimize Orthogonal Matrices at Scale"* (Javaloy & Vergari, 2026) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — the training coordinator: parameter store,
+//!   shape-grouped batched dispatch of orthogonality-constrained updates,
+//!   learning-rate schedulers, early stopping, metrics, experiment drivers
+//!   and a CLI. Python is never on this path.
+//! - **L2** — JAX compute graphs (`python/compile/`): optimizer steps and
+//!   model forward/backward programs, AOT-lowered to HLO text.
+//! - **L1** — Pallas kernels (`python/compile/kernels/`): the batched POGO
+//!   update as a tiled TPU-style kernel (run under `interpret=True` on the
+//!   CPU PJRT client of this image).
+//!
+//! The crate also contains complete pure-Rust reference implementations of
+//! POGO and every baseline orthoptimizer from the paper (RGD-QR, RSDM,
+//! Landing, LandingPC, SLPG, unconstrained Adam), built on an in-crate
+//! dense linear-algebra substrate — no external BLAS.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use pogo::linalg::Mat;
+//! use pogo::manifold::stiefel;
+//! use pogo::optim::{Orthoptimizer, pogo::{Pogo, PogoConfig}};
+//! use pogo::rng::Rng;
+//!
+//! let mut rng = Rng::seed_from_u64(0);
+//! // A random point on St(64, 128) and a Euclidean gradient.
+//! let mut x = stiefel::random_point(64, 128, &mut rng);
+//! let g = Mat::randn(64, 128, &mut rng);
+//! let mut opt = Pogo::new(PogoConfig { lr: 0.1, ..Default::default() }, 1);
+//! opt.step(0, &mut x, &g);
+//! assert!(stiefel::distance(&x) < 1e-4); // stays on the manifold
+//! ```
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod linalg;
+pub mod manifold;
+pub mod optim;
+pub mod rng;
+pub mod runtime;
+pub mod testing;
+pub mod util;
+
+/// Crate version, re-exported for the CLI `--version` flag.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// Root of the repository, used to locate `artifacts/` in examples/tests.
+/// Resolution order: `$POGO_REPO_ROOT`, then the crate manifest dir.
+pub fn repo_root() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("POGO_REPO_ROOT") {
+        return std::path::PathBuf::from(p);
+    }
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+/// Default artifacts directory (`<repo>/artifacts`).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    repo_root().join("artifacts")
+}

@@ -1,0 +1,160 @@
+//! Cyclic Jacobi eigensolver for symmetric matrices.
+//!
+//! Used to compute the *analytic optima* of the Fig. 4 workloads (online
+//! PCA's optimal loss = sum of the top-p eigenvalues of A Aᵀ) so the
+//! optimality-gap metric has an exact reference, and by the synthetic
+//! spectrum generator (condition number 1000, exponentially decaying
+//! eigenvalues — §5.1).
+
+use super::mat::Mat;
+use super::matmul::matmul;
+use super::scalar::Scalar;
+
+/// Result of a symmetric eigendecomposition `A = V diag(w) Vᵀ`,
+/// eigenvalues sorted descending, eigenvectors in the *columns* of `v`.
+pub struct SymEig<S: Scalar> {
+    pub values: Vec<S>,
+    pub vectors: Mat<S>,
+}
+
+/// Cyclic Jacobi with threshold sweeps. `O(n³)` per sweep; fine for the
+/// reference-optimum computations (n ≤ ~1000 in default configs).
+pub fn sym_eig<S: Scalar>(a: &Mat<S>, max_sweeps: usize) -> SymEig<S> {
+    let n = a.rows();
+    assert_eq!(a.rows(), a.cols(), "sym_eig expects a square matrix");
+    let mut m = a.clone();
+    let mut v = Mat::<S>::eye(n);
+
+    for _sweep in 0..max_sweeps {
+        // Off-diagonal Frobenius norm.
+        let mut off = 0.0f64;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let x = m[(i, j)].to_f64();
+                off += 2.0 * x * x;
+            }
+        }
+        if off.sqrt() < 1e-11 * (1.0 + m.norm().to_f64()) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)].to_f64();
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)].to_f64();
+                let aqq = m[(q, q)].to_f64();
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                let (cs, ss) = (S::from_f64(c), S::from_f64(s));
+                // Rotate rows/cols p, q of m: m = Jᵀ m J.
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = cs * mkp - ss * mkq;
+                    m[(k, q)] = ss * mkp + cs * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = cs * mpk - ss * mqk;
+                    m[(q, k)] = ss * mpk + cs * mqk;
+                }
+                // Accumulate eigenvectors.
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = cs * vkp - ss * vkq;
+                    v[(k, q)] = ss * vkp + cs * vkq;
+                }
+            }
+        }
+    }
+
+    // Extract and sort descending.
+    let mut order: Vec<usize> = (0..n).collect();
+    let diag: Vec<f64> = (0..n).map(|i| m[(i, i)].to_f64()).collect();
+    order.sort_by(|&i, &j| diag[j].partial_cmp(&diag[i]).unwrap());
+    let values: Vec<S> = order.iter().map(|&i| m[(i, i)]).collect();
+    let vectors = Mat::from_fn(n, n, |r, c| v[(r, order[c])]);
+    SymEig { values, vectors }
+}
+
+/// Build a symmetric PSD matrix with a prescribed (descending) spectrum
+/// and random orthogonal eigenbasis: `A = Q diag(w) Qᵀ`.
+pub fn with_spectrum<S: Scalar>(spectrum: &[S], rng: &mut crate::rng::Rng) -> Mat<S> {
+    let n = spectrum.len();
+    let q = super::qr::qr_thin(&Mat::<S>::randn(n, n, rng));
+    // A = Q diag(w) Qᵀ
+    let mut qw = q.clone();
+    for i in 0..n {
+        for j in 0..n {
+            qw[(i, j)] *= spectrum[j];
+        }
+    }
+    matmul(&qw, &q.transpose())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn diagonal_matrix_eigenvalues() {
+        let mut d = Mat::<f64>::zeros(4, 4);
+        for (i, &w) in [4.0, 1.0, 3.0, 2.0].iter().enumerate() {
+            d[(i, i)] = w;
+        }
+        let e = sym_eig(&d, 30);
+        let got: Vec<f64> = e.values.clone();
+        assert!((got[0] - 4.0).abs() < 1e-9);
+        assert!((got[3] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reconstructs_matrix() {
+        let mut rng = Rng::seed_from_u64(0);
+        let g = Mat::<f64>::randn(8, 8, &mut rng);
+        let a = g.add(&g.transpose()); // symmetric
+        let e = sym_eig(&a, 50);
+        // A ≈ V diag(w) Vᵀ
+        let mut vw = e.vectors.clone();
+        for i in 0..8 {
+            for j in 0..8 {
+                vw[(i, j)] *= e.values[j];
+            }
+        }
+        let rec = matmul(&vw, &e.vectors.transpose());
+        assert!(rec.sub(&a).max_abs() < 1e-8, "err={}", rec.sub(&a).max_abs());
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let mut rng = Rng::seed_from_u64(1);
+        let g = Mat::<f64>::randn(10, 10, &mut rng);
+        let a = g.add(&g.transpose());
+        let e = sym_eig(&a, 50);
+        let mut vtv = crate::linalg::matmul_at_b(&e.vectors, &e.vectors);
+        vtv.sub_eye_inplace();
+        assert!(vtv.max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn with_spectrum_roundtrip() {
+        let mut rng = Rng::seed_from_u64(2);
+        let spec = vec![10.0, 5.0, 2.0, 1.0, 0.5];
+        let a = with_spectrum(&spec, &mut rng);
+        let e = sym_eig(&a, 50);
+        for (got, want) in e.values.iter().zip(&spec) {
+            assert!((got - want).abs() < 1e-8, "{got} vs {want}");
+        }
+    }
+}

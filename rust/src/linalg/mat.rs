@@ -1,0 +1,419 @@
+//! Row-major dense matrix.
+
+use super::scalar::Scalar;
+use crate::rng::Rng;
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+/// A dense `rows × cols` matrix stored row-major in a `Vec`.
+///
+/// This is the workhorse type of the whole reproduction: optimizer states,
+/// gradients, datasets and PJRT literals all view into `Mat` buffers.
+#[derive(Clone, PartialEq)]
+pub struct Mat<S: Scalar> {
+    rows: usize,
+    cols: usize,
+    data: Vec<S>,
+}
+
+impl<S: Scalar> Mat<S> {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![S::ZERO; rows * cols] }
+    }
+
+    /// Matrix of ones.
+    pub fn ones(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![S::ONE; rows * cols] }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = S::ONE;
+        }
+        m
+    }
+
+    /// Build from a row-major vector (takes ownership; length must match).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<S>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape {rows}x{cols} vs len {}", data.len());
+        Mat { rows, cols, data }
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> S) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// i.i.d. standard Gaussian entries.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let mut data = vec![S::ZERO; rows * cols];
+        for v in data.iter_mut() {
+            *v = S::from_f64(rng.gaussian());
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// i.i.d. uniform entries in [lo, hi).
+    pub fn rand_uniform(rows: usize, cols: usize, lo: f64, hi: f64, rng: &mut Rng) -> Self {
+        let mut data = vec![S::ZERO; rows * cols];
+        for v in data.iter_mut() {
+            *v = S::from_f64(rng.uniform_in(lo, hi));
+        }
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+    #[inline]
+    pub fn as_slice(&self) -> &[S] {
+        &self.data
+    }
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [S] {
+        &mut self.data
+    }
+    /// Consume into the underlying row-major buffer.
+    pub fn into_vec(self) -> Vec<S> {
+        self.data
+    }
+
+    /// Borrow row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[S] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Borrow row `i` mutably.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [S] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Mat<S> {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on big matrices.
+        const B: usize = 32;
+        for i0 in (0..self.rows).step_by(B) {
+            for j0 in (0..self.cols).step_by(B) {
+                for i in i0..(i0 + B).min(self.rows) {
+                    for j in j0..(j0 + B).min(self.cols) {
+                        out.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Elementwise map into a new matrix.
+    pub fn map(&self, f: impl Fn(S) -> S) -> Mat<S> {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| f(v)).collect(),
+        }
+    }
+
+    /// Elementwise map in place.
+    pub fn map_inplace(&mut self, f: impl Fn(S) -> S) {
+        for v in self.data.iter_mut() {
+            *v = f(*v);
+        }
+    }
+
+    /// `self + other`.
+    pub fn add(&self, other: &Mat<S>) -> Mat<S> {
+        self.zip(other, |a, b| a + b)
+    }
+
+    /// `self - other`.
+    pub fn sub(&self, other: &Mat<S>) -> Mat<S> {
+        self.zip(other, |a, b| a - b)
+    }
+
+    /// Elementwise binary op.
+    pub fn zip(&self, other: &Mat<S>, f: impl Fn(S, S) -> S) -> Mat<S> {
+        assert_eq!(self.shape(), other.shape(), "shape mismatch in zip");
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect(),
+        }
+    }
+
+    /// `self += alpha * other` (axpy).
+    pub fn axpy(&mut self, alpha: S, other: &Mat<S>) {
+        assert_eq!(self.shape(), other.shape(), "shape mismatch in axpy");
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Scale in place.
+    pub fn scale_inplace(&mut self, alpha: S) {
+        for v in self.data.iter_mut() {
+            *v *= alpha;
+        }
+    }
+
+    /// Scaled copy.
+    pub fn scale(&self, alpha: S) -> Mat<S> {
+        self.map(|v| v * alpha)
+    }
+
+    /// Frobenius inner product `Tr(otherᵀ self)`.
+    pub fn dot(&self, other: &Mat<S>) -> S {
+        assert_eq!(self.shape(), other.shape(), "shape mismatch in dot");
+        let mut acc = S::ZERO;
+        for (&a, &b) in self.data.iter().zip(&other.data) {
+            acc += a * b;
+        }
+        acc
+    }
+
+    /// Squared Frobenius norm.
+    pub fn norm_sq(&self) -> S {
+        self.dot(self)
+    }
+
+    /// Frobenius norm.
+    pub fn norm(&self) -> S {
+        self.norm_sq().sqrt()
+    }
+
+    /// Trace (square matrices).
+    pub fn trace(&self) -> S {
+        assert_eq!(self.rows, self.cols, "trace of non-square matrix");
+        let mut t = S::ZERO;
+        for i in 0..self.rows {
+            t += self.data[i * self.cols + i];
+        }
+        t
+    }
+
+    /// Skew-symmetric part `(A − Aᵀ)/2` (square matrices).
+    pub fn skew(&self) -> Mat<S> {
+        assert_eq!(self.rows, self.cols, "skew of non-square matrix");
+        let half = S::from_f64(0.5);
+        Mat::from_fn(self.rows, self.cols, |i, j| {
+            (self.data[i * self.cols + j] - self.data[j * self.cols + i]) * half
+        })
+    }
+
+    /// Symmetric part `(A + Aᵀ)/2` (square matrices).
+    pub fn sym(&self) -> Mat<S> {
+        assert_eq!(self.rows, self.cols, "sym of non-square matrix");
+        let half = S::from_f64(0.5);
+        Mat::from_fn(self.rows, self.cols, |i, j| {
+            (self.data[i * self.cols + j] + self.data[j * self.cols + i]) * half
+        })
+    }
+
+    /// Subtract identity in place (square matrices): `A -= I`.
+    pub fn sub_eye_inplace(&mut self) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            self.data[i * self.cols + i] -= S::ONE;
+        }
+    }
+
+    /// Add `alpha` to the diagonal in place.
+    pub fn add_diag_inplace(&mut self, alpha: S) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            self.data[i * self.cols + i] += alpha;
+        }
+    }
+
+    /// Column `j` as a new vector.
+    pub fn col(&self, j: usize) -> Vec<S> {
+        (0..self.rows).map(|i| self.data[i * self.cols + j]).collect()
+    }
+
+    /// Copy a sub-block `rows × cols` starting at (r0, c0).
+    pub fn block(&self, r0: usize, c0: usize, rows: usize, cols: usize) -> Mat<S> {
+        assert!(r0 + rows <= self.rows && c0 + cols <= self.cols, "block out of range");
+        Mat::from_fn(rows, cols, |i, j| self.data[(r0 + i) * self.cols + (c0 + j)])
+    }
+
+    /// Write a block into this matrix at (r0, c0).
+    pub fn set_block(&mut self, r0: usize, c0: usize, b: &Mat<S>) {
+        assert!(r0 + b.rows <= self.rows && c0 + b.cols <= self.cols, "block out of range");
+        for i in 0..b.rows {
+            for j in 0..b.cols {
+                self.data[(r0 + i) * self.cols + (c0 + j)] = b.data[i * b.cols + j];
+            }
+        }
+    }
+
+    /// Cast into another scalar type (f32 <-> f64), via f64.
+    pub fn cast<T: Scalar>(&self) -> Mat<T> {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| T::from_f64(v.to_f64())).collect(),
+        }
+    }
+
+    /// Max |entry|, useful in tests.
+    pub fn max_abs(&self) -> S {
+        let mut m = S::ZERO;
+        for &v in &self.data {
+            m = m.max_s(v.abs());
+        }
+        m
+    }
+
+    /// True if all entries are finite.
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|v| v.is_finite())
+    }
+
+    /// Truncate every entry's mantissa to bfloat16 precision (Fig. C.1).
+    pub fn truncate_bf16(&self) -> Mat<S> {
+        self.map(|v| v.truncate_bf16())
+    }
+}
+
+impl<S: Scalar> Index<(usize, usize)> for Mat<S> {
+    type Output = S;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &S {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl<S: Scalar> IndexMut<(usize, usize)> for Mat<S> {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut S {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl<S: Scalar> fmt::Debug for Mat<S> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        let show_r = self.rows.min(6);
+        let show_c = self.cols.min(8);
+        for i in 0..show_r {
+            write!(f, "  ")?;
+            for j in 0..show_c {
+                write!(f, "{:>10.4} ", self[(i, j)].to_f64())?;
+            }
+            writeln!(f, "{}", if self.cols > show_c { "…" } else { "" })?;
+        }
+        if self.rows > show_r {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    type M = Mat<f64>;
+
+    #[test]
+    fn construction_and_indexing() {
+        let m = M::from_fn(2, 3, |i, j| (i * 3 + j) as f64);
+        assert_eq!(m.shape(), (2, 3));
+        assert_eq!(m[(1, 2)], 5.0);
+        assert_eq!(m.row(1), &[3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn eye_trace() {
+        assert_eq!(M::eye(4).trace(), 4.0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::seed_from_u64(0);
+        let m = M::randn(7, 13, &mut rng);
+        let t2 = m.transpose().transpose();
+        assert_eq!(m, t2);
+    }
+
+    #[test]
+    fn skew_plus_sym_is_identity_decomposition() {
+        let mut rng = Rng::seed_from_u64(1);
+        let a = M::randn(5, 5, &mut rng);
+        let rec = a.skew().add(&a.sym());
+        assert!(rec.sub(&a).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn skew_is_antisymmetric() {
+        let mut rng = Rng::seed_from_u64(2);
+        let s = M::randn(6, 6, &mut rng).skew();
+        assert!(s.add(&s.transpose()).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn axpy_and_norm() {
+        let a = M::ones(3, 3);
+        let mut b = M::zeros(3, 3);
+        b.axpy(2.0, &a);
+        assert_eq!(b.norm_sq(), 36.0);
+    }
+
+    #[test]
+    fn block_ops() {
+        let m = M::from_fn(4, 4, |i, j| (i * 4 + j) as f64);
+        let b = m.block(1, 2, 2, 2);
+        assert_eq!(b[(0, 0)], 6.0);
+        assert_eq!(b[(1, 1)], 11.0);
+        let mut z = M::zeros(4, 4);
+        z.set_block(2, 2, &b);
+        assert_eq!(z[(3, 3)], 11.0);
+    }
+
+    #[test]
+    fn cast_roundtrip() {
+        let mut rng = Rng::seed_from_u64(3);
+        let m = Mat::<f32>::randn(3, 3, &mut rng);
+        let d: Mat<f64> = m.cast();
+        let back: Mat<f32> = d.cast();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_add_panics() {
+        let _ = M::zeros(2, 2).add(&M::zeros(2, 3));
+    }
+}

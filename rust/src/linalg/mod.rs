@@ -1,0 +1,42 @@
+//! Dense linear-algebra substrate.
+//!
+//! The offline registry has no BLAS/LAPACK binding and no `ndarray`, so the
+//! whole reproduction stands on this module: a row-major dense matrix type
+//! generic over `f32`/`f64`, cache-blocked threaded matrix multiplication,
+//! Householder QR, a Jacobi symmetric eigensolver, Newton–Schulz polar
+//! decomposition, and a complex matrix type built from pairs of real ones.
+//!
+//! Design notes:
+//! - Row-major storage everywhere (matches the HLO/XLA literal layout used
+//!   by the runtime, so buffers cross the PJRT boundary without copies).
+//! - The paper's matrices are *wide row-orthogonal* `X ∈ R^{p×n}`, `p ≤ n`,
+//!   with `X Xᵀ = I_p`; helper names follow that convention (`gram(X)` is
+//!   the small `p×p` product `X Xᵀ`).
+//! - Retraction-based baselines (RGD, RSDM) run entirely on this substrate,
+//!   which is the point the paper makes: QR does not map to accelerators,
+//!   matmuls do.
+
+mod complexmat;
+mod eig;
+mod mat;
+mod matmul;
+mod norms;
+mod polar;
+mod qr;
+mod scalar;
+
+pub use complexmat::CMat;
+pub use eig::{sym_eig, with_spectrum, SymEig};
+pub use mat::Mat;
+pub use matmul::{matmul, matmul_at_b, matmul_a_bt, matmul_into, matmul_a_bt_into, matmul_at_b_into};
+pub use norms::{frob_norm, spectral_norm_est};
+pub use polar::{polar_project, polar_project_complex, PolarOpts};
+pub use qr::{qr_thin, qr_retract_rows};
+pub use scalar::Scalar;
+
+/// Single-precision matrix (the default experiment dtype, as in the paper).
+pub type MatF = Mat<f32>;
+/// Double-precision matrix (used by the Fig. C.1 precision ablation).
+pub type MatD = Mat<f64>;
+/// Single-precision complex matrix (unitary / complex-Stiefel experiments).
+pub type CMatF = CMat<f32>;

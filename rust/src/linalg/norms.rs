@@ -1,0 +1,79 @@
+//! Norms and related reductions.
+
+use super::mat::Mat;
+use super::matmul::matmul_a_bt;
+use super::scalar::Scalar;
+
+/// Frobenius norm.
+pub fn frob_norm<S: Scalar>(a: &Mat<S>) -> f64 {
+    a.norm().to_f64()
+}
+
+/// Largest singular value estimate via power iteration on `A Aᵀ`.
+///
+/// Used to pre-scale Newton–Schulz polar iterations; `iters` in the 10–30
+/// range gives plenty of accuracy for a convergence-radius check.
+pub fn spectral_norm_est<S: Scalar>(a: &Mat<S>, iters: usize) -> f64 {
+    let (p, _n) = a.shape();
+    if a.is_empty() {
+        return 0.0;
+    }
+    let g = matmul_a_bt(a, a); // p×p gram
+    // Power iteration on the (symmetric PSD) gram matrix.
+    let mut v = vec![S::ONE; p];
+    let mut lam = 0.0f64;
+    for _ in 0..iters {
+        // w = G v
+        let mut w = vec![S::ZERO; p];
+        for i in 0..p {
+            let row = g.row(i);
+            let mut acc = S::ZERO;
+            for j in 0..p {
+                acc += row[j] * v[j];
+            }
+            w[i] = acc;
+        }
+        let norm = w.iter().map(|x| x.to_f64() * x.to_f64()).sum::<f64>().sqrt();
+        if norm == 0.0 {
+            return 0.0;
+        }
+        lam = norm;
+        for (vi, wi) in v.iter_mut().zip(&w) {
+            *vi = S::from_f64(wi.to_f64() / norm);
+        }
+    }
+    // lam approximates the top eigenvalue of A Aᵀ = σ_max².
+    lam.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn frob_of_identity() {
+        let i = Mat::<f64>::eye(9);
+        assert!((frob_norm(&i) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spectral_of_diagonal() {
+        let mut d = Mat::<f64>::zeros(4, 4);
+        d[(0, 0)] = 3.0;
+        d[(1, 1)] = -7.0;
+        d[(2, 2)] = 1.0;
+        d[(3, 3)] = 0.5;
+        let s = spectral_norm_est(&d, 50);
+        assert!((s - 7.0).abs() < 1e-6, "s={s}");
+    }
+
+    #[test]
+    fn spectral_bounded_by_frobenius() {
+        let mut rng = Rng::seed_from_u64(0);
+        let a = Mat::<f64>::randn(20, 35, &mut rng);
+        let s = spectral_norm_est(&a, 40);
+        assert!(s <= frob_norm(&a) + 1e-9);
+        assert!(s > 0.0);
+    }
+}

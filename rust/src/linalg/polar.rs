@@ -1,0 +1,123 @@
+//! Polar projection onto the Stiefel manifold via Newton–Schulz.
+//!
+//! For a wide matrix `X (p × n)` with full row rank, the polar factor
+//! `U = (X Xᵀ)^{-1/2} X` is the *closest* row-orthonormal matrix in
+//! Frobenius norm. Newton–Schulz iterates `Y ← 1.5 Y − 0.5 (Y Yᵀ) Y`,
+//! which converges quadratically when every singular value lies in
+//! `(0, √3)`; we pre-scale by the spectral norm estimate to guarantee it.
+//!
+//! Matmul-only, so unlike QR/SVD it *is* accelerator-friendly — which is
+//! exactly why the POGO normal step (λ = 1/2) is its first-order Taylor
+//! truncation (paper §3.3 intuition / SLPG connection in §B).
+
+use super::complexmat::CMat;
+use super::mat::Mat;
+use super::matmul::{matmul, matmul_a_bt};
+use super::norms::spectral_norm_est;
+use super::scalar::Scalar;
+
+/// Options for the Newton–Schulz polar projection.
+#[derive(Clone, Copy, Debug)]
+pub struct PolarOpts {
+    /// Stop when `‖Y Yᵀ − I‖_F` falls below this.
+    pub tol: f64,
+    /// Hard iteration cap.
+    pub max_iters: usize,
+}
+
+impl Default for PolarOpts {
+    fn default() -> Self {
+        PolarOpts { tol: 1e-7, max_iters: 60 }
+    }
+}
+
+/// Project a wide real matrix onto St(p, n) (row-orthonormal polar factor).
+pub fn polar_project<S: Scalar>(x: &Mat<S>, opts: PolarOpts) -> Mat<S> {
+    let (p, n) = x.shape();
+    assert!(p <= n, "polar_project expects a wide matrix, got {p}x{n}");
+    // Pre-scale into the convergence region: σ_max(Y0) ≈ 1.
+    let sigma = spectral_norm_est(x, 20).max(1e-30);
+    let mut y = x.scale(S::from_f64(1.0 / sigma));
+    for _ in 0..opts.max_iters {
+        let mut g = matmul_a_bt(&y, &y); // p×p
+        g.sub_eye_inplace();
+        let err = g.norm().to_f64();
+        if err < opts.tol {
+            break;
+        }
+        // Y ← 1.5 Y − 0.5 (Y Yᵀ) Y. With g = Y Yᵀ − I this simplifies to
+        // Y ← Y − 0.5 g Y, saving one p×p add.
+        let gy = matmul(&g, &y);
+        y.axpy(S::from_f64(-0.5), &gy);
+    }
+    y
+}
+
+/// Project a wide complex matrix onto the complex Stiefel manifold
+/// (`X X^H = I_p`), same Newton–Schulz scheme over `CMat`.
+pub fn polar_project_complex<S: Scalar>(x: &CMat<S>, opts: PolarOpts) -> CMat<S> {
+    let (p, n) = x.shape();
+    assert!(p <= n, "polar_project_complex expects a wide matrix, got {p}x{n}");
+    let sigma = x.spectral_norm_est(20).max(1e-30);
+    let mut y = x.scale_re(S::from_f64(1.0 / sigma));
+    for _ in 0..opts.max_iters {
+        let mut g = y.matmul_a_bh(&y); // p×p, Hermitian
+        g.sub_eye_inplace();
+        if g.norm().to_f64() < opts.tol {
+            break;
+        }
+        let gy = g.matmul(&y);
+        y.axpy_re(S::from_f64(-0.5), &gy);
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn projects_onto_manifold() {
+        let mut rng = Rng::seed_from_u64(0);
+        for &(p, n) in &[(3, 3), (5, 12), (20, 31)] {
+            let x = Mat::<f64>::randn(p, n, &mut rng);
+            let y = polar_project(&x, PolarOpts::default());
+            let mut g = matmul_a_bt(&y, &y);
+            g.sub_eye_inplace();
+            assert!(g.norm().to_f64() < 1e-6, "({p},{n}): {}", g.norm());
+        }
+    }
+
+    #[test]
+    fn fixed_point_on_manifold() {
+        let mut rng = Rng::seed_from_u64(1);
+        let x0 = Mat::<f64>::randn(6, 10, &mut rng);
+        let y = polar_project(&x0, PolarOpts::default());
+        let y2 = polar_project(&y, PolarOpts::default());
+        assert!(y2.sub(&y).max_abs() < 1e-6);
+    }
+
+    #[test]
+    fn polar_is_closest_vs_qr() {
+        // The polar factor minimizes ‖X − U‖_F over St; check it beats the
+        // QR factor on a random instance (generic position).
+        let mut rng = Rng::seed_from_u64(2);
+        let x = Mat::<f64>::randn(4, 8, &mut rng);
+        let up = polar_project(&x, PolarOpts { tol: 1e-12, max_iters: 200 });
+        let uq = crate::linalg::qr_retract_rows(&x);
+        let dp = up.sub(&x).norm();
+        let dq = uq.sub(&x).norm();
+        assert!(dp <= dq + 1e-9, "polar {dp} vs qr {dq}");
+    }
+
+    #[test]
+    fn complex_projects_onto_manifold() {
+        let mut rng = Rng::seed_from_u64(3);
+        let x = CMat::<f64>::randn(4, 9, &mut rng);
+        let y = polar_project_complex(&x, PolarOpts::default());
+        let mut g = y.matmul_a_bh(&y);
+        g.sub_eye_inplace();
+        assert!(g.norm().to_f64() < 1e-6, "{}", g.norm());
+    }
+}

@@ -1,0 +1,163 @@
+//! Householder QR and the QR retraction.
+//!
+//! This is the substrate the *retraction-based baselines* (RGD, RSDM) stand
+//! on. It is intentionally a host-side sequential algorithm — reproducing
+//! the paper's central systems point that QR-class retractions do not map
+//! onto accelerator matmul units, unlike POGO's five matrix products.
+
+use super::mat::Mat;
+use super::scalar::Scalar;
+
+/// Thin QR of a tall matrix `A (m × k, m ≥ k)`: returns column-orthonormal
+/// `Q (m × k)` with `R` diag forced positive (canonical/retraction form).
+///
+/// Householder reflections, applied in-place; `O(2mk² − 2k³/3)` flops.
+pub fn qr_thin<S: Scalar>(a: &Mat<S>) -> Mat<S> {
+    let (m, k) = a.shape();
+    assert!(m >= k, "qr_thin expects a tall matrix, got {m}x{k}");
+    // Work on a copy; store Householder vectors in the lower triangle.
+    let mut r = a.clone();
+    // v_j held separately (full length m) for clarity.
+    let mut vs: Vec<Vec<S>> = Vec::with_capacity(k);
+    let mut diag_sign: Vec<S> = Vec::with_capacity(k);
+
+    for j in 0..k {
+        // Compute the Householder vector for column j, rows j..m.
+        let mut norm_sq = S::ZERO;
+        for i in j..m {
+            let x = r[(i, j)];
+            norm_sq += x * x;
+        }
+        let norm = norm_sq.sqrt();
+        let x0 = r[(j, j)];
+        let alpha = if x0 >= S::ZERO { -norm } else { norm };
+        let mut v = vec![S::ZERO; m];
+        for i in j..m {
+            v[i] = r[(i, j)];
+        }
+        v[j] -= alpha;
+        let vnorm_sq: S = v[j..].iter().map(|&x| x * x).sum();
+        if vnorm_sq.to_f64() > 0.0 {
+            // Apply H = I − 2 v vᵀ / (vᵀv) to R[j.., j..].
+            for c in j..k {
+                let mut dot = S::ZERO;
+                for i in j..m {
+                    dot += v[i] * r[(i, c)];
+                }
+                let coef = S::from_f64(2.0) * dot / vnorm_sq;
+                for i in j..m {
+                    let upd = coef * v[i];
+                    r[(i, c)] -= upd;
+                }
+            }
+        }
+        vs.push(v);
+        // Track the sign of R's diagonal so we can canonicalize Q.
+        let d = r[(j, j)];
+        diag_sign.push(if d >= S::ZERO { S::ONE } else { -S::ONE });
+    }
+
+    // Accumulate Q = H_0 H_1 … H_{k−1} applied to the first k columns of I.
+    let mut q = Mat::zeros(m, k);
+    for j in 0..k {
+        q[(j, j)] = S::ONE;
+    }
+    for jj in (0..k).rev() {
+        let v = &vs[jj];
+        let vnorm_sq: S = v[jj..].iter().map(|&x| x * x).sum();
+        if vnorm_sq.to_f64() == 0.0 {
+            continue;
+        }
+        for c in 0..k {
+            let mut dot = S::ZERO;
+            for i in jj..m {
+                dot += v[i] * q[(i, c)];
+            }
+            let coef = S::from_f64(2.0) * dot / vnorm_sq;
+            for i in jj..m {
+                let upd = coef * v[i];
+                q[(i, c)] -= upd;
+            }
+        }
+    }
+    // Canonical form: flip columns so R's diagonal is positive.
+    for (j, s) in diag_sign.iter().enumerate() {
+        if *s < S::ZERO {
+            for i in 0..m {
+                let neg = -q[(i, j)];
+                q[(i, j)] = neg;
+            }
+        }
+    }
+    q
+}
+
+/// QR *retraction* for wide row-orthogonal matrices: given `X (p × n)`
+/// (p ≤ n, rows ~orthonormal), return the row-orthonormal matrix obtained
+/// by thin-QR of `Xᵀ` and transposing back.
+pub fn qr_retract_rows<S: Scalar>(x: &Mat<S>) -> Mat<S> {
+    let (p, n) = x.shape();
+    assert!(p <= n, "expected a wide matrix, got {p}x{n}");
+    qr_thin(&x.transpose()).transpose()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul_a_bt, matmul_at_b};
+    use crate::rng::Rng;
+
+    #[test]
+    fn q_is_column_orthonormal() {
+        let mut rng = Rng::seed_from_u64(0);
+        for &(m, k) in &[(5, 5), (10, 4), (33, 17)] {
+            let a = Mat::<f64>::randn(m, k, &mut rng);
+            let q = qr_thin(&a);
+            let mut qtq = matmul_at_b(&q, &q);
+            qtq.sub_eye_inplace();
+            assert!(qtq.max_abs() < 1e-10, "({m},{k}): err={}", qtq.max_abs());
+        }
+    }
+
+    #[test]
+    fn q_spans_a() {
+        // A = Q R  =>  Q Qᵀ A = A for full column rank A.
+        let mut rng = Rng::seed_from_u64(1);
+        let a = Mat::<f64>::randn(12, 5, &mut rng);
+        let q = qr_thin(&a);
+        // R = Qᵀ A; reconstruct QR and compare.
+        let r = matmul_at_b(&q, &a);
+        let rec = crate::linalg::matmul(&q, &r);
+        assert!(rec.sub(&a).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn r_diag_positive_canonical() {
+        let mut rng = Rng::seed_from_u64(2);
+        let a = Mat::<f64>::randn(9, 6, &mut rng);
+        let q = qr_thin(&a);
+        let r = matmul_at_b(&q, &a);
+        for j in 0..6 {
+            assert!(r[(j, j)] > 0.0, "R[{j},{j}]={}", r[(j, j)]);
+        }
+    }
+
+    #[test]
+    fn retraction_lands_on_stiefel() {
+        let mut rng = Rng::seed_from_u64(3);
+        let x = Mat::<f64>::randn(7, 19, &mut rng);
+        let y = qr_retract_rows(&x);
+        let mut g = matmul_a_bt(&y, &y);
+        g.sub_eye_inplace();
+        assert!(g.max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn retraction_fixes_points_on_manifold() {
+        // A row-orthonormal X should be (nearly) a fixed point.
+        let mut rng = Rng::seed_from_u64(4);
+        let x = qr_retract_rows(&Mat::<f64>::randn(4, 9, &mut rng));
+        let y = qr_retract_rows(&x);
+        assert!(y.sub(&x).max_abs() < 1e-9);
+    }
+}

@@ -1,0 +1,153 @@
+//! Scalar abstraction over `f32`/`f64` so linalg and the optimizers are
+//! generic in precision (needed by the Fig. C.1 precision ablation).
+
+use std::fmt::Debug;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// Real scalar: the float operations the substrate needs, nothing more.
+pub trait Scalar:
+    Copy
+    + Clone
+    + Debug
+    + PartialOrd
+    + PartialEq
+    + Default
+    + Send
+    + Sync
+    + 'static
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + SubAssign
+    + MulAssign
+    + DivAssign
+    + Sum
+{
+    const ZERO: Self;
+    const ONE: Self;
+    /// Machine epsilon of the type.
+    const EPS: Self;
+
+    fn from_f64(v: f64) -> Self;
+    fn to_f64(self) -> f64;
+    fn sqrt(self) -> Self;
+    fn abs(self) -> Self;
+    fn powi(self, n: i32) -> Self;
+    fn max_s(self, other: Self) -> Self;
+    fn min_s(self, other: Self) -> Self;
+    fn is_finite(self) -> bool;
+    /// Truncate the mantissa to bfloat16 precision (keeps f32 exponent).
+    /// Identity for f64 inputs converted via f32 path only when requested.
+    fn truncate_bf16(self) -> Self;
+}
+
+impl Scalar for f32 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const EPS: Self = f32::EPSILON;
+
+    #[inline]
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline]
+    fn sqrt(self) -> Self {
+        f32::sqrt(self)
+    }
+    #[inline]
+    fn abs(self) -> Self {
+        f32::abs(self)
+    }
+    #[inline]
+    fn powi(self, n: i32) -> Self {
+        f32::powi(self, n)
+    }
+    #[inline]
+    fn max_s(self, other: Self) -> Self {
+        f32::max(self, other)
+    }
+    #[inline]
+    fn min_s(self, other: Self) -> Self {
+        f32::min(self, other)
+    }
+    #[inline]
+    fn is_finite(self) -> bool {
+        f32::is_finite(self)
+    }
+    #[inline]
+    fn truncate_bf16(self) -> Self {
+        f32::from_bits(self.to_bits() & 0xFFFF_0000)
+    }
+}
+
+impl Scalar for f64 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const EPS: Self = f64::EPSILON;
+
+    #[inline]
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    #[inline]
+    fn sqrt(self) -> Self {
+        f64::sqrt(self)
+    }
+    #[inline]
+    fn abs(self) -> Self {
+        f64::abs(self)
+    }
+    #[inline]
+    fn powi(self, n: i32) -> Self {
+        f64::powi(self, n)
+    }
+    #[inline]
+    fn max_s(self, other: Self) -> Self {
+        f64::max(self, other)
+    }
+    #[inline]
+    fn min_s(self, other: Self) -> Self {
+        f64::min(self, other)
+    }
+    #[inline]
+    fn is_finite(self) -> bool {
+        f64::is_finite(self)
+    }
+    #[inline]
+    fn truncate_bf16(self) -> Self {
+        // bf16 truncation is defined through the f32 path; for f64 we go
+        // f64 -> f32 -> bf16 -> f64, matching what a bf16 matmul unit sees.
+        (f32::from_bits((self as f32).to_bits() & 0xFFFF_0000)) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bf16_truncation_drops_low_mantissa() {
+        let x: f32 = 1.0 + f32::EPSILON * 100.0;
+        let t = x.truncate_bf16();
+        assert!(t.to_bits() & 0xFFFF == 0);
+        assert!((t - x).abs() < 1e-2);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        assert_eq!(<f32 as Scalar>::from_f64(1.5).to_f64(), 1.5);
+        assert_eq!(<f64 as Scalar>::from_f64(1.5).to_f64(), 1.5);
+    }
+}

@@ -1,0 +1,179 @@
+//! `pogo` — the leader binary: experiment runner, artifact inspector.
+//!
+//! ```text
+//! pogo run <experiment> [--methods a,b] [--steps N] [--reps K] [--seed S]
+//!                       [--out DIR] [--full] [--quick]
+//! pogo list                     # experiments + their paper figures
+//! pogo info [--artifacts DIR]   # artifact registry contents
+//! pogo version
+//! ```
+
+use pogo::config::{ExperimentId, RunConfig};
+use pogo::optim::Method;
+use pogo::util::cli::Cli;
+
+fn main() {
+    pogo::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let code = match cmd {
+        "run" => cmd_run(),
+        "list" => cmd_list(),
+        "info" => cmd_info(),
+        "report" => cmd_report(),
+        "version" | "--version" => {
+            println!("pogo {}", pogo::VERSION);
+            0
+        }
+        _ => {
+            print_help();
+            if cmd == "help" || cmd == "--help" || cmd == "-h" {
+                0
+            } else {
+                eprintln!("\nunknown command '{cmd}'");
+                2
+            }
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "pogo — Proximal One-step Geometric Orthoptimizer (paper reproduction)\n\n\
+         Commands:\n\
+         \x20 run <experiment>   run a paper experiment (see `pogo list`)\n\
+         \x20 list               list experiments\n\
+         \x20 info               inspect the AOT artifact registry\n\
+         \x20 report             summarize results/*.csv from past runs\n\
+         \x20 version            print the version\n\n\
+         Run `pogo run <experiment> --help` for per-run flags."
+    );
+}
+
+fn cmd_list() -> i32 {
+    println!("{:<16} {}", "experiment", "reproduces");
+    let figures = [
+        ("fig4-pca", "Fig. 4 (left): online PCA, gap + distance vs time"),
+        ("fig4-procrustes", "Fig. 4 (right): orthogonal Procrustes"),
+        ("fig5-ovit", "Fig. 5: O-ViT, 18 orthogonal attention/MLP matrices"),
+        ("fig1-filters", "Fig. 1/6: CNN with orthogonal filters"),
+        ("fig1-kernels", "Fig. 1/6/7: CNN with 9800 orthogonal 3x3 kernels"),
+        ("fig8-born", "Fig. 8: squared unitary circuit (complex Stiefel)"),
+        ("figc1", "Fig. C.1: precision ablation (f32/f64/bf16)"),
+        ("figc2", "Fig. C.2/C.3: lambda policy x learning-rate ablation"),
+        ("scale", "Fig. 1 mechanism: us/matrix vs batch size"),
+    ];
+    for (name, what) in figures {
+        println!("{name:<16} {what}");
+    }
+    0
+}
+
+fn cmd_info() -> i32 {
+    let cli = Cli::new("pogo info", "inspect the artifact registry")
+        .flag_opt("artifacts", "artifacts directory (default <repo>/artifacts)");
+    let a = cli.parse_env_or_exit(1);
+    let dir = a
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(pogo::artifacts_dir);
+    match pogo::runtime::Registry::open(dir) {
+        Ok(reg) => {
+            println!("{:<44} {:>8} {:>8}  tags", "program", "inputs", "outputs");
+            for name in reg.names() {
+                let m = reg.meta(name).unwrap();
+                println!(
+                    "{:<44} {:>8} {:>8}  {}",
+                    name,
+                    m.inputs.len(),
+                    m.outputs.len(),
+                    m.tags.join(",")
+                );
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_report() -> i32 {
+    let cli = Cli::new("pogo report", "summarize experiment series CSVs")
+        .flag_opt("dir", "results directory (default <repo>/results)")
+        .flag_opt("filter", "substring filter on series names")
+        .switch("json", "emit machine-readable JSON");
+    let a = cli.parse_env_or_exit(1);
+    let dir = a
+        .get("dir")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| pogo::repo_root().join("results"));
+    let result = if a.get_bool("json") {
+        pogo::coordinator::report::report_json(&dir).map(|j| println!("{j}"))
+    } else {
+        pogo::coordinator::report::report(&dir, a.get("filter"))
+    };
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_run() -> i32 {
+    let exp_name = std::env::args().nth(2).unwrap_or_default();
+    let Some(exp) = ExperimentId::parse(&exp_name) else {
+        eprintln!("unknown experiment '{exp_name}' — see `pogo list`");
+        return 2;
+    };
+    let cli = Cli::new(
+        &format!("pogo run {exp_name}"),
+        "run a paper experiment and emit figure CSVs",
+    )
+    .flag_opt("methods", "comma-separated methods (default: paper lineup)")
+    .flag_opt("steps", "step budget override")
+    .flag("reps", "1", "independent repetitions")
+    .flag("seed", "0", "base RNG seed")
+    .flag_opt("out", "output directory for CSVs (default <repo>/results)")
+    .switch("full", "use the paper's full Fig. 4 shapes (needs full artifacts)")
+    .switch("quick", "tiny smoke-run shapes/budgets");
+    let a = cli.parse_env_or_exit(2);
+
+    let mut cfg = RunConfig::new(exp);
+    if let Some(ms) = a.get("methods") {
+        let mut methods = Vec::new();
+        for tok in ms.split(',') {
+            match Method::parse(tok.trim()) {
+                Some(m) => methods.push(m),
+                None => {
+                    eprintln!("unknown method '{tok}'");
+                    return 2;
+                }
+            }
+        }
+        cfg.methods = methods;
+    }
+    if let Some(s) = a.get_usize("steps") {
+        cfg.steps = s;
+    }
+    cfg.repetitions = a.get_usize("reps").unwrap_or(1);
+    cfg.seed = a.get_u64("seed").unwrap_or(0);
+    if let Some(o) = a.get("out") {
+        cfg.out_dir = std::path::PathBuf::from(o);
+    }
+    cfg.full = a.get_bool("full");
+    cfg.quick = a.get_bool("quick");
+
+    log::info!("config: {}", cfg.to_json().to_string());
+    match pogo::experiments::run(&cfg) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}

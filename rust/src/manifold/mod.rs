@@ -1,0 +1,3 @@
+//! Manifold geometry helpers.
+
+pub mod stiefel;

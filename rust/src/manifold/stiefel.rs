@@ -1,0 +1,191 @@
+//! The (real and complex) Stiefel manifold of row-orthonormal matrices.
+//!
+//! `St(p, n) = { X ∈ F^{p×n} : X Xᵀ (or X X^H) = I_p }`, `p ≤ n` — the
+//! feasible set of every experiment in the paper (Eq. 2). This module hosts
+//! the geometric primitives shared by all orthoptimizers:
+//!
+//! - random points (Gaussian + QR / polar),
+//! - the squared-distance potential `N(X) = ¼‖X Xᵀ − I‖²` and its gradient
+//!   `∇N(X) = (X Xᵀ − I) X` (Landing's attraction field, Eq. 6),
+//! - the relative gradient `S = Skew(Xᵀ G)` and the Riemannian gradient
+//!   `X S` under the Euclidean metric (§2),
+//! - projections (polar = closest point; QR = retraction baseline).
+
+use crate::linalg::{
+    matmul, matmul_a_bt, matmul_at_b, polar_project, qr_retract_rows, CMat, Mat, PolarOpts,
+    Scalar,
+};
+use crate::rng::Rng;
+
+/// Random point on St(p, n) (f32 convenience used across experiments).
+pub fn random_point(p: usize, n: usize, rng: &mut Rng) -> Mat<f32> {
+    random_point_t(p, n, rng)
+}
+
+/// Random point on St(p, n), generic in precision. Gaussian then QR, which
+/// gives Haar-distributed rows.
+pub fn random_point_t<S: Scalar>(p: usize, n: usize, rng: &mut Rng) -> Mat<S> {
+    assert!(p <= n, "St(p, n) needs p ≤ n, got ({p}, {n})");
+    qr_retract_rows(&Mat::<S>::randn(p, n, rng))
+}
+
+/// Random point on the complex Stiefel manifold (X X^H = I), via complex
+/// Gaussian + Newton–Schulz polar projection.
+pub fn random_point_complex<S: Scalar>(p: usize, n: usize, rng: &mut Rng) -> CMat<S> {
+    assert!(p <= n, "St(p, n) needs p ≤ n, got ({p}, {n})");
+    let g = CMat::<S>::randn(p, n, rng);
+    crate::linalg::polar_project_complex(&g, PolarOpts { tol: 1e-9, max_iters: 100 })
+}
+
+/// Frobenius distance to the manifold: `‖X Xᵀ − I‖_F` (f32 convenience).
+///
+/// This is the feasibility metric of every figure in the paper ("manifold
+/// distance").
+pub fn distance(x: &Mat<f32>) -> f64 {
+    distance_t(x)
+}
+
+/// `‖X Xᵀ − I‖_F`, generic.
+pub fn distance_t<S: Scalar>(x: &Mat<S>) -> f64 {
+    let mut g = matmul_a_bt(x, x);
+    g.sub_eye_inplace();
+    g.norm().to_f64()
+}
+
+/// Dimension-invariant ("normalized") distance `‖X Xᵀ − I‖_F / √p`,
+/// used by Fig. 6 to compare feasibility across matrix sizes.
+pub fn normalized_distance<S: Scalar>(x: &Mat<S>) -> f64 {
+    distance_t(x) / (x.rows() as f64).sqrt()
+}
+
+/// The squared-distance potential `N(X) = ¼ ‖X Xᵀ − I‖²`.
+pub fn potential<S: Scalar>(x: &Mat<S>) -> f64 {
+    let d = distance_t(x);
+    0.25 * d * d
+}
+
+/// Gradient of the potential: `∇N(X) = (X Xᵀ − I) X` — Landing's
+/// manifold-attraction direction.
+pub fn potential_grad<S: Scalar>(x: &Mat<S>) -> Mat<S> {
+    let mut g = matmul_a_bt(x, x);
+    g.sub_eye_inplace();
+    matmul(&g, x)
+}
+
+/// Relative gradient `S = Skew(Xᵀ G)` (n×n skew-symmetric).
+pub fn relative_gradient<S: Scalar>(x: &Mat<S>, g: &Mat<S>) -> Mat<S> {
+    matmul_at_b(x, g).skew()
+}
+
+/// Riemannian gradient under the Euclidean metric: `X S ∈ T_X` (p×n).
+pub fn riemannian_gradient<S: Scalar>(x: &Mat<S>, g: &Mat<S>) -> Mat<S> {
+    matmul(x, &relative_gradient(x, g))
+}
+
+/// Project onto the manifold (closest point / polar factor).
+pub fn project<S: Scalar>(x: &Mat<S>) -> Mat<S> {
+    polar_project(x, PolarOpts::default())
+}
+
+/// Complex manifold distance `‖X X^H − I‖_F`.
+pub fn distance_complex<S: Scalar>(x: &CMat<S>) -> f64 {
+    x.stiefel_distance()
+}
+
+/// Complex relative gradient `S = SkewH(X^H G)` and Riemannian gradient
+/// `X S` for the unitary experiments.
+pub fn riemannian_gradient_complex<S: Scalar>(x: &CMat<S>, g: &CMat<S>) -> CMat<S> {
+    let s = x.matmul_ah_b(g).skew_h();
+    x.matmul(&s)
+}
+
+/// Complex potential gradient `(X X^H − I) X`.
+pub fn potential_grad_complex<S: Scalar>(x: &CMat<S>) -> CMat<S> {
+    let mut g = x.matmul_a_bh(x);
+    g.sub_eye_inplace();
+    g.matmul(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_point_on_manifold() {
+        let mut rng = Rng::seed_from_u64(0);
+        for &(p, n) in &[(1, 1), (3, 3), (5, 16), (32, 64)] {
+            let x = random_point_t::<f64>(p, n, &mut rng);
+            assert!(distance_t(&x) < 1e-9, "({p},{n}): {}", distance_t(&x));
+        }
+    }
+
+    #[test]
+    fn riemannian_gradient_in_tangent_space() {
+        // A ∈ T_X iff A = X S with S skew; equivalently X Aᵀ + A Xᵀ = 0.
+        let mut rng = Rng::seed_from_u64(1);
+        let x = random_point_t::<f64>(6, 14, &mut rng);
+        let g = Mat::<f64>::randn(6, 14, &mut rng);
+        let rg = riemannian_gradient(&x, &g);
+        let constraint = matmul_a_bt(&x, &rg).add(&matmul_a_bt(&rg, &x));
+        assert!(constraint.max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn tangent_and_normal_orthogonal() {
+        // The paper's Fig. 2 geometry: grad f ⊥ ∇N at any X (even off the
+        // manifold, ⟨X S, (X Xᵀ − I) X⟩ = Tr(Sᵀ Xᵀ (XXᵀ−I) X) = 0 because
+        // Xᵀ(XXᵀ−I)X is symmetric and S is skew).
+        let mut rng = Rng::seed_from_u64(2);
+        let x0 = Mat::<f64>::randn(5, 11, &mut rng); // generic, off-manifold
+        let g = Mat::<f64>::randn(5, 11, &mut rng);
+        let rg = riemannian_gradient(&x0, &g);
+        let ng = potential_grad(&x0);
+        let inner = rg.dot(&ng).abs();
+        assert!(inner < 1e-9, "⟨grad, ∇N⟩ = {inner}");
+    }
+
+    #[test]
+    fn potential_grad_zero_on_manifold() {
+        let mut rng = Rng::seed_from_u64(3);
+        let x = random_point_t::<f64>(4, 9, &mut rng);
+        assert!(potential_grad(&x).max_abs() < 1e-9);
+        assert!(potential(&x) < 1e-18);
+    }
+
+    #[test]
+    fn project_recovers_nearby_point() {
+        let mut rng = Rng::seed_from_u64(4);
+        let x = random_point_t::<f64>(4, 10, &mut rng);
+        let noisy = x.add(&Mat::randn(4, 10, &mut rng).scale(1e-4));
+        let back = project(&noisy);
+        assert!(distance_t(&back) < 1e-6);
+        assert!(back.sub(&x).norm() < 1e-3);
+    }
+
+    #[test]
+    fn complex_random_point_unitary() {
+        let mut rng = Rng::seed_from_u64(5);
+        let x = random_point_complex::<f64>(3, 8, &mut rng);
+        assert!(distance_complex(&x) < 1e-7);
+    }
+
+    #[test]
+    fn complex_riemannian_gradient_tangency() {
+        // X A^H + A X^H = 0 for A ∈ T_X of the complex Stiefel manifold.
+        let mut rng = Rng::seed_from_u64(6);
+        let x = random_point_complex::<f64>(4, 9, &mut rng);
+        let g = CMat::<f64>::randn(4, 9, &mut rng);
+        let rg = riemannian_gradient_complex(&x, &g);
+        let c = x.matmul_a_bh(&rg).add(&rg.matmul_a_bh(&x));
+        assert!(c.norm() < 1e-9);
+    }
+
+    #[test]
+    fn normalized_distance_scale() {
+        let mut x = Mat::<f64>::eye(8);
+        x.scale_inplace(2.0); // X Xᵀ = 4 I ⇒ ‖XXᵀ − I‖ = 3√8
+        let d = distance_t(&x);
+        assert!((d - 3.0 * (8.0f64).sqrt()).abs() < 1e-9);
+        assert!((normalized_distance(&x) - 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,99 @@
+//! Unconstrained Adam — the gray-dotted reference line of Figs. 1/5/7.
+//!
+//! Not an orthoptimizer: it ignores the manifold entirely. Included (a) as
+//! the downstream-performance yardstick the paper compares against (D3)
+//! and (b) to train the non-orthogonal parameters of the NN experiments.
+
+use super::base::{BaseOpt, BaseOptKind};
+use super::Orthoptimizer;
+use crate::linalg::{Mat, Scalar};
+
+/// Adam hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct AdamConfig {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub weight_decay: f64,
+}
+
+impl Default for AdamConfig {
+    fn default() -> Self {
+        AdamConfig { lr: 1e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay: 0.0 }
+    }
+}
+
+/// Unconstrained Adam over matrices.
+pub struct Adam<S: Scalar = f32> {
+    cfg: AdamConfig,
+    base: BaseOpt<S>,
+}
+
+impl<S: Scalar> Adam<S> {
+    pub fn new(cfg: AdamConfig, n_params: usize) -> Self {
+        let kind = BaseOptKind::Adam { beta1: cfg.beta1, beta2: cfg.beta2, eps: cfg.eps };
+        Adam { cfg, base: BaseOpt::new(kind, n_params) }
+    }
+}
+
+impl<S: Scalar> Orthoptimizer<S> for Adam<S> {
+    fn step(&mut self, idx: usize, x: &mut Mat<S>, grad: &Mat<S>) {
+        self.base.ensure_slots(idx + 1);
+        let g = if self.cfg.weight_decay != 0.0 {
+            let mut g = grad.clone();
+            g.axpy(S::from_f64(self.cfg.weight_decay), x);
+            self.base.transform(idx, &g)
+        } else {
+            self.base.transform(idx, grad)
+        };
+        x.axpy(S::from_f64(-self.cfg.lr), &g);
+    }
+
+    fn name(&self) -> &str {
+        "Adam"
+    }
+
+    fn lr(&self) -> f64 {
+        self.cfg.lr
+    }
+
+    fn set_lr(&mut self, lr: f64) {
+        self.cfg.lr = lr;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn minimizes_quadratic() {
+        // f(X) = ‖X − T‖², grad = 2(X − T).
+        let mut rng = Rng::seed_from_u64(0);
+        let t = Mat::<f64>::randn(4, 6, &mut rng);
+        let mut x = Mat::<f64>::zeros(4, 6);
+        let mut opt = Adam::<f64>::new(AdamConfig { lr: 0.05, ..Default::default() }, 1);
+        for _ in 0..500 {
+            let g = x.sub(&t).scale(2.0);
+            opt.step(0, &mut x, &g);
+        }
+        assert!(x.sub(&t).norm() < 1e-2, "residual {}", x.sub(&t).norm());
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params() {
+        let mut x = Mat::<f64>::ones(3, 3);
+        let zero = Mat::<f64>::zeros(3, 3);
+        let mut opt = Adam::<f64>::new(
+            AdamConfig { lr: 0.01, weight_decay: 1.0, ..Default::default() },
+            1,
+        );
+        let n0 = x.norm();
+        for _ in 0..50 {
+            opt.step(0, &mut x, &zero);
+        }
+        assert!(x.norm() < n0);
+    }
+}

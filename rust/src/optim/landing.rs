@@ -1,0 +1,260 @@
+//! The Landing algorithm (Ablin & Peyré 2022; Ablin et al. 2024) and the
+//! LandingPC variant (Loconte et al. 2025a).
+//!
+//! Landing follows the *landing field* `Λ(X) = X S + λ_a ∇N(X)` (Eq. 6):
+//! a loss direction tangent to the sphere of constant distance plus an
+//! attraction toward the manifold, never retracting. Feasibility is only
+//! asymptotic; a *step-size safeguard* keeps iterates inside the ε-ball
+//! `‖X Xᵀ − I‖ ≤ ε` (default ε = 0.5, as in the reference implementation).
+//!
+//! Safeguard derivation (documented because published variants differ in
+//! constants): with `h = X Xᵀ − I`, `R = X S` (so `X Rᵀ + R Xᵀ = 0`
+//! identically) and `∇N = h X`,
+//!
+//! `h⁺ = (1 − 2ηλ_a) h − 2ηλ_a h² + η² Λ Λᵀ`, hence for ηλ_a ≤ ½:
+//! `‖h⁺‖ ≤ (1 − 2ηλ_a)d + 2ηλ_a d² + η²‖Λ‖²`.
+//!
+//! Requiring the bound ≤ ε gives the quadratic safe step
+//! `η* = [λ_a d(1−d) + sqrt(λ_a² d²(1−d)² + ‖Λ‖²(ε−d))] / ‖Λ‖²`,
+//! and the update uses `η = min(η₀, η*)`.
+
+use super::base::{BaseOpt, BaseOptKind};
+use super::Orthoptimizer;
+use crate::linalg::{matmul, matmul_a_bt, Mat, Scalar};
+
+/// Landing hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct LandingConfig {
+    /// Suggested learning rate η₀.
+    pub lr: f64,
+    /// Manifold attraction strength λ_a (paper default 1.0).
+    pub attraction: f64,
+    /// Safe-ball radius ε (paper default 0.5).
+    pub eps_ball: f64,
+    /// Base optimizer for the loss direction (momentum in the paper's
+    /// experiments; must be linear for tangent semantics).
+    pub base: BaseOptKind,
+    /// Whether to apply the step-size safeguard (true for Landing; false
+    /// for LandingPC which instead normalizes the loss direction).
+    pub safeguard: bool,
+    /// LandingPC: normalize the transformed gradient to unit Frobenius
+    /// norm before the geometry (per-matrix preconditioning).
+    pub normalize_grad: bool,
+}
+
+impl Default for LandingConfig {
+    fn default() -> Self {
+        LandingConfig {
+            lr: 0.1,
+            attraction: 1.0,
+            eps_ball: 0.5,
+            base: BaseOptKind::Sgd,
+            safeguard: true,
+            normalize_grad: false,
+        }
+    }
+}
+
+impl LandingConfig {
+    /// LandingPC preset (Loconte et al. 2025a): per-matrix gradient
+    /// normalization, fixed step (no safeguard), tunable attraction.
+    pub fn landing_pc(lr: f64, attraction: f64) -> Self {
+        LandingConfig {
+            lr,
+            attraction,
+            eps_ball: 0.5,
+            base: BaseOptKind::Sgd,
+            safeguard: false,
+            normalize_grad: true,
+        }
+    }
+}
+
+/// Landing / LandingPC over real Stiefel matrices.
+pub struct Landing<S: Scalar = f32> {
+    cfg: LandingConfig,
+    base: BaseOpt<S>,
+    name: String,
+    /// Last applied (possibly safeguarded) step size, for telemetry.
+    pub last_eta: f64,
+}
+
+impl<S: Scalar> Landing<S> {
+    pub fn new(cfg: LandingConfig, n_params: usize) -> Self {
+        let name = if cfg.normalize_grad && !cfg.safeguard {
+            format!("LandingPC({})", cfg.base.name())
+        } else {
+            format!("Landing({})", cfg.base.name())
+        };
+        Landing { cfg, base: BaseOpt::new(cfg.base, n_params), name, last_eta: cfg.lr }
+    }
+
+    pub fn config(&self) -> &LandingConfig {
+        &self.cfg
+    }
+
+    /// One landing-field update. Returns the applied η.
+    pub fn update(x: &Mat<S>, g: &Mat<S>, cfg: &LandingConfig) -> (Mat<S>, f64) {
+        let g = if cfg.normalize_grad {
+            let n = g.norm().to_f64().max(1e-30);
+            g.scale(S::from_f64(1.0 / n))
+        } else {
+            g.clone()
+        };
+        // Small-gram Riemannian direction R = ½((XXᵀ)G − (XGᵀ)X).
+        let xxt = matmul_a_bt(x, x);
+        let xgt = matmul_a_bt(x, &g);
+        let a1 = matmul(&xxt, &g);
+        let a2 = matmul(&xgt, x);
+        let mut r = a1.sub(&a2);
+        r.scale_inplace(S::from_f64(0.5));
+        // ∇N(X) = (XXᵀ − I)X = h X.
+        let mut h = xxt.clone();
+        h.sub_eye_inplace();
+        let ngrad = matmul(&h, x);
+
+        let d = h.norm().to_f64();
+        let lam = cfg.attraction;
+        // ‖Λ‖² = ‖R‖² + λ²‖∇N‖² (the two parts are orthogonal).
+        let lam_sq =
+            r.norm_sq().to_f64() + lam * lam * ngrad.norm_sq().to_f64();
+        let eta = if cfg.safeguard && lam_sq > 0.0 {
+            let eps = cfg.eps_ball;
+            let slack = (eps - d).max(0.0);
+            let b = lam * d * (1.0 - d).max(0.0);
+            let safe = (b + (b * b + lam_sq * slack).sqrt()) / lam_sq;
+            // Also honour the ηλ ≤ ½ regime the bound assumes.
+            let cap = if lam > 0.0 { 0.5 / lam } else { f64::INFINITY };
+            cfg.lr.min(safe).min(cap)
+        } else {
+            cfg.lr
+        };
+
+        let mut xp = x.clone();
+        xp.axpy(S::from_f64(-eta), &r);
+        xp.axpy(S::from_f64(-eta * lam), &ngrad);
+        (xp, eta)
+    }
+}
+
+impl<S: Scalar> Orthoptimizer<S> for Landing<S> {
+    fn step(&mut self, idx: usize, x: &mut Mat<S>, grad: &Mat<S>) {
+        self.base.ensure_slots(idx + 1);
+        let g = self.base.transform(idx, grad);
+        let (xp, eta) = Landing::update(x, &g, &self.cfg);
+        self.last_eta = eta;
+        *x = xp;
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn lr(&self) -> f64 {
+        self.cfg.lr
+    }
+
+    fn set_lr(&mut self, lr: f64) {
+        self.cfg.lr = lr;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifold::stiefel;
+    use crate::rng::Rng;
+    use crate::testing;
+
+    type M = Mat<f64>;
+
+    #[test]
+    fn stays_in_eps_ball() {
+        // The safeguard must keep every iterate within ε of the manifold
+        // even under adversarially large gradients.
+        let mut rng = Rng::seed_from_u64(0);
+        let mut x = stiefel::random_point_t::<f64>(6, 12, &mut rng);
+        let cfg = LandingConfig { lr: 1.0, ..Default::default() };
+        let mut opt = Landing::<f64>::new(cfg, 1);
+        for _ in 0..60 {
+            let g = M::randn(6, 12, &mut rng).scale(30.0);
+            opt.step(0, &mut x, &g);
+            let d = stiefel::distance_t(&x);
+            assert!(d <= cfg.eps_ball + 1e-6, "left the ball: {d}");
+        }
+    }
+
+    #[test]
+    fn attracts_back_to_manifold_without_loss_gradient() {
+        // Pure attraction: from an off-manifold start with zero gradient,
+        // distance decreases monotonically toward 0.
+        let mut rng = Rng::seed_from_u64(1);
+        let x0 = stiefel::random_point_t::<f64>(4, 9, &mut rng);
+        let mut x = x0.add(&M::randn(4, 9, &mut rng).scale(0.05));
+        let cfg = LandingConfig { lr: 0.3, ..Default::default() };
+        let zero = M::zeros(4, 9);
+        let mut prev = stiefel::distance_t(&x);
+        assert!(prev > 1e-3);
+        for _ in 0..100 {
+            let (xp, _) = Landing::update(&x, &zero, &cfg);
+            x = xp;
+            let d = stiefel::distance_t(&x);
+            assert!(d <= prev + 1e-12, "distance increased {prev} → {d}");
+            prev = d;
+        }
+        assert!(prev < 1e-6, "did not land: {prev}");
+    }
+
+    #[test]
+    fn descends_pca_objective() {
+        let mut rng = Rng::seed_from_u64(2);
+        let p = 4;
+        let n = 10;
+        let a = M::randn(n, n, &mut rng);
+        let mut x = stiefel::random_point_t::<f64>(p, n, &mut rng);
+        let mut opt = Landing::<f64>::new(LandingConfig { lr: 0.05, ..Default::default() }, 1);
+        // maximize ‖XA‖² → minimize −‖XA‖², grad = −2 X A Aᵀ.
+        let aat = matmul_a_bt(&a, &a);
+        let loss = |x: &M| -matmul(x, &a).norm_sq();
+        let l0 = loss(&x);
+        for _ in 0..200 {
+            let grad = matmul(&x, &aat).scale(-2.0);
+            opt.step(0, &mut x, &grad);
+        }
+        let l1 = loss(&x);
+        assert!(l1 < l0, "no descent: {l0} → {l1}");
+        assert!(stiefel::distance_t(&x) < 0.5 + 1e-9);
+    }
+
+    #[test]
+    fn landing_pc_preset_normalizes() {
+        let cfg = LandingConfig::landing_pc(0.5, 0.1);
+        assert!(cfg.normalize_grad && !cfg.safeguard);
+        // Scale invariance of the update under gradient scaling.
+        let mut rng = Rng::seed_from_u64(3);
+        let x = stiefel::random_point_t::<f64>(5, 8, &mut rng);
+        let g = M::randn(5, 8, &mut rng);
+        let (x1, _) = Landing::update(&x, &g, &cfg);
+        let (x2, _) = Landing::update(&x, &g.scale(37.0), &cfg);
+        assert!(x1.sub(&x2).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_safeguard_never_exceeds_suggested_lr() {
+        testing::forall(
+            "safeguarded η ≤ η₀",
+            8,
+            |rng| {
+                let (p, n) = testing::gen_wide_shape(rng, 6, 12);
+                let x = stiefel::random_point_t::<f64>(p, n, rng);
+                let g = M::randn(p, n, rng).scale(rng.uniform_in(0.1, 20.0));
+                (x, g)
+            },
+            |(x, g)| {
+                let cfg = LandingConfig { lr: 0.7, ..Default::default() };
+                let (_, eta) = Landing::<f64>::update(x, g, &cfg);
+                testing::leq(eta, 0.7 + 1e-12, "eta")
+            },
+        );
+    }
+}

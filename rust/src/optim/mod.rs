@@ -1,0 +1,141 @@
+//! Orthoptimizers: POGO (this paper) and every baseline it is evaluated
+//! against (§5), as pure-Rust reference engines over the in-crate linalg
+//! substrate. The XLA/Pallas engine for the matmul-only methods lives in
+//! `crate::runtime` + `python/compile/`; integration tests assert the two
+//! engines agree step-for-step.
+//!
+//! Terminology follows the paper: an *orthoptimizer* updates a wide matrix
+//! `X ∈ St(p, n)` given the Euclidean gradient `∇f(X)`; a *base optimizer*
+//! (§3.1) transforms raw gradients before the geometry is applied (only
+//! *linear* base optimizers — Def. 1 — preserve tangent-space semantics).
+
+pub mod adam;
+pub mod base;
+pub mod landing;
+pub mod pogo;
+pub mod quartic;
+pub mod rgd;
+pub mod rsdm;
+pub mod slpg;
+pub mod unitary;
+
+use crate::linalg::{Mat, Scalar};
+
+/// A single-matrix orthoptimizer over `St(p, n)`.
+///
+/// `idx` identifies the parameter so stateful methods (momentum, VAdam)
+/// keep per-matrix state; implementations must accept any `idx <
+/// n_params` passed at construction.
+///
+/// Deliberately NOT `Send`: the XLA-backed engines hold PJRT handles
+/// (raw pointers) and the coordinator's step loop is single-threaded —
+/// parallelism lives inside the linalg substrate and inside XLA.
+pub trait Orthoptimizer<S: Scalar = f32> {
+    /// In-place update of `x` given Euclidean gradient `g`.
+    fn step(&mut self, idx: usize, x: &mut Mat<S>, g: &Mat<S>);
+
+    /// Update all matrices of a group (default: sequential loop).
+    /// The XLA-backed engines override this with one batched dispatch.
+    fn step_group(&mut self, xs: &mut [Mat<S>], gs: &[Mat<S>]) {
+        assert_eq!(xs.len(), gs.len());
+        for (i, (x, g)) in xs.iter_mut().zip(gs.iter()).enumerate() {
+            self.step(i, x, g);
+        }
+    }
+
+    /// Human-readable name for logs/figures.
+    fn name(&self) -> &str;
+
+    /// Current learning rate (schedulers mutate it through `set_lr`).
+    fn lr(&self) -> f64;
+    fn set_lr(&mut self, lr: f64);
+}
+
+/// Which engine executes an optimizer's update rule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    /// Pure-Rust reference implementation (this module).
+    Rust,
+    /// AOT-compiled HLO executable via PJRT (L1/L2 path).
+    Xla,
+}
+
+/// Identifier for every optimizer the paper evaluates (Fig. 4–8).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Pogo,
+    Landing,
+    LandingPC,
+    Slpg,
+    Rgd,
+    Rsdm,
+    Adam,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Pogo => "POGO",
+            Method::Landing => "Landing",
+            Method::LandingPC => "LandingPC",
+            Method::Slpg => "SLPG",
+            Method::Rgd => "RGD",
+            Method::Rsdm => "RSDM",
+            Method::Adam => "Adam",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "pogo" => Method::Pogo,
+            "landing" => Method::Landing,
+            "landingpc" | "landing-pc" | "landing_pc" => Method::LandingPC,
+            "slpg" => Method::Slpg,
+            "rgd" => Method::Rgd,
+            "rsdm" => Method::Rsdm,
+            "adam" => Method::Adam,
+            _ => return None,
+        })
+    }
+
+    /// All orthoptimizers compared in Fig. 4 (plus Adam for NN figures).
+    pub fn all() -> &'static [Method] {
+        &[
+            Method::Pogo,
+            Method::Landing,
+            Method::LandingPC,
+            Method::Slpg,
+            Method::Rgd,
+            Method::Rsdm,
+            Method::Adam,
+        ]
+    }
+
+    /// Whether the update rule is matmul-only (accelerator-friendly — can
+    /// be dispatched through the XLA engine).
+    pub fn is_matmul_only(&self) -> bool {
+        matches!(self, Method::Pogo | Method::Landing | Method::LandingPC | Method::Slpg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for &m in Method::all() {
+            assert_eq!(Method::parse(m.name()), Some(m));
+        }
+        assert_eq!(Method::parse("landing-pc"), Some(Method::LandingPC));
+        assert_eq!(Method::parse("bogus"), None);
+    }
+
+    #[test]
+    fn matmul_only_classification() {
+        assert!(Method::Pogo.is_matmul_only());
+        assert!(!Method::Rgd.is_matmul_only());
+        assert!(!Method::Rsdm.is_matmul_only());
+        assert!(!Method::Adam.is_matmul_only()); // unconstrained, trivial anyway
+    }
+}

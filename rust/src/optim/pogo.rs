@@ -1,0 +1,365 @@
+//! POGO — Proximal One-step Geometric Orthoptimizer (the paper's Alg. 1).
+//!
+//! Per update, for `X ∈ St(p, n)` and Euclidean gradient `∇f`:
+//!
+//! 1. `G = BaseOptimizer(∇f)`                       (§3.1, linear BO)
+//! 2. `R = X·Skew(Xᵀ G)`  — Riemannian gradient. Computed in the
+//!    *small-gram* form `R = ½((X Xᵀ)G − (X Gᵀ)X)` so every product is
+//!    `O(p² n)` instead of `O(n² p)` (matters for wide matrices).
+//! 3. `M = X − η R`       — intermediate step in the tangent direction.
+//! 4. `X⁺ = M + λ(I − M Mᵀ)M` — proximal normal step, with λ either the
+//!    root of the landing polynomial (exact landing, §3.2) or the constant
+//!    `1/2` (the `o(ξ^{7/2})` approximation of §3.3 / Thm 3.5).
+//!
+//! Matmul-only ⇒ this same rule is the L1 Pallas kernel
+//! (`python/compile/kernels/pogo_step.py`); integration tests check the
+//! two engines agree.
+
+use super::base::{BaseOpt, BaseOptKind};
+use super::quartic::solve_landing_quartic;
+use super::Orthoptimizer;
+use crate::linalg::{matmul, matmul_a_bt, Mat, Scalar};
+
+/// How λ is chosen each step.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LambdaPolicy {
+    /// Fix λ = 1/2 (default; Thm 3.5 guarantees o(ξ⁷) squared distance).
+    Half,
+    /// Solve the quartic landing polynomial for the exact landing λ.
+    FindRoot,
+}
+
+/// POGO hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct PogoConfig {
+    pub lr: f64,
+    pub lambda: LambdaPolicy,
+    pub base: BaseOptKind,
+}
+
+impl Default for PogoConfig {
+    fn default() -> Self {
+        PogoConfig { lr: 0.1, lambda: LambdaPolicy::Half, base: BaseOptKind::Sgd }
+    }
+}
+
+/// POGO over real Stiefel matrices.
+pub struct Pogo<S: Scalar = f32> {
+    cfg: PogoConfig,
+    base: BaseOpt<S>,
+    name: String,
+    /// Landing-polynomial coefficients of the last step (telemetry).
+    pub last_lambda: f64,
+}
+
+impl<S: Scalar> Pogo<S> {
+    pub fn new(cfg: PogoConfig, n_params: usize) -> Self {
+        let name = match cfg.lambda {
+            LambdaPolicy::Half => format!("POGO({})", cfg.base.name()),
+            LambdaPolicy::FindRoot => format!("POGO-root({})", cfg.base.name()),
+        };
+        Pogo { cfg, base: BaseOpt::new(cfg.base, n_params), name, last_lambda: 0.5 }
+    }
+
+    pub fn config(&self) -> &PogoConfig {
+        &self.cfg
+    }
+
+    /// The POGO update on a single matrix, exposed as a free function so the
+    /// property tests and the batched coordinator can drive it directly.
+    pub fn update(x: &Mat<S>, g: &Mat<S>, eta: f64, policy: LambdaPolicy) -> (Mat<S>, f64) {
+        let m = intermediate(x, g, eta);
+        let (xp, lam) = normal_step(&m, policy);
+        (xp, lam)
+    }
+}
+
+/// `M = X − η·X Skew(XᵀG)`, small-gram form.
+pub fn intermediate<S: Scalar>(x: &Mat<S>, g: &Mat<S>, eta: f64) -> Mat<S> {
+    let xxt = matmul_a_bt(x, x); // p×p
+    let xgt = matmul_a_bt(x, g); // p×p
+    let a1 = matmul(&xxt, g); // (X Xᵀ) G : p×n
+    let a2 = matmul(&xgt, x); // (X Gᵀ) X : p×n
+    // R = ½ (A1 − A2); M = X − η R
+    let mut m = x.clone();
+    let he = S::from_f64(-0.5 * eta);
+    m.axpy(he, &a1);
+    m.axpy(S::from_f64(0.5 * eta), &a2);
+    m
+}
+
+/// The normal step `X⁺ = M + λ(I − M Mᵀ)M`, with λ per policy.
+/// Returns `(X⁺, λ)`.
+pub fn normal_step<S: Scalar>(m: &Mat<S>, policy: LambdaPolicy) -> (Mat<S>, f64) {
+    let mut c = matmul_a_bt(m, m); // p×p gram N = M Mᵀ
+    c.sub_eye_inplace(); // C = N − I  (symmetric)
+    let lam = match policy {
+        LambdaPolicy::Half => 0.5,
+        LambdaPolicy::FindRoot => {
+            let coeffs = landing_coeffs(&c);
+            solve_landing_quartic(coeffs)
+        }
+    };
+    // B = −C M; X⁺ = M + λ B.
+    let b = matmul(&c, m);
+    let mut xp = m.clone();
+    xp.axpy(S::from_f64(-lam), &b);
+    (xp, lam)
+}
+
+/// Landing-polynomial coefficients `[a₄, a₃, a₂, a₁, a₀]` from the p×p
+/// gram residual `C = M Mᵀ − I` alone (Lemma 3.1 with the identities
+/// `B = −C M`, `D = M Bᵀ + B Mᵀ = −(N C + C N)`, `E = B Bᵀ = C N C`, where
+/// `N = C + I`). Everything is `O(p³)` on p×p symmetric matrices — *no*
+/// additional p×n products.
+///
+/// Note: the published Lemma 3.1 has two typos in the λ² and λ¹ terms; we
+/// implement the exact expansion of ‖C + Dλ + Eλ²‖², which tests verify
+/// against the directly-computed squared distance.
+pub fn landing_coeffs<S: Scalar>(c: &Mat<S>) -> [f64; 5] {
+    let n = {
+        // N = C + I
+        let mut n = c.clone();
+        n.add_diag_inplace(S::ONE);
+        n
+    };
+    let nc = matmul(&n, c); // N C
+    // D = −(N C + (N C)ᵀ)   (since C, N symmetric ⇒ C N = (N C)ᵀ)
+    let d = {
+        let mut d = nc.add(&nc.transpose());
+        d.scale_inplace(-S::ONE);
+        d
+    };
+    // E = C N C = (N C)ᵀ C ... use E = Cᵀ(NC) with C symmetric: C·(N C).
+    let e = matmul(c, &nc);
+    // ‖C + Dλ + Eλ²‖² coefficients.
+    let a4 = e.dot(&e).to_f64();
+    let a3 = 2.0 * d.dot(&e).to_f64();
+    let a2 = d.dot(&d).to_f64() + 2.0 * c.dot(&e).to_f64();
+    let a1 = 2.0 * c.dot(&d).to_f64();
+    let a0 = c.dot(&c).to_f64();
+    [a4, a3, a2, a1, a0]
+}
+
+/// Evaluate the landing polynomial at λ (used by tests and the ablation).
+pub fn landing_poly_eval(coeffs: &[f64; 5], lam: f64) -> f64 {
+    coeffs.iter().fold(0.0, |acc, &c| acc * lam + c)
+}
+
+impl<S: Scalar> Orthoptimizer<S> for Pogo<S> {
+    fn step(&mut self, idx: usize, x: &mut Mat<S>, grad: &Mat<S>) {
+        self.base.ensure_slots(idx + 1);
+        let g = self.base.transform(idx, grad);
+        let (xp, lam) = Pogo::update(x, &g, self.cfg.lr, self.cfg.lambda);
+        self.last_lambda = lam;
+        *x = xp;
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn lr(&self) -> f64 {
+        self.cfg.lr
+    }
+
+    fn set_lr(&mut self, lr: f64) {
+        self.cfg.lr = lr;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifold::stiefel;
+    use crate::rng::Rng;
+    use crate::testing;
+
+    type M = Mat<f64>;
+
+    #[test]
+    fn intermediate_matches_naive_formula() {
+        let mut rng = Rng::seed_from_u64(0);
+        let x = stiefel::random_point_t::<f64>(5, 9, &mut rng);
+        let g = M::randn(5, 9, &mut rng);
+        let m = intermediate(&x, &g, 0.3);
+        // Naive: M = X − η X Skew(XᵀG) with the n×n skew.
+        let s = crate::linalg::matmul_at_b(&x, &g).skew();
+        let r = matmul(&x, &s);
+        let mut want = x.clone();
+        want.axpy(-0.3, &r);
+        assert!(m.sub(&want).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_step_stays_on_manifold_lambda_half() {
+        // Thm 3.5 with t = 1: distance² = o(ξ⁷).
+        let mut rng = Rng::seed_from_u64(1);
+        let x = stiefel::random_point_t::<f64>(8, 16, &mut rng);
+        let g = M::randn(8, 16, &mut rng);
+        let eta = 0.5 / g.norm(); // ξ = 0.5
+        let (xp, lam) = Pogo::update(&x, &g, eta, LambdaPolicy::Half);
+        assert_eq!(lam, 0.5);
+        let d = stiefel::distance_t(&xp);
+        // o(ξ^{7/2}) with ξ=0.5 → well below 0.09; in practice ≪ 1e-3.
+        assert!(d < 1e-3, "distance {d}");
+    }
+
+    #[test]
+    fn find_root_lands_closer_or_equal() {
+        // For p > 1 the quartic's minimum is generically > 0 (one normal
+        // step cannot land exactly), so the roots are complex and the
+        // paper's rule picks the real part of the least-imaginary root —
+        // which should do no worse than λ = 1/2 and be near the grid
+        // minimum of P over λ.
+        let mut rng = Rng::seed_from_u64(2);
+        let x = stiefel::random_point_t::<f64>(6, 10, &mut rng);
+        let g = M::randn(6, 10, &mut rng).scale(4.0);
+        let eta = 0.8 / g.norm(); // larger ξ so λ=1/2 is visibly inexact
+        let (x_half, _) = Pogo::update(&x, &g, eta, LambdaPolicy::Half);
+        let (x_root, lam) = Pogo::update(&x, &g, eta, LambdaPolicy::FindRoot);
+        let (dh, dr) = (stiefel::distance_t(&x_half), stiefel::distance_t(&x_root));
+        assert!(dr <= dh + 1e-12, "root {dr} vs half {dh} (λ={lam})");
+        // Compare against a dense grid minimum of the landing polynomial.
+        let m = intermediate(&x, &g, eta);
+        let mut c = matmul_a_bt(&m, &m);
+        c.sub_eye_inplace();
+        let coeffs = landing_coeffs(&c);
+        let grid_min = (0..=2000)
+            .map(|i| landing_poly_eval(&coeffs, i as f64 * 1e-3))
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            dr * dr <= grid_min * 1.05 + 1e-12,
+            "root λ={lam} gives {} vs grid min {grid_min}",
+            dr * dr
+        );
+    }
+
+    #[test]
+    fn landing_coeffs_match_direct_evaluation() {
+        // P(λ) from the symbolic coefficients must equal ‖X₁X₁ᵀ−I‖²
+        // computed directly, for several λ.
+        let mut rng = Rng::seed_from_u64(3);
+        let x = stiefel::random_point_t::<f64>(4, 7, &mut rng);
+        let g = M::randn(4, 7, &mut rng);
+        let m = intermediate(&x, &g, 0.4);
+        let mut c = matmul_a_bt(&m, &m);
+        c.sub_eye_inplace();
+        let coeffs = landing_coeffs(&c);
+        for &lam in &[0.0, 0.25, 0.5, 1.0, 2.0] {
+            let b = matmul(&c, &m);
+            let mut x1 = m.clone();
+            x1.axpy(-lam, &b);
+            let direct = {
+                let d = stiefel::distance_t(&x1);
+                d * d
+            };
+            let symbolic = landing_poly_eval(&coeffs, lam);
+            assert!(
+                (direct - symbolic).abs() < 1e-9 * (1.0 + direct),
+                "λ={lam}: direct {direct} vs symbolic {symbolic}"
+            );
+        }
+    }
+
+    #[test]
+    fn prop_stays_near_manifold_multi_step() {
+        // Run 50 POGO steps with ξ < 1 from a manifold start; every iterate
+        // must stay o(ξ^{7/2})-close (Thm 3.5). Random shapes and grads.
+        testing::forall(
+            "POGO multi-step feasibility",
+            8,
+            |rng| {
+                let (p, n) = testing::gen_wide_shape(rng, 8, 16);
+                let x = stiefel::random_point_t::<f64>(p, n, rng);
+                let gs: Vec<M> =
+                    (0..50).map(|_| testing::gen_bounded::<f64>(rng, p, n, 1.0)).collect();
+                (x, gs)
+            },
+            |(x0, gs)| {
+                let mut x = x0.clone();
+                let eta = 0.3; // ‖G‖ ≤ 1 ⇒ ξ ≤ 0.3
+                for g in gs {
+                    let (xp, _) = Pogo::update(&x, g, eta, LambdaPolicy::Half);
+                    x = xp;
+                    testing::leq(stiefel::distance_t(&x), 1e-3, "manifold distance")?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_find_root_residual_zero() {
+        testing::forall(
+            "landing quartic residual",
+            8,
+            |rng| {
+                let (p, n) = testing::gen_wide_shape(rng, 6, 12);
+                let x = stiefel::random_point_t::<f64>(p, n, rng);
+                let g = M::randn(p, n, rng).scale(2.0);
+                (x, g)
+            },
+            |(x, g)| {
+                let eta = 0.5 / g.norm();
+                let m = intermediate(x, g, eta);
+                let mut c = matmul_a_bt(&m, &m);
+                c.sub_eye_inplace();
+                let coeffs = landing_coeffs(&c);
+                let lam = solve_landing_quartic(coeffs);
+                let p_at_root = landing_poly_eval(&coeffs, lam);
+                // P ≥ 0 everywhere; the chosen λ must be a near-minimizer
+                // (≤ grid minimum + slack) and beat both endpoints.
+                let grid_min = (0..=2000)
+                    .map(|i| landing_poly_eval(&coeffs, i as f64 * 1e-3))
+                    .fold(f64::INFINITY, f64::min);
+                let p0 = coeffs[4].max(1e-30);
+                testing::leq(p_at_root, grid_min * 1.05 + p0 * 1e-9, "near grid minimum")?;
+                testing::leq(p_at_root, landing_poly_eval(&coeffs, 0.5), "≤ P(1/2)")
+            },
+        );
+    }
+
+    #[test]
+    fn optimizer_trait_descends_procrustes() {
+        // End-to-end sanity: POGO(SGD) monotonically-ish decreases
+        // ‖AX − B‖² while staying feasible.
+        let mut rng = Rng::seed_from_u64(7);
+        let (p, n) = (8, 8);
+        let a = M::randn(p, p, &mut rng);
+        let b = M::randn(p, n, &mut rng);
+        let mut x = stiefel::random_point_t::<f64>(p, n, &mut rng);
+        let mut opt =
+            Pogo::<f64>::new(PogoConfig { lr: 0.05, ..Default::default() }, 1);
+        let loss = |x: &M| {
+            let r = matmul(&a, x).sub(&b);
+            r.norm_sq()
+        };
+        let l0 = loss(&x);
+        for _ in 0..200 {
+            let r = matmul(&a, &x).sub(&b);
+            let grad = crate::linalg::matmul_at_b(&a, &r).scale(2.0);
+            opt.step(0, &mut x, &grad);
+        }
+        let l1 = loss(&x);
+        assert!(l1 < l0 * 0.9, "no descent: {l0} → {l1}");
+        assert!(stiefel::distance_t(&x) < 1e-4);
+    }
+
+    #[test]
+    fn vadam_base_controls_large_gradients() {
+        // With raw SGD a huge gradient would fling X off the manifold;
+        // VAdam's normalization keeps ξ < 1 (paper §3.3 "in practice").
+        let mut rng = Rng::seed_from_u64(8);
+        let mut x = stiefel::random_point_t::<f64>(6, 12, &mut rng);
+        let mut opt = Pogo::<f64>::new(
+            PogoConfig { lr: 0.2, lambda: LambdaPolicy::Half, base: BaseOptKind::vadam() },
+            1,
+        );
+        for _ in 0..30 {
+            let g = M::randn(6, 12, &mut rng).scale(100.0);
+            opt.step(0, &mut x, &g);
+            assert!(stiefel::distance_t(&x) < 1e-2, "d={}", stiefel::distance_t(&x));
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! Riemannian gradient descent with QR retraction (Absil et al. 2008) —
+//! the classical feasible baseline of Fig. 4–8.
+//!
+//! `X⁺ = qf(X − η X Skew(XᵀG))` where `qf` is the (row-)QR retraction.
+//! Exactly feasible each step, but the retraction runs on the host QR
+//! substrate — the cost the paper's timing figures are about.
+
+use super::base::{BaseOpt, BaseOptKind};
+use super::Orthoptimizer;
+use crate::linalg::{qr_retract_rows, Mat, Scalar};
+
+/// RGD hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct RgdConfig {
+    pub lr: f64,
+    pub base: BaseOptKind,
+}
+
+impl Default for RgdConfig {
+    fn default() -> Self {
+        RgdConfig { lr: 0.1, base: BaseOptKind::Sgd }
+    }
+}
+
+/// Riemannian gradient descent with QR retraction.
+pub struct Rgd<S: Scalar = f32> {
+    cfg: RgdConfig,
+    base: BaseOpt<S>,
+    name: String,
+}
+
+impl<S: Scalar> Rgd<S> {
+    pub fn new(cfg: RgdConfig, n_params: usize) -> Self {
+        Rgd { cfg, base: BaseOpt::new(cfg.base, n_params), name: "RGD".to_string() }
+    }
+
+    /// One RGD update: tangent step then QR retraction.
+    pub fn update(x: &Mat<S>, g: &Mat<S>, eta: f64) -> Mat<S> {
+        let m = super::pogo::intermediate(x, g, eta);
+        qr_retract_rows(&m)
+    }
+}
+
+impl<S: Scalar> Orthoptimizer<S> for Rgd<S> {
+    fn step(&mut self, idx: usize, x: &mut Mat<S>, grad: &Mat<S>) {
+        self.base.ensure_slots(idx + 1);
+        let g = self.base.transform(idx, grad);
+        *x = Rgd::update(x, &g, self.cfg.lr);
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn lr(&self) -> f64 {
+        self.cfg.lr
+    }
+
+    fn set_lr(&mut self, lr: f64) {
+        self.cfg.lr = lr;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, matmul_at_b};
+    use crate::manifold::stiefel;
+    use crate::rng::Rng;
+    use crate::testing;
+
+    type M = Mat<f64>;
+
+    #[test]
+    fn exactly_feasible_every_step() {
+        let mut rng = Rng::seed_from_u64(0);
+        let mut x = stiefel::random_point_t::<f64>(5, 13, &mut rng);
+        let mut opt = Rgd::<f64>::new(RgdConfig { lr: 0.5, ..Default::default() }, 1);
+        for _ in 0..20 {
+            let g = M::randn(5, 13, &mut rng).scale(10.0);
+            opt.step(0, &mut x, &g);
+            assert!(stiefel::distance_t(&x) < 1e-9);
+        }
+    }
+
+    #[test]
+    fn descends_procrustes() {
+        let mut rng = Rng::seed_from_u64(1);
+        let p = 6;
+        let a = M::randn(p, p, &mut rng);
+        let b = M::randn(p, p, &mut rng);
+        let mut x = stiefel::random_point_t::<f64>(p, p, &mut rng);
+        let loss = |x: &M| matmul(&a, x).sub(&b).norm_sq();
+        let l0 = loss(&x);
+        let mut opt = Rgd::<f64>::new(RgdConfig { lr: 0.02, ..Default::default() }, 1);
+        for _ in 0..300 {
+            let r = matmul(&a, &x).sub(&b);
+            let g = matmul_at_b(&a, &r).scale(2.0);
+            opt.step(0, &mut x, &g);
+        }
+        assert!(loss(&x) < l0 * 0.5);
+    }
+
+    #[test]
+    fn zero_gradient_is_fixed_point() {
+        let mut rng = Rng::seed_from_u64(2);
+        let x = stiefel::random_point_t::<f64>(4, 7, &mut rng);
+        let xp = Rgd::update(&x, &M::zeros(4, 7), 0.3);
+        assert!(xp.sub(&x).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn prop_first_order_agreement_with_pogo() {
+        // For small η, RGD(QR) and POGO(λ=1/2) agree to O(η²) — both are
+        // retraction(-like) maps of the same tangent step.
+        testing::forall(
+            "RGD ≈ POGO to first order",
+            6,
+            |rng| {
+                let (p, n) = testing::gen_wide_shape(rng, 5, 10);
+                let x = stiefel::random_point_t::<f64>(p, n, rng);
+                let g = testing::gen_bounded::<f64>(rng, p, n, 1.0);
+                (x, g)
+            },
+            |(x, g)| {
+                let eta = 1e-3;
+                let rgd = Rgd::update(x, g, eta);
+                let (pogo, _) = crate::optim::pogo::Pogo::update(
+                    x,
+                    g,
+                    eta,
+                    crate::optim::pogo::LambdaPolicy::Half,
+                );
+                testing::leq(rgd.sub(&pogo).norm(), 1e-5, "first-order gap")
+            },
+        );
+    }
+}

@@ -1,0 +1,178 @@
+//! SLPG — sequential linearized proximal gradient (Liu et al. 2024),
+//! smooth case (r = 0), adapted to wide row-orthogonal matrices (paper §B).
+//!
+//! Per iteration:
+//! 1. `Y = X − η (G − Sym(G Xᵀ) X)` — gradient step along the Riemannian
+//!    gradient under the *Euclidean metric* (the proximal subproblem's
+//!    closed-form solution with the explicit multiplier
+//!    `Λ = Sym(Xᵀ∇f)`; note this direction is NOT orthogonal to the normal
+//!    direction, unlike POGO's canonical-metric `X Skew(XᵀG)` — §B).
+//! 2. `X⁺ = (3/2 I − ½ Y Yᵀ) Y` — first-order Taylor approximation of the
+//!    polar retraction — identical in form to POGO's normal step with
+//!    λ = 1/2.
+
+use super::base::{BaseOpt, BaseOptKind};
+use super::Orthoptimizer;
+use crate::linalg::{matmul, matmul_a_bt, Mat, Scalar};
+
+/// SLPG hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SlpgConfig {
+    pub lr: f64,
+    pub base: BaseOptKind,
+}
+
+impl Default for SlpgConfig {
+    fn default() -> Self {
+        SlpgConfig { lr: 0.1, base: BaseOptKind::Sgd }
+    }
+}
+
+/// SLPG over real Stiefel matrices.
+pub struct Slpg<S: Scalar = f32> {
+    cfg: SlpgConfig,
+    base: BaseOpt<S>,
+    name: String,
+}
+
+impl<S: Scalar> Slpg<S> {
+    pub fn new(cfg: SlpgConfig, n_params: usize) -> Self {
+        Slpg { cfg, base: BaseOpt::new(cfg.base, n_params), name: "SLPG".to_string() }
+    }
+
+    /// One SLPG update.
+    pub fn update(x: &Mat<S>, g: &Mat<S>, eta: f64) -> Mat<S> {
+        // D = G − Sym(G Xᵀ) X   (Euclidean-metric Riemannian gradient)
+        let gxt = matmul_a_bt(g, x); // p×p
+        let sym = gxt.sym();
+        let sx = matmul(&sym, x);
+        let mut y = x.clone();
+        y.axpy(S::from_f64(-eta), g);
+        y.axpy(S::from_f64(eta), &sx);
+        // Normal step: X⁺ = Y − ½ (Y Yᵀ − I) Y.
+        let mut c = matmul_a_bt(&y, &y);
+        c.sub_eye_inplace();
+        let cy = matmul(&c, &y);
+        let mut xp = y;
+        xp.axpy(S::from_f64(-0.5), &cy);
+        xp
+    }
+}
+
+impl<S: Scalar> Orthoptimizer<S> for Slpg<S> {
+    fn step(&mut self, idx: usize, x: &mut Mat<S>, grad: &Mat<S>) {
+        self.base.ensure_slots(idx + 1);
+        let g = self.base.transform(idx, grad);
+        *x = Slpg::update(x, &g, self.cfg.lr);
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn lr(&self) -> f64 {
+        self.cfg.lr
+    }
+
+    fn set_lr(&mut self, lr: f64) {
+        self.cfg.lr = lr;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifold::stiefel;
+    use crate::rng::Rng;
+    use crate::testing;
+
+    type M = Mat<f64>;
+
+    #[test]
+    fn single_step_feasibility_small_lr() {
+        // SLPG needs η‖G‖ genuinely small — the paper had to run it with
+        // "very low learning rates to avoid numerical errors" (§5.2). With
+        // a unit-norm gradient and η = 0.05 a single step stays ε-feasible.
+        let mut rng = Rng::seed_from_u64(0);
+        let x = stiefel::random_point_t::<f64>(6, 11, &mut rng);
+        let g = M::randn(6, 11, &mut rng);
+        let g = g.scale(1.0 / g.norm());
+        let xp = Slpg::update(&x, &g, 0.05);
+        assert!(stiefel::distance_t(&xp) < 1e-3, "d={}", stiefel::distance_t(&xp));
+    }
+
+    #[test]
+    fn matches_pogo_on_full_square_case() {
+        // §B: for p = n the Euclidean- and canonical-metric directions
+        // coincide only when Sym(XᵀG)X = X Sym(... generally they differ;
+        // but for G already tangent (G = X S₀, S₀ skew) both reduce to the
+        // same tangent step. Check that special case.
+        let mut rng = Rng::seed_from_u64(1);
+        let n = 7;
+        let x = stiefel::random_point_t::<f64>(n, n, &mut rng);
+        let s0 = M::randn(n, n, &mut rng).skew();
+        let g = matmul(&x, &s0); // tangent gradient
+        let eta = 0.05;
+        let slpg = Slpg::update(&x, &g, eta);
+        let (pogo, _) = crate::optim::pogo::Pogo::update(
+            &x,
+            &g,
+            eta,
+            crate::optim::pogo::LambdaPolicy::Half,
+        );
+        assert!(slpg.sub(&pogo).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn converges_to_procrustes_optimum() {
+        // For square orthogonal X the optimum of ‖AX − B‖² is the polar
+        // factor of AᵀB; SLPG must approach the analytic optimal loss.
+        let mut rng = Rng::seed_from_u64(2);
+        let p = 6;
+        let a = M::randn(p, p, &mut rng);
+        let b = M::randn(p, p, &mut rng);
+        let mut x = stiefel::random_point_t::<f64>(p, p, &mut rng);
+        let loss = |x: &M| matmul(&a, x).sub(&b).norm_sq();
+        let xstar = crate::linalg::polar_project(
+            &crate::linalg::matmul_at_b(&a, &b),
+            crate::linalg::PolarOpts { tol: 1e-12, max_iters: 200 },
+        );
+        let lstar = loss(&xstar);
+        let l0 = loss(&x);
+        let mut opt = Slpg::<f64>::new(SlpgConfig { lr: 0.005, ..Default::default() }, 1);
+        for _ in 0..1500 {
+            let r = matmul(&a, &x).sub(&b);
+            let g = crate::linalg::matmul_at_b(&a, &r).scale(2.0);
+            opt.step(0, &mut x, &g);
+        }
+        let l1 = loss(&x);
+        assert!(
+            l1 - lstar < 0.2 * (l0 - lstar),
+            "optimality gap not closed: l0={l0} l1={l1} l*={lstar}"
+        );
+        assert!(stiefel::distance_t(&x) < 1e-4);
+    }
+
+    #[test]
+    fn prop_feasibility_over_trajectory() {
+        testing::forall(
+            "SLPG trajectory feasibility",
+            6,
+            |rng| {
+                let (p, n) = testing::gen_wide_shape(rng, 6, 12);
+                let x = stiefel::random_point_t::<f64>(p, n, rng);
+                let gs: Vec<M> =
+                    (0..30).map(|_| testing::gen_bounded::<f64>(rng, p, n, 1.0)).collect();
+                (x, gs)
+            },
+            |(x0, gs)| {
+                let mut x = x0.clone();
+                for g in gs {
+                    x = Slpg::update(&x, g, 0.1);
+                    testing::leq(stiefel::distance_t(&x), 1e-2, "distance")?;
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,45 @@
+//! Thread-local PJRT CPU client.
+//!
+//! The xla crate's `PjRtClient` wraps an `Rc` (not `Send`), so a global
+//! static is impossible; instead each thread that touches the runtime gets
+//! one lazily-created client. The coordinator's step loop is
+//! single-threaded, so in practice the process has exactly one client —
+//! tests that exercise the runtime from multiple test threads each get
+//! their own, which XLA's CPU plugin supports.
+
+use std::cell::OnceCell;
+
+thread_local! {
+    static CLIENT: OnceCell<xla::PjRtClient> = const { OnceCell::new() };
+}
+
+/// Run `f` with this thread's PJRT CPU client (created on first use).
+pub fn with_client<R>(f: impl FnOnce(&xla::PjRtClient) -> R) -> R {
+    CLIENT.with(|cell| {
+        let client = cell.get_or_init(|| {
+            // Silence XLA's stderr chatter unless the user asked for it.
+            if std::env::var("TF_CPP_MIN_LOG_LEVEL").is_err() {
+                std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "2");
+            }
+            let client = xla::PjRtClient::cpu().expect("creating PJRT CPU client");
+            log::debug!(
+                "PJRT client: platform={} devices={}",
+                client.platform_name(),
+                client.device_count()
+            );
+            client
+        });
+        f(client)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn client_initializes_and_reuses() {
+        let d1 = super::with_client(|c| c.device_count());
+        let d2 = super::with_client(|c| c.device_count());
+        assert!(d1 >= 1);
+        assert_eq!(d1, d2);
+    }
+}

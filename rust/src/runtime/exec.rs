@@ -1,0 +1,184 @@
+//! Executable wrapper + literal marshalling between `Mat` and PJRT.
+//!
+//! Buffers are row-major on both sides, so marshalling is a memcpy. The
+//! batched helpers pack a same-shape group `[Mat; B]` into one `(B, p, n)`
+//! literal — that packing is the scalability mechanism of the paper's
+//! Fig. 1 (one dispatch for 10⁴ kernels instead of 10⁴ QR calls).
+
+use super::registry::EntryMeta;
+use anyhow::{anyhow, Result};
+use crate::linalg::MatF;
+
+/// A compiled program plus its manifest signature.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub meta: EntryMeta,
+}
+
+/// An input value for a program.
+pub enum Arg<'a> {
+    /// One matrix (its (p, n) shape must match the signature).
+    Mat(&'a MatF),
+    /// A same-shape group packed as (B, p, n).
+    Batch(&'a [MatF]),
+    /// Raw f32 buffer with explicit dims.
+    F32(&'a [f32], Vec<usize>),
+    /// Raw i32 buffer with explicit dims.
+    I32(&'a [i32], Vec<usize>),
+    /// Shape-(1,) scalar (e.g. the runtime learning rate).
+    Scalar(f32),
+}
+
+impl Executable {
+    pub fn new(exe: xla::PjRtLoadedExecutable, meta: EntryMeta) -> Self {
+        Executable { exe, meta }
+    }
+
+    /// Execute with the given arguments; returns the flattened output
+    /// tuple as literals.
+    pub fn run(&self, args: &[Arg]) -> Result<Vec<xla::Literal>> {
+        if args.len() != self.meta.inputs.len() {
+            return Err(anyhow!(
+                "{}: expected {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                args.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (arg, sig) in args.iter().zip(&self.meta.inputs) {
+            literals.push(self.to_literal(arg, sig)?);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {}: {e:?}", self.meta.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {} output: {e:?}", self.meta.name))?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        out.to_tuple().map_err(|e| anyhow!("untupling {}: {e:?}", self.meta.name))
+    }
+
+    fn to_literal(&self, arg: &Arg, sig: &super::registry::TensorSig) -> Result<xla::Literal> {
+        let dims: Vec<i64> = sig.shape.iter().map(|&d| d as i64).collect();
+        let lit = match arg {
+            Arg::Mat(m) => {
+                let want: Vec<usize> = sig.shape.clone();
+                let have = vec![m.rows(), m.cols()];
+                if want != have {
+                    return Err(anyhow!(
+                        "{}.{}: shape mismatch {want:?} vs {have:?}",
+                        self.meta.name,
+                        sig.name
+                    ));
+                }
+                xla::Literal::vec1(m.as_slice()).reshape(&dims)?
+            }
+            Arg::Batch(mats) => {
+                let packed = pack_batch(mats)?;
+                let have = vec![mats.len(), mats[0].rows(), mats[0].cols()];
+                if sig.shape != have {
+                    return Err(anyhow!(
+                        "{}.{}: batch shape mismatch {:?} vs {have:?}",
+                        self.meta.name,
+                        sig.name,
+                        sig.shape
+                    ));
+                }
+                xla::Literal::vec1(&packed).reshape(&dims)?
+            }
+            Arg::F32(buf, shape) => {
+                if &sig.shape != shape || buf.len() != sig.elements() {
+                    return Err(anyhow!(
+                        "{}.{}: f32 shape mismatch {:?} vs {shape:?} (len {})",
+                        self.meta.name,
+                        sig.name,
+                        sig.shape,
+                        buf.len()
+                    ));
+                }
+                xla::Literal::vec1(buf).reshape(&dims)?
+            }
+            Arg::I32(buf, shape) => {
+                if &sig.shape != shape || buf.len() != sig.elements() {
+                    return Err(anyhow!(
+                        "{}.{}: i32 shape mismatch {:?} vs {shape:?}",
+                        self.meta.name,
+                        sig.name,
+                        sig.shape
+                    ));
+                }
+                xla::Literal::vec1(buf).reshape(&dims)?
+            }
+            Arg::Scalar(v) => xla::Literal::vec1(&[*v][..]).reshape(&dims)?,
+        };
+        Ok(lit)
+    }
+}
+
+/// Pack a same-shape group into a contiguous (B, p, n) row-major buffer.
+pub fn pack_batch(mats: &[MatF]) -> Result<Vec<f32>> {
+    let first = mats.first().ok_or_else(|| anyhow!("empty batch"))?;
+    let (p, n) = first.shape();
+    let mut out = Vec::with_capacity(mats.len() * p * n);
+    for m in mats {
+        if m.shape() != (p, n) {
+            return Err(anyhow!("ragged batch: {:?} vs {:?}", m.shape(), (p, n)));
+        }
+        out.extend_from_slice(m.as_slice());
+    }
+    Ok(out)
+}
+
+/// Unpack a (B, p, n) literal back into `B` matrices.
+pub fn unpack_batch(lit: &xla::Literal, b: usize, p: usize, n: usize) -> Result<Vec<MatF>> {
+    let v: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("literal to_vec: {e:?}"))?;
+    if v.len() != b * p * n {
+        return Err(anyhow!("unpack size mismatch: {} vs {}", v.len(), b * p * n));
+    }
+    Ok((0..b).map(|i| MatF::from_vec(p, n, v[i * p * n..(i + 1) * p * n].to_vec())).collect())
+}
+
+/// Read a literal as one matrix.
+pub fn literal_to_mat(lit: &xla::Literal, p: usize, n: usize) -> Result<MatF> {
+    let v: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("literal to_vec: {e:?}"))?;
+    if v.len() != p * n {
+        return Err(anyhow!("literal size {} vs {}x{}", v.len(), p, n));
+    }
+    Ok(MatF::from_vec(p, n, v))
+}
+
+/// Read a literal as an f32 vector.
+pub fn literal_to_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec().map_err(|e| anyhow!("literal to_vec: {e:?}"))
+}
+
+/// Read a scalar (or shape-(1,)/()-shaped) literal.
+pub fn literal_to_scalar(lit: &xla::Literal) -> Result<f32> {
+    let v: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("literal to_vec: {e:?}"))?;
+    v.first().copied().ok_or_else(|| anyhow!("empty literal"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn pack_unpack_roundtrip_shapes() {
+        let mut rng = Rng::seed_from_u64(0);
+        let mats: Vec<MatF> = (0..3).map(|_| MatF::randn(4, 5, &mut rng)).collect();
+        let packed = pack_batch(&mats).unwrap();
+        assert_eq!(packed.len(), 60);
+        assert_eq!(&packed[0..20], mats[0].as_slice());
+        assert_eq!(&packed[40..60], mats[2].as_slice());
+    }
+
+    #[test]
+    fn ragged_batch_rejected() {
+        let a = MatF::zeros(2, 2);
+        let b = MatF::zeros(2, 3);
+        assert!(pack_batch(&[a, b]).is_err());
+    }
+}

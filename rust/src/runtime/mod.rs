@@ -1,0 +1,15 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them from the
+//! L3 hot path. See /opt/xla-example/README.md for the interchange-format
+//! rationale (HLO text, not serialized protos).
+
+mod client;
+mod exec;
+mod registry;
+pub mod stepper;
+
+pub use client::with_client;
+pub use exec::{
+    literal_to_mat, literal_to_scalar, literal_to_vec, pack_batch, unpack_batch, Arg,
+    Executable,
+};
+pub use registry::{EntryMeta, Registry, TensorSig};

@@ -1,0 +1,188 @@
+//! Artifact registry: manifest loading + executable compilation cache.
+//!
+//! `artifacts/manifest.json` (written by `python/compile/aot.py`) maps
+//! program names to HLO-text files plus input/output signatures. The
+//! registry compiles each program once on first use and caches the PJRT
+//! executable for the rest of the process lifetime — compile time is paid
+//! at startup (or first dispatch), never in the step loop.
+
+use super::client;
+use super::exec::Executable;
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+/// Shape + dtype of one program input/output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSig {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSig {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One manifest entry.
+#[derive(Clone, Debug)]
+pub struct EntryMeta {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+    pub tags: Vec<String>,
+}
+
+/// The artifact registry (open once, share via `Rc`).
+pub struct Registry {
+    dir: PathBuf,
+    entries: HashMap<String, EntryMeta>,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Registry {
+    /// Open the registry at `dir` (must contain `manifest.json`).
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Registry> {
+        let dir = dir.into();
+        let manifest_path = dir.join("manifest.json");
+        let manifest = Json::parse_file(&manifest_path)
+            .with_context(|| format!("loading manifest {}", manifest_path.display()))?;
+        let mut entries = HashMap::new();
+        let obj = manifest
+            .get("entries")
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest has no 'entries' object"))?;
+        for (name, e) in obj {
+            let parse_sigs = |key: &str| -> Vec<TensorSig> {
+                e.get(key)
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|t| TensorSig {
+                        name: t.get("name").as_str().unwrap_or("").to_string(),
+                        shape: t
+                            .get("shape")
+                            .as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .filter_map(|d| d.as_usize())
+                            .collect(),
+                        dtype: t.get("dtype").as_str().unwrap_or("float32").to_string(),
+                    })
+                    .collect()
+            };
+            entries.insert(
+                name.clone(),
+                EntryMeta {
+                    name: name.clone(),
+                    file: e.get("file").as_str().unwrap_or("").to_string(),
+                    inputs: parse_sigs("inputs"),
+                    outputs: parse_sigs("outputs"),
+                    tags: e
+                        .get("tags")
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|t| t.as_str().map(str::to_string))
+                        .collect(),
+                },
+            );
+        }
+        log::info!("registry: {} programs at {}", entries.len(), dir.display());
+        Ok(Registry { dir, entries, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Open the default repository registry (`<repo>/artifacts`).
+    pub fn open_default() -> Result<Registry> {
+        Self::open(crate::artifacts_dir())
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.entries.keys().map(String::as_str).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.entries.contains_key(name)
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&EntryMeta> {
+        self.entries.get(name)
+    }
+
+    /// Names with a given tag (e.g. all `"step"` programs).
+    pub fn with_tag(&self, tag: &str) -> Vec<&EntryMeta> {
+        let mut v: Vec<&EntryMeta> =
+            self.entries.values().filter(|e| e.tags.iter().any(|t| t == tag)).collect();
+        v.sort_by(|a, b| a.name.cmp(&b.name));
+        v
+    }
+
+    /// Get (compiling + caching on first use) an executable by name.
+    pub fn get(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let meta =
+            self.entries.get(name).ok_or_else(|| anyhow!("no artifact named '{name}'"))?;
+        let path = self.dir.join(&meta.file);
+        let t = crate::util::Stopwatch::start();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client::with_client(|client| {
+            client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))
+        })?;
+        log::debug!("compiled {name} in {:.0}ms", t.millis());
+        let exe = Rc::new(Executable::new(exe, meta.clone()));
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_registry() -> Option<Registry> {
+        let dir = crate::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts built (run `make artifacts`)");
+            return None;
+        }
+        Some(Registry::open(dir).unwrap())
+    }
+
+    #[test]
+    fn manifest_parses_and_lists() {
+        let Some(reg) = test_registry() else { return };
+        assert!(reg.has("pogo_step_b4_8x16"));
+        let meta = reg.meta("pogo_step_b4_8x16").unwrap();
+        assert_eq!(meta.inputs.len(), 3);
+        assert_eq!(meta.inputs[0].shape, vec![4, 8, 16]);
+        assert!(!reg.with_tag("step").is_empty());
+    }
+
+    #[test]
+    fn compile_caches() {
+        let Some(reg) = test_registry() else { return };
+        let a = reg.get("distance_b4_8x16").unwrap();
+        let b = reg.get("distance_b4_8x16").unwrap();
+        assert!(Rc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn unknown_name_is_error() {
+        let Some(reg) = test_registry() else { return };
+        assert!(reg.get("nope").is_err());
+    }
+}

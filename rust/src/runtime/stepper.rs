@@ -1,0 +1,263 @@
+//! XLA-backed orthoptimizer steppers: the paper's matmul-only methods
+//! dispatched as ONE batched PJRT execution per same-shape group.
+//!
+//! This is the accelerated engine of the comparison (`Engine::Xla`):
+//! the Rust coordinator packs a group's matrices into a `(B, p, n)`
+//! literal, runs the AOT step program (whose core is the L1 Pallas
+//! kernel), and unpacks the updated points. Integration tests assert
+//! step-for-step agreement with the pure-Rust engine.
+
+use super::exec::{self, Arg};
+use super::registry::Registry;
+use crate::linalg::MatF;
+use crate::optim::base::{BaseOpt, BaseOptKind};
+use crate::optim::quartic::solve_landing_quartic;
+use anyhow::{anyhow, Result};
+use std::rc::Rc;
+
+/// Which step program a stepper drives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepKind {
+    Pogo,
+    PogoVadam,
+    PogoFindRoot,
+    Landing,
+    Slpg,
+}
+
+impl StepKind {
+    fn prefix(&self) -> &'static str {
+        match self {
+            StepKind::Pogo => "pogo_step",
+            StepKind::PogoVadam => "pogo_vadam_step",
+            StepKind::PogoFindRoot => "pogo_coeffs",
+            StepKind::Landing => "landing_step",
+            StepKind::Slpg => "slpg_step",
+        }
+    }
+}
+
+/// Artifact name for a step program at a group shape.
+pub fn step_artifact_name(kind: StepKind, b: usize, p: usize, n: usize) -> String {
+    format!("{}_b{b}_{p}x{n}", kind.prefix())
+}
+
+/// An XLA-backed stepper for one same-shape group.
+pub struct XlaStepper {
+    kind: StepKind,
+    pub lr: f64,
+    /// Landing attraction strength λ_a (runtime argument of the program).
+    pub attraction: f64,
+    /// LandingPC: normalize each gradient to unit Frobenius norm on L3
+    /// before packing (elementwise, negligible cost).
+    pub normalize_grad: bool,
+    /// Landing safe-ball radius ε (safeguard computed in-graph);
+    /// LandingPC sets this huge to disable the safeguard per its paper.
+    pub eps_ball: f64,
+    /// Host-side base optimizer (§3.1) applied to gradients before the
+    /// geometry dispatch — elementwise, so it costs nothing next to the
+    /// executable. `PogoVadam` fuses VAdam in-graph and skips this.
+    base: Option<BaseOpt<f32>>,
+    shape: (usize, usize, usize),
+    exe: Rc<super::exec::Executable>,
+    /// FindRoot needs the companion normal-step program.
+    normal_exe: Option<Rc<super::exec::Executable>>,
+    // VAdam state (packed in group layout).
+    m: Option<Vec<f32>>,
+    v: Option<Vec<f32>>,
+    t: u64,
+    /// λ values chosen on the last FindRoot step (telemetry).
+    pub last_lambdas: Vec<f64>,
+}
+
+impl XlaStepper {
+    /// Build a stepper for a `(b, p, n)` group; the matching artifact must
+    /// exist in the registry (aot.py emits one per experiment group shape).
+    pub fn new(
+        reg: &Registry,
+        kind: StepKind,
+        lr: f64,
+        b: usize,
+        p: usize,
+        n: usize,
+    ) -> Result<XlaStepper> {
+        let name = step_artifact_name(kind, b, p, n);
+        let exe = reg
+            .get(&name)
+            .map_err(|e| anyhow!("{e}; rebuild artifacts with shape (b={b},{p}x{n})"))?;
+        let normal_exe = if kind == StepKind::PogoFindRoot {
+            Some(reg.get(&format!("pogo_normal_b{b}_{p}x{n}"))?)
+        } else {
+            None
+        };
+        Ok(XlaStepper {
+            kind,
+            lr,
+            attraction: 1.0,
+            normalize_grad: false,
+            eps_ball: 0.5,
+            base: None,
+            shape: (b, p, n),
+            exe,
+            normal_exe,
+            m: None,
+            v: None,
+            t: 0,
+            last_lambdas: Vec::new(),
+        })
+    }
+
+    pub fn kind(&self) -> StepKind {
+        self.kind
+    }
+
+    /// Install a host-side base optimizer (must be linear — Def. 1 — for
+    /// tangent-space semantics; ignored for the fused-VAdam kind).
+    pub fn set_base(&mut self, kind: BaseOptKind) {
+        if self.kind != StepKind::PogoVadam && kind != BaseOptKind::Sgd {
+            self.base = Some(BaseOpt::new(kind, self.shape.0));
+        }
+    }
+
+    pub fn shape(&self) -> (usize, usize, usize) {
+        self.shape
+    }
+
+    /// One batched step over the whole group (in place).
+    pub fn step_group(&mut self, xs: &mut [MatF], gs: &[MatF]) -> Result<()> {
+        let (b, p, n) = self.shape;
+        if xs.len() != b || gs.len() != b {
+            return Err(anyhow!("group size {} vs stepper batch {b}", xs.len()));
+        }
+        // Host-side base-optimizer transform (momentum/VAdam), if any.
+        let gs_base: Vec<MatF>;
+        let gs: &[MatF] = match &mut self.base {
+            Some(base) => {
+                gs_base =
+                    gs.iter().enumerate().map(|(i, g)| base.transform(i, g)).collect();
+                &gs_base
+            }
+            None => gs,
+        };
+        match self.kind {
+            StepKind::Pogo | StepKind::Slpg => {
+                let outs = self.exe.run(&[
+                    Arg::Batch(xs),
+                    Arg::Batch(gs),
+                    Arg::Scalar(self.lr as f32),
+                ])?;
+                let new = exec::unpack_batch(&outs[0], b, p, n)?;
+                xs.clone_from_slice(&new);
+            }
+            StepKind::Landing => {
+                // landing_step returns (X⁺, distances); the fixed-step
+                // program relies on L3 keeping η in the safe regime.
+                // LandingPC semantics: per-matrix unit-normalized grads.
+                let gs_owned: Vec<MatF>;
+                let gs_eff: &[MatF] = if self.normalize_grad {
+                    gs_owned = gs
+                        .iter()
+                        .map(|g| {
+                            let nrm = g.norm().max(1e-30);
+                            g.scale(1.0 / nrm)
+                        })
+                        .collect();
+                    &gs_owned
+                } else {
+                    gs
+                };
+                let outs = self.exe.run(&[
+                    Arg::Batch(xs),
+                    Arg::Batch(gs_eff),
+                    Arg::Scalar(self.lr as f32),
+                    Arg::Scalar(self.attraction as f32),
+                    Arg::Scalar(self.eps_ball as f32),
+                ])?;
+                let new = exec::unpack_batch(&outs[0], b, p, n)?;
+                xs.clone_from_slice(&new);
+            }
+            StepKind::PogoVadam => {
+                let sz = b * p * n;
+                let m = self.m.get_or_insert_with(|| vec![0.0; sz]).clone();
+                let v = self.v.get_or_insert_with(|| vec![0.0; b]).clone();
+                self.t += 1;
+                let outs = self.exe.run(&[
+                    Arg::Batch(xs),
+                    Arg::Batch(gs),
+                    Arg::F32(&m, vec![b, p, n]),
+                    Arg::F32(&v, vec![b, 1, 1]),
+                    Arg::Scalar(self.t as f32),
+                    Arg::Scalar(self.lr as f32),
+                ])?;
+                let new = exec::unpack_batch(&outs[0], b, p, n)?;
+                xs.clone_from_slice(&new);
+                self.m = Some(exec::literal_to_vec(&outs[1])?);
+                self.v = Some(exec::literal_to_vec(&outs[2])?);
+            }
+            StepKind::PogoFindRoot => {
+                // Phase 1: intermediate M + quartic coefficients on XLA.
+                let outs = self.exe.run(&[
+                    Arg::Batch(xs),
+                    Arg::Batch(gs),
+                    Arg::Scalar(self.lr as f32),
+                ])?;
+                let m_flat = exec::literal_to_vec(&outs[0])?;
+                let coeffs = exec::literal_to_vec(&outs[1])?; // (B, 5)
+                // Phase 2: solve each quartic on L3 (microseconds)…
+                self.last_lambdas.clear();
+                let mut lams = Vec::with_capacity(b);
+                for i in 0..b {
+                    let c = &coeffs[i * 5..(i + 1) * 5];
+                    let lam =
+                        solve_landing_quartic([c[0] as f64, c[1] as f64, c[2] as f64,
+                                               c[3] as f64, c[4] as f64]);
+                    self.last_lambdas.push(lam);
+                    lams.push(lam as f32);
+                }
+                // …Phase 3: per-matrix normal step back on XLA.
+                let normal = self.normal_exe.as_ref().unwrap();
+                let outs = normal.run(&[
+                    Arg::F32(&m_flat, vec![b, p, n]),
+                    Arg::F32(&lams, vec![b]),
+                ])?;
+                let new = exec::unpack_batch(&outs[0], b, p, n)?;
+                xs.clone_from_slice(&new);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Adapter implementing the generic `Orthoptimizer` trait over one group.
+/// `step(idx, …)` is not meaningful for the batched engine; use
+/// `step_group`.
+impl crate::optim::Orthoptimizer<f32> for XlaStepper {
+    fn step(&mut self, _idx: usize, x: &mut MatF, g: &MatF) {
+        let mut xs = vec![x.clone()];
+        self.step_group(std::slice::from_mut(&mut xs[0]), std::slice::from_ref(g))
+            .expect("xla step failed");
+        *x = xs.pop().unwrap();
+    }
+
+    fn step_group(&mut self, xs: &mut [MatF], gs: &[MatF]) {
+        XlaStepper::step_group(self, xs, gs).expect("xla group step failed");
+    }
+
+    fn name(&self) -> &str {
+        match self.kind {
+            StepKind::Pogo => "POGO[xla]",
+            StepKind::PogoVadam => "POGO(vadam)[xla]",
+            StepKind::PogoFindRoot => "POGO-root[xla]",
+            StepKind::Landing => "Landing[xla]",
+            StepKind::Slpg => "SLPG[xla]",
+        }
+    }
+
+    fn lr(&self) -> f64 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f64) {
+        self.lr = lr;
+    }
+}

@@ -1,0 +1,145 @@
+//! Property-based testing mini-framework (proptest is not in the offline
+//! registry).
+//!
+//! Provides seeded generators for the structures the paper's invariants are
+//! stated over — Stiefel points, skew-symmetric matrices, bounded gradients
+//! — plus a `forall` runner with failure reporting including the case seed,
+//! so any failing property is reproducible from its printed seed.
+
+use crate::linalg::{CMat, Mat, Scalar};
+use crate::manifold::stiefel;
+use crate::rng::Rng;
+
+/// Number of cases per property (override with `POGO_PROPTEST_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("POGO_PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(32)
+}
+
+/// Run `prop` on `cases` generated inputs. The generator receives a seeded
+/// RNG per case; on failure we panic with the reproducing seed and case id.
+pub fn forall<T, G, P>(name: &str, cases: usize, gen: G, prop: P)
+where
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let base_seed: u64 = std::env::var("POGO_PROPTEST_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0x9E37_79B9_7F4A_7C15);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x2545F4914F6CDD1D);
+        let mut rng = Rng::seed_from_u64(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed:#x}):\n  {msg}\n\
+                 reproduce with POGO_PROPTEST_SEED={base_seed} and this case index"
+            );
+        }
+    }
+}
+
+/// Generator: random shape (p, n) with p ≤ n within given bounds.
+pub fn gen_wide_shape(rng: &mut Rng, p_max: usize, n_max: usize) -> (usize, usize) {
+    let p = 1 + rng.index(p_max);
+    let n = p + rng.index(n_max.saturating_sub(p) + 1);
+    (p, n)
+}
+
+/// Generator: random point on St(p, n).
+pub fn gen_stiefel<S: Scalar>(rng: &mut Rng, p: usize, n: usize) -> Mat<S> {
+    stiefel::random_point_t(p, n, rng)
+}
+
+/// Generator: random matrix with Frobenius norm ≤ `bound`.
+pub fn gen_bounded<S: Scalar>(rng: &mut Rng, p: usize, n: usize, bound: f64) -> Mat<S> {
+    let g = Mat::<S>::randn(p, n, rng);
+    let norm = g.norm().to_f64();
+    if norm <= bound || norm == 0.0 {
+        g
+    } else {
+        g.scale(S::from_f64(bound / norm * rng.uniform()))
+    }
+}
+
+/// Generator: random skew-symmetric n×n matrix.
+pub fn gen_skew<S: Scalar>(rng: &mut Rng, n: usize) -> Mat<S> {
+    Mat::<S>::randn(n, n, rng).skew()
+}
+
+/// Generator: random complex Stiefel point (X X^H = I).
+pub fn gen_unitary_stiefel<S: Scalar>(rng: &mut Rng, p: usize, n: usize) -> CMat<S> {
+    stiefel::random_point_complex(p, n, rng)
+}
+
+/// Assertion helper: `|a − b| ≤ atol + rtol·|b|`.
+pub fn close(a: f64, b: f64, atol: f64, rtol: f64) -> Result<(), String> {
+    if (a - b).abs() <= atol + rtol * b.abs() {
+        Ok(())
+    } else {
+        Err(format!("expected {a} ≈ {b} (atol={atol}, rtol={rtol}, diff={})", (a - b).abs()))
+    }
+}
+
+/// Assertion helper for upper bounds with context.
+pub fn leq(value: f64, bound: f64, what: &str) -> Result<(), String> {
+    if value <= bound {
+        Ok(())
+    } else {
+        Err(format!("{what}: {value} > {bound}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("square non-negative", 16, |rng| rng.gaussian(), |x| {
+            leq(0.0, x * x + 1e-18, "x² ≥ 0")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn forall_reports_failure() {
+        forall("always fails", 4, |rng| rng.gaussian(), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn gen_stiefel_is_on_manifold() {
+        forall(
+            "gen_stiefel on manifold",
+            8,
+            |rng| {
+                let (p, n) = gen_wide_shape(rng, 6, 12);
+                gen_stiefel::<f64>(rng, p, n)
+            },
+            |x| leq(stiefel::distance_t(x), 1e-8, "distance"),
+        );
+    }
+
+    #[test]
+    fn gen_bounded_respects_bound() {
+        forall(
+            "gen_bounded norm",
+            8,
+            |rng| gen_bounded::<f64>(rng, 5, 9, 2.0),
+            |g| leq(g.norm(), 2.0 + 1e-9, "norm"),
+        );
+    }
+
+    #[test]
+    fn gen_skew_antisymmetric() {
+        forall(
+            "skew antisymmetry",
+            8,
+            |rng| gen_skew::<f64>(rng, 7),
+            |s| leq(s.add(&s.transpose()).max_abs(), 1e-12, "S + Sᵀ"),
+        );
+    }
+}

@@ -1,0 +1,248 @@
+//! Declarative command-line flag parsing (no clap in the offline registry).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, and generates the usage text. Used by the `pogo` binary, the
+//! examples and the bench drivers.
+
+use std::collections::BTreeMap;
+
+/// One registered flag.
+#[derive(Clone, Debug)]
+struct FlagSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_bool: bool,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    bools: BTreeMap<String, bool>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// String flag (falls back to the registered default).
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_f64(&self, name: &str) -> Option<f64> {
+        self.get(name).and_then(|v| v.parse().ok())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Option<usize> {
+        self.get(name).and_then(|v| v.parse().ok())
+    }
+
+    pub fn get_u64(&self, name: &str) -> Option<u64> {
+        self.get(name).and_then(|v| v.parse().ok())
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.bools.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Flag registry + parser for one (sub)command.
+pub struct Cli {
+    program: String,
+    about: String,
+    flags: Vec<FlagSpec>,
+}
+
+impl Cli {
+    pub fn new(program: &str, about: &str) -> Self {
+        Cli { program: program.to_string(), about: about.to_string(), flags: Vec::new() }
+    }
+
+    /// Register a value flag with a default.
+    pub fn flag(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Register a value flag with no default (optional).
+    pub fn flag_opt(mut self, name: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Register a boolean switch.
+    pub fn switch(mut self, name: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_bool: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nFlags:\n", self.program, self.about);
+        for f in &self.flags {
+            let head = if f.is_bool {
+                format!("  --{}", f.name)
+            } else {
+                format!("  --{} <value>", f.name)
+            };
+            let def = match &f.default {
+                Some(d) if !f.is_bool => format!(" [default: {d}]"),
+                _ => String::new(),
+            };
+            s.push_str(&format!("{head:<28} {}{def}\n", f.help));
+        }
+        s.push_str("  --help                     show this message\n");
+        s
+    }
+
+    /// Parse a token list (excluding argv[0]). Returns Err(usage) on
+    /// `--help` or malformed input.
+    pub fn parse(&self, tokens: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        // Seed defaults.
+        for f in &self.flags {
+            if let Some(d) = &f.default {
+                args.values.insert(f.name.clone(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if t == "--help" || t == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(stripped) = t.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name}\n\n{}", self.usage()))?;
+                if spec.is_bool {
+                    if let Some(v) = inline_val {
+                        let b = v.parse::<bool>().map_err(|_| {
+                            format!("flag --{name} expects true/false, got '{v}'")
+                        })?;
+                        args.bools.insert(name, b);
+                    } else {
+                        args.bools.insert(name, true);
+                    }
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            tokens
+                                .get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("flag --{name} expects a value"))?
+                        }
+                    };
+                    args.values.insert(name, val);
+                }
+            } else {
+                args.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    /// Parse std::env::args() (skipping argv[0] and an optional subcommand
+    /// token), printing usage and exiting on error.
+    pub fn parse_env_or_exit(&self, skip: usize) -> Args {
+        let tokens: Vec<String> = std::env::args().skip(1 + skip).collect();
+        match self.parse(&tokens) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("test", "test tool")
+            .flag("lr", "0.5", "learning rate")
+            .flag_opt("out", "output path")
+            .switch("verbose", "log more")
+    }
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let a = cli().parse(&toks(&[])).unwrap();
+        assert_eq!(a.get_f64("lr"), Some(0.5));
+        assert_eq!(a.get("out"), None);
+        assert!(!a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = cli().parse(&toks(&["--lr", "0.1", "--out=res.csv", "--verbose"])).unwrap();
+        assert_eq!(a.get_f64("lr"), Some(0.1));
+        assert_eq!(a.get("out"), Some("res.csv"));
+        assert!(a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = cli().parse(&toks(&["fig4-pca", "--lr", "1.0"])).unwrap();
+        assert_eq!(a.positional(), &["fig4-pca".to_string()]);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(cli().parse(&toks(&["--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let err = cli().parse(&toks(&["--help"])).unwrap_err();
+        assert!(err.contains("learning rate"));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(cli().parse(&toks(&["--lr"])).is_err());
+    }
+
+    #[test]
+    fn bool_with_explicit_value() {
+        let a = cli().parse(&toks(&["--verbose=false"])).unwrap();
+        assert!(!a.get_bool("verbose"));
+    }
+}

@@ -1,0 +1,51 @@
+//! Cross-cutting utilities built in-crate (the offline registry lacks
+//! serde/clap/rayon): JSON, CLI parsing, a thread pool, logging and timers.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod pool;
+
+/// Wall-clock stopwatch used by the metrics and bench harnesses.
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch {
+    start: std::time::Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: std::time::Instant::now() }
+    }
+    pub fn seconds(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+    pub fn millis(&self) -> f64 {
+        self.seconds() * 1e3
+    }
+}
+
+/// Format a duration in human units (used by experiment progress lines).
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-3 {
+        format!("{:.1}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.1}ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{secs:.2}s")
+    } else {
+        format!("{}m{:02.0}s", (secs / 60.0) as u64, secs % 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(0.5e-4), "50.0µs");
+        assert_eq!(fmt_duration(0.25), "250.0ms");
+        assert_eq!(fmt_duration(3.0), "3.00s");
+        assert_eq!(fmt_duration(150.0), "2m30s");
+    }
+}

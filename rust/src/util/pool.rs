@@ -1,0 +1,166 @@
+//! Minimal data-parallel helpers on std::thread::scope.
+//!
+//! No rayon in the offline registry, so the substrate's parallel-for lives
+//! here. Two entry points cover everything the crate needs:
+//!
+//! - [`parallel_rows`]: shard a row-major output buffer by row ranges and
+//!   hand each worker a disjoint `&mut [S]` chunk (used by matmul).
+//! - [`parallel_for`]: index-space parallel map collecting results (used by
+//!   multi-matrix optimizer dispatch and dataset generation).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use (min(available_parallelism, 16),
+/// overridable via `POGO_THREADS`).
+pub fn num_threads() -> usize {
+    static CACHED: AtomicUsize = AtomicUsize::new(0);
+    let c = CACHED.load(Ordering::Relaxed);
+    if c != 0 {
+        return c;
+    }
+    let n = std::env::var("POGO_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&v| v >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+        });
+    CACHED.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Split `buf` (a row-major `rows × cols` buffer) into contiguous row-range
+/// chunks and run `f(rows_range, chunk)` on each, in parallel.
+pub fn parallel_rows<S: Send, F>(buf: &mut [S], rows: usize, cols: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>, &mut [S]) + Sync,
+{
+    assert_eq!(buf.len(), rows * cols);
+    let nt = num_threads().min(rows.max(1));
+    if nt <= 1 {
+        f(0..rows, buf);
+        return;
+    }
+    let per = rows.div_ceil(nt);
+    std::thread::scope(|scope| {
+        let mut rest = buf;
+        let mut r0 = 0;
+        while r0 < rows {
+            let r1 = (r0 + per).min(rows);
+            let take = (r1 - r0) * cols;
+            let (chunk, tail) = rest.split_at_mut(take);
+            rest = tail;
+            let fref = &f;
+            let range = r0..r1;
+            scope.spawn(move || fref(range, chunk));
+            r0 = r1;
+        }
+    });
+}
+
+/// Parallel map over `0..n`, preserving order of results.
+pub fn parallel_for<T: Send, F>(n: usize, f: F) -> Vec<T>
+where
+    F: Fn(usize) -> T + Sync,
+{
+    let nt = num_threads().min(n.max(1));
+    if nt <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let per = n.div_ceil(nt);
+    std::thread::scope(|scope| {
+        let mut rest = out.as_mut_slice();
+        let mut i0 = 0;
+        while i0 < n {
+            let i1 = (i0 + per).min(n);
+            let (chunk, tail) = rest.split_at_mut(i1 - i0);
+            rest = tail;
+            let fref = &f;
+            scope.spawn(move || {
+                for (off, slot) in chunk.iter_mut().enumerate() {
+                    *slot = Some(fref(i0 + off));
+                }
+            });
+            i0 = i1;
+        }
+    });
+    out.into_iter().map(|v| v.expect("worker filled all slots")).collect()
+}
+
+/// Parallel for-each over mutable items of a slice (disjoint access).
+pub fn parallel_for_each_mut<T: Send, F>(items: &mut [T], f: F)
+where
+    F: Fn(usize, &mut T) + Sync,
+{
+    let n = items.len();
+    let nt = num_threads().min(n.max(1));
+    if nt <= 1 || n <= 1 {
+        for (i, it) in items.iter_mut().enumerate() {
+            f(i, it);
+        }
+        return;
+    }
+    let per = n.div_ceil(nt);
+    std::thread::scope(|scope| {
+        let mut rest = items;
+        let mut i0 = 0;
+        while i0 < n {
+            let i1 = (i0 + per).min(n);
+            let (chunk, tail) = rest.split_at_mut(i1 - i0);
+            rest = tail;
+            let fref = &f;
+            scope.spawn(move || {
+                for (off, item) in chunk.iter_mut().enumerate() {
+                    fref(i0 + off, item);
+                }
+            });
+            i0 = i1;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_rows_covers_all() {
+        let rows = 37;
+        let cols = 11;
+        let mut buf = vec![0usize; rows * cols];
+        parallel_rows(&mut buf, rows, cols, |range, chunk| {
+            for (ci, r) in range.enumerate() {
+                for c in 0..cols {
+                    chunk[ci * cols + c] = r * cols + c;
+                }
+            }
+        });
+        for (i, &v) in buf.iter().enumerate() {
+            assert_eq!(v, i);
+        }
+    }
+
+    #[test]
+    fn parallel_for_ordered() {
+        let out = parallel_for(100, |i| i * i);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i * i);
+        }
+    }
+
+    #[test]
+    fn parallel_for_each_mut_touches_all() {
+        let mut xs = vec![0i64; 64];
+        parallel_for_each_mut(&mut xs, |i, v| *v = i as i64 + 1);
+        assert!(xs.iter().enumerate().all(|(i, &v)| v == i as i64 + 1));
+    }
+
+    #[test]
+    fn empty_inputs_ok() {
+        let out: Vec<usize> = parallel_for(0, |i| i);
+        assert!(out.is_empty());
+        let mut buf: Vec<f32> = vec![];
+        parallel_rows(&mut buf, 0, 0, |_, _| {});
+    }
+}

@@ -1,0 +1,207 @@
+//! Coordinator-level integration: trainer + schedulers + metrics + engines
+//! on realistic multi-group workloads, plus XLA/Rust base-optimizer parity.
+
+use pogo::coordinator::{
+    EarlyStop, LrSchedule, OptimizerSpec, ParamStore, Scheduler, Trainer, TrainerConfig,
+};
+use pogo::linalg::{matmul, matmul_at_b, MatF};
+use pogo::manifold::stiefel;
+use pogo::optim::base::BaseOptKind;
+use pogo::optim::{Engine, Method};
+use pogo::rng::Rng;
+use pogo::runtime::Registry;
+
+fn registry() -> Option<Registry> {
+    let dir = pogo::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built — run `make artifacts`");
+        return None;
+    }
+    Some(Registry::open(dir).unwrap())
+}
+
+/// Mixed store: two constrained shape groups + one free parameter.
+fn mixed_store(rng: &mut Rng) -> ParamStore {
+    let mut store = ParamStore::new();
+    store.add_stiefel_group("small", 4, 8, 16, rng);
+    store.add_stiefel_group("big", 2, 8, 16, rng); // same shape, distinct key
+    store.add_free("head", MatF::randn(4, 4, rng).scale(0.1));
+    store
+}
+
+#[test]
+fn multi_group_trainer_with_mixed_constraints() {
+    let mut rng = Rng::seed_from_u64(0);
+    let store = mixed_store(&mut rng);
+    assert_eq!(store.stiefel_groups().len(), 2); // keyed groups stay apart
+    let targets: Vec<MatF> =
+        (0..store.len()).map(|_| MatF::randn(8, 16, &mut rng)).collect();
+    let head_target = MatF::ones(4, 4);
+
+    let spec = OptimizerSpec::new(Method::Pogo, 0.05).with_base(BaseOptKind::vadam());
+    let mut tr = Trainer::new(
+        store,
+        spec,
+        None,
+        TrainerConfig { max_steps: 120, log_every: 20, free_lr: 0.05,
+                        ..Default::default() },
+    )
+    .unwrap();
+
+    let mut src = move |store: &ParamStore| {
+        let mut loss = 0.0;
+        let mut grads = Vec::new();
+        for (i, p) in store.params().iter().enumerate() {
+            let t = if p.mat.shape() == (4, 4) { &head_target } else { &targets[i] };
+            let r = p.mat.sub(t);
+            loss += r.norm_sq() as f64;
+            grads.push(r.scale(2.0));
+        }
+        Ok((loss, grads))
+    };
+    let l0 = src(&tr.store).unwrap().0;
+    let l1 = tr.run(&mut src).unwrap();
+    assert!(l1 < l0, "{l0} → {l1}");
+    assert!(tr.store.max_stiefel_distance() < 1e-3);
+    // The free head must have moved toward its target (Adam path).
+    let head = tr.store.mat(6);
+    assert!(head.sub(&MatF::ones(4, 4)).norm() < MatF::ones(4, 4).norm());
+}
+
+#[test]
+fn plateau_scheduler_drives_group_lr() {
+    let mut rng = Rng::seed_from_u64(1);
+    let mut store = ParamStore::new();
+    store.add_stiefel("x", stiefel::random_point(4, 8, &mut rng));
+    let spec = OptimizerSpec::new(Method::Pogo, 0.2);
+    let mut tr = Trainer::new(
+        store,
+        spec,
+        None,
+        TrainerConfig {
+            max_steps: 40,
+            scheduler: Some(Scheduler::new(
+                LrSchedule::Plateau { patience: 3, factor: 0.5, min_delta: 1e-12 },
+                0.2,
+            )),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    // Constant loss → plateaus every 3 steps → lr halves repeatedly.
+    let mut src = |_: &ParamStore| Ok((1.0, vec![MatF::zeros(4, 8)]));
+    tr.run(&mut src).unwrap();
+    assert!(tr.lr() < 0.2 / 8.0, "lr {}", tr.lr());
+}
+
+#[test]
+fn early_stop_halts_run() {
+    let mut rng = Rng::seed_from_u64(2);
+    let mut store = ParamStore::new();
+    store.add_stiefel("x", stiefel::random_point(4, 8, &mut rng));
+    let spec = OptimizerSpec::new(Method::Pogo, 0.1);
+    let mut tr = Trainer::new(
+        store,
+        spec,
+        None,
+        TrainerConfig {
+            max_steps: 10_000,
+            early_stop: Some(EarlyStop::new(5, 1e-9)),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let mut src = |_: &ParamStore| Ok((1.0, vec![MatF::zeros(4, 8)]));
+    tr.run(&mut src).unwrap();
+    assert!(tr.step_idx() <= 10, "ran {} steps", tr.step_idx());
+}
+
+#[test]
+fn xla_base_optimizer_parity_with_rust() {
+    // POGO + momentum must agree across engines (the base transform runs
+    // host-side for the XLA stepper).
+    let Some(reg) = registry() else { return };
+    let mut rng = Rng::seed_from_u64(3);
+    let (b, p, n) = (4, 8, 16);
+    let x0: Vec<MatF> = (0..b).map(|_| stiefel::random_point(p, n, &mut rng)).collect();
+    let gseq: Vec<Vec<MatF>> = (0..6)
+        .map(|_| {
+            (0..b)
+                .map(|_| {
+                    let g = MatF::randn(p, n, &mut rng);
+                    let nn = g.norm();
+                    g.scale(0.7 / nn)
+                })
+                .collect()
+        })
+        .collect();
+
+    let run = |engine: Engine| -> Vec<MatF> {
+        let spec = OptimizerSpec::new(Method::Pogo, 0.1)
+            .with_base(BaseOptKind::momentum(0.5))
+            .with_engine(engine);
+        let reg_opt = if engine == Engine::Xla { Some(&reg) } else { None };
+        let mut opt = spec.build(reg_opt, (b, p, n)).unwrap();
+        let mut xs = x0.clone();
+        for gs in &gseq {
+            opt.step_group(&mut xs, gs);
+        }
+        xs
+    };
+    let rust = run(Engine::Rust);
+    let xla = run(Engine::Xla);
+    for (i, (r, x)) in rust.iter().zip(&xla).enumerate() {
+        let d = r.sub(x).max_abs();
+        assert!(d < 1e-3, "matrix {i}: engines diverged by {d}");
+    }
+}
+
+#[test]
+fn landing_pc_xla_scale_invariance() {
+    // LandingPC's normalize-grad semantics must survive the XLA engine.
+    let Some(reg) = registry() else { return };
+    let mut rng = Rng::seed_from_u64(4);
+    let (b, p, n) = (4, 8, 16);
+    let x0: Vec<MatF> = (0..b).map(|_| stiefel::random_point(p, n, &mut rng)).collect();
+    let gs: Vec<MatF> = (0..b).map(|_| MatF::randn(p, n, &mut rng)).collect();
+    let gs_scaled: Vec<MatF> = gs.iter().map(|g| g.scale(41.0)).collect();
+
+    let spec = OptimizerSpec::new(Method::LandingPC, 0.05).with_engine(Engine::Xla);
+    let mut o1 = spec.build(Some(&reg), (b, p, n)).unwrap();
+    let mut o2 = spec.build(Some(&reg), (b, p, n)).unwrap();
+    let mut x1 = x0.clone();
+    let mut x2 = x0;
+    o1.step_group(&mut x1, &gs);
+    o2.step_group(&mut x2, &gs_scaled);
+    for (a, b) in x1.iter().zip(&x2) {
+        assert!(a.sub(b).max_abs() < 1e-5, "not scale invariant");
+    }
+}
+
+#[test]
+fn metric_log_csv_emission_from_trainer() {
+    let mut rng = Rng::seed_from_u64(5);
+    let mut store = ParamStore::new();
+    store.add_stiefel("x", stiefel::random_point(4, 8, &mut rng));
+    let a = MatF::randn(4, 4, &mut rng);
+    let bm = MatF::randn(4, 8, &mut rng);
+    let spec = OptimizerSpec::new(Method::Pogo, 0.02);
+    let mut tr = Trainer::new(
+        store,
+        spec,
+        None,
+        TrainerConfig { max_steps: 30, log_every: 5, ..Default::default() },
+    )
+    .unwrap();
+    let mut src = move |store: &ParamStore| {
+        let r = matmul(&a, store.mat(0)).sub(&bm);
+        Ok((r.norm_sq() as f64, vec![matmul_at_b(&a, &r).scale(2.0)]))
+    };
+    tr.run(&mut src).unwrap();
+    let path = std::env::temp_dir().join("pogo_it_metrics.csv");
+    tr.log.write_csv(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.lines().count() > 3);
+    assert!(text.starts_with("step,wall_s,"));
+    assert!(text.contains("distance"));
+}

@@ -1,0 +1,328 @@
+//! Integration: AOT artifacts (JAX/Pallas → HLO text) executed through the
+//! PJRT runtime must agree step-for-step with the pure-Rust engine.
+//!
+//! Requires `make artifacts` (the quick set suffices); tests self-skip with
+//! a loud message if the manifest is missing.
+
+use pogo::coordinator::{OptimizerSpec, ParamStore, Trainer, TrainerConfig};
+use pogo::linalg::{matmul, matmul_at_b, Mat, MatF};
+use pogo::manifold::stiefel;
+use pogo::optim::base::{BaseOpt, BaseOptKind};
+use pogo::optim::pogo::{LambdaPolicy, Pogo};
+use pogo::optim::{Engine, Method, Orthoptimizer};
+use pogo::rng::Rng;
+use pogo::runtime::stepper::{StepKind, XlaStepper};
+use pogo::runtime::{Arg, Registry};
+
+fn registry() -> Option<Registry> {
+    let dir = pogo::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built — run `make artifacts`");
+        return None;
+    }
+    Some(Registry::open(dir).unwrap())
+}
+
+fn group(rng: &mut Rng, b: usize, p: usize, n: usize) -> (Vec<MatF>, Vec<MatF>) {
+    let xs: Vec<MatF> = (0..b).map(|_| stiefel::random_point(p, n, rng)).collect();
+    let gs: Vec<MatF> = (0..b)
+        .map(|_| {
+            let g = MatF::randn(p, n, rng);
+            let norm = g.norm();
+            g.scale(1.0 / norm) // ‖G‖ = 1 keeps ξ < 1
+        })
+        .collect();
+    (xs, gs)
+}
+
+fn max_diff(a: &[MatF], b: &[MatF]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x.sub(y).max_abs() as f64).fold(0.0, f64::max)
+}
+
+#[test]
+fn pogo_xla_matches_rust_engine() {
+    let Some(reg) = registry() else { return };
+    let mut rng = Rng::seed_from_u64(0);
+    let (xs0, gs) = group(&mut rng, 4, 8, 16);
+
+    let mut xla = XlaStepper::new(&reg, StepKind::Pogo, 0.1, 4, 8, 16).unwrap();
+    let mut xs_xla = xs0.clone();
+    XlaStepper::step_group(&mut xla, &mut xs_xla, &gs).unwrap();
+
+    let mut xs_rust = xs0;
+    for (x, g) in xs_rust.iter_mut().zip(&gs) {
+        let (xp, _) = Pogo::<f32>::update(x, g, 0.1, LambdaPolicy::Half);
+        *x = xp;
+    }
+    let d = max_diff(&xs_xla, &xs_rust);
+    assert!(d < 2e-5, "xla vs rust diff {d}");
+    for x in &xs_xla {
+        assert!(stiefel::distance(x) < 1e-3);
+    }
+}
+
+#[test]
+fn pogo_vadam_xla_matches_rust_engine() {
+    let Some(reg) = registry() else { return };
+    let mut rng = Rng::seed_from_u64(1);
+    let (xs0, _) = group(&mut rng, 4, 8, 16);
+
+    let mut xla = XlaStepper::new(&reg, StepKind::PogoVadam, 0.1, 4, 8, 16).unwrap();
+    let mut base = BaseOpt::<f32>::new(BaseOptKind::vadam(), 4);
+    let mut xs_xla = xs0.clone();
+    let mut xs_rust = xs0;
+
+    // Multiple steps so the (m, v, t) state paths are exercised.
+    for step in 0..5 {
+        let gs: Vec<MatF> =
+            (0..4).map(|_| MatF::randn(8, 16, &mut rng).scale(1.0 + step as f32)).collect();
+        XlaStepper::step_group(&mut xla, &mut xs_xla, &gs).unwrap();
+        for (i, (x, g)) in xs_rust.iter_mut().zip(&gs).enumerate() {
+            let gt = base.transform(i, g);
+            let (xp, _) = Pogo::<f32>::update(x, &gt, 0.1, LambdaPolicy::Half);
+            *x = xp;
+        }
+        let d = max_diff(&xs_xla, &xs_rust);
+        assert!(d < 5e-4, "step {step}: diff {d}");
+    }
+}
+
+#[test]
+fn landing_and_slpg_xla_match_rust() {
+    let Some(reg) = registry() else { return };
+    let mut rng = Rng::seed_from_u64(2);
+    let (xs0, gs) = group(&mut rng, 4, 8, 16);
+
+    // Landing (fixed-step program; rust side without safeguard for parity).
+    let mut xla = XlaStepper::new(&reg, StepKind::Landing, 0.05, 4, 8, 16).unwrap();
+    let mut xs_xla = xs0.clone();
+    XlaStepper::step_group(&mut xla, &mut xs_xla, &gs).unwrap();
+    let cfg = pogo::optim::landing::LandingConfig {
+        lr: 0.05,
+        safeguard: false,
+        ..Default::default()
+    };
+    let mut xs_rust = xs0.clone();
+    for (x, g) in xs_rust.iter_mut().zip(&gs) {
+        let (xp, _) = pogo::optim::landing::Landing::<f32>::update(x, g, &cfg);
+        *x = xp;
+    }
+    assert!(max_diff(&xs_xla, &xs_rust) < 2e-5);
+
+    // SLPG.
+    let mut xla = XlaStepper::new(&reg, StepKind::Slpg, 0.05, 4, 8, 16).unwrap();
+    let mut xs_xla = xs0.clone();
+    XlaStepper::step_group(&mut xla, &mut xs_xla, &gs).unwrap();
+    let mut xs_rust = xs0;
+    for (x, g) in xs_rust.iter_mut().zip(&gs) {
+        *x = pogo::optim::slpg::Slpg::<f32>::update(x, g, 0.05);
+    }
+    assert!(max_diff(&xs_xla, &xs_rust) < 2e-5);
+}
+
+#[test]
+fn find_root_xla_three_phase_matches_rust() {
+    let Some(reg) = registry() else { return };
+    let mut rng = Rng::seed_from_u64(3);
+    let (xs0, gs) = group(&mut rng, 4, 8, 16);
+
+    let mut xla = XlaStepper::new(&reg, StepKind::PogoFindRoot, 0.3, 4, 8, 16).unwrap();
+    let mut xs_xla = xs0.clone();
+    XlaStepper::step_group(&mut xla, &mut xs_xla, &gs).unwrap();
+    assert_eq!(xla.last_lambdas.len(), 4);
+
+    let mut xs_rust = xs0;
+    for (x, g) in xs_rust.iter_mut().zip(&gs) {
+        let (xp, _) = Pogo::<f32>::update(x, g, 0.3, LambdaPolicy::FindRoot);
+        *x = xp;
+    }
+    let d = max_diff(&xs_xla, &xs_rust);
+    assert!(d < 1e-3, "find-root xla vs rust diff {d}");
+}
+
+#[test]
+fn pca_lossgrad_artifact_matches_closed_form() {
+    let Some(reg) = registry() else { return };
+    let mut rng = Rng::seed_from_u64(4);
+    let (p, n) = (8, 16);
+    let x = stiefel::random_point(p, n, &mut rng);
+    let a = MatF::randn(n, n, &mut rng);
+    let aat = matmul(&a, &a.transpose());
+
+    let exe = reg.get("pca_lossgrad_test").unwrap();
+    let outs = exe.run(&[Arg::Mat(&x), Arg::Mat(&aat)]).unwrap();
+    let loss = pogo::runtime::literal_to_scalar(&outs[0]).unwrap();
+    let grad = pogo::runtime::literal_to_mat(&outs[1], p, n).unwrap();
+
+    let want_loss = -matmul(&x, &aat).dot(&x);
+    let want_grad = matmul(&x, &aat).scale(-2.0);
+    assert!((loss - want_loss).abs() < 1e-2 * want_loss.abs(), "{loss} vs {want_loss}");
+    assert!(grad.sub(&want_grad).max_abs() < 1e-2);
+}
+
+#[test]
+fn complex_pogo_artifact_matches_rust() {
+    let Some(reg) = registry() else { return };
+    let mut rng = Rng::seed_from_u64(5);
+    let b = 2;
+    let (p, n) = (4, 8);
+    let xs: Vec<pogo::linalg::CMatF> =
+        (0..b).map(|_| stiefel::random_point_complex::<f32>(p, n, &mut rng)).collect();
+    let gs: Vec<pogo::linalg::CMatF> =
+        (0..b).map(|_| pogo::linalg::CMat::randn(p, n, &mut rng)).collect();
+
+    // Pack (B, p, n) re/im planes.
+    let pack = |f: &dyn Fn(&pogo::linalg::CMatF) -> Vec<f32>| -> Vec<f32> {
+        xs.iter().flat_map(|m| f(m)).collect()
+    };
+    let xr = pack(&|m| m.re.as_slice().to_vec());
+    let xi = pack(&|m| m.im.as_slice().to_vec());
+    let gr: Vec<f32> = gs.iter().flat_map(|m| m.re.as_slice().to_vec()).collect();
+    let gi: Vec<f32> = gs.iter().flat_map(|m| m.im.as_slice().to_vec()).collect();
+
+    let exe = reg.get("pogo_step_complex_test").unwrap();
+    let dims = vec![b, p, n];
+    let outs = exe
+        .run(&[
+            Arg::F32(&xr, dims.clone()),
+            Arg::F32(&xi, dims.clone()),
+            Arg::F32(&gr, dims.clone()),
+            Arg::F32(&gi, dims.clone()),
+            Arg::Scalar(0.1),
+        ])
+        .unwrap();
+    let out_r = pogo::runtime::literal_to_vec(&outs[0]).unwrap();
+    let out_i = pogo::runtime::literal_to_vec(&outs[1]).unwrap();
+
+    for i in 0..b {
+        let (xp, _) = pogo::optim::unitary::PogoC::<f32>::update(
+            &xs[i],
+            &gs[i],
+            0.1,
+            LambdaPolicy::Half,
+        );
+        let pn = p * n;
+        let got_r = &out_r[i * pn..(i + 1) * pn];
+        let got_i = &out_i[i * pn..(i + 1) * pn];
+        for (a, b) in got_r.iter().zip(xp.re.as_slice()) {
+            assert!((a - b).abs() < 5e-4, "re mismatch {a} vs {b}");
+        }
+        for (a, b) in got_i.iter().zip(xp.im.as_slice()) {
+            assert!((a - b).abs() < 5e-4, "im mismatch {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn trainer_with_xla_engine_descends() {
+    let Some(reg) = registry() else { return };
+    let mut rng = Rng::seed_from_u64(6);
+    let (b, p, n) = (4, 8, 16);
+    let mut store = ParamStore::new();
+    store.add_stiefel_group("x", b, p, n, &mut rng);
+    let targets: Vec<MatF> = (0..b).map(|_| stiefel::random_point(p, n, &mut rng)).collect();
+    let spec = OptimizerSpec::new(Method::Pogo, 0.05).with_engine(Engine::Xla);
+    let mut tr = Trainer::new(
+        store,
+        spec,
+        Some(&reg),
+        TrainerConfig { max_steps: 100, log_every: 20, ..Default::default() },
+    )
+    .unwrap();
+    // Loss: Σ ‖X_i − T_i‖² (closest-orthogonal-matrix chase).
+    let mut src = move |store: &ParamStore| {
+        let mut loss = 0.0f64;
+        let mut grads = Vec::new();
+        for (i, prm) in store.params().iter().enumerate() {
+            let r = prm.mat.sub(&targets[i]);
+            loss += r.norm_sq() as f64;
+            grads.push(r.scale(2.0));
+        }
+        Ok((loss, grads))
+    };
+    let l0 = src(&tr.store).unwrap().0;
+    let l1 = tr.run(&mut src).unwrap();
+    assert!(l1 < l0 * 0.7, "{l0} → {l1}");
+    assert!(tr.store.max_stiefel_distance() < 1e-3);
+}
+
+#[test]
+fn rust_vs_xla_full_trajectory_agreement() {
+    // 20 steps of POGO on identical Procrustes problems: the two engines
+    // must produce the same loss curve within f32 tolerance.
+    let Some(reg) = registry() else { return };
+    let mut rng = Rng::seed_from_u64(7);
+    let (b, p, n) = (4, 8, 16);
+    let x0: Vec<MatF> = (0..b).map(|_| stiefel::random_point(p, n, &mut rng)).collect();
+    let a: Vec<MatF> = (0..b).map(|_| MatF::randn(p, p, &mut rng)).collect();
+    let t: Vec<MatF> = (0..b).map(|_| MatF::randn(p, n, &mut rng)).collect();
+
+    let run = |engine: Engine| -> Vec<f64> {
+        let mut store = ParamStore::new();
+        for (i, x) in x0.iter().enumerate() {
+            store.add_stiefel(format!("x{i}"), x.clone());
+        }
+        let spec = OptimizerSpec::new(Method::Pogo, 0.02).with_engine(engine);
+        let reg_opt = if engine == Engine::Xla { Some(&reg) } else { None };
+        let mut tr = Trainer::new(
+            store,
+            spec,
+            reg_opt,
+            TrainerConfig { max_steps: 20, log_every: 1, ..Default::default() },
+        )
+        .unwrap();
+        let a = a.clone();
+        let t = t.clone();
+        let mut losses = Vec::new();
+        let mut src = move |store: &ParamStore| {
+            let mut loss = 0.0f64;
+            let mut grads = Vec::new();
+            for (i, prm) in store.params().iter().enumerate() {
+                let r = matmul(&a[i], &prm.mat).sub(&t[i]);
+                loss += r.norm_sq() as f64;
+                grads.push(matmul_at_b(&a[i], &r).scale(2.0));
+            }
+            Ok((loss, grads))
+        };
+        for _ in 0..20 {
+            losses.push(tr.step(&mut src).unwrap());
+        }
+        losses
+    };
+
+    let rust = run(Engine::Rust);
+    let xla = run(Engine::Xla);
+    for (i, (r, x)) in rust.iter().zip(&xla).enumerate() {
+        assert!(
+            (r - x).abs() < 1e-2 * (1.0 + r.abs()),
+            "step {i}: rust {r} vs xla {x}"
+        );
+    }
+}
+
+#[test]
+fn distance_artifact_matches_rust() {
+    let Some(reg) = registry() else { return };
+    let mut rng = Rng::seed_from_u64(8);
+    let (xs, _) = group(&mut rng, 4, 8, 16);
+    let exe = reg.get("distance_b4_8x16").unwrap();
+    let outs = exe.run(&[Arg::Batch(&xs)]).unwrap();
+    let d = pogo::runtime::literal_to_vec(&outs[0]).unwrap();
+    for (i, x) in xs.iter().enumerate() {
+        let want = stiefel::distance(x) as f32;
+        assert!((d[i] - want).abs() < 1e-4, "{} vs {want}", d[i]);
+    }
+}
+
+#[test]
+fn every_manifest_entry_compiles() {
+    // Heavier check (compiles all 80+ programs) — gated behind an env var
+    // so `cargo test` stays fast; the bench harness exercises the big ones.
+    if std::env::var("POGO_COMPILE_ALL").is_err() {
+        return;
+    }
+    let Some(reg) = registry() else { return };
+    for name in reg.names() {
+        reg.get(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+    }
+}
