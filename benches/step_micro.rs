@@ -39,11 +39,11 @@ fn main() {
     for &m in &[Method::Pogo, Method::Landing, Method::LandingPC, Method::Slpg,
                 Method::Rgd, Method::Rsdm] {
         let spec = OptimizerSpec::new(m, 1e-4).with_submanifold(150);
-        let mut opt = spec.build(None, (1, p, n)).unwrap();
+        let mut opt = spec.build::<f32>(None, (1, p, n)).unwrap();
         let mut xs = vec![x.clone()];
         let gs = vec![g.scale(1e-3)];
         rust_steps.push(bench(&format!("{} step {p}x{n} [rust]", m.name()), opts, || {
-            opt.step_group(&mut xs, &gs);
+            opt.step_group(&mut xs, &gs).unwrap();
         }));
         // keep iterates sane between iterations
         xs[0] = x.clone();
@@ -56,15 +56,15 @@ fn main() {
             let mut xla_steps = Vec::new();
             for &m in &[Method::Pogo, Method::Landing, Method::Slpg] {
                 let spec = OptimizerSpec::new(m, 1e-4).with_engine(Engine::Xla);
-                let mut opt = spec.build(Some(&reg), (1, p, n)).unwrap();
+                let mut opt = spec.build::<f32>(Some(&reg), (1, p, n)).unwrap();
                 let mut xs = vec![x.clone()];
                 let gs = vec![g.scale(1e-3)];
-                opt.step_group(&mut xs, &gs); // warm-up compile
+                opt.step_group(&mut xs, &gs).unwrap(); // warm-up compile
                 xla_steps.push(bench(
                     &format!("{} step {p}x{n} [xla]", m.name()),
                     opts,
                     || {
-                        opt.step_group(&mut xs, &gs);
+                        opt.step_group(&mut xs, &gs).unwrap();
                     },
                 ));
                 xs[0] = x.clone();
@@ -72,7 +72,7 @@ fn main() {
             // Batched 3×3 regime: throughput per matrix.
             for &b in &[512usize, 4096] {
                 let spec = OptimizerSpec::new(Method::Pogo, 0.1).with_engine(Engine::Xla);
-                let mut opt = spec.build(Some(&reg), (b, 3, 3)).unwrap();
+                let mut opt = spec.build::<f32>(Some(&reg), (b, 3, 3)).unwrap();
                 let mut xs: Vec<MatF> =
                     (0..b).map(|_| stiefel::random_point(3, 3, &mut rng)).collect();
                 let gs: Vec<MatF> = (0..b)
@@ -82,13 +82,13 @@ fn main() {
                         g.scale(0.3 / nn)
                     })
                     .collect();
-                opt.step_group(&mut xs, &gs);
+                opt.step_group(&mut xs, &gs).unwrap();
                 xla_steps.push(bench_items(
                     &format!("POGO batched step B={b} 3x3 [xla]"),
                     opts,
                     b as f64,
                     || {
-                        opt.step_group(&mut xs, &gs);
+                        opt.step_group(&mut xs, &gs).unwrap();
                     },
                 ));
             }

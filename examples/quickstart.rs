@@ -2,21 +2,23 @@
 //!
 //! Solves a small orthogonal Procrustes problem (`min ‖AX − B‖²` over
 //! St(p, n)) three ways — POGO(λ=1/2), POGO(find-root), and RGD-QR — and
-//! prints the loss/feasibility trajectory of each.
+//! prints the loss/feasibility trajectory of each. Every optimizer comes
+//! from one serializable [`OptimizerSpec`] through the crate's single
+//! construction path, `build::<S>`.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
+use pogo::coordinator::OptimizerSpec;
 use pogo::linalg::{matmul, matmul_at_b, MatF};
 use pogo::manifold::stiefel;
 use pogo::optim::base::BaseOptKind;
-use pogo::optim::pogo::{LambdaPolicy, Pogo, PogoConfig};
-use pogo::optim::rgd::{Rgd, RgdConfig};
-use pogo::optim::Orthoptimizer;
+use pogo::optim::pogo::LambdaPolicy;
+use pogo::optim::Method;
 use pogo::rng::Rng;
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     let mut rng = Rng::seed_from_u64(42);
     let (p, n) = (32, 64);
 
@@ -32,29 +34,22 @@ fn main() {
     println!("St({p}, {n}) Procrustes; initial loss {:.2}\n", lossgrad(&x0).0);
     println!("{:<18} {:>10} {:>14} {:>12}", "optimizer", "steps", "final loss", "‖XXᵀ−I‖");
 
-    // Three optimizers through the same trait.
-    let mut opts: Vec<Box<dyn Orthoptimizer<f32>>> = vec![
-        Box::new(Pogo::new(
-            PogoConfig { lr: 0.05, lambda: LambdaPolicy::Half, base: BaseOptKind::vadam() },
-            1,
-        )),
-        Box::new(Pogo::new(
-            PogoConfig {
-                lr: 0.05,
-                lambda: LambdaPolicy::FindRoot,
-                base: BaseOptKind::vadam(),
-            },
-            1,
-        )),
-        Box::new(Rgd::new(RgdConfig { lr: 2e-4, ..Default::default() }, 1)),
+    // Three specs, one construction path, one trait.
+    let specs = [
+        OptimizerSpec::new(Method::Pogo, 0.05).with_base(BaseOptKind::vadam()),
+        OptimizerSpec::new(Method::Pogo, 0.05)
+            .with_base(BaseOptKind::vadam())
+            .with_lambda(LambdaPolicy::FindRoot),
+        OptimizerSpec::new(Method::Rgd, 2e-4),
     ];
 
-    for opt in opts.iter_mut() {
+    for spec in specs {
+        let mut opt = spec.build::<f32>(None, (1, p, n))?;
         let mut x = x0.clone();
         let steps = 300;
         for _ in 0..steps {
             let (_, g) = lossgrad(&x);
-            opt.step(0, &mut x, &g);
+            opt.step(0, &mut x, &g)?;
         }
         let (loss, _) = lossgrad(&x);
         println!(
@@ -69,4 +64,5 @@ fn main() {
     println!("\nPOGO stays on the manifold at every step with only matrix products —");
     println!("no QR/SVD — which is what lets it batch to thousands of matrices.");
     println!("Next: `cargo run --release --example cnn_kernels` for the batched regime.");
+    Ok(())
 }

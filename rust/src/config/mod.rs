@@ -86,6 +86,9 @@ pub struct RunConfig {
     pub full: bool,
     /// Shrink workloads for smoke runs.
     pub quick: bool,
+    /// Explicit spec override (`pogo run --spec file.json`): replaces the
+    /// paper preset for its method — see [`resolve_spec`].
+    pub spec: Option<OptimizerSpec>,
 }
 
 impl RunConfig {
@@ -99,6 +102,7 @@ impl RunConfig {
             out_dir: crate::repo_root().join("results"),
             full: false,
             quick: false,
+            spec: None,
         }
     }
 
@@ -111,7 +115,17 @@ impl RunConfig {
             ("seed", Json::num(self.seed as f64)),
             ("full", Json::Bool(self.full)),
             ("quick", Json::Bool(self.quick)),
+            ("spec", self.spec.map_or(Json::Null, |s| s.to_json())),
         ])
+    }
+}
+
+/// The spec actually used for `method` in a run: the `--spec` override
+/// when it targets this method, the paper preset otherwise.
+pub fn resolve_spec(cfg: &RunConfig, method: Method) -> OptimizerSpec {
+    match cfg.spec {
+        Some(s) if s.method == method => s,
+        _ => spec_for(cfg.experiment, method),
     }
 }
 
@@ -285,5 +299,18 @@ mod tests {
         let j = cfg.to_json();
         assert_eq!(j.get("experiment").as_str(), Some("fig4-pca"));
         assert!(j.get("methods").as_arr().unwrap().len() >= 5);
+        assert_eq!(j.get("spec"), &Json::Null);
+    }
+
+    #[test]
+    fn spec_override_wins_for_its_method_only() {
+        let mut cfg = RunConfig::new(ExperimentId::Fig4Pca);
+        let custom = OptimizerSpec::new(Method::Pogo, 123.0);
+        cfg.spec = Some(custom);
+        assert_eq!(resolve_spec(&cfg, Method::Pogo), custom);
+        // Other methods keep their paper presets.
+        assert_eq!(resolve_spec(&cfg, Method::Rgd), spec_for(ExperimentId::Fig4Pca, Method::Rgd));
+        cfg.spec = None;
+        assert_eq!(resolve_spec(&cfg, Method::Pogo), spec_for(ExperimentId::Fig4Pca, Method::Pogo));
     }
 }

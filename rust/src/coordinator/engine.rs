@@ -1,23 +1,30 @@
-//! Optimizer construction + engine dispatch.
+//! Optimizer specs + engine dispatch.
 //!
-//! An [`OptimizerSpec`] is the serializable description of "which method,
-//! which hyperparameters, which engine"; `build` turns it into a concrete
-//! stepper for one shape group, choosing between the pure-Rust engine and
-//! the XLA (AOT Pallas) engine.
+//! An [`OptimizerSpec`] is the serializable single source of truth for
+//! "which method, which hyperparameters, which engine". `build::<S>` turns
+//! it into a concrete stepper for one shape group at any scalar precision,
+//! choosing between the pure-Rust engine and the XLA (AOT Pallas) engine;
+//! `build_unitary::<S>` does the same on the complex Stiefel manifold.
+//! Construction itself lives in [`crate::optim::registry`] — the one match
+//! over `Method` in the crate — so every construction site (Trainer,
+//! experiments, benches, CLI) goes through this file.
+//!
+//! Specs round-trip through the in-crate `util/json` (`to_json` /
+//! `from_json`, byte-identical), which is what makes runs replayable: the
+//! experiment drivers emit a `*.spec.json` manifest next to each CSV and
+//! the CLI accepts `pogo run --spec <file.json>`.
 
 use crate::optim::base::BaseOptKind;
-use crate::optim::landing::{Landing, LandingConfig};
-use crate::optim::pogo::{LambdaPolicy, Pogo, PogoConfig};
-use crate::optim::rgd::{Rgd, RgdConfig};
-use crate::optim::rsdm::{Rsdm, RsdmConfig};
-use crate::optim::slpg::{Slpg, SlpgConfig};
-use crate::optim::{adam, Engine, Method, Orthoptimizer};
-use crate::runtime::stepper::{StepKind, XlaStepper};
+use crate::optim::pogo::LambdaPolicy;
+use crate::optim::registry as methods;
+use crate::optim::unitary::UnitaryOptimizer;
+use crate::optim::{Engine, Method, Orthoptimizer};
 use crate::runtime::Registry;
+use crate::util::json::Json;
 use anyhow::{anyhow, Result};
 
 /// Full optimizer description (mirrors the paper's per-method knobs).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct OptimizerSpec {
     pub method: Method,
     pub lr: f64,
@@ -85,80 +92,171 @@ impl OptimizerSpec {
         format!("{}{eng}", self.method.name())
     }
 
-    /// Build a stepper for one `(group_size, p, n)` group.
+    /// Static capabilities of the spec's method.
+    pub fn capabilities(&self) -> crate::optim::registry::Capabilities {
+        methods::capabilities(self.method)
+    }
+
+    /// Build a stepper for one `(group_size, p, n)` group at scalar
+    /// precision `S` (`f32` is the experiment default; the precision
+    /// ablation builds `f64`).
     ///
     /// `registry` is required for `Engine::Xla`; the artifact for the
     /// group shape must exist (aot.py emits one per experiment shape).
-    pub fn build(
+    /// The XLA engine is f32-only — requesting it at another precision is
+    /// an error, not a silent fallback.
+    pub fn build<S: crate::linalg::Scalar>(
         &self,
         registry: Option<&Registry>,
         group: (usize, usize, usize),
-    ) -> Result<Box<dyn Orthoptimizer<f32>>> {
+    ) -> Result<Box<dyn Orthoptimizer<S>>> {
         let (b, p, n) = group;
         if self.engine == Engine::Xla {
             let reg = registry.ok_or_else(|| anyhow!("XLA engine needs a registry"))?;
-            let kind = match (self.method, self.base, self.lambda) {
-                (Method::Pogo, BaseOptKind::VAdam { .. }, LambdaPolicy::Half) => {
-                    StepKind::PogoVadam
-                }
-                (Method::Pogo, _, LambdaPolicy::Half) => StepKind::Pogo,
-                (Method::Pogo, _, LambdaPolicy::FindRoot) => StepKind::PogoFindRoot,
-                (Method::Landing | Method::LandingPC, _, _) => StepKind::Landing,
-                (Method::Slpg, _, _) => StepKind::Slpg,
-                (m, _, _) => {
-                    return Err(anyhow!("{} has no XLA engine (host retraction)", m.name()))
-                }
-            };
-            let mut stepper = XlaStepper::new(reg, kind, self.lr, b, p, n)?;
-            stepper.attraction = self.attraction;
-            stepper.normalize_grad = self.method == Method::LandingPC;
-            if self.method == Method::LandingPC {
-                // LandingPC has no safeguard (paper §5.1); neutralize it.
-                stepper.eps_ball = 1e9;
-            }
-            stepper.set_base(self.base);
-            return Ok(Box::new(stepper));
+            let stepper = methods::build_xla(self, reg, b, p, n)?;
+            return into_scalar_engine::<S>(Box::new(stepper)).ok_or_else(|| {
+                anyhow!(
+                    "XLA engine only supports f32 (requested {})",
+                    std::any::type_name::<S>()
+                )
+            });
         }
-        Ok(match self.method {
-            Method::Pogo => Box::new(Pogo::<f32>::new(
-                PogoConfig { lr: self.lr, lambda: self.lambda, base: self.base },
-                b,
-            )),
-            Method::Landing => Box::new(Landing::<f32>::new(
-                LandingConfig {
-                    lr: self.lr,
-                    attraction: self.attraction,
-                    base: self.base,
-                    ..Default::default()
-                },
-                b,
-            )),
-            Method::LandingPC => Box::new(Landing::<f32>::new(
-                LandingConfig::landing_pc(self.lr, self.attraction),
-                b,
-            )),
-            Method::Slpg => {
-                Box::new(Slpg::<f32>::new(SlpgConfig { lr: self.lr, base: self.base }, b))
-            }
-            Method::Rgd => {
-                Box::new(Rgd::<f32>::new(RgdConfig { lr: self.lr, base: self.base }, b))
-            }
-            Method::Rsdm => Box::new(Rsdm::<f32>::new(
-                RsdmConfig {
-                    lr: self.lr,
-                    submanifold_dim: self.submanifold_dim,
-                    base: self.base,
-                    seed: self.seed,
-                    ..Default::default()
-                },
-                b,
-            )),
-            Method::Adam => Box::new(adam::Adam::<f32>::new(
-                adam::AdamConfig { lr: self.lr, ..Default::default() },
-                b,
-            )),
-        })
+        methods::build_host::<S>(self, b)
     }
+
+    /// Build a complex-Stiefel (unitary) optimizer for `n_params`
+    /// matrices. Complex updates always run on the host engine (the tiny
+    /// Born cores make XLA dispatch overhead-bound).
+    pub fn build_unitary<S: crate::linalg::Scalar>(
+        &self,
+        n_params: usize,
+    ) -> Result<Box<dyn UnitaryOptimizer<S>>> {
+        methods::build_unitary::<S>(self, n_params)
+    }
+
+    // ---- Serialization (util/json; keys sorted ⇒ deterministic) ---------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("method", Json::str(self.method.name())),
+            ("lr", Json::num(self.lr)),
+            ("base", self.base.to_json()),
+            ("lambda", Json::str(self.lambda.name())),
+            ("attraction", Json::num(self.attraction)),
+            ("submanifold_dim", Json::num(self.submanifold_dim as f64)),
+            // Seeds are u64; JSON numbers are f64 (2^53) — keep exact.
+            ("seed", Json::str(self.seed.to_string())),
+            ("engine", Json::str(self.engine.name())),
+        ])
+    }
+
+    /// Parse a spec. `method` and `lr` are required; every other field
+    /// falls back to the [`OptimizerSpec::new`] default, so hand-written
+    /// spec files can stay minimal. Fields that are *present* but
+    /// malformed are errors — a replayed manifest must never silently
+    /// run with different hyperparameters than it states.
+    pub fn from_json(j: &Json) -> Result<OptimizerSpec> {
+        let method = match j.get("method") {
+            Json::Null => return Err(anyhow!("spec: missing 'method'")),
+            v => {
+                let s = v
+                    .as_str()
+                    .ok_or_else(|| anyhow!("spec: 'method' must be a string"))?;
+                Method::parse(s).ok_or_else(|| anyhow!("spec: unknown method '{s}'"))?
+            }
+        };
+        let lr = j
+            .get("lr")
+            .as_f64()
+            .ok_or_else(|| anyhow!("spec: missing or non-numeric 'lr'"))?;
+        let mut spec = OptimizerSpec::new(method, lr);
+        if !matches!(j.get("base"), Json::Null) {
+            spec.base = BaseOptKind::from_json(j.get("base"))?;
+        }
+        match j.get("lambda") {
+            Json::Null => {}
+            v => {
+                let s = v
+                    .as_str()
+                    .ok_or_else(|| anyhow!("spec: 'lambda' must be a string"))?;
+                spec.lambda = LambdaPolicy::parse(s)
+                    .ok_or_else(|| anyhow!("spec: unknown lambda policy '{s}'"))?;
+            }
+        }
+        match j.get("attraction") {
+            Json::Null => {}
+            v => {
+                spec.attraction = v
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("spec: 'attraction' must be a number"))?;
+            }
+        }
+        match j.get("submanifold_dim") {
+            Json::Null => {}
+            v => {
+                spec.submanifold_dim = v.as_usize().ok_or_else(|| {
+                    anyhow!("spec: 'submanifold_dim' must be a non-negative integer")
+                })?;
+            }
+        }
+        match j.get("seed") {
+            Json::Null => {}
+            Json::Str(s) => {
+                spec.seed = s
+                    .parse::<u64>()
+                    .map_err(|_| anyhow!("spec: 'seed' is not a u64: '{s}'"))?;
+            }
+            Json::Num(v) => {
+                // f64 is only exact up to 2^53; larger seeds must use the
+                // string form `to_json` emits.
+                if *v < 0.0 || v.fract() != 0.0 || *v > 9.0e15 {
+                    return Err(anyhow!(
+                        "spec: 'seed' must be a non-negative integer ≤ 2^53 \
+                         (use a string for larger seeds)"
+                    ));
+                }
+                spec.seed = *v as u64;
+            }
+            _ => return Err(anyhow!("spec: 'seed' must be an integer or string")),
+        }
+        match j.get("engine") {
+            Json::Null => {}
+            v => {
+                let s = v
+                    .as_str()
+                    .ok_or_else(|| anyhow!("spec: 'engine' must be a string"))?;
+                spec.engine =
+                    Engine::parse(s).ok_or_else(|| anyhow!("spec: unknown engine '{s}'"))?;
+            }
+        }
+        Ok(spec)
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string_pretty()
+    }
+
+    pub fn from_json_file(path: &std::path::Path) -> Result<OptimizerSpec> {
+        Self::from_json(&Json::parse_file(path)?)
+    }
+
+    /// Write the replayable spec manifest (`pogo run --spec` input format).
+    pub fn write_json_file(&self, path: &std::path::Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json_string() + "\n")?;
+        Ok(())
+    }
+}
+
+/// Narrow a concrete-f32 engine to the requested scalar type. Succeeds
+/// exactly when `S == f32` (checked via `TypeId`, no unsafe).
+fn into_scalar_engine<S: crate::linalg::Scalar>(
+    opt: Box<dyn Orthoptimizer<f32>>,
+) -> Option<Box<dyn Orthoptimizer<S>>> {
+    let any: Box<dyn std::any::Any> = Box::new(opt);
+    any.downcast::<Box<dyn Orthoptimizer<S>>>().ok().map(|b| *b)
 }
 
 #[cfg(test)]
@@ -175,7 +273,20 @@ mod tests {
             let mut opt = spec.build(None, (1, 4, 8)).unwrap();
             let mut x = stiefel::random_point(4, 8, &mut rng);
             let g = crate::linalg::MatF::randn(4, 8, &mut rng);
-            opt.step(0, &mut x, &g);
+            opt.step(0, &mut x, &g).unwrap();
+            assert!(x.all_finite(), "{}", m.name());
+        }
+    }
+
+    #[test]
+    fn builds_generic_f64() {
+        let mut rng = Rng::seed_from_u64(1);
+        for &m in Method::all() {
+            let spec = OptimizerSpec::new(m, 0.05);
+            let mut opt = spec.build::<f64>(None, (1, 4, 8)).unwrap();
+            let mut x = stiefel::random_point_t::<f64>(4, 8, &mut rng);
+            let g = crate::linalg::MatD::randn(4, 8, &mut rng);
+            opt.step(0, &mut x, &g).unwrap();
             assert!(x.all_finite(), "{}", m.name());
         }
     }
@@ -183,7 +294,7 @@ mod tests {
     #[test]
     fn xla_engine_requires_registry() {
         let spec = OptimizerSpec::new(Method::Pogo, 0.1).with_engine(Engine::Xla);
-        assert!(spec.build(None, (1, 4, 8)).is_err());
+        assert!(spec.build::<f32>(None, (1, 4, 8)).is_err());
     }
 
     #[test]
@@ -191,6 +302,25 @@ mod tests {
         let spec = OptimizerSpec::new(Method::Rgd, 0.1).with_engine(Engine::Xla);
         // Even with a registry it must refuse (host retraction by design) —
         // error text differs depending on registry availability; both Err.
-        assert!(spec.build(None, (1, 4, 8)).is_err());
+        assert!(spec.build::<f32>(None, (1, 4, 8)).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_defaults() {
+        let spec = OptimizerSpec::new(Method::Pogo, 0.1);
+        let text = spec.to_json().to_string();
+        let back = OptimizerSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(spec, back);
+        assert_eq!(back.to_json().to_string(), text, "byte-identical reserialization");
+    }
+
+    #[test]
+    fn minimal_spec_parses_with_defaults() {
+        let j = Json::parse(r#"{"method": "rsdm", "lr": 0.5}"#).unwrap();
+        let spec = OptimizerSpec::from_json(&j).unwrap();
+        assert_eq!(spec.method, Method::Rsdm);
+        assert_eq!(spec.submanifold_dim, 32);
+        assert_eq!(spec.engine, Engine::Rust);
+        assert!(OptimizerSpec::from_json(&Json::parse(r#"{"lr": 1}"#).unwrap()).is_err());
     }
 }

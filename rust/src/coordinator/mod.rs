@@ -2,9 +2,13 @@
 //! orthogonality-constrained matrices practical.
 //!
 //! - [`param_store`] — named parameters, shape-grouped for batched dispatch;
-//! - [`engine`] — optimizer specs and Rust-vs-XLA engine construction;
-//! - [`trainer`] — the step loop (grads → grouped constrained updates →
-//!   free-param Adam → schedules → telemetry);
+//! - [`engine`] — serializable optimizer specs ([`OptimizerSpec`]) and
+//!   Rust-vs-XLA engine dispatch (construction itself lives in the method
+//!   registry, `crate::optim::registry`);
+//! - [`session`] — [`OptimSession`], the per-shape-group steppers behind
+//!   one handle (the extract → batched-step → write-back loop);
+//! - [`trainer`] — the step loop (grads → session apply → free-param Adam
+//!   → schedules → telemetry);
 //! - [`scheduler`] — plateau-halving / step / cosine lr + early stopping;
 //! - [`metrics`] — wall-clock series, CSV/JSONL sinks, grid interpolation.
 
@@ -14,10 +18,12 @@ pub mod metrics;
 pub mod param_store;
 pub mod report;
 pub mod scheduler;
+pub mod session;
 pub mod trainer;
 
 pub use engine::OptimizerSpec;
 pub use metrics::MetricLog;
 pub use param_store::{Constraint, Group, Param, ParamStore};
 pub use scheduler::{EarlyStop, LrSchedule, Scheduler};
+pub use session::OptimSession;
 pub use trainer::{GradSource, Trainer, TrainerConfig};

@@ -1,0 +1,197 @@
+//! OptimSession: the per-shape-group stepper set behind one handle.
+//!
+//! A session owns one [`Orthoptimizer`] per constrained shape group of a
+//! [`ParamStore`] and runs the whole extract → batched-step → write-back
+//! loop in [`OptimSession::apply`]. The [`Trainer`](super::Trainer) is a
+//! thin client of this type, and experiment drivers that don't need the
+//! Trainer's schedules/telemetry (scale sweeps, custom loops) can drive a
+//! session directly instead of re-implementing the group loop.
+
+use super::engine::OptimizerSpec;
+use super::param_store::{Group, ParamStore};
+use crate::linalg::MatF;
+use crate::optim::Orthoptimizer;
+use crate::runtime::Registry;
+use anyhow::{ensure, Context, Result};
+
+/// Per-shape-group steppers for one run, built from a single
+/// [`OptimizerSpec`] (the crate's one construction path).
+pub struct OptimSession {
+    label: String,
+    groups: Vec<Group>,
+    steppers: Vec<Box<dyn Orthoptimizer<f32>>>,
+}
+
+impl OptimSession {
+    /// Build one stepper per constrained shape group of `store`.
+    ///
+    /// `registry` is required when `spec.engine == Engine::Xla`.
+    pub fn new(
+        spec: &OptimizerSpec,
+        store: &ParamStore,
+        registry: Option<&Registry>,
+    ) -> Result<OptimSession> {
+        let groups = store.stiefel_groups();
+        let mut steppers = Vec::with_capacity(groups.len());
+        for g in &groups {
+            let (p, n) = g.shape;
+            let stepper = spec
+                .build::<f32>(registry, (g.indices.len(), p, n))
+                .with_context(|| {
+                    format!("building {} for group ({p}, {n})×{}", spec.label(), g.indices.len())
+                })?;
+            steppers.push(stepper);
+        }
+        Ok(OptimSession { label: spec.label(), groups, steppers })
+    }
+
+    /// Assemble a session from pre-built steppers (custom engines, tests).
+    /// `steppers[i]` updates `groups[i]`.
+    pub fn from_parts(
+        label: impl Into<String>,
+        groups: Vec<Group>,
+        steppers: Vec<Box<dyn Orthoptimizer<f32>>>,
+    ) -> Result<OptimSession> {
+        ensure!(
+            groups.len() == steppers.len(),
+            "{} groups vs {} steppers",
+            groups.len(),
+            steppers.len()
+        );
+        Ok(OptimSession { label: label.into(), groups, steppers })
+    }
+
+    /// Display label of the underlying spec (method + engine).
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    pub fn groups(&self) -> &[Group] {
+        &self.groups
+    }
+
+    pub fn steppers(&self) -> &[Box<dyn Orthoptimizer<f32>>] {
+        &self.steppers
+    }
+
+    /// Set the constrained-optimizer learning rate (all groups).
+    pub fn set_lr(&mut self, lr: f64) {
+        for s in &mut self.steppers {
+            s.set_lr(lr);
+        }
+    }
+
+    pub fn lr(&self) -> f64 {
+        self.steppers.first().map(|s| s.lr()).unwrap_or(0.0)
+    }
+
+    /// One constrained update over every group: extract the group's
+    /// matrices, dispatch one batched step, write the results back.
+    /// `grads` is indexed by store parameter index (free-parameter slots
+    /// are ignored). Errors from any group's engine propagate.
+    pub fn apply(&mut self, store: &mut ParamStore, grads: &[MatF]) -> Result<()> {
+        for (g, stepper) in self.groups.iter().zip(&mut self.steppers) {
+            let mut xs = store.extract_group(g);
+            let gs: Vec<MatF> = g.indices.iter().map(|&i| grads[i].clone()).collect();
+            stepper.step_group(&mut xs, &gs).with_context(|| {
+                format!(
+                    "stepping group ({}, {}){}",
+                    g.shape.0,
+                    g.shape.1,
+                    if g.key.is_empty() { String::new() } else { format!(" '{}'", g.key) }
+                )
+            })?;
+            store.write_group(g, xs);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::manifold::stiefel;
+    use crate::optim::Method;
+    use crate::rng::Rng;
+    use anyhow::anyhow;
+
+    #[test]
+    fn applies_batched_updates_per_group() {
+        let mut rng = Rng::seed_from_u64(0);
+        let mut store = ParamStore::new();
+        store.add_stiefel_group("a", 3, 4, 8, &mut rng);
+        store.add_stiefel_group("b", 2, 3, 6, &mut rng);
+        store.add_free("head", MatF::zeros(2, 2));
+        let spec = OptimizerSpec::new(Method::Pogo, 0.05);
+        let mut session = OptimSession::new(&spec, &store, None).unwrap();
+        assert_eq!(session.groups().len(), 2);
+        let grads: Vec<MatF> = store
+            .params()
+            .iter()
+            .map(|p| MatF::randn(p.mat.rows(), p.mat.cols(), &mut rng))
+            .collect();
+        let before: Vec<MatF> = (0..store.len()).map(|i| store.mat(i).clone()).collect();
+        session.apply(&mut store, &grads).unwrap();
+        // Constrained params moved and stayed feasible; free param untouched.
+        for i in 0..5 {
+            assert!(store.mat(i).sub(&before[i]).norm() > 0.0, "param {i} unchanged");
+            assert!(stiefel::distance(store.mat(i)) < 1e-3);
+        }
+        assert_eq!(store.mat(5), &before[5]);
+    }
+
+    #[test]
+    fn lr_fans_out_to_all_steppers() {
+        let mut rng = Rng::seed_from_u64(1);
+        let mut store = ParamStore::new();
+        store.add_stiefel_group("a", 2, 3, 6, &mut rng);
+        store.add_stiefel_group("b", 2, 4, 8, &mut rng);
+        let spec = OptimizerSpec::new(Method::Landing, 0.2);
+        let mut session = OptimSession::new(&spec, &store, None).unwrap();
+        session.set_lr(0.01);
+        assert_eq!(session.lr(), 0.01);
+        for s in session.steppers() {
+            assert_eq!(s.lr(), 0.01);
+        }
+    }
+
+    /// A stepper whose engine always fails — exercises error propagation
+    /// through the group loop without needing a broken XLA artifact.
+    struct FailingStepper;
+
+    impl Orthoptimizer<f32> for FailingStepper {
+        fn step(&mut self, _idx: usize, _x: &mut Mat<f32>, _g: &Mat<f32>) -> Result<()> {
+            Err(anyhow!("engine exploded"))
+        }
+        fn name(&self) -> &str {
+            "failing"
+        }
+        fn lr(&self) -> f64 {
+            0.0
+        }
+        fn set_lr(&mut self, _lr: f64) {}
+    }
+
+    #[test]
+    fn engine_errors_propagate_with_group_context() {
+        let mut rng = Rng::seed_from_u64(2);
+        let mut store = ParamStore::new();
+        store.add_stiefel_group("g", 2, 4, 8, &mut rng);
+        let groups = store.stiefel_groups();
+        let mut session =
+            OptimSession::from_parts("failing", groups, vec![Box::new(FailingStepper)])
+                .unwrap();
+        let grads: Vec<MatF> = (0..store.len()).map(|_| MatF::zeros(4, 8)).collect();
+        let err = session.apply(&mut store, &grads).unwrap_err();
+        let text = format!("{err:#}");
+        assert!(text.contains("engine exploded"), "{text}");
+        assert!(text.contains("stepping group"), "{text}");
+    }
+
+    #[test]
+    fn from_parts_checks_arity() {
+        assert!(OptimSession::from_parts("x", Vec::new(), vec![Box::new(FailingStepper)])
+            .is_err());
+    }
+}

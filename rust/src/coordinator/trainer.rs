@@ -10,6 +10,7 @@ use super::engine::OptimizerSpec;
 use super::metrics::MetricLog;
 use super::param_store::{Group, ParamStore};
 use super::scheduler::{EarlyStop, Scheduler};
+use super::session::OptimSession;
 use crate::linalg::MatF;
 use crate::optim::adam::{Adam, AdamConfig};
 use crate::optim::Orthoptimizer;
@@ -64,45 +65,54 @@ pub struct Trainer {
     pub store: ParamStore,
     pub cfg: TrainerConfig,
     pub log: MetricLog,
-    groups: Vec<Group>,
-    steppers: Vec<Box<dyn Orthoptimizer<f32>>>,
+    session: OptimSession,
     free_opt: Adam<f32>,
     free_indices: Vec<usize>,
     step_idx: usize,
 }
 
 impl Trainer {
-    /// Build a trainer: one stepper per shape group per the spec.
+    /// Build a trainer: an [`OptimSession`] (one stepper per shape group)
+    /// per the spec, plus Adam for the free parameters.
     pub fn new(
         store: ParamStore,
         spec: OptimizerSpec,
         registry: Option<&Registry>,
         cfg: TrainerConfig,
     ) -> Result<Trainer> {
-        let groups = store.stiefel_groups();
-        let mut steppers = Vec::with_capacity(groups.len());
-        for g in &groups {
-            let (p, n) = g.shape;
-            steppers.push(spec.build(registry, (g.indices.len(), p, n))?);
-        }
+        let session = OptimSession::new(&spec, &store, registry)?;
+        Ok(Self::with_session(store, session, cfg))
+    }
+
+    /// Build a trainer around a pre-assembled session (custom engines,
+    /// tests).
+    pub fn with_session(store: ParamStore, session: OptimSession, cfg: TrainerConfig) -> Trainer {
         let free_indices = store.free_indices();
         let free_opt =
             Adam::new(AdamConfig { lr: cfg.free_lr, ..Default::default() }, store.len());
-        let label = spec.label();
-        Ok(Trainer {
+        let label = session.label().to_string();
+        Trainer {
             store,
             cfg,
             log: MetricLog::new(label),
-            groups,
-            steppers,
+            session,
             free_opt,
             free_indices,
             step_idx: 0,
-        })
+        }
     }
 
     pub fn groups(&self) -> &[Group] {
-        &self.groups
+        self.session.groups()
+    }
+
+    /// The constrained-update session (per-shape-group steppers).
+    pub fn session(&self) -> &OptimSession {
+        &self.session
+    }
+
+    pub fn session_mut(&mut self) -> &mut OptimSession {
+        &mut self.session
     }
 
     pub fn step_idx(&self) -> usize {
@@ -111,34 +121,27 @@ impl Trainer {
 
     /// Set the constrained-optimizer learning rate (all groups).
     pub fn set_lr(&mut self, lr: f64) {
-        for s in &mut self.steppers {
-            s.set_lr(lr);
-        }
+        self.session.set_lr(lr);
     }
 
     pub fn lr(&self) -> f64 {
-        self.steppers.first().map(|s| s.lr()).unwrap_or(0.0)
+        self.session.lr()
     }
 
     /// One optimization step given gradients from `src`.
-    /// Returns the loss.
+    /// Returns the loss. Engine errors propagate instead of panicking.
     pub fn step(&mut self, src: &mut dyn GradSource) -> Result<f64> {
         let (loss, grads) = src.eval(&self.store)?;
         debug_assert_eq!(grads.len(), self.store.len(), "one gradient per parameter");
 
-        // Constrained groups: batched dispatch.
-        for (g, stepper) in self.groups.iter().zip(&mut self.steppers) {
-            let mut xs = self.store.extract_group(g);
-            let gs: Vec<MatF> = g.indices.iter().map(|&i| grads[i].clone()).collect();
-            stepper.step_group(&mut xs, &gs);
-            self.store.write_group(g, xs);
-        }
+        // Constrained groups: batched dispatch via the session.
+        self.session.apply(&mut self.store, &grads)?;
         // Free parameters: Adam.
         for &i in &self.free_indices.clone() {
             let mat = &mut self.store.get_mut(i).mat;
             // Split borrow: Adam state indexed by param id.
             let mut m = std::mem::replace(mat, MatF::zeros(1, 1));
-            self.free_opt.step(i, &mut m, &grads[i]);
+            self.free_opt.step(i, &mut m, &grads[i])?;
             self.store.get_mut(i).mat = m;
         }
 
@@ -146,9 +149,7 @@ impl Trainer {
         // Schedules observe the loss.
         if let Some(s) = &mut self.cfg.scheduler {
             let lr = s.observe(loss);
-            for st in &mut self.steppers {
-                st.set_lr(lr);
-            }
+            self.session.set_lr(lr);
         }
         Ok(loss)
     }

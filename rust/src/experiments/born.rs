@@ -10,15 +10,11 @@
 //! Protocol per §C.4: plateau-halving lr, early stopping on validation.
 
 use super::common::{self, RunRecord};
-use crate::config::{spec_for, RunConfig};
+use crate::config::{resolve_spec, RunConfig};
 use crate::coordinator::{EarlyStop, LrSchedule, MetricLog, Scheduler};
 use crate::data::mnist_like::MnistLike;
 use crate::linalg::{CMatF, Mat};
 use crate::manifold::stiefel;
-use crate::optim::base::BaseOptKind;
-use crate::optim::pogo::LambdaPolicy;
-use crate::optim::unitary::{LandingC, PogoC, RgdC, SlpgC, UnitaryOptimizer};
-use crate::optim::Method;
 use crate::rng::Rng;
 use crate::runtime::{Arg, Registry};
 use anyhow::Result;
@@ -116,24 +112,10 @@ impl BornGrads {
     }
 }
 
-/// Build the unitary optimizer for a method (complex engine).
-fn build_unitary(method: Method, cfg_id: crate::config::ExperimentId, n: usize)
-    -> Box<dyn UnitaryOptimizer<f32>> {
-    let spec = spec_for(cfg_id, method);
-    match method {
-        Method::Pogo => {
-            Box::new(PogoC::new(spec.lr, LambdaPolicy::Half, BaseOptKind::vadam(), n))
-        }
-        Method::Landing => Box::new(LandingC::new(spec.lr, spec.attraction,
-                                                  BaseOptKind::Sgd, n)),
-        Method::LandingPC => Box::new(LandingC::landing_pc(spec.lr, spec.attraction, n)),
-        Method::Slpg => Box::new(SlpgC::new(spec.lr, n)),
-        Method::Rgd => Box::new(RgdC::new(spec.lr, n)),
-        _ => Box::new(RgdC::new(spec.lr, n)), // Rsdm/Adam not in this lineup
-    }
-}
-
-/// Run the Fig. 8 experiment.
+/// Run the Fig. 8 experiment. Unitary optimizers come from
+/// `OptimizerSpec::build_unitary` — the same single construction path as
+/// the real-Stiefel drivers (methods without a complex engine error out
+/// instead of silently falling back).
 pub fn run(cfg: &RunConfig) -> Result<()> {
     let reg = common::open_registry()?;
     let steps = if cfg.quick { 10 } else { cfg.steps };
@@ -145,7 +127,8 @@ pub fn run(cfg: &RunConfig) -> Result<()> {
             let mut rng = Rng::seed_from_u64(cfg.seed + 31 * rep as u64);
             let mut cores = init_cores(&mut rng);
             let mut grads = BornGrads::new(&reg, cfg.seed + rep as u64)?;
-            let mut opt = build_unitary(method, cfg.experiment, cores.len());
+            let spec = resolve_spec(cfg, method);
+            let mut opt = spec.build_unitary::<f32>(cores.len())?;
             let mut log = MetricLog::new(method.name());
             // §C.4 protocol: halve on a 10-observation plateau, early stop.
             let mut sched = Scheduler::new(
@@ -157,7 +140,7 @@ pub fn run(cfg: &RunConfig) -> Result<()> {
             for s in 0..steps {
                 let (loss, gs) = grads.eval_step(&cores)?;
                 for (i, (c, g)) in cores.iter_mut().zip(&gs).enumerate() {
-                    opt.step(i, c, g);
+                    opt.step(i, c, g)?;
                 }
                 if s % eval_every == 0 || s + 1 == steps {
                     let bpd = grads.eval_bpd(&cores)?;
@@ -181,7 +164,13 @@ pub fn run(cfg: &RunConfig) -> Result<()> {
                 }
             }
             let wall = log.elapsed();
-            let rec = RunRecord { method, label: method.name().to_string(), log, wall_s: wall };
+            let rec = RunRecord {
+                method,
+                label: method.name().to_string(),
+                log,
+                wall_s: wall,
+                spec: Some(spec),
+            };
             common::emit(cfg, &rec, rep)?;
             records.push(rec);
         }
@@ -224,10 +213,17 @@ mod tests {
 
     #[test]
     fn unitary_optimizers_build_for_lineup() {
+        use crate::config::{spec_for, ExperimentId};
+        use crate::optim::Method;
         for m in [Method::Pogo, Method::Landing, Method::LandingPC, Method::Slpg,
                   Method::Rgd] {
-            let opt = build_unitary(m, crate::config::ExperimentId::Fig8Born, 16);
+            let opt =
+                spec_for(ExperimentId::Fig8Born, m).build_unitary::<f32>(16).unwrap();
             assert!(opt.lr() > 0.0);
         }
+        // No silent fallback: methods without a complex engine refuse.
+        assert!(spec_for(ExperimentId::Fig8Born, Method::Rsdm)
+            .build_unitary::<f32>(16)
+            .is_err());
     }
 }

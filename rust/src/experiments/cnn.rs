@@ -12,7 +12,7 @@
 //!   as three batched groups — the paper's many-matrix regime.
 
 use super::common::{self, RunRecord};
-use crate::config::{spec_for, RunConfig};
+use crate::config::{resolve_spec, RunConfig};
 use crate::coordinator::{OptimizerSpec, ParamStore, Trainer, TrainerConfig};
 use crate::data::cifar_like::CifarLike;
 use crate::linalg::MatF;
@@ -206,7 +206,7 @@ pub fn run(cfg: &RunConfig, param: Parameterization) -> Result<()> {
             let constrained = method != Method::Adam;
             let store = build_store(param, constrained, &mut rng);
             let spec: OptimizerSpec =
-                common::with_engine_for(cfg, spec_for(cfg.experiment, method));
+                common::with_engine_for(cfg, resolve_spec(cfg, method));
             let mut grads = CnnGrads::new(&reg, param, cfg.seed + rep as u64)?;
             let mut tr = Trainer::new(
                 store,
@@ -244,7 +244,13 @@ pub fn run(cfg: &RunConfig, param: Parameterization) -> Result<()> {
                 }
             }
             let wall = tr.log.elapsed();
-            let rec = RunRecord { method, label: spec.label(), log: tr.log, wall_s: wall };
+            let rec = RunRecord {
+                method,
+                label: spec.label(),
+                log: tr.log,
+                wall_s: wall,
+                spec: Some(spec),
+            };
             common::emit(cfg, &rec, rep)?;
             records.push(rec);
         }

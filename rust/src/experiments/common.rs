@@ -18,15 +18,20 @@ pub fn engine_for(method: Method) -> Engine {
     }
 }
 
-/// Apply the default engine to a spec (keeps explicit overrides).
+/// Replace a spec's engine with the method's default assignment.
 pub fn with_default_engine(spec: OptimizerSpec) -> OptimizerSpec {
     let e = engine_for(spec.method);
     spec.with_engine(e)
 }
 
-/// Engine selection honouring `--quick` (tiny smoke shapes have no AOT
-/// artifacts, so quick runs use the Rust engine everywhere).
+/// Engine selection for a driver: an explicit `--spec` replay pins its
+/// own engine; paper presets get the default assignment, except under
+/// `--quick` (tiny smoke shapes have no AOT artifacts, so quick runs
+/// use the Rust engine everywhere).
 pub fn with_engine_for(cfg: &RunConfig, spec: OptimizerSpec) -> OptimizerSpec {
+    if cfg.spec.is_some_and(|s| s.method == spec.method) {
+        return spec;
+    }
     if cfg.quick {
         spec.with_engine(Engine::Rust)
     } else {
@@ -47,6 +52,9 @@ pub struct RunRecord {
     pub label: String,
     pub log: MetricLog,
     pub wall_s: f64,
+    /// The exact spec the run used; emitted as a replayable
+    /// `*.spec.json` manifest next to the CSV (`pogo run --spec` input).
+    pub spec: Option<OptimizerSpec>,
 }
 
 /// CSV path for a run: `<out>/<experiment>_<label>_rep<k>.csv`.
@@ -58,10 +66,14 @@ pub fn csv_path(cfg: &RunConfig, label: &str, rep: usize) -> PathBuf {
     cfg.out_dir.join(format!("{}_{safe}_rep{rep}.csv", cfg.experiment.name()))
 }
 
-/// Write a run's CSV and log the location.
+/// Write a run's CSV (plus its replayable spec manifest) and log the
+/// location.
 pub fn emit(cfg: &RunConfig, rec: &RunRecord, rep: usize) -> Result<()> {
     let path = csv_path(cfg, &rec.label, rep);
     rec.log.write_csv(&path)?;
+    if let Some(spec) = &rec.spec {
+        spec.write_json_file(&path.with_extension("spec.json"))?;
+    }
     log::debug!("wrote {}", path.display());
     Ok(())
 }
@@ -108,10 +120,50 @@ mod tests {
     }
 
     #[test]
+    fn spec_override_pins_its_engine() {
+        let mut cfg = RunConfig::new(ExperimentId::Fig4Pca);
+        // Preset path: matmul-only methods get the XLA default.
+        let preset = crate::config::resolve_spec(&cfg, Method::Pogo);
+        assert_eq!(with_engine_for(&cfg, preset).engine, Engine::Xla);
+        // Replay path: an explicit --spec keeps its requested engine.
+        cfg.spec = Some(OptimizerSpec::new(Method::Pogo, 0.1)); // engine Rust
+        let replayed = crate::config::resolve_spec(&cfg, Method::Pogo);
+        assert_eq!(with_engine_for(&cfg, replayed).engine, Engine::Rust);
+        // Other methods in the lineup still get defaults.
+        let other = crate::config::resolve_spec(&cfg, Method::Rgd);
+        assert_eq!(with_engine_for(&cfg, other).engine, Engine::Rust);
+        let slpg = crate::config::resolve_spec(&cfg, Method::Slpg);
+        assert_eq!(with_engine_for(&cfg, slpg).engine, Engine::Xla);
+    }
+
+    #[test]
     fn csv_paths_are_sanitized() {
         let cfg = RunConfig::new(ExperimentId::Fig4Pca);
         let p = csv_path(&cfg, "POGO(vadam)[xla]", 2);
         let s = p.file_name().unwrap().to_str().unwrap();
         assert_eq!(s, "fig4-pca_pogo_vadam__xla__rep2.csv");
+    }
+
+    #[test]
+    fn emit_writes_replayable_spec_manifest() {
+        let mut cfg = RunConfig::new(ExperimentId::Fig4Pca);
+        cfg.out_dir =
+            std::env::temp_dir().join(format!("pogo_emit_test_{}", std::process::id()));
+        let mut log = MetricLog::new("t");
+        log.record(0, &[("loss", 1.0)]);
+        let spec = OptimizerSpec::new(Method::Pogo, 0.1)
+            .with_base(crate::optim::base::BaseOptKind::vadam());
+        let rec = RunRecord {
+            method: Method::Pogo,
+            label: "POGO".to_string(),
+            log,
+            wall_s: 0.0,
+            spec: Some(spec),
+        };
+        emit(&cfg, &rec, 0).unwrap();
+        let manifest = csv_path(&cfg, &rec.label, 0).with_extension("spec.json");
+        let back = OptimizerSpec::from_json_file(&manifest).unwrap();
+        assert_eq!(back, spec);
+        std::fs::remove_dir_all(&cfg.out_dir).ok();
     }
 }

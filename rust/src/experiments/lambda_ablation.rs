@@ -11,12 +11,12 @@
 use super::common::{self, RunRecord};
 use super::procrustes::{self, ProcrustesProblem};
 use crate::config::RunConfig;
-use crate::coordinator::MetricLog;
+use crate::coordinator::{MetricLog, OptimizerSpec};
 use crate::linalg::MatF;
 use crate::manifold::stiefel;
 use crate::optim::base::BaseOptKind;
-use crate::optim::pogo::{LambdaPolicy, Pogo, PogoConfig};
-use crate::optim::{Method, Orthoptimizer};
+use crate::optim::pogo::LambdaPolicy;
+use crate::optim::Method;
 use crate::rng::Rng;
 use anyhow::Result;
 
@@ -26,25 +26,29 @@ use anyhow::Result;
 /// first epoch" — is observable.
 pub const LR_GRID: [f64; 5] = [1e-5, 1e-4, 1e-3, 5e-3, 2e-2];
 
+/// The spec for one ablation cell (also emitted as its replay manifest).
+fn cell_spec(lr: f64, policy: LambdaPolicy, base: BaseOptKind) -> OptimizerSpec {
+    OptimizerSpec::new(Method::Pogo, lr).with_lambda(policy).with_base(base)
+}
+
 fn run_one(
     problem: &ProcrustesProblem,
     x0: &MatF,
-    lr: f64,
-    policy: LambdaPolicy,
-    base: BaseOptKind,
+    spec: &OptimizerSpec,
     steps: usize,
-) -> MetricLog {
-    let pol = match policy {
+) -> Result<MetricLog> {
+    let pol = match spec.lambda {
         LambdaPolicy::Half => "half",
         LambdaPolicy::FindRoot => "root",
     };
-    let label = match base {
+    let lr = spec.lr;
+    let label = match spec.base {
         BaseOptKind::Sgd => format!("POGO-{pol}(lr={lr:.0e})"),
         _ => format!("POGO-vadam-{pol}(lr={lr:.0e})"),
     };
     let mut log = MetricLog::new(label);
     let mut x = x0.clone();
-    let mut opt = Pogo::<f32>::new(PogoConfig { lr, lambda: policy, base }, 1);
+    let mut opt = spec.build::<f32>(None, (1, x0.rows(), x0.cols()))?;
     for s in 0..steps {
         let (loss, grad) = procrustes::lossgrad_rust(&x, problem);
         if !loss.is_finite() || !x.all_finite() {
@@ -54,17 +58,17 @@ fn run_one(
                             ("diverged", 1.0)]);
             break;
         }
-        opt.step(0, &mut x, &grad);
+        opt.step(0, &mut x, &grad)?;
         if s % 5 == 0 || s + 1 == steps {
             let d = stiefel::distance(&x);
             log.record(s, &[
                 ("gap", procrustes::gap(problem, loss).max(1e-12)),
                 ("distance", d.max(1e-14)),
-                ("lambda", opt.last_lambda),
+                ("lambda", opt.last_lambda().unwrap_or(0.5)),
             ]);
         }
     }
-    log
+    Ok(log)
 }
 
 /// Run the λ ablation.
@@ -80,7 +84,8 @@ pub fn run(cfg: &RunConfig) -> Result<()> {
 
         for &lr in &LR_GRID {
             for policy in [LambdaPolicy::FindRoot, LambdaPolicy::Half] {
-                let log = run_one(&problem, &x0, lr, policy, BaseOptKind::Sgd, steps);
+                let spec = cell_spec(lr, policy, BaseOptKind::Sgd);
+                let log = run_one(&problem, &x0, &spec, steps)?;
                 let wall = log.elapsed();
                 let diverged = log.last("diverged").is_some();
                 log::info!(
@@ -94,20 +99,22 @@ pub fn run(cfg: &RunConfig) -> Result<()> {
                     label: log.label.clone(),
                     log,
                     wall_s: wall,
+                    spec: Some(spec),
                 };
                 common::emit(cfg, &rec, rep)?;
                 records.push(rec);
             }
         }
         // VAdam reference (the §C.6 plots' extra line).
-        let log = run_one(&problem, &x0, 0.5, LambdaPolicy::Half,
-                          BaseOptKind::vadam(), steps);
+        let spec = cell_spec(0.5, LambdaPolicy::Half, BaseOptKind::vadam());
+        let log = run_one(&problem, &x0, &spec, steps)?;
         let wall = log.elapsed();
         let rec = RunRecord {
             method: Method::Pogo,
             label: log.label.clone(),
             log,
             wall_s: wall,
+            spec: Some(spec),
         };
         common::emit(cfg, &rec, rep)?;
         records.push(rec);
@@ -132,10 +139,16 @@ mod tests {
         let mut rng = Rng::seed_from_u64(0);
         let problem = procrustes::build_problem(16, &mut rng);
         let x0 = stiefel::random_point(16, 16, &mut rng);
-        let half = run_one(&problem, &x0, 1e-5, LambdaPolicy::Half,
-                           BaseOptKind::Sgd, 60);
-        let root = run_one(&problem, &x0, 1e-5, LambdaPolicy::FindRoot,
-                           BaseOptKind::Sgd, 60);
+        let half =
+            run_one(&problem, &x0, &cell_spec(1e-5, LambdaPolicy::Half, BaseOptKind::Sgd), 60)
+                .unwrap();
+        let root = run_one(
+            &problem,
+            &x0,
+            &cell_spec(1e-5, LambdaPolicy::FindRoot, BaseOptKind::Sgd),
+            60,
+        )
+        .unwrap();
         let gh = half.last("gap").unwrap();
         let gr = root.last("gap").unwrap();
         // Same descent to within a few percent, and both feasible.
@@ -152,9 +165,16 @@ mod tests {
         let problem = procrustes::build_problem(16, &mut rng);
         let x0 = stiefel::random_point(16, 16, &mut rng);
         let big = 0.05; // far beyond ξ<1 for this problem's gradients
-        let half = run_one(&problem, &x0, big, LambdaPolicy::Half, BaseOptKind::Sgd, 80);
-        let root = run_one(&problem, &x0, big, LambdaPolicy::FindRoot,
-                           BaseOptKind::Sgd, 80);
+        let half =
+            run_one(&problem, &x0, &cell_spec(big, LambdaPolicy::Half, BaseOptKind::Sgd), 80)
+                .unwrap();
+        let root = run_one(
+            &problem,
+            &x0,
+            &cell_spec(big, LambdaPolicy::FindRoot, BaseOptKind::Sgd),
+            80,
+        )
+        .unwrap();
         let dh = half.last("distance").unwrap_or(f64::INFINITY);
         let dr = root.last("distance").unwrap_or(f64::INFINITY);
         assert!(

@@ -7,7 +7,7 @@
 //! manifold distance.
 
 use super::common::{self, RunRecord};
-use crate::config::{spec_for, RunConfig};
+use crate::config::{resolve_spec, RunConfig};
 use crate::coordinator::{ParamStore, Trainer, TrainerConfig};
 use crate::data::cifar_like::CifarLike;
 use crate::linalg::MatF;
@@ -120,7 +120,7 @@ pub fn run(cfg: &RunConfig) -> Result<()> {
             let mut rng = Rng::seed_from_u64(cfg.seed + 13 * rep as u64);
             let constrained = method != Method::Adam;
             let store = build_store(constrained, &mut rng);
-            let spec = common::with_engine_for(cfg, spec_for(cfg.experiment, method));
+            let spec = common::with_engine_for(cfg, resolve_spec(cfg, method));
             let mut grads = VitGrads::new(&reg, cfg.seed + rep as u64)?;
             let mut tr = Trainer::new(
                 store,
@@ -156,7 +156,13 @@ pub fn run(cfg: &RunConfig) -> Result<()> {
                 }
             }
             let wall = tr.log.elapsed();
-            let rec = RunRecord { method, label: spec.label(), log: tr.log, wall_s: wall };
+            let rec = RunRecord {
+                method,
+                label: spec.label(),
+                log: tr.log,
+                wall_s: wall,
+                spec: Some(spec),
+            };
             common::emit(cfg, &rec, rep)?;
             records.push(rec);
         }

@@ -9,7 +9,7 @@
 //! `(f − f*) / |f*|`. Early stop at gap ≤ 1e-6 as in the paper.
 
 use super::common::{self, RunRecord};
-use crate::config::{spec_for, RunConfig};
+use crate::config::{resolve_spec, RunConfig};
 use crate::coordinator::{ParamStore, Trainer, TrainerConfig};
 use crate::linalg::{matmul, with_spectrum, Mat, MatD, MatF};
 use crate::manifold::stiefel;
@@ -83,7 +83,7 @@ pub fn run(cfg: &RunConfig) -> Result<()> {
         let x0 = stiefel::random_point(p, n, &mut rng);
 
         for &method in &cfg.methods {
-            let spec = common::with_engine_for(cfg, spec_for(cfg.experiment, method));
+            let spec = common::with_engine_for(cfg, resolve_spec(cfg, method));
             let mut store = ParamStore::new();
             store.add_stiefel("x", x0.clone());
             let mut tr = Trainer::new(
@@ -152,7 +152,13 @@ pub fn run(cfg: &RunConfig) -> Result<()> {
                 crate::util::fmt_duration(wall),
                 tr.step_idx()
             );
-            let rec = RunRecord { method, label: spec.label(), log: tr.log, wall_s: wall };
+            let rec = RunRecord {
+                method,
+                label: spec.label(),
+                log: tr.log,
+                wall_s: wall,
+                spec: Some(spec),
+            };
             common::emit(cfg, &rec, rep)?;
             records.push(rec);
         }
@@ -222,7 +228,7 @@ mod tests {
         let mut g_final = f64::INFINITY;
         for _ in 0..400 {
             let (loss, grad) = lossgrad_rust(&x, &prob.aat);
-            opt.step(0, &mut x, &grad);
+            opt.step(0, &mut x, &grad).unwrap();
             g_final = gap(&prob, loss);
         }
         assert!(g_final < 0.05, "gap {g_final}");

@@ -13,16 +13,11 @@
 
 use super::common::{self, RunRecord};
 use super::pca::{self, PcaProblem};
-use crate::config::{spec_for, RunConfig};
-use crate::coordinator::MetricLog;
+use crate::config::{resolve_spec, RunConfig};
+use crate::coordinator::{MetricLog, OptimizerSpec};
 use crate::linalg::{Mat, Scalar};
 use crate::manifold::stiefel;
-use crate::optim::base::BaseOptKind;
-use crate::optim::landing::{Landing, LandingConfig};
-use crate::optim::pogo::{Pogo, PogoConfig};
-use crate::optim::rgd::{Rgd, RgdConfig};
-use crate::optim::rsdm::{Rsdm, RsdmConfig};
-use crate::optim::{Method, Orthoptimizer};
+use crate::optim::Engine;
 use crate::rng::Rng;
 use anyhow::Result;
 
@@ -44,50 +39,20 @@ impl Precision {
     }
 }
 
-/// Build the method's optimizer at scalar type S.
-fn build_opt<S: Scalar>(method: Method, id: crate::config::ExperimentId)
-    -> Box<dyn Orthoptimizer<S>> {
-    let spec = spec_for(id, method);
-    match method {
-        Method::Pogo => Box::new(Pogo::<S>::new(
-            PogoConfig { lr: spec.lr, base: spec.base, ..Default::default() },
-            1,
-        )),
-        Method::Landing => Box::new(Landing::<S>::new(
-            LandingConfig { lr: spec.lr, base: spec.base, ..Default::default() },
-            1,
-        )),
-        Method::Rgd => Box::new(Rgd::<S>::new(
-            RgdConfig { lr: spec.lr, base: BaseOptKind::Sgd },
-            1,
-        )),
-        Method::Rsdm => Box::new(Rsdm::<S>::new(
-            RsdmConfig {
-                lr: spec.lr,
-                submanifold_dim: spec.submanifold_dim,
-                base: BaseOptKind::Sgd,
-                seed: spec.seed,
-                ..Default::default()
-            },
-            1,
-        )),
-        _ => unreachable!("precision ablation lineup"),
-    }
-}
-
-/// One (method, precision) run on a shared problem instance.
+/// One (spec, precision) run on a shared problem instance. The optimizer
+/// is built by the generic `OptimizerSpec::build::<S>` — the same single
+/// construction path every other driver uses, now at arbitrary precision.
 fn run_one<S: Scalar>(
-    method: Method,
-    id: crate::config::ExperimentId,
+    spec: &OptimizerSpec,
     problem: &PcaProblem,
     x0: &Mat<S>,
     steps: usize,
     truncate_bf16: bool,
-) -> MetricLog {
+) -> Result<MetricLog> {
     let aat: Mat<S> = problem.aat.cast();
     let mut x = x0.clone();
-    let mut opt = build_opt::<S>(method, id);
-    let label = format!("{}/{}", method.name(), if truncate_bf16 { "bf16" }
+    let mut opt = spec.build::<S>(None, (1, x0.rows(), x0.cols()))?;
+    let label = format!("{}/{}", spec.method.name(), if truncate_bf16 { "bf16" }
                         else if S::EPS.to_f64() < 1e-10 { "f64" } else { "f32" });
     let mut log = MetricLog::new(label);
     for s in 0..steps {
@@ -97,7 +62,7 @@ fn run_one<S: Scalar>(
             (x.clone(), aat.clone())
         };
         let (loss, grad) = pca::lossgrad_rust(&x_in, &aat_in);
-        opt.step(0, &mut x, &grad);
+        opt.step(0, &mut x, &grad)?;
         if truncate_bf16 {
             x = x.truncate_bf16();
         }
@@ -108,7 +73,7 @@ fn run_one<S: Scalar>(
                             ("loss", loss)]);
         }
     }
-    log
+    Ok(log)
 }
 
 /// Run the precision ablation.
@@ -124,16 +89,19 @@ pub fn run(cfg: &RunConfig) -> Result<()> {
         let x0_f: Mat<f32> = x0_d.cast();
 
         for &method in &cfg.methods {
+            // Precision is the variable under test, so the engine is
+            // pinned to Rust regardless of the preset/override.
+            let spec = resolve_spec(cfg, method).with_engine(Engine::Rust);
             for &prec in &[Precision::F32, Precision::F64, Precision::Bf16] {
                 let log = match prec {
                     Precision::F32 => {
-                        run_one::<f32>(method, cfg.experiment, &problem, &x0_f, steps, false)
+                        run_one::<f32>(&spec, &problem, &x0_f, steps, false)?
                     }
                     Precision::F64 => {
-                        run_one::<f64>(method, cfg.experiment, &problem, &x0_d, steps, false)
+                        run_one::<f64>(&spec, &problem, &x0_d, steps, false)?
                     }
                     Precision::Bf16 => {
-                        run_one::<f32>(method, cfg.experiment, &problem, &x0_f, steps, true)
+                        run_one::<f32>(&spec, &problem, &x0_f, steps, true)?
                     }
                 };
                 let wall = log.elapsed();
@@ -144,8 +112,13 @@ pub fn run(cfg: &RunConfig) -> Result<()> {
                     log.last("gap").unwrap_or(f64::NAN),
                     crate::util::fmt_duration(wall)
                 );
-                let rec =
-                    RunRecord { method, label: log.label.clone(), log, wall_s: wall };
+                let rec = RunRecord {
+                    method,
+                    label: log.label.clone(),
+                    log,
+                    wall_s: wall,
+                    spec: Some(spec),
+                };
                 common::emit(cfg, &rec, rep)?;
                 records.push(rec);
             }
@@ -164,6 +137,9 @@ pub fn run(cfg: &RunConfig) -> Result<()> {
 mod tests {
     use super::*;
 
+    use crate::config::{spec_for, ExperimentId};
+    use crate::optim::Method;
+
     #[test]
     fn rsdm_precision_ordering() {
         // THE §C.5 claim: RSDM's drift is numerical — f64 ≪ f32 ≤ bf16.
@@ -171,15 +147,18 @@ mod tests {
         let problem = pca::build_problem(20, 30, &mut rng);
         let x0_d = stiefel::random_point_t::<f64>(20, 30, &mut rng);
         let x0_f: Mat<f32> = x0_d.cast();
-        let id = crate::config::ExperimentId::FigC1Precision;
+        let spec = spec_for(ExperimentId::FigC1Precision, Method::Rsdm);
         let steps = 300;
-        let d32 = run_one::<f32>(Method::Rsdm, id, &problem, &x0_f, steps, false)
+        let d32 = run_one::<f32>(&spec, &problem, &x0_f, steps, false)
+            .unwrap()
             .last("distance")
             .unwrap();
-        let d64 = run_one::<f64>(Method::Rsdm, id, &problem, &x0_d, steps, false)
+        let d64 = run_one::<f64>(&spec, &problem, &x0_d, steps, false)
+            .unwrap()
             .last("distance")
             .unwrap();
-        let dbf = run_one::<f32>(Method::Rsdm, id, &problem, &x0_f, steps, true)
+        let dbf = run_one::<f32>(&spec, &problem, &x0_f, steps, true)
+            .unwrap()
             .last("distance")
             .unwrap();
         assert!(d64 < d32, "f64 {d64} should beat f32 {d32}");
@@ -196,8 +175,9 @@ mod tests {
         let problem = pca::build_problem(16, 24, &mut rng);
         let x0_d = stiefel::random_point_t::<f64>(16, 24, &mut rng);
         let x0_f: Mat<f32> = x0_d.cast();
-        let id = crate::config::ExperimentId::FigC1Precision;
-        let dbf = run_one::<f32>(Method::Pogo, id, &problem, &x0_f, 200, true)
+        let spec = spec_for(ExperimentId::FigC1Precision, Method::Pogo);
+        let dbf = run_one::<f32>(&spec, &problem, &x0_f, 200, true)
+            .unwrap()
             .last("distance")
             .unwrap();
         assert!(dbf < 0.1, "POGO bf16 drift {dbf}");

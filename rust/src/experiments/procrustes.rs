@@ -6,7 +6,7 @@
 //! exact optimality-gap reference.
 
 use super::common::{self, RunRecord};
-use crate::config::{spec_for, RunConfig};
+use crate::config::{resolve_spec, RunConfig};
 use crate::coordinator::{ParamStore, Trainer, TrainerConfig};
 use crate::linalg::{matmul, matmul_at_b, polar_project, MatF, PolarOpts};
 use crate::manifold::stiefel;
@@ -79,7 +79,7 @@ pub fn run(cfg: &RunConfig) -> Result<()> {
         let x0 = stiefel::random_point(n, n, &mut rng);
 
         for &method in &cfg.methods {
-            let spec = common::with_engine_for(cfg, spec_for(cfg.experiment, method));
+            let spec = common::with_engine_for(cfg, resolve_spec(cfg, method));
             let mut store = ParamStore::new();
             store.add_stiefel("x", x0.clone());
             let mut tr = Trainer::new(
@@ -140,7 +140,13 @@ pub fn run(cfg: &RunConfig) -> Result<()> {
                 crate::util::fmt_duration(wall),
                 tr.step_idx()
             );
-            let rec = RunRecord { method, label: spec.label(), log: tr.log, wall_s: wall };
+            let rec = RunRecord {
+                method,
+                label: spec.label(),
+                log: tr.log,
+                wall_s: wall,
+                spec: Some(spec),
+            };
             common::emit(cfg, &rec, rep)?;
             records.push(rec);
         }
@@ -194,7 +200,7 @@ mod tests {
         let mut l = l0;
         for _ in 0..500 {
             let (li, g) = lossgrad_rust(&x, &prob);
-            opt.step(0, &mut x, &g);
+            opt.step(0, &mut x, &g).unwrap();
             l = li;
         }
         assert!(

@@ -12,7 +12,7 @@
 //! 218 624-kernel workload at 100 epochs — the Fig. 1 x-axis, regenerated.
 
 use super::common::{self, RunRecord};
-use crate::config::{spec_for, RunConfig};
+use crate::config::{resolve_spec, RunConfig};
 use crate::coordinator::MetricLog;
 use crate::linalg::MatF;
 use crate::manifold::stiefel;
@@ -45,12 +45,12 @@ fn time_method(
     xs: &mut [MatF],
     gs: &[MatF],
     steps: usize,
-) -> f64 {
+) -> Result<f64> {
     let sw = Stopwatch::start();
     for _ in 0..steps {
-        opt.step_group(xs, gs);
+        opt.step_group(xs, gs)?;
     }
-    sw.seconds() * 1e6 / (steps as f64 * xs.len() as f64)
+    Ok(sw.seconds() * 1e6 / (steps as f64 * xs.len() as f64))
 }
 
 /// Run the scalability sweep.
@@ -74,11 +74,11 @@ pub fn run(cfg: &RunConfig) -> Result<()> {
             // batched artifacts exist only at the CNN shapes — its
             // per-step math matches POGO's anyway, the loop overhead is
             // the point of this figure).
-            let spec = spec_for(cfg.experiment, method);
-            let mut opt = spec.build(Some(&reg), (b, 3, 3))?;
+            let spec = resolve_spec(cfg, method);
+            let mut opt = spec.build::<f32>(Some(&reg), (b, 3, 3))?;
             // Warm-up dispatch (compile cache, allocator).
-            opt.step_group(&mut xs, &gs);
-            let us_per_mat = time_method(opt.as_mut(), &mut xs, &gs, eff_steps);
+            opt.step_group(&mut xs, &gs)?;
+            let us_per_mat = time_method(opt.as_mut(), &mut xs, &gs, eff_steps)?;
             let paper_hours =
                 us_per_mat * PAPER_KERNELS as f64 * PAPER_STEPS as f64 / 1e6 / 3600.0;
             log.record(b, &[
@@ -95,8 +95,13 @@ pub fn run(cfg: &RunConfig) -> Result<()> {
             assert!(max_d < 0.6, "{}: drifted at B={b}: {max_d}", spec.label());
         }
         let wall = log.elapsed();
-        let rec =
-            RunRecord { method, label: method.name().to_string(), log, wall_s: wall };
+        let rec = RunRecord {
+            method,
+            label: method.name().to_string(),
+            log,
+            wall_s: wall,
+            spec: Some(resolve_spec(cfg, method)),
+        };
         common::emit(cfg, &rec, 0)?;
         records.push(rec);
     }
@@ -134,10 +139,10 @@ mod tests {
         let spec = crate::coordinator::OptimizerSpec::new(Method::Pogo, 0.1);
         let (mut xs1, gs1) = make_group(16, &mut rng);
         let (mut xs2, gs2) = make_group(128, &mut rng);
-        let mut o1 = spec.build(None, (16, 3, 3)).unwrap();
-        let mut o2 = spec.build(None, (128, 3, 3)).unwrap();
-        let t1 = time_method(o1.as_mut(), &mut xs1, &gs1, 20);
-        let t2 = time_method(o2.as_mut(), &mut xs2, &gs2, 20);
+        let mut o1 = spec.build::<f32>(None, (16, 3, 3)).unwrap();
+        let mut o2 = spec.build::<f32>(None, (128, 3, 3)).unwrap();
+        let t1 = time_method(o1.as_mut(), &mut xs1, &gs1, 20).unwrap();
+        let t2 = time_method(o2.as_mut(), &mut xs2, &gs2, 20).unwrap();
         // Within an order of magnitude per matrix (loop overhead varies).
         assert!(t2 < t1 * 10.0 + 50.0, "t1={t1} t2={t2}");
     }

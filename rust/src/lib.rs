@@ -21,20 +21,41 @@
 //!
 //! ## Quickstart
 //!
+//! Every optimizer is described by one serializable
+//! [`OptimizerSpec`](coordinator::OptimizerSpec) (method, lr, base
+//! optimizer, λ policy, engine, …) and built through its generic
+//! `build::<S>` — the crate's single construction path, at any scalar
+//! precision, on either engine. Stepping is fallible: engine errors
+//! propagate as `Result` instead of panicking.
+//!
 //! ```no_run
+//! use pogo::coordinator::OptimizerSpec;
 //! use pogo::linalg::Mat;
 //! use pogo::manifold::stiefel;
-//! use pogo::optim::{Orthoptimizer, pogo::{Pogo, PogoConfig}};
+//! use pogo::optim::Method;
 //! use pogo::rng::Rng;
 //!
+//! # fn main() -> anyhow::Result<()> {
 //! let mut rng = Rng::seed_from_u64(0);
 //! // A random point on St(64, 128) and a Euclidean gradient.
 //! let mut x = stiefel::random_point(64, 128, &mut rng);
 //! let g = Mat::randn(64, 128, &mut rng);
-//! let mut opt = Pogo::new(PogoConfig { lr: 0.1, ..Default::default() }, 1);
-//! opt.step(0, &mut x, &g);
+//! let spec = OptimizerSpec::new(Method::Pogo, 0.1);
+//! let mut opt = spec.build::<f32>(None, (1, 64, 128))?;
+//! opt.step(0, &mut x, &g)?;
 //! assert!(stiefel::distance(&x) < 1e-4); // stays on the manifold
+//!
+//! // Specs round-trip through JSON, so runs are replayable:
+//! let text = spec.to_json_string();
+//! assert_eq!(OptimizerSpec::from_json(&pogo::util::json::Json::parse(&text)?)?, spec);
+//! # Ok(())
+//! # }
 //! ```
+//!
+//! For many matrices, a [`ParamStore`](coordinator::ParamStore) groups
+//! same-shape parameters and an [`OptimSession`](coordinator::OptimSession)
+//! (or the full [`Trainer`](coordinator::Trainer)) drives one batched
+//! update per group — the paper's scalability mechanism.
 
 pub mod bench;
 pub mod config;

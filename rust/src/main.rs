@@ -3,10 +3,15 @@
 //! ```text
 //! pogo run <experiment> [--methods a,b] [--steps N] [--reps K] [--seed S]
 //!                       [--out DIR] [--full] [--quick]
+//!                       [--spec FILE.json] [--dump-spec]
 //! pogo list                     # experiments + their paper figures
 //! pogo info [--artifacts DIR]   # artifact registry contents
 //! pogo version
 //! ```
+//!
+//! `--dump-spec` prints the lineup's optimizer specs as JSON (one object
+//! per method) without running; `--spec` replays a `*.spec.json` manifest
+//! emitted next to any run's CSV.
 
 use pogo::config::{ExperimentId, RunConfig};
 use pogo::optim::Method;
@@ -139,6 +144,8 @@ fn cmd_run() -> i32 {
     .flag("reps", "1", "independent repetitions")
     .flag("seed", "0", "base RNG seed")
     .flag_opt("out", "output directory for CSVs (default <repo>/results)")
+    .flag_opt("spec", "optimizer spec JSON to replay (overrides its method's preset)")
+    .switch("dump-spec", "print the lineup's optimizer specs as JSON and exit")
     .switch("full", "use the paper's full Fig. 4 shapes (needs full artifacts)")
     .switch("quick", "tiny smoke-run shapes/budgets");
     let a = cli.parse_env_or_exit(2);
@@ -157,6 +164,23 @@ fn cmd_run() -> i32 {
         }
         cfg.methods = methods;
     }
+    if let Some(path) = a.get("spec") {
+        let spec =
+            match pogo::coordinator::OptimizerSpec::from_json_file(std::path::Path::new(path))
+            {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("error reading --spec {path}: {e:#}");
+                    return 2;
+                }
+            };
+        // An explicit spec narrows the default lineup to its own method;
+        // an explicit --methods list still wins.
+        if a.get("methods").is_none() {
+            cfg.methods = vec![spec.method];
+        }
+        cfg.spec = Some(spec);
+    }
     if let Some(s) = a.get_usize("steps") {
         cfg.steps = s;
     }
@@ -167,6 +191,24 @@ fn cmd_run() -> i32 {
     }
     cfg.full = a.get_bool("full");
     cfg.quick = a.get_bool("quick");
+
+    if a.get_bool("dump-spec") {
+        // Mirror the drivers' engine assignment so the dump matches what
+        // a run would actually build (replayed specs pin their engine).
+        let entries: Vec<(&str, pogo::util::json::Json)> = cfg
+            .methods
+            .iter()
+            .map(|&m| {
+                let spec = pogo::experiments::common::with_engine_for(
+                    &cfg,
+                    pogo::config::resolve_spec(&cfg, m),
+                );
+                (m.name(), spec.to_json())
+            })
+            .collect();
+        println!("{}", pogo::util::json::Json::obj(entries).to_string_pretty());
+        return 0;
+    }
 
     log::info!("config: {}", cfg.to_json().to_string());
     match pogo::experiments::run(&cfg) {

@@ -38,7 +38,7 @@ impl<S: Scalar> Adam<S> {
 }
 
 impl<S: Scalar> Orthoptimizer<S> for Adam<S> {
-    fn step(&mut self, idx: usize, x: &mut Mat<S>, grad: &Mat<S>) {
+    fn step(&mut self, idx: usize, x: &mut Mat<S>, grad: &Mat<S>) -> anyhow::Result<()> {
         self.base.ensure_slots(idx + 1);
         let g = if self.cfg.weight_decay != 0.0 {
             let mut g = grad.clone();
@@ -48,6 +48,7 @@ impl<S: Scalar> Orthoptimizer<S> for Adam<S> {
             self.base.transform(idx, grad)
         };
         x.axpy(S::from_f64(-self.cfg.lr), &g);
+        Ok(())
     }
 
     fn name(&self) -> &str {
@@ -77,7 +78,7 @@ mod tests {
         let mut opt = Adam::<f64>::new(AdamConfig { lr: 0.05, ..Default::default() }, 1);
         for _ in 0..500 {
             let g = x.sub(&t).scale(2.0);
-            opt.step(0, &mut x, &g);
+            opt.step(0, &mut x, &g).unwrap();
         }
         assert!(x.sub(&t).norm() < 1e-2, "residual {}", x.sub(&t).norm());
     }
@@ -92,7 +93,7 @@ mod tests {
         );
         let n0 = x.norm();
         for _ in 0..50 {
-            opt.step(0, &mut x, &zero);
+            opt.step(0, &mut x, &zero).unwrap();
         }
         assert!(x.norm() < n0);
     }

@@ -5,6 +5,8 @@
 //! (vector-wise normalization) but *not* elementwise Adam.
 
 use crate::linalg::{Mat, Scalar};
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
 
 /// Kind + hyperparameters of a base optimizer, the serializable config.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -55,6 +57,68 @@ impl BaseOptKind {
     /// Linearity in the sense of Def. 1.
     pub fn is_linear(&self) -> bool {
         !matches!(self, BaseOptKind::Adam { .. })
+    }
+
+    /// Serialize with hyperparameters (kind alone is lossy for
+    /// momentum/VAdam/Adam).
+    pub fn to_json(&self) -> Json {
+        match *self {
+            BaseOptKind::Sgd => Json::obj(vec![("kind", Json::str("sgd"))]),
+            BaseOptKind::Momentum { beta } => Json::obj(vec![
+                ("beta", Json::num(beta)),
+                ("kind", Json::str("momentum")),
+            ]),
+            BaseOptKind::VAdam { beta1, beta2, eps } => Json::obj(vec![
+                ("beta1", Json::num(beta1)),
+                ("beta2", Json::num(beta2)),
+                ("eps", Json::num(eps)),
+                ("kind", Json::str("vadam")),
+            ]),
+            BaseOptKind::Adam { beta1, beta2, eps } => Json::obj(vec![
+                ("beta1", Json::num(beta1)),
+                ("beta2", Json::num(beta2)),
+                ("eps", Json::num(eps)),
+                ("kind", Json::str("adam")),
+            ]),
+        }
+    }
+
+    /// Parse the `to_json` form; missing hyperparameters take the
+    /// constructor defaults, but present-yet-malformed ones are errors
+    /// (a replayed config must not silently change hyperparameters).
+    pub fn from_json(j: &Json) -> Result<BaseOptKind> {
+        fn num_or(j: &Json, key: &str, default: f64) -> Result<f64> {
+            match j.get(key) {
+                Json::Null => Ok(default),
+                v => v
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("base optimizer: '{key}' must be a number")),
+            }
+        }
+        let kind = j
+            .get("kind")
+            .as_str()
+            .ok_or_else(|| anyhow!("base optimizer: missing 'kind'"))?;
+        let base = match Self::parse(kind) {
+            Some(b) => b,
+            None => return Err(anyhow!("base optimizer: unknown kind '{kind}'")),
+        };
+        Ok(match base {
+            BaseOptKind::Sgd => BaseOptKind::Sgd,
+            BaseOptKind::Momentum { beta } => {
+                BaseOptKind::Momentum { beta: num_or(j, "beta", beta)? }
+            }
+            BaseOptKind::VAdam { beta1, beta2, eps } => BaseOptKind::VAdam {
+                beta1: num_or(j, "beta1", beta1)?,
+                beta2: num_or(j, "beta2", beta2)?,
+                eps: num_or(j, "eps", eps)?,
+            },
+            BaseOptKind::Adam { beta1, beta2, eps } => BaseOptKind::Adam {
+                beta1: num_or(j, "beta1", beta1)?,
+                beta2: num_or(j, "beta2", beta2)?,
+                eps: num_or(j, "eps", eps)?,
+            },
+        })
     }
 }
 
@@ -266,5 +330,23 @@ mod tests {
             assert_eq!(BaseOptKind::parse(n).unwrap().name(), n);
         }
         assert!(BaseOptKind::parse("sgdm").is_none());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_hyperparams() {
+        for kind in [
+            BaseOptKind::Sgd,
+            BaseOptKind::momentum(0.35),
+            BaseOptKind::VAdam { beta1: 0.8, beta2: 0.95, eps: 1e-6 },
+            BaseOptKind::Adam { beta1: 0.5, beta2: 0.9, eps: 1e-7 },
+        ] {
+            let text = kind.to_json().to_string();
+            let back =
+                BaseOptKind::from_json(&crate::util::json::Json::parse(&text).unwrap())
+                    .unwrap();
+            assert_eq!(kind, back, "{text}");
+            assert_eq!(back.to_json().to_string(), text);
+        }
+        assert!(BaseOptKind::from_json(&crate::util::json::Json::Null).is_err());
     }
 }

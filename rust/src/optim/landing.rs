@@ -138,12 +138,13 @@ impl<S: Scalar> Landing<S> {
 }
 
 impl<S: Scalar> Orthoptimizer<S> for Landing<S> {
-    fn step(&mut self, idx: usize, x: &mut Mat<S>, grad: &Mat<S>) {
+    fn step(&mut self, idx: usize, x: &mut Mat<S>, grad: &Mat<S>) -> anyhow::Result<()> {
         self.base.ensure_slots(idx + 1);
         let g = self.base.transform(idx, grad);
         let (xp, eta) = Landing::update(x, &g, &self.cfg);
         self.last_eta = eta;
         *x = xp;
+        Ok(())
     }
 
     fn name(&self) -> &str {
@@ -178,7 +179,7 @@ mod tests {
         let mut opt = Landing::<f64>::new(cfg, 1);
         for _ in 0..60 {
             let g = M::randn(6, 12, &mut rng).scale(30.0);
-            opt.step(0, &mut x, &g);
+            opt.step(0, &mut x, &g).unwrap();
             let d = stiefel::distance_t(&x);
             assert!(d <= cfg.eps_ball + 1e-6, "left the ball: {d}");
         }
@@ -219,7 +220,7 @@ mod tests {
         let l0 = loss(&x);
         for _ in 0..200 {
             let grad = matmul(&x, &aat).scale(-2.0);
-            opt.step(0, &mut x, &grad);
+            opt.step(0, &mut x, &grad).unwrap();
         }
         let l1 = loss(&x);
         assert!(l1 < l0, "no descent: {l0} → {l1}");

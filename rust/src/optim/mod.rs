@@ -4,6 +4,12 @@
 //! `crate::runtime` + `python/compile/`; integration tests assert the two
 //! engines agree step-for-step.
 //!
+//! Construction is centralized: [`registry`] is the ONE place that maps a
+//! [`Method`] (plus an `OptimizerSpec`) to a concrete optimizer, for any
+//! scalar type and for both the real and complex Stiefel manifolds. Adding
+//! an orthoptimizer means adding its module here and one arm in
+//! `registry::construct` — nothing else in the crate changes.
+//!
 //! Terminology follows the paper: an *orthoptimizer* updates a wide matrix
 //! `X ∈ St(p, n)` given the Euclidean gradient `∇f(X)`; a *base optimizer*
 //! (§3.1) transforms raw gradients before the geometry is applied (only
@@ -14,12 +20,14 @@ pub mod base;
 pub mod landing;
 pub mod pogo;
 pub mod quartic;
+pub mod registry;
 pub mod rgd;
 pub mod rsdm;
 pub mod slpg;
 pub mod unitary;
 
 use crate::linalg::{Mat, Scalar};
+use anyhow::{ensure, Result};
 
 /// A single-matrix orthoptimizer over `St(p, n)`.
 ///
@@ -27,20 +35,31 @@ use crate::linalg::{Mat, Scalar};
 /// keep per-matrix state; implementations must accept any `idx <
 /// n_params` passed at construction.
 ///
+/// Stepping is fallible: the host engines never fail, but the XLA-backed
+/// engines surface dispatch errors (missing artifact, shape mismatch,
+/// runtime failure) as `Err` instead of panicking inside the trait impl,
+/// so they propagate to the Trainer/CLI.
+///
 /// Deliberately NOT `Send`: the XLA-backed engines hold PJRT handles
 /// (raw pointers) and the coordinator's step loop is single-threaded —
 /// parallelism lives inside the linalg substrate and inside XLA.
 pub trait Orthoptimizer<S: Scalar = f32> {
     /// In-place update of `x` given Euclidean gradient `g`.
-    fn step(&mut self, idx: usize, x: &mut Mat<S>, g: &Mat<S>);
+    fn step(&mut self, idx: usize, x: &mut Mat<S>, g: &Mat<S>) -> Result<()>;
 
     /// Update all matrices of a group (default: sequential loop).
     /// The XLA-backed engines override this with one batched dispatch.
-    fn step_group(&mut self, xs: &mut [Mat<S>], gs: &[Mat<S>]) {
-        assert_eq!(xs.len(), gs.len());
+    fn step_group(&mut self, xs: &mut [Mat<S>], gs: &[Mat<S>]) -> Result<()> {
+        ensure!(
+            xs.len() == gs.len(),
+            "step_group: {} points vs {} gradients",
+            xs.len(),
+            gs.len()
+        );
         for (i, (x, g)) in xs.iter_mut().zip(gs.iter()).enumerate() {
-            self.step(i, x, g);
+            self.step(i, x, g)?;
         }
+        Ok(())
     }
 
     /// Human-readable name for logs/figures.
@@ -49,6 +68,12 @@ pub trait Orthoptimizer<S: Scalar = f32> {
     /// Current learning rate (schedulers mutate it through `set_lr`).
     fn lr(&self) -> f64;
     fn set_lr(&mut self, lr: f64);
+
+    /// λ chosen by the most recent step, for methods that have one (POGO);
+    /// telemetry for the λ-policy ablation.
+    fn last_lambda(&self) -> Option<f64> {
+        None
+    }
 }
 
 /// Which engine executes an optimizer's update rule.
@@ -58,6 +83,23 @@ pub enum Engine {
     Rust,
     /// AOT-compiled HLO executable via PJRT (L1/L2 path).
     Xla,
+}
+
+impl Engine {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Engine::Rust => "rust",
+            Engine::Xla => "xla",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Engine> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "rust" => Engine::Rust,
+            "xla" => Engine::Xla,
+            _ => return None,
+        })
+    }
 }
 
 /// Identifier for every optimizer the paper evaluates (Fig. 4–8).
@@ -111,10 +153,15 @@ impl Method {
         ]
     }
 
+    /// Static capabilities of this method (see [`registry`]).
+    pub fn capabilities(&self) -> registry::Capabilities {
+        registry::capabilities(*self)
+    }
+
     /// Whether the update rule is matmul-only (accelerator-friendly — can
     /// be dispatched through the XLA engine).
     pub fn is_matmul_only(&self) -> bool {
-        matches!(self, Method::Pogo | Method::Landing | Method::LandingPC | Method::Slpg)
+        self.capabilities().matmul_only
     }
 }
 
@@ -132,10 +179,40 @@ mod tests {
     }
 
     #[test]
+    fn engine_parse_roundtrip() {
+        for e in [Engine::Rust, Engine::Xla] {
+            assert_eq!(Engine::parse(e.name()), Some(e));
+        }
+        assert_eq!(Engine::parse("tpu"), None);
+    }
+
+    #[test]
     fn matmul_only_classification() {
         assert!(Method::Pogo.is_matmul_only());
         assert!(!Method::Rgd.is_matmul_only());
         assert!(!Method::Rsdm.is_matmul_only());
         assert!(!Method::Adam.is_matmul_only()); // unconstrained, trivial anyway
+    }
+
+    #[test]
+    fn default_step_group_checks_lengths() {
+        struct Null;
+        impl Orthoptimizer<f32> for Null {
+            fn step(&mut self, _: usize, _: &mut Mat<f32>, _: &Mat<f32>) -> Result<()> {
+                Ok(())
+            }
+            fn name(&self) -> &str {
+                "null"
+            }
+            fn lr(&self) -> f64 {
+                0.0
+            }
+            fn set_lr(&mut self, _: f64) {}
+        }
+        let mut opt = Null;
+        let mut xs = vec![Mat::<f32>::zeros(2, 2)];
+        let gs = vec![Mat::<f32>::zeros(2, 2); 2];
+        assert!(opt.step_group(&mut xs, &gs).is_err());
+        assert!(opt.step_group(&mut xs, &gs[..1]).is_ok());
     }
 }

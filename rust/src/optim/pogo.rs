@@ -29,6 +29,23 @@ pub enum LambdaPolicy {
     FindRoot,
 }
 
+impl LambdaPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LambdaPolicy::Half => "half",
+            LambdaPolicy::FindRoot => "find-root",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<LambdaPolicy> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "half" => LambdaPolicy::Half,
+            "find-root" | "findroot" | "find_root" | "root" => LambdaPolicy::FindRoot,
+            _ => return None,
+        })
+    }
+}
+
 /// POGO hyperparameters.
 #[derive(Clone, Copy, Debug)]
 pub struct PogoConfig {
@@ -147,12 +164,13 @@ pub fn landing_poly_eval(coeffs: &[f64; 5], lam: f64) -> f64 {
 }
 
 impl<S: Scalar> Orthoptimizer<S> for Pogo<S> {
-    fn step(&mut self, idx: usize, x: &mut Mat<S>, grad: &Mat<S>) {
+    fn step(&mut self, idx: usize, x: &mut Mat<S>, grad: &Mat<S>) -> anyhow::Result<()> {
         self.base.ensure_slots(idx + 1);
         let g = self.base.transform(idx, grad);
         let (xp, lam) = Pogo::update(x, &g, self.cfg.lr, self.cfg.lambda);
         self.last_lambda = lam;
         *x = xp;
+        Ok(())
     }
 
     fn name(&self) -> &str {
@@ -165,6 +183,10 @@ impl<S: Scalar> Orthoptimizer<S> for Pogo<S> {
 
     fn set_lr(&mut self, lr: f64) {
         self.cfg.lr = lr;
+    }
+
+    fn last_lambda(&self) -> Option<f64> {
+        Some(self.last_lambda)
     }
 }
 
@@ -339,7 +361,7 @@ mod tests {
         for _ in 0..200 {
             let r = matmul(&a, &x).sub(&b);
             let grad = crate::linalg::matmul_at_b(&a, &r).scale(2.0);
-            opt.step(0, &mut x, &grad);
+            opt.step(0, &mut x, &grad).unwrap();
         }
         let l1 = loss(&x);
         assert!(l1 < l0 * 0.9, "no descent: {l0} → {l1}");
@@ -358,7 +380,7 @@ mod tests {
         );
         for _ in 0..30 {
             let g = M::randn(6, 12, &mut rng).scale(100.0);
-            opt.step(0, &mut x, &g);
+            opt.step(0, &mut x, &g).unwrap();
             assert!(stiefel::distance_t(&x) < 1e-2, "d={}", stiefel::distance_t(&x));
         }
     }

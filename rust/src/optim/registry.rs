@@ -1,0 +1,282 @@
+//! The method registry: the ONE place that constructs optimizers.
+//!
+//! Everything the crate knows about a [`Method`] beyond its name lives
+//! here — its static [`Capabilities`], which XLA step programs can run it,
+//! and how to build it for any scalar type on either the real or the
+//! complex Stiefel manifold. `OptimizerSpec::{build, build_unitary}`
+//! (coordinator layer), the Trainer, and every experiment driver route
+//! through these functions; adding an orthoptimizer touches its module
+//! plus this file only.
+//!
+//! Invariant (checked by `tests/spec_api.rs`): [`construct`] holds the
+//! only `match` over `Method` in the crate that constructs optimizers.
+
+use super::adam::{Adam, AdamConfig};
+use super::base::BaseOptKind;
+use super::landing::{Landing, LandingConfig};
+use super::pogo::{LambdaPolicy, Pogo, PogoConfig};
+use super::rgd::{Rgd, RgdConfig};
+use super::rsdm::{Rsdm, RsdmConfig};
+use super::slpg::{Slpg, SlpgConfig};
+use super::unitary::{LandingC, PogoC, RgdC, SlpgC, UnitaryOptimizer};
+use super::{Method, Orthoptimizer};
+use crate::coordinator::engine::OptimizerSpec;
+use crate::linalg::Scalar;
+use crate::runtime::stepper::{StepKind, XlaStepper};
+use crate::runtime::Registry;
+use anyhow::{anyhow, ensure, Result};
+
+/// Static capabilities of a method.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Capabilities {
+    /// Update rule is matmul-only (batched accelerator dispatch possible).
+    pub matmul_only: bool,
+    /// Has a complex-Stiefel (unitary) engine.
+    pub complex: bool,
+    /// XLA step programs this method can drive (empty = host-only).
+    pub xla_step_kinds: &'static [StepKind],
+}
+
+/// Capability table (kept next to [`construct`] so a new method updates
+/// both in one edit).
+pub fn capabilities(method: Method) -> Capabilities {
+    match method {
+        Method::Pogo => Capabilities {
+            matmul_only: true,
+            complex: true,
+            xla_step_kinds: &[StepKind::Pogo, StepKind::PogoVadam, StepKind::PogoFindRoot],
+        },
+        Method::Landing | Method::LandingPC => Capabilities {
+            matmul_only: true,
+            complex: true,
+            xla_step_kinds: &[StepKind::Landing],
+        },
+        Method::Slpg => Capabilities {
+            matmul_only: true,
+            complex: true,
+            xla_step_kinds: &[StepKind::Slpg],
+        },
+        Method::Rgd => {
+            Capabilities { matmul_only: false, complex: true, xla_step_kinds: &[] }
+        }
+        Method::Rsdm | Method::Adam => {
+            Capabilities { matmul_only: false, complex: false, xla_step_kinds: &[] }
+        }
+    }
+}
+
+/// Which manifold the optimizer acts on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Domain {
+    /// Real Stiefel `X Xᵀ = I` (the [`Orthoptimizer`] trait).
+    Real,
+    /// Complex Stiefel `X X^H = I` (the [`UnitaryOptimizer`] trait).
+    Complex,
+}
+
+/// A constructed optimizer, in whichever domain was requested.
+enum Built<S: Scalar> {
+    Real(Box<dyn Orthoptimizer<S>>),
+    Unitary(Box<dyn UnitaryOptimizer<S>>),
+}
+
+/// THE optimizer construction match. Every host-engine optimizer in the
+/// crate — any method, any scalar, real or complex — is built here.
+fn construct<S: Scalar>(
+    spec: &OptimizerSpec,
+    domain: Domain,
+    n_params: usize,
+) -> Result<Built<S>> {
+    use Domain::{Complex, Real};
+    if domain == Complex {
+        ensure!(
+            capabilities(spec.method).complex,
+            "{} has no complex-Stiefel engine",
+            spec.method.name()
+        );
+        ensure!(
+            spec.base.is_linear(),
+            "complex base optimizers must be linear (Def. 1); got {}",
+            spec.base.name()
+        );
+    }
+    Ok(match spec.method {
+        Method::Pogo => match domain {
+            Real => Built::Real(Box::new(Pogo::<S>::new(
+                PogoConfig { lr: spec.lr, lambda: spec.lambda, base: spec.base },
+                n_params,
+            ))),
+            Complex => Built::Unitary(Box::new(PogoC::<S>::new(
+                spec.lr,
+                spec.lambda,
+                spec.base,
+                n_params,
+            ))),
+        },
+        Method::Landing => match domain {
+            Real => Built::Real(Box::new(Landing::<S>::new(
+                LandingConfig {
+                    lr: spec.lr,
+                    attraction: spec.attraction,
+                    base: spec.base,
+                    ..Default::default()
+                },
+                n_params,
+            ))),
+            Complex => Built::Unitary(Box::new(LandingC::<S>::new(
+                spec.lr,
+                spec.attraction,
+                spec.base,
+                n_params,
+            ))),
+        },
+        Method::LandingPC => match domain {
+            Real => Built::Real(Box::new(Landing::<S>::new(
+                LandingConfig::landing_pc(spec.lr, spec.attraction),
+                n_params,
+            ))),
+            Complex => Built::Unitary(Box::new(LandingC::<S>::landing_pc(
+                spec.lr,
+                spec.attraction,
+                n_params,
+            ))),
+        },
+        Method::Slpg => match domain {
+            Real => Built::Real(Box::new(Slpg::<S>::new(
+                SlpgConfig { lr: spec.lr, base: spec.base },
+                n_params,
+            ))),
+            Complex => Built::Unitary(Box::new(SlpgC::<S>::new(spec.lr, n_params))),
+        },
+        Method::Rgd => match domain {
+            Real => Built::Real(Box::new(Rgd::<S>::new(
+                RgdConfig { lr: spec.lr, base: spec.base },
+                n_params,
+            ))),
+            Complex => Built::Unitary(Box::new(RgdC::<S>::new(spec.lr, n_params))),
+        },
+        Method::Rsdm => match domain {
+            Real => Built::Real(Box::new(Rsdm::<S>::new(
+                RsdmConfig {
+                    lr: spec.lr,
+                    submanifold_dim: spec.submanifold_dim,
+                    base: spec.base,
+                    seed: spec.seed,
+                    ..Default::default()
+                },
+                n_params,
+            ))),
+            Complex => unreachable!("capability gate above"),
+        },
+        Method::Adam => match domain {
+            Real => Built::Real(Box::new(Adam::<S>::new(
+                AdamConfig { lr: spec.lr, ..Default::default() },
+                n_params,
+            ))),
+            Complex => unreachable!("capability gate above"),
+        },
+    })
+}
+
+/// Build a host-engine (pure-Rust) orthoptimizer at scalar type `S`.
+pub fn build_host<S: Scalar>(
+    spec: &OptimizerSpec,
+    n_params: usize,
+) -> Result<Box<dyn Orthoptimizer<S>>> {
+    match construct::<S>(spec, Domain::Real, n_params)? {
+        Built::Real(opt) => Ok(opt),
+        Built::Unitary(_) => unreachable!("Domain::Real yields Built::Real"),
+    }
+}
+
+/// Build a complex-Stiefel (unitary) optimizer at scalar type `S`.
+pub fn build_unitary<S: Scalar>(
+    spec: &OptimizerSpec,
+    n_params: usize,
+) -> Result<Box<dyn UnitaryOptimizer<S>>> {
+    match construct::<S>(spec, Domain::Complex, n_params)? {
+        Built::Unitary(opt) => Ok(opt),
+        Built::Real(_) => unreachable!("Domain::Complex yields Built::Unitary"),
+    }
+}
+
+/// Which XLA step program a spec maps to (method × base × λ-policy).
+pub fn xla_step_kind(spec: &OptimizerSpec) -> Result<StepKind> {
+    let kind = match (spec.method, spec.base, spec.lambda) {
+        (Method::Pogo, BaseOptKind::VAdam { .. }, LambdaPolicy::Half) => StepKind::PogoVadam,
+        (Method::Pogo, _, LambdaPolicy::Half) => StepKind::Pogo,
+        (Method::Pogo, _, LambdaPolicy::FindRoot) => StepKind::PogoFindRoot,
+        (Method::Landing | Method::LandingPC, _, _) => StepKind::Landing,
+        (Method::Slpg, _, _) => StepKind::Slpg,
+        (m, _, _) => return Err(anyhow!("{} has no XLA engine (host retraction)", m.name())),
+    };
+    debug_assert!(capabilities(spec.method).xla_step_kinds.contains(&kind));
+    Ok(kind)
+}
+
+/// Build the batched XLA stepper for a spec at one `(b, p, n)` group
+/// shape (the artifact for that shape must exist in the registry).
+pub fn build_xla(
+    spec: &OptimizerSpec,
+    registry: &Registry,
+    b: usize,
+    p: usize,
+    n: usize,
+) -> Result<XlaStepper> {
+    let kind = xla_step_kind(spec)?;
+    let mut stepper = XlaStepper::new(registry, kind, spec.lr, b, p, n)?;
+    stepper.attraction = spec.attraction;
+    stepper.normalize_grad = spec.method == Method::LandingPC;
+    if spec.method == Method::LandingPC {
+        // LandingPC has no safeguard (paper §5.1); neutralize it.
+        stepper.eps_ball = 1e9;
+    }
+    stepper.set_base(spec.base);
+    Ok(stepper)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capabilities_cover_every_method() {
+        for &m in Method::all() {
+            let caps = capabilities(m);
+            // matmul-only ⇔ has at least one XLA step program.
+            assert_eq!(caps.matmul_only, !caps.xla_step_kinds.is_empty(), "{}", m.name());
+        }
+    }
+
+    #[test]
+    fn step_kind_selection_matches_capabilities() {
+        let pogo = OptimizerSpec::new(Method::Pogo, 0.1);
+        assert_eq!(xla_step_kind(&pogo).unwrap(), StepKind::Pogo);
+        assert_eq!(
+            xla_step_kind(&pogo.with_base(BaseOptKind::vadam())).unwrap(),
+            StepKind::PogoVadam
+        );
+        assert_eq!(
+            xla_step_kind(&pogo.with_lambda(LambdaPolicy::FindRoot)).unwrap(),
+            StepKind::PogoFindRoot
+        );
+        assert!(xla_step_kind(&OptimizerSpec::new(Method::Rgd, 0.1)).is_err());
+    }
+
+    #[test]
+    fn complex_gate_rejects_unsupported() {
+        let spec = OptimizerSpec::new(Method::Rsdm, 0.1);
+        assert!(build_unitary::<f32>(&spec, 1).is_err());
+        let spec = OptimizerSpec::new(Method::Adam, 0.1);
+        assert!(build_unitary::<f32>(&spec, 1).is_err());
+    }
+
+    #[test]
+    fn unitary_lineup_builds() {
+        for m in [Method::Pogo, Method::Landing, Method::LandingPC, Method::Slpg, Method::Rgd]
+        {
+            let opt = build_unitary::<f32>(&OptimizerSpec::new(m, 0.05), 4).unwrap();
+            assert!(opt.lr() > 0.0, "{}", m.name());
+        }
+    }
+}

@@ -42,10 +42,11 @@ impl<S: Scalar> Rgd<S> {
 }
 
 impl<S: Scalar> Orthoptimizer<S> for Rgd<S> {
-    fn step(&mut self, idx: usize, x: &mut Mat<S>, grad: &Mat<S>) {
+    fn step(&mut self, idx: usize, x: &mut Mat<S>, grad: &Mat<S>) -> anyhow::Result<()> {
         self.base.ensure_slots(idx + 1);
         let g = self.base.transform(idx, grad);
         *x = Rgd::update(x, &g, self.cfg.lr);
+        Ok(())
     }
 
     fn name(&self) -> &str {
@@ -78,7 +79,7 @@ mod tests {
         let mut opt = Rgd::<f64>::new(RgdConfig { lr: 0.5, ..Default::default() }, 1);
         for _ in 0..20 {
             let g = M::randn(5, 13, &mut rng).scale(10.0);
-            opt.step(0, &mut x, &g);
+            opt.step(0, &mut x, &g).unwrap();
             assert!(stiefel::distance_t(&x) < 1e-9);
         }
     }
@@ -96,7 +97,7 @@ mod tests {
         for _ in 0..300 {
             let r = matmul(&a, &x).sub(&b);
             let g = matmul_at_b(&a, &r).scale(2.0);
-            opt.step(0, &mut x, &g);
+            opt.step(0, &mut x, &g).unwrap();
         }
         assert!(loss(&x) < l0 * 0.5);
     }

@@ -136,7 +136,7 @@ impl<S: Scalar> Rsdm<S> {
 }
 
 impl<S: Scalar> Orthoptimizer<S> for Rsdm<S> {
-    fn step(&mut self, idx: usize, x: &mut Mat<S>, grad: &Mat<S>) {
+    fn step(&mut self, idx: usize, x: &mut Mat<S>, grad: &Mat<S>) -> anyhow::Result<()> {
         self.base.ensure_slots(idx + 1);
         let g = self.base.transform(idx, grad);
         let r = self.cfg.submanifold_dim;
@@ -145,6 +145,7 @@ impl<S: Scalar> Orthoptimizer<S> for Rsdm<S> {
         } else {
             Rsdm::update(x, &g, self.cfg.lr, r, &mut self.rng);
         }
+        Ok(())
     }
 
     fn name(&self) -> &str {
@@ -180,7 +181,7 @@ mod tests {
         );
         for _ in 0..200 {
             let g = M::randn(8, 14, &mut rng);
-            opt.step(0, &mut x, &g);
+            opt.step(0, &mut x, &g).unwrap();
         }
         let d = stiefel::distance_t(&x);
         assert!(d < 1e-8, "f64 drift {d}");
@@ -226,7 +227,7 @@ mod tests {
         for _ in 0..600 {
             let r = matmul(&a, &x).sub(&b);
             let g = matmul_at_b(&a, &r).scale(2.0);
-            opt.step(0, &mut x, &g);
+            opt.step(0, &mut x, &g).unwrap();
         }
         assert!(loss(&x) < l0 * 0.7, "{l0} → {}", loss(&x));
     }
@@ -269,7 +270,7 @@ mod tests {
         for _ in 0..400 {
             let r = matmul(&a, &x).sub(&b);
             let g = matmul_at_b(&a, &r).scale(2.0);
-            opt.step(0, &mut x, &g);
+            opt.step(0, &mut x, &g).unwrap();
         }
         assert!(loss(&x) < l0 * 0.8, "{l0} → {}", loss(&x));
         assert!(stiefel::distance_t(&x) < 1e-7, "haar drift {}", stiefel::distance_t(&x));

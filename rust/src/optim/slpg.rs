@@ -60,10 +60,11 @@ impl<S: Scalar> Slpg<S> {
 }
 
 impl<S: Scalar> Orthoptimizer<S> for Slpg<S> {
-    fn step(&mut self, idx: usize, x: &mut Mat<S>, grad: &Mat<S>) {
+    fn step(&mut self, idx: usize, x: &mut Mat<S>, grad: &Mat<S>) -> anyhow::Result<()> {
         self.base.ensure_slots(idx + 1);
         let g = self.base.transform(idx, grad);
         *x = Slpg::update(x, &g, self.cfg.lr);
+        Ok(())
     }
 
     fn name(&self) -> &str {
@@ -143,7 +144,7 @@ mod tests {
         for _ in 0..1500 {
             let r = matmul(&a, &x).sub(&b);
             let g = crate::linalg::matmul_at_b(&a, &r).scale(2.0);
-            opt.step(0, &mut x, &g);
+            opt.step(0, &mut x, &g).unwrap();
         }
         let l1 = loss(&x);
         assert!(

@@ -16,10 +16,11 @@ use super::pogo::LambdaPolicy;
 use super::quartic::solve_landing_quartic;
 use crate::linalg::{polar_project_complex, CMat, PolarOpts, Scalar};
 
-/// A unitary (complex-Stiefel) optimizer. (Not `Send`; see
-/// [`crate::optim::Orthoptimizer`].)
+/// A unitary (complex-Stiefel) optimizer. Fallible like
+/// [`crate::optim::Orthoptimizer`] (host engines never fail, but the
+/// signature keeps both traits uniform). Not `Send`; see the real trait.
 pub trait UnitaryOptimizer<S: Scalar = f32> {
-    fn step(&mut self, idx: usize, x: &mut CMat<S>, g: &CMat<S>);
+    fn step(&mut self, idx: usize, x: &mut CMat<S>, g: &CMat<S>) -> anyhow::Result<()>;
     fn name(&self) -> &str;
     fn lr(&self) -> f64;
     fn set_lr(&mut self, lr: f64);
@@ -186,11 +187,12 @@ impl<S: Scalar> PogoC<S> {
 }
 
 impl<S: Scalar> UnitaryOptimizer<S> for PogoC<S> {
-    fn step(&mut self, idx: usize, x: &mut CMat<S>, grad: &CMat<S>) {
+    fn step(&mut self, idx: usize, x: &mut CMat<S>, grad: &CMat<S>) -> anyhow::Result<()> {
         self.base.ensure_slots(idx + 1);
         let g = self.base.transform(idx, grad);
         let (xp, _) = PogoC::update(x, &g, self.lr, self.lambda);
         *x = xp;
+        Ok(())
     }
     fn name(&self) -> &str {
         &self.name
@@ -246,7 +248,7 @@ impl<S: Scalar> LandingC<S> {
 }
 
 impl<S: Scalar> UnitaryOptimizer<S> for LandingC<S> {
-    fn step(&mut self, idx: usize, x: &mut CMat<S>, grad: &CMat<S>) {
+    fn step(&mut self, idx: usize, x: &mut CMat<S>, grad: &CMat<S>) -> anyhow::Result<()> {
         self.base.ensure_slots(idx + 1);
         let mut g = self.base.transform(idx, grad);
         if self.normalize_grad {
@@ -280,6 +282,7 @@ impl<S: Scalar> UnitaryOptimizer<S> for LandingC<S> {
 
         x.axpy_re(S::from_f64(-eta), &r);
         x.axpy_re(S::from_f64(-eta * lam), &ngrad);
+        Ok(())
     }
     fn name(&self) -> &str {
         &self.name
@@ -309,7 +312,7 @@ impl<S: Scalar> SlpgC<S> {
 }
 
 impl<S: Scalar> UnitaryOptimizer<S> for SlpgC<S> {
-    fn step(&mut self, idx: usize, x: &mut CMat<S>, grad: &CMat<S>) {
+    fn step(&mut self, idx: usize, x: &mut CMat<S>, grad: &CMat<S>) -> anyhow::Result<()> {
         self.base.ensure_slots(idx + 1);
         let g = self.base.transform(idx, grad);
         // Y = X − η(G − Sym_H(G X^H) X), Sym_H(A) = (A + A^H)/2.
@@ -325,6 +328,7 @@ impl<S: Scalar> UnitaryOptimizer<S> for SlpgC<S> {
         // Normal step with λ = 1/2.
         let (xp, _) = normal_step_c(&y, LambdaPolicy::Half);
         *x = xp;
+        Ok(())
     }
     fn name(&self) -> &str {
         "SLPG-C"
@@ -354,11 +358,12 @@ impl<S: Scalar> RgdC<S> {
 }
 
 impl<S: Scalar> UnitaryOptimizer<S> for RgdC<S> {
-    fn step(&mut self, idx: usize, x: &mut CMat<S>, grad: &CMat<S>) {
+    fn step(&mut self, idx: usize, x: &mut CMat<S>, grad: &CMat<S>) -> anyhow::Result<()> {
         self.base.ensure_slots(idx + 1);
         let g = self.base.transform(idx, grad);
         let m = intermediate_c(x, &g, self.lr);
         *x = polar_project_complex(&m, PolarOpts { tol: 1e-7, max_iters: 40 });
+        Ok(())
     }
     fn name(&self) -> &str {
         "RGD-C"
@@ -394,7 +399,7 @@ mod tests {
             let g = C::randn(5, 11, &mut rng);
             let gn = g.norm().to_f64();
             let g = g.scale_re(1.0 / gn.max(1.0)); // keep ξ < 1
-            opt.step(0, &mut x, &g);
+            opt.step(0, &mut x, &g).unwrap();
             assert!(stiefel::distance_complex(&x) < 1e-3);
         }
     }
@@ -421,7 +426,7 @@ mod tests {
         let mut opt = LandingC::<f64>::new(0.8, 1.0, BaseOptKind::Sgd, 1);
         for _ in 0..50 {
             let g = C::randn(4, 8, &mut rng).scale_re(10.0);
-            opt.step(0, &mut x, &g);
+            opt.step(0, &mut x, &g).unwrap();
             assert!(stiefel::distance_complex(&x) <= 0.5 + 1e-6);
         }
     }
@@ -433,7 +438,7 @@ mod tests {
         let mut opt = SlpgC::<f64>::new(0.05, 1);
         for _ in 0..30 {
             let g = C::randn(4, 8, &mut rng);
-            opt.step(0, &mut x, &g);
+            opt.step(0, &mut x, &g).unwrap();
             assert!(stiefel::distance_complex(&x) < 1e-2);
         }
     }
@@ -445,7 +450,7 @@ mod tests {
         let mut opt = RgdC::<f64>::new(0.2, 1);
         for _ in 0..20 {
             let g = C::randn(4, 8, &mut rng).scale_re(3.0);
-            opt.step(0, &mut x, &g);
+            opt.step(0, &mut x, &g).unwrap();
             assert!(stiefel::distance_complex(&x) < 1e-5);
         }
     }
@@ -464,7 +469,7 @@ mod tests {
         for _ in 0..300 {
             let r = a.matmul(&x).sub(&b);
             let g = a.matmul_ah_b(&r).scale_re(2.0);
-            opt.step(0, &mut x, &g);
+            opt.step(0, &mut x, &g).unwrap();
         }
         assert!(loss(&x) < l0 * 0.5, "{l0} → {}", loss(&x));
         assert!(stiefel::distance_complex(&x) < 1e-3);

@@ -7,6 +7,7 @@
 //! tests that exercise the runtime from multiple test threads each get
 //! their own, which XLA's CPU plugin supports.
 
+use super::xla_stub as xla;
 use std::cell::OnceCell;
 
 thread_local! {

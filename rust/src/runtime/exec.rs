@@ -6,6 +6,7 @@
 //! Fig. 1 (one dispatch for 10⁴ kernels instead of 10⁴ QR calls).
 
 use super::registry::EntryMeta;
+use super::xla_stub as xla;
 use anyhow::{anyhow, Result};
 use crate::linalg::MatF;
 

@@ -6,6 +6,7 @@ mod client;
 mod exec;
 mod registry;
 pub mod stepper;
+pub mod xla_stub;
 
 pub use client::with_client;
 pub use exec::{

@@ -8,6 +8,7 @@
 
 use super::client;
 use super::exec::Executable;
+use super::xla_stub as xla;
 use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
 use std::cell::RefCell;

@@ -229,18 +229,17 @@ impl XlaStepper {
 }
 
 /// Adapter implementing the generic `Orthoptimizer` trait over one group.
-/// `step(idx, …)` is not meaningful for the batched engine; use
-/// `step_group`.
+/// Errors (missing artifact, shape mismatch, dispatch failure) are
+/// forwarded, not panicked. `step(idx, …)` only succeeds for a batch-1
+/// stepper — the batched engine's unit of work is `step_group`.
 impl crate::optim::Orthoptimizer<f32> for XlaStepper {
-    fn step(&mut self, _idx: usize, x: &mut MatF, g: &MatF) {
-        let mut xs = vec![x.clone()];
-        self.step_group(std::slice::from_mut(&mut xs[0]), std::slice::from_ref(g))
-            .expect("xla step failed");
-        *x = xs.pop().unwrap();
+    fn step(&mut self, _idx: usize, x: &mut MatF, g: &MatF) -> Result<()> {
+        // In-place view, no intermediate Vec copy.
+        XlaStepper::step_group(self, std::slice::from_mut(x), std::slice::from_ref(g))
     }
 
-    fn step_group(&mut self, xs: &mut [MatF], gs: &[MatF]) {
-        XlaStepper::step_group(self, xs, gs).expect("xla group step failed");
+    fn step_group(&mut self, xs: &mut [MatF], gs: &[MatF]) -> Result<()> {
+        XlaStepper::step_group(self, xs, gs)
     }
 
     fn name(&self) -> &str {
@@ -259,5 +258,9 @@ impl crate::optim::Orthoptimizer<f32> for XlaStepper {
 
     fn set_lr(&mut self, lr: f64) {
         self.lr = lr;
+    }
+
+    fn last_lambda(&self) -> Option<f64> {
+        self.last_lambdas.last().copied()
     }
 }

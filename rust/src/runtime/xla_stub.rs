@@ -1,0 +1,225 @@
+//! API-compatible stub of the `xla` (PJRT) bindings.
+//!
+//! The offline build environment does not ship the real `xla` crate, so the
+//! runtime modules alias this stub in its place (`use super::xla_stub as
+//! xla`). Input marshalling ([`Literal`]) works for real; anything that
+//! would need the native runtime — parsing HLO, compiling, executing —
+//! returns [`XlaError`], which the registry/stepper/engine layers surface
+//! as ordinary `anyhow` errors. The pure-Rust engine is unaffected.
+//!
+//! To link the real bindings, add the `xla` crate to rust/Cargo.toml and
+//! re-point the three `use super::xla_stub as xla;` aliases in
+//! src/runtime/{client,exec,registry}.rs.
+
+use std::fmt;
+use std::marker::PhantomData;
+use std::rc::Rc;
+
+const UNAVAILABLE: &str = "XLA/PJRT runtime unavailable: this build links the in-crate stub \
+     (rust/src/runtime/xla_stub.rs); use Engine::Rust, or link the real `xla` bindings";
+
+/// Error type of every stub operation.
+pub struct XlaError(String);
+
+impl fmt::Debug for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+type XResult<T> = Result<T, XlaError>;
+
+fn unavailable<T>() -> XResult<T> {
+    Err(XlaError(UNAVAILABLE.to_string()))
+}
+
+/// Parsed HLO module (never constructible through the stub).
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> XResult<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// PJRT client handle. Deliberately `!Send` (mirrors the real bindings,
+/// which wrap an `Rc`); see `runtime::client` for the thread-local story.
+pub struct PjRtClient {
+    _not_send: PhantomData<Rc<()>>,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> XResult<PjRtClient> {
+        Ok(PjRtClient { _not_send: PhantomData })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        1
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> XResult<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+/// Compiled executable (never constructible through the stub).
+pub struct PjRtLoadedExecutable {
+    _not_send: PhantomData<Rc<()>>,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> XResult<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// Device buffer handle (never constructible through the stub).
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> XResult<Literal> {
+        unavailable()
+    }
+}
+
+/// Storage of a [`Literal`] — public only because the [`Element`] trait
+/// mentions it; not part of the mirrored API.
+#[doc(hidden)]
+#[derive(Clone)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Host-side literal: typed buffer + dims. Fully functional (marshalling
+/// does not need the native runtime).
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait Element: Copy + Sized {
+    #[doc(hidden)]
+    fn wrap(values: &[Self]) -> Data;
+    #[doc(hidden)]
+    fn unwrap(data: &Data) -> Option<Vec<Self>>;
+}
+
+impl Element for f32 {
+    fn wrap(values: &[Self]) -> Data {
+        Data::F32(values.to_vec())
+    }
+    fn unwrap(data: &Data) -> Option<Vec<Self>> {
+        match data {
+            Data::F32(v) => Some(v.clone()),
+            Data::I32(_) => None,
+        }
+    }
+}
+
+impl Element for i32 {
+    fn wrap(values: &[Self]) -> Data {
+        Data::I32(values.to_vec())
+    }
+    fn unwrap(data: &Data) -> Option<Vec<Self>> {
+        match data {
+            Data::I32(v) => Some(v.clone()),
+            Data::F32(_) => None,
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: Element>(values: &[T]) -> Literal {
+        Literal { data: T::wrap(values), dims: vec![values.len() as i64] }
+    }
+
+    /// Reinterpret with new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> XResult<Literal> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.data.len() {
+            return Err(XlaError(format!(
+                "reshape: {} elements into dims {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy out as a typed host vector.
+    pub fn to_vec<T: Element>(&self) -> XResult<Vec<T>> {
+        T::unwrap(&self.data).ok_or_else(|| XlaError("literal dtype mismatch".to_string()))
+    }
+
+    /// Flatten a tuple literal (outputs only exist with a real runtime).
+    pub fn to_tuple(self) -> XResult<Vec<Literal>> {
+        unavailable()
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_marshalling_roundtrip() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let lit = lit.reshape(&[2, 2]).unwrap();
+        assert_eq!(lit.dims(), &[2, 2]);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.to_vec::<i32>().is_err());
+        assert!(lit.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn runtime_paths_error_cleanly() {
+        assert!(HloModuleProto::from_text_file("nope.hlo").is_err());
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.device_count(), 1);
+        let comp = XlaComputation { _priv: () };
+        let err = client.compile(&comp).unwrap_err();
+        assert!(format!("{err}").contains("stub"));
+    }
+}

@@ -141,10 +141,10 @@ fn xla_base_optimizer_parity_with_rust() {
             .with_base(BaseOptKind::momentum(0.5))
             .with_engine(engine);
         let reg_opt = if engine == Engine::Xla { Some(&reg) } else { None };
-        let mut opt = spec.build(reg_opt, (b, p, n)).unwrap();
+        let mut opt = spec.build::<f32>(reg_opt, (b, p, n)).unwrap();
         let mut xs = x0.clone();
         for gs in &gseq {
-            opt.step_group(&mut xs, gs);
+            opt.step_group(&mut xs, gs).unwrap();
         }
         xs
     };
@@ -167,12 +167,12 @@ fn landing_pc_xla_scale_invariance() {
     let gs_scaled: Vec<MatF> = gs.iter().map(|g| g.scale(41.0)).collect();
 
     let spec = OptimizerSpec::new(Method::LandingPC, 0.05).with_engine(Engine::Xla);
-    let mut o1 = spec.build(Some(&reg), (b, p, n)).unwrap();
-    let mut o2 = spec.build(Some(&reg), (b, p, n)).unwrap();
+    let mut o1 = spec.build::<f32>(Some(&reg), (b, p, n)).unwrap();
+    let mut o2 = spec.build::<f32>(Some(&reg), (b, p, n)).unwrap();
     let mut x1 = x0.clone();
     let mut x2 = x0;
-    o1.step_group(&mut x1, &gs);
-    o2.step_group(&mut x2, &gs_scaled);
+    o1.step_group(&mut x1, &gs).unwrap();
+    o2.step_group(&mut x2, &gs_scaled).unwrap();
     for (a, b) in x1.iter().zip(&x2) {
         assert!(a.sub(b).max_abs() < 1e-5, "not scale invariant");
     }

@@ -1,0 +1,261 @@
+//! The redesigned optimizer API, end to end:
+//! - `OptimizerSpec` JSON round-trip (every field, every `Method`),
+//!   including the on-disk `*.spec.json` manifest format;
+//! - scalar-generic `build::<f64>()` parity with the legacy
+//!   direct-construction path the precision ablation used;
+//! - fallible stepping: a missing-artifact XLA spec surfaces an error
+//!   through `build`/`Trainer::new`, and engine errors inside
+//!   `step_group` propagate through `OptimSession`/`Trainer::step`
+//!   instead of panicking.
+
+use pogo::config::{spec_for, ExperimentId};
+use pogo::coordinator::{
+    OptimSession, OptimizerSpec, ParamStore, Trainer, TrainerConfig,
+};
+use pogo::linalg::{Mat, MatD};
+use pogo::manifold::stiefel;
+use pogo::optim::base::BaseOptKind;
+use pogo::optim::landing::{Landing, LandingConfig};
+use pogo::optim::pogo::{LambdaPolicy, Pogo, PogoConfig};
+use pogo::optim::rgd::{Rgd, RgdConfig};
+use pogo::optim::rsdm::{Rsdm, RsdmConfig};
+use pogo::optim::{Engine, Method, Orthoptimizer};
+use pogo::rng::Rng;
+use pogo::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// JSON round-trip
+// ---------------------------------------------------------------------------
+
+/// A spec exercising every non-default field for `method`. The seed is
+/// deliberately > 2^53 to prove u64 seeds survive JSON exactly.
+fn full_spec(method: Method) -> OptimizerSpec {
+    OptimizerSpec::new(method, 0.125)
+        .with_base(BaseOptKind::momentum(0.35))
+        .with_lambda(LambdaPolicy::FindRoot)
+        .with_attraction(2.5)
+        .with_submanifold(17)
+        .with_seed(u64::MAX - 12345)
+        .with_engine(Engine::Xla)
+}
+
+#[test]
+fn spec_json_roundtrip_every_method_every_field() {
+    for &m in Method::all() {
+        for spec in [OptimizerSpec::new(m, 0.05), full_spec(m)] {
+            let text = spec.to_json().to_string();
+            let back = OptimizerSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, spec, "{text}");
+            // Byte-identical reserialization (BTreeMap keys ⇒ stable order).
+            assert_eq!(back.to_json().to_string(), text);
+            // Pretty form parses to the same spec too.
+            let pretty = spec.to_json_string();
+            let back2 =
+                OptimizerSpec::from_json(&Json::parse(&pretty).unwrap()).unwrap();
+            assert_eq!(back2, spec);
+        }
+    }
+}
+
+#[test]
+fn spec_manifest_file_roundtrip() {
+    let dir = std::env::temp_dir().join(format!("pogo_spec_api_{}", std::process::id()));
+    let path = dir.join("run.spec.json");
+    let spec = full_spec(Method::Rsdm);
+    spec.write_json_file(&path).unwrap();
+    let back = OptimizerSpec::from_json_file(&path).unwrap();
+    assert_eq!(back, spec);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn spec_json_rejects_garbage() {
+    for text in [
+        r#"{}"#,
+        r#"{"method": "warp-drive", "lr": 0.1}"#,
+        r#"{"method": "pogo"}"#,
+        r#"{"method": "pogo", "lr": 0.1, "engine": "tpu"}"#,
+        r#"{"method": "pogo", "lr": 0.1, "lambda": "third"}"#,
+        // Present-but-malformed fields must error, not silently default.
+        r#"{"method": "pogo", "lr": "fast"}"#,
+        r#"{"method": "pogo", "lr": 0.1, "attraction": "0.1"}"#,
+        r#"{"method": "pogo", "lr": 0.1, "lambda": 3}"#,
+        r#"{"method": "pogo", "lr": 0.1, "submanifold_dim": 17.5}"#,
+        r#"{"method": "pogo", "lr": 0.1, "seed": -1}"#,
+        r#"{"method": "pogo", "lr": 0.1, "seed": 2.5}"#,
+        r#"{"method": "pogo", "lr": 0.1, "seed": "not-a-number"}"#,
+        r#"{"method": "pogo", "lr": 0.1, "engine": 2}"#,
+        r#"{"method": "pogo", "lr": 0.1, "base": {"kind": "momentum", "beta": "x"}}"#,
+    ] {
+        let j = Json::parse(text).unwrap();
+        assert!(OptimizerSpec::from_json(&j).is_err(), "{text}");
+    }
+}
+
+#[test]
+fn spec_seed_accepts_numeric_and_string_forms() {
+    // Small numeric seeds (hand-written manifests) parse fine…
+    let j = Json::parse(r#"{"method": "pogo", "lr": 0.1, "seed": 42}"#).unwrap();
+    assert_eq!(OptimizerSpec::from_json(&j).unwrap().seed, 42);
+    // …and the string form carries full u64 range exactly.
+    let spec = OptimizerSpec::new(Method::Pogo, 0.1).with_seed(u64::MAX);
+    let back =
+        OptimizerSpec::from_json(&Json::parse(&spec.to_json().to_string()).unwrap())
+            .unwrap();
+    assert_eq!(back.seed, u64::MAX);
+}
+
+// ---------------------------------------------------------------------------
+// Generic build::<f64> parity with the legacy precision.rs constructors
+// ---------------------------------------------------------------------------
+
+/// The legacy `precision.rs::build_opt` construction, reproduced verbatim
+/// so the registry path can be checked against it.
+fn legacy_build_f64(spec: &OptimizerSpec) -> Box<dyn Orthoptimizer<f64>> {
+    match spec.method {
+        Method::Pogo => Box::new(Pogo::<f64>::new(
+            PogoConfig { lr: spec.lr, base: spec.base, ..Default::default() },
+            1,
+        )),
+        Method::Landing => Box::new(Landing::<f64>::new(
+            LandingConfig { lr: spec.lr, base: spec.base, ..Default::default() },
+            1,
+        )),
+        Method::Rgd => {
+            Box::new(Rgd::<f64>::new(RgdConfig { lr: spec.lr, base: BaseOptKind::Sgd }, 1))
+        }
+        Method::Rsdm => Box::new(Rsdm::<f64>::new(
+            RsdmConfig {
+                lr: spec.lr,
+                submanifold_dim: spec.submanifold_dim,
+                base: BaseOptKind::Sgd,
+                seed: spec.seed,
+                ..Default::default()
+            },
+            1,
+        )),
+        _ => unreachable!("precision ablation lineup"),
+    }
+}
+
+#[test]
+fn generic_f64_build_matches_legacy_precision_path() {
+    // The FigC1 lineup at its paper presets — exactly what precision.rs
+    // used to hand-construct.
+    for method in [Method::Pogo, Method::Landing, Method::Rgd, Method::Rsdm] {
+        let spec = spec_for(ExperimentId::FigC1Precision, method);
+        let mut new_opt = spec.build::<f64>(None, (1, 8, 14)).unwrap();
+        let mut old_opt = legacy_build_f64(&spec);
+
+        let mut rng = Rng::seed_from_u64(7);
+        let mut x_new = stiefel::random_point_t::<f64>(8, 14, &mut rng);
+        let mut x_old = x_new.clone();
+        let grads: Vec<MatD> = (0..5).map(|_| MatD::randn(8, 14, &mut rng)).collect();
+        for g in &grads {
+            new_opt.step(0, &mut x_new, g).unwrap();
+            old_opt.step(0, &mut x_old, g).unwrap();
+        }
+        let diff = x_new.sub(&x_old).max_abs();
+        assert!(
+            diff <= 1e-12,
+            "{}: registry vs legacy trajectories diverged by {diff}",
+            method.name()
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fallible stepping / error propagation
+// ---------------------------------------------------------------------------
+
+/// Registry with a valid (but empty) manifest: every artifact is missing.
+/// `tag` keeps concurrently-running tests in separate directories.
+fn empty_registry(tag: &str) -> (std::path::PathBuf, pogo::runtime::Registry) {
+    let dir = std::env::temp_dir()
+        .join(format!("pogo_empty_artifacts_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), r#"{"entries": {}}"#).unwrap();
+    let reg = pogo::runtime::Registry::open(&dir).unwrap();
+    (dir, reg)
+}
+
+#[test]
+fn missing_artifact_xla_spec_errors_instead_of_panicking() {
+    let (dir, reg) = empty_registry("missing");
+    let spec = OptimizerSpec::new(Method::Pogo, 0.1).with_engine(Engine::Xla);
+
+    // Direct build: the missing step artifact is a clean error that names
+    // the artifact problem.
+    let err = spec.build::<f32>(Some(&reg), (4, 8, 16)).unwrap_err();
+    let text = format!("{err:#}");
+    assert!(text.contains("rebuild artifacts") || text.contains("no artifact"), "{text}");
+
+    // Through the Trainer: same error, still no panic.
+    let mut rng = Rng::seed_from_u64(0);
+    let mut store = ParamStore::new();
+    store.add_stiefel_group("x", 4, 8, 16, &mut rng);
+    let result = Trainer::new(store, spec, Some(&reg), TrainerConfig::default());
+    assert!(result.is_err());
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn xla_engine_rejects_non_f32_scalars() {
+    let (dir, reg) = empty_registry("scalar");
+    let spec = OptimizerSpec::new(Method::Rgd, 0.1).with_engine(Engine::Xla);
+    // RGD has no XLA engine at all — the step-kind gate fires first.
+    let err = spec.build::<f64>(Some(&reg), (1, 4, 8)).unwrap_err();
+    assert!(format!("{err}").contains("no XLA engine"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A stepper whose engine fails on the second group dispatch.
+struct FlakyStepper {
+    calls: usize,
+}
+
+impl Orthoptimizer<f32> for FlakyStepper {
+    fn step(&mut self, _idx: usize, _x: &mut Mat<f32>, _g: &Mat<f32>) -> anyhow::Result<()> {
+        self.calls += 1;
+        if self.calls > 4 {
+            anyhow::bail!("simulated dispatch failure at call {}", self.calls);
+        }
+        Ok(())
+    }
+    fn name(&self) -> &str {
+        "flaky"
+    }
+    fn lr(&self) -> f64 {
+        0.1
+    }
+    fn set_lr(&mut self, _lr: f64) {}
+}
+
+#[test]
+fn step_group_errors_propagate_to_trainer() {
+    let mut rng = Rng::seed_from_u64(1);
+    let mut store = ParamStore::new();
+    store.add_stiefel_group("x", 4, 4, 8, &mut rng);
+    let groups = store.stiefel_groups();
+    let session =
+        OptimSession::from_parts("flaky", groups, vec![Box::new(FlakyStepper { calls: 0 })])
+            .unwrap();
+    let mut tr = Trainer::with_session(
+        store,
+        session,
+        TrainerConfig { max_steps: 10, ..Default::default() },
+    );
+    let mut src = |store: &ParamStore| {
+        let grads: Vec<_> =
+            store.params().iter().map(|p| p.mat.scale(0.0)).collect();
+        Ok((1.0, grads))
+    };
+    // First step: 4 sub-steps succeed. Second step: the 5th call fails and
+    // the error must reach the caller as a Result, not a panic.
+    assert!(tr.step(&mut src).is_ok());
+    let err = tr.step(&mut src).unwrap_err();
+    let text = format!("{err:#}");
+    assert!(text.contains("simulated dispatch failure"), "{text}");
+    assert!(text.contains("stepping group"), "{text}");
+}

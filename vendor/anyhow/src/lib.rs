@@ -1,0 +1,215 @@
+//! Minimal vendored subset of the `anyhow` API.
+//!
+//! The offline build environment has no crates.io access, so this crate
+//! reimplements exactly the surface the workspace uses: [`Error`],
+//! [`Result`], the [`anyhow!`]/[`bail!`]/[`ensure!`] macros, and the
+//! [`Context`] extension trait for `Result` and `Option`.
+//!
+//! Causes are flattened to strings at conversion time (no source-chain
+//! downcasting), which is all the coordinator needs for its diagnostics.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A dynamic error: an outermost description plus a flattened cause chain.
+pub struct Error {
+    /// `chain[0]` is the outermost context; deeper causes follow.
+    chain: Vec<String>,
+}
+
+/// `Result<T, anyhow::Error>`, with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap the error with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context/cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` prints the whole chain, anyhow-style.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: like real anyhow, `Error` must NOT implement `std::error::Error` —
+// this blanket conversion would conflict with the reflexive `From`.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(context)
+        })
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(f())
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any `Display` value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)+))
+    };
+}
+
+/// Return early with an [`Error`] if the condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($t)+));
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = io_err().into();
+        let e = e.context("loading config");
+        assert_eq!(format!("{e}"), "loading config");
+        assert_eq!(format!("{e:#}"), "loading config: missing file");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("step {}", 3)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "step 3: missing file");
+        let o: Option<u8> = None;
+        assert_eq!(format!("{}", o.context("empty").unwrap_err()), "empty");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let x = 7;
+        let e = anyhow!("bad value {x}");
+        assert_eq!(format!("{e}"), "bad value 7");
+        let e = anyhow!("bad {} of {}", "kind", 2);
+        assert_eq!(format!("{e}"), "bad kind of 2");
+        fn f(ok: bool) -> Result<u8> {
+            ensure!(ok, "not ok: {}", 1);
+            Ok(1)
+        }
+        assert!(f(false).is_err());
+        assert_eq!(f(true).unwrap(), 1);
+        fn g() -> Result<u8> {
+            bail!("always");
+        }
+        assert!(g().is_err());
+    }
+}
