@@ -1,11 +1,17 @@
 //! Micro-benchmarks: single-step latency of every orthoptimizer at the
-//! paper's shape regimes, on both engines, plus the linalg substrate's
+//! paper's shape regimes, on all engines, plus the linalg substrate's
 //! primitive costs. This quantifies the paper's Table-level claim that the
 //! POGO update is "5 matrix products" away from unconstrained SGD while
 //! QR-class retractions pay host-side, non-batchable costs.
+//!
+//! The batched-vs-loop sweep at the Fig. 1 regime additionally writes
+//! `BENCH_scale.json` (redirect with `POGO_BENCH_JSON`); CI's
+//! `bench-smoke` job runs this bench with `POGO_BENCH_QUICK=1` and fails
+//! if `speedup_batched_vs_loop` drops below 1 at B = 4096.
 
-use pogo::bench::{bench, bench_items, print_table, BenchOpts, Stats};
+use pogo::bench::{bench, bench_items, print_table, BenchOpts, ScaleRecord, Stats};
 use pogo::coordinator::OptimizerSpec;
+use pogo::experiments::scale::make_group;
 use pogo::linalg::{matmul, matmul_a_bt, qr_retract_rows, MatF};
 use pogo::manifold::stiefel;
 use pogo::optim::{Engine, Method};
@@ -49,6 +55,58 @@ fn main() {
         xs[0] = x.clone();
     }
     print_table("optimizer single-matrix step (rust engine)", &rust_steps);
+
+    // ---- Batched host engine vs per-matrix loop (Fig. 1 regime). --------
+    // The headline of the batched subsystem: µs/matrix of ONE packed
+    // (B, 3, 3) step against the sequential loop, plus the speedup map
+    // that lands in BENCH_scale.json.
+    let quick = std::env::var("POGO_BENCH_QUICK").is_ok();
+    // Below B ≈ 19.4k the batched engine wins on packing alone (serial
+    // kernels, no allocator churn); only B = 32768 crosses
+    // BATCH_PAR_FLOPS and also exercises the pool-sharded path, which is
+    // why the ≥4× target is stated there and CI's robust gate is the
+    // packing-only B = 4096 point.
+    let batches: &[usize] = if quick {
+        &[512, 4096, 8192]
+    } else {
+        &[64, 512, 4096, 8192, 32768]
+    };
+    let mut host_stats: Vec<Stats> = Vec::new();
+    let mut scale_rows: Vec<ScaleRecord> = Vec::new();
+    let mut speedups: Vec<(usize, f64)> = Vec::new();
+    for &b in batches {
+        let spec = OptimizerSpec::new(Method::Pogo, 0.1);
+        let mut measure = |label: &str, engine: Engine| {
+            let mut opt = spec.with_engine(engine).build::<f32>(None, (b, 3, 3)).unwrap();
+            let (mut xs, gs) = make_group(b, &mut rng);
+            opt.step_group(&mut xs, &gs).unwrap(); // warm-up (pool, allocator)
+            let s = bench_items(&format!("{label} B={b} 3x3"), opts, b as f64, || {
+                opt.step_group(&mut xs, &gs).unwrap();
+            });
+            scale_rows.push(ScaleRecord {
+                label: label.to_string(),
+                batch: b,
+                us_per_matrix: s.mean * 1e6 / b as f64,
+            });
+            let mean = s.mean;
+            host_stats.push(s);
+            mean
+        };
+        let t_loop = measure("POGO[loop]", Engine::Rust);
+        let t_batched = measure("POGO[batched]", Engine::BatchedHost);
+        if t_batched > 0.0 {
+            speedups.push((b, t_loop / t_batched));
+        }
+    }
+    print_table("POGO batched host engine vs per-matrix loop (matrices/s)", &host_stats);
+    for &(b, s) in &speedups {
+        println!("  batched-vs-loop speedup at B={b}: {s:.2}x");
+    }
+    let default_json = pogo::repo_root().join("BENCH_scale.json");
+    match pogo::bench::write_scale_json(&default_json, &scale_rows, &speedups) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("failed to write BENCH_scale.json: {e}"),
+    }
 
     // ---- XLA-engine steps (matmul-only methods). -------------------------
     match Registry::open_default() {

@@ -154,6 +154,65 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// One batched-vs-loop scalability measurement (a `BENCH_scale.json` row).
+#[derive(Clone, Debug)]
+pub struct ScaleRecord {
+    /// Engine-qualified label, e.g. `POGO[batched]`.
+    pub label: String,
+    /// Group size B.
+    pub batch: usize,
+    /// Mean per-matrix step cost, microseconds.
+    pub us_per_matrix: f64,
+}
+
+/// Machine-readable scalability report. `speedups` maps each measured B
+/// to the batched-over-loop throughput ratio (`>1` = batched faster);
+/// that map is what CI's `bench-smoke` job gates on.
+pub fn scale_json(records: &[ScaleRecord], speedups: &[(usize, f64)]) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    let recs = records.iter().map(|r| {
+        Json::obj(vec![
+            ("label", Json::str(r.label.clone())),
+            ("batch", Json::num(r.batch as f64)),
+            ("us_per_matrix", Json::num(r.us_per_matrix)),
+        ])
+    });
+    let speedup_map: std::collections::BTreeMap<String, Json> = speedups
+        .iter()
+        .map(|&(b, s)| (b.to_string(), Json::num(s)))
+        .collect();
+    Json::obj(vec![
+        ("unit", Json::str("us_per_matrix_step")),
+        ("threads", Json::num(crate::util::pool::num_threads() as f64)),
+        ("records", Json::arr(recs)),
+        ("speedup_batched_vs_loop", Json::Obj(speedup_map)),
+    ])
+}
+
+/// Write `BENCH_scale.json` to `default_path` — unless `POGO_BENCH_JSON`
+/// is set, which redirects the output wherever the caller's environment
+/// wants it (CI points it at the workspace root before uploading the
+/// artifact). Both emitters (`cargo bench --bench step_micro` and
+/// `pogo run scale`) route through here so the format and the redirect
+/// cannot drift. Returns the path actually written.
+pub fn write_scale_json(
+    default_path: &std::path::Path,
+    records: &[ScaleRecord],
+    speedups: &[(usize, f64)],
+) -> std::io::Result<std::path::PathBuf> {
+    let path = match std::env::var("POGO_BENCH_JSON") {
+        Ok(p) => std::path::PathBuf::from(p),
+        Err(_) => default_path.to_path_buf(),
+    };
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(&path, scale_json(records, speedups).to_string_pretty() + "\n")?;
+    Ok(path)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -167,6 +226,21 @@ mod tests {
         assert!(s.mean > 0.0);
         assert!(s.min <= s.p50 && s.p50 <= s.max);
         assert!(s.p99 <= s.max + 1e-12);
+    }
+
+    #[test]
+    fn scale_json_shape() {
+        let records = vec![
+            ScaleRecord { label: "POGO[loop]".into(), batch: 64, us_per_matrix: 2.0 },
+            ScaleRecord { label: "POGO[batched]".into(), batch: 64, us_per_matrix: 0.5 },
+        ];
+        let j = scale_json(&records, &[(64, 4.0)]);
+        assert_eq!(j.get("unit").as_str(), Some("us_per_matrix_step"));
+        assert_eq!(j.get("records").as_arr().unwrap().len(), 2);
+        assert_eq!(j.get("speedup_batched_vs_loop").get("64").as_f64(), Some(4.0));
+        // Round-trips through the in-crate parser (what CI's jq reads).
+        let back = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back, j);
     }
 
     #[test]

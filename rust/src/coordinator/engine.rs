@@ -87,6 +87,7 @@ impl OptimizerSpec {
     pub fn label(&self) -> String {
         let eng = match self.engine {
             Engine::Rust => "",
+            Engine::BatchedHost => "[batched]",
             Engine::Xla => "[xla]",
         };
         format!("{}{eng}", self.method.name())
@@ -104,24 +105,29 @@ impl OptimizerSpec {
     /// `registry` is required for `Engine::Xla`; the artifact for the
     /// group shape must exist (aot.py emits one per experiment shape).
     /// The XLA engine is f32-only — requesting it at another precision is
-    /// an error, not a silent fallback.
+    /// an error, not a silent fallback. `Engine::BatchedHost` packs the
+    /// whole group into one `(B, p, n)` tensor and is scalar-generic like
+    /// the per-matrix host engine.
     pub fn build<S: crate::linalg::Scalar>(
         &self,
         registry: Option<&Registry>,
         group: (usize, usize, usize),
     ) -> Result<Box<dyn Orthoptimizer<S>>> {
         let (b, p, n) = group;
-        if self.engine == Engine::Xla {
-            let reg = registry.ok_or_else(|| anyhow!("XLA engine needs a registry"))?;
-            let stepper = methods::build_xla(self, reg, b, p, n)?;
-            return into_scalar_engine::<S>(Box::new(stepper)).ok_or_else(|| {
-                anyhow!(
-                    "XLA engine only supports f32 (requested {})",
-                    std::any::type_name::<S>()
-                )
-            });
+        match self.engine {
+            Engine::Xla => {
+                let reg = registry.ok_or_else(|| anyhow!("XLA engine needs a registry"))?;
+                let stepper = methods::build_xla(self, reg, b, p, n)?;
+                into_scalar_engine::<S>(Box::new(stepper)).ok_or_else(|| {
+                    anyhow!(
+                        "XLA engine only supports f32 (requested {})",
+                        std::any::type_name::<S>()
+                    )
+                })
+            }
+            Engine::BatchedHost => methods::build_batched_host::<S>(self),
+            Engine::Rust => methods::build_host::<S>(self, b),
         }
-        methods::build_host::<S>(self, b)
     }
 
     /// Build a complex-Stiefel (unitary) optimizer for `n_params`
@@ -289,6 +295,28 @@ mod tests {
             opt.step(0, &mut x, &g).unwrap();
             assert!(x.all_finite(), "{}", m.name());
         }
+    }
+
+    #[test]
+    fn batched_host_engine_builds_without_registry() {
+        let mut rng = Rng::seed_from_u64(5);
+        let spec = OptimizerSpec::new(Method::Pogo, 0.05).with_engine(Engine::BatchedHost);
+        assert_eq!(spec.label(), "POGO[batched]");
+        let mut opt = spec.build::<f32>(None, (3, 4, 8)).unwrap();
+        assert!(opt.prefers_batch());
+        let mut xs: Vec<crate::linalg::MatF> =
+            (0..3).map(|_| stiefel::random_point(4, 8, &mut rng)).collect();
+        let gs: Vec<crate::linalg::MatF> =
+            (0..3).map(|_| crate::linalg::MatF::randn(4, 8, &mut rng)).collect();
+        opt.step_group(&mut xs, &gs).unwrap();
+        for x in &xs {
+            assert!(x.all_finite());
+        }
+        // Scalar-generic, like the host loop.
+        assert!(spec.build::<f64>(None, (3, 4, 8)).is_ok());
+        // Retraction methods have no batched engine.
+        let rgd = OptimizerSpec::new(Method::Rgd, 0.05).with_engine(Engine::BatchedHost);
+        assert!(rgd.build::<f32>(None, (3, 4, 8)).is_err());
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! `(B, 3, 3)` groups, each updated by ONE XLA dispatch (or one Rust loop),
 //! instead of 10⁴ tiny QR calls.
 
-use crate::linalg::MatF;
+use crate::linalg::{BatchMat, MatF};
 use crate::manifold::stiefel;
 use crate::rng::Rng;
 use std::collections::BTreeMap;
@@ -161,6 +161,27 @@ impl ParamStore {
         g.indices.iter().map(|&i| self.params[i].mat.clone()).collect()
     }
 
+    /// Pack a group's matrices into one contiguous `(B, p, n)` tensor —
+    /// the batched engine's unit of dispatch (no per-matrix allocations).
+    pub fn extract_group_batch(&self, g: &Group) -> BatchMat<f32> {
+        let (p, n) = g.shape;
+        let mut batch = BatchMat::zeros(g.indices.len(), p, n);
+        for (bi, &i) in g.indices.iter().enumerate() {
+            batch.set_mat(bi, &self.params[i].mat);
+        }
+        batch
+    }
+
+    /// Write a stepped `(B, p, n)` tensor back into a group's parameters.
+    pub fn write_group_batch(&mut self, g: &Group, batch: &BatchMat<f32>) {
+        assert_eq!(batch.batch(), g.indices.len(), "batch size vs group size");
+        for (bi, &i) in g.indices.iter().enumerate() {
+            let m = &mut self.params[i].mat;
+            debug_assert_eq!(m.shape(), batch.mat_shape());
+            m.as_mut_slice().copy_from_slice(batch.mat(bi));
+        }
+    }
+
     /// Write updated matrices back into a group.
     pub fn write_group(&mut self, g: &Group, mats: Vec<MatF>) {
         assert_eq!(mats.len(), g.indices.len());
@@ -226,6 +247,24 @@ mod tests {
             (0..store.len()).filter(|&i| store.get(i).constraint == Constraint::Stiefel)
                 .collect();
         assert_eq!(all, expected);
+    }
+
+    #[test]
+    fn batch_extract_write_roundtrip() {
+        let mut rng = Rng::seed_from_u64(4);
+        let mut store = ParamStore::new();
+        store.add_stiefel_group("g", 5, 3, 6, &mut rng);
+        let groups = store.stiefel_groups();
+        let mut batch = store.extract_group_batch(&groups[0]);
+        assert_eq!(batch.shape(), (5, 3, 6));
+        // Matches the per-matrix extraction exactly.
+        for (bi, m) in store.extract_group(&groups[0]).iter().enumerate() {
+            assert_eq!(batch.mat(bi), m.as_slice());
+        }
+        batch.mat_mut(3).fill(0.0);
+        store.write_group_batch(&groups[0], &batch);
+        assert_eq!(store.mat(3).norm_sq(), 0.0);
+        assert!(store.mat(2).norm_sq() > 0.0);
     }
 
     #[test]

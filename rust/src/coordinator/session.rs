@@ -9,7 +9,7 @@
 
 use super::engine::OptimizerSpec;
 use super::param_store::{Group, ParamStore};
-use crate::linalg::MatF;
+use crate::linalg::{BatchMat, MatF};
 use crate::optim::Orthoptimizer;
 use crate::runtime::Registry;
 use anyhow::{ensure, Context, Result};
@@ -89,19 +89,37 @@ impl OptimSession {
     /// matrices, dispatch one batched step, write the results back.
     /// `grads` is indexed by store parameter index (free-parameter slots
     /// are ignored). Errors from any group's engine propagate.
+    ///
+    /// Engines whose native unit of work is a packed tensor
+    /// (`prefers_batch()`, e.g. `Engine::BatchedHost`) get the whole
+    /// group as ONE `(B, p, n)` [`BatchMat`] — no per-matrix clones on
+    /// either side of the step. Everything else keeps the per-matrix
+    /// `step_group` path.
     pub fn apply(&mut self, store: &mut ParamStore, grads: &[MatF]) -> Result<()> {
         for (g, stepper) in self.groups.iter().zip(&mut self.steppers) {
-            let mut xs = store.extract_group(g);
-            let gs: Vec<MatF> = g.indices.iter().map(|&i| grads[i].clone()).collect();
-            stepper.step_group(&mut xs, &gs).with_context(|| {
+            let ctx = || {
                 format!(
                     "stepping group ({}, {}){}",
                     g.shape.0,
                     g.shape.1,
                     if g.key.is_empty() { String::new() } else { format!(" '{}'", g.key) }
                 )
-            })?;
-            store.write_group(g, xs);
+            };
+            if stepper.prefers_batch() {
+                let mut xb = store.extract_group_batch(g);
+                let (p, n) = g.shape;
+                let mut gb = BatchMat::<f32>::zeros(g.indices.len(), p, n);
+                for (bi, &i) in g.indices.iter().enumerate() {
+                    gb.set_mat(bi, &grads[i]);
+                }
+                stepper.step_batch(&mut xb, &gb).with_context(ctx)?;
+                store.write_group_batch(g, &xb);
+            } else {
+                let mut xs = store.extract_group(g);
+                let gs: Vec<MatF> = g.indices.iter().map(|&i| grads[i].clone()).collect();
+                stepper.step_group(&mut xs, &gs).with_context(ctx)?;
+                store.write_group(g, xs);
+            }
         }
         Ok(())
     }
@@ -153,6 +171,38 @@ mod tests {
         assert_eq!(session.lr(), 0.01);
         for s in session.steppers() {
             assert_eq!(s.lr(), 0.01);
+        }
+    }
+
+    #[test]
+    fn batched_engine_session_matches_loop_engine() {
+        use crate::optim::Engine;
+        let mut rng = Rng::seed_from_u64(9);
+        let mut store_loop = ParamStore::new();
+        store_loop.add_stiefel_group("k", 6, 3, 3, &mut rng);
+        store_loop.add_stiefel_group("w", 2, 4, 8, &mut rng);
+        let store_batched = store_loop.clone();
+        let grads: Vec<MatF> = store_loop
+            .params()
+            .iter()
+            .map(|p| MatF::randn(p.mat.rows(), p.mat.cols(), &mut rng).scale(0.1))
+            .collect();
+
+        let spec = OptimizerSpec::new(Method::Pogo, 0.05);
+        let mut s_loop = OptimSession::new(&spec, &store_loop, None).unwrap();
+        let mut s_batched =
+            OptimSession::new(&spec.with_engine(Engine::BatchedHost), &store_batched, None)
+                .unwrap();
+        assert!(s_batched.steppers().iter().all(|s| s.prefers_batch()));
+
+        let mut store_batched = store_batched;
+        for _ in 0..3 {
+            s_loop.apply(&mut store_loop, &grads).unwrap();
+            s_batched.apply(&mut store_batched, &grads).unwrap();
+        }
+        for i in 0..store_loop.len() {
+            let d = store_loop.mat(i).sub(store_batched.mat(i)).max_abs();
+            assert!(d <= 1e-6, "param {i} diverged by {d}");
         }
     }
 

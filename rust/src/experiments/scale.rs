@@ -2,21 +2,29 @@
 //! cost as the number of orthogonal 3×3 matrices grows.
 //!
 //! Compares, at B ∈ {64, 512, 4096, 32768} matrices:
-//! - **POGO[xla]** — ONE batched AOT dispatch per step (the coordinator's
-//!   scalability mechanism);
-//! - **POGO[rust]** — same math, per-matrix host loop;
-//! - **RGD** — per-matrix QR retraction (host, sequential);
-//! - **RSDM(r=2)** — per-matrix submanifold QR.
+//! - **POGO[batched]** — the batched host engine: ONE `(B, 3, 3)` tensor
+//!   stepped with batch-parallel kernels (`Engine::BatchedHost`);
+//! - **POGO[loop]** — same math, sequential per-matrix host loop (a 3×3
+//!   matmul never crosses the thread threshold, so the pool sits idle —
+//!   exactly what this sweep quantifies);
+//! - **POGO[xla]** — ONE batched AOT dispatch per step, when the artifact
+//!   registry is available (`make artifacts`);
+//! - **RGD** / **RSDM(r=2)** — per-matrix QR retraction baselines.
 //!
 //! Reports µs/matrix/step and the extrapolated wall time for the paper's
 //! 218 624-kernel workload at 100 epochs — the Fig. 1 x-axis, regenerated.
+//! Besides the usual CSVs, the sweep emits a machine-readable
+//! `BENCH_scale.json` (see `bench::scale_json`) whose
+//! `speedup_batched_vs_loop` map is the number CI's `bench-smoke` job
+//! gates on.
 
 use super::common::{self, RunRecord};
+use crate::bench::ScaleRecord;
 use crate::config::{resolve_spec, RunConfig};
-use crate::coordinator::MetricLog;
+use crate::coordinator::{MetricLog, OptimizerSpec};
 use crate::linalg::MatF;
 use crate::manifold::stiefel;
-use crate::optim::Orthoptimizer;
+use crate::optim::{Engine, Method, Orthoptimizer};
 use crate::rng::Rng;
 use crate::util::Stopwatch;
 use anyhow::Result;
@@ -27,7 +35,16 @@ pub const BATCHES: [usize; 4] = [64, 512, 4096, 32768];
 pub const PAPER_KERNELS: usize = 218_624;
 pub const PAPER_STEPS: usize = 9_800; // ≈100 epochs × 98 steps/epoch
 
-fn make_group(b: usize, rng: &mut Rng) -> (Vec<MatF>, Vec<MatF>) {
+/// Engine-contender labels (stable: `BENCH_scale.json` consumers key on
+/// them).
+pub const LABEL_LOOP: &str = "POGO[loop]";
+pub const LABEL_BATCHED: &str = "POGO[batched]";
+pub const LABEL_XLA: &str = "POGO[xla]";
+
+/// The Fig. 1 workload generator: B random 3×3 Stiefel points plus
+/// norm-0.5 gradients. Shared with `benches/step_micro.rs` so the
+/// CI-gated benchmark measures exactly this sweep's workload.
+pub fn make_group(b: usize, rng: &mut Rng) -> (Vec<MatF>, Vec<MatF>) {
     let xs: Vec<MatF> = (0..b).map(|_| stiefel::random_point(3, 3, rng)).collect();
     let gs: Vec<MatF> = (0..b)
         .map(|_| {
@@ -53,58 +70,102 @@ fn time_method(
     Ok(sw.seconds() * 1e6 / (steps as f64 * xs.len() as f64))
 }
 
+/// The engine contenders to run for `method`. POGO — the paper's
+/// scalability mechanism — races its host loop against the batched host
+/// engine (and the XLA engine when artifacts exist); every baseline runs
+/// its usual single engine. An explicit `--spec` replay pins exactly the
+/// engine it names.
+fn contenders(cfg: &RunConfig, method: Method, has_registry: bool) -> Vec<(String, OptimizerSpec)> {
+    if let Some(s) = cfg.spec {
+        if s.method == method {
+            return vec![(s.label(), s)];
+        }
+    }
+    if method != Method::Pogo {
+        let spec = resolve_spec(cfg, method);
+        return vec![(spec.label(), spec)];
+    }
+    let preset = resolve_spec(cfg, Method::Pogo);
+    let mut v = vec![
+        (LABEL_LOOP.to_string(), preset.with_engine(Engine::Rust)),
+        (LABEL_BATCHED.to_string(), preset.with_engine(Engine::BatchedHost)),
+    ];
+    if has_registry {
+        v.push((LABEL_XLA.to_string(), preset.with_engine(Engine::Xla)));
+    }
+    v
+}
+
 /// Run the scalability sweep.
 pub fn run(cfg: &RunConfig) -> Result<()> {
-    let reg = common::open_registry()?;
+    // The registry is only needed by the XLA contender — the host engines
+    // (loop + batched) must run anywhere, including CI's bench-smoke job,
+    // which has no AOT artifacts.
+    let reg = match common::open_registry() {
+        Ok(r) => Some(r),
+        Err(e) => {
+            log::warn!("no artifact registry — skipping the XLA contender ({e:#})");
+            None
+        }
+    };
     let steps = if cfg.quick { 3 } else { cfg.steps };
+    let batches: &[usize] = if cfg.quick { &BATCHES[..3] } else { &BATCHES };
     let mut records = Vec::new();
-    let batches: &[usize] = if cfg.quick { &BATCHES[..2] } else { &BATCHES };
+    let mut bench_rows: Vec<ScaleRecord> = Vec::new();
 
     for &method in &cfg.methods {
-        let mut log = MetricLog::new(method.name());
-        for &b in batches {
-            // Retraction baselines get prohibitively slow at large B;
-            // subsample their step count to keep the sweep bounded, the
-            // per-matrix metric is unaffected.
-            let eff_steps = if method.is_matmul_only() { steps } else { steps.min(5) };
-            let mut rng = Rng::seed_from_u64(cfg.seed + b as u64);
-            let (mut xs, gs) = make_group(b, &mut rng);
-            // Engines per the scale preset: POGO is the batched-XLA
-            // contender; every baseline runs its host loop (Landing's
-            // batched artifacts exist only at the CNN shapes — its
-            // per-step math matches POGO's anyway, the loop overhead is
-            // the point of this figure).
-            let spec = resolve_spec(cfg, method);
-            let mut opt = spec.build::<f32>(Some(&reg), (b, 3, 3))?;
-            // Warm-up dispatch (compile cache, allocator).
-            opt.step_group(&mut xs, &gs)?;
-            let us_per_mat = time_method(opt.as_mut(), &mut xs, &gs, eff_steps)?;
-            let paper_hours =
-                us_per_mat * PAPER_KERNELS as f64 * PAPER_STEPS as f64 / 1e6 / 3600.0;
-            log.record(b, &[
-                ("batch", b as f64),
-                ("us_per_matrix", us_per_mat),
-                ("paper_workload_hours", paper_hours),
-            ]);
-            log::info!(
-                "{} B={b}: {us_per_mat:.2} µs/matrix (paper workload ≈ {paper_hours:.2} h)",
-                spec.label()
-            );
-            // Feasibility must hold even at scale.
-            let max_d = xs.iter().map(stiefel::distance).fold(0.0, f64::max);
-            assert!(max_d < 0.6, "{}: drifted at B={b}: {max_d}", spec.label());
+        for (label, spec) in contenders(cfg, method, reg.is_some()) {
+            let mut log = MetricLog::new(label.clone());
+            for &b in batches {
+                // Retraction baselines get prohibitively slow at large B;
+                // subsample their step count to keep the sweep bounded, the
+                // per-matrix metric is unaffected.
+                let eff_steps = if method.is_matmul_only() { steps } else { steps.min(5) };
+                let mut rng = Rng::seed_from_u64(cfg.seed + b as u64);
+                let (mut xs, gs) = make_group(b, &mut rng);
+                let mut opt = spec.build::<f32>(reg.as_ref(), (b, 3, 3))?;
+                // Warm-up dispatch (compile cache, allocator, pool).
+                opt.step_group(&mut xs, &gs)?;
+                let us_per_mat = time_method(opt.as_mut(), &mut xs, &gs, eff_steps)?;
+                let paper_hours =
+                    us_per_mat * PAPER_KERNELS as f64 * PAPER_STEPS as f64 / 1e6 / 3600.0;
+                log.record(b, &[
+                    ("batch", b as f64),
+                    ("us_per_matrix", us_per_mat),
+                    ("paper_workload_hours", paper_hours),
+                ]);
+                bench_rows.push(ScaleRecord {
+                    label: label.clone(),
+                    batch: b,
+                    us_per_matrix: us_per_mat,
+                });
+                log::info!(
+                    "{label} B={b}: {us_per_mat:.2} µs/matrix (paper workload ≈ \
+                     {paper_hours:.2} h)"
+                );
+                // Feasibility must hold even at scale.
+                let max_d = xs.iter().map(stiefel::distance).fold(0.0, f64::max);
+                assert!(max_d < 0.6, "{label}: drifted at B={b}: {max_d}");
+            }
+            let wall = log.elapsed();
+            let rec = RunRecord { method, label, log, wall_s: wall, spec: Some(spec) };
+            common::emit(cfg, &rec, 0)?;
+            records.push(rec);
         }
-        let wall = log.elapsed();
-        let rec = RunRecord {
-            method,
-            label: method.name().to_string(),
-            log,
-            wall_s: wall,
-            spec: Some(resolve_spec(cfg, method)),
-        };
-        common::emit(cfg, &rec, 0)?;
-        records.push(rec);
     }
+
+    // Machine-readable sweep summary + the batched-vs-loop speedup map
+    // (CI's regression gate).
+    let speedups = batched_speedups(&bench_rows, batches);
+    for &(b, s) in &speedups {
+        log::info!("batched-vs-loop speedup at B={b}: {s:.2}×");
+    }
+    let json_path = crate::bench::write_scale_json(
+        &cfg.out_dir.join("BENCH_scale.json"),
+        &bench_rows,
+        &speedups,
+    )?;
+    log::info!("wrote {}", json_path.display());
 
     common::print_summary(
         "Scalability — µs per 3×3 matrix per step (Fig. 1 mechanism)",
@@ -114,9 +175,25 @@ pub fn run(cfg: &RunConfig) -> Result<()> {
     Ok(())
 }
 
+/// Batched-over-loop throughput ratio per batch size (`>1` ⇒ batched
+/// faster).
+fn batched_speedups(rows: &[ScaleRecord], batches: &[usize]) -> Vec<(usize, f64)> {
+    let find = |label: &str, b: usize| {
+        rows.iter().find(|r| r.label == label && r.batch == b).map(|r| r.us_per_matrix)
+    };
+    batches
+        .iter()
+        .filter_map(|&b| match (find(LABEL_LOOP, b), find(LABEL_BATCHED, b)) {
+            (Some(l), Some(bt)) if bt > 0.0 => Some((b, l / bt)),
+            _ => None,
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::ExperimentId;
     use crate::optim::Method;
 
     #[test]
@@ -145,5 +222,40 @@ mod tests {
         let t2 = time_method(o2.as_mut(), &mut xs2, &gs2, 20).unwrap();
         // Within an order of magnitude per matrix (loop overhead varies).
         assert!(t2 < t1 * 10.0 + 50.0, "t1={t1} t2={t2}");
+    }
+
+    #[test]
+    fn pogo_contenders_cover_host_engines() {
+        let cfg = RunConfig::new(ExperimentId::ScaleMatrices);
+        let c = contenders(&cfg, Method::Pogo, false);
+        let labels: Vec<&str> = c.iter().map(|(l, _)| l.as_str()).collect();
+        assert_eq!(labels, vec![LABEL_LOOP, LABEL_BATCHED]);
+        assert_eq!(c[0].1.engine, Engine::Rust);
+        assert_eq!(c[1].1.engine, Engine::BatchedHost);
+        // With a registry the XLA contender joins.
+        let c = contenders(&cfg, Method::Pogo, true);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c[2].1.engine, Engine::Xla);
+        // Baselines keep their single engine.
+        let c = contenders(&cfg, Method::Rgd, true);
+        assert_eq!(c.len(), 1);
+        // A --spec replay pins its own engine, no contender fan-out.
+        let mut cfg = cfg;
+        cfg.spec = Some(OptimizerSpec::new(Method::Pogo, 0.1));
+        let c = contenders(&cfg, Method::Pogo, true);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c[0].1.engine, Engine::Rust);
+    }
+
+    #[test]
+    fn speedup_map_pairs_loop_and_batched() {
+        let rows = vec![
+            ScaleRecord { label: LABEL_LOOP.into(), batch: 64, us_per_matrix: 4.0 },
+            ScaleRecord { label: LABEL_BATCHED.into(), batch: 64, us_per_matrix: 1.0 },
+            ScaleRecord { label: LABEL_XLA.into(), batch: 64, us_per_matrix: 0.5 },
+            ScaleRecord { label: LABEL_LOOP.into(), batch: 512, us_per_matrix: 4.0 },
+        ];
+        let s = batched_speedups(&rows, &[64, 512]);
+        assert_eq!(s, vec![(64, 4.0)]);
     }
 }

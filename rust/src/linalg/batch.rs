@@ -1,0 +1,556 @@
+//! Batched dense tensors: one contiguous `(B, p, n)` buffer holding B
+//! same-shape matrices, plus batched matmul kernels that parallelize
+//! **over the batch dimension**.
+//!
+//! This is the host-side answer to the paper's Fig. 1 regime: stepping
+//! thousands of tiny orthogonal matrices. A 3×3 product never crosses the
+//! per-call threshold in [`super::matmul`] (by design — see
+//! `worth_parallelizing` there), so a per-matrix loop leaves every worker
+//! idle. Here the unit of parallel work is a contiguous *chunk of the
+//! batch*: each worker runs the very same serial row-range kernels
+//! (`mm_rows` / `at_b_rows` / `a_bt_rows`) once per matrix in its chunk,
+//! which makes batched results bit-identical to the single-matrix entry
+//! points — the property the batched-vs-loop parity suite pins down.
+//!
+//! Layout: row-major per matrix, matrices contiguous (matrix `i` occupies
+//! `data[i·p·n .. (i+1)·p·n]`), matching the XLA engine's `(B, p, n)`
+//! literal layout so batches can cross engines without reshuffling.
+
+use super::mat::Mat;
+use super::matmul::{a_bt_rows, at_b_rows, mm_rows};
+use super::scalar::Scalar;
+use crate::util::pool;
+
+/// B same-shape matrices in one contiguous `(B, p, n)` buffer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BatchMat<S: Scalar> {
+    b: usize,
+    p: usize,
+    n: usize,
+    data: Vec<S>,
+}
+
+impl<S: Scalar> BatchMat<S> {
+    /// Zero-filled batch.
+    pub fn zeros(b: usize, p: usize, n: usize) -> Self {
+        BatchMat { b, p, n, data: vec![S::ZERO; b * p * n] }
+    }
+
+    /// Pack a slice of same-shape matrices into one contiguous batch.
+    pub fn from_mats(mats: &[Mat<S>]) -> Self {
+        if mats.is_empty() {
+            return BatchMat::zeros(0, 0, 0);
+        }
+        let (p, n) = mats[0].shape();
+        let mut out = BatchMat::zeros(mats.len(), p, n);
+        for (i, m) in mats.iter().enumerate() {
+            out.set_mat(i, m);
+        }
+        out
+    }
+
+    /// Copy matrix `m` into batch slot `i` (shapes must match).
+    pub fn set_mat(&mut self, i: usize, m: &Mat<S>) {
+        assert_eq!(
+            m.shape(),
+            (self.p, self.n),
+            "batch slot {i}: matrix shape mismatch"
+        );
+        self.mat_mut(i).copy_from_slice(m.as_slice());
+    }
+
+    /// Unpack into an existing slice of same-shape matrices.
+    pub fn unpack_into(&self, out: &mut [Mat<S>]) {
+        assert_eq!(out.len(), self.b, "unpack: {} mats vs batch {}", out.len(), self.b);
+        for (i, m) in out.iter_mut().enumerate() {
+            assert_eq!(m.shape(), (self.p, self.n), "unpack slot {i}: shape mismatch");
+            m.as_mut_slice().copy_from_slice(self.mat(i));
+        }
+    }
+
+    /// Unpack into freshly-allocated matrices.
+    pub fn to_mats(&self) -> Vec<Mat<S>> {
+        (0..self.b).map(|i| self.copy_mat(i)).collect()
+    }
+
+    /// Copy batch element `i` out as a standalone matrix.
+    pub fn copy_mat(&self, i: usize) -> Mat<S> {
+        Mat::from_vec(self.p, self.n, self.mat(i).to_vec())
+    }
+
+    #[inline]
+    pub fn batch(&self) -> usize {
+        self.b
+    }
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.p
+    }
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.n
+    }
+    /// `(B, p, n)`.
+    #[inline]
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (self.b, self.p, self.n)
+    }
+    /// Per-matrix `(p, n)`.
+    #[inline]
+    pub fn mat_shape(&self) -> (usize, usize) {
+        (self.p, self.n)
+    }
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+    #[inline]
+    pub fn as_slice(&self) -> &[S] {
+        &self.data
+    }
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [S] {
+        &mut self.data
+    }
+
+    /// Borrow batch element `i` as a row-major slice.
+    #[inline]
+    pub fn mat(&self, i: usize) -> &[S] {
+        let stride = self.p * self.n;
+        &self.data[i * stride..(i + 1) * stride]
+    }
+
+    /// Borrow batch element `i` mutably.
+    #[inline]
+    pub fn mat_mut(&mut self, i: usize) -> &mut [S] {
+        let stride = self.p * self.n;
+        &mut self.data[i * stride..(i + 1) * stride]
+    }
+
+    /// `self += alpha · other`, elementwise over the whole batch
+    /// (batch-sharded across the pool on large buffers: the batched
+    /// step's elementwise passes move as much memory as its tiny
+    /// matmuls, so leaving them serial would cap multi-core scaling).
+    pub fn axpy(&mut self, alpha: S, other: &BatchMat<S>) {
+        assert_eq!(self.shape(), other.shape(), "batch shape mismatch in axpy");
+        let stride = self.p * self.n;
+        let odata = other.data.as_slice();
+        elementwise_chunks(&mut self.data, self.b, stride, |range, chunk| {
+            let o = &odata[range.start * stride..range.start * stride + chunk.len()];
+            for (a, &b) in chunk.iter_mut().zip(o) {
+                *a += alpha * b;
+            }
+        });
+    }
+
+    /// `self[i] += alphas[i] · other[i]` — a per-matrix coefficient (the
+    /// batched form of POGO's per-matrix λ and Landing's safeguarded η).
+    pub fn axpy_per_mat(&mut self, alphas: &[S], other: &BatchMat<S>) {
+        assert_eq!(self.shape(), other.shape(), "batch shape mismatch in axpy_per_mat");
+        assert_eq!(alphas.len(), self.b, "one alpha per batch element");
+        let stride = self.p * self.n;
+        let odata = other.data.as_slice();
+        elementwise_chunks(&mut self.data, self.b, stride, |range, chunk| {
+            for (ci, i) in range.enumerate() {
+                let alpha = alphas[i];
+                let o = &odata[i * stride..(i + 1) * stride];
+                let c = &mut chunk[ci * stride..(ci + 1) * stride];
+                for (a, &b) in c.iter_mut().zip(o) {
+                    *a += alpha * b;
+                }
+            }
+        });
+    }
+
+    /// Scale the whole batch in place (batch-sharded on large buffers).
+    pub fn scale_inplace(&mut self, alpha: S) {
+        let stride = self.p * self.n;
+        elementwise_chunks(&mut self.data, self.b, stride, |_range, chunk| {
+            for v in chunk.iter_mut() {
+                *v *= alpha;
+            }
+        });
+    }
+
+    /// `self[i] *= alphas[i]` — per-matrix scaling (LandingPC's per-matrix
+    /// gradient normalization, VAdam's per-matrix second moment).
+    pub fn scale_per_mat(&mut self, alphas: &[S]) {
+        assert_eq!(alphas.len(), self.b, "one alpha per batch element");
+        let stride = self.p * self.n;
+        elementwise_chunks(&mut self.data, self.b, stride, |range, chunk| {
+            for (ci, i) in range.enumerate() {
+                let alpha = alphas[i];
+                for v in chunk[ci * stride..(ci + 1) * stride].iter_mut() {
+                    *v *= alpha;
+                }
+            }
+        });
+    }
+
+    /// `self − other`, elementwise.
+    pub fn sub(&self, other: &BatchMat<S>) -> BatchMat<S> {
+        self.zip(other, |a, b| a - b)
+    }
+
+    /// Elementwise map into a new batch.
+    pub fn map(&self, f: impl Fn(S) -> S) -> BatchMat<S> {
+        BatchMat {
+            b: self.b,
+            p: self.p,
+            n: self.n,
+            data: self.data.iter().map(|&v| f(v)).collect(),
+        }
+    }
+
+    /// Elementwise binary op.
+    pub fn zip(&self, other: &BatchMat<S>, f: impl Fn(S, S) -> S) -> BatchMat<S> {
+        assert_eq!(self.shape(), other.shape(), "batch shape mismatch in zip");
+        BatchMat {
+            b: self.b,
+            p: self.p,
+            n: self.n,
+            data: self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect(),
+        }
+    }
+
+    /// Subtract the identity from every (square) matrix in the batch.
+    pub fn sub_eye_inplace(&mut self) {
+        assert_eq!(self.p, self.n, "sub_eye on non-square batch");
+        let stride = self.p * self.n;
+        for i in 0..self.b {
+            for d in 0..self.p {
+                self.data[i * stride + d * self.n + d] -= S::ONE;
+            }
+        }
+    }
+
+    /// Per-matrix symmetric part `(Aᵢ + Aᵢᵀ)/2` (square matrices), same
+    /// elementwise arithmetic as [`Mat::sym`].
+    pub fn sym_per_mat(&self) -> BatchMat<S> {
+        assert_eq!(self.p, self.n, "sym on non-square batch");
+        let half = S::from_f64(0.5);
+        let stride = self.p * self.n;
+        let mut out = BatchMat::zeros(self.b, self.p, self.n);
+        for i in 0..self.b {
+            let src = &self.data[i * stride..(i + 1) * stride];
+            let dst = &mut out.data[i * stride..(i + 1) * stride];
+            for r in 0..self.p {
+                for c in 0..self.n {
+                    dst[r * self.n + c] = (src[r * self.n + c] + src[c * self.n + r]) * half;
+                }
+            }
+        }
+        out
+    }
+
+    /// Per-matrix squared Frobenius norm, accumulated in the same order as
+    /// [`Mat::norm_sq`] (sequential over each matrix) so per-matrix and
+    /// batched optimizer state stay bit-identical.
+    pub fn norm_sq_per_mat(&self) -> Vec<S> {
+        let stride = self.p * self.n;
+        (0..self.b)
+            .map(|i| {
+                let mut acc = S::ZERO;
+                for &v in &self.data[i * stride..(i + 1) * stride] {
+                    acc += v * v;
+                }
+                acc
+            })
+            .collect()
+    }
+
+    /// Max |entry| over the whole batch.
+    pub fn max_abs(&self) -> S {
+        let mut m = S::ZERO;
+        for &v in &self.data {
+            m = m.max_s(v.abs());
+        }
+        m
+    }
+
+    /// True if every entry is finite.
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|v| v.is_finite())
+    }
+}
+
+/// Minimum buffer length (scalars) before an elementwise batch op shards
+/// across the pool. `pool::parallel_rows` spawns fresh scoped threads on
+/// every call (there is no persistent pool), and an elementwise pass is
+/// pure memory traffic (1 flop per element), so the spawn only pays off
+/// on multi-megabyte buffers — at the Fig. 1 shape this is B ≈ 29k of
+/// 3×3 matrices.
+const ELEMWISE_PAR_ELEMS: usize = 1 << 18;
+
+/// Run `f(batch_range, chunk)` over the buffer, sharding contiguous
+/// whole-matrix chunks across the pool when the buffer is large enough
+/// (per-element arithmetic is order-independent here, so sharding never
+/// changes results). Serial fallback covers small buffers and the
+/// degenerate `stride == 0` case.
+fn elementwise_chunks<S: Scalar, F>(data: &mut [S], b: usize, stride: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>, &mut [S]) + Sync,
+{
+    if data.len() < ELEMWISE_PAR_ELEMS || b <= 1 || stride == 0 {
+        f(0..b, data);
+    } else {
+        pool::parallel_rows(data, b, stride, f);
+    }
+}
+
+/// Minimum total flops before a batched matmul shards the batch across
+/// workers. Lower than the single-matmul threshold (`matmul::PAR_FLOPS`,
+/// 2²²) because one call covers B independent kernels with zero
+/// coordination between them — but only moderately lower: the spawn
+/// itself is NOT amortized across calls (`pool::parallel_rows` uses
+/// `std::thread::scope`, fresh OS threads every time), so the sharded
+/// work still has to dwarf thread setup even on few-core machines. At
+/// the Fig. 1 shape (3×3, 54 flops each) the pool engages from
+/// B ≈ 19.4k upward; smaller batches win on packing alone.
+const BATCH_PAR_FLOPS: usize = 1 << 20;
+
+/// Whether a batched call of `total_flops` work (summed over the batch)
+/// should shard batch chunks across the pool.
+#[inline]
+fn batch_worth_parallelizing(total_flops: usize) -> bool {
+    total_flops >= BATCH_PAR_FLOPS
+}
+
+/// Run `kernel(i, out_chunk_for_matrix_i)` for every batch element,
+/// sharding contiguous batch chunks across the pool when the total work
+/// justifies it.
+fn for_each_mat<S: Scalar, F>(out: &mut BatchMat<S>, total_flops: usize, kernel: F)
+where
+    F: Fn(usize, &mut [S]) + Sync,
+{
+    let (b, p, n) = out.shape();
+    let stride = p * n;
+    if !batch_worth_parallelizing(total_flops) {
+        for i in 0..b {
+            kernel(i, out.mat_mut(i));
+        }
+    } else {
+        // Treat the batch buffer as `b` rows of `p·n` scalars: parallel_rows
+        // hands each worker a contiguous run of whole matrices.
+        pool::parallel_rows(out.as_mut_slice(), b, stride, |range, chunk| {
+            for (ci, i) in range.enumerate() {
+                kernel(i, &mut chunk[ci * stride..(ci + 1) * stride]);
+            }
+        });
+    }
+}
+
+/// `C[i] = A[i] · B[i]` for every batch element. A: `(B, m, k)`,
+/// B: `(B, k, n)`, C: `(B, m, n)`.
+pub fn batch_matmul_into<S: Scalar>(a: &BatchMat<S>, b: &BatchMat<S>, c: &mut BatchMat<S>) {
+    let (ba, m, k) = a.shape();
+    let (bb, k2, n) = b.shape();
+    assert_eq!(ba, bb, "batch_matmul batch mismatch: {ba} vs {bb}");
+    assert_eq!(k, k2, "batch_matmul inner dim mismatch: {k} vs {k2}");
+    assert_eq!(c.shape(), (ba, m, n), "batch_matmul output shape mismatch");
+    c.as_mut_slice().fill(S::ZERO);
+    for_each_mat(c, 2 * ba * m * n * k, |i, out| {
+        mm_rows(a.mat(i), b.mat(i), 0..m, out, k, n);
+    });
+}
+
+/// `C[i] = A[i] · B[i]`, allocating the output.
+pub fn batch_matmul<S: Scalar>(a: &BatchMat<S>, b: &BatchMat<S>) -> BatchMat<S> {
+    let mut c = BatchMat::zeros(a.batch(), a.rows(), b.cols());
+    batch_matmul_into(a, b, &mut c);
+    c
+}
+
+/// `C[i] = A[i]ᵀ · B[i]`. A: `(B, k, m)`, B: `(B, k, n)`, C: `(B, m, n)`.
+pub fn batch_at_b_into<S: Scalar>(a: &BatchMat<S>, b: &BatchMat<S>, c: &mut BatchMat<S>) {
+    let (ba, k, m) = a.shape();
+    let (bb, k2, n) = b.shape();
+    assert_eq!(ba, bb, "batch_at_b batch mismatch: {ba} vs {bb}");
+    assert_eq!(k, k2, "batch_at_b inner dim mismatch: {k} vs {k2}");
+    assert_eq!(c.shape(), (ba, m, n), "batch_at_b output shape mismatch");
+    c.as_mut_slice().fill(S::ZERO);
+    for_each_mat(c, 2 * ba * m * n * k, |i, out| {
+        at_b_rows(a.mat(i), b.mat(i), 0..m, out, k, m, n);
+    });
+}
+
+/// `C[i] = A[i]ᵀ · B[i]`, allocating the output.
+pub fn batch_at_b<S: Scalar>(a: &BatchMat<S>, b: &BatchMat<S>) -> BatchMat<S> {
+    let mut c = BatchMat::zeros(a.batch(), a.cols(), b.cols());
+    batch_at_b_into(a, b, &mut c);
+    c
+}
+
+/// `C[i] = A[i] · B[i]ᵀ`. A: `(B, m, k)`, B: `(B, n, k)`, C: `(B, m, n)`.
+pub fn batch_a_bt_into<S: Scalar>(a: &BatchMat<S>, b: &BatchMat<S>, c: &mut BatchMat<S>) {
+    let (ba, m, k) = a.shape();
+    let (bb, n, k2) = b.shape();
+    assert_eq!(ba, bb, "batch_a_bt batch mismatch: {ba} vs {bb}");
+    assert_eq!(k, k2, "batch_a_bt inner dim mismatch: {k} vs {k2}");
+    assert_eq!(c.shape(), (ba, m, n), "batch_a_bt output shape mismatch");
+    for_each_mat(c, 2 * ba * m * n * k, |i, out| {
+        a_bt_rows(a.mat(i), b.mat(i), 0..m, out, k, n);
+    });
+}
+
+/// `C[i] = A[i] · B[i]ᵀ`, allocating the output.
+pub fn batch_a_bt<S: Scalar>(a: &BatchMat<S>, b: &BatchMat<S>) -> BatchMat<S> {
+    let mut c = BatchMat::zeros(a.batch(), a.rows(), b.rows());
+    batch_a_bt_into(a, b, &mut c);
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, matmul_a_bt, matmul_at_b};
+    use crate::rng::Rng;
+
+    type M = Mat<f64>;
+
+    fn random_batch(b: usize, p: usize, n: usize, rng: &mut Rng) -> (Vec<M>, BatchMat<f64>) {
+        let mats: Vec<M> = (0..b).map(|_| M::randn(p, n, rng)).collect();
+        let batch = BatchMat::from_mats(&mats);
+        (mats, batch)
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let mut rng = Rng::seed_from_u64(0);
+        let (mats, batch) = random_batch(5, 3, 7, &mut rng);
+        assert_eq!(batch.shape(), (5, 3, 7));
+        let back = batch.to_mats();
+        assert_eq!(mats, back);
+        // mat(i) views the right contiguous window.
+        for (i, m) in mats.iter().enumerate() {
+            assert_eq!(batch.mat(i), m.as_slice());
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let batch = BatchMat::<f32>::from_mats(&[]);
+        assert_eq!(batch.batch(), 0);
+        assert!(batch.is_empty());
+        assert!(batch.to_mats().is_empty());
+    }
+
+    #[test]
+    fn batch_matmul_matches_per_matrix() {
+        let mut rng = Rng::seed_from_u64(1);
+        let (am, ab) = random_batch(6, 4, 5, &mut rng);
+        let (bm, bb) = random_batch(6, 5, 3, &mut rng);
+        let c = batch_matmul(&ab, &bb);
+        for i in 0..6 {
+            let want = matmul(&am[i], &bm[i]);
+            assert!(c.copy_mat(i).sub(&want).max_abs() == 0.0, "batch {i}");
+        }
+    }
+
+    #[test]
+    fn batch_at_b_matches_per_matrix() {
+        let mut rng = Rng::seed_from_u64(2);
+        let (am, ab) = random_batch(4, 7, 4, &mut rng);
+        let (bm, bb) = random_batch(4, 7, 6, &mut rng);
+        let c = batch_at_b(&ab, &bb);
+        assert_eq!(c.shape(), (4, 4, 6));
+        for i in 0..4 {
+            let want = matmul_at_b(&am[i], &bm[i]);
+            assert!(c.copy_mat(i).sub(&want).max_abs() == 0.0, "batch {i}");
+        }
+    }
+
+    #[test]
+    fn batch_a_bt_matches_per_matrix() {
+        let mut rng = Rng::seed_from_u64(3);
+        let (am, ab) = random_batch(4, 3, 8, &mut rng);
+        let (bm, bb) = random_batch(4, 5, 8, &mut rng);
+        let c = batch_a_bt(&ab, &bb);
+        assert_eq!(c.shape(), (4, 3, 5));
+        for i in 0..4 {
+            let want = matmul_a_bt(&am[i], &bm[i]);
+            assert!(c.copy_mat(i).sub(&want).max_abs() == 0.0, "batch {i}");
+        }
+    }
+
+    #[test]
+    fn large_batch_parallel_path_matches_serial() {
+        // Big enough that for_each_mat shards across the pool.
+        let mut rng = Rng::seed_from_u64(4);
+        let (am, ab) = random_batch(512, 16, 16, &mut rng);
+        let (bm, bb) = random_batch(512, 16, 16, &mut rng);
+        assert!(batch_worth_parallelizing(2 * 512 * 16 * 16 * 16));
+        let c = batch_matmul(&ab, &bb);
+        for i in [0, 17, 255, 511] {
+            let want = matmul(&am[i], &bm[i]);
+            assert!(c.copy_mat(i).sub(&want).max_abs() == 0.0, "batch {i}");
+        }
+    }
+
+    #[test]
+    fn large_elementwise_parallel_path_matches_serial() {
+        // Buffer past ELEMWISE_PAR_ELEMS so axpy/scale shard across the
+        // pool; results must equal the per-matrix reference exactly.
+        let b = 300;
+        let (p, n) = (32, 32);
+        assert!(b * p * n >= ELEMWISE_PAR_ELEMS);
+        let mut rng = Rng::seed_from_u64(8);
+        let (xm, mut xb) = random_batch(b, p, n, &mut rng);
+        let (om, ob) = random_batch(b, p, n, &mut rng);
+        let alphas: Vec<f64> = (0..b).map(|i| (i % 5) as f64 - 2.0).collect();
+        xb.axpy(0.25, &ob);
+        xb.axpy_per_mat(&alphas, &ob);
+        xb.scale_inplace(3.0);
+        for i in [0, 149, 299] {
+            let mut want = xm[i].clone();
+            want.axpy(0.25, &om[i]);
+            want.axpy(alphas[i], &om[i]);
+            want.scale_inplace(3.0);
+            assert!(xb.copy_mat(i).sub(&want).max_abs() == 0.0, "batch {i}");
+        }
+    }
+
+    #[test]
+    fn per_mat_scalar_ops() {
+        let mut rng = Rng::seed_from_u64(5);
+        let (mats, mut batch) = random_batch(3, 2, 4, &mut rng);
+        let (other_m, other) = random_batch(3, 2, 4, &mut rng);
+        let alphas = [2.0, -1.0, 0.5];
+        batch.axpy_per_mat(&alphas, &other);
+        for i in 0..3 {
+            let mut want = mats[i].clone();
+            want.axpy(alphas[i], &other_m[i]);
+            assert!(batch.copy_mat(i).sub(&want).max_abs() == 0.0);
+        }
+        batch.scale_per_mat(&[1.0, 0.0, 2.0]);
+        assert!(batch.copy_mat(1).max_abs() == 0.0);
+    }
+
+    #[test]
+    fn sub_eye_and_sym_match_mat_ops() {
+        let mut rng = Rng::seed_from_u64(6);
+        let (mats, mut batch) = random_batch(4, 5, 5, &mut rng);
+        let sym = batch.sym_per_mat();
+        batch.sub_eye_inplace();
+        for i in 0..4 {
+            let mut want = mats[i].clone();
+            want.sub_eye_inplace();
+            assert!(batch.copy_mat(i).sub(&want).max_abs() == 0.0);
+            assert!(sym.copy_mat(i).sub(&mats[i].sym()).max_abs() == 0.0);
+        }
+    }
+
+    #[test]
+    fn norm_sq_per_mat_matches_mat_norm_sq() {
+        let mut rng = Rng::seed_from_u64(7);
+        let (mats, batch) = random_batch(5, 6, 3, &mut rng);
+        let ns = batch.norm_sq_per_mat();
+        for i in 0..5 {
+            assert_eq!(ns[i], mats[i].norm_sq(), "batch {i}");
+        }
+    }
+}

@@ -25,6 +25,98 @@ const KB: usize = 256;
 /// Minimum flops before we bother spawning threads.
 const PAR_FLOPS: usize = 1 << 22;
 
+/// Whether a single matmul call is worth sharding across worker threads.
+///
+/// The decision is derived from **this call's own total work** (`2·m·n·k`
+/// flops) and nothing else — never from surrounding batch context. A
+/// `(B, p, n)` group of small matrices (the paper's Fig. 1 regime:
+/// thousands of 3×3 kernels) must parallelize **over the batch dimension**
+/// in [`crate::linalg::batch`], one worker per contiguous batch chunk;
+/// spawning inside each tiny product would pay thread-setup costs that
+/// dwarf the 54-flop 3×3 arithmetic itself. Keeping the threshold
+/// per-call therefore guarantees the small-matrix path stays strictly
+/// serial while the batched engine owns the B-parallelism.
+#[inline]
+pub(crate) fn worth_parallelizing(flops: usize) -> bool {
+    flops >= PAR_FLOPS
+}
+
+/// Serial row-range kernel for `C = A·B` (A: m×k, B: k×n), writing rows
+/// `rows` of C into `c_chunk` (which must already be zeroed). Shared by
+/// [`matmul_into`] and the batched engine in [`crate::linalg::batch`],
+/// which invokes it once per batch element so batched and single-matrix
+/// results are bit-identical.
+pub(crate) fn mm_rows<S: Scalar>(
+    a: &[S],
+    b: &[S],
+    rows: std::ops::Range<usize>,
+    c_chunk: &mut [S],
+    k: usize,
+    n: usize,
+) {
+    for k0 in (0..k).step_by(KB) {
+        let k1 = (k0 + KB).min(k);
+        for (ci, i) in rows.clone().enumerate() {
+            let a_row = &a[i * k..(i + 1) * k];
+            let c_row = &mut c_chunk[ci * n..(ci + 1) * n];
+            for kk in k0..k1 {
+                let aik = a_row[kk];
+                if aik == S::ZERO {
+                    continue;
+                }
+                axpy_row(c_row, aik, &b[kk * n..(kk + 1) * n]);
+            }
+        }
+    }
+}
+
+/// Serial row-range kernel for `C = Aᵀ·B` (A: k×m, B: k×n), writing rows
+/// `rows` of the m×n output into `c_chunk` (pre-zeroed).
+pub(crate) fn at_b_rows<S: Scalar>(
+    a: &[S],
+    b: &[S],
+    rows: std::ops::Range<usize>,
+    c_chunk: &mut [S],
+    k: usize,
+    m: usize,
+    n: usize,
+) {
+    for k0 in (0..k).step_by(KB) {
+        let k1 = (k0 + KB).min(k);
+        for kk in k0..k1 {
+            let a_row = &a[kk * m..(kk + 1) * m];
+            let b_row = &b[kk * n..(kk + 1) * n];
+            for (ci, i) in rows.clone().enumerate() {
+                let aki = a_row[i];
+                if aki == S::ZERO {
+                    continue;
+                }
+                axpy_row(&mut c_chunk[ci * n..(ci + 1) * n], aki, b_row);
+            }
+        }
+    }
+}
+
+/// Serial row-range kernel for `C = A·Bᵀ` (A: m×k, B: n×k), writing rows
+/// `rows` of the m×n output into `c_chunk` (assignment, no pre-zeroing
+/// needed).
+pub(crate) fn a_bt_rows<S: Scalar>(
+    a: &[S],
+    b: &[S],
+    rows: std::ops::Range<usize>,
+    c_chunk: &mut [S],
+    k: usize,
+    n: usize,
+) {
+    for (ci, i) in rows.enumerate() {
+        let a_row = &a[i * k..(i + 1) * k];
+        let c_row = &mut c_chunk[ci * n..(ci + 1) * n];
+        for j in 0..n {
+            c_row[j] = dot_row(a_row, &b[j * k..(j + 1) * k]);
+        }
+    }
+}
+
 /// `C = A · B`, allocating the output.
 pub fn matmul<S: Scalar>(a: &Mat<S>, b: &Mat<S>) -> Mat<S> {
     let mut c = Mat::zeros(a.rows(), b.cols());
@@ -54,32 +146,14 @@ pub fn matmul_into<S: Scalar>(a: &Mat<S>, b: &Mat<S>, c: &mut Mat<S>) {
     assert_eq!(c.shape(), (m, n), "matmul output shape mismatch");
     c.as_mut_slice().fill(S::ZERO);
 
-    let flops = 2 * m * n * k;
     let a_data = a.as_slice();
     let b_data = b.as_slice();
-    let run_rows = |rows: std::ops::Range<usize>, c_chunk: &mut [S]| {
-        // c_chunk covers rows `rows` of C, row-major.
-        for k0 in (0..k).step_by(KB) {
-            let k1 = (k0 + KB).min(k);
-            for (ci, i) in rows.clone().enumerate() {
-                let a_row = &a_data[i * k..(i + 1) * k];
-                let c_row = &mut c_chunk[ci * n..(ci + 1) * n];
-                for kk in k0..k1 {
-                    let aik = a_row[kk];
-                    if aik == S::ZERO {
-                        continue;
-                    }
-                    let b_row = &b_data[kk * n..(kk + 1) * n];
-                    axpy_row(c_row, aik, b_row);
-                }
-            }
-        }
-    };
-
-    if flops < PAR_FLOPS {
-        run_rows(0..m, c.as_mut_slice());
+    if !worth_parallelizing(2 * m * n * k) {
+        mm_rows(a_data, b_data, 0..m, c.as_mut_slice(), k, n);
     } else {
-        pool::parallel_rows(c.as_mut_slice(), m, n, |rows, chunk| run_rows(rows, chunk));
+        pool::parallel_rows(c.as_mut_slice(), m, n, |rows, chunk| {
+            mm_rows(a_data, b_data, rows, chunk, k, n)
+        });
     }
 }
 
@@ -93,33 +167,16 @@ pub fn matmul_at_b_into<S: Scalar>(a: &Mat<S>, b: &Mat<S>, c: &mut Mat<S>) {
     assert_eq!(c.shape(), (m, n), "matmul_at_b output shape mismatch");
     c.as_mut_slice().fill(S::ZERO);
 
-    let flops = 2 * m * n * k;
     let a_data = a.as_slice();
     let b_data = b.as_slice();
     // Parallelise over output rows (columns of A): worker for C rows
     // `rows` scans all k, using A[kk, i] as the scalar.
-    let run_rows = |rows: std::ops::Range<usize>, c_chunk: &mut [S]| {
-        for k0 in (0..k).step_by(KB) {
-            let k1 = (k0 + KB).min(k);
-            for kk in k0..k1 {
-                let a_row = &a_data[kk * m..(kk + 1) * m];
-                let b_row = &b_data[kk * n..(kk + 1) * n];
-                for (ci, i) in rows.clone().enumerate() {
-                    let aki = a_row[i];
-                    if aki == S::ZERO {
-                        continue;
-                    }
-                    let c_row = &mut c_chunk[ci * n..(ci + 1) * n];
-                    axpy_row(c_row, aki, b_row);
-                }
-            }
-        }
-    };
-
-    if flops < PAR_FLOPS {
-        run_rows(0..m, c.as_mut_slice());
+    if !worth_parallelizing(2 * m * n * k) {
+        at_b_rows(a_data, b_data, 0..m, c.as_mut_slice(), k, m, n);
     } else {
-        pool::parallel_rows(c.as_mut_slice(), m, n, |rows, chunk| run_rows(rows, chunk));
+        pool::parallel_rows(c.as_mut_slice(), m, n, |rows, chunk| {
+            at_b_rows(a_data, b_data, rows, chunk, k, m, n)
+        });
     }
 }
 
@@ -131,24 +188,14 @@ pub fn matmul_a_bt_into<S: Scalar>(a: &Mat<S>, b: &Mat<S>, c: &mut Mat<S>) {
     assert_eq!(k, k2, "matmul_a_bt inner dim mismatch: {k} vs {k2}");
     assert_eq!(c.shape(), (m, n), "matmul_a_bt output shape mismatch");
 
-    let flops = 2 * m * n * k;
     let a_data = a.as_slice();
     let b_data = b.as_slice();
-    let run_rows = |rows: std::ops::Range<usize>, c_chunk: &mut [S]| {
-        for (ci, i) in rows.clone().enumerate() {
-            let a_row = &a_data[i * k..(i + 1) * k];
-            let c_row = &mut c_chunk[ci * n..(ci + 1) * n];
-            for j in 0..n {
-                let b_row = &b_data[j * k..(j + 1) * k];
-                c_row[j] = dot_row(a_row, b_row);
-            }
-        }
-    };
-
-    if flops < PAR_FLOPS {
-        run_rows(0..m, c.as_mut_slice());
+    if !worth_parallelizing(2 * m * n * k) {
+        a_bt_rows(a_data, b_data, 0..m, c.as_mut_slice(), k, n);
     } else {
-        pool::parallel_rows(c.as_mut_slice(), m, n, |rows, chunk| run_rows(rows, chunk));
+        pool::parallel_rows(c.as_mut_slice(), m, n, |rows, chunk| {
+            a_bt_rows(a_data, b_data, rows, chunk, k, n)
+        });
     }
 }
 
@@ -253,6 +300,46 @@ mod tests {
         let a = Mat::<f64>::randn(8, 8, &mut rng);
         assert!(matmul(&a, &Mat::eye(8)).sub(&a).max_abs() < 1e-12);
         assert!(matmul(&Mat::eye(8), &a).sub(&a).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn tiny_matmuls_never_parallelize() {
+        // Regression for the Fig. 1 regime: the parallel threshold is
+        // derived from the call's OWN 2·m·n·k work, so a 3×3 product (54
+        // flops) — or any small per-matrix shape — never spawns threads.
+        // Batch parallelism over thousands of such matrices belongs to
+        // `linalg::batch`, one worker per batch chunk.
+        assert!(!worth_parallelizing(2 * 3 * 3 * 3));
+        assert!(!worth_parallelizing(2 * 64 * 64 * 64));
+        // The Fig. 4-scale shapes do cross it.
+        assert!(worth_parallelizing(2 * 160 * 170 * 180));
+        // Exactly at the boundary (2^22 flops) we parallelize.
+        assert!(worth_parallelizing(1 << 22));
+        assert!(!worth_parallelizing((1 << 22) - 1));
+    }
+
+    #[test]
+    fn serial_kernels_match_entry_points() {
+        // The row-range kernels are the shared substrate of both the
+        // single-matrix entry points and the batched engine; drive them
+        // directly over the full row range and compare.
+        let mut rng = Rng::seed_from_u64(6);
+        let (m, k, n) = (7, 11, 9);
+        let a = Mat::<f64>::randn(m, k, &mut rng);
+        let b = Mat::<f64>::randn(k, n, &mut rng);
+        let mut c = Mat::<f64>::zeros(m, n);
+        mm_rows(a.as_slice(), b.as_slice(), 0..m, c.as_mut_slice(), k, n);
+        assert!(c.sub(&matmul(&a, &b)).max_abs() == 0.0);
+
+        let at = Mat::<f64>::randn(k, m, &mut rng);
+        let mut c2 = Mat::<f64>::zeros(m, n);
+        at_b_rows(at.as_slice(), b.as_slice(), 0..m, c2.as_mut_slice(), k, m, n);
+        assert!(c2.sub(&matmul_at_b(&at, &b)).max_abs() == 0.0);
+
+        let bt = Mat::<f64>::randn(n, k, &mut rng);
+        let mut c3 = Mat::<f64>::zeros(m, n);
+        a_bt_rows(a.as_slice(), bt.as_slice(), 0..m, c3.as_mut_slice(), k, n);
+        assert!(c3.sub(&matmul_a_bt(&a, &bt)).max_abs() == 0.0);
     }
 
     #[test]

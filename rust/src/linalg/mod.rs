@@ -15,7 +15,11 @@
 //! - Retraction-based baselines (RGD, RSDM) run entirely on this substrate,
 //!   which is the point the paper makes: QR does not map to accelerators,
 //!   matmuls do.
+//! - Batch parallelism lives in [`BatchMat`] (`batch` module): a `(B, p, n)`
+//!   group of small matrices is stepped by sharding the *batch* across
+//!   workers, never by spawning inside a single small product.
 
+mod batch;
 mod complexmat;
 mod eig;
 mod mat;
@@ -25,6 +29,10 @@ mod polar;
 mod qr;
 mod scalar;
 
+pub use batch::{
+    batch_a_bt, batch_a_bt_into, batch_at_b, batch_at_b_into, batch_matmul,
+    batch_matmul_into, BatchMat,
+};
 pub use complexmat::CMat;
 pub use eig::{sym_eig, with_spectrum, SymEig};
 pub use mat::Mat;

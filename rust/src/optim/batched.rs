@@ -1,0 +1,521 @@
+//! The batched host engine (`Engine::BatchedHost`): whole `(B, p, n)`
+//! shape groups stepped as one [`BatchMat`], parallelized over the batch
+//! dimension.
+//!
+//! This is the host-side mechanism behind the paper's Fig. 1 claim
+//! (thousands of matrices in minutes): the per-matrix host loop spends its
+//! time in allocator churn and 54-flop matmuls that can never cross the
+//! thread threshold, while this engine runs the same 5-matmul POGO update
+//! (and the Landing / SLPG / Adam variants) over the packed group with
+//! one batch-parallel kernel per product.
+//!
+//! **Parity contract** (pinned by `tests/batched_parity.rs`): every rule
+//! here performs the *same elementwise arithmetic in the same order* as
+//! its per-matrix counterpart in [`pogo`](super::pogo) /
+//! [`landing`](super::landing) / [`slpg`](super::slpg) /
+//! [`adam`](super::adam) — the batched kernels invoke the identical
+//! serial row-range kernels per batch element — so batched and looped
+//! trajectories agree elementwise, not just statistically. Base-optimizer
+//! state (momentum / VAdam / Adam) is held batched: one `(B, p, n)`
+//! moment tensor (plus per-matrix scalars for VAdam) instead of B small
+//! matrices.
+
+use super::base::BaseOptKind;
+use super::pogo::{landing_coeffs, LambdaPolicy};
+use super::quartic::solve_landing_quartic;
+use super::Orthoptimizer;
+use crate::linalg::{batch_a_bt, batch_matmul, BatchMat, Mat, Scalar};
+use anyhow::{ensure, Result};
+
+/// Which update rule a [`BatchedHost`] runs.
+#[derive(Clone, Copy, Debug)]
+enum Rule {
+    Pogo { lambda: LambdaPolicy },
+    Landing { attraction: f64, eps_ball: f64, safeguard: bool, normalize_grad: bool },
+    Slpg,
+    /// Unconstrained Adam (the base optimizer IS the update).
+    Adam,
+}
+
+/// Batched base-optimizer state: the batched analogue of
+/// [`super::base::BaseOpt`], with one packed moment tensor for the whole
+/// group. Lazily sized on the first transform (groups have a fixed B).
+struct BatchedBase<S: Scalar> {
+    kind: BaseOptKind,
+    /// First moment (momentum / VAdam / Adam).
+    m: Option<BatchMat<S>>,
+    /// Elementwise second moment (Adam only).
+    v: Option<BatchMat<S>>,
+    /// Per-matrix scalar second moment (VAdam only).
+    v_scalar: Vec<f64>,
+    /// Step count (shared: every matrix of a group steps together).
+    t: u64,
+}
+
+impl<S: Scalar> BatchedBase<S> {
+    fn new(kind: BaseOptKind) -> Self {
+        BatchedBase { kind, m: None, v: None, v_scalar: Vec::new(), t: 0 }
+    }
+
+    /// `G = BO(∇f)` over the whole batch, mirroring
+    /// `BaseOpt::transform` per matrix (same order of operations, same
+    /// f64 scalar paths).
+    fn transform(&mut self, grad: &BatchMat<S>) -> Result<BatchMat<S>> {
+        if let Some(m) = &self.m {
+            ensure!(
+                m.shape() == grad.shape(),
+                "batched base state {:?} vs gradient batch {:?} — one \
+                 BatchedHost per shape group",
+                m.shape(),
+                grad.shape()
+            );
+        }
+        Ok(match self.kind {
+            BaseOptKind::Sgd => grad.clone(),
+            BaseOptKind::Momentum { beta } => {
+                match &mut self.m {
+                    Some(m) => {
+                        m.scale_inplace(S::from_f64(beta));
+                        m.axpy(S::ONE, grad);
+                    }
+                    None => self.m = Some(grad.clone()),
+                }
+                self.m.as_ref().unwrap().clone()
+            }
+            BaseOptKind::VAdam { beta1, beta2, eps } => {
+                self.t += 1;
+                match &mut self.m {
+                    Some(m) => {
+                        m.scale_inplace(S::from_f64(beta1));
+                        m.axpy(S::from_f64(1.0 - beta1), grad);
+                    }
+                    None => {
+                        let mut m = grad.clone();
+                        m.scale_inplace(S::from_f64(1.0 - beta1));
+                        self.m = Some(m);
+                    }
+                }
+                // Matrix-wise second moment: one scalar per batch element.
+                if self.v_scalar.is_empty() {
+                    self.v_scalar = vec![0.0; grad.batch()];
+                }
+                let gn2 = grad.norm_sq_per_mat();
+                let mhat_scale = 1.0 / (1.0 - beta1.powi(self.t as i32));
+                let v_corr = 1.0 - beta2.powi(self.t as i32);
+                let alphas: Vec<S> = self
+                    .v_scalar
+                    .iter_mut()
+                    .zip(&gn2)
+                    .map(|(v, &g2)| {
+                        *v = beta2 * *v + (1.0 - beta2) * g2.to_f64();
+                        let vhat = *v / v_corr;
+                        S::from_f64(mhat_scale / (vhat.sqrt() + eps))
+                    })
+                    .collect();
+                let mut out = self.m.as_ref().unwrap().clone();
+                out.scale_per_mat(&alphas);
+                out
+            }
+            BaseOptKind::Adam { beta1, beta2, eps } => {
+                self.t += 1;
+                match &mut self.m {
+                    Some(m) => {
+                        m.scale_inplace(S::from_f64(beta1));
+                        m.axpy(S::from_f64(1.0 - beta1), grad);
+                    }
+                    None => {
+                        let mut m = grad.clone();
+                        m.scale_inplace(S::from_f64(1.0 - beta1));
+                        self.m = Some(m);
+                    }
+                }
+                let g2 = grad.map(|x| x * x);
+                match &mut self.v {
+                    Some(v) => {
+                        v.scale_inplace(S::from_f64(beta2));
+                        v.axpy(S::from_f64(1.0 - beta2), &g2);
+                    }
+                    None => {
+                        let mut v = g2;
+                        v.scale_inplace(S::from_f64(1.0 - beta2));
+                        self.v = Some(v);
+                    }
+                }
+                let mc = 1.0 / (1.0 - beta1.powi(self.t as i32));
+                let vc = 1.0 / (1.0 - beta2.powi(self.t as i32));
+                let eps_s = S::from_f64(eps);
+                let mut mhat = self.m.as_ref().unwrap().clone();
+                mhat.scale_inplace(S::from_f64(mc));
+                let mut vhat = self.v.as_ref().unwrap().clone();
+                vhat.scale_inplace(S::from_f64(vc));
+                mhat.zip(&vhat, |mi, vi| mi / (vi.sqrt() + eps_s))
+            }
+        })
+    }
+}
+
+/// Batched host engine over one shape group.
+///
+/// Implements [`Orthoptimizer`] so it drops into every construction site,
+/// but its native unit of work is [`Orthoptimizer::step_batch`]
+/// (`prefers_batch() == true`): the coordinator extracts the group as one
+/// packed tensor and never allocates per-matrix intermediates.
+///
+/// State is batch-wide (like the XLA stepper): `step(idx, …)` treats its
+/// input as a batch of one, so a `BatchedHost` must own exactly one shape
+/// group — which is how `OptimSession` builds them.
+pub struct BatchedHost<S: Scalar = f32> {
+    rule: Rule,
+    lr: f64,
+    base: BatchedBase<S>,
+    name: String,
+    last_lambda: Option<f64>,
+}
+
+impl<S: Scalar> BatchedHost<S> {
+    /// Batched POGO (Alg. 1): the 5-matmul step + proximal normal step.
+    pub fn pogo(lr: f64, lambda: LambdaPolicy, base: BaseOptKind) -> Self {
+        let name = match lambda {
+            LambdaPolicy::Half => format!("POGO({})[batched]", base.name()),
+            LambdaPolicy::FindRoot => format!("POGO-root({})[batched]", base.name()),
+        };
+        BatchedHost {
+            rule: Rule::Pogo { lambda },
+            lr,
+            base: BatchedBase::new(base),
+            name,
+            last_lambda: Some(0.5),
+        }
+    }
+
+    /// Batched Landing (safeguarded, paper defaults ε = 0.5).
+    pub fn landing(lr: f64, attraction: f64, base: BaseOptKind) -> Self {
+        BatchedHost {
+            rule: Rule::Landing {
+                attraction,
+                eps_ball: 0.5,
+                safeguard: true,
+                normalize_grad: false,
+            },
+            lr,
+            base: BatchedBase::new(base),
+            name: format!("Landing({})[batched]", base.name()),
+            last_lambda: None,
+        }
+    }
+
+    /// Batched LandingPC (per-matrix gradient normalization, no safeguard).
+    pub fn landing_pc(lr: f64, attraction: f64) -> Self {
+        BatchedHost {
+            rule: Rule::Landing {
+                attraction,
+                eps_ball: 0.5,
+                safeguard: false,
+                normalize_grad: true,
+            },
+            lr,
+            base: BatchedBase::new(BaseOptKind::Sgd),
+            name: "LandingPC[batched]".to_string(),
+            last_lambda: None,
+        }
+    }
+
+    /// Batched SLPG (smooth case).
+    pub fn slpg(lr: f64, base: BaseOptKind) -> Self {
+        BatchedHost {
+            rule: Rule::Slpg,
+            lr,
+            base: BatchedBase::new(base),
+            name: "SLPG[batched]".to_string(),
+            last_lambda: None,
+        }
+    }
+
+    /// Batched unconstrained Adam (the NN figures' free-parameter rule).
+    pub fn adam(lr: f64) -> Self {
+        BatchedHost {
+            rule: Rule::Adam,
+            lr,
+            base: BatchedBase::new(BaseOptKind::adam()),
+            name: "Adam[batched]".to_string(),
+            last_lambda: None,
+        }
+    }
+
+    /// One batched update of `x` given raw gradients `g0`.
+    fn apply(&mut self, x: &mut BatchMat<S>, g0: &BatchMat<S>) -> Result<()> {
+        ensure!(
+            x.shape() == g0.shape(),
+            "step_batch: points {:?} vs gradients {:?}",
+            x.shape(),
+            g0.shape()
+        );
+        if x.batch() == 0 {
+            return Ok(());
+        }
+        let g = self.base.transform(g0)?;
+        let eta = self.lr;
+        match self.rule {
+            Rule::Pogo { lambda } => {
+                // M = X − η·½((X Xᵀ)G − (X Gᵀ)X)  (small-gram form).
+                let xxt = batch_a_bt(x, x);
+                let xgt = batch_a_bt(x, &g);
+                let a1 = batch_matmul(&xxt, &g);
+                let a2 = batch_matmul(&xgt, x);
+                let mut m = x.clone();
+                m.axpy(S::from_f64(-0.5 * eta), &a1);
+                m.axpy(S::from_f64(0.5 * eta), &a2);
+                // Normal step: X⁺ = M − λ(M Mᵀ − I)M.
+                let mut c = batch_a_bt(&m, &m);
+                c.sub_eye_inplace();
+                let bmat = batch_matmul(&c, &m);
+                match lambda {
+                    LambdaPolicy::Half => {
+                        m.axpy(S::from_f64(-0.5), &bmat);
+                        self.last_lambda = Some(0.5);
+                    }
+                    LambdaPolicy::FindRoot => {
+                        // Per-matrix quartic roots from the p×p gram
+                        // residuals (identical arithmetic to the
+                        // per-matrix path: same coeffs, same solver).
+                        let (_, p, _) = c.shape();
+                        let mut alphas = Vec::with_capacity(x.batch());
+                        let mut lam = 0.5;
+                        for i in 0..c.batch() {
+                            let ci: Mat<S> = c.copy_mat(i);
+                            debug_assert_eq!(ci.shape(), (p, p));
+                            lam = solve_landing_quartic(landing_coeffs(&ci));
+                            alphas.push(S::from_f64(-lam));
+                        }
+                        m.axpy_per_mat(&alphas, &bmat);
+                        self.last_lambda = Some(lam);
+                    }
+                }
+                *x = m;
+            }
+            Rule::Landing { attraction, eps_ball, safeguard, normalize_grad } => {
+                let g = if normalize_grad {
+                    let mut g = g;
+                    let alphas: Vec<S> = g
+                        .norm_sq_per_mat()
+                        .iter()
+                        .map(|&ns| {
+                            let n = ns.sqrt().to_f64().max(1e-30);
+                            S::from_f64(1.0 / n)
+                        })
+                        .collect();
+                    g.scale_per_mat(&alphas);
+                    g
+                } else {
+                    g
+                };
+                // R = ½((XXᵀ)G − (XGᵀ)X); ∇N = (XXᵀ − I)X.
+                let xxt = batch_a_bt(x, x);
+                let xgt = batch_a_bt(x, &g);
+                let a1 = batch_matmul(&xxt, &g);
+                let a2 = batch_matmul(&xgt, x);
+                let mut r = a1.sub(&a2);
+                r.scale_inplace(S::from_f64(0.5));
+                let mut h = xxt;
+                h.sub_eye_inplace();
+                let ngrad = batch_matmul(&h, x);
+                // Per-matrix safeguarded step size (same f64 formula as
+                // the per-matrix engine).
+                let h_ns = h.norm_sq_per_mat();
+                let r_ns = r.norm_sq_per_mat();
+                let n_ns = ngrad.norm_sq_per_mat();
+                let lam = attraction;
+                let mut a_r = Vec::with_capacity(x.batch());
+                let mut a_n = Vec::with_capacity(x.batch());
+                for i in 0..x.batch() {
+                    let d = h_ns[i].sqrt().to_f64();
+                    let lam_sq = r_ns[i].to_f64() + lam * lam * n_ns[i].to_f64();
+                    let eta_i = if safeguard && lam_sq > 0.0 {
+                        let slack = (eps_ball - d).max(0.0);
+                        let b = lam * d * (1.0 - d).max(0.0);
+                        let safe = (b + (b * b + lam_sq * slack).sqrt()) / lam_sq;
+                        let cap = if lam > 0.0 { 0.5 / lam } else { f64::INFINITY };
+                        eta.min(safe).min(cap)
+                    } else {
+                        eta
+                    };
+                    a_r.push(S::from_f64(-eta_i));
+                    a_n.push(S::from_f64(-eta_i * lam));
+                }
+                x.axpy_per_mat(&a_r, &r);
+                x.axpy_per_mat(&a_n, &ngrad);
+            }
+            Rule::Slpg => {
+                // Y = X − η(G − Sym(G Xᵀ)X); X⁺ = Y − ½(Y Yᵀ − I)Y.
+                let gxt = batch_a_bt(&g, x);
+                let sym = gxt.sym_per_mat();
+                let sx = batch_matmul(&sym, x);
+                let mut y = x.clone();
+                y.axpy(S::from_f64(-eta), &g);
+                y.axpy(S::from_f64(eta), &sx);
+                let mut c = batch_a_bt(&y, &y);
+                c.sub_eye_inplace();
+                let cy = batch_matmul(&c, &y);
+                y.axpy(S::from_f64(-0.5), &cy);
+                *x = y;
+            }
+            Rule::Adam => {
+                x.axpy(S::from_f64(-eta), &g);
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<S: Scalar> Orthoptimizer<S> for BatchedHost<S> {
+    fn step(&mut self, _idx: usize, x: &mut Mat<S>, g: &Mat<S>) -> Result<()> {
+        // A single matrix is a batch of one (state is batch-wide, like the
+        // XLA stepper — `idx` is not a state slot here).
+        let mut xb = BatchMat::from_mats(std::slice::from_ref(x));
+        let gb = BatchMat::from_mats(std::slice::from_ref(g));
+        self.apply(&mut xb, &gb)?;
+        xb.unpack_into(std::slice::from_mut(x));
+        Ok(())
+    }
+
+    fn step_group(&mut self, xs: &mut [Mat<S>], gs: &[Mat<S>]) -> Result<()> {
+        ensure!(
+            xs.len() == gs.len(),
+            "step_group: {} points vs {} gradients",
+            xs.len(),
+            gs.len()
+        );
+        if xs.is_empty() {
+            return Ok(());
+        }
+        let shape = xs[0].shape();
+        ensure!(
+            xs.iter().all(|x| x.shape() == shape) && gs.iter().all(|g| g.shape() == shape),
+            "batched engine needs a shape-homogeneous group (expected {:?})",
+            shape
+        );
+        let mut xb = BatchMat::from_mats(xs);
+        let gb = BatchMat::from_mats(gs);
+        self.apply(&mut xb, &gb)?;
+        xb.unpack_into(xs);
+        Ok(())
+    }
+
+    fn step_batch(&mut self, xs: &mut BatchMat<S>, gs: &BatchMat<S>) -> Result<()> {
+        self.apply(xs, gs)
+    }
+
+    fn prefers_batch(&self) -> bool {
+        true
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn lr(&self) -> f64 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f64) {
+        self.lr = lr;
+    }
+
+    fn last_lambda(&self) -> Option<f64> {
+        match self.rule {
+            Rule::Pogo { .. } => self.last_lambda,
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifold::stiefel;
+    use crate::rng::Rng;
+
+    type B = BatchMat<f64>;
+
+    fn group(b: usize, p: usize, n: usize, rng: &mut Rng) -> (B, B) {
+        let xs: Vec<Mat<f64>> =
+            (0..b).map(|_| stiefel::random_point_t::<f64>(p, n, rng)).collect();
+        let gs: Vec<Mat<f64>> = (0..b)
+            .map(|_| {
+                let g = Mat::<f64>::randn(p, n, rng);
+                let nn = g.norm();
+                g.scale(0.5 / nn)
+            })
+            .collect();
+        (BatchMat::from_mats(&xs), BatchMat::from_mats(&gs))
+    }
+
+    #[test]
+    fn pogo_batch_stays_feasible() {
+        let mut rng = Rng::seed_from_u64(0);
+        let (mut x, g) = group(16, 4, 8, &mut rng);
+        let mut opt = BatchedHost::<f64>::pogo(0.2, LambdaPolicy::Half, BaseOptKind::Sgd);
+        for _ in 0..20 {
+            opt.step_batch(&mut x, &g).unwrap();
+        }
+        for m in x.to_mats() {
+            assert!(stiefel::distance_t(&m) < 1e-3);
+        }
+        assert_eq!(opt.last_lambda(), Some(0.5));
+    }
+
+    #[test]
+    fn landing_batch_stays_in_ball() {
+        let mut rng = Rng::seed_from_u64(1);
+        let (mut x, _) = group(8, 3, 6, &mut rng);
+        let mut opt = BatchedHost::<f64>::landing(1.0, 1.0, BaseOptKind::Sgd);
+        for _ in 0..30 {
+            let (_, g) = group(8, 3, 6, &mut rng);
+            let mut big = g;
+            big.scale_inplace(30.0);
+            opt.step_batch(&mut x, &big).unwrap();
+            for m in x.to_mats() {
+                assert!(stiefel::distance_t(&m) <= 0.5 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn adam_batch_descends_quadratic() {
+        // f(X) = ‖X − T‖² per batch element.
+        let mut rng = Rng::seed_from_u64(2);
+        let t = BatchMat::from_mats(&[
+            Mat::<f64>::randn(3, 4, &mut rng),
+            Mat::<f64>::randn(3, 4, &mut rng),
+        ]);
+        let mut x = BatchMat::<f64>::zeros(2, 3, 4);
+        let mut opt = BatchedHost::<f64>::adam(0.05);
+        for _ in 0..500 {
+            let g = x.sub(&t).map(|v| v * 2.0);
+            opt.step_batch(&mut x, &g).unwrap();
+        }
+        assert!(x.sub(&t).max_abs() < 1e-1);
+    }
+
+    #[test]
+    fn batch_size_change_is_rejected_for_stateful_base() {
+        let mut rng = Rng::seed_from_u64(3);
+        let (mut x4, g4) = group(4, 3, 6, &mut rng);
+        let (mut x2, g2) = group(2, 3, 6, &mut rng);
+        let mut opt =
+            BatchedHost::<f64>::pogo(0.1, LambdaPolicy::Half, BaseOptKind::vadam());
+        opt.step_batch(&mut x4, &g4).unwrap();
+        assert!(opt.step_batch(&mut x2, &g2).is_err());
+    }
+
+    #[test]
+    fn step_is_batch_of_one() {
+        let mut rng = Rng::seed_from_u64(4);
+        let mut x = stiefel::random_point_t::<f64>(4, 7, &mut rng);
+        let g = Mat::<f64>::randn(4, 7, &mut rng).scale(0.1);
+        let mut opt = BatchedHost::<f64>::pogo(0.1, LambdaPolicy::Half, BaseOptKind::Sgd);
+        opt.step(0, &mut x, &g).unwrap();
+        assert!(x.all_finite());
+        assert!(stiefel::distance_t(&x) < 1e-3);
+    }
+}

@@ -17,6 +17,7 @@
 
 pub mod adam;
 pub mod base;
+pub mod batched;
 pub mod landing;
 pub mod pogo;
 pub mod quartic;
@@ -26,7 +27,7 @@ pub mod rsdm;
 pub mod slpg;
 pub mod unitary;
 
-use crate::linalg::{Mat, Scalar};
+use crate::linalg::{BatchMat, Mat, Scalar};
 use anyhow::{ensure, Result};
 
 /// A single-matrix orthoptimizer over `St(p, n)`.
@@ -62,6 +63,35 @@ pub trait Orthoptimizer<S: Scalar = f32> {
         Ok(())
     }
 
+    /// Update a whole `(B, p, n)` batch in place. Default: unpack into
+    /// per-matrix views and delegate to [`Orthoptimizer::step_group`].
+    /// The batched host engine overrides this to run directly on the
+    /// contiguous buffer (no per-matrix allocation at all); engines that
+    /// do so should also return `true` from
+    /// [`Orthoptimizer::prefers_batch`] so the coordinator extracts
+    /// groups as one [`BatchMat`] instead of a `Vec<Mat>`.
+    fn step_batch(&mut self, xs: &mut BatchMat<S>, gs: &BatchMat<S>) -> Result<()> {
+        ensure!(
+            xs.shape() == gs.shape(),
+            "step_batch: points {:?} vs gradients {:?}",
+            xs.shape(),
+            gs.shape()
+        );
+        let mut xv = xs.to_mats();
+        let gv = gs.to_mats();
+        self.step_group(&mut xv, &gv)?;
+        for (i, m) in xv.iter().enumerate() {
+            xs.set_mat(i, m);
+        }
+        Ok(())
+    }
+
+    /// Whether this engine's native unit of work is a packed
+    /// [`BatchMat`] (the coordinator then uses the zero-unpack path).
+    fn prefers_batch(&self) -> bool {
+        false
+    }
+
     /// Human-readable name for logs/figures.
     fn name(&self) -> &str;
 
@@ -79,8 +109,13 @@ pub trait Orthoptimizer<S: Scalar = f32> {
 /// Which engine executes an optimizer's update rule.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Engine {
-    /// Pure-Rust reference implementation (this module).
+    /// Pure-Rust reference implementation: a sequential per-matrix loop
+    /// over the group (this module's single-matrix optimizers).
     Rust,
+    /// Pure-Rust batched engine: the whole `(B, p, n)` shape group packed
+    /// into one [`BatchMat`] and stepped with batch-parallel kernels
+    /// ([`batched`] module). Matmul-only methods plus Adam.
+    BatchedHost,
     /// AOT-compiled HLO executable via PJRT (L1/L2 path).
     Xla,
 }
@@ -89,6 +124,7 @@ impl Engine {
     pub fn name(&self) -> &'static str {
         match self {
             Engine::Rust => "rust",
+            Engine::BatchedHost => "batched-host",
             Engine::Xla => "xla",
         }
     }
@@ -96,6 +132,7 @@ impl Engine {
     pub fn parse(s: &str) -> Option<Engine> {
         Some(match s.to_ascii_lowercase().as_str() {
             "rust" => Engine::Rust,
+            "batched-host" | "batched_host" | "batched" => Engine::BatchedHost,
             "xla" => Engine::Xla,
             _ => return None,
         })
@@ -180,9 +217,10 @@ mod tests {
 
     #[test]
     fn engine_parse_roundtrip() {
-        for e in [Engine::Rust, Engine::Xla] {
+        for e in [Engine::Rust, Engine::BatchedHost, Engine::Xla] {
             assert_eq!(Engine::parse(e.name()), Some(e));
         }
+        assert_eq!(Engine::parse("batched"), Some(Engine::BatchedHost));
         assert_eq!(Engine::parse("tpu"), None);
     }
 

@@ -8,11 +8,14 @@
 //! through these functions; adding an orthoptimizer touches its module
 //! plus this file only.
 //!
-//! Invariant (checked by `tests/spec_api.rs`): [`construct`] holds the
-//! only `match` over `Method` in the crate that constructs optimizers.
+//! Invariant (checked by `tests/spec_api.rs`): optimizer-constructing
+//! `match`es over `Method` live in this file only — [`construct`] for the
+//! per-matrix engines (real + complex) and [`build_batched_host`] for the
+//! batched host engine.
 
 use super::adam::{Adam, AdamConfig};
 use super::base::BaseOptKind;
+use super::batched::BatchedHost;
 use super::landing::{Landing, LandingConfig};
 use super::pogo::{LambdaPolicy, Pogo, PogoConfig};
 use super::rgd::{Rgd, RgdConfig};
@@ -33,6 +36,10 @@ pub struct Capabilities {
     pub matmul_only: bool,
     /// Has a complex-Stiefel (unitary) engine.
     pub complex: bool,
+    /// Has a batched host engine (`Engine::BatchedHost`): every
+    /// matmul-only method, plus elementwise Adam. QR-retraction methods
+    /// (RGD, RSDM) are inherently per-matrix and stay on the loop engine.
+    pub batched_host: bool,
     /// XLA step programs this method can drive (empty = host-only).
     pub xla_step_kinds: &'static [StepKind],
 }
@@ -44,24 +51,39 @@ pub fn capabilities(method: Method) -> Capabilities {
         Method::Pogo => Capabilities {
             matmul_only: true,
             complex: true,
+            batched_host: true,
             xla_step_kinds: &[StepKind::Pogo, StepKind::PogoVadam, StepKind::PogoFindRoot],
         },
         Method::Landing | Method::LandingPC => Capabilities {
             matmul_only: true,
             complex: true,
+            batched_host: true,
             xla_step_kinds: &[StepKind::Landing],
         },
         Method::Slpg => Capabilities {
             matmul_only: true,
             complex: true,
+            batched_host: true,
             xla_step_kinds: &[StepKind::Slpg],
         },
-        Method::Rgd => {
-            Capabilities { matmul_only: false, complex: true, xla_step_kinds: &[] }
-        }
-        Method::Rsdm | Method::Adam => {
-            Capabilities { matmul_only: false, complex: false, xla_step_kinds: &[] }
-        }
+        Method::Rgd => Capabilities {
+            matmul_only: false,
+            complex: true,
+            batched_host: false,
+            xla_step_kinds: &[],
+        },
+        Method::Rsdm => Capabilities {
+            matmul_only: false,
+            complex: false,
+            batched_host: false,
+            xla_step_kinds: &[],
+        },
+        Method::Adam => Capabilities {
+            matmul_only: false,
+            complex: false,
+            batched_host: true,
+            xla_step_kinds: &[],
+        },
     }
 }
 
@@ -189,6 +211,35 @@ pub fn build_host<S: Scalar>(
     }
 }
 
+/// Build the batched host engine (`Engine::BatchedHost`) for one shape
+/// group at scalar type `S`: the whole group packed into a `(B, p, n)`
+/// [`crate::linalg::BatchMat`] and stepped with batch-parallel kernels.
+/// Gated on [`Capabilities::batched_host`].
+pub fn build_batched_host<S: Scalar>(
+    spec: &OptimizerSpec,
+) -> Result<Box<dyn Orthoptimizer<S>>> {
+    ensure!(
+        capabilities(spec.method).batched_host,
+        "{} is retraction-based (per-matrix QR) — no batched host engine; \
+         use engine 'rust'",
+        spec.method.name()
+    );
+    Ok(match spec.method {
+        Method::Pogo => {
+            Box::new(BatchedHost::<S>::pogo(spec.lr, spec.lambda, spec.base))
+        }
+        Method::Landing => {
+            Box::new(BatchedHost::<S>::landing(spec.lr, spec.attraction, spec.base))
+        }
+        Method::LandingPC => {
+            Box::new(BatchedHost::<S>::landing_pc(spec.lr, spec.attraction))
+        }
+        Method::Slpg => Box::new(BatchedHost::<S>::slpg(spec.lr, spec.base)),
+        Method::Adam => Box::new(BatchedHost::<S>::adam(spec.lr)),
+        Method::Rgd | Method::Rsdm => unreachable!("capability gate above"),
+    })
+}
+
 /// Build a complex-Stiefel (unitary) optimizer at scalar type `S`.
 pub fn build_unitary<S: Scalar>(
     spec: &OptimizerSpec,
@@ -245,6 +296,27 @@ mod tests {
             let caps = capabilities(m);
             // matmul-only ⇔ has at least one XLA step program.
             assert_eq!(caps.matmul_only, !caps.xla_step_kinds.is_empty(), "{}", m.name());
+            // matmul-only ⇒ batched host engine exists.
+            assert!(!caps.matmul_only || caps.batched_host, "{}", m.name());
+        }
+    }
+
+    #[test]
+    fn batched_host_lineup_builds_and_retraction_methods_refuse() {
+        for m in [
+            Method::Pogo,
+            Method::Landing,
+            Method::LandingPC,
+            Method::Slpg,
+            Method::Adam,
+        ] {
+            let opt = build_batched_host::<f32>(&OptimizerSpec::new(m, 0.05)).unwrap();
+            assert!(opt.prefers_batch(), "{}", m.name());
+            assert!(opt.name().contains("[batched]"), "{}", opt.name());
+        }
+        for m in [Method::Rgd, Method::Rsdm] {
+            let err = build_batched_host::<f32>(&OptimizerSpec::new(m, 0.05)).unwrap_err();
+            assert!(format!("{err}").contains("no batched host engine"), "{err}");
         }
     }
 

@@ -1,0 +1,233 @@
+//! Batched host engine ≡ per-matrix host loop, elementwise.
+//!
+//! `Engine::BatchedHost` promises the *same arithmetic in the same order*
+//! as the sequential per-matrix engine — its kernels run the identical
+//! serial row-range matmul code once per batch element. This suite pins
+//! that contract for every batched rule (POGO under each base optimizer
+//! and λ policy, Landing, LandingPC, SLPG, unconstrained Adam) across the
+//! paper's shape regimes and several batch sizes, checks feasibility over
+//! a long batched run, and exercises the `OptimizerSpec` round-trip +
+//! coordinator path for the new engine.
+
+use pogo::coordinator::{OptimSession, OptimizerSpec, ParamStore};
+use pogo::linalg::MatF;
+use pogo::manifold::stiefel;
+use pogo::optim::base::BaseOptKind;
+use pogo::optim::pogo::LambdaPolicy;
+use pogo::optim::{Engine, Method};
+use pogo::rng::Rng;
+use pogo::util::json::Json;
+
+/// Shape regimes: the Fig. 1 3×3 kernels, a wide Stiefel block, and a
+/// square attention-sized matrix. (The manifold convention is wide
+/// row-orthogonal `p ≤ n`.)
+const SHAPES: &[(usize, usize)] = &[(3, 3), (16, 64), (128, 128)];
+const BATCHES: &[usize] = &[1, 7, 64];
+const STEPS: usize = 3;
+
+/// Max |batched − loop| across every matrix after stepping both engines
+/// from identical state with identical gradients.
+fn max_divergence(spec: &OptimizerSpec, p: usize, n: usize, b: usize, seed: u64) -> f32 {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut xs_loop: Vec<MatF> =
+        (0..b).map(|_| stiefel::random_point(p, n, &mut rng)).collect();
+    let mut xs_batched = xs_loop.clone();
+    let grads: Vec<Vec<MatF>> = (0..STEPS)
+        .map(|_| {
+            (0..b)
+                .map(|_| {
+                    let g = MatF::randn(p, n, &mut rng);
+                    let nn = g.norm();
+                    g.scale(0.5 / nn)
+                })
+                .collect()
+        })
+        .collect();
+
+    let mut opt_loop = spec
+        .with_engine(Engine::Rust)
+        .build::<f32>(None, (b, p, n))
+        .expect("loop engine builds");
+    let mut opt_batched = spec
+        .with_engine(Engine::BatchedHost)
+        .build::<f32>(None, (b, p, n))
+        .expect("batched engine builds");
+    assert!(!opt_loop.prefers_batch());
+    assert!(opt_batched.prefers_batch());
+
+    for gs in &grads {
+        opt_loop.step_group(&mut xs_loop, gs).unwrap();
+        opt_batched.step_group(&mut xs_batched, gs).unwrap();
+    }
+    let mut worst = 0.0f32;
+    for (xl, xb) in xs_loop.iter().zip(&xs_batched) {
+        assert!(xb.all_finite());
+        worst = worst.max(xl.sub(xb).max_abs());
+    }
+    worst
+}
+
+/// Run the full (shape × batch) grid for one spec. The (128, 128) shape
+/// is capped at B = 7 to keep debug-mode test time bounded; the large-B
+/// coverage comes from the smaller shapes.
+fn assert_parity(spec: OptimizerSpec) {
+    for &(p, n) in SHAPES {
+        for &b in BATCHES {
+            if p >= 128 && b > 7 {
+                continue;
+            }
+            let d = max_divergence(&spec, p, n, b, (p * 1000 + n * 10 + b) as u64);
+            assert!(
+                d <= 1e-5,
+                "{} diverged by {d} at ({p}, {n}) B={b}",
+                spec.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn pogo_sgd_parity() {
+    assert_parity(OptimizerSpec::new(Method::Pogo, 0.1));
+}
+
+#[test]
+fn pogo_momentum_parity() {
+    assert_parity(OptimizerSpec::new(Method::Pogo, 0.1).with_base(BaseOptKind::momentum(0.9)));
+}
+
+#[test]
+fn pogo_vadam_parity() {
+    // Exercises the batched per-matrix scalar second-moment state.
+    assert_parity(OptimizerSpec::new(Method::Pogo, 0.2).with_base(BaseOptKind::vadam()));
+}
+
+#[test]
+fn pogo_find_root_parity() {
+    // Per-matrix quartic roots from the batched gram residuals.
+    assert_parity(OptimizerSpec::new(Method::Pogo, 0.1).with_lambda(LambdaPolicy::FindRoot));
+}
+
+#[test]
+fn landing_parity() {
+    assert_parity(
+        OptimizerSpec::new(Method::Landing, 0.1).with_base(BaseOptKind::momentum(0.1)),
+    );
+}
+
+#[test]
+fn landing_pc_parity() {
+    // Per-matrix gradient normalization path.
+    assert_parity(OptimizerSpec::new(Method::LandingPC, 0.5).with_attraction(1.0));
+}
+
+#[test]
+fn slpg_parity() {
+    assert_parity(OptimizerSpec::new(Method::Slpg, 0.05));
+}
+
+#[test]
+fn adam_parity() {
+    // Batched elementwise Adam state (first + second moments).
+    assert_parity(OptimizerSpec::new(Method::Adam, 0.01));
+}
+
+#[test]
+fn batched_orthogonality_over_100_steps() {
+    // Feasibility at the seed tolerance after a long batched run (Thm 3.5
+    // regime: ‖G‖ = 0.5, η = 0.2 ⇒ ξ = 0.1).
+    let (p, n, b) = (16, 64, 7);
+    let spec = OptimizerSpec::new(Method::Pogo, 0.2)
+        .with_base(BaseOptKind::vadam())
+        .with_engine(Engine::BatchedHost);
+    let mut rng = Rng::seed_from_u64(42);
+    let mut xs: Vec<MatF> = (0..b).map(|_| stiefel::random_point(p, n, &mut rng)).collect();
+    let mut opt = spec.build::<f32>(None, (b, p, n)).unwrap();
+    for _ in 0..100 {
+        let gs: Vec<MatF> = (0..b)
+            .map(|_| {
+                let g = MatF::randn(p, n, &mut rng);
+                let nn = g.norm();
+                g.scale(0.5 / nn)
+            })
+            .collect();
+        opt.step_group(&mut xs, &gs).unwrap();
+    }
+    for x in &xs {
+        let d = stiefel::distance(x);
+        assert!(d <= 1e-3, "left the manifold: {d}");
+    }
+}
+
+#[test]
+fn spec_round_trips_batched_host_engine() {
+    // `pogo run --spec` input format: engine "batched-host" survives the
+    // JSON round-trip byte-identically and builds the batched engine.
+    let spec = OptimizerSpec::new(Method::Pogo, 0.1)
+        .with_base(BaseOptKind::vadam())
+        .with_engine(Engine::BatchedHost);
+    let text = spec.to_json().to_string();
+    assert!(text.contains("batched-host"), "{text}");
+    let back = OptimizerSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back, spec);
+    assert_eq!(back.to_json().to_string(), text, "byte-identical reserialization");
+    assert_eq!(back.label(), "POGO[batched]");
+    let opt = back.build::<f32>(None, (4, 3, 3)).unwrap();
+    assert!(opt.prefers_batch());
+    // The manifest-file path too (what --spec actually reads).
+    let dir = std::env::temp_dir().join(format!("pogo_batched_spec_{}", std::process::id()));
+    let path = dir.join("run.spec.json");
+    spec.write_json_file(&path).unwrap();
+    assert_eq!(OptimizerSpec::from_json_file(&path).unwrap(), spec);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn retraction_methods_refuse_batched_engine() {
+    for m in [Method::Rgd, Method::Rsdm] {
+        let spec = OptimizerSpec::new(m, 0.1).with_engine(Engine::BatchedHost);
+        let err = spec.build::<f32>(None, (4, 3, 3)).unwrap_err();
+        assert!(format!("{err:#}").contains("no batched host engine"), "{err:#}");
+    }
+}
+
+#[test]
+fn session_batched_path_matches_loop_path() {
+    // End-to-end through the coordinator: OptimSession extracts a
+    // (B, p, n) BatchMat for the batched engine and a Vec<Mat> for the
+    // loop engine; trajectories must agree elementwise across a store
+    // with several shape groups.
+    let mut rng = Rng::seed_from_u64(7);
+    let mut store_loop = ParamStore::new();
+    store_loop.add_stiefel_group("kernels", 9, 3, 3, &mut rng);
+    store_loop.add_stiefel_group("wide", 3, 8, 24, &mut rng);
+    store_loop.add_free("head", MatF::zeros(4, 4));
+    let mut store_batched = store_loop.clone();
+
+    let spec = OptimizerSpec::new(Method::Pogo, 0.05).with_base(BaseOptKind::vadam());
+    let mut s_loop = OptimSession::new(&spec, &store_loop, None).unwrap();
+    let mut s_batched = OptimSession::new(
+        &spec.with_engine(Engine::BatchedHost),
+        &store_batched,
+        None,
+    )
+    .unwrap();
+
+    for step in 0..5u64 {
+        let mut rng = Rng::seed_from_u64(1000 + step);
+        let grads: Vec<MatF> = store_loop
+            .params()
+            .iter()
+            .map(|p| MatF::randn(p.mat.rows(), p.mat.cols(), &mut rng).scale(0.1))
+            .collect();
+        s_loop.apply(&mut store_loop, &grads).unwrap();
+        s_batched.apply(&mut store_batched, &grads).unwrap();
+    }
+    for i in 0..store_loop.len() {
+        let d = store_loop.mat(i).sub(store_batched.mat(i)).max_abs();
+        assert!(d <= 1e-5, "param {i} diverged by {d}");
+    }
+    // Free parameter untouched by the constrained session on both paths.
+    assert_eq!(store_loop.mat(12).norm_sq(), 0.0);
+    assert_eq!(store_batched.mat(12).norm_sq(), 0.0);
+}
