@@ -1,16 +1,50 @@
-//! Regenerates Fig. 8: squared unitary circuit (Born MPS) bits-per-dim +
-//! manifold distance on the complex Stiefel manifold, §C.4 protocol
-//! (plateau-halving lr, early stopping).
+//! Fig. 8 benchmark: the unitary batched-vs-loop engine race at the Born
+//! core shape, emitting machine-readable `BENCH_born.json` through the
+//! shared bench helper (redirect with `POGO_BENCH_JSON_BORN`). CI's
+//! `bench-smoke` job runs this with `POGO_BENCH_QUICK=1`, uploads the
+//! JSON, and fails if the batched unitary engine drops below 1× the
+//! per-matrix loop at B = 1024.
+//!
+//! The full Fig. 8 training experiment (bits-per-dim + manifold distance,
+//! §C.4 protocol) needs the AOT `born_lossgrad` artifacts; opt in with
+//! `POGO_BORN_E2E=1` after `make artifacts`.
 
 use pogo::config::{ExperimentId, RunConfig};
+use pogo::experiments::born;
 
 fn main() {
     pogo::util::logging::init();
     let quick = std::env::var("POGO_BENCH_QUICK").is_ok();
-    let mut cfg = RunConfig::new(ExperimentId::Fig8Born);
-    cfg.steps = if quick { 30 } else { 200 };
-    if let Err(e) = pogo::experiments::run(&cfg) {
-        eprintln!("fig8 failed: {e:#}");
-        std::process::exit(1);
+
+    // Quick profile covers B ∈ {64, 256}; the full run adds B = 1024 —
+    // but CI gates on 1024, so force the full batch list there too.
+    let (rows, speedups) = match born::race_unitary_engines(false, 0) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("unitary engine race failed: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    for &(b, s) in &speedups {
+        println!("unitary batched-vs-loop speedup at B={b}: {s:.2}x");
+    }
+    let default_json = pogo::repo_root().join("BENCH_born.json");
+    match pogo::bench::write_born_json(&default_json, &rows, &speedups) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => {
+            eprintln!("failed to write BENCH_born.json: {e}");
+            std::process::exit(1);
+        }
+    }
+
+    // Optional: the registry-backed training experiment (Fig. 8 proper).
+    if std::env::var("POGO_BORN_E2E").is_ok() {
+        let mut cfg = RunConfig::new(ExperimentId::Fig8Born);
+        cfg.steps = if quick { 30 } else { 200 };
+        cfg.quick = quick;
+        if let Err(e) = pogo::experiments::run(&cfg) {
+            eprintln!("fig8 failed: {e:#}");
+            std::process::exit(1);
+        }
     }
 }

@@ -189,18 +189,18 @@ pub fn scale_json(records: &[ScaleRecord], speedups: &[(usize, f64)]) -> crate::
     ])
 }
 
-/// Write `BENCH_scale.json` to `default_path` — unless `POGO_BENCH_JSON`
+/// Write a batched-vs-loop report to `default_path` — unless `env_var`
 /// is set, which redirects the output wherever the caller's environment
 /// wants it (CI points it at the workspace root before uploading the
-/// artifact). Both emitters (`cargo bench --bench step_micro` and
-/// `pogo run scale`) route through here so the format and the redirect
-/// cannot drift. Returns the path actually written.
-pub fn write_scale_json(
+/// artifact). Every emitter routes through here so the format and the
+/// redirect cannot drift. Returns the path actually written.
+pub fn write_bench_json(
+    env_var: &str,
     default_path: &std::path::Path,
     records: &[ScaleRecord],
     speedups: &[(usize, f64)],
 ) -> std::io::Result<std::path::PathBuf> {
-    let path = match std::env::var("POGO_BENCH_JSON") {
+    let path = match std::env::var(env_var) {
         Ok(p) => std::path::PathBuf::from(p),
         Err(_) => default_path.to_path_buf(),
     };
@@ -211,6 +211,27 @@ pub fn write_scale_json(
     }
     std::fs::write(&path, scale_json(records, speedups).to_string_pretty() + "\n")?;
     Ok(path)
+}
+
+/// `BENCH_scale.json` (real Fig. 1 sweep; redirect: `POGO_BENCH_JSON`).
+/// Shared by `cargo bench --bench step_micro` and `pogo run scale`.
+pub fn write_scale_json(
+    default_path: &std::path::Path,
+    records: &[ScaleRecord],
+    speedups: &[(usize, f64)],
+) -> std::io::Result<std::path::PathBuf> {
+    write_bench_json("POGO_BENCH_JSON", default_path, records, speedups)
+}
+
+/// `BENCH_born.json` (complex Fig. 8 unitary batched-vs-loop race;
+/// redirect: `POGO_BENCH_JSON_BORN`). Shared by
+/// `cargo bench --bench fig8_born` and `pogo run born`.
+pub fn write_born_json(
+    default_path: &std::path::Path,
+    records: &[ScaleRecord],
+    speedups: &[(usize, f64)],
+) -> std::io::Result<std::path::PathBuf> {
+    write_bench_json("POGO_BENCH_JSON_BORN", default_path, records, speedups)
 }
 
 #[cfg(test)]

@@ -14,10 +14,10 @@
 //! experiment drivers emit a `*.spec.json` manifest next to each CSV and
 //! the CLI accepts `pogo run --spec <file.json>`.
 
+use crate::linalg::Complex;
 use crate::optim::base::BaseOptKind;
 use crate::optim::pogo::LambdaPolicy;
 use crate::optim::registry as methods;
-use crate::optim::unitary::UnitaryOptimizer;
 use crate::optim::{Engine, Method, Orthoptimizer};
 use crate::runtime::Registry;
 use crate::util::json::Json;
@@ -131,13 +131,25 @@ impl OptimizerSpec {
     }
 
     /// Build a complex-Stiefel (unitary) optimizer for `n_params`
-    /// matrices. Complex updates always run on the host engine (the tiny
-    /// Born cores make XLA dispatch overhead-bound).
+    /// matrices, honouring `self.engine` like the real path: `rust` is
+    /// the per-matrix loop, `batched-host` the packed
+    /// `BatchedHost<Complex<S>>` (the Fig. 8 thousands-of-unitaries fast
+    /// path; state is batch-wide, so give it one shape-homogeneous group
+    /// — `OptimSession::new_unitary` does). The XLA engine is not wired
+    /// for the complex domain (the tiny Born cores make complex XLA
+    /// dispatch overhead-bound) and errors instead of silently falling
+    /// back.
     pub fn build_unitary<S: crate::linalg::Scalar>(
         &self,
         n_params: usize,
-    ) -> Result<Box<dyn UnitaryOptimizer<S>>> {
-        methods::build_unitary::<S>(self, n_params)
+    ) -> Result<Box<dyn Orthoptimizer<Complex<S>>>> {
+        match self.engine {
+            Engine::Rust => methods::build_unitary::<S>(self, n_params),
+            Engine::BatchedHost => methods::build_batched_host_unitary::<S>(self),
+            Engine::Xla => Err(anyhow!(
+                "the XLA engine has no complex-Stiefel path; use 'rust' or 'batched-host'"
+            )),
+        }
     }
 
     // ---- Serialization (util/json; keys sorted ⇒ deterministic) ---------
@@ -317,6 +329,24 @@ mod tests {
         // Retraction methods have no batched engine.
         let rgd = OptimizerSpec::new(Method::Rgd, 0.05).with_engine(Engine::BatchedHost);
         assert!(rgd.build::<f32>(None, (3, 4, 8)).is_err());
+    }
+
+    #[test]
+    fn unitary_engine_dispatch() {
+        // Complex builds honour spec.engine: loop, batched, no-XLA.
+        let spec = OptimizerSpec::new(Method::Pogo, 0.05);
+        let loop_opt = spec.build_unitary::<f32>(4).unwrap();
+        assert!(!loop_opt.prefers_batch());
+        let batched = spec.with_engine(Engine::BatchedHost).build_unitary::<f32>(4).unwrap();
+        assert!(batched.prefers_batch());
+        assert!(batched.name().contains("[batched]"));
+        assert!(spec.with_engine(Engine::Xla).build_unitary::<f32>(4).is_err());
+        // Engine round-trips through JSON for the complex path too.
+        let s = spec.with_engine(Engine::BatchedHost);
+        let back = OptimizerSpec::from_json(&Json::parse(&s.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(back, s);
+        assert!(back.build_unitary::<f32>(2).unwrap().prefers_batch());
     }
 
     #[test]

@@ -1,12 +1,15 @@
 //! Parameter store: named constrained/unconstrained matrices, grouped by
-//! shape for batched dispatch.
+//! shape for batched dispatch — generic over the element [`Field`], so
+//! one store type serves real Stiefel parameters (`ParamStore<f32>`, the
+//! default) and complex unitary ones (`ParamStore<Complex<f32>>`, the
+//! Born-MPS cores of Fig. 8).
 //!
 //! The shape-grouping is the coordinator's core scalability device (the
 //! paper's Fig. 1 regime): 10⁴ orthogonal 3×3 kernels become a handful of
 //! `(B, 3, 3)` groups, each updated by ONE XLA dispatch (or one Rust loop),
 //! instead of 10⁴ tiny QR calls.
 
-use crate::linalg::{BatchMat, MatF};
+use crate::linalg::{BatchMat, Complex, Field, Mat, Scalar};
 use crate::manifold::stiefel;
 use crate::rng::Rng;
 use std::collections::BTreeMap;
@@ -22,9 +25,9 @@ pub enum Constraint {
 
 /// One named parameter.
 #[derive(Clone, Debug)]
-pub struct Param {
+pub struct Param<E: Field = f32> {
     pub name: String,
-    pub mat: MatF,
+    pub mat: Mat<E>,
     pub constraint: Constraint,
     /// Batching key: parameters group by (shape, key). Empty by default;
     /// set it to keep logically-distinct collections (e.g. CNN layers) in
@@ -42,18 +45,25 @@ pub struct Group {
 }
 
 /// The parameter store.
-#[derive(Clone, Debug, Default)]
-pub struct ParamStore {
-    params: Vec<Param>,
+#[derive(Clone, Debug)]
+pub struct ParamStore<E: Field = f32> {
+    params: Vec<Param<E>>,
 }
 
-impl ParamStore {
+impl<E: Field> Default for ParamStore<E> {
+    fn default() -> Self {
+        ParamStore { params: Vec::new() }
+    }
+}
+
+impl<E: Field> ParamStore<E> {
     pub fn new() -> Self {
         Self::default()
     }
 
-    /// Register a Stiefel-constrained parameter (must start feasible).
-    pub fn add_stiefel(&mut self, name: impl Into<String>, mat: MatF) -> usize {
+    /// Register a Stiefel-constrained parameter (must start feasible —
+    /// `X Xᴴ ≈ I` on either field).
+    pub fn add_stiefel(&mut self, name: impl Into<String>, mat: Mat<E>) -> usize {
         self.add_stiefel_keyed(name, mat, "")
     }
 
@@ -61,10 +71,10 @@ impl ParamStore {
     pub fn add_stiefel_keyed(
         &mut self,
         name: impl Into<String>,
-        mat: MatF,
+        mat: Mat<E>,
         key: impl Into<String>,
     ) -> usize {
-        let d = stiefel::distance(&mat);
+        let d = stiefel::distance_f(&mat);
         debug_assert!(d < 1e-2, "parameter registered off-manifold: {d}");
         self.params.push(Param {
             name: name.into(),
@@ -76,7 +86,7 @@ impl ParamStore {
     }
 
     /// Register an unconstrained parameter.
-    pub fn add_free(&mut self, name: impl Into<String>, mat: MatF) -> usize {
+    pub fn add_free(&mut self, name: impl Into<String>, mat: Mat<E>) -> usize {
         self.params.push(Param {
             name: name.into(),
             mat,
@@ -84,27 +94,6 @@ impl ParamStore {
             group_key: String::new(),
         });
         self.params.len() - 1
-    }
-
-    /// Register `count` random Stiefel matrices of one shape
-    /// (`name_0 … name_{count−1}`), batch-keyed by `name`. Returns indices.
-    pub fn add_stiefel_group(
-        &mut self,
-        name: &str,
-        count: usize,
-        p: usize,
-        n: usize,
-        rng: &mut Rng,
-    ) -> Vec<usize> {
-        (0..count)
-            .map(|i| {
-                self.add_stiefel_keyed(
-                    format!("{name}_{i}"),
-                    stiefel::random_point(p, n, rng),
-                    name,
-                )
-            })
-            .collect()
     }
 
     pub fn len(&self) -> usize {
@@ -115,19 +104,19 @@ impl ParamStore {
         self.params.is_empty()
     }
 
-    pub fn get(&self, idx: usize) -> &Param {
+    pub fn get(&self, idx: usize) -> &Param<E> {
         &self.params[idx]
     }
 
-    pub fn get_mut(&mut self, idx: usize) -> &mut Param {
+    pub fn get_mut(&mut self, idx: usize) -> &mut Param<E> {
         &mut self.params[idx]
     }
 
-    pub fn mat(&self, idx: usize) -> &MatF {
+    pub fn mat(&self, idx: usize) -> &Mat<E> {
         &self.params[idx].mat
     }
 
-    pub fn params(&self) -> &[Param] {
+    pub fn params(&self) -> &[Param<E>] {
         &self.params
     }
 
@@ -157,13 +146,15 @@ impl ParamStore {
     }
 
     /// Clone the matrices of a group (batch extraction for dispatch).
-    pub fn extract_group(&self, g: &Group) -> Vec<MatF> {
+    pub fn extract_group(&self, g: &Group) -> Vec<Mat<E>> {
         g.indices.iter().map(|&i| self.params[i].mat.clone()).collect()
     }
 
     /// Pack a group's matrices into one contiguous `(B, p, n)` tensor —
     /// the batched engine's unit of dispatch (no per-matrix allocations).
-    pub fn extract_group_batch(&self, g: &Group) -> BatchMat<f32> {
+    /// Works on either field: complex groups pack interleaved
+    /// `Complex<S>` entries, exactly what `BatchedHost<Complex<S>>` steps.
+    pub fn extract_group_batch(&self, g: &Group) -> BatchMat<E> {
         let (p, n) = g.shape;
         let mut batch = BatchMat::zeros(g.indices.len(), p, n);
         for (bi, &i) in g.indices.iter().enumerate() {
@@ -173,7 +164,7 @@ impl ParamStore {
     }
 
     /// Write a stepped `(B, p, n)` tensor back into a group's parameters.
-    pub fn write_group_batch(&mut self, g: &Group, batch: &BatchMat<f32>) {
+    pub fn write_group_batch(&mut self, g: &Group, batch: &BatchMat<E>) {
         assert_eq!(batch.batch(), g.indices.len(), "batch size vs group size");
         for (bi, &i) in g.indices.iter().enumerate() {
             let m = &mut self.params[i].mat;
@@ -183,7 +174,7 @@ impl ParamStore {
     }
 
     /// Write updated matrices back into a group.
-    pub fn write_group(&mut self, g: &Group, mats: Vec<MatF>) {
+    pub fn write_group(&mut self, g: &Group, mats: Vec<Mat<E>>) {
         assert_eq!(mats.len(), g.indices.len());
         for (&i, m) in g.indices.iter().zip(mats) {
             debug_assert_eq!(self.params[i].mat.shape(), m.shape());
@@ -192,16 +183,17 @@ impl ParamStore {
     }
 
     /// Max manifold distance across all constrained parameters — the
-    /// feasibility telemetry of every figure.
+    /// feasibility telemetry of every figure (`‖X Xᴴ − I‖` on either
+    /// field).
     pub fn max_stiefel_distance(&self) -> f64 {
         self.params
             .iter()
             .filter(|p| p.constraint == Constraint::Stiefel)
-            .map(|p| stiefel::distance(&p.mat))
+            .map(|p| stiefel::distance_f(&p.mat))
             .fold(0.0, f64::max)
     }
 
-    /// Max *normalized* distance ‖XXᵀ−I‖/√p (Fig. 6's metric).
+    /// Max *normalized* distance ‖XXᴴ−I‖/√p (Fig. 6's metric).
     pub fn max_normalized_distance(&self) -> f64 {
         self.params
             .iter()
@@ -210,15 +202,64 @@ impl ParamStore {
             .fold(0.0, f64::max)
     }
 
-    /// Total parameter count (scalars).
+    /// Total parameter count (scalars — complex entries count once).
     pub fn num_scalars(&self) -> usize {
         self.params.iter().map(|p| p.mat.len()).sum()
+    }
+}
+
+/// Real-only conveniences (QR-based random points).
+impl<S: Scalar> ParamStore<S> {
+    /// Register `count` random Stiefel matrices of one shape
+    /// (`name_0 … name_{count−1}`), batch-keyed by `name`. Returns indices.
+    pub fn add_stiefel_group(
+        &mut self,
+        name: &str,
+        count: usize,
+        p: usize,
+        n: usize,
+        rng: &mut Rng,
+    ) -> Vec<usize> {
+        (0..count)
+            .map(|i| {
+                self.add_stiefel_keyed(
+                    format!("{name}_{i}"),
+                    stiefel::random_point_t::<S>(p, n, rng),
+                    name,
+                )
+            })
+            .collect()
+    }
+}
+
+/// Complex-only conveniences (polar-projected random unitary points).
+impl<S: Scalar> ParamStore<Complex<S>> {
+    /// Register `count` random complex-Stiefel (unitary) matrices of one
+    /// shape, batch-keyed by `name`. Returns indices.
+    pub fn add_unitary_group(
+        &mut self,
+        name: &str,
+        count: usize,
+        p: usize,
+        n: usize,
+        rng: &mut Rng,
+    ) -> Vec<usize> {
+        (0..count)
+            .map(|i| {
+                self.add_stiefel_keyed(
+                    format!("{name}_{i}"),
+                    stiefel::random_point_complex::<S>(p, n, rng),
+                    name,
+                )
+            })
+            .collect()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::MatF;
     use crate::testing;
 
     #[test]
@@ -252,7 +293,7 @@ mod tests {
     #[test]
     fn batch_extract_write_roundtrip() {
         let mut rng = Rng::seed_from_u64(4);
-        let mut store = ParamStore::new();
+        let mut store: ParamStore<f32> = ParamStore::new();
         store.add_stiefel_group("g", 5, 3, 6, &mut rng);
         let groups = store.stiefel_groups();
         let mut batch = store.extract_group_batch(&groups[0]);
@@ -283,10 +324,32 @@ mod tests {
     #[test]
     fn distances_zero_at_init() {
         let mut rng = Rng::seed_from_u64(2);
-        let mut store = ParamStore::new();
+        let mut store: ParamStore<f32> = ParamStore::new();
         store.add_stiefel_group("g", 3, 4, 9, &mut rng);
         assert!(store.max_stiefel_distance() < 1e-5);
         assert!(store.max_normalized_distance() < 1e-5);
+    }
+
+    #[test]
+    fn complex_store_groups_and_batches() {
+        // The SAME store type over Complex<f32>: unitary groups pack and
+        // write back through the identical batch path.
+        let mut rng = Rng::seed_from_u64(5);
+        let mut store: ParamStore<Complex<f32>> = ParamStore::new();
+        store.add_unitary_group("cores", 4, 3, 6, &mut rng);
+        store.add_unitary_group("wide", 2, 4, 8, &mut rng);
+        assert!(store.max_stiefel_distance() < 1e-4);
+        let groups = store.stiefel_groups();
+        assert_eq!(groups.len(), 2);
+        let mut batch = store.extract_group_batch(&groups[0]);
+        assert_eq!(batch.shape(), (4, 3, 6));
+        for (bi, m) in store.extract_group(&groups[0]).iter().enumerate() {
+            assert_eq!(batch.mat(bi), m.as_slice());
+        }
+        batch.mat_mut(1).fill(Complex::new(0.0, 0.0));
+        store.write_group_batch(&groups[0], &batch);
+        assert_eq!(store.mat(1).norm_sq(), 0.0);
+        assert!(store.mat(0).norm_sq() > 0.0);
     }
 
     #[test]

@@ -6,31 +6,38 @@
 //! thin client of this type, and experiment drivers that don't need the
 //! Trainer's schedules/telemetry (scale sweeps, custom loops) can drive a
 //! session directly instead of re-implementing the group loop.
+//!
+//! Field-generic: `OptimSession<f32>` (the default) steps real Stiefel
+//! stores; [`OptimSession::new_unitary`] builds a
+//! `OptimSession<Complex<S>>` over a complex store, sharing the same
+//! `apply` loop — including the packed-`BatchMat` fast path for the
+//! batched unitary engine (Fig. 8's thousands-of-cores regime).
 
 use super::engine::OptimizerSpec;
 use super::param_store::{Group, ParamStore};
-use crate::linalg::{BatchMat, MatF};
+use crate::linalg::{BatchMat, Complex, Field, Mat, Scalar};
 use crate::optim::Orthoptimizer;
 use crate::runtime::Registry;
 use anyhow::{ensure, Context, Result};
 
 /// Per-shape-group steppers for one run, built from a single
 /// [`OptimizerSpec`] (the crate's one construction path).
-pub struct OptimSession {
+pub struct OptimSession<E: Field = f32> {
     label: String,
     groups: Vec<Group>,
-    steppers: Vec<Box<dyn Orthoptimizer<f32>>>,
+    steppers: Vec<Box<dyn Orthoptimizer<E>>>,
 }
 
-impl OptimSession {
-    /// Build one stepper per constrained shape group of `store`.
+impl OptimSession<f32> {
+    /// Build one stepper per constrained shape group of `store` (real
+    /// Stiefel, f32 — the experiment default).
     ///
     /// `registry` is required when `spec.engine == Engine::Xla`.
     pub fn new(
         spec: &OptimizerSpec,
-        store: &ParamStore,
+        store: &ParamStore<f32>,
         registry: Option<&Registry>,
-    ) -> Result<OptimSession> {
+    ) -> Result<OptimSession<f32>> {
         let groups = store.stiefel_groups();
         let mut steppers = Vec::with_capacity(groups.len());
         for g in &groups {
@@ -44,14 +51,44 @@ impl OptimSession {
         }
         Ok(OptimSession { label: spec.label(), groups, steppers })
     }
+}
 
+impl<S: Scalar> OptimSession<Complex<S>> {
+    /// Build one unitary stepper per constrained shape group of a complex
+    /// store. Engine dispatch mirrors the real path: `rust` is the
+    /// per-matrix loop, `batched-host` packs each group into one
+    /// `(B, p, n)` complex tensor; `xla` is rejected (the tiny Born cores
+    /// make complex XLA dispatch overhead-bound — see
+    /// `OptimizerSpec::build_unitary`).
+    pub fn new_unitary(
+        spec: &OptimizerSpec,
+        store: &ParamStore<Complex<S>>,
+    ) -> Result<OptimSession<Complex<S>>> {
+        let groups = store.stiefel_groups();
+        let mut steppers = Vec::with_capacity(groups.len());
+        for g in &groups {
+            let (p, n) = g.shape;
+            let stepper = spec.build_unitary::<S>(g.indices.len()).with_context(|| {
+                format!(
+                    "building unitary {} for group ({p}, {n})×{}",
+                    spec.label(),
+                    g.indices.len()
+                )
+            })?;
+            steppers.push(stepper);
+        }
+        Ok(OptimSession { label: spec.label(), groups, steppers })
+    }
+}
+
+impl<E: Field> OptimSession<E> {
     /// Assemble a session from pre-built steppers (custom engines, tests).
     /// `steppers[i]` updates `groups[i]`.
     pub fn from_parts(
         label: impl Into<String>,
         groups: Vec<Group>,
-        steppers: Vec<Box<dyn Orthoptimizer<f32>>>,
-    ) -> Result<OptimSession> {
+        steppers: Vec<Box<dyn Orthoptimizer<E>>>,
+    ) -> Result<OptimSession<E>> {
         ensure!(
             groups.len() == steppers.len(),
             "{} groups vs {} steppers",
@@ -70,7 +107,7 @@ impl OptimSession {
         &self.groups
     }
 
-    pub fn steppers(&self) -> &[Box<dyn Orthoptimizer<f32>>] {
+    pub fn steppers(&self) -> &[Box<dyn Orthoptimizer<E>>] {
         &self.steppers
     }
 
@@ -91,11 +128,11 @@ impl OptimSession {
     /// are ignored). Errors from any group's engine propagate.
     ///
     /// Engines whose native unit of work is a packed tensor
-    /// (`prefers_batch()`, e.g. `Engine::BatchedHost`) get the whole
-    /// group as ONE `(B, p, n)` [`BatchMat`] — no per-matrix clones on
-    /// either side of the step. Everything else keeps the per-matrix
-    /// `step_group` path.
-    pub fn apply(&mut self, store: &mut ParamStore, grads: &[MatF]) -> Result<()> {
+    /// (`prefers_batch()`, e.g. `Engine::BatchedHost` — real or complex)
+    /// get the whole group as ONE `(B, p, n)` [`BatchMat`] — no
+    /// per-matrix clones on either side of the step. Everything else
+    /// keeps the per-matrix `step_group` path.
+    pub fn apply(&mut self, store: &mut ParamStore<E>, grads: &[Mat<E>]) -> Result<()> {
         for (g, stepper) in self.groups.iter().zip(&mut self.steppers) {
             let ctx = || {
                 format!(
@@ -108,7 +145,7 @@ impl OptimSession {
             if stepper.prefers_batch() {
                 let mut xb = store.extract_group_batch(g);
                 let (p, n) = g.shape;
-                let mut gb = BatchMat::<f32>::zeros(g.indices.len(), p, n);
+                let mut gb = BatchMat::<E>::zeros(g.indices.len(), p, n);
                 for (bi, &i) in g.indices.iter().enumerate() {
                     gb.set_mat(bi, &grads[i]);
                 }
@@ -116,7 +153,7 @@ impl OptimSession {
                 store.write_group_batch(g, &xb);
             } else {
                 let mut xs = store.extract_group(g);
-                let gs: Vec<MatF> = g.indices.iter().map(|&i| grads[i].clone()).collect();
+                let gs: Vec<Mat<E>> = g.indices.iter().map(|&i| grads[i].clone()).collect();
                 stepper.step_group(&mut xs, &gs).with_context(ctx)?;
                 store.write_group(g, xs);
             }
@@ -128,9 +165,9 @@ impl OptimSession {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::Mat;
+    use crate::linalg::{CMatF, Mat, MatF};
     use crate::manifold::stiefel;
-    use crate::optim::Method;
+    use crate::optim::{Engine, Method};
     use crate::rng::Rng;
     use anyhow::anyhow;
 
@@ -176,7 +213,6 @@ mod tests {
 
     #[test]
     fn batched_engine_session_matches_loop_engine() {
-        use crate::optim::Engine;
         let mut rng = Rng::seed_from_u64(9);
         let mut store_loop = ParamStore::new();
         store_loop.add_stiefel_group("k", 6, 3, 3, &mut rng);
@@ -204,6 +240,49 @@ mod tests {
             let d = store_loop.mat(i).sub(store_batched.mat(i)).max_abs();
             assert!(d <= 1e-6, "param {i} diverged by {d}");
         }
+    }
+
+    #[test]
+    fn unitary_session_batched_matches_loop() {
+        // The complex plumbing end-to-end: a unitary store stepped through
+        // OptimSession under both engines must agree elementwise — the
+        // batched path extracts ONE packed complex tensor per group.
+        use crate::linalg::Complex;
+        let mut rng = Rng::seed_from_u64(11);
+        let mut store_loop: ParamStore<Complex<f32>> = ParamStore::new();
+        store_loop.add_unitary_group("cores", 5, 4, 8, &mut rng);
+        store_loop.add_unitary_group("small", 3, 2, 2, &mut rng);
+        let mut store_batched = store_loop.clone();
+
+        let spec = OptimizerSpec::new(Method::Pogo, 0.05);
+        let mut s_loop = OptimSession::new_unitary(&spec, &store_loop).unwrap();
+        let mut s_batched = OptimSession::new_unitary(
+            &spec.with_engine(Engine::BatchedHost),
+            &store_batched,
+        )
+        .unwrap();
+        assert!(s_batched.steppers().iter().all(|s| s.prefers_batch()));
+        assert!(s_loop.steppers().iter().all(|s| !s.prefers_batch()));
+
+        for step in 0..3u64 {
+            let mut rng = Rng::seed_from_u64(100 + step);
+            let grads: Vec<CMatF> = store_loop
+                .params()
+                .iter()
+                .map(|p| {
+                    let g = CMatF::randn(p.mat.rows(), p.mat.cols(), &mut rng);
+                    let n = g.norm();
+                    g.scale(Complex::from_f64(0.2 / n as f64))
+                })
+                .collect();
+            s_loop.apply(&mut store_loop, &grads).unwrap();
+            s_batched.apply(&mut store_batched, &grads).unwrap();
+        }
+        for i in 0..store_loop.len() {
+            let d = store_loop.mat(i).sub(store_batched.mat(i)).norm();
+            assert!(d <= 1e-5, "param {i} diverged by {d}");
+        }
+        assert!(store_batched.max_stiefel_distance() < 1e-3);
     }
 
     /// A stepper whose engine always fails — exercises error propagation

@@ -10,13 +10,16 @@
 //! Protocol per §C.4: plateau-halving lr, early stopping on validation.
 
 use super::common::{self, RunRecord};
+use crate::bench::ScaleRecord;
 use crate::config::{resolve_spec, RunConfig};
-use crate::coordinator::{EarlyStop, LrSchedule, MetricLog, Scheduler};
+use crate::coordinator::{EarlyStop, LrSchedule, MetricLog, OptimizerSpec, Scheduler};
 use crate::data::mnist_like::MnistLike;
-use crate::linalg::{CMatF, Mat};
+use crate::linalg::{CMatF, Complex, Field, Mat};
 use crate::manifold::stiefel;
+use crate::optim::{Engine, Method, Orthoptimizer};
 use crate::rng::Rng;
 use crate::runtime::{Arg, Registry};
+use crate::util::Stopwatch;
 use anyhow::Result;
 use std::rc::Rc;
 
@@ -55,6 +58,89 @@ pub fn max_distance(cores: &[CMatF]) -> f64 {
     cores.iter().map(stiefel::distance_complex).fold(0.0, f64::max)
 }
 
+// ---------------------------------------------------------------------------
+// Unitary engine race: POGO[loop] vs POGO[batched] on complex groups.
+// ---------------------------------------------------------------------------
+
+/// The dominant Born core shape `(D, 2D)` at D = D_MAX — the bulk of the
+/// MPS sites (see [`core_shapes`]); the race batches THIS shape.
+pub const RACE_SHAPE: (usize, usize) = (D_MAX, 2 * D_MAX);
+
+/// Batch sizes for the unitary race. CI's `bench-smoke` gate reads the
+/// B = 1024 speedup from `BENCH_born.json`.
+pub const RACE_BATCHES: [usize; 3] = [64, 256, 1024];
+
+/// Engine-qualified labels (stable: `BENCH_born.json` consumers key on
+/// them).
+pub const LABEL_LOOP: &str = "unitary-POGO[loop]";
+pub const LABEL_BATCHED: &str = "unitary-POGO[batched]";
+
+/// B random unitary points of `RACE_SHAPE` plus norm-0.5 complex
+/// gradients — the Fig. 8 regime's workload generator, shared with
+/// `benches/fig8_born.rs`.
+pub fn make_unitary_group(b: usize, rng: &mut Rng) -> (Vec<CMatF>, Vec<CMatF>) {
+    let (p, n) = RACE_SHAPE;
+    let xs: Vec<CMatF> =
+        (0..b).map(|_| stiefel::random_point_complex::<f32>(p, n, rng)).collect();
+    let gs: Vec<CMatF> = (0..b)
+        .map(|_| {
+            let g = CMatF::randn(p, n, rng);
+            let nn = g.norm();
+            g.scale(Complex::from_f64(0.5 / nn as f64))
+        })
+        .collect();
+    (xs, gs)
+}
+
+fn time_unitary(
+    opt: &mut dyn Orthoptimizer<Complex<f32>>,
+    xs: &mut [CMatF],
+    gs: &[CMatF],
+    steps: usize,
+) -> Result<f64> {
+    let sw = Stopwatch::start();
+    for _ in 0..steps {
+        opt.step_group(xs, gs)?;
+    }
+    Ok(sw.seconds() * 1e6 / (steps as f64 * xs.len() as f64))
+}
+
+/// Race the per-matrix unitary loop against the batched complex engine
+/// at the Fig. 8 shape. Returns (`BENCH_born.json` rows, speedup map).
+/// Host-only — runs anywhere, no artifacts needed.
+pub fn race_unitary_engines(
+    quick: bool,
+    seed: u64,
+) -> Result<(Vec<ScaleRecord>, Vec<(usize, f64)>)> {
+    let steps = if quick { 3 } else { 10 };
+    let batches: &[usize] = if quick { &RACE_BATCHES[..2] } else { &RACE_BATCHES };
+    let preset = OptimizerSpec::new(Method::Pogo, 0.1);
+    let mut rows: Vec<ScaleRecord> = Vec::new();
+    let mut speedups: Vec<(usize, f64)> = Vec::new();
+    for &b in batches {
+        let mut per_engine = Vec::new();
+        for (label, engine) in
+            [(LABEL_LOOP, Engine::Rust), (LABEL_BATCHED, Engine::BatchedHost)]
+        {
+            let mut rng = Rng::seed_from_u64(seed + b as u64);
+            let (mut xs, gs) = make_unitary_group(b, &mut rng);
+            let mut opt = preset.with_engine(engine).build_unitary::<f32>(b)?;
+            opt.step_group(&mut xs, &gs)?; // warm-up (pool, allocator)
+            let us = time_unitary(opt.as_mut(), &mut xs, &gs, steps)?;
+            // Feasibility must hold even at scale.
+            let max_d = max_distance(&xs);
+            anyhow::ensure!(max_d < 1e-3, "{label}: drifted at B={b}: {max_d}");
+            log::info!("{label} B={b}: {us:.2} µs/matrix");
+            rows.push(ScaleRecord { label: label.to_string(), batch: b, us_per_matrix: us });
+            per_engine.push(us);
+        }
+        if per_engine[1] > 0.0 {
+            speedups.push((b, per_engine[0] / per_engine[1]));
+        }
+    }
+    Ok((rows, speedups))
+}
+
 struct BornGrads {
     lossgrad: Rc<crate::runtime::Executable>,
     eval: Rc<crate::runtime::Executable>,
@@ -77,8 +163,10 @@ impl BornGrads {
     fn core_args<'a>(cores: &'a [CMatF], bufs: &'a mut Vec<(Vec<f32>, Vec<usize>)>) {
         for c in cores {
             let (p, n) = c.shape();
-            bufs.push((c.re.as_slice().to_vec(), vec![p, n]));
-            bufs.push((c.im.as_slice().to_vec(), vec![p, n]));
+            // Complex parameters cross the PJRT boundary as split re/im
+            // planes (two f32 literals per core).
+            bufs.push((c.re_vec(), vec![p, n]));
+            bufs.push((c.im_vec(), vec![p, n]));
         }
     }
 
@@ -117,7 +205,25 @@ impl BornGrads {
 /// the real-Stiefel drivers (methods without a complex engine error out
 /// instead of silently falling back).
 pub fn run(cfg: &RunConfig) -> Result<()> {
-    let reg = common::open_registry()?;
+    // Host-only engine race first (loop vs batched unitary POGO): runs
+    // anywhere, and its BENCH_born.json is what CI's bench-smoke gates
+    // on — the complex twin of scale.rs's BENCH_scale.json.
+    let (rows, speedups) = race_unitary_engines(cfg.quick, cfg.seed)?;
+    for &(b, s) in &speedups {
+        log::info!("unitary batched-vs-loop speedup at B={b}: {s:.2}×");
+    }
+    let json_path =
+        crate::bench::write_born_json(&cfg.out_dir.join("BENCH_born.json"), &rows, &speedups)?;
+    log::info!("wrote {}", json_path.display());
+
+    // The training experiment itself needs the AOT loss/grad artifacts.
+    let reg = match common::open_registry() {
+        Ok(r) => r,
+        Err(e) => {
+            log::warn!("no artifact registry — ran the engine race only ({e:#})");
+            return Ok(());
+        }
+    };
     let steps = if cfg.quick { 10 } else { cfg.steps };
     let eval_every = (steps / 20).max(1);
     let mut records = Vec::new();

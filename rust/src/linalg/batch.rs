@@ -1,6 +1,8 @@
 //! Batched dense tensors: one contiguous `(B, p, n)` buffer holding B
 //! same-shape matrices, plus batched matmul kernels that parallelize
-//! **over the batch dimension**.
+//! **over the batch dimension** — generic over the [`Field`] element, so
+//! the same engine serves real Stiefel groups and complex unitary groups
+//! (the Born-machine MPS regime of Fig. 8).
 //!
 //! This is the host-side answer to the paper's Fig. 1 regime: stepping
 //! thousands of tiny orthogonal matrices. A 3×3 product never crosses the
@@ -8,7 +10,7 @@
 //! `worth_parallelizing` there), so a per-matrix loop leaves every worker
 //! idle. Here the unit of parallel work is a contiguous *chunk of the
 //! batch*: each worker runs the very same serial row-range kernels
-//! (`mm_rows` / `at_b_rows` / `a_bt_rows`) once per matrix in its chunk,
+//! (`mm_rows` / `ah_b_rows` / `a_bh_rows`) once per matrix in its chunk,
 //! which makes batched results bit-identical to the single-matrix entry
 //! points — the property the batched-vs-loop parity suite pins down.
 //!
@@ -17,27 +19,27 @@
 //! literal layout so batches can cross engines without reshuffling.
 
 use super::mat::Mat;
-use super::matmul::{a_bt_rows, at_b_rows, mm_rows};
-use super::scalar::Scalar;
+use super::matmul::{a_bh_rows, ah_b_rows, mm_rows};
+use super::scalar::{Field, Scalar};
 use crate::util::pool;
 
 /// B same-shape matrices in one contiguous `(B, p, n)` buffer.
 #[derive(Clone, Debug, PartialEq)]
-pub struct BatchMat<S: Scalar> {
+pub struct BatchMat<E: Field> {
     b: usize,
     p: usize,
     n: usize,
-    data: Vec<S>,
+    data: Vec<E>,
 }
 
-impl<S: Scalar> BatchMat<S> {
+impl<E: Field> BatchMat<E> {
     /// Zero-filled batch.
     pub fn zeros(b: usize, p: usize, n: usize) -> Self {
-        BatchMat { b, p, n, data: vec![S::ZERO; b * p * n] }
+        BatchMat { b, p, n, data: vec![E::ZERO; b * p * n] }
     }
 
     /// Pack a slice of same-shape matrices into one contiguous batch.
-    pub fn from_mats(mats: &[Mat<S>]) -> Self {
+    pub fn from_mats(mats: &[Mat<E>]) -> Self {
         if mats.is_empty() {
             return BatchMat::zeros(0, 0, 0);
         }
@@ -50,7 +52,7 @@ impl<S: Scalar> BatchMat<S> {
     }
 
     /// Copy matrix `m` into batch slot `i` (shapes must match).
-    pub fn set_mat(&mut self, i: usize, m: &Mat<S>) {
+    pub fn set_mat(&mut self, i: usize, m: &Mat<E>) {
         assert_eq!(
             m.shape(),
             (self.p, self.n),
@@ -60,7 +62,7 @@ impl<S: Scalar> BatchMat<S> {
     }
 
     /// Unpack into an existing slice of same-shape matrices.
-    pub fn unpack_into(&self, out: &mut [Mat<S>]) {
+    pub fn unpack_into(&self, out: &mut [Mat<E>]) {
         assert_eq!(out.len(), self.b, "unpack: {} mats vs batch {}", out.len(), self.b);
         for (i, m) in out.iter_mut().enumerate() {
             assert_eq!(m.shape(), (self.p, self.n), "unpack slot {i}: shape mismatch");
@@ -69,12 +71,12 @@ impl<S: Scalar> BatchMat<S> {
     }
 
     /// Unpack into freshly-allocated matrices.
-    pub fn to_mats(&self) -> Vec<Mat<S>> {
+    pub fn to_mats(&self) -> Vec<Mat<E>> {
         (0..self.b).map(|i| self.copy_mat(i)).collect()
     }
 
     /// Copy batch element `i` out as a standalone matrix.
-    pub fn copy_mat(&self, i: usize) -> Mat<S> {
+    pub fn copy_mat(&self, i: usize) -> Mat<E> {
         Mat::from_vec(self.p, self.n, self.mat(i).to_vec())
     }
 
@@ -109,24 +111,24 @@ impl<S: Scalar> BatchMat<S> {
         self.data.is_empty()
     }
     #[inline]
-    pub fn as_slice(&self) -> &[S] {
+    pub fn as_slice(&self) -> &[E] {
         &self.data
     }
     #[inline]
-    pub fn as_mut_slice(&mut self) -> &mut [S] {
+    pub fn as_mut_slice(&mut self) -> &mut [E] {
         &mut self.data
     }
 
     /// Borrow batch element `i` as a row-major slice.
     #[inline]
-    pub fn mat(&self, i: usize) -> &[S] {
+    pub fn mat(&self, i: usize) -> &[E] {
         let stride = self.p * self.n;
         &self.data[i * stride..(i + 1) * stride]
     }
 
     /// Borrow batch element `i` mutably.
     #[inline]
-    pub fn mat_mut(&mut self, i: usize) -> &mut [S] {
+    pub fn mat_mut(&mut self, i: usize) -> &mut [E] {
         let stride = self.p * self.n;
         &mut self.data[i * stride..(i + 1) * stride]
     }
@@ -135,7 +137,7 @@ impl<S: Scalar> BatchMat<S> {
     /// (batch-sharded across the pool on large buffers: the batched
     /// step's elementwise passes move as much memory as its tiny
     /// matmuls, so leaving them serial would cap multi-core scaling).
-    pub fn axpy(&mut self, alpha: S, other: &BatchMat<S>) {
+    pub fn axpy(&mut self, alpha: E, other: &BatchMat<E>) {
         assert_eq!(self.shape(), other.shape(), "batch shape mismatch in axpy");
         let stride = self.p * self.n;
         let odata = other.data.as_slice();
@@ -149,7 +151,7 @@ impl<S: Scalar> BatchMat<S> {
 
     /// `self[i] += alphas[i] · other[i]` — a per-matrix coefficient (the
     /// batched form of POGO's per-matrix λ and Landing's safeguarded η).
-    pub fn axpy_per_mat(&mut self, alphas: &[S], other: &BatchMat<S>) {
+    pub fn axpy_per_mat(&mut self, alphas: &[E], other: &BatchMat<E>) {
         assert_eq!(self.shape(), other.shape(), "batch shape mismatch in axpy_per_mat");
         assert_eq!(alphas.len(), self.b, "one alpha per batch element");
         let stride = self.p * self.n;
@@ -167,7 +169,7 @@ impl<S: Scalar> BatchMat<S> {
     }
 
     /// Scale the whole batch in place (batch-sharded on large buffers).
-    pub fn scale_inplace(&mut self, alpha: S) {
+    pub fn scale_inplace(&mut self, alpha: E) {
         let stride = self.p * self.n;
         elementwise_chunks(&mut self.data, self.b, stride, |_range, chunk| {
             for v in chunk.iter_mut() {
@@ -178,7 +180,7 @@ impl<S: Scalar> BatchMat<S> {
 
     /// `self[i] *= alphas[i]` — per-matrix scaling (LandingPC's per-matrix
     /// gradient normalization, VAdam's per-matrix second moment).
-    pub fn scale_per_mat(&mut self, alphas: &[S]) {
+    pub fn scale_per_mat(&mut self, alphas: &[E]) {
         assert_eq!(alphas.len(), self.b, "one alpha per batch element");
         let stride = self.p * self.n;
         elementwise_chunks(&mut self.data, self.b, stride, |range, chunk| {
@@ -192,12 +194,12 @@ impl<S: Scalar> BatchMat<S> {
     }
 
     /// `self − other`, elementwise.
-    pub fn sub(&self, other: &BatchMat<S>) -> BatchMat<S> {
+    pub fn sub(&self, other: &BatchMat<E>) -> BatchMat<E> {
         self.zip(other, |a, b| a - b)
     }
 
     /// Elementwise map into a new batch.
-    pub fn map(&self, f: impl Fn(S) -> S) -> BatchMat<S> {
+    pub fn map(&self, f: impl Fn(E) -> E) -> BatchMat<E> {
         BatchMat {
             b: self.b,
             p: self.p,
@@ -207,7 +209,7 @@ impl<S: Scalar> BatchMat<S> {
     }
 
     /// Elementwise binary op.
-    pub fn zip(&self, other: &BatchMat<S>, f: impl Fn(S, S) -> S) -> BatchMat<S> {
+    pub fn zip(&self, other: &BatchMat<E>, f: impl Fn(E, E) -> E) -> BatchMat<E> {
         assert_eq!(self.shape(), other.shape(), "batch shape mismatch in zip");
         BatchMat {
             b: self.b,
@@ -223,16 +225,17 @@ impl<S: Scalar> BatchMat<S> {
         let stride = self.p * self.n;
         for i in 0..self.b {
             for d in 0..self.p {
-                self.data[i * stride + d * self.n + d] -= S::ONE;
+                self.data[i * stride + d * self.n + d] -= E::ONE;
             }
         }
     }
 
-    /// Per-matrix symmetric part `(Aᵢ + Aᵢᵀ)/2` (square matrices), same
-    /// elementwise arithmetic as [`Mat::sym`].
-    pub fn sym_per_mat(&self) -> BatchMat<S> {
+    /// Per-matrix Hermitian-symmetric part `(Aᵢ + Aᵢᴴ)/2` (square
+    /// matrices), same elementwise arithmetic as [`Mat::sym_h`] — and
+    /// bit-identical to the old real-only `sym` on real fields.
+    pub fn sym_per_mat(&self) -> BatchMat<E> {
         assert_eq!(self.p, self.n, "sym on non-square batch");
-        let half = S::from_f64(0.5);
+        let half = E::from_f64(0.5);
         let stride = self.p * self.n;
         let mut out = BatchMat::zeros(self.b, self.p, self.n);
         for i in 0..self.b {
@@ -240,29 +243,39 @@ impl<S: Scalar> BatchMat<S> {
             let dst = &mut out.data[i * stride..(i + 1) * stride];
             for r in 0..self.p {
                 for c in 0..self.n {
-                    dst[r * self.n + c] = (src[r * self.n + c] + src[c * self.n + r]) * half;
+                    dst[r * self.n + c] =
+                        (src[r * self.n + c] + src[c * self.n + r].conj()) * half;
                 }
             }
         }
         out
     }
 
-    /// Per-matrix squared Frobenius norm, accumulated in the same order as
-    /// [`Mat::norm_sq`] (sequential over each matrix) so per-matrix and
-    /// batched optimizer state stay bit-identical.
-    pub fn norm_sq_per_mat(&self) -> Vec<S> {
+    /// Per-matrix squared Frobenius norm (`Σ |a_ij|²`, always real),
+    /// accumulated in the same order as [`Mat::norm_sq`] (sequential over
+    /// each matrix) so per-matrix and batched optimizer state stay
+    /// bit-identical.
+    pub fn norm_sq_per_mat(&self) -> Vec<E::Real> {
         let stride = self.p * self.n;
         (0..self.b)
             .map(|i| {
-                let mut acc = S::ZERO;
+                let mut acc = E::Real::ZERO;
                 for &v in &self.data[i * stride..(i + 1) * stride] {
-                    acc += v * v;
+                    acc += v.abs_sq();
                 }
                 acc
             })
             .collect()
     }
 
+    /// True if every entry is finite.
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|v| v.is_finite())
+    }
+}
+
+/// Real-only extras (ordered scalars).
+impl<S: Scalar> BatchMat<S> {
     /// Max |entry| over the whole batch.
     pub fn max_abs(&self) -> S {
         let mut m = S::ZERO;
@@ -270,11 +283,6 @@ impl<S: Scalar> BatchMat<S> {
             m = m.max_s(v.abs());
         }
         m
-    }
-
-    /// True if every entry is finite.
-    pub fn all_finite(&self) -> bool {
-        self.data.iter().all(|v| v.is_finite())
     }
 }
 
@@ -291,9 +299,9 @@ const ELEMWISE_PAR_ELEMS: usize = 1 << 18;
 /// (per-element arithmetic is order-independent here, so sharding never
 /// changes results). Serial fallback covers small buffers and the
 /// degenerate `stride == 0` case.
-fn elementwise_chunks<S: Scalar, F>(data: &mut [S], b: usize, stride: usize, f: F)
+fn elementwise_chunks<E: Field, F>(data: &mut [E], b: usize, stride: usize, f: F)
 where
-    F: Fn(std::ops::Range<usize>, &mut [S]) + Sync,
+    F: Fn(std::ops::Range<usize>, &mut [E]) + Sync,
 {
     if data.len() < ELEMWISE_PAR_ELEMS || b <= 1 || stride == 0 {
         f(0..b, data);
@@ -323,9 +331,9 @@ fn batch_worth_parallelizing(total_flops: usize) -> bool {
 /// Run `kernel(i, out_chunk_for_matrix_i)` for every batch element,
 /// sharding contiguous batch chunks across the pool when the total work
 /// justifies it.
-fn for_each_mat<S: Scalar, F>(out: &mut BatchMat<S>, total_flops: usize, kernel: F)
+fn for_each_mat<E: Field, F>(out: &mut BatchMat<E>, total_flops: usize, kernel: F)
 where
-    F: Fn(usize, &mut [S]) + Sync,
+    F: Fn(usize, &mut [E]) + Sync,
 {
     let (b, p, n) = out.shape();
     let stride = p * n;
@@ -346,68 +354,87 @@ where
 
 /// `C[i] = A[i] · B[i]` for every batch element. A: `(B, m, k)`,
 /// B: `(B, k, n)`, C: `(B, m, n)`.
-pub fn batch_matmul_into<S: Scalar>(a: &BatchMat<S>, b: &BatchMat<S>, c: &mut BatchMat<S>) {
+pub fn batch_matmul_into<E: Field>(a: &BatchMat<E>, b: &BatchMat<E>, c: &mut BatchMat<E>) {
     let (ba, m, k) = a.shape();
     let (bb, k2, n) = b.shape();
     assert_eq!(ba, bb, "batch_matmul batch mismatch: {ba} vs {bb}");
     assert_eq!(k, k2, "batch_matmul inner dim mismatch: {k} vs {k2}");
     assert_eq!(c.shape(), (ba, m, n), "batch_matmul output shape mismatch");
-    c.as_mut_slice().fill(S::ZERO);
+    c.as_mut_slice().fill(E::ZERO);
     for_each_mat(c, 2 * ba * m * n * k, |i, out| {
         mm_rows(a.mat(i), b.mat(i), 0..m, out, k, n);
     });
 }
 
 /// `C[i] = A[i] · B[i]`, allocating the output.
-pub fn batch_matmul<S: Scalar>(a: &BatchMat<S>, b: &BatchMat<S>) -> BatchMat<S> {
+pub fn batch_matmul<E: Field>(a: &BatchMat<E>, b: &BatchMat<E>) -> BatchMat<E> {
     let mut c = BatchMat::zeros(a.batch(), a.rows(), b.cols());
     batch_matmul_into(a, b, &mut c);
     c
 }
 
-/// `C[i] = A[i]ᵀ · B[i]`. A: `(B, k, m)`, B: `(B, k, n)`, C: `(B, m, n)`.
-pub fn batch_at_b_into<S: Scalar>(a: &BatchMat<S>, b: &BatchMat<S>, c: &mut BatchMat<S>) {
+/// `C[i] = A[i]ᴴ · B[i]`. A: `(B, k, m)`, B: `(B, k, n)`, C: `(B, m, n)`.
+/// Real fields: the batched `Aᵀ·B`.
+pub fn batch_ah_b_into<E: Field>(a: &BatchMat<E>, b: &BatchMat<E>, c: &mut BatchMat<E>) {
     let (ba, k, m) = a.shape();
     let (bb, k2, n) = b.shape();
-    assert_eq!(ba, bb, "batch_at_b batch mismatch: {ba} vs {bb}");
-    assert_eq!(k, k2, "batch_at_b inner dim mismatch: {k} vs {k2}");
-    assert_eq!(c.shape(), (ba, m, n), "batch_at_b output shape mismatch");
-    c.as_mut_slice().fill(S::ZERO);
+    assert_eq!(ba, bb, "batch_ah_b batch mismatch: {ba} vs {bb}");
+    assert_eq!(k, k2, "batch_ah_b inner dim mismatch: {k} vs {k2}");
+    assert_eq!(c.shape(), (ba, m, n), "batch_ah_b output shape mismatch");
+    c.as_mut_slice().fill(E::ZERO);
     for_each_mat(c, 2 * ba * m * n * k, |i, out| {
-        at_b_rows(a.mat(i), b.mat(i), 0..m, out, k, m, n);
+        ah_b_rows(a.mat(i), b.mat(i), 0..m, out, k, m, n);
     });
 }
 
-/// `C[i] = A[i]ᵀ · B[i]`, allocating the output.
-pub fn batch_at_b<S: Scalar>(a: &BatchMat<S>, b: &BatchMat<S>) -> BatchMat<S> {
+/// `C[i] = A[i]ᴴ · B[i]`, allocating the output.
+pub fn batch_ah_b<E: Field>(a: &BatchMat<E>, b: &BatchMat<E>) -> BatchMat<E> {
     let mut c = BatchMat::zeros(a.batch(), a.cols(), b.cols());
-    batch_at_b_into(a, b, &mut c);
+    batch_ah_b_into(a, b, &mut c);
     c
 }
 
-/// `C[i] = A[i] · B[i]ᵀ`. A: `(B, m, k)`, B: `(B, n, k)`, C: `(B, m, n)`.
-pub fn batch_a_bt_into<S: Scalar>(a: &BatchMat<S>, b: &BatchMat<S>, c: &mut BatchMat<S>) {
+/// `C[i] = A[i] · B[i]ᴴ`. A: `(B, m, k)`, B: `(B, n, k)`, C: `(B, m, n)`.
+/// Real fields: the batched `A·Bᵀ`.
+pub fn batch_a_bh_into<E: Field>(a: &BatchMat<E>, b: &BatchMat<E>, c: &mut BatchMat<E>) {
     let (ba, m, k) = a.shape();
     let (bb, n, k2) = b.shape();
-    assert_eq!(ba, bb, "batch_a_bt batch mismatch: {ba} vs {bb}");
-    assert_eq!(k, k2, "batch_a_bt inner dim mismatch: {k} vs {k2}");
-    assert_eq!(c.shape(), (ba, m, n), "batch_a_bt output shape mismatch");
+    assert_eq!(ba, bb, "batch_a_bh batch mismatch: {ba} vs {bb}");
+    assert_eq!(k, k2, "batch_a_bh inner dim mismatch: {k} vs {k2}");
+    assert_eq!(c.shape(), (ba, m, n), "batch_a_bh output shape mismatch");
     for_each_mat(c, 2 * ba * m * n * k, |i, out| {
-        a_bt_rows(a.mat(i), b.mat(i), 0..m, out, k, n);
+        a_bh_rows(a.mat(i), b.mat(i), 0..m, out, k, n);
     });
 }
 
-/// `C[i] = A[i] · B[i]ᵀ`, allocating the output.
-pub fn batch_a_bt<S: Scalar>(a: &BatchMat<S>, b: &BatchMat<S>) -> BatchMat<S> {
+/// `C[i] = A[i] · B[i]ᴴ`, allocating the output.
+pub fn batch_a_bh<E: Field>(a: &BatchMat<E>, b: &BatchMat<E>) -> BatchMat<E> {
     let mut c = BatchMat::zeros(a.batch(), a.rows(), b.rows());
-    batch_a_bt_into(a, b, &mut c);
+    batch_a_bh_into(a, b, &mut c);
     c
+}
+
+/// Real-field aliases (transpose = adjoint on ordered scalars).
+pub fn batch_at_b<S: Scalar>(a: &BatchMat<S>, b: &BatchMat<S>) -> BatchMat<S> {
+    batch_ah_b(a, b)
+}
+
+pub fn batch_at_b_into<S: Scalar>(a: &BatchMat<S>, b: &BatchMat<S>, c: &mut BatchMat<S>) {
+    batch_ah_b_into(a, b, c)
+}
+
+pub fn batch_a_bt<S: Scalar>(a: &BatchMat<S>, b: &BatchMat<S>) -> BatchMat<S> {
+    batch_a_bh(a, b)
+}
+
+pub fn batch_a_bt_into<S: Scalar>(a: &BatchMat<S>, b: &BatchMat<S>, c: &mut BatchMat<S>) {
+    batch_a_bh_into(a, b, c)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::{matmul, matmul_a_bt, matmul_at_b};
+    use crate::linalg::{matmul, matmul_a_bh, matmul_a_bt, matmul_ah_b, matmul_at_b, Complex};
     use crate::rng::Rng;
 
     type M = Mat<f64>;
@@ -474,6 +501,32 @@ mod tests {
         for i in 0..4 {
             let want = matmul_a_bt(&am[i], &bm[i]);
             assert!(c.copy_mat(i).sub(&want).max_abs() == 0.0, "batch {i}");
+        }
+    }
+
+    #[test]
+    fn complex_batch_kernels_match_per_matrix() {
+        // The batched complex kernels must agree with the single-matrix
+        // complex entry points exactly (they run the same row-range code).
+        type CM = Mat<Complex<f64>>;
+        let mut rng = Rng::seed_from_u64(9);
+        let am: Vec<CM> = (0..5).map(|_| CM::randn(4, 6, &mut rng)).collect();
+        let bm: Vec<CM> = (0..5).map(|_| CM::randn(3, 6, &mut rng)).collect();
+        let ab = BatchMat::from_mats(&am);
+        let bb = BatchMat::from_mats(&bm);
+        let c = batch_a_bh(&ab, &bb);
+        assert_eq!(c.shape(), (5, 4, 3));
+        for i in 0..5 {
+            let want = matmul_a_bh(&am[i], &bm[i]);
+            assert!(c.copy_mat(i).sub(&want).norm().to_f64() == 0.0, "batch {i}");
+        }
+        let cm: Vec<CM> = (0..5).map(|_| CM::randn(4, 6, &mut rng)).collect();
+        let cb = BatchMat::from_mats(&cm);
+        let d = batch_ah_b(&ab, &cb);
+        assert_eq!(d.shape(), (5, 6, 6));
+        for i in 0..5 {
+            let want = matmul_ah_b(&am[i], &cm[i]);
+            assert!(d.copy_mat(i).sub(&want).norm().to_f64() == 0.0, "batch {i}");
         }
     }
 

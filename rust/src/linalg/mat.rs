@@ -1,6 +1,14 @@
-//! Row-major dense matrix.
+//! Row-major dense matrix, generic over a [`Field`] element.
+//!
+//! One `Mat<E>` type serves both manifolds: `Mat<f32>` / `Mat<f64>` are
+//! the real Stiefel workhorses, `Mat<Complex<S>>` (aliased `CMat<S>`) the
+//! complex ones. Field-generic operations live in the `impl<E: Field>`
+//! block; operations that only make sense over an ordered real scalar
+//! (`skew`, `max_abs`, casts, bf16 truncation) stay in the
+//! `impl<S: Scalar>` block, so real call sites compile to exactly the
+//! pre-`Field` code.
 
-use super::scalar::Scalar;
+use super::scalar::{Field, Scalar};
 use crate::rng::Rng;
 use std::fmt;
 use std::ops::{Index, IndexMut};
@@ -10,40 +18,40 @@ use std::ops::{Index, IndexMut};
 /// This is the workhorse type of the whole reproduction: optimizer states,
 /// gradients, datasets and PJRT literals all view into `Mat` buffers.
 #[derive(Clone, PartialEq)]
-pub struct Mat<S: Scalar> {
+pub struct Mat<E: Field> {
     rows: usize,
     cols: usize,
-    data: Vec<S>,
+    data: Vec<E>,
 }
 
-impl<S: Scalar> Mat<S> {
+impl<E: Field> Mat<E> {
     /// Zero matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
-        Mat { rows, cols, data: vec![S::ZERO; rows * cols] }
+        Mat { rows, cols, data: vec![E::ZERO; rows * cols] }
     }
 
     /// Matrix of ones.
     pub fn ones(rows: usize, cols: usize) -> Self {
-        Mat { rows, cols, data: vec![S::ONE; rows * cols] }
+        Mat { rows, cols, data: vec![E::ONE; rows * cols] }
     }
 
     /// Identity matrix.
     pub fn eye(n: usize) -> Self {
         let mut m = Self::zeros(n, n);
         for i in 0..n {
-            m[(i, i)] = S::ONE;
+            m[(i, i)] = E::ONE;
         }
         m
     }
 
     /// Build from a row-major vector (takes ownership; length must match).
-    pub fn from_vec(rows: usize, cols: usize, data: Vec<S>) -> Self {
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<E>) -> Self {
         assert_eq!(data.len(), rows * cols, "shape {rows}x{cols} vs len {}", data.len());
         Mat { rows, cols, data }
     }
 
     /// Build from a function of (row, col).
-    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> S) -> Self {
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> E) -> Self {
         let mut data = Vec::with_capacity(rows * cols);
         for i in 0..rows {
             for j in 0..cols {
@@ -53,20 +61,12 @@ impl<S: Scalar> Mat<S> {
         Mat { rows, cols, data }
     }
 
-    /// i.i.d. standard Gaussian entries.
+    /// i.i.d. standard Gaussian entries (for complex fields, re/im each
+    /// `N(0, ½)` so that `E|z|² = 1`).
     pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Self {
-        let mut data = vec![S::ZERO; rows * cols];
+        let mut data = vec![E::ZERO; rows * cols];
         for v in data.iter_mut() {
-            *v = S::from_f64(rng.gaussian());
-        }
-        Mat { rows, cols, data }
-    }
-
-    /// i.i.d. uniform entries in [lo, hi).
-    pub fn rand_uniform(rows: usize, cols: usize, lo: f64, hi: f64, rng: &mut Rng) -> Self {
-        let mut data = vec![S::ZERO; rows * cols];
-        for v in data.iter_mut() {
-            *v = S::from_f64(rng.uniform_in(lo, hi));
+            *v = E::sample_gaussian(rng);
         }
         Mat { rows, cols, data }
     }
@@ -92,42 +92,43 @@ impl<S: Scalar> Mat<S> {
         self.data.is_empty()
     }
     #[inline]
-    pub fn as_slice(&self) -> &[S] {
+    pub fn as_slice(&self) -> &[E] {
         &self.data
     }
     #[inline]
-    pub fn as_mut_slice(&mut self) -> &mut [S] {
+    pub fn as_mut_slice(&mut self) -> &mut [E] {
         &mut self.data
     }
     /// Consume into the underlying row-major buffer.
-    pub fn into_vec(self) -> Vec<S> {
+    pub fn into_vec(self) -> Vec<E> {
         self.data
     }
 
     /// Borrow row `i` as a slice.
     #[inline]
-    pub fn row(&self, i: usize) -> &[S] {
+    pub fn row(&self, i: usize) -> &[E] {
         debug_assert!(i < self.rows);
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
     /// Borrow row `i` mutably.
     #[inline]
-    pub fn row_mut(&mut self, i: usize) -> &mut [S] {
+    pub fn row_mut(&mut self, i: usize) -> &mut [E] {
         debug_assert!(i < self.rows);
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
-    /// Transposed copy.
-    pub fn transpose(&self) -> Mat<S> {
+    /// The one blocked transposition kernel (cache friendliness on big
+    /// matrices), parameterized by an elementwise map so `transpose` and
+    /// `adjoint` cannot drift apart.
+    fn transpose_with(&self, f: impl Fn(E) -> E) -> Mat<E> {
         let mut out = Mat::zeros(self.cols, self.rows);
-        // Blocked transpose for cache friendliness on big matrices.
         const B: usize = 32;
         for i0 in (0..self.rows).step_by(B) {
             for j0 in (0..self.cols).step_by(B) {
                 for i in i0..(i0 + B).min(self.rows) {
                     for j in j0..(j0 + B).min(self.cols) {
-                        out.data[j * self.rows + i] = self.data[i * self.cols + j];
+                        out.data[j * self.rows + i] = f(self.data[i * self.cols + j]);
                     }
                 }
             }
@@ -135,8 +136,24 @@ impl<S: Scalar> Mat<S> {
         out
     }
 
+    /// Transposed copy (no conjugation; see [`Mat::adjoint`]).
+    pub fn transpose(&self) -> Mat<E> {
+        self.transpose_with(|v| v)
+    }
+
+    /// Conjugate transpose `Aᴴ` — identical to [`Mat::transpose`] on real
+    /// fields; the generic update rules are written against this.
+    pub fn adjoint(&self) -> Mat<E> {
+        self.transpose_with(|v| v.conj())
+    }
+
+    /// Elementwise conjugate (identity on real fields).
+    pub fn conj(&self) -> Mat<E> {
+        self.map(|v| v.conj())
+    }
+
     /// Elementwise map into a new matrix.
-    pub fn map(&self, f: impl Fn(S) -> S) -> Mat<S> {
+    pub fn map(&self, f: impl Fn(E) -> E) -> Mat<E> {
         Mat {
             rows: self.rows,
             cols: self.cols,
@@ -145,24 +162,24 @@ impl<S: Scalar> Mat<S> {
     }
 
     /// Elementwise map in place.
-    pub fn map_inplace(&mut self, f: impl Fn(S) -> S) {
+    pub fn map_inplace(&mut self, f: impl Fn(E) -> E) {
         for v in self.data.iter_mut() {
             *v = f(*v);
         }
     }
 
     /// `self + other`.
-    pub fn add(&self, other: &Mat<S>) -> Mat<S> {
+    pub fn add(&self, other: &Mat<E>) -> Mat<E> {
         self.zip(other, |a, b| a + b)
     }
 
     /// `self - other`.
-    pub fn sub(&self, other: &Mat<S>) -> Mat<S> {
+    pub fn sub(&self, other: &Mat<E>) -> Mat<E> {
         self.zip(other, |a, b| a - b)
     }
 
     /// Elementwise binary op.
-    pub fn zip(&self, other: &Mat<S>, f: impl Fn(S, S) -> S) -> Mat<S> {
+    pub fn zip(&self, other: &Mat<E>, f: impl Fn(E, E) -> E) -> Mat<E> {
         assert_eq!(self.shape(), other.shape(), "shape mismatch in zip");
         Mat {
             rows: self.rows,
@@ -172,7 +189,7 @@ impl<S: Scalar> Mat<S> {
     }
 
     /// `self += alpha * other` (axpy).
-    pub fn axpy(&mut self, alpha: S, other: &Mat<S>) {
+    pub fn axpy(&mut self, alpha: E, other: &Mat<E>) {
         assert_eq!(self.shape(), other.shape(), "shape mismatch in axpy");
         for (a, &b) in self.data.iter_mut().zip(&other.data) {
             *a += alpha * b;
@@ -180,45 +197,125 @@ impl<S: Scalar> Mat<S> {
     }
 
     /// Scale in place.
-    pub fn scale_inplace(&mut self, alpha: S) {
+    pub fn scale_inplace(&mut self, alpha: E) {
         for v in self.data.iter_mut() {
             *v *= alpha;
         }
     }
 
     /// Scaled copy.
-    pub fn scale(&self, alpha: S) -> Mat<S> {
+    pub fn scale(&self, alpha: E) -> Mat<E> {
         self.map(|v| v * alpha)
     }
 
-    /// Frobenius inner product `Tr(otherᵀ self)`.
-    pub fn dot(&self, other: &Mat<S>) -> S {
-        assert_eq!(self.shape(), other.shape(), "shape mismatch in dot");
-        let mut acc = S::ZERO;
+    /// Real part of the Frobenius inner product `Re Tr(Bᴴ A)` — for real
+    /// fields this is [`Mat::dot`] exactly (same accumulation order).
+    pub fn dot_re(&self, other: &Mat<E>) -> E::Real {
+        assert_eq!(self.shape(), other.shape(), "shape mismatch in dot_re");
+        let mut acc = E::Real::ZERO;
         for (&a, &b) in self.data.iter().zip(&other.data) {
-            acc += a * b;
+            acc += a.mul_conj(b).re();
         }
         acc
     }
 
-    /// Squared Frobenius norm.
-    pub fn norm_sq(&self) -> S {
-        self.dot(self)
+    /// Squared Frobenius norm `Σ |a_ij|²` (always real).
+    pub fn norm_sq(&self) -> E::Real {
+        let mut acc = E::Real::ZERO;
+        for &v in &self.data {
+            acc += v.abs_sq();
+        }
+        acc
     }
 
     /// Frobenius norm.
-    pub fn norm(&self) -> S {
-        self.norm_sq().sqrt()
+    pub fn norm(&self) -> E::Real {
+        Field::sqrt(self.norm_sq())
     }
 
     /// Trace (square matrices).
-    pub fn trace(&self) -> S {
+    pub fn trace(&self) -> E {
         assert_eq!(self.rows, self.cols, "trace of non-square matrix");
-        let mut t = S::ZERO;
+        let mut t = E::ZERO;
         for i in 0..self.rows {
             t += self.data[i * self.cols + i];
         }
         t
+    }
+
+    /// Skew-Hermitian part `(A − Aᴴ)/2` (square matrices) — on real
+    /// fields this is the skew-symmetric part, bit-identical to
+    /// [`Mat::skew`].
+    pub fn skew_h(&self) -> Mat<E> {
+        assert_eq!(self.rows, self.cols, "skew_h of non-square matrix");
+        let half = E::from_f64(0.5);
+        Mat::from_fn(self.rows, self.cols, |i, j| {
+            (self.data[i * self.cols + j] - self.data[j * self.cols + i].conj()) * half
+        })
+    }
+
+    /// Hermitian-symmetric part `(A + Aᴴ)/2` (square matrices) — the real
+    /// instantiation is [`Mat::sym`] bit-for-bit.
+    pub fn sym_h(&self) -> Mat<E> {
+        assert_eq!(self.rows, self.cols, "sym_h of non-square matrix");
+        let half = E::from_f64(0.5);
+        Mat::from_fn(self.rows, self.cols, |i, j| {
+            (self.data[i * self.cols + j] + self.data[j * self.cols + i].conj()) * half
+        })
+    }
+
+    /// Subtract identity in place (square matrices): `A -= I`.
+    pub fn sub_eye_inplace(&mut self) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            self.data[i * self.cols + i] -= E::ONE;
+        }
+    }
+
+    /// Add `alpha` to the diagonal in place.
+    pub fn add_diag_inplace(&mut self, alpha: E) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            self.data[i * self.cols + i] += alpha;
+        }
+    }
+
+    /// Column `j` as a new vector.
+    pub fn col(&self, j: usize) -> Vec<E> {
+        (0..self.rows).map(|i| self.data[i * self.cols + j]).collect()
+    }
+
+    /// Copy a sub-block `rows × cols` starting at (r0, c0).
+    pub fn block(&self, r0: usize, c0: usize, rows: usize, cols: usize) -> Mat<E> {
+        assert!(r0 + rows <= self.rows && c0 + cols <= self.cols, "block out of range");
+        Mat::from_fn(rows, cols, |i, j| self.data[(r0 + i) * self.cols + (c0 + j)])
+    }
+
+    /// Write a block into this matrix at (r0, c0).
+    pub fn set_block(&mut self, r0: usize, c0: usize, b: &Mat<E>) {
+        assert!(r0 + b.rows <= self.rows && c0 + b.cols <= self.cols, "block out of range");
+        for i in 0..b.rows {
+            for j in 0..b.cols {
+                self.data[(r0 + i) * self.cols + (c0 + j)] = b.data[i * b.cols + j];
+            }
+        }
+    }
+
+    /// True if all entries are finite.
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|v| v.is_finite())
+    }
+}
+
+/// Real-only operations: ordering, casts, the uniform sampler, bf16.
+impl<S: Scalar> Mat<S> {
+    /// i.i.d. uniform entries in [lo, hi).
+    pub fn rand_uniform(rows: usize, cols: usize, lo: f64, hi: f64, rng: &mut Rng) -> Self {
+        let mut data = vec![S::ZERO; rows * cols];
+        for v in data.iter_mut() {
+            *v = S::from_f64(rng.uniform_in(lo, hi));
+        }
+        Mat { rows, cols, data }
     }
 
     /// Skew-symmetric part `(A − Aᵀ)/2` (square matrices).
@@ -239,41 +336,14 @@ impl<S: Scalar> Mat<S> {
         })
     }
 
-    /// Subtract identity in place (square matrices): `A -= I`.
-    pub fn sub_eye_inplace(&mut self) {
-        assert_eq!(self.rows, self.cols);
-        for i in 0..self.rows {
-            self.data[i * self.cols + i] -= S::ONE;
+    /// Frobenius inner product `Tr(otherᵀ self)`.
+    pub fn dot(&self, other: &Mat<S>) -> S {
+        assert_eq!(self.shape(), other.shape(), "shape mismatch in dot");
+        let mut acc = S::ZERO;
+        for (&a, &b) in self.data.iter().zip(&other.data) {
+            acc += a * b;
         }
-    }
-
-    /// Add `alpha` to the diagonal in place.
-    pub fn add_diag_inplace(&mut self, alpha: S) {
-        assert_eq!(self.rows, self.cols);
-        for i in 0..self.rows {
-            self.data[i * self.cols + i] += alpha;
-        }
-    }
-
-    /// Column `j` as a new vector.
-    pub fn col(&self, j: usize) -> Vec<S> {
-        (0..self.rows).map(|i| self.data[i * self.cols + j]).collect()
-    }
-
-    /// Copy a sub-block `rows × cols` starting at (r0, c0).
-    pub fn block(&self, r0: usize, c0: usize, rows: usize, cols: usize) -> Mat<S> {
-        assert!(r0 + rows <= self.rows && c0 + cols <= self.cols, "block out of range");
-        Mat::from_fn(rows, cols, |i, j| self.data[(r0 + i) * self.cols + (c0 + j)])
-    }
-
-    /// Write a block into this matrix at (r0, c0).
-    pub fn set_block(&mut self, r0: usize, c0: usize, b: &Mat<S>) {
-        assert!(r0 + b.rows <= self.rows && c0 + b.cols <= self.cols, "block out of range");
-        for i in 0..b.rows {
-            for j in 0..b.cols {
-                self.data[(r0 + i) * self.cols + (c0 + j)] = b.data[i * b.cols + j];
-            }
-        }
+        acc
     }
 
     /// Cast into another scalar type (f32 <-> f64), via f64.
@@ -294,35 +364,30 @@ impl<S: Scalar> Mat<S> {
         m
     }
 
-    /// True if all entries are finite.
-    pub fn all_finite(&self) -> bool {
-        self.data.iter().all(|v| v.is_finite())
-    }
-
     /// Truncate every entry's mantissa to bfloat16 precision (Fig. C.1).
     pub fn truncate_bf16(&self) -> Mat<S> {
         self.map(|v| v.truncate_bf16())
     }
 }
 
-impl<S: Scalar> Index<(usize, usize)> for Mat<S> {
-    type Output = S;
+impl<E: Field> Index<(usize, usize)> for Mat<E> {
+    type Output = E;
     #[inline]
-    fn index(&self, (i, j): (usize, usize)) -> &S {
+    fn index(&self, (i, j): (usize, usize)) -> &E {
         debug_assert!(i < self.rows && j < self.cols);
         &self.data[i * self.cols + j]
     }
 }
 
-impl<S: Scalar> IndexMut<(usize, usize)> for Mat<S> {
+impl<E: Field> IndexMut<(usize, usize)> for Mat<E> {
     #[inline]
-    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut S {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut E {
         debug_assert!(i < self.rows && j < self.cols);
         &mut self.data[i * self.cols + j]
     }
 }
 
-impl<S: Scalar> fmt::Debug for Mat<S> {
+impl<E: Field> fmt::Debug for Mat<E> {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
         let show_r = self.rows.min(6);
@@ -330,7 +395,17 @@ impl<S: Scalar> fmt::Debug for Mat<S> {
         for i in 0..show_r {
             write!(f, "  ")?;
             for j in 0..show_c {
-                write!(f, "{:>10.4} ", self[(i, j)].to_f64())?;
+                let v = self[(i, j)];
+                if E::COMPLEX {
+                    write!(
+                        f,
+                        "{:>9.3}{:+.3}i ",
+                        v.re().to_f64(),
+                        v.im().to_f64()
+                    )?;
+                } else {
+                    write!(f, "{:>10.4} ", v.re().to_f64())?;
+                }
             }
             writeln!(f, "{}", if self.cols > show_c { "…" } else { "" })?;
         }
@@ -369,6 +444,13 @@ mod tests {
     }
 
     #[test]
+    fn adjoint_equals_transpose_on_reals() {
+        let mut rng = Rng::seed_from_u64(4);
+        let m = M::randn(5, 9, &mut rng);
+        assert_eq!(m.adjoint(), m.transpose());
+    }
+
+    #[test]
     fn skew_plus_sym_is_identity_decomposition() {
         let mut rng = Rng::seed_from_u64(1);
         let a = M::randn(5, 5, &mut rng);
@@ -381,6 +463,15 @@ mod tests {
         let mut rng = Rng::seed_from_u64(2);
         let s = M::randn(6, 6, &mut rng).skew();
         assert!(s.add(&s.transpose()).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn hermitian_ops_match_real_ops_on_reals() {
+        let mut rng = Rng::seed_from_u64(5);
+        let a = M::randn(6, 6, &mut rng);
+        assert_eq!(a.skew_h(), a.skew());
+        assert_eq!(a.sym_h(), a.sym());
+        assert_eq!(a.dot_re(&a), a.dot(&a));
     }
 
     #[test]

@@ -2,19 +2,24 @@
 //!
 //! The offline registry has no BLAS/LAPACK binding and no `ndarray`, so the
 //! whole reproduction stands on this module: a row-major dense matrix type
-//! generic over `f32`/`f64`, cache-blocked threaded matrix multiplication,
-//! Householder QR, a Jacobi symmetric eigensolver, Newton–Schulz polar
-//! decomposition, and a complex matrix type built from pairs of real ones.
+//! generic over a [`Field`] element (`f32`/`f64` for the real Stiefel
+//! manifold, [`Complex<S>`] for the unitary one), cache-blocked threaded
+//! matrix multiplication, Householder QR, a Jacobi symmetric eigensolver,
+//! and Newton–Schulz polar decomposition.
 //!
 //! Design notes:
 //! - Row-major storage everywhere (matches the HLO/XLA literal layout used
-//!   by the runtime, so buffers cross the PJRT boundary without copies).
-//! - The paper's matrices are *wide row-orthogonal* `X ∈ R^{p×n}`, `p ≤ n`,
-//!   with `X Xᵀ = I_p`; helper names follow that convention (`gram(X)` is
-//!   the small `p×p` product `X Xᵀ`).
-//! - Retraction-based baselines (RGD, RSDM) run entirely on this substrate,
-//!   which is the point the paper makes: QR does not map to accelerators,
-//!   matmuls do.
+//!   by the runtime, so buffers cross the PJRT boundary without copies;
+//!   complex matrices ship as split re/im planes — see `complexmat`).
+//! - The paper's matrices are *wide row-orthogonal* `X ∈ F^{p×n}`, `p ≤ n`,
+//!   with `X Xᴴ = I_p`; helper names follow that convention (`gram(X)` is
+//!   the small `p×p` product `X Xᴴ`).
+//! - One element abstraction, two manifolds (paper §2, fn. 1): the matmul
+//!   kernels take `Aᴴ` adjoints (`matmul_ah_b` / `matmul_a_bh`), which on
+//!   real fields degenerate to the familiar transposed products — the
+//!   real-named aliases `matmul_at_b` / `matmul_a_bt` remain for real-only
+//!   call sites. QR and the eigensolver stay real (`Scalar`): retractions
+//!   that need them have no complex engine, which is the paper's point.
 //! - Batch parallelism lives in [`BatchMat`] (`batch` module): a `(B, p, n)`
 //!   group of small matrices is stepped by sharding the *batch* across
 //!   workers, never by spawning inside a single small product.
@@ -30,17 +35,20 @@ mod qr;
 mod scalar;
 
 pub use batch::{
-    batch_a_bt, batch_a_bt_into, batch_at_b, batch_at_b_into, batch_matmul,
-    batch_matmul_into, BatchMat,
+    batch_a_bh, batch_a_bh_into, batch_a_bt, batch_a_bt_into, batch_ah_b, batch_ah_b_into,
+    batch_at_b, batch_at_b_into, batch_matmul, batch_matmul_into, BatchMat,
 };
 pub use complexmat::CMat;
 pub use eig::{sym_eig, with_spectrum, SymEig};
 pub use mat::Mat;
-pub use matmul::{matmul, matmul_at_b, matmul_a_bt, matmul_into, matmul_a_bt_into, matmul_at_b_into};
+pub use matmul::{
+    matmul, matmul_a_bh, matmul_a_bh_into, matmul_a_bt, matmul_a_bt_into, matmul_ah_b,
+    matmul_ah_b_into, matmul_at_b, matmul_at_b_into, matmul_into,
+};
 pub use norms::{frob_norm, spectral_norm_est};
 pub use polar::{polar_project, polar_project_complex, PolarOpts};
-pub use qr::{qr_thin, qr_retract_rows};
-pub use scalar::Scalar;
+pub use qr::{qr_retract_rows, qr_thin};
+pub use scalar::{Complex, Field, Scalar};
 
 /// Single-precision matrix (the default experiment dtype, as in the paper).
 pub type MatF = Mat<f32>;
@@ -48,3 +56,7 @@ pub type MatF = Mat<f32>;
 pub type MatD = Mat<f64>;
 /// Single-precision complex matrix (unitary / complex-Stiefel experiments).
 pub type CMatF = CMat<f32>;
+/// Double-precision complex matrix.
+pub type CMatD = CMat<f64>;
+/// Batched complex tensor: `(B, p, n)` unitary shape groups.
+pub type CBatchMat<S> = BatchMat<Complex<S>>;

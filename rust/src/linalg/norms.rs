@@ -1,54 +1,57 @@
-//! Norms and related reductions.
+//! Norms and related reductions, generic over the [`Field`] element.
 
 use super::mat::Mat;
-use super::matmul::matmul_a_bt;
-use super::scalar::Scalar;
+use super::matmul::matmul_a_bh;
+use super::scalar::{Field, Scalar};
 
 /// Frobenius norm.
-pub fn frob_norm<S: Scalar>(a: &Mat<S>) -> f64 {
+pub fn frob_norm<E: Field>(a: &Mat<E>) -> f64 {
     a.norm().to_f64()
 }
 
-/// Largest singular value estimate via power iteration on `A Aᵀ`.
+/// Largest singular value estimate via power iteration on `A Aᴴ`.
 ///
 /// Used to pre-scale Newton–Schulz polar iterations; `iters` in the 10–30
-/// range gives plenty of accuracy for a convergence-radius check.
-pub fn spectral_norm_est<S: Scalar>(a: &Mat<S>, iters: usize) -> f64 {
+/// range gives plenty of accuracy for a convergence-radius check. On real
+/// fields this is the classic `A Aᵀ` power iteration, unchanged.
+pub fn spectral_norm_est<E: Field>(a: &Mat<E>, iters: usize) -> f64 {
     let (p, _n) = a.shape();
     if a.is_empty() {
         return 0.0;
     }
-    let g = matmul_a_bt(a, a); // p×p gram
-    // Power iteration on the (symmetric PSD) gram matrix.
-    let mut v = vec![S::ONE; p];
+    let g = matmul_a_bh(a, a); // p×p gram (Hermitian PSD)
+    // Power iteration on the gram matrix.
+    let mut v = vec![E::ONE; p];
     let mut lam = 0.0f64;
     for _ in 0..iters {
         // w = G v
-        let mut w = vec![S::ZERO; p];
+        let mut w = vec![E::ZERO; p];
         for i in 0..p {
             let row = g.row(i);
-            let mut acc = S::ZERO;
+            let mut acc = E::ZERO;
             for j in 0..p {
                 acc += row[j] * v[j];
             }
             w[i] = acc;
         }
-        let norm = w.iter().map(|x| x.to_f64() * x.to_f64()).sum::<f64>().sqrt();
+        let norm = w.iter().map(|x| x.abs_sq().to_f64()).sum::<f64>().sqrt();
         if norm == 0.0 {
             return 0.0;
         }
         lam = norm;
-        for (vi, wi) in v.iter_mut().zip(&w) {
-            *vi = S::from_f64(wi.to_f64() / norm);
+        let inv = E::from_f64(1.0 / norm);
+        for (vi, &wi) in v.iter_mut().zip(&w) {
+            *vi = wi * inv;
         }
     }
-    // lam approximates the top eigenvalue of A Aᵀ = σ_max².
+    // lam approximates the top eigenvalue of A Aᴴ = σ_max².
     lam.sqrt()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::CMat;
     use crate::rng::Rng;
 
     #[test]
@@ -75,5 +78,12 @@ mod tests {
         let s = spectral_norm_est(&a, 40);
         assert!(s <= frob_norm(&a) + 1e-9);
         assert!(s > 0.0);
+    }
+
+    #[test]
+    fn complex_spectral_of_unitary_is_one() {
+        let i = CMat::<f64>::eye(4);
+        let s = spectral_norm_est(&i, 20);
+        assert!((s - 1.0).abs() < 1e-9, "s={s}");
     }
 }

@@ -1,25 +1,28 @@
-//! Polar projection onto the Stiefel manifold via Newton–Schulz.
+//! Polar projection onto the (real or complex) Stiefel manifold via
+//! Newton–Schulz.
 //!
 //! For a wide matrix `X (p × n)` with full row rank, the polar factor
-//! `U = (X Xᵀ)^{-1/2} X` is the *closest* row-orthonormal matrix in
-//! Frobenius norm. Newton–Schulz iterates `Y ← 1.5 Y − 0.5 (Y Yᵀ) Y`,
+//! `U = (X Xᴴ)^{-1/2} X` is the *closest* row-orthonormal matrix in
+//! Frobenius norm. Newton–Schulz iterates `Y ← 1.5 Y − 0.5 (Y Yᴴ) Y`,
 //! which converges quadratically when every singular value lies in
 //! `(0, √3)`; we pre-scale by the spectral norm estimate to guarantee it.
 //!
 //! Matmul-only, so unlike QR/SVD it *is* accelerator-friendly — which is
 //! exactly why the POGO normal step (λ = 1/2) is its first-order Taylor
-//! truncation (paper §3.3 intuition / SLPG connection in §B).
+//! truncation (paper §3.3 intuition / SLPG connection in §B). The one
+//! generic implementation covers both fields: on the complex Stiefel
+//! manifold it is the retraction the complex RGD baseline uses in place
+//! of complex Householder QR (recorded in DESIGN.md).
 
-use super::complexmat::CMat;
 use super::mat::Mat;
-use super::matmul::{matmul, matmul_a_bt};
+use super::matmul::{matmul, matmul_a_bh};
 use super::norms::spectral_norm_est;
-use super::scalar::Scalar;
+use super::scalar::{Field, Scalar};
 
 /// Options for the Newton–Schulz polar projection.
 #[derive(Clone, Copy, Debug)]
 pub struct PolarOpts {
-    /// Stop when `‖Y Yᵀ − I‖_F` falls below this.
+    /// Stop when `‖Y Yᴴ − I‖_F` falls below this.
     pub tol: f64,
     /// Hard iteration cap.
     pub max_iters: usize,
@@ -31,50 +34,42 @@ impl Default for PolarOpts {
     }
 }
 
-/// Project a wide real matrix onto St(p, n) (row-orthonormal polar factor).
-pub fn polar_project<S: Scalar>(x: &Mat<S>, opts: PolarOpts) -> Mat<S> {
+/// Project a wide matrix onto the Stiefel manifold of its field
+/// (row-orthonormal polar factor; `X Xᴴ = I`).
+pub fn polar_project<E: Field>(x: &Mat<E>, opts: PolarOpts) -> Mat<E> {
     let (p, n) = x.shape();
     assert!(p <= n, "polar_project expects a wide matrix, got {p}x{n}");
     // Pre-scale into the convergence region: σ_max(Y0) ≈ 1.
     let sigma = spectral_norm_est(x, 20).max(1e-30);
-    let mut y = x.scale(S::from_f64(1.0 / sigma));
+    let mut y = x.scale(E::from_f64(1.0 / sigma));
     for _ in 0..opts.max_iters {
-        let mut g = matmul_a_bt(&y, &y); // p×p
+        let mut g = matmul_a_bh(&y, &y); // p×p
         g.sub_eye_inplace();
         let err = g.norm().to_f64();
         if err < opts.tol {
             break;
         }
-        // Y ← 1.5 Y − 0.5 (Y Yᵀ) Y. With g = Y Yᵀ − I this simplifies to
+        // Y ← 1.5 Y − 0.5 (Y Yᴴ) Y. With g = Y Yᴴ − I this simplifies to
         // Y ← Y − 0.5 g Y, saving one p×p add.
         let gy = matmul(&g, &y);
-        y.axpy(S::from_f64(-0.5), &gy);
+        y.axpy(E::from_f64(-0.5), &gy);
     }
     y
 }
 
-/// Project a wide complex matrix onto the complex Stiefel manifold
-/// (`X X^H = I_p`), same Newton–Schulz scheme over `CMat`.
-pub fn polar_project_complex<S: Scalar>(x: &CMat<S>, opts: PolarOpts) -> CMat<S> {
-    let (p, n) = x.shape();
-    assert!(p <= n, "polar_project_complex expects a wide matrix, got {p}x{n}");
-    let sigma = x.spectral_norm_est(20).max(1e-30);
-    let mut y = x.scale_re(S::from_f64(1.0 / sigma));
-    for _ in 0..opts.max_iters {
-        let mut g = y.matmul_a_bh(&y); // p×p, Hermitian
-        g.sub_eye_inplace();
-        if g.norm().to_f64() < opts.tol {
-            break;
-        }
-        let gy = g.matmul(&y);
-        y.axpy_re(S::from_f64(-0.5), &gy);
-    }
-    y
+/// Back-compat name for the complex instantiation (`X Xᴴ = I_p`). The
+/// implementation is [`polar_project`] — one Newton–Schulz over `Field`.
+pub fn polar_project_complex<S: Scalar>(
+    x: &super::complexmat::CMat<S>,
+    opts: PolarOpts,
+) -> super::complexmat::CMat<S> {
+    polar_project(x, opts)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::CMat;
     use crate::rng::Rng;
 
     #[test]
@@ -83,7 +78,7 @@ mod tests {
         for &(p, n) in &[(3, 3), (5, 12), (20, 31)] {
             let x = Mat::<f64>::randn(p, n, &mut rng);
             let y = polar_project(&x, PolarOpts::default());
-            let mut g = matmul_a_bt(&y, &y);
+            let mut g = matmul_a_bh(&y, &y);
             g.sub_eye_inplace();
             assert!(g.norm().to_f64() < 1e-6, "({p},{n}): {}", g.norm());
         }
@@ -116,7 +111,7 @@ mod tests {
         let mut rng = Rng::seed_from_u64(3);
         let x = CMat::<f64>::randn(4, 9, &mut rng);
         let y = polar_project_complex(&x, PolarOpts::default());
-        let mut g = y.matmul_a_bh(&y);
+        let mut g = matmul_a_bh(&y, &y);
         g.sub_eye_inplace();
         assert!(g.norm().to_f64() < 1e-6, "{}", g.norm());
     }

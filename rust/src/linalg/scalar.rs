@@ -1,16 +1,35 @@
-//! Scalar abstraction over `f32`/`f64` so linalg and the optimizers are
-//! generic in precision (needed by the Fig. C.1 precision ablation).
+//! Scalar and field abstractions.
+//!
+//! Two layers (paper §2, fn. 1 — "all derivations extend verbatim to other
+//! fields like the complex numbers"):
+//!
+//! - [`Field`] — a matrix *element*: the ring/involution operations the
+//!   linalg substrate and the matmul-only orthoptimizers need (`conj`,
+//!   `mul_conj`, real part, squared modulus). Implemented by `f32`/`f64`
+//!   (identity conjugation — the real path compiles to exactly the code it
+//!   had before this abstraction existed) and by [`Complex<S>`].
+//! - [`Scalar`] — a *real* scalar (`Field<Real = Self>` plus ordering,
+//!   `abs`, machine epsilon, bf16 truncation). Everything that is
+//!   inherently real — QR, eigensolvers, norms' return values, learning
+//!   rates — stays bounded by `Scalar`.
+//!
+//! The split is what lets POGO / Landing / SLPG be written once over
+//! `Field` and instantiated on both the real and the complex Stiefel
+//! manifold (see DESIGN.md).
 
+use crate::rng::Rng;
 use std::fmt::Debug;
 use std::iter::Sum;
 use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Neg, Sub, SubAssign};
 
-/// Real scalar: the float operations the substrate needs, nothing more.
-pub trait Scalar:
+/// A field element: the operations shared by real and complex matrix
+/// entries. `Div`/`sqrt` are included because elementwise Adam divides by
+/// `√v̂` (the complex instantiation exists for type-uniformity; complex
+/// Adam is gated off at construction by Def. 1 linearity).
+pub trait Field:
     Copy
     + Clone
     + Debug
-    + PartialOrd
     + PartialEq
     + Default
     + Send
@@ -27,40 +46,114 @@ pub trait Scalar:
     + DivAssign
     + Sum
 {
+    /// The underlying real scalar type (`Self` for real fields).
+    type Real: Scalar;
+
     const ZERO: Self;
     const ONE: Self;
+    /// Whether this field has a non-trivial conjugation (complex).
+    const COMPLEX: bool;
+
+    /// Complex conjugate (identity for real fields).
+    fn conj(self) -> Self;
+    /// `self · conj(other)` — the inner-product kernel of `A Bᴴ`.
+    fn mul_conj(self, other: Self) -> Self;
+    /// Real part.
+    fn re(self) -> Self::Real;
+    /// Imaginary part (zero for real fields).
+    fn im(self) -> Self::Real;
+    /// Squared modulus `|z|²` (the Frobenius-norm kernel).
+    fn abs_sq(self) -> Self::Real;
+    /// Embed a real scalar.
+    fn from_re(r: Self::Real) -> Self;
+    /// Embed an `f64` (real embedding; imaginary part zero).
+    fn from_f64(v: f64) -> Self;
+    /// Principal square root.
+    fn sqrt(self) -> Self;
+    /// True if every component is finite.
+    fn is_finite(self) -> bool;
+    /// Draw a standard Gaussian element: `N(0, 1)` for real fields; for
+    /// complex, re/im each `N(0, ½)` so that `E|z|² = 1`.
+    fn sample_gaussian(rng: &mut Rng) -> Self;
+}
+
+/// Real scalar: a totally-ordered [`Field`] over itself.
+pub trait Scalar: Field<Real = Self> + PartialOrd {
     /// Machine epsilon of the type.
     const EPS: Self;
 
-    fn from_f64(v: f64) -> Self;
     fn to_f64(self) -> f64;
-    fn sqrt(self) -> Self;
     fn abs(self) -> Self;
     fn powi(self, n: i32) -> Self;
     fn max_s(self, other: Self) -> Self;
     fn min_s(self, other: Self) -> Self;
-    fn is_finite(self) -> bool;
     /// Truncate the mantissa to bfloat16 precision (keeps f32 exponent).
     /// Identity for f64 inputs converted via f32 path only when requested.
     fn truncate_bf16(self) -> Self;
 }
 
+macro_rules! impl_real_field {
+    ($t:ty) => {
+        impl Field for $t {
+            type Real = $t;
+
+            const ZERO: Self = 0.0;
+            const ONE: Self = 1.0;
+            const COMPLEX: bool = false;
+
+            #[inline]
+            fn conj(self) -> Self {
+                self
+            }
+            #[inline]
+            fn mul_conj(self, other: Self) -> Self {
+                self * other
+            }
+            #[inline]
+            fn re(self) -> Self {
+                self
+            }
+            #[inline]
+            fn im(self) -> Self {
+                0.0
+            }
+            #[inline]
+            fn abs_sq(self) -> Self {
+                self * self
+            }
+            #[inline]
+            fn from_re(r: Self) -> Self {
+                r
+            }
+            #[inline]
+            fn from_f64(v: f64) -> Self {
+                v as $t
+            }
+            #[inline]
+            fn sqrt(self) -> Self {
+                <$t>::sqrt(self)
+            }
+            #[inline]
+            fn is_finite(self) -> bool {
+                <$t>::is_finite(self)
+            }
+            #[inline]
+            fn sample_gaussian(rng: &mut Rng) -> Self {
+                rng.gaussian() as $t
+            }
+        }
+    };
+}
+
+impl_real_field!(f32);
+impl_real_field!(f64);
+
 impl Scalar for f32 {
-    const ZERO: Self = 0.0;
-    const ONE: Self = 1.0;
     const EPS: Self = f32::EPSILON;
 
     #[inline]
-    fn from_f64(v: f64) -> Self {
-        v as f32
-    }
-    #[inline]
     fn to_f64(self) -> f64 {
         self as f64
-    }
-    #[inline]
-    fn sqrt(self) -> Self {
-        f32::sqrt(self)
     }
     #[inline]
     fn abs(self) -> Self {
@@ -79,31 +172,17 @@ impl Scalar for f32 {
         f32::min(self, other)
     }
     #[inline]
-    fn is_finite(self) -> bool {
-        f32::is_finite(self)
-    }
-    #[inline]
     fn truncate_bf16(self) -> Self {
         f32::from_bits(self.to_bits() & 0xFFFF_0000)
     }
 }
 
 impl Scalar for f64 {
-    const ZERO: Self = 0.0;
-    const ONE: Self = 1.0;
     const EPS: Self = f64::EPSILON;
 
     #[inline]
-    fn from_f64(v: f64) -> Self {
-        v
-    }
-    #[inline]
     fn to_f64(self) -> f64 {
         self
-    }
-    #[inline]
-    fn sqrt(self) -> Self {
-        f64::sqrt(self)
     }
     #[inline]
     fn abs(self) -> Self {
@@ -122,10 +201,6 @@ impl Scalar for f64 {
         f64::min(self, other)
     }
     #[inline]
-    fn is_finite(self) -> bool {
-        f64::is_finite(self)
-    }
-    #[inline]
     fn truncate_bf16(self) -> Self {
         // bf16 truncation is defined through the f32 path; for f64 we go
         // f64 -> f32 -> bf16 -> f64, matching what a bf16 matmul unit sees.
@@ -133,9 +208,184 @@ impl Scalar for f64 {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Complex field element.
+// ---------------------------------------------------------------------------
+
+/// Complex number over a real scalar, stored interleaved as matrix
+/// elements (`Mat<Complex<S>>` is the crate's complex matrix type — see
+/// `linalg::CMat`).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Complex<S> {
+    pub re: S,
+    pub im: S,
+}
+
+impl<S: Scalar> Complex<S> {
+    #[inline]
+    pub fn new(re: S, im: S) -> Self {
+        Complex { re, im }
+    }
+
+    /// Modulus `|z|`.
+    #[inline]
+    pub fn modulus(self) -> S {
+        Field::sqrt(self.re * self.re + self.im * self.im)
+    }
+}
+
+impl<S: Scalar> Add for Complex<S> {
+    type Output = Self;
+    #[inline]
+    fn add(self, o: Self) -> Self {
+        Complex { re: self.re + o.re, im: self.im + o.im }
+    }
+}
+
+impl<S: Scalar> Sub for Complex<S> {
+    type Output = Self;
+    #[inline]
+    fn sub(self, o: Self) -> Self {
+        Complex { re: self.re - o.re, im: self.im - o.im }
+    }
+}
+
+impl<S: Scalar> Mul for Complex<S> {
+    type Output = Self;
+    #[inline]
+    fn mul(self, o: Self) -> Self {
+        Complex {
+            re: self.re * o.re - self.im * o.im,
+            im: self.re * o.im + self.im * o.re,
+        }
+    }
+}
+
+impl<S: Scalar> Div for Complex<S> {
+    type Output = Self;
+    #[inline]
+    fn div(self, o: Self) -> Self {
+        // z / w = z·conj(w) / |w|².
+        let d = o.re * o.re + o.im * o.im;
+        Complex {
+            re: (self.re * o.re + self.im * o.im) / d,
+            im: (self.im * o.re - self.re * o.im) / d,
+        }
+    }
+}
+
+impl<S: Scalar> Neg for Complex<S> {
+    type Output = Self;
+    #[inline]
+    fn neg(self) -> Self {
+        Complex { re: -self.re, im: -self.im }
+    }
+}
+
+impl<S: Scalar> AddAssign for Complex<S> {
+    #[inline]
+    fn add_assign(&mut self, o: Self) {
+        self.re += o.re;
+        self.im += o.im;
+    }
+}
+
+impl<S: Scalar> SubAssign for Complex<S> {
+    #[inline]
+    fn sub_assign(&mut self, o: Self) {
+        self.re -= o.re;
+        self.im -= o.im;
+    }
+}
+
+impl<S: Scalar> MulAssign for Complex<S> {
+    #[inline]
+    fn mul_assign(&mut self, o: Self) {
+        *self = *self * o;
+    }
+}
+
+impl<S: Scalar> DivAssign for Complex<S> {
+    #[inline]
+    fn div_assign(&mut self, o: Self) {
+        *self = *self / o;
+    }
+}
+
+impl<S: Scalar> Sum for Complex<S> {
+    fn sum<I: Iterator<Item = Self>>(iter: I) -> Self {
+        iter.fold(Complex { re: S::ZERO, im: S::ZERO }, Add::add)
+    }
+}
+
+impl<S: Scalar> Field for Complex<S> {
+    type Real = S;
+
+    const ZERO: Self = Complex { re: S::ZERO, im: S::ZERO };
+    const ONE: Self = Complex { re: S::ONE, im: S::ZERO };
+    const COMPLEX: bool = true;
+
+    #[inline]
+    fn conj(self) -> Self {
+        Complex { re: self.re, im: -self.im }
+    }
+    #[inline]
+    fn mul_conj(self, other: Self) -> Self {
+        Complex {
+            re: self.re * other.re + self.im * other.im,
+            im: self.im * other.re - self.re * other.im,
+        }
+    }
+    #[inline]
+    fn re(self) -> S {
+        self.re
+    }
+    #[inline]
+    fn im(self) -> S {
+        self.im
+    }
+    #[inline]
+    fn abs_sq(self) -> S {
+        self.re * self.re + self.im * self.im
+    }
+    #[inline]
+    fn from_re(r: S) -> Self {
+        Complex { re: r, im: S::ZERO }
+    }
+    #[inline]
+    fn from_f64(v: f64) -> Self {
+        Complex { re: S::from_f64(v), im: S::ZERO }
+    }
+    #[inline]
+    fn sqrt(self) -> Self {
+        // Principal branch: Re √z ≥ 0. With r = |z|,
+        // √z = (√((r+a)/2), sign(b)·√((r−a)/2)).
+        let half = S::from_f64(0.5);
+        let r = self.modulus();
+        let gamma = Field::sqrt(((r + self.re) * half).max_s(S::ZERO));
+        let delta = Field::sqrt(((r - self.re) * half).max_s(S::ZERO));
+        let delta = if self.im < S::ZERO { -delta } else { delta };
+        Complex { re: gamma, im: delta }
+    }
+    #[inline]
+    fn is_finite(self) -> bool {
+        Field::is_finite(self.re) && Field::is_finite(self.im)
+    }
+    #[inline]
+    fn sample_gaussian(rng: &mut Rng) -> Self {
+        let s = std::f64::consts::FRAC_1_SQRT_2;
+        Complex {
+            re: S::from_f64(rng.gaussian() * s),
+            im: S::from_f64(rng.gaussian() * s),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    type C = Complex<f64>;
 
     #[test]
     fn bf16_truncation_drops_low_mantissa() {
@@ -147,7 +397,55 @@ mod tests {
 
     #[test]
     fn scalar_roundtrip() {
-        assert_eq!(<f32 as Scalar>::from_f64(1.5).to_f64(), 1.5);
-        assert_eq!(<f64 as Scalar>::from_f64(1.5).to_f64(), 1.5);
+        assert_eq!(<f32 as Field>::from_f64(1.5).to_f64(), 1.5);
+        assert_eq!(<f64 as Field>::from_f64(1.5).to_f64(), 1.5);
+    }
+
+    #[test]
+    fn real_conjugation_is_identity() {
+        assert_eq!(Field::conj(2.5f64), 2.5);
+        assert_eq!(2.0f32.mul_conj(3.0), 6.0);
+        assert_eq!(Field::abs_sq(-3.0f64), 9.0);
+        assert!(!f64::COMPLEX && Complex::<f64>::COMPLEX);
+    }
+
+    #[test]
+    fn complex_arithmetic() {
+        // (1+2i)(3+4i) = -5+10i
+        let z = C::new(1.0, 2.0) * C::new(3.0, 4.0);
+        assert_eq!(z, C::new(-5.0, 10.0));
+        // Division inverts multiplication.
+        let back = z / C::new(3.0, 4.0);
+        assert!((back.re - 1.0).abs() < 1e-12 && (back.im - 2.0).abs() < 1e-12);
+        // conj and mul_conj agree.
+        let a = C::new(0.3, -0.7);
+        let b = C::new(-1.1, 0.4);
+        assert_eq!(a.mul_conj(b), a * b.conj());
+        assert_eq!(a.abs_sq(), a.mul_conj(a).re);
+    }
+
+    #[test]
+    fn complex_sqrt_principal() {
+        for z in [C::new(-5.0, 10.0), C::new(4.0, 0.0), C::new(0.0, -2.0), C::new(-1.0, 0.0)]
+        {
+            let s = Field::sqrt(z);
+            let sq = s * s;
+            assert!(
+                (sq.re - z.re).abs() < 1e-9 && (sq.im - z.im).abs() < 1e-9,
+                "sqrt({z:?})² = {sq:?}"
+            );
+            assert!(s.re >= 0.0, "principal branch: {s:?}");
+        }
+    }
+
+    #[test]
+    fn complex_gaussian_unit_second_moment() {
+        let mut rng = Rng::seed_from_u64(0);
+        let n = 4000;
+        let mean_sq: f64 = (0..n)
+            .map(|_| C::sample_gaussian(&mut rng).abs_sq())
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean_sq - 1.0).abs() < 0.1, "E|z|² = {mean_sq}");
     }
 }

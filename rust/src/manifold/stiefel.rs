@@ -12,8 +12,8 @@
 //! - projections (polar = closest point; QR = retraction baseline).
 
 use crate::linalg::{
-    matmul, matmul_a_bt, matmul_at_b, polar_project, qr_retract_rows, CMat, Mat, PolarOpts,
-    Scalar,
+    matmul, matmul_a_bh, matmul_a_bt, matmul_ah_b, matmul_at_b, polar_project,
+    qr_retract_rows, CMat, Field, Mat, PolarOpts, Scalar,
 };
 use crate::rng::Rng;
 
@@ -29,12 +29,12 @@ pub fn random_point_t<S: Scalar>(p: usize, n: usize, rng: &mut Rng) -> Mat<S> {
     qr_retract_rows(&Mat::<S>::randn(p, n, rng))
 }
 
-/// Random point on the complex Stiefel manifold (X X^H = I), via complex
+/// Random point on the complex Stiefel manifold (X Xᴴ = I), via complex
 /// Gaussian + Newton–Schulz polar projection.
 pub fn random_point_complex<S: Scalar>(p: usize, n: usize, rng: &mut Rng) -> CMat<S> {
     assert!(p <= n, "St(p, n) needs p ≤ n, got ({p}, {n})");
     let g = CMat::<S>::randn(p, n, rng);
-    crate::linalg::polar_project_complex(&g, PolarOpts { tol: 1e-9, max_iters: 100 })
+    polar_project(&g, PolarOpts { tol: 1e-9, max_iters: 100 })
 }
 
 /// Frobenius distance to the manifold: `‖X Xᵀ − I‖_F` (f32 convenience).
@@ -45,17 +45,25 @@ pub fn distance(x: &Mat<f32>) -> f64 {
     distance_t(x)
 }
 
-/// `‖X Xᵀ − I‖_F`, generic.
-pub fn distance_t<S: Scalar>(x: &Mat<S>) -> f64 {
-    let mut g = matmul_a_bt(x, x);
+/// `‖X Xᴴ − I‖_F` over any field — the one distance both manifolds share
+/// (real: `X Xᵀ`; complex: `X Xᴴ`). Used by the field-generic
+/// `ParamStore`.
+pub fn distance_f<E: Field>(x: &Mat<E>) -> f64 {
+    let mut g = matmul_a_bh(x, x);
     g.sub_eye_inplace();
     g.norm().to_f64()
 }
 
-/// Dimension-invariant ("normalized") distance `‖X Xᵀ − I‖_F / √p`,
-/// used by Fig. 6 to compare feasibility across matrix sizes.
-pub fn normalized_distance<S: Scalar>(x: &Mat<S>) -> f64 {
-    distance_t(x) / (x.rows() as f64).sqrt()
+/// `‖X Xᵀ − I‖_F`, generic in real precision.
+pub fn distance_t<S: Scalar>(x: &Mat<S>) -> f64 {
+    distance_f(x)
+}
+
+/// Dimension-invariant ("normalized") distance `‖X Xᴴ − I‖_F / √p`,
+/// used by Fig. 6 to compare feasibility across matrix sizes. Defined
+/// over any field, like [`distance_f`].
+pub fn normalized_distance<E: Field>(x: &Mat<E>) -> f64 {
+    distance_f(x) / (x.rows() as f64).sqrt()
 }
 
 /// The squared-distance potential `N(X) = ¼ ‖X Xᵀ − I‖²`.
@@ -87,23 +95,23 @@ pub fn project<S: Scalar>(x: &Mat<S>) -> Mat<S> {
     polar_project(x, PolarOpts::default())
 }
 
-/// Complex manifold distance `‖X X^H − I‖_F`.
+/// Complex manifold distance `‖X Xᴴ − I‖_F`.
 pub fn distance_complex<S: Scalar>(x: &CMat<S>) -> f64 {
-    x.stiefel_distance()
+    distance_f(x)
 }
 
-/// Complex relative gradient `S = SkewH(X^H G)` and Riemannian gradient
+/// Complex relative gradient `S = SkewH(Xᴴ G)` and Riemannian gradient
 /// `X S` for the unitary experiments.
 pub fn riemannian_gradient_complex<S: Scalar>(x: &CMat<S>, g: &CMat<S>) -> CMat<S> {
-    let s = x.matmul_ah_b(g).skew_h();
-    x.matmul(&s)
+    let s = matmul_ah_b(x, g).skew_h();
+    matmul(x, &s)
 }
 
-/// Complex potential gradient `(X X^H − I) X`.
+/// Complex potential gradient `(X Xᴴ − I) X`.
 pub fn potential_grad_complex<S: Scalar>(x: &CMat<S>) -> CMat<S> {
-    let mut g = x.matmul_a_bh(x);
+    let mut g = matmul_a_bh(x, x);
     g.sub_eye_inplace();
-    g.matmul(x)
+    matmul(&g, x)
 }
 
 #[cfg(test)]
@@ -176,7 +184,7 @@ mod tests {
         let x = random_point_complex::<f64>(4, 9, &mut rng);
         let g = CMat::<f64>::randn(4, 9, &mut rng);
         let rg = riemannian_gradient_complex(&x, &g);
-        let c = x.matmul_a_bh(&rg).add(&rg.matmul_a_bh(&x));
+        let c = matmul_a_bh(&x, &rg).add(&matmul_a_bh(&rg, &x));
         assert!(c.norm() < 1e-9);
     }
 

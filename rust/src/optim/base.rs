@@ -4,7 +4,7 @@
 //! semantics to be preserved, which holds for SGD, momentum-SGD and VAdam
 //! (vector-wise normalization) but *not* elementwise Adam.
 
-use crate::linalg::{Mat, Scalar};
+use crate::linalg::{Field, Mat, Scalar};
 use crate::util::json::Json;
 use anyhow::{anyhow, Result};
 
@@ -124,22 +124,30 @@ impl BaseOptKind {
 
 /// Per-parameter state for a base optimizer.
 #[derive(Clone, Debug)]
-enum State<S: Scalar> {
+enum State<E: Field> {
     None,
-    Momentum { m: Option<Mat<S>> },
-    VAdam { m: Option<Mat<S>>, v: f64, t: u64 },
-    Adam { m: Option<Mat<S>>, v: Option<Mat<S>>, t: u64 },
+    Momentum { m: Option<Mat<E>> },
+    VAdam { m: Option<Mat<E>>, v: f64, t: u64 },
+    Adam { m: Option<Mat<E>>, v: Option<Mat<E>>, t: u64 },
 }
 
 /// A base optimizer instance managing `n_params` parameter slots.
+/// Field-generic: the same momentum/VAdam state machine serves the real
+/// and the complex optimizers (for complex fields only the *linear* kinds
+/// of Def. 1 are admissible — enforced at construction).
 #[derive(Clone, Debug)]
-pub struct BaseOpt<S: Scalar> {
+pub struct BaseOpt<E: Field> {
     kind: BaseOptKind,
-    states: Vec<State<S>>,
+    states: Vec<State<E>>,
 }
 
-impl<S: Scalar> BaseOpt<S> {
+impl<E: Field> BaseOpt<E> {
     pub fn new(kind: BaseOptKind, n_params: usize) -> Self {
+        assert!(
+            kind.is_linear() || !E::COMPLEX,
+            "complex base optimizers must be linear (Def. 1); got {}",
+            kind.name()
+        );
         let init = |_: usize| match kind {
             BaseOptKind::Sgd => State::None,
             BaseOptKind::Momentum { .. } => State::Momentum { m: None },
@@ -169,16 +177,16 @@ impl<S: Scalar> BaseOpt<S> {
     }
 
     /// Transform a raw gradient: `G = BO(∇f)`.
-    pub fn transform(&mut self, idx: usize, grad: &Mat<S>) -> Mat<S> {
+    pub fn transform(&mut self, idx: usize, grad: &Mat<E>) -> Mat<E> {
         assert!(idx < self.states.len(), "param index {idx} out of range");
         match (&self.kind, &mut self.states[idx]) {
             (BaseOptKind::Sgd, _) => grad.clone(),
             (BaseOptKind::Momentum { beta }, State::Momentum { m }) => {
-                let beta = S::from_f64(*beta);
+                let beta = E::from_f64(*beta);
                 match m {
                     Some(mm) => {
                         mm.scale_inplace(beta);
-                        mm.axpy(S::ONE, grad);
+                        mm.axpy(E::ONE, grad);
                     }
                     None => *m = Some(grad.clone()),
                 }
@@ -186,16 +194,16 @@ impl<S: Scalar> BaseOpt<S> {
             }
             (BaseOptKind::VAdam { beta1, beta2, eps }, State::VAdam { m, v, t }) => {
                 *t += 1;
-                let b1 = S::from_f64(*beta1);
+                let b1 = E::from_f64(*beta1);
                 match m {
                     Some(mm) => {
                         mm.scale_inplace(b1);
-                        mm.axpy(S::from_f64(1.0 - *beta1), grad);
+                        mm.axpy(E::from_f64(1.0 - *beta1), grad);
                     }
-                    None => *m = Some(grad.scale(S::from_f64(1.0 - *beta1))),
+                    None => *m = Some(grad.scale(E::from_f64(1.0 - *beta1))),
                 }
                 // Matrix-wise second moment (one scalar per parameter):
-                // v ← β₂ v + (1−β₂) ‖∇f‖².
+                // v ← β₂ v + (1−β₂) ‖∇f‖². Always real, on either field.
                 let gn2 = grad.norm_sq().to_f64();
                 *v = *beta2 * *v + (1.0 - *beta2) * gn2;
                 // Bias corrections.
@@ -203,32 +211,32 @@ impl<S: Scalar> BaseOpt<S> {
                 let vhat = *v / (1.0 - beta2.powi(*t as i32));
                 // G = m̂ / (√v̂ + ε) — a *scalar* multiple of m̂: linear.
                 let denom = vhat.sqrt() + *eps;
-                m.as_ref().unwrap().scale(S::from_f64(mhat_scale / denom))
+                m.as_ref().unwrap().scale(E::from_f64(mhat_scale / denom))
             }
             (BaseOptKind::Adam { beta1, beta2, eps }, State::Adam { m, v, t }) => {
                 *t += 1;
-                let b1 = S::from_f64(*beta1);
-                let b2 = S::from_f64(*beta2);
+                let b1 = E::from_f64(*beta1);
+                let b2 = E::from_f64(*beta2);
                 match m {
                     Some(mm) => {
                         mm.scale_inplace(b1);
-                        mm.axpy(S::from_f64(1.0 - *beta1), grad);
+                        mm.axpy(E::from_f64(1.0 - *beta1), grad);
                     }
-                    None => *m = Some(grad.scale(S::from_f64(1.0 - *beta1))),
+                    None => *m = Some(grad.scale(E::from_f64(1.0 - *beta1))),
                 }
                 let g2 = grad.map(|x| x * x);
                 match v {
                     Some(vv) => {
                         vv.scale_inplace(b2);
-                        vv.axpy(S::from_f64(1.0 - *beta2), &g2);
+                        vv.axpy(E::from_f64(1.0 - *beta2), &g2);
                     }
-                    None => *v = Some(g2.scale(S::from_f64(1.0 - *beta2))),
+                    None => *v = Some(g2.scale(E::from_f64(1.0 - *beta2))),
                 }
                 let mc = 1.0 / (1.0 - beta1.powi(*t as i32));
                 let vc = 1.0 / (1.0 - beta2.powi(*t as i32));
-                let eps_s = S::from_f64(*eps);
-                let mhat = m.as_ref().unwrap().scale(S::from_f64(mc));
-                let vhat = v.as_ref().unwrap().scale(S::from_f64(vc));
+                let eps_s = E::from_f64(*eps);
+                let mhat = m.as_ref().unwrap().scale(E::from_f64(mc));
+                let vhat = v.as_ref().unwrap().scale(E::from_f64(vc));
                 mhat.zip(&vhat, |mi, vi| mi / (vi.sqrt() + eps_s))
             }
             _ => unreachable!("state/kind mismatch"),
@@ -322,6 +330,19 @@ mod tests {
         bo.ensure_slots(5);
         let g = M::ones(1, 1);
         let _ = bo.transform(4, &g);
+    }
+
+    #[test]
+    fn complex_base_rejects_nonlinear() {
+        // Def. 1: elementwise Adam is not linear, so it has no complex
+        // instantiation — construction must refuse.
+        use crate::linalg::Complex;
+        let result = std::panic::catch_unwind(|| {
+            BaseOpt::<Complex<f64>>::new(BaseOptKind::adam(), 1);
+        });
+        assert!(result.is_err());
+        // Linear kinds are fine on the complex field.
+        let _ = BaseOpt::<Complex<f64>>::new(BaseOptKind::vadam(), 1);
     }
 
     #[test]

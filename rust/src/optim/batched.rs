@@ -1,6 +1,8 @@
 //! The batched host engine (`Engine::BatchedHost`): whole `(B, p, n)`
 //! shape groups stepped as one [`BatchMat`], parallelized over the batch
-//! dimension.
+//! dimension. Field-generic: `BatchedHost<f32>` steps real Stiefel
+//! groups, `BatchedHost<Complex<S>>` steps unitary groups (the Fig. 8
+//! Born-MPS regime), through the same code.
 //!
 //! This is the host-side mechanism behind the paper's Fig. 1 claim
 //! (thousands of matrices in minutes): the per-matrix host loop spends its
@@ -24,7 +26,7 @@ use super::base::BaseOptKind;
 use super::pogo::{landing_coeffs, LambdaPolicy};
 use super::quartic::solve_landing_quartic;
 use super::Orthoptimizer;
-use crate::linalg::{batch_a_bt, batch_matmul, BatchMat, Mat, Scalar};
+use crate::linalg::{batch_a_bh, batch_matmul, BatchMat, Field, Mat, Scalar};
 use anyhow::{ensure, Result};
 
 /// Which update rule a [`BatchedHost`] runs.
@@ -40,27 +42,36 @@ enum Rule {
 /// Batched base-optimizer state: the batched analogue of
 /// [`super::base::BaseOpt`], with one packed moment tensor for the whole
 /// group. Lazily sized on the first transform (groups have a fixed B).
-struct BatchedBase<S: Scalar> {
+struct BatchedBase<E: Field> {
     kind: BaseOptKind,
     /// First moment (momentum / VAdam / Adam).
-    m: Option<BatchMat<S>>,
+    m: Option<BatchMat<E>>,
     /// Elementwise second moment (Adam only).
-    v: Option<BatchMat<S>>,
+    v: Option<BatchMat<E>>,
     /// Per-matrix scalar second moment (VAdam only).
     v_scalar: Vec<f64>,
     /// Step count (shared: every matrix of a group steps together).
     t: u64,
 }
 
-impl<S: Scalar> BatchedBase<S> {
+impl<E: Field> BatchedBase<E> {
     fn new(kind: BaseOptKind) -> Self {
+        // Same Def. 1 gate as `BaseOpt::new`: elementwise Adam has no
+        // complex instantiation (z² is not |z|²), so the batched engine
+        // must refuse it too — parity with the loop engine includes the
+        // construction contract.
+        assert!(
+            kind.is_linear() || !E::COMPLEX,
+            "complex base optimizers must be linear (Def. 1); got {}",
+            kind.name()
+        );
         BatchedBase { kind, m: None, v: None, v_scalar: Vec::new(), t: 0 }
     }
 
     /// `G = BO(∇f)` over the whole batch, mirroring
     /// `BaseOpt::transform` per matrix (same order of operations, same
     /// f64 scalar paths).
-    fn transform(&mut self, grad: &BatchMat<S>) -> Result<BatchMat<S>> {
+    fn transform(&mut self, grad: &BatchMat<E>) -> Result<BatchMat<E>> {
         if let Some(m) = &self.m {
             ensure!(
                 m.shape() == grad.shape(),
@@ -75,8 +86,8 @@ impl<S: Scalar> BatchedBase<S> {
             BaseOptKind::Momentum { beta } => {
                 match &mut self.m {
                     Some(m) => {
-                        m.scale_inplace(S::from_f64(beta));
-                        m.axpy(S::ONE, grad);
+                        m.scale_inplace(E::from_f64(beta));
+                        m.axpy(E::ONE, grad);
                     }
                     None => self.m = Some(grad.clone()),
                 }
@@ -86,12 +97,12 @@ impl<S: Scalar> BatchedBase<S> {
                 self.t += 1;
                 match &mut self.m {
                     Some(m) => {
-                        m.scale_inplace(S::from_f64(beta1));
-                        m.axpy(S::from_f64(1.0 - beta1), grad);
+                        m.scale_inplace(E::from_f64(beta1));
+                        m.axpy(E::from_f64(1.0 - beta1), grad);
                     }
                     None => {
                         let mut m = grad.clone();
-                        m.scale_inplace(S::from_f64(1.0 - beta1));
+                        m.scale_inplace(E::from_f64(1.0 - beta1));
                         self.m = Some(m);
                     }
                 }
@@ -102,14 +113,14 @@ impl<S: Scalar> BatchedBase<S> {
                 let gn2 = grad.norm_sq_per_mat();
                 let mhat_scale = 1.0 / (1.0 - beta1.powi(self.t as i32));
                 let v_corr = 1.0 - beta2.powi(self.t as i32);
-                let alphas: Vec<S> = self
+                let alphas: Vec<E> = self
                     .v_scalar
                     .iter_mut()
                     .zip(&gn2)
                     .map(|(v, &g2)| {
                         *v = beta2 * *v + (1.0 - beta2) * g2.to_f64();
                         let vhat = *v / v_corr;
-                        S::from_f64(mhat_scale / (vhat.sqrt() + eps))
+                        E::from_f64(mhat_scale / (vhat.sqrt() + eps))
                     })
                     .collect();
                 let mut out = self.m.as_ref().unwrap().clone();
@@ -120,34 +131,34 @@ impl<S: Scalar> BatchedBase<S> {
                 self.t += 1;
                 match &mut self.m {
                     Some(m) => {
-                        m.scale_inplace(S::from_f64(beta1));
-                        m.axpy(S::from_f64(1.0 - beta1), grad);
+                        m.scale_inplace(E::from_f64(beta1));
+                        m.axpy(E::from_f64(1.0 - beta1), grad);
                     }
                     None => {
                         let mut m = grad.clone();
-                        m.scale_inplace(S::from_f64(1.0 - beta1));
+                        m.scale_inplace(E::from_f64(1.0 - beta1));
                         self.m = Some(m);
                     }
                 }
                 let g2 = grad.map(|x| x * x);
                 match &mut self.v {
                     Some(v) => {
-                        v.scale_inplace(S::from_f64(beta2));
-                        v.axpy(S::from_f64(1.0 - beta2), &g2);
+                        v.scale_inplace(E::from_f64(beta2));
+                        v.axpy(E::from_f64(1.0 - beta2), &g2);
                     }
                     None => {
                         let mut v = g2;
-                        v.scale_inplace(S::from_f64(1.0 - beta2));
+                        v.scale_inplace(E::from_f64(1.0 - beta2));
                         self.v = Some(v);
                     }
                 }
                 let mc = 1.0 / (1.0 - beta1.powi(self.t as i32));
                 let vc = 1.0 / (1.0 - beta2.powi(self.t as i32));
-                let eps_s = S::from_f64(eps);
+                let eps_s = E::from_f64(eps);
                 let mut mhat = self.m.as_ref().unwrap().clone();
-                mhat.scale_inplace(S::from_f64(mc));
+                mhat.scale_inplace(E::from_f64(mc));
                 let mut vhat = self.v.as_ref().unwrap().clone();
-                vhat.scale_inplace(S::from_f64(vc));
+                vhat.scale_inplace(E::from_f64(vc));
                 mhat.zip(&vhat, |mi, vi| mi / (vi.sqrt() + eps_s))
             }
         })
@@ -164,15 +175,15 @@ impl<S: Scalar> BatchedBase<S> {
 /// State is batch-wide (like the XLA stepper): `step(idx, …)` treats its
 /// input as a batch of one, so a `BatchedHost` must own exactly one shape
 /// group — which is how `OptimSession` builds them.
-pub struct BatchedHost<S: Scalar = f32> {
+pub struct BatchedHost<E: Field = f32> {
     rule: Rule,
     lr: f64,
-    base: BatchedBase<S>,
+    base: BatchedBase<E>,
     name: String,
     last_lambda: Option<f64>,
 }
 
-impl<S: Scalar> BatchedHost<S> {
+impl<E: Field> BatchedHost<E> {
     /// Batched POGO (Alg. 1): the 5-matmul step + proximal normal step.
     pub fn pogo(lr: f64, lambda: LambdaPolicy, base: BaseOptKind) -> Self {
         let name = match lambda {
@@ -243,7 +254,7 @@ impl<S: Scalar> BatchedHost<S> {
     }
 
     /// One batched update of `x` given raw gradients `g0`.
-    fn apply(&mut self, x: &mut BatchMat<S>, g0: &BatchMat<S>) -> Result<()> {
+    fn apply(&mut self, x: &mut BatchMat<E>, g0: &BatchMat<E>) -> Result<()> {
         ensure!(
             x.shape() == g0.shape(),
             "step_batch: points {:?} vs gradients {:?}",
@@ -257,35 +268,36 @@ impl<S: Scalar> BatchedHost<S> {
         let eta = self.lr;
         match self.rule {
             Rule::Pogo { lambda } => {
-                // M = X − η·½((X Xᵀ)G − (X Gᵀ)X)  (small-gram form).
-                let xxt = batch_a_bt(x, x);
-                let xgt = batch_a_bt(x, &g);
-                let a1 = batch_matmul(&xxt, &g);
-                let a2 = batch_matmul(&xgt, x);
+                // M = X − η·½((X Xᴴ)G − (X Gᴴ)X)  (small-gram form).
+                let xxh = batch_a_bh(x, x);
+                let xgh = batch_a_bh(x, &g);
+                let a1 = batch_matmul(&xxh, &g);
+                let a2 = batch_matmul(&xgh, x);
                 let mut m = x.clone();
-                m.axpy(S::from_f64(-0.5 * eta), &a1);
-                m.axpy(S::from_f64(0.5 * eta), &a2);
-                // Normal step: X⁺ = M − λ(M Mᵀ − I)M.
-                let mut c = batch_a_bt(&m, &m);
+                m.axpy(E::from_f64(-0.5 * eta), &a1);
+                m.axpy(E::from_f64(0.5 * eta), &a2);
+                // Normal step: X⁺ = M − λ(M Mᴴ − I)M.
+                let mut c = batch_a_bh(&m, &m);
                 c.sub_eye_inplace();
                 let bmat = batch_matmul(&c, &m);
                 match lambda {
                     LambdaPolicy::Half => {
-                        m.axpy(S::from_f64(-0.5), &bmat);
+                        m.axpy(E::from_f64(-0.5), &bmat);
                         self.last_lambda = Some(0.5);
                     }
                     LambdaPolicy::FindRoot => {
                         // Per-matrix quartic roots from the p×p gram
                         // residuals (identical arithmetic to the
-                        // per-matrix path: same coeffs, same solver).
+                        // per-matrix path: same coeffs, same solver —
+                        // the coefficients are real on either field).
                         let (_, p, _) = c.shape();
                         let mut alphas = Vec::with_capacity(x.batch());
                         let mut lam = 0.5;
                         for i in 0..c.batch() {
-                            let ci: Mat<S> = c.copy_mat(i);
+                            let ci: Mat<E> = c.copy_mat(i);
                             debug_assert_eq!(ci.shape(), (p, p));
                             lam = solve_landing_quartic(landing_coeffs(&ci));
-                            alphas.push(S::from_f64(-lam));
+                            alphas.push(E::from_f64(-lam));
                         }
                         m.axpy_per_mat(&alphas, &bmat);
                         self.last_lambda = Some(lam);
@@ -296,12 +308,12 @@ impl<S: Scalar> BatchedHost<S> {
             Rule::Landing { attraction, eps_ball, safeguard, normalize_grad } => {
                 let g = if normalize_grad {
                     let mut g = g;
-                    let alphas: Vec<S> = g
+                    let alphas: Vec<E> = g
                         .norm_sq_per_mat()
                         .iter()
                         .map(|&ns| {
                             let n = ns.sqrt().to_f64().max(1e-30);
-                            S::from_f64(1.0 / n)
+                            E::from_f64(1.0 / n)
                         })
                         .collect();
                     g.scale_per_mat(&alphas);
@@ -309,14 +321,14 @@ impl<S: Scalar> BatchedHost<S> {
                 } else {
                     g
                 };
-                // R = ½((XXᵀ)G − (XGᵀ)X); ∇N = (XXᵀ − I)X.
-                let xxt = batch_a_bt(x, x);
-                let xgt = batch_a_bt(x, &g);
-                let a1 = batch_matmul(&xxt, &g);
-                let a2 = batch_matmul(&xgt, x);
+                // R = ½((XXᴴ)G − (XGᴴ)X); ∇N = (XXᴴ − I)X.
+                let xxh = batch_a_bh(x, x);
+                let xgh = batch_a_bh(x, &g);
+                let a1 = batch_matmul(&xxh, &g);
+                let a2 = batch_matmul(&xgh, x);
                 let mut r = a1.sub(&a2);
-                r.scale_inplace(S::from_f64(0.5));
-                let mut h = xxt;
+                r.scale_inplace(E::from_f64(0.5));
+                let mut h = xxh;
                 h.sub_eye_inplace();
                 let ngrad = batch_matmul(&h, x);
                 // Per-matrix safeguarded step size (same f64 formula as
@@ -339,36 +351,36 @@ impl<S: Scalar> BatchedHost<S> {
                     } else {
                         eta
                     };
-                    a_r.push(S::from_f64(-eta_i));
-                    a_n.push(S::from_f64(-eta_i * lam));
+                    a_r.push(E::from_f64(-eta_i));
+                    a_n.push(E::from_f64(-eta_i * lam));
                 }
                 x.axpy_per_mat(&a_r, &r);
                 x.axpy_per_mat(&a_n, &ngrad);
             }
             Rule::Slpg => {
-                // Y = X − η(G − Sym(G Xᵀ)X); X⁺ = Y − ½(Y Yᵀ − I)Y.
-                let gxt = batch_a_bt(&g, x);
-                let sym = gxt.sym_per_mat();
+                // Y = X − η(G − SymH(G Xᴴ)X); X⁺ = Y − ½(Y Yᴴ − I)Y.
+                let gxh = batch_a_bh(&g, x);
+                let sym = gxh.sym_per_mat();
                 let sx = batch_matmul(&sym, x);
                 let mut y = x.clone();
-                y.axpy(S::from_f64(-eta), &g);
-                y.axpy(S::from_f64(eta), &sx);
-                let mut c = batch_a_bt(&y, &y);
+                y.axpy(E::from_f64(-eta), &g);
+                y.axpy(E::from_f64(eta), &sx);
+                let mut c = batch_a_bh(&y, &y);
                 c.sub_eye_inplace();
                 let cy = batch_matmul(&c, &y);
-                y.axpy(S::from_f64(-0.5), &cy);
+                y.axpy(E::from_f64(-0.5), &cy);
                 *x = y;
             }
             Rule::Adam => {
-                x.axpy(S::from_f64(-eta), &g);
+                x.axpy(E::from_f64(-eta), &g);
             }
         }
         Ok(())
     }
 }
 
-impl<S: Scalar> Orthoptimizer<S> for BatchedHost<S> {
-    fn step(&mut self, _idx: usize, x: &mut Mat<S>, g: &Mat<S>) -> Result<()> {
+impl<E: Field> Orthoptimizer<E> for BatchedHost<E> {
+    fn step(&mut self, _idx: usize, x: &mut Mat<E>, g: &Mat<E>) -> Result<()> {
         // A single matrix is a batch of one (state is batch-wide, like the
         // XLA stepper — `idx` is not a state slot here).
         let mut xb = BatchMat::from_mats(std::slice::from_ref(x));
@@ -378,7 +390,7 @@ impl<S: Scalar> Orthoptimizer<S> for BatchedHost<S> {
         Ok(())
     }
 
-    fn step_group(&mut self, xs: &mut [Mat<S>], gs: &[Mat<S>]) -> Result<()> {
+    fn step_group(&mut self, xs: &mut [Mat<E>], gs: &[Mat<E>]) -> Result<()> {
         ensure!(
             xs.len() == gs.len(),
             "step_group: {} points vs {} gradients",
@@ -401,7 +413,7 @@ impl<S: Scalar> Orthoptimizer<S> for BatchedHost<S> {
         Ok(())
     }
 
-    fn step_batch(&mut self, xs: &mut BatchMat<S>, gs: &BatchMat<S>) -> Result<()> {
+    fn step_batch(&mut self, xs: &mut BatchMat<E>, gs: &BatchMat<E>) -> Result<()> {
         self.apply(xs, gs)
     }
 
@@ -506,6 +518,47 @@ mod tests {
             BatchedHost::<f64>::pogo(0.1, LambdaPolicy::Half, BaseOptKind::vadam());
         opt.step_batch(&mut x4, &g4).unwrap();
         assert!(opt.step_batch(&mut x2, &g2).is_err());
+    }
+
+    #[test]
+    fn complex_pogo_batch_stays_feasible() {
+        // The SAME engine at E = Complex<f64>: batched unitary POGO keeps
+        // every core near X Xᴴ = I.
+        use crate::linalg::{CMat, Complex};
+        let mut rng = Rng::seed_from_u64(5);
+        let (p, n, b) = (4, 8, 12);
+        let xs: Vec<CMat<f64>> =
+            (0..b).map(|_| stiefel::random_point_complex::<f64>(p, n, &mut rng)).collect();
+        let mut x = BatchMat::from_mats(&xs);
+        let mut opt =
+            BatchedHost::<Complex<f64>>::pogo(0.2, LambdaPolicy::Half, BaseOptKind::Sgd);
+        for _ in 0..20 {
+            let gs: Vec<CMat<f64>> = (0..b)
+                .map(|_| {
+                    let g = CMat::<f64>::randn(p, n, &mut rng);
+                    let nn = g.norm();
+                    g.scale(Complex::from_f64(0.5 / nn))
+                })
+                .collect();
+            let gb = BatchMat::from_mats(&gs);
+            opt.step_batch(&mut x, &gb).unwrap();
+        }
+        for m in x.to_mats() {
+            assert!(m.stiefel_distance() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn complex_batched_rejects_nonlinear_base() {
+        // Def. 1 gate at construction, same as the loop engine's BaseOpt.
+        use crate::linalg::Complex;
+        let result = std::panic::catch_unwind(|| {
+            BatchedHost::<Complex<f32>>::pogo(0.1, LambdaPolicy::Half, BaseOptKind::adam());
+        });
+        assert!(result.is_err());
+        // Linear bases and the real Adam engine are unaffected.
+        let _ = BatchedHost::<Complex<f32>>::pogo(0.1, LambdaPolicy::Half, BaseOptKind::vadam());
+        let _ = BatchedHost::<f32>::adam(0.01);
     }
 
     #[test]

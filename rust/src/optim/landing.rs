@@ -20,7 +20,7 @@
 
 use super::base::{BaseOpt, BaseOptKind};
 use super::Orthoptimizer;
-use crate::linalg::{matmul, matmul_a_bt, Mat, Scalar};
+use crate::linalg::{matmul, matmul_a_bh, Field, Mat, Scalar};
 
 /// Landing hyperparameters.
 #[derive(Clone, Copy, Debug)]
@@ -70,16 +70,18 @@ impl LandingConfig {
     }
 }
 
-/// Landing / LandingPC over real Stiefel matrices.
-pub struct Landing<S: Scalar = f32> {
+/// Landing / LandingPC over Stiefel matrices of any field (real or
+/// complex — §2 fn. 1: transposes become adjoints, the safeguard algebra
+/// is on real norms either way).
+pub struct Landing<E: Field = f32> {
     cfg: LandingConfig,
-    base: BaseOpt<S>,
+    base: BaseOpt<E>,
     name: String,
     /// Last applied (possibly safeguarded) step size, for telemetry.
     pub last_eta: f64,
 }
 
-impl<S: Scalar> Landing<S> {
+impl<E: Field> Landing<E> {
     pub fn new(cfg: LandingConfig, n_params: usize) -> Self {
         let name = if cfg.normalize_grad && !cfg.safeguard {
             format!("LandingPC({})", cfg.base.name())
@@ -94,22 +96,22 @@ impl<S: Scalar> Landing<S> {
     }
 
     /// One landing-field update. Returns the applied η.
-    pub fn update(x: &Mat<S>, g: &Mat<S>, cfg: &LandingConfig) -> (Mat<S>, f64) {
+    pub fn update(x: &Mat<E>, g: &Mat<E>, cfg: &LandingConfig) -> (Mat<E>, f64) {
         let g = if cfg.normalize_grad {
             let n = g.norm().to_f64().max(1e-30);
-            g.scale(S::from_f64(1.0 / n))
+            g.scale(E::from_f64(1.0 / n))
         } else {
             g.clone()
         };
-        // Small-gram Riemannian direction R = ½((XXᵀ)G − (XGᵀ)X).
-        let xxt = matmul_a_bt(x, x);
-        let xgt = matmul_a_bt(x, &g);
-        let a1 = matmul(&xxt, &g);
-        let a2 = matmul(&xgt, x);
+        // Small-gram Riemannian direction R = ½((XXᴴ)G − (XGᴴ)X).
+        let xxh = matmul_a_bh(x, x);
+        let xgh = matmul_a_bh(x, &g);
+        let a1 = matmul(&xxh, &g);
+        let a2 = matmul(&xgh, x);
         let mut r = a1.sub(&a2);
-        r.scale_inplace(S::from_f64(0.5));
-        // ∇N(X) = (XXᵀ − I)X = h X.
-        let mut h = xxt.clone();
+        r.scale_inplace(E::from_f64(0.5));
+        // ∇N(X) = (XXᴴ − I)X = h X.
+        let mut h = xxh.clone();
         h.sub_eye_inplace();
         let ngrad = matmul(&h, x);
 
@@ -131,14 +133,14 @@ impl<S: Scalar> Landing<S> {
         };
 
         let mut xp = x.clone();
-        xp.axpy(S::from_f64(-eta), &r);
-        xp.axpy(S::from_f64(-eta * lam), &ngrad);
+        xp.axpy(E::from_f64(-eta), &r);
+        xp.axpy(E::from_f64(-eta * lam), &ngrad);
         (xp, eta)
     }
 }
 
-impl<S: Scalar> Orthoptimizer<S> for Landing<S> {
-    fn step(&mut self, idx: usize, x: &mut Mat<S>, grad: &Mat<S>) -> anyhow::Result<()> {
+impl<E: Field> Orthoptimizer<E> for Landing<E> {
+    fn step(&mut self, idx: usize, x: &mut Mat<E>, grad: &Mat<E>) -> anyhow::Result<()> {
         self.base.ensure_slots(idx + 1);
         let g = self.base.transform(idx, grad);
         let (xp, eta) = Landing::update(x, &g, &self.cfg);
@@ -215,7 +217,7 @@ mod tests {
         let mut x = stiefel::random_point_t::<f64>(p, n, &mut rng);
         let mut opt = Landing::<f64>::new(LandingConfig { lr: 0.05, ..Default::default() }, 1);
         // maximize ‖XA‖² → minimize −‖XA‖², grad = −2 X A Aᵀ.
-        let aat = matmul_a_bt(&a, &a);
+        let aat = crate::linalg::matmul_a_bt(&a, &a);
         let loss = |x: &M| -matmul(x, &a).norm_sq();
         let l0 = loss(&x);
         for _ in 0..200 {

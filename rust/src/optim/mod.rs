@@ -27,10 +27,13 @@ pub mod rsdm;
 pub mod slpg;
 pub mod unitary;
 
-use crate::linalg::{BatchMat, Mat, Scalar};
+use crate::linalg::{BatchMat, Field, Mat};
 use anyhow::{ensure, Result};
 
-/// A single-matrix orthoptimizer over `St(p, n)`.
+/// A single-matrix orthoptimizer over `St(p, n)` of the element field
+/// `E`: the real Stiefel manifold for `E = f32`/`f64`, the complex
+/// (unitary) one for `E = Complex<S>` — one trait, both manifolds
+/// (paper §2, fn. 1).
 ///
 /// `idx` identifies the parameter so stateful methods (momentum, VAdam)
 /// keep per-matrix state; implementations must accept any `idx <
@@ -44,13 +47,13 @@ use anyhow::{ensure, Result};
 /// Deliberately NOT `Send`: the XLA-backed engines hold PJRT handles
 /// (raw pointers) and the coordinator's step loop is single-threaded —
 /// parallelism lives inside the linalg substrate and inside XLA.
-pub trait Orthoptimizer<S: Scalar = f32> {
+pub trait Orthoptimizer<E: Field = f32> {
     /// In-place update of `x` given Euclidean gradient `g`.
-    fn step(&mut self, idx: usize, x: &mut Mat<S>, g: &Mat<S>) -> Result<()>;
+    fn step(&mut self, idx: usize, x: &mut Mat<E>, g: &Mat<E>) -> Result<()>;
 
     /// Update all matrices of a group (default: sequential loop).
     /// The XLA-backed engines override this with one batched dispatch.
-    fn step_group(&mut self, xs: &mut [Mat<S>], gs: &[Mat<S>]) -> Result<()> {
+    fn step_group(&mut self, xs: &mut [Mat<E>], gs: &[Mat<E>]) -> Result<()> {
         ensure!(
             xs.len() == gs.len(),
             "step_group: {} points vs {} gradients",
@@ -70,7 +73,7 @@ pub trait Orthoptimizer<S: Scalar = f32> {
     /// do so should also return `true` from
     /// [`Orthoptimizer::prefers_batch`] so the coordinator extracts
     /// groups as one [`BatchMat`] instead of a `Vec<Mat>`.
-    fn step_batch(&mut self, xs: &mut BatchMat<S>, gs: &BatchMat<S>) -> Result<()> {
+    fn step_batch(&mut self, xs: &mut BatchMat<E>, gs: &BatchMat<E>) -> Result<()> {
         ensure!(
             xs.shape() == gs.shape(),
             "step_batch: points {:?} vs gradients {:?}",

@@ -14,11 +14,18 @@
 //! Matmul-only ⇒ this same rule is the L1 Pallas kernel
 //! (`python/compile/kernels/pogo_step.py`); integration tests check the
 //! two engines agree.
+//!
+//! Written ONCE over a [`Field`] element (paper §2, fn. 1): on real
+//! fields the adjoints degenerate to transposes and the code is the
+//! original real POGO; on `Complex<S>` the same functions are the unitary
+//! POGO (`Skew` becomes the skew-Hermitian projection, and the
+//! landing-quartic coefficients stay real — they are Frobenius norms and
+//! real inner products of Hermitian matrices).
 
 use super::base::{BaseOpt, BaseOptKind};
 use super::quartic::solve_landing_quartic;
 use super::Orthoptimizer;
-use crate::linalg::{matmul, matmul_a_bt, Mat, Scalar};
+use crate::linalg::{matmul, matmul_a_bh, Field, Mat, Scalar};
 
 /// How λ is chosen each step.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -60,16 +67,17 @@ impl Default for PogoConfig {
     }
 }
 
-/// POGO over real Stiefel matrices.
-pub struct Pogo<S: Scalar = f32> {
+/// POGO over Stiefel matrices of any field (`f32`/`f64` real,
+/// `Complex<S>` unitary).
+pub struct Pogo<E: Field = f32> {
     cfg: PogoConfig,
-    base: BaseOpt<S>,
+    base: BaseOpt<E>,
     name: String,
     /// Landing-polynomial coefficients of the last step (telemetry).
     pub last_lambda: f64,
 }
 
-impl<S: Scalar> Pogo<S> {
+impl<E: Field> Pogo<E> {
     pub fn new(cfg: PogoConfig, n_params: usize) -> Self {
         let name = match cfg.lambda {
             LambdaPolicy::Half => format!("POGO({})", cfg.base.name()),
@@ -84,32 +92,32 @@ impl<S: Scalar> Pogo<S> {
 
     /// The POGO update on a single matrix, exposed as a free function so the
     /// property tests and the batched coordinator can drive it directly.
-    pub fn update(x: &Mat<S>, g: &Mat<S>, eta: f64, policy: LambdaPolicy) -> (Mat<S>, f64) {
+    pub fn update(x: &Mat<E>, g: &Mat<E>, eta: f64, policy: LambdaPolicy) -> (Mat<E>, f64) {
         let m = intermediate(x, g, eta);
         let (xp, lam) = normal_step(&m, policy);
         (xp, lam)
     }
 }
 
-/// `M = X − η·X Skew(XᵀG)`, small-gram form.
-pub fn intermediate<S: Scalar>(x: &Mat<S>, g: &Mat<S>, eta: f64) -> Mat<S> {
-    let xxt = matmul_a_bt(x, x); // p×p
-    let xgt = matmul_a_bt(x, g); // p×p
-    let a1 = matmul(&xxt, g); // (X Xᵀ) G : p×n
-    let a2 = matmul(&xgt, x); // (X Gᵀ) X : p×n
+/// `M = X − η·X SkewH(XᴴG)`, small-gram form (real fields: `Skew(XᵀG)`).
+pub fn intermediate<E: Field>(x: &Mat<E>, g: &Mat<E>, eta: f64) -> Mat<E> {
+    let xxh = matmul_a_bh(x, x); // p×p
+    let xgh = matmul_a_bh(x, g); // p×p
+    let a1 = matmul(&xxh, g); // (X Xᴴ) G : p×n
+    let a2 = matmul(&xgh, x); // (X Gᴴ) X : p×n
     // R = ½ (A1 − A2); M = X − η R
     let mut m = x.clone();
-    let he = S::from_f64(-0.5 * eta);
+    let he = E::from_f64(-0.5 * eta);
     m.axpy(he, &a1);
-    m.axpy(S::from_f64(0.5 * eta), &a2);
+    m.axpy(E::from_f64(0.5 * eta), &a2);
     m
 }
 
-/// The normal step `X⁺ = M + λ(I − M Mᵀ)M`, with λ per policy.
+/// The normal step `X⁺ = M + λ(I − M Mᴴ)M`, with λ per policy.
 /// Returns `(X⁺, λ)`.
-pub fn normal_step<S: Scalar>(m: &Mat<S>, policy: LambdaPolicy) -> (Mat<S>, f64) {
-    let mut c = matmul_a_bt(m, m); // p×p gram N = M Mᵀ
-    c.sub_eye_inplace(); // C = N − I  (symmetric)
+pub fn normal_step<E: Field>(m: &Mat<E>, policy: LambdaPolicy) -> (Mat<E>, f64) {
+    let mut c = matmul_a_bh(m, m); // p×p gram N = M Mᴴ
+    c.sub_eye_inplace(); // C = N − I  (Hermitian)
     let lam = match policy {
         LambdaPolicy::Half => 0.5,
         LambdaPolicy::FindRoot => {
@@ -120,41 +128,43 @@ pub fn normal_step<S: Scalar>(m: &Mat<S>, policy: LambdaPolicy) -> (Mat<S>, f64)
     // B = −C M; X⁺ = M + λ B.
     let b = matmul(&c, m);
     let mut xp = m.clone();
-    xp.axpy(S::from_f64(-lam), &b);
+    xp.axpy(E::from_f64(-lam), &b);
     (xp, lam)
 }
 
 /// Landing-polynomial coefficients `[a₄, a₃, a₂, a₁, a₀]` from the p×p
-/// gram residual `C = M Mᵀ − I` alone (Lemma 3.1 with the identities
-/// `B = −C M`, `D = M Bᵀ + B Mᵀ = −(N C + C N)`, `E = B Bᵀ = C N C`, where
-/// `N = C + I`). Everything is `O(p³)` on p×p symmetric matrices — *no*
-/// additional p×n products.
+/// gram residual `C = M Mᴴ − I` alone (Lemma 3.1 with the identities
+/// `B = −C M`, `D = M Bᴴ + B Mᴴ = −(N C + C N)`, `E = B Bᴴ = C N C`, where
+/// `N = C + I`). Everything is `O(p³)` on p×p Hermitian matrices — *no*
+/// additional p×n products. The coefficients are **real on either field**
+/// (norms and real inner products of Hermitian matrices), so the quartic
+/// solve is field-independent.
 ///
 /// Note: the published Lemma 3.1 has two typos in the λ² and λ¹ terms; we
 /// implement the exact expansion of ‖C + Dλ + Eλ²‖², which tests verify
 /// against the directly-computed squared distance.
-pub fn landing_coeffs<S: Scalar>(c: &Mat<S>) -> [f64; 5] {
+pub fn landing_coeffs<E: Field>(c: &Mat<E>) -> [f64; 5] {
     let n = {
         // N = C + I
         let mut n = c.clone();
-        n.add_diag_inplace(S::ONE);
+        n.add_diag_inplace(E::ONE);
         n
     };
     let nc = matmul(&n, c); // N C
-    // D = −(N C + (N C)ᵀ)   (since C, N symmetric ⇒ C N = (N C)ᵀ)
+    // D = −(N C + (N C)ᴴ)   (since C, N Hermitian ⇒ C N = (N C)ᴴ)
     let d = {
-        let mut d = nc.add(&nc.transpose());
-        d.scale_inplace(-S::ONE);
+        let mut d = nc.add(&nc.adjoint());
+        d.scale_inplace(-E::ONE);
         d
     };
-    // E = C N C = (N C)ᵀ C ... use E = Cᵀ(NC) with C symmetric: C·(N C).
+    // E = C N C = (N C)ᴴ C ... use E = Cᴴ(NC) with C Hermitian: C·(N C).
     let e = matmul(c, &nc);
-    // ‖C + Dλ + Eλ²‖² coefficients.
-    let a4 = e.dot(&e).to_f64();
-    let a3 = 2.0 * d.dot(&e).to_f64();
-    let a2 = d.dot(&d).to_f64() + 2.0 * c.dot(&e).to_f64();
-    let a1 = 2.0 * c.dot(&d).to_f64();
-    let a0 = c.dot(&c).to_f64();
+    // ‖C + Dλ + Eλ²‖² coefficients (real inner products).
+    let a4 = e.dot_re(&e).to_f64();
+    let a3 = 2.0 * d.dot_re(&e).to_f64();
+    let a2 = d.dot_re(&d).to_f64() + 2.0 * c.dot_re(&e).to_f64();
+    let a1 = 2.0 * c.dot_re(&d).to_f64();
+    let a0 = c.dot_re(&c).to_f64();
     [a4, a3, a2, a1, a0]
 }
 
@@ -163,8 +173,8 @@ pub fn landing_poly_eval(coeffs: &[f64; 5], lam: f64) -> f64 {
     coeffs.iter().fold(0.0, |acc, &c| acc * lam + c)
 }
 
-impl<S: Scalar> Orthoptimizer<S> for Pogo<S> {
-    fn step(&mut self, idx: usize, x: &mut Mat<S>, grad: &Mat<S>) -> anyhow::Result<()> {
+impl<E: Field> Orthoptimizer<E> for Pogo<E> {
+    fn step(&mut self, idx: usize, x: &mut Mat<E>, grad: &Mat<E>) -> anyhow::Result<()> {
         self.base.ensure_slots(idx + 1);
         let g = self.base.transform(idx, grad);
         let (xp, lam) = Pogo::update(x, &g, self.cfg.lr, self.cfg.lambda);
@@ -244,7 +254,7 @@ mod tests {
         assert!(dr <= dh + 1e-12, "root {dr} vs half {dh} (λ={lam})");
         // Compare against a dense grid minimum of the landing polynomial.
         let m = intermediate(&x, &g, eta);
-        let mut c = matmul_a_bt(&m, &m);
+        let mut c = matmul_a_bh(&m, &m);
         c.sub_eye_inplace();
         let coeffs = landing_coeffs(&c);
         let grid_min = (0..=2000)
@@ -265,7 +275,7 @@ mod tests {
         let x = stiefel::random_point_t::<f64>(4, 7, &mut rng);
         let g = M::randn(4, 7, &mut rng);
         let m = intermediate(&x, &g, 0.4);
-        let mut c = matmul_a_bt(&m, &m);
+        let mut c = matmul_a_bh(&m, &m);
         c.sub_eye_inplace();
         let coeffs = landing_coeffs(&c);
         for &lam in &[0.0, 0.25, 0.5, 1.0, 2.0] {
@@ -325,7 +335,7 @@ mod tests {
             |(x, g)| {
                 let eta = 0.5 / g.norm();
                 let m = intermediate(x, g, eta);
-                let mut c = matmul_a_bt(&m, &m);
+                let mut c = matmul_a_bh(&m, &m);
                 c.sub_eye_inplace();
                 let coeffs = landing_coeffs(&c);
                 let lam = solve_landing_quartic(coeffs);

@@ -8,10 +8,18 @@
 //! through these functions; adding an orthoptimizer touches its module
 //! plus this file only.
 //!
+//! With the `Field` abstraction, the manifold is encoded in the element
+//! type: the matmul-only methods (POGO, Landing, LandingPC, SLPG) are
+//! constructed by ONE generic match ([`construct_field`]) at `E = S` for
+//! the real Stiefel manifold and `E = Complex<S>` for the unitary one —
+//! the update-rule code is shared, not duplicated. Only the inherently
+//! real methods (QR-retraction RGD/RSDM, elementwise Adam) and the
+//! complex polar-RGD glue have domain-specific arms.
+//!
 //! Invariant (checked by `tests/spec_api.rs`): optimizer-constructing
-//! `match`es over `Method` live in this file only — [`construct`] for the
-//! per-matrix engines (real + complex) and [`build_batched_host`] for the
-//! batched host engine.
+//! `match`es over `Method` live in this file only — [`construct_field`] +
+//! [`build_host`] / [`build_unitary`] for the per-matrix engines and
+//! [`construct_batched`] for the batched host engine (both domains).
 
 use super::adam::{Adam, AdamConfig};
 use super::base::BaseOptKind;
@@ -21,10 +29,10 @@ use super::pogo::{LambdaPolicy, Pogo, PogoConfig};
 use super::rgd::{Rgd, RgdConfig};
 use super::rsdm::{Rsdm, RsdmConfig};
 use super::slpg::{Slpg, SlpgConfig};
-use super::unitary::{LandingC, PogoC, RgdC, SlpgC, UnitaryOptimizer};
+use super::unitary::RgdC;
 use super::{Method, Orthoptimizer};
 use crate::coordinator::engine::OptimizerSpec;
-use crate::linalg::Scalar;
+use crate::linalg::{Complex, Field, Scalar};
 use crate::runtime::stepper::{StepKind, XlaStepper};
 use crate::runtime::Registry;
 use anyhow::{anyhow, ensure, Result};
@@ -36,219 +44,233 @@ pub struct Capabilities {
     pub matmul_only: bool,
     /// Has a complex-Stiefel (unitary) engine.
     pub complex: bool,
-    /// Has a batched host engine (`Engine::BatchedHost`): every
-    /// matmul-only method, plus elementwise Adam. QR-retraction methods
-    /// (RGD, RSDM) are inherently per-matrix and stay on the loop engine.
+    /// Has a batched host engine (`Engine::BatchedHost`) on the real
+    /// manifold: every matmul-only method, plus elementwise Adam.
+    /// QR-retraction methods (RGD, RSDM) are inherently per-matrix and
+    /// stay on the loop engine.
     pub batched_host: bool,
+    /// Has a batched host engine on the COMPLEX manifold: exactly the
+    /// matmul-only methods (the field-generic `BatchedHost<Complex<S>>`).
+    /// Adam is real-only (not linear per Def. 1); polar-RGD is
+    /// per-matrix.
+    pub batched_host_complex: bool,
     /// XLA step programs this method can drive (empty = host-only).
     pub xla_step_kinds: &'static [StepKind],
 }
 
-/// Capability table (kept next to [`construct`] so a new method updates
-/// both in one edit).
+/// Capability table (kept next to the construction matches so a new
+/// method updates both in one edit).
 pub fn capabilities(method: Method) -> Capabilities {
     match method {
         Method::Pogo => Capabilities {
             matmul_only: true,
             complex: true,
             batched_host: true,
+            batched_host_complex: true,
             xla_step_kinds: &[StepKind::Pogo, StepKind::PogoVadam, StepKind::PogoFindRoot],
         },
         Method::Landing | Method::LandingPC => Capabilities {
             matmul_only: true,
             complex: true,
             batched_host: true,
+            batched_host_complex: true,
             xla_step_kinds: &[StepKind::Landing],
         },
         Method::Slpg => Capabilities {
             matmul_only: true,
             complex: true,
             batched_host: true,
+            batched_host_complex: true,
             xla_step_kinds: &[StepKind::Slpg],
         },
         Method::Rgd => Capabilities {
             matmul_only: false,
             complex: true,
             batched_host: false,
+            batched_host_complex: false,
             xla_step_kinds: &[],
         },
         Method::Rsdm => Capabilities {
             matmul_only: false,
             complex: false,
             batched_host: false,
+            batched_host_complex: false,
             xla_step_kinds: &[],
         },
         Method::Adam => Capabilities {
             matmul_only: false,
             complex: false,
             batched_host: true,
+            batched_host_complex: false,
             xla_step_kinds: &[],
         },
     }
 }
 
-/// Which manifold the optimizer acts on.
+/// Which manifold the optimizer acts on. With the `Field` abstraction the
+/// domain is carried by the element type; this enum remains the
+/// *capability-gate* vocabulary (error messages, batched-engine support
+/// queries).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Domain {
-    /// Real Stiefel `X Xᵀ = I` (the [`Orthoptimizer`] trait).
+    /// Real Stiefel `X Xᵀ = I` (element `f32`/`f64`).
     Real,
-    /// Complex Stiefel `X X^H = I` (the [`UnitaryOptimizer`] trait).
+    /// Complex Stiefel `X Xᴴ = I` (element `Complex<S>`).
     Complex,
 }
 
-/// A constructed optimizer, in whichever domain was requested.
-enum Built<S: Scalar> {
-    Real(Box<dyn Orthoptimizer<S>>),
-    Unitary(Box<dyn UnitaryOptimizer<S>>),
+/// Whether `method` has a batched host engine on `domain`.
+pub fn batched_host_supported(method: Method, domain: Domain) -> bool {
+    let caps = capabilities(method);
+    match domain {
+        Domain::Real => caps.batched_host,
+        Domain::Complex => caps.batched_host_complex,
+    }
 }
 
-/// THE optimizer construction match. Every host-engine optimizer in the
-/// crate — any method, any scalar, real or complex — is built here.
-fn construct<S: Scalar>(
+/// THE field-generic construction match: every matmul-only method, for
+/// any element type (real scalar or `Complex<S>`). Returns `None` for
+/// methods that need a domain-specific engine (RGD/RSDM/Adam).
+fn construct_field<E: Field>(
     spec: &OptimizerSpec,
-    domain: Domain,
     n_params: usize,
-) -> Result<Built<S>> {
-    use Domain::{Complex, Real};
-    if domain == Complex {
-        ensure!(
-            capabilities(spec.method).complex,
-            "{} has no complex-Stiefel engine",
-            spec.method.name()
-        );
-        ensure!(
-            spec.base.is_linear(),
-            "complex base optimizers must be linear (Def. 1); got {}",
-            spec.base.name()
-        );
-    }
-    Ok(match spec.method {
-        Method::Pogo => match domain {
-            Real => Built::Real(Box::new(Pogo::<S>::new(
-                PogoConfig { lr: spec.lr, lambda: spec.lambda, base: spec.base },
-                n_params,
-            ))),
-            Complex => Built::Unitary(Box::new(PogoC::<S>::new(
-                spec.lr,
-                spec.lambda,
-                spec.base,
-                n_params,
-            ))),
-        },
-        Method::Landing => match domain {
-            Real => Built::Real(Box::new(Landing::<S>::new(
-                LandingConfig {
-                    lr: spec.lr,
-                    attraction: spec.attraction,
-                    base: spec.base,
-                    ..Default::default()
-                },
-                n_params,
-            ))),
-            Complex => Built::Unitary(Box::new(LandingC::<S>::new(
-                spec.lr,
-                spec.attraction,
-                spec.base,
-                n_params,
-            ))),
-        },
-        Method::LandingPC => match domain {
-            Real => Built::Real(Box::new(Landing::<S>::new(
-                LandingConfig::landing_pc(spec.lr, spec.attraction),
-                n_params,
-            ))),
-            Complex => Built::Unitary(Box::new(LandingC::<S>::landing_pc(
-                spec.lr,
-                spec.attraction,
-                n_params,
-            ))),
-        },
-        Method::Slpg => match domain {
-            Real => Built::Real(Box::new(Slpg::<S>::new(
-                SlpgConfig { lr: spec.lr, base: spec.base },
-                n_params,
-            ))),
-            Complex => Built::Unitary(Box::new(SlpgC::<S>::new(spec.lr, n_params))),
-        },
-        Method::Rgd => match domain {
-            Real => Built::Real(Box::new(Rgd::<S>::new(
-                RgdConfig { lr: spec.lr, base: spec.base },
-                n_params,
-            ))),
-            Complex => Built::Unitary(Box::new(RgdC::<S>::new(spec.lr, n_params))),
-        },
-        Method::Rsdm => match domain {
-            Real => Built::Real(Box::new(Rsdm::<S>::new(
-                RsdmConfig {
-                    lr: spec.lr,
-                    submanifold_dim: spec.submanifold_dim,
-                    base: spec.base,
-                    seed: spec.seed,
-                    ..Default::default()
-                },
-                n_params,
-            ))),
-            Complex => unreachable!("capability gate above"),
-        },
-        Method::Adam => match domain {
-            Real => Built::Real(Box::new(Adam::<S>::new(
-                AdamConfig { lr: spec.lr, ..Default::default() },
-                n_params,
-            ))),
-            Complex => unreachable!("capability gate above"),
-        },
+) -> Option<Box<dyn Orthoptimizer<E>>> {
+    Some(match spec.method {
+        Method::Pogo => Box::new(Pogo::<E>::new(
+            PogoConfig { lr: spec.lr, lambda: spec.lambda, base: spec.base },
+            n_params,
+        )),
+        Method::Landing => Box::new(Landing::<E>::new(
+            LandingConfig {
+                lr: spec.lr,
+                attraction: spec.attraction,
+                base: spec.base,
+                ..Default::default()
+            },
+            n_params,
+        )),
+        Method::LandingPC => Box::new(Landing::<E>::new(
+            LandingConfig::landing_pc(spec.lr, spec.attraction),
+            n_params,
+        )),
+        Method::Slpg => Box::new(Slpg::<E>::new(
+            SlpgConfig { lr: spec.lr, base: spec.base },
+            n_params,
+        )),
+        Method::Rgd | Method::Rsdm | Method::Adam => return None,
     })
 }
 
-/// Build a host-engine (pure-Rust) orthoptimizer at scalar type `S`.
+/// Build a host-engine (pure-Rust) orthoptimizer at scalar type `S` on
+/// the real Stiefel manifold.
 pub fn build_host<S: Scalar>(
     spec: &OptimizerSpec,
     n_params: usize,
 ) -> Result<Box<dyn Orthoptimizer<S>>> {
-    match construct::<S>(spec, Domain::Real, n_params)? {
-        Built::Real(opt) => Ok(opt),
-        Built::Unitary(_) => unreachable!("Domain::Real yields Built::Real"),
+    if let Some(opt) = construct_field::<S>(spec, n_params) {
+        return Ok(opt);
     }
+    Ok(match spec.method {
+        Method::Rgd => Box::new(Rgd::<S>::new(
+            RgdConfig { lr: spec.lr, base: spec.base },
+            n_params,
+        )),
+        Method::Rsdm => Box::new(Rsdm::<S>::new(
+            RsdmConfig {
+                lr: spec.lr,
+                submanifold_dim: spec.submanifold_dim,
+                base: spec.base,
+                seed: spec.seed,
+                ..Default::default()
+            },
+            n_params,
+        )),
+        Method::Adam => Box::new(Adam::<S>::new(
+            AdamConfig { lr: spec.lr, ..Default::default() },
+            n_params,
+        )),
+        _ => unreachable!("construct_field covers the matmul-only methods"),
+    })
+}
+
+/// Complex-domain capability gate shared by the unitary builders.
+fn ensure_complex_capable(spec: &OptimizerSpec) -> Result<()> {
+    ensure!(
+        capabilities(spec.method).complex,
+        "{} has no complex-Stiefel engine",
+        spec.method.name()
+    );
+    ensure!(
+        spec.base.is_linear(),
+        "complex base optimizers must be linear (Def. 1); got {}",
+        spec.base.name()
+    );
+    Ok(())
+}
+
+/// Build a complex-Stiefel (unitary) optimizer at scalar type `S`: the
+/// field-generic methods instantiated at `Complex<S>`, plus the
+/// polar-retraction RGD glue.
+pub fn build_unitary<S: Scalar>(
+    spec: &OptimizerSpec,
+    n_params: usize,
+) -> Result<Box<dyn Orthoptimizer<Complex<S>>>> {
+    ensure_complex_capable(spec)?;
+    if let Some(opt) = construct_field::<Complex<S>>(spec, n_params) {
+        return Ok(opt);
+    }
+    Ok(match spec.method {
+        Method::Rgd => Box::new(RgdC::<S>::new(spec.lr, spec.base, n_params)),
+        _ => unreachable!("capability gate above"),
+    })
+}
+
+/// The batched-host construction match, field-generic like
+/// [`construct_field`]. `None` for methods with no batched rule at all.
+fn construct_batched<E: Field>(spec: &OptimizerSpec) -> Option<Box<dyn Orthoptimizer<E>>> {
+    Some(match spec.method {
+        Method::Pogo => Box::new(BatchedHost::<E>::pogo(spec.lr, spec.lambda, spec.base)),
+        Method::Landing => {
+            Box::new(BatchedHost::<E>::landing(spec.lr, spec.attraction, spec.base))
+        }
+        Method::LandingPC => {
+            Box::new(BatchedHost::<E>::landing_pc(spec.lr, spec.attraction))
+        }
+        Method::Slpg => Box::new(BatchedHost::<E>::slpg(spec.lr, spec.base)),
+        Method::Adam => Box::new(BatchedHost::<E>::adam(spec.lr)),
+        Method::Rgd | Method::Rsdm => return None,
+    })
 }
 
 /// Build the batched host engine (`Engine::BatchedHost`) for one shape
-/// group at scalar type `S`: the whole group packed into a `(B, p, n)`
-/// [`crate::linalg::BatchMat`] and stepped with batch-parallel kernels.
-/// Gated on [`Capabilities::batched_host`].
+/// group at scalar type `S` on the REAL manifold: the whole group packed
+/// into a `(B, p, n)` [`crate::linalg::BatchMat`] and stepped with
+/// batch-parallel kernels. Gated on [`Capabilities::batched_host`].
 pub fn build_batched_host<S: Scalar>(
     spec: &OptimizerSpec,
 ) -> Result<Box<dyn Orthoptimizer<S>>> {
     ensure!(
-        capabilities(spec.method).batched_host,
+        batched_host_supported(spec.method, Domain::Real),
         "{} is retraction-based (per-matrix QR) — no batched host engine; \
          use engine 'rust'",
         spec.method.name()
     );
-    Ok(match spec.method {
-        Method::Pogo => {
-            Box::new(BatchedHost::<S>::pogo(spec.lr, spec.lambda, spec.base))
-        }
-        Method::Landing => {
-            Box::new(BatchedHost::<S>::landing(spec.lr, spec.attraction, spec.base))
-        }
-        Method::LandingPC => {
-            Box::new(BatchedHost::<S>::landing_pc(spec.lr, spec.attraction))
-        }
-        Method::Slpg => Box::new(BatchedHost::<S>::slpg(spec.lr, spec.base)),
-        Method::Adam => Box::new(BatchedHost::<S>::adam(spec.lr)),
-        Method::Rgd | Method::Rsdm => unreachable!("capability gate above"),
-    })
+    Ok(construct_batched::<S>(spec).expect("capability gate above"))
 }
 
-/// Build a complex-Stiefel (unitary) optimizer at scalar type `S`.
-pub fn build_unitary<S: Scalar>(
+/// Build the batched host engine for a COMPLEX `(B, p, n)` shape group
+/// (the Fig. 8 thousands-of-unitaries regime). Gated on
+/// [`Capabilities::batched_host_complex`] plus Def. 1 linearity.
+pub fn build_batched_host_unitary<S: Scalar>(
     spec: &OptimizerSpec,
-    n_params: usize,
-) -> Result<Box<dyn UnitaryOptimizer<S>>> {
-    match construct::<S>(spec, Domain::Complex, n_params)? {
-        Built::Unitary(opt) => Ok(opt),
-        Built::Real(_) => unreachable!("Domain::Complex yields Built::Unitary"),
-    }
+) -> Result<Box<dyn Orthoptimizer<Complex<S>>>> {
+    ensure_complex_capable(spec)?;
+    ensure!(
+        batched_host_supported(spec.method, Domain::Complex),
+        "{} has no batched complex host engine; use engine 'rust'",
+        spec.method.name()
+    );
+    Ok(construct_batched::<Complex<S>>(spec).expect("capability gate above"))
 }
 
 /// Which XLA step program a spec maps to (method × base × λ-policy).
@@ -296,8 +318,12 @@ mod tests {
             let caps = capabilities(m);
             // matmul-only ⇔ has at least one XLA step program.
             assert_eq!(caps.matmul_only, !caps.xla_step_kinds.is_empty(), "{}", m.name());
-            // matmul-only ⇒ batched host engine exists.
+            // matmul-only ⇒ batched host engine exists, on BOTH domains
+            // (the batched rule is field-generic).
             assert!(!caps.matmul_only || caps.batched_host, "{}", m.name());
+            assert!(!caps.matmul_only || caps.batched_host_complex, "{}", m.name());
+            // A complex batched engine requires a complex engine at all.
+            assert!(!caps.batched_host_complex || caps.complex, "{}", m.name());
         }
     }
 
@@ -321,6 +347,32 @@ mod tests {
     }
 
     #[test]
+    fn batched_unitary_lineup_builds_and_gates() {
+        // The matmul-only methods batch on the complex manifold too.
+        for m in [Method::Pogo, Method::Landing, Method::LandingPC, Method::Slpg] {
+            let opt =
+                build_batched_host_unitary::<f32>(&OptimizerSpec::new(m, 0.05)).unwrap();
+            assert!(opt.prefers_batch(), "{}", m.name());
+            assert!(opt.name().contains("[batched]"), "{}", opt.name());
+        }
+        // Adam: no complex engine at all (not linear per Def. 1).
+        for m in [Method::Adam, Method::Rsdm] {
+            assert!(
+                build_batched_host_unitary::<f32>(&OptimizerSpec::new(m, 0.05)).is_err(),
+                "{}",
+                m.name()
+            );
+        }
+        // Polar-RGD exists complex but only per-matrix.
+        let err = build_batched_host_unitary::<f32>(&OptimizerSpec::new(Method::Rgd, 0.05))
+            .unwrap_err();
+        assert!(format!("{err}").contains("no batched complex host engine"), "{err}");
+        // Non-linear base is rejected on the complex domain.
+        let spec = OptimizerSpec::new(Method::Pogo, 0.05).with_base(BaseOptKind::adam());
+        assert!(build_batched_host_unitary::<f32>(&spec).is_err());
+    }
+
+    #[test]
     fn step_kind_selection_matches_capabilities() {
         let pogo = OptimizerSpec::new(Method::Pogo, 0.1);
         assert_eq!(xla_step_kind(&pogo).unwrap(), StepKind::Pogo);
@@ -341,6 +393,9 @@ mod tests {
         assert!(build_unitary::<f32>(&spec, 1).is_err());
         let spec = OptimizerSpec::new(Method::Adam, 0.1);
         assert!(build_unitary::<f32>(&spec, 1).is_err());
+        // Linear-base gate (Def. 1).
+        let spec = OptimizerSpec::new(Method::Pogo, 0.1).with_base(BaseOptKind::adam());
+        assert!(build_unitary::<f32>(&spec, 1).is_err());
     }
 
     #[test]
@@ -350,5 +405,14 @@ mod tests {
             let opt = build_unitary::<f32>(&OptimizerSpec::new(m, 0.05), 4).unwrap();
             assert!(opt.lr() > 0.0, "{}", m.name());
         }
+    }
+
+    #[test]
+    fn domain_support_table() {
+        assert!(batched_host_supported(Method::Pogo, Domain::Real));
+        assert!(batched_host_supported(Method::Pogo, Domain::Complex));
+        assert!(batched_host_supported(Method::Adam, Domain::Real));
+        assert!(!batched_host_supported(Method::Adam, Domain::Complex));
+        assert!(!batched_host_supported(Method::Rgd, Domain::Complex));
     }
 }

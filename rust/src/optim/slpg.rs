@@ -13,7 +13,7 @@
 
 use super::base::{BaseOpt, BaseOptKind};
 use super::Orthoptimizer;
-use crate::linalg::{matmul, matmul_a_bt, Mat, Scalar};
+use crate::linalg::{matmul, matmul_a_bh, Field, Mat};
 
 /// SLPG hyperparameters.
 #[derive(Clone, Copy, Debug)]
@@ -28,39 +28,40 @@ impl Default for SlpgConfig {
     }
 }
 
-/// SLPG over real Stiefel matrices.
-pub struct Slpg<S: Scalar = f32> {
+/// SLPG over Stiefel matrices of any field (real or complex; `Sym`
+/// becomes the Hermitian-symmetric part — same code, §2 fn. 1).
+pub struct Slpg<E: Field = f32> {
     cfg: SlpgConfig,
-    base: BaseOpt<S>,
+    base: BaseOpt<E>,
     name: String,
 }
 
-impl<S: Scalar> Slpg<S> {
+impl<E: Field> Slpg<E> {
     pub fn new(cfg: SlpgConfig, n_params: usize) -> Self {
         Slpg { cfg, base: BaseOpt::new(cfg.base, n_params), name: "SLPG".to_string() }
     }
 
     /// One SLPG update.
-    pub fn update(x: &Mat<S>, g: &Mat<S>, eta: f64) -> Mat<S> {
-        // D = G − Sym(G Xᵀ) X   (Euclidean-metric Riemannian gradient)
-        let gxt = matmul_a_bt(g, x); // p×p
-        let sym = gxt.sym();
+    pub fn update(x: &Mat<E>, g: &Mat<E>, eta: f64) -> Mat<E> {
+        // D = G − SymH(G Xᴴ) X   (Euclidean-metric Riemannian gradient)
+        let gxh = matmul_a_bh(g, x); // p×p
+        let sym = gxh.sym_h();
         let sx = matmul(&sym, x);
         let mut y = x.clone();
-        y.axpy(S::from_f64(-eta), g);
-        y.axpy(S::from_f64(eta), &sx);
-        // Normal step: X⁺ = Y − ½ (Y Yᵀ − I) Y.
-        let mut c = matmul_a_bt(&y, &y);
+        y.axpy(E::from_f64(-eta), g);
+        y.axpy(E::from_f64(eta), &sx);
+        // Normal step: X⁺ = Y − ½ (Y Yᴴ − I) Y.
+        let mut c = matmul_a_bh(&y, &y);
         c.sub_eye_inplace();
         let cy = matmul(&c, &y);
         let mut xp = y;
-        xp.axpy(S::from_f64(-0.5), &cy);
+        xp.axpy(E::from_f64(-0.5), &cy);
         xp
     }
 }
 
-impl<S: Scalar> Orthoptimizer<S> for Slpg<S> {
-    fn step(&mut self, idx: usize, x: &mut Mat<S>, grad: &Mat<S>) -> anyhow::Result<()> {
+impl<E: Field> Orthoptimizer<E> for Slpg<E> {
+    fn step(&mut self, idx: usize, x: &mut Mat<E>, grad: &Mat<E>) -> anyhow::Result<()> {
         self.base.ensure_slots(idx + 1);
         let g = self.base.transform(idx, grad);
         *x = Slpg::update(x, &g, self.cfg.lr);

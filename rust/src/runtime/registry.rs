@@ -142,7 +142,7 @@ impl Registry {
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = client::with_client(|client| {
             client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))
-        })?;
+        })??;
         log::debug!("compiled {name} in {:.0}ms", t.millis());
         let exe = Rc::new(Executable::new(exe, meta.clone()));
         self.cache.borrow_mut().insert(name.to_string(), exe.clone());

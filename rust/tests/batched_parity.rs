@@ -10,7 +10,7 @@
 //! coordinator path for the new engine.
 
 use pogo::coordinator::{OptimSession, OptimizerSpec, ParamStore};
-use pogo::linalg::MatF;
+use pogo::linalg::{CMatF, Complex, Field, MatF};
 use pogo::manifold::stiefel;
 use pogo::optim::base::BaseOptKind;
 use pogo::optim::pogo::LambdaPolicy;
@@ -130,6 +130,148 @@ fn slpg_parity() {
 fn adam_parity() {
     // Batched elementwise Adam state (first + second moments).
     assert_parity(OptimizerSpec::new(Method::Adam, 0.01));
+}
+
+// ---------------------------------------------------------------------------
+// Complex (unitary) parity: the SAME batched engine at E = Complex<f32>.
+// ---------------------------------------------------------------------------
+
+/// Complex shape regimes: a Born-core-sized block (see
+/// `experiments::born::core_shapes`), a tiny square unitary, and a wide
+/// isometry.
+const C_SHAPES: &[(usize, usize)] = &[(2, 2), (8, 16), (4, 8)];
+
+/// Max elementwise |batched − loop| (Frobenius, per matrix) after
+/// stepping both unitary engines from identical state with identical
+/// complex gradients.
+fn max_divergence_c(spec: &OptimizerSpec, p: usize, n: usize, b: usize, seed: u64) -> f64 {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut xs_loop: Vec<CMatF> =
+        (0..b).map(|_| stiefel::random_point_complex::<f32>(p, n, &mut rng)).collect();
+    let mut xs_batched = xs_loop.clone();
+    let grads: Vec<Vec<CMatF>> = (0..STEPS)
+        .map(|_| {
+            (0..b)
+                .map(|_| {
+                    let g = CMatF::randn(p, n, &mut rng);
+                    let nn = g.norm();
+                    g.scale(Complex::from_f64(0.5 / nn as f64))
+                })
+                .collect()
+        })
+        .collect();
+
+    let mut opt_loop = spec
+        .with_engine(Engine::Rust)
+        .build_unitary::<f32>(b)
+        .expect("unitary loop engine builds");
+    let mut opt_batched = spec
+        .with_engine(Engine::BatchedHost)
+        .build_unitary::<f32>(b)
+        .expect("unitary batched engine builds");
+    assert!(!opt_loop.prefers_batch());
+    assert!(opt_batched.prefers_batch());
+
+    for gs in &grads {
+        opt_loop.step_group(&mut xs_loop, gs).unwrap();
+        opt_batched.step_group(&mut xs_batched, gs).unwrap();
+    }
+    let mut worst = 0.0f64;
+    for (xl, xb) in xs_loop.iter().zip(&xs_batched) {
+        assert!(xb.all_finite());
+        worst = worst.max(xl.sub(xb).norm() as f64);
+    }
+    worst
+}
+
+/// Run the complex (shape × batch) grid for one spec.
+fn assert_parity_c(spec: OptimizerSpec) {
+    for &(p, n) in C_SHAPES {
+        for &b in BATCHES {
+            let d = max_divergence_c(&spec, p, n, b, (p * 1000 + n * 10 + b) as u64);
+            assert!(
+                d <= 1e-5,
+                "unitary {} diverged by {d} at ({p}, {n}) B={b}",
+                spec.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn unitary_pogo_sgd_parity() {
+    assert_parity_c(OptimizerSpec::new(Method::Pogo, 0.1));
+}
+
+#[test]
+fn unitary_pogo_vadam_parity() {
+    // Batched per-matrix scalar second-moment state on the complex field.
+    assert_parity_c(OptimizerSpec::new(Method::Pogo, 0.2).with_base(BaseOptKind::vadam()));
+}
+
+#[test]
+fn unitary_pogo_find_root_parity() {
+    // Per-matrix quartic roots from the batched Hermitian gram residuals
+    // (the coefficients stay real on the complex field — §2 fn. 1).
+    assert_parity_c(OptimizerSpec::new(Method::Pogo, 0.1).with_lambda(LambdaPolicy::FindRoot));
+}
+
+#[test]
+fn unitary_landing_parity() {
+    assert_parity_c(
+        OptimizerSpec::new(Method::Landing, 0.1).with_base(BaseOptKind::momentum(0.1)),
+    );
+}
+
+#[test]
+fn unitary_landing_pc_parity() {
+    assert_parity_c(OptimizerSpec::new(Method::LandingPC, 0.5).with_attraction(1.0));
+}
+
+#[test]
+fn unitary_slpg_parity() {
+    assert_parity_c(OptimizerSpec::new(Method::Slpg, 0.05));
+}
+
+#[test]
+fn unitary_batched_orthogonality_over_100_steps() {
+    // ‖X Xᴴ − I‖ ≤ 1e-3 for every core after 100 batched unitary steps
+    // (Thm 3.5 regime: ‖G‖ = 0.5, η = 0.2 ⇒ ξ = 0.1).
+    let (p, n, b) = (8, 16, 7);
+    let spec = OptimizerSpec::new(Method::Pogo, 0.2)
+        .with_base(BaseOptKind::vadam())
+        .with_engine(Engine::BatchedHost);
+    let mut rng = Rng::seed_from_u64(43);
+    let mut xs: Vec<CMatF> =
+        (0..b).map(|_| stiefel::random_point_complex::<f32>(p, n, &mut rng)).collect();
+    let mut opt = spec.build_unitary::<f32>(b).unwrap();
+    for _ in 0..100 {
+        let gs: Vec<CMatF> = (0..b)
+            .map(|_| {
+                let g = CMatF::randn(p, n, &mut rng);
+                let nn = g.norm();
+                g.scale(Complex::from_f64(0.5 / nn as f64))
+            })
+            .collect();
+        opt.step_group(&mut xs, &gs).unwrap();
+    }
+    for x in &xs {
+        let d = stiefel::distance_complex(x);
+        assert!(d <= 1e-3, "left the complex manifold: {d}");
+    }
+}
+
+#[test]
+fn spec_round_trips_complex_batched_host_engine() {
+    // A "batched-host" spec builds the batched engine on BOTH domains
+    // from the same JSON.
+    let spec = OptimizerSpec::new(Method::Slpg, 0.05).with_engine(Engine::BatchedHost);
+    let text = spec.to_json().to_string();
+    assert!(text.contains("batched-host"), "{text}");
+    let back = OptimizerSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back, spec);
+    assert!(back.build::<f32>(None, (4, 3, 3)).unwrap().prefers_batch());
+    assert!(back.build_unitary::<f32>(4).unwrap().prefers_batch());
 }
 
 #[test]

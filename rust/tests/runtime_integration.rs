@@ -175,10 +175,10 @@ fn complex_pogo_artifact_matches_rust() {
     let pack = |f: &dyn Fn(&pogo::linalg::CMatF) -> Vec<f32>| -> Vec<f32> {
         xs.iter().flat_map(|m| f(m)).collect()
     };
-    let xr = pack(&|m| m.re.as_slice().to_vec());
-    let xi = pack(&|m| m.im.as_slice().to_vec());
-    let gr: Vec<f32> = gs.iter().flat_map(|m| m.re.as_slice().to_vec()).collect();
-    let gi: Vec<f32> = gs.iter().flat_map(|m| m.im.as_slice().to_vec()).collect();
+    let xr = pack(&|m| m.re_vec());
+    let xi = pack(&|m| m.im_vec());
+    let gr: Vec<f32> = gs.iter().flat_map(|m| m.re_vec()).collect();
+    let gi: Vec<f32> = gs.iter().flat_map(|m| m.im_vec()).collect();
 
     let exe = reg.get("pogo_step_complex_test").unwrap();
     let dims = vec![b, p, n];
@@ -204,10 +204,10 @@ fn complex_pogo_artifact_matches_rust() {
         let pn = p * n;
         let got_r = &out_r[i * pn..(i + 1) * pn];
         let got_i = &out_i[i * pn..(i + 1) * pn];
-        for (a, b) in got_r.iter().zip(xp.re.as_slice()) {
+        for (a, b) in got_r.iter().zip(&xp.re_vec()) {
             assert!((a - b).abs() < 5e-4, "re mismatch {a} vs {b}");
         }
-        for (a, b) in got_i.iter().zip(xp.im.as_slice()) {
+        for (a, b) in got_i.iter().zip(&xp.im_vec()) {
             assert!((a - b).abs() < 5e-4, "im mismatch {a} vs {b}");
         }
     }
