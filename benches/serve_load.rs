@@ -1,0 +1,98 @@
+//! Load generator for the serve daemon: an in-process `pogo serve` on an
+//! ephemeral loopback port, hammered by 1/4/16 concurrent clients each
+//! submitting B = 1024 POGO jobs (the Fig. 1 batch regime on the
+//! batched-host engine) and blocking until `done`.
+//!
+//! Emits `BENCH_serve.json` — end-to-end jobs/s plus p50/p95 submit→done
+//! latency per concurrency level (redirect: `POGO_BENCH_JSON_SERVE`;
+//! `POGO_BENCH_QUICK=1` shrinks budgets for CI's `serve-smoke` job,
+//! which gates on the file being well-formed).
+
+use pogo::bench::ServeLoadRow;
+use pogo::coordinator::OptimizerSpec;
+use pogo::optim::{Engine, Method};
+use pogo::serve::{JobSpec, ProblemKind, ServeClient, ServeConfig, Server};
+use pogo::util::Stopwatch;
+use std::sync::Mutex;
+use std::time::Duration;
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn job_spec(client: usize, j: usize, steps: usize) -> JobSpec {
+    let mut spec = JobSpec::new(ProblemKind::Quartic, 1024, 3, 3);
+    spec.name = format!("load-c{client}-j{j}");
+    spec.steps = steps;
+    spec.seed = (client as u64) * 1009 + j as u64;
+    spec.optimizer = OptimizerSpec::new(Method::Pogo, 0.05).with_engine(Engine::BatchedHost);
+    spec
+}
+
+fn main() {
+    pogo::util::logging::init();
+    let quick = std::env::var("POGO_BENCH_QUICK").is_ok();
+    let steps = if quick { 5 } else { 50 };
+    let jobs_per_client = if quick { 2 } else { 4 };
+
+    let server = Server::start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: pogo::util::pool::num_threads().clamp(2, 4),
+        capacity: 1024,
+        state_dir: None,
+    })
+    .expect("starting in-process serve daemon");
+    let addr = server.addr().to_string();
+    println!("serve_load: daemon on {addr}, B=1024 POGO[batched] x {steps} steps");
+
+    let mut rows: Vec<ServeLoadRow> = Vec::new();
+    for &clients in &[1usize, 4, 16] {
+        let latencies: Mutex<Vec<f64>> = Mutex::new(Vec::new());
+        let wall = Stopwatch::start();
+        std::thread::scope(|scope| {
+            for c in 0..clients {
+                let addr = addr.clone();
+                let latencies = &latencies;
+                scope.spawn(move || {
+                    let client = ServeClient::new(addr);
+                    for j in 0..jobs_per_client {
+                        let spec = job_spec(c, j, steps);
+                        let t = Stopwatch::start();
+                        let id = client.submit(&spec).expect("submit");
+                        client
+                            .wait_result(id, Duration::from_secs(600))
+                            .expect("job should reach done");
+                        latencies.lock().unwrap().push(t.seconds() * 1e3);
+                    }
+                });
+            }
+        });
+        let wall_s = wall.seconds();
+        let mut lat = latencies.into_inner().unwrap();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let jobs = clients * jobs_per_client;
+        let row = ServeLoadRow {
+            clients,
+            jobs,
+            jobs_per_s: jobs as f64 / wall_s,
+            p50_ms: percentile(&lat, 0.50),
+            p95_ms: percentile(&lat, 0.95),
+        };
+        println!(
+            "  {:>2} client(s): {:>4} jobs in {:6.2}s  ->  {:7.2} jobs/s, p50 {:7.1} ms, p95 {:7.1} ms",
+            row.clients, row.jobs, wall_s, row.jobs_per_s, row.p50_ms, row.p95_ms
+        );
+        rows.push(row);
+    }
+
+    let default_json = pogo::repo_root().join("BENCH_serve.json");
+    match pogo::bench::write_serve_json(&default_json, &rows) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("failed to write BENCH_serve.json: {e}"),
+    }
+    server.shutdown();
+}

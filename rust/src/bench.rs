@@ -189,16 +189,13 @@ pub fn scale_json(records: &[ScaleRecord], speedups: &[(usize, f64)]) -> crate::
     ])
 }
 
-/// Write a batched-vs-loop report to `default_path` — unless `env_var`
-/// is set, which redirects the output wherever the caller's environment
-/// wants it (CI points it at the workspace root before uploading the
-/// artifact). Every emitter routes through here so the format and the
-/// redirect cannot drift. Returns the path actually written.
-pub fn write_bench_json(
+/// Resolve where a BENCH_*.json report lands: `env_var` redirects the
+/// output wherever the caller's environment wants it (CI points it at the
+/// workspace root before uploading the artifact), otherwise
+/// `default_path`. Parent directories are created.
+fn resolve_bench_path(
     env_var: &str,
     default_path: &std::path::Path,
-    records: &[ScaleRecord],
-    speedups: &[(usize, f64)],
 ) -> std::io::Result<std::path::PathBuf> {
     let path = match std::env::var(env_var) {
         Ok(p) => std::path::PathBuf::from(p),
@@ -209,6 +206,19 @@ pub fn write_bench_json(
             std::fs::create_dir_all(dir)?;
         }
     }
+    Ok(path)
+}
+
+/// Write a batched-vs-loop report to `default_path` (redirect: `env_var`).
+/// Every emitter routes through here so the format and the redirect
+/// cannot drift. Returns the path actually written.
+pub fn write_bench_json(
+    env_var: &str,
+    default_path: &std::path::Path,
+    records: &[ScaleRecord],
+    speedups: &[(usize, f64)],
+) -> std::io::Result<std::path::PathBuf> {
+    let path = resolve_bench_path(env_var, default_path)?;
     std::fs::write(&path, scale_json(records, speedups).to_string_pretty() + "\n")?;
     Ok(path)
 }
@@ -232,6 +242,55 @@ pub fn write_born_json(
     speedups: &[(usize, f64)],
 ) -> std::io::Result<std::path::PathBuf> {
     write_bench_json("POGO_BENCH_JSON_BORN", default_path, records, speedups)
+}
+
+/// One row of the serve-daemon load benchmark (`BENCH_serve.json`):
+/// end-to-end job throughput and latency at one client concurrency.
+#[derive(Clone, Debug)]
+pub struct ServeLoadRow {
+    /// Concurrent clients submitting jobs.
+    pub clients: usize,
+    /// Total jobs completed at this concurrency.
+    pub jobs: usize,
+    /// Jobs completed per wall-clock second (all clients together).
+    pub jobs_per_s: f64,
+    /// Median submit→done latency, milliseconds.
+    pub p50_ms: f64,
+    /// 95th-percentile submit→done latency, milliseconds.
+    pub p95_ms: f64,
+}
+
+/// Machine-readable serve load report. CI's `serve-smoke` job gates on
+/// this file being well-formed (rows present, positive throughput).
+pub fn serve_json(rows: &[ServeLoadRow]) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    Json::obj(vec![
+        ("unit", Json::str("jobs_per_s_and_latency_ms")),
+        ("threads", Json::num(crate::util::pool::num_threads() as f64)),
+        (
+            "rows",
+            Json::arr(rows.iter().map(|r| {
+                Json::obj(vec![
+                    ("clients", Json::num(r.clients as f64)),
+                    ("jobs", Json::num(r.jobs as f64)),
+                    ("jobs_per_s", Json::num(r.jobs_per_s)),
+                    ("p50_ms", Json::num(r.p50_ms)),
+                    ("p95_ms", Json::num(r.p95_ms)),
+                ])
+            })),
+        ),
+    ])
+}
+
+/// `BENCH_serve.json` (daemon load generator; redirect:
+/// `POGO_BENCH_JSON_SERVE`). Emitted by `cargo bench --bench serve_load`.
+pub fn write_serve_json(
+    default_path: &std::path::Path,
+    rows: &[ServeLoadRow],
+) -> std::io::Result<std::path::PathBuf> {
+    let path = resolve_bench_path("POGO_BENCH_JSON_SERVE", default_path)?;
+    std::fs::write(&path, serve_json(rows).to_string_pretty() + "\n")?;
+    Ok(path)
 }
 
 #[cfg(test)]
@@ -259,6 +318,26 @@ mod tests {
         assert_eq!(j.get("unit").as_str(), Some("us_per_matrix_step"));
         assert_eq!(j.get("records").as_arr().unwrap().len(), 2);
         assert_eq!(j.get("speedup_batched_vs_loop").get("64").as_f64(), Some(4.0));
+        // Round-trips through the in-crate parser (what CI's jq reads).
+        let back = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back, j);
+    }
+
+    #[test]
+    fn serve_json_shape() {
+        let rows = vec![ServeLoadRow {
+            clients: 4,
+            jobs: 8,
+            jobs_per_s: 12.5,
+            p50_ms: 40.0,
+            p95_ms: 90.0,
+        }];
+        let j = serve_json(&rows);
+        assert_eq!(j.get("unit").as_str(), Some("jobs_per_s_and_latency_ms"));
+        let arr = j.get("rows").as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("clients").as_usize(), Some(4));
+        assert_eq!(arr[0].get("jobs_per_s").as_f64(), Some(12.5));
         // Round-trips through the in-crate parser (what CI's jq reads).
         let back = crate::util::json::Json::parse(&j.to_string()).unwrap();
         assert_eq!(back, j);

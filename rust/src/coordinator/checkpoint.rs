@@ -1,20 +1,59 @@
 //! Checkpointing: save/restore a `ParamStore` (and optimizer step count)
-//! to disk, so long training runs survive restarts — table stakes for a
-//! deployable trainer.
+//! to disk, so long training runs — and the serve daemon's resumable jobs
+//! — survive restarts.
 //!
-//! Format: a small JSON header (names, shapes, constraints, keys, step)
-//! followed by one raw little-endian f32 blob per parameter, all in a
-//! single file. The header carries a blob checksum so truncated/corrupt
-//! checkpoints are rejected rather than silently loaded.
+//! Format (`POGO-CKPT-v1`): a small JSON header (dtype, names, shapes,
+//! constraints, keys, step) followed by one raw little-endian scalar blob
+//! per parameter, all in a single file. The header carries a blob checksum
+//! so truncated/corrupt checkpoints are rejected rather than silently
+//! loaded, and a `dtype` tag (`f32`/`f64`) so a store is never silently
+//! reinterpreted at the wrong precision: [`load_t`] refuses a dtype
+//! mismatch with a clear error. Headers written before the tag existed
+//! carry implicit `f32` (the only dtype v1 ever stored).
 
 use super::param_store::{Constraint, ParamStore};
-use crate::linalg::MatF;
+use crate::linalg::{Mat, Scalar};
 use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
 use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &str = "POGO-CKPT-v1";
+
+/// A real scalar type the checkpoint format can store: adds the on-disk
+/// dtype tag and little-endian (de)serialization to [`Scalar`].
+pub trait CkptDtype: Scalar {
+    /// Header tag (`"f32"` / `"f64"`).
+    const DTYPE: &'static str;
+    /// Bytes per scalar on disk.
+    const BYTES: usize;
+    fn write_le(self, out: &mut Vec<u8>);
+    fn read_le(bytes: &[u8]) -> Self;
+}
+
+impl CkptDtype for f32 {
+    const DTYPE: &'static str = "f32";
+    const BYTES: usize = 4;
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn read_le(bytes: &[u8]) -> Self {
+        f32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+}
+
+impl CkptDtype for f64 {
+    const DTYPE: &'static str = "f64";
+    const BYTES: usize = 8;
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn read_le(bytes: &[u8]) -> Self {
+        f64::from_le_bytes([
+            bytes[0], bytes[1], bytes[2], bytes[3], bytes[4], bytes[5], bytes[6], bytes[7],
+        ])
+    }
+}
 
 /// FNV-1a over the raw bytes (cheap integrity check, not cryptographic).
 fn fnv1a(bytes: &[u8]) -> u64 {
@@ -26,20 +65,31 @@ fn fnv1a(bytes: &[u8]) -> u64 {
     h
 }
 
-/// Save the store (+ step counter) to `path`.
+/// Save an f32 store (+ step counter) to `path` — the experiment default.
 pub fn save(store: &ParamStore, step: usize, path: &Path) -> Result<()> {
+    save_t::<f32>(store, step, path)
+}
+
+/// Load an f32 checkpoint; returns (store, step).
+pub fn load(path: &Path) -> Result<(ParamStore, usize)> {
+    load_t::<f32>(path)
+}
+
+/// Save a store (+ step counter) at any checkpointable dtype.
+pub fn save_t<S: CkptDtype>(store: &ParamStore<S>, step: usize, path: &Path) -> Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
-    // Blob: all parameters' f32 data, in registration order.
+    // Blob: all parameters' scalar data, in registration order.
     let mut blob: Vec<u8> = Vec::new();
     for p in store.params() {
         for &v in p.mat.as_slice() {
-            blob.extend_from_slice(&v.to_le_bytes());
+            v.write_le(&mut blob);
         }
     }
     let header = Json::obj(vec![
         ("magic", Json::str(MAGIC)),
+        ("dtype", Json::str(S::DTYPE)),
         ("step", Json::num(step as f64)),
         ("checksum", Json::str(format!("{:016x}", fnv1a(&blob)))),
         (
@@ -62,28 +112,55 @@ pub fn save(store: &ParamStore, step: usize, path: &Path) -> Result<()> {
         ),
     ]);
     let header_text = header.to_string();
-    let mut f = std::fs::File::create(path)
-        .with_context(|| format!("creating {}", path.display()))?;
-    // Layout: u32 header length, header bytes, blob.
-    f.write_all(&(header_text.len() as u32).to_le_bytes())?;
-    f.write_all(header_text.as_bytes())?;
-    f.write_all(&blob)?;
+    // Write-then-rename so a crash mid-save never destroys the previous
+    // good checkpoint (the serve daemon's resume path depends on this).
+    let tmp = path.with_file_name(format!(
+        "{}.tmp",
+        path.file_name().and_then(|n| n.to_str()).unwrap_or("ckpt")
+    ));
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        // Layout: u32 header length, header bytes, blob.
+        f.write_all(&(header_text.len() as u32).to_le_bytes())?;
+        f.write_all(header_text.as_bytes())?;
+        f.write_all(&blob)?;
+        f.sync_all().ok();
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} into place", tmp.display()))?;
     Ok(())
 }
 
-/// Load a checkpoint; returns (store, step).
-pub fn load(path: &Path) -> Result<(ParamStore, usize)> {
+/// Load a checkpoint at dtype `S`; returns (store, step). A checkpoint
+/// written at a different dtype is rejected (convert explicitly via
+/// `Mat::cast` after loading at the stored dtype — never reinterpreted).
+pub fn load_t<S: CkptDtype>(path: &Path) -> Result<(ParamStore<S>, usize)> {
     let mut f = std::fs::File::open(path)
         .with_context(|| format!("opening {}", path.display()))?;
     let mut len_buf = [0u8; 4];
-    f.read_exact(&mut len_buf)?;
+    f.read_exact(&mut len_buf)
+        .with_context(|| format!("reading header length of {}", path.display()))?;
     let hlen = u32::from_le_bytes(len_buf) as usize;
+    if hlen > 16 << 20 {
+        return Err(anyhow!("implausible checkpoint header length {hlen} (corrupt file?)"));
+    }
     let mut header_bytes = vec![0u8; hlen];
-    f.read_exact(&mut header_bytes)?;
+    f.read_exact(&mut header_bytes)
+        .with_context(|| format!("reading {hlen}-byte header of {}", path.display()))?;
     let header = Json::parse(std::str::from_utf8(&header_bytes)?)
         .map_err(|e| anyhow!("corrupt checkpoint header: {e}"))?;
     if header.get("magic").as_str() != Some(MAGIC) {
         return Err(anyhow!("not a POGO checkpoint (bad magic)"));
+    }
+    // Headers written before the dtype tag existed are implicitly f32.
+    let dtype = header.get("dtype").as_str().unwrap_or("f32");
+    if dtype != S::DTYPE {
+        return Err(anyhow!(
+            "checkpoint dtype is {dtype} but the load requested {} — refusing to \
+             reinterpret; load at the stored dtype and cast explicitly",
+            S::DTYPE
+        ));
     }
     let step = header.get("step").as_usize().unwrap_or(0);
     let mut blob = Vec::new();
@@ -101,17 +178,16 @@ pub fn load(path: &Path) -> Result<(ParamStore, usize)> {
         let rows = p.get("rows").as_usize().ok_or_else(|| anyhow!("bad rows"))?;
         let cols = p.get("cols").as_usize().ok_or_else(|| anyhow!("bad cols"))?;
         let n = rows * cols;
-        let end = off + 4 * n;
+        let end = off + S::BYTES * n;
         if end > blob.len() {
             return Err(anyhow!("checkpoint blob too short for '{name}'"));
         }
         let mut data = Vec::with_capacity(n);
         for i in 0..n {
-            let b = &blob[off + 4 * i..off + 4 * i + 4];
-            data.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            data.push(S::read_le(&blob[off + S::BYTES * i..off + S::BYTES * (i + 1)]));
         }
         off = end;
-        let mat = MatF::from_vec(rows, cols, data);
+        let mat = Mat::<S>::from_vec(rows, cols, data);
         match p.get("constraint").as_str() {
             Some("stiefel") => {
                 let key = p.get("key").as_str().unwrap_or("").to_string();
@@ -131,6 +207,7 @@ pub fn load(path: &Path) -> Result<(ParamStore, usize)> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::{MatD, MatF};
     use crate::manifold::stiefel;
     use crate::rng::Rng;
 
@@ -167,6 +244,41 @@ mod tests {
     }
 
     #[test]
+    fn f64_roundtrip_bit_exact() {
+        let mut rng = Rng::seed_from_u64(7);
+        let mut store: ParamStore<f64> = ParamStore::new();
+        store.add_stiefel_group("w", 2, 3, 7, &mut rng);
+        store.add_free("b", MatD::randn(4, 4, &mut rng));
+        let path = tmp("f64");
+        save_t::<f64>(&store, 9, &path).unwrap();
+        let (back, step) = load_t::<f64>(&path).unwrap();
+        assert_eq!(step, 9);
+        for (a, b) in store.params().iter().zip(back.params()) {
+            assert_eq!(a.mat, b.mat, "bit-exact f64 restore for {}", a.name);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected_both_ways() {
+        let store = sample_store();
+        let p32 = tmp("dtype32");
+        save(&store, 1, &p32).unwrap();
+        let err = load_t::<f64>(&p32).unwrap_err();
+        assert!(format!("{err:#}").contains("dtype is f32"), "{err:#}");
+
+        let mut rng = Rng::seed_from_u64(8);
+        let mut s64: ParamStore<f64> = ParamStore::new();
+        s64.add_stiefel_group("w", 1, 2, 4, &mut rng);
+        let p64 = tmp("dtype64");
+        save_t::<f64>(&s64, 1, &p64).unwrap();
+        let err = load(&p64).unwrap_err();
+        assert!(format!("{err:#}").contains("dtype is f64"), "{err:#}");
+        std::fs::remove_file(&p32).ok();
+        std::fs::remove_file(&p64).ok();
+    }
+
+    #[test]
     fn corrupt_blob_rejected() {
         let store = sample_store();
         let path = tmp("corrupt");
@@ -176,7 +288,8 @@ mod tests {
         let n = bytes.len();
         bytes[n - 3] ^= 0xFF;
         std::fs::write(&path, &bytes).unwrap();
-        assert!(load(&path).is_err());
+        let err = load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("checksum"), "{err:#}");
         std::fs::remove_file(&path).ok();
     }
 
@@ -188,6 +301,31 @@ mod tests {
         let bytes = std::fs::read(&path).unwrap();
         std::fs::write(&path, &bytes[..bytes.len() - 16]).unwrap();
         assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncated_mid_header_rejected_with_context() {
+        let store = sample_store();
+        let path = tmp("trunc_header");
+        save(&store, 1, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // Keep the length word plus a sliver of the header.
+        std::fs::write(&path, &bytes[..10]).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("header"), "{err:#}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn garbage_header_json_rejected() {
+        let path = tmp("garbage");
+        let header = b"not json at all";
+        let mut bytes = (header.len() as u32).to_le_bytes().to_vec();
+        bytes.extend_from_slice(header);
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("corrupt checkpoint header"), "{err:#}");
         std::fs::remove_file(&path).ok();
     }
 

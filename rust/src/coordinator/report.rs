@@ -2,6 +2,11 @@
 //! paper-style comparison tables (`pogo report`). Lets a user inspect any
 //! past run without re-running experiments, and is what EXPERIMENTS.md's
 //! tables were produced from.
+//!
+//! Also picks up the machine-readable benchmark reports —
+//! `BENCH_scale.json`, `BENCH_born.json` and `BENCH_serve.json` — from
+//! the results directory or the repo root, so one `pogo report` shows
+//! training series and engine/daemon performance side by side.
 
 use crate::util::json::Json;
 use anyhow::{Context, Result};
@@ -104,7 +109,8 @@ pub fn report(dir: &Path, filter: Option<&str>) -> Result<()> {
             Err(err) => eprintln!("skipping {}: {err}", path.display()),
         }
     }
-    if by_experiment.is_empty() {
+    let bench_lines = bench_report_lines(dir);
+    if by_experiment.is_empty() && bench_lines.is_empty() {
         println!("no series found in {} — run an experiment first", dir.display());
         return Ok(());
     }
@@ -141,7 +147,56 @@ pub fn report(dir: &Path, filter: Option<&str>) -> Result<()> {
             println!();
         }
     }
+    if !bench_lines.is_empty() {
+        println!("\n== benchmark reports (BENCH_*.json) ==");
+        for line in &bench_lines {
+            println!("{line}");
+        }
+    }
     Ok(())
+}
+
+/// Printable summaries of every `BENCH_*.json` found in `dir` or the
+/// repo root (deduplicated when they are the same directory).
+pub fn bench_report_lines(dir: &Path) -> Vec<String> {
+    let mut lines = Vec::new();
+    let mut seen = std::collections::BTreeSet::new();
+    for d in [dir.to_path_buf(), crate::repo_root()] {
+        for name in ["BENCH_scale.json", "BENCH_born.json", "BENCH_serve.json"] {
+            let path = d.join(name);
+            if !path.is_file() || !seen.insert(path.clone()) {
+                continue;
+            }
+            match Json::parse_file(&path) {
+                Ok(j) => lines.extend(summarize_bench(name, &path, &j)),
+                Err(e) => lines.push(format!("{}: unreadable ({e:#})", path.display())),
+            }
+        }
+    }
+    lines
+}
+
+fn summarize_bench(name: &str, path: &Path, j: &Json) -> Vec<String> {
+    let mut out = vec![format!("-- {} --", path.display())];
+    if name == "BENCH_serve.json" {
+        for row in j.get("rows").as_arr().unwrap_or(&[]) {
+            out.push(format!(
+                "  {:>3} client(s): {:8.2} jobs/s   p50 {:8.1} ms   p95 {:8.1} ms",
+                row.get("clients").as_usize().unwrap_or(0),
+                row.get("jobs_per_s").as_f64().unwrap_or(f64::NAN),
+                row.get("p50_ms").as_f64().unwrap_or(f64::NAN),
+                row.get("p95_ms").as_f64().unwrap_or(f64::NAN),
+            ));
+        }
+    } else if let Some(map) = j.get("speedup_batched_vs_loop").as_obj() {
+        for (b, s) in map {
+            out.push(format!(
+                "  B={b:<6} batched {:.2}x loop",
+                s.as_f64().unwrap_or(f64::NAN)
+            ));
+        }
+    }
+    out
 }
 
 /// Machine-readable report (one JSON object per series) for tooling.
@@ -205,6 +260,33 @@ mod tests {
         write_csv(&d, "f_a_rep0.csv", "step,wall_s,gap\n1,0.1,\n2,0.2,0.3\n");
         let s = Series::parse(&d.join("f_a_rep0.csv")).unwrap();
         assert_eq!(s.min("gap"), Some(0.3));
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn bench_reports_picked_up() {
+        let d = tmpdir("bench");
+        std::fs::write(
+            d.join("BENCH_serve.json"),
+            r#"{"unit": "jobs_per_s_and_latency_ms",
+                "rows": [{"clients": 4, "jobs": 8, "jobs_per_s": 11.5,
+                          "p50_ms": 40.5, "p95_ms": 92.0}]}"#,
+        )
+        .unwrap();
+        std::fs::write(
+            d.join("BENCH_scale.json"),
+            r#"{"unit": "us_per_matrix_step", "records": [],
+                "speedup_batched_vs_loop": {"4096": 2.5}}"#,
+        )
+        .unwrap();
+        let lines = bench_report_lines(&d);
+        let text = lines.join("\n");
+        assert!(text.contains("BENCH_serve.json"), "{text}");
+        assert!(text.contains("jobs/s"), "{text}");
+        assert!(text.contains("B=4096"), "{text}");
+        assert!(text.contains("2.50x"), "{text}");
+        // report() itself must not choke on a dir holding only bench JSON.
+        report(&d, None).unwrap();
         std::fs::remove_dir_all(&d).ok();
     }
 

@@ -56,6 +56,11 @@
 //! same-shape parameters and an [`OptimSession`](coordinator::OptimSession)
 //! (or the full [`Trainer`](coordinator::Trainer)) drives one batched
 //! update per group — the paper's scalability mechanism.
+//!
+//! The [`serve`] module wraps the whole stack in a resident daemon
+//! (`pogo serve`): clients submit serialized job specs over HTTP, a
+//! bounded queue schedules them across worker-owned sessions, and
+//! results/metrics stream back — optimization as a service.
 
 pub mod bench;
 pub mod config;
@@ -67,6 +72,7 @@ pub mod manifold;
 pub mod optim;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod testing;
 pub mod util;
 

@@ -4,8 +4,11 @@
 //! pogo run <experiment> [--methods a,b] [--steps N] [--reps K] [--seed S]
 //!                       [--out DIR] [--full] [--quick]
 //!                       [--spec FILE.json] [--dump-spec]
+//! pogo serve [--addr HOST:PORT] [--workers N] [--queue-cap N]
+//!            [--state-dir DIR]  # multi-tenant optimization job daemon
 //! pogo list                     # experiments + their paper figures
 //! pogo info [--artifacts DIR]   # artifact registry contents
+//! pogo report [--dir DIR]       # summarize results CSVs + BENCH_*.json
 //! pogo version
 //! ```
 //!
@@ -23,6 +26,7 @@ fn main() {
     let cmd = args.first().map(String::as_str).unwrap_or("help");
     let code = match cmd {
         "run" => cmd_run(),
+        "serve" => cmd_serve(),
         "list" => cmd_list(),
         "info" => cmd_info(),
         "report" => cmd_report(),
@@ -48,11 +52,15 @@ fn print_help() {
         "pogo — Proximal One-step Geometric Orthoptimizer (paper reproduction)\n\n\
          Commands:\n\
          \x20 run <experiment>   run a paper experiment (see `pogo list`)\n\
+         \x20 serve              run the optimization job daemon (POST /v1/jobs,\n\
+         \x20                    GET /v1/jobs/:id[/result], DELETE /v1/jobs/:id,\n\
+         \x20                    GET /healthz, GET /metrics)\n\
          \x20 list               list experiments\n\
          \x20 info               inspect the AOT artifact registry\n\
-         \x20 report             summarize results/*.csv from past runs\n\
+         \x20 report             summarize results/*.csv and BENCH_*.json\n\
+         \x20                    (scale, born, serve) from past runs\n\
          \x20 version            print the version\n\n\
-         Run `pogo run <experiment> --help` for per-run flags."
+         Run `pogo run <experiment> --help` or `pogo serve --help` for flags."
     );
 }
 
@@ -96,6 +104,44 @@ fn cmd_info() -> i32 {
                     m.tags.join(",")
                 );
             }
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_serve() -> i32 {
+    let cli = Cli::new("pogo serve", "multi-tenant optimization job service")
+        .flag("addr", "127.0.0.1:7070", "listen address (HOST:PORT; port 0 = ephemeral)")
+        .flag_opt("workers", "worker threads (default min(cores, 4))")
+        .flag("queue-cap", "256", "max queued (not yet running) jobs")
+        .flag_opt("state-dir", "persist job state + checkpoints here (enables restart recovery)");
+    let a = cli.parse_env_or_exit(1);
+    let mut cfg = pogo::serve::ServeConfig {
+        addr: a.get_or("addr", "127.0.0.1:7070"),
+        ..Default::default()
+    };
+    if let Some(w) = a.get_usize("workers") {
+        cfg.workers = w.max(1);
+    }
+    if let Some(c) = a.get_usize("queue-cap") {
+        cfg.capacity = c.max(1);
+    }
+    cfg.state_dir = a.get("state-dir").map(std::path::PathBuf::from);
+    match pogo::serve::Server::start(cfg) {
+        Ok(server) => {
+            println!("pogo serve listening on http://{}", server.addr());
+            println!(
+                "endpoints: POST /v1/jobs · GET /v1/jobs[/:id[/result]] · \
+                 DELETE /v1/jobs/:id · GET /healthz · GET /metrics"
+            );
+            // No signal handling without libc: a kill stops the daemon
+            // immediately. With --state-dir the next start recovers and
+            // resumes unfinished jobs from their checkpoints.
+            server.wait();
             0
         }
         Err(e) => {

@@ -189,7 +189,15 @@ pub fn build_host<S: Scalar>(
             AdamConfig { lr: spec.lr, ..Default::default() },
             n_params,
         )),
-        _ => unreachable!("construct_field covers the matmul-only methods"),
+        // construct_field covers the matmul-only methods; reaching here
+        // means the two matches drifted apart — surface it as an error (a
+        // serving daemon must never panic on a spec), not a panic.
+        m => {
+            return Err(anyhow!(
+                "{} fell through both construction matches (registry arms out of sync)",
+                m.name()
+            ))
+        }
     })
 }
 
@@ -219,10 +227,14 @@ pub fn build_unitary<S: Scalar>(
     if let Some(opt) = construct_field::<Complex<S>>(spec, n_params) {
         return Ok(opt);
     }
-    Ok(match spec.method {
-        Method::Rgd => Box::new(RgdC::<S>::new(spec.lr, spec.base, n_params)),
-        _ => unreachable!("capability gate above"),
-    })
+    match spec.method {
+        Method::Rgd => Ok(Box::new(RgdC::<S>::new(spec.lr, spec.base, n_params))),
+        m => Err(anyhow!(
+            "{} passed the complex capability gate but has no unitary constructor \
+             (capability table and construction match are out of sync)",
+            m.name()
+        )),
+    }
 }
 
 /// The batched-host construction match, field-generic like
@@ -255,7 +267,13 @@ pub fn build_batched_host<S: Scalar>(
          use engine 'rust'",
         spec.method.name()
     );
-    Ok(construct_batched::<S>(spec).expect("capability gate above"))
+    construct_batched::<S>(spec).ok_or_else(|| {
+        anyhow!(
+            "{} advertises batched_host but construct_batched has no arm for it \
+             (capability table and construction match are out of sync)",
+            spec.method.name()
+        )
+    })
 }
 
 /// Build the batched host engine for a COMPLEX `(B, p, n)` shape group
@@ -270,7 +288,13 @@ pub fn build_batched_host_unitary<S: Scalar>(
         "{} has no batched complex host engine; use engine 'rust'",
         spec.method.name()
     );
-    Ok(construct_batched::<Complex<S>>(spec).expect("capability gate above"))
+    construct_batched::<Complex<S>>(spec).ok_or_else(|| {
+        anyhow!(
+            "{} advertises batched_host_complex but construct_batched has no arm for it \
+             (capability table and construction match are out of sync)",
+            spec.method.name()
+        )
+    })
 }
 
 /// Which XLA step program a spec maps to (method × base × λ-policy).

@@ -1,0 +1,378 @@
+//! `pogo serve` — the daemon: a TCP accept loop, per-connection handler
+//! threads, and the `/v1` job routes over the [`JobQueue`].
+//!
+//! Endpoints (all `Connection: close`, JSON bodies unless noted):
+//!
+//! | method | path                 | what                                     |
+//! |--------|----------------------|------------------------------------------|
+//! | POST   | `/v1/jobs`           | submit a [`JobSpec`]; 202 + `{id}`       |
+//! | GET    | `/v1/jobs`           | list all jobs (compact)                  |
+//! | GET    | `/v1/jobs/:id`       | status + metrics tail                    |
+//! | GET    | `/v1/jobs/:id/result`| final loss + orthogonality error         |
+//! | DELETE | `/v1/jobs/:id`       | cancel                                   |
+//! | GET    | `/healthz`           | liveness                                 |
+//! | GET    | `/metrics`           | Prometheus text                          |
+
+use super::http::{self, Request, Response};
+use super::job::{JobSpec, JobState};
+use super::metrics::ServeMetrics;
+use super::queue::{JobQueue, QueueConfig, SubmitError};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Max simultaneous connection-handler threads. Beyond it, connections
+/// get an immediate 503 from the accept thread instead of a handler —
+/// the per-request caps in [`http`] bound each handler, this bounds how
+/// many there are.
+const MAX_CONNS: usize = 64;
+
+/// Decrements the live-connection count when a handler ends — by any
+/// path, including unwind (or the handler thread failing to spawn at
+/// all, which drops the closure holding it).
+struct ConnGuard(Arc<AtomicUsize>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Daemon configuration (`pogo serve` flags map 1:1).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// `HOST:PORT`; port 0 binds an ephemeral port (tests/benches).
+    pub addr: String,
+    pub workers: usize,
+    /// Max queued (not yet running) jobs.
+    pub capacity: usize,
+    /// Job state + checkpoint directory (enables restart recovery).
+    pub state_dir: Option<PathBuf>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7070".to_string(),
+            workers: crate::util::pool::num_threads().min(4).max(1),
+            capacity: 256,
+            state_dir: None,
+        }
+    }
+}
+
+/// A running daemon. Keep it alive for as long as you serve; `shutdown`
+/// drains in-flight jobs and joins every thread.
+pub struct Server {
+    queue: Arc<JobQueue>,
+    local: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind, recover persisted jobs, spawn workers + accept loop.
+    pub fn start(cfg: ServeConfig) -> Result<Server> {
+        let metrics = Arc::new(ServeMetrics::new());
+        let queue = JobQueue::start(
+            QueueConfig {
+                workers: cfg.workers.max(1),
+                capacity: cfg.capacity.max(1),
+                state_dir: cfg.state_dir.clone(),
+            },
+            metrics.clone(),
+        )?;
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let q = queue.clone();
+        let m = metrics.clone();
+        let stop_flag = stop.clone();
+        let accept = std::thread::Builder::new()
+            .name("pogo-serve-accept".to_string())
+            .spawn(move || {
+                let active = Arc::new(AtomicUsize::new(0));
+                for conn in listener.incoming() {
+                    if stop_flag.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match conn {
+                        Ok(mut stream) => {
+                            if active.load(Ordering::Relaxed) >= MAX_CONNS {
+                                let resp = Response::error(503, "too many connections");
+                                http::write_response(&mut stream, &resp).ok();
+                                continue;
+                            }
+                            active.fetch_add(1, Ordering::Relaxed);
+                            let q = q.clone();
+                            let m = m.clone();
+                            let guard = ConnGuard(active.clone());
+                            let spawned = std::thread::Builder::new()
+                                .name("pogo-serve-conn".to_string())
+                                .spawn(move || {
+                                    let _guard = guard;
+                                    handle_conn(stream, &q, &m);
+                                });
+                            if let Err(e) = spawned {
+                                // The closure (and its guard) never ran.
+                                log::warn!("failed to spawn connection handler: {e}");
+                            }
+                        }
+                        Err(e) => log::warn!("accept error: {e}"),
+                    }
+                }
+            })
+            .context("spawning accept loop")?;
+
+        log::info!("pogo serve listening on http://{local}");
+        Ok(Server { queue, local, stop, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Block on the accept loop (the daemon's main thread parks here).
+    pub fn wait(mut self) {
+        if let Some(h) = self.accept.take() {
+            h.join().ok();
+        }
+    }
+
+    /// Graceful shutdown: stop accepting, drain in-flight jobs, join
+    /// workers. Queued jobs stay queued (persisted with a state dir).
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Poke the blocking accept() so the loop observes the flag.
+        TcpStream::connect(self.local).ok();
+        if let Some(h) = self.accept.take() {
+            h.join().ok();
+        }
+        self.queue.shutdown();
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        // Best-effort stop if the caller forgot `shutdown()`: halt the
+        // accept loop and flip the queue into draining so workers exit
+        // once their current job ends. No joins here — drop must not
+        // block on an in-flight job.
+        if !self.stop.swap(true, Ordering::SeqCst) {
+            TcpStream::connect(self.local).ok();
+            self.queue.begin_drain();
+        }
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, queue: &JobQueue, metrics: &ServeMetrics) {
+    metrics.requests.fetch_add(1, Ordering::Relaxed);
+    let resp = match http::read_request(&stream) {
+        Ok(req) => route(&req, queue, metrics),
+        Err(e) => Response::error(400, format!("{e:#}")),
+    };
+    if let Err(e) = http::write_response(&mut stream, &resp) {
+        log::debug!("client went away mid-response: {e}");
+    }
+}
+
+fn route(req: &Request, queue: &JobQueue, metrics: &ServeMetrics) -> Response {
+    let segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+    match (req.method.as_str(), segs.as_slice()) {
+        ("GET", ["healthz"]) => Response::json(
+            200,
+            &Json::obj(vec![
+                ("status", Json::str("ok")),
+                ("version", Json::str(crate::VERSION)),
+            ]),
+        ),
+        ("GET", ["metrics"]) => {
+            let (depth, running) = queue.depth_running();
+            Response::text(200, metrics.render(depth, running, queue.capacity(), queue.workers()))
+        }
+        ("POST", ["v1", "jobs"]) => submit(req, queue),
+        ("GET", ["v1", "jobs"]) => Response::json(200, &queue.list_json()),
+        ("GET", ["v1", "jobs", id]) => match parse_id(id) {
+            Some(id) => match queue.status_json(id) {
+                Some(j) => Response::json(200, &j),
+                None => Response::error(404, format!("no job {id}")),
+            },
+            None => Response::error(400, format!("bad job id '{id}'")),
+        },
+        ("GET", ["v1", "jobs", id, "result"]) => match parse_id(id) {
+            Some(id) => result_of(id, queue),
+            None => Response::error(400, format!("bad job id '{id}'")),
+        },
+        ("DELETE", ["v1", "jobs", id]) => match parse_id(id) {
+            Some(id) => match queue.cancel(id) {
+                Some(state) => Response::json(
+                    200,
+                    &Json::obj(vec![
+                        ("id", Json::num(id as f64)),
+                        ("state", Json::str(state.name())),
+                    ]),
+                ),
+                None => Response::error(404, format!("no job {id}")),
+            },
+            None => Response::error(400, format!("bad job id '{id}'")),
+        },
+        ("POST" | "PUT" | "DELETE", ["healthz" | "metrics"]) => {
+            Response::error(405, "read-only endpoint")
+        }
+        _ => Response::error(404, format!("no route for {} {}", req.method, req.path)),
+    }
+}
+
+fn parse_id(s: &str) -> Option<u64> {
+    s.parse::<u64>().ok()
+}
+
+fn submit(req: &Request, queue: &JobQueue) -> Response {
+    let body = match req.body_utf8() {
+        Ok(b) => b,
+        Err(e) => return Response::error(400, format!("{e:#}")),
+    };
+    let parsed = match Json::parse(body) {
+        Ok(j) => j,
+        Err(e) => return Response::error(400, format!("bad JSON: {e}")),
+    };
+    let spec = match JobSpec::from_json(&parsed) {
+        Ok(s) => s,
+        Err(e) => return Response::error(400, format!("{e:#}")),
+    };
+    match queue.submit(spec) {
+        Ok(id) => Response::json(
+            202,
+            &Json::obj(vec![
+                ("id", Json::num(id as f64)),
+                ("state", Json::str(JobState::Queued.name())),
+            ]),
+        ),
+        Err(e @ SubmitError::Full(_)) => Response::error(429, e.to_string()),
+        Err(e @ SubmitError::Draining) => Response::error(503, e.to_string()),
+        Err(SubmitError::Invalid(e)) => Response::error(400, format!("{e:#}")),
+    }
+}
+
+fn result_of(id: u64, queue: &JobQueue) -> Response {
+    let Some((state, result, error)) = queue.snapshot(id) else {
+        return Response::error(404, format!("no job {id}"));
+    };
+    match (state, result) {
+        // Done — and cancelled jobs report their partial trajectory.
+        (JobState::Done | JobState::Cancelled, Some(r)) => {
+            let mut map = match r.to_json() {
+                Json::Obj(m) => m,
+                _ => Default::default(),
+            };
+            map.insert("id".to_string(), Json::num(id as f64));
+            map.insert("state".to_string(), Json::str(state.name()));
+            Response::json(200, &Json::Obj(map))
+        }
+        // Cancelled before a worker ever claimed it: terminal, but there
+        // is no trajectory to report. Still a 200 so result-pollers
+        // terminate.
+        (JobState::Cancelled, None) => Response::json(
+            200,
+            &Json::obj(vec![
+                ("id", Json::num(id as f64)),
+                ("state", Json::str(JobState::Cancelled.name())),
+                ("steps_done", Json::num(0.0)),
+            ]),
+        ),
+        (JobState::Failed, _) => Response::error(
+            409,
+            format!("job {id} failed: {}", error.unwrap_or_else(|| "unknown error".into())),
+        ),
+        (s, _) => Response::error(409, format!("job {id} is {} — result not ready", s.name())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::client::ServeClient;
+    use crate::serve::job::ProblemKind;
+
+    fn quick_spec() -> JobSpec {
+        let mut s = JobSpec::new(ProblemKind::Quartic, 2, 2, 4);
+        s.steps = 10;
+        s
+    }
+
+    fn ephemeral() -> (Server, ServeClient) {
+        let server = Server::start(ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 2,
+            capacity: 32,
+            state_dir: None,
+        })
+        .unwrap();
+        let client = ServeClient::new(server.addr().to_string());
+        (server, client)
+    }
+
+    #[test]
+    fn healthz_metrics_and_routes() {
+        let (server, client) = ephemeral();
+        let h = client.healthz().unwrap();
+        assert_eq!(h.get("status").as_str(), Some("ok"));
+        let m = client.metrics().unwrap();
+        assert!(m.contains("pogo_serve_queue_capacity 32"), "{m}");
+        // Unknown routes and ids.
+        let (code, _) = http::request(client.addr(), "GET", "/nope", None).unwrap();
+        assert_eq!(code, 404);
+        let (code, _) = http::request(client.addr(), "GET", "/v1/jobs/999", None).unwrap();
+        assert_eq!(code, 404);
+        let (code, _) = http::request(client.addr(), "GET", "/v1/jobs/xyz", None).unwrap();
+        assert_eq!(code, 400);
+        let (code, _) = http::request(client.addr(), "POST", "/metrics", None).unwrap();
+        assert_eq!(code, 405);
+        server.shutdown();
+    }
+
+    #[test]
+    fn submit_poll_result_lifecycle() {
+        let (server, client) = ephemeral();
+        let id = client.submit(&quick_spec()).unwrap();
+        let status = client.wait_terminal(id, std::time::Duration::from_secs(30)).unwrap();
+        assert_eq!(status.get("state").as_str(), Some("done"));
+        let result = client.result(id).unwrap();
+        assert_eq!(result.get("state").as_str(), Some("done"));
+        assert!(result.get("ortho_error").as_f64().unwrap() <= 1e-3);
+        assert_eq!(result.get("steps_done").as_usize(), Some(10));
+        // Listing shows the job.
+        let (code, body) = http::request(client.addr(), "GET", "/v1/jobs", None).unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(Json::parse(&body).unwrap().as_arr().unwrap().len(), 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn bad_submissions_rejected() {
+        let (server, client) = ephemeral();
+        let (code, body) =
+            http::request(client.addr(), "POST", "/v1/jobs", Some("{not json")).unwrap();
+        assert_eq!(code, 400, "{body}");
+        let (code, body) = http::request(
+            client.addr(),
+            "POST",
+            "/v1/jobs",
+            Some(r#"{"problem": "pca", "batch": 1, "p": 9, "n": 3, "steps": 5,
+                     "optimizer": {"method": "pogo", "lr": 0.1}}"#),
+        )
+        .unwrap();
+        assert_eq!(code, 400, "{body}");
+        // Result of a job that does not exist.
+        let (code, _) =
+            http::request(client.addr(), "GET", "/v1/jobs/7/result", None).unwrap();
+        assert_eq!(code, 404);
+        server.shutdown();
+    }
+}

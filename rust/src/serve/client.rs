@@ -1,0 +1,113 @@
+//! In-process client for the serve API — what `benches/serve_load.rs`
+//! and the e2e tests drive, and a reference for how to talk to the
+//! daemon from anything that can open a TCP socket.
+//!
+//! Thin by design: one [`http::request`] round-trip per call, JSON in
+//! and out, non-2xx mapped to `Err` carrying the server's error body.
+
+use super::http;
+use super::job::JobSpec;
+use super::queue::JobId;
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::time::{Duration, Instant};
+
+/// A handle on one daemon address. Cheap to clone per client thread.
+#[derive(Clone, Debug)]
+pub struct ServeClient {
+    addr: String,
+}
+
+impl ServeClient {
+    pub fn new(addr: impl Into<String>) -> ServeClient {
+        ServeClient { addr: addr.into() }
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    fn call(&self, method: &str, path: &str, body: Option<&str>) -> Result<Json> {
+        let (code, text) = http::request(&self.addr, method, path, body)?;
+        let parsed = Json::parse(&text)
+            .map_err(|e| anyhow!("{method} {path}: HTTP {code} with non-JSON body: {e}"))?;
+        if !(200..300).contains(&code) {
+            let msg = parsed.get("error").as_str().unwrap_or("unknown error").to_string();
+            return Err(anyhow!("{method} {path}: HTTP {code}: {msg}"));
+        }
+        Ok(parsed)
+    }
+
+    /// Submit a job; returns its id.
+    pub fn submit(&self, spec: &JobSpec) -> Result<JobId> {
+        let j = self.call("POST", "/v1/jobs", Some(&spec.to_json().to_string()))?;
+        j.get("id")
+            .as_usize()
+            .map(|v| v as JobId)
+            .ok_or_else(|| anyhow!("submit response has no id: {}", j.to_string()))
+    }
+
+    /// Status + metrics tail of one job.
+    pub fn status(&self, id: JobId) -> Result<Json> {
+        self.call("GET", &format!("/v1/jobs/{id}"), None)
+    }
+
+    /// Final result (errors while the job is still queued/running).
+    pub fn result(&self, id: JobId) -> Result<Json> {
+        self.call("GET", &format!("/v1/jobs/{id}/result"), None)
+    }
+
+    /// Cancel; returns the state after the call.
+    pub fn cancel(&self, id: JobId) -> Result<Json> {
+        self.call("DELETE", &format!("/v1/jobs/{id}"), None)
+    }
+
+    /// All jobs, compact.
+    pub fn list(&self) -> Result<Json> {
+        self.call("GET", "/v1/jobs", None)
+    }
+
+    pub fn healthz(&self) -> Result<Json> {
+        self.call("GET", "/healthz", None)
+    }
+
+    /// Raw Prometheus text.
+    pub fn metrics(&self) -> Result<String> {
+        let (code, text) = http::request(&self.addr, "GET", "/metrics", None)?;
+        if code != 200 {
+            return Err(anyhow!("GET /metrics: HTTP {code}"));
+        }
+        Ok(text)
+    }
+
+    /// Poll until the job reaches a terminal state; returns the final
+    /// status JSON (inspect `state` — it may be `failed`/`cancelled`).
+    pub fn wait_terminal(&self, id: JobId, timeout: Duration) -> Result<Json> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let status = self.status(id)?;
+            match status.get("state").as_str() {
+                Some("done" | "failed" | "cancelled") => return Ok(status),
+                Some(_) if Instant::now() < deadline => {
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Some(s) => return Err(anyhow!("job {id} still '{s}' after {timeout:?}")),
+                None => return Err(anyhow!("job {id} status has no state")),
+            }
+        }
+    }
+
+    /// Poll to `done` and fetch the result; a `failed`/`cancelled` end
+    /// state is an error naming it.
+    pub fn wait_result(&self, id: JobId, timeout: Duration) -> Result<Json> {
+        let status = self.wait_terminal(id, timeout)?;
+        match status.get("state").as_str() {
+            Some("done") => self.result(id),
+            Some(other) => Err(anyhow!(
+                "job {id} ended as '{other}': {}",
+                status.get("error").as_str().unwrap_or("(no error recorded)")
+            )),
+            None => Err(anyhow!("job {id} status has no state")),
+        }
+    }
+}

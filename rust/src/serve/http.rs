@@ -1,0 +1,281 @@
+//! Minimal HTTP/1.1 over `std::net` — just enough protocol for the serve
+//! API and its in-process client (the offline registry has no hyper).
+//!
+//! Server side: [`read_request`] parses one request (method, path,
+//! headers, `Content-Length` body; 1 MiB body cap) off a stream and
+//! [`write_response`] writes one `Connection: close` response. Client
+//! side: [`request`] performs one round-trip. Every connection carries
+//! exactly one request/response pair — simple, and plenty for a job API
+//! whose unit of work is minutes of optimization.
+
+use anyhow::{anyhow, Context, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// Largest accepted request body (a job spec is ~1 KiB).
+pub const MAX_BODY: usize = 1 << 20;
+/// Largest accepted header section.
+const MAX_HEADERS: usize = 64;
+/// Largest accepted single line (request line or one header) — caps the
+/// memory a malicious peer can grow before the body length is even known.
+const MAX_LINE: usize = 8 << 10;
+/// Per-connection socket timeout.
+pub const IO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// One parsed request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// Path only (any `?query` is split off and discarded).
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn body_utf8(&self) -> Result<&str> {
+        std::str::from_utf8(&self.body).context("request body is not UTF-8")
+    }
+}
+
+/// One response about to be written.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: &crate::util::json::Json) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            body: (body.to_string_pretty() + "\n").into_bytes(),
+        }
+    }
+
+    pub fn text(status: u16, body: impl Into<String>) -> Response {
+        Response { status, content_type: "text/plain; charset=utf-8", body: body.into().into_bytes() }
+    }
+
+    /// `{"error": msg}` with the given status.
+    pub fn error(status: u16, msg: impl Into<String>) -> Response {
+        Response::json(
+            status,
+            &crate::util::json::Json::obj(vec![(
+                "error",
+                crate::util::json::Json::str(msg.into()),
+            )]),
+        )
+    }
+}
+
+pub fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// `read_line` with a hard byte cap, so a peer streaming an endless
+/// line cannot grow an unbounded buffer (plain `BufRead::read_line`
+/// has no limit).
+fn read_line_capped<R: BufRead>(reader: &mut R, what: &str) -> Result<String> {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let available = reader.fill_buf().with_context(|| format!("reading {what}"))?;
+        if available.is_empty() {
+            break; // EOF
+        }
+        match available.iter().position(|&b| b == b'\n') {
+            Some(i) => {
+                buf.extend_from_slice(&available[..i]);
+                reader.consume(i + 1);
+                break;
+            }
+            None => {
+                buf.extend_from_slice(available);
+                let n = available.len();
+                reader.consume(n);
+            }
+        }
+        if buf.len() > MAX_LINE {
+            return Err(anyhow!("{what} exceeds the {MAX_LINE}-byte line cap"));
+        }
+    }
+    if buf.len() > MAX_LINE {
+        return Err(anyhow!("{what} exceeds the {MAX_LINE}-byte line cap"));
+    }
+    Ok(String::from_utf8_lossy(&buf).into_owned())
+}
+
+/// Parse one request off the stream. Errors map to a 400 at the call
+/// site (or a dropped connection if the peer vanished).
+pub fn read_request(stream: &TcpStream) -> Result<Request> {
+    stream.set_read_timeout(Some(IO_TIMEOUT)).ok();
+    stream.set_write_timeout(Some(IO_TIMEOUT)).ok();
+    let mut reader = BufReader::new(stream.try_clone().context("cloning connection")?);
+
+    let line = read_line_capped(&mut reader, "request line")?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().ok_or_else(|| anyhow!("empty request line"))?.to_string();
+    let target = parts.next().ok_or_else(|| anyhow!("request line has no path"))?;
+    let path = target.split('?').next().unwrap_or(target).to_string();
+
+    let mut headers = Vec::new();
+    loop {
+        let h = read_line_capped(&mut reader, "header")?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(anyhow!("too many headers"));
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers.push((k.trim().to_string(), v.trim().to_string()));
+        }
+    }
+
+    let len = headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+        .and_then(|(_, v)| v.parse::<usize>().ok())
+        .unwrap_or(0);
+    if len > MAX_BODY {
+        return Err(anyhow!("request body of {len} bytes exceeds the {MAX_BODY} cap"));
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body).context("reading request body")?;
+    Ok(Request { method, path, headers, body })
+}
+
+/// Write one `Connection: close` response.
+pub fn write_response(stream: &mut TcpStream, resp: &Response) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        resp.status,
+        status_reason(resp.status),
+        resp.content_type,
+        resp.body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(&resp.body)?;
+    stream.flush()
+}
+
+/// Client side: one request/response round-trip. Returns (status, body).
+pub fn request(addr: &str, method: &str, path: &str, body: Option<&str>) -> Result<(u16, String)> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    stream.set_read_timeout(Some(IO_TIMEOUT)).ok();
+    stream.set_write_timeout(Some(IO_TIMEOUT)).ok();
+    let body = body.unwrap_or("");
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\
+         Content-Type: application/json\r\nContent-Length: {}\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()?;
+
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).context("reading response")?;
+    let text = String::from_utf8_lossy(&raw);
+    let status = text
+        .lines()
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| anyhow!("malformed response from {addr}: {:.120}", text))?;
+    let payload = match text.find("\r\n\r\n") {
+        Some(i) => text[i + 4..].to_string(),
+        None => String::new(),
+    };
+    Ok((status, payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// One-shot echo server: parses a request, answers with its method,
+    /// path and body length as JSON.
+    fn spawn_echo() -> std::net::SocketAddr {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                let Ok(mut stream) = conn else { break };
+                match read_request(&stream) {
+                    Ok(req) => {
+                        let j = crate::util::json::Json::obj(vec![
+                            ("method", crate::util::json::Json::str(req.method.clone())),
+                            ("path", crate::util::json::Json::str(req.path.clone())),
+                            (
+                                "body_len",
+                                crate::util::json::Json::num(req.body.len() as f64),
+                            ),
+                        ]);
+                        write_response(&mut stream, &Response::json(200, &j)).ok();
+                    }
+                    Err(e) => {
+                        write_response(&mut stream, &Response::error(400, format!("{e:#}")))
+                            .ok();
+                    }
+                }
+            }
+        });
+        addr
+    }
+
+    #[test]
+    fn roundtrip_with_body() {
+        let addr = spawn_echo().to_string();
+        let (code, body) =
+            request(&addr, "POST", "/v1/jobs?verbose=1", Some("{\"x\": 1}")).unwrap();
+        assert_eq!(code, 200);
+        let j = crate::util::json::Json::parse(&body).unwrap();
+        assert_eq!(j.get("method").as_str(), Some("POST"));
+        // Query string stripped.
+        assert_eq!(j.get("path").as_str(), Some("/v1/jobs"));
+        assert_eq!(j.get("body_len").as_usize(), Some(8));
+    }
+
+    #[test]
+    fn get_without_body() {
+        let addr = spawn_echo().to_string();
+        let (code, body) = request(&addr, "GET", "/healthz", None).unwrap();
+        assert_eq!(code, 200);
+        let j = crate::util::json::Json::parse(&body).unwrap();
+        assert_eq!(j.get("path").as_str(), Some("/healthz"));
+        assert_eq!(j.get("body_len").as_usize(), Some(0));
+    }
+
+    #[test]
+    fn status_reasons_cover_api_codes() {
+        for code in [200, 202, 400, 404, 405, 409, 413, 429, 500, 503] {
+            assert_ne!(status_reason(code), "Unknown", "{code}");
+        }
+    }
+}

@@ -1,0 +1,828 @@
+//! The serve job model: what a client submits and what a worker runs.
+//!
+//! A [`JobSpec`] names a problem (Procrustes / PCA-style / quartic
+//! localization / raw gradient-replay), an [`OptimizerSpec`] (so
+//! `"engine": "rust" | "batched-host"` round-trips exactly as in spec
+//! JSON today), a `(batch, p, n)` shape group, the manifold domain
+//! (real/complex Stiefel), a step budget and a seed. [`run_job`] is the
+//! ONE execution path: it drives an [`OptimSession`] over a seeded
+//! `ParamStore`, so a job run through the daemon is **bit-for-bit** the
+//! same trajectory as calling `run_job` (or an `OptimSession` loop with
+//! the same construction order) directly — the property the e2e test
+//! pins.
+//!
+//! Real-domain jobs with `checkpoint_every > 0` periodically persist
+//! through [`crate::coordinator::checkpoint`] and resume from the
+//! checkpoint on restart (parameters + step counter; base-optimizer
+//! state restarts, so resumed momentum runs continue feasibly but are
+//! not bitwise-identical to an uninterrupted run — POGO/sgd is
+//! stateless and resumes exactly). Complex jobs are not checkpointed
+//! (the v1 format stores real scalars only).
+
+use crate::coordinator::{checkpoint, OptimSession, OptimizerSpec, ParamStore};
+use crate::linalg::{matmul, matmul_ah_b, Complex, Field, Mat, Scalar};
+use crate::rng::Rng;
+use crate::util::json::Json;
+use anyhow::{anyhow, ensure, Context, Result};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Which manifold a job optimizes over.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobDomain {
+    /// Real Stiefel `X Xᵀ = I` (f32, the experiment default).
+    Real,
+    /// Complex Stiefel `X Xᴴ = I` (`Complex<f32>`, the Fig. 8 regime).
+    Complex,
+}
+
+impl JobDomain {
+    pub fn name(self) -> &'static str {
+        match self {
+            JobDomain::Real => "real",
+            JobDomain::Complex => "complex",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<JobDomain> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "real" => JobDomain::Real,
+            "complex" | "unitary" => JobDomain::Complex,
+            _ => return None,
+        })
+    }
+}
+
+/// The objective a job minimizes. All four are matmul/elementwise only,
+/// defined on both domains, and fully determined by `(seed, batch, p, n)`
+/// — no data upload in v1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProblemKind {
+    /// `Σᵢ ‖Aᵢ Xᵢ − Bᵢ‖²`, `Aᵢ ∈ F^{p×p}`, `Bᵢ ∈ F^{p×n}` Gaussian
+    /// (Fig. 4-right generalized to wide X and B > 1).
+    Procrustes,
+    /// PCA-style `Σᵢ −Re Tr(Xᵢ Cᵢ Xᵢᴴ)` with `Cᵢ = Mᵢᴴ Mᵢ / n` PSD.
+    Pca,
+    /// Quartic localization `Σᵢ Σⱼₖ |Xᵢ[j,k]|⁴` (gradient `4 |x|² x`).
+    Quartic,
+    /// Raw gradient-replay: per-step seeded Gaussian pseudo-gradients of
+    /// norm 0.1; the reported "loss" is `Σᵢ Re⟨Xᵢ, Gᵢ⟩` (a deterministic
+    /// trajectory fingerprint, not an objective).
+    Replay,
+}
+
+impl ProblemKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ProblemKind::Procrustes => "procrustes",
+            ProblemKind::Pca => "pca",
+            ProblemKind::Quartic => "quartic",
+            ProblemKind::Replay => "replay",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ProblemKind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "procrustes" => ProblemKind::Procrustes,
+            "pca" => ProblemKind::Pca,
+            "quartic" => ProblemKind::Quartic,
+            "replay" | "grad-replay" | "gradient-replay" => ProblemKind::Replay,
+            _ => return None,
+        })
+    }
+
+    pub fn all() -> &'static [ProblemKind] {
+        &[ProblemKind::Procrustes, ProblemKind::Pca, ProblemKind::Quartic, ProblemKind::Replay]
+    }
+}
+
+/// One submitted optimization job.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobSpec {
+    /// Client-chosen label (shows up in listings; empty is fine).
+    pub name: String,
+    pub problem: ProblemKind,
+    pub domain: JobDomain,
+    /// Shape group: `batch` matrices on St(p, n).
+    pub batch: usize,
+    pub p: usize,
+    pub n: usize,
+    /// Step budget.
+    pub steps: usize,
+    /// Seed for parameters AND problem data (full determinism).
+    pub seed: u64,
+    /// Persist every k steps (0 = never). Real domain only.
+    pub checkpoint_every: usize,
+    /// Method, hyperparameters and engine — the same serializable spec
+    /// the CLI replays.
+    pub optimizer: OptimizerSpec,
+}
+
+impl JobSpec {
+    /// A small POGO job — the starting point tests and examples tweak.
+    pub fn new(problem: ProblemKind, batch: usize, p: usize, n: usize) -> JobSpec {
+        JobSpec {
+            name: String::new(),
+            problem,
+            domain: JobDomain::Real,
+            batch,
+            p,
+            n,
+            steps: 100,
+            seed: 0,
+            checkpoint_every: 0,
+            optimizer: OptimizerSpec::new(crate::optim::Method::Pogo, 0.05),
+        }
+    }
+
+    /// Admission-time validation: shape sanity and a size ceiling so one
+    /// bad request cannot OOM the daemon. Engine/method capability
+    /// mismatches surface later, at session build, as a `failed` job —
+    /// never a panic.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.batch >= 1, "job: batch must be >= 1");
+        ensure!(self.p >= 1 && self.p <= self.n, "job: need 1 <= p <= n, got ({}, {})", self.p, self.n);
+        ensure!(self.steps >= 1, "job: steps must be >= 1");
+        let scalars = self.batch.saturating_mul(self.p).saturating_mul(self.n);
+        ensure!(
+            scalars <= 1 << 26,
+            "job too large: {} x {} x {} = {scalars} scalars (cap 2^26)",
+            self.batch,
+            self.p,
+            self.n
+        );
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("problem", Json::str(self.problem.name())),
+            ("domain", Json::str(self.domain.name())),
+            ("batch", Json::num(self.batch as f64)),
+            ("p", Json::num(self.p as f64)),
+            ("n", Json::num(self.n as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            // Seeds are u64; JSON numbers are f64 (2^53) — keep exact.
+            ("seed", Json::str(self.seed.to_string())),
+            ("checkpoint_every", Json::num(self.checkpoint_every as f64)),
+            ("optimizer", self.optimizer.to_json()),
+        ])
+    }
+
+    /// Parse a job. `problem`, `batch`, `p`, `n`, `steps` and a valid
+    /// `optimizer` (method + lr) are required; the rest defaults like the
+    /// CLI's minimal spec files. Present-but-malformed fields are errors.
+    pub fn from_json(j: &Json) -> Result<JobSpec> {
+        let problem = match j.get("problem") {
+            Json::Null => return Err(anyhow!("job: missing 'problem'")),
+            v => {
+                let s =
+                    v.as_str().ok_or_else(|| anyhow!("job: 'problem' must be a string"))?;
+                ProblemKind::parse(s).ok_or_else(|| anyhow!("job: unknown problem '{s}'"))?
+            }
+        };
+        let need = |key: &str| -> Result<usize> {
+            j.get(key)
+                .as_usize()
+                .ok_or_else(|| anyhow!("job: missing or non-integer '{key}'"))
+        };
+        let batch = need("batch")?;
+        let p = need("p")?;
+        let n = need("n")?;
+        let steps = need("steps")?;
+        let optimizer = OptimizerSpec::from_json(j.get("optimizer"))
+            .context("job: in 'optimizer'")?;
+        let mut spec = JobSpec {
+            name: String::new(),
+            problem,
+            domain: JobDomain::Real,
+            batch,
+            p,
+            n,
+            steps,
+            seed: 0,
+            checkpoint_every: 0,
+            optimizer,
+        };
+        match j.get("name") {
+            Json::Null => {}
+            v => {
+                spec.name = v
+                    .as_str()
+                    .ok_or_else(|| anyhow!("job: 'name' must be a string"))?
+                    .to_string();
+            }
+        }
+        match j.get("domain") {
+            Json::Null => {}
+            v => {
+                let s = v.as_str().ok_or_else(|| anyhow!("job: 'domain' must be a string"))?;
+                spec.domain =
+                    JobDomain::parse(s).ok_or_else(|| anyhow!("job: unknown domain '{s}'"))?;
+            }
+        }
+        match j.get("seed") {
+            Json::Null => {}
+            Json::Str(s) => {
+                spec.seed =
+                    s.parse::<u64>().map_err(|_| anyhow!("job: 'seed' is not a u64: '{s}'"))?;
+            }
+            Json::Num(v) => {
+                if *v < 0.0 || v.fract() != 0.0 || *v > 9.0e15 {
+                    return Err(anyhow!(
+                        "job: 'seed' must be a non-negative integer <= 2^53 \
+                         (use a string for larger seeds)"
+                    ));
+                }
+                spec.seed = *v as u64;
+            }
+            _ => return Err(anyhow!("job: 'seed' must be an integer or string")),
+        }
+        match j.get("checkpoint_every") {
+            Json::Null => {}
+            v => {
+                spec.checkpoint_every = v.as_usize().ok_or_else(|| {
+                    anyhow!("job: 'checkpoint_every' must be a non-negative integer")
+                })?;
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+/// What a finished (or cancelled) job measured.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    /// Objective at the final iterate (see [`ProblemKind`] for the
+    /// replay pseudo-loss).
+    pub final_loss: f64,
+    /// `max_i ‖Xᵢ Xᵢᴴ − I‖_F` at the final iterate.
+    pub ortho_error: f64,
+    pub steps_done: usize,
+    pub wall_s: f64,
+    /// Where the last checkpoint landed, if the job checkpointed.
+    pub checkpoint: Option<PathBuf>,
+}
+
+impl JobResult {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("final_loss", Json::num(self.final_loss)),
+            ("ortho_error", Json::num(self.ortho_error)),
+            ("steps_done", Json::num(self.steps_done as f64)),
+            ("wall_s", Json::num(self.wall_s)),
+            (
+                "checkpoint",
+                match &self.checkpoint {
+                    Some(p) => Json::str(p.display().to_string()),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<JobResult> {
+        Ok(JobResult {
+            final_loss: j
+                .get("final_loss")
+                .as_f64()
+                .ok_or_else(|| anyhow!("result: missing 'final_loss'"))?,
+            ortho_error: j
+                .get("ortho_error")
+                .as_f64()
+                .ok_or_else(|| anyhow!("result: missing 'ortho_error'"))?,
+            steps_done: j.get("steps_done").as_usize().unwrap_or(0),
+            wall_s: j.get("wall_s").as_f64().unwrap_or(0.0),
+            checkpoint: j.get("checkpoint").as_str().map(PathBuf::from),
+        })
+    }
+}
+
+/// Lifecycle of a job inside the queue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl JobState {
+    pub fn name(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<JobState> {
+        Some(match s {
+            "queued" => JobState::Queued,
+            "running" => JobState::Running,
+            "done" => JobState::Done,
+            "failed" => JobState::Failed,
+            "cancelled" => JobState::Cancelled,
+            _ => return None,
+        })
+    }
+
+    pub fn is_terminal(self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
+    }
+}
+
+/// How [`run_job`] ended (errors are a separate `Err`).
+#[derive(Clone, Debug)]
+pub enum JobOutcome {
+    Done(JobResult),
+    /// The cancel flag was observed between steps; the result holds the
+    /// partial trajectory's final numbers.
+    Cancelled(JobResult),
+}
+
+/// Runtime hooks the queue wires into a job execution. The defaults run
+/// to completion with no observers (what the parity tests use).
+#[derive(Default)]
+pub struct RunCtl<'a> {
+    /// Checked between steps; set → the job stops as `Cancelled`.
+    pub cancel: Option<&'a AtomicBool>,
+    /// Called after every applied step with (steps_done, loss).
+    pub on_step: Option<&'a dyn Fn(usize, f64)>,
+    /// Where to checkpoint/resume (real domain, `checkpoint_every > 0`).
+    pub checkpoint_path: Option<PathBuf>,
+}
+
+/// Execute a job to completion (or cancellation). Deterministic given the
+/// spec: the daemon and a direct caller produce bit-identical
+/// trajectories. This is the single execution path behind `pogo serve`.
+pub fn run_job(spec: &JobSpec, ctl: &RunCtl) -> Result<JobOutcome> {
+    spec.validate()?;
+    match spec.domain {
+        JobDomain::Real => run_real(spec, ctl),
+        JobDomain::Complex => run_complex(spec, ctl),
+    }
+}
+
+fn run_real(spec: &JobSpec, ctl: &RunCtl) -> Result<JobOutcome> {
+    let mut rng = Rng::seed_from_u64(spec.seed);
+    let mut store: ParamStore<f32> = ParamStore::new();
+    store.add_stiefel_group("x", spec.batch, spec.p, spec.n, &mut rng);
+    let problem = ProblemData::<f32>::build(spec, &mut rng);
+
+    // Resume: an existing checkpoint replaces the seeded parameters and
+    // fast-forwards the step counter (problem data is regenerated from
+    // the seed, so the objective is identical).
+    let mut start_step = 0usize;
+    let ckpt = if spec.checkpoint_every > 0 { ctl.checkpoint_path.clone() } else { None };
+    if let Some(path) = &ckpt {
+        if path.exists() {
+            // A bad checkpoint degrades to a fresh start instead of
+            // failing the job: the spec is still valid, only the saved
+            // progress is lost (saves are write-then-rename, so this is
+            // a stale-file edge case, not the common crash path).
+            match checkpoint::load(path) {
+                Ok((loaded, step))
+                    if loaded.len() == store.len()
+                        && loaded
+                            .params()
+                            .iter()
+                            .zip(store.params())
+                            .all(|(a, b)| a.mat.shape() == b.mat.shape()) =>
+                {
+                    store = loaded;
+                    start_step = step.min(spec.steps);
+                }
+                Ok(_) => log::warn!(
+                    "checkpoint {} does not match the job's shapes; restarting from step 0",
+                    path.display()
+                ),
+                Err(e) => log::warn!(
+                    "unreadable checkpoint {} ({e:#}); restarting from step 0",
+                    path.display()
+                ),
+            }
+        }
+    }
+
+    let mut session = OptimSession::new(&spec.optimizer, &store, None)?;
+    // `ckpt` is Some exactly when checkpointing applies (path given AND
+    // checkpoint_every > 0, resolved above) — the single gate.
+    let ckpt_for_save = ckpt.clone();
+    let mut save = move |st: &ParamStore<f32>, step: usize| -> Result<()> {
+        if let Some(p) = &ckpt_for_save {
+            checkpoint::save(st, step, p)
+                .with_context(|| format!("checkpointing to {}", p.display()))?;
+        }
+        Ok(())
+    };
+    let saver: Option<&mut dyn FnMut(&ParamStore<f32>, usize) -> Result<()>> =
+        if ckpt.is_some() { Some(&mut save) } else { None };
+    let outcome = drive(spec, ctl, &mut session, &mut store, &problem, start_step, saver)?;
+    Ok(attach_checkpoint(outcome, ckpt))
+}
+
+fn run_complex(spec: &JobSpec, ctl: &RunCtl) -> Result<JobOutcome> {
+    let mut rng = Rng::seed_from_u64(spec.seed);
+    let mut store: ParamStore<Complex<f32>> = ParamStore::new();
+    store.add_unitary_group("x", spec.batch, spec.p, spec.n, &mut rng);
+    let problem = ProblemData::<Complex<f32>>::build(spec, &mut rng);
+    let mut session = OptimSession::new_unitary(&spec.optimizer, &store)?;
+    drive(spec, ctl, &mut session, &mut store, &problem, 0, None)
+}
+
+fn attach_checkpoint(outcome: JobOutcome, ckpt: Option<PathBuf>) -> JobOutcome {
+    let stamp = |mut r: JobResult| {
+        r.checkpoint = ckpt.filter(|p| p.exists());
+        r
+    };
+    match outcome {
+        JobOutcome::Done(r) => JobOutcome::Done(stamp(r)),
+        JobOutcome::Cancelled(r) => JobOutcome::Cancelled(stamp(r)),
+    }
+}
+
+/// The step loop shared by both domains.
+#[allow(clippy::too_many_arguments)]
+fn drive<E: Field>(
+    spec: &JobSpec,
+    ctl: &RunCtl,
+    session: &mut OptimSession<E>,
+    store: &mut ParamStore<E>,
+    problem: &ProblemData<E>,
+    start_step: usize,
+    mut save: Option<&mut dyn FnMut(&ParamStore<E>, usize) -> Result<()>>,
+) -> Result<JobOutcome> {
+    let clock = crate::util::Stopwatch::start();
+    let mut steps_done = start_step;
+    for step in start_step..spec.steps {
+        if let Some(flag) = ctl.cancel {
+            if flag.load(Ordering::Relaxed) {
+                let loss = problem.loss(spec, step, store);
+                return Ok(JobOutcome::Cancelled(JobResult {
+                    final_loss: loss,
+                    ortho_error: store.max_stiefel_distance(),
+                    steps_done,
+                    wall_s: clock.seconds(),
+                    checkpoint: None,
+                }));
+            }
+        }
+        let (loss, grads) = problem.lossgrad(spec, step, store);
+        session.apply(store, &grads)?;
+        steps_done = step + 1;
+        if let Some(cb) = ctl.on_step {
+            cb(steps_done, loss);
+        }
+        if let Some(s) = save.as_mut() {
+            if spec.checkpoint_every > 0 && steps_done % spec.checkpoint_every == 0 {
+                s(store, steps_done)?;
+            }
+        }
+    }
+    let final_loss = problem.loss(spec, spec.steps, store);
+    Ok(JobOutcome::Done(JobResult {
+        final_loss,
+        ortho_error: store.max_stiefel_distance(),
+        steps_done,
+        wall_s: clock.seconds(),
+        checkpoint: None,
+    }))
+}
+
+/// Problem data, generated once from the job seed (after the parameter
+/// init draws, in a fixed order — part of the determinism contract).
+enum ProblemData<E: Field> {
+    Procrustes { a: Vec<Mat<E>>, b: Vec<Mat<E>> },
+    Pca { c: Vec<Mat<E>> },
+    Quartic,
+    Replay,
+}
+
+impl<E: Field> ProblemData<E> {
+    fn build(spec: &JobSpec, rng: &mut Rng) -> ProblemData<E> {
+        let (bsz, p, n) = (spec.batch, spec.p, spec.n);
+        match spec.problem {
+            ProblemKind::Procrustes => {
+                let mut a = Vec::with_capacity(bsz);
+                let mut b = Vec::with_capacity(bsz);
+                for _ in 0..bsz {
+                    a.push(Mat::<E>::randn(p, p, rng));
+                    b.push(Mat::<E>::randn(p, n, rng));
+                }
+                ProblemData::Procrustes { a, b }
+            }
+            ProblemKind::Pca => {
+                let c = (0..bsz)
+                    .map(|_| {
+                        let m = Mat::<E>::randn(p, n, rng);
+                        matmul_ah_b(&m, &m).scale(E::from_f64(1.0 / n as f64))
+                    })
+                    .collect();
+                ProblemData::Pca { c }
+            }
+            ProblemKind::Quartic => ProblemData::Quartic,
+            ProblemKind::Replay => ProblemData::Replay,
+        }
+    }
+
+    /// Loss and per-parameter Euclidean gradients at the current iterate
+    /// (indexed by store parameter index, as `OptimSession::apply`
+    /// expects). `step` only matters for the replay stream.
+    fn lossgrad(&self, spec: &JobSpec, step: usize, store: &ParamStore<E>) -> (f64, Vec<Mat<E>>) {
+        self.eval(spec, step, store, true)
+    }
+
+    /// Loss alone — the cancellation/final-report path, skipping the
+    /// gradient products and allocations `lossgrad` would discard.
+    fn loss(&self, spec: &JobSpec, step: usize, store: &ParamStore<E>) -> f64 {
+        self.eval(spec, step, store, false).0
+    }
+
+    fn eval(
+        &self,
+        spec: &JobSpec,
+        step: usize,
+        store: &ParamStore<E>,
+        want_grads: bool,
+    ) -> (f64, Vec<Mat<E>>) {
+        let mut loss = 0.0f64;
+        let mut grads = Vec::with_capacity(if want_grads { store.len() } else { 0 });
+        match self {
+            ProblemData::Procrustes { a, b } => {
+                for i in 0..store.len() {
+                    let r = matmul(&a[i], store.mat(i)).sub(&b[i]);
+                    loss += r.norm_sq().to_f64();
+                    if want_grads {
+                        grads.push(matmul_ah_b(&a[i], &r).scale(E::from_f64(2.0)));
+                    }
+                }
+            }
+            ProblemData::Pca { c } => {
+                for i in 0..store.len() {
+                    let x = store.mat(i);
+                    let xc = matmul(x, &c[i]);
+                    loss -= xc.dot_re(x).to_f64();
+                    if want_grads {
+                        grads.push(xc.scale(E::from_f64(-2.0)));
+                    }
+                }
+            }
+            ProblemData::Quartic => {
+                for i in 0..store.len() {
+                    let x = store.mat(i);
+                    let mut l = 0.0f64;
+                    for &v in x.as_slice() {
+                        let a = v.abs_sq().to_f64();
+                        l += a * a;
+                    }
+                    loss += l;
+                    if want_grads {
+                        grads.push(x.map(|v| v * E::from_re(v.abs_sq()) * E::from_f64(4.0)));
+                    }
+                }
+            }
+            ProblemData::Replay => {
+                // Per-step seeding (not a sequential stream) so a resumed
+                // job replays the exact gradients of the steps it skips.
+                let mut srng = Rng::seed_from_u64(
+                    spec.seed
+                        ^ 0x9E37_79B9_7F4A_7C15
+                        ^ (step as u64).wrapping_mul(0x0100_0000_01b3),
+                );
+                for i in 0..store.len() {
+                    let (p, n) = store.mat(i).shape();
+                    let g = Mat::<E>::randn(p, n, &mut srng);
+                    let nn = g.norm().to_f64().max(1e-12);
+                    let g = g.scale(E::from_f64(0.1 / nn));
+                    loss += store.mat(i).dot_re(&g).to_f64();
+                    if want_grads {
+                        grads.push(g);
+                    }
+                }
+            }
+        }
+        (loss, grads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{Engine, Method};
+
+    fn small(problem: ProblemKind) -> JobSpec {
+        let mut s = JobSpec::new(problem, 3, 3, 5);
+        s.steps = 30;
+        s.seed = 11;
+        s.optimizer = OptimizerSpec::new(Method::Pogo, 0.05);
+        s
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut spec = small(ProblemKind::Procrustes);
+        spec.name = "rt".into();
+        spec.domain = JobDomain::Complex;
+        spec.checkpoint_every = 7;
+        spec.seed = u64::MAX;
+        spec.optimizer = spec.optimizer.with_engine(Engine::BatchedHost);
+        let text = spec.to_json().to_string();
+        let back = JobSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn minimal_json_parses_with_defaults() {
+        let j = Json::parse(
+            r#"{"problem": "quartic", "batch": 2, "p": 2, "n": 4, "steps": 5,
+                "optimizer": {"method": "pogo", "lr": 0.1}}"#,
+        )
+        .unwrap();
+        let spec = JobSpec::from_json(&j).unwrap();
+        assert_eq!(spec.domain, JobDomain::Real);
+        assert_eq!(spec.seed, 0);
+        assert_eq!(spec.checkpoint_every, 0);
+        assert_eq!(spec.optimizer.method, Method::Pogo);
+    }
+
+    #[test]
+    fn invalid_specs_rejected() {
+        // p > n.
+        let j = Json::parse(
+            r#"{"problem": "pca", "batch": 1, "p": 5, "n": 3, "steps": 5,
+                "optimizer": {"method": "pogo", "lr": 0.1}}"#,
+        )
+        .unwrap();
+        assert!(JobSpec::from_json(&j).is_err());
+        // Missing optimizer.
+        let j = Json::parse(r#"{"problem": "pca", "batch": 1, "p": 2, "n": 3, "steps": 5}"#)
+            .unwrap();
+        assert!(JobSpec::from_json(&j).is_err());
+        // Unknown problem.
+        let j = Json::parse(
+            r#"{"problem": "nope", "batch": 1, "p": 2, "n": 3, "steps": 5,
+                "optimizer": {"method": "pogo", "lr": 0.1}}"#,
+        )
+        .unwrap();
+        assert!(JobSpec::from_json(&j).is_err());
+        // Size ceiling.
+        let mut big = small(ProblemKind::Quartic);
+        big.batch = 1 << 22;
+        big.p = 8;
+        big.n = 8;
+        assert!(big.validate().is_err());
+    }
+
+    #[test]
+    fn every_problem_runs_and_stays_feasible() {
+        for &pk in ProblemKind::all() {
+            let spec = small(pk);
+            let out = run_job(&spec, &RunCtl::default()).unwrap();
+            let JobOutcome::Done(r) = out else { panic!("{}: not done", pk.name()) };
+            assert_eq!(r.steps_done, spec.steps, "{}", pk.name());
+            assert!(r.ortho_error <= 1e-3, "{}: {}", pk.name(), r.ortho_error);
+            assert!(r.final_loss.is_finite(), "{}", pk.name());
+        }
+    }
+
+    #[test]
+    fn deterministic_across_runs_and_engines_are_consistent() {
+        let spec = small(ProblemKind::Pca);
+        let a = run_job(&spec, &RunCtl::default()).unwrap();
+        let b = run_job(&spec, &RunCtl::default()).unwrap();
+        let (JobOutcome::Done(ra), JobOutcome::Done(rb)) = (a, b) else { panic!() };
+        assert_eq!(ra.final_loss.to_bits(), rb.final_loss.to_bits());
+        assert_eq!(ra.ortho_error.to_bits(), rb.ortho_error.to_bits());
+
+        // The batched engine follows the loop engine closely (exact
+        // parity is pinned engine-wide by tests/batched_parity.rs).
+        let mut batched = spec.clone();
+        batched.optimizer = batched.optimizer.with_engine(Engine::BatchedHost);
+        let JobOutcome::Done(rc) = run_job(&batched, &RunCtl::default()).unwrap() else {
+            panic!()
+        };
+        assert!((rc.final_loss - ra.final_loss).abs() <= 1e-3 * ra.final_loss.abs().max(1.0));
+    }
+
+    #[test]
+    fn complex_domain_runs() {
+        let mut spec = small(ProblemKind::Quartic);
+        spec.domain = JobDomain::Complex;
+        spec.batch = 2;
+        let JobOutcome::Done(r) = run_job(&spec, &RunCtl::default()).unwrap() else { panic!() };
+        assert!(r.ortho_error <= 1e-3, "{}", r.ortho_error);
+        // Batched complex engine too.
+        spec.optimizer = spec.optimizer.with_engine(Engine::BatchedHost);
+        let JobOutcome::Done(r) = run_job(&spec, &RunCtl::default()).unwrap() else { panic!() };
+        assert!(r.ortho_error <= 1e-3, "{}", r.ortho_error);
+    }
+
+    #[test]
+    fn bad_engine_fails_without_panicking() {
+        let mut spec = small(ProblemKind::Quartic);
+        spec.optimizer = spec.optimizer.with_engine(Engine::Xla);
+        assert!(run_job(&spec, &RunCtl::default()).is_err());
+        // RSDM has no complex engine.
+        let mut spec = small(ProblemKind::Quartic);
+        spec.domain = JobDomain::Complex;
+        spec.optimizer = OptimizerSpec::new(Method::Rsdm, 0.05);
+        assert!(run_job(&spec, &RunCtl::default()).is_err());
+    }
+
+    #[test]
+    fn cancel_flag_stops_mid_run() {
+        let spec = {
+            let mut s = small(ProblemKind::Replay);
+            s.steps = 10_000;
+            s
+        };
+        let cancel = AtomicBool::new(false);
+        let seen = std::cell::Cell::new(0usize);
+        let on_step = |step: usize, _loss: f64| {
+            seen.set(step);
+            if step >= 5 {
+                cancel.store(true, Ordering::Relaxed);
+            }
+        };
+        let ctl = RunCtl { cancel: Some(&cancel), on_step: Some(&on_step), checkpoint_path: None };
+        let JobOutcome::Cancelled(r) = run_job(&spec, &ctl).unwrap() else {
+            panic!("expected cancellation")
+        };
+        assert!(r.steps_done >= 5 && r.steps_done < spec.steps);
+        assert_eq!(seen.get(), r.steps_done);
+    }
+
+    #[test]
+    fn corrupt_checkpoint_degrades_to_fresh_start() {
+        let dir = std::env::temp_dir()
+            .join(format!("pogo_serve_job_corrupt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("job.ckpt");
+        std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+        let mut spec = small(ProblemKind::Quartic);
+        spec.checkpoint_every = 5;
+        let ctl = RunCtl { checkpoint_path: Some(path.clone()), ..Default::default() };
+        let JobOutcome::Done(r) = run_job(&spec, &ctl).unwrap() else {
+            panic!("corrupt checkpoint must not fail the job")
+        };
+        assert_eq!(r.steps_done, spec.steps);
+        // And the bad file has been replaced by a real checkpoint.
+        assert!(checkpoint::load(&path).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn checkpoint_resume_completes_from_midpoint() {
+        let dir = std::env::temp_dir()
+            .join(format!("pogo_serve_job_resume_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("job.ckpt");
+        std::fs::remove_file(&path).ok();
+
+        let mut spec = small(ProblemKind::Procrustes);
+        spec.steps = 40;
+        spec.checkpoint_every = 10;
+
+        // First attempt: cancel after the step-20 checkpoint landed.
+        let cancel = AtomicBool::new(false);
+        let on_step = |step: usize, _loss: f64| {
+            if step >= 25 {
+                cancel.store(true, Ordering::Relaxed);
+            }
+        };
+        let ctl = RunCtl {
+            cancel: Some(&cancel),
+            on_step: Some(&on_step),
+            checkpoint_path: Some(path.clone()),
+        };
+        let JobOutcome::Cancelled(_) = run_job(&spec, &ctl).unwrap() else {
+            panic!("expected cancellation")
+        };
+        let (_, step) = checkpoint::load(&path).unwrap();
+        assert!(step >= 20, "checkpoint at step {step}");
+
+        // Second attempt resumes from the checkpoint and completes.
+        let ctl =
+            RunCtl { cancel: None, on_step: None, checkpoint_path: Some(path.clone()) };
+        let JobOutcome::Done(r) = run_job(&spec, &ctl).unwrap() else { panic!() };
+        assert_eq!(r.steps_done, spec.steps);
+        assert!(r.ortho_error <= 1e-3);
+        assert_eq!(r.checkpoint.as_deref(), Some(path.as_path()));
+
+        // POGO/sgd is stateless, so the resumed trajectory equals the
+        // uninterrupted one bit-for-bit.
+        std::fs::remove_file(&path).ok();
+        let direct =
+            run_job(&spec, &RunCtl { checkpoint_path: Some(path.clone()), ..Default::default() })
+                .unwrap();
+        let JobOutcome::Done(rd) = direct else { panic!() };
+        assert_eq!(rd.final_loss.to_bits(), r.final_loss.to_bits());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,161 @@
+//! Daemon-level counters, rendered as Prometheus text for `GET /metrics`.
+//!
+//! Counters are lock-free atomics bumped by the queue and the HTTP layer;
+//! gauges (queue depth, running jobs) are sampled from the queue at render
+//! time. Per-job series (the loss tail of `GET /v1/jobs/:id`) live in the
+//! queue entries, fed from each worker's
+//! [`MetricLog`](crate::coordinator::MetricLog).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Monotonic counters for one daemon lifetime.
+pub struct ServeMetrics {
+    started: Instant,
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub cancelled: AtomicU64,
+    /// Submissions refused (queue full / draining / invalid spec).
+    pub rejected: AtomicU64,
+    /// Optimizer steps applied across all jobs.
+    pub steps: AtomicU64,
+    /// HTTP requests handled (any endpoint, any status).
+    pub requests: AtomicU64,
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServeMetrics {
+    pub fn new() -> ServeMetrics {
+        ServeMetrics {
+            started: Instant::now(),
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            cancelled: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            steps: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+        }
+    }
+
+    pub fn uptime_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Render the Prometheus exposition text. The gauges are passed in by
+    /// the caller (sampled from the queue under its lock).
+    pub fn render(
+        &self,
+        queue_depth: usize,
+        running: usize,
+        capacity: usize,
+        workers: usize,
+    ) -> String {
+        let mut out = String::with_capacity(1024);
+        let mut metric = |name: &str, kind: &str, help: &str, value: f64| {
+            out.push_str(&format!(
+                "# HELP {name} {help}\n# TYPE {name} {kind}\n{name} {value}\n"
+            ));
+        };
+        metric(
+            "pogo_serve_uptime_seconds",
+            "gauge",
+            "Seconds since the daemon started.",
+            self.uptime_s(),
+        );
+        metric(
+            "pogo_serve_jobs_submitted_total",
+            "counter",
+            "Jobs accepted into the queue.",
+            self.submitted.load(Ordering::Relaxed) as f64,
+        );
+        metric(
+            "pogo_serve_jobs_completed_total",
+            "counter",
+            "Jobs that reached done.",
+            self.completed.load(Ordering::Relaxed) as f64,
+        );
+        metric(
+            "pogo_serve_jobs_failed_total",
+            "counter",
+            "Jobs that failed.",
+            self.failed.load(Ordering::Relaxed) as f64,
+        );
+        metric(
+            "pogo_serve_jobs_cancelled_total",
+            "counter",
+            "Jobs cancelled by clients.",
+            self.cancelled.load(Ordering::Relaxed) as f64,
+        );
+        metric(
+            "pogo_serve_jobs_rejected_total",
+            "counter",
+            "Submissions refused (full queue, draining, invalid spec).",
+            self.rejected.load(Ordering::Relaxed) as f64,
+        );
+        metric(
+            "pogo_serve_steps_total",
+            "counter",
+            "Optimizer steps applied across all jobs.",
+            self.steps.load(Ordering::Relaxed) as f64,
+        );
+        metric(
+            "pogo_serve_http_requests_total",
+            "counter",
+            "HTTP requests handled.",
+            self.requests.load(Ordering::Relaxed) as f64,
+        );
+        metric(
+            "pogo_serve_queue_depth",
+            "gauge",
+            "Jobs queued and not yet running.",
+            queue_depth as f64,
+        );
+        metric(
+            "pogo_serve_jobs_running",
+            "gauge",
+            "Jobs currently executing.",
+            running as f64,
+        );
+        metric(
+            "pogo_serve_queue_capacity",
+            "gauge",
+            "Maximum queued-job backlog.",
+            capacity as f64,
+        );
+        metric("pogo_serve_workers", "gauge", "Worker threads.", workers as f64);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_every_series_once() {
+        let m = ServeMetrics::new();
+        m.submitted.fetch_add(3, Ordering::Relaxed);
+        m.steps.fetch_add(100, Ordering::Relaxed);
+        let text = m.render(2, 1, 256, 4);
+        for name in [
+            "pogo_serve_uptime_seconds",
+            "pogo_serve_jobs_submitted_total 3",
+            "pogo_serve_steps_total 100",
+            "pogo_serve_queue_depth 2",
+            "pogo_serve_jobs_running 1",
+            "pogo_serve_queue_capacity 256",
+            "pogo_serve_workers 4",
+        ] {
+            assert!(text.contains(name), "missing {name} in:\n{text}");
+        }
+        // One TYPE line per series, no duplicates.
+        assert_eq!(text.matches("# TYPE pogo_serve_queue_depth").count(), 1);
+    }
+}

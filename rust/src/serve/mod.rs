@@ -1,0 +1,37 @@
+//! `pogo serve` — a multi-tenant optimization job service over the
+//! engine stack.
+//!
+//! The paper's headline is optimizing thousands of orthogonal
+//! constraints in minutes; this subsystem serves that capability as a
+//! resident daemon instead of a one-shot CLI: clients POST serialized
+//! job specs (problem + [`OptimizerSpec`](crate::coordinator::OptimizerSpec)
+//! + shapes + seed), a bounded queue schedules them across a fixed
+//! worker set (each worker drives the job's own
+//! [`OptimSession`](crate::coordinator::OptimSession)), and results,
+//! loss tails and Prometheus metrics stream back over minimal HTTP/1.1
+//! on `std::net` — no new dependencies.
+//!
+//! - [`job`] — the job model and `run_job`, the single deterministic
+//!   execution path (daemon and direct callers agree bit-for-bit);
+//! - [`queue`] — bounded FIFO + per-job state machine
+//!   (queued → running → done/failed/cancelled), graceful drain,
+//!   restart recovery via persisted state + checkpoints;
+//! - [`http`] / [`api`] — the protocol layer and the `/v1` routes;
+//! - [`client`] — the in-process client the load bench and tests use;
+//! - [`metrics`] — daemon counters for `GET /metrics`.
+//!
+//! Start one with `pogo serve [--addr HOST:PORT] [--workers N]`, or in
+//! process via [`Server::start`] (port 0 = ephemeral, as the tests do).
+
+pub mod api;
+pub mod client;
+pub mod http;
+pub mod job;
+pub mod metrics;
+pub mod queue;
+
+pub use api::{ServeConfig, Server};
+pub use client::ServeClient;
+pub use job::{run_job, JobDomain, JobOutcome, JobResult, JobSpec, JobState, ProblemKind, RunCtl};
+pub use metrics::ServeMetrics;
+pub use queue::{JobId, JobQueue, QueueConfig, SubmitError};

@@ -1,0 +1,760 @@
+//! The job queue: a bounded FIFO with a per-job state machine
+//! (queued → running → done/failed/cancelled) executed by a fixed worker
+//! set.
+//!
+//! Each worker claims one job at a time and drives it through
+//! [`run_job`](super::job::run_job) (which owns the job's
+//! `OptimSession`), recording the loss series in a
+//! [`MetricLog`](crate::coordinator::MetricLog) whose tail feeds
+//! `GET /v1/jobs/:id`. Worker panics are caught and surface as `failed`
+//! jobs — the daemon never dies on a bad spec.
+//!
+//! Shutdown is graceful: workers stop claiming new jobs and drain the
+//! ones they are running; still-queued jobs stay queued (and, with a
+//! state dir, persisted for the next daemon). With a `state_dir`, every
+//! job's spec + state lands in `job-<id>.json` and real-domain jobs with
+//! `checkpoint_every > 0` checkpoint to `job-<id>.ckpt`; a restarted
+//! queue re-lists unfinished jobs and resumes them from their
+//! checkpoints.
+
+use super::job::{self, JobOutcome, JobResult, JobSpec, JobState, RunCtl};
+use super::metrics::ServeMetrics;
+use crate::coordinator::MetricLog;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::{BTreeMap, VecDeque};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+pub type JobId = u64;
+
+/// Kept loss-tail length per job (the "metrics tail" of the status API).
+const TAIL_LEN: usize = 8;
+
+/// Terminal jobs retained in memory for status queries. Older terminal
+/// entries are evicted (oldest id first) so a resident daemon's job map
+/// and `GET /v1/jobs` stay bounded; with a state dir the evicted jobs'
+/// files remain on disk for offline inspection.
+const MAX_TERMINAL_RETAINED: usize = 1024;
+
+/// Queue sizing and persistence.
+#[derive(Clone, Debug)]
+pub struct QueueConfig {
+    /// Fixed worker thread count.
+    pub workers: usize,
+    /// Max queued (not yet running) jobs; submissions beyond it are
+    /// refused with [`SubmitError::Full`].
+    pub capacity: usize,
+    /// Persist job state (+ checkpoints) here; `None` = in-memory only.
+    pub state_dir: Option<PathBuf>,
+}
+
+impl Default for QueueConfig {
+    fn default() -> Self {
+        QueueConfig {
+            workers: crate::util::pool::num_threads().min(4).max(1),
+            capacity: 256,
+            state_dir: None,
+        }
+    }
+}
+
+/// Why a submission was refused.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// Backlog at capacity; retry later.
+    Full(usize),
+    /// The queue is shutting down.
+    Draining,
+    /// The spec failed admission validation.
+    Invalid(anyhow::Error),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Full(cap) => write!(f, "queue full (capacity {cap})"),
+            SubmitError::Draining => write!(f, "queue is draining (shutdown in progress)"),
+            SubmitError::Invalid(e) => write!(f, "invalid job: {e:#}"),
+        }
+    }
+}
+
+/// One tracked job.
+struct Entry {
+    spec: JobSpec,
+    state: JobState,
+    error: Option<String>,
+    result: Option<JobResult>,
+    steps_done: usize,
+    /// Last [`TAIL_LEN`] (step, wall_s, loss) records.
+    tail: VecDeque<(usize, f64, f64)>,
+    cancel: Arc<AtomicBool>,
+}
+
+#[derive(Default)]
+struct State {
+    next_id: JobId,
+    pending: VecDeque<JobId>,
+    jobs: BTreeMap<JobId, Entry>,
+    draining: bool,
+    running: usize,
+}
+
+impl State {
+    /// Evict the oldest terminal entries beyond [`MAX_TERMINAL_RETAINED`]
+    /// (in-memory only; persisted state files are left alone).
+    fn prune_terminal(&mut self) {
+        let terminal: Vec<JobId> = self
+            .jobs
+            .iter()
+            .filter(|(_, e)| e.state.is_terminal())
+            .map(|(&id, _)| id)
+            .collect();
+        if terminal.len() > MAX_TERMINAL_RETAINED {
+            for id in &terminal[..terminal.len() - MAX_TERMINAL_RETAINED] {
+                self.jobs.remove(id);
+            }
+        }
+    }
+}
+
+struct Inner {
+    cfg: QueueConfig,
+    metrics: Arc<ServeMetrics>,
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+/// The queue handle. Cheap to share (`Arc` it once in the server).
+pub struct JobQueue {
+    inner: Arc<Inner>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl JobQueue {
+    /// Create the queue, recover any persisted jobs, spawn the workers.
+    pub fn start(cfg: QueueConfig, metrics: Arc<ServeMetrics>) -> Result<Arc<JobQueue>> {
+        if let Some(dir) = &cfg.state_dir {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating state dir {}", dir.display()))?;
+        }
+        // Zero workers is allowed (a queue that only accepts/persists —
+        // used by tests); the server layer guards its own default.
+        let workers = cfg.workers;
+        let inner = Arc::new(Inner {
+            cfg,
+            metrics,
+            state: Mutex::new(State { next_id: 1, ..State::default() }),
+            cv: Condvar::new(),
+        });
+        inner.recover();
+        let queue = Arc::new(JobQueue { inner, workers: Mutex::new(Vec::new()) });
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let inner = queue.inner.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("pogo-serve-worker-{w}"))
+                    .spawn(move || worker_loop(inner))
+                    .context("spawning worker thread")?,
+            );
+        }
+        *queue.workers.lock().unwrap() = handles;
+        Ok(queue)
+    }
+
+    /// Submit a job; returns its id or why it was refused.
+    pub fn submit(&self, spec: JobSpec) -> std::result::Result<JobId, SubmitError> {
+        if let Err(e) = spec.validate() {
+            self.inner.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::Invalid(e));
+        }
+        let id = {
+            let mut st = self.inner.state.lock().unwrap();
+            if st.draining {
+                self.inner.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(SubmitError::Draining);
+            }
+            if st.pending.len() >= self.inner.cfg.capacity {
+                self.inner.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(SubmitError::Full(self.inner.cfg.capacity));
+            }
+            let id = st.next_id;
+            st.next_id += 1;
+            st.jobs.insert(
+                id,
+                Entry {
+                    spec,
+                    state: JobState::Queued,
+                    error: None,
+                    result: None,
+                    steps_done: 0,
+                    tail: VecDeque::new(),
+                    cancel: Arc::new(AtomicBool::new(false)),
+                },
+            );
+            st.pending.push_back(id);
+            id
+        };
+        self.inner.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        self.inner.persist(id);
+        // notify_all, not notify_one: the condvar is shared with
+        // wait_terminal waiters, and a single wakeup could land on one of
+        // them while an idle worker keeps sleeping.
+        self.inner.cv.notify_all();
+        Ok(id)
+    }
+
+    /// Cancel a job. Queued jobs flip to `cancelled` immediately; running
+    /// jobs get their flag set and finish at the next step boundary.
+    /// Returns the state after the call, or `None` for unknown ids.
+    pub fn cancel(&self, id: JobId) -> Option<JobState> {
+        let (state, persist) = {
+            let mut st = self.inner.state.lock().unwrap();
+            let current = st.jobs.get(&id)?.state;
+            match current {
+                JobState::Queued => {
+                    st.pending.retain(|&q| q != id);
+                    if let Some(e) = st.jobs.get_mut(&id) {
+                        e.state = JobState::Cancelled;
+                        e.result = None;
+                    }
+                    self.inner.metrics.cancelled.fetch_add(1, Ordering::Relaxed);
+                    (JobState::Cancelled, true)
+                }
+                JobState::Running => {
+                    if let Some(e) = st.jobs.get(&id) {
+                        e.cancel.store(true, Ordering::Relaxed);
+                    }
+                    // Persist too: the state file records cancel_requested
+                    // so a crash before the next step boundary cannot
+                    // resurrect an acknowledged cancellation on restart.
+                    (JobState::Running, true)
+                }
+                s => (s, false),
+            }
+        };
+        if persist {
+            self.inner.persist(id);
+            self.inner.prune();
+            self.inner.cv.notify_all();
+        }
+        Some(state)
+    }
+
+    /// Status snapshot for the API (`None` for unknown ids).
+    pub fn status_json(&self, id: JobId) -> Option<Json> {
+        let st = self.inner.state.lock().unwrap();
+        let e = st.jobs.get(&id)?;
+        Some(entry_json(id, e, true))
+    }
+
+    /// (state, result, error) snapshot, for the result endpoint/tests.
+    pub fn snapshot(&self, id: JobId) -> Option<(JobState, Option<JobResult>, Option<String>)> {
+        let st = self.inner.state.lock().unwrap();
+        let e = st.jobs.get(&id)?;
+        Some((e.state, e.result.clone(), e.error.clone()))
+    }
+
+    /// All jobs, compact.
+    pub fn list_json(&self) -> Json {
+        let st = self.inner.state.lock().unwrap();
+        Json::arr(st.jobs.iter().map(|(&id, e)| entry_json(id, e, false)))
+    }
+
+    /// (queued, running) — the gauges of `GET /metrics`.
+    pub fn depth_running(&self) -> (usize, usize) {
+        let st = self.inner.state.lock().unwrap();
+        (st.pending.len(), st.running)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.inner.cfg.capacity
+    }
+
+    pub fn workers(&self) -> usize {
+        self.inner.cfg.workers
+    }
+
+    /// Block until the job reaches a terminal state (or the deadline).
+    /// Returns the last observed state; `None` for unknown ids.
+    pub fn wait_terminal(&self, id: JobId, timeout: Duration) -> Option<JobState> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            let state = st.jobs.get(&id)?.state;
+            if state.is_terminal() {
+                return Some(state);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Some(state);
+            }
+            let (guard, _) = self.inner.cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+
+    /// Flip the queue into draining (workers stop claiming and exit once
+    /// idle) without blocking on them — what `Server`'s `Drop` uses.
+    pub fn begin_drain(&self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.draining = true;
+        }
+        self.inner.cv.notify_all();
+    }
+
+    /// Graceful shutdown: stop claiming, drain in-flight jobs, join the
+    /// workers. Queued jobs stay queued (persisted if a state dir is
+    /// configured, for the next daemon to recover).
+    pub fn shutdown(&self) {
+        self.begin_drain();
+        let handles = std::mem::take(&mut *self.workers.lock().unwrap());
+        for h in handles {
+            h.join().ok();
+        }
+    }
+}
+
+fn entry_json(id: JobId, e: &Entry, with_tail: bool) -> Json {
+    let mut fields = vec![
+        ("id", Json::num(id as f64)),
+        ("name", Json::str(e.spec.name.clone())),
+        ("state", Json::str(e.state.name())),
+        ("problem", Json::str(e.spec.problem.name())),
+        ("domain", Json::str(e.spec.domain.name())),
+        ("engine", Json::str(e.spec.optimizer.engine.name())),
+        ("batch", Json::num(e.spec.batch as f64)),
+        ("p", Json::num(e.spec.p as f64)),
+        ("n", Json::num(e.spec.n as f64)),
+        ("steps", Json::num(e.spec.steps as f64)),
+        ("steps_done", Json::num(e.steps_done as f64)),
+    ];
+    if let Some(err) = &e.error {
+        fields.push(("error", Json::str(err.clone())));
+    }
+    if let Some(r) = &e.result {
+        fields.push(("result", r.to_json()));
+    }
+    if with_tail {
+        fields.push((
+            "tail",
+            Json::arr(e.tail.iter().map(|&(step, wall, loss)| {
+                Json::obj(vec![
+                    ("step", Json::num(step as f64)),
+                    ("wall_s", Json::num(wall)),
+                    ("loss", Json::num(loss)),
+                ])
+            })),
+        ));
+    }
+    Json::obj(fields)
+}
+
+impl Inner {
+    /// Bound the in-memory terminal-job history (after persisting, so
+    /// an evicted job's state file is already final on disk).
+    fn prune(&self) {
+        self.state.lock().unwrap().prune_terminal();
+    }
+
+    /// Per-step progress from a worker: bump the entry and the counters.
+    fn progress(&self, id: JobId, step: usize, wall_s: f64, loss: f64) {
+        self.metrics.steps.fetch_add(1, Ordering::Relaxed);
+        let mut st = self.state.lock().unwrap();
+        if let Some(e) = st.jobs.get_mut(&id) {
+            e.steps_done = step;
+            if e.tail.len() == TAIL_LEN {
+                e.tail.pop_front();
+            }
+            e.tail.push_back((step, wall_s, loss));
+        }
+    }
+
+    /// Checkpoint path for a job, when persistence applies to it.
+    fn checkpoint_path(&self, id: JobId, spec: &JobSpec) -> Option<PathBuf> {
+        if spec.checkpoint_every == 0 || spec.domain != super::job::JobDomain::Real {
+            return None;
+        }
+        self.cfg.state_dir.as_ref().map(|d| d.join(format!("job-{id}.ckpt")))
+    }
+
+    /// Persist one job's spec + state to the state dir (best effort: a
+    /// full disk must not take the daemon down).
+    fn persist(&self, id: JobId) {
+        let Some(dir) = &self.cfg.state_dir else { return };
+        let json = {
+            let st = self.state.lock().unwrap();
+            let Some(e) = st.jobs.get(&id) else { return };
+            let mut fields = vec![
+                ("id", Json::num(id as f64)),
+                ("state", Json::str(e.state.name())),
+                ("spec", e.spec.to_json()),
+            ];
+            if e.cancel.load(Ordering::Relaxed) {
+                fields.push(("cancel_requested", Json::Bool(true)));
+            }
+            if let Some(err) = &e.error {
+                fields.push(("error", Json::str(err.clone())));
+            }
+            if let Some(r) = &e.result {
+                fields.push(("result", r.to_json()));
+            }
+            Json::obj(fields)
+        };
+        // Write-then-rename with a per-call unique temp name: a crash
+        // mid-write never tears the state file, and two racing persists
+        // (cancel ack vs worker finish) each land a complete document —
+        // whichever rename lands last wins, and recover() maps either to
+        // the same terminal outcome.
+        static PERSIST_SEQ: std::sync::atomic::AtomicU64 =
+            std::sync::atomic::AtomicU64::new(0);
+        let seq = PERSIST_SEQ.fetch_add(1, Ordering::Relaxed);
+        let path = dir.join(format!("job-{id}.json"));
+        let tmp = dir.join(format!("job-{id}.json.{seq}.tmp"));
+        let write = std::fs::write(&tmp, json.to_string_pretty() + "\n")
+            .and_then(|()| std::fs::rename(&tmp, &path));
+        if let Err(e) = write {
+            std::fs::remove_file(&tmp).ok();
+            log::warn!("failed to persist job {id} to {}: {e}", path.display());
+        }
+    }
+
+    /// Re-list persisted jobs on startup. Unfinished jobs (queued or
+    /// running at the previous daemon's death) are re-queued — their
+    /// checkpoints, if any, make the re-run resume instead of restart.
+    /// Terminal jobs stay queryable. Malformed files are skipped with a
+    /// warning, never fatal.
+    fn recover(&self) {
+        let Some(dir) = &self.cfg.state_dir else { return };
+        let Ok(entries) = std::fs::read_dir(dir) else { return };
+        let mut found: Vec<(JobId, Json)> = Vec::new();
+        for entry in entries.flatten() {
+            let path = entry.path();
+            let name = path.file_name().and_then(|s| s.to_str()).unwrap_or("");
+            let Some(id) = name
+                .strip_prefix("job-")
+                .and_then(|s| s.strip_suffix(".json"))
+                .and_then(|s| s.parse::<JobId>().ok())
+            else {
+                continue;
+            };
+            match Json::parse_file(&path) {
+                Ok(j) => found.push((id, j)),
+                Err(e) => log::warn!("skipping unreadable state file {}: {e:#}", path.display()),
+            }
+        }
+        found.sort_by_key(|&(id, _)| id);
+        let mut st = self.state.lock().unwrap();
+        for (id, j) in found {
+            let spec = match JobSpec::from_json(j.get("spec")) {
+                Ok(s) => s,
+                Err(e) => {
+                    log::warn!("skipping persisted job {id} with bad spec: {e:#}");
+                    continue;
+                }
+            };
+            let state = j
+                .get("state")
+                .as_str()
+                .and_then(JobState::parse)
+                .unwrap_or(JobState::Queued);
+            // An acknowledged-but-unfinished cancellation lands as
+            // cancelled, never re-queued.
+            let state = if !state.is_terminal()
+                && j.get("cancel_requested").as_bool().unwrap_or(false)
+            {
+                JobState::Cancelled
+            } else {
+                state
+            };
+            let result = JobResult::from_json(j.get("result")).ok();
+            let error = j.get("error").as_str().map(str::to_string);
+            let requeue = !state.is_terminal();
+            let steps_done =
+                if requeue { 0 } else { result.as_ref().map(|r| r.steps_done).unwrap_or(0) };
+            st.jobs.insert(
+                id,
+                Entry {
+                    spec,
+                    state: if requeue { JobState::Queued } else { state },
+                    error,
+                    result,
+                    steps_done,
+                    tail: VecDeque::new(),
+                    cancel: Arc::new(AtomicBool::new(false)),
+                },
+            );
+            if requeue {
+                st.pending.push_back(id);
+                log::info!("recovered unfinished job {id}; re-queued");
+            }
+            st.next_id = st.next_id.max(id + 1);
+        }
+        st.prune_terminal();
+    }
+}
+
+fn worker_loop(inner: Arc<Inner>) {
+    loop {
+        // Claim one job (or exit once draining).
+        let claimed = {
+            let mut st = inner.state.lock().unwrap();
+            loop {
+                if st.draining {
+                    break None;
+                }
+                if let Some(id) = st.pending.pop_front() {
+                    let claim = match st.jobs.get_mut(&id) {
+                        Some(e) => {
+                            e.state = JobState::Running;
+                            (id, e.spec.clone(), e.cancel.clone())
+                        }
+                        None => continue, // stale id; keep looking
+                    };
+                    st.running += 1;
+                    break Some(claim);
+                }
+                st = inner.cv.wait(st).unwrap();
+            }
+        };
+        let Some((id, spec, cancel)) = claimed else { return };
+        inner.persist(id);
+
+        // Run the job, recording its loss series through the
+        // coordinator's MetricLog (its wall-stamped tail is what the
+        // status endpoint serves).
+        let log = std::cell::RefCell::new(MetricLog::new(format!("job-{id}")));
+        let inner_cb = inner.clone();
+        let on_step = |step: usize, loss: f64| {
+            let wall = {
+                let mut lg = log.borrow_mut();
+                lg.record(step, &[("loss", loss)]);
+                lg.elapsed()
+            };
+            inner_cb.progress(id, step, wall, loss);
+        };
+        let ctl = RunCtl {
+            cancel: Some(&cancel),
+            on_step: Some(&on_step),
+            checkpoint_path: inner.checkpoint_path(id, &spec),
+        };
+        let outcome =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job::run_job(&spec, &ctl)));
+
+        {
+            let mut st = inner.state.lock().unwrap();
+            st.running -= 1;
+            if let Some(e) = st.jobs.get_mut(&id) {
+                match outcome {
+                    Ok(Ok(JobOutcome::Done(r))) => {
+                        e.state = JobState::Done;
+                        e.steps_done = r.steps_done;
+                        e.result = Some(r);
+                        inner.metrics.completed.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Ok(Ok(JobOutcome::Cancelled(r))) => {
+                        e.state = JobState::Cancelled;
+                        e.steps_done = r.steps_done;
+                        e.result = Some(r);
+                        inner.metrics.cancelled.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Ok(Err(err)) => {
+                        e.state = JobState::Failed;
+                        e.error = Some(format!("{err:#}"));
+                        inner.metrics.failed.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(panic) => {
+                        let msg = panic
+                            .downcast_ref::<String>()
+                            .map(String::as_str)
+                            .or_else(|| panic.downcast_ref::<&str>().copied())
+                            .unwrap_or("worker panicked");
+                        e.state = JobState::Failed;
+                        e.error = Some(format!("panic: {msg}"));
+                        inner.metrics.failed.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+        inner.persist(id);
+        inner.prune();
+        inner.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::OptimizerSpec;
+    use crate::optim::{Engine, Method};
+    use crate::serve::job::ProblemKind;
+
+    fn quick_spec(steps: usize) -> JobSpec {
+        let mut s = JobSpec::new(ProblemKind::Quartic, 2, 2, 4);
+        s.steps = steps;
+        s.seed = 3;
+        s.optimizer = OptimizerSpec::new(Method::Pogo, 0.05);
+        s
+    }
+
+    fn start(workers: usize, capacity: usize) -> Arc<JobQueue> {
+        JobQueue::start(
+            QueueConfig { workers, capacity, state_dir: None },
+            Arc::new(ServeMetrics::new()),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn runs_jobs_to_done() {
+        let q = start(2, 16);
+        let a = q.submit(quick_spec(20)).unwrap();
+        let b = q.submit(quick_spec(20)).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(q.wait_terminal(a, Duration::from_secs(30)), Some(JobState::Done));
+        assert_eq!(q.wait_terminal(b, Duration::from_secs(30)), Some(JobState::Done));
+        let (state, result, error) = q.snapshot(a).unwrap();
+        assert_eq!(state, JobState::Done);
+        assert!(error.is_none());
+        let r = result.unwrap();
+        assert_eq!(r.steps_done, 20);
+        assert!(r.ortho_error <= 1e-3);
+        // The metrics tail survives in the status JSON.
+        let j = q.status_json(a).unwrap();
+        assert_eq!(j.get("state").as_str(), Some("done"));
+        assert!(!j.get("tail").as_arr().unwrap().is_empty());
+        q.shutdown();
+    }
+
+    #[test]
+    fn bad_spec_fails_cleanly() {
+        let q = start(1, 4);
+        let mut spec = quick_spec(5);
+        spec.optimizer = spec.optimizer.with_engine(Engine::Xla); // no registry in serve
+        let id = q.submit(spec).unwrap();
+        assert_eq!(q.wait_terminal(id, Duration::from_secs(30)), Some(JobState::Failed));
+        let (_, _, error) = q.snapshot(id).unwrap();
+        assert!(error.unwrap().contains("registry"), "error should name the cause");
+        // The queue is still alive after the failure.
+        let ok = q.submit(quick_spec(5)).unwrap();
+        assert_eq!(q.wait_terminal(ok, Duration::from_secs(30)), Some(JobState::Done));
+        q.shutdown();
+    }
+
+    #[test]
+    fn cancel_queued_job_and_capacity_limit() {
+        // One worker, one long job occupying it; the backlog then fills.
+        let q = start(1, 1);
+        let long = q.submit(quick_spec(200_000)).unwrap();
+        // Wait until the long job is claimed so the backlog is empty.
+        let t0 = Instant::now();
+        while q.depth_running() != (0, 1) {
+            assert!(t0.elapsed() < Duration::from_secs(10), "worker never claimed the job");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let queued = q.submit(quick_spec(5)).unwrap();
+        match q.submit(quick_spec(5)) {
+            Err(SubmitError::Full(1)) => {}
+            other => panic!("expected Full, got {other:?}"),
+        }
+        // Cancel the queued job: immediate, no worker involved.
+        assert_eq!(q.cancel(queued), Some(JobState::Cancelled));
+        // Cancel the running job: flag flips, worker drains at a step edge.
+        q.cancel(long);
+        assert_eq!(q.wait_terminal(long, Duration::from_secs(30)), Some(JobState::Cancelled));
+        assert!(q.cancel(9999).is_none());
+        q.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_in_flight_and_refuses_new() {
+        let q = start(1, 8);
+        let id = q.submit(quick_spec(50)).unwrap();
+        q.shutdown();
+        // The in-flight (or queued-then-drained-by-timing) job is not
+        // left running; after shutdown new submissions are refused.
+        match q.submit(quick_spec(5)) {
+            Err(SubmitError::Draining) => {}
+            other => panic!("expected Draining, got {other:?}"),
+        }
+        let (state, _, _) = q.snapshot(id).unwrap();
+        assert!(
+            state == JobState::Done || state == JobState::Queued,
+            "drained job ended as {state:?}"
+        );
+    }
+
+    #[test]
+    fn acknowledged_cancellation_survives_a_crash() {
+        // A state file left by a daemon that died after acknowledging a
+        // DELETE of a running job: recovered as cancelled, never re-run.
+        let dir = std::env::temp_dir()
+            .join(format!("pogo_serve_queue_cancelreq_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let state = Json::obj(vec![
+            ("id", Json::num(5.0)),
+            ("state", Json::str("running")),
+            ("cancel_requested", Json::Bool(true)),
+            ("spec", quick_spec(10).to_json()),
+        ]);
+        std::fs::write(dir.join("job-5.json"), state.to_string_pretty()).unwrap();
+        let q = JobQueue::start(
+            QueueConfig { workers: 1, capacity: 4, state_dir: Some(dir.clone()) },
+            Arc::new(ServeMetrics::new()),
+        )
+        .unwrap();
+        let (state, _, _) = q.snapshot(5).unwrap();
+        assert_eq!(state, JobState::Cancelled);
+        q.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn persists_and_recovers_unfinished_jobs() {
+        let dir = std::env::temp_dir()
+            .join(format!("pogo_serve_queue_recover_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+
+        // First daemon: enqueue two jobs into a zero-worker queue (they
+        // stay queued), then shut down.
+        let q = JobQueue::start(
+            QueueConfig { workers: 0, capacity: 8, state_dir: Some(dir.clone()) },
+            Arc::new(ServeMetrics::new()),
+        )
+        .unwrap();
+        let a = q.submit(quick_spec(10)).unwrap();
+        let b = q.submit(quick_spec(10)).unwrap();
+        q.shutdown();
+        drop(q);
+
+        // Second daemon recovers both, runs them to done, and keeps ids.
+        let q2 = JobQueue::start(
+            QueueConfig { workers: 2, capacity: 8, state_dir: Some(dir.clone()) },
+            Arc::new(ServeMetrics::new()),
+        )
+        .unwrap();
+        assert_eq!(q2.wait_terminal(a, Duration::from_secs(30)), Some(JobState::Done));
+        assert_eq!(q2.wait_terminal(b, Duration::from_secs(30)), Some(JobState::Done));
+        // Fresh ids don't collide with recovered ones.
+        let c = q2.submit(quick_spec(5)).unwrap();
+        assert!(c > b);
+        // Terminal states were persisted for the third daemon.
+        q2.shutdown();
+        let q3 = JobQueue::start(
+            QueueConfig { workers: 0, capacity: 8, state_dir: Some(dir.clone()) },
+            Arc::new(ServeMetrics::new()),
+        )
+        .unwrap();
+        let (state, result, _) = q3.snapshot(a).unwrap();
+        assert_eq!(state, JobState::Done);
+        assert!(result.unwrap().ortho_error <= 1e-3);
+        q3.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

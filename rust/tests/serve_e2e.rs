@@ -1,0 +1,263 @@
+//! End-to-end tests for `pogo serve`: a real daemon on an ephemeral
+//! loopback port, driven over TCP by concurrent clients.
+//!
+//! The headline test pins the serve determinism contract: 8+ concurrent
+//! submissions (mixed `rust`/`batched-host` engines, real and complex
+//! domains) all reach `done`, and each job's final loss equals a direct
+//! `run_job` execution of the same spec+seed **bit-for-bit** — the
+//! daemon adds scheduling, not numerics.
+
+use pogo::coordinator::OptimizerSpec;
+use pogo::optim::{Engine, Method};
+use pogo::serve::{
+    run_job, JobDomain, JobOutcome, JobSpec, ProblemKind, RunCtl, ServeClient, ServeConfig,
+    Server,
+};
+use std::time::Duration;
+
+const WAIT: Duration = Duration::from_secs(120);
+
+fn start_server(workers: usize, capacity: usize) -> (Server, ServeClient) {
+    let server = Server::start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers,
+        capacity,
+        state_dir: None,
+    })
+    .expect("server should bind an ephemeral port");
+    let client = ServeClient::new(server.addr().to_string());
+    (server, client)
+}
+
+fn spec(problem: ProblemKind, engine: Engine, domain: JobDomain, seed: u64) -> JobSpec {
+    let mut s = JobSpec::new(problem, 4, 3, 6);
+    s.name = format!("{}-{}-{}", problem.name(), engine.name(), domain.name());
+    s.domain = domain;
+    s.steps = 40;
+    s.seed = seed;
+    s.optimizer = OptimizerSpec::new(Method::Pogo, 0.05).with_engine(engine);
+    s
+}
+
+/// The acceptance-criteria test: concurrent mixed-engine submissions,
+/// bit-for-bit parity with direct OptimSession-backed runs.
+#[test]
+fn concurrent_jobs_match_direct_runs_bit_for_bit() {
+    let (server, client) = start_server(3, 64);
+
+    let mut specs = vec![
+        spec(ProblemKind::Procrustes, Engine::Rust, JobDomain::Real, 1),
+        spec(ProblemKind::Procrustes, Engine::BatchedHost, JobDomain::Real, 2),
+        spec(ProblemKind::Pca, Engine::Rust, JobDomain::Real, 3),
+        spec(ProblemKind::Pca, Engine::BatchedHost, JobDomain::Real, 4),
+        spec(ProblemKind::Quartic, Engine::BatchedHost, JobDomain::Real, 5),
+        spec(ProblemKind::Replay, Engine::Rust, JobDomain::Real, 6),
+        // Complex Stiefel on both engines.
+        spec(ProblemKind::Quartic, Engine::Rust, JobDomain::Complex, 7),
+        spec(ProblemKind::Replay, Engine::BatchedHost, JobDomain::Complex, 8),
+    ];
+    // A Landing job for method variety (small lr keeps it well within
+    // the 1e-3 feasibility gate).
+    let mut landing = spec(ProblemKind::Pca, Engine::BatchedHost, JobDomain::Real, 9);
+    landing.optimizer = OptimizerSpec::new(Method::Landing, 0.02).with_engine(Engine::BatchedHost);
+    specs.push(landing);
+    assert!(specs.len() >= 8, "acceptance criteria: >= 8 concurrent submissions");
+
+    // Submit all jobs concurrently, one client thread each.
+    let results: Vec<(JobSpec, f64, f64)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = specs
+            .iter()
+            .map(|s| {
+                let client = client.clone();
+                let s = s.clone();
+                scope.spawn(move || {
+                    let id = client.submit(&s).expect("submit");
+                    let result = client
+                        .wait_result(id, WAIT)
+                        .unwrap_or_else(|e| panic!("{}: {e:#}", s.name));
+                    let loss = result.get("final_loss").as_f64().expect("final_loss");
+                    let ortho = result.get("ortho_error").as_f64().expect("ortho_error");
+                    assert_eq!(
+                        result.get("steps_done").as_usize(),
+                        Some(s.steps),
+                        "{}",
+                        s.name
+                    );
+                    (s, loss, ortho)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+
+    // Every job done, feasible, and bit-identical to a direct run.
+    for (s, loss, ortho) in &results {
+        assert!(*ortho <= 1e-3, "{}: ortho error {ortho}", s.name);
+        let JobOutcome::Done(direct) = run_job(s, &RunCtl::default()).expect("direct run")
+        else {
+            panic!("{}: direct run not done", s.name)
+        };
+        assert_eq!(
+            loss.to_bits(),
+            direct.final_loss.to_bits(),
+            "{}: served {} vs direct {} — not bit-identical",
+            s.name,
+            loss,
+            direct.final_loss
+        );
+        assert_eq!(ortho.to_bits(), direct.ortho_error.to_bits(), "{}", s.name);
+    }
+
+    // The daemon's counters saw all of it.
+    let metrics = client.metrics().expect("metrics");
+    let completed = metrics
+        .lines()
+        .find(|l| l.starts_with("pogo_serve_jobs_completed_total"))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|v| v.parse::<f64>().ok())
+        .expect("completed counter");
+    assert!(completed >= specs.len() as f64, "completed {completed}");
+    server.shutdown();
+}
+
+#[test]
+fn cancel_and_queue_full_over_http() {
+    // One worker and a backlog of one: the long job occupies the worker,
+    // the next job queues, the third submission is refused with 429.
+    let (server, client) = start_server(1, 1);
+    let mut long = spec(ProblemKind::Replay, Engine::Rust, JobDomain::Real, 10);
+    long.steps = 500_000;
+    let long_id = client.submit(&long).expect("submit long");
+    // Wait until the worker claims it.
+    let deadline = std::time::Instant::now() + WAIT;
+    loop {
+        let st = client.status(long_id).expect("status");
+        if st.get("state").as_str() == Some("running") {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "long job never started");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let queued_id = client.submit(&spec(ProblemKind::Quartic, Engine::Rust, JobDomain::Real, 11))
+        .expect("submit queued");
+    let err = client
+        .submit(&spec(ProblemKind::Quartic, Engine::Rust, JobDomain::Real, 12))
+        .expect_err("third submission should be refused");
+    assert!(format!("{err:#}").contains("429"), "{err:#}");
+
+    // Cancel the queued job (immediate) and the running one (drains at a
+    // step boundary); both end as cancelled.
+    let j = client.cancel(queued_id).expect("cancel queued");
+    assert_eq!(j.get("state").as_str(), Some("cancelled"));
+    client.cancel(long_id).expect("cancel running");
+    let st = client.wait_terminal(long_id, WAIT).expect("terminal");
+    assert_eq!(st.get("state").as_str(), Some("cancelled"));
+    // A cancelled job still reports its partial trajectory.
+    let r = client.result(long_id).expect("partial result");
+    assert!(r.get("steps_done").as_usize().unwrap() < long.steps);
+    server.shutdown();
+}
+
+#[test]
+fn failed_job_reports_cause_and_daemon_survives() {
+    let (server, client) = start_server(1, 8);
+    // XLA engine without a registry fails at session build.
+    let mut bad = spec(ProblemKind::Quartic, Engine::Rust, JobDomain::Real, 13);
+    bad.optimizer = bad.optimizer.with_engine(Engine::Xla);
+    let id = client.submit(&bad).expect("submit");
+    let st = client.wait_terminal(id, WAIT).expect("terminal");
+    assert_eq!(st.get("state").as_str(), Some("failed"));
+    assert!(st.get("error").as_str().unwrap_or("").contains("registry"));
+    // GET result of a failed job is a 409 naming the failure.
+    let err = client.result(id).expect_err("no result for failed job");
+    assert!(format!("{err:#}").contains("409"), "{err:#}");
+    // Daemon is still healthy and takes more work.
+    let ok = client
+        .submit(&spec(ProblemKind::Quartic, Engine::BatchedHost, JobDomain::Real, 14))
+        .expect("submit after failure");
+    let r = client.wait_result(ok, WAIT).expect("job after failure");
+    assert!(r.get("ortho_error").as_f64().unwrap() <= 1e-3);
+    server.shutdown();
+}
+
+#[test]
+fn restart_recovers_and_resumes_checkpointed_jobs() {
+    let dir = std::env::temp_dir().join(format!("pogo_serve_e2e_state_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let mut job = spec(ProblemKind::Procrustes, Engine::Rust, JobDomain::Real, 21);
+    job.steps = 2000;
+    job.checkpoint_every = 100;
+
+    // Simulate a daemon that died mid-job: run the first ~550 steps
+    // directly (same execution path the worker uses), leaving a
+    // checkpoint behind, and persist the job's state file as `running` —
+    // exactly what a crashed `pogo serve --state-dir` leaves on disk.
+    let crashed_id: u64 = 77;
+    let ckpt = dir.join(format!("job-{crashed_id}.ckpt"));
+    {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let cancel = AtomicBool::new(false);
+        let on_step = |step: usize, _loss: f64| {
+            if step >= 550 {
+                cancel.store(true, Ordering::Relaxed);
+            }
+        };
+        let ctl = RunCtl {
+            cancel: Some(&cancel),
+            on_step: Some(&on_step),
+            checkpoint_path: Some(ckpt.clone()),
+        };
+        let JobOutcome::Cancelled(_) = run_job(&job, &ctl).expect("interrupted run") else {
+            panic!("expected the simulated crash to stop mid-run")
+        };
+        assert!(ckpt.exists(), "checkpoint should have landed before the crash");
+    }
+    let state_file = pogo::util::json::Json::obj(vec![
+        ("id", pogo::util::json::Json::num(crashed_id as f64)),
+        ("state", pogo::util::json::Json::str("running")),
+        ("spec", job.to_json()),
+    ]);
+    std::fs::write(dir.join(format!("job-{crashed_id}.json")), state_file.to_string_pretty())
+        .unwrap();
+
+    // A restarted daemon re-lists the unfinished job, resumes it from
+    // the checkpoint, and completes it.
+    let server = Server::start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        capacity: 8,
+        state_dir: Some(dir.clone()),
+    })
+    .expect("restarted daemon");
+    let client = ServeClient::new(server.addr().to_string());
+    let result = client.wait_result(crashed_id, WAIT).expect("recovered job");
+    assert_eq!(result.get("steps_done").as_usize(), Some(job.steps));
+    assert!(result.get("ortho_error").as_f64().unwrap() <= 1e-3);
+    assert!(
+        result.get("checkpoint").as_str().unwrap_or("").contains("job-77.ckpt"),
+        "result should point at the checkpoint"
+    );
+    // The resumed trajectory equals the uninterrupted one bit-for-bit
+    // (POGO/sgd is stateless, and the checkpoint restores params + step).
+    let direct_ckpt = dir.join("direct.ckpt");
+    let direct_ctl = RunCtl { checkpoint_path: Some(direct_ckpt), ..Default::default() };
+    let JobOutcome::Done(direct) = run_job(&job, &direct_ctl).expect("direct") else {
+        panic!()
+    };
+    assert_eq!(
+        result.get("final_loss").as_f64().unwrap().to_bits(),
+        direct.final_loss.to_bits(),
+        "resumed job diverged from the uninterrupted trajectory"
+    );
+
+    // New submissions get fresh ids above the recovered one.
+    let fresh = client
+        .submit(&spec(ProblemKind::Quartic, Engine::BatchedHost, JobDomain::Real, 22))
+        .expect("fresh submit");
+    assert!(fresh > crashed_id);
+    client.wait_result(fresh, WAIT).expect("fresh job");
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
