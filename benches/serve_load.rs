@@ -1,12 +1,14 @@
 //! Load generator for the serve daemon: an in-process `pogo serve` on an
 //! ephemeral loopback port, hammered by 1/4/16 concurrent clients each
 //! submitting B = 1024 POGO jobs (the Fig. 1 batch regime on the
-//! batched-host engine) and blocking until `done`.
+//! batched-host engine) and blocking until `done` — first through the v1
+//! polling client, then through the v2 SSE streaming client (submit →
+//! follow `/v2/jobs/:id/events` to the terminal event).
 //!
 //! Emits `BENCH_serve.json` — end-to-end jobs/s plus p50/p95 submit→done
-//! latency per concurrency level (redirect: `POGO_BENCH_JSON_SERVE`;
-//! `POGO_BENCH_QUICK=1` shrinks budgets for CI's `serve-smoke` job,
-//! which gates on the file being well-formed).
+//! latency per concurrency level for both client styles (redirect:
+//! `POGO_BENCH_JSON_SERVE`; `POGO_BENCH_QUICK=1` shrinks budgets for
+//! CI's `serve-smoke` job, which gates on the file being well-formed).
 
 use pogo::bench::ServeLoadRow;
 use pogo::coordinator::OptimizerSpec;
@@ -24,13 +26,48 @@ fn percentile(sorted: &[f64], q: f64) -> f64 {
     sorted[idx.min(sorted.len() - 1)]
 }
 
-fn job_spec(client: usize, j: usize, steps: usize) -> JobSpec {
+fn job_spec(client: usize, j: usize, steps: usize, tag: &str) -> JobSpec {
     let mut spec = JobSpec::new(ProblemKind::Quartic, 1024, 3, 3);
-    spec.name = format!("load-c{client}-j{j}");
+    spec.name = format!("load-{tag}-c{client}-j{j}");
     spec.steps = steps;
     spec.seed = (client as u64) * 1009 + j as u64;
     spec.optimizer = OptimizerSpec::new(Method::Pogo, 0.05).with_engine(Engine::BatchedHost);
     spec
+}
+
+/// Run one concurrency level; `drive` is the per-job client style
+/// (poll-to-done or stream-to-terminal). Returns (wall_s, sorted ms).
+fn run_level(
+    addr: &str,
+    clients: usize,
+    jobs_per_client: usize,
+    steps: usize,
+    tag: &str,
+    drive: impl Fn(&ServeClient, u64) + Sync,
+) -> (f64, Vec<f64>) {
+    let latencies: Mutex<Vec<f64>> = Mutex::new(Vec::new());
+    let wall = Stopwatch::start();
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let addr = addr.to_string();
+            let latencies = &latencies;
+            let drive = &drive;
+            scope.spawn(move || {
+                let client = ServeClient::new(addr);
+                for j in 0..jobs_per_client {
+                    let spec = job_spec(c, j, steps, tag);
+                    let t = Stopwatch::start();
+                    let id = client.submit(&spec).expect("submit");
+                    drive(&client, id);
+                    latencies.lock().unwrap().push(t.seconds() * 1e3);
+                }
+            });
+        }
+    });
+    let wall_s = wall.seconds();
+    let mut lat = latencies.into_inner().unwrap();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (wall_s, lat)
 }
 
 fn main() {
@@ -51,29 +88,21 @@ fn main() {
 
     let mut rows: Vec<ServeLoadRow> = Vec::new();
     for &clients in &[1usize, 4, 16] {
-        let latencies: Mutex<Vec<f64>> = Mutex::new(Vec::new());
-        let wall = Stopwatch::start();
-        std::thread::scope(|scope| {
-            for c in 0..clients {
-                let addr = addr.clone();
-                let latencies = &latencies;
-                scope.spawn(move || {
-                    let client = ServeClient::new(addr);
-                    for j in 0..jobs_per_client {
-                        let spec = job_spec(c, j, steps);
-                        let t = Stopwatch::start();
-                        let id = client.submit(&spec).expect("submit");
-                        client
-                            .wait_result(id, Duration::from_secs(600))
-                            .expect("job should reach done");
-                        latencies.lock().unwrap().push(t.seconds() * 1e3);
-                    }
-                });
-            }
-        });
-        let wall_s = wall.seconds();
-        let mut lat = latencies.into_inner().unwrap();
-        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // v1 polling client: submit → poll status → fetch result.
+        let (wall_s, lat) =
+            run_level(&addr, clients, jobs_per_client, steps, "poll", |client, id| {
+                client
+                    .wait_result(id, Duration::from_secs(600))
+                    .expect("job should reach done");
+            });
+        // v2 streaming client: submit → consume SSE to the terminal
+        // event → fetch the full series + iterate.
+        let (_, stream_lat) =
+            run_level(&addr, clients, jobs_per_client, steps, "sse", |client, id| {
+                client
+                    .stream_result(id, Duration::from_secs(600))
+                    .expect("streamed job should reach done");
+            });
         let jobs = clients * jobs_per_client;
         let row = ServeLoadRow {
             clients,
@@ -81,10 +110,20 @@ fn main() {
             jobs_per_s: jobs as f64 / wall_s,
             p50_ms: percentile(&lat, 0.50),
             p95_ms: percentile(&lat, 0.95),
+            stream_p50_ms: percentile(&stream_lat, 0.50),
+            stream_p95_ms: percentile(&stream_lat, 0.95),
         };
         println!(
-            "  {:>2} client(s): {:>4} jobs in {:6.2}s  ->  {:7.2} jobs/s, p50 {:7.1} ms, p95 {:7.1} ms",
-            row.clients, row.jobs, wall_s, row.jobs_per_s, row.p50_ms, row.p95_ms
+            "  {:>2} client(s): {:>4} jobs in {:6.2}s  ->  {:7.2} jobs/s, \
+             poll p50 {:7.1} ms / p95 {:7.1} ms, sse p50 {:7.1} ms / p95 {:7.1} ms",
+            row.clients,
+            row.jobs,
+            wall_s,
+            row.jobs_per_s,
+            row.p50_ms,
+            row.p95_ms,
+            row.stream_p50_ms,
+            row.stream_p95_ms
         );
         rows.push(row);
     }

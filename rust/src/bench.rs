@@ -245,7 +245,8 @@ pub fn write_born_json(
 }
 
 /// One row of the serve-daemon load benchmark (`BENCH_serve.json`):
-/// end-to-end job throughput and latency at one client concurrency.
+/// end-to-end job throughput and latency at one client concurrency, for
+/// both client styles — v1 polling and the v2 SSE streaming consumer.
 #[derive(Clone, Debug)]
 pub struct ServeLoadRow {
     /// Concurrent clients submitting jobs.
@@ -254,10 +255,14 @@ pub struct ServeLoadRow {
     pub jobs: usize,
     /// Jobs completed per wall-clock second (all clients together).
     pub jobs_per_s: f64,
-    /// Median submit→done latency, milliseconds.
+    /// Median submit→done latency (polling client), milliseconds.
     pub p50_ms: f64,
-    /// 95th-percentile submit→done latency, milliseconds.
+    /// 95th-percentile submit→done latency (polling client), ms.
     pub p95_ms: f64,
+    /// Median submit→terminal-SSE-event latency (streaming client), ms.
+    pub stream_p50_ms: f64,
+    /// 95th-percentile streaming-client latency, ms.
+    pub stream_p95_ms: f64,
 }
 
 /// Machine-readable serve load report. CI's `serve-smoke` job gates on
@@ -276,6 +281,8 @@ pub fn serve_json(rows: &[ServeLoadRow]) -> crate::util::json::Json {
                     ("jobs_per_s", Json::num(r.jobs_per_s)),
                     ("p50_ms", Json::num(r.p50_ms)),
                     ("p95_ms", Json::num(r.p95_ms)),
+                    ("stream_p50_ms", Json::num(r.stream_p50_ms)),
+                    ("stream_p95_ms", Json::num(r.stream_p95_ms)),
                 ])
             })),
         ),
@@ -331,6 +338,8 @@ mod tests {
             jobs_per_s: 12.5,
             p50_ms: 40.0,
             p95_ms: 90.0,
+            stream_p50_ms: 35.0,
+            stream_p95_ms: 80.0,
         }];
         let j = serve_json(&rows);
         assert_eq!(j.get("unit").as_str(), Some("jobs_per_s_and_latency_ms"));
@@ -338,6 +347,7 @@ mod tests {
         assert_eq!(arr.len(), 1);
         assert_eq!(arr[0].get("clients").as_usize(), Some(4));
         assert_eq!(arr[0].get("jobs_per_s").as_f64(), Some(12.5));
+        assert_eq!(arr[0].get("stream_p95_ms").as_f64(), Some(80.0));
         // Round-trips through the in-crate parser (what CI's jq reads).
         let back = crate::util::json::Json::parse(&j.to_string()).unwrap();
         assert_eq!(back, j);

@@ -6,13 +6,14 @@
 //! constraints, keys, step) followed by one raw little-endian scalar blob
 //! per parameter, all in a single file. The header carries a blob checksum
 //! so truncated/corrupt checkpoints are rejected rather than silently
-//! loaded, and a `dtype` tag (`f32`/`f64`) so a store is never silently
-//! reinterpreted at the wrong precision: [`load_t`] refuses a dtype
-//! mismatch with a clear error. Headers written before the tag existed
-//! carry implicit `f32` (the only dtype v1 ever stored).
+//! loaded, and a `dtype` tag (`f32`/`f64`, or `c64`/`c128` for complex
+//! stores serialized as interleaved re,im pairs) so a store is never
+//! silently reinterpreted at the wrong precision or field: [`load_t`]
+//! refuses a dtype mismatch with a clear error. Headers written before
+//! the tag existed carry implicit `f32` (the only dtype v1 ever stored).
 
 use super::param_store::{Constraint, ParamStore};
-use crate::linalg::{Mat, Scalar};
+use crate::linalg::{Complex, Field, Mat};
 use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
 use std::io::{Read, Write};
@@ -20,12 +21,14 @@ use std::path::Path;
 
 const MAGIC: &str = "POGO-CKPT-v1";
 
-/// A real scalar type the checkpoint format can store: adds the on-disk
-/// dtype tag and little-endian (de)serialization to [`Scalar`].
-pub trait CkptDtype: Scalar {
-    /// Header tag (`"f32"` / `"f64"`).
+/// A matrix element the checkpoint format can store: adds the on-disk
+/// dtype tag and little-endian (de)serialization to [`Field`]. Real
+/// scalars store one word per element; complex elements store an
+/// interleaved `re,im` pair (so `Fig. 8`-style unitary jobs resume too).
+pub trait CkptDtype: Field {
+    /// Header tag (`"f32"` / `"f64"` / `"c64"` / `"c128"`).
     const DTYPE: &'static str;
-    /// Bytes per scalar on disk.
+    /// Bytes per element on disk.
     const BYTES: usize;
     fn write_le(self, out: &mut Vec<u8>);
     fn read_le(bytes: &[u8]) -> Self;
@@ -52,6 +55,32 @@ impl CkptDtype for f64 {
         f64::from_le_bytes([
             bytes[0], bytes[1], bytes[2], bytes[3], bytes[4], bytes[5], bytes[6], bytes[7],
         ])
+    }
+}
+
+/// Complex elements serialize as an interleaved `re,im` pair of their
+/// real dtype ("c64" = two f32 words, "c128" = two f64 words).
+impl CkptDtype for Complex<f32> {
+    const DTYPE: &'static str = "c64";
+    const BYTES: usize = 8;
+    fn write_le(self, out: &mut Vec<u8>) {
+        self.re.write_le(out);
+        self.im.write_le(out);
+    }
+    fn read_le(bytes: &[u8]) -> Self {
+        Complex::new(f32::read_le(&bytes[..4]), f32::read_le(&bytes[4..8]))
+    }
+}
+
+impl CkptDtype for Complex<f64> {
+    const DTYPE: &'static str = "c128";
+    const BYTES: usize = 16;
+    fn write_le(self, out: &mut Vec<u8>) {
+        self.re.write_le(out);
+        self.im.write_le(out);
+    }
+    fn read_le(bytes: &[u8]) -> Self {
+        Complex::new(f64::read_le(&bytes[..8]), f64::read_le(&bytes[8..16]))
     }
 }
 
@@ -256,6 +285,53 @@ mod tests {
         for (a, b) in store.params().iter().zip(back.params()) {
             assert_eq!(a.mat, b.mat, "bit-exact f64 restore for {}", a.name);
         }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn complex_roundtrip_bit_exact() {
+        // c64 and c128: interleaved re,im pairs restore bit-for-bit, with
+        // group keys intact so `stiefel_groups` re-partitions identically.
+        let mut rng = Rng::seed_from_u64(11);
+        let mut store: ParamStore<crate::linalg::Complex<f32>> = ParamStore::new();
+        store.add_unitary_group("cores", 3, 2, 5, &mut rng);
+        let path = tmp("c64");
+        save_t(&store, 77, &path).unwrap();
+        let (back, step) = load_t::<crate::linalg::Complex<f32>>(&path).unwrap();
+        assert_eq!(step, 77);
+        assert_eq!(back.len(), store.len());
+        for (a, b) in store.params().iter().zip(back.params()) {
+            assert_eq!(a.mat, b.mat, "bit-exact c64 restore for {}", a.name);
+            assert_eq!(a.group_key, b.group_key);
+        }
+        assert_eq!(back.stiefel_groups().len(), store.stiefel_groups().len());
+        std::fs::remove_file(&path).ok();
+
+        let mut rng = Rng::seed_from_u64(12);
+        let mut s128: ParamStore<crate::linalg::Complex<f64>> = ParamStore::new();
+        s128.add_unitary_group("w", 2, 3, 4, &mut rng);
+        let path = tmp("c128");
+        save_t(&s128, 5, &path).unwrap();
+        let (back, _) = load_t::<crate::linalg::Complex<f64>>(&path).unwrap();
+        for (a, b) in s128.params().iter().zip(back.params()) {
+            assert_eq!(a.mat, b.mat, "bit-exact c128 restore for {}", a.name);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn complex_dtype_mismatch_rejected() {
+        // A c64 checkpoint is never reinterpreted as f32 (same 8-byte
+        // stride per 2 real words — silent aliasing would "work").
+        let mut rng = Rng::seed_from_u64(13);
+        let mut store: ParamStore<crate::linalg::Complex<f32>> = ParamStore::new();
+        store.add_unitary_group("x", 1, 2, 4, &mut rng);
+        let path = tmp("c64_mismatch");
+        save_t(&store, 1, &path).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("dtype is c64"), "{err:#}");
+        let err = load_t::<crate::linalg::Complex<f64>>(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("dtype is c64"), "{err:#}");
         std::fs::remove_file(&path).ok();
     }
 

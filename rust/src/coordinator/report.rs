@@ -180,13 +180,22 @@ fn summarize_bench(name: &str, path: &Path, j: &Json) -> Vec<String> {
     let mut out = vec![format!("-- {} --", path.display())];
     if name == "BENCH_serve.json" {
         for row in j.get("rows").as_arr().unwrap_or(&[]) {
-            out.push(format!(
+            let mut line = format!(
                 "  {:>3} client(s): {:8.2} jobs/s   p50 {:8.1} ms   p95 {:8.1} ms",
                 row.get("clients").as_usize().unwrap_or(0),
                 row.get("jobs_per_s").as_f64().unwrap_or(f64::NAN),
                 row.get("p50_ms").as_f64().unwrap_or(f64::NAN),
                 row.get("p95_ms").as_f64().unwrap_or(f64::NAN),
-            ));
+            );
+            // Streaming-client percentiles (rows written before the SSE
+            // client existed simply omit them).
+            if let Some(sp50) = row.get("stream_p50_ms").as_f64() {
+                line.push_str(&format!(
+                    "   sse p50 {sp50:8.1} ms   p95 {:8.1} ms",
+                    row.get("stream_p95_ms").as_f64().unwrap_or(f64::NAN),
+                ));
+            }
+            out.push(line);
         }
     } else if let Some(map) = j.get("speedup_batched_vs_loop").as_obj() {
         for (b, s) in map {

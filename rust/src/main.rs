@@ -5,7 +5,8 @@
 //!                       [--out DIR] [--full] [--quick]
 //!                       [--spec FILE.json] [--dump-spec]
 //! pogo serve [--addr HOST:PORT] [--workers N] [--queue-cap N]
-//!            [--state-dir DIR]  # multi-tenant optimization job daemon
+//!            [--state-dir DIR] [--tenant-quota N] [--cost-cap UNITS]
+//!            [--max-inline-bytes B]  # multi-tenant optimization job daemon
 //! pogo list                     # experiments + their paper figures
 //! pogo info [--artifacts DIR]   # artifact registry contents
 //! pogo report [--dir DIR]       # summarize results CSVs + BENCH_*.json
@@ -52,9 +53,9 @@ fn print_help() {
         "pogo — Proximal One-step Geometric Orthoptimizer (paper reproduction)\n\n\
          Commands:\n\
          \x20 run <experiment>   run a paper experiment (see `pogo list`)\n\
-         \x20 serve              run the optimization job daemon (POST /v1/jobs,\n\
-         \x20                    GET /v1/jobs/:id[/result], DELETE /v1/jobs/:id,\n\
-         \x20                    GET /healthz, GET /metrics)\n\
+         \x20 serve              run the optimization job daemon (v1: submit/poll;\n\
+         \x20                    v2: inline problem uploads, SSE event streams,\n\
+         \x20                    per-tenant quotas + cost-aware admission)\n\
          \x20 list               list experiments\n\
          \x20 info               inspect the AOT artifact registry\n\
          \x20 report             summarize results/*.csv and BENCH_*.json\n\
@@ -118,7 +119,10 @@ fn cmd_serve() -> i32 {
         .flag("addr", "127.0.0.1:7070", "listen address (HOST:PORT; port 0 = ephemeral)")
         .flag_opt("workers", "worker threads (default min(cores, 4))")
         .flag("queue-cap", "256", "max queued (not yet running) jobs")
-        .flag_opt("state-dir", "persist job state + checkpoints here (enables restart recovery)");
+        .flag_opt("state-dir", "persist job state + checkpoints here (enables restart recovery)")
+        .flag("tenant-quota", "0", "max active jobs per X-Api-Key tenant (0 = unlimited)")
+        .flag("cost-cap", "0", "max outstanding B*p*n*steps cost units (0 = unlimited)")
+        .flag_opt("max-inline-bytes", "max inline problem payload bytes (default 8 MiB)");
     let a = cli.parse_env_or_exit(1);
     let mut cfg = pogo::serve::ServeConfig {
         addr: a.get_or("addr", "127.0.0.1:7070"),
@@ -131,12 +135,23 @@ fn cmd_serve() -> i32 {
         cfg.capacity = c.max(1);
     }
     cfg.state_dir = a.get("state-dir").map(std::path::PathBuf::from);
-    match pogo::serve::Server::start(cfg) {
+    let mut admission = pogo::serve::Admission::default();
+    if let Some(q) = a.get_usize("tenant-quota") {
+        admission.tenant_quota = q;
+    }
+    if let Some(c) = a.get_u64("cost-cap") {
+        admission.cost_cap = c;
+    }
+    if let Some(b) = a.get_usize("max-inline-bytes") {
+        admission.max_inline_bytes = b;
+    }
+    match pogo::serve::Server::start_with(cfg, admission) {
         Ok(server) => {
             println!("pogo serve listening on http://{}", server.addr());
             println!(
-                "endpoints: POST /v1/jobs · GET /v1/jobs[/:id[/result]] · \
-                 DELETE /v1/jobs/:id · GET /healthz · GET /metrics"
+                "endpoints: POST /v1|v2/jobs · GET /v1|v2/jobs[/:id[/result]] · \
+                 GET /v2/jobs/:id/events (SSE) · GET /v2/problems · \
+                 DELETE /v1|v2/jobs/:id · GET /healthz · GET /metrics"
             );
             // No signal handling without libc: a kill stops the daemon
             // immediately. With --state-dir the next start recovers and

@@ -1,34 +1,67 @@
 //! `pogo serve` — the daemon: a TCP accept loop, per-connection handler
-//! threads, and the `/v1` job routes over the [`JobQueue`].
+//! threads, and the `/v1` (frozen) + `/v2` job routes over the
+//! [`JobQueue`].
 //!
-//! Endpoints (all `Connection: close`, JSON bodies unless noted):
+//! Endpoints (JSON bodies unless noted; `Connection: close` everywhere,
+//! the v2 event stream uses chunked transfer-encoding):
 //!
-//! | method | path                 | what                                     |
-//! |--------|----------------------|------------------------------------------|
-//! | POST   | `/v1/jobs`           | submit a [`JobSpec`]; 202 + `{id}`       |
-//! | GET    | `/v1/jobs`           | list all jobs (compact)                  |
-//! | GET    | `/v1/jobs/:id`       | status + metrics tail                    |
-//! | GET    | `/v1/jobs/:id/result`| final loss + orthogonality error         |
-//! | DELETE | `/v1/jobs/:id`       | cancel                                   |
-//! | GET    | `/healthz`           | liveness                                 |
-//! | GET    | `/metrics`           | Prometheus text                          |
+//! | method | path                  | what                                    |
+//! |--------|-----------------------|-----------------------------------------|
+//! | POST   | `/v1/jobs`            | submit a [`JobSpec`]; 202 + `{id}`      |
+//! | GET    | `/v1/jobs`            | list all jobs (compact)                 |
+//! | GET    | `/v1/jobs/:id`        | status + metrics tail                   |
+//! | GET    | `/v1/jobs/:id/result` | final loss + orthogonality error        |
+//! | DELETE | `/v1/jobs/:id`        | cancel                                  |
+//! | POST   | `/v2/jobs`            | submit (inline sources, quota headers)  |
+//! | GET    | `/v2/jobs`            | list all jobs                           |
+//! | GET    | `/v2/jobs/:id`        | status + tenant/cost/series length      |
+//! | GET    | `/v2/jobs/:id/events` | live SSE progress stream                |
+//! | GET    | `/v2/jobs/:id/result` | full loss series + final iterate        |
+//! | DELETE | `/v2/jobs/:id`        | cancel                                  |
+//! | GET    | `/v2/problems`        | the problem-source registry             |
+//! | GET    | `/healthz`            | liveness                                |
+//! | GET    | `/metrics`            | Prometheus text                         |
+//!
+//! The v1 **API surface** is frozen: same routes, same response shapes,
+//! same route-level status codes. New capability lands on `/v2` only.
+//! Transport-layer limits are daemon-wide and version-independent (the
+//! body cap grew to fit inline uploads; oversized bodies are now `413`
+//! and header floods `431` on every route — protocol hygiene, not API
+//! semantics). Tenancy rides the `X-Api-Key` header (missing =
+//! `anonymous`); admission control (quotas, cost budget, inline byte
+//! cap) answers `429` + `Retry-After` / `413` before a job touches the
+//! queue.
 
 use super::http::{self, Request, Response};
 use super::job::{JobSpec, JobState};
-use super::metrics::ServeMetrics;
-use super::queue::{JobQueue, QueueConfig, SubmitError};
+use super::metrics::{QueueGauges, ServeMetrics};
+use super::problem;
+use super::queue::{
+    Admission, BusPoll, JobQueue, ProgressBus, ProgressEvent, QueueConfig, SubmitError,
+};
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 /// Max simultaneous connection-handler threads. Beyond it, connections
 /// get an immediate 503 from the accept thread instead of a handler —
 /// the per-request caps in [`http`] bound each handler, this bounds how
 /// many there are.
 const MAX_CONNS: usize = 64;
+
+/// Max simultaneous SSE subscriber streams. Event streams are the only
+/// long-lived connections, so they get their own (smaller) budget —
+/// saturating them with cheap subscriptions can never starve the
+/// short-request half of [`MAX_CONNS`] (submits, polls, `/healthz`).
+const MAX_SSE: i64 = 32;
+
+/// How long the SSE handler waits on the progress bus before emitting a
+/// keepalive comment (stays under the socket write timeout).
+const SSE_KEEPALIVE: Duration = Duration::from_secs(5);
 
 /// Decrements the live-connection count when a handler ends — by any
 /// path, including unwind (or the handler thread failing to spawn at
@@ -41,7 +74,18 @@ impl Drop for ConnGuard {
     }
 }
 
-/// Daemon configuration (`pogo serve` flags map 1:1).
+/// Decrements the SSE subscriber gauge when a stream handler ends.
+struct SseGuard<'a>(&'a ServeMetrics);
+
+impl Drop for SseGuard<'_> {
+    fn drop(&mut self) {
+        self.0.sse_clients.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Daemon configuration (`pogo serve` flags map 1:1). Admission knobs
+/// ride separately through [`Server::start_with`] so this struct — and
+/// every v1 caller constructing it — stays frozen.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     /// `HOST:PORT`; port 0 binds an ephemeral port (tests/benches).
@@ -74,14 +118,23 @@ pub struct Server {
 }
 
 impl Server {
-    /// Bind, recover persisted jobs, spawn workers + accept loop.
+    /// Bind, recover persisted jobs, spawn workers + accept loop, with
+    /// admission control left wide open (the v1-compatible default).
     pub fn start(cfg: ServeConfig) -> Result<Server> {
+        Server::start_with(cfg, Admission::default())
+    }
+
+    /// [`Server::start`] with explicit admission control (what the
+    /// `--tenant-quota` / `--cost-cap` / `--max-inline-bytes` flags
+    /// feed).
+    pub fn start_with(cfg: ServeConfig, admission: Admission) -> Result<Server> {
         let metrics = Arc::new(ServeMetrics::new());
         let queue = JobQueue::start(
             QueueConfig {
                 workers: cfg.workers.max(1),
                 capacity: cfg.capacity.max(1),
                 state_dir: cfg.state_dir.clone(),
+                admission,
             },
             metrics.clone(),
         )?;
@@ -171,45 +224,105 @@ impl Drop for Server {
     }
 }
 
+/// What a routed request turns into: a buffered response, or a live
+/// event stream that needs the socket.
+enum Routed {
+    Plain(Response),
+    /// Stream `GET /v2/jobs/:id/events` for this job's bus (subscribed
+    /// once, at routing time).
+    Events(u64, Arc<ProgressBus>),
+}
+
 fn handle_conn(mut stream: TcpStream, queue: &JobQueue, metrics: &ServeMetrics) {
     metrics.requests.fetch_add(1, Ordering::Relaxed);
-    let resp = match http::read_request(&stream) {
+    let routed = match http::read_request(&stream) {
         Ok(req) => route(&req, queue, metrics),
-        Err(e) => Response::error(400, format!("{e:#}")),
+        Err(e) => match e.response() {
+            Some(resp) => Routed::Plain(resp),
+            None => {
+                log::debug!("client went away mid-request: {e}");
+                return;
+            }
+        },
     };
-    if let Err(e) = http::write_response(&mut stream, &resp) {
-        log::debug!("client went away mid-response: {e}");
+    match routed {
+        Routed::Plain(resp) => {
+            if let Err(e) = http::write_response(&mut stream, &resp) {
+                log::debug!("client went away mid-response: {e}");
+            }
+        }
+        Routed::Events(id, bus) => stream_events(&mut stream, id, &bus, metrics),
     }
 }
 
-fn route(req: &Request, queue: &JobQueue, metrics: &ServeMetrics) -> Response {
+/// The tenant identity of a request: the `X-Api-Key` header, trimmed and
+/// capped (it becomes a metrics/accounting key), or `anonymous`.
+fn tenant_of(req: &Request) -> String {
+    let raw = req.header("x-api-key").unwrap_or("").trim();
+    if raw.is_empty() {
+        "anonymous".to_string()
+    } else {
+        raw.chars().take(64).collect()
+    }
+}
+
+fn route(req: &Request, queue: &JobQueue, metrics: &ServeMetrics) -> Routed {
     let segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+    let plain = |resp: Response| Routed::Plain(resp);
     match (req.method.as_str(), segs.as_slice()) {
-        ("GET", ["healthz"]) => Response::json(
+        ("GET", ["healthz"]) => plain(Response::json(
             200,
             &Json::obj(vec![
                 ("status", Json::str("ok")),
                 ("version", Json::str(crate::VERSION)),
             ]),
-        ),
+        )),
         ("GET", ["metrics"]) => {
             let (depth, running) = queue.depth_running();
-            Response::text(200, metrics.render(depth, running, queue.capacity(), queue.workers()))
+            let gauges = QueueGauges {
+                depth,
+                running,
+                capacity: queue.capacity(),
+                workers: queue.workers(),
+                by_state: queue.state_counts(),
+                outstanding_cost: queue.outstanding_cost(),
+            };
+            plain(Response::text(200, metrics.render(&gauges)))
         }
-        ("POST", ["v1", "jobs"]) => submit(req, queue),
-        ("GET", ["v1", "jobs"]) => Response::json(200, &queue.list_json()),
-        ("GET", ["v1", "jobs", id]) => match parse_id(id) {
+        ("POST", ["v1", "jobs"]) => plain(submit(req, queue, false)),
+        ("POST", ["v2", "jobs"]) => plain(submit(req, queue, true)),
+        ("GET", ["v1" | "v2", "jobs"]) => plain(Response::json(200, &queue.list_json())),
+        ("GET", ["v1", "jobs", id]) => plain(match parse_id(id) {
             Some(id) => match queue.status_json(id) {
                 Some(j) => Response::json(200, &j),
                 None => Response::error(404, format!("no job {id}")),
             },
             None => Response::error(400, format!("bad job id '{id}'")),
-        },
-        ("GET", ["v1", "jobs", id, "result"]) => match parse_id(id) {
-            Some(id) => result_of(id, queue),
+        }),
+        ("GET", ["v2", "jobs", id]) => plain(match parse_id(id) {
+            Some(id) => match queue.status_v2_json(id) {
+                Some(j) => Response::json(200, &j),
+                None => Response::error(404, format!("no job {id}")),
+            },
             None => Response::error(400, format!("bad job id '{id}'")),
+        }),
+        ("GET", ["v1", "jobs", id, "result"]) => plain(match parse_id(id) {
+            Some(id) => result_v1(id, queue),
+            None => Response::error(400, format!("bad job id '{id}'")),
+        }),
+        ("GET", ["v2", "jobs", id, "result"]) => plain(match parse_id(id) {
+            Some(id) => result_v2(id, queue),
+            None => Response::error(400, format!("bad job id '{id}'")),
+        }),
+        ("GET", ["v2", "jobs", id, "events"]) => match parse_id(id) {
+            Some(id) => match queue.subscribe(id) {
+                Some(bus) => Routed::Events(id, bus),
+                None => plain(Response::error(404, format!("no job {id}"))),
+            },
+            None => plain(Response::error(400, format!("bad job id '{id}'"))),
         },
-        ("DELETE", ["v1", "jobs", id]) => match parse_id(id) {
+        ("GET", ["v2", "problems"]) => plain(Response::json(200, &problem::registry_json())),
+        ("DELETE", ["v1" | "v2", "jobs", id]) => plain(match parse_id(id) {
             Some(id) => match queue.cancel(id) {
                 Some(state) => Response::json(
                     200,
@@ -221,11 +334,14 @@ fn route(req: &Request, queue: &JobQueue, metrics: &ServeMetrics) -> Response {
                 None => Response::error(404, format!("no job {id}")),
             },
             None => Response::error(400, format!("bad job id '{id}'")),
-        },
+        }),
         ("POST" | "PUT" | "DELETE", ["healthz" | "metrics"]) => {
-            Response::error(405, "read-only endpoint")
+            plain(Response::error(405, "read-only endpoint"))
         }
-        _ => Response::error(404, format!("no route for {} {}", req.method, req.path)),
+        ("POST" | "PUT" | "DELETE", ["v2", "problems"]) => {
+            plain(Response::error(405, "read-only endpoint"))
+        }
+        _ => plain(Response::error(404, format!("no route for {} {}", req.method, req.path))),
     }
 }
 
@@ -233,7 +349,7 @@ fn parse_id(s: &str) -> Option<u64> {
     s.parse::<u64>().ok()
 }
 
-fn submit(req: &Request, queue: &JobQueue) -> Response {
+fn submit(req: &Request, queue: &JobQueue, v2: bool) -> Response {
     let body = match req.body_utf8() {
         Ok(b) => b,
         Err(e) => return Response::error(400, format!("{e:#}")),
@@ -246,21 +362,52 @@ fn submit(req: &Request, queue: &JobQueue) -> Response {
         Ok(s) => s,
         Err(e) => return Response::error(400, format!("{e:#}")),
     };
-    match queue.submit(spec) {
-        Ok(id) => Response::json(
-            202,
-            &Json::obj(vec![
-                ("id", Json::num(id as f64)),
-                ("state", Json::str(JobState::Queued.name())),
-            ]),
-        ),
-        Err(e @ SubmitError::Full(_)) => Response::error(429, e.to_string()),
-        Err(e @ SubmitError::Draining) => Response::error(503, e.to_string()),
-        Err(SubmitError::Invalid(e)) => Response::error(400, format!("{e:#}")),
+    let tenant = tenant_of(req);
+    match queue.submit_as(spec, &tenant) {
+        Ok(id) => {
+            let mut resp = Response::json(
+                202,
+                &Json::obj(vec![
+                    ("id", Json::num(id as f64)),
+                    ("state", Json::str(JobState::Queued.name())),
+                ]),
+            );
+            if v2 {
+                // Quota telemetry headers (documented in README "Serving
+                // v2"): how much admission headroom the tenant has left.
+                let adm = queue.admission();
+                if adm.tenant_quota > 0 {
+                    let active = queue.tenant_active(&tenant);
+                    resp = resp.with_header(
+                        "X-Quota-Remaining",
+                        adm.tenant_quota.saturating_sub(active).to_string(),
+                    );
+                }
+                if adm.cost_cap > 0 {
+                    resp = resp.with_header(
+                        "X-Cost-Remaining",
+                        adm.cost_cap.saturating_sub(queue.outstanding_cost()).to_string(),
+                    );
+                }
+            }
+            resp
+        }
+        Err(err) => {
+            let msg = err.to_string();
+            match err {
+                SubmitError::Full(_) => Response::error(429, msg),
+                SubmitError::Draining => Response::error(503, msg),
+                SubmitError::Invalid(_) => Response::error(400, msg),
+                SubmitError::Quota { retry_after_s, .. }
+                | SubmitError::Cost { retry_after_s, .. } => Response::error(429, msg)
+                    .with_header("Retry-After", retry_after_s.to_string()),
+                SubmitError::InlineTooLarge { .. } => Response::error(413, msg),
+            }
+        }
     }
 }
 
-fn result_of(id: u64, queue: &JobQueue) -> Response {
+fn result_v1(id: u64, queue: &JobQueue) -> Response {
     let Some((state, result, error)) = queue.snapshot(id) else {
         return Response::error(404, format!("no job {id}"));
     };
@@ -294,6 +441,134 @@ fn result_of(id: u64, queue: &JobQueue) -> Response {
     }
 }
 
+/// The v2 result: everything v1 serves, plus the untruncated loss series
+/// and the final iterate (base64-packed f32 words; complex interleaved).
+/// The series — up to millions of points — is spliced into the body as
+/// raw text: a `Json` node per point would transiently allocate orders
+/// of magnitude more than the series itself.
+fn result_v2(id: u64, queue: &JobQueue) -> Response {
+    let Some(view) = queue.result_view(id) else {
+        return Response::error(404, format!("no job {id}"));
+    };
+    match (view.state, view.result) {
+        (JobState::Done | JobState::Cancelled, Some(r)) => {
+            let mut map = match r.to_json() {
+                Json::Obj(m) => m,
+                _ => Default::default(),
+            };
+            map.insert("id".to_string(), Json::num(id as f64));
+            map.insert("state".to_string(), Json::str(view.state.name()));
+            map.insert("tenant".to_string(), Json::str(view.tenant));
+            map.insert(
+                "iterate".to_string(),
+                match &view.iterate {
+                    Some(it) => it.to_json(),
+                    None => Json::Null,
+                },
+            );
+            // Compact body with the series appended as flat text (the
+            // scalar fields still render through Json, so escaping and
+            // number formatting stay consistent).
+            let head = Json::Obj(map).to_string();
+            let mut body = String::with_capacity(head.len() + 16 + view.series.len() * 24);
+            body.push_str(&head[..head.len() - 1]); // open the object back up
+            body.push_str(",\"series\":[");
+            for (i, &(step, loss)) in view.series.iter().enumerate() {
+                if i > 0 {
+                    body.push(',');
+                }
+                body.push('[');
+                body.push_str(&Json::num(step as f64).to_string());
+                body.push(',');
+                body.push_str(&Json::num(loss).to_string());
+                body.push(']');
+            }
+            body.push_str("]}\n");
+            Response {
+                status: 200,
+                content_type: "application/json",
+                headers: Vec::new(),
+                body: body.into_bytes(),
+            }
+        }
+        (JobState::Cancelled, None) => Response::json(
+            200,
+            &Json::obj(vec![
+                ("id", Json::num(id as f64)),
+                ("state", Json::str(JobState::Cancelled.name())),
+                ("steps_done", Json::num(0.0)),
+                ("series", Json::arr(Vec::new())),
+                ("iterate", Json::Null),
+            ]),
+        ),
+        (JobState::Failed, _) => Response::error(
+            409,
+            format!(
+                "job {id} failed: {}",
+                view.error.unwrap_or_else(|| "unknown error".into())
+            ),
+        ),
+        (s, _) => Response::error(409, format!("job {id} is {} — result not ready", s.name())),
+    }
+}
+
+/// Stream one job's progress as Server-Sent Events over chunked
+/// transfer-encoding. Late subscribers replay the bus's buffered tail
+/// (monotone, gap-free within the buffer window); the stream closes with
+/// a terminal `state` event. Keepalive comments hold the connection
+/// through quiet stretches.
+fn stream_events(stream: &mut TcpStream, id: u64, bus: &ProgressBus, metrics: &ServeMetrics) {
+    // Long-lived streams get their own budget (see [`MAX_SSE`]).
+    // Increment-then-check: a check-then-increment race would let a
+    // burst of subscribers sail past the cap together.
+    if metrics.sse_clients.fetch_add(1, Ordering::Relaxed) >= MAX_SSE {
+        metrics.sse_clients.fetch_sub(1, Ordering::Relaxed);
+        let resp = Response::error(503, "too many event subscribers")
+            .with_header("Retry-After", "1");
+        http::write_response(stream, &resp).ok();
+        return;
+    }
+    let _guard = SseGuard(metrics);
+    let id_text = id.to_string();
+    if http::write_stream_head(stream, 200, "text/event-stream", &[("X-Job-Id", &id_text)])
+        .is_err()
+    {
+        return;
+    }
+    let mut cursor = 0u64;
+    loop {
+        let chunk = match bus.next_event(cursor, SSE_KEEPALIVE) {
+            BusPoll::Event(next, ProgressEvent::Step(p)) => {
+                cursor = next;
+                metrics.events_streamed.fetch_add(1, Ordering::Relaxed);
+                let data = Json::obj(vec![
+                    ("step", Json::num(p.step as f64)),
+                    ("loss", Json::num(p.loss)),
+                    ("ortho_error", Json::num(p.ortho_error)),
+                    ("wall_s", Json::num(p.wall_s)),
+                ])
+                .to_string();
+                format!("event: progress\ndata: {data}\n\n")
+            }
+            BusPoll::Event(next, ProgressEvent::Terminal(state)) => {
+                cursor = next;
+                let data = Json::obj(vec![
+                    ("id", Json::num(id as f64)),
+                    ("state", Json::str(state.name())),
+                ])
+                .to_string();
+                format!("event: state\ndata: {data}\n\n")
+            }
+            BusPoll::Pending => ": keepalive\n\n".to_string(),
+            BusPoll::Closed => break,
+        };
+        if http::write_chunk(stream, chunk.as_bytes()).is_err() {
+            return; // subscriber went away
+        }
+    }
+    http::finish_chunked(stream).ok();
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -325,15 +600,38 @@ mod tests {
         assert_eq!(h.get("status").as_str(), Some("ok"));
         let m = client.metrics().unwrap();
         assert!(m.contains("pogo_serve_queue_capacity 32"), "{m}");
+        assert!(m.contains("pogo_serve_jobs{state=\"queued\"} 0"), "{m}");
+        assert!(
+            m.contains("pogo_serve_admission_rejected_total{cause=\"quota\"} 0"),
+            "{m}"
+        );
         // Unknown routes and ids.
         let (code, _) = http::request(client.addr(), "GET", "/nope", None).unwrap();
         assert_eq!(code, 404);
         let (code, _) = http::request(client.addr(), "GET", "/v1/jobs/999", None).unwrap();
         assert_eq!(code, 404);
+        let (code, _) = http::request(client.addr(), "GET", "/v2/jobs/999", None).unwrap();
+        assert_eq!(code, 404);
+        let (code, _) =
+            http::request(client.addr(), "GET", "/v2/jobs/999/events", None).unwrap();
+        assert_eq!(code, 404);
         let (code, _) = http::request(client.addr(), "GET", "/v1/jobs/xyz", None).unwrap();
         assert_eq!(code, 400);
         let (code, _) = http::request(client.addr(), "POST", "/metrics", None).unwrap();
         assert_eq!(code, 405);
+        let (code, _) = http::request(client.addr(), "POST", "/v2/problems", None).unwrap();
+        assert_eq!(code, 405);
+        // The problem-source registry is served.
+        let (code, body) = http::request(client.addr(), "GET", "/v2/problems", None).unwrap();
+        assert_eq!(code, 200);
+        let registry = Json::parse(&body).unwrap();
+        let names: Vec<String> = registry
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|b| b.get("source").as_str().unwrap().to_string())
+            .collect();
+        assert_eq!(names, vec!["builtin".to_string(), "inline".to_string()]);
         server.shutdown();
     }
 
@@ -347,10 +645,127 @@ mod tests {
         assert_eq!(result.get("state").as_str(), Some("done"));
         assert!(result.get("ortho_error").as_f64().unwrap() <= 1e-3);
         assert_eq!(result.get("steps_done").as_usize(), Some(10));
-        // Listing shows the job.
+        // v1 results stay frozen: no v2 fields leak in.
+        assert_eq!(result.get("series"), &Json::Null);
+        assert_eq!(result.get("iterate"), &Json::Null);
+        assert_eq!(result.get("tenant"), &Json::Null);
+        // The v2 result carries the full series and the iterate.
+        let v2 = client.result_v2(id).unwrap();
+        assert_eq!(v2.get("series").as_arr().unwrap().len(), 10);
+        let iterate = v2.get("iterate");
+        assert_eq!(iterate.get("domain").as_str(), Some("real"));
+        let words =
+            crate::serve::problem::b64_to_words(iterate.get("b64").as_str().unwrap()).unwrap();
+        assert_eq!(words.len(), 2 * 2 * 4);
+        // Listing shows the job on both surfaces.
         let (code, body) = http::request(client.addr(), "GET", "/v1/jobs", None).unwrap();
         assert_eq!(code, 200);
         assert_eq!(Json::parse(&body).unwrap().as_arr().unwrap().len(), 1);
+        let (code, body) = http::request(client.addr(), "GET", "/v2/jobs", None).unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(Json::parse(&body).unwrap().as_arr().unwrap().len(), 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn sse_stream_replays_and_terminates() {
+        let (server, client) = ephemeral();
+        let id = client.submit(&quick_spec()).unwrap();
+        client.wait_terminal(id, std::time::Duration::from_secs(30)).unwrap();
+        // Subscribe after completion: the bounded bus replays the steps
+        // and closes with the terminal state event.
+        let mut steps = Vec::new();
+        let mut state = String::new();
+        http::stream_sse(
+            client.addr(),
+            &format!("/v2/jobs/{id}/events"),
+            &[],
+            Duration::from_secs(30),
+            &mut |event, data| {
+                let j = Json::parse(data).unwrap();
+                match event {
+                    "progress" => steps.push(j.get("step").as_usize().unwrap()),
+                    "state" => state = j.get("state").as_str().unwrap().to_string(),
+                    other => panic!("unexpected event '{other}'"),
+                }
+                true
+            },
+        )
+        .unwrap();
+        assert_eq!(steps, (1..=10).collect::<Vec<_>>());
+        assert_eq!(state, "done");
+        // The SSE gauge drops back to zero (the handler's guard may
+        // decrement a beat after the client sees the stream end) and the
+        // streamed events were counted.
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        loop {
+            let m = client.metrics().unwrap();
+            if m.contains("pogo_serve_sse_clients 0") {
+                assert!(m.contains("pogo_serve_sse_events_total 10"), "{m}");
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "SSE gauge never returned to 0:\n{m}");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn quota_rejections_carry_retry_after() {
+        let server = Server::start_with(
+            ServeConfig {
+                addr: "127.0.0.1:0".to_string(),
+                workers: 1,
+                capacity: 32,
+                state_dir: None,
+            },
+            Admission { tenant_quota: 1, ..Admission::default() },
+        )
+        .unwrap();
+        let addr = server.addr().to_string();
+        let mut long = quick_spec();
+        long.steps = 500_000;
+        let body = long.to_json().to_string();
+        let (code, headers, _) = http::request_full(
+            &addr,
+            "POST",
+            "/v2/jobs",
+            Some(&body),
+            &[("X-Api-Key", "tenant-a")],
+        )
+        .unwrap();
+        assert_eq!(code, 202);
+        // Quota telemetry on the 202.
+        assert!(
+            headers.iter().any(|(k, v)| k == "X-Quota-Remaining" && v == "0"),
+            "{headers:?}"
+        );
+        // Second active job for the same tenant: 429 + Retry-After.
+        let (code, headers, resp_body) = http::request_full(
+            &addr,
+            "POST",
+            "/v2/jobs",
+            Some(&body),
+            &[("X-Api-Key", "tenant-a")],
+        )
+        .unwrap();
+        assert_eq!(code, 429, "{resp_body}");
+        assert!(headers.iter().any(|(k, _)| k == "Retry-After"), "{headers:?}");
+        assert!(resp_body.contains("quota"), "{resp_body}");
+        // A different tenant is unaffected.
+        let (code, _, _) = http::request_full(
+            &addr,
+            "POST",
+            "/v2/jobs",
+            Some(&body),
+            &[("X-Api-Key", "tenant-b")],
+        )
+        .unwrap();
+        assert_eq!(code, 202);
+        // Cancel the long jobs so shutdown's drain returns promptly.
+        for id in 1..=2u64 {
+            http::request(&addr, "DELETE", &format!("/v2/jobs/{id}"), None).ok();
+        }
         server.shutdown();
     }
 
@@ -369,10 +784,54 @@ mod tests {
         )
         .unwrap();
         assert_eq!(code, 400, "{body}");
+        // An inline payload that does not match the declared shapes.
+        let (code, body) = http::request(
+            client.addr(),
+            "POST",
+            "/v2/jobs",
+            Some(r#"{"problem": {"source": "inline", "objective": "pca",
+                      "c": [{"rows": 2, "cols": 2, "data": [1, 0, 0, 1]}]},
+                     "batch": 2, "p": 1, "n": 2, "steps": 5,
+                     "optimizer": {"method": "pogo", "lr": 0.1}}"#),
+        )
+        .unwrap();
+        assert_eq!(code, 400, "{body}");
+        assert!(body.contains("inline"), "{body}");
         // Result of a job that does not exist.
         let (code, _) =
             http::request(client.addr(), "GET", "/v1/jobs/7/result", None).unwrap();
         assert_eq!(code, 404);
+        server.shutdown();
+    }
+
+    #[test]
+    fn malformed_requests_never_leak_connection_slots() {
+        // More bad requests than MAX_CONNS: if any 4xx path leaked its
+        // slot, the daemon would start answering 503 before the end.
+        let (server, client) = ephemeral();
+        let addr = server.addr();
+        for i in 0..(MAX_CONNS + 8) {
+            use std::io::{Read, Write};
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(5))).ok();
+            // Alternate protocol violations.
+            let bad: &[u8] = if i % 2 == 0 {
+                b"POST /v1/jobs HTTP/1.1\r\nContent-Length: zero\r\n\r\n"
+            } else {
+                b"POST /v1/jobs HTTP/1.1\r\nContent-Length: 99\r\n\r\nshort"
+            };
+            s.write_all(bad).unwrap();
+            s.shutdown(std::net::Shutdown::Write).ok();
+            let mut out = String::new();
+            s.read_to_string(&mut out).ok();
+            assert!(
+                out.starts_with("HTTP/1.1 4"),
+                "request {i} should get a 4xx, got: {out:.60}"
+            );
+        }
+        // And the daemon still serves real traffic.
+        let h = client.healthz().unwrap();
+        assert_eq!(h.get("status").as_str(), Some("ok"));
         server.shutdown();
     }
 }

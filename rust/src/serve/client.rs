@@ -2,8 +2,11 @@
 //! and the e2e tests drive, and a reference for how to talk to the
 //! daemon from anything that can open a TCP socket.
 //!
-//! Thin by design: one [`http::request`] round-trip per call, JSON in
-//! and out, non-2xx mapped to `Err` carrying the server's error body.
+//! Thin by design: one [`http::request`] round-trip per call (or one
+//! [`http::stream_sse`] subscription for the v2 event feed), JSON in and
+//! out, non-2xx mapped to `Err` carrying the server's error body. An
+//! optional API key rides every call as `X-Api-Key` — the daemon's
+//! tenant identity for quotas.
 
 use super::http;
 use super::job::JobSpec;
@@ -12,23 +15,47 @@ use crate::util::json::Json;
 use anyhow::{anyhow, Result};
 use std::time::{Duration, Instant};
 
+/// One decoded `event: progress` record from the v2 stream.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamedStep {
+    pub step: usize,
+    pub loss: f64,
+    pub ortho_error: f64,
+    pub wall_s: f64,
+}
+
 /// A handle on one daemon address. Cheap to clone per client thread.
 #[derive(Clone, Debug)]
 pub struct ServeClient {
     addr: String,
+    api_key: Option<String>,
 }
 
 impl ServeClient {
     pub fn new(addr: impl Into<String>) -> ServeClient {
-        ServeClient { addr: addr.into() }
+        ServeClient { addr: addr.into(), api_key: None }
+    }
+
+    /// Attach an API key (the daemon's tenant identity) to every call.
+    pub fn with_api_key(mut self, key: impl Into<String>) -> ServeClient {
+        self.api_key = Some(key.into());
+        self
     }
 
     pub fn addr(&self) -> &str {
         &self.addr
     }
 
+    fn headers(&self) -> Vec<(&str, &str)> {
+        match &self.api_key {
+            Some(k) => vec![("X-Api-Key", k.as_str())],
+            None => Vec::new(),
+        }
+    }
+
     fn call(&self, method: &str, path: &str, body: Option<&str>) -> Result<Json> {
-        let (code, text) = http::request(&self.addr, method, path, body)?;
+        let (code, _, text) =
+            http::request_full(&self.addr, method, path, body, &self.headers())?;
         let parsed = Json::parse(&text)
             .map_err(|e| anyhow!("{method} {path}: HTTP {code} with non-JSON body: {e}"))?;
         if !(200..300).contains(&code) {
@@ -38,23 +65,42 @@ impl ServeClient {
         Ok(parsed)
     }
 
-    /// Submit a job; returns its id.
-    pub fn submit(&self, spec: &JobSpec) -> Result<JobId> {
-        let j = self.call("POST", "/v1/jobs", Some(&spec.to_json().to_string()))?;
+    fn submit_to(&self, path: &str, spec: &JobSpec) -> Result<JobId> {
+        let j = self.call("POST", path, Some(&spec.to_json().to_string()))?;
         j.get("id")
             .as_usize()
             .map(|v| v as JobId)
             .ok_or_else(|| anyhow!("submit response has no id: {}", j.to_string()))
     }
 
-    /// Status + metrics tail of one job.
+    /// Submit a job (v1 surface); returns its id.
+    pub fn submit(&self, spec: &JobSpec) -> Result<JobId> {
+        self.submit_to("/v1/jobs", spec)
+    }
+
+    /// Submit a job on the v2 surface (inline sources, quota headers).
+    pub fn submit_v2(&self, spec: &JobSpec) -> Result<JobId> {
+        self.submit_to("/v2/jobs", spec)
+    }
+
+    /// Status + metrics tail of one job (v1).
     pub fn status(&self, id: JobId) -> Result<Json> {
         self.call("GET", &format!("/v1/jobs/{id}"), None)
+    }
+
+    /// v2 status: v1 fields plus tenant, cost and series length.
+    pub fn status_v2(&self, id: JobId) -> Result<Json> {
+        self.call("GET", &format!("/v2/jobs/{id}"), None)
     }
 
     /// Final result (errors while the job is still queued/running).
     pub fn result(&self, id: JobId) -> Result<Json> {
         self.call("GET", &format!("/v1/jobs/{id}/result"), None)
+    }
+
+    /// v2 result: the full (untruncated) loss series and final iterate.
+    pub fn result_v2(&self, id: JobId) -> Result<Json> {
+        self.call("GET", &format!("/v2/jobs/{id}/result"), None)
     }
 
     /// Cancel; returns the state after the call.
@@ -78,6 +124,58 @@ impl ServeClient {
             return Err(anyhow!("GET /metrics: HTTP {code}"));
         }
         Ok(text)
+    }
+
+    /// Subscribe to a job's live SSE stream and hand every progress
+    /// record to `on_step`. Blocks until the stream's terminal `state`
+    /// event (returned), `on_step` returns `false` (returns the last
+    /// state seen, usually empty), or `timeout` passes (an error).
+    pub fn stream_events(
+        &self,
+        id: JobId,
+        timeout: Duration,
+        mut on_step: impl FnMut(&StreamedStep) -> bool,
+    ) -> Result<String> {
+        let mut terminal = String::new();
+        let path = format!("/v2/jobs/{id}/events");
+        http::stream_sse(
+            &self.addr,
+            &path,
+            &self.headers(),
+            timeout,
+            &mut |event, data| match event {
+                "progress" => {
+                    let Ok(j) = Json::parse(data) else { return true };
+                    let step = StreamedStep {
+                        step: j.get("step").as_usize().unwrap_or(0),
+                        loss: j.get("loss").as_f64().unwrap_or(f64::NAN),
+                        ortho_error: j.get("ortho_error").as_f64().unwrap_or(f64::NAN),
+                        wall_s: j.get("wall_s").as_f64().unwrap_or(0.0),
+                    };
+                    on_step(&step)
+                }
+                "state" => {
+                    if let Ok(j) = Json::parse(data) {
+                        terminal = j.get("state").as_str().unwrap_or("").to_string();
+                    }
+                    true // the server closes the stream right after
+                }
+                _ => true,
+            },
+        )?;
+        Ok(terminal)
+    }
+
+    /// Follow a job over SSE to its terminal state and fetch the v2
+    /// result — the streaming analogue of [`wait_result`]
+    /// (`failed`/`cancelled` end states are an error naming them).
+    pub fn stream_result(&self, id: JobId, timeout: Duration) -> Result<Json> {
+        let state = self.stream_events(id, timeout, |_| true)?;
+        match state.as_str() {
+            "done" => self.result_v2(id),
+            "" => Err(anyhow!("job {id}: event stream ended without a terminal state")),
+            other => Err(anyhow!("job {id} ended as '{other}'")),
+        }
     }
 
     /// Poll until the job reaches a terminal state; returns the final

@@ -2,19 +2,27 @@
 //! API and its in-process client (the offline registry has no hyper).
 //!
 //! Server side: [`read_request`] parses one request (method, path,
-//! headers, `Content-Length` body; 1 MiB body cap) off a stream and
-//! [`write_response`] writes one `Connection: close` response. Client
-//! side: [`request`] performs one round-trip. Every connection carries
-//! exactly one request/response pair — simple, and plenty for a job API
-//! whose unit of work is minutes of optimization.
+//! headers, `Content-Length` or `Transfer-Encoding: chunked` body;
+//! size-capped) off a stream; protocol violations come back as a typed
+//! [`ReadError::Protocol`] carrying the 4xx status to answer with, so a
+//! hostile peer can never panic a handler or leak its connection slot.
+//! [`write_response`] writes one `Connection: close` response;
+//! [`write_stream_head`] / [`write_chunk`] / [`finish_chunked`] stream a
+//! chunked response (the v2 SSE event feed). Client side: [`request`]
+//! performs one buffered round-trip and [`stream_sse`] consumes a live
+//! `text/event-stream`. Every connection carries exactly one
+//! request/response pair.
 
 use anyhow::{anyhow, Context, Result};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-/// Largest accepted request body (a job spec is ~1 KiB).
-pub const MAX_BODY: usize = 1 << 20;
+/// Largest accepted request body. Sized for v2 inline problem payloads
+/// (base64-packed matrices), not just bare job specs; the daemon's
+/// `--max-inline-bytes` admission cap bounds the decoded payload more
+/// precisely.
+pub const MAX_BODY: usize = 16 << 20;
 /// Largest accepted header section.
 const MAX_HEADERS: usize = 64;
 /// Largest accepted single line (request line or one header) — caps the
@@ -46,11 +54,47 @@ impl Request {
     }
 }
 
+/// Why a request could not be read.
+#[derive(Debug)]
+pub enum ReadError {
+    /// Protocol violation — answer with this status, then close.
+    Protocol { status: u16, msg: String },
+    /// Transport failure (peer vanished, timeout) — nothing to answer.
+    Transport(anyhow::Error),
+}
+
+impl ReadError {
+    fn protocol(status: u16, msg: impl Into<String>) -> ReadError {
+        ReadError::Protocol { status, msg: msg.into() }
+    }
+
+    /// The response a protocol violation maps to (transport errors have
+    /// no one left to answer).
+    pub fn response(&self) -> Option<Response> {
+        match self {
+            ReadError::Protocol { status, msg } => Some(Response::error(*status, msg.clone())),
+            ReadError::Transport(_) => None,
+        }
+    }
+}
+
+impl std::fmt::Display for ReadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReadError::Protocol { status, msg } => write!(f, "HTTP {status}: {msg}"),
+            ReadError::Transport(e) => write!(f, "transport: {e:#}"),
+        }
+    }
+}
+
 /// One response about to be written.
 #[derive(Debug)]
 pub struct Response {
     pub status: u16,
     pub content_type: &'static str,
+    /// Extra headers beyond the Content-Type/Length/Connection set
+    /// (`Retry-After`, quota telemetry, …).
+    pub headers: Vec<(&'static str, String)>,
     pub body: Vec<u8>,
 }
 
@@ -59,12 +103,18 @@ impl Response {
         Response {
             status,
             content_type: "application/json",
+            headers: Vec::new(),
             body: (body.to_string_pretty() + "\n").into_bytes(),
         }
     }
 
     pub fn text(status: u16, body: impl Into<String>) -> Response {
-        Response { status, content_type: "text/plain; charset=utf-8", body: body.into().into_bytes() }
+        Response {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            headers: Vec::new(),
+            body: body.into().into_bytes(),
+        }
     }
 
     /// `{"error": msg}` with the given status.
@@ -76,6 +126,12 @@ impl Response {
                 crate::util::json::Json::str(msg.into()),
             )]),
         )
+    }
+
+    /// Attach an extra header.
+    pub fn with_header(mut self, name: &'static str, value: impl Into<String>) -> Response {
+        self.headers.push((name, value.into()));
+        self
     }
 }
 
@@ -89,6 +145,7 @@ pub fn status_reason(status: u16) -> &'static str {
         409 => "Conflict",
         413 => "Payload Too Large",
         429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
         _ => "Unknown",
@@ -98,10 +155,12 @@ pub fn status_reason(status: u16) -> &'static str {
 /// `read_line` with a hard byte cap, so a peer streaming an endless
 /// line cannot grow an unbounded buffer (plain `BufRead::read_line`
 /// has no limit).
-fn read_line_capped<R: BufRead>(reader: &mut R, what: &str) -> Result<String> {
+fn read_line_capped<R: BufRead>(reader: &mut R, what: &str) -> Result<String, ReadError> {
     let mut buf: Vec<u8> = Vec::new();
     loop {
-        let available = reader.fill_buf().with_context(|| format!("reading {what}"))?;
+        let available = reader
+            .fill_buf()
+            .map_err(|e| ReadError::Transport(anyhow!("reading {what}: {e}")))?;
         if available.is_empty() {
             break; // EOF
         }
@@ -118,82 +177,253 @@ fn read_line_capped<R: BufRead>(reader: &mut R, what: &str) -> Result<String> {
             }
         }
         if buf.len() > MAX_LINE {
-            return Err(anyhow!("{what} exceeds the {MAX_LINE}-byte line cap"));
+            return Err(ReadError::protocol(
+                400,
+                format!("{what} exceeds the {MAX_LINE}-byte line cap"),
+            ));
         }
     }
     if buf.len() > MAX_LINE {
-        return Err(anyhow!("{what} exceeds the {MAX_LINE}-byte line cap"));
+        return Err(ReadError::protocol(
+            400,
+            format!("{what} exceeds the {MAX_LINE}-byte line cap"),
+        ));
     }
     Ok(String::from_utf8_lossy(&buf).into_owned())
 }
 
-/// Parse one request off the stream. Errors map to a 400 at the call
-/// site (or a dropped connection if the peer vanished).
-pub fn read_request(stream: &TcpStream) -> Result<Request> {
+/// Parse one chunked-transfer size line: hex count, optional `;ext`
+/// chunk extensions ignored. Shared by the server-side body reader and
+/// the client-side SSE consumer so framing rules cannot drift.
+fn parse_chunk_size(line: &str) -> Option<usize> {
+    let text = line.trim_end();
+    let text = text.split(';').next().unwrap_or(text).trim();
+    usize::from_str_radix(text, 16).ok()
+}
+
+/// Read a `Transfer-Encoding: chunked` body: hex-sized chunks until the
+/// terminal `0` chunk, total capped at [`MAX_BODY`]. Truncated or
+/// malformed framing is a 400, never a panic.
+fn read_chunked_body<R: BufRead>(reader: &mut R) -> Result<Vec<u8>, ReadError> {
+    let mut body = Vec::new();
+    loop {
+        let line = read_line_capped(reader, "chunk size")?;
+        let size = parse_chunk_size(&line).ok_or_else(|| {
+            ReadError::protocol(400, format!("malformed chunk size '{}'", line.trim_end()))
+        })?;
+        if size == 0 {
+            // Optional trailers, then the blank terminator line.
+            for _ in 0..MAX_HEADERS {
+                let t = read_line_capped(reader, "chunk trailer")?;
+                if t.trim_end().is_empty() {
+                    return Ok(body);
+                }
+            }
+            return Err(ReadError::protocol(400, "too many chunk trailers"));
+        }
+        if body.len() + size > MAX_BODY {
+            return Err(ReadError::protocol(
+                413,
+                format!("chunked body exceeds the {MAX_BODY}-byte cap"),
+            ));
+        }
+        let start = body.len();
+        body.resize(start + size, 0);
+        reader.read_exact(&mut body[start..]).map_err(|e| {
+            ReadError::protocol(400, format!("truncated chunk ({size} bytes expected): {e}"))
+        })?;
+        let mut crlf = [0u8; 2];
+        match reader.read_exact(&mut crlf) {
+            Ok(()) if &crlf == b"\r\n" => {}
+            Ok(_) => return Err(ReadError::protocol(400, "chunk not CRLF-terminated")),
+            Err(e) => {
+                return Err(ReadError::protocol(400, format!("truncated chunk framing: {e}")))
+            }
+        }
+    }
+}
+
+/// Parse one request off the stream. [`ReadError::Protocol`] carries the
+/// 4xx the caller should answer with; [`ReadError::Transport`] means the
+/// peer is gone.
+pub fn read_request(stream: &TcpStream) -> Result<Request, ReadError> {
     stream.set_read_timeout(Some(IO_TIMEOUT)).ok();
     stream.set_write_timeout(Some(IO_TIMEOUT)).ok();
-    let mut reader = BufReader::new(stream.try_clone().context("cloning connection")?);
+    let mut reader = BufReader::new(
+        stream
+            .try_clone()
+            .map_err(|e| ReadError::Transport(anyhow!("cloning connection: {e}")))?,
+    );
 
     let line = read_line_capped(&mut reader, "request line")?;
     let mut parts = line.split_whitespace();
-    let method = parts.next().ok_or_else(|| anyhow!("empty request line"))?.to_string();
-    let target = parts.next().ok_or_else(|| anyhow!("request line has no path"))?;
+    let method = parts
+        .next()
+        .ok_or_else(|| ReadError::protocol(400, "empty request line"))?
+        .to_string();
+    let target =
+        parts.next().ok_or_else(|| ReadError::protocol(400, "request line has no path"))?;
     let path = target.split('?').next().unwrap_or(target).to_string();
 
     let mut headers = Vec::new();
+    // Count every header LINE against the cap, parsed or not — skipping
+    // colon-less junk without counting it would let a peer trickle such
+    // lines forever and pin this handler's connection slot.
+    let mut header_lines = 0usize;
     loop {
         let h = read_line_capped(&mut reader, "header")?;
         let h = h.trim_end();
         if h.is_empty() {
             break;
         }
-        if headers.len() >= MAX_HEADERS {
-            return Err(anyhow!("too many headers"));
+        header_lines += 1;
+        if header_lines > MAX_HEADERS {
+            return Err(ReadError::protocol(431, "too many headers"));
         }
         if let Some((k, v)) = h.split_once(':') {
             headers.push((k.trim().to_string(), v.trim().to_string()));
         }
     }
 
-    let len = headers
-        .iter()
-        .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
-        .and_then(|(_, v)| v.parse::<usize>().ok())
-        .unwrap_or(0);
-    if len > MAX_BODY {
-        return Err(anyhow!("request body of {len} bytes exceeds the {MAX_BODY} cap"));
-    }
-    let mut body = vec![0u8; len];
-    reader.read_exact(&mut body).context("reading request body")?;
+    let header = |name: &str| {
+        headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    };
+    let chunked = header("transfer-encoding")
+        .map(|v| v.to_ascii_lowercase().contains("chunked"))
+        .unwrap_or(false);
+    let body = if chunked {
+        // Refuse the request-smuggling ambiguity outright.
+        if header("content-length").is_some() {
+            return Err(ReadError::protocol(
+                400,
+                "both Content-Length and Transfer-Encoding: chunked",
+            ));
+        }
+        read_chunked_body(&mut reader)?
+    } else {
+        let len = match header("content-length") {
+            None => 0,
+            Some(v) => v.trim().parse::<usize>().map_err(|_| {
+                ReadError::protocol(400, format!("malformed Content-Length '{v}'"))
+            })?,
+        };
+        if len > MAX_BODY {
+            return Err(ReadError::protocol(
+                413,
+                format!("request body of {len} bytes exceeds the {MAX_BODY} cap"),
+            ));
+        }
+        let mut body = vec![0u8; len];
+        reader.read_exact(&mut body).map_err(|e| {
+            ReadError::protocol(400, format!("truncated body ({len} bytes expected): {e}"))
+        })?;
+        body
+    };
     Ok(Request { method, path, headers, body })
 }
 
 /// Write one `Connection: close` response.
 pub fn write_response(stream: &mut TcpStream, resp: &Response) -> std::io::Result<()> {
-    let head = format!(
-        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n",
         resp.status,
         status_reason(resp.status),
         resp.content_type,
         resp.body.len()
     );
+    for (name, value) in &resp.headers {
+        head.push_str(&format!("{name}: {value}\r\n"));
+    }
+    head.push_str("\r\n");
     stream.write_all(head.as_bytes())?;
     stream.write_all(&resp.body)?;
     stream.flush()
 }
 
+/// Begin a chunked streaming response (what the SSE endpoint emits);
+/// follow with [`write_chunk`] calls and a final [`finish_chunked`].
+pub fn write_stream_head(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    extra: &[(&str, &str)],
+) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nTransfer-Encoding: chunked\r\n\
+         Cache-Control: no-store\r\nConnection: close\r\n",
+        status,
+        status_reason(status),
+        content_type,
+    );
+    for (name, value) in extra {
+        head.push_str(&format!("{name}: {value}\r\n"));
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes())?;
+    stream.flush()
+}
+
+/// Write one chunk (no-op for empty data — a zero-length chunk would
+/// terminate the stream).
+pub fn write_chunk(stream: &mut TcpStream, data: &[u8]) -> std::io::Result<()> {
+    if data.is_empty() {
+        return Ok(());
+    }
+    stream.write_all(format!("{:x}\r\n", data.len()).as_bytes())?;
+    stream.write_all(data)?;
+    stream.write_all(b"\r\n")?;
+    stream.flush()
+}
+
+/// Terminate a chunked stream.
+pub fn finish_chunked(stream: &mut TcpStream) -> std::io::Result<()> {
+    stream.write_all(b"0\r\n\r\n")?;
+    stream.flush()
+}
+
+/// Base request head shared by every client entry point ([`request_full`]
+/// and [`stream_sse`]), so the line format cannot drift between them.
+fn client_head(method: &str, path: &str, addr: &str) -> String {
+    format!("{method} {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n")
+}
+
+/// Status code out of an HTTP/1.1 status line.
+fn parse_status_line(line: &str) -> Option<u16> {
+    line.split_whitespace().nth(1).and_then(|s| s.parse::<u16>().ok())
+}
+
 /// Client side: one request/response round-trip. Returns (status, body).
 pub fn request(addr: &str, method: &str, path: &str, body: Option<&str>) -> Result<(u16, String)> {
+    let (status, _, body) = request_full(addr, method, path, body, &[])?;
+    Ok((status, body))
+}
+
+/// [`request`] with extra request headers (e.g. `X-Api-Key`); returns
+/// (status, response headers, body).
+pub fn request_full(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+    headers: &[(&str, &str)],
+) -> Result<(u16, Vec<(String, String)>, String)> {
     let mut stream =
         TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
     stream.set_read_timeout(Some(IO_TIMEOUT)).ok();
     stream.set_write_timeout(Some(IO_TIMEOUT)).ok();
     let body = body.unwrap_or("");
-    let head = format!(
-        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\
-         Content-Type: application/json\r\nContent-Length: {}\r\n\r\n",
+    let mut head = client_head(method, path, addr);
+    head.push_str(&format!(
+        "Content-Type: application/json\r\nContent-Length: {}\r\n",
         body.len()
-    );
+    ));
+    for (name, value) in headers {
+        head.push_str(&format!("{name}: {value}\r\n"));
+    }
+    head.push_str("\r\n");
     stream.write_all(head.as_bytes())?;
     stream.write_all(body.as_bytes())?;
     stream.flush()?;
@@ -204,14 +434,122 @@ pub fn request(addr: &str, method: &str, path: &str, body: Option<&str>) -> Resu
     let status = text
         .lines()
         .next()
-        .and_then(|l| l.split_whitespace().nth(1))
-        .and_then(|s| s.parse::<u16>().ok())
+        .and_then(parse_status_line)
         .ok_or_else(|| anyhow!("malformed response from {addr}: {:.120}", text))?;
-    let payload = match text.find("\r\n\r\n") {
-        Some(i) => text[i + 4..].to_string(),
-        None => String::new(),
+    let (head_text, payload) = match text.find("\r\n\r\n") {
+        Some(i) => (text[..i].to_string(), text[i + 4..].to_string()),
+        None => (text.to_string(), String::new()),
     };
-    Ok((status, payload))
+    let resp_headers: Vec<(String, String)> = head_text
+        .lines()
+        .skip(1)
+        .filter_map(|l| l.split_once(':'))
+        .map(|(k, v)| (k.trim().to_string(), v.trim().to_string()))
+        .collect();
+    Ok((status, resp_headers, payload))
+}
+
+/// Client side: open a streaming GET and hand each SSE event to
+/// `on_event(event_name, data)`. Returns when the server closes the
+/// stream, `on_event` returns `false`, or `deadline` passes (an error).
+/// Comment lines (`: keepalive`) are skipped.
+pub fn stream_sse(
+    addr: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    deadline: Duration,
+    on_event: &mut dyn FnMut(&str, &str) -> bool,
+) -> Result<()> {
+    let stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    stream.set_read_timeout(Some(IO_TIMEOUT)).ok();
+    stream.set_write_timeout(Some(IO_TIMEOUT)).ok();
+    let mut out = stream.try_clone().context("cloning connection")?;
+    let mut head = client_head("GET", path, addr);
+    head.push_str("Accept: text/event-stream\r\n");
+    for (name, value) in headers {
+        head.push_str(&format!("{name}: {value}\r\n"));
+    }
+    head.push_str("\r\n");
+    out.write_all(head.as_bytes())?;
+    out.flush()?;
+
+    let until = Instant::now() + deadline;
+    let mut reader = BufReader::new(stream);
+    let status_line = read_line_capped(&mut reader, "status line")
+        .map_err(|e| anyhow!("reading SSE status: {e}"))?;
+    let status = parse_status_line(&status_line)
+        .ok_or_else(|| anyhow!("malformed SSE status line: {status_line:.120}"))?;
+    let mut chunked = false;
+    loop {
+        let h = read_line_capped(&mut reader, "header")
+            .map_err(|e| anyhow!("reading SSE headers: {e}"))?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("transfer-encoding")
+                && v.to_ascii_lowercase().contains("chunked")
+            {
+                chunked = true;
+            }
+        }
+    }
+    if status != 200 {
+        // Error bodies are small; drain what is there and surface it.
+        let mut body = String::new();
+        (&mut reader).take(4096).read_to_string(&mut body).ok();
+        return Err(anyhow!("GET {path}: HTTP {status}: {}", body.trim()));
+    }
+    if !chunked {
+        return Err(anyhow!("GET {path}: expected a chunked event stream"));
+    }
+
+    // De-chunk into a text buffer, dispatching complete SSE events
+    // (blank-line separated blocks) as they land.
+    let mut text = String::new();
+    loop {
+        if Instant::now() > until {
+            return Err(anyhow!("SSE stream on {path}: no terminal event after {deadline:?}"));
+        }
+        let size_line = read_line_capped(&mut reader, "chunk size")
+            .map_err(|e| anyhow!("reading SSE chunk: {e}"))?;
+        if size_line.trim().is_empty() {
+            return Ok(()); // clean EOF after the final chunk
+        }
+        let size = parse_chunk_size(&size_line)
+            .ok_or_else(|| anyhow!("malformed SSE chunk size '{}'", size_line.trim_end()))?;
+        if size == 0 {
+            return Ok(());
+        }
+        let mut chunk = vec![0u8; size + 2]; // data + CRLF
+        reader.read_exact(&mut chunk).context("truncated SSE chunk")?;
+        text.push_str(&String::from_utf8_lossy(&chunk[..size]));
+        while let Some(split) = text.find("\n\n") {
+            let block: String = text[..split].to_string();
+            text.drain(..split + 2);
+            let mut event = "message";
+            let mut data = String::new();
+            for line in block.lines() {
+                if let Some(rest) = line.strip_prefix("event:") {
+                    event = rest.trim();
+                } else if let Some(rest) = line.strip_prefix("data:") {
+                    if !data.is_empty() {
+                        data.push('\n');
+                    }
+                    data.push_str(rest.trim());
+                }
+                // Comment lines (": keepalive") fall through untouched.
+            }
+            if data.is_empty() && event == "message" {
+                continue; // pure keepalive block
+            }
+            if !on_event(event, &data) {
+                return Ok(());
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -220,7 +558,8 @@ mod tests {
     use std::net::TcpListener;
 
     /// One-shot echo server: parses a request, answers with its method,
-    /// path and body length as JSON.
+    /// path and body length as JSON; protocol violations answer with
+    /// their mapped 4xx like the real daemon does.
     fn spawn_echo() -> std::net::SocketAddr {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
@@ -240,13 +579,34 @@ mod tests {
                         write_response(&mut stream, &Response::json(200, &j)).ok();
                     }
                     Err(e) => {
-                        write_response(&mut stream, &Response::error(400, format!("{e:#}")))
-                            .ok();
+                        if let Some(resp) = e.response() {
+                            write_response(&mut stream, &resp).ok();
+                        }
                     }
                 }
             }
         });
         addr
+    }
+
+    /// Send raw bytes, return the full response text.
+    fn raw_roundtrip(addr: &std::net::SocketAddr, payload: &[u8]) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).ok();
+        s.write_all(payload).unwrap();
+        // Half-close so a server waiting for more body sees EOF.
+        s.shutdown(std::net::Shutdown::Write).ok();
+        let mut out = Vec::new();
+        s.read_to_end(&mut out).ok();
+        String::from_utf8_lossy(&out).into_owned()
+    }
+
+    fn status_of(resp: &str) -> u16 {
+        resp.lines()
+            .next()
+            .and_then(|l| l.split_whitespace().nth(1))
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0)
     }
 
     #[test]
@@ -273,8 +633,150 @@ mod tests {
     }
 
     #[test]
+    fn chunked_request_body_reassembled() {
+        let addr = spawn_echo();
+        let resp = raw_roundtrip(
+            &addr,
+            b"POST /v1/jobs HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n\
+              4\r\nwiki\r\n5\r\npedia\r\n0\r\n\r\n",
+        );
+        assert_eq!(status_of(&resp), 200, "{resp}");
+        assert!(resp.contains("\"body_len\": 9"), "{resp}");
+    }
+
+    #[test]
+    fn malformed_content_length_is_400() {
+        let addr = spawn_echo();
+        for bad in ["abc", "-1", "1e3", "18446744073709551617"] {
+            let resp = raw_roundtrip(
+                &addr,
+                format!("POST /x HTTP/1.1\r\nContent-Length: {bad}\r\n\r\n").as_bytes(),
+            );
+            assert_eq!(status_of(&resp), 400, "Content-Length: {bad} -> {resp}");
+        }
+    }
+
+    #[test]
+    fn oversized_content_length_is_413() {
+        let addr = spawn_echo();
+        let resp = raw_roundtrip(
+            &addr,
+            format!("POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY + 1).as_bytes(),
+        );
+        assert_eq!(status_of(&resp), 413, "{resp}");
+    }
+
+    #[test]
+    fn truncated_bodies_are_400() {
+        let addr = spawn_echo();
+        // Declared Content-Length longer than what arrives.
+        let resp = raw_roundtrip(&addr, b"POST /x HTTP/1.1\r\nContent-Length: 50\r\n\r\nshort");
+        assert_eq!(status_of(&resp), 400, "{resp}");
+        // Chunked body cut off mid-chunk.
+        let resp = raw_roundtrip(
+            &addr,
+            b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\nff\r\nonly-a-few-bytes",
+        );
+        assert_eq!(status_of(&resp), 400, "{resp}");
+        // Chunked body missing its 0-terminator.
+        let resp = raw_roundtrip(
+            &addr,
+            b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n4\r\nwiki\r\n",
+        );
+        assert_eq!(status_of(&resp), 400, "{resp}");
+    }
+
+    #[test]
+    fn oversized_chunked_body_is_413() {
+        let addr = spawn_echo();
+        let resp = raw_roundtrip(
+            &addr,
+            format!(
+                "POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n{:x}\r\n",
+                MAX_BODY + 1
+            )
+            .as_bytes(),
+        );
+        assert_eq!(status_of(&resp), 413, "{resp}");
+    }
+
+    #[test]
+    fn smuggling_ambiguity_rejected() {
+        let addr = spawn_echo();
+        let resp = raw_roundtrip(
+            &addr,
+            b"POST /x HTTP/1.1\r\nContent-Length: 4\r\nTransfer-Encoding: chunked\r\n\r\n\
+              0\r\n\r\n",
+        );
+        assert_eq!(status_of(&resp), 400, "{resp}");
+    }
+
+    #[test]
+    fn header_overflow_is_431_and_long_lines_400() {
+        let addr = spawn_echo();
+        let mut req = String::from("GET /x HTTP/1.1\r\n");
+        for i in 0..100 {
+            req.push_str(&format!("X-Flood-{i}: y\r\n"));
+        }
+        req.push_str("\r\n");
+        let resp = raw_roundtrip(&addr, req.as_bytes());
+        assert_eq!(status_of(&resp), 431, "{resp}");
+
+        // Colon-less junk lines count against the cap too — otherwise a
+        // peer could trickle them forever and pin the connection slot.
+        let mut req = String::from("GET /x HTTP/1.1\r\n");
+        for i in 0..100 {
+            req.push_str(&format!("not-a-header-{i}\r\n"));
+        }
+        req.push_str("\r\n");
+        let resp = raw_roundtrip(&addr, req.as_bytes());
+        assert_eq!(status_of(&resp), 431, "{resp}");
+
+        let long = format!("GET /x HTTP/1.1\r\nX-Big: {}\r\n\r\n", "a".repeat(MAX_LINE + 10));
+        let resp = raw_roundtrip(&addr, long.as_bytes());
+        assert_eq!(status_of(&resp), 400, "{resp}");
+    }
+
+    #[test]
+    fn chunked_stream_roundtrip() {
+        // A server that streams three SSE events over chunked encoding;
+        // the client-side consumer reassembles them in order.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            read_request(&stream).unwrap();
+            write_stream_head(&mut stream, 200, "text/event-stream", &[("X-Job", "7")])
+                .unwrap();
+            write_chunk(&mut stream, b": keepalive\n\n").unwrap();
+            for i in 1..=3 {
+                let ev = format!("event: progress\ndata: {{\"step\":{i}}}\n\n");
+                write_chunk(&mut stream, ev.as_bytes()).unwrap();
+            }
+            write_chunk(&mut stream, b"event: state\ndata: {\"state\":\"done\"}\n\n").unwrap();
+            finish_chunked(&mut stream).unwrap();
+        });
+        let mut seen: Vec<(String, String)> = Vec::new();
+        stream_sse(
+            &addr.to_string(),
+            "/v2/jobs/7/events",
+            &[],
+            Duration::from_secs(10),
+            &mut |event, data| {
+                seen.push((event.to_string(), data.to_string()));
+                true
+            },
+        )
+        .unwrap();
+        assert_eq!(seen.len(), 4, "{seen:?}");
+        assert!(seen[..3].iter().all(|(e, _)| e == "progress"));
+        assert_eq!(seen[3].0, "state");
+        assert!(seen[3].1.contains("done"));
+    }
+
+    #[test]
     fn status_reasons_cover_api_codes() {
-        for code in [200, 202, 400, 404, 405, 409, 413, 429, 500, 503] {
+        for code in [200, 202, 400, 404, 405, 409, 413, 429, 431, 500, 503] {
             assert_ne!(status_reason(code), "Unknown", "{code}");
         }
     }

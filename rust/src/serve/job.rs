@@ -1,31 +1,36 @@
 //! The serve job model: what a client submits and what a worker runs.
 //!
-//! A [`JobSpec`] names a problem (Procrustes / PCA-style / quartic
-//! localization / raw gradient-replay), an [`OptimizerSpec`] (so
-//! `"engine": "rust" | "batched-host"` round-trips exactly as in spec
-//! JSON today), a `(batch, p, n)` shape group, the manifold domain
-//! (real/complex Stiefel), a step budget and a seed. [`run_job`] is the
-//! ONE execution path: it drives an [`OptimSession`] over a seeded
-//! `ParamStore`, so a job run through the daemon is **bit-for-bit** the
-//! same trajectory as calling `run_job` (or an `OptimSession` loop with
-//! the same construction order) directly — the property the e2e test
-//! pins.
+//! A [`JobSpec`] names a problem source (see [`super::problem`]: seeded
+//! `builtin` objectives, or `inline` client-supplied matrices), an
+//! [`OptimizerSpec`] (so `"engine": "rust" | "batched-host"` round-trips
+//! exactly as in spec JSON today), a `(batch, p, n)` shape group, the
+//! manifold domain (real/complex Stiefel), a step budget and a seed.
+//! [`run_job`] is the ONE execution path: it drives an [`OptimSession`]
+//! over a seeded `ParamStore`, so a job run through the daemon is
+//! **bit-for-bit** the same trajectory as calling `run_job` (or an
+//! `OptimSession` loop with the same construction order) directly — the
+//! property the e2e test pins. [`run_job_with`] is the same path with a
+//! per-step [`StepProgress`] observer (what the daemon's SSE stream and
+//! full loss series feed from) and returns the [`FinalIterate`] for the
+//! v2 result surface.
 //!
-//! Real-domain jobs with `checkpoint_every > 0` periodically persist
-//! through [`crate::coordinator::checkpoint`] and resume from the
-//! checkpoint on restart (parameters + step counter; base-optimizer
-//! state restarts, so resumed momentum runs continue feasibly but are
-//! not bitwise-identical to an uninterrupted run — POGO/sgd is
-//! stateless and resumes exactly). Complex jobs are not checkpointed
-//! (the v1 format stores real scalars only).
+//! Jobs with `checkpoint_every > 0` periodically persist through
+//! [`crate::coordinator::checkpoint`] on **both** domains (real stores
+//! save as `f32`, complex ones as interleaved `c64` pairs) and resume
+//! from the checkpoint on restart (parameters + step counter;
+//! base-optimizer state restarts, so resumed momentum runs continue
+//! feasibly but are not bitwise-identical to an uninterrupted run —
+//! POGO/sgd is stateless and resumes exactly).
 
 use crate::coordinator::{checkpoint, OptimSession, OptimizerSpec, ParamStore};
-use crate::linalg::{matmul, matmul_ah_b, Complex, Field, Mat, Scalar};
+use crate::linalg::{matmul, matmul_ah_b, Complex, Field, Mat};
 use crate::rng::Rng;
 use crate::util::json::Json;
 use anyhow::{anyhow, ensure, Context, Result};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
+
+pub use super::problem::{InlineMat, InlineProblem, ProblemKind, ProblemSource, WireElem};
 
 /// Which manifold a job optimizes over.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -53,55 +58,14 @@ impl JobDomain {
     }
 }
 
-/// The objective a job minimizes. All four are matmul/elementwise only,
-/// defined on both domains, and fully determined by `(seed, batch, p, n)`
-/// — no data upload in v1.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum ProblemKind {
-    /// `Σᵢ ‖Aᵢ Xᵢ − Bᵢ‖²`, `Aᵢ ∈ F^{p×p}`, `Bᵢ ∈ F^{p×n}` Gaussian
-    /// (Fig. 4-right generalized to wide X and B > 1).
-    Procrustes,
-    /// PCA-style `Σᵢ −Re Tr(Xᵢ Cᵢ Xᵢᴴ)` with `Cᵢ = Mᵢᴴ Mᵢ / n` PSD.
-    Pca,
-    /// Quartic localization `Σᵢ Σⱼₖ |Xᵢ[j,k]|⁴` (gradient `4 |x|² x`).
-    Quartic,
-    /// Raw gradient-replay: per-step seeded Gaussian pseudo-gradients of
-    /// norm 0.1; the reported "loss" is `Σᵢ Re⟨Xᵢ, Gᵢ⟩` (a deterministic
-    /// trajectory fingerprint, not an objective).
-    Replay,
-}
-
-impl ProblemKind {
-    pub fn name(self) -> &'static str {
-        match self {
-            ProblemKind::Procrustes => "procrustes",
-            ProblemKind::Pca => "pca",
-            ProblemKind::Quartic => "quartic",
-            ProblemKind::Replay => "replay",
-        }
-    }
-
-    pub fn parse(s: &str) -> Option<ProblemKind> {
-        Some(match s.to_ascii_lowercase().as_str() {
-            "procrustes" => ProblemKind::Procrustes,
-            "pca" => ProblemKind::Pca,
-            "quartic" => ProblemKind::Quartic,
-            "replay" | "grad-replay" | "gradient-replay" => ProblemKind::Replay,
-            _ => return None,
-        })
-    }
-
-    pub fn all() -> &'static [ProblemKind] {
-        &[ProblemKind::Procrustes, ProblemKind::Pca, ProblemKind::Quartic, ProblemKind::Replay]
-    }
-}
-
 /// One submitted optimization job.
 #[derive(Clone, Debug, PartialEq)]
 pub struct JobSpec {
     /// Client-chosen label (shows up in listings; empty is fine).
     pub name: String,
-    pub problem: ProblemKind,
+    /// Where the objective comes from (builtin seeded, or inline client
+    /// data — see [`super::problem`]).
+    pub source: ProblemSource,
     pub domain: JobDomain,
     /// Shape group: `batch` matrices on St(p, n).
     pub batch: usize,
@@ -109,9 +73,9 @@ pub struct JobSpec {
     pub n: usize,
     /// Step budget.
     pub steps: usize,
-    /// Seed for parameters AND problem data (full determinism).
+    /// Seed for parameters AND builtin problem data (full determinism).
     pub seed: u64,
-    /// Persist every k steps (0 = never). Real domain only.
+    /// Persist every k steps (0 = never).
     pub checkpoint_every: usize,
     /// Method, hyperparameters and engine — the same serializable spec
     /// the CLI replays.
@@ -119,11 +83,12 @@ pub struct JobSpec {
 }
 
 impl JobSpec {
-    /// A small POGO job — the starting point tests and examples tweak.
+    /// A small POGO job on a builtin problem — the starting point tests
+    /// and examples tweak.
     pub fn new(problem: ProblemKind, batch: usize, p: usize, n: usize) -> JobSpec {
         JobSpec {
             name: String::new(),
-            problem,
+            source: ProblemSource::Builtin(problem),
             domain: JobDomain::Real,
             batch,
             p,
@@ -135,10 +100,12 @@ impl JobSpec {
         }
     }
 
-    /// Admission-time validation: shape sanity and a size ceiling so one
-    /// bad request cannot OOM the daemon. Engine/method capability
-    /// mismatches surface later, at session build, as a `failed` job —
-    /// never a panic.
+    /// Admission-time validation: shape sanity, a size ceiling so one
+    /// bad request cannot OOM the daemon, and source-specific payload
+    /// checks (inline matrices must match `(batch, p, n)` and the
+    /// domain's element width). Engine/method capability mismatches
+    /// surface later, at session build, as a `failed` job — never a
+    /// panic.
     pub fn validate(&self) -> Result<()> {
         ensure!(self.batch >= 1, "job: batch must be >= 1");
         ensure!(self.p >= 1 && self.p <= self.n, "job: need 1 <= p <= n, got ({}, {})", self.p, self.n);
@@ -151,13 +118,24 @@ impl JobSpec {
             self.p,
             self.n
         );
-        Ok(())
+        self.source.validate(self.domain, self.batch, self.p, self.n)
+    }
+
+    /// Admission cost units, `B·p·n·steps` — the work model the daemon's
+    /// cost-aware gate budgets (saturating, so absurd specs cost `u64::MAX`
+    /// rather than wrapping past the cap).
+    pub fn cost(&self) -> u64 {
+        (self.batch as u64)
+            .saturating_mul(self.p as u64)
+            .saturating_mul(self.n as u64)
+            .saturating_mul(self.steps as u64)
     }
 
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("name", Json::str(self.name.clone())),
-            ("problem", Json::str(self.problem.name())),
+            // Builtin sources serialize as the frozen v1 string form.
+            ("problem", self.source.to_json()),
             ("domain", Json::str(self.domain.name())),
             ("batch", Json::num(self.batch as f64)),
             ("p", Json::num(self.p as f64)),
@@ -170,18 +148,12 @@ impl JobSpec {
         ])
     }
 
-    /// Parse a job. `problem`, `batch`, `p`, `n`, `steps` and a valid
-    /// `optimizer` (method + lr) are required; the rest defaults like the
-    /// CLI's minimal spec files. Present-but-malformed fields are errors.
+    /// Parse a job. `problem` (v1 name string or v2 source object),
+    /// `batch`, `p`, `n`, `steps` and a valid `optimizer` (method + lr)
+    /// are required; the rest defaults like the CLI's minimal spec files.
+    /// Present-but-malformed fields are errors.
     pub fn from_json(j: &Json) -> Result<JobSpec> {
-        let problem = match j.get("problem") {
-            Json::Null => return Err(anyhow!("job: missing 'problem'")),
-            v => {
-                let s =
-                    v.as_str().ok_or_else(|| anyhow!("job: 'problem' must be a string"))?;
-                ProblemKind::parse(s).ok_or_else(|| anyhow!("job: unknown problem '{s}'"))?
-            }
-        };
+        let source = ProblemSource::from_json(j.get("problem"))?;
         let need = |key: &str| -> Result<usize> {
             j.get(key)
                 .as_usize()
@@ -195,7 +167,7 @@ impl JobSpec {
             .context("job: in 'optimizer'")?;
         let mut spec = JobSpec {
             name: String::new(),
-            problem,
+            source,
             domain: JobDomain::Real,
             batch,
             p,
@@ -332,6 +304,10 @@ impl JobState {
         })
     }
 
+    pub fn all() -> &'static [JobState] {
+        &[JobState::Queued, JobState::Running, JobState::Done, JobState::Failed, JobState::Cancelled]
+    }
+
     pub fn is_terminal(self) -> bool {
         matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
     }
@@ -346,6 +322,61 @@ pub enum JobOutcome {
     Cancelled(JobResult),
 }
 
+/// One applied step, as seen by a streaming observer (the v2 SSE feed).
+#[derive(Clone, Copy, Debug)]
+pub struct StepProgress {
+    /// Steps applied so far (1-based; strictly increasing per job run).
+    pub step: usize,
+    /// Objective before this step's update was applied.
+    pub loss: f64,
+    /// `max_i ‖Xᵢ Xᵢᴴ − I‖_F`. Telemetry, not a per-step invariant
+    /// check: recomputed on the first, every [`ORTHO_EVERY`]-th and the
+    /// final step (a full Gram pass per reading); events in between
+    /// carry the latest reading.
+    pub ortho_error: f64,
+    /// Wall-clock seconds since this run (or resume) started.
+    pub wall_s: f64,
+}
+
+/// How often the observer path recomputes the orthogonality reading —
+/// a Gram pass costs the same order as an optimizer step, so doing it
+/// every step would tax every served job for telemetry nobody may read.
+pub const ORTHO_EVERY: usize = 16;
+
+/// The final (or cancellation-point) iterate, packed for the v2 result
+/// surface: row-major f32 words per matrix, matrices concatenated in
+/// registration order, complex entries interleaved `re,im`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FinalIterate {
+    pub domain: JobDomain,
+    pub batch: usize,
+    pub p: usize,
+    pub n: usize,
+    pub data: Vec<f32>,
+}
+
+impl FinalIterate {
+    fn pack<E: WireElem>(domain: JobDomain, spec: &JobSpec, store: &ParamStore<E>) -> FinalIterate {
+        let mut data = Vec::with_capacity(store.num_scalars() * E::WIDTH);
+        for prm in store.params() {
+            for &v in prm.mat.as_slice() {
+                v.push_words(&mut data);
+            }
+        }
+        FinalIterate { domain, batch: spec.batch, p: spec.p, n: spec.n, data }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("domain", Json::str(self.domain.name())),
+            ("batch", Json::num(self.batch as f64)),
+            ("p", Json::num(self.p as f64)),
+            ("n", Json::num(self.n as f64)),
+            ("b64", Json::str(super::problem::words_to_b64(&self.data))),
+        ])
+    }
+}
+
 /// Runtime hooks the queue wires into a job execution. The defaults run
 /// to completion with no observers (what the parity tests use).
 #[derive(Default)]
@@ -354,7 +385,7 @@ pub struct RunCtl<'a> {
     pub cancel: Option<&'a AtomicBool>,
     /// Called after every applied step with (steps_done, loss).
     pub on_step: Option<&'a dyn Fn(usize, f64)>,
-    /// Where to checkpoint/resume (real domain, `checkpoint_every > 0`).
+    /// Where to checkpoint/resume (`checkpoint_every > 0`; either domain).
     pub checkpoint_path: Option<PathBuf>,
 }
 
@@ -362,22 +393,67 @@ pub struct RunCtl<'a> {
 /// spec: the daemon and a direct caller produce bit-identical
 /// trajectories. This is the single execution path behind `pogo serve`.
 pub fn run_job(spec: &JobSpec, ctl: &RunCtl) -> Result<JobOutcome> {
+    run_job_with(spec, ctl, None).map(|(outcome, _)| outcome)
+}
+
+/// [`run_job`] plus the v2 surfaces: an optional per-step
+/// [`StepProgress`] observer (fed after `RunCtl::on_step`; computing its
+/// orthogonality reading never mutates state, so the trajectory is
+/// untouched) and the packed [`FinalIterate`].
+pub fn run_job_with(
+    spec: &JobSpec,
+    ctl: &RunCtl,
+    observer: Option<&dyn Fn(&StepProgress)>,
+) -> Result<(JobOutcome, FinalIterate)> {
     spec.validate()?;
     match spec.domain {
-        JobDomain::Real => run_real(spec, ctl),
-        JobDomain::Complex => run_complex(spec, ctl),
+        JobDomain::Real => run_field::<f32, _, _>(
+            spec,
+            ctl,
+            observer,
+            |store, rng| {
+                store.add_stiefel_group("x", spec.batch, spec.p, spec.n, rng);
+            },
+            |opt, store| OptimSession::new(opt, store, None),
+        ),
+        JobDomain::Complex => run_field::<Complex<f32>, _, _>(
+            spec,
+            ctl,
+            observer,
+            |store, rng| {
+                store.add_unitary_group("x", spec.batch, spec.p, spec.n, rng);
+            },
+            OptimSession::new_unitary,
+        ),
     }
 }
 
-fn run_real(spec: &JobSpec, ctl: &RunCtl) -> Result<JobOutcome> {
+/// The domain-generic execution path: seed parameters, build the problem
+/// from its source, resume from a checkpoint when one applies, then
+/// drive the step loop. `init` registers the parameter group and
+/// `build_session` constructs the engine — the only two domain-specific
+/// moves.
+fn run_field<E, I, B>(
+    spec: &JobSpec,
+    ctl: &RunCtl,
+    observer: Option<&dyn Fn(&StepProgress)>,
+    init: I,
+    build_session: B,
+) -> Result<(JobOutcome, FinalIterate)>
+where
+    E: Field + WireElem + checkpoint::CkptDtype,
+    I: FnOnce(&mut ParamStore<E>, &mut Rng),
+    B: FnOnce(&OptimizerSpec, &ParamStore<E>) -> Result<OptimSession<E>>,
+{
     let mut rng = Rng::seed_from_u64(spec.seed);
-    let mut store: ParamStore<f32> = ParamStore::new();
-    store.add_stiefel_group("x", spec.batch, spec.p, spec.n, &mut rng);
-    let problem = ProblemData::<f32>::build(spec, &mut rng);
+    let mut store: ParamStore<E> = ParamStore::new();
+    init(&mut store, &mut rng);
+    let problem = ProblemData::<E>::build(spec, &mut rng)?;
 
     // Resume: an existing checkpoint replaces the seeded parameters and
-    // fast-forwards the step counter (problem data is regenerated from
-    // the seed, so the objective is identical).
+    // fast-forwards the step counter (builtin problem data is regenerated
+    // from the seed and inline data rides in the spec, so the objective
+    // is identical).
     let mut start_step = 0usize;
     let ckpt = if spec.checkpoint_every > 0 { ctl.checkpoint_path.clone() } else { None };
     if let Some(path) = &ckpt {
@@ -386,7 +462,7 @@ fn run_real(spec: &JobSpec, ctl: &RunCtl) -> Result<JobOutcome> {
             // failing the job: the spec is still valid, only the saved
             // progress is lost (saves are write-then-rename, so this is
             // a stale-file edge case, not the common crash path).
-            match checkpoint::load(path) {
+            match checkpoint::load_t::<E>(path) {
                 Ok((loaded, step))
                     if loaded.len() == store.len()
                         && loaded
@@ -410,30 +486,24 @@ fn run_real(spec: &JobSpec, ctl: &RunCtl) -> Result<JobOutcome> {
         }
     }
 
-    let mut session = OptimSession::new(&spec.optimizer, &store, None)?;
+    let mut session = build_session(&spec.optimizer, &store)?;
     // `ckpt` is Some exactly when checkpointing applies (path given AND
     // checkpoint_every > 0, resolved above) — the single gate.
     let ckpt_for_save = ckpt.clone();
-    let mut save = move |st: &ParamStore<f32>, step: usize| -> Result<()> {
+    let mut save = move |st: &ParamStore<E>, step: usize| -> Result<()> {
         if let Some(p) = &ckpt_for_save {
-            checkpoint::save(st, step, p)
+            checkpoint::save_t::<E>(st, step, p)
                 .with_context(|| format!("checkpointing to {}", p.display()))?;
         }
         Ok(())
     };
-    let saver: Option<&mut dyn FnMut(&ParamStore<f32>, usize) -> Result<()>> =
+    let saver: Option<&mut dyn FnMut(&ParamStore<E>, usize) -> Result<()>> =
         if ckpt.is_some() { Some(&mut save) } else { None };
-    let outcome = drive(spec, ctl, &mut session, &mut store, &problem, start_step, saver)?;
-    Ok(attach_checkpoint(outcome, ckpt))
-}
-
-fn run_complex(spec: &JobSpec, ctl: &RunCtl) -> Result<JobOutcome> {
-    let mut rng = Rng::seed_from_u64(spec.seed);
-    let mut store: ParamStore<Complex<f32>> = ParamStore::new();
-    store.add_unitary_group("x", spec.batch, spec.p, spec.n, &mut rng);
-    let problem = ProblemData::<Complex<f32>>::build(spec, &mut rng);
-    let mut session = OptimSession::new_unitary(&spec.optimizer, &store)?;
-    drive(spec, ctl, &mut session, &mut store, &problem, 0, None)
+    let outcome =
+        drive(spec, ctl, observer, &mut session, &mut store, &problem, start_step, saver)?;
+    let outcome = attach_checkpoint(outcome, ckpt);
+    let iterate = FinalIterate::pack(spec.domain, spec, &store);
+    Ok((outcome, iterate))
 }
 
 fn attach_checkpoint(outcome: JobOutcome, ckpt: Option<PathBuf>) -> JobOutcome {
@@ -452,6 +522,7 @@ fn attach_checkpoint(outcome: JobOutcome, ckpt: Option<PathBuf>) -> JobOutcome {
 fn drive<E: Field>(
     spec: &JobSpec,
     ctl: &RunCtl,
+    observer: Option<&dyn Fn(&StepProgress)>,
     session: &mut OptimSession<E>,
     store: &mut ParamStore<E>,
     problem: &ProblemData<E>,
@@ -460,6 +531,7 @@ fn drive<E: Field>(
 ) -> Result<JobOutcome> {
     let clock = crate::util::Stopwatch::start();
     let mut steps_done = start_step;
+    let mut last_ortho = f64::NAN;
     for step in start_step..spec.steps {
         if let Some(flag) = ctl.cancel {
             if flag.load(Ordering::Relaxed) {
@@ -479,6 +551,20 @@ fn drive<E: Field>(
         if let Some(cb) = ctl.on_step {
             cb(steps_done, loss);
         }
+        if let Some(obs) = observer {
+            if last_ortho.is_nan()
+                || steps_done % ORTHO_EVERY == 0
+                || steps_done == spec.steps
+            {
+                last_ortho = store.max_stiefel_distance();
+            }
+            obs(&StepProgress {
+                step: steps_done,
+                loss,
+                ortho_error: last_ortho,
+                wall_s: clock.seconds(),
+            });
+        }
         if let Some(s) = save.as_mut() {
             if spec.checkpoint_every > 0 && steps_done % spec.checkpoint_every == 0 {
                 s(store, steps_done)?;
@@ -495,8 +581,10 @@ fn drive<E: Field>(
     }))
 }
 
-/// Problem data, generated once from the job seed (after the parameter
-/// init draws, in a fixed order — part of the determinism contract).
+/// Problem data, built once per run. Builtin sources generate from the
+/// job seed (after the parameter init draws, in a fixed order — part of
+/// the determinism contract); inline sources decode the spec's payload
+/// (already shape/width-validated at admission).
 enum ProblemData<E: Field> {
     Procrustes { a: Vec<Mat<E>>, b: Vec<Mat<E>> },
     Pca { c: Vec<Mat<E>> },
@@ -504,33 +592,48 @@ enum ProblemData<E: Field> {
     Replay,
 }
 
-impl<E: Field> ProblemData<E> {
-    fn build(spec: &JobSpec, rng: &mut Rng) -> ProblemData<E> {
+impl<E: Field + WireElem> ProblemData<E> {
+    fn build(spec: &JobSpec, rng: &mut Rng) -> Result<ProblemData<E>> {
         let (bsz, p, n) = (spec.batch, spec.p, spec.n);
-        match spec.problem {
-            ProblemKind::Procrustes => {
-                let mut a = Vec::with_capacity(bsz);
-                let mut b = Vec::with_capacity(bsz);
-                for _ in 0..bsz {
-                    a.push(Mat::<E>::randn(p, p, rng));
-                    b.push(Mat::<E>::randn(p, n, rng));
+        Ok(match &spec.source {
+            ProblemSource::Builtin(kind) => match kind {
+                ProblemKind::Procrustes => {
+                    let mut a = Vec::with_capacity(bsz);
+                    let mut b = Vec::with_capacity(bsz);
+                    for _ in 0..bsz {
+                        a.push(Mat::<E>::randn(p, p, rng));
+                        b.push(Mat::<E>::randn(p, n, rng));
+                    }
+                    ProblemData::Procrustes { a, b }
                 }
-                ProblemData::Procrustes { a, b }
+                ProblemKind::Pca => {
+                    let c = (0..bsz)
+                        .map(|_| {
+                            let m = Mat::<E>::randn(p, n, rng);
+                            matmul_ah_b(&m, &m).scale(E::from_f64(1.0 / n as f64))
+                        })
+                        .collect();
+                    ProblemData::Pca { c }
+                }
+                ProblemKind::Quartic => ProblemData::Quartic,
+                ProblemKind::Replay => ProblemData::Replay,
+            },
+            ProblemSource::Inline(inline) => {
+                let decode = |mats: &[InlineMat]| -> Result<Vec<Mat<E>>> {
+                    mats.iter().map(InlineMat::to_mat::<E>).collect()
+                };
+                match inline {
+                    InlineProblem::Procrustes { a, b } => {
+                        ProblemData::Procrustes { a: decode(a)?, b: decode(b)? }
+                    }
+                    InlineProblem::Pca { c } => ProblemData::Pca { c: decode(c)? },
+                }
             }
-            ProblemKind::Pca => {
-                let c = (0..bsz)
-                    .map(|_| {
-                        let m = Mat::<E>::randn(p, n, rng);
-                        matmul_ah_b(&m, &m).scale(E::from_f64(1.0 / n as f64))
-                    })
-                    .collect();
-                ProblemData::Pca { c }
-            }
-            ProblemKind::Quartic => ProblemData::Quartic,
-            ProblemKind::Replay => ProblemData::Replay,
-        }
+        })
     }
+}
 
+impl<E: Field> ProblemData<E> {
     /// Loss and per-parameter Euclidean gradients at the current iterate
     /// (indexed by store parameter index, as `OptimSession::apply`
     /// expects). `step` only matters for the replay stream.
@@ -624,6 +727,20 @@ mod tests {
         s
     }
 
+    /// An inline procrustes spec whose payload was drawn from `data_seed`
+    /// (independent of the job seed, like a real client upload).
+    fn inline_spec(data_seed: u64) -> JobSpec {
+        let mut rng = Rng::seed_from_u64(data_seed);
+        let (bsz, p, n) = (2usize, 3usize, 5usize);
+        let a = (0..bsz).map(|_| InlineMat::from_mat(&Mat::<f32>::randn(p, p, &mut rng))).collect();
+        let b = (0..bsz).map(|_| InlineMat::from_mat(&Mat::<f32>::randn(p, n, &mut rng))).collect();
+        let mut s = JobSpec::new(ProblemKind::Procrustes, bsz, p, n);
+        s.source = ProblemSource::Inline(InlineProblem::Procrustes { a, b });
+        s.steps = 25;
+        s.seed = 11;
+        s
+    }
+
     #[test]
     fn json_roundtrip() {
         let mut spec = small(ProblemKind::Procrustes);
@@ -635,6 +752,46 @@ mod tests {
         let text = spec.to_json().to_string();
         let back = JobSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn v1_wire_form_is_frozen() {
+        // Builtin sources serialize as the bare v1 problem string, so a
+        // v1 spec round-trips bit-for-bit through the shim.
+        let spec = small(ProblemKind::Quartic);
+        let text = spec.to_json().to_string();
+        assert!(text.contains(r#""problem":"quartic""#), "{text}");
+        let reparsed = JobSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(reparsed.to_json().to_string(), text);
+    }
+
+    #[test]
+    fn inline_spec_roundtrips_and_runs() {
+        let spec = inline_spec(404);
+        let text = spec.to_json().to_string();
+        let back = JobSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, spec);
+
+        // Deterministic and feasible, like any builtin job.
+        let JobOutcome::Done(r1) = run_job(&spec, &RunCtl::default()).unwrap() else { panic!() };
+        let JobOutcome::Done(r2) = run_job(&back, &RunCtl::default()).unwrap() else { panic!() };
+        assert_eq!(r1.final_loss.to_bits(), r2.final_loss.to_bits());
+        assert!(r1.ortho_error <= 1e-3, "{}", r1.ortho_error);
+        // Different payloads give different trajectories (the data is
+        // really coming from the payload, not the seed).
+        let other = inline_spec(405);
+        let JobOutcome::Done(r3) = run_job(&other, &RunCtl::default()).unwrap() else { panic!() };
+        assert_ne!(r1.final_loss.to_bits(), r3.final_loss.to_bits());
+    }
+
+    #[test]
+    fn inline_payload_mismatch_rejected_at_validation() {
+        let mut spec = inline_spec(7);
+        spec.batch = 3; // payload has 2 matrices
+        assert!(spec.validate().is_err());
+        let mut spec = inline_spec(7);
+        spec.domain = JobDomain::Complex; // real-width payload
+        assert!(spec.validate().is_err());
     }
 
     #[test]
@@ -680,6 +837,16 @@ mod tests {
     }
 
     #[test]
+    fn cost_model_is_b_p_n_steps() {
+        let spec = small(ProblemKind::Quartic); // 3 × 3 × 5 × 30
+        assert_eq!(spec.cost(), 3 * 3 * 5 * 30);
+        let mut huge = small(ProblemKind::Quartic);
+        huge.batch = usize::MAX;
+        huge.steps = usize::MAX;
+        assert_eq!(huge.cost(), u64::MAX, "saturates, never wraps");
+    }
+
+    #[test]
     fn every_problem_runs_and_stays_feasible() {
         for &pk in ProblemKind::all() {
             let spec = small(pk);
@@ -708,6 +875,39 @@ mod tests {
             panic!()
         };
         assert!((rc.final_loss - ra.final_loss).abs() <= 1e-3 * ra.final_loss.abs().max(1.0));
+    }
+
+    #[test]
+    fn observer_sees_monotone_steps_and_matches_run_job() {
+        // The observer path adds telemetry, not numerics: the final loss
+        // is bit-identical to a plain run, steps arrive strictly
+        // increasing, and the iterate matches what the store held.
+        let spec = small(ProblemKind::Procrustes);
+        let seen = std::cell::RefCell::new(Vec::<StepProgress>::new());
+        let obs = |p: &StepProgress| seen.borrow_mut().push(*p);
+        let (outcome, iterate) =
+            run_job_with(&spec, &RunCtl::default(), Some(&obs)).unwrap();
+        let JobOutcome::Done(r) = outcome else { panic!() };
+        let seen = seen.into_inner();
+        assert_eq!(seen.len(), spec.steps);
+        assert!(seen.windows(2).all(|w| w[0].step < w[1].step), "monotone steps");
+        assert_eq!(seen.last().unwrap().step, spec.steps);
+        assert!((seen.last().unwrap().ortho_error - r.ortho_error).abs() < 1e-12);
+        assert!(seen.iter().all(|p| p.loss.is_finite() && p.ortho_error <= 1e-3));
+
+        let JobOutcome::Done(plain) = run_job(&spec, &RunCtl::default()).unwrap() else {
+            panic!()
+        };
+        assert_eq!(plain.final_loss.to_bits(), r.final_loss.to_bits());
+
+        // Iterate dimensions and payload width match the job.
+        assert_eq!(iterate.domain, JobDomain::Real);
+        assert_eq!(
+            iterate.data.len(),
+            spec.batch * spec.p * spec.n,
+            "one f32 word per real scalar"
+        );
+        assert!(iterate.data.iter().all(|v| v.is_finite()));
     }
 
     #[test]
@@ -822,6 +1022,59 @@ mod tests {
             run_job(&spec, &RunCtl { checkpoint_path: Some(path.clone()), ..Default::default() })
                 .unwrap();
         let JobOutcome::Done(rd) = direct else { panic!() };
+        assert_eq!(rd.final_loss.to_bits(), r.final_loss.to_bits());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn complex_checkpoint_resume_roundtrip() {
+        // The satellite: a unitary job checkpoints as interleaved c64
+        // pairs and a resumed run completes bit-identically to an
+        // uninterrupted one (POGO/sgd is stateless).
+        let dir = std::env::temp_dir()
+            .join(format!("pogo_serve_job_cresume_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("job.ckpt");
+        std::fs::remove_file(&path).ok();
+
+        let mut spec = small(ProblemKind::Quartic);
+        spec.domain = JobDomain::Complex;
+        spec.batch = 2;
+        spec.steps = 40;
+        spec.checkpoint_every = 10;
+
+        let cancel = AtomicBool::new(false);
+        let on_step = |step: usize, _loss: f64| {
+            if step >= 25 {
+                cancel.store(true, Ordering::Relaxed);
+            }
+        };
+        let ctl = RunCtl {
+            cancel: Some(&cancel),
+            on_step: Some(&on_step),
+            checkpoint_path: Some(path.clone()),
+        };
+        let JobOutcome::Cancelled(_) = run_job(&spec, &ctl).unwrap() else {
+            panic!("expected cancellation")
+        };
+        // On disk it is a c64 checkpoint: the f32 loader refuses it.
+        let (_, step) = checkpoint::load_t::<Complex<f32>>(&path).unwrap();
+        assert!(step >= 20, "checkpoint at step {step}");
+        assert!(checkpoint::load(&path).is_err(), "c64 is not silently read as f32");
+
+        let ctl = RunCtl { checkpoint_path: Some(path.clone()), ..Default::default() };
+        let JobOutcome::Done(r) = run_job(&spec, &ctl).unwrap() else { panic!() };
+        assert_eq!(r.steps_done, spec.steps);
+        assert!(r.ortho_error <= 1e-3);
+        assert_eq!(r.checkpoint.as_deref(), Some(path.as_path()));
+
+        std::fs::remove_file(&path).ok();
+        let JobOutcome::Done(rd) =
+            run_job(&spec, &RunCtl { checkpoint_path: Some(path.clone()), ..Default::default() })
+                .unwrap()
+        else {
+            panic!()
+        };
         assert_eq!(rd.final_loss.to_bits(), r.final_loss.to_bits());
         std::fs::remove_dir_all(&dir).ok();
     }

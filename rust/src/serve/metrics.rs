@@ -1,13 +1,32 @@
 //! Daemon-level counters, rendered as Prometheus text for `GET /metrics`.
 //!
 //! Counters are lock-free atomics bumped by the queue and the HTTP layer;
-//! gauges (queue depth, running jobs) are sampled from the queue at render
-//! time. Per-job series (the loss tail of `GET /v1/jobs/:id`) live in the
-//! queue entries, fed from each worker's
-//! [`MetricLog`](crate::coordinator::MetricLog).
+//! gauges (queue depth, running jobs, per-state retention, outstanding
+//! admission cost, live SSE subscribers) are sampled at render time from
+//! a [`QueueGauges`] snapshot the caller fills under the queue lock.
+//! Admission rejections are counted **by cause** (invalid spec, tenant
+//! quota, cost budget, inline payload size) so the serve-smoke CI job can
+//! assert on them — plus the aggregate `rejected_total` every cause also
+//! bumps.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::time::Instant;
+
+/// Queue-side gauge snapshot, sampled under the queue lock by the caller.
+pub struct QueueGauges {
+    /// Jobs queued and not yet running.
+    pub depth: usize,
+    /// Jobs currently executing.
+    pub running: usize,
+    /// Backlog capacity.
+    pub capacity: usize,
+    /// Worker threads.
+    pub workers: usize,
+    /// Retained jobs per state, `(state name, count)`.
+    pub by_state: Vec<(&'static str, usize)>,
+    /// Outstanding admitted `B·p·n·steps` cost units.
+    pub outstanding_cost: u64,
+}
 
 /// Monotonic counters for one daemon lifetime.
 pub struct ServeMetrics {
@@ -16,12 +35,23 @@ pub struct ServeMetrics {
     pub completed: AtomicU64,
     pub failed: AtomicU64,
     pub cancelled: AtomicU64,
-    /// Submissions refused (queue full / draining / invalid spec).
+    /// Submissions refused for any reason (the aggregate).
     pub rejected: AtomicU64,
+    /// Rejections by cause (each also bumps `rejected`).
+    pub rejected_invalid: AtomicU64,
+    pub rejected_quota: AtomicU64,
+    pub rejected_cost: AtomicU64,
+    pub rejected_inline: AtomicU64,
     /// Optimizer steps applied across all jobs.
     pub steps: AtomicU64,
     /// HTTP requests handled (any endpoint, any status).
     pub requests: AtomicU64,
+    /// Progress events written to SSE subscribers.
+    pub events_streamed: AtomicU64,
+    /// Live SSE subscriber connections (gauge; inc on attach, dec on
+    /// detach — signed so a spurious double-decrement shows up as a
+    /// negative reading instead of a 2^64 absurdity).
+    pub sse_clients: AtomicI64,
 }
 
 impl Default for ServeMetrics {
@@ -39,8 +69,14 @@ impl ServeMetrics {
             failed: AtomicU64::new(0),
             cancelled: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            rejected_invalid: AtomicU64::new(0),
+            rejected_quota: AtomicU64::new(0),
+            rejected_cost: AtomicU64::new(0),
+            rejected_inline: AtomicU64::new(0),
             steps: AtomicU64::new(0),
             requests: AtomicU64::new(0),
+            events_streamed: AtomicU64::new(0),
+            sse_clients: AtomicI64::new(0),
         }
     }
 
@@ -48,88 +84,137 @@ impl ServeMetrics {
         self.started.elapsed().as_secs_f64()
     }
 
-    /// Render the Prometheus exposition text. The gauges are passed in by
-    /// the caller (sampled from the queue under its lock).
-    pub fn render(
-        &self,
-        queue_depth: usize,
-        running: usize,
-        capacity: usize,
-        workers: usize,
-    ) -> String {
-        let mut out = String::with_capacity(1024);
-        let mut metric = |name: &str, kind: &str, help: &str, value: f64| {
+    /// Render the Prometheus exposition text.
+    pub fn render(&self, q: &QueueGauges) -> String {
+        fn metric(out: &mut String, name: &str, kind: &str, help: &str, value: f64) {
             out.push_str(&format!(
                 "# HELP {name} {help}\n# TYPE {name} {kind}\n{name} {value}\n"
             ));
-        };
+        }
+        let mut out = String::with_capacity(2048);
         metric(
+            &mut out,
             "pogo_serve_uptime_seconds",
             "gauge",
             "Seconds since the daemon started.",
             self.uptime_s(),
         );
         metric(
+            &mut out,
             "pogo_serve_jobs_submitted_total",
             "counter",
             "Jobs accepted into the queue.",
             self.submitted.load(Ordering::Relaxed) as f64,
         );
         metric(
+            &mut out,
             "pogo_serve_jobs_completed_total",
             "counter",
             "Jobs that reached done.",
             self.completed.load(Ordering::Relaxed) as f64,
         );
         metric(
+            &mut out,
             "pogo_serve_jobs_failed_total",
             "counter",
             "Jobs that failed.",
             self.failed.load(Ordering::Relaxed) as f64,
         );
         metric(
+            &mut out,
             "pogo_serve_jobs_cancelled_total",
             "counter",
             "Jobs cancelled by clients.",
             self.cancelled.load(Ordering::Relaxed) as f64,
         );
         metric(
+            &mut out,
             "pogo_serve_jobs_rejected_total",
             "counter",
-            "Submissions refused (full queue, draining, invalid spec).",
+            "Submissions refused (all causes).",
             self.rejected.load(Ordering::Relaxed) as f64,
         );
+        // Admission rejections by cause — one labelled series.
+        out.push_str(
+            "# HELP pogo_serve_admission_rejected_total Submissions refused by admission \
+             control, by cause.\n# TYPE pogo_serve_admission_rejected_total counter\n",
+        );
+        for (cause, counter) in [
+            ("invalid", &self.rejected_invalid),
+            ("quota", &self.rejected_quota),
+            ("cost", &self.rejected_cost),
+            ("inline_bytes", &self.rejected_inline),
+        ] {
+            out.push_str(&format!(
+                "pogo_serve_admission_rejected_total{{cause=\"{cause}\"}} {}\n",
+                counter.load(Ordering::Relaxed)
+            ));
+        }
         metric(
+            &mut out,
             "pogo_serve_steps_total",
             "counter",
             "Optimizer steps applied across all jobs.",
             self.steps.load(Ordering::Relaxed) as f64,
         );
         metric(
+            &mut out,
             "pogo_serve_http_requests_total",
             "counter",
             "HTTP requests handled.",
             self.requests.load(Ordering::Relaxed) as f64,
         );
         metric(
+            &mut out,
+            "pogo_serve_sse_events_total",
+            "counter",
+            "Progress events written to SSE subscribers.",
+            self.events_streamed.load(Ordering::Relaxed) as f64,
+        );
+        metric(
+            &mut out,
+            "pogo_serve_sse_clients",
+            "gauge",
+            "Live SSE subscriber connections.",
+            self.sse_clients.load(Ordering::Relaxed) as f64,
+        );
+        metric(
+            &mut out,
             "pogo_serve_queue_depth",
             "gauge",
             "Jobs queued and not yet running.",
-            queue_depth as f64,
+            q.depth as f64,
         );
         metric(
+            &mut out,
             "pogo_serve_jobs_running",
             "gauge",
             "Jobs currently executing.",
-            running as f64,
+            q.running as f64,
         );
+        // Retained jobs per state — one labelled series.
+        out.push_str(
+            "# HELP pogo_serve_jobs Retained jobs by state.\n\
+             # TYPE pogo_serve_jobs gauge\n",
+        );
+        for (state, count) in &q.by_state {
+            out.push_str(&format!("pogo_serve_jobs{{state=\"{state}\"}} {count}\n"));
+        }
         metric(
+            &mut out,
             "pogo_serve_queue_capacity",
             "gauge",
             "Maximum queued-job backlog.",
-            capacity as f64,
+            q.capacity as f64,
         );
-        metric("pogo_serve_workers", "gauge", "Worker threads.", workers as f64);
+        metric(
+            &mut out,
+            "pogo_serve_admission_outstanding_cost",
+            "gauge",
+            "Admitted-but-unfinished B*p*n*steps cost units.",
+            q.outstanding_cost as f64,
+        );
+        metric(&mut out, "pogo_serve_workers", "gauge", "Worker threads.", q.workers as f64);
         out
     }
 }
@@ -138,12 +223,32 @@ impl ServeMetrics {
 mod tests {
     use super::*;
 
+    fn gauges() -> QueueGauges {
+        QueueGauges {
+            depth: 2,
+            running: 1,
+            capacity: 256,
+            workers: 4,
+            by_state: vec![
+                ("queued", 2),
+                ("running", 1),
+                ("done", 7),
+                ("failed", 0),
+                ("cancelled", 1),
+            ],
+            outstanding_cost: 4800,
+        }
+    }
+
     #[test]
     fn renders_every_series_once() {
         let m = ServeMetrics::new();
         m.submitted.fetch_add(3, Ordering::Relaxed);
         m.steps.fetch_add(100, Ordering::Relaxed);
-        let text = m.render(2, 1, 256, 4);
+        m.rejected_quota.fetch_add(2, Ordering::Relaxed);
+        m.rejected_cost.fetch_add(1, Ordering::Relaxed);
+        m.sse_clients.fetch_add(1, Ordering::Relaxed);
+        let text = m.render(&gauges());
         for name in [
             "pogo_serve_uptime_seconds",
             "pogo_serve_jobs_submitted_total 3",
@@ -152,10 +257,23 @@ mod tests {
             "pogo_serve_jobs_running 1",
             "pogo_serve_queue_capacity 256",
             "pogo_serve_workers 4",
+            "pogo_serve_admission_rejected_total{cause=\"quota\"} 2",
+            "pogo_serve_admission_rejected_total{cause=\"cost\"} 1",
+            "pogo_serve_admission_rejected_total{cause=\"inline_bytes\"} 0",
+            "pogo_serve_jobs{state=\"done\"} 7",
+            "pogo_serve_jobs{state=\"queued\"} 2",
+            "pogo_serve_admission_outstanding_cost 4800",
+            "pogo_serve_sse_clients 1",
+            "pogo_serve_sse_events_total 0",
         ] {
             assert!(text.contains(name), "missing {name} in:\n{text}");
         }
         // One TYPE line per series, no duplicates.
         assert_eq!(text.matches("# TYPE pogo_serve_queue_depth").count(), 1);
+        assert_eq!(
+            text.matches("# TYPE pogo_serve_admission_rejected_total").count(),
+            1,
+            "labelled series share one TYPE line"
+        );
     }
 }

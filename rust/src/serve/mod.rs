@@ -4,34 +4,49 @@
 //! The paper's headline is optimizing thousands of orthogonal
 //! constraints in minutes; this subsystem serves that capability as a
 //! resident daemon instead of a one-shot CLI: clients POST serialized
-//! job specs (problem + [`OptimizerSpec`](crate::coordinator::OptimizerSpec)
-//! + shapes + seed), a bounded queue schedules them across a fixed
-//! worker set (each worker drives the job's own
-//! [`OptimSession`](crate::coordinator::OptimSession)), and results,
-//! loss tails and Prometheus metrics stream back over minimal HTTP/1.1
-//! on `std::net` — no new dependencies.
+//! job specs (problem source + [`OptimizerSpec`](crate::coordinator::OptimizerSpec)
+//! + shapes + seed), admission control (per-tenant quotas, a
+//! `B·p·n·steps` cost budget, inline payload caps) gates the door, a
+//! bounded queue schedules admitted jobs across a fixed worker set
+//! (each worker drives the job's own
+//! [`OptimSession`](crate::coordinator::OptimSession)), and progress
+//! streams back live over minimal HTTP/1.1 on `std::net` — no new
+//! dependencies.
 //!
-//! - [`job`] — the job model and `run_job`, the single deterministic
-//!   execution path (daemon and direct callers agree bit-for-bit);
-//! - [`queue`] — bounded FIFO + per-job state machine
-//!   (queued → running → done/failed/cancelled), graceful drain,
-//!   restart recovery via persisted state + checkpoints;
-//! - [`http`] / [`api`] — the protocol layer and the `/v1` routes;
-//! - [`client`] — the in-process client the load bench and tests use;
-//! - [`metrics`] — daemon counters for `GET /metrics`.
+//! - [`problem`] — the open problem-source registry: `builtin` seeded
+//!   objectives and `inline` client-supplied matrices (v2);
+//! - [`job`] — the job model and `run_job`/`run_job_with`, the single
+//!   deterministic execution path (daemon and direct callers agree
+//!   bit-for-bit) with per-step progress observation;
+//! - [`queue`] — admission control + bounded FIFO + per-job state
+//!   machine (queued → running → done/failed/cancelled), the per-job
+//!   [`ProgressBus`] broadcast, graceful drain, restart recovery via
+//!   persisted state + dtype-tagged checkpoints (both domains);
+//! - [`http`] / [`api`] — the protocol layer (buffered + chunked/SSE
+//!   streaming) and the `/v1` (frozen) + `/v2` routes;
+//! - [`client`] — the in-process client the load bench and tests use,
+//!   including the streaming SSE consumer;
+//! - [`metrics`] — daemon counters/gauges for `GET /metrics`.
 //!
-//! Start one with `pogo serve [--addr HOST:PORT] [--workers N]`, or in
-//! process via [`Server::start`] (port 0 = ephemeral, as the tests do).
+//! Start one with `pogo serve [--addr HOST:PORT] [--workers N]
+//! [--tenant-quota N] [--cost-cap UNITS] [--max-inline-bytes B]`, or in
+//! process via [`Server::start`] / [`Server::start_with`] (port 0 =
+//! ephemeral, as the tests do).
 
 pub mod api;
 pub mod client;
 pub mod http;
 pub mod job;
 pub mod metrics;
+pub mod problem;
 pub mod queue;
 
 pub use api::{ServeConfig, Server};
-pub use client::ServeClient;
-pub use job::{run_job, JobDomain, JobOutcome, JobResult, JobSpec, JobState, ProblemKind, RunCtl};
+pub use client::{ServeClient, StreamedStep};
+pub use job::{
+    run_job, run_job_with, FinalIterate, JobDomain, JobOutcome, JobResult, JobSpec, JobState,
+    ProblemKind, RunCtl, StepProgress,
+};
 pub use metrics::ServeMetrics;
-pub use queue::{JobId, JobQueue, QueueConfig, SubmitError};
+pub use problem::{InlineMat, InlineProblem, ProblemSource};
+pub use queue::{Admission, JobId, JobQueue, ProgressBus, QueueConfig, SubmitError};

@@ -1,0 +1,537 @@
+//! Problem sources: where a job's objective comes from.
+//!
+//! v1 hard-coded a closed [`ProblemKind`] enum of four seeded problems.
+//! v2 opens that up into a [`ProblemSource`] — a small registry of
+//! problem *builders* keyed by a `source` name:
+//!
+//! - `builtin` — the seeded procrustes/pca/quartic/replay objectives,
+//!   fully determined by `(seed, batch, p, n)`. The v1 wire form
+//!   (`"problem": "procrustes"`) is a compatibility shim onto this
+//!   source and serializes back bit-for-bit.
+//! - `inline` — client-supplied matrices (base64-packed little-endian
+//!   f32, or plain JSON number arrays) shipped inside the job spec and
+//!   validated against `(batch, p, n)` and the domain *before*
+//!   admission. This is how real workloads (the sketched-landing /
+//!   stochastic regimes of PAPERS.md) feed their own objective data to
+//!   the daemon instead of replaying seeded stand-ins.
+//!
+//! New sources register by adding a [`SourceBuilder`] to
+//! [`source_registry`] — the parse/validate/build plumbing is shared.
+
+use crate::linalg::{Complex, Field, Mat};
+use crate::util::{b64, json::Json};
+use anyhow::{anyhow, ensure, Context, Result};
+
+use super::job::JobDomain;
+
+/// The seeded objectives of the `builtin` source (the closed v1 set).
+/// All four are matmul/elementwise only, defined on both domains, and
+/// fully determined by `(seed, batch, p, n)` — no data upload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProblemKind {
+    /// `Σᵢ ‖Aᵢ Xᵢ − Bᵢ‖²`, `Aᵢ ∈ F^{p×p}`, `Bᵢ ∈ F^{p×n}` Gaussian
+    /// (Fig. 4-right generalized to wide X and B > 1).
+    Procrustes,
+    /// PCA-style `Σᵢ −Re Tr(Xᵢ Cᵢ Xᵢᴴ)` with `Cᵢ = Mᵢᴴ Mᵢ / n` PSD.
+    Pca,
+    /// Quartic localization `Σᵢ Σⱼₖ |Xᵢ[j,k]|⁴` (gradient `4 |x|² x`).
+    Quartic,
+    /// Raw gradient-replay: per-step seeded Gaussian pseudo-gradients of
+    /// norm 0.1; the reported "loss" is `Σᵢ Re⟨Xᵢ, Gᵢ⟩` (a deterministic
+    /// trajectory fingerprint, not an objective).
+    Replay,
+}
+
+impl ProblemKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ProblemKind::Procrustes => "procrustes",
+            ProblemKind::Pca => "pca",
+            ProblemKind::Quartic => "quartic",
+            ProblemKind::Replay => "replay",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ProblemKind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "procrustes" => ProblemKind::Procrustes,
+            "pca" => ProblemKind::Pca,
+            "quartic" => ProblemKind::Quartic,
+            "replay" | "grad-replay" | "gradient-replay" => ProblemKind::Replay,
+            _ => return None,
+        })
+    }
+
+    pub fn all() -> &'static [ProblemKind] {
+        &[ProblemKind::Procrustes, ProblemKind::Pca, ProblemKind::Quartic, ProblemKind::Replay]
+    }
+}
+
+/// A matrix element the v2 wire formats can carry: packed as f32 words
+/// (real: one word per element; complex: an interleaved `re,im` pair).
+/// Shared by inline problem payloads (decode) and final-iterate dumps
+/// (encode).
+pub trait WireElem: Field {
+    /// f32 words per element.
+    const WIDTH: usize;
+    fn from_words(words: &[f32]) -> Self;
+    fn push_words(self, out: &mut Vec<f32>);
+}
+
+impl WireElem for f32 {
+    const WIDTH: usize = 1;
+    #[inline]
+    fn from_words(words: &[f32]) -> Self {
+        words[0]
+    }
+    #[inline]
+    fn push_words(self, out: &mut Vec<f32>) {
+        out.push(self);
+    }
+}
+
+impl WireElem for Complex<f32> {
+    const WIDTH: usize = 2;
+    #[inline]
+    fn from_words(words: &[f32]) -> Self {
+        Complex::new(words[0], words[1])
+    }
+    #[inline]
+    fn push_words(self, out: &mut Vec<f32>) {
+        out.push(self.re);
+        out.push(self.im);
+    }
+}
+
+/// Pack f32 words as base64 little-endian bytes (the compact wire form).
+pub fn words_to_b64(words: &[f32]) -> String {
+    let bytes: Vec<u8> = words.iter().flat_map(|v| v.to_le_bytes()).collect();
+    b64::encode(&bytes)
+}
+
+/// Decode base64 little-endian bytes back into f32 words.
+pub fn b64_to_words(text: &str) -> Result<Vec<f32>> {
+    let bytes = b64::decode(text).map_err(|e| anyhow!("bad base64 payload: {e}"))?;
+    ensure!(bytes.len() % 4 == 0, "base64 payload is {} bytes, not a multiple of 4", bytes.len());
+    Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+/// One client-supplied matrix: raw f32 words in row-major order (complex
+/// entries interleave `re,im`, so `data.len() == rows·cols·width`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct InlineMat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl InlineMat {
+    /// Build from a typed matrix (what tests and in-process clients use).
+    pub fn from_mat<E: WireElem>(m: &Mat<E>) -> InlineMat {
+        let mut data = Vec::with_capacity(m.len() * E::WIDTH);
+        for &v in m.as_slice() {
+            v.push_words(&mut data);
+        }
+        InlineMat { rows: m.rows(), cols: m.cols(), data }
+    }
+
+    /// Decode into a typed matrix. The element width (real vs complex)
+    /// must match the stored word count — checked, never reinterpreted.
+    pub fn to_mat<E: WireElem>(&self) -> Result<Mat<E>> {
+        let want = self.rows * self.cols * E::WIDTH;
+        ensure!(
+            self.data.len() == want,
+            "inline matrix has {} words, but a {}x{} {} matrix needs {want}",
+            self.data.len(),
+            self.rows,
+            self.cols,
+            if E::WIDTH == 2 { "complex" } else { "real" },
+        );
+        let elems = self.data.chunks_exact(E::WIDTH).map(E::from_words).collect();
+        Ok(Mat::from_vec(self.rows, self.cols, elems))
+    }
+
+    /// Payload size in bytes (what `--max-inline-bytes` caps).
+    pub fn byte_len(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("rows", Json::num(self.rows as f64)),
+            ("cols", Json::num(self.cols as f64)),
+            ("b64", Json::str(words_to_b64(&self.data))),
+        ])
+    }
+
+    /// Parse `{"rows", "cols", "b64"}` or `{"rows", "cols", "data": [..]}`.
+    pub fn from_json(j: &Json) -> Result<InlineMat> {
+        let rows = j.get("rows").as_usize().ok_or_else(|| anyhow!("inline matrix: missing or non-integer 'rows'"))?;
+        let cols = j.get("cols").as_usize().ok_or_else(|| anyhow!("inline matrix: missing or non-integer 'cols'"))?;
+        ensure!(rows >= 1 && cols >= 1, "inline matrix: rows/cols must be >= 1");
+        let data = match (j.get("b64"), j.get("data")) {
+            (Json::Null, Json::Null) => {
+                return Err(anyhow!("inline matrix: need 'b64' or 'data'"));
+            }
+            (b, Json::Null) => {
+                let text = b.as_str().ok_or_else(|| anyhow!("inline matrix: 'b64' must be a string"))?;
+                b64_to_words(text)?
+            }
+            (Json::Null, d) => {
+                let arr = d.as_arr().ok_or_else(|| anyhow!("inline matrix: 'data' must be an array"))?;
+                arr.iter()
+                    .map(|v| {
+                        v.as_f64()
+                            .map(|x| x as f32)
+                            .ok_or_else(|| anyhow!("inline matrix: 'data' must hold numbers"))
+                    })
+                    .collect::<Result<Vec<f32>>>()?
+            }
+            _ => return Err(anyhow!("inline matrix: give 'b64' or 'data', not both")),
+        };
+        Ok(InlineMat { rows, cols, data })
+    }
+}
+
+/// A client-supplied objective: which family the payload feeds, plus the
+/// per-matrix data. Shapes are validated against the job's `(batch, p, n)`
+/// and domain at admission — a bad payload is a 400, never a failed job.
+#[derive(Clone, Debug, PartialEq)]
+pub enum InlineProblem {
+    /// `Σᵢ ‖Aᵢ Xᵢ − Bᵢ‖²` with client `Aᵢ` (p×p) and `Bᵢ` (p×n).
+    Procrustes { a: Vec<InlineMat>, b: Vec<InlineMat> },
+    /// `Σᵢ −Re Tr(Xᵢ Cᵢ Xᵢᴴ)` with client `Cᵢ` (n×n).
+    Pca { c: Vec<InlineMat> },
+}
+
+impl InlineProblem {
+    pub fn objective(&self) -> &'static str {
+        match self {
+            InlineProblem::Procrustes { .. } => "procrustes",
+            InlineProblem::Pca { .. } => "pca",
+        }
+    }
+
+    /// Total payload bytes across every matrix.
+    pub fn payload_bytes(&self) -> usize {
+        match self {
+            InlineProblem::Procrustes { a, b } => {
+                a.iter().chain(b).map(InlineMat::byte_len).sum()
+            }
+            InlineProblem::Pca { c } => c.iter().map(InlineMat::byte_len).sum(),
+        }
+    }
+
+    /// Admission-time validation: matrix counts match the batch, shapes
+    /// match the objective family, word counts match the domain's element
+    /// width, and every word is finite.
+    pub fn validate(&self, domain: JobDomain, batch: usize, p: usize, n: usize) -> Result<()> {
+        let width = match domain {
+            JobDomain::Real => 1usize,
+            JobDomain::Complex => 2usize,
+        };
+        let check = |name: &str, mats: &[InlineMat], rows: usize, cols: usize| -> Result<()> {
+            ensure!(
+                mats.len() == batch,
+                "inline '{name}': {} matrices for batch {batch}",
+                mats.len()
+            );
+            for (i, m) in mats.iter().enumerate() {
+                ensure!(
+                    m.rows == rows && m.cols == cols,
+                    "inline '{name}[{i}]': shape ({}, {}) but the job needs ({rows}, {cols})",
+                    m.rows,
+                    m.cols
+                );
+                ensure!(
+                    m.data.len() == rows * cols * width,
+                    "inline '{name}[{i}]': {} words for a {rows}x{cols} {} matrix (need {})",
+                    m.data.len(),
+                    domain.name(),
+                    rows * cols * width
+                );
+                ensure!(
+                    m.data.iter().all(|v| v.is_finite()),
+                    "inline '{name}[{i}]': payload contains non-finite values"
+                );
+            }
+            Ok(())
+        };
+        match self {
+            InlineProblem::Procrustes { a, b } => {
+                check("a", a, p, p)?;
+                check("b", b, p, n)
+            }
+            InlineProblem::Pca { c } => check("c", c, n, n),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mats = |v: &[InlineMat]| Json::arr(v.iter().map(InlineMat::to_json));
+        let mut fields = vec![
+            ("source", Json::str("inline")),
+            ("objective", Json::str(self.objective())),
+        ];
+        match self {
+            InlineProblem::Procrustes { a, b } => {
+                fields.push(("a", mats(a)));
+                fields.push(("b", mats(b)));
+            }
+            InlineProblem::Pca { c } => fields.push(("c", mats(c))),
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Where a job's objective comes from (see module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ProblemSource {
+    Builtin(ProblemKind),
+    Inline(InlineProblem),
+}
+
+impl ProblemSource {
+    /// Display label: the v1 name for builtin problems, `inline:<family>`
+    /// for client data (what listings and state files show).
+    pub fn label(&self) -> String {
+        match self {
+            ProblemSource::Builtin(k) => k.name().to_string(),
+            ProblemSource::Inline(p) => format!("inline:{}", p.objective()),
+        }
+    }
+
+    /// Inline payload bytes (0 for builtin sources).
+    pub fn payload_bytes(&self) -> usize {
+        match self {
+            ProblemSource::Builtin(_) => 0,
+            ProblemSource::Inline(p) => p.payload_bytes(),
+        }
+    }
+
+    /// Source-specific admission validation.
+    pub fn validate(&self, domain: JobDomain, batch: usize, p: usize, n: usize) -> Result<()> {
+        match self {
+            ProblemSource::Builtin(_) => Ok(()),
+            ProblemSource::Inline(inline) => inline.validate(domain, batch, p, n),
+        }
+    }
+
+    /// Serialize. Builtin sources keep the frozen v1 wire form (a bare
+    /// string), so v1 specs round-trip bit-for-bit; inline sources use
+    /// the v2 object form.
+    pub fn to_json(&self) -> Json {
+        match self {
+            ProblemSource::Builtin(k) => Json::str(k.name()),
+            ProblemSource::Inline(p) => p.to_json(),
+        }
+    }
+
+    /// Parse either wire form (v1 string shim, or v2 `{"source": …}`
+    /// object dispatched through the registry).
+    pub fn from_json(j: &Json) -> Result<ProblemSource> {
+        match j {
+            Json::Null => Err(anyhow!("job: missing 'problem'")),
+            Json::Str(s) => ProblemKind::parse(s)
+                .map(ProblemSource::Builtin)
+                .ok_or_else(|| anyhow!("job: unknown problem '{s}'")),
+            Json::Obj(_) => {
+                let name = j
+                    .get("source")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("job: problem object needs a 'source' name"))?;
+                let builder = source_registry()
+                    .iter()
+                    .find(|b| b.name == name)
+                    .ok_or_else(|| {
+                        anyhow!(
+                            "job: unknown problem source '{name}' (registered: {})",
+                            source_registry()
+                                .iter()
+                                .map(|b| b.name)
+                                .collect::<Vec<_>>()
+                                .join(", ")
+                        )
+                    })?;
+                (builder.parse)(j).with_context(|| format!("job: in '{name}' problem"))
+            }
+            _ => Err(anyhow!("job: 'problem' must be a name or a source object")),
+        }
+    }
+}
+
+/// One registered problem source: how to parse its wire form. Building
+/// the runtime objective stays with `run_job` (it is domain-generic);
+/// what varies per source is the spec-side contract captured here.
+pub struct SourceBuilder {
+    pub name: &'static str,
+    /// One-line human description (served by `GET /v2/problems`).
+    pub summary: &'static str,
+    pub parse: fn(&Json) -> Result<ProblemSource>,
+}
+
+fn parse_builtin(j: &Json) -> Result<ProblemSource> {
+    let kind = j
+        .get("kind")
+        .as_str()
+        .ok_or_else(|| anyhow!("builtin source needs a 'kind' name"))?;
+    ProblemKind::parse(kind)
+        .map(ProblemSource::Builtin)
+        .ok_or_else(|| anyhow!("unknown builtin problem '{kind}'"))
+}
+
+fn parse_inline(j: &Json) -> Result<ProblemSource> {
+    let mats = |key: &str| -> Result<Vec<InlineMat>> {
+        let arr = j
+            .get(key)
+            .as_arr()
+            .ok_or_else(|| anyhow!("inline source needs a '{key}' matrix array"))?;
+        arr.iter()
+            .enumerate()
+            .map(|(i, m)| InlineMat::from_json(m).with_context(|| format!("'{key}[{i}]'")))
+            .collect()
+    };
+    let objective = j
+        .get("objective")
+        .as_str()
+        .ok_or_else(|| anyhow!("inline source needs an 'objective' name"))?;
+    let inline = match objective {
+        "procrustes" => InlineProblem::Procrustes { a: mats("a")?, b: mats("b")? },
+        "pca" => InlineProblem::Pca { c: mats("c")? },
+        other => {
+            return Err(anyhow!(
+                "unknown inline objective '{other}' (supported: procrustes, pca)"
+            ))
+        }
+    };
+    Ok(ProblemSource::Inline(inline))
+}
+
+/// The problem-source registry. Open by construction: a new source is
+/// one more entry here plus a `ProblemData` build arm in `job.rs`.
+pub fn source_registry() -> &'static [SourceBuilder] {
+    &[
+        SourceBuilder {
+            name: "builtin",
+            summary: "seeded procrustes/pca/quartic/replay, determined by (seed, batch, p, n)",
+            parse: parse_builtin,
+        },
+        SourceBuilder {
+            name: "inline",
+            summary: "client-supplied matrices (base64 LE f32 or JSON arrays; procrustes/pca)",
+            parse: parse_inline,
+        },
+    ]
+}
+
+/// Registry description for `GET /v2/problems`.
+pub fn registry_json() -> Json {
+    Json::arr(source_registry().iter().map(|b| {
+        Json::obj(vec![
+            ("source", Json::str(b.name)),
+            ("summary", Json::str(b.summary)),
+        ])
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn v1_string_shim_and_v2_object_both_parse() {
+        let s = ProblemSource::from_json(&Json::str("procrustes")).unwrap();
+        assert_eq!(s, ProblemSource::Builtin(ProblemKind::Procrustes));
+        // Builtin serializes back to the bare v1 string.
+        assert_eq!(s.to_json(), Json::str("procrustes"));
+        let v2 = Json::parse(r#"{"source": "builtin", "kind": "pca"}"#).unwrap();
+        assert_eq!(
+            ProblemSource::from_json(&v2).unwrap(),
+            ProblemSource::Builtin(ProblemKind::Pca)
+        );
+        assert!(ProblemSource::from_json(&Json::str("nope")).is_err());
+        let bad = Json::parse(r#"{"source": "martian"}"#).unwrap();
+        let err = ProblemSource::from_json(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("registered"), "{err:#}");
+    }
+
+    #[test]
+    fn inline_roundtrip_exact() {
+        let mut rng = Rng::seed_from_u64(3);
+        let a: Vec<InlineMat> =
+            (0..2).map(|_| InlineMat::from_mat(&Mat::<f32>::randn(3, 3, &mut rng))).collect();
+        let b: Vec<InlineMat> =
+            (0..2).map(|_| InlineMat::from_mat(&Mat::<f32>::randn(3, 5, &mut rng))).collect();
+        let src = ProblemSource::Inline(InlineProblem::Procrustes { a, b });
+        let text = src.to_json().to_string();
+        let back = ProblemSource::from_json(&Json::parse(&text).unwrap()).unwrap();
+        // Base64 f32 packing is exact: bit-for-bit payload round-trip.
+        assert_eq!(back, src);
+        assert_eq!(src.label(), "inline:procrustes");
+        assert!(src.payload_bytes() > 0);
+    }
+
+    #[test]
+    fn inline_json_array_form_parses() {
+        let j = Json::parse(
+            r#"{"source": "inline", "objective": "pca",
+                "c": [{"rows": 2, "cols": 2, "data": [1.0, 0.5, 0.5, 2.0]}]}"#,
+        )
+        .unwrap();
+        let src = ProblemSource::from_json(&j).unwrap();
+        let ProblemSource::Inline(InlineProblem::Pca { c }) = &src else { panic!() };
+        assert_eq!(c[0].data, vec![1.0, 0.5, 0.5, 2.0]);
+        src.validate(JobDomain::Real, 1, 1, 2).unwrap();
+        // Wrong batch / shape / width rejected.
+        assert!(src.validate(JobDomain::Real, 2, 1, 2).is_err());
+        assert!(src.validate(JobDomain::Real, 1, 1, 3).is_err());
+        assert!(src.validate(JobDomain::Complex, 1, 1, 2).is_err());
+    }
+
+    #[test]
+    fn inline_rejects_malformed_payloads() {
+        for bad in [
+            // Both b64 and data.
+            r#"{"source":"inline","objective":"pca",
+                "c":[{"rows":1,"cols":1,"data":[1.0],"b64":"AACAPw=="}]}"#,
+            // Neither.
+            r#"{"source":"inline","objective":"pca","c":[{"rows":1,"cols":1}]}"#,
+            // Bad base64.
+            r#"{"source":"inline","objective":"pca","c":[{"rows":1,"cols":1,"b64":"!!"}]}"#,
+            // Unknown objective.
+            r#"{"source":"inline","objective":"quartic","x":[]}"#,
+            // Zero-sized matrix.
+            r#"{"source":"inline","objective":"pca","c":[{"rows":0,"cols":1,"data":[]}]}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(ProblemSource::from_json(&j).is_err(), "{bad}");
+        }
+        // Non-finite payloads are caught at validation.
+        let src = ProblemSource::Inline(InlineProblem::Pca {
+            c: vec![InlineMat { rows: 1, cols: 1, data: vec![f32::NAN] }],
+        });
+        assert!(src.validate(JobDomain::Real, 1, 1, 1).is_err());
+    }
+
+    #[test]
+    fn complex_wire_elements_interleave() {
+        let m = Mat::from_vec(
+            1,
+            2,
+            vec![Complex::new(1.0f32, -2.0), Complex::new(0.5, 0.25)],
+        );
+        let im = InlineMat::from_mat(&m);
+        assert_eq!(im.data, vec![1.0, -2.0, 0.5, 0.25]);
+        let back: Mat<Complex<f32>> = im.to_mat().unwrap();
+        assert_eq!(back, m);
+        // Width mismatch is an error, not a reinterpretation.
+        assert!(im.to_mat::<f32>().is_err());
+    }
+
+    #[test]
+    fn registry_lists_both_sources() {
+        let names: Vec<&str> = source_registry().iter().map(|b| b.name).collect();
+        assert_eq!(names, vec!["builtin", "inline"]);
+        assert_eq!(registry_json().as_arr().unwrap().len(), 2);
+    }
+}

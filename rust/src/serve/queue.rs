@@ -1,25 +1,34 @@
 //! The job queue: a bounded FIFO with a per-job state machine
 //! (queued → running → done/failed/cancelled) executed by a fixed worker
-//! set.
+//! set, fronted by admission control.
 //!
 //! Each worker claims one job at a time and drives it through
-//! [`run_job`](super::job::run_job) (which owns the job's
-//! `OptimSession`), recording the loss series in a
-//! [`MetricLog`](crate::coordinator::MetricLog) whose tail feeds
-//! `GET /v1/jobs/:id`. Worker panics are caught and surface as `failed`
-//! jobs — the daemon never dies on a bad spec.
+//! [`run_job_with`](super::job::run_job_with) (which owns the job's
+//! `OptimSession`), recording the **full** loss series (the v2 result
+//! surface), a short tail (the frozen v1 status surface), and publishing
+//! every step through the job's bounded [`ProgressBus`] — the broadcast
+//! channel behind `GET /v2/jobs/:id/events`. Worker panics are caught
+//! and surface as `failed` jobs — the daemon never dies on a bad spec.
+//!
+//! Admission ([`Admission`]) runs **ahead** of the FIFO: per-tenant
+//! active-job quotas, a `B·p·n·steps` cost budget across all admitted
+//! work, and an inline-payload byte cap each refuse a submission before
+//! it occupies queue capacity (mapped to `429` + `Retry-After` / `413`
+//! by the API layer and counted separately in `/metrics`).
 //!
 //! Shutdown is graceful: workers stop claiming new jobs and drain the
 //! ones they are running; still-queued jobs stay queued (and, with a
 //! state dir, persisted for the next daemon). With a `state_dir`, every
-//! job's spec + state lands in `job-<id>.json` and real-domain jobs with
-//! `checkpoint_every > 0` checkpoint to `job-<id>.ckpt`; a restarted
+//! job's spec + state lands in `job-<id>.json` and jobs with
+//! `checkpoint_every > 0` (either domain — complex stores checkpoint as
+//! interleaved `c64` pairs) checkpoint to `job-<id>.ckpt`; a restarted
 //! queue re-lists unfinished jobs and resumes them from their
 //! checkpoints.
 
-use super::job::{self, JobOutcome, JobResult, JobSpec, JobState, RunCtl};
+use super::job::{
+    self, FinalIterate, JobOutcome, JobResult, JobSpec, JobState, RunCtl, StepProgress,
+};
 use super::metrics::ServeMetrics;
-use crate::coordinator::MetricLog;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::collections::{BTreeMap, VecDeque};
@@ -30,8 +39,21 @@ use std::time::{Duration, Instant};
 
 pub type JobId = u64;
 
-/// Kept loss-tail length per job (the "metrics tail" of the status API).
+/// Kept loss-tail length per job (the "metrics tail" of the v1 status
+/// API; v2 keeps the full series).
 const TAIL_LEN: usize = 8;
+
+/// Progress events buffered per job. A subscriber that connects late (or
+/// falls behind) replays from the oldest buffered event — enough that a
+/// short job's whole stream is still served after it finished, which is
+/// what makes `curl -N …/events` deterministic in CI.
+const EVENT_BUF: usize = 256;
+
+/// In-memory loss-series points retained per job (32 MB at 16 B/point).
+/// Jobs within the cap serve their series untruncated; a longer run
+/// drops its OLDEST points so one pathological `steps` value cannot OOM
+/// the daemon through its own telemetry.
+const SERIES_CAP: usize = 2_000_000;
 
 /// Terminal jobs retained in memory for status queries. Older terminal
 /// entries are evicted (oldest id first) so a resident daemon's job map
@@ -39,7 +61,26 @@ const TAIL_LEN: usize = 8;
 /// files remain on disk for offline inspection.
 const MAX_TERMINAL_RETAINED: usize = 1024;
 
-/// Queue sizing and persistence.
+/// Admission-control knobs, all "0 = unlimited" (the v1-compatible
+/// default). Checked ahead of the FIFO so rejected work never occupies
+/// queue capacity.
+#[derive(Clone, Copy, Debug)]
+pub struct Admission {
+    /// Max active (queued + running) jobs per tenant.
+    pub tenant_quota: usize,
+    /// Max total outstanding `B·p·n·steps` cost across admitted jobs.
+    pub cost_cap: u64,
+    /// Max inline problem payload bytes per job.
+    pub max_inline_bytes: usize,
+}
+
+impl Default for Admission {
+    fn default() -> Self {
+        Admission { tenant_quota: 0, cost_cap: 0, max_inline_bytes: 8 << 20 }
+    }
+}
+
+/// Queue sizing, persistence and admission.
 #[derive(Clone, Debug)]
 pub struct QueueConfig {
     /// Fixed worker thread count.
@@ -49,6 +90,8 @@ pub struct QueueConfig {
     pub capacity: usize,
     /// Persist job state (+ checkpoints) here; `None` = in-memory only.
     pub state_dir: Option<PathBuf>,
+    /// Admission control ahead of the FIFO.
+    pub admission: Admission,
 }
 
 impl Default for QueueConfig {
@@ -57,6 +100,7 @@ impl Default for QueueConfig {
             workers: crate::util::pool::num_threads().min(4).max(1),
             capacity: 256,
             state_dir: None,
+            admission: Admission::default(),
         }
     }
 }
@@ -70,6 +114,13 @@ pub enum SubmitError {
     Draining,
     /// The spec failed admission validation.
     Invalid(anyhow::Error),
+    /// The tenant is at its active-job quota; retry after `retry_after_s`.
+    Quota { tenant: String, active: usize, quota: usize, retry_after_s: u64 },
+    /// The cost budget has no room for this job; retry after
+    /// `retry_after_s`.
+    Cost { cost: u64, outstanding: u64, cap: u64, retry_after_s: u64 },
+    /// The inline problem payload exceeds the daemon's byte cap.
+    InlineTooLarge { bytes: usize, cap: usize },
 }
 
 impl std::fmt::Display for SubmitError {
@@ -78,6 +129,125 @@ impl std::fmt::Display for SubmitError {
             SubmitError::Full(cap) => write!(f, "queue full (capacity {cap})"),
             SubmitError::Draining => write!(f, "queue is draining (shutdown in progress)"),
             SubmitError::Invalid(e) => write!(f, "invalid job: {e:#}"),
+            SubmitError::Quota { tenant, active, quota, .. } => write!(
+                f,
+                "tenant '{tenant}' is at its quota ({active} active of {quota} allowed)"
+            ),
+            SubmitError::Cost { cost, outstanding, cap, .. } => write!(
+                f,
+                "cost budget exhausted: job costs {cost} units, {outstanding} of {cap} \
+                 already admitted"
+            ),
+            SubmitError::InlineTooLarge { bytes, cap } => {
+                write!(f, "inline payload of {bytes} bytes exceeds the {cap}-byte cap")
+            }
+        }
+    }
+}
+
+/// One event on a job's progress bus.
+#[derive(Clone, Debug)]
+pub enum ProgressEvent {
+    /// One applied optimizer step.
+    Step(StepProgress),
+    /// The job reached a terminal state; the bus closes after this.
+    Terminal(JobState),
+}
+
+/// What [`ProgressBus::next_event`] observed.
+#[derive(Debug)]
+pub enum BusPoll {
+    /// An event at the returned cursor; pass the cursor back to resume.
+    Event(u64, ProgressEvent),
+    /// Nothing new before the wait elapsed (send a keepalive and retry).
+    Pending,
+    /// Terminal event already consumed and the bus is closed.
+    Closed,
+}
+
+/// A bounded broadcast channel of one job's progress: the last
+/// [`EVENT_BUF`] events stay buffered (late subscribers replay them),
+/// every subscriber polls with its own cursor, and slow subscribers skip
+/// ahead rather than block the publisher.
+pub struct ProgressBus {
+    state: Mutex<BusState>,
+    cv: Condvar,
+}
+
+struct BusState {
+    next_seq: u64,
+    buf: VecDeque<(u64, ProgressEvent)>,
+    closed: bool,
+}
+
+impl ProgressBus {
+    fn new() -> Arc<ProgressBus> {
+        Arc::new(ProgressBus {
+            state: Mutex::new(BusState { next_seq: 0, buf: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// A bus that was already terminal when observed (recovered jobs).
+    fn closed_with(state: JobState) -> Arc<ProgressBus> {
+        let bus = ProgressBus::new();
+        bus.close(state);
+        bus
+    }
+
+    fn publish(&self, ev: ProgressEvent) {
+        {
+            let mut st = self.state.lock().unwrap();
+            if st.closed {
+                return;
+            }
+            let seq = st.next_seq;
+            st.next_seq += 1;
+            if st.buf.len() == EVENT_BUF {
+                st.buf.pop_front();
+            }
+            st.buf.push_back((seq, ev));
+        }
+        self.cv.notify_all();
+    }
+
+    /// Publish the terminal event and close (idempotent).
+    fn close(&self, terminal: JobState) {
+        {
+            let mut st = self.state.lock().unwrap();
+            if st.closed {
+                return;
+            }
+            let seq = st.next_seq;
+            st.next_seq += 1;
+            if st.buf.len() == EVENT_BUF {
+                st.buf.pop_front();
+            }
+            st.buf.push_back((seq, ProgressEvent::Terminal(terminal)));
+            st.closed = true;
+        }
+        self.cv.notify_all();
+    }
+
+    /// Earliest buffered event with sequence ≥ `cursor`, waiting up to
+    /// `wait` while the bus is open. A subscriber starts at cursor 0 and
+    /// feeds each returned cursor back in.
+    pub fn next_event(&self, cursor: u64, wait: Duration) -> BusPoll {
+        let deadline = Instant::now() + wait;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some((seq, ev)) = st.buf.iter().find(|(s, _)| *s >= cursor) {
+                return BusPoll::Event(seq + 1, ev.clone());
+            }
+            if st.closed {
+                return BusPoll::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return BusPoll::Pending;
+            }
+            let (guard, _) = self.cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
         }
     }
 }
@@ -85,12 +255,27 @@ impl std::fmt::Display for SubmitError {
 /// One tracked job.
 struct Entry {
     spec: JobSpec,
+    /// API-key tenant that admitted the job (`anonymous` by default).
+    tenant: String,
+    /// Admission cost units held while the job is active.
+    cost: u64,
     state: JobState,
     error: Option<String>,
     result: Option<JobResult>,
     steps_done: usize,
-    /// Last [`TAIL_LEN`] (step, wall_s, loss) records.
+    /// Last [`TAIL_LEN`] (step, wall_s, loss) records (v1 status tail).
     tail: VecDeque<(usize, f64, f64)>,
+    /// Live (step, loss) series, bounded at [`SERIES_CAP`] points (the
+    /// oldest drop first past the cap). In-memory only: a restarted
+    /// daemon keeps the result scalars (from the state file) but not
+    /// the series.
+    series: VecDeque<(usize, f64)>,
+    /// The series, frozen into an `Arc` at the terminal transition so
+    /// result reads are O(1) under the queue lock.
+    series_final: Option<Arc<Vec<(usize, f64)>>>,
+    /// Final iterate (v2 result surface; in-memory only).
+    iterate: Option<Arc<FinalIterate>>,
+    bus: Arc<ProgressBus>,
     cancel: Arc<AtomicBool>,
 }
 
@@ -101,9 +286,30 @@ struct State {
     jobs: BTreeMap<JobId, Entry>,
     draining: bool,
     running: usize,
+    /// Active (queued + running) jobs per tenant.
+    active_by_tenant: BTreeMap<String, usize>,
+    /// Total admitted-but-unfinished cost units.
+    outstanding_cost: u64,
 }
 
 impl State {
+    fn admit_accounting(&mut self, tenant: &str, cost: u64) {
+        *self.active_by_tenant.entry(tenant.to_string()).or_insert(0) += 1;
+        self.outstanding_cost = self.outstanding_cost.saturating_add(cost);
+    }
+
+    /// Release a job's admission hold (exactly once, when it turns
+    /// terminal).
+    fn release_accounting(&mut self, tenant: &str, cost: u64) {
+        if let Some(n) = self.active_by_tenant.get_mut(tenant) {
+            *n = n.saturating_sub(1);
+            if *n == 0 {
+                self.active_by_tenant.remove(tenant);
+            }
+        }
+        self.outstanding_cost = self.outstanding_cost.saturating_sub(cost);
+    }
+
     /// Evict the oldest terminal entries beyond [`MAX_TERMINAL_RETAINED`]
     /// (in-memory only; persisted state files are left alone).
     fn prune_terminal(&mut self) {
@@ -126,6 +332,18 @@ struct Inner {
     metrics: Arc<ServeMetrics>,
     state: Mutex<State>,
     cv: Condvar,
+}
+
+/// Everything the v2 result endpoint serves about one job. The series
+/// is the terminal snapshot (shared, not copied); it is empty while the
+/// job is still live — the result endpoint answers 409 then anyway.
+pub struct ResultView {
+    pub state: JobState,
+    pub tenant: String,
+    pub result: Option<JobResult>,
+    pub error: Option<String>,
+    pub series: Arc<Vec<(usize, f64)>>,
+    pub iterate: Option<Arc<FinalIterate>>,
 }
 
 /// The queue handle. Cheap to share (`Arc` it once in the server).
@@ -166,17 +384,68 @@ impl JobQueue {
         Ok(queue)
     }
 
-    /// Submit a job; returns its id or why it was refused.
+    /// Submit a job under the default (`anonymous`) tenant.
     pub fn submit(&self, spec: JobSpec) -> std::result::Result<JobId, SubmitError> {
-        if let Err(e) = spec.validate() {
+        self.submit_as(spec, "anonymous")
+    }
+
+    /// Submit a job for `tenant`; returns its id or why admission
+    /// refused it. Admission runs in order: validity → inline byte cap →
+    /// tenant quota → cost budget → backlog capacity — all before the
+    /// job touches the FIFO.
+    pub fn submit_as(
+        &self,
+        spec: JobSpec,
+        tenant: &str,
+    ) -> std::result::Result<JobId, SubmitError> {
+        let reject = |counter: &std::sync::atomic::AtomicU64, err: SubmitError| {
             self.inner.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-            return Err(SubmitError::Invalid(e));
+            counter.fetch_add(1, Ordering::Relaxed);
+            Err(err)
+        };
+        if let Err(e) = spec.validate() {
+            return reject(&self.inner.metrics.rejected_invalid, SubmitError::Invalid(e));
         }
+        let adm = self.inner.cfg.admission;
+        let payload = spec.source.payload_bytes();
+        if adm.max_inline_bytes > 0 && payload > adm.max_inline_bytes {
+            return reject(
+                &self.inner.metrics.rejected_inline,
+                SubmitError::InlineTooLarge { bytes: payload, cap: adm.max_inline_bytes },
+            );
+        }
+        let cost = spec.cost();
         let id = {
             let mut st = self.inner.state.lock().unwrap();
             if st.draining {
                 self.inner.metrics.rejected.fetch_add(1, Ordering::Relaxed);
                 return Err(SubmitError::Draining);
+            }
+            // Retry hint: admission pressure drains one backlog slot at a
+            // time, so scale the hint with the backlog (bounded, seconds).
+            let retry_after_s = 1 + (st.pending.len() as u64).min(59);
+            if adm.tenant_quota > 0 {
+                let active = st.active_by_tenant.get(tenant).copied().unwrap_or(0);
+                if active >= adm.tenant_quota {
+                    drop(st);
+                    return reject(
+                        &self.inner.metrics.rejected_quota,
+                        SubmitError::Quota {
+                            tenant: tenant.to_string(),
+                            active,
+                            quota: adm.tenant_quota,
+                            retry_after_s,
+                        },
+                    );
+                }
+            }
+            if adm.cost_cap > 0 && st.outstanding_cost.saturating_add(cost) > adm.cost_cap {
+                let outstanding = st.outstanding_cost;
+                drop(st);
+                return reject(
+                    &self.inner.metrics.rejected_cost,
+                    SubmitError::Cost { cost, outstanding, cap: adm.cost_cap, retry_after_s },
+                );
             }
             if st.pending.len() >= self.inner.cfg.capacity {
                 self.inner.metrics.rejected.fetch_add(1, Ordering::Relaxed);
@@ -184,15 +453,22 @@ impl JobQueue {
             }
             let id = st.next_id;
             st.next_id += 1;
+            st.admit_accounting(tenant, cost);
             st.jobs.insert(
                 id,
                 Entry {
                     spec,
+                    tenant: tenant.to_string(),
+                    cost,
                     state: JobState::Queued,
                     error: None,
                     result: None,
                     steps_done: 0,
                     tail: VecDeque::new(),
+                    series: VecDeque::new(),
+                    series_final: None,
+                    iterate: None,
+                    bus: ProgressBus::new(),
                     cancel: Arc::new(AtomicBool::new(false)),
                 },
             );
@@ -218,10 +494,16 @@ impl JobQueue {
             match current {
                 JobState::Queued => {
                     st.pending.retain(|&q| q != id);
-                    if let Some(e) = st.jobs.get_mut(&id) {
-                        e.state = JobState::Cancelled;
-                        e.result = None;
-                    }
+                    let (tenant, cost, bus) = match st.jobs.get_mut(&id) {
+                        Some(e) => {
+                            e.state = JobState::Cancelled;
+                            e.result = None;
+                            (e.tenant.clone(), e.cost, e.bus.clone())
+                        }
+                        None => unreachable!("checked above"),
+                    };
+                    st.release_accounting(&tenant, cost);
+                    bus.close(JobState::Cancelled);
                     self.inner.metrics.cancelled.fetch_add(1, Ordering::Relaxed);
                     (JobState::Cancelled, true)
                 }
@@ -245,11 +527,28 @@ impl JobQueue {
         Some(state)
     }
 
-    /// Status snapshot for the API (`None` for unknown ids).
+    /// Status snapshot for the v1 API (`None` for unknown ids).
     pub fn status_json(&self, id: JobId) -> Option<Json> {
         let st = self.inner.state.lock().unwrap();
         let e = st.jobs.get(&id)?;
         Some(entry_json(id, e, true))
+    }
+
+    /// v2 status: the v1 fields plus tenant, admission cost and the
+    /// series length (the full series itself is on the result endpoint).
+    pub fn status_v2_json(&self, id: JobId) -> Option<Json> {
+        let st = self.inner.state.lock().unwrap();
+        let e = st.jobs.get(&id)?;
+        let mut map = match entry_json(id, e, true) {
+            Json::Obj(m) => m,
+            _ => unreachable!("entry_json returns an object"),
+        };
+        map.insert("tenant".to_string(), Json::str(e.tenant.clone()));
+        map.insert("cost".to_string(), Json::num(e.cost as f64));
+        let series_len =
+            e.series_final.as_ref().map(|s| s.len()).unwrap_or_else(|| e.series.len());
+        map.insert("series_len".to_string(), Json::num(series_len as f64));
+        Some(Json::Obj(map))
     }
 
     /// (state, result, error) snapshot, for the result endpoint/tests.
@@ -259,16 +558,65 @@ impl JobQueue {
         Some((e.state, e.result.clone(), e.error.clone()))
     }
 
+    /// Everything the v2 result endpoint serves. O(1) under the queue
+    /// lock: the series is the frozen terminal `Arc`, never a copy.
+    pub fn result_view(&self, id: JobId) -> Option<ResultView> {
+        let st = self.inner.state.lock().unwrap();
+        let e = st.jobs.get(&id)?;
+        Some(ResultView {
+            state: e.state,
+            tenant: e.tenant.clone(),
+            result: e.result.clone(),
+            error: e.error.clone(),
+            series: e.series_final.clone().unwrap_or_default(),
+            iterate: e.iterate.clone(),
+        })
+    }
+
+    /// Subscribe to a job's progress bus (`None` for unknown ids). The
+    /// bus replays its buffered tail to late subscribers and closes with
+    /// a terminal event.
+    pub fn subscribe(&self, id: JobId) -> Option<Arc<ProgressBus>> {
+        let st = self.inner.state.lock().unwrap();
+        Some(st.jobs.get(&id)?.bus.clone())
+    }
+
     /// All jobs, compact.
     pub fn list_json(&self) -> Json {
         let st = self.inner.state.lock().unwrap();
         Json::arr(st.jobs.iter().map(|(&id, e)| entry_json(id, e, false)))
     }
 
-    /// (queued, running) — the gauges of `GET /metrics`.
+    /// (queued, running) — the headline gauges of `GET /metrics`.
     pub fn depth_running(&self) -> (usize, usize) {
         let st = self.inner.state.lock().unwrap();
         (st.pending.len(), st.running)
+    }
+
+    /// Retained job count per state (the per-state `/metrics` gauges).
+    pub fn state_counts(&self) -> Vec<(&'static str, usize)> {
+        let st = self.inner.state.lock().unwrap();
+        JobState::all()
+            .iter()
+            .map(|&s| (s.name(), st.jobs.values().filter(|e| e.state == s).count()))
+            .collect()
+    }
+
+    /// Outstanding admitted cost units (the `/metrics` gauge).
+    pub fn outstanding_cost(&self) -> u64 {
+        self.inner.state.lock().unwrap().outstanding_cost
+    }
+
+    /// Active (queued + running) jobs held by one tenant.
+    pub fn tenant_active(&self, tenant: &str) -> usize {
+        self.inner
+            .state
+            .lock()
+            .unwrap()
+            .active_by_tenant
+            .get(tenant)
+            .copied()
+            .unwrap_or(0)
     }
 
     pub fn capacity(&self) -> usize {
@@ -277,6 +625,10 @@ impl JobQueue {
 
     pub fn workers(&self) -> usize {
         self.inner.cfg.workers
+    }
+
+    pub fn admission(&self) -> Admission {
+        self.inner.cfg.admission
     }
 
     /// Block until the job reaches a terminal state (or the deadline).
@@ -325,7 +677,7 @@ fn entry_json(id: JobId, e: &Entry, with_tail: bool) -> Json {
         ("id", Json::num(id as f64)),
         ("name", Json::str(e.spec.name.clone())),
         ("state", Json::str(e.state.name())),
-        ("problem", Json::str(e.spec.problem.name())),
+        ("problem", Json::str(e.spec.source.label())),
         ("domain", Json::str(e.spec.domain.name())),
         ("engine", Json::str(e.spec.optimizer.engine.name())),
         ("batch", Json::num(e.spec.batch as f64)),
@@ -362,22 +714,31 @@ impl Inner {
         self.state.lock().unwrap().prune_terminal();
     }
 
-    /// Per-step progress from a worker: bump the entry and the counters.
-    fn progress(&self, id: JobId, step: usize, wall_s: f64, loss: f64) {
+    /// Per-step progress from a worker: bump the counters, the v1 tail,
+    /// the v2 series, and broadcast on the job's bus.
+    fn progress(&self, id: JobId, p: &StepProgress) {
         self.metrics.steps.fetch_add(1, Ordering::Relaxed);
-        let mut st = self.state.lock().unwrap();
-        if let Some(e) = st.jobs.get_mut(&id) {
-            e.steps_done = step;
+        let bus = {
+            let mut st = self.state.lock().unwrap();
+            let Some(e) = st.jobs.get_mut(&id) else { return };
+            e.steps_done = p.step;
             if e.tail.len() == TAIL_LEN {
                 e.tail.pop_front();
             }
-            e.tail.push_back((step, wall_s, loss));
-        }
+            e.tail.push_back((p.step, p.wall_s, p.loss));
+            if e.series.len() == SERIES_CAP {
+                e.series.pop_front();
+            }
+            e.series.push_back((p.step, p.loss));
+            e.bus.clone()
+        };
+        bus.publish(ProgressEvent::Step(*p));
     }
 
-    /// Checkpoint path for a job, when persistence applies to it.
+    /// Checkpoint path for a job, when persistence applies to it (both
+    /// domains — the checkpoint format is dtype-tagged).
     fn checkpoint_path(&self, id: JobId, spec: &JobSpec) -> Option<PathBuf> {
-        if spec.checkpoint_every == 0 || spec.domain != super::job::JobDomain::Real {
+        if spec.checkpoint_every == 0 {
             return None;
         }
         self.cfg.state_dir.as_ref().map(|d| d.join(format!("job-{id}.ckpt")))
@@ -393,6 +754,7 @@ impl Inner {
             let mut fields = vec![
                 ("id", Json::num(id as f64)),
                 ("state", Json::str(e.state.name())),
+                ("tenant", Json::str(e.tenant.clone())),
                 ("spec", e.spec.to_json()),
             ];
             if e.cancel.load(Ordering::Relaxed) {
@@ -426,9 +788,11 @@ impl Inner {
 
     /// Re-list persisted jobs on startup. Unfinished jobs (queued or
     /// running at the previous daemon's death) are re-queued — their
-    /// checkpoints, if any, make the re-run resume instead of restart.
-    /// Terminal jobs stay queryable. Malformed files are skipped with a
-    /// warning, never fatal.
+    /// checkpoints, if any, make the re-run resume instead of restart —
+    /// and re-held against their tenant's quota and the cost budget.
+    /// Terminal jobs stay queryable (series/iterate are in-memory
+    /// surfaces and do not survive a restart). Malformed files are
+    /// skipped with a warning, never fatal.
     fn recover(&self) {
         let Some(dir) = &self.cfg.state_dir else { return };
         let Ok(entries) = std::fs::read_dir(dir) else { return };
@@ -472,20 +836,36 @@ impl Inner {
             } else {
                 state
             };
+            let tenant =
+                j.get("tenant").as_str().unwrap_or("anonymous").to_string();
             let result = JobResult::from_json(j.get("result")).ok();
             let error = j.get("error").as_str().map(str::to_string);
             let requeue = !state.is_terminal();
             let steps_done =
                 if requeue { 0 } else { result.as_ref().map(|r| r.steps_done).unwrap_or(0) };
+            let cost = spec.cost();
+            if requeue {
+                st.admit_accounting(&tenant, cost);
+            }
             st.jobs.insert(
                 id,
                 Entry {
                     spec,
+                    tenant,
+                    cost,
                     state: if requeue { JobState::Queued } else { state },
                     error,
                     result,
                     steps_done,
                     tail: VecDeque::new(),
+                    series: VecDeque::new(),
+                    series_final: None,
+                    iterate: None,
+                    bus: if requeue {
+                        ProgressBus::new()
+                    } else {
+                        ProgressBus::closed_with(state)
+                    },
                     cancel: Arc::new(AtomicBool::new(false)),
                 },
             );
@@ -525,42 +905,37 @@ fn worker_loop(inner: Arc<Inner>) {
         let Some((id, spec, cancel)) = claimed else { return };
         inner.persist(id);
 
-        // Run the job, recording its loss series through the
-        // coordinator's MetricLog (its wall-stamped tail is what the
-        // status endpoint serves).
-        let log = std::cell::RefCell::new(MetricLog::new(format!("job-{id}")));
+        // Run the job. The observer records the loss series and feeds the
+        // job's progress bus — the SSE stream — on every applied step.
         let inner_cb = inner.clone();
-        let on_step = |step: usize, loss: f64| {
-            let wall = {
-                let mut lg = log.borrow_mut();
-                lg.record(step, &[("loss", loss)]);
-                lg.elapsed()
-            };
-            inner_cb.progress(id, step, wall, loss);
-        };
+        let observer = |p: &StepProgress| inner_cb.progress(id, p);
         let ctl = RunCtl {
             cancel: Some(&cancel),
-            on_step: Some(&on_step),
+            on_step: None,
             checkpoint_path: inner.checkpoint_path(id, &spec),
         };
-        let outcome =
-            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job::run_job(&spec, &ctl)));
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            job::run_job_with(&spec, &ctl, Some(&observer))
+        }));
 
-        {
+        let bus = {
             let mut st = inner.state.lock().unwrap();
             st.running -= 1;
+            let mut closed: Option<(Arc<ProgressBus>, JobState)> = None;
             if let Some(e) = st.jobs.get_mut(&id) {
                 match outcome {
-                    Ok(Ok(JobOutcome::Done(r))) => {
+                    Ok(Ok((JobOutcome::Done(r), iterate))) => {
                         e.state = JobState::Done;
                         e.steps_done = r.steps_done;
                         e.result = Some(r);
+                        e.iterate = Some(Arc::new(iterate));
                         inner.metrics.completed.fetch_add(1, Ordering::Relaxed);
                     }
-                    Ok(Ok(JobOutcome::Cancelled(r))) => {
+                    Ok(Ok((JobOutcome::Cancelled(r), iterate))) => {
                         e.state = JobState::Cancelled;
                         e.steps_done = r.steps_done;
                         e.result = Some(r);
+                        e.iterate = Some(Arc::new(iterate));
                         inner.metrics.cancelled.fetch_add(1, Ordering::Relaxed);
                     }
                     Ok(Err(err)) => {
@@ -579,7 +954,17 @@ fn worker_loop(inner: Arc<Inner>) {
                         inner.metrics.failed.fetch_add(1, Ordering::Relaxed);
                     }
                 }
+                // Freeze the series so result reads never copy it under
+                // this lock again (terminal entries are immutable).
+                e.series_final = Some(Arc::new(e.series.drain(..).collect()));
+                closed = Some((e.bus.clone(), e.state));
+                let (tenant, cost) = (e.tenant.clone(), e.cost);
+                st.release_accounting(&tenant, cost);
             }
+            closed
+        };
+        if let Some((bus, state)) = bus {
+            bus.close(state);
         }
         inner.persist(id);
         inner.prune();
@@ -604,7 +989,7 @@ mod tests {
 
     fn start(workers: usize, capacity: usize) -> Arc<JobQueue> {
         JobQueue::start(
-            QueueConfig { workers, capacity, state_dir: None },
+            QueueConfig { workers, capacity, ..QueueConfig::default() },
             Arc::new(ServeMetrics::new()),
         )
         .unwrap()
@@ -628,6 +1013,128 @@ mod tests {
         let j = q.status_json(a).unwrap();
         assert_eq!(j.get("state").as_str(), Some("done"));
         assert!(!j.get("tail").as_arr().unwrap().is_empty());
+        // The v2 surfaces: full series, final iterate, tenant.
+        let view = q.result_view(a).unwrap();
+        assert_eq!(view.series.len(), 20, "untruncated series");
+        assert!(view.series.windows(2).all(|w| w[0].0 < w[1].0));
+        let iterate = view.iterate.expect("final iterate retained");
+        assert_eq!(iterate.data.len(), 2 * 2 * 4);
+        assert_eq!(view.tenant, "anonymous");
+        let v2 = q.status_v2_json(a).unwrap();
+        assert_eq!(v2.get("series_len").as_usize(), Some(20));
+        assert_eq!(v2.get("tenant").as_str(), Some("anonymous"));
+        q.shutdown();
+    }
+
+    #[test]
+    fn progress_bus_replays_to_late_subscribers() {
+        let q = start(1, 4);
+        let id = q.submit(quick_spec(15)).unwrap();
+        assert_eq!(q.wait_terminal(id, Duration::from_secs(30)), Some(JobState::Done));
+        // Subscribe AFTER the job finished: the bounded bus replays its
+        // buffered steps, then the terminal event, then closes.
+        let bus = q.subscribe(id).unwrap();
+        let mut cursor = 0u64;
+        let mut steps = Vec::new();
+        let mut terminal = None;
+        loop {
+            match bus.next_event(cursor, Duration::from_secs(5)) {
+                BusPoll::Event(next, ProgressEvent::Step(p)) => {
+                    steps.push(p.step);
+                    cursor = next;
+                }
+                BusPoll::Event(next, ProgressEvent::Terminal(s)) => {
+                    terminal = Some(s);
+                    cursor = next;
+                }
+                BusPoll::Closed => break,
+                BusPoll::Pending => panic!("closed bus must not leave a subscriber pending"),
+            }
+        }
+        assert_eq!(steps, (1..=15).collect::<Vec<_>>(), "monotone, gap-free replay");
+        assert_eq!(terminal, Some(JobState::Done));
+        q.shutdown();
+    }
+
+    #[test]
+    fn tenant_quota_and_cost_cap_reject_ahead_of_fifo() {
+        // Zero workers: admitted jobs stay active, so admission state is
+        // deterministic.
+        let metrics = Arc::new(ServeMetrics::new());
+        let q = JobQueue::start(
+            QueueConfig {
+                workers: 0,
+                capacity: 16,
+                state_dir: None,
+                admission: Admission {
+                    tenant_quota: 2,
+                    cost_cap: 10 * quick_spec(10).cost(),
+                    max_inline_bytes: 64,
+                },
+            },
+            metrics.clone(),
+        )
+        .unwrap();
+
+        // Tenant quota: third active job for 'alice' is refused, bob and
+        // anonymous are unaffected.
+        q.submit_as(quick_spec(10), "alice").unwrap();
+        q.submit_as(quick_spec(10), "alice").unwrap();
+        match q.submit_as(quick_spec(10), "alice") {
+            Err(SubmitError::Quota { active: 2, quota: 2, retry_after_s, .. }) => {
+                assert!(retry_after_s >= 1);
+            }
+            other => panic!("expected Quota, got {other:?}"),
+        }
+        q.submit_as(quick_spec(10), "bob").unwrap();
+        q.submit(quick_spec(10)).unwrap();
+
+        // Cost cap: a job pushing the outstanding budget past the cap is
+        // refused; a small one still fits.
+        match q.submit_as(quick_spec(10 * 10), "bob") {
+            Err(SubmitError::Cost { cap, outstanding, .. }) => {
+                assert!(outstanding > 0 && cap > 0);
+            }
+            other => panic!("expected Cost, got {other:?}"),
+        }
+        q.submit_as(quick_spec(10), "bob").unwrap();
+
+        // Inline byte cap (64 bytes here; the payload is 2 matrices of
+        // 4×4 f32 = 128 bytes).
+        let mut inline = quick_spec(10);
+        let mut rng = crate::rng::Rng::seed_from_u64(1);
+        let c = (0..2)
+            .map(|_| {
+                super::super::problem::InlineMat::from_mat(
+                    &crate::linalg::Mat::<f32>::randn(4, 4, &mut rng),
+                )
+            })
+            .collect();
+        inline.source = super::super::problem::ProblemSource::Inline(
+            super::super::problem::InlineProblem::Pca { c },
+        );
+        match q.submit(inline) {
+            Err(SubmitError::InlineTooLarge { bytes, cap: 64 }) => assert!(bytes > 64),
+            other => panic!("expected InlineTooLarge, got {other:?}"),
+        }
+
+        // Rejections were counted by cause.
+        assert_eq!(metrics.rejected_quota.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.rejected_cost.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.rejected_inline.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.rejected.load(Ordering::Relaxed), 3);
+
+        // Cancelling releases the quota hold: alice can submit again.
+        let ids: Vec<JobId> = {
+            let st = q.inner.state.lock().unwrap();
+            st.jobs
+                .iter()
+                .filter(|(_, e)| e.tenant == "alice")
+                .map(|(&id, _)| id)
+                .collect()
+        };
+        q.cancel(ids[0]).unwrap();
+        q.submit_as(quick_spec(10), "alice").unwrap();
         q.shutdown();
     }
 
@@ -640,6 +1147,12 @@ mod tests {
         assert_eq!(q.wait_terminal(id, Duration::from_secs(30)), Some(JobState::Failed));
         let (_, _, error) = q.snapshot(id).unwrap();
         assert!(error.unwrap().contains("registry"), "error should name the cause");
+        // A failed job closes its bus with the failed terminal event.
+        let bus = q.subscribe(id).unwrap();
+        match bus.next_event(0, Duration::from_secs(5)) {
+            BusPoll::Event(_, ProgressEvent::Terminal(JobState::Failed)) => {}
+            other => panic!("expected Terminal(Failed), got {other:?}"),
+        }
         // The queue is still alive after the failure.
         let ok = q.submit(quick_spec(5)).unwrap();
         assert_eq!(q.wait_terminal(ok, Duration::from_secs(30)), Some(JobState::Done));
@@ -705,12 +1218,23 @@ mod tests {
         ]);
         std::fs::write(dir.join("job-5.json"), state.to_string_pretty()).unwrap();
         let q = JobQueue::start(
-            QueueConfig { workers: 1, capacity: 4, state_dir: Some(dir.clone()) },
+            QueueConfig {
+                workers: 1,
+                capacity: 4,
+                state_dir: Some(dir.clone()),
+                ..QueueConfig::default()
+            },
             Arc::new(ServeMetrics::new()),
         )
         .unwrap();
         let (state, _, _) = q.snapshot(5).unwrap();
         assert_eq!(state, JobState::Cancelled);
+        // A recovered terminal job's bus is already closed with its state.
+        let bus = q.subscribe(5).unwrap();
+        match bus.next_event(0, Duration::from_secs(5)) {
+            BusPoll::Event(_, ProgressEvent::Terminal(JobState::Cancelled)) => {}
+            other => panic!("expected Terminal(Cancelled), got {other:?}"),
+        }
         q.shutdown();
         std::fs::remove_dir_all(&dir).ok();
     }
@@ -722,23 +1246,35 @@ mod tests {
         std::fs::remove_dir_all(&dir).ok();
 
         // First daemon: enqueue two jobs into a zero-worker queue (they
-        // stay queued), then shut down.
+        // stay queued), then shut down. The tenant rides the state file.
         let q = JobQueue::start(
-            QueueConfig { workers: 0, capacity: 8, state_dir: Some(dir.clone()) },
+            QueueConfig {
+                workers: 0,
+                capacity: 8,
+                state_dir: Some(dir.clone()),
+                ..QueueConfig::default()
+            },
             Arc::new(ServeMetrics::new()),
         )
         .unwrap();
-        let a = q.submit(quick_spec(10)).unwrap();
+        let a = q.submit_as(quick_spec(10), "carol").unwrap();
         let b = q.submit(quick_spec(10)).unwrap();
         q.shutdown();
         drop(q);
 
-        // Second daemon recovers both, runs them to done, and keeps ids.
+        // Second daemon recovers both (re-holding carol's quota), runs
+        // them to done, and keeps ids.
         let q2 = JobQueue::start(
-            QueueConfig { workers: 2, capacity: 8, state_dir: Some(dir.clone()) },
+            QueueConfig {
+                workers: 2,
+                capacity: 8,
+                state_dir: Some(dir.clone()),
+                admission: Admission { tenant_quota: 1, ..Admission::default() },
+            },
             Arc::new(ServeMetrics::new()),
         )
         .unwrap();
+        assert_eq!(q2.result_view(a).unwrap().tenant, "carol");
         assert_eq!(q2.wait_terminal(a, Duration::from_secs(30)), Some(JobState::Done));
         assert_eq!(q2.wait_terminal(b, Duration::from_secs(30)), Some(JobState::Done));
         // Fresh ids don't collide with recovered ones.
@@ -747,13 +1283,23 @@ mod tests {
         // Terminal states were persisted for the third daemon.
         q2.shutdown();
         let q3 = JobQueue::start(
-            QueueConfig { workers: 0, capacity: 8, state_dir: Some(dir.clone()) },
+            QueueConfig {
+                workers: 0,
+                capacity: 8,
+                state_dir: Some(dir.clone()),
+                ..QueueConfig::default()
+            },
             Arc::new(ServeMetrics::new()),
         )
         .unwrap();
         let (state, result, _) = q3.snapshot(a).unwrap();
         assert_eq!(state, JobState::Done);
         assert!(result.unwrap().ortho_error <= 1e-3);
+        // Series/iterate are in-memory surfaces: gone after restart,
+        // while the result scalars survive.
+        let view = q3.result_view(a).unwrap();
+        assert!(view.series.is_empty());
+        assert!(view.iterate.is_none());
         q3.shutdown();
         std::fs::remove_dir_all(&dir).ok();
     }

@@ -1,0 +1,111 @@
+//! Standard base64 (RFC 4648, `+/` alphabet, `=` padding) — carries the
+//! v2 serve API's binary payloads (inline problem matrices in, final
+//! iterates out) through JSON without a dependency.
+
+const ALPHABET: &[u8; 64] = b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+/// Encode bytes as standard base64 with padding.
+pub fn encode(bytes: &[u8]) -> String {
+    let mut out = String::with_capacity(bytes.len().div_ceil(3) * 4);
+    for chunk in bytes.chunks(3) {
+        let b0 = chunk[0] as u32;
+        let b1 = chunk.get(1).copied().unwrap_or(0) as u32;
+        let b2 = chunk.get(2).copied().unwrap_or(0) as u32;
+        let word = (b0 << 16) | (b1 << 8) | b2;
+        out.push(ALPHABET[(word >> 18) as usize & 63] as char);
+        out.push(ALPHABET[(word >> 12) as usize & 63] as char);
+        out.push(if chunk.len() > 1 { ALPHABET[(word >> 6) as usize & 63] as char } else { '=' });
+        out.push(if chunk.len() > 2 { ALPHABET[word as usize & 63] as char } else { '=' });
+    }
+    out
+}
+
+fn value_of(c: u8) -> Option<u32> {
+    Some(match c {
+        b'A'..=b'Z' => (c - b'A') as u32,
+        b'a'..=b'z' => (c - b'a') as u32 + 26,
+        b'0'..=b'9' => (c - b'0') as u32 + 52,
+        b'+' => 62,
+        b'/' => 63,
+        _ => return None,
+    })
+}
+
+/// Decode standard base64. Padding is required to a 4-char multiple;
+/// whitespace and other characters are rejected (payloads travel inside
+/// JSON strings, so there is no line wrapping to tolerate).
+pub fn decode(text: &str) -> Result<Vec<u8>, String> {
+    let b = text.as_bytes();
+    if b.len() % 4 != 0 {
+        return Err(format!("base64 length {} is not a multiple of 4", b.len()));
+    }
+    let mut out = Vec::with_capacity(b.len() / 4 * 3);
+    for (i, quad) in b.chunks(4).enumerate() {
+        let is_last = (i + 1) * 4 == b.len();
+        let pad = quad.iter().filter(|&&c| c == b'=').count();
+        if pad > 2 || (pad > 0 && !is_last) {
+            return Err("misplaced base64 padding".to_string());
+        }
+        // '=' may only appear as a suffix of the final quad.
+        if pad > 0 && (quad[3] != b'=' || (pad == 2 && quad[2] != b'=')) {
+            return Err("misplaced base64 padding".to_string());
+        }
+        let mut word = 0u32;
+        for &c in &quad[..4 - pad] {
+            let v = value_of(c)
+                .ok_or_else(|| format!("invalid base64 character '{}'", c as char))?;
+            word = (word << 6) | v;
+        }
+        word <<= 6 * pad as u32;
+        out.push((word >> 16) as u8);
+        if pad < 2 {
+            out.push((word >> 8) as u8);
+        }
+        if pad < 1 {
+            out.push(word as u8);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rfc4648_vectors() {
+        for (plain, coded) in [
+            ("", ""),
+            ("f", "Zg=="),
+            ("fo", "Zm8="),
+            ("foo", "Zm9v"),
+            ("foob", "Zm9vYg=="),
+            ("fooba", "Zm9vYmE="),
+            ("foobar", "Zm9vYmFy"),
+        ] {
+            assert_eq!(encode(plain.as_bytes()), coded, "{plain}");
+            assert_eq!(decode(coded).unwrap(), plain.as_bytes(), "{coded}");
+        }
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let bytes: Vec<u8> = (0..=255u8).cycle().take(1021).collect();
+        assert_eq!(decode(&encode(&bytes)).unwrap(), bytes);
+        // f32 little-endian payloads — the serve wire case.
+        let floats = [1.5f32, -0.0, f32::MIN_POSITIVE, 3.0e8];
+        let raw: Vec<u8> = floats.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let back = decode(&encode(&raw)).unwrap();
+        assert_eq!(back, raw);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(decode("Zm9").is_err(), "length not a multiple of 4");
+        assert!(decode("Zm 9v").is_err(), "whitespace");
+        assert!(decode("Zm=v").is_err(), "padding in the middle of a quad");
+        assert!(decode("Zg==Zg==").is_err(), "padding before the final quad");
+        assert!(decode("Z===").is_err(), "over-padded quad");
+        assert!(decode("Zm9\u{e9}").is_err(), "non-ascii");
+    }
+}

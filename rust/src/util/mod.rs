@@ -1,6 +1,7 @@
 //! Cross-cutting utilities built in-crate (the offline registry lacks
 //! serde/clap/rayon): JSON, CLI parsing, a thread pool, logging and timers.
 
+pub mod b64;
 pub mod cli;
 pub mod json;
 pub mod logging;
