@@ -1,0 +1,101 @@
+//! Artifact I/O throughput: seal / encode / decode / verify / store-insert
+//! over realistic payload sizes, through the same `pogo-artifact-v1` code
+//! paths `pogo compile` and the serve daemon's `/v2/artifacts` upload use.
+//!
+//! Emits `BENCH_artifact.json` — per-operation mean milliseconds and MiB/s
+//! (redirect: `POGO_BENCH_JSON_ARTIFACT`; `POGO_BENCH_QUICK=1` shrinks the
+//! payload set and budgets for CI's `serve-smoke` job, which gates on the
+//! file being well-formed).
+
+use pogo::artifact::{Artifact, ArtifactStore, Provenance};
+use pogo::bench::{bench, black_box, print_table, ArtifactIoRow, BenchOpts};
+use pogo::linalg::Mat;
+use pogo::rng::Rng;
+use pogo::serve::{InlineMat, InlineProblem, JobDomain};
+
+/// A batch of n×n PCA matrices totalling `batch * n^2 * 4` payload bytes.
+fn pca_problem(batch: usize, n: usize, seed: u64) -> InlineProblem {
+    let mut rng = Rng::seed_from_u64(seed);
+    let c = (0..batch)
+        .map(|_| InlineMat::from_mat(&Mat::<f32>::randn(n, n, &mut rng)))
+        .collect();
+    InlineProblem::Pca { c }
+}
+
+fn main() {
+    pogo::util::logging::init();
+    let opts = BenchOpts::from_env();
+    let quick = std::env::var("POGO_BENCH_QUICK").is_ok();
+    // (batch, n): payload = batch * n^2 * 4 bytes of f32 words.
+    let shapes: &[(usize, usize)] =
+        if quick { &[(16, 128)] } else { &[(16, 128), (128, 128), (64, 256)] };
+
+    let store_dir =
+        std::env::temp_dir().join(format!("pogo_bench_artifact_{}", std::process::id()));
+    let store = ArtifactStore::open(&store_dir, u64::MAX).expect("opening bench artifact store");
+
+    let mut stats = Vec::new();
+    let mut rows: Vec<ArtifactIoRow> = Vec::new();
+    for &(batch, n) in shapes {
+        let problem = pca_problem(batch, n, 42);
+        let payload_mb = problem.payload_bytes() as f64 / (1 << 20) as f64;
+        let sealed =
+            Artifact::seal(&problem, JobDomain::Real, batch, 2, n, Provenance::new(42))
+                .expect("sealing bench artifact");
+        let encoded = sealed.encode();
+        store.insert(&sealed).expect("priming store insert");
+
+        let mut row = |op: &str, s: &pogo::bench::Stats| {
+            rows.push(ArtifactIoRow {
+                op: op.to_string(),
+                payload_mb,
+                ms: s.mean * 1e3,
+                mb_per_s: payload_mb / s.mean,
+            });
+        };
+
+        let tag = format!("B={batch} n={n} ({payload_mb:.2} MiB)");
+        let s = bench(&format!("seal {tag}"), opts, || {
+            black_box(
+                Artifact::seal(&problem, JobDomain::Real, batch, 2, n, Provenance::new(42))
+                    .unwrap(),
+            );
+        });
+        row("seal", &s);
+        stats.push(s);
+
+        let s = bench(&format!("encode {tag}"), opts, || {
+            black_box(sealed.encode());
+        });
+        row("encode", &s);
+        stats.push(s);
+
+        let s = bench(&format!("decode {tag}"), opts, || {
+            black_box(Artifact::decode(&encoded).unwrap());
+        });
+        row("decode", &s);
+        stats.push(s);
+
+        let s = bench(&format!("verify {tag}"), opts, || {
+            sealed.verify().unwrap();
+        });
+        row("verify", &s);
+        stats.push(s);
+
+        // Content-addressed re-insert: the store's dedupe-hit path (hash +
+        // index lookup), i.e. what a second identical upload costs.
+        let s = bench(&format!("store {tag}"), opts, || {
+            black_box(store.insert(&sealed).unwrap());
+        });
+        row("store", &s);
+        stats.push(s);
+    }
+    print_table("artifact I/O (pogo-artifact-v1 seal/encode/decode/verify/store)", &stats);
+
+    let default_json = pogo::repo_root().join("BENCH_artifact.json");
+    match pogo::bench::write_artifact_json(&default_json, &rows) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("failed to write BENCH_artifact.json: {e}"),
+    }
+    let _ = std::fs::remove_dir_all(&store_dir);
+}

@@ -1,0 +1,735 @@
+//! Sealed, content-addressed problem artifacts (`pogo-artifact-v1`).
+//!
+//! An artifact packages one inline-style problem payload — the matrices a
+//! job's objective consumes — into a single self-describing file:
+//!
+//! ```text
+//! ┌──────────────┬──────────────────────────┬─────────────────────────┐
+//! │ u32 LE: L    │ manifest JSON (L bytes)  │ packed payload sections │
+//! └──────────────┴──────────────────────────┴─────────────────────────┘
+//! ```
+//!
+//! The manifest carries the schema magic, the problem family and domain,
+//! the `(B, p, n)` shapes, a dtype tag from the `CkptDtype` vocabulary
+//! (`f32`/`c64` on the serve wire), one entry per payload section with its
+//! byte length and sha256, and provenance (optimizer spec JSON, seed,
+//! creating tool). The **content address** of an artifact is the sha256 of
+//! the manifest bytes exactly as framed — since the manifest commits to
+//! every section checksum, the hash transitively pins the payload, and two
+//! independently compiled artifacts with identical contents collide onto
+//! the same address (what the serve store dedupes on).
+//!
+//! Payload sections are the matrices in manifest order, each stored as
+//! row-major little-endian f32 words (complex entries interleave `re,im`)
+//! — byte-for-byte the `InlineMat` wire layout, so an artifact-sourced job
+//! decodes through the exact same path as an inline job and produces
+//! bit-identical results.
+//!
+//! Decoding is total: truncation, framing lies, unknown magic/dtype and
+//! shape mismatches are errors, never panics (mirroring the POGO-CKPT-v1
+//! failure-path contract). [`Artifact::verify`] additionally re-hashes
+//! every section against its manifest checksum, so a single flipped
+//! payload byte is a clear checksum error.
+
+pub mod store;
+
+pub use store::{ArtifactStore, InsertOutcome, StoreSummary};
+
+use crate::serve::job::JobDomain;
+use crate::serve::problem::{InlineMat, InlineProblem};
+use crate::util::json::Json;
+use crate::util::sha256;
+use anyhow::{anyhow, ensure, Context, Result};
+
+/// Schema magic of the one (and so far only) artifact format version.
+pub const MAGIC: &str = "pogo-artifact-v1";
+
+/// Cap on the manifest header, so a corrupt length prefix cannot drive a
+/// huge allocation. Real manifests are a few hundred bytes.
+pub const MAX_MANIFEST_BYTES: usize = 1 << 20;
+
+/// File extension used by the CLI and the on-disk store.
+pub const FILE_EXT: &str = "pogoart";
+
+/// One packed payload section: `count` matrices of one role ("a", "b",
+/// "c"), all `rows x cols`, stored contiguously.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Section {
+    pub name: String,
+    pub count: usize,
+    pub rows: usize,
+    pub cols: usize,
+    /// Exact byte length of this section in the payload.
+    pub bytes: usize,
+    /// Lowercase-hex sha256 of those bytes.
+    pub sha256: String,
+}
+
+impl Section {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("count", Json::num(self.count as f64)),
+            ("rows", Json::num(self.rows as f64)),
+            ("cols", Json::num(self.cols as f64)),
+            ("bytes", Json::num(self.bytes as f64)),
+            ("sha256", Json::str(self.sha256.clone())),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Section> {
+        let field = |k: &str| {
+            j.get(k).as_usize().ok_or_else(|| anyhow!("section: missing or non-integer '{k}'"))
+        };
+        let name = j
+            .get("name")
+            .as_str()
+            .ok_or_else(|| anyhow!("section: missing 'name'"))?
+            .to_string();
+        let digest = j
+            .get("sha256")
+            .as_str()
+            .ok_or_else(|| anyhow!("section '{name}': missing 'sha256'"))?
+            .to_string();
+        ensure!(
+            sha256::is_hex_digest(&digest),
+            "section '{name}': 'sha256' is not a 64-char lowercase hex digest"
+        );
+        Ok(Section {
+            count: field("count")?,
+            rows: field("rows")?,
+            cols: field("cols")?,
+            bytes: field("bytes")?,
+            name,
+            sha256: digest,
+        })
+    }
+}
+
+/// Where an artifact came from: enough to replay the run that motivated
+/// it. The optimizer spec is kept as raw JSON so the artifact layer stays
+/// decoupled from the coordinator types.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Provenance {
+    /// Full `OptimizerSpec` JSON, when the compiler had one.
+    pub optimizer: Option<Json>,
+    /// The job seed the payload is associated with.
+    pub seed: u64,
+    /// Creating tool tag, e.g. `pogo 0.1.0`.
+    pub created_by: String,
+    /// Free-form operator note.
+    pub note: Option<String>,
+}
+
+impl Provenance {
+    pub fn new(seed: u64) -> Provenance {
+        Provenance {
+            optimizer: None,
+            seed,
+            created_by: format!("pogo {}", crate::VERSION),
+            note: None,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("seed", Json::str(self.seed.to_string())),
+            ("created_by", Json::str(self.created_by.clone())),
+        ];
+        if let Some(opt) = &self.optimizer {
+            fields.push(("optimizer", opt.clone()));
+        }
+        if let Some(note) = &self.note {
+            fields.push(("note", Json::str(note.clone())));
+        }
+        Json::obj(fields)
+    }
+
+    fn from_json(j: &Json) -> Result<Provenance> {
+        let seed = match j.get("seed") {
+            Json::Null => 0,
+            v => match (v.as_str(), v.as_f64()) {
+                (Some(s), _) => s
+                    .parse::<u64>()
+                    .map_err(|_| anyhow!("provenance: 'seed' is not a u64: '{s}'"))?,
+                (None, Some(x)) if x >= 0.0 && x.fract() == 0.0 => x as u64,
+                _ => return Err(anyhow!("provenance: 'seed' must be an integer or string")),
+            },
+        };
+        let optimizer = match j.get("optimizer") {
+            Json::Null => None,
+            v => Some(v.clone()),
+        };
+        let note = j.get("note").as_str().map(|s| s.to_string());
+        let created_by = j.get("created_by").as_str().unwrap_or("unknown").to_string();
+        Ok(Provenance { optimizer, seed, created_by, note })
+    }
+}
+
+/// The manifest: everything about an artifact except the payload bytes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Manifest {
+    /// Problem family the payload feeds ("procrustes" or "pca").
+    pub objective: String,
+    pub domain: JobDomain,
+    pub batch: usize,
+    pub p: usize,
+    pub n: usize,
+    /// Element dtype tag (`CkptDtype` vocabulary); the serve wire carries
+    /// f32 words, so sealed artifacts use "f32" (real) or "c64" (complex).
+    pub dtype: String,
+    pub sections: Vec<Section>,
+    pub provenance: Provenance,
+}
+
+/// Payload sections an objective requires, as `(name, rows, cols)` in
+/// storage order. The single source of truth shared by seal (build),
+/// parse (cross-check) and decode (slice).
+fn expected_sections(
+    objective: &str,
+    p: usize,
+    n: usize,
+) -> Result<Vec<(&'static str, usize, usize)>> {
+    match objective {
+        "procrustes" => Ok(vec![("a", p, p), ("b", p, n)]),
+        "pca" => Ok(vec![("c", n, n)]),
+        other => Err(anyhow!(
+            "unknown artifact objective '{other}' (supported: procrustes, pca)"
+        )),
+    }
+}
+
+/// f32 words per element for a wire dtype tag.
+fn dtype_width(dtype: &str) -> Result<usize> {
+    match dtype {
+        "f32" => Ok(1),
+        "c64" => Ok(2),
+        "f64" | "c128" => Err(anyhow!(
+            "artifact dtype '{dtype}' is not carried by the serve wire (f32/c64 only)"
+        )),
+        other => Err(anyhow!("unknown artifact dtype '{other}'")),
+    }
+}
+
+impl Manifest {
+    /// Total payload bytes the sections declare (overflow-checked).
+    pub fn payload_bytes(&self) -> Result<usize> {
+        let mut total = 0usize;
+        for s in &self.sections {
+            total = total
+                .checked_add(s.bytes)
+                .ok_or_else(|| anyhow!("manifest section sizes overflow"))?;
+        }
+        Ok(total)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("magic", Json::str(MAGIC)),
+            ("objective", Json::str(self.objective.clone())),
+            ("domain", Json::str(self.domain.name())),
+            ("batch", Json::num(self.batch as f64)),
+            ("p", Json::num(self.p as f64)),
+            ("n", Json::num(self.n as f64)),
+            ("dtype", Json::str(self.dtype.clone())),
+            ("sections", Json::arr(self.sections.iter().map(Section::to_json))),
+            ("provenance", self.provenance.to_json()),
+        ])
+    }
+
+    /// Parse and structurally validate a manifest: magic, known objective
+    /// and dtype, shapes >= 1, and sections that agree exactly with what
+    /// the objective requires at these shapes.
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        let magic = j.get("magic").as_str().unwrap_or("");
+        ensure!(magic == MAGIC, "not a {MAGIC} manifest (magic '{magic}')");
+        let objective = j
+            .get("objective")
+            .as_str()
+            .ok_or_else(|| anyhow!("manifest: missing 'objective'"))?
+            .to_string();
+        let domain_name = j
+            .get("domain")
+            .as_str()
+            .ok_or_else(|| anyhow!("manifest: missing 'domain'"))?;
+        let domain = JobDomain::parse(domain_name)
+            .ok_or_else(|| anyhow!("manifest: unknown domain '{domain_name}'"))?;
+        let dim = |k: &str| {
+            j.get(k).as_usize().ok_or_else(|| anyhow!("manifest: missing or non-integer '{k}'"))
+        };
+        let (batch, p, n) = (dim("batch")?, dim("p")?, dim("n")?);
+        ensure!(batch >= 1, "manifest: batch must be >= 1");
+        ensure!(p >= 1 && p <= n, "manifest: need 1 <= p <= n, got p={p}, n={n}");
+        let dtype = j
+            .get("dtype")
+            .as_str()
+            .ok_or_else(|| anyhow!("manifest: missing 'dtype'"))?
+            .to_string();
+        let width = dtype_width(&dtype)?;
+        let expect_width = match domain {
+            JobDomain::Real => 1,
+            JobDomain::Complex => 2,
+        };
+        ensure!(
+            width == expect_width,
+            "manifest: dtype '{dtype}' does not match domain '{}'",
+            domain.name()
+        );
+        let sections = j
+            .get("sections")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest: missing 'sections' array"))?
+            .iter()
+            .enumerate()
+            .map(|(i, s)| Section::from_json(s).with_context(|| format!("sections[{i}]")))
+            .collect::<Result<Vec<Section>>>()?;
+        // The sections must be exactly what the objective needs, in order.
+        let want = expected_sections(&objective, p, n)?;
+        ensure!(
+            sections.len() == want.len(),
+            "manifest: {} sections, but '{objective}' needs {}",
+            sections.len(),
+            want.len()
+        );
+        for (s, (name, rows, cols)) in sections.iter().zip(&want) {
+            ensure!(
+                s.name == *name && s.rows == *rows && s.cols == *cols,
+                "manifest section '{}' ({}x{}) does not match the expected '{name}' \
+                 ({rows}x{cols}) for objective '{objective}'",
+                s.name,
+                s.rows,
+                s.cols
+            );
+            ensure!(
+                s.count == batch,
+                "manifest section '{}': {} matrices for batch {batch}",
+                s.name,
+                s.count
+            );
+            let need = s
+                .count
+                .checked_mul(s.rows * s.cols * width * 4)
+                .ok_or_else(|| anyhow!("manifest section '{}': size overflow", s.name))?;
+            ensure!(
+                s.bytes == need,
+                "manifest section '{}': declares {} bytes, shapes need {need}",
+                s.name,
+                s.bytes
+            );
+        }
+        let provenance = Provenance::from_json(j.get("provenance")).context("provenance")?;
+        Ok(Manifest { objective, domain, batch, p, n, dtype, sections, provenance })
+    }
+}
+
+/// A sealed artifact: manifest + payload, with the serialized manifest
+/// bytes pinned so the content address never drifts from what is (or was)
+/// on the wire. Construct via [`Artifact::seal`] or [`Artifact::decode`].
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub manifest: Manifest,
+    pub payload: Vec<u8>,
+    /// The exact manifest JSON bytes as framed — the hash preimage.
+    manifest_bytes: Vec<u8>,
+}
+
+impl Artifact {
+    /// Seal an inline-style problem into an artifact. Validates the
+    /// payload (shapes, widths, finiteness) before packing — a sealed
+    /// artifact is admissible by construction.
+    pub fn seal(
+        problem: &InlineProblem,
+        domain: JobDomain,
+        batch: usize,
+        p: usize,
+        n: usize,
+        provenance: Provenance,
+    ) -> Result<Artifact> {
+        problem.validate(domain, batch, p, n).context("sealing artifact")?;
+        Self::seal_packed(problem, domain, batch, p, n, provenance)
+    }
+
+    /// Seal with structure checks only, skipping the O(payload) value
+    /// scan. Byte-identical to [`Artifact::seal`] for the same inputs —
+    /// same manifest, same hash — which is how the queue's inline-dedupe
+    /// path computes a content address before deciding whether the full
+    /// validation pass is needed. A caller inserting the result into a
+    /// store must run the full payload validation first.
+    pub fn seal_for_hash(
+        problem: &InlineProblem,
+        domain: JobDomain,
+        batch: usize,
+        p: usize,
+        n: usize,
+        provenance: Provenance,
+    ) -> Result<Artifact> {
+        problem.validate_structure(domain, batch, p, n).context("sealing artifact")?;
+        Self::seal_packed(problem, domain, batch, p, n, provenance)
+    }
+
+    fn seal_packed(
+        problem: &InlineProblem,
+        domain: JobDomain,
+        batch: usize,
+        p: usize,
+        n: usize,
+        provenance: Provenance,
+    ) -> Result<Artifact> {
+        let dtype = match domain {
+            JobDomain::Real => "f32",
+            JobDomain::Complex => "c64",
+        };
+        let groups: Vec<(&'static str, &[InlineMat])> = match problem {
+            InlineProblem::Procrustes { a, b } => vec![("a", a), ("b", b)],
+            InlineProblem::Pca { c } => vec![("c", c)],
+        };
+        let mut payload = Vec::new();
+        let mut sections = Vec::with_capacity(groups.len());
+        for (name, mats) in groups {
+            let start = payload.len();
+            for m in mats {
+                for w in &m.data {
+                    payload.extend_from_slice(&w.to_le_bytes());
+                }
+            }
+            let bytes = &payload[start..];
+            sections.push(Section {
+                name: name.to_string(),
+                count: mats.len(),
+                rows: mats[0].rows,
+                cols: mats[0].cols,
+                bytes: bytes.len(),
+                sha256: sha256::hex(bytes),
+            });
+        }
+        let manifest = Manifest {
+            objective: problem.objective().to_string(),
+            domain,
+            batch,
+            p,
+            n,
+            dtype: dtype.to_string(),
+            sections,
+            provenance,
+        };
+        let manifest_bytes = manifest.to_json().to_string().into_bytes();
+        ensure!(
+            manifest_bytes.len() <= MAX_MANIFEST_BYTES,
+            "manifest of {} bytes exceeds the {MAX_MANIFEST_BYTES}-byte cap",
+            manifest_bytes.len()
+        );
+        Ok(Artifact { manifest, payload, manifest_bytes })
+    }
+
+    /// Content address: lowercase-hex sha256 of the manifest bytes. The
+    /// manifest commits to every section checksum, so this pins the
+    /// payload transitively.
+    pub fn hash(&self) -> String {
+        sha256::hex(&self.manifest_bytes)
+    }
+
+    /// Serialize to the single-file wire/disk form.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(4 + self.manifest_bytes.len() + self.payload.len());
+        out.extend_from_slice(&(self.manifest_bytes.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.manifest_bytes);
+        out.extend_from_slice(&self.payload);
+        out
+    }
+
+    /// Total encoded size in bytes.
+    pub fn encoded_len(&self) -> usize {
+        4 + self.manifest_bytes.len() + self.payload.len()
+    }
+
+    /// Parse the wire/disk form. Checks framing and manifest structure
+    /// (every failure is a clear error, never a panic); section checksums
+    /// are verified separately by [`Artifact::verify`].
+    pub fn decode(bytes: &[u8]) -> Result<Artifact> {
+        ensure!(bytes.len() >= 4, "artifact truncated: {} bytes, no header length", bytes.len());
+        let len = u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]) as usize;
+        ensure!(
+            len <= MAX_MANIFEST_BYTES,
+            "artifact manifest length {len} exceeds the {MAX_MANIFEST_BYTES}-byte cap"
+        );
+        ensure!(
+            bytes.len() >= 4 + len,
+            "artifact truncated: manifest declares {len} bytes, only {} remain",
+            bytes.len() - 4
+        );
+        let manifest_bytes = bytes[4..4 + len].to_vec();
+        let text = std::str::from_utf8(&manifest_bytes).context("artifact manifest is not UTF-8")?;
+        let manifest = Manifest::from_json(&Json::parse(text).context("artifact manifest")?)?;
+        let payload = bytes[4 + len..].to_vec();
+        let want = manifest.payload_bytes()?;
+        ensure!(
+            payload.len() == want,
+            "artifact payload is {} bytes, but the manifest declares {want} \
+             (truncated or trailing garbage)",
+            payload.len()
+        );
+        Ok(Artifact { manifest, payload, manifest_bytes })
+    }
+
+    /// Integrity check: re-hash every payload section against its
+    /// manifest checksum. A flipped byte anywhere is a named, clear error.
+    pub fn verify(&self) -> Result<()> {
+        let mut offset = 0usize;
+        for s in &self.manifest.sections {
+            let chunk = &self.payload[offset..offset + s.bytes];
+            let got = sha256::hex(chunk);
+            ensure!(
+                got == s.sha256,
+                "artifact section '{}': checksum mismatch — manifest says {}, payload hashes \
+                 to {got} (payload corrupted)",
+                s.name,
+                s.sha256
+            );
+            offset += s.bytes;
+        }
+        Ok(())
+    }
+
+    /// Decode the payload back into the inline problem form — the exact
+    /// `InlineMat` word layout an inline job carries, so downstream job
+    /// construction is bit-identical between the two sources.
+    pub fn to_problem(&self) -> Result<InlineProblem> {
+        let width = dtype_width(&self.manifest.dtype)?;
+        let mut offset = 0usize;
+        let mut groups: Vec<Vec<InlineMat>> = Vec::with_capacity(self.manifest.sections.len());
+        for s in &self.manifest.sections {
+            let mat_words = s.rows * s.cols * width;
+            let mut mats = Vec::with_capacity(s.count);
+            for _ in 0..s.count {
+                let data: Vec<f32> = self.payload[offset..offset + mat_words * 4]
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                offset += mat_words * 4;
+                mats.push(InlineMat { rows: s.rows, cols: s.cols, data });
+            }
+            groups.push(mats);
+        }
+        match self.manifest.objective.as_str() {
+            "procrustes" => {
+                let b = groups.pop().unwrap_or_default();
+                let a = groups.pop().unwrap_or_default();
+                Ok(InlineProblem::Procrustes { a, b })
+            }
+            "pca" => Ok(InlineProblem::Pca { c: groups.pop().unwrap_or_default() }),
+            other => Err(anyhow!("unknown artifact objective '{other}'")),
+        }
+    }
+
+    /// Write the encoded artifact atomically (write-then-rename, like the
+    /// checkpoint layer).
+    pub fn write_file(&self, path: &std::path::Path) -> Result<()> {
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, self.encode())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming into {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Read and decode an artifact file (framing checks only; run
+    /// [`Artifact::verify`] for the full integrity pass).
+    pub fn read_file(path: &std::path::Path) -> Result<Artifact> {
+        let bytes =
+            std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        Artifact::decode(&bytes).with_context(|| format!("decoding {}", path.display()))
+    }
+
+    /// Human-facing summary JSON (what `pogo artifact inspect` and
+    /// `GET /v2/artifacts/<hash>` serve): manifest + derived sizes + hash.
+    pub fn describe(&self) -> Json {
+        Json::obj(vec![
+            ("hash", Json::str(self.hash())),
+            ("manifest", self.manifest.to_json()),
+            ("payload_bytes", Json::num(self.payload.len() as f64)),
+            ("encoded_bytes", Json::num(self.encoded_len() as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::rng::Rng;
+
+    fn sample_problem(seed: u64, batch: usize, p: usize, n: usize) -> InlineProblem {
+        let mut rng = Rng::seed_from_u64(seed);
+        let a = (0..batch)
+            .map(|_| InlineMat::from_mat(&Mat::<f32>::randn(p, p, &mut rng)))
+            .collect();
+        let b = (0..batch)
+            .map(|_| InlineMat::from_mat(&Mat::<f32>::randn(p, n, &mut rng)))
+            .collect();
+        InlineProblem::Procrustes { a, b }
+    }
+
+    fn sample_artifact() -> Artifact {
+        Artifact::seal(
+            &sample_problem(7, 2, 3, 5),
+            JobDomain::Real,
+            2,
+            3,
+            5,
+            Provenance::new(7),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn seal_encode_decode_roundtrip_bit_exact() {
+        let art = sample_artifact();
+        let encoded = art.encode();
+        assert_eq!(encoded.len(), art.encoded_len());
+        let back = Artifact::decode(&encoded).unwrap();
+        assert_eq!(back.manifest, art.manifest);
+        assert_eq!(back.payload, art.payload);
+        assert_eq!(back.hash(), art.hash());
+        back.verify().unwrap();
+        // The payload decodes to the exact inline problem it was sealed from.
+        assert_eq!(back.to_problem().unwrap(), sample_problem(7, 2, 3, 5));
+    }
+
+    #[test]
+    fn seal_for_hash_is_byte_identical_to_seal() {
+        let p = sample_problem(7, 2, 3, 5);
+        let full = Artifact::seal(&p, JobDomain::Real, 2, 3, 5, Provenance::new(7)).unwrap();
+        let fast =
+            Artifact::seal_for_hash(&p, JobDomain::Real, 2, 3, 5, Provenance::new(7)).unwrap();
+        assert_eq!(fast.hash(), full.hash());
+        assert_eq!(fast.encode(), full.encode());
+        // Structure lies still refuse to seal (only the value scan is
+        // skipped): batch 3 against a 2-matrix payload.
+        assert!(Artifact::seal_for_hash(&p, JobDomain::Real, 3, 3, 5, Provenance::new(7))
+            .is_err());
+    }
+
+    #[test]
+    fn content_address_is_deterministic_and_content_sensitive() {
+        let a1 = sample_artifact();
+        let a2 = sample_artifact();
+        assert!(crate::util::sha256::is_hex_digest(&a1.hash()));
+        // Same content twice -> same address.
+        assert_eq!(a1.hash(), a2.hash());
+        // Different data -> different address.
+        let other = Artifact::seal(
+            &sample_problem(8, 2, 3, 5),
+            JobDomain::Real,
+            2,
+            3,
+            5,
+            Provenance::new(8),
+        )
+        .unwrap();
+        assert_ne!(a1.hash(), other.hash());
+    }
+
+    #[test]
+    fn manifest_json_roundtrip() {
+        let mut art = sample_artifact();
+        art.manifest.provenance.note = Some("fig4 regression payload".to_string());
+        art.manifest.provenance.optimizer =
+            Some(Json::parse(r#"{"method": "pogo", "lr": 0.05}"#).unwrap());
+        let j = art.manifest.to_json();
+        let back = Manifest::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back, art.manifest);
+    }
+
+    #[test]
+    fn any_flipped_payload_byte_is_a_checksum_error() {
+        let art = sample_artifact();
+        let clean = art.encode();
+        let payload_start = clean.len() - art.payload.len();
+        // Flip a byte in each section's range plus the very last byte.
+        for &at in &[payload_start, payload_start + art.manifest.sections[0].bytes, clean.len() - 1]
+        {
+            let mut bad = clean.clone();
+            bad[at] ^= 0x01;
+            let decoded = Artifact::decode(&bad).unwrap(); // framing still valid
+            let err = decoded.verify().unwrap_err();
+            assert!(format!("{err:#}").contains("checksum mismatch"), "{err:#}");
+        }
+    }
+
+    #[test]
+    fn truncation_and_framing_lies_are_errors_not_panics() {
+        let art = sample_artifact();
+        let clean = art.encode();
+        // Truncations at every structural boundary and a few odd offsets.
+        for cut in [0, 1, 3, 4, 10, clean.len() - art.payload.len() + 1, clean.len() - 1] {
+            assert!(Artifact::decode(&clean[..cut]).is_err(), "cut at {cut}");
+        }
+        // Trailing garbage.
+        let mut long = clean.clone();
+        long.push(0);
+        assert!(Artifact::decode(&long).is_err());
+        // Header length pointing past the end.
+        let mut lying = clean.clone();
+        lying[0..4].copy_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(Artifact::decode(&lying).is_err());
+        // Corrupted manifest JSON.
+        let mut bad_json = clean.clone();
+        bad_json[5] = b'!';
+        assert!(Artifact::decode(&bad_json).is_err());
+    }
+
+    #[test]
+    fn manifest_structure_is_cross_checked() {
+        let art = sample_artifact();
+        let base = art.manifest.to_json();
+        let mutate = |key: &str, v: Json| {
+            let Json::Obj(mut m) = base.clone() else { panic!() };
+            m.insert(key.to_string(), v);
+            Json::Obj(m)
+        };
+        // Wrong magic, unknown objective/dtype, batch/shape lies all fail.
+        for bad in [
+            mutate("magic", Json::str("pogo-artifact-v9")),
+            mutate("objective", Json::str("quartic")),
+            mutate("dtype", Json::str("f64")),
+            mutate("dtype", Json::str("c64")), // real domain, complex dtype
+            mutate("batch", Json::num(3.0)),   // sections say count=2
+            mutate("p", Json::num(5.0)),       // breaks p <= n? p=5,n=5 ok; breaks section shape
+            mutate("sections", Json::arr(Vec::<Json>::new())),
+        ] {
+            assert!(Manifest::from_json(&bad).is_err(), "{bad:?}");
+        }
+        // The unmutated manifest still parses.
+        Manifest::from_json(&base).unwrap();
+    }
+
+    #[test]
+    fn complex_payloads_seal_and_decode() {
+        use crate::linalg::Complex;
+        let mut rng = Rng::seed_from_u64(11);
+        let c: Vec<InlineMat> = (0..2)
+            .map(|_| InlineMat::from_mat(&Mat::<Complex<f32>>::randn(4, 4, &mut rng)))
+            .collect();
+        let problem = InlineProblem::Pca { c };
+        let art =
+            Artifact::seal(&problem, JobDomain::Complex, 2, 2, 4, Provenance::new(0)).unwrap();
+        assert_eq!(art.manifest.dtype, "c64");
+        let back = Artifact::decode(&art.encode()).unwrap();
+        back.verify().unwrap();
+        assert_eq!(back.to_problem().unwrap(), problem);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir =
+            std::env::temp_dir().join(format!("pogo_artifact_file_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let art = sample_artifact();
+        let path = dir.join(format!("{}.{FILE_EXT}", art.hash()));
+        art.write_file(&path).unwrap();
+        let back = Artifact::read_file(&path).unwrap();
+        assert_eq!(back.hash(), art.hash());
+        back.verify().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,319 @@
+//! Content-addressed on-disk artifact store with LRU-ish eviction.
+//!
+//! One file per artifact, named `<hash>.pogoart` under the store
+//! directory, where `<hash>` is the manifest sha256 ([`super::Artifact`]'s
+//! content address). Because the name IS the content address, the store
+//! is self-deduplicating: inserting bytes that are already present is a
+//! recency bump, not a rewrite.
+//!
+//! The byte budget is enforced on insert: least-recently-used entries are
+//! evicted (their files deleted) until the newcomer fits. Recency is an
+//! in-memory counter — a restart re-indexes the directory and restarts
+//! recency from scratch, which is as "LRU-ish" as a crash-safe store gets
+//! without a journal. All mutation happens under one lock; files are
+//! written via write-then-rename so readers never observe a torn file.
+
+use super::{Artifact, FILE_EXT};
+use crate::util::sha256;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// What an insert did.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct InsertOutcome {
+    pub hash: String,
+    /// The content was already stored (no bytes written).
+    pub existed: bool,
+    /// How many entries were evicted to make room.
+    pub evicted: usize,
+}
+
+/// Point-in-time store contents (what `pogo report` and
+/// `GET /v2/artifacts` summarize).
+#[derive(Clone, Debug)]
+pub struct StoreSummary {
+    pub count: usize,
+    pub total_bytes: u64,
+    pub cap_bytes: u64,
+    /// `(hash, encoded bytes)` sorted by size, largest first.
+    pub entries: Vec<(String, u64)>,
+}
+
+#[derive(Debug)]
+struct EntryInfo {
+    bytes: u64,
+    last_used: u64,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    entries: BTreeMap<String, EntryInfo>,
+    total_bytes: u64,
+    /// Monotone recency clock; bumped on every touch.
+    tick: u64,
+}
+
+/// The store handle (share via `Arc`; all methods take `&self`).
+pub struct ArtifactStore {
+    dir: PathBuf,
+    cap_bytes: u64,
+    inner: Mutex<Inner>,
+}
+
+impl std::fmt::Debug for ArtifactStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ArtifactStore")
+            .field("dir", &self.dir)
+            .field("cap_bytes", &self.cap_bytes)
+            .finish()
+    }
+}
+
+impl ArtifactStore {
+    /// Open (and create) a store directory, indexing any `*.pogoart`
+    /// files already there. Files whose stem is not a well-formed content
+    /// address are ignored — they were not written by this store.
+    pub fn open(dir: &Path, cap_bytes: u64) -> Result<ArtifactStore> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating artifact store dir {}", dir.display()))?;
+        let mut inner = Inner::default();
+        for entry in std::fs::read_dir(dir)
+            .with_context(|| format!("indexing artifact store {}", dir.display()))?
+        {
+            let entry = entry?;
+            let path = entry.path();
+            let is_artifact = path.extension().and_then(|e| e.to_str()) == Some(FILE_EXT);
+            let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("");
+            if !is_artifact || !sha256::is_hex_digest(stem) {
+                continue;
+            }
+            let bytes = entry.metadata().map(|m| m.len()).unwrap_or(0);
+            inner.total_bytes += bytes;
+            inner.tick += 1;
+            inner
+                .entries
+                .insert(stem.to_string(), EntryInfo { bytes, last_used: inner.tick });
+        }
+        Ok(ArtifactStore { dir: dir.to_path_buf(), cap_bytes, inner: Mutex::new(inner) })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn path_of(&self, hash: &str) -> PathBuf {
+        self.dir.join(format!("{hash}.{FILE_EXT}"))
+    }
+
+    /// Insert a sealed artifact. Already-present content is a recency
+    /// bump (`existed: true`); otherwise the encoded file is written and
+    /// LRU entries are evicted until the byte budget holds. An artifact
+    /// larger than the whole budget is refused.
+    pub fn insert(&self, artifact: &Artifact) -> Result<InsertOutcome> {
+        let hash = artifact.hash();
+        let bytes = artifact.encoded_len() as u64;
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(info) = inner.entries.get_mut(&hash) {
+            info.last_used = tick;
+            return Ok(InsertOutcome { hash, existed: true, evicted: 0 });
+        }
+        if bytes > self.cap_bytes {
+            return Err(anyhow!(
+                "artifact {hash} is {bytes} bytes, larger than the whole {}-byte store budget",
+                self.cap_bytes
+            ));
+        }
+        let mut evicted = 0usize;
+        while inner.total_bytes + bytes > self.cap_bytes {
+            let victim = inner
+                .entries
+                .iter()
+                .min_by_key(|(_, info)| info.last_used)
+                .map(|(h, _)| h.clone());
+            let Some(victim) = victim else { break };
+            if let Some(info) = inner.entries.remove(&victim) {
+                inner.total_bytes = inner.total_bytes.saturating_sub(info.bytes);
+            }
+            std::fs::remove_file(self.path_of(&victim)).ok();
+            evicted += 1;
+        }
+        artifact.write_file(&self.path_of(&hash))?;
+        inner.total_bytes += bytes;
+        inner.entries.insert(hash.clone(), EntryInfo { bytes, last_used: tick });
+        Ok(InsertOutcome { hash, existed: false, evicted })
+    }
+
+    /// Is this content address stored? Bumps recency on hit, so a
+    /// dedupe/lookup hit also protects the entry from eviction.
+    pub fn touch(&self, hash: &str) -> bool {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.entries.get_mut(hash) {
+            Some(info) => {
+                info.last_used = tick;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Load an artifact by content address. `Ok(None)` when the hash is
+    /// not stored; a stored-but-unreadable file is dropped from the index
+    /// and surfaced as an error.
+    pub fn get(&self, hash: &str) -> Result<Option<Artifact>> {
+        if !self.touch(hash) {
+            return Ok(None);
+        }
+        match Artifact::read_file(&self.path_of(hash)) {
+            Ok(art) => Ok(Some(art)),
+            Err(e) => {
+                let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+                if let Some(info) = inner.entries.remove(hash) {
+                    inner.total_bytes = inner.total_bytes.saturating_sub(info.bytes);
+                }
+                Err(e.context(format!("stored artifact {hash} is unreadable; dropped")))
+            }
+        }
+    }
+
+    pub fn summary(&self) -> StoreSummary {
+        let inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let mut entries: Vec<(String, u64)> =
+            inner.entries.iter().map(|(h, info)| (h.clone(), info.bytes)).collect();
+        entries.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+        StoreSummary {
+            count: inner.entries.len(),
+            total_bytes: inner.total_bytes,
+            cap_bytes: self.cap_bytes,
+            entries,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Artifact, Provenance};
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::rng::Rng;
+    use crate::serve::job::JobDomain;
+    use crate::serve::problem::{InlineMat, InlineProblem};
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("pogo_artifact_store_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    fn art(seed: u64) -> Artifact {
+        let mut rng = Rng::seed_from_u64(seed);
+        let c = vec![InlineMat::from_mat(&Mat::<f32>::randn(6, 6, &mut rng))];
+        Artifact::seal(
+            &InlineProblem::Pca { c },
+            JobDomain::Real,
+            1,
+            2,
+            6,
+            Provenance::new(seed),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn insert_get_and_dedupe() {
+        let dir = tmpdir("basic");
+        let store = ArtifactStore::open(&dir, 1 << 20).unwrap();
+        let a = art(1);
+        let first = store.insert(&a).unwrap();
+        assert!(!first.existed);
+        assert_eq!(first.hash, a.hash());
+        // Same content again: recency bump, no rewrite, no eviction.
+        let again = store.insert(&a).unwrap();
+        assert!(again.existed);
+        assert_eq!(again.evicted, 0);
+        assert!(store.touch(&a.hash()));
+        assert!(!store.touch(&crate::util::sha256::hex(b"absent")));
+        let loaded = store.get(&a.hash()).unwrap().unwrap();
+        assert_eq!(loaded.hash(), a.hash());
+        assert_eq!(loaded.payload, a.payload);
+        assert!(store.get(&crate::util::sha256::hex(b"absent")).unwrap().is_none());
+        let s = store.summary();
+        assert_eq!(s.count, 1);
+        assert_eq!(s.total_bytes, a.encoded_len() as u64);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reopen_reindexes_directory() {
+        let dir = tmpdir("reopen");
+        let (h1, h2) = {
+            let store = ArtifactStore::open(&dir, 1 << 20).unwrap();
+            let (a1, a2) = (art(1), art(2));
+            store.insert(&a1).unwrap();
+            store.insert(&a2).unwrap();
+            (a1.hash(), a2.hash())
+        };
+        // Junk files are not indexed.
+        std::fs::write(dir.join("notes.txt"), b"junk").unwrap();
+        std::fs::write(dir.join("bad-stem.pogoart"), b"junk").unwrap();
+        let store = ArtifactStore::open(&dir, 1 << 20).unwrap();
+        let s = store.summary();
+        assert_eq!(s.count, 2);
+        assert!(store.touch(&h1) && store.touch(&h2));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lru_eviction_respects_recency() {
+        let dir = tmpdir("lru");
+        let (a1, a2, a3) = (art(1), art(2), art(3));
+        // Budget: room for two artifacts, not three.
+        let cap = (a1.encoded_len() + a2.encoded_len() + a3.encoded_len() / 2) as u64;
+        let store = ArtifactStore::open(&dir, cap).unwrap();
+        store.insert(&a1).unwrap();
+        store.insert(&a2).unwrap();
+        // Touch a1 so a2 is the least recently used.
+        assert!(store.touch(&a1.hash()));
+        let out = store.insert(&a3).unwrap();
+        assert_eq!(out.evicted, 1);
+        assert!(store.touch(&a1.hash()), "recently-used survivor");
+        assert!(!store.touch(&a2.hash()), "LRU entry evicted");
+        assert!(store.touch(&a3.hash()));
+        assert!(!store.dir().join(format!("{}.{FILE_EXT}", a2.hash())).exists());
+        let s = store.summary();
+        assert_eq!(s.count, 2);
+        assert!(s.total_bytes <= cap);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn oversized_artifact_refused_outright() {
+        let dir = tmpdir("oversize");
+        let store = ArtifactStore::open(&dir, 64).unwrap();
+        let err = store.insert(&art(1)).unwrap_err();
+        assert!(format!("{err:#}").contains("store budget"), "{err:#}");
+        assert_eq!(store.summary().count, 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupted_stored_file_is_dropped_with_an_error() {
+        let dir = tmpdir("corrupt");
+        let store = ArtifactStore::open(&dir, 1 << 20).unwrap();
+        let a = art(5);
+        store.insert(&a).unwrap();
+        // Truncate the stored file behind the store's back.
+        let path = dir.join(format!("{}.{FILE_EXT}", a.hash()));
+        std::fs::write(&path, &a.encode()[..10]).unwrap();
+        assert!(store.get(&a.hash()).is_err());
+        // The bad entry is out of the index now.
+        assert!(!store.touch(&a.hash()));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

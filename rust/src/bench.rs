@@ -300,6 +300,54 @@ pub fn write_serve_json(
     Ok(path)
 }
 
+/// One row of the artifact I/O benchmark (`BENCH_artifact.json`): how
+/// fast one artifact operation (`seal`, `encode`, `decode`, `verify`,
+/// `store`) moves one payload size.
+#[derive(Clone, Debug)]
+pub struct ArtifactIoRow {
+    /// Operation name.
+    pub op: String,
+    /// Payload size driven through the operation, MiB.
+    pub payload_mb: f64,
+    /// Mean wall time per operation, milliseconds.
+    pub ms: f64,
+    /// Payload throughput, MiB per second.
+    pub mb_per_s: f64,
+}
+
+/// Machine-readable artifact I/O report. CI's `serve-smoke` job gates on
+/// this file being well-formed (rows present, positive throughput).
+pub fn artifact_json(rows: &[ArtifactIoRow]) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    Json::obj(vec![
+        ("unit", Json::str("ms_and_mib_per_s")),
+        ("threads", Json::num(crate::util::pool::num_threads() as f64)),
+        (
+            "rows",
+            Json::arr(rows.iter().map(|r| {
+                Json::obj(vec![
+                    ("op", Json::str(r.op.clone())),
+                    ("payload_mb", Json::num(r.payload_mb)),
+                    ("ms", Json::num(r.ms)),
+                    ("mb_per_s", Json::num(r.mb_per_s)),
+                ])
+            })),
+        ),
+    ])
+}
+
+/// `BENCH_artifact.json` (artifact seal/verify/store throughput;
+/// redirect: `POGO_BENCH_JSON_ARTIFACT`). Emitted by
+/// `cargo bench --bench artifact_io`.
+pub fn write_artifact_json(
+    default_path: &std::path::Path,
+    rows: &[ArtifactIoRow],
+) -> std::io::Result<std::path::PathBuf> {
+    let path = resolve_bench_path("POGO_BENCH_JSON_ARTIFACT", default_path)?;
+    std::fs::write(&path, artifact_json(rows).to_string_pretty() + "\n")?;
+    Ok(path)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -348,6 +396,26 @@ mod tests {
         assert_eq!(arr[0].get("clients").as_usize(), Some(4));
         assert_eq!(arr[0].get("jobs_per_s").as_f64(), Some(12.5));
         assert_eq!(arr[0].get("stream_p95_ms").as_f64(), Some(80.0));
+        // Round-trips through the in-crate parser (what CI's jq reads).
+        let back = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back, j);
+    }
+
+    #[test]
+    fn artifact_json_shape() {
+        let rows = vec![ArtifactIoRow {
+            op: "seal".into(),
+            payload_mb: 8.0,
+            ms: 12.5,
+            mb_per_s: 640.0,
+        }];
+        let j = artifact_json(&rows);
+        assert_eq!(j.get("unit").as_str(), Some("ms_and_mib_per_s"));
+        let arr = j.get("rows").as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("op").as_str(), Some("seal"));
+        assert_eq!(arr[0].get("payload_mb").as_f64(), Some(8.0));
+        assert_eq!(arr[0].get("mb_per_s").as_f64(), Some(640.0));
         // Round-trips through the in-crate parser (what CI's jq reads).
         let back = crate::util::json::Json::parse(&j.to_string()).unwrap();
         assert_eq!(back, j);

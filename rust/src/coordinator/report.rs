@@ -4,9 +4,11 @@
 //! tables were produced from.
 //!
 //! Also picks up the machine-readable benchmark reports —
-//! `BENCH_scale.json`, `BENCH_born.json` and `BENCH_serve.json` — from
-//! the results directory or the repo root, so one `pogo report` shows
-//! training series and engine/daemon performance side by side.
+//! `BENCH_scale.json`, `BENCH_born.json`, `BENCH_serve.json` and
+//! `BENCH_artifact.json` — from the results directory or the repo root,
+//! so one `pogo report` shows training series and engine/daemon
+//! performance side by side, and (with `--artifact-dir`) summarizes a
+//! content-addressed artifact store.
 
 use crate::util::json::Json;
 use anyhow::{Context, Result};
@@ -162,7 +164,12 @@ pub fn bench_report_lines(dir: &Path) -> Vec<String> {
     let mut lines = Vec::new();
     let mut seen = std::collections::BTreeSet::new();
     for d in [dir.to_path_buf(), crate::repo_root()] {
-        for name in ["BENCH_scale.json", "BENCH_born.json", "BENCH_serve.json"] {
+        for name in [
+            "BENCH_scale.json",
+            "BENCH_born.json",
+            "BENCH_serve.json",
+            "BENCH_artifact.json",
+        ] {
             let path = d.join(name);
             if !path.is_file() || !seen.insert(path.clone()) {
                 continue;
@@ -197,6 +204,16 @@ fn summarize_bench(name: &str, path: &Path, j: &Json) -> Vec<String> {
             }
             out.push(line);
         }
+    } else if name == "BENCH_artifact.json" {
+        for row in j.get("rows").as_arr().unwrap_or(&[]) {
+            out.push(format!(
+                "  {:<8} {:8.2} MiB payload: {:8.2} ms   {:8.1} MiB/s",
+                row.get("op").as_str().unwrap_or("?"),
+                row.get("payload_mb").as_f64().unwrap_or(f64::NAN),
+                row.get("ms").as_f64().unwrap_or(f64::NAN),
+                row.get("mb_per_s").as_f64().unwrap_or(f64::NAN),
+            ));
+        }
     } else if let Some(map) = j.get("speedup_batched_vs_loop").as_obj() {
         for (b, s) in map {
             out.push(format!(
@@ -206,6 +223,31 @@ fn summarize_bench(name: &str, path: &Path, j: &Json) -> Vec<String> {
         }
     }
     out
+}
+
+/// Printable summary of a content-addressed artifact store directory
+/// (what `pogo report --artifact-dir` appends): count, total bytes, and
+/// the largest entries first.
+pub fn artifact_store_lines(dir: &Path) -> Vec<String> {
+    match crate::artifact::ArtifactStore::open(dir, u64::MAX) {
+        Ok(store) => {
+            let s = store.summary();
+            let mut lines = vec![format!(
+                "{}: {} artifact(s), {} bytes",
+                dir.display(),
+                s.count,
+                s.total_bytes
+            )];
+            for (hash, bytes) in s.entries.iter().take(8) {
+                lines.push(format!("  {hash}  {bytes:>12} bytes"));
+            }
+            if s.count > 8 {
+                lines.push(format!("  ... and {} more", s.count - 8));
+            }
+            lines
+        }
+        Err(e) => vec![format!("{}: unreadable ({e:#})", dir.display())],
+    }
 }
 
 /// Machine-readable report (one JSON object per series) for tooling.
@@ -288,14 +330,48 @@ mod tests {
                 "speedup_batched_vs_loop": {"4096": 2.5}}"#,
         )
         .unwrap();
+        std::fs::write(
+            d.join("BENCH_artifact.json"),
+            r#"{"unit": "ms_and_mib_per_s",
+                "rows": [{"op": "seal", "payload_mb": 8.0, "ms": 12.5,
+                          "mb_per_s": 640.0}]}"#,
+        )
+        .unwrap();
         let lines = bench_report_lines(&d);
         let text = lines.join("\n");
         assert!(text.contains("BENCH_serve.json"), "{text}");
         assert!(text.contains("jobs/s"), "{text}");
         assert!(text.contains("B=4096"), "{text}");
         assert!(text.contains("2.50x"), "{text}");
+        assert!(text.contains("BENCH_artifact.json"), "{text}");
+        assert!(text.contains("seal"), "{text}");
+        assert!(text.contains("MiB/s"), "{text}");
         // report() itself must not choke on a dir holding only bench JSON.
         report(&d, None).unwrap();
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn artifact_store_summary_lines() {
+        use crate::artifact::{Artifact, ArtifactStore, Provenance};
+        use crate::serve::job::JobDomain;
+        use crate::serve::problem::{InlineMat, InlineProblem};
+        let d = tmpdir("artstore");
+        let store = ArtifactStore::open(&d, u64::MAX).unwrap();
+        let mut rng = crate::rng::Rng::seed_from_u64(5);
+        let inline = InlineProblem::Pca {
+            c: vec![InlineMat::from_mat(&crate::linalg::Mat::<f32>::randn(4, 4, &mut rng))],
+        };
+        let art =
+            Artifact::seal(&inline, JobDomain::Real, 1, 2, 4, Provenance::new(5)).unwrap();
+        store.insert(&art).unwrap();
+        let lines = artifact_store_lines(&d);
+        let text = lines.join("\n");
+        assert!(text.contains("1 artifact(s)"), "{text}");
+        assert!(text.contains(&art.hash()), "{text}");
+        // A missing directory is a readable line, not a panic.
+        let missing = artifact_store_lines(&d.join("definitely_missing/nested"));
+        assert_eq!(missing.len(), 1, "{missing:?}");
         std::fs::remove_dir_all(&d).ok();
     }
 

@@ -62,6 +62,7 @@
 //! bounded queue schedules them across worker-owned sessions, and
 //! results/metrics stream back — optimization as a service.
 
+pub mod artifact;
 pub mod bench;
 pub mod config;
 pub mod coordinator;

@@ -6,7 +6,12 @@
 //!                       [--spec FILE.json] [--dump-spec]
 //! pogo serve [--addr HOST:PORT] [--workers N] [--queue-cap N]
 //!            [--state-dir DIR] [--tenant-quota N] [--cost-cap UNITS]
-//!            [--max-inline-bytes B]  # multi-tenant optimization job daemon
+//!            [--max-inline-bytes B] [--artifact-dir DIR]
+//!            [--artifact-cap-mb MB]  # multi-tenant optimization job daemon
+//! pogo compile --job FILE.json [--out FILE.pogoart | --artifact-dir DIR]
+//!                               # seal inline problem data into an artifact
+//! pogo artifact inspect <file.pogoart> [--json]
+//! pogo artifact verify <file.pogoart>
 //! pogo list                     # experiments + their paper figures
 //! pogo info [--artifacts DIR]   # artifact registry contents
 //! pogo report [--dir DIR]       # summarize results CSVs + BENCH_*.json
@@ -28,6 +33,8 @@ fn main() {
     let code = match cmd {
         "run" => cmd_run(),
         "serve" => cmd_serve(),
+        "compile" => cmd_compile(),
+        "artifact" => cmd_artifact(),
         "list" => cmd_list(),
         "info" => cmd_info(),
         "report" => cmd_report(),
@@ -55,11 +62,16 @@ fn print_help() {
          \x20 run <experiment>   run a paper experiment (see `pogo list`)\n\
          \x20 serve              run the optimization job daemon (v1: submit/poll;\n\
          \x20                    v2: inline problem uploads, SSE event streams,\n\
-         \x20                    per-tenant quotas + cost-aware admission)\n\
+         \x20                    per-tenant quotas + cost-aware admission,\n\
+         \x20                    --artifact-dir: content-addressed problem store)\n\
+         \x20 compile            seal a job's inline problem data into a\n\
+         \x20                    .pogoart artifact (--job FILE --out FILE)\n\
+         \x20 artifact           inspect | verify a sealed .pogoart artifact\n\
          \x20 list               list experiments\n\
          \x20 info               inspect the AOT artifact registry\n\
          \x20 report             summarize results/*.csv and BENCH_*.json\n\
-         \x20                    (scale, born, serve) from past runs\n\
+         \x20                    (scale, born, serve, artifact) from past runs;\n\
+         \x20                    --artifact-dir also summarizes an artifact store\n\
          \x20 version            print the version\n\n\
          Run `pogo run <experiment> --help` or `pogo serve --help` for flags."
     );
@@ -81,6 +93,11 @@ fn cmd_list() -> i32 {
     for (name, what) in figures {
         println!("{name:<16} {what}");
     }
+    println!(
+        "\nBeyond experiments: `pogo compile --job FILE [--out FILE | --artifact-dir DIR]`\n\
+         seals inline problem data into a content-addressed .pogoart artifact, and\n\
+         `pogo artifact inspect|verify <file>` examines one (see `pogo --help`)."
+    );
     0
 }
 
@@ -122,7 +139,13 @@ fn cmd_serve() -> i32 {
         .flag_opt("state-dir", "persist job state + checkpoints here (enables restart recovery)")
         .flag("tenant-quota", "0", "max active jobs per X-Api-Key tenant (0 = unlimited)")
         .flag("cost-cap", "0", "max outstanding B*p*n*steps cost units (0 = unlimited)")
-        .flag_opt("max-inline-bytes", "max inline problem payload bytes (default 8 MiB)");
+        .flag_opt("max-inline-bytes", "max inline problem payload bytes (default 8 MiB)")
+        .flag_opt(
+            "artifact-dir",
+            "content-addressed artifact store directory (enables POST /v2/artifacts, \
+             the 'artifact' problem source and inline dedupe)",
+        )
+        .flag("artifact-cap-mb", "512", "artifact store byte budget in MiB (LRU eviction)");
     let a = cli.parse_env_or_exit(1);
     let mut cfg = pogo::serve::ServeConfig {
         addr: a.get_or("addr", "127.0.0.1:7070"),
@@ -145,12 +168,29 @@ fn cmd_serve() -> i32 {
     if let Some(b) = a.get_usize("max-inline-bytes") {
         admission.max_inline_bytes = b;
     }
-    match pogo::serve::Server::start_with(cfg, admission) {
+    let artifacts = match a.get("artifact-dir") {
+        Some(dir) => {
+            let cap_mb = a.get_u64("artifact-cap-mb").unwrap_or(512).max(1);
+            match pogo::artifact::ArtifactStore::open(
+                std::path::Path::new(dir),
+                cap_mb.saturating_mul(1 << 20),
+            ) {
+                Ok(store) => Some(std::sync::Arc::new(store)),
+                Err(e) => {
+                    eprintln!("error opening --artifact-dir {dir}: {e:#}");
+                    return 1;
+                }
+            }
+        }
+        None => None,
+    };
+    match pogo::serve::Server::start_with_artifacts(cfg, admission, artifacts) {
         Ok(server) => {
             println!("pogo serve listening on http://{}", server.addr());
             println!(
                 "endpoints: POST /v1|v2/jobs · GET /v1|v2/jobs[/:id[/result]] · \
                  GET /v2/jobs/:id/events (SSE) · GET /v2/problems · \
+                 POST|GET /v2/artifacts[/:hash] · \
                  DELETE /v1|v2/jobs/:id · GET /healthz · GET /metrics"
             );
             // No signal handling without libc: a kill stops the daemon
@@ -166,10 +206,170 @@ fn cmd_serve() -> i32 {
     }
 }
 
+fn cmd_compile() -> i32 {
+    let cli = Cli::new(
+        "pogo compile",
+        "seal a job's inline problem data into a content-addressed .pogoart artifact",
+    )
+    .flag_opt("job", "job spec JSON file (the same body POST /v2/jobs takes, inline source)")
+    .flag_opt("out", "output file (default ./<hash>.pogoart)")
+    .flag_opt("artifact-dir", "insert into this artifact store directory instead of --out")
+    .flag_opt("note", "free-form provenance note (changes the content address)");
+    let a = cli.parse_env_or_exit(1);
+    let Some(job) = a.get("job") else {
+        eprintln!("error: --job FILE.json is required\n\n{}", cli.usage());
+        return 2;
+    };
+    match compile_artifact(
+        std::path::Path::new(job),
+        a.get("out").map(std::path::Path::new),
+        a.get("artifact-dir").map(std::path::Path::new),
+        a.get("note"),
+    ) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+/// Seal `job_path`'s inline payload. The provenance is constructed
+/// exactly like the daemon's inline-dedupe path (job seed + optimizer
+/// spec, no note), so compiling a job and submitting it inline land on
+/// the same content address.
+fn compile_artifact(
+    job_path: &std::path::Path,
+    out: Option<&std::path::Path>,
+    store_dir: Option<&std::path::Path>,
+    note: Option<&str>,
+) -> anyhow::Result<()> {
+    use anyhow::Context;
+    use pogo::artifact::{Artifact, ArtifactStore, Provenance, FILE_EXT};
+    let text = std::fs::read_to_string(job_path)
+        .with_context(|| format!("reading {}", job_path.display()))?;
+    let parsed = pogo::util::json::Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e}", job_path.display()))?;
+    let spec = pogo::serve::JobSpec::from_json(&parsed)?;
+    let pogo::serve::ProblemSource::Inline(inline) = &spec.source else {
+        anyhow::bail!(
+            "compile needs a job with an inline problem source, got '{}'",
+            spec.source.label()
+        );
+    };
+    let mut prov = Provenance::new(spec.seed);
+    prov.optimizer = Some(spec.optimizer.to_json());
+    prov.note = note.map(|s| s.to_string());
+    let art = Artifact::seal(inline, spec.domain, spec.batch, spec.p, spec.n, prov)?;
+    let hash = art.hash();
+    if let Some(dir) = store_dir {
+        let store = ArtifactStore::open(dir, u64::MAX)?;
+        let outcome = store.insert(&art)?;
+        println!(
+            "{hash}  {} bytes  {}",
+            art.encoded_len(),
+            if outcome.existed { "already stored" } else { "stored" }
+        );
+        println!("{}", store.dir().join(format!("{hash}.{FILE_EXT}")).display());
+    } else {
+        let default = std::path::PathBuf::from(format!("{hash}.{FILE_EXT}"));
+        let path = out.unwrap_or(&default);
+        art.write_file(path)?;
+        println!("{hash}  {} bytes  {}", art.encoded_len(), path.display());
+    }
+    Ok(())
+}
+
+fn cmd_artifact() -> i32 {
+    let sub = std::env::args().nth(2).unwrap_or_default();
+    match sub.as_str() {
+        "inspect" => {
+            let cli = Cli::new("pogo artifact inspect", "print a sealed artifact's manifest")
+                .switch("json", "emit the full describe JSON");
+            let a = cli.parse_env_or_exit(2);
+            let Some(file) = a.positional().first() else {
+                eprintln!("usage: pogo artifact inspect <file.pogoart> [--json]");
+                return 2;
+            };
+            match pogo::artifact::Artifact::read_file(std::path::Path::new(file)) {
+                Ok(art) => {
+                    if a.get_bool("json") {
+                        println!("{}", art.describe().to_string_pretty());
+                    } else {
+                        let m = &art.manifest;
+                        println!("hash:       {}", art.hash());
+                        println!(
+                            "objective:  {}  ({} domain, dtype {})",
+                            m.objective,
+                            m.domain.name(),
+                            m.dtype
+                        );
+                        println!("shapes:     batch={}  St({}, {})", m.batch, m.p, m.n);
+                        for s in &m.sections {
+                            println!(
+                                "section:    '{}'  {} x {}x{}  {} bytes  sha256 {}",
+                                s.name, s.count, s.rows, s.cols, s.bytes, s.sha256
+                            );
+                        }
+                        println!(
+                            "provenance: seed={}  created_by='{}'",
+                            m.provenance.seed, m.provenance.created_by
+                        );
+                    }
+                    0
+                }
+                Err(e) => {
+                    eprintln!("error: {e:#}");
+                    1
+                }
+            }
+        }
+        "verify" => {
+            let cli = Cli::new(
+                "pogo artifact verify",
+                "re-hash every payload section against its manifest checksum",
+            );
+            let a = cli.parse_env_or_exit(2);
+            let Some(file) = a.positional().first() else {
+                eprintln!("usage: pogo artifact verify <file.pogoart>");
+                return 2;
+            };
+            let checked = pogo::artifact::Artifact::read_file(std::path::Path::new(file))
+                .and_then(|art| {
+                    art.verify()?;
+                    Ok(art)
+                });
+            match checked {
+                Ok(art) => {
+                    println!(
+                        "OK {}  {} sections, {} payload bytes",
+                        art.hash(),
+                        art.manifest.sections.len(),
+                        art.payload.len()
+                    );
+                    0
+                }
+                Err(e) => {
+                    eprintln!("verify FAILED: {e:#}");
+                    1
+                }
+            }
+        }
+        other => {
+            eprintln!("usage: pogo artifact <inspect|verify> <file.pogoart> [--json]");
+            if !other.is_empty() && other != "--help" && other != "-h" {
+                eprintln!("unknown artifact subcommand '{other}'");
+            }
+            2
+        }
+    }
+}
+
 fn cmd_report() -> i32 {
     let cli = Cli::new("pogo report", "summarize experiment series CSVs")
         .flag_opt("dir", "results directory (default <repo>/results)")
         .flag_opt("filter", "substring filter on series names")
+        .flag_opt("artifact-dir", "also summarize this content-addressed artifact store")
         .switch("json", "emit machine-readable JSON");
     let a = cli.parse_env_or_exit(1);
     let dir = a
@@ -181,6 +381,14 @@ fn cmd_report() -> i32 {
     } else {
         pogo::coordinator::report::report(&dir, a.get("filter"))
     };
+    if let Some(ad) = a.get("artifact-dir") {
+        println!("\n== artifact store ==");
+        for line in
+            pogo::coordinator::report::artifact_store_lines(std::path::Path::new(ad))
+        {
+            println!("{line}");
+        }
+    }
     match result {
         Ok(()) => 0,
         Err(e) => {

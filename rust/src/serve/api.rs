@@ -19,6 +19,9 @@
 //! | GET    | `/v2/jobs/:id/result` | full loss series + final iterate        |
 //! | DELETE | `/v2/jobs/:id`        | cancel                                  |
 //! | GET    | `/v2/problems`        | the problem-source registry             |
+//! | POST   | `/v2/artifacts`       | upload a sealed artifact (binary body)  |
+//! | GET    | `/v2/artifacts`       | artifact-store summary                  |
+//! | GET    | `/v2/artifacts/:hash` | one stored artifact's manifest          |
 //! | GET    | `/healthz`            | liveness                                |
 //! | GET    | `/metrics`            | Prometheus text                         |
 //!
@@ -39,6 +42,7 @@ use super::problem;
 use super::queue::{
     Admission, BusPoll, JobQueue, ProgressBus, ProgressEvent, QueueConfig, SubmitError,
 };
+use crate::artifact::{Artifact, ArtifactStore};
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -128,6 +132,19 @@ impl Server {
     /// `--tenant-quota` / `--cost-cap` / `--max-inline-bytes` flags
     /// feed).
     pub fn start_with(cfg: ServeConfig, admission: Admission) -> Result<Server> {
+        Server::start_with_artifacts(cfg, admission, None)
+    }
+
+    /// [`Server::start_with`] plus an artifact store (what the
+    /// `--artifact-dir` / `--artifact-cap-mb` flags feed). With a store,
+    /// the `/v2/artifacts` routes come alive, jobs may name an
+    /// `artifact` problem source, and inline submissions are deduped
+    /// through the store's content addresses.
+    pub fn start_with_artifacts(
+        cfg: ServeConfig,
+        admission: Admission,
+        artifacts: Option<Arc<ArtifactStore>>,
+    ) -> Result<Server> {
         let metrics = Arc::new(ServeMetrics::new());
         let queue = JobQueue::start(
             QueueConfig {
@@ -135,6 +152,7 @@ impl Server {
                 capacity: cfg.capacity.max(1),
                 state_dir: cfg.state_dir.clone(),
                 admission,
+                artifacts,
             },
             metrics.clone(),
         )?;
@@ -322,6 +340,12 @@ fn route(req: &Request, queue: &JobQueue, metrics: &ServeMetrics) -> Routed {
             None => plain(Response::error(400, format!("bad job id '{id}'"))),
         },
         ("GET", ["v2", "problems"]) => plain(Response::json(200, &problem::registry_json())),
+        ("POST", ["v2", "artifacts"]) => plain(upload_artifact(req, queue, metrics)),
+        ("GET", ["v2", "artifacts"]) => plain(artifact_summary(queue)),
+        ("GET", ["v2", "artifacts", hash]) => plain(artifact_describe(hash, queue)),
+        ("PUT" | "DELETE", ["v2", "artifacts", ..]) => {
+            plain(Response::error(405, "artifacts are content-addressed and immutable"))
+        }
         ("DELETE", ["v1" | "v2", "jobs", id]) => plain(match parse_id(id) {
             Some(id) => match queue.cancel(id) {
                 Some(state) => Response::json(
@@ -402,8 +426,103 @@ fn submit(req: &Request, queue: &JobQueue, v2: bool) -> Response {
                 | SubmitError::Cost { retry_after_s, .. } => Response::error(429, msg)
                     .with_header("Retry-After", retry_after_s.to_string()),
                 SubmitError::InlineTooLarge { .. } => Response::error(413, msg),
+                SubmitError::ArtifactMissing { .. } => Response::error(404, msg),
             }
         }
+    }
+}
+
+/// How a daemon without `--artifact-dir` answers every artifact route.
+const NO_STORE: &str = "this daemon has no artifact store (start it with --artifact-dir)";
+
+/// `POST /v2/artifacts` — upload one sealed artifact (binary body in the
+/// [`Artifact::encode`] framing). The payload is checksummed and fully
+/// validated here, once; job admissions against the stored hash trust it
+/// from then on. `201` on first store, `409` (with the same body shape)
+/// when the hash was already present.
+fn upload_artifact(req: &Request, queue: &JobQueue, metrics: &ServeMetrics) -> Response {
+    let Some(store) = queue.artifacts() else {
+        return Response::error(404, NO_STORE);
+    };
+    let art = match Artifact::decode(&req.body) {
+        Ok(a) => a,
+        Err(e) => return Response::error(400, format!("{e:#}")),
+    };
+    if let Err(e) = art.verify() {
+        return Response::error(400, format!("{e:#}"));
+    }
+    let problem = match art.to_problem() {
+        Ok(p) => p,
+        Err(e) => return Response::error(400, format!("{e:#}")),
+    };
+    let m = &art.manifest;
+    if let Err(e) = problem.validate(m.domain, m.batch, m.p, m.n) {
+        return Response::error(400, format!("{e:#}"));
+    }
+    if art.encoded_len() as u64 > store.summary().cap_bytes {
+        return Response::error(
+            413,
+            format!(
+                "artifact of {} bytes exceeds the store budget of {} bytes",
+                art.encoded_len(),
+                store.summary().cap_bytes
+            ),
+        );
+    }
+    match store.insert(&art) {
+        Ok(outcome) => {
+            metrics.artifact_evictions.fetch_add(outcome.evicted as u64, Ordering::Relaxed);
+            let status = if outcome.existed { 409 } else { 201 };
+            Response::json(
+                status,
+                &Json::obj(vec![
+                    ("hash", Json::str(outcome.hash)),
+                    ("bytes", Json::num(art.encoded_len() as f64)),
+                    ("existed", Json::Bool(outcome.existed)),
+                ]),
+            )
+        }
+        Err(e) => Response::error(500, format!("{e:#}")),
+    }
+}
+
+/// `GET /v2/artifacts` — store summary (count, bytes, per-hash sizes).
+fn artifact_summary(queue: &JobQueue) -> Response {
+    let Some(store) = queue.artifacts() else {
+        return Response::error(404, NO_STORE);
+    };
+    let s = store.summary();
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("count", Json::num(s.count as f64)),
+            ("total_bytes", Json::num(s.total_bytes as f64)),
+            ("cap_bytes", Json::num(s.cap_bytes as f64)),
+            (
+                "artifacts",
+                Json::arr(s.entries.iter().map(|(hash, bytes)| {
+                    Json::obj(vec![
+                        ("hash", Json::str(hash.clone())),
+                        ("bytes", Json::num(*bytes as f64)),
+                    ])
+                })),
+            ),
+        ]),
+    )
+}
+
+/// `GET /v2/artifacts/:hash` — one stored artifact's manifest + sizes.
+fn artifact_describe(hash: &str, queue: &JobQueue) -> Response {
+    let Some(store) = queue.artifacts() else {
+        return Response::error(404, NO_STORE);
+    };
+    if !crate::util::sha256::is_hex_digest(hash) {
+        return Response::error(400, format!("bad artifact hash '{hash:.80}'"));
+    }
+    match store.get(hash) {
+        Ok(Some(art)) => Response::json(200, &art.describe()),
+        Ok(None) => Response::error(404, format!("artifact {hash} is not in the store")),
+        Err(e) => Response::error(500, format!("{e:#}")),
     }
 }
 
@@ -631,8 +750,120 @@ mod tests {
             .iter()
             .map(|b| b.get("source").as_str().unwrap().to_string())
             .collect();
-        assert_eq!(names, vec!["builtin".to_string(), "inline".to_string()]);
+        assert_eq!(
+            names,
+            vec!["builtin".to_string(), "inline".to_string(), "artifact".to_string()]
+        );
+        // Artifact routes on a daemon without a store: a clear 404.
+        let (code, body) = http::request(client.addr(), "GET", "/v2/artifacts", None).unwrap();
+        assert_eq!(code, 404);
+        assert!(body.contains("--artifact-dir"), "{body}");
         server.shutdown();
+    }
+
+    #[test]
+    fn artifact_upload_and_admission_lifecycle() {
+        use crate::artifact::{Artifact, ArtifactStore, Provenance};
+        use crate::serve::problem::{ArtifactRef, InlineMat, InlineProblem, ProblemSource};
+
+        let dir =
+            std::env::temp_dir().join(format!("pogo_api_artifacts_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let store = Arc::new(ArtifactStore::open(&dir, 1 << 20).unwrap());
+        let server = Server::start_with_artifacts(
+            ServeConfig {
+                addr: "127.0.0.1:0".to_string(),
+                workers: 1,
+                capacity: 8,
+                state_dir: None,
+            },
+            Admission::default(),
+            Some(store),
+        )
+        .unwrap();
+        let addr = server.addr().to_string();
+        let client = ServeClient::new(addr.clone());
+
+        // Seal exactly what `pogo compile` would for this job.
+        let mut rng = crate::rng::Rng::seed_from_u64(41);
+        let mats: Vec<InlineMat> = (0..2)
+            .map(|_| InlineMat::from_mat(&crate::linalg::Mat::<f32>::randn(4, 4, &mut rng)))
+            .collect();
+        let inline = InlineProblem::Pca { c: mats };
+        let mut spec = JobSpec::new(ProblemKind::Pca, 2, 2, 4);
+        spec.steps = 10;
+        let mut prov = Provenance::new(spec.seed);
+        prov.optimizer = Some(spec.optimizer.to_json());
+        let art = Artifact::seal(&inline, spec.domain, 2, 2, 4, prov).unwrap();
+        let hash = art.hash();
+
+        // First upload: 201 Created. Identical re-upload: 409, same hash.
+        let (code, _, body) =
+            http::request_bytes(&addr, "POST", "/v2/artifacts", &art.encode(), &[]).unwrap();
+        assert_eq!(code, 201, "{body}");
+        assert_eq!(Json::parse(&body).unwrap().get("hash").as_str(), Some(hash.as_str()));
+        let (code, _, body) =
+            http::request_bytes(&addr, "POST", "/v2/artifacts", &art.encode(), &[]).unwrap();
+        assert_eq!(code, 409, "{body}");
+        assert_eq!(Json::parse(&body).unwrap().get("existed").as_bool(), Some(true));
+
+        // Summary, describe, and the malformed/immutable edges.
+        let (code, body) = http::request(&addr, "GET", "/v2/artifacts", None).unwrap();
+        assert_eq!(code, 200);
+        let summary = Json::parse(&body).unwrap();
+        assert_eq!(summary.get("count").as_usize(), Some(1));
+        let (code, body) =
+            http::request(&addr, "GET", &format!("/v2/artifacts/{hash}"), None).unwrap();
+        assert_eq!(code, 200, "{body}");
+        let desc = Json::parse(&body).unwrap();
+        assert_eq!(desc.get("manifest").get("objective").as_str(), Some("pca"));
+        let (code, _) = http::request(&addr, "GET", "/v2/artifacts/zzz", None).unwrap();
+        assert_eq!(code, 400);
+        let (code, _) =
+            http::request(&addr, "DELETE", &format!("/v2/artifacts/{hash}"), None).unwrap();
+        assert_eq!(code, 405);
+
+        // A job sourced from the stored artifact completes, and matches
+        // the same job submitted inline bit-for-bit.
+        spec.source = ProblemSource::Artifact(ArtifactRef::new(&hash).unwrap());
+        let id = client.submit(&spec).unwrap();
+        client.wait_terminal(id, Duration::from_secs(30)).unwrap();
+        let ra = client.result(id).unwrap();
+        assert_eq!(ra.get("state").as_str(), Some("done"), "{}", ra.to_string());
+        let mut inline_spec = spec.clone();
+        inline_spec.source = ProblemSource::Inline(inline);
+        let id2 = client.submit(&inline_spec).unwrap();
+        client.wait_terminal(id2, Duration::from_secs(30)).unwrap();
+        let ri = client.result(id2).unwrap();
+        assert_eq!(
+            ra.get("final_loss").as_f64().unwrap().to_bits(),
+            ri.get("final_loss").as_f64().unwrap().to_bits(),
+            "artifact-sourced and inline runs must be bit-identical"
+        );
+
+        // Unknown hashes 404 at submission time.
+        let mut missing = spec.clone();
+        missing.source = ProblemSource::Artifact(
+            ArtifactRef::new(&crate::util::sha256::hex(b"never uploaded")).unwrap(),
+        );
+        let (code, _, body) = http::request_full(
+            &addr,
+            "POST",
+            "/v2/jobs",
+            Some(&missing.to_json().to_string()),
+            &[],
+        )
+        .unwrap();
+        assert_eq!(code, 404, "{body}");
+        assert!(body.contains("not in the store"), "{body}");
+
+        // Undecodable uploads are a clean 400.
+        let (code, _, body) =
+            http::request_bytes(&addr, "POST", "/v2/artifacts", b"garbage", &[]).unwrap();
+        assert_eq!(code, 400, "{body}");
+
+        server.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -83,6 +83,27 @@ impl ServeClient {
         self.submit_to("/v2/jobs", spec)
     }
 
+    /// Upload an encoded artifact (`POST /v2/artifacts`). Returns the
+    /// upload receipt `{hash, bytes, existed}` — a `409` for an already
+    /// stored hash is a success here (the receipt says `existed: true`),
+    /// since content-addressed re-uploads are idempotent.
+    pub fn upload_artifact(&self, encoded: &[u8]) -> Result<Json> {
+        let (code, _, text) =
+            http::request_bytes(&self.addr, "POST", "/v2/artifacts", encoded, &self.headers())?;
+        let parsed = Json::parse(&text)
+            .map_err(|e| anyhow!("POST /v2/artifacts: HTTP {code} with non-JSON body: {e}"))?;
+        if !(200..300).contains(&code) && code != 409 {
+            let msg = parsed.get("error").as_str().unwrap_or("unknown error").to_string();
+            return Err(anyhow!("POST /v2/artifacts: HTTP {code}: {msg}"));
+        }
+        Ok(parsed)
+    }
+
+    /// Artifact-store summary (`GET /v2/artifacts`).
+    pub fn artifact_summary(&self) -> Result<Json> {
+        self.call("GET", "/v2/artifacts", None)
+    }
+
     /// Status + metrics tail of one job (v1).
     pub fn status(&self, id: JobId) -> Result<Json> {
         self.call("GET", &format!("/v1/jobs/{id}"), None)

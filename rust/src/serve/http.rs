@@ -138,6 +138,7 @@ impl Response {
 pub fn status_reason(status: u16) -> &'static str {
     match status {
         200 => "OK",
+        201 => "Created",
         202 => "Accepted",
         400 => "Bad Request",
         404 => "Not Found",
@@ -427,7 +428,44 @@ pub fn request_full(
     stream.write_all(head.as_bytes())?;
     stream.write_all(body.as_bytes())?;
     stream.flush()?;
+    read_client_response(stream, addr)
+}
 
+/// [`request_full`] with a binary body sent as `application/octet-stream`
+/// — what `POST /v2/artifacts` uploads use. Returns (status, response
+/// headers, body text).
+pub fn request_bytes(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &[u8],
+    headers: &[(&str, &str)],
+) -> Result<(u16, Vec<(String, String)>, String)> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    stream.set_read_timeout(Some(IO_TIMEOUT)).ok();
+    stream.set_write_timeout(Some(IO_TIMEOUT)).ok();
+    let mut head = client_head(method, path, addr);
+    head.push_str(&format!(
+        "Content-Type: application/octet-stream\r\nContent-Length: {}\r\n",
+        body.len()
+    ));
+    for (name, value) in headers {
+        head.push_str(&format!("{name}: {value}\r\n"));
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()?;
+    read_client_response(stream, addr)
+}
+
+/// Drain and parse one buffered `Connection: close` response — the
+/// shared tail of [`request_full`] and [`request_bytes`].
+fn read_client_response(
+    mut stream: TcpStream,
+    addr: &str,
+) -> Result<(u16, Vec<(String, String)>, String)> {
     let mut raw = Vec::new();
     stream.read_to_end(&mut raw).context("reading response")?;
     let text = String::from_utf8_lossy(&raw);
@@ -701,6 +739,52 @@ mod tests {
     }
 
     #[test]
+    fn chunked_body_exactly_at_the_cap_is_accepted() {
+        let addr = spawn_echo();
+        // Two chunks summing to exactly MAX_BODY: accepted and fully
+        // reassembled (this is the artifact-upload boundary case).
+        let half = MAX_BODY / 2;
+        let mut req = Vec::with_capacity(MAX_BODY + 256);
+        req.extend_from_slice(
+            b"POST /v2/artifacts HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n",
+        );
+        for _ in 0..2 {
+            req.extend_from_slice(format!("{half:x}\r\n").as_bytes());
+            req.resize(req.len() + half, b'a');
+            req.extend_from_slice(b"\r\n");
+        }
+        req.extend_from_slice(b"0\r\n\r\n");
+        let resp = raw_roundtrip(&addr, &req);
+        assert_eq!(status_of(&resp), 200, "{resp:.200}");
+        assert!(resp.contains(&format!("\"body_len\": {MAX_BODY}")), "{resp:.200}");
+
+        // One byte over, split across chunks so no single chunk exceeds
+        // the cap on its own: still 413.
+        let mut req = Vec::with_capacity(MAX_BODY + 256);
+        req.extend_from_slice(
+            b"POST /v2/artifacts HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n",
+        );
+        req.extend_from_slice(format!("{MAX_BODY:x}\r\n").as_bytes());
+        req.resize(req.len() + MAX_BODY, b'a');
+        // End at the offending size line: the server rejects right here,
+        // and a request with no unread tail closes cleanly.
+        req.extend_from_slice(b"\r\n1\r\n");
+        let resp = raw_roundtrip(&addr, &req);
+        assert_eq!(status_of(&resp), 413, "{resp:.200}");
+    }
+
+    #[test]
+    fn binary_client_roundtrip() {
+        let addr = spawn_echo().to_string();
+        let payload = vec![0u8; 1024]; // NULs would mangle a string body
+        let (code, _, body) =
+            request_bytes(&addr, "POST", "/v2/artifacts", &payload, &[]).unwrap();
+        assert_eq!(code, 200);
+        let j = crate::util::json::Json::parse(&body).unwrap();
+        assert_eq!(j.get("body_len").as_usize(), Some(1024));
+    }
+
+    #[test]
     fn smuggling_ambiguity_rejected() {
         let addr = spawn_echo();
         let resp = raw_roundtrip(
@@ -776,7 +860,7 @@ mod tests {
 
     #[test]
     fn status_reasons_cover_api_codes() {
-        for code in [200, 202, 400, 404, 405, 409, 413, 429, 431, 500, 503] {
+        for code in [200, 201, 202, 400, 404, 405, 409, 413, 429, 431, 500, 503] {
             assert_ne!(status_reason(code), "Unknown", "{code}");
         }
     }

@@ -30,7 +30,9 @@ use anyhow::{anyhow, ensure, Context, Result};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 
-pub use super::problem::{InlineMat, InlineProblem, ProblemKind, ProblemSource, WireElem};
+pub use super::problem::{
+    ArtifactRef, InlineMat, InlineProblem, ProblemKind, ProblemSource, WireElem,
+};
 
 /// Which manifold a job optimizes over.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -107,6 +109,16 @@ impl JobSpec {
     /// surface later, at session build, as a `failed` job — never a
     /// panic.
     pub fn validate(&self) -> Result<()> {
+        self.validate_scalars()?;
+        self.source.validate(self.domain, self.batch, self.p, self.n)
+    }
+
+    /// The cheap, source-independent half of [`JobSpec::validate`]: shape
+    /// sanity and the scalar-count ceiling, without the O(payload) pass
+    /// over inline matrices. The queue runs this unconditionally and
+    /// skips the payload pass when the payload's content hash is already
+    /// in the artifact store (it was validated when it entered).
+    pub fn validate_scalars(&self) -> Result<()> {
         ensure!(self.batch >= 1, "job: batch must be >= 1");
         ensure!(self.p >= 1 && self.p <= self.n, "job: need 1 <= p <= n, got ({}, {})", self.p, self.n);
         ensure!(self.steps >= 1, "job: steps must be >= 1");
@@ -118,7 +130,7 @@ impl JobSpec {
             self.p,
             self.n
         );
-        self.source.validate(self.domain, self.batch, self.p, self.n)
+        Ok(())
     }
 
     /// Admission cost units, `B·p·n·steps` — the work model the daemon's
@@ -584,7 +596,10 @@ fn drive<E: Field>(
 /// Problem data, built once per run. Builtin sources generate from the
 /// job seed (after the parameter init draws, in a fixed order — part of
 /// the determinism contract); inline sources decode the spec's payload
-/// (already shape/width-validated at admission).
+/// (already shape/width-validated at admission); artifact sources decode
+/// the payload the queue resolved from the store — through the **same**
+/// `InlineMat` path as inline data, which is what makes an artifact run
+/// bit-identical to the equivalent inline run.
 enum ProblemData<E: Field> {
     Procrustes { a: Vec<Mat<E>>, b: Vec<Mat<E>> },
     Pca { c: Vec<Mat<E>> },
@@ -618,17 +633,32 @@ impl<E: Field + WireElem> ProblemData<E> {
                 ProblemKind::Quartic => ProblemData::Quartic,
                 ProblemKind::Replay => ProblemData::Replay,
             },
-            ProblemSource::Inline(inline) => {
-                let decode = |mats: &[InlineMat]| -> Result<Vec<Mat<E>>> {
-                    mats.iter().map(InlineMat::to_mat::<E>).collect()
-                };
-                match inline {
-                    InlineProblem::Procrustes { a, b } => {
-                        ProblemData::Procrustes { a: decode(a)?, b: decode(b)? }
-                    }
-                    InlineProblem::Pca { c } => ProblemData::Pca { c: decode(c)? },
+            ProblemSource::Inline(inline) => Self::from_inline(inline)?,
+            ProblemSource::Artifact(art) => match art.resolved() {
+                Some(inline) => Self::from_inline(inline)?,
+                None => {
+                    return Err(anyhow!(
+                        "artifact {} is not resolved — artifact jobs must be admitted through \
+                         a daemon running with --artifact-dir",
+                        art.short()
+                    ))
                 }
+            },
+        })
+    }
+
+    /// Decode an inline-form payload into typed matrices. The single
+    /// decode path shared by the `inline` source and store-resolved
+    /// artifact payloads, so the two sources cannot diverge bit-wise.
+    fn from_inline(inline: &InlineProblem) -> Result<ProblemData<E>> {
+        let decode = |mats: &[InlineMat]| -> Result<Vec<Mat<E>>> {
+            mats.iter().map(InlineMat::to_mat::<E>).collect()
+        };
+        Ok(match inline {
+            InlineProblem::Procrustes { a, b } => {
+                ProblemData::Procrustes { a: decode(a)?, b: decode(b)? }
             }
+            InlineProblem::Pca { c } => ProblemData::Pca { c: decode(c)? },
         })
     }
 }
@@ -782,6 +812,51 @@ mod tests {
         let other = inline_spec(405);
         let JobOutcome::Done(r3) = run_job(&other, &RunCtl::default()).unwrap() else { panic!() };
         assert_ne!(r1.final_loss.to_bits(), r3.final_loss.to_bits());
+    }
+
+    #[test]
+    fn resolved_artifact_runs_bit_identical_to_inline() {
+        // The same payload submitted inline and through a (resolved)
+        // artifact ref produces the exact same trajectory — the
+        // acceptance-criterion property, pinned at the run_job layer.
+        let inline = inline_spec(2025);
+        let ProblemSource::Inline(payload) = inline.source.clone() else { panic!() };
+        let art = crate::artifact::Artifact::seal(
+            &payload,
+            inline.domain,
+            inline.batch,
+            inline.p,
+            inline.n,
+            crate::artifact::Provenance::new(inline.seed),
+        )
+        .unwrap();
+        // Round-trip through the sealed byte form, like a real upload.
+        let decoded = crate::artifact::Artifact::decode(&art.encode()).unwrap();
+        decoded.verify().unwrap();
+        let mut aref = ArtifactRef::new(&decoded.hash()).unwrap();
+        aref.resolve(decoded.to_problem().unwrap());
+        let mut via_artifact = inline.clone();
+        via_artifact.source = ProblemSource::Artifact(aref);
+
+        let JobOutcome::Done(ri) = run_job(&inline, &RunCtl::default()).unwrap() else {
+            panic!()
+        };
+        let (JobOutcome::Done(ra), iter_a) =
+            run_job_with(&via_artifact, &RunCtl::default(), None).unwrap()
+        else {
+            panic!()
+        };
+        let (_, iter_i) = run_job_with(&inline, &RunCtl::default(), None).unwrap();
+        assert_eq!(ri.final_loss.to_bits(), ra.final_loss.to_bits());
+        assert_eq!(ri.ortho_error.to_bits(), ra.ortho_error.to_bits());
+        assert_eq!(iter_i, iter_a, "final iterates are bit-identical");
+
+        // An unresolved ref is a clear error, not a panic.
+        let mut unresolved = inline.clone();
+        unresolved.source =
+            ProblemSource::Artifact(ArtifactRef::new(&decoded.hash()).unwrap());
+        let err = run_job(&unresolved, &RunCtl::default()).unwrap_err();
+        assert!(format!("{err:#}").contains("not resolved"), "{err:#}");
     }
 
     #[test]

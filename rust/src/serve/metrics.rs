@@ -42,12 +42,21 @@ pub struct ServeMetrics {
     pub rejected_quota: AtomicU64,
     pub rejected_cost: AtomicU64,
     pub rejected_inline: AtomicU64,
+    pub rejected_artifact: AtomicU64,
     /// Optimizer steps applied across all jobs.
     pub steps: AtomicU64,
     /// HTTP requests handled (any endpoint, any status).
     pub requests: AtomicU64,
     /// Progress events written to SSE subscribers.
     pub events_streamed: AtomicU64,
+    /// Artifact-store cache hits (job admissions and inline dedupe served
+    /// from the store without revalidating the payload).
+    pub artifact_hits: AtomicU64,
+    /// Artifact-store cache misses (hash not stored, or inline payload
+    /// seen for the first time).
+    pub artifact_misses: AtomicU64,
+    /// Artifact-store entries evicted to stay under the byte budget.
+    pub artifact_evictions: AtomicU64,
     /// Live SSE subscriber connections (gauge; inc on attach, dec on
     /// detach — signed so a spurious double-decrement shows up as a
     /// negative reading instead of a 2^64 absurdity).
@@ -73,9 +82,13 @@ impl ServeMetrics {
             rejected_quota: AtomicU64::new(0),
             rejected_cost: AtomicU64::new(0),
             rejected_inline: AtomicU64::new(0),
+            rejected_artifact: AtomicU64::new(0),
             steps: AtomicU64::new(0),
             requests: AtomicU64::new(0),
             events_streamed: AtomicU64::new(0),
+            artifact_hits: AtomicU64::new(0),
+            artifact_misses: AtomicU64::new(0),
+            artifact_evictions: AtomicU64::new(0),
             sse_clients: AtomicI64::new(0),
         }
     }
@@ -144,6 +157,7 @@ impl ServeMetrics {
             ("quota", &self.rejected_quota),
             ("cost", &self.rejected_cost),
             ("inline_bytes", &self.rejected_inline),
+            ("artifact_missing", &self.rejected_artifact),
         ] {
             out.push_str(&format!(
                 "pogo_serve_admission_rejected_total{{cause=\"{cause}\"}} {}\n",
@@ -163,6 +177,27 @@ impl ServeMetrics {
             "counter",
             "HTTP requests handled.",
             self.requests.load(Ordering::Relaxed) as f64,
+        );
+        metric(
+            &mut out,
+            "pogo_serve_artifact_cache_hits_total",
+            "counter",
+            "Artifact-store lookups served without revalidating the payload.",
+            self.artifact_hits.load(Ordering::Relaxed) as f64,
+        );
+        metric(
+            &mut out,
+            "pogo_serve_artifact_cache_misses_total",
+            "counter",
+            "Artifact-store lookups that missed (or first-seen inline payloads).",
+            self.artifact_misses.load(Ordering::Relaxed) as f64,
+        );
+        metric(
+            &mut out,
+            "pogo_serve_artifact_evictions_total",
+            "counter",
+            "Artifact-store entries evicted to stay under the byte budget.",
+            self.artifact_evictions.load(Ordering::Relaxed) as f64,
         );
         metric(
             &mut out,
@@ -247,6 +282,8 @@ mod tests {
         m.steps.fetch_add(100, Ordering::Relaxed);
         m.rejected_quota.fetch_add(2, Ordering::Relaxed);
         m.rejected_cost.fetch_add(1, Ordering::Relaxed);
+        m.artifact_hits.fetch_add(5, Ordering::Relaxed);
+        m.artifact_misses.fetch_add(2, Ordering::Relaxed);
         m.sse_clients.fetch_add(1, Ordering::Relaxed);
         let text = m.render(&gauges());
         for name in [
@@ -260,11 +297,15 @@ mod tests {
             "pogo_serve_admission_rejected_total{cause=\"quota\"} 2",
             "pogo_serve_admission_rejected_total{cause=\"cost\"} 1",
             "pogo_serve_admission_rejected_total{cause=\"inline_bytes\"} 0",
+            "pogo_serve_admission_rejected_total{cause=\"artifact_missing\"} 0",
             "pogo_serve_jobs{state=\"done\"} 7",
             "pogo_serve_jobs{state=\"queued\"} 2",
             "pogo_serve_admission_outstanding_cost 4800",
             "pogo_serve_sse_clients 1",
             "pogo_serve_sse_events_total 0",
+            "pogo_serve_artifact_cache_hits_total 5",
+            "pogo_serve_artifact_cache_misses_total 2",
+            "pogo_serve_artifact_evictions_total 0",
         ] {
             assert!(text.contains(name), "missing {name} in:\n{text}");
         }

@@ -14,7 +14,9 @@
 //! dependencies.
 //!
 //! - [`problem`] — the open problem-source registry: `builtin` seeded
-//!   objectives and `inline` client-supplied matrices (v2);
+//!   objectives, `inline` client-supplied matrices (v2), and `artifact`
+//!   hash references into the daemon's content-addressed store (see
+//!   [`crate::artifact`]);
 //! - [`job`] — the job model and `run_job`/`run_job_with`, the single
 //!   deterministic execution path (daemon and direct callers agree
 //!   bit-for-bit) with per-step progress observation;
@@ -29,9 +31,11 @@
 //! - [`metrics`] — daemon counters/gauges for `GET /metrics`.
 //!
 //! Start one with `pogo serve [--addr HOST:PORT] [--workers N]
-//! [--tenant-quota N] [--cost-cap UNITS] [--max-inline-bytes B]`, or in
-//! process via [`Server::start`] / [`Server::start_with`] (port 0 =
-//! ephemeral, as the tests do).
+//! [--tenant-quota N] [--cost-cap UNITS] [--max-inline-bytes B]
+//! [--artifact-dir DIR [--artifact-cap-mb MB]]`, or in process via
+//! [`Server::start`] / [`Server::start_with`] /
+//! [`Server::start_with_artifacts`] (port 0 = ephemeral, as the tests
+//! do).
 
 pub mod api;
 pub mod client;
@@ -48,5 +52,5 @@ pub use job::{
     ProblemKind, RunCtl, StepProgress,
 };
 pub use metrics::ServeMetrics;
-pub use problem::{InlineMat, InlineProblem, ProblemSource};
+pub use problem::{ArtifactRef, InlineMat, InlineProblem, ProblemSource};
 pub use queue::{Admission, JobId, JobQueue, ProgressBus, QueueConfig, SubmitError};

@@ -14,6 +14,11 @@
 //!   admission. This is how real workloads (the sketched-landing /
 //!   stochastic regimes of PAPERS.md) feed their own objective data to
 //!   the daemon instead of replaying seeded stand-ins.
+//! - `artifact` — a sealed [`crate::artifact`] payload already sitting
+//!   in the daemon's content-addressed store, referenced by its sha256
+//!   manifest hash ("upload once, run many"). The spec carries only the
+//!   hash; the queue resolves it against the store at admission, so
+//!   repeat submissions skip payload revalidation entirely.
 //!
 //! New sources register by adding a [`SourceBuilder`] to
 //! [`source_registry`] — the parse/validate/build plumbing is shared.
@@ -222,10 +227,41 @@ impl InlineProblem {
         }
     }
 
-    /// Admission-time validation: matrix counts match the batch, shapes
-    /// match the objective family, word counts match the domain's element
-    /// width, and every word is finite.
+    /// Admission-time validation: the structural half
+    /// ([`InlineProblem::validate_structure`]) plus an O(payload) scan
+    /// that every word is finite.
     pub fn validate(&self, domain: JobDomain, batch: usize, p: usize, n: usize) -> Result<()> {
+        self.validate_structure(domain, batch, p, n)?;
+        let scan = |name: &str, mats: &[InlineMat]| -> Result<()> {
+            for (i, m) in mats.iter().enumerate() {
+                ensure!(
+                    m.data.iter().all(|v| v.is_finite()),
+                    "inline '{name}[{i}]': payload contains non-finite values"
+                );
+            }
+            Ok(())
+        };
+        match self {
+            InlineProblem::Procrustes { a, b } => {
+                scan("a", a)?;
+                scan("b", b)
+            }
+            InlineProblem::Pca { c } => scan("c", c),
+        }
+    }
+
+    /// The cheap structural half of [`InlineProblem::validate`]: matrix
+    /// counts match the batch, shapes match the objective family, and
+    /// word counts match the domain's element width. O(batch), no
+    /// payload scan — what the queue's artifact-dedupe path runs before
+    /// hashing, deferring the value scan to first-seen payloads only.
+    pub fn validate_structure(
+        &self,
+        domain: JobDomain,
+        batch: usize,
+        p: usize,
+        n: usize,
+    ) -> Result<()> {
         let width = match domain {
             JobDomain::Real => 1usize,
             JobDomain::Complex => 2usize,
@@ -249,10 +285,6 @@ impl InlineProblem {
                     m.data.len(),
                     domain.name(),
                     rows * cols * width
-                );
-                ensure!(
-                    m.data.iter().all(|v| v.is_finite()),
-                    "inline '{name}[{i}]': payload contains non-finite values"
                 );
             }
             Ok(())
@@ -283,11 +315,49 @@ impl InlineProblem {
     }
 }
 
+/// Reference to a sealed artifact in the daemon's content-addressed
+/// store. On the wire this is only the 64-hex sha256 manifest hash; the
+/// queue resolves the payload from the store at admission (a hash the
+/// store does not hold is a 404-class rejection, never a failed job).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactRef {
+    /// Lowercase-hex sha256 of the artifact manifest (the content address).
+    pub hash: String,
+    /// The payload decoded from the store at admission. Never serialized
+    /// — a persisted artifact job re-resolves from the store on recovery.
+    resolved: Option<Box<InlineProblem>>,
+}
+
+impl ArtifactRef {
+    pub fn new(hash: &str) -> Result<ArtifactRef> {
+        ensure!(
+            crate::util::sha256::is_hex_digest(hash),
+            "artifact hash must be 64 lowercase hex chars, got '{hash}'"
+        );
+        Ok(ArtifactRef { hash: hash.to_string(), resolved: None })
+    }
+
+    /// Attach the store-decoded payload (queue admission / worker claim).
+    pub fn resolve(&mut self, problem: InlineProblem) {
+        self.resolved = Some(Box::new(problem));
+    }
+
+    pub fn resolved(&self) -> Option<&InlineProblem> {
+        self.resolved.as_deref()
+    }
+
+    /// Short display form of the content address.
+    pub fn short(&self) -> &str {
+        &self.hash[..12]
+    }
+}
+
 /// Where a job's objective comes from (see module docs).
 #[derive(Clone, Debug, PartialEq)]
 pub enum ProblemSource {
     Builtin(ProblemKind),
     Inline(InlineProblem),
+    Artifact(ArtifactRef),
 }
 
 impl ProblemSource {
@@ -297,32 +367,44 @@ impl ProblemSource {
         match self {
             ProblemSource::Builtin(k) => k.name().to_string(),
             ProblemSource::Inline(p) => format!("inline:{}", p.objective()),
+            ProblemSource::Artifact(r) => format!("artifact:{}", r.short()),
         }
     }
 
-    /// Inline payload bytes (0 for builtin sources).
+    /// Inline payload bytes (0 for builtin and artifact sources — an
+    /// artifact's payload was size-capped once at upload, not per job).
     pub fn payload_bytes(&self) -> usize {
         match self {
             ProblemSource::Builtin(_) => 0,
             ProblemSource::Inline(p) => p.payload_bytes(),
+            ProblemSource::Artifact(_) => 0,
         }
     }
 
-    /// Source-specific admission validation.
+    /// Source-specific admission validation. Artifact payloads were
+    /// fully validated when they entered the store, so the per-job check
+    /// is only the hash format (enforced at construction) — the whole
+    /// point of admitting by content hash.
     pub fn validate(&self, domain: JobDomain, batch: usize, p: usize, n: usize) -> Result<()> {
         match self {
             ProblemSource::Builtin(_) => Ok(()),
             ProblemSource::Inline(inline) => inline.validate(domain, batch, p, n),
+            ProblemSource::Artifact(_) => Ok(()),
         }
     }
 
     /// Serialize. Builtin sources keep the frozen v1 wire form (a bare
-    /// string), so v1 specs round-trip bit-for-bit; inline sources use
-    /// the v2 object form.
+    /// string), so v1 specs round-trip bit-for-bit; inline and artifact
+    /// sources use the v2 object form (an artifact ref serializes as its
+    /// hash alone — resolved payloads never ride the wire).
     pub fn to_json(&self) -> Json {
         match self {
             ProblemSource::Builtin(k) => Json::str(k.name()),
             ProblemSource::Inline(p) => p.to_json(),
+            ProblemSource::Artifact(r) => Json::obj(vec![
+                ("source", Json::str("artifact")),
+                ("hash", Json::str(r.hash.clone())),
+            ]),
         }
     }
 
@@ -406,6 +488,14 @@ fn parse_inline(j: &Json) -> Result<ProblemSource> {
     Ok(ProblemSource::Inline(inline))
 }
 
+fn parse_artifact(j: &Json) -> Result<ProblemSource> {
+    let hash = j
+        .get("hash")
+        .as_str()
+        .ok_or_else(|| anyhow!("artifact source needs a 'hash' content address"))?;
+    Ok(ProblemSource::Artifact(ArtifactRef::new(hash)?))
+}
+
 /// The problem-source registry. Open by construction: a new source is
 /// one more entry here plus a `ProblemData` build arm in `job.rs`.
 pub fn source_registry() -> &'static [SourceBuilder] {
@@ -419,6 +509,11 @@ pub fn source_registry() -> &'static [SourceBuilder] {
             name: "inline",
             summary: "client-supplied matrices (base64 LE f32 or JSON arrays; procrustes/pca)",
             parse: parse_inline,
+        },
+        SourceBuilder {
+            name: "artifact",
+            summary: "a sealed artifact from the daemon store, referenced by sha256 content hash",
+            parse: parse_artifact,
         },
     ]
 }
@@ -529,9 +624,45 @@ mod tests {
     }
 
     #[test]
-    fn registry_lists_both_sources() {
+    fn registry_lists_every_source() {
         let names: Vec<&str> = source_registry().iter().map(|b| b.name).collect();
-        assert_eq!(names, vec!["builtin", "inline"]);
-        assert_eq!(registry_json().as_arr().unwrap().len(), 2);
+        assert_eq!(names, vec!["builtin", "inline", "artifact"]);
+        assert_eq!(registry_json().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn artifact_source_roundtrips_hash_only() {
+        let hash = crate::util::sha256::hex(b"some payload");
+        let j = Json::parse(&format!(r#"{{"source": "artifact", "hash": "{hash}"}}"#)).unwrap();
+        let src = ProblemSource::from_json(&j).unwrap();
+        let ProblemSource::Artifact(r) = &src else { panic!("{src:?}") };
+        assert_eq!(r.hash, hash);
+        assert!(r.resolved().is_none());
+        assert_eq!(src.label(), format!("artifact:{}", &hash[..12]));
+        assert_eq!(src.payload_bytes(), 0);
+        // Hash-only validation: no payload to check per job.
+        src.validate(JobDomain::Real, 4, 2, 3).unwrap();
+        // Serializes back to the hash alone, resolved or not.
+        let mut resolved = src.clone();
+        let ProblemSource::Artifact(r) = &mut resolved else { unreachable!() };
+        r.resolve(InlineProblem::Pca {
+            c: vec![InlineMat { rows: 1, cols: 1, data: vec![1.0] }],
+        });
+        assert_eq!(resolved.to_json(), src.to_json());
+        let back = ProblemSource::from_json(&src.to_json()).unwrap();
+        assert_eq!(back, src);
+    }
+
+    #[test]
+    fn artifact_source_rejects_malformed_hashes() {
+        for bad in [
+            r#"{"source": "artifact"}"#,
+            r#"{"source": "artifact", "hash": "abc"}"#,
+            // Uppercase hex is not a canonical content address.
+            r#"{"source": "artifact", "hash": "AB7816BF8F01CFEA414140DE5DAE2223B00361A396177A9CB410FF61F20015AD"}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(ProblemSource::from_json(&j).is_err(), "{bad}");
+        }
     }
 }

@@ -29,8 +29,10 @@ use super::job::{
     self, FinalIterate, JobOutcome, JobResult, JobSpec, JobState, RunCtl, StepProgress,
 };
 use super::metrics::ServeMetrics;
+use super::problem::ProblemSource;
+use crate::artifact::{Artifact, ArtifactStore, Provenance};
 use crate::util::json::Json;
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 use std::collections::{BTreeMap, VecDeque};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -92,6 +94,9 @@ pub struct QueueConfig {
     pub state_dir: Option<PathBuf>,
     /// Admission control ahead of the FIFO.
     pub admission: Admission,
+    /// Content-addressed artifact store (`--artifact-dir`). `None`
+    /// disables the `artifact` problem source and inline dedupe.
+    pub artifacts: Option<Arc<ArtifactStore>>,
 }
 
 impl Default for QueueConfig {
@@ -101,6 +106,7 @@ impl Default for QueueConfig {
             capacity: 256,
             state_dir: None,
             admission: Admission::default(),
+            artifacts: None,
         }
     }
 }
@@ -121,6 +127,8 @@ pub enum SubmitError {
     Cost { cost: u64, outstanding: u64, cap: u64, retry_after_s: u64 },
     /// The inline problem payload exceeds the daemon's byte cap.
     InlineTooLarge { bytes: usize, cap: usize },
+    /// The referenced artifact hash is not in the daemon's store.
+    ArtifactMissing { hash: String },
 }
 
 impl std::fmt::Display for SubmitError {
@@ -140,6 +148,13 @@ impl std::fmt::Display for SubmitError {
             ),
             SubmitError::InlineTooLarge { bytes, cap } => {
                 write!(f, "inline payload of {bytes} bytes exceeds the {cap}-byte cap")
+            }
+            SubmitError::ArtifactMissing { hash } => {
+                write!(
+                    f,
+                    "artifact {hash} is not in the store (upload it with POST /v2/artifacts \
+                     or `pogo compile`)"
+                )
             }
         }
     }
@@ -390,12 +405,14 @@ impl JobQueue {
     }
 
     /// Submit a job for `tenant`; returns its id or why admission
-    /// refused it. Admission runs in order: validity → inline byte cap →
-    /// tenant quota → cost budget → backlog capacity — all before the
-    /// job touches the FIFO.
+    /// refused it. Admission runs in order: scalar validity → inline
+    /// byte cap → source admission (payload validation, artifact
+    /// resolution, inline dedupe through the store) → tenant quota →
+    /// cost budget → backlog capacity — all before the job touches the
+    /// FIFO.
     pub fn submit_as(
         &self,
-        spec: JobSpec,
+        mut spec: JobSpec,
         tenant: &str,
     ) -> std::result::Result<JobId, SubmitError> {
         let reject = |counter: &std::sync::atomic::AtomicU64, err: SubmitError| {
@@ -403,7 +420,7 @@ impl JobQueue {
             counter.fetch_add(1, Ordering::Relaxed);
             Err(err)
         };
-        if let Err(e) = spec.validate() {
+        if let Err(e) = spec.validate_scalars() {
             return reject(&self.inner.metrics.rejected_invalid, SubmitError::Invalid(e));
         }
         let adm = self.inner.cfg.admission;
@@ -413,6 +430,13 @@ impl JobQueue {
                 &self.inner.metrics.rejected_inline,
                 SubmitError::InlineTooLarge { bytes: payload, cap: adm.max_inline_bytes },
             );
+        }
+        if let Err(err) = self.admit_source(&mut spec) {
+            let counter = match &err {
+                SubmitError::ArtifactMissing { .. } => &self.inner.metrics.rejected_artifact,
+                _ => &self.inner.metrics.rejected_invalid,
+            };
+            return reject(counter, err);
         }
         let cost = spec.cost();
         let id = {
@@ -482,6 +506,85 @@ impl JobQueue {
         // them while an idle worker keeps sleeping.
         self.inner.cv.notify_all();
         Ok(id)
+    }
+
+    /// Source admission: validate payloads, resolve artifact refs from
+    /// the store, and dedupe inline payloads through it.
+    ///
+    /// - `builtin` — nothing to check beyond the scalars.
+    /// - `artifact` — look the hash up in the store; a hit decodes the
+    ///   (upload-time validated) payload into the spec, a miss is
+    ///   [`SubmitError::ArtifactMissing`]. Runs before the queue lock —
+    ///   store I/O never blocks other submissions.
+    /// - `inline` with a store — seal the payload exactly as
+    ///   `pogo compile` would and look the content address up: a hit
+    ///   means this payload already passed full validation once, so only
+    ///   the structural checks rerun (the O(payload) value scan is
+    ///   skipped); a miss validates fully and inserts, so the *next*
+    ///   identical submission (or an `artifact` job by this hash) is
+    ///   served from cache.
+    /// - `inline` without a store — the classic full-validation path.
+    fn admit_source(&self, spec: &mut JobSpec) -> std::result::Result<(), SubmitError> {
+        let store = self.inner.cfg.artifacts.as_deref();
+        let metrics = &self.inner.metrics;
+        let (domain, batch, p, n) = (spec.domain, spec.batch, spec.p, spec.n);
+        match &mut spec.source {
+            ProblemSource::Builtin(_) => Ok(()),
+            ProblemSource::Artifact(r) => {
+                let Some(store) = store else {
+                    return Err(SubmitError::Invalid(anyhow!(
+                        "this daemon has no artifact store (start it with --artifact-dir)"
+                    )));
+                };
+                match store.get(&r.hash) {
+                    Ok(Some(art)) => {
+                        let problem = art.to_problem().map_err(SubmitError::Invalid)?;
+                        metrics.artifact_hits.fetch_add(1, Ordering::Relaxed);
+                        r.resolve(problem);
+                        Ok(())
+                    }
+                    Ok(None) => {
+                        metrics.artifact_misses.fetch_add(1, Ordering::Relaxed);
+                        Err(SubmitError::ArtifactMissing { hash: r.hash.clone() })
+                    }
+                    Err(e) => Err(SubmitError::Invalid(e)),
+                }
+            }
+            ProblemSource::Inline(inline) => {
+                let Some(store) = store else {
+                    return inline.validate(domain, batch, p, n).map_err(SubmitError::Invalid);
+                };
+                let mut prov = Provenance::new(spec.seed);
+                prov.optimizer = Some(spec.optimizer.to_json());
+                let art = Artifact::seal_for_hash(inline, domain, batch, p, n, prov)
+                    .map_err(SubmitError::Invalid)?;
+                let hash = art.hash();
+                if store.touch(&hash) {
+                    metrics.artifact_hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok(());
+                }
+                metrics.artifact_misses.fetch_add(1, Ordering::Relaxed);
+                inline.validate(domain, batch, p, n).map_err(SubmitError::Invalid)?;
+                match store.insert(&art) {
+                    Ok(outcome) => {
+                        metrics
+                            .artifact_evictions
+                            .fetch_add(outcome.evicted as u64, Ordering::Relaxed);
+                    }
+                    // A store refusal (payload larger than the whole
+                    // budget, disk trouble) must not fail an already
+                    // fully validated job — it just stays uncached.
+                    Err(e) => log::warn!("inline dedupe: not caching {hash}: {e:#}"),
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// The daemon's artifact store, when one is configured (what the API
+    /// layer serves `POST /v2/artifacts` from).
+    pub fn artifacts(&self) -> Option<Arc<ArtifactStore>> {
+        self.inner.cfg.artifacts.clone()
     }
 
     /// Cancel a job. Queued jobs flip to `cancelled` immediately; running
@@ -735,6 +838,27 @@ impl Inner {
         bus.publish(ProgressEvent::Step(*p));
     }
 
+    /// Re-attach an artifact job's payload from the store at claim time.
+    /// The resolved payload never rides the state file, so a job
+    /// recovered from a previous daemon reaches its worker unresolved —
+    /// this is the second (and last) place resolution can happen. A
+    /// no-op for other sources and for already-resolved refs.
+    fn resolve_artifact(&self, spec: &mut JobSpec) -> Result<()> {
+        let ProblemSource::Artifact(r) = &mut spec.source else { return Ok(()) };
+        if r.resolved().is_some() {
+            return Ok(());
+        }
+        let store = self.cfg.artifacts.as_deref().ok_or_else(|| {
+            anyhow!("artifact job recovered on a daemon without --artifact-dir")
+        })?;
+        let art = store
+            .get(&r.hash)?
+            .ok_or_else(|| anyhow!("artifact {} is no longer in the store", r.hash))?;
+        self.metrics.artifact_hits.fetch_add(1, Ordering::Relaxed);
+        r.resolve(art.to_problem()?);
+        Ok(())
+    }
+
     /// Checkpoint path for a job, when persistence applies to it (both
     /// domains — the checkpoint format is dtype-tagged).
     fn checkpoint_path(&self, id: JobId, spec: &JobSpec) -> Option<PathBuf> {
@@ -902,11 +1026,13 @@ fn worker_loop(inner: Arc<Inner>) {
                 st = inner.cv.wait(st).unwrap();
             }
         };
-        let Some((id, spec, cancel)) = claimed else { return };
+        let Some((id, mut spec, cancel)) = claimed else { return };
         inner.persist(id);
 
         // Run the job. The observer records the loss series and feeds the
         // job's progress bus — the SSE stream — on every applied step.
+        // Recovered artifact jobs re-resolve their payload here first; a
+        // store that no longer holds the hash fails the job cleanly.
         let inner_cb = inner.clone();
         let observer = |p: &StepProgress| inner_cb.progress(id, p);
         let ctl = RunCtl {
@@ -914,9 +1040,12 @@ fn worker_loop(inner: Arc<Inner>) {
             on_step: None,
             checkpoint_path: inner.checkpoint_path(id, &spec),
         };
-        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            job::run_job_with(&spec, &ctl, Some(&observer))
-        }));
+        let outcome = match inner.resolve_artifact(&mut spec) {
+            Ok(()) => std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                job::run_job_with(&spec, &ctl, Some(&observer))
+            })),
+            Err(e) => Ok(Err(e)),
+        };
 
         let bus = {
             let mut st = inner.state.lock().unwrap();
@@ -1071,6 +1200,7 @@ mod tests {
                     cost_cap: 10 * quick_spec(10).cost(),
                     max_inline_bytes: 64,
                 },
+                artifacts: None,
             },
             metrics.clone(),
         )
@@ -1135,6 +1265,97 @@ mod tests {
         };
         q.cancel(ids[0]).unwrap();
         q.submit_as(quick_spec(10), "alice").unwrap();
+        q.shutdown();
+    }
+
+    #[test]
+    fn artifact_store_resolves_and_dedupes() {
+        use super::super::problem::{ArtifactRef, InlineMat, InlineProblem};
+        let dir = std::env::temp_dir()
+            .join(format!("pogo_serve_queue_artifacts_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let store = Arc::new(ArtifactStore::open(&dir, 1 << 20).unwrap());
+        let metrics = Arc::new(ServeMetrics::new());
+        let q = JobQueue::start(
+            QueueConfig {
+                workers: 1,
+                capacity: 8,
+                artifacts: Some(store.clone()),
+                ..QueueConfig::default()
+            },
+            metrics.clone(),
+        )
+        .unwrap();
+        let inline_pca = |seed: u64| {
+            let mut s = quick_spec(10);
+            let mut rng = crate::rng::Rng::seed_from_u64(seed);
+            let c = (0..2)
+                .map(|_| InlineMat::from_mat(&crate::linalg::Mat::<f32>::randn(4, 4, &mut rng)))
+                .collect();
+            s.source = super::super::problem::ProblemSource::Inline(InlineProblem::Pca { c });
+            s
+        };
+
+        // First inline submission: a miss that seals + stores the payload.
+        let a = q.submit(inline_pca(9)).unwrap();
+        assert_eq!(q.wait_terminal(a, Duration::from_secs(30)), Some(JobState::Done));
+        assert_eq!(metrics.artifact_misses.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.artifact_hits.load(Ordering::Relaxed), 0);
+        let summary = store.summary();
+        assert_eq!(summary.count, 1, "inline payload was cached");
+        let hash = summary.entries[0].0.clone();
+
+        // Identical resubmission: served from cache (hit, no new entry).
+        let b = q.submit(inline_pca(9)).unwrap();
+        assert_eq!(q.wait_terminal(b, Duration::from_secs(30)), Some(JobState::Done));
+        assert_eq!(metrics.artifact_hits.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.artifact_misses.load(Ordering::Relaxed), 1);
+        assert_eq!(store.summary().count, 1);
+
+        // An artifact-sourced job by that hash resolves and runs to done,
+        // with the same result as the inline run (bit-identity is pinned
+        // end-to-end in job.rs and serve_e2e.rs).
+        let mut by_hash = quick_spec(10);
+        by_hash.source =
+            super::super::problem::ProblemSource::Artifact(ArtifactRef::new(&hash).unwrap());
+        let c = q.submit(by_hash).unwrap();
+        assert_eq!(q.wait_terminal(c, Duration::from_secs(30)), Some(JobState::Done));
+        assert_eq!(metrics.artifact_hits.load(Ordering::Relaxed), 2);
+        let ra = q.snapshot(a).unwrap().1.unwrap();
+        let rc = q.snapshot(c).unwrap().1.unwrap();
+        assert_eq!(ra.final_loss.to_bits(), rc.final_loss.to_bits());
+
+        // Unknown hash: refused ahead of the FIFO, counted as a miss.
+        let mut missing = quick_spec(10);
+        missing.source = super::super::problem::ProblemSource::Artifact(
+            ArtifactRef::new(&crate::util::sha256::hex(b"never uploaded")).unwrap(),
+        );
+        match q.submit(missing) {
+            Err(SubmitError::ArtifactMissing { hash: h }) => {
+                assert_eq!(h, crate::util::sha256::hex(b"never uploaded"));
+            }
+            other => panic!("expected ArtifactMissing, got {other:?}"),
+        }
+        assert_eq!(metrics.artifact_misses.load(Ordering::Relaxed), 2);
+        assert_eq!(metrics.rejected_artifact.load(Ordering::Relaxed), 1);
+        q.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn artifact_job_without_a_store_is_invalid() {
+        use super::super::problem::ArtifactRef;
+        let q = start(0, 4);
+        let mut spec = quick_spec(10);
+        spec.source = super::super::problem::ProblemSource::Artifact(
+            ArtifactRef::new(&crate::util::sha256::hex(b"x")).unwrap(),
+        );
+        match q.submit(spec) {
+            Err(SubmitError::Invalid(e)) => {
+                assert!(format!("{e:#}").contains("--artifact-dir"), "{e:#}");
+            }
+            other => panic!("expected Invalid, got {other:?}"),
+        }
         q.shutdown();
     }
 

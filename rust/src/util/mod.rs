@@ -6,6 +6,7 @@ pub mod cli;
 pub mod json;
 pub mod logging;
 pub mod pool;
+pub mod sha256;
 
 /// Wall-clock stopwatch used by the metrics and bench harnesses.
 #[derive(Clone, Copy, Debug)]

@@ -448,6 +448,139 @@ fn restart_resumes_complex_jobs_from_c64_checkpoints() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// Sealed artifacts end-to-end: upload a `pogo compile`-style artifact
+/// over `/v2/artifacts`, run it as an `artifact`-sourced job
+/// **bit-identical** to the same payload submitted inline, and watch
+/// repeat submissions against the hash get served from the store cache
+/// (the hit counter increments, nothing is revalidated). Unknown hashes
+/// are a 404, not a failed job.
+#[test]
+fn artifact_jobs_match_inline_bit_for_bit_and_hit_the_cache() {
+    use pogo::artifact::{Artifact, ArtifactStore, Provenance};
+    use pogo::linalg::Mat;
+    use pogo::rng::Rng;
+    use pogo::serve::problem::InlineMat;
+    use pogo::serve::{Admission, ArtifactRef, InlineProblem, ProblemSource};
+    use std::sync::Arc;
+
+    fn counter(metrics: &str, name: &str) -> u64 {
+        metrics
+            .lines()
+            .find(|l| l.starts_with(name))
+            .and_then(|l| l.split_whitespace().nth(1))
+            .and_then(|v| v.parse::<f64>().ok())
+            .unwrap_or_else(|| panic!("{name} missing from:\n{metrics}")) as u64
+    }
+
+    let dir =
+        std::env::temp_dir().join(format!("pogo_serve_e2e_artifacts_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let store = Arc::new(ArtifactStore::open(&dir, 64 << 20).expect("artifact store"));
+    let server = Server::start_with_artifacts(
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 2,
+            capacity: 16,
+            state_dir: None,
+        },
+        Admission::default(),
+        Some(store),
+    )
+    .expect("server with artifact store");
+    let client = ServeClient::new(server.addr().to_string());
+
+    // One procrustes payload, and the job spec both runs will share.
+    let (bsz, p, n) = (3usize, 3usize, 6usize);
+    let mut rng = Rng::seed_from_u64(2025);
+    let a: Vec<InlineMat> =
+        (0..bsz).map(|_| InlineMat::from_mat(&Mat::<f32>::randn(p, p, &mut rng))).collect();
+    let b: Vec<InlineMat> =
+        (0..bsz).map(|_| InlineMat::from_mat(&Mat::<f32>::randn(p, n, &mut rng))).collect();
+    let inline = InlineProblem::Procrustes { a, b };
+    let mut job = JobSpec::new(ProblemKind::Procrustes, bsz, p, n);
+    job.steps = 40;
+    job.seed = 33;
+    job.optimizer = OptimizerSpec::new(Method::Pogo, 0.05).with_engine(Engine::BatchedHost);
+
+    // Seal exactly as `pogo compile` does (same provenance construction,
+    // so an inline submission of this spec collides onto the same hash).
+    let mut prov = Provenance::new(job.seed);
+    prov.optimizer = Some(job.optimizer.to_json());
+    let art = Artifact::seal(&inline, job.domain, bsz, p, n, prov).expect("seal");
+    let hash = art.hash();
+
+    // Upload: a 201-created receipt carrying the content address; the
+    // same bytes again take the idempotent already-stored (409) path.
+    let receipt = client.upload_artifact(&art.encode()).expect("upload");
+    assert_eq!(receipt.get("hash").as_str(), Some(hash.as_str()));
+    assert_eq!(receipt.get("existed").as_bool(), Some(false));
+    let again = client.upload_artifact(&art.encode()).expect("idempotent re-upload");
+    assert_eq!(again.get("existed").as_bool(), Some(true));
+
+    let hits_before =
+        counter(&client.metrics().unwrap(), "pogo_serve_artifact_cache_hits_total");
+
+    // The artifact-sourced job and the inline job land bit-identically:
+    // both decode through the same payload path.
+    let mut art_job = job.clone();
+    art_job.name = "artifact-src".into();
+    art_job.source = ProblemSource::Artifact(ArtifactRef::new(&hash).unwrap());
+    let art_id = client.submit_v2(&art_job).expect("artifact submit");
+    let r_art = client.wait_result(art_id, WAIT).expect("artifact result");
+
+    let mut inline_job = job.clone();
+    inline_job.name = "inline-src".into();
+    inline_job.source = ProblemSource::Inline(inline.clone());
+    let inline_id = client.submit_v2(&inline_job).expect("inline submit");
+    let r_inline = client.wait_result(inline_id, WAIT).expect("inline result");
+
+    assert_eq!(
+        r_art.get("final_loss").as_f64().unwrap().to_bits(),
+        r_inline.get("final_loss").as_f64().unwrap().to_bits(),
+        "artifact-sourced run must be bit-identical to the inline run"
+    );
+    assert_eq!(
+        r_art.get("ortho_error").as_f64().unwrap().to_bits(),
+        r_inline.get("ortho_error").as_f64().unwrap().to_bits(),
+    );
+    assert!(r_art.get("ortho_error").as_f64().unwrap() <= 1e-3);
+
+    // Cache accounting: the artifact admission hit the store once, and
+    // the inline submission deduped onto the uploaded hash (its content
+    // address collides with the `pogo compile`-style seal above), so the
+    // hit counter moved by two and the payload was never revalidated.
+    let hits_after =
+        counter(&client.metrics().unwrap(), "pogo_serve_artifact_cache_hits_total");
+    assert_eq!(hits_after, hits_before + 2, "artifact admission + inline dedupe");
+
+    // A second submission against the same hash is another pure cache hit.
+    let rerun_id = client.submit_v2(&art_job).expect("second artifact submit");
+    client.wait_result(rerun_id, WAIT).expect("second artifact result");
+    let hits_rerun =
+        counter(&client.metrics().unwrap(), "pogo_serve_artifact_cache_hits_total");
+    assert_eq!(hits_rerun, hits_after + 1);
+
+    // An unknown hash is refused at admission with a 404 naming the
+    // upload route — no job is created, and the miss is counted.
+    let mut missing = art_job.clone();
+    missing.source = ProblemSource::Artifact(
+        ArtifactRef::new(&pogo::util::sha256::hex(b"never uploaded")).unwrap(),
+    );
+    let err = client.submit_v2(&missing).expect_err("missing artifact");
+    assert!(format!("{err:#}").contains("404"), "{err:#}");
+    assert!(format!("{err:#}").contains("not in the store"), "{err:#}");
+    assert!(
+        counter(&client.metrics().unwrap(), "pogo_serve_artifact_cache_misses_total") >= 1
+    );
+
+    // The store summary reflects exactly one stored payload.
+    let summary = client.artifact_summary().expect("summary");
+    assert_eq!(summary.get("count").as_usize(), Some(1));
+
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// Admission control over HTTP: tenant quotas and the cost budget answer
 /// 429 + `Retry-After` before the FIFO, inline payload caps answer 413,
 /// and `/metrics` counts each cause.
