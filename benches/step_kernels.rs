@@ -1,0 +1,163 @@
+//! Per-kernel step benchmarks: the fused single-pass `StepKernel` path vs
+//! the 5-pass naive composition, on prepacked `(B, p, n)` groups at the
+//! paper's Fig. 1 (tiny 3×3) and Fig. 8 (16×16 heads) shape regimes.
+//!
+//! Both paths are bit-identical by contract (`tests/fused_parity.rs` pins
+//! this elementwise), so this bench measures the only thing that differs:
+//! memory traffic and dispatch overhead. Packing cost is excluded — the
+//! groups are packed once and `step_batch` is driven directly, which is
+//! exactly what the batched engine does in steady state.
+//!
+//! Writes `BENCH_kernels.json` (redirect: `POGO_BENCH_JSON_KERNELS`);
+//! CI's `bench-smoke` job runs this with `POGO_BENCH_QUICK=1` and fails
+//! if `speedup_fused_vs_naive` drops below 1 at f32 (16,16), B = 4096.
+
+use pogo::bench::{bench_items, print_table, BenchOpts, KernelRecord, Stats};
+use pogo::linalg::{BatchMat, Field, KernelChoice, Mat, Scalar};
+use pogo::manifold::stiefel;
+use pogo::optim::base::BaseOptKind;
+use pogo::optim::batched::BatchedHost;
+use pogo::optim::pogo::LambdaPolicy;
+use pogo::optim::Orthoptimizer;
+use pogo::rng::Rng;
+
+/// One packed problem instance: B row-orthogonal iterates + scaled grads.
+fn make_packed<S: Scalar>(
+    b: usize,
+    p: usize,
+    n: usize,
+    rng: &mut Rng,
+) -> (BatchMat<S>, BatchMat<S>) {
+    let xs: Vec<Mat<S>> = (0..b).map(|_| stiefel::random_point_t::<S>(p, n, rng)).collect();
+    let gs: Vec<Mat<S>> = (0..b)
+        .map(|_| {
+            let g = Mat::<S>::randn(p, n, rng);
+            let nn = g.norm().to_f64().max(1e-6);
+            g.scale(S::from_f64(0.3 / nn))
+        })
+        .collect();
+    (BatchMat::from_mats(&xs), BatchMat::from_mats(&gs))
+}
+
+/// Measure one (rule, dtype, path) cell and return its stats + record.
+#[allow(clippy::too_many_arguments)]
+fn measure<S: Scalar>(
+    opts: BenchOpts,
+    rule: &str,
+    dtype: &str,
+    kernel: KernelChoice,
+    b: usize,
+    p: usize,
+    n: usize,
+    rng: &mut Rng,
+) -> (Stats, KernelRecord) {
+    let mut opt: BatchedHost<S> = match rule {
+        "pogo" => BatchedHost::pogo(0.05, LambdaPolicy::Half, BaseOptKind::Sgd),
+        "landing" => BatchedHost::landing(0.05, 1.0, BaseOptKind::Sgd),
+        other => panic!("unknown rule {other}"),
+    };
+    opt = opt.with_kernel(kernel);
+    let (mut xb, gb) = make_packed::<S>(b, p, n, rng);
+    opt.step_batch(&mut xb, &gb).unwrap(); // warm-up (pool, allocator)
+    let kname = match kernel {
+        KernelChoice::Naive => "naive",
+        _ => "fused",
+    };
+    let s = bench_items(
+        &format!("{rule}-{dtype}[{kname}] B={b} {p}x{n}"),
+        opts,
+        b as f64,
+        || {
+            opt.step_batch(&mut xb, &gb).unwrap();
+        },
+    );
+    let us_per_matrix = s.mean * 1e6 / b as f64;
+    // Iterate traffic: read X, read G, write X — the irreducible bytes a
+    // step must move regardless of path.
+    let bytes = (3 * b * p * n * std::mem::size_of::<S>()) as f64;
+    let gb_per_s = bytes / s.mean / (1u64 << 30) as f64;
+    let rec = KernelRecord {
+        label: format!("{rule}-{dtype}"),
+        kernel: kname.to_string(),
+        p,
+        n,
+        batch: b,
+        us_per_matrix,
+        gb_per_s,
+    };
+    (s, rec)
+}
+
+/// Race fused vs naive at one cell; push both records and the speedup.
+#[allow(clippy::too_many_arguments)]
+fn race<S: Scalar>(
+    opts: BenchOpts,
+    rule: &str,
+    dtype: &str,
+    b: usize,
+    p: usize,
+    n: usize,
+    key_suffix: &str,
+    rng: &mut Rng,
+    stats: &mut Vec<Stats>,
+    records: &mut Vec<KernelRecord>,
+    speedups: &mut Vec<(String, f64)>,
+) {
+    let (s_naive, r_naive) = measure::<S>(opts, rule, dtype, KernelChoice::Naive, b, p, n, rng);
+    let (s_fused, r_fused) = measure::<S>(opts, rule, dtype, KernelChoice::Fused, b, p, n, rng);
+    if s_fused.mean > 0.0 && rule == "pogo" {
+        speedups.push((format!("{p}x{n}@{b}{key_suffix}"), s_naive.mean / s_fused.mean));
+    }
+    stats.push(s_naive);
+    stats.push(s_fused);
+    records.push(r_naive);
+    records.push(r_fused);
+}
+
+fn main() {
+    pogo::util::logging::init();
+    let opts = BenchOpts::from_env();
+    let quick = std::env::var("POGO_BENCH_QUICK").is_ok();
+    let mut rng = Rng::seed_from_u64(0);
+
+    let selected = <f32 as Field>::step_kernel().name();
+    println!("selected f32 step kernel: {selected}");
+    println!("selected f64 step kernel: {}", <f64 as Field>::step_kernel().name());
+
+    // B = 4096 must stay in the quick profile: CI's jq gate reads the
+    // "16x16@4096" speedup from the quick run.
+    let batches: &[usize] = if quick { &[1024, 4096] } else { &[1024, 4096, 32768] };
+    let shapes: &[(usize, usize)] = &[(3, 3), (8, 16), (16, 16)];
+
+    let mut stats: Vec<Stats> = Vec::new();
+    let mut records: Vec<KernelRecord> = Vec::new();
+    let mut speedups: Vec<(String, f64)> = Vec::new();
+
+    // f32 POGO across the full shape × batch grid (the headline race).
+    for &(p, n) in shapes {
+        for &b in batches {
+            race::<f32>(opts, "pogo", "f32", b, p, n, "", &mut rng,
+                        &mut stats, &mut records, &mut speedups);
+        }
+    }
+    // f64 POGO at the Fig. 8 head shape (precision-ablation dtype).
+    for &b in batches {
+        race::<f64>(opts, "pogo", "f64", b, 16, 16, ":f64", &mut rng,
+                    &mut stats, &mut records, &mut speedups);
+    }
+    // Landing coverage at one representative cell (no speedup key; the
+    // gate is POGO's).
+    race::<f32>(opts, "landing", "f32", 4096, 16, 16, "", &mut rng,
+                &mut stats, &mut records, &mut speedups);
+
+    print_table("fused vs naive step kernels (throughput = matrices/s)", &stats);
+    for (k, s) in &speedups {
+        println!("  fused-vs-naive speedup at {k}: {s:.2}x");
+    }
+
+    let default_json = pogo::repo_root().join("BENCH_kernels.json");
+    match pogo::bench::write_kernels_json(&default_json, selected, &records, &speedups) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("failed to write BENCH_kernels.json: {e}"),
+    }
+}

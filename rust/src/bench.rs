@@ -6,6 +6,13 @@
 //! throughput). Benches under `benches/` are `harness = false` binaries that
 //! call into this module and print aligned tables; `cargo bench` therefore
 //! runs the full paper-figure regeneration suite.
+//!
+//! Machine-readable reports (`BENCH_*.json`) all build through ONE
+//! [`BenchReport`] builder: every report carries the same envelope
+//! (`unit`, `threads`) plus report-specific fields, and every writer
+//! resolves its output path through the same `POGO_BENCH_JSON_*` redirect
+//! convention — so the schema CI's `jq` gates parse and the redirect
+//! behavior cannot drift between emitters.
 
 use crate::util::Stopwatch;
 use std::time::Duration;
@@ -154,6 +161,59 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Builder for a machine-readable `BENCH_*.json` report.
+///
+/// Every report shares the same envelope — a `unit` string naming the
+/// measurement convention and the worker `threads` count — plus
+/// report-specific fields added with [`BenchReport::field`]. Keys are
+/// emitted sorted (the underlying [`Json::Obj`] is a `BTreeMap`), exactly
+/// as the pre-builder writers did, so adopting the builder changed no
+/// bytes in any existing report.
+///
+/// [`Json::Obj`]: crate::util::json::Json
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    fields: std::collections::BTreeMap<String, crate::util::json::Json>,
+}
+
+impl BenchReport {
+    /// Start a report: the `unit` field plus the shared `threads` field.
+    pub fn new(unit: &str) -> Self {
+        use crate::util::json::Json;
+        let mut fields = std::collections::BTreeMap::new();
+        fields.insert("unit".to_string(), Json::str(unit));
+        fields.insert(
+            "threads".to_string(),
+            Json::num(crate::util::pool::num_threads() as f64),
+        );
+        BenchReport { fields }
+    }
+
+    /// Add (or replace) one top-level field.
+    pub fn field(mut self, key: &str, value: crate::util::json::Json) -> Self {
+        self.fields.insert(key.to_string(), value);
+        self
+    }
+
+    /// The report as a JSON object.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::Obj(self.fields.clone())
+    }
+
+    /// Write the report to `default_path`, honoring the `env_var`
+    /// redirect (CI points these at the workspace root before uploading
+    /// artifacts). Returns the path actually written.
+    pub fn write(
+        &self,
+        env_var: &str,
+        default_path: &std::path::Path,
+    ) -> std::io::Result<std::path::PathBuf> {
+        let path = resolve_bench_path(env_var, default_path)?;
+        std::fs::write(&path, self.to_json().to_string_pretty() + "\n")?;
+        Ok(path)
+    }
+}
+
 /// One batched-vs-loop scalability measurement (a `BENCH_scale.json` row).
 #[derive(Clone, Debug)]
 pub struct ScaleRecord {
@@ -169,6 +229,10 @@ pub struct ScaleRecord {
 /// to the batched-over-loop throughput ratio (`>1` = batched faster);
 /// that map is what CI's `bench-smoke` job gates on.
 pub fn scale_json(records: &[ScaleRecord], speedups: &[(usize, f64)]) -> crate::util::json::Json {
+    scale_report(records, speedups).to_json()
+}
+
+fn scale_report(records: &[ScaleRecord], speedups: &[(usize, f64)]) -> BenchReport {
     use crate::util::json::Json;
     let recs = records.iter().map(|r| {
         Json::obj(vec![
@@ -181,12 +245,9 @@ pub fn scale_json(records: &[ScaleRecord], speedups: &[(usize, f64)]) -> crate::
         .iter()
         .map(|&(b, s)| (b.to_string(), Json::num(s)))
         .collect();
-    Json::obj(vec![
-        ("unit", Json::str("us_per_matrix_step")),
-        ("threads", Json::num(crate::util::pool::num_threads() as f64)),
-        ("records", Json::arr(recs)),
-        ("speedup_batched_vs_loop", Json::Obj(speedup_map)),
-    ])
+    BenchReport::new("us_per_matrix_step")
+        .field("records", Json::arr(recs))
+        .field("speedup_batched_vs_loop", Json::Obj(speedup_map))
 }
 
 /// Resolve where a BENCH_*.json report lands: `env_var` redirects the
@@ -218,9 +279,7 @@ pub fn write_bench_json(
     records: &[ScaleRecord],
     speedups: &[(usize, f64)],
 ) -> std::io::Result<std::path::PathBuf> {
-    let path = resolve_bench_path(env_var, default_path)?;
-    std::fs::write(&path, scale_json(records, speedups).to_string_pretty() + "\n")?;
-    Ok(path)
+    scale_report(records, speedups).write(env_var, default_path)
 }
 
 /// `BENCH_scale.json` (real Fig. 1 sweep; redirect: `POGO_BENCH_JSON`).
@@ -268,25 +327,25 @@ pub struct ServeLoadRow {
 /// Machine-readable serve load report. CI's `serve-smoke` job gates on
 /// this file being well-formed (rows present, positive throughput).
 pub fn serve_json(rows: &[ServeLoadRow]) -> crate::util::json::Json {
+    serve_report(rows).to_json()
+}
+
+fn serve_report(rows: &[ServeLoadRow]) -> BenchReport {
     use crate::util::json::Json;
-    Json::obj(vec![
-        ("unit", Json::str("jobs_per_s_and_latency_ms")),
-        ("threads", Json::num(crate::util::pool::num_threads() as f64)),
-        (
-            "rows",
-            Json::arr(rows.iter().map(|r| {
-                Json::obj(vec![
-                    ("clients", Json::num(r.clients as f64)),
-                    ("jobs", Json::num(r.jobs as f64)),
-                    ("jobs_per_s", Json::num(r.jobs_per_s)),
-                    ("p50_ms", Json::num(r.p50_ms)),
-                    ("p95_ms", Json::num(r.p95_ms)),
-                    ("stream_p50_ms", Json::num(r.stream_p50_ms)),
-                    ("stream_p95_ms", Json::num(r.stream_p95_ms)),
-                ])
-            })),
-        ),
-    ])
+    BenchReport::new("jobs_per_s_and_latency_ms").field(
+        "rows",
+        Json::arr(rows.iter().map(|r| {
+            Json::obj(vec![
+                ("clients", Json::num(r.clients as f64)),
+                ("jobs", Json::num(r.jobs as f64)),
+                ("jobs_per_s", Json::num(r.jobs_per_s)),
+                ("p50_ms", Json::num(r.p50_ms)),
+                ("p95_ms", Json::num(r.p95_ms)),
+                ("stream_p50_ms", Json::num(r.stream_p50_ms)),
+                ("stream_p95_ms", Json::num(r.stream_p95_ms)),
+            ])
+        })),
+    )
 }
 
 /// `BENCH_serve.json` (daemon load generator; redirect:
@@ -295,9 +354,7 @@ pub fn write_serve_json(
     default_path: &std::path::Path,
     rows: &[ServeLoadRow],
 ) -> std::io::Result<std::path::PathBuf> {
-    let path = resolve_bench_path("POGO_BENCH_JSON_SERVE", default_path)?;
-    std::fs::write(&path, serve_json(rows).to_string_pretty() + "\n")?;
-    Ok(path)
+    serve_report(rows).write("POGO_BENCH_JSON_SERVE", default_path)
 }
 
 /// One row of the artifact I/O benchmark (`BENCH_artifact.json`): how
@@ -318,22 +375,22 @@ pub struct ArtifactIoRow {
 /// Machine-readable artifact I/O report. CI's `serve-smoke` job gates on
 /// this file being well-formed (rows present, positive throughput).
 pub fn artifact_json(rows: &[ArtifactIoRow]) -> crate::util::json::Json {
+    artifact_report(rows).to_json()
+}
+
+fn artifact_report(rows: &[ArtifactIoRow]) -> BenchReport {
     use crate::util::json::Json;
-    Json::obj(vec![
-        ("unit", Json::str("ms_and_mib_per_s")),
-        ("threads", Json::num(crate::util::pool::num_threads() as f64)),
-        (
-            "rows",
-            Json::arr(rows.iter().map(|r| {
-                Json::obj(vec![
-                    ("op", Json::str(r.op.clone())),
-                    ("payload_mb", Json::num(r.payload_mb)),
-                    ("ms", Json::num(r.ms)),
-                    ("mb_per_s", Json::num(r.mb_per_s)),
-                ])
-            })),
-        ),
-    ])
+    BenchReport::new("ms_and_mib_per_s").field(
+        "rows",
+        Json::arr(rows.iter().map(|r| {
+            Json::obj(vec![
+                ("op", Json::str(r.op.clone())),
+                ("payload_mb", Json::num(r.payload_mb)),
+                ("ms", Json::num(r.ms)),
+                ("mb_per_s", Json::num(r.mb_per_s)),
+            ])
+        })),
+    )
 }
 
 /// `BENCH_artifact.json` (artifact seal/verify/store throughput;
@@ -343,9 +400,79 @@ pub fn write_artifact_json(
     default_path: &std::path::Path,
     rows: &[ArtifactIoRow],
 ) -> std::io::Result<std::path::PathBuf> {
-    let path = resolve_bench_path("POGO_BENCH_JSON_ARTIFACT", default_path)?;
-    std::fs::write(&path, artifact_json(rows).to_string_pretty() + "\n")?;
-    Ok(path)
+    artifact_report(rows).write("POGO_BENCH_JSON_ARTIFACT", default_path)
+}
+
+/// One fused-vs-naive step-kernel measurement (a `BENCH_kernels.json`
+/// row): one update rule × element type × path, at one `(p, n)` shape and
+/// batch size.
+#[derive(Clone, Debug)]
+pub struct KernelRecord {
+    /// Rule × dtype label, e.g. `pogo-f32`.
+    pub label: String,
+    /// Execution path: `fused` or `naive`.
+    pub kernel: String,
+    /// Matrix rows p.
+    pub p: usize,
+    /// Matrix cols n.
+    pub n: usize,
+    /// Group size B.
+    pub batch: usize,
+    /// Mean per-matrix step cost, microseconds.
+    pub us_per_matrix: f64,
+    /// Effective iterate bandwidth: `3·B·p·n·sizeof(elem)` bytes (read X,
+    /// read G, write X) over the mean step time, GiB/s.
+    pub gb_per_s: f64,
+}
+
+/// Machine-readable step-kernel report. `selected` names the arch
+/// microkernel the run dispatched to (`avx2` / `neon` / `portable`);
+/// `speedups` maps `"pxn@B"` keys to the fused-over-naive throughput
+/// ratio — CI's `bench-smoke` job gates on `"16x16@4096"` ≥ 1.
+pub fn kernels_json(
+    selected: &str,
+    records: &[KernelRecord],
+    speedups: &[(String, f64)],
+) -> crate::util::json::Json {
+    kernels_report(selected, records, speedups).to_json()
+}
+
+fn kernels_report(
+    selected: &str,
+    records: &[KernelRecord],
+    speedups: &[(String, f64)],
+) -> BenchReport {
+    use crate::util::json::Json;
+    let recs = records.iter().map(|r| {
+        Json::obj(vec![
+            ("label", Json::str(r.label.clone())),
+            ("kernel", Json::str(r.kernel.clone())),
+            ("shape", Json::str(format!("{}x{}", r.p, r.n))),
+            ("batch", Json::num(r.batch as f64)),
+            ("us_per_matrix", Json::num(r.us_per_matrix)),
+            ("gb_per_s", Json::num(r.gb_per_s)),
+        ])
+    });
+    let speedup_map: std::collections::BTreeMap<String, Json> = speedups
+        .iter()
+        .map(|(k, s)| (k.clone(), Json::num(*s)))
+        .collect();
+    BenchReport::new("us_per_matrix_step")
+        .field("kernel", Json::str(selected))
+        .field("records", Json::arr(recs))
+        .field("speedup_fused_vs_naive", Json::Obj(speedup_map))
+}
+
+/// `BENCH_kernels.json` (fused vs naive step-kernel race; redirect:
+/// `POGO_BENCH_JSON_KERNELS`). Emitted by
+/// `cargo bench --bench step_kernels`.
+pub fn write_kernels_json(
+    default_path: &std::path::Path,
+    selected: &str,
+    records: &[KernelRecord],
+    speedups: &[(String, f64)],
+) -> std::io::Result<std::path::PathBuf> {
+    kernels_report(selected, records, speedups).write("POGO_BENCH_JSON_KERNELS", default_path)
 }
 
 #[cfg(test)]
@@ -416,6 +543,60 @@ mod tests {
         assert_eq!(arr[0].get("op").as_str(), Some("seal"));
         assert_eq!(arr[0].get("payload_mb").as_f64(), Some(8.0));
         assert_eq!(arr[0].get("mb_per_s").as_f64(), Some(640.0));
+        // Round-trips through the in-crate parser (what CI's jq reads).
+        let back = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back, j);
+    }
+
+    #[test]
+    fn bench_report_envelope_and_fields() {
+        use crate::util::json::Json;
+        let j = BenchReport::new("widgets_per_s")
+            .field("rows", Json::arr([Json::num(1.0)]))
+            .to_json();
+        assert_eq!(j.get("unit").as_str(), Some("widgets_per_s"));
+        assert_eq!(
+            j.get("threads").as_usize(),
+            Some(crate::util::pool::num_threads())
+        );
+        assert_eq!(j.get("rows").as_arr().unwrap().len(), 1);
+        // Repeated keys replace, not duplicate.
+        let j2 = BenchReport::new("a").field("unit", Json::str("b")).to_json();
+        assert_eq!(j2.get("unit").as_str(), Some("b"));
+    }
+
+    #[test]
+    fn kernels_json_shape() {
+        let records = vec![
+            KernelRecord {
+                label: "pogo-f32".into(),
+                kernel: "fused".into(),
+                p: 16,
+                n: 16,
+                batch: 4096,
+                us_per_matrix: 0.8,
+                gb_per_s: 12.0,
+            },
+            KernelRecord {
+                label: "pogo-f32".into(),
+                kernel: "naive".into(),
+                p: 16,
+                n: 16,
+                batch: 4096,
+                us_per_matrix: 2.0,
+                gb_per_s: 4.8,
+            },
+        ];
+        let j = kernels_json("portable", &records, &[("16x16@4096".to_string(), 2.5)]);
+        assert_eq!(j.get("unit").as_str(), Some("us_per_matrix_step"));
+        assert_eq!(j.get("kernel").as_str(), Some("portable"));
+        let recs = j.get("records").as_arr().unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].get("shape").as_str(), Some("16x16"));
+        assert_eq!(recs[0].get("kernel").as_str(), Some("fused"));
+        assert_eq!(recs[0].get("batch").as_usize(), Some(4096));
+        assert_eq!(recs[0].get("gb_per_s").as_f64(), Some(12.0));
+        assert_eq!(j.get("speedup_fused_vs_naive").get("16x16@4096").as_f64(), Some(2.5));
         // Round-trips through the in-crate parser (what CI's jq reads).
         let back = crate::util::json::Json::parse(&j.to_string()).unwrap();
         assert_eq!(back, j);

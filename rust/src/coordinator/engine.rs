@@ -14,7 +14,7 @@
 //! experiment drivers emit a `*.spec.json` manifest next to each CSV and
 //! the CLI accepts `pogo run --spec <file.json>`.
 
-use crate::linalg::Complex;
+use crate::linalg::{Complex, KernelChoice};
 use crate::optim::base::BaseOptKind;
 use crate::optim::pogo::LambdaPolicy;
 use crate::optim::registry as methods;
@@ -37,6 +37,10 @@ pub struct OptimizerSpec {
     pub submanifold_dim: usize,
     pub seed: u64,
     pub engine: Engine,
+    /// Batched-engine execution path (`auto`/`fused`/`naive`) —
+    /// bit-identical by the StepKernel contract, so a pure perf knob;
+    /// ignored by the loop and XLA engines.
+    pub kernel: KernelChoice,
 }
 
 impl OptimizerSpec {
@@ -50,6 +54,7 @@ impl OptimizerSpec {
             submanifold_dim: 32,
             seed: 0,
             engine: Engine::Rust,
+            kernel: KernelChoice::Auto,
         }
     }
 
@@ -60,6 +65,11 @@ impl OptimizerSpec {
 
     pub fn with_engine(mut self, engine: Engine) -> Self {
         self.engine = engine;
+        self
+    }
+
+    pub fn with_kernel(mut self, kernel: KernelChoice) -> Self {
+        self.kernel = kernel;
         self
     }
 
@@ -165,6 +175,7 @@ impl OptimizerSpec {
             // Seeds are u64; JSON numbers are f64 (2^53) — keep exact.
             ("seed", Json::str(self.seed.to_string())),
             ("engine", Json::str(self.engine.name())),
+            ("kernel", Json::str(self.kernel.name())),
         ])
     }
 
@@ -245,6 +256,16 @@ impl OptimizerSpec {
                     .ok_or_else(|| anyhow!("spec: 'engine' must be a string"))?;
                 spec.engine =
                     Engine::parse(s).ok_or_else(|| anyhow!("spec: unknown engine '{s}'"))?;
+            }
+        }
+        match j.get("kernel") {
+            Json::Null => {}
+            v => {
+                let s = v
+                    .as_str()
+                    .ok_or_else(|| anyhow!("spec: 'kernel' must be a string"))?;
+                spec.kernel = KernelChoice::parse(s)
+                    .ok_or_else(|| anyhow!("spec: unknown kernel choice '{s}'"))?;
             }
         }
         Ok(spec)
@@ -379,6 +400,27 @@ mod tests {
         assert_eq!(spec.method, Method::Rsdm);
         assert_eq!(spec.submanifold_dim, 32);
         assert_eq!(spec.engine, Engine::Rust);
+        assert_eq!(spec.kernel, KernelChoice::Auto);
         assert!(OptimizerSpec::from_json(&Json::parse(r#"{"lr": 1}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn kernel_choice_round_trips_in_spec_json() {
+        for (k, name) in [
+            (KernelChoice::Auto, "auto"),
+            (KernelChoice::Fused, "fused"),
+            (KernelChoice::Naive, "naive"),
+        ] {
+            let spec = OptimizerSpec::new(Method::Pogo, 0.1)
+                .with_engine(Engine::BatchedHost)
+                .with_kernel(k);
+            let text = spec.to_json().to_string();
+            assert!(text.contains(&format!("\"kernel\": \"{name}\"")), "{text}");
+            let back = OptimizerSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, spec);
+        }
+        // Present-but-malformed is an error, like every other field.
+        let bad = Json::parse(r#"{"method": "pogo", "lr": 0.1, "kernel": "simd"}"#).unwrap();
+        assert!(OptimizerSpec::from_json(&bad).is_err());
     }
 }

@@ -167,6 +167,7 @@ pub fn bench_report_lines(dir: &Path) -> Vec<String> {
         for name in [
             "BENCH_scale.json",
             "BENCH_born.json",
+            "BENCH_kernels.json",
             "BENCH_serve.json",
             "BENCH_artifact.json",
         ] {
@@ -213,6 +214,18 @@ fn summarize_bench(name: &str, path: &Path, j: &Json) -> Vec<String> {
                 row.get("ms").as_f64().unwrap_or(f64::NAN),
                 row.get("mb_per_s").as_f64().unwrap_or(f64::NAN),
             ));
+        }
+    } else if name == "BENCH_kernels.json" {
+        if let Some(k) = j.get("kernel").as_str() {
+            out.push(format!("  arch microkernel: {k}"));
+        }
+        if let Some(map) = j.get("speedup_fused_vs_naive").as_obj() {
+            for (cell, s) in map {
+                out.push(format!(
+                    "  {cell:<14} fused {:.2}x naive",
+                    s.as_f64().unwrap_or(f64::NAN)
+                ));
+            }
         }
     } else if let Some(map) = j.get("speedup_batched_vs_loop").as_obj() {
         for (b, s) in map {
@@ -337,6 +350,12 @@ mod tests {
                           "mb_per_s": 640.0}]}"#,
         )
         .unwrap();
+        std::fs::write(
+            d.join("BENCH_kernels.json"),
+            r#"{"unit": "us_per_matrix_step", "kernel": "avx2", "records": [],
+                "speedup_fused_vs_naive": {"16x16@4096": 2.1}}"#,
+        )
+        .unwrap();
         let lines = bench_report_lines(&d);
         let text = lines.join("\n");
         assert!(text.contains("BENCH_serve.json"), "{text}");
@@ -346,6 +365,10 @@ mod tests {
         assert!(text.contains("BENCH_artifact.json"), "{text}");
         assert!(text.contains("seal"), "{text}");
         assert!(text.contains("MiB/s"), "{text}");
+        assert!(text.contains("BENCH_kernels.json"), "{text}");
+        assert!(text.contains("arch microkernel: avx2"), "{text}");
+        assert!(text.contains("16x16@4096"), "{text}");
+        assert!(text.contains("fused 2.10x naive"), "{text}");
         // report() itself must not choke on a dir holding only bench JSON.
         report(&d, None).unwrap();
         std::fs::remove_dir_all(&d).ok();

@@ -10,16 +10,22 @@
 //! `worth_parallelizing` there), so a per-matrix loop leaves every worker
 //! idle. Here the unit of parallel work is a contiguous *chunk of the
 //! batch*: each worker runs the very same serial row-range kernels
-//! (`mm_rows` / `ah_b_rows` / `a_bh_rows`) once per matrix in its chunk,
-//! which makes batched results bit-identical to the single-matrix entry
-//! points — the property the batched-vs-loop parity suite pins down.
+//! (`mm_rows` / `ah_b_rows` / `a_bh_rows`, dispatched through the
+//! runtime-selected [`StepKernel`](crate::linalg::StepKernel)) once per
+//! matrix in its chunk, which makes batched results bit-identical to the
+//! single-matrix entry points — the property the batched-vs-loop parity
+//! suite pins down.
+//!
+//! [`for_each_mat_fused`] is the driver for the fused single-pass step
+//! (`StepKernel::pogo_step` / `landing_step`): same batch-chunk sharding,
+//! but each worker owns a mutable window of the iterate tensor *plus* the
+//! matching window of a per-matrix `f64` output (λ / safeguarded η).
 //!
 //! Layout: row-major per matrix, matrices contiguous (matrix `i` occupies
 //! `data[i·p·n .. (i+1)·p·n]`), matching the XLA engine's `(B, p, n)`
 //! literal layout so batches can cross engines without reshuffling.
 
 use super::mat::Mat;
-use super::matmul::{a_bh_rows, ah_b_rows, mm_rows};
 use super::scalar::{Field, Scalar};
 use crate::util::pool;
 
@@ -352,6 +358,63 @@ where
     }
 }
 
+/// Flop estimate for one fused POGO/Landing step over a `(B, p, n)`
+/// batch: ~6 matrix products of ~2·p²·n flops each per element (two
+/// grams, two relative-gradient products, the normal/correction product,
+/// and the elementwise passes folded in as product-equivalents), so
+/// `12·B·p²·n`. Used only for the parallelization decision — the
+/// threshold logic never needs exact counts.
+#[inline]
+pub fn fused_step_flops(b: usize, p: usize, n: usize) -> usize {
+    12 * b * p * p * n
+}
+
+/// Minimum total flops before a fused step shards the batch across
+/// workers. The 5-pass world pays one spawn *per kernel pass*
+/// (`BATCH_PAR_FLOPS` gates each of them separately); the fused step pays
+/// ONE spawn for the whole update, so the spawn amortizes over ~6× more
+/// arithmetic and the same absolute floor (2²⁰ flops per spawn) engages
+/// at ~6× smaller batches. At the Fig. 1 shape (3×3, 324 fused flops
+/// per element) the pool engages from B ≈ 3.2k upward; a single 3×3 step
+/// (B = 1) can never cross the floor.
+const FUSED_PAR_FLOPS: usize = 1 << 20;
+
+/// Whether a fused batched step of `total_flops` work (see
+/// [`fused_step_flops`]) should shard batch chunks across the pool.
+#[inline]
+pub fn fused_worth_parallelizing(total_flops: usize) -> bool {
+    total_flops >= FUSED_PAR_FLOPS
+}
+
+/// Driver for the fused single-pass step: runs
+/// `f(batch_range, x_chunk, lam_chunk)` over matching windows of the
+/// iterate tensor `x` (stride `p·n`) and the per-matrix `f64` output
+/// `lams` (stride 1, one slot per batch element — POGO's λ or Landing's
+/// safeguarded η), sharding contiguous whole-matrix chunks across the
+/// pool when `total_flops` crosses [`fused_worth_parallelizing`].
+///
+/// The closure must process its chunk strictly per-matrix (matrix `ci` of
+/// the chunk is `x_chunk[ci·p·n .. (ci+1)·p·n]`, its output slot
+/// `lam_chunk[ci]`), which keeps sharded and serial execution
+/// bit-identical.
+pub fn for_each_mat_fused<E: Field, F>(
+    x: &mut BatchMat<E>,
+    lams: &mut [f64],
+    total_flops: usize,
+    f: F,
+) where
+    F: Fn(std::ops::Range<usize>, &mut [E], &mut [f64]) + Sync,
+{
+    let (b, p, n) = x.shape();
+    assert_eq!(lams.len(), b, "one lambda slot per batch element");
+    let stride = p * n;
+    if !fused_worth_parallelizing(total_flops) || b <= 1 || stride == 0 {
+        f(0..b, x.as_mut_slice(), lams);
+    } else {
+        pool::parallel_rows_pair(x.as_mut_slice(), lams, b, stride, 1, f);
+    }
+}
+
 /// `C[i] = A[i] · B[i]` for every batch element. A: `(B, m, k)`,
 /// B: `(B, k, n)`, C: `(B, m, n)`.
 pub fn batch_matmul_into<E: Field>(a: &BatchMat<E>, b: &BatchMat<E>, c: &mut BatchMat<E>) {
@@ -361,8 +424,9 @@ pub fn batch_matmul_into<E: Field>(a: &BatchMat<E>, b: &BatchMat<E>, c: &mut Bat
     assert_eq!(k, k2, "batch_matmul inner dim mismatch: {k} vs {k2}");
     assert_eq!(c.shape(), (ba, m, n), "batch_matmul output shape mismatch");
     c.as_mut_slice().fill(E::ZERO);
+    let kern = E::step_kernel();
     for_each_mat(c, 2 * ba * m * n * k, |i, out| {
-        mm_rows(a.mat(i), b.mat(i), 0..m, out, k, n);
+        kern.mm_rows(a.mat(i), b.mat(i), 0..m, out, k, n);
     });
 }
 
@@ -382,8 +446,9 @@ pub fn batch_ah_b_into<E: Field>(a: &BatchMat<E>, b: &BatchMat<E>, c: &mut Batch
     assert_eq!(k, k2, "batch_ah_b inner dim mismatch: {k} vs {k2}");
     assert_eq!(c.shape(), (ba, m, n), "batch_ah_b output shape mismatch");
     c.as_mut_slice().fill(E::ZERO);
+    let kern = E::step_kernel();
     for_each_mat(c, 2 * ba * m * n * k, |i, out| {
-        ah_b_rows(a.mat(i), b.mat(i), 0..m, out, k, m, n);
+        kern.ah_b_rows(a.mat(i), b.mat(i), 0..m, out, k, m, n);
     });
 }
 
@@ -402,8 +467,9 @@ pub fn batch_a_bh_into<E: Field>(a: &BatchMat<E>, b: &BatchMat<E>, c: &mut Batch
     assert_eq!(ba, bb, "batch_a_bh batch mismatch: {ba} vs {bb}");
     assert_eq!(k, k2, "batch_a_bh inner dim mismatch: {k} vs {k2}");
     assert_eq!(c.shape(), (ba, m, n), "batch_a_bh output shape mismatch");
+    let kern = E::step_kernel();
     for_each_mat(c, 2 * ba * m * n * k, |i, out| {
-        a_bh_rows(a.mat(i), b.mat(i), 0..m, out, k, n);
+        kern.a_bh_rows(a.mat(i), b.mat(i), 0..m, out, k, n);
     });
 }
 
@@ -594,6 +660,52 @@ mod tests {
             want.sub_eye_inplace();
             assert!(batch.copy_mat(i).sub(&want).max_abs() == 0.0);
             assert!(sym.copy_mat(i).sub(&mats[i].sym()).max_abs() == 0.0);
+        }
+    }
+
+    #[test]
+    fn fused_threshold_keeps_small_steps_serial() {
+        // Regression for the fused-kernel re-derivation: a single 3×3
+        // fused step (324 flops) must never spawn threads — nor must the
+        // whole Fig. 1 B = 1024 batch of them; the pool engages only from
+        // B ≈ 3.2k upward at that shape.
+        assert!(!fused_worth_parallelizing(fused_step_flops(1, 3, 3)));
+        assert!(!fused_worth_parallelizing(fused_step_flops(1024, 3, 3)));
+        assert!(fused_worth_parallelizing(fused_step_flops(4096, 3, 3)));
+        // The floor itself: one spawn per 2²⁰ fused flops.
+        assert!(fused_worth_parallelizing(1 << 20));
+        assert!(!fused_worth_parallelizing((1 << 20) - 1));
+        // Flop model sanity: 12·B·p²·n.
+        assert_eq!(fused_step_flops(2, 3, 5), 12 * 2 * 9 * 5);
+    }
+
+    #[test]
+    fn for_each_mat_fused_covers_serial_and_parallel() {
+        // Drive the fused driver with a recognizable per-matrix stamp on
+        // both sides of the threshold; sharding must not change results.
+        for (b, p, n) in [(7usize, 3usize, 3usize), (4096, 3, 3)] {
+            let mut x = BatchMat::<f64>::zeros(b, p, n);
+            let mut lams = vec![0.0f64; b];
+            let stride = p * n;
+            for_each_mat_fused(
+                &mut x,
+                &mut lams,
+                fused_step_flops(b, p, n),
+                |range, xc, lc| {
+                    for (ci, i) in range.enumerate() {
+                        for (j, v) in xc[ci * stride..(ci + 1) * stride].iter_mut().enumerate() {
+                            *v = (i * stride + j) as f64;
+                        }
+                        lc[ci] = i as f64 + 0.5;
+                    }
+                },
+            );
+            for (j, &v) in x.as_slice().iter().enumerate() {
+                assert_eq!(v, j as f64, "B={b}");
+            }
+            for (i, &l) in lams.iter().enumerate() {
+                assert_eq!(l, i as f64 + 0.5, "B={b}");
+            }
         }
     }
 

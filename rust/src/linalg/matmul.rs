@@ -1,19 +1,28 @@
 //! Cache-blocked, multi-threaded matrix multiplication, generic over a
 //! [`Field`] element.
 //!
-//! The three product shapes the orthoptimizers need are implemented as
-//! dedicated entry points so no explicit transposes (or conjugations) are
-//! materialized on the hot path:
+//! The single entry point is the adjoint-parameterized
+//! [`gemm`]`(opa, opb, a, b)` computing `C = op(A)·op(B)` with
+//! `op ∈ {`[`Op::N`]`, `[`Op::H`]`}`, so no explicit transposes (or
+//! conjugations) are materialized on the hot path. The historical named
+//! entry points (`matmul`, `matmul_ah_b`, `matmul_a_bh`, the `_at_b` /
+//! `_a_bt` real aliases, and their `_into` twins) survive as thin
+//! `#[inline]` wrappers over `gemm` so call sites migrate at leisure:
 //!
-//! - `matmul(A, B)      = A · B`
-//! - `matmul_ah_b(A, B) = Aᴴ · B`   (relative gradient `Xᴴ G`)
-//! - `matmul_a_bh(A, B) = A · Bᴴ`   (gram `M Mᴴ`, normal step `(I−MMᴴ)M`)
+//! - `matmul(A, B)      = gemm(N, N, ..) = A · B`
+//! - `matmul_ah_b(A, B) = gemm(H, N, ..) = Aᴴ · B`   (relative gradient `Xᴴ G`)
+//! - `matmul_a_bh(A, B) = gemm(N, H, ..) = A · Bᴴ`   (gram `M Mᴴ`, normal step)
 //!
 //! On real fields conjugation is the identity, so `matmul_at_b` /
 //! `matmul_a_bt` remain as the familiar real-named aliases and compile to
 //! exactly the pre-`Field` kernels. A complex product through the same
 //! kernels performs 4 real multiplies per element pair in place of the old
 //! split-plane `CMat` scheme's 4 real matmuls — same flops, one pass.
+//!
+//! `gemm` routes its row kernels through the runtime-selected
+//! [`StepKernel`](crate::linalg::StepKernel) (`E::step_kernel()`), so a
+//! single-matrix product picks up the same AVX2/NEON microkernels as the
+//! fused batched step — and, by the kernel contract, the same bits.
 //!
 //! The kernel is an i-k-j loop with an axpy inner loop, which LLVM
 //! auto-vectorizes to the native SIMD width at `opt-level=3`; k is blocked
@@ -27,8 +36,10 @@ use super::mat::Mat;
 use super::scalar::{Field, Scalar};
 use crate::util::pool;
 
-/// k-block size: keep a (KB)-long stripe of B rows hot in cache.
-const KB: usize = 256;
+/// k-block size: keep a (KB)-long stripe of B rows hot in cache. Shared
+/// with the arch microkernels in `linalg::simd` so blocking (and thus
+/// summation order) is identical across kernels.
+pub(crate) const KB: usize = 256;
 /// Minimum flops before we bother spawning threads.
 const PAR_FLOPS: usize = 1 << 22;
 
@@ -125,107 +136,171 @@ pub(crate) fn a_bh_rows<E: Field>(
     }
 }
 
-/// `C = A · B`, allocating the output.
+/// How an operand enters a [`gemm`] product.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    /// Use the operand as stored.
+    N,
+    /// Use the conjugate transpose (plain transpose on real fields).
+    H,
+}
+
+/// `C = op(A) · op(B)`, allocating the output.
+///
+/// The one matmul entry point: every named product (`matmul`,
+/// `matmul_ah_b`, …) is an `#[inline]` alias onto this. Row kernels are
+/// dispatched through the runtime-selected
+/// [`StepKernel`](crate::linalg::StepKernel) for `E`.
+pub fn gemm<E: Field>(opa: Op, opb: Op, a: &Mat<E>, b: &Mat<E>) -> Mat<E> {
+    let m = match opa {
+        Op::N => a.rows(),
+        Op::H => a.cols(),
+    };
+    let n = match opb {
+        Op::N => b.cols(),
+        Op::H => b.rows(),
+    };
+    let mut c = Mat::zeros(m, n);
+    gemm_into(opa, opb, a, b, &mut c);
+    c
+}
+
+/// `C = op(A) · op(B)` into a preallocated output (zeroed here).
+pub fn gemm_into<E: Field>(opa: Op, opb: Op, a: &Mat<E>, b: &Mat<E>, c: &mut Mat<E>) {
+    let kern = E::step_kernel();
+    match (opa, opb) {
+        (Op::N, Op::N) => {
+            let (m, k) = a.shape();
+            let (k2, n) = b.shape();
+            assert_eq!(k, k2, "gemm(N,N) inner dim mismatch: {k} vs {k2}");
+            assert_eq!(c.shape(), (m, n), "gemm(N,N) output shape mismatch");
+            c.as_mut_slice().fill(E::ZERO);
+
+            let a_data = a.as_slice();
+            let b_data = b.as_slice();
+            if !worth_parallelizing(2 * m * n * k) {
+                kern.mm_rows(a_data, b_data, 0..m, c.as_mut_slice(), k, n);
+            } else {
+                pool::parallel_rows(c.as_mut_slice(), m, n, |rows, chunk| {
+                    kern.mm_rows(a_data, b_data, rows, chunk, k, n)
+                });
+            }
+        }
+        (Op::H, Op::N) => {
+            // A is (k × m), read row-wise as a rank-1 accumulation over k
+            // so no strided access: worker for C rows `rows` scans all k,
+            // using conj(A[kk, i]) as the scalar.
+            let (k, m) = a.shape();
+            let (k2, n) = b.shape();
+            assert_eq!(k, k2, "gemm(H,N) inner dim mismatch: {k} vs {k2}");
+            assert_eq!(c.shape(), (m, n), "gemm(H,N) output shape mismatch");
+            c.as_mut_slice().fill(E::ZERO);
+
+            let a_data = a.as_slice();
+            let b_data = b.as_slice();
+            if !worth_parallelizing(2 * m * n * k) {
+                kern.ah_b_rows(a_data, b_data, 0..m, c.as_mut_slice(), k, m, n);
+            } else {
+                pool::parallel_rows(c.as_mut_slice(), m, n, |rows, chunk| {
+                    kern.ah_b_rows(a_data, b_data, rows, chunk, k, m, n)
+                });
+            }
+        }
+        (Op::N, Op::H) => {
+            // B is (n × k); the inner loop is a conjugated dot product of
+            // two contiguous rows. Pure assignment — no pre-zeroing needed.
+            let (m, k) = a.shape();
+            let (n, k2) = b.shape();
+            assert_eq!(k, k2, "gemm(N,H) inner dim mismatch: {k} vs {k2}");
+            assert_eq!(c.shape(), (m, n), "gemm(N,H) output shape mismatch");
+
+            let a_data = a.as_slice();
+            let b_data = b.as_slice();
+            if !worth_parallelizing(2 * m * n * k) {
+                kern.a_bh_rows(a_data, b_data, 0..m, c.as_mut_slice(), k, n);
+            } else {
+                pool::parallel_rows(c.as_mut_slice(), m, n, |rows, chunk| {
+                    kern.a_bh_rows(a_data, b_data, rows, chunk, k, n)
+                });
+            }
+        }
+        (Op::H, Op::H) => {
+            // C = Aᴴ·Bᴴ = (B·A)ᴴ: form T = B·A through the (N,N) path,
+            // then write the conjugate transpose. No orthoptimizer product
+            // has this shape — it exists so the API is total.
+            let (k, m) = a.shape();
+            let (n, k2) = b.shape();
+            assert_eq!(k, k2, "gemm(H,H) inner dim mismatch: {k} vs {k2}");
+            assert_eq!(c.shape(), (m, n), "gemm(H,H) output shape mismatch");
+            let mut t = Mat::zeros(n, m);
+            gemm_into(Op::N, Op::N, b, a, &mut t);
+            for i in 0..m {
+                for j in 0..n {
+                    c[(i, j)] = t[(j, i)].conj();
+                }
+            }
+        }
+    }
+}
+
+/// `C = A · B` — alias of `gemm(N, N, ..)`.
+#[inline]
 pub fn matmul<E: Field>(a: &Mat<E>, b: &Mat<E>) -> Mat<E> {
-    let mut c = Mat::zeros(a.rows(), b.cols());
-    matmul_into(a, b, &mut c);
-    c
+    gemm(Op::N, Op::N, a, b)
 }
 
-/// `C = Aᴴ · B`, allocating the output.
+/// `C = Aᴴ · B` — alias of `gemm(H, N, ..)`.
+#[inline]
 pub fn matmul_ah_b<E: Field>(a: &Mat<E>, b: &Mat<E>) -> Mat<E> {
-    let mut c = Mat::zeros(a.cols(), b.cols());
-    matmul_ah_b_into(a, b, &mut c);
-    c
+    gemm(Op::H, Op::N, a, b)
 }
 
-/// `C = A · Bᴴ`, allocating the output.
+/// `C = A · Bᴴ` — alias of `gemm(N, H, ..)`.
+#[inline]
 pub fn matmul_a_bh<E: Field>(a: &Mat<E>, b: &Mat<E>) -> Mat<E> {
-    let mut c = Mat::zeros(a.rows(), b.rows());
-    matmul_a_bh_into(a, b, &mut c);
-    c
+    gemm(Op::N, Op::H, a, b)
 }
 
 /// `C = Aᵀ · B` — the real-field alias of [`matmul_ah_b`] (conjugation is
 /// the identity on an ordered scalar).
+#[inline]
 pub fn matmul_at_b<S: Scalar>(a: &Mat<S>, b: &Mat<S>) -> Mat<S> {
-    matmul_ah_b(a, b)
+    gemm(Op::H, Op::N, a, b)
 }
 
 /// `C = A · Bᵀ` — the real-field alias of [`matmul_a_bh`].
+#[inline]
 pub fn matmul_a_bt<S: Scalar>(a: &Mat<S>, b: &Mat<S>) -> Mat<S> {
-    matmul_a_bh(a, b)
+    gemm(Op::N, Op::H, a, b)
 }
 
-/// `C = A · B` into a preallocated output (zeroed here).
+/// `C = A · B` into a preallocated output — alias of `gemm_into(N, N, ..)`.
+#[inline]
 pub fn matmul_into<E: Field>(a: &Mat<E>, b: &Mat<E>, c: &mut Mat<E>) {
-    let (m, k) = a.shape();
-    let (k2, n) = b.shape();
-    assert_eq!(k, k2, "matmul inner dim mismatch: {k} vs {k2}");
-    assert_eq!(c.shape(), (m, n), "matmul output shape mismatch");
-    c.as_mut_slice().fill(E::ZERO);
-
-    let a_data = a.as_slice();
-    let b_data = b.as_slice();
-    if !worth_parallelizing(2 * m * n * k) {
-        mm_rows(a_data, b_data, 0..m, c.as_mut_slice(), k, n);
-    } else {
-        pool::parallel_rows(c.as_mut_slice(), m, n, |rows, chunk| {
-            mm_rows(a_data, b_data, rows, chunk, k, n)
-        });
-    }
+    gemm_into(Op::N, Op::N, a, b, c)
 }
 
-/// `C = Aᴴ · B` into a preallocated output. A is (k × m), B is (k × n),
-/// C is (m × n). Implemented as a rank-1-accumulation over k so both A and
-/// B are read row-wise (no strided access).
+/// `C = Aᴴ · B` into a preallocated output — alias of `gemm_into(H, N, ..)`.
+#[inline]
 pub fn matmul_ah_b_into<E: Field>(a: &Mat<E>, b: &Mat<E>, c: &mut Mat<E>) {
-    let (k, m) = a.shape();
-    let (k2, n) = b.shape();
-    assert_eq!(k, k2, "matmul_ah_b inner dim mismatch: {k} vs {k2}");
-    assert_eq!(c.shape(), (m, n), "matmul_ah_b output shape mismatch");
-    c.as_mut_slice().fill(E::ZERO);
-
-    let a_data = a.as_slice();
-    let b_data = b.as_slice();
-    // Parallelise over output rows (columns of A): worker for C rows
-    // `rows` scans all k, using conj(A[kk, i]) as the scalar.
-    if !worth_parallelizing(2 * m * n * k) {
-        ah_b_rows(a_data, b_data, 0..m, c.as_mut_slice(), k, m, n);
-    } else {
-        pool::parallel_rows(c.as_mut_slice(), m, n, |rows, chunk| {
-            ah_b_rows(a_data, b_data, rows, chunk, k, m, n)
-        });
-    }
+    gemm_into(Op::H, Op::N, a, b, c)
 }
 
-/// `C = A · Bᴴ` into a preallocated output. A is (m × k), B is (n × k),
-/// C is (m × n). Inner loop is a conjugated dot product of two contiguous
-/// rows.
+/// `C = A · Bᴴ` into a preallocated output — alias of `gemm_into(N, H, ..)`.
+#[inline]
 pub fn matmul_a_bh_into<E: Field>(a: &Mat<E>, b: &Mat<E>, c: &mut Mat<E>) {
-    let (m, k) = a.shape();
-    let (n, k2) = b.shape();
-    assert_eq!(k, k2, "matmul_a_bh inner dim mismatch: {k} vs {k2}");
-    assert_eq!(c.shape(), (m, n), "matmul_a_bh output shape mismatch");
-
-    let a_data = a.as_slice();
-    let b_data = b.as_slice();
-    if !worth_parallelizing(2 * m * n * k) {
-        a_bh_rows(a_data, b_data, 0..m, c.as_mut_slice(), k, n);
-    } else {
-        pool::parallel_rows(c.as_mut_slice(), m, n, |rows, chunk| {
-            a_bh_rows(a_data, b_data, rows, chunk, k, n)
-        });
-    }
+    gemm_into(Op::N, Op::H, a, b, c)
 }
 
 /// Real-field aliases of the `_into` entry points.
+#[inline]
 pub fn matmul_at_b_into<S: Scalar>(a: &Mat<S>, b: &Mat<S>, c: &mut Mat<S>) {
-    matmul_ah_b_into(a, b, c)
+    gemm_into(Op::H, Op::N, a, b, c)
 }
 
+#[inline]
 pub fn matmul_a_bt_into<S: Scalar>(a: &Mat<S>, b: &Mat<S>, c: &mut Mat<S>) {
-    matmul_a_bh_into(a, b, c)
+    gemm_into(Op::N, Op::H, a, b, c)
 }
 
 /// `c += alpha * b` over a row; written with 8-wide unrolling so LLVM emits
@@ -248,26 +323,36 @@ fn axpy_row<E: Field>(c: &mut [E], alpha: E, b: &[E]) {
     }
 }
 
-/// Conjugated dot product `Σ a_i · conj(b_i)` with 4 independent
+/// Conjugated dot product `Σ a_i · conj(b_i)` with 8 independent
 /// accumulators (breaks the fp-add dependency chain; vectorizes well).
 /// Real fields: a plain dot product.
+///
+/// The accumulator layout is a cross-kernel contract: the AVX2/NEON dot
+/// products in `linalg::simd` keep one vector lane per accumulator (one
+/// 8-lane f32 register, two 4-lane f64 registers, …) and reduce in the
+/// same left-fold order `acc0 + acc1 + … + acc7 + tail`, which is what
+/// makes kernel selection bit-transparent.
 #[inline]
 fn dot_row_conj<E: Field>(a: &[E], b: &[E]) -> E {
     debug_assert_eq!(a.len(), b.len());
     let n = a.len();
-    let mut acc = [E::ZERO; 4];
-    let chunks = n / 4;
+    let mut acc = [E::ZERO; 8];
+    let chunks = n / 8;
     for ch in 0..chunks {
-        let base = ch * 4;
-        for u in 0..4 {
+        let base = ch * 8;
+        for u in 0..8 {
             acc[u] += a[base + u].mul_conj(b[base + u]);
         }
     }
+    let mut s = acc[0];
+    for &av in &acc[1..] {
+        s += av;
+    }
     let mut tail = E::ZERO;
-    for idx in chunks * 4..n {
+    for idx in chunks * 8..n {
         tail += a[idx].mul_conj(b[idx]);
     }
-    acc[0] + acc[1] + acc[2] + acc[3] + tail
+    s + tail
 }
 
 #[cfg(test)]
@@ -371,6 +456,45 @@ mod tests {
         let mut c3 = Mat::<f64>::zeros(m, n);
         a_bh_rows(a.as_slice(), bt.as_slice(), 0..m, c3.as_mut_slice(), k, n);
         assert!(c3.sub(&matmul_a_bt(&a, &bt)).max_abs() == 0.0);
+    }
+
+    #[test]
+    fn gemm_aliases_are_bit_identical() {
+        // The named entry points are #[inline] wrappers over gemm; drive
+        // both spellings and require exact equality.
+        let mut rng = Rng::seed_from_u64(9);
+        let (m, k, n) = (6, 10, 8);
+        let a = Mat::<f64>::randn(m, k, &mut rng);
+        let b = Mat::<f64>::randn(k, n, &mut rng);
+        assert!(gemm(Op::N, Op::N, &a, &b).sub(&matmul(&a, &b)).max_abs() == 0.0);
+
+        let at = Mat::<f64>::randn(k, m, &mut rng);
+        assert!(gemm(Op::H, Op::N, &at, &b).sub(&matmul_at_b(&at, &b)).max_abs() == 0.0);
+
+        let bt = Mat::<f64>::randn(n, k, &mut rng);
+        assert!(gemm(Op::N, Op::H, &a, &bt).sub(&matmul_a_bt(&a, &bt)).max_abs() == 0.0);
+    }
+
+    #[test]
+    fn gemm_hh_matches_adjoint_composition() {
+        // (H,H) is the one shape with no dedicated kernel: C = Aᴴ·Bᴴ must
+        // equal the materialized-transpose composition.
+        let mut rng = Rng::seed_from_u64(10);
+        let a = Mat::<f64>::randn(7, 5, &mut rng); // op(A): 5×7
+        let b = Mat::<f64>::randn(9, 7, &mut rng); // op(B): 7×9
+        let c = gemm(Op::H, Op::H, &a, &b);
+        let r = naive(&a.transpose(), &b.transpose());
+        assert!(c.sub(&r).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn complex_gemm_hh_conjugates() {
+        let mut rng = Rng::seed_from_u64(11);
+        let a = CM::randn(6, 4, &mut rng); // op(A): 4×6
+        let b = CM::randn(5, 6, &mut rng); // op(B): 6×5
+        let fast = gemm(Op::H, Op::H, &a, &b);
+        let slow = matmul(&a.adjoint(), &b.adjoint());
+        assert!(cnorm(&fast.sub(&slow)) < 1e-10);
     }
 
     #[test]

@@ -23,6 +23,12 @@
 //! - Batch parallelism lives in [`BatchMat`] (`batch` module): a `(B, p, n)`
 //!   group of small matrices is stepped by sharding the *batch* across
 //!   workers, never by spawning inside a single small product.
+//! - Kernel dispatch lives in [`StepKernel`] (`step_kernel` module): the
+//!   row-level matmul primitives AND the fused single-pass POGO/Landing
+//!   steps are trait methods, with a portable field-generic implementation
+//!   and AVX2/NEON microkernels (`simd` module) selected once at startup
+//!   per element type — all bit-identical by contract, so selection is
+//!   invisible to everything above.
 
 mod batch;
 mod complexmat;
@@ -33,17 +39,23 @@ mod norms;
 mod polar;
 mod qr;
 mod scalar;
+mod simd;
+mod step_kernel;
 
 pub use batch::{
     batch_a_bh, batch_a_bh_into, batch_a_bt, batch_a_bt_into, batch_ah_b, batch_ah_b_into,
-    batch_at_b, batch_at_b_into, batch_matmul, batch_matmul_into, BatchMat,
+    batch_at_b, batch_at_b_into, batch_matmul, batch_matmul_into, for_each_mat_fused,
+    fused_step_flops, fused_worth_parallelizing, BatchMat,
 };
 pub use complexmat::CMat;
 pub use eig::{sym_eig, with_spectrum, SymEig};
 pub use mat::Mat;
 pub use matmul::{
-    matmul, matmul_a_bh, matmul_a_bh_into, matmul_a_bt, matmul_a_bt_into, matmul_ah_b,
-    matmul_ah_b_into, matmul_at_b, matmul_at_b_into, matmul_into,
+    gemm, gemm_into, matmul, matmul_a_bh, matmul_a_bh_into, matmul_a_bt, matmul_a_bt_into,
+    matmul_ah_b, matmul_ah_b_into, matmul_at_b, matmul_at_b_into, matmul_into, Op,
+};
+pub use step_kernel::{
+    KernelChoice, LandingParams, PogoLambda, StepKernel, StepScratch, PORTABLE,
 };
 pub use norms::{frob_norm, spectral_norm_est};
 pub use polar::{polar_project, polar_project_complex, PolarOpts};

@@ -75,6 +75,13 @@ pub trait Field:
     /// Draw a standard Gaussian element: `N(0, 1)` for real fields; for
     /// complex, re/im each `N(0, ½)` so that `E|z|² = 1`.
     fn sample_gaussian(rng: &mut Rng) -> Self;
+    /// The runtime-selected [`StepKernel`](crate::linalg::StepKernel) for
+    /// this element type: an arch microkernel (AVX2/NEON) for `f32`/`f64`
+    /// once feature detection succeeds, the portable kernel otherwise and
+    /// for complex elements. All kernels are bit-identical by contract
+    /// (see `linalg::step_kernel`), so callers may treat this as a pure
+    /// perf hint.
+    fn step_kernel() -> &'static dyn crate::linalg::step_kernel::StepKernel<Self>;
 }
 
 /// Real scalar: a totally-ordered [`Field`] over itself.
@@ -93,7 +100,7 @@ pub trait Scalar: Field<Real = Self> + PartialOrd {
 }
 
 macro_rules! impl_real_field {
-    ($t:ty) => {
+    ($t:ty, $sel:path) => {
         impl Field for $t {
             type Real = $t;
 
@@ -141,12 +148,16 @@ macro_rules! impl_real_field {
             fn sample_gaussian(rng: &mut Rng) -> Self {
                 rng.gaussian() as $t
             }
+            #[inline]
+            fn step_kernel() -> &'static dyn crate::linalg::step_kernel::StepKernel<Self> {
+                $sel()
+            }
         }
     };
 }
 
-impl_real_field!(f32);
-impl_real_field!(f64);
+impl_real_field!(f32, crate::linalg::step_kernel::select_f32);
+impl_real_field!(f64, crate::linalg::step_kernel::select_f64);
 
 impl Scalar for f32 {
     const EPS: Self = f32::EPSILON;
@@ -378,6 +389,12 @@ impl<S: Scalar> Field for Complex<S> {
             re: S::from_f64(rng.gaussian() * s),
             im: S::from_f64(rng.gaussian() * s),
         }
+    }
+    #[inline]
+    fn step_kernel() -> &'static dyn crate::linalg::step_kernel::StepKernel<Self> {
+        // The arch microkernels cover real lanes only; complex elements
+        // always run the field-generic portable kernel.
+        &crate::linalg::step_kernel::PORTABLE
     }
 }
 

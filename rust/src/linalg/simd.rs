@@ -1,0 +1,372 @@
+//! Arch-specific `StepKernel` microkernels (AVX2 on `x86_64`, NEON on
+//! `aarch64`), always compiled on their arch and selected at runtime by
+//! `step_kernel::select_f32` / `select_f64` after feature detection.
+//!
+//! **Lane-exact by construction.** Each microkernel performs the same
+//! arithmetic in the same order as the portable kernel: the vector
+//! accumulators map lane-for-lane onto the portable kernel's 8
+//! independent dot accumulators, horizontal reduction sums the lanes in
+//! the portable order, and products use multiply-then-add rather than
+//! FMA (a fused multiply-add rounds once where mul+add rounds twice, so
+//! contraction would make kernel selection observable). That makes
+//! kernel choice bit-transparent — the property the batched↔loop and
+//! fused↔naive parity suites, checkpoint replay, and serve's
+//! bit-identical-jobs guarantee all lean on. The win over the portable
+//! kernel is guaranteed vectorization (independent of LLVM's
+//! autovectorizer heuristics) and pointer-based inner loops with no
+//! bounds checks.
+//!
+//! Safety: the `#[target_feature]` functions here are only reachable
+//! through the `AVX2` / `NEON` statics, which the selector hands out
+//! strictly after `is_x86_feature_detected!` / NEON detection succeeds.
+
+#![allow(clippy::missing_safety_doc)]
+
+/// Shared row-loop skeleton over an arch-specific `axpy`/`dot` pair.
+/// Mirrors `matmul::{mm_rows, ah_b_rows, a_bh_rows}` exactly (same KB
+/// blocking, same zero-skip) so only the innermost vector ops differ.
+macro_rules! impl_simd_step_kernel {
+    ($kern:ty, $label:expr, $elem:ty, $axpy:path, $dot:path) => {
+        impl crate::linalg::step_kernel::StepKernel<$elem> for $kern {
+            fn name(&self) -> &'static str {
+                $label
+            }
+
+            fn mm_rows(
+                &self,
+                a: &[$elem],
+                b: &[$elem],
+                rows: std::ops::Range<usize>,
+                c_chunk: &mut [$elem],
+                k: usize,
+                n: usize,
+            ) {
+                for k0 in (0..k).step_by(crate::linalg::matmul::KB) {
+                    let k1 = (k0 + crate::linalg::matmul::KB).min(k);
+                    for (ci, i) in rows.clone().enumerate() {
+                        let a_row = &a[i * k..(i + 1) * k];
+                        let c_row = &mut c_chunk[ci * n..(ci + 1) * n];
+                        for kk in k0..k1 {
+                            let aik = a_row[kk];
+                            if aik == 0.0 {
+                                continue;
+                            }
+                            // SAFETY: reachable only after feature detection.
+                            unsafe { $axpy(c_row, aik, &b[kk * n..(kk + 1) * n]) };
+                        }
+                    }
+                }
+            }
+
+            fn ah_b_rows(
+                &self,
+                a: &[$elem],
+                b: &[$elem],
+                rows: std::ops::Range<usize>,
+                c_chunk: &mut [$elem],
+                k: usize,
+                m: usize,
+                n: usize,
+            ) {
+                for k0 in (0..k).step_by(crate::linalg::matmul::KB) {
+                    let k1 = (k0 + crate::linalg::matmul::KB).min(k);
+                    for kk in k0..k1 {
+                        let a_row = &a[kk * m..(kk + 1) * m];
+                        let b_row = &b[kk * n..(kk + 1) * n];
+                        for (ci, i) in rows.clone().enumerate() {
+                            // Real field: conj is the identity.
+                            let aki = a_row[i];
+                            if aki == 0.0 {
+                                continue;
+                            }
+                            // SAFETY: reachable only after feature detection.
+                            unsafe { $axpy(&mut c_chunk[ci * n..(ci + 1) * n], aki, b_row) };
+                        }
+                    }
+                }
+            }
+
+            fn a_bh_rows(
+                &self,
+                a: &[$elem],
+                b: &[$elem],
+                rows: std::ops::Range<usize>,
+                c_chunk: &mut [$elem],
+                k: usize,
+                n: usize,
+            ) {
+                for (ci, i) in rows.enumerate() {
+                    let a_row = &a[i * k..(i + 1) * k];
+                    let c_row = &mut c_chunk[ci * n..(ci + 1) * n];
+                    for j in 0..n {
+                        // SAFETY: reachable only after feature detection.
+                        c_row[j] = unsafe { $dot(a_row, &b[j * k..(j + 1) * k]) };
+                    }
+                }
+            }
+        }
+    };
+}
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod x86 {
+    use std::arch::x86_64::*;
+
+    /// AVX2 microkernel for `f32`/`f64` (mul+add, never FMA — see the
+    /// module docs for why contraction is deliberately avoided).
+    pub struct Avx2Kernel;
+
+    /// Selected by `step_kernel::select_*` after
+    /// `is_x86_feature_detected!("avx2")`.
+    pub static AVX2: Avx2Kernel = Avx2Kernel;
+
+    /// `c += alpha·b`, 8 lanes per iteration. Elementwise, so any vector
+    /// width gives bit-identical results to the scalar loop.
+    #[target_feature(enable = "avx2")]
+    unsafe fn axpy_f32(c: &mut [f32], alpha: f32, b: &[f32]) {
+        debug_assert_eq!(c.len(), b.len());
+        let n = c.len();
+        let cp = c.as_mut_ptr();
+        let bp = b.as_ptr();
+        let va = _mm256_set1_ps(alpha);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let vb = _mm256_loadu_ps(bp.add(i));
+            let vc = _mm256_loadu_ps(cp.add(i));
+            _mm256_storeu_ps(cp.add(i), _mm256_add_ps(vc, _mm256_mul_ps(va, vb)));
+            i += 8;
+        }
+        while i < n {
+            *cp.add(i) += alpha * *bp.add(i);
+            i += 1;
+        }
+    }
+
+    /// `c += alpha·b`, 4 `f64` lanes per iteration.
+    #[target_feature(enable = "avx2")]
+    unsafe fn axpy_f64(c: &mut [f64], alpha: f64, b: &[f64]) {
+        debug_assert_eq!(c.len(), b.len());
+        let n = c.len();
+        let cp = c.as_mut_ptr();
+        let bp = b.as_ptr();
+        let va = _mm256_set1_pd(alpha);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let vb = _mm256_loadu_pd(bp.add(i));
+            let vc = _mm256_loadu_pd(cp.add(i));
+            _mm256_storeu_pd(cp.add(i), _mm256_add_pd(vc, _mm256_mul_pd(va, vb)));
+            i += 4;
+        }
+        while i < n {
+            *cp.add(i) += alpha * *bp.add(i);
+            i += 1;
+        }
+    }
+
+    /// Dot product with one 8-lane accumulator: lane `u` holds exactly the
+    /// portable kernel's accumulator `acc[u]`, and the horizontal sum
+    /// reduces the lanes in the portable order (acc0 + acc1 + … + tail).
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut acc = _mm256_setzero_ps();
+        let chunks = n / 8;
+        for ch in 0..chunks {
+            let base = ch * 8;
+            let va = _mm256_loadu_ps(ap.add(base));
+            let vb = _mm256_loadu_ps(bp.add(base));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut s = lanes[0];
+        for &l in &lanes[1..] {
+            s += l;
+        }
+        let mut tail = 0.0f32;
+        for idx in chunks * 8..n {
+            tail += *ap.add(idx) * *bp.add(idx);
+        }
+        s + tail
+    }
+
+    /// Dot product with two 4-lane accumulators covering the portable
+    /// kernel's accumulators 0–3 and 4–7 per 8-element chunk.
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_f64(a: &[f64], b: &[f64]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut acc0 = _mm256_setzero_pd();
+        let mut acc1 = _mm256_setzero_pd();
+        let chunks = n / 8;
+        for ch in 0..chunks {
+            let base = ch * 8;
+            acc0 = _mm256_add_pd(
+                acc0,
+                _mm256_mul_pd(_mm256_loadu_pd(ap.add(base)), _mm256_loadu_pd(bp.add(base))),
+            );
+            acc1 = _mm256_add_pd(
+                acc1,
+                _mm256_mul_pd(
+                    _mm256_loadu_pd(ap.add(base + 4)),
+                    _mm256_loadu_pd(bp.add(base + 4)),
+                ),
+            );
+        }
+        let mut lanes = [0.0f64; 8];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc0);
+        _mm256_storeu_pd(lanes.as_mut_ptr().add(4), acc1);
+        let mut s = lanes[0];
+        for &l in &lanes[1..] {
+            s += l;
+        }
+        let mut tail = 0.0f64;
+        for idx in chunks * 8..n {
+            tail += *ap.add(idx) * *bp.add(idx);
+        }
+        s + tail
+    }
+
+    impl_simd_step_kernel!(Avx2Kernel, "avx2", f32, axpy_f32, dot_f32);
+    impl_simd_step_kernel!(Avx2Kernel, "avx2", f64, axpy_f64, dot_f64);
+}
+
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod arm {
+    use std::arch::aarch64::*;
+
+    /// NEON microkernel for `f32`/`f64` (explicit `vmulq` + `vaddq`, not
+    /// `vmlaq`/FMLA — see the module docs on avoiding contraction).
+    pub struct NeonKernel;
+
+    /// Selected by `step_kernel::select_*` after NEON detection.
+    pub static NEON: NeonKernel = NeonKernel;
+
+    /// `c += alpha·b`, 4 `f32` lanes per iteration.
+    #[target_feature(enable = "neon")]
+    unsafe fn axpy_f32(c: &mut [f32], alpha: f32, b: &[f32]) {
+        debug_assert_eq!(c.len(), b.len());
+        let n = c.len();
+        let cp = c.as_mut_ptr();
+        let bp = b.as_ptr();
+        let va = vdupq_n_f32(alpha);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let vb = vld1q_f32(bp.add(i));
+            let vc = vld1q_f32(cp.add(i));
+            vst1q_f32(cp.add(i), vaddq_f32(vc, vmulq_f32(va, vb)));
+            i += 4;
+        }
+        while i < n {
+            *cp.add(i) += alpha * *bp.add(i);
+            i += 1;
+        }
+    }
+
+    /// `c += alpha·b`, 2 `f64` lanes per iteration.
+    #[target_feature(enable = "neon")]
+    unsafe fn axpy_f64(c: &mut [f64], alpha: f64, b: &[f64]) {
+        debug_assert_eq!(c.len(), b.len());
+        let n = c.len();
+        let cp = c.as_mut_ptr();
+        let bp = b.as_ptr();
+        let va = vdupq_n_f64(alpha);
+        let mut i = 0usize;
+        while i + 2 <= n {
+            let vb = vld1q_f64(bp.add(i));
+            let vc = vld1q_f64(cp.add(i));
+            vst1q_f64(cp.add(i), vaddq_f64(vc, vmulq_f64(va, vb)));
+            i += 2;
+        }
+        while i < n {
+            *cp.add(i) += alpha * *bp.add(i);
+            i += 1;
+        }
+    }
+
+    /// Dot product, two 4-lane accumulators = portable accumulators 0–3
+    /// and 4–7 per 8-element chunk, reduced in the portable order.
+    #[target_feature(enable = "neon")]
+    unsafe fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let chunks = n / 8;
+        for ch in 0..chunks {
+            let base = ch * 8;
+            acc0 = vaddq_f32(acc0, vmulq_f32(vld1q_f32(ap.add(base)), vld1q_f32(bp.add(base))));
+            acc1 = vaddq_f32(
+                acc1,
+                vmulq_f32(vld1q_f32(ap.add(base + 4)), vld1q_f32(bp.add(base + 4))),
+            );
+        }
+        let mut lanes = [0.0f32; 8];
+        vst1q_f32(lanes.as_mut_ptr(), acc0);
+        vst1q_f32(lanes.as_mut_ptr().add(4), acc1);
+        let mut s = lanes[0];
+        for &l in &lanes[1..] {
+            s += l;
+        }
+        let mut tail = 0.0f32;
+        for idx in chunks * 8..n {
+            tail += *ap.add(idx) * *bp.add(idx);
+        }
+        s + tail
+    }
+
+    /// Dot product, four 2-lane accumulators = portable accumulators
+    /// (0,1), (2,3), (4,5), (6,7) per 8-element chunk.
+    #[target_feature(enable = "neon")]
+    unsafe fn dot_f64(a: &[f64], b: &[f64]) -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut acc0 = vdupq_n_f64(0.0);
+        let mut acc1 = vdupq_n_f64(0.0);
+        let mut acc2 = vdupq_n_f64(0.0);
+        let mut acc3 = vdupq_n_f64(0.0);
+        let chunks = n / 8;
+        for ch in 0..chunks {
+            let base = ch * 8;
+            acc0 = vaddq_f64(acc0, vmulq_f64(vld1q_f64(ap.add(base)), vld1q_f64(bp.add(base))));
+            acc1 = vaddq_f64(
+                acc1,
+                vmulq_f64(vld1q_f64(ap.add(base + 2)), vld1q_f64(bp.add(base + 2))),
+            );
+            acc2 = vaddq_f64(
+                acc2,
+                vmulq_f64(vld1q_f64(ap.add(base + 4)), vld1q_f64(bp.add(base + 4))),
+            );
+            acc3 = vaddq_f64(
+                acc3,
+                vmulq_f64(vld1q_f64(ap.add(base + 6)), vld1q_f64(bp.add(base + 6))),
+            );
+        }
+        let mut lanes = [0.0f64; 8];
+        vst1q_f64(lanes.as_mut_ptr(), acc0);
+        vst1q_f64(lanes.as_mut_ptr().add(2), acc1);
+        vst1q_f64(lanes.as_mut_ptr().add(4), acc2);
+        vst1q_f64(lanes.as_mut_ptr().add(6), acc3);
+        let mut s = lanes[0];
+        for &l in &lanes[1..] {
+            s += l;
+        }
+        let mut tail = 0.0f64;
+        for idx in chunks * 8..n {
+            tail += *ap.add(idx) * *bp.add(idx);
+        }
+        s + tail
+    }
+
+    impl_simd_step_kernel!(NeonKernel, "neon", f32, axpy_f32, dot_f32);
+    impl_simd_step_kernel!(NeonKernel, "neon", f64, axpy_f64, dot_f64);
+}

@@ -1,0 +1,560 @@
+//! `StepKernel` — the kernel-dispatch layer under the batched engine.
+//!
+//! A [`StepKernel`] owns two things:
+//!
+//! 1. **The three row-range product primitives** (`mm_rows` / `ah_b_rows`
+//!    / `a_bh_rows`) that every matmul in the crate bottoms out in. The
+//!    [`PortableKernel`] delegates to the field-generic serial kernels in
+//!    [`super::matmul`]; the arch kernels in [`super::simd`] override them
+//!    with explicit AVX2 / NEON microkernels for `f32`/`f64`.
+//! 2. **The fused per-matrix step** ([`StepKernel::pogo_step`] /
+//!    [`StepKernel::landing_step`]): the whole POGO (Alg. 1) or Landing
+//!    update — gram, relative-gradient update, retraction/landing
+//!    correction — executed as one sweep over a single `p×n` batch
+//!    element while it is hot in L1/L2, instead of the batched engine's
+//!    historical 5 full passes over the `(B, p, n)` buffer. The provided
+//!    implementations are built on the row primitives, so an arch kernel
+//!    gets the fused+SIMD combination for free.
+//!
+//! **Selection** is per element type and process-wide:
+//! [`Field::step_kernel`] returns the kernel chosen once at first use —
+//! AVX2 on `x86_64`, NEON on `aarch64` (both runtime-detected, always
+//! compiled on their arch), portable everywhere else and for complex
+//! elements. `POGO_STEP_KERNEL=portable` forces the scalar fallback,
+//! which is how CI keeps the portable path green on feature-poor runners.
+//!
+//! **Determinism contract.** Kernel selection must never change results:
+//! the SIMD microkernels perform the *same arithmetic in the same order*
+//! as the portable kernels (vector lanes map 1:1 onto the portable
+//! accumulators; multiply-then-add, never FMA-contracted, because a fused
+//! multiply-add rounds once where the portable kernel rounds twice). The
+//! fused steps reuse the identical elementwise update order as the 5-pass
+//! composition in `optim/batched.rs`. Both invariants together are what
+//! let the parity suite (`tests/fused_parity.rs`) assert *exact* equality
+//! between fused and naive paths on any machine, and what keeps serve's
+//! bit-identical-replay guarantee independent of the host's ISA.
+
+use super::matmul;
+use super::scalar::{Field, Scalar};
+use std::ops::Range;
+use std::sync::OnceLock;
+
+/// How a [`crate::optim::batched::BatchedHost`] executes its update —
+/// round-trips through `OptimizerSpec` JSON as `"kernel"`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelChoice {
+    /// Fused single-pass step where a fused rule exists (POGO, Landing,
+    /// LandingPC); the 5-pass composition otherwise. The default.
+    #[default]
+    Auto,
+    /// Force the fused single-pass step (errors never arise: rules
+    /// without a fused form simply keep their composition).
+    Fused,
+    /// Force the historical 5-pass `BatchMat` composition.
+    Naive,
+}
+
+impl KernelChoice {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelChoice::Auto => "auto",
+            KernelChoice::Fused => "fused",
+            KernelChoice::Naive => "naive",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<KernelChoice> {
+        match s {
+            "auto" => Some(KernelChoice::Auto),
+            "fused" => Some(KernelChoice::Fused),
+            "naive" => Some(KernelChoice::Naive),
+            _ => None,
+        }
+    }
+}
+
+/// Per-matrix λ policy for the fused POGO step.
+pub enum PogoLambda<'a, E: Field> {
+    /// Fixed normal-step size (the paper's λ = ½ default).
+    Const(f64),
+    /// Solve for λ per matrix from the `p×p` gram residual `C = MMᴴ − I`
+    /// (row-major slice). The closure lives in `optim` (quartic solver);
+    /// keeping it a callback keeps `linalg` free of optimizer deps.
+    Solve(&'a (dyn Fn(&[E], usize) -> f64 + Sync)),
+}
+
+/// Hyperparameters of the fused Landing step (one struct for Landing and
+/// LandingPC — `normalize_grad` is what distinguishes them).
+#[derive(Clone, Copy, Debug)]
+pub struct LandingParams {
+    pub eta: f64,
+    pub attraction: f64,
+    pub eps_ball: f64,
+    pub safeguard: bool,
+    pub normalize_grad: bool,
+}
+
+/// Per-worker scratch for the fused steps: every intermediate of one
+/// per-matrix update, allocated once per worker thread and reused across
+/// its whole batch chunk (the 5-pass path allocates B-sized tensors per
+/// pass; this is `O(p·n)` per worker, resident in L1/L2).
+pub struct StepScratch<E: Field> {
+    /// `p×p`: gram `X Xᴴ` (Landing reuses it in place as `XXᴴ − I`).
+    xxh: Vec<E>,
+    /// `p×p`: cross gram `X Gᴴ`.
+    xgh: Vec<E>,
+    /// `p×p`: POGO's normal-step residual `M Mᴴ − I`.
+    c: Vec<E>,
+    /// `p×n`: `(XXᴴ)G` (Landing reuses it in place as `R`).
+    a1: Vec<E>,
+    /// `p×n`: `(XGᴴ)X`.
+    a2: Vec<E>,
+    /// `p×n`: POGO's `C·M` / Landing's normal gradient `(XXᴴ−I)X`.
+    bmat: Vec<E>,
+    /// `p×n`: normalized-gradient buffer (LandingPC only).
+    gbuf: Vec<E>,
+}
+
+impl<E: Field> StepScratch<E> {
+    pub fn new(p: usize, n: usize) -> Self {
+        StepScratch {
+            xxh: vec![E::ZERO; p * p],
+            xgh: vec![E::ZERO; p * p],
+            c: vec![E::ZERO; p * p],
+            a1: vec![E::ZERO; p * n],
+            a2: vec![E::ZERO; p * n],
+            bmat: vec![E::ZERO; p * n],
+            gbuf: vec![E::ZERO; p * n],
+        }
+    }
+}
+
+/// Sequential squared Frobenius norm of a buffer — same accumulation
+/// order as `BatchMat::norm_sq_per_mat` / `Mat::norm_sq`, which the
+/// fused-vs-naive parity contract depends on.
+#[inline]
+fn frob_sq<E: Field>(v: &[E]) -> E::Real {
+    let mut acc = <E::Real as Field>::ZERO;
+    for &x in v {
+        acc += x.abs_sq();
+    }
+    acc
+}
+
+/// The kernel-dispatch trait. Required methods are the three serial
+/// row-range product primitives (identical contracts to the free
+/// functions in [`super::matmul`]); the fused per-matrix steps are
+/// provided on top of them.
+pub trait StepKernel<E: Field>: Send + Sync {
+    /// Kernel name for reports (`"portable"`, `"avx2"`, `"neon"`).
+    fn name(&self) -> &'static str;
+
+    /// `C = A·B` rows `rows` (A: m×k, B: k×n; `c_chunk` pre-zeroed).
+    fn mm_rows(&self, a: &[E], b: &[E], rows: Range<usize>, c_chunk: &mut [E], k: usize, n: usize);
+
+    /// `C = Aᴴ·B` rows `rows` (A: k×m, B: k×n; `c_chunk` pre-zeroed).
+    #[allow(clippy::too_many_arguments)]
+    fn ah_b_rows(
+        &self,
+        a: &[E],
+        b: &[E],
+        rows: Range<usize>,
+        c_chunk: &mut [E],
+        k: usize,
+        m: usize,
+        n: usize,
+    );
+
+    /// `C = A·Bᴴ` rows `rows` (A: m×k, B: n×k; assignment, no pre-zero).
+    fn a_bh_rows(&self, a: &[E], b: &[E], rows: Range<usize>, c_chunk: &mut [E], k: usize, n: usize);
+
+    /// Fused POGO step (Alg. 1) on one `p×n` matrix, in place:
+    ///
+    /// ```text
+    /// M  = X − η·½((X Xᴴ)G − (X Gᴴ)X)      (relative-gradient update)
+    /// X⁺ = M − λ(M Mᴴ − I)M                 (proximal normal step)
+    /// ```
+    ///
+    /// Returns the λ applied. Identical elementwise arithmetic, in the
+    /// identical order, to the 5-pass batched composition — the parity
+    /// suite asserts exact equality, so any edit here must keep both
+    /// paths in lockstep.
+    fn pogo_step(
+        &self,
+        x: &mut [E],
+        g: &[E],
+        p: usize,
+        n: usize,
+        eta: f64,
+        lambda: &PogoLambda<'_, E>,
+        scratch: &mut StepScratch<E>,
+    ) -> f64 {
+        let StepScratch { xxh, xgh, c, a1, a2, bmat, .. } = scratch;
+        // Grams: X Xᴴ and X Gᴴ (p×p each; a_bh assigns, no zeroing).
+        self.a_bh_rows(&*x, &*x, 0..p, xxh, n, p);
+        self.a_bh_rows(&*x, g, 0..p, xgh, n, p);
+        // A1 = (X Xᴴ)·G ; A2 = (X Gᴴ)·X.
+        a1.fill(E::ZERO);
+        self.mm_rows(xxh, g, 0..p, a1, p, n);
+        a2.fill(E::ZERO);
+        self.mm_rows(xgh, &*x, 0..p, a2, p, n);
+        // M = X − η·½ A1 + η·½ A2, in place over x (two axpys, same order
+        // as the batched path).
+        let c1 = E::from_f64(-0.5 * eta);
+        let c2 = E::from_f64(0.5 * eta);
+        for (xv, &av) in x.iter_mut().zip(a1.iter()) {
+            *xv += c1 * av;
+        }
+        for (xv, &av) in x.iter_mut().zip(a2.iter()) {
+            *xv += c2 * av;
+        }
+        // C = M Mᴴ − I ; B = C·M.
+        self.a_bh_rows(&*x, &*x, 0..p, c, n, p);
+        for d in 0..p {
+            c[d * p + d] -= E::ONE;
+        }
+        bmat.fill(E::ZERO);
+        self.mm_rows(c, &*x, 0..p, bmat, p, n);
+        let lam = match lambda {
+            PogoLambda::Const(l) => *l,
+            PogoLambda::Solve(f) => f(c, p),
+        };
+        let al = E::from_f64(-lam);
+        for (xv, &bv) in x.iter_mut().zip(bmat.iter()) {
+            *xv += al * bv;
+        }
+        lam
+    }
+
+    /// Fused Landing step on one `p×n` matrix, in place:
+    ///
+    /// ```text
+    /// R  = ½((X Xᴴ)G − (X Gᴴ)X)     (relative gradient)
+    /// ∇N = (X Xᴴ − I)X              (normal/attraction gradient)
+    /// X⁺ = X − η̃(R + λ∇N)           (η̃ safeguarded per matrix)
+    /// ```
+    ///
+    /// Returns the safeguarded η̃ applied. Same f64 safeguard formula and
+    /// elementwise order as the 5-pass batched composition (exact-parity
+    /// contract, as for [`StepKernel::pogo_step`]).
+    fn landing_step(
+        &self,
+        x: &mut [E],
+        g: &[E],
+        p: usize,
+        n: usize,
+        params: &LandingParams,
+        scratch: &mut StepScratch<E>,
+    ) -> f64 {
+        let StepScratch { xxh, xgh, a1, a2, bmat, gbuf, .. } = scratch;
+        // Optional per-matrix gradient normalization (LandingPC). Same
+        // arithmetic as the batched `norm_sq_per_mat` → `scale_per_mat`
+        // sequence.
+        let g: &[E] = if params.normalize_grad {
+            let ns = frob_sq(g);
+            let nrm = Field::sqrt(ns).to_f64().max(1e-30);
+            let alpha = E::from_f64(1.0 / nrm);
+            for (dst, &v) in gbuf.iter_mut().zip(g.iter()) {
+                *dst = v * alpha;
+            }
+            gbuf
+        } else {
+            g
+        };
+        self.a_bh_rows(&*x, &*x, 0..p, xxh, n, p);
+        self.a_bh_rows(&*x, g, 0..p, xgh, n, p);
+        a1.fill(E::ZERO);
+        self.mm_rows(xxh, g, 0..p, a1, p, n);
+        a2.fill(E::ZERO);
+        self.mm_rows(xgh, &*x, 0..p, a2, p, n);
+        // R = ½(A1 − A2), reusing a1 (sub then scale, batched order).
+        let half = E::from_f64(0.5);
+        for (rv, &av) in a1.iter_mut().zip(a2.iter()) {
+            *rv = (*rv - av) * half;
+        }
+        // H = X Xᴴ − I in place over xxh; ∇N = H·X.
+        for d in 0..p {
+            xxh[d * p + d] -= E::ONE;
+        }
+        bmat.fill(E::ZERO);
+        self.mm_rows(xxh, &*x, 0..p, bmat, p, n);
+        // Safeguarded step size — the identical f64 formula of the 5-pass
+        // path (and the per-matrix loop engine).
+        let h_ns = frob_sq(xxh);
+        let r_ns = frob_sq(a1);
+        let n_ns = frob_sq(bmat);
+        let lam = params.attraction;
+        let d = Field::sqrt(h_ns).to_f64();
+        let lam_sq = r_ns.to_f64() + lam * lam * n_ns.to_f64();
+        let eta_i = if params.safeguard && lam_sq > 0.0 {
+            let slack = (params.eps_ball - d).max(0.0);
+            let b = lam * d * (1.0 - d).max(0.0);
+            let safe = (b + (b * b + lam_sq * slack).sqrt()) / lam_sq;
+            let cap = if lam > 0.0 { 0.5 / lam } else { f64::INFINITY };
+            params.eta.min(safe).min(cap)
+        } else {
+            params.eta
+        };
+        let a_r = E::from_f64(-eta_i);
+        let a_n = E::from_f64(-eta_i * lam);
+        for (xv, &rv) in x.iter_mut().zip(a1.iter()) {
+            *xv += a_r * rv;
+        }
+        for (xv, &nv) in x.iter_mut().zip(bmat.iter()) {
+            *xv += a_n * nv;
+        }
+        eta_i
+    }
+}
+
+/// The field-generic reference kernel: delegates the row primitives to
+/// the serial kernels in [`super::matmul`] (the exact code every engine
+/// ran before this dispatch layer existed). Serves all `Field` types —
+/// it is the only kernel for complex elements, and the runtime fallback
+/// (or `POGO_STEP_KERNEL=portable` override) for `f32`/`f64`.
+pub struct PortableKernel;
+
+/// The portable kernel instance (`&PORTABLE` coerces to
+/// `&'static dyn StepKernel<E>` for any field).
+pub static PORTABLE: PortableKernel = PortableKernel;
+
+impl<E: Field> StepKernel<E> for PortableKernel {
+    fn name(&self) -> &'static str {
+        "portable"
+    }
+
+    fn mm_rows(&self, a: &[E], b: &[E], rows: Range<usize>, c_chunk: &mut [E], k: usize, n: usize) {
+        matmul::mm_rows(a, b, rows, c_chunk, k, n);
+    }
+
+    fn ah_b_rows(
+        &self,
+        a: &[E],
+        b: &[E],
+        rows: Range<usize>,
+        c_chunk: &mut [E],
+        k: usize,
+        m: usize,
+        n: usize,
+    ) {
+        matmul::ah_b_rows(a, b, rows, c_chunk, k, m, n);
+    }
+
+    fn a_bh_rows(&self, a: &[E], b: &[E], rows: Range<usize>, c_chunk: &mut [E], k: usize, n: usize) {
+        matmul::a_bh_rows(a, b, rows, c_chunk, k, n);
+    }
+}
+
+/// True when `POGO_STEP_KERNEL` forces the scalar fallback (read once;
+/// the CI portable leg sets it for a whole test run).
+fn forced_portable() -> bool {
+    static FORCED: OnceLock<bool> = OnceLock::new();
+    *FORCED.get_or_init(|| {
+        matches!(
+            std::env::var("POGO_STEP_KERNEL").ok().as_deref(),
+            Some("portable") | Some("scalar")
+        )
+    })
+}
+
+/// Process-wide kernel for `f32`, selected once at first use: AVX2 on
+/// `x86_64`, NEON on `aarch64` (runtime-detected), portable otherwise.
+pub fn select_f32() -> &'static dyn StepKernel<f32> {
+    static SEL: OnceLock<&'static dyn StepKernel<f32>> = OnceLock::new();
+    *SEL.get_or_init(|| {
+        if forced_portable() {
+            return &PORTABLE;
+        }
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                return &super::simd::x86::AVX2;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                return &super::simd::arm::NEON;
+            }
+        }
+        &PORTABLE
+    })
+}
+
+/// Process-wide kernel for `f64` (same selection policy as
+/// [`select_f32`]).
+pub fn select_f64() -> &'static dyn StepKernel<f64> {
+    static SEL: OnceLock<&'static dyn StepKernel<f64>> = OnceLock::new();
+    *SEL.get_or_init(|| {
+        if forced_portable() {
+            return &PORTABLE;
+        }
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                return &super::simd::x86::AVX2;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                return &super::simd::arm::NEON;
+            }
+        }
+        &PORTABLE
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul as mm, Complex, Mat};
+    use crate::rng::Rng;
+
+    #[test]
+    fn kernel_choice_round_trips() {
+        for c in [KernelChoice::Auto, KernelChoice::Fused, KernelChoice::Naive] {
+            assert_eq!(KernelChoice::parse(c.name()), Some(c));
+        }
+        assert_eq!(KernelChoice::parse("simd"), None);
+        assert_eq!(KernelChoice::default(), KernelChoice::Auto);
+    }
+
+    #[test]
+    fn selected_kernels_match_portable_exactly() {
+        // The determinism contract: whatever `Field::step_kernel` picked
+        // on this machine, its row primitives agree with the portable
+        // kernel bit-for-bit (lane-exact SIMD, no FMA contraction).
+        let mut rng = Rng::seed_from_u64(11);
+        let (m, k, n) = (7, 19, 13);
+        let a = Mat::<f64>::randn(m, k, &mut rng);
+        let b = Mat::<f64>::randn(k, n, &mut rng);
+        let kern = <f64 as Field>::step_kernel();
+        let mut c_sel = Mat::<f64>::zeros(m, n);
+        let mut c_ref = Mat::<f64>::zeros(m, n);
+        kern.mm_rows(a.as_slice(), b.as_slice(), 0..m, c_sel.as_mut_slice(), k, n);
+        StepKernel::<f64>::mm_rows(
+            &PORTABLE,
+            a.as_slice(),
+            b.as_slice(),
+            0..m,
+            c_ref.as_mut_slice(),
+            k,
+            n,
+        );
+        assert!(c_sel.sub(&c_ref).max_abs() == 0.0, "mm_rows ({})", kern.name());
+
+        let at = Mat::<f64>::randn(k, m, &mut rng);
+        let mut d_sel = Mat::<f64>::zeros(m, n);
+        let mut d_ref = Mat::<f64>::zeros(m, n);
+        kern.ah_b_rows(at.as_slice(), b.as_slice(), 0..m, d_sel.as_mut_slice(), k, m, n);
+        StepKernel::<f64>::ah_b_rows(
+            &PORTABLE,
+            at.as_slice(),
+            b.as_slice(),
+            0..m,
+            d_ref.as_mut_slice(),
+            k,
+            m,
+            n,
+        );
+        assert!(d_sel.sub(&d_ref).max_abs() == 0.0, "ah_b_rows ({})", kern.name());
+
+        let bt = Mat::<f64>::randn(n, k, &mut rng);
+        let mut e_sel = Mat::<f64>::zeros(m, n);
+        let mut e_ref = Mat::<f64>::zeros(m, n);
+        kern.a_bh_rows(a.as_slice(), bt.as_slice(), 0..m, e_sel.as_mut_slice(), k, n);
+        StepKernel::<f64>::a_bh_rows(
+            &PORTABLE,
+            a.as_slice(),
+            bt.as_slice(),
+            0..m,
+            e_ref.as_mut_slice(),
+            k,
+            n,
+        );
+        assert!(e_sel.sub(&e_ref).max_abs() == 0.0, "a_bh_rows ({})", kern.name());
+    }
+
+    #[test]
+    fn f32_selected_kernel_matches_portable_exactly() {
+        let mut rng = Rng::seed_from_u64(12);
+        let (m, k, n) = (5, 23, 9);
+        let a = Mat::<f32>::randn(m, k, &mut rng);
+        let b = Mat::<f32>::randn(k, n, &mut rng);
+        let kern = <f32 as Field>::step_kernel();
+        let mut c_sel = Mat::<f32>::zeros(m, n);
+        let mut c_ref = Mat::<f32>::zeros(m, n);
+        kern.mm_rows(a.as_slice(), b.as_slice(), 0..m, c_sel.as_mut_slice(), k, n);
+        StepKernel::<f32>::mm_rows(
+            &PORTABLE,
+            a.as_slice(),
+            b.as_slice(),
+            0..m,
+            c_ref.as_mut_slice(),
+            k,
+            n,
+        );
+        assert!(c_sel.sub(&c_ref).max_abs() == 0.0, "mm_rows ({})", kern.name());
+
+        let bt = Mat::<f32>::randn(n, k, &mut rng);
+        let mut e_sel = Mat::<f32>::zeros(m, n);
+        let mut e_ref = Mat::<f32>::zeros(m, n);
+        kern.a_bh_rows(a.as_slice(), bt.as_slice(), 0..m, e_sel.as_mut_slice(), k, n);
+        StepKernel::<f32>::a_bh_rows(
+            &PORTABLE,
+            a.as_slice(),
+            bt.as_slice(),
+            0..m,
+            e_ref.as_mut_slice(),
+            k,
+            n,
+        );
+        assert!(e_sel.sub(&e_ref).max_abs() == 0.0, "a_bh_rows ({})", kern.name());
+    }
+
+    #[test]
+    fn complex_elements_use_portable() {
+        assert_eq!(<Complex<f64> as Field>::step_kernel().name(), "portable");
+        assert_eq!(<Complex<f32> as Field>::step_kernel().name(), "portable");
+    }
+
+    #[test]
+    fn fused_pogo_step_matches_composition() {
+        // Drive the portable kernel's fused step directly against a
+        // hand-rolled 5-product composition on one matrix; exact match.
+        let mut rng = Rng::seed_from_u64(13);
+        let (p, n) = (4, 9);
+        let x0 = crate::manifold::stiefel::random_point_t::<f64>(p, n, &mut rng);
+        let g = Mat::<f64>::randn(p, n, &mut rng).scale(0.3);
+        let eta = 0.2;
+
+        // Composition (same ops the batched naive path performs).
+        let xxh = mm::matmul_a_bh(&x0, &x0);
+        let xgh = mm::matmul_a_bh(&x0, &g);
+        let a1 = mm::matmul(&xxh, &g);
+        let a2 = mm::matmul(&xgh, &x0);
+        let mut m = x0.clone();
+        m.axpy(-0.5 * eta, &a1);
+        m.axpy(0.5 * eta, &a2);
+        let mut c = mm::matmul_a_bh(&m, &m);
+        c.sub_eye_inplace();
+        let bmat = mm::matmul(&c, &m);
+        m.axpy(-0.5, &bmat);
+
+        // Fused.
+        let mut xf = x0.clone();
+        let mut scratch = StepScratch::new(p, n);
+        let lam = PORTABLE.pogo_step(
+            xf.as_mut_slice(),
+            g.as_slice(),
+            p,
+            n,
+            eta,
+            &PogoLambda::Const(0.5),
+            &mut scratch,
+        );
+        assert_eq!(lam, 0.5);
+        assert!(xf.sub(&m).max_abs() == 0.0, "fused != composition");
+    }
+}

@@ -7,9 +7,26 @@
 //! This is the host-side mechanism behind the paper's Fig. 1 claim
 //! (thousands of matrices in minutes): the per-matrix host loop spends its
 //! time in allocator churn and 54-flop matmuls that can never cross the
-//! thread threshold, while this engine runs the same 5-matmul POGO update
-//! (and the Landing / SLPG / Adam variants) over the packed group with
-//! one batch-parallel kernel per product.
+//! thread threshold, while this engine steps the packed group in bulk.
+//!
+//! **Two execution paths**, selected by [`KernelChoice`] (spec key
+//! `"kernel"`, default `auto`):
+//!
+//! - *fused* — POGO and Landing/LandingPC run the whole per-matrix update
+//!   as ONE sweep per batch element
+//!   ([`StepKernel::pogo_step`](crate::linalg::StepKernel) /
+//!   `landing_step`): each worker walks its batch chunk matrix-by-matrix
+//!   with an `O(p·n)` scratch resident in L1/L2, instead of 5+ full
+//!   passes over the `(B, p, n)` buffer. This is the `auto` default.
+//! - *naive* — the historical 5-pass `BatchMat` composition, one
+//!   batch-parallel kernel per product. SLPG and Adam always run here
+//!   (no fused rule).
+//!
+//! Both paths bottom out in the same runtime-selected `StepKernel` row
+//! primitives and perform the same elementwise arithmetic in the same
+//! order, so they are bit-identical — `tests/fused_parity.rs` pins this
+//! elementwise, which is what lets `auto` default to fused without any
+//! replay/checkpoint compatibility caveat.
 //!
 //! **Parity contract** (pinned by `tests/batched_parity.rs`): every rule
 //! here performs the *same elementwise arithmetic in the same order* as
@@ -26,7 +43,10 @@ use super::base::BaseOptKind;
 use super::pogo::{landing_coeffs, LambdaPolicy};
 use super::quartic::solve_landing_quartic;
 use super::Orthoptimizer;
-use crate::linalg::{batch_a_bh, batch_matmul, BatchMat, Field, Mat, Scalar};
+use crate::linalg::{
+    batch_a_bh, batch_matmul, for_each_mat_fused, fused_step_flops, BatchMat, Field,
+    KernelChoice, LandingParams, Mat, PogoLambda, Scalar, StepScratch,
+};
 use anyhow::{ensure, Result};
 
 /// Which update rule a [`BatchedHost`] runs.
@@ -181,6 +201,7 @@ pub struct BatchedHost<E: Field = f32> {
     base: BatchedBase<E>,
     name: String,
     last_lambda: Option<f64>,
+    kernel: KernelChoice,
 }
 
 impl<E: Field> BatchedHost<E> {
@@ -196,7 +217,15 @@ impl<E: Field> BatchedHost<E> {
             base: BatchedBase::new(base),
             name,
             last_lambda: Some(0.5),
+            kernel: KernelChoice::Auto,
         }
+    }
+
+    /// Select the execution path (`auto`/`fused`/`naive`) — see the module
+    /// docs; bit-identical either way, so this is a pure perf knob.
+    pub fn with_kernel(mut self, kernel: KernelChoice) -> Self {
+        self.kernel = kernel;
+        self
     }
 
     /// Batched Landing (safeguarded, paper defaults ε = 0.5).
@@ -212,6 +241,7 @@ impl<E: Field> BatchedHost<E> {
             base: BatchedBase::new(base),
             name: format!("Landing({})[batched]", base.name()),
             last_lambda: None,
+            kernel: KernelChoice::Auto,
         }
     }
 
@@ -228,6 +258,7 @@ impl<E: Field> BatchedHost<E> {
             base: BatchedBase::new(BaseOptKind::Sgd),
             name: "LandingPC[batched]".to_string(),
             last_lambda: None,
+            kernel: KernelChoice::Auto,
         }
     }
 
@@ -239,6 +270,7 @@ impl<E: Field> BatchedHost<E> {
             base: BatchedBase::new(base),
             name: "SLPG[batched]".to_string(),
             last_lambda: None,
+            kernel: KernelChoice::Auto,
         }
     }
 
@@ -250,7 +282,67 @@ impl<E: Field> BatchedHost<E> {
             base: BatchedBase::new(BaseOptKind::adam()),
             name: "Adam[batched]".to_string(),
             last_lambda: None,
+            kernel: KernelChoice::Auto,
         }
+    }
+
+    /// Fused POGO over the batch: one `StepKernel::pogo_step` sweep per
+    /// matrix, each worker reusing an `O(p·n)` scratch across its chunk.
+    /// Returns the last matrix's λ (what `last_lambda` reports — matching
+    /// the naive FindRoot loop, which overwrites `lam` per element).
+    fn fused_pogo(x: &mut BatchMat<E>, g: &BatchMat<E>, eta: f64, lambda: LambdaPolicy) -> f64 {
+        let (b, p, n) = x.shape();
+        let kern = E::step_kernel();
+        let stride = p * n;
+        let gdata = g.as_slice();
+        // Per-matrix quartic roots from the p×p gram residuals (identical
+        // arithmetic to the naive path: same coeffs, same solver).
+        let solve = |c: &[E], pp: usize| {
+            solve_landing_quartic(landing_coeffs(&Mat::from_vec(pp, pp, c.to_vec())))
+        };
+        let lam_policy = match lambda {
+            LambdaPolicy::Half => PogoLambda::Const(0.5),
+            LambdaPolicy::FindRoot => PogoLambda::Solve(&solve),
+        };
+        let mut lams = vec![0.5f64; b];
+        for_each_mat_fused(x, &mut lams, fused_step_flops(b, p, n), |range, xc, lc| {
+            let mut scratch = StepScratch::new(p, n);
+            for (ci, i) in range.enumerate() {
+                lc[ci] = kern.pogo_step(
+                    &mut xc[ci * stride..(ci + 1) * stride],
+                    &gdata[i * stride..(i + 1) * stride],
+                    p,
+                    n,
+                    eta,
+                    &lam_policy,
+                    &mut scratch,
+                );
+            }
+        });
+        lams.last().copied().unwrap_or(0.5)
+    }
+
+    /// Fused Landing/LandingPC over the batch (normalization, safeguard,
+    /// and both axpys inside one per-matrix sweep).
+    fn fused_landing(x: &mut BatchMat<E>, g: &BatchMat<E>, params: LandingParams) {
+        let (b, p, n) = x.shape();
+        let kern = E::step_kernel();
+        let stride = p * n;
+        let gdata = g.as_slice();
+        let mut etas = vec![params.eta; b];
+        for_each_mat_fused(x, &mut etas, fused_step_flops(b, p, n), |range, xc, ec| {
+            let mut scratch = StepScratch::new(p, n);
+            for (ci, i) in range.enumerate() {
+                ec[ci] = kern.landing_step(
+                    &mut xc[ci * stride..(ci + 1) * stride],
+                    &gdata[i * stride..(i + 1) * stride],
+                    p,
+                    n,
+                    &params,
+                    &mut scratch,
+                );
+            }
+        });
     }
 
     /// One batched update of `x` given raw gradients `g0`.
@@ -266,7 +358,18 @@ impl<E: Field> BatchedHost<E> {
         }
         let g = self.base.transform(g0)?;
         let eta = self.lr;
+        let fused = !matches!(self.kernel, KernelChoice::Naive);
         match self.rule {
+            Rule::Pogo { lambda } if fused => {
+                self.last_lambda = Some(Self::fused_pogo(x, &g, eta, lambda));
+            }
+            Rule::Landing { attraction, eps_ball, safeguard, normalize_grad } if fused => {
+                Self::fused_landing(
+                    x,
+                    &g,
+                    LandingParams { eta, attraction, eps_ball, safeguard, normalize_grad },
+                );
+            }
             Rule::Pogo { lambda } => {
                 // M = X − η·½((X Xᴴ)G − (X Gᴴ)X)  (small-gram form).
                 let xxh = batch_a_bh(x, x);
@@ -559,6 +662,39 @@ mod tests {
         // Linear bases and the real Adam engine are unaffected.
         let _ = BatchedHost::<Complex<f32>>::pogo(0.1, LambdaPolicy::Half, BaseOptKind::vadam());
         let _ = BatchedHost::<f32>::adam(0.01);
+    }
+
+    #[test]
+    fn fused_and_naive_paths_agree_exactly() {
+        // The KernelChoice knob must be invisible in the bits (the full
+        // method × shape × B matrix lives in tests/fused_parity.rs).
+        let mut rng = Rng::seed_from_u64(6);
+        let (x0, g) = group(9, 4, 8, &mut rng);
+        for lambda in [LambdaPolicy::Half, LambdaPolicy::FindRoot] {
+            let mut xf = x0.clone();
+            let mut xn = x0.clone();
+            let mut of = BatchedHost::<f64>::pogo(0.2, lambda, BaseOptKind::Sgd)
+                .with_kernel(KernelChoice::Fused);
+            let mut on = BatchedHost::<f64>::pogo(0.2, lambda, BaseOptKind::Sgd)
+                .with_kernel(KernelChoice::Naive);
+            for _ in 0..5 {
+                of.step_batch(&mut xf, &g).unwrap();
+                on.step_batch(&mut xn, &g).unwrap();
+            }
+            assert!(xf.sub(&xn).max_abs() == 0.0, "{lambda:?}");
+            assert_eq!(of.last_lambda(), on.last_lambda(), "{lambda:?}");
+        }
+        let mut xf = x0.clone();
+        let mut xn = x0.clone();
+        let mut of = BatchedHost::<f64>::landing(0.3, 1.0, BaseOptKind::Sgd)
+            .with_kernel(KernelChoice::Fused);
+        let mut on = BatchedHost::<f64>::landing(0.3, 1.0, BaseOptKind::Sgd)
+            .with_kernel(KernelChoice::Naive);
+        for _ in 0..5 {
+            of.step_batch(&mut xf, &g).unwrap();
+            on.step_batch(&mut xn, &g).unwrap();
+        }
+        assert!(xf.sub(&xn).max_abs() == 0.0, "landing");
     }
 
     #[test]

@@ -240,18 +240,17 @@ pub fn build_unitary<S: Scalar>(
 /// The batched-host construction match, field-generic like
 /// [`construct_field`]. `None` for methods with no batched rule at all.
 fn construct_batched<E: Field>(spec: &OptimizerSpec) -> Option<Box<dyn Orthoptimizer<E>>> {
-    Some(match spec.method {
-        Method::Pogo => Box::new(BatchedHost::<E>::pogo(spec.lr, spec.lambda, spec.base)),
-        Method::Landing => {
-            Box::new(BatchedHost::<E>::landing(spec.lr, spec.attraction, spec.base))
-        }
-        Method::LandingPC => {
-            Box::new(BatchedHost::<E>::landing_pc(spec.lr, spec.attraction))
-        }
-        Method::Slpg => Box::new(BatchedHost::<E>::slpg(spec.lr, spec.base)),
-        Method::Adam => Box::new(BatchedHost::<E>::adam(spec.lr)),
+    // Every arm carries the spec's kernel choice (fused/naive/auto); the
+    // methods without a fused kernel (SLPG, Adam) ignore it in `apply`.
+    let host = match spec.method {
+        Method::Pogo => BatchedHost::<E>::pogo(spec.lr, spec.lambda, spec.base),
+        Method::Landing => BatchedHost::<E>::landing(spec.lr, spec.attraction, spec.base),
+        Method::LandingPC => BatchedHost::<E>::landing_pc(spec.lr, spec.attraction),
+        Method::Slpg => BatchedHost::<E>::slpg(spec.lr, spec.base),
+        Method::Adam => BatchedHost::<E>::adam(spec.lr),
         Method::Rgd | Method::Rsdm => return None,
-    })
+    };
+    Some(Box::new(host.with_kernel(spec.kernel)))
 }
 
 /// Build the batched host engine (`Engine::BatchedHost`) for one shape
@@ -367,6 +366,18 @@ mod tests {
         for m in [Method::Rgd, Method::Rsdm] {
             let err = build_batched_host::<f32>(&OptimizerSpec::new(m, 0.05)).unwrap_err();
             assert!(format!("{err}").contains("no batched host engine"), "{err}");
+        }
+    }
+
+    #[test]
+    fn batched_host_accepts_every_kernel_choice() {
+        use crate::linalg::KernelChoice;
+        for kernel in [KernelChoice::Auto, KernelChoice::Fused, KernelChoice::Naive] {
+            for m in [Method::Pogo, Method::Landing, Method::Slpg, Method::Adam] {
+                let spec = OptimizerSpec::new(m, 0.05).with_kernel(kernel);
+                let opt = build_batched_host::<f32>(&spec).unwrap();
+                assert!(opt.prefers_batch(), "{} {:?}", m.name(), kernel);
+            }
         }
     }
 

@@ -5,6 +5,9 @@
 //!
 //! - [`parallel_rows`]: shard a row-major output buffer by row ranges and
 //!   hand each worker a disjoint `&mut [S]` chunk (used by matmul).
+//! - [`parallel_rows_pair`]: the same sharding over two parallel row-major
+//!   buffers with different row strides (used by the fused batched step:
+//!   the `(B, p, n)` iterate tensor plus a per-matrix `f64` output).
 //! - [`parallel_for`]: index-space parallel map collecting results (used by
 //!   multi-matrix optimizer dispatch and dataset generation).
 
@@ -53,6 +56,46 @@ where
             let fref = &f;
             let range = r0..r1;
             scope.spawn(move || fref(range, chunk));
+            r0 = r1;
+        }
+    });
+}
+
+/// Split two parallel row-major buffers (`a`: `rows × cols_a`, `b`:
+/// `rows × cols_b`) into the SAME contiguous row-range chunks and run
+/// `f(rows_range, a_chunk, b_chunk)` on each, in parallel. Each worker
+/// sees the matching slices of both buffers for its row range.
+pub fn parallel_rows_pair<A: Send, B: Send, F>(
+    a: &mut [A],
+    b: &mut [B],
+    rows: usize,
+    cols_a: usize,
+    cols_b: usize,
+    f: F,
+) where
+    F: Fn(std::ops::Range<usize>, &mut [A], &mut [B]) + Sync,
+{
+    assert_eq!(a.len(), rows * cols_a);
+    assert_eq!(b.len(), rows * cols_b);
+    let nt = num_threads().min(rows.max(1));
+    if nt <= 1 {
+        f(0..rows, a, b);
+        return;
+    }
+    let per = rows.div_ceil(nt);
+    std::thread::scope(|scope| {
+        let mut rest_a = a;
+        let mut rest_b = b;
+        let mut r0 = 0;
+        while r0 < rows {
+            let r1 = (r0 + per).min(rows);
+            let (chunk_a, tail_a) = rest_a.split_at_mut((r1 - r0) * cols_a);
+            let (chunk_b, tail_b) = rest_b.split_at_mut((r1 - r0) * cols_b);
+            rest_a = tail_a;
+            rest_b = tail_b;
+            let fref = &f;
+            let range = r0..r1;
+            scope.spawn(move || fref(range, chunk_a, chunk_b));
             r0 = r1;
         }
     });
@@ -139,6 +182,26 @@ mod tests {
         for (i, &v) in buf.iter().enumerate() {
             assert_eq!(v, i);
         }
+    }
+
+    #[test]
+    fn parallel_rows_pair_covers_both_buffers() {
+        let rows = 29;
+        let (ca, cb) = (7, 3);
+        let mut a = vec![0usize; rows * ca];
+        let mut b = vec![0usize; rows * cb];
+        parallel_rows_pair(&mut a, &mut b, rows, ca, cb, |range, ac, bc| {
+            for (ci, r) in range.enumerate() {
+                for c in 0..ca {
+                    ac[ci * ca + c] = r * ca + c;
+                }
+                for c in 0..cb {
+                    bc[ci * cb + c] = r * cb + c;
+                }
+            }
+        });
+        assert!(a.iter().enumerate().all(|(i, &v)| v == i));
+        assert!(b.iter().enumerate().all(|(i, &v)| v == i));
     }
 
     #[test]

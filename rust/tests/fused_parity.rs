@@ -1,0 +1,233 @@
+//! Fused single-pass step kernels ≡ the 5-pass naive composition,
+//! elementwise.
+//!
+//! The fused `StepKernel` path promises the *same arithmetic in the same
+//! order* as the naive batched composition — every product, axpy, and
+//! scalar is constructed identically, so the comparison below is EXACT
+//! (`== 0.0`), not a tolerance check. The grid covers every fused rule
+//! (POGO under both λ policies, Landing, LandingPC) across shapes, batch
+//! sizes, and element types (f32, f64, complex), plus a long-run
+//! feasibility gate on the fused path and a direct portable-kernel case.
+//!
+//! The same binary re-runs under `POGO_STEP_KERNEL=portable` in CI (the
+//! forced-scalar-fallback leg), pinning that kernel selection never
+//! changes results.
+
+use pogo::linalg::{
+    BatchMat, Complex, Field, KernelChoice, Mat, PogoLambda, Scalar, StepScratch, PORTABLE,
+};
+use pogo::manifold::stiefel;
+use pogo::optim::base::BaseOptKind;
+use pogo::optim::batched::BatchedHost;
+use pogo::optim::pogo::LambdaPolicy;
+use pogo::optim::Orthoptimizer;
+use pogo::rng::Rng;
+
+const SHAPES: &[(usize, usize)] = &[(3, 3), (4, 8), (16, 16)];
+const BATCHES: &[usize] = &[1, 7, 64];
+const STEPS: usize = 5;
+
+/// Largest elementwise |a − b|² across two packed groups.
+fn max_abs_sq_diff<E: Field>(a: &BatchMat<E>, b: &BatchMat<E>) -> f64 {
+    a.as_slice()
+        .iter()
+        .zip(b.as_slice())
+        .map(|(&x, &y)| (x - y).abs_sq().to_f64())
+        .fold(0.0, f64::max)
+}
+
+/// Unit-scaled random gradient (keeps the Thm 3.5 step regime).
+fn random_grad<E: Field>(p: usize, n: usize, rng: &mut Rng) -> Mat<E> {
+    let g = Mat::<E>::randn(p, n, rng);
+    let nn = g.norm().to_f64().max(1e-30);
+    g.scale(E::from_f64(0.3 / nn))
+}
+
+/// Step the SAME initial group `STEPS` times on the fused and the naive
+/// path and require exact elementwise agreement after every step.
+fn assert_exact_parity<E: Field>(
+    make_opt: &dyn Fn() -> BatchedHost<E>,
+    random_point: &dyn Fn(usize, usize, &mut Rng) -> Mat<E>,
+    p: usize,
+    n: usize,
+    b: usize,
+    seed: u64,
+) {
+    let mut rng = Rng::seed_from_u64(seed);
+    let xs: Vec<Mat<E>> = (0..b).map(|_| random_point(p, n, &mut rng)).collect();
+    let mut xb_fused = BatchMat::from_mats(&xs);
+    let mut xb_naive = xb_fused.clone();
+    let mut opt_fused = make_opt().with_kernel(KernelChoice::Fused);
+    let mut opt_naive = make_opt().with_kernel(KernelChoice::Naive);
+
+    for step in 0..STEPS {
+        let gs: Vec<Mat<E>> = (0..b).map(|_| random_grad(p, n, &mut rng)).collect();
+        let gb = BatchMat::from_mats(&gs);
+        opt_fused.step_batch(&mut xb_fused, &gb).unwrap();
+        opt_naive.step_batch(&mut xb_naive, &gb).unwrap();
+        let d = max_abs_sq_diff(&xb_fused, &xb_naive);
+        assert!(
+            d == 0.0,
+            "fused diverged from naive by |Δ|²={d} at ({p}, {n}) B={b} step {step}"
+        );
+    }
+    for m in xb_fused.to_mats() {
+        assert!(m.all_finite());
+    }
+}
+
+/// Run the full (shape × batch) grid for one rule on one element type.
+fn assert_rule_parity<E: Field>(
+    make_opt: &dyn Fn() -> BatchedHost<E>,
+    random_point: &dyn Fn(usize, usize, &mut Rng) -> Mat<E>,
+) {
+    for &(p, n) in SHAPES {
+        for &b in BATCHES {
+            assert_exact_parity(make_opt, random_point, p, n, b, (p * 1000 + n * 10 + b) as u64);
+        }
+    }
+}
+
+fn real_point<S: Scalar>(p: usize, n: usize, rng: &mut Rng) -> Mat<S> {
+    stiefel::random_point_t::<S>(p, n, rng)
+}
+
+fn complex_point<S: Scalar>(p: usize, n: usize, rng: &mut Rng) -> Mat<Complex<S>> {
+    stiefel::random_point_complex::<S>(p, n, rng)
+}
+
+/// One rule across all three element types (f32, f64, Complex<f64> — the
+/// complex path exercises the portable kernel under the same dispatch).
+macro_rules! rule_parity_tests {
+    ($f32_name:ident, $f64_name:ident, $c64_name:ident, $ctor:expr) => {
+        #[test]
+        fn $f32_name() {
+            assert_rule_parity::<f32>(&|| $ctor, &real_point::<f32>);
+        }
+        #[test]
+        fn $f64_name() {
+            assert_rule_parity::<f64>(&|| $ctor, &real_point::<f64>);
+        }
+        #[test]
+        fn $c64_name() {
+            assert_rule_parity::<Complex<f64>>(&|| $ctor, &complex_point::<f64>);
+        }
+    };
+}
+
+rule_parity_tests!(
+    pogo_half_fused_parity_f32,
+    pogo_half_fused_parity_f64,
+    pogo_half_fused_parity_c64,
+    // Momentum base: fused/naive must agree with base-optimizer state in
+    // the loop, not just on raw gradients.
+    BatchedHost::pogo(0.1, LambdaPolicy::Half, BaseOptKind::momentum(0.9))
+);
+
+rule_parity_tests!(
+    pogo_find_root_fused_parity_f32,
+    pogo_find_root_fused_parity_f64,
+    pogo_find_root_fused_parity_c64,
+    // Per-matrix quartic λ roots from the fused gram residual.
+    BatchedHost::pogo(0.1, LambdaPolicy::FindRoot, BaseOptKind::Sgd)
+);
+
+rule_parity_tests!(
+    landing_fused_parity_f32,
+    landing_fused_parity_f64,
+    landing_fused_parity_c64,
+    // Safeguarded η + attraction term, fused into one sweep.
+    BatchedHost::landing(0.1, 1.0, BaseOptKind::Sgd)
+);
+
+rule_parity_tests!(
+    landing_pc_fused_parity_f32,
+    landing_pc_fused_parity_f64,
+    landing_pc_fused_parity_c64,
+    // Per-matrix gradient normalization inside the fused sweep.
+    BatchedHost::landing_pc(0.5, 1.0)
+);
+
+#[test]
+fn fused_last_lambda_matches_naive() {
+    // The reported λ (diagnostics surface) must come from the same place
+    // on both paths — the LAST batch element under FindRoot.
+    let (p, n, b) = (4, 8, 7);
+    let mut rng = Rng::seed_from_u64(11);
+    let xs: Vec<Mat<f64>> = (0..b).map(|_| real_point::<f64>(p, n, &mut rng)).collect();
+    let gs: Vec<Mat<f64>> = (0..b).map(|_| random_grad(p, n, &mut rng)).collect();
+    let gb = BatchMat::from_mats(&gs);
+    let mut run = |kernel: KernelChoice| {
+        let mut xb = BatchMat::from_mats(&xs);
+        let mut opt = BatchedHost::<f64>::pogo(0.1, LambdaPolicy::FindRoot, BaseOptKind::Sgd)
+            .with_kernel(kernel);
+        opt.step_batch(&mut xb, &gb).unwrap();
+        opt.last_lambda()
+    };
+    let lam_fused = run(KernelChoice::Fused);
+    let lam_naive = run(KernelChoice::Naive);
+    assert_eq!(lam_fused, lam_naive);
+    assert!(lam_fused.is_some());
+}
+
+#[test]
+fn fused_orthogonality_over_100_steps() {
+    // ‖X Xᴴ − I‖ ≤ 1e-3 for every matrix after 100 fused steps (Thm 3.5
+    // regime) — the fused path stays on the manifold, not just close to
+    // the naive path.
+    let (p, n, b) = (8, 16, 64);
+    let mut rng = Rng::seed_from_u64(42);
+    let xs: Vec<Mat<f32>> = (0..b).map(|_| real_point::<f32>(p, n, &mut rng)).collect();
+    let mut xb = BatchMat::from_mats(&xs);
+    let mut opt = BatchedHost::<f32>::pogo(0.2, LambdaPolicy::Half, BaseOptKind::vadam())
+        .with_kernel(KernelChoice::Fused);
+    for _ in 0..100 {
+        let gs: Vec<Mat<f32>> = (0..b).map(|_| random_grad(p, n, &mut rng)).collect();
+        let gb = BatchMat::from_mats(&gs);
+        opt.step_batch(&mut xb, &gb).unwrap();
+    }
+    for x in xb.to_mats() {
+        let d = stiefel::distance_f(&x);
+        assert!(d <= 1e-3, "fused path left the manifold: {d}");
+    }
+}
+
+#[test]
+fn portable_kernel_direct_step_matches_naive() {
+    // Scalar-fallback coverage without the env override: drive the
+    // PORTABLE kernel's fused step directly and compare to the naive
+    // batched composition. (The SIMD kernels are pinned bit-identical to
+    // PORTABLE by the linalg unit tests; CI's forced-scalar leg re-runs
+    // this whole binary under POGO_STEP_KERNEL=portable on top.)
+    let (p, n, b) = (4, 8, 5);
+    let eta = 0.1;
+    let mut rng = Rng::seed_from_u64(3);
+    let xs: Vec<Mat<f32>> = (0..b).map(|_| real_point::<f32>(p, n, &mut rng)).collect();
+    let gs: Vec<Mat<f32>> = (0..b).map(|_| random_grad(p, n, &mut rng)).collect();
+
+    let mut xb_naive = BatchMat::from_mats(&xs);
+    let gb = BatchMat::from_mats(&gs);
+    let mut opt = BatchedHost::<f32>::pogo(eta, LambdaPolicy::Half, BaseOptKind::Sgd)
+        .with_kernel(KernelChoice::Naive);
+    opt.step_batch(&mut xb_naive, &gb).unwrap();
+
+    let mut xb_direct = BatchMat::from_mats(&xs);
+    let stride = p * n;
+    let mut scratch = StepScratch::new(p, n);
+    let x_slice = xb_direct.as_mut_slice();
+    let g_slice = gb.as_slice();
+    for i in 0..b {
+        let lam = PORTABLE.pogo_step(
+            &mut x_slice[i * stride..(i + 1) * stride],
+            &g_slice[i * stride..(i + 1) * stride],
+            p,
+            n,
+            eta,
+            &PogoLambda::Const(0.5),
+            &mut scratch,
+        );
+        assert_eq!(lam, 0.5);
+    }
+    let d = max_abs_sq_diff(&xb_direct, &xb_naive);
+    assert!(d == 0.0, "portable fused step diverged from naive by |Δ|²={d}");
+}
