@@ -1,0 +1,65 @@
+#!/usr/bin/env bash
+# CPU flamegraph of one pogo bench (default: pool_dispatch).
+#
+# Usage:  bench/run_flamegraph.sh [bench-name] [out.svg]
+#   bench-name  any [[bench]] target from rust/Cargo.toml
+#               (pool_dispatch, step_kernels, step_micro, ...)
+#   out.svg     output path (default: flamegraph-<bench>.svg in the repo root)
+#
+# Prefers `cargo flamegraph` (cargo install flamegraph) and falls back to
+# raw `perf record -g` + the flamegraph.pl/stackcollapse-perf.pl scripts
+# if they are on PATH. Either path needs perf_event access — on locked-
+# down kernels run:  sudo sysctl kernel.perf_event_paranoid=1
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BENCH="${1:-pool_dispatch}"
+OUT="${2:-flamegraph-$BENCH.svg}"
+
+if ! command -v cargo >/dev/null; then
+  echo "error: cargo not found on PATH" >&2
+  exit 1
+fi
+
+# Keep the workload bounded (the quick sweep) and symbols available.
+export POGO_BENCH_QUICK=1
+export CARGO_PROFILE_BENCH_DEBUG=true
+
+if cargo flamegraph --version >/dev/null 2>&1; then
+  echo "== cargo flamegraph --bench $BENCH =="
+  cargo flamegraph --bench "$BENCH" -o "$OUT"
+  echo "wrote $OUT"
+  exit 0
+fi
+
+if ! command -v perf >/dev/null; then
+  echo "error: neither 'cargo flamegraph' nor 'perf' is available." >&2
+  echo "  install one of:" >&2
+  echo "    cargo install flamegraph" >&2
+  echo "    apt-get install linux-tools-common linux-tools-\$(uname -r)" >&2
+  exit 1
+fi
+
+echo "== perf record on bench $BENCH =="
+cargo bench --bench "$BENCH" --no-run
+# The freshly built bench binary is the newest executable matching the name.
+BIN="$(find target/release/deps -maxdepth 1 -type f -executable -name "${BENCH}-*" \
+  -newer Cargo.toml -printf '%T@ %p\n' 2>/dev/null | sort -rn | head -n1 | cut -d' ' -f2-)"
+if [ -z "$BIN" ]; then
+  BIN="$(ls -t target/release/deps/${BENCH}-* 2>/dev/null | head -n1 || true)"
+fi
+if [ -z "$BIN" ]; then
+  echo "error: could not locate the built bench binary for $BENCH" >&2
+  exit 1
+fi
+perf record -g --call-graph dwarf -o perf.data -- "$BIN"
+
+if command -v stackcollapse-perf.pl >/dev/null && command -v flamegraph.pl >/dev/null; then
+  perf script -i perf.data | stackcollapse-perf.pl | flamegraph.pl > "$OUT"
+  echo "wrote $OUT"
+else
+  echo "perf.data recorded; flamegraph.pl not on PATH, so inspect it with:" >&2
+  echo "  perf report -i perf.data" >&2
+  echo "or install https://github.com/brendangregg/FlameGraph for the SVG." >&2
+fi

@@ -1,0 +1,63 @@
+#!/usr/bin/env bash
+# Profile-guided-optimization build of the pogo benches.
+#
+# Three phases:
+#   1. instrumented build (-Cprofile-generate), run the hot benches in the
+#      quick profile to collect .profraw samples;
+#   2. merge the samples with llvm-profdata;
+#   3. optimized rebuild (-Cprofile-use) and a re-run so the printed
+#      tables + BENCH_*.json reflect the PGO binary.
+#
+# Usage:  bench/run_pgo.sh [extra-bench-names...]
+#   PGO_DIR=/tmp/pogo-pgo  override the profile-data scratch directory.
+#   POGO_BENCH_QUICK=1     is set for the collection phase only; the final
+#                          run uses the full sweep unless you export it.
+#
+# Requires llvm-profdata matching the rustc LLVM (ships with the
+# `llvm-tools` rustup component: `rustup component add llvm-tools`).
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+PGO_DIR="${PGO_DIR:-$(pwd)/target/pgo-data}"
+BENCHES=(step_kernels pool_dispatch "$@")
+
+if ! command -v cargo >/dev/null; then
+  echo "error: cargo not found on PATH" >&2
+  exit 1
+fi
+
+# llvm-profdata lives either on PATH or inside the rustup toolchain's
+# llvm-tools component; find whichever exists.
+PROFDATA="$(command -v llvm-profdata || true)"
+if [ -z "$PROFDATA" ]; then
+  SYSROOT="$(rustc --print sysroot)"
+  PROFDATA="$(find "$SYSROOT" -name llvm-profdata -type f 2>/dev/null | head -n1 || true)"
+fi
+if [ -z "$PROFDATA" ]; then
+  echo "error: llvm-profdata not found; install it with:" >&2
+  echo "  rustup component add llvm-tools" >&2
+  exit 1
+fi
+
+rm -rf "$PGO_DIR"
+mkdir -p "$PGO_DIR"
+
+echo "== phase 1: instrumented build + profile collection =="
+export RUSTFLAGS="-Cprofile-generate=$PGO_DIR"
+for b in "${BENCHES[@]}"; do
+  POGO_BENCH_QUICK=1 cargo bench --bench "$b"
+done
+unset RUSTFLAGS
+
+echo "== phase 2: merge profiles =="
+"$PROFDATA" merge -o "$PGO_DIR/merged.profdata" "$PGO_DIR"
+
+echo "== phase 3: PGO rebuild + measured run =="
+export RUSTFLAGS="-Cprofile-use=$PGO_DIR/merged.profdata"
+for b in "${BENCHES[@]}"; do
+  cargo bench --bench "$b"
+done
+unset RUSTFLAGS
+
+echo "PGO run complete; profile data in $PGO_DIR"

@@ -1,0 +1,174 @@
+//! Pool-dispatch latency harness: the resident worker pool vs the old
+//! spawn-per-call path, measured two ways.
+//!
+//! 1. **Raw dispatch** — `parallel_shards` over empty shards: wake the
+//!    workers, claim the shards, hit the completion barrier. This is pure
+//!    orchestration cost (nanoseconds), the thing the resident pool
+//!    exists to shrink: a parked-thread wake is a futex, a spawn is a
+//!    clone(2) + stack + scheduler round-trip.
+//! 2. **End-to-end** — whole fused POGO `step_batch` calls under each
+//!    backend (microseconds/step), so the dispatch win is shown in terms
+//!    of what a training loop actually feels at small-per-matrix-work
+//!    regimes (the paper's B≫1 tiny-matrix sweet spot).
+//!
+//! Both backends run the identical sharding geometry and kernel loops —
+//! `tests/pool_parity.rs` pins the trajectories bit-identical — so this
+//! bench measures the only thing that differs: thread lifecycle overhead.
+//!
+//! Writes `BENCH_pool.json` (redirect: `POGO_BENCH_JSON_POOL`); CI's
+//! `bench-smoke` job runs this with `POGO_BENCH_QUICK=1` and fails if
+//! `speedup_resident_vs_spawn` drops below 1 at f32 (16,16), B = 4096.
+
+use pogo::bench::{bench, bench_items, print_table, BenchOpts, DispatchRecord, PoolRecord, Stats};
+use pogo::linalg::{BatchMat, Mat, Scalar};
+use pogo::manifold::stiefel;
+use pogo::optim::base::BaseOptKind;
+use pogo::optim::batched::BatchedHost;
+use pogo::optim::pogo::LambdaPolicy;
+use pogo::optim::Orthoptimizer;
+use pogo::rng::Rng;
+use pogo::util::pool::{self, PoolMode};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// One packed problem instance: B row-orthogonal iterates + scaled grads.
+fn make_packed<S: Scalar>(
+    b: usize,
+    p: usize,
+    n: usize,
+    rng: &mut Rng,
+) -> (BatchMat<S>, BatchMat<S>) {
+    let xs: Vec<Mat<S>> = (0..b).map(|_| stiefel::random_point_t::<S>(p, n, rng)).collect();
+    let gs: Vec<Mat<S>> = (0..b)
+        .map(|_| {
+            let g = Mat::<S>::randn(p, n, rng);
+            let nn = g.norm().to_f64().max(1e-6);
+            g.scale(S::from_f64(0.3 / nn))
+        })
+        .collect();
+    (BatchMat::from_mats(&xs), BatchMat::from_mats(&gs))
+}
+
+/// Raw dispatch cost at one shard count under the active pool mode. The
+/// shard body is a relaxed atomic add — cheap, but observable, so the
+/// dispatch cannot be optimized away and every shard is provably run.
+fn measure_dispatch(opts: BenchOpts, mode: PoolMode, shards: usize) -> (Stats, DispatchRecord) {
+    let sink = AtomicU64::new(0);
+    let s = bench(&format!("dispatch[{}] shards={shards}", mode.name()), opts, || {
+        pool::parallel_shards(shards, |i| {
+            sink.fetch_add(i as u64 + 1, Ordering::Relaxed);
+        });
+    });
+    assert!(sink.load(Ordering::Relaxed) > 0);
+    let rec = DispatchRecord {
+        pool: mode.name().to_string(),
+        shards,
+        ns_per_dispatch: s.mean * 1e9,
+    };
+    (s, rec)
+}
+
+/// Whole fused POGO steps under the active pool mode.
+fn measure_steps<S: Scalar>(
+    opts: BenchOpts,
+    mode: PoolMode,
+    b: usize,
+    p: usize,
+    n: usize,
+    rng: &mut Rng,
+) -> (Stats, PoolRecord) {
+    let mut opt: BatchedHost<S> =
+        BatchedHost::pogo(0.05, LambdaPolicy::Half, BaseOptKind::Sgd);
+    let (mut xb, gb) = make_packed::<S>(b, p, n, rng);
+    opt.step_batch(&mut xb, &gb).unwrap(); // warm-up (pool, scratch, buffers)
+    let s = bench_items(
+        &format!("pogo-f32[{}] B={b} {p}x{n}", mode.name()),
+        opts,
+        b as f64,
+        || {
+            opt.step_batch(&mut xb, &gb).unwrap();
+        },
+    );
+    let rec = PoolRecord {
+        pool: mode.name().to_string(),
+        label: "pogo-f32".to_string(),
+        p,
+        n,
+        batch: b,
+        us_per_step: s.mean * 1e6,
+    };
+    (s, rec)
+}
+
+fn main() {
+    pogo::util::logging::init();
+    let opts = BenchOpts::from_env();
+    let quick = std::env::var("POGO_BENCH_QUICK").is_ok();
+    let mut rng = Rng::seed_from_u64(0);
+
+    println!("threads: {}", pool::num_threads());
+
+    let mut disp_stats: Vec<Stats> = Vec::new();
+    let mut step_stats: Vec<Stats> = Vec::new();
+    let mut dispatch: Vec<DispatchRecord> = Vec::new();
+    let mut records: Vec<PoolRecord> = Vec::new();
+    let mut speedups: Vec<(String, f64)> = Vec::new();
+
+    // B = 4096 must stay in the quick profile: CI's jq gate reads the
+    // "16x16@4096" speedup from the quick run.
+    let batches: &[usize] = if quick { &[1024, 4096] } else { &[1024, 4096, 32768] };
+    let shapes: &[(usize, usize)] = &[(3, 3), (16, 16)];
+
+    // Spawn first, resident second: the resident numbers then include any
+    // first-dispatch pool growth only in their warmup, never in samples.
+    for mode in [PoolMode::Spawn, PoolMode::Resident] {
+        pool::set_pool_mode(Some(mode));
+        if mode == PoolMode::Resident {
+            pool::warm_pool();
+        }
+        for &shards in &[1usize, 4, 16] {
+            let (s, rec) = measure_dispatch(opts, mode, shards);
+            disp_stats.push(s);
+            dispatch.push(rec);
+        }
+        for &(p, n) in shapes {
+            for &b in batches {
+                let (s, rec) = measure_steps::<f32>(opts, mode, b, p, n, &mut rng);
+                step_stats.push(s);
+                records.push(rec);
+            }
+        }
+    }
+    // Restore the env-driven default for anything running after us.
+    pool::set_pool_mode(None);
+
+    // speedup = spawn / resident per (shape, B) cell: >1 ⇒ resident wins.
+    for r in records.iter().filter(|r| r.pool == "resident") {
+        if let Some(s) = records.iter().find(|s| {
+            s.pool == "spawn" && s.p == r.p && s.n == r.n && s.batch == r.batch
+        }) {
+            if r.us_per_step > 0.0 {
+                speedups.push((
+                    format!("{}x{}@{}", r.p, r.n, r.batch),
+                    s.us_per_step / r.us_per_step,
+                ));
+            }
+        }
+    }
+
+    print_table("pool dispatch latency (resident vs spawn)", &disp_stats);
+    print_table("fused POGO steps under each backend (throughput = matrices/s)", &step_stats);
+    for (k, s) in &speedups {
+        println!("  resident-vs-spawn speedup at {k}: {s:.2}x");
+    }
+    let stats = pool::pool_stats();
+    println!(
+        "pool: mode={} workers={} dispatches={}",
+        stats.mode, stats.resident_workers, stats.dispatches
+    );
+
+    let default_json = pogo::repo_root().join("BENCH_pool.json");
+    match pogo::bench::write_pool_json(&default_json, &dispatch, &records, &speedups) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("failed to write BENCH_pool.json: {e}"),
+    }
+}

@@ -475,6 +475,92 @@ pub fn write_kernels_json(
     kernels_report(selected, records, speedups).write("POGO_BENCH_JSON_KERNELS", default_path)
 }
 
+/// One raw pool-dispatch latency measurement (a `BENCH_pool.json`
+/// `dispatch` row): the cost of waking the pool, running `shards` empty
+/// shards, and hitting the completion barrier — pure orchestration
+/// overhead, no compute.
+#[derive(Clone, Debug)]
+pub struct DispatchRecord {
+    /// Pool backend: `resident` or `spawn`.
+    pub pool: String,
+    /// Shards per dispatch.
+    pub shards: usize,
+    /// Mean wall time per dispatch, nanoseconds.
+    pub ns_per_dispatch: f64,
+}
+
+/// One end-to-end fused-step measurement under one pool backend (a
+/// `BENCH_pool.json` `step` row).
+#[derive(Clone, Debug)]
+pub struct PoolRecord {
+    /// Pool backend: `resident` or `spawn`.
+    pub pool: String,
+    /// Rule × dtype label, e.g. `pogo-f32`.
+    pub label: String,
+    /// Matrix rows p.
+    pub p: usize,
+    /// Matrix cols n.
+    pub n: usize,
+    /// Group size B.
+    pub batch: usize,
+    /// Mean whole-batch step cost, microseconds.
+    pub us_per_step: f64,
+}
+
+/// Machine-readable resident-vs-spawn pool report. `speedups` maps
+/// `"pxn@B"` keys to the spawn-over-resident step-time ratio (`>1` =
+/// resident faster) — CI's `bench-smoke` job gates on `"16x16@4096"` ≥ 1.
+pub fn pool_json(
+    dispatch: &[DispatchRecord],
+    records: &[PoolRecord],
+    speedups: &[(String, f64)],
+) -> crate::util::json::Json {
+    pool_report(dispatch, records, speedups).to_json()
+}
+
+fn pool_report(
+    dispatch: &[DispatchRecord],
+    records: &[PoolRecord],
+    speedups: &[(String, f64)],
+) -> BenchReport {
+    use crate::util::json::Json;
+    let disp = dispatch.iter().map(|d| {
+        Json::obj(vec![
+            ("pool", Json::str(d.pool.clone())),
+            ("shards", Json::num(d.shards as f64)),
+            ("ns_per_dispatch", Json::num(d.ns_per_dispatch)),
+        ])
+    });
+    let recs = records.iter().map(|r| {
+        Json::obj(vec![
+            ("pool", Json::str(r.pool.clone())),
+            ("label", Json::str(r.label.clone())),
+            ("shape", Json::str(format!("{}x{}", r.p, r.n))),
+            ("batch", Json::num(r.batch as f64)),
+            ("us_per_step", Json::num(r.us_per_step)),
+        ])
+    });
+    let speedup_map: std::collections::BTreeMap<String, Json> = speedups
+        .iter()
+        .map(|(k, s)| (k.clone(), Json::num(*s)))
+        .collect();
+    BenchReport::new("ns_per_dispatch_and_us_per_step")
+        .field("dispatch", Json::arr(disp))
+        .field("records", Json::arr(recs))
+        .field("speedup_resident_vs_spawn", Json::Obj(speedup_map))
+}
+
+/// `BENCH_pool.json` (resident-vs-spawn dispatch latency race; redirect:
+/// `POGO_BENCH_JSON_POOL`). Emitted by `cargo bench --bench pool_dispatch`.
+pub fn write_pool_json(
+    default_path: &std::path::Path,
+    dispatch: &[DispatchRecord],
+    records: &[PoolRecord],
+    speedups: &[(String, f64)],
+) -> std::io::Result<std::path::PathBuf> {
+    pool_report(dispatch, records, speedups).write("POGO_BENCH_JSON_POOL", default_path)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -597,6 +683,47 @@ mod tests {
         assert_eq!(recs[0].get("batch").as_usize(), Some(4096));
         assert_eq!(recs[0].get("gb_per_s").as_f64(), Some(12.0));
         assert_eq!(j.get("speedup_fused_vs_naive").get("16x16@4096").as_f64(), Some(2.5));
+        // Round-trips through the in-crate parser (what CI's jq reads).
+        let back = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back, j);
+    }
+
+    #[test]
+    fn pool_json_shape() {
+        let dispatch = vec![
+            DispatchRecord { pool: "resident".into(), shards: 4, ns_per_dispatch: 900.0 },
+            DispatchRecord { pool: "spawn".into(), shards: 4, ns_per_dispatch: 24_000.0 },
+        ];
+        let records = vec![
+            PoolRecord {
+                pool: "resident".into(),
+                label: "pogo-f32".into(),
+                p: 16,
+                n: 16,
+                batch: 4096,
+                us_per_step: 600.0,
+            },
+            PoolRecord {
+                pool: "spawn".into(),
+                label: "pogo-f32".into(),
+                p: 16,
+                n: 16,
+                batch: 4096,
+                us_per_step: 780.0,
+            },
+        ];
+        let j = pool_json(&dispatch, &records, &[("16x16@4096".to_string(), 1.3)]);
+        assert_eq!(j.get("unit").as_str(), Some("ns_per_dispatch_and_us_per_step"));
+        let disp = j.get("dispatch").as_arr().unwrap();
+        assert_eq!(disp.len(), 2);
+        assert_eq!(disp[0].get("pool").as_str(), Some("resident"));
+        assert_eq!(disp[0].get("shards").as_usize(), Some(4));
+        assert_eq!(disp[1].get("ns_per_dispatch").as_f64(), Some(24_000.0));
+        let recs = j.get("records").as_arr().unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].get("shape").as_str(), Some("16x16"));
+        assert_eq!(recs[0].get("us_per_step").as_f64(), Some(600.0));
+        assert_eq!(j.get("speedup_resident_vs_spawn").get("16x16@4096").as_f64(), Some(1.3));
         // Round-trips through the in-crate parser (what CI's jq reads).
         let back = crate::util::json::Json::parse(&j.to_string()).unwrap();
         assert_eq!(back, j);

@@ -4,8 +4,9 @@
 //! tables were produced from.
 //!
 //! Also picks up the machine-readable benchmark reports —
-//! `BENCH_scale.json`, `BENCH_born.json`, `BENCH_serve.json` and
-//! `BENCH_artifact.json` — from the results directory or the repo root,
+//! `BENCH_scale.json`, `BENCH_born.json`, `BENCH_kernels.json`,
+//! `BENCH_pool.json`, `BENCH_serve.json` and `BENCH_artifact.json` —
+//! from the results directory or the repo root,
 //! so one `pogo report` shows training series and engine/daemon
 //! performance side by side, and (with `--artifact-dir`) summarizes a
 //! content-addressed artifact store.
@@ -168,6 +169,7 @@ pub fn bench_report_lines(dir: &Path) -> Vec<String> {
             "BENCH_scale.json",
             "BENCH_born.json",
             "BENCH_kernels.json",
+            "BENCH_pool.json",
             "BENCH_serve.json",
             "BENCH_artifact.json",
         ] {
@@ -223,6 +225,23 @@ fn summarize_bench(name: &str, path: &Path, j: &Json) -> Vec<String> {
             for (cell, s) in map {
                 out.push(format!(
                     "  {cell:<14} fused {:.2}x naive",
+                    s.as_f64().unwrap_or(f64::NAN)
+                ));
+            }
+        }
+    } else if name == "BENCH_pool.json" {
+        for row in j.get("dispatch").as_arr().unwrap_or(&[]) {
+            out.push(format!(
+                "  dispatch {:<9} {:>2} shard(s): {:10.0} ns",
+                row.get("pool").as_str().unwrap_or("?"),
+                row.get("shards").as_usize().unwrap_or(0),
+                row.get("ns_per_dispatch").as_f64().unwrap_or(f64::NAN),
+            ));
+        }
+        if let Some(map) = j.get("speedup_resident_vs_spawn").as_obj() {
+            for (cell, s) in map {
+                out.push(format!(
+                    "  {cell:<14} resident {:.2}x spawn",
                     s.as_f64().unwrap_or(f64::NAN)
                 ));
             }
@@ -356,6 +375,15 @@ mod tests {
                 "speedup_fused_vs_naive": {"16x16@4096": 2.1}}"#,
         )
         .unwrap();
+        std::fs::write(
+            d.join("BENCH_pool.json"),
+            r#"{"unit": "ns_per_dispatch_and_us_per_step",
+                "dispatch": [{"pool": "resident", "shards": 4,
+                              "ns_per_dispatch": 900.0}],
+                "records": [],
+                "speedup_resident_vs_spawn": {"16x16@4096": 1.3}}"#,
+        )
+        .unwrap();
         let lines = bench_report_lines(&d);
         let text = lines.join("\n");
         assert!(text.contains("BENCH_serve.json"), "{text}");
@@ -369,6 +397,9 @@ mod tests {
         assert!(text.contains("arch microkernel: avx2"), "{text}");
         assert!(text.contains("16x16@4096"), "{text}");
         assert!(text.contains("fused 2.10x naive"), "{text}");
+        assert!(text.contains("BENCH_pool.json"), "{text}");
+        assert!(text.contains("dispatch resident"), "{text}");
+        assert!(text.contains("resident 1.30x spawn"), "{text}");
         // report() itself must not choke on a dir holding only bench JSON.
         report(&d, None).unwrap();
         std::fs::remove_dir_all(&d).ok();

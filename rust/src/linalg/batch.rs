@@ -225,6 +225,42 @@ impl<E: Field> BatchMat<E> {
         }
     }
 
+    /// Elementwise binary op in place: `self[i] = f(&mut self[i], other[i])`
+    /// (batch-sharded on large buffers, like [`BatchMat::axpy`]). The
+    /// allocation-free sibling of [`BatchMat::zip`] for optimizer state
+    /// updates that used to build a temporary batch.
+    pub fn zip_inplace(&mut self, other: &BatchMat<E>, f: impl Fn(&mut E, E) + Sync) {
+        assert_eq!(self.shape(), other.shape(), "batch shape mismatch in zip_inplace");
+        let stride = self.p * self.n;
+        let odata = other.data.as_slice();
+        elementwise_chunks(&mut self.data, self.b, stride, |range, chunk| {
+            let o = &odata[range.start * stride..range.start * stride + chunk.len()];
+            for (a, &b) in chunk.iter_mut().zip(o) {
+                f(a, b);
+            }
+        });
+    }
+
+    /// Elementwise binary op into a reusable output buffer:
+    /// `out[i] = f(self[i], other[i])` (batch-sharded on large buffers).
+    /// `out` must already have this batch's shape — callers size it once
+    /// and reuse it every step.
+    pub fn zip_into(&self, other: &BatchMat<E>, out: &mut BatchMat<E>, f: impl Fn(E, E) -> E + Sync) {
+        assert_eq!(self.shape(), other.shape(), "batch shape mismatch in zip_into");
+        assert_eq!(self.shape(), out.shape(), "output shape mismatch in zip_into");
+        let stride = self.p * self.n;
+        let adata = self.data.as_slice();
+        let bdata = other.data.as_slice();
+        elementwise_chunks(&mut out.data, out.b, stride, |range, chunk| {
+            let lo = range.start * stride;
+            let a = &adata[lo..lo + chunk.len()];
+            let b = &bdata[lo..lo + chunk.len()];
+            for ((o, &x), &y) in chunk.iter_mut().zip(a).zip(b) {
+                *o = f(x, y);
+            }
+        });
+    }
+
     /// Subtract the identity from every (square) matrix in the batch.
     pub fn sub_eye_inplace(&mut self) {
         assert_eq!(self.p, self.n, "sub_eye on non-square batch");
@@ -262,16 +298,25 @@ impl<E: Field> BatchMat<E> {
     /// each matrix) so per-matrix and batched optimizer state stay
     /// bit-identical.
     pub fn norm_sq_per_mat(&self) -> Vec<E::Real> {
+        let mut out = Vec::new();
+        self.norm_sq_per_mat_into(&mut out);
+        out
+    }
+
+    /// [`BatchMat::norm_sq_per_mat`] into a reusable buffer (cleared and
+    /// refilled; same per-matrix sequential accumulation, so results are
+    /// bit-identical). Steady-state callers hold the buffer across steps
+    /// and never re-allocate.
+    pub fn norm_sq_per_mat_into(&self, out: &mut Vec<E::Real>) {
         let stride = self.p * self.n;
-        (0..self.b)
-            .map(|i| {
-                let mut acc = E::Real::ZERO;
-                for &v in &self.data[i * stride..(i + 1) * stride] {
-                    acc += v.abs_sq();
-                }
-                acc
-            })
-            .collect()
+        out.clear();
+        out.extend((0..self.b).map(|i| {
+            let mut acc = E::Real::ZERO;
+            for &v in &self.data[i * stride..(i + 1) * stride] {
+                acc += v.abs_sq();
+            }
+            acc
+        }));
     }
 
     /// True if every entry is finite.
@@ -293,11 +338,13 @@ impl<S: Scalar> BatchMat<S> {
 }
 
 /// Minimum buffer length (scalars) before an elementwise batch op shards
-/// across the pool. `pool::parallel_rows` spawns fresh scoped threads on
-/// every call (there is no persistent pool), and an elementwise pass is
-/// pure memory traffic (1 flop per element), so the spawn only pays off
-/// on multi-megabyte buffers — at the Fig. 1 shape this is B ≈ 29k of
-/// 3×3 matrices.
+/// across the pool. An elementwise pass is pure memory traffic (1 flop
+/// per element), so even the resident pool's wake/barrier round-trip
+/// (µs-scale, vs ms-scale thread spawn under `POGO_POOL=spawn`) only pays
+/// off on multi-megabyte buffers — at the Fig. 1 shape this is B ≈ 29k of
+/// 3×3 matrices. The threshold predates the resident pool and is kept
+/// as-is: sharding geometry is part of the bit-exactness contract, and
+/// below it the caller thread is faster anyway.
 const ELEMWISE_PAR_ELEMS: usize = 1 << 18;
 
 /// Run `f(batch_range, chunk)` over the buffer, sharding contiguous
@@ -319,12 +366,13 @@ where
 /// Minimum total flops before a batched matmul shards the batch across
 /// workers. Lower than the single-matmul threshold (`matmul::PAR_FLOPS`,
 /// 2²²) because one call covers B independent kernels with zero
-/// coordination between them — but only moderately lower: the spawn
-/// itself is NOT amortized across calls (`pool::parallel_rows` uses
-/// `std::thread::scope`, fresh OS threads every time), so the sharded
-/// work still has to dwarf thread setup even on few-core machines. At
-/// the Fig. 1 shape (3×3, 54 flops each) the pool engages from
-/// B ≈ 19.4k upward; smaller batches win on packing alone.
+/// coordination between them — but only moderately lower: dispatch is a
+/// condvar wake + barrier on the resident pool (and a full thread spawn
+/// under `POGO_POOL=spawn`), so the sharded work still has to dwarf that
+/// round-trip even on few-core machines. At the Fig. 1 shape (3×3,
+/// 54 flops each) the pool engages from B ≈ 19.4k upward; smaller batches
+/// win on packing alone. The value is unchanged from the spawn era — the
+/// shard geometry it gates is part of the bit-exactness contract.
 const BATCH_PAR_FLOPS: usize = 1 << 20;
 
 /// Whether a batched call of `total_flops` work (summed over the batch)
@@ -370,13 +418,13 @@ pub fn fused_step_flops(b: usize, p: usize, n: usize) -> usize {
 }
 
 /// Minimum total flops before a fused step shards the batch across
-/// workers. The 5-pass world pays one spawn *per kernel pass*
+/// workers. The 5-pass world pays one pool dispatch *per kernel pass*
 /// (`BATCH_PAR_FLOPS` gates each of them separately); the fused step pays
-/// ONE spawn for the whole update, so the spawn amortizes over ~6× more
-/// arithmetic and the same absolute floor (2²⁰ flops per spawn) engages
-/// at ~6× smaller batches. At the Fig. 1 shape (3×3, 324 fused flops
-/// per element) the pool engages from B ≈ 3.2k upward; a single 3×3 step
-/// (B = 1) can never cross the floor.
+/// ONE dispatch for the whole update, so the wake/barrier round-trip
+/// amortizes over ~6× more arithmetic and the same absolute floor
+/// (2²⁰ flops per dispatch) engages at ~6× smaller batches. At the
+/// Fig. 1 shape (3×3, 324 fused flops per element) the pool engages from
+/// B ≈ 3.2k upward; a single 3×3 step (B = 1) can never cross the floor.
 const FUSED_PAR_FLOPS: usize = 1 << 20;
 
 /// Whether a fused batched step of `total_flops` work (see

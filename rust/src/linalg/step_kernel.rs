@@ -129,6 +129,21 @@ impl<E: Field> StepScratch<E> {
     }
 }
 
+/// Run `f` with this thread's [`StepScratch`] for `(E, p, n)`. The slot is
+/// allocated on first use and parked in a keyed thread-local arena, so
+/// resident pool workers (which persist across steps) pay the allocation
+/// exactly once — the fused batched step's steady state touches no heap.
+/// Under `POGO_POOL=spawn`, worker threads die after every call and the
+/// arena re-allocates each step; that delta is part of what
+/// `benches/pool_dispatch.rs` measures.
+pub fn with_step_scratch<E: Field, R>(
+    p: usize,
+    n: usize,
+    f: impl FnOnce(&mut StepScratch<E>) -> R,
+) -> R {
+    crate::util::pool::with_scratch(p, n, || StepScratch::<E>::new(p, n), f)
+}
+
 /// Sequential squared Frobenius norm of a buffer — same accumulation
 /// order as `BatchMat::norm_sq_per_mat` / `Mat::norm_sq`, which the
 /// fused-vs-naive parity contract depends on.

@@ -40,12 +40,12 @@
 //! matrices.
 
 use super::base::BaseOptKind;
-use super::pogo::{landing_coeffs, LambdaPolicy};
+use super::pogo::{landing_coeffs, landing_coeffs_slice, with_coeff_scratch, LambdaPolicy};
 use super::quartic::solve_landing_quartic;
 use super::Orthoptimizer;
 use crate::linalg::{
-    batch_a_bh, batch_matmul, for_each_mat_fused, fused_step_flops, BatchMat, Field,
-    KernelChoice, LandingParams, Mat, PogoLambda, Scalar, StepScratch,
+    batch_a_bh, batch_matmul, for_each_mat_fused, fused_step_flops, with_step_scratch, BatchMat,
+    Field, KernelChoice, LandingParams, Mat, PogoLambda, Scalar,
 };
 use anyhow::{ensure, Result};
 
@@ -72,6 +72,13 @@ struct BatchedBase<E: Field> {
     v_scalar: Vec<f64>,
     /// Step count (shared: every matrix of a group steps together).
     t: u64,
+    /// Reusable transformed-gradient output (VAdam / Adam): sized on first
+    /// use, overwritten every step so the steady state never allocates.
+    out: Option<BatchMat<E>>,
+    /// Reusable per-matrix squared gradient norms (VAdam).
+    gn2: Vec<E::Real>,
+    /// Reusable per-matrix scale factors (VAdam).
+    alphas: Vec<E>,
 }
 
 impl<E: Field> BatchedBase<E> {
@@ -85,13 +92,24 @@ impl<E: Field> BatchedBase<E> {
             "complex base optimizers must be linear (Def. 1); got {}",
             kind.name()
         );
-        BatchedBase { kind, m: None, v: None, v_scalar: Vec::new(), t: 0 }
+        BatchedBase {
+            kind,
+            m: None,
+            v: None,
+            v_scalar: Vec::new(),
+            t: 0,
+            out: None,
+            gn2: Vec::new(),
+            alphas: Vec::new(),
+        }
     }
 
     /// `G = BO(∇f)` over the whole batch, mirroring
     /// `BaseOpt::transform` per matrix (same order of operations, same
-    /// f64 scalar paths).
-    fn transform(&mut self, grad: &BatchMat<E>) -> Result<BatchMat<E>> {
+    /// f64 scalar paths). Returns a borrow: either the input itself (Sgd),
+    /// the moment tensor (Momentum), or the reusable `out` buffer — no
+    /// per-step clone.
+    fn transform<'a>(&'a mut self, grad: &'a BatchMat<E>) -> Result<&'a BatchMat<E>> {
         if let Some(m) = &self.m {
             ensure!(
                 m.shape() == grad.shape(),
@@ -102,7 +120,7 @@ impl<E: Field> BatchedBase<E> {
             );
         }
         Ok(match self.kind {
-            BaseOptKind::Sgd => grad.clone(),
+            BaseOptKind::Sgd => grad,
             BaseOptKind::Momentum { beta } => {
                 match &mut self.m {
                     Some(m) => {
@@ -111,7 +129,7 @@ impl<E: Field> BatchedBase<E> {
                     }
                     None => self.m = Some(grad.clone()),
                 }
-                self.m.as_ref().unwrap().clone()
+                self.m.as_ref().unwrap()
             }
             BaseOptKind::VAdam { beta1, beta2, eps } => {
                 self.t += 1;
@@ -130,21 +148,22 @@ impl<E: Field> BatchedBase<E> {
                 if self.v_scalar.is_empty() {
                     self.v_scalar = vec![0.0; grad.batch()];
                 }
-                let gn2 = grad.norm_sq_per_mat();
+                grad.norm_sq_per_mat_into(&mut self.gn2);
                 let mhat_scale = 1.0 / (1.0 - beta1.powi(self.t as i32));
                 let v_corr = 1.0 - beta2.powi(self.t as i32);
-                let alphas: Vec<E> = self
-                    .v_scalar
-                    .iter_mut()
-                    .zip(&gn2)
-                    .map(|(v, &g2)| {
-                        *v = beta2 * *v + (1.0 - beta2) * g2.to_f64();
-                        let vhat = *v / v_corr;
-                        E::from_f64(mhat_scale / (vhat.sqrt() + eps))
-                    })
-                    .collect();
-                let mut out = self.m.as_ref().unwrap().clone();
-                out.scale_per_mat(&alphas);
+                self.alphas.clear();
+                for (v, &g2) in self.v_scalar.iter_mut().zip(&self.gn2) {
+                    *v = beta2 * *v + (1.0 - beta2) * g2.to_f64();
+                    let vhat = *v / v_corr;
+                    self.alphas.push(E::from_f64(mhat_scale / (vhat.sqrt() + eps)));
+                }
+                let m = self.m.as_ref().unwrap();
+                match &mut self.out {
+                    Some(out) => out.as_mut_slice().copy_from_slice(m.as_slice()),
+                    None => self.out = Some(m.clone()),
+                }
+                let out = self.out.as_mut().unwrap();
+                out.scale_per_mat(&self.alphas);
                 out
             }
             BaseOptKind::Adam { beta1, beta2, eps } => {
@@ -160,26 +179,37 @@ impl<E: Field> BatchedBase<E> {
                         self.m = Some(m);
                     }
                 }
-                let g2 = grad.map(|x| x * x);
+                // v ← β₂v + (1−β₂)g², with g² formed on the fly: the same
+                // scale-then-axpy elementwise ops as the old
+                // `grad.map(|x| x*x)` temp, without the temp.
                 match &mut self.v {
                     Some(v) => {
-                        v.scale_inplace(E::from_f64(beta2));
-                        v.axpy(E::from_f64(1.0 - beta2), &g2);
+                        let b2 = E::from_f64(beta2);
+                        let c2 = E::from_f64(1.0 - beta2);
+                        v.zip_inplace(grad, |vi, gv| {
+                            *vi *= b2;
+                            *vi += c2 * (gv * gv);
+                        });
                     }
                     None => {
-                        let mut v = g2;
+                        let mut v = grad.map(|x| x * x);
                         v.scale_inplace(E::from_f64(1.0 - beta2));
                         self.v = Some(v);
                     }
                 }
-                let mc = 1.0 / (1.0 - beta1.powi(self.t as i32));
-                let vc = 1.0 / (1.0 - beta2.powi(self.t as i32));
+                let mc = E::from_f64(1.0 / (1.0 - beta1.powi(self.t as i32)));
+                let vc = E::from_f64(1.0 / (1.0 - beta2.powi(self.t as i32)));
                 let eps_s = E::from_f64(eps);
-                let mut mhat = self.m.as_ref().unwrap().clone();
-                mhat.scale_inplace(E::from_f64(mc));
-                let mut vhat = self.v.as_ref().unwrap().clone();
-                vhat.scale_inplace(E::from_f64(vc));
-                mhat.zip(&vhat, |mi, vi| mi / (vi.sqrt() + eps_s))
+                let m = self.m.as_ref().unwrap();
+                let v = self.v.as_ref().unwrap();
+                // out_i = m̂_i / (√v̂_i + ε): same multiply-scale → sqrt →
+                // divide order as the old mhat/vhat clones.
+                let f = |mi: E, vi: E| (mi * mc) / ((vi * vc).sqrt() + eps_s);
+                match &mut self.out {
+                    Some(out) => m.zip_into(v, out, f),
+                    None => self.out = Some(m.zip(v, f)),
+                }
+                self.out.as_ref().unwrap()
             }
         })
     }
@@ -202,6 +232,13 @@ pub struct BatchedHost<E: Field = f32> {
     name: String,
     last_lambda: Option<f64>,
     kernel: KernelChoice,
+    /// Reusable per-matrix f64 slots for the fused sweep (POGO's λ /
+    /// Landing's safeguarded η) — sized on first step, reused after.
+    lam_buf: Vec<f64>,
+    /// Reusable per-matrix coefficient buffers for the naive paths
+    /// (FindRoot's −λ scales, Landing's −η / −ηλ pairs).
+    coef_a: Vec<E>,
+    coef_b: Vec<E>,
 }
 
 impl<E: Field> BatchedHost<E> {
@@ -218,6 +255,9 @@ impl<E: Field> BatchedHost<E> {
             name,
             last_lambda: Some(0.5),
             kernel: KernelChoice::Auto,
+            lam_buf: Vec::new(),
+            coef_a: Vec::new(),
+            coef_b: Vec::new(),
         }
     }
 
@@ -242,6 +282,9 @@ impl<E: Field> BatchedHost<E> {
             name: format!("Landing({})[batched]", base.name()),
             last_lambda: None,
             kernel: KernelChoice::Auto,
+            lam_buf: Vec::new(),
+            coef_a: Vec::new(),
+            coef_b: Vec::new(),
         }
     }
 
@@ -259,6 +302,9 @@ impl<E: Field> BatchedHost<E> {
             name: "LandingPC[batched]".to_string(),
             last_lambda: None,
             kernel: KernelChoice::Auto,
+            lam_buf: Vec::new(),
+            coef_a: Vec::new(),
+            coef_b: Vec::new(),
         }
     }
 
@@ -271,6 +317,9 @@ impl<E: Field> BatchedHost<E> {
             name: "SLPG[batched]".to_string(),
             last_lambda: None,
             kernel: KernelChoice::Auto,
+            lam_buf: Vec::new(),
+            coef_a: Vec::new(),
+            coef_b: Vec::new(),
         }
     }
 
@@ -283,65 +332,87 @@ impl<E: Field> BatchedHost<E> {
             name: "Adam[batched]".to_string(),
             last_lambda: None,
             kernel: KernelChoice::Auto,
+            lam_buf: Vec::new(),
+            coef_a: Vec::new(),
+            coef_b: Vec::new(),
         }
     }
 
     /// Fused POGO over the batch: one `StepKernel::pogo_step` sweep per
-    /// matrix, each worker reusing an `O(p·n)` scratch across its chunk.
+    /// matrix, each worker reusing its thread-local `O(p·n)` scratch
+    /// across its chunk AND across steps (resident workers persist).
     /// Returns the last matrix's λ (what `last_lambda` reports — matching
     /// the naive FindRoot loop, which overwrites `lam` per element).
-    fn fused_pogo(x: &mut BatchMat<E>, g: &BatchMat<E>, eta: f64, lambda: LambdaPolicy) -> f64 {
+    /// `lam_buf` is the host's reusable per-matrix λ storage.
+    fn fused_pogo(
+        x: &mut BatchMat<E>,
+        g: &BatchMat<E>,
+        eta: f64,
+        lambda: LambdaPolicy,
+        lam_buf: &mut Vec<f64>,
+    ) -> f64 {
         let (b, p, n) = x.shape();
         let kern = E::step_kernel();
         let stride = p * n;
         let gdata = g.as_slice();
         // Per-matrix quartic roots from the p×p gram residuals (identical
-        // arithmetic to the naive path: same coeffs, same solver).
+        // arithmetic to the naive path: same coeffs through the same
+        // slice-form computation, same solver — no per-solve allocation).
         let solve = |c: &[E], pp: usize| {
-            solve_landing_quartic(landing_coeffs(&Mat::from_vec(pp, pp, c.to_vec())))
+            with_coeff_scratch(pp, |s| solve_landing_quartic(landing_coeffs_slice(c, pp, s)))
         };
         let lam_policy = match lambda {
             LambdaPolicy::Half => PogoLambda::Const(0.5),
             LambdaPolicy::FindRoot => PogoLambda::Solve(&solve),
         };
-        let mut lams = vec![0.5f64; b];
-        for_each_mat_fused(x, &mut lams, fused_step_flops(b, p, n), |range, xc, lc| {
-            let mut scratch = StepScratch::new(p, n);
-            for (ci, i) in range.enumerate() {
-                lc[ci] = kern.pogo_step(
-                    &mut xc[ci * stride..(ci + 1) * stride],
-                    &gdata[i * stride..(i + 1) * stride],
-                    p,
-                    n,
-                    eta,
-                    &lam_policy,
-                    &mut scratch,
-                );
-            }
+        lam_buf.clear();
+        lam_buf.resize(b, 0.5);
+        for_each_mat_fused(x, lam_buf, fused_step_flops(b, p, n), |range, xc, lc| {
+            with_step_scratch(p, n, |scratch| {
+                for (ci, i) in range.clone().enumerate() {
+                    lc[ci] = kern.pogo_step(
+                        &mut xc[ci * stride..(ci + 1) * stride],
+                        &gdata[i * stride..(i + 1) * stride],
+                        p,
+                        n,
+                        eta,
+                        &lam_policy,
+                        scratch,
+                    );
+                }
+            });
         });
-        lams.last().copied().unwrap_or(0.5)
+        lam_buf.last().copied().unwrap_or(0.5)
     }
 
     /// Fused Landing/LandingPC over the batch (normalization, safeguard,
-    /// and both axpys inside one per-matrix sweep).
-    fn fused_landing(x: &mut BatchMat<E>, g: &BatchMat<E>, params: LandingParams) {
+    /// and both axpys inside one per-matrix sweep). `eta_buf` is the
+    /// host's reusable per-matrix safeguarded-η storage.
+    fn fused_landing(
+        x: &mut BatchMat<E>,
+        g: &BatchMat<E>,
+        params: LandingParams,
+        eta_buf: &mut Vec<f64>,
+    ) {
         let (b, p, n) = x.shape();
         let kern = E::step_kernel();
         let stride = p * n;
         let gdata = g.as_slice();
-        let mut etas = vec![params.eta; b];
-        for_each_mat_fused(x, &mut etas, fused_step_flops(b, p, n), |range, xc, ec| {
-            let mut scratch = StepScratch::new(p, n);
-            for (ci, i) in range.enumerate() {
-                ec[ci] = kern.landing_step(
-                    &mut xc[ci * stride..(ci + 1) * stride],
-                    &gdata[i * stride..(i + 1) * stride],
-                    p,
-                    n,
-                    &params,
-                    &mut scratch,
-                );
-            }
+        eta_buf.clear();
+        eta_buf.resize(b, params.eta);
+        for_each_mat_fused(x, eta_buf, fused_step_flops(b, p, n), |range, xc, ec| {
+            with_step_scratch(p, n, |scratch| {
+                for (ci, i) in range.clone().enumerate() {
+                    ec[ci] = kern.landing_step(
+                        &mut xc[ci * stride..(ci + 1) * stride],
+                        &gdata[i * stride..(i + 1) * stride],
+                        p,
+                        n,
+                        &params,
+                        scratch,
+                    );
+                }
+            });
         });
     }
 
@@ -361,20 +432,21 @@ impl<E: Field> BatchedHost<E> {
         let fused = !matches!(self.kernel, KernelChoice::Naive);
         match self.rule {
             Rule::Pogo { lambda } if fused => {
-                self.last_lambda = Some(Self::fused_pogo(x, &g, eta, lambda));
+                self.last_lambda = Some(Self::fused_pogo(x, g, eta, lambda, &mut self.lam_buf));
             }
             Rule::Landing { attraction, eps_ball, safeguard, normalize_grad } if fused => {
                 Self::fused_landing(
                     x,
-                    &g,
+                    g,
                     LandingParams { eta, attraction, eps_ball, safeguard, normalize_grad },
+                    &mut self.lam_buf,
                 );
             }
             Rule::Pogo { lambda } => {
                 // M = X − η·½((X Xᴴ)G − (X Gᴴ)X)  (small-gram form).
                 let xxh = batch_a_bh(x, x);
-                let xgh = batch_a_bh(x, &g);
-                let a1 = batch_matmul(&xxh, &g);
+                let xgh = batch_a_bh(x, g);
+                let a1 = batch_matmul(&xxh, g);
                 let a2 = batch_matmul(&xgh, x);
                 let mut m = x.clone();
                 m.axpy(E::from_f64(-0.5 * eta), &a1);
@@ -394,7 +466,8 @@ impl<E: Field> BatchedHost<E> {
                         // per-matrix path: same coeffs, same solver —
                         // the coefficients are real on either field).
                         let (_, p, _) = c.shape();
-                        let mut alphas = Vec::with_capacity(x.batch());
+                        let alphas = &mut self.coef_a;
+                        alphas.clear();
                         let mut lam = 0.5;
                         for i in 0..c.batch() {
                             let ci: Mat<E> = c.copy_mat(i);
@@ -402,16 +475,17 @@ impl<E: Field> BatchedHost<E> {
                             lam = solve_landing_quartic(landing_coeffs(&ci));
                             alphas.push(E::from_f64(-lam));
                         }
-                        m.axpy_per_mat(&alphas, &bmat);
+                        m.axpy_per_mat(alphas, &bmat);
                         self.last_lambda = Some(lam);
                     }
                 }
                 *x = m;
             }
             Rule::Landing { attraction, eps_ball, safeguard, normalize_grad } => {
+                let g_normed;
                 let g = if normalize_grad {
-                    let mut g = g;
-                    let alphas: Vec<E> = g
+                    let mut gg = g.clone();
+                    let alphas: Vec<E> = gg
                         .norm_sq_per_mat()
                         .iter()
                         .map(|&ns| {
@@ -419,15 +493,16 @@ impl<E: Field> BatchedHost<E> {
                             E::from_f64(1.0 / n)
                         })
                         .collect();
-                    g.scale_per_mat(&alphas);
-                    g
+                    gg.scale_per_mat(&alphas);
+                    g_normed = gg;
+                    &g_normed
                 } else {
                     g
                 };
                 // R = ½((XXᴴ)G − (XGᴴ)X); ∇N = (XXᴴ − I)X.
                 let xxh = batch_a_bh(x, x);
-                let xgh = batch_a_bh(x, &g);
-                let a1 = batch_matmul(&xxh, &g);
+                let xgh = batch_a_bh(x, g);
+                let a1 = batch_matmul(&xxh, g);
                 let a2 = batch_matmul(&xgh, x);
                 let mut r = a1.sub(&a2);
                 r.scale_inplace(E::from_f64(0.5));
@@ -440,8 +515,10 @@ impl<E: Field> BatchedHost<E> {
                 let r_ns = r.norm_sq_per_mat();
                 let n_ns = ngrad.norm_sq_per_mat();
                 let lam = attraction;
-                let mut a_r = Vec::with_capacity(x.batch());
-                let mut a_n = Vec::with_capacity(x.batch());
+                let a_r = &mut self.coef_a;
+                let a_n = &mut self.coef_b;
+                a_r.clear();
+                a_n.clear();
                 for i in 0..x.batch() {
                     let d = h_ns[i].sqrt().to_f64();
                     let lam_sq = r_ns[i].to_f64() + lam * lam * n_ns[i].to_f64();
@@ -457,16 +534,16 @@ impl<E: Field> BatchedHost<E> {
                     a_r.push(E::from_f64(-eta_i));
                     a_n.push(E::from_f64(-eta_i * lam));
                 }
-                x.axpy_per_mat(&a_r, &r);
-                x.axpy_per_mat(&a_n, &ngrad);
+                x.axpy_per_mat(a_r, &r);
+                x.axpy_per_mat(a_n, &ngrad);
             }
             Rule::Slpg => {
                 // Y = X − η(G − SymH(G Xᴴ)X); X⁺ = Y − ½(Y Yᴴ − I)Y.
-                let gxh = batch_a_bh(&g, x);
+                let gxh = batch_a_bh(g, x);
                 let sym = gxh.sym_per_mat();
                 let sx = batch_matmul(&sym, x);
                 let mut y = x.clone();
-                y.axpy(E::from_f64(-eta), &g);
+                y.axpy(E::from_f64(-eta), g);
                 y.axpy(E::from_f64(eta), &sx);
                 let mut c = batch_a_bh(&y, &y);
                 c.sub_eye_inplace();
@@ -475,7 +552,7 @@ impl<E: Field> BatchedHost<E> {
                 *x = y;
             }
             Rule::Adam => {
-                x.axpy(E::from_f64(-eta), &g);
+                x.axpy(E::from_f64(-eta), g);
             }
         }
         Ok(())

@@ -144,28 +144,88 @@ pub fn normal_step<E: Field>(m: &Mat<E>, policy: LambdaPolicy) -> (Mat<E>, f64) 
 /// implement the exact expansion of ‖C + Dλ + Eλ²‖², which tests verify
 /// against the directly-computed squared distance.
 pub fn landing_coeffs<E: Field>(c: &Mat<E>) -> [f64; 5] {
-    let n = {
-        // N = C + I
-        let mut n = c.clone();
-        n.add_diag_inplace(E::ONE);
-        n
-    };
-    let nc = matmul(&n, c); // N C
+    let (p, q) = c.shape();
+    assert_eq!(p, q, "landing_coeffs expects the square gram residual");
+    let mut scratch = CoeffScratch::new(p);
+    landing_coeffs_slice(c.as_slice(), p, &mut scratch)
+}
+
+/// Reusable p×p work buffers for [`landing_coeffs_slice`]: `N = C + I`,
+/// `N·C`, `D`, and `E` of the Lemma 3.1 identities. One per
+/// (thread, element-type, p) via [`with_coeff_scratch`] on the hot path.
+pub struct CoeffScratch<E: Field> {
+    n: Vec<E>,
+    nc: Vec<E>,
+    d: Vec<E>,
+    e: Vec<E>,
+}
+
+impl<E: Field> CoeffScratch<E> {
+    pub fn new(p: usize) -> Self {
+        CoeffScratch {
+            n: vec![E::ZERO; p * p],
+            nc: vec![E::ZERO; p * p],
+            d: vec![E::ZERO; p * p],
+            e: vec![E::ZERO; p * p],
+        }
+    }
+}
+
+/// Run `f` with this thread's [`CoeffScratch`] for `(E, p)` — allocated on
+/// first use, reused on every later FindRoot solve from the same thread.
+/// Resident pool workers persist across steps, so the steady-state fused
+/// FindRoot path stays off the heap entirely.
+pub fn with_coeff_scratch<E: Field, R>(p: usize, f: impl FnOnce(&mut CoeffScratch<E>) -> R) -> R {
+    crate::util::pool::with_scratch(p, 0, || CoeffScratch::<E>::new(p), f)
+}
+
+/// [`landing_coeffs`] on a raw row-major `p×p` slice with caller-provided
+/// scratch — the allocation-free form used by the fused batched FindRoot
+/// path, where `C` arrives as a chunk of [`StepScratch`] storage rather
+/// than a [`Mat`]. Mirrors the `Mat` arithmetic operation-for-operation
+/// (same products through the same row kernels, same elementwise order,
+/// same sequential reductions), so both forms are bit-identical — pinned
+/// by a test below.
+pub fn landing_coeffs_slice<E: Field>(c: &[E], p: usize, s: &mut CoeffScratch<E>) -> [f64; 5] {
+    assert_eq!(c.len(), p * p, "landing_coeffs_slice expects a p×p gram residual");
+    assert_eq!(s.n.len(), p * p, "CoeffScratch sized for a different p");
+    let kern = E::step_kernel();
+    // N = C + I
+    s.n.copy_from_slice(c);
+    for i in 0..p {
+        s.n[i * p + i] += E::ONE;
+    }
+    // N C
+    s.nc.fill(E::ZERO);
+    kern.mm_rows(&s.n, c, 0..p, &mut s.nc, p, p);
     // D = −(N C + (N C)ᴴ)   (since C, N Hermitian ⇒ C N = (N C)ᴴ)
-    let d = {
-        let mut d = nc.add(&nc.adjoint());
-        d.scale_inplace(-E::ONE);
-        d
-    };
+    for i in 0..p {
+        for j in 0..p {
+            let mut v = s.nc[i * p + j] + s.nc[j * p + i].conj();
+            v *= -E::ONE;
+            s.d[i * p + j] = v;
+        }
+    }
     // E = C N C = (N C)ᴴ C ... use E = Cᴴ(NC) with C Hermitian: C·(N C).
-    let e = matmul(c, &nc);
+    s.e.fill(E::ZERO);
+    kern.mm_rows(c, &s.nc, 0..p, &mut s.e, p, p);
     // ‖C + Dλ + Eλ²‖² coefficients (real inner products).
-    let a4 = e.dot_re(&e).to_f64();
-    let a3 = 2.0 * d.dot_re(&e).to_f64();
-    let a2 = d.dot_re(&d).to_f64() + 2.0 * c.dot_re(&e).to_f64();
-    let a1 = 2.0 * c.dot_re(&d).to_f64();
-    let a0 = c.dot_re(&c).to_f64();
+    let a4 = dot_re_slice(&s.e, &s.e).to_f64();
+    let a3 = 2.0 * dot_re_slice(&s.d, &s.e).to_f64();
+    let a2 = dot_re_slice(&s.d, &s.d).to_f64() + 2.0 * dot_re_slice(c, &s.e).to_f64();
+    let a1 = 2.0 * dot_re_slice(c, &s.d).to_f64();
+    let a0 = dot_re_slice(c, c).to_f64();
     [a4, a3, a2, a1, a0]
+}
+
+/// `Mat::dot_re` on raw slices: the same sequential reduction, so the two
+/// forms accumulate in the same order.
+fn dot_re_slice<E: Field>(a: &[E], b: &[E]) -> E::Real {
+    let mut acc = E::Real::ZERO;
+    for (&x, &y) in a.iter().zip(b) {
+        acc += x.mul_conj(y).re();
+    }
+    acc
 }
 
 /// Evaluate the landing polynomial at λ (used by tests and the ablation).
@@ -265,6 +325,53 @@ mod tests {
             "root λ={lam} gives {} vs grid min {grid_min}",
             dr * dr
         );
+    }
+
+    #[test]
+    fn slice_coeffs_match_mat_ops_bitwise() {
+        // The scratch-based slice form must reproduce the original
+        // Mat-expression arithmetic bit-for-bit (same products, same
+        // elementwise order, same sequential reductions) — this is what
+        // lets the allocation-free fused FindRoot path stay parity-exact
+        // with the naive per-matrix engine.
+        let mut rng = Rng::seed_from_u64(11);
+        for p in [2usize, 4, 7] {
+            let x = stiefel::random_point_t::<f64>(p, p + 5, &mut rng);
+            let g = M::randn(p, p + 5, &mut rng);
+            let m = intermediate(&x, &g, 0.37);
+            let mut c = matmul_a_bh(&m, &m);
+            c.sub_eye_inplace();
+            // Original Mat-ops expression.
+            let n = {
+                let mut n = c.clone();
+                n.add_diag_inplace(1.0);
+                n
+            };
+            let nc = matmul(&n, &c);
+            let d = {
+                let mut d = nc.add(&nc.adjoint());
+                d.scale_inplace(-1.0);
+                d
+            };
+            let e = matmul(&c, &nc);
+            let want = [
+                e.dot_re(&e).to_f64(),
+                2.0 * d.dot_re(&e).to_f64(),
+                d.dot_re(&d).to_f64() + 2.0 * c.dot_re(&e).to_f64(),
+                2.0 * c.dot_re(&d).to_f64(),
+                c.dot_re(&c).to_f64(),
+            ];
+            let mut scratch = CoeffScratch::new(p);
+            let got = landing_coeffs_slice(c.as_slice(), p, &mut scratch);
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.to_bits(), w.to_bits(), "coefficient drifted at p={p}");
+            }
+            // And the Mat entry point delegates to the same path.
+            let via_mat = landing_coeffs(&c);
+            for (g, w) in via_mat.iter().zip(&got) {
+                assert_eq!(g.to_bits(), w.to_bits());
+            }
+        }
     }
 
     #[test]

@@ -297,6 +297,7 @@ fn route(req: &Request, queue: &JobQueue, metrics: &ServeMetrics) -> Routed {
         )),
         ("GET", ["metrics"]) => {
             let (depth, running) = queue.depth_running();
+            let pool = crate::util::pool::pool_stats();
             let gauges = QueueGauges {
                 depth,
                 running,
@@ -304,6 +305,9 @@ fn route(req: &Request, queue: &JobQueue, metrics: &ServeMetrics) -> Routed {
                 workers: queue.workers(),
                 by_state: queue.state_counts(),
                 outstanding_cost: queue.outstanding_cost(),
+                pool_mode: pool.mode,
+                pool_workers: pool.resident_workers,
+                pool_dispatches: pool.dispatches,
             };
             plain(Response::text(200, metrics.render(&gauges)))
         }

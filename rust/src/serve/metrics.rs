@@ -26,6 +26,13 @@ pub struct QueueGauges {
     pub by_state: Vec<(&'static str, usize)>,
     /// Outstanding admitted `B·p·n·steps` cost units.
     pub outstanding_cost: u64,
+    /// Compute-pool mode (`"resident"` / `"spawn"`).
+    pub pool_mode: &'static str,
+    /// Resident compute-pool worker threads (0 until first dispatch, or
+    /// always 0 in spawn mode).
+    pub pool_workers: usize,
+    /// Parallel dispatches into the compute pool since startup.
+    pub pool_dispatches: u64,
 }
 
 /// Monotonic counters for one daemon lifetime.
@@ -250,6 +257,23 @@ impl ServeMetrics {
             q.outstanding_cost as f64,
         );
         metric(&mut out, "pogo_serve_workers", "gauge", "Worker threads.", q.workers as f64);
+        // The shared compute pool every serve worker dispatches into
+        // (see `util::pool`): mode as a label, so dashboards can tell a
+        // `POGO_POOL=spawn` A/B daemon from the resident default.
+        out.push_str(&format!(
+            "# HELP pogo_serve_pool_workers Resident compute-pool threads \
+             (shared across serve workers).\n\
+             # TYPE pogo_serve_pool_workers gauge\n\
+             pogo_serve_pool_workers{{mode=\"{}\"}} {}\n",
+            q.pool_mode, q.pool_workers
+        ));
+        metric(
+            &mut out,
+            "pogo_serve_pool_dispatches_total",
+            "counter",
+            "Parallel dispatches into the shared compute pool.",
+            q.pool_dispatches as f64,
+        );
         out
     }
 }
@@ -272,6 +296,9 @@ mod tests {
                 ("cancelled", 1),
             ],
             outstanding_cost: 4800,
+            pool_mode: "resident",
+            pool_workers: 3,
+            pool_dispatches: 42,
         }
     }
 
@@ -301,6 +328,8 @@ mod tests {
             "pogo_serve_jobs{state=\"done\"} 7",
             "pogo_serve_jobs{state=\"queued\"} 2",
             "pogo_serve_admission_outstanding_cost 4800",
+            "pogo_serve_pool_workers{mode=\"resident\"} 3",
+            "pogo_serve_pool_dispatches_total 42",
             "pogo_serve_sse_clients 1",
             "pogo_serve_sse_events_total 0",
             "pogo_serve_artifact_cache_hits_total 5",

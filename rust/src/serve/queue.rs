@@ -377,6 +377,15 @@ impl JobQueue {
         // Zero workers is allowed (a queue that only accepts/persists —
         // used by tests); the server layer guards its own default.
         let workers = cfg.workers;
+        if workers > 0 {
+            // Spin up the shared compute pool once, before any job runs:
+            // every serve worker dispatches into the SAME resident pool
+            // (serialized by its run lock), so the daemon's thread budget
+            // is `workers + num_threads()−1` rather than the old
+            // spawn-per-call worst case of `workers × num_threads()`.
+            // `/metrics` surfaces the pool's mode/size/dispatch count.
+            crate::util::pool::warm_pool();
+        }
         let inner = Arc::new(Inner {
             cfg,
             metrics,

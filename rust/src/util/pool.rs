@@ -1,7 +1,7 @@
-//! Minimal data-parallel helpers on std::thread::scope.
+//! Data-parallel helpers on a lazily-initialized resident worker pool.
 //!
 //! No rayon in the offline registry, so the substrate's parallel-for lives
-//! here. Two entry points cover everything the crate needs:
+//! here. Four entry points cover everything the crate needs:
 //!
 //! - [`parallel_rows`]: shard a row-major output buffer by row ranges and
 //!   hand each worker a disjoint `&mut [S]` chunk (used by matmul).
@@ -10,27 +10,397 @@
 //!   the `(B, p, n)` iterate tensor plus a per-matrix `f64` output).
 //! - [`parallel_for`]: index-space parallel map collecting results (used by
 //!   multi-matrix optimizer dispatch and dataset generation).
+//! - [`parallel_for_each_mut`]: parallel for-each over a mutable slice.
+//!
+//! Execution backend: by default, jobs run on a process-global **resident
+//! pool** — `num_threads() - 1` workers parked on a condvar, woken with a
+//! sharded job descriptor, claiming shard indices off a shared atomic
+//! counter while the submitting thread participates, then rendezvousing on
+//! a completion barrier. The submitter blocks until the barrier clears, so
+//! borrowed closures are sound without `'static` bounds. `POGO_POOL=spawn`
+//! (or [`set_pool_mode`]) restores the previous spawn-per-call
+//! `std::thread::scope` path for A/B measurement and debugging.
+//!
+//! Both backends compute the SAME shard geometry (`per = rows.div_ceil(nt)`
+//! contiguous row ranges) and run the same closures over the same chunks,
+//! so results are bit-identical across resident / spawn / serial — pinned
+//! by `tests/pool_parity.rs`.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::any::Any;
+use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
 
 /// Number of worker threads to use (min(available_parallelism, 16),
-/// overridable via `POGO_THREADS`).
+/// overridable via `POGO_THREADS`). The environment read is cached after
+/// the first call; tests use [`set_num_threads`] / [`refresh_num_threads`]
+/// instead of mutating the environment mid-process.
 pub fn num_threads() -> usize {
-    static CACHED: AtomicUsize = AtomicUsize::new(0);
+    let o = THREADS_OVERRIDE.load(Ordering::Relaxed);
+    if o != 0 {
+        return o;
+    }
     let c = CACHED.load(Ordering::Relaxed);
     if c != 0 {
         return c;
     }
-    let n = std::env::var("POGO_THREADS")
+    let n = threads_from_env();
+    CACHED.store(n, Ordering::Relaxed);
+    n
+}
+
+static CACHED: AtomicUsize = AtomicUsize::new(0);
+/// In-process override (0 = none). Takes precedence over the cached env read.
+static THREADS_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+fn threads_from_env() -> usize {
+    std::env::var("POGO_THREADS")
         .ok()
         .and_then(|v| v.parse::<usize>().ok())
         .filter(|&v| v >= 1)
         .unwrap_or_else(|| {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
-        });
-    CACHED.store(n, Ordering::Relaxed);
-    n
+        })
 }
+
+/// Override the thread budget in-process (`None` clears the override and
+/// falls back to the cached `POGO_THREADS` read). Used by parity tests and
+/// benches to pin a serial (`Some(1)`) or fixed-width run without racing on
+/// process-global environment variables.
+pub fn set_num_threads(n: Option<usize>) {
+    THREADS_OVERRIDE.store(n.unwrap_or(0), Ordering::Relaxed);
+}
+
+/// Drop the cached `POGO_THREADS` read and re-read the environment. Returns
+/// the refreshed value. Without this, the first `num_threads()` call latches
+/// the env value for the process lifetime.
+pub fn refresh_num_threads() -> usize {
+    CACHED.store(0, Ordering::Relaxed);
+    num_threads()
+}
+
+/// Which execution backend the four `parallel_*` entry points dispatch to.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum PoolMode {
+    /// Process-global resident worker pool (the default).
+    Resident,
+    /// Fresh `std::thread::scope` spawn per call (the pre-pool behavior;
+    /// `POGO_POOL=spawn`).
+    Spawn,
+}
+
+impl PoolMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            PoolMode::Resident => "resident",
+            PoolMode::Spawn => "spawn",
+        }
+    }
+}
+
+/// 0 = no override, 1 = resident, 2 = spawn.
+static MODE_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Current pool mode: the in-process override if set, else `POGO_POOL`
+/// (read once; `spawn` selects the scoped-spawn path, anything else the
+/// resident pool).
+pub fn pool_mode() -> PoolMode {
+    match MODE_OVERRIDE.load(Ordering::Relaxed) {
+        1 => return PoolMode::Resident,
+        2 => return PoolMode::Spawn,
+        _ => {}
+    }
+    static ENV: OnceLock<PoolMode> = OnceLock::new();
+    *ENV.get_or_init(|| match std::env::var("POGO_POOL").ok().as_deref() {
+        Some("spawn") => PoolMode::Spawn,
+        _ => PoolMode::Resident,
+    })
+}
+
+/// Override the pool mode in-process (`None` clears the override). Used by
+/// parity tests and the dispatch bench to A/B both backends in one process.
+pub fn set_pool_mode(mode: Option<PoolMode>) {
+    let v = match mode {
+        None => 0,
+        Some(PoolMode::Resident) => 1,
+        Some(PoolMode::Spawn) => 2,
+    };
+    MODE_OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+/// Snapshot of the resident pool for `/metrics` and benches.
+#[derive(Clone, Copy, Debug)]
+pub struct PoolStats {
+    /// Active backend name (`"resident"` or `"spawn"`).
+    pub mode: &'static str,
+    /// Resident workers spawned so far (0 until the pool first runs a job).
+    pub resident_workers: usize,
+    /// Jobs dispatched through the resident pool since process start.
+    pub dispatches: u64,
+}
+
+/// Stats for the process-global pool. Does not force pool initialization.
+pub fn pool_stats() -> PoolStats {
+    let (resident_workers, dispatches) = match POOL.get() {
+        Some(p) => (p.spawned.load(Ordering::Relaxed), p.dispatches.load(Ordering::Relaxed)),
+        None => (0, 0),
+    };
+    PoolStats { mode: pool_mode().name(), resident_workers, dispatches }
+}
+
+/// Eagerly spawn the resident workers (normally they spawn on first job).
+/// `pogo serve` calls this at queue start so all serve workers share one
+/// fully-warmed pool instead of each paying first-dispatch spawn cost.
+/// Returns the post-warmup stats.
+pub fn warm_pool() -> PoolStats {
+    if pool_mode() == PoolMode::Resident && num_threads() > 1 {
+        let p = pool();
+        let _guard = lock(&p.run_lock);
+        p.grow_locked(num_threads().saturating_sub(1));
+    }
+    pool_stats()
+}
+
+// ---------------------------------------------------------------------------
+// Resident pool internals.
+// ---------------------------------------------------------------------------
+
+/// A posted job: a lifetime-erased pointer to the submitter's sharded
+/// closure plus the shard count. Sound because the submitter blocks in
+/// `Pool::run` until every worker has passed the completion barrier, so the
+/// closure outlives every dereference.
+#[derive(Clone, Copy)]
+struct Job {
+    f: *const (dyn Fn(usize) + Sync),
+    shards: usize,
+}
+
+// SAFETY: the pointee is `Sync` and outlives the job (see `Job` docs).
+unsafe impl Send for Job {}
+
+struct PoolState {
+    /// Bumped on every post; workers compare against their last-seen value
+    /// so a job is claimed at most once per worker.
+    epoch: u64,
+    job: Option<Job>,
+    /// Workers that have not yet passed the completion barrier for the
+    /// current job. The submitter waits for 0.
+    active: usize,
+    panicked: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Workers park here between jobs.
+    work_cv: Condvar,
+    /// The submitter parks here until `active == 0`.
+    done_cv: Condvar,
+    /// Shard claim counter, reset before each post.
+    next: AtomicUsize,
+}
+
+struct Pool {
+    shared: Arc<PoolShared>,
+    /// Serializes jobs: concurrent submitters (e.g. serve workers) queue
+    /// here, so pool threads are never oversubscribed across jobs.
+    run_lock: Mutex<()>,
+    /// Workers spawned so far; grows lazily toward `num_threads() - 1`.
+    spawned: AtomicUsize,
+    dispatches: AtomicU64,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| Pool {
+        shared: Arc::new(PoolShared {
+            state: Mutex::new(PoolState { epoch: 0, job: None, active: 0, panicked: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            next: AtomicUsize::new(0),
+        }),
+        run_lock: Mutex::new(()),
+        spawned: AtomicUsize::new(0),
+        dispatches: AtomicU64::new(0),
+    })
+}
+
+/// Mutex locks in the pool never run user code while held, so poisoning can
+/// only come from an unwinding assertion in pool bookkeeping itself; keep
+/// going rather than cascading panics across unrelated jobs.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+thread_local! {
+    static IS_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// True on resident pool worker threads. Entry points use this to run
+/// nested parallel calls inline (serially) instead of deadlocking on the
+/// pool's run lock.
+pub fn is_pool_worker() -> bool {
+    IS_POOL_WORKER.with(|c| c.get())
+}
+
+fn worker_loop(shared: Arc<PoolShared>) {
+    IS_POOL_WORKER.with(|c| c.set(true));
+    let mut seen_epoch = 0u64;
+    loop {
+        let job = {
+            let mut st = lock(&shared.state);
+            loop {
+                if st.epoch != seen_epoch {
+                    if let Some(job) = st.job {
+                        seen_epoch = st.epoch;
+                        break job;
+                    }
+                }
+                st = shared.work_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        // SAFETY: the submitter blocks until this worker passes the barrier
+        // below, so the closure behind `job.f` is alive for the whole claim
+        // loop.
+        let f = unsafe { &*job.f };
+        let result = catch_unwind(AssertUnwindSafe(|| loop {
+            let i = shared.next.fetch_add(1, Ordering::Relaxed);
+            if i >= job.shards {
+                break;
+            }
+            f(i);
+        }));
+        let mut st = lock(&shared.state);
+        if result.is_err() {
+            st.panicked = true;
+        }
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+impl Pool {
+    /// Spawn workers up to `target`. Caller must hold `run_lock` (workers
+    /// spawned mid-job would desync the barrier count).
+    fn grow_locked(&self, target: usize) {
+        let cur = self.spawned.load(Ordering::Relaxed);
+        for i in cur..target {
+            let shared = Arc::clone(&self.shared);
+            std::thread::Builder::new()
+                .name(format!("pogo-pool-{i}"))
+                .spawn(move || worker_loop(shared))
+                .expect("failed to spawn pogo pool worker");
+        }
+        if target > cur {
+            self.spawned.store(target, Ordering::Relaxed);
+        }
+    }
+
+    /// Run `f(0), f(1), …, f(shards-1)` across the pool workers plus the
+    /// calling thread, blocking until all shards complete. Panics (after
+    /// the barrier) if any shard panicked.
+    fn run(&self, shards: usize, f: &(dyn Fn(usize) + Sync)) {
+        let _guard = lock(&self.run_lock);
+        self.dispatches.fetch_add(1, Ordering::Relaxed);
+        self.grow_locked(num_threads().saturating_sub(1));
+        let workers = self.spawned.load(Ordering::Relaxed);
+        if workers == 0 {
+            for i in 0..shards {
+                f(i);
+            }
+            return;
+        }
+        {
+            let mut st = lock(&self.shared.state);
+            self.shared.next.store(0, Ordering::Relaxed);
+            st.job = Some(Job { f: f as *const _, shards });
+            st.epoch = st.epoch.wrapping_add(1);
+            st.active = workers;
+            st.panicked = false;
+            self.shared.work_cv.notify_all();
+        }
+        // The submitter claims shards alongside the workers. A panicking
+        // shard must not unwind past the barrier: workers may still hold
+        // `f`, so catch, rendezvous, then resume.
+        let caller = catch_unwind(AssertUnwindSafe(|| loop {
+            let i = self.shared.next.fetch_add(1, Ordering::Relaxed);
+            if i >= shards {
+                break;
+            }
+            f(i);
+        }));
+        let worker_panicked = {
+            let mut st = lock(&self.shared.state);
+            while st.active != 0 {
+                st = self.shared.done_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+            st.job = None;
+            st.panicked
+        };
+        if let Err(p) = caller {
+            resume_unwind(p);
+        }
+        if worker_panicked {
+            panic!("pogo pool worker panicked during a parallel job");
+        }
+    }
+}
+
+/// Send+Sync wrapper for a raw base pointer whose disjoint shard ranges are
+/// written by different workers (same contract rayon's internal `SendPtr`
+/// relies on).
+struct SendPtr<T>(*mut T);
+
+// SAFETY: shards index disjoint regions; `T: Send` moves element access
+// across threads, never shares an element.
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+/// Dispatch `shards` shard indices through the current pool backend:
+/// resident workers + caller in resident mode, one scoped thread per shard
+/// in spawn mode, inline when single-threaded or already on a pool worker.
+/// This is the raw primitive the dispatch-latency bench measures.
+pub fn parallel_shards<F>(shards: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if shards == 0 {
+        return;
+    }
+    if num_threads() <= 1 || is_pool_worker() {
+        for i in 0..shards {
+            f(i);
+        }
+        return;
+    }
+    match pool_mode() {
+        PoolMode::Resident => pool().run(shards, &f),
+        PoolMode::Spawn => {
+            std::thread::scope(|scope| {
+                for i in 0..shards {
+                    let fref = &f;
+                    scope.spawn(move || fref(i));
+                }
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Entry points. Shard geometry is computed ONCE here and shared verbatim by
+// the resident and spawn backends: `per = rows.div_ceil(nt)` contiguous row
+// ranges, `nt = num_threads().min(rows)`. Keeping the geometry identical is
+// what makes backend choice invisible to results (bit-exactness).
+// ---------------------------------------------------------------------------
 
 /// Split `buf` (a row-major `rows × cols` buffer) into contiguous row-range
 /// chunks and run `f(rows_range, chunk)` on each, in parallel.
@@ -40,11 +410,34 @@ where
 {
     assert_eq!(buf.len(), rows * cols);
     let nt = num_threads().min(rows.max(1));
-    if nt <= 1 {
+    if nt <= 1 || is_pool_worker() {
         f(0..rows, buf);
         return;
     }
     let per = rows.div_ceil(nt);
+    match pool_mode() {
+        PoolMode::Spawn => parallel_rows_spawn(buf, rows, cols, per, &f),
+        PoolMode::Resident => {
+            let shards = rows.div_ceil(per);
+            let base = SendPtr(buf.as_mut_ptr());
+            pool().run(shards, &|s| {
+                let r0 = s * per;
+                let r1 = (r0 + per).min(rows);
+                // SAFETY: shard row ranges are disjoint, so the chunks never
+                // alias; the buffer outlives the blocking `run` call.
+                let chunk = unsafe {
+                    std::slice::from_raw_parts_mut(base.get().add(r0 * cols), (r1 - r0) * cols)
+                };
+                f(r0..r1, chunk);
+            });
+        }
+    }
+}
+
+fn parallel_rows_spawn<S: Send, F>(buf: &mut [S], rows: usize, cols: usize, per: usize, f: &F)
+where
+    F: Fn(std::ops::Range<usize>, &mut [S]) + Sync,
+{
     std::thread::scope(|scope| {
         let mut rest = buf;
         let mut r0 = 0;
@@ -53,9 +446,8 @@ where
             let take = (r1 - r0) * cols;
             let (chunk, tail) = rest.split_at_mut(take);
             rest = tail;
-            let fref = &f;
             let range = r0..r1;
-            scope.spawn(move || fref(range, chunk));
+            scope.spawn(move || f(range, chunk));
             r0 = r1;
         }
     });
@@ -78,11 +470,52 @@ pub fn parallel_rows_pair<A: Send, B: Send, F>(
     assert_eq!(a.len(), rows * cols_a);
     assert_eq!(b.len(), rows * cols_b);
     let nt = num_threads().min(rows.max(1));
-    if nt <= 1 {
+    if nt <= 1 || is_pool_worker() {
         f(0..rows, a, b);
         return;
     }
     let per = rows.div_ceil(nt);
+    match pool_mode() {
+        PoolMode::Spawn => parallel_rows_pair_spawn(a, b, rows, cols_a, cols_b, per, &f),
+        PoolMode::Resident => {
+            let shards = rows.div_ceil(per);
+            let base_a = SendPtr(a.as_mut_ptr());
+            let base_b = SendPtr(b.as_mut_ptr());
+            pool().run(shards, &|s| {
+                let r0 = s * per;
+                let r1 = (r0 + per).min(rows);
+                // SAFETY: disjoint row ranges in both buffers; both outlive
+                // the blocking `run` call.
+                let (chunk_a, chunk_b) = unsafe {
+                    (
+                        std::slice::from_raw_parts_mut(
+                            base_a.get().add(r0 * cols_a),
+                            (r1 - r0) * cols_a,
+                        ),
+                        std::slice::from_raw_parts_mut(
+                            base_b.get().add(r0 * cols_b),
+                            (r1 - r0) * cols_b,
+                        ),
+                    )
+                };
+                f(r0..r1, chunk_a, chunk_b);
+            });
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn parallel_rows_pair_spawn<A: Send, B: Send, F>(
+    a: &mut [A],
+    b: &mut [B],
+    rows: usize,
+    cols_a: usize,
+    cols_b: usize,
+    per: usize,
+    f: &F,
+) where
+    F: Fn(std::ops::Range<usize>, &mut [A], &mut [B]) + Sync,
+{
     std::thread::scope(|scope| {
         let mut rest_a = a;
         let mut rest_b = b;
@@ -93,9 +526,8 @@ pub fn parallel_rows_pair<A: Send, B: Send, F>(
             let (chunk_b, tail_b) = rest_b.split_at_mut((r1 - r0) * cols_b);
             rest_a = tail_a;
             rest_b = tail_b;
-            let fref = &f;
             let range = r0..r1;
-            scope.spawn(move || fref(range, chunk_a, chunk_b));
+            scope.spawn(move || f(range, chunk_a, chunk_b));
             r0 = r1;
         }
     });
@@ -107,28 +539,51 @@ where
     F: Fn(usize) -> T + Sync,
 {
     let nt = num_threads().min(n.max(1));
-    if nt <= 1 || n <= 1 {
+    if nt <= 1 || n <= 1 || is_pool_worker() {
         return (0..n).map(f).collect();
     }
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
     let per = n.div_ceil(nt);
+    match pool_mode() {
+        PoolMode::Spawn => parallel_for_spawn(&mut out, n, per, &f),
+        PoolMode::Resident => {
+            let shards = n.div_ceil(per);
+            let base = SendPtr(out.as_mut_ptr());
+            pool().run(shards, &|s| {
+                let i0 = s * per;
+                let i1 = (i0 + per).min(n);
+                // SAFETY: disjoint index ranges; `out` outlives the blocking
+                // `run` call.
+                let chunk =
+                    unsafe { std::slice::from_raw_parts_mut(base.get().add(i0), i1 - i0) };
+                for (off, slot) in chunk.iter_mut().enumerate() {
+                    *slot = Some(f(i0 + off));
+                }
+            });
+        }
+    }
+    out.into_iter().map(|v| v.expect("worker filled all slots")).collect()
+}
+
+fn parallel_for_spawn<T: Send, F>(out: &mut [Option<T>], n: usize, per: usize, f: &F)
+where
+    F: Fn(usize) -> T + Sync,
+{
     std::thread::scope(|scope| {
-        let mut rest = out.as_mut_slice();
+        let mut rest = out;
         let mut i0 = 0;
         while i0 < n {
             let i1 = (i0 + per).min(n);
             let (chunk, tail) = rest.split_at_mut(i1 - i0);
             rest = tail;
-            let fref = &f;
             scope.spawn(move || {
                 for (off, slot) in chunk.iter_mut().enumerate() {
-                    *slot = Some(fref(i0 + off));
+                    *slot = Some(f(i0 + off));
                 }
             });
             i0 = i1;
         }
     });
-    out.into_iter().map(|v| v.expect("worker filled all slots")).collect()
 }
 
 /// Parallel for-each over mutable items of a slice (disjoint access).
@@ -138,13 +593,37 @@ where
 {
     let n = items.len();
     let nt = num_threads().min(n.max(1));
-    if nt <= 1 || n <= 1 {
+    if nt <= 1 || n <= 1 || is_pool_worker() {
         for (i, it) in items.iter_mut().enumerate() {
             f(i, it);
         }
         return;
     }
     let per = n.div_ceil(nt);
+    match pool_mode() {
+        PoolMode::Spawn => parallel_for_each_mut_spawn(items, n, per, &f),
+        PoolMode::Resident => {
+            let shards = n.div_ceil(per);
+            let base = SendPtr(items.as_mut_ptr());
+            pool().run(shards, &|s| {
+                let i0 = s * per;
+                let i1 = (i0 + per).min(n);
+                // SAFETY: disjoint index ranges; `items` outlives the
+                // blocking `run` call.
+                let chunk =
+                    unsafe { std::slice::from_raw_parts_mut(base.get().add(i0), i1 - i0) };
+                for (off, item) in chunk.iter_mut().enumerate() {
+                    f(i0 + off, item);
+                }
+            });
+        }
+    }
+}
+
+fn parallel_for_each_mut_spawn<T: Send, F>(items: &mut [T], n: usize, per: usize, f: &F)
+where
+    F: Fn(usize, &mut T) + Sync,
+{
     std::thread::scope(|scope| {
         let mut rest = items;
         let mut i0 = 0;
@@ -152,10 +631,9 @@ where
             let i1 = (i0 + per).min(n);
             let (chunk, tail) = rest.split_at_mut(i1 - i0);
             rest = tail;
-            let fref = &f;
             scope.spawn(move || {
                 for (off, item) in chunk.iter_mut().enumerate() {
-                    fref(i0 + off, item);
+                    f(i0 + off, item);
                 }
             });
             i0 = i1;
@@ -163,9 +641,48 @@ where
     });
 }
 
+// ---------------------------------------------------------------------------
+// Keyed thread-local scratch arena. Resident workers persist across steps,
+// so scratch parked here is allocated once per (worker, key) and reused —
+// the allocation-free steady state. Under `POGO_POOL=spawn`, threads die
+// after every call and the arena re-allocates each step (that delta is
+// exactly what `benches/pool_dispatch.rs` measures).
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static SCRATCH_ARENA: std::cell::RefCell<
+        std::collections::HashMap<(std::any::TypeId, usize, usize), Box<dyn Any>>,
+    > = std::cell::RefCell::new(std::collections::HashMap::new());
+}
+
+/// Run `f` with this thread's scratch slot for `(V, k1, k2)`, creating it
+/// with `make` on first use. The slot is taken OUT of the arena while `f`
+/// runs (no `RefCell` borrow is held), so `f` may itself use the arena for
+/// a different key — e.g. a fused step holding its `StepScratch` while the
+/// quartic solve inside it borrows a coefficient scratch. Steady state does
+/// not allocate: take + put-back reuse the map's existing capacity.
+pub fn with_scratch<V: Any, R>(
+    k1: usize,
+    k2: usize,
+    make: impl FnOnce() -> V,
+    f: impl FnOnce(&mut V) -> R,
+) -> R {
+    let key = (std::any::TypeId::of::<V>(), k1, k2);
+    let mut slot = SCRATCH_ARENA
+        .with(|cell| cell.borrow_mut().remove(&key))
+        .unwrap_or_else(|| Box::new(make()) as Box<dyn Any>);
+    let v = slot.downcast_mut::<V>().expect("scratch slot holds the keyed type");
+    let out = f(v);
+    SCRATCH_ARENA.with(|cell| cell.borrow_mut().insert(key, slot));
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Serializes tests that flip process-global overrides.
+    static OVERRIDE_LOCK: Mutex<()> = Mutex::new(());
 
     #[test]
     fn parallel_rows_covers_all() {
@@ -225,5 +742,143 @@ mod tests {
         assert!(out.is_empty());
         let mut buf: Vec<f32> = vec![];
         parallel_rows(&mut buf, 0, 0, |_, _| {});
+        parallel_shards(0, |_| unreachable!("no shards to run"));
+    }
+
+    #[test]
+    fn parallel_shards_covers_every_index_in_both_modes() {
+        let _g = OVERRIDE_LOCK.lock().unwrap();
+        for mode in [PoolMode::Resident, PoolMode::Spawn] {
+            set_pool_mode(Some(mode));
+            let hits: Vec<AtomicUsize> = (0..23).map(|_| AtomicUsize::new(0)).collect();
+            parallel_shards(hits.len(), |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "every shard runs exactly once under {}",
+                mode.name()
+            );
+        }
+        set_pool_mode(None);
+    }
+
+    #[test]
+    fn spawn_and_resident_fill_identically() {
+        let _g = OVERRIDE_LOCK.lock().unwrap();
+        let run = |mode: PoolMode| {
+            set_pool_mode(Some(mode));
+            let rows = 41;
+            let cols = 5;
+            let mut buf = vec![0usize; rows * cols];
+            parallel_rows(&mut buf, rows, cols, |range, chunk| {
+                for (ci, r) in range.enumerate() {
+                    for c in 0..cols {
+                        chunk[ci * cols + c] = r * 1000 + c;
+                    }
+                }
+            });
+            buf
+        };
+        let resident = run(PoolMode::Resident);
+        let spawn = run(PoolMode::Spawn);
+        set_pool_mode(None);
+        assert_eq!(resident, spawn);
+    }
+
+    #[test]
+    fn num_threads_override_and_refresh() {
+        let _g = OVERRIDE_LOCK.lock().unwrap();
+        let baseline = num_threads();
+        set_num_threads(Some(3));
+        assert_eq!(num_threads(), 3, "override takes precedence over the cache");
+        set_num_threads(None);
+        assert_eq!(num_threads(), baseline, "clearing the override restores the cached value");
+        // Regression for the latched-forever cache: a changed POGO_THREADS
+        // is invisible to num_threads() until refresh_num_threads().
+        let saved = std::env::var("POGO_THREADS").ok();
+        std::env::set_var("POGO_THREADS", "2");
+        assert_eq!(num_threads(), baseline, "cache still serves the stale value");
+        assert_eq!(refresh_num_threads(), 2, "refresh re-reads the environment");
+        match saved {
+            Some(v) => std::env::set_var("POGO_THREADS", v),
+            None => std::env::remove_var("POGO_THREADS"),
+        }
+        refresh_num_threads();
+    }
+
+    #[test]
+    fn nested_parallel_calls_run_inline_on_workers() {
+        let _g = OVERRIDE_LOCK.lock().unwrap();
+        set_pool_mode(Some(PoolMode::Resident));
+        let done: Vec<AtomicUsize> = (0..8).map(|_| AtomicUsize::new(0)).collect();
+        parallel_shards(done.len(), |i| {
+            // A nested call from inside a pool job must not re-enter the
+            // pool (that would deadlock on the run lock); it runs inline.
+            let mut inner = vec![0usize; 12];
+            parallel_rows(&mut inner, 4, 3, |range, chunk| {
+                for (ci, r) in range.enumerate() {
+                    for c in 0..3 {
+                        chunk[ci * 3 + c] = r * 3 + c;
+                    }
+                }
+            });
+            assert!(inner.iter().enumerate().all(|(k, &v)| v == k));
+            done[i].fetch_add(1, Ordering::Relaxed);
+        });
+        set_pool_mode(None);
+        assert!(done.iter().all(|d| d.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_submitter() {
+        let _g = OVERRIDE_LOCK.lock().unwrap();
+        set_pool_mode(Some(PoolMode::Resident));
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            parallel_shards(16, |i| {
+                if i == 7 {
+                    panic!("shard 7 exploded");
+                }
+            });
+        }));
+        assert!(res.is_err(), "a panicking shard must panic the submitter");
+        // The pool stays usable after a panicked job.
+        let hits = AtomicUsize::new(0);
+        parallel_shards(4, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        set_pool_mode(None);
+        assert_eq!(hits.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn scratch_arena_reuses_slots_per_key() {
+        let first = with_scratch(4, 2, || vec![0u8; 8], |v| {
+            v[0] = 9;
+            v.as_ptr() as usize
+        });
+        let second = with_scratch(4, 2, || vec![0u8; 8], |v| {
+            assert_eq!(v[0], 9, "slot state persists across borrows");
+            v.as_ptr() as usize
+        });
+        assert_eq!(first, second, "same key reuses the same allocation");
+        with_scratch(8, 2, || vec![1u8; 8], |v| {
+            assert_eq!(v[0], 1, "a different key gets a fresh slot");
+        });
+    }
+
+    #[test]
+    fn pool_stats_reports_mode_and_dispatches() {
+        let _g = OVERRIDE_LOCK.lock().unwrap();
+        set_pool_mode(Some(PoolMode::Resident));
+        let before = pool_stats().dispatches;
+        parallel_shards(8, |_| {});
+        let stats = warm_pool();
+        assert_eq!(stats.mode, "resident");
+        if num_threads() > 1 {
+            assert!(stats.dispatches > before, "resident dispatch bumps the counter");
+            assert!(stats.resident_workers >= 1, "warming spawns resident workers");
+        }
+        set_pool_mode(None);
     }
 }

@@ -1,0 +1,156 @@
+//! Steady-state steps are allocation-free.
+//!
+//! A counting `#[global_allocator]` wraps the system allocator; after a
+//! warm-up phase (pool threads spawned, scratch arenas first-touched,
+//! host-side buffers grown to capacity) repeated `step_batch` calls must
+//! execute without a single heap allocation on any thread.
+//!
+//! Workers claim shards dynamically, so a thread that sat out the warm-up
+//! steps can first-touch its keyed scratch slot later — the measurement
+//! therefore retries: the invariant is that SOME window of consecutive
+//! steps allocates nothing, i.e. allocations stop once every participant
+//! is warm, rather than that warm-up has a fixed length.
+//!
+//! This is an integration test (its own binary) so the global allocator
+//! hook cannot interfere with the rest of the suite, and it holds exactly
+//! one #[test] so no sibling test allocates concurrently.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+/// Total allocation events (alloc + alloc_zeroed + realloc) on all threads.
+static ALLOC_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+use pogo::linalg::{BatchMat, Mat, Scalar};
+use pogo::manifold::stiefel;
+use pogo::optim::base::BaseOptKind;
+use pogo::optim::batched::BatchedHost;
+use pogo::optim::pogo::LambdaPolicy;
+use pogo::optim::Orthoptimizer;
+use pogo::rng::Rng;
+
+fn make_packed<S: Scalar>(
+    b: usize,
+    p: usize,
+    n: usize,
+    rng: &mut Rng,
+) -> (BatchMat<S>, BatchMat<S>) {
+    let xs: Vec<Mat<S>> = (0..b).map(|_| stiefel::random_point_t::<S>(p, n, rng)).collect();
+    let gs: Vec<Mat<S>> = (0..b)
+        .map(|_| {
+            let g = Mat::<S>::randn(p, n, rng);
+            let nn = g.norm().to_f64().max(1e-6);
+            g.scale(S::from_f64(0.2 / nn))
+        })
+        .collect();
+    (BatchMat::from_mats(&xs), BatchMat::from_mats(&gs))
+}
+
+/// Drive `step` until a window of consecutive calls allocates nothing.
+///
+/// WINDOW steps with zero allocation events proves the steady state; up
+/// to ATTEMPTS windows tolerate late first-touches (a pool worker that
+/// claimed its first shard of this shape mid-measurement).
+fn assert_settles(label: &str, mut step: impl FnMut()) {
+    const WARMUP: usize = 8;
+    const WINDOW: usize = 10;
+    const ATTEMPTS: usize = 50;
+    for _ in 0..WARMUP {
+        step();
+    }
+    let mut last_delta = 0u64;
+    for _ in 0..ATTEMPTS {
+        let before = ALLOC_EVENTS.load(Ordering::Relaxed);
+        for _ in 0..WINDOW {
+            step();
+        }
+        last_delta = ALLOC_EVENTS.load(Ordering::Relaxed) - before;
+        if last_delta == 0 {
+            return;
+        }
+    }
+    panic!(
+        "{label}: still allocating after {ATTEMPTS} windows of {WINDOW} steps \
+         ({last_delta} allocation events in the last window)"
+    );
+}
+
+#[test]
+fn steady_state_steps_do_not_allocate() {
+    // Force the resident pool so the measurement covers worker wake +
+    // claim + scratch reuse (spawn-per-call allocates by construction:
+    // thread stacks). Serial cases below still go through the same entry
+    // points and must be clean too.
+    pogo::util::pool::set_pool_mode(Some(pogo::util::pool::PoolMode::Resident));
+    pogo::util::pool::warm_pool();
+    let mut rng = Rng::seed_from_u64(7);
+
+    {
+        // Fused POGO, pool-engaged (12·B·p²·n ≈ 50M flops ≫ 2²⁰ threshold).
+        let mut opt: BatchedHost<f32> =
+            BatchedHost::pogo(0.05, LambdaPolicy::Half, BaseOptKind::Sgd);
+        let (mut x, g) = make_packed::<f32>(1024, 16, 16, &mut rng);
+        assert_settles("fused pogo-half f32 (16,16) B=1024", || {
+            opt.step_batch(&mut x, &g).unwrap();
+        });
+    }
+
+    {
+        // FindRoot: per-matrix quartic solve through the slice-form
+        // coefficient path + fixed-storage root finder. Below every
+        // parallel threshold, so this pins the serial path as clean.
+        let mut opt: BatchedHost<f64> =
+            BatchedHost::pogo(0.05, LambdaPolicy::FindRoot, BaseOptKind::Sgd);
+        let (mut x, g) = make_packed::<f64>(64, 3, 3, &mut rng);
+        assert_settles("fused pogo-root f64 (3,3) B=64 serial", || {
+            opt.step_batch(&mut x, &g).unwrap();
+        });
+    }
+
+    {
+        // Landing with a stateful base: momentum buffers must reach fixed
+        // capacity during warm-up and then be updated strictly in place.
+        let mut opt: BatchedHost<f32> =
+            BatchedHost::landing(0.05, 1.0, BaseOptKind::momentum(0.9));
+        let (mut x, g) = make_packed::<f32>(1024, 4, 8, &mut rng);
+        assert_settles("fused landing f32 momentum (4,8) B=1024", || {
+            opt.step_batch(&mut x, &g).unwrap();
+        });
+    }
+
+    {
+        // VAdam: second-moment scalars + transformed-gradient output
+        // buffer are the largest per-step host allocations we hoisted.
+        let mut opt: BatchedHost<f64> =
+            BatchedHost::pogo(0.05, LambdaPolicy::Half, BaseOptKind::vadam());
+        let (mut x, g) = make_packed::<f64>(512, 4, 8, &mut rng);
+        assert_settles("fused pogo-half f64 vadam (4,8) B=512", || {
+            opt.step_batch(&mut x, &g).unwrap();
+        });
+    }
+
+    pogo::util::pool::set_pool_mode(None);
+}

@@ -1,0 +1,217 @@
+//! Resident pool ≡ spawn-per-call ≡ single-threaded serial, bit-for-bit.
+//!
+//! The pool backend promises to be invisible in results: both backends
+//! compute the same shard geometry (`per = rows.div_ceil(nt)` contiguous
+//! chunks) and run the same per-chunk closures, and the serial path runs
+//! the very same closure over `0..rows` — each matrix/row is processed by
+//! exactly one thread with the same sequential arithmetic regardless of
+//! which thread that is. So the comparisons below are EXACT (`== 0.0`),
+//! not tolerance checks, across update rules, shapes crossing the
+//! parallelization thresholds in both directions, element types, and
+//! stateful base optimizers.
+//!
+//! Tests serialize on a lock because the pool mode / thread-count
+//! overrides are process-global.
+
+use pogo::linalg::{BatchMat, Complex, Field, Mat, Scalar};
+use pogo::manifold::stiefel;
+use pogo::optim::base::BaseOptKind;
+use pogo::optim::batched::BatchedHost;
+use pogo::optim::pogo::LambdaPolicy;
+use pogo::optim::Orthoptimizer;
+use pogo::rng::Rng;
+use pogo::util::pool::{self, PoolMode};
+use std::sync::Mutex;
+
+/// Serializes tests: the backend/thread overrides are process-global.
+static OVERRIDE_LOCK: Mutex<()> = Mutex::new(());
+
+/// Clears the overrides even if an assertion unwinds mid-test.
+struct Restore;
+impl Drop for Restore {
+    fn drop(&mut self) {
+        pool::set_pool_mode(None);
+        pool::set_num_threads(None);
+    }
+}
+
+/// The three execution backends under comparison.
+#[derive(Clone, Copy, Debug)]
+enum Backend {
+    Resident,
+    Spawn,
+    Serial,
+}
+
+impl Backend {
+    fn engage(self) {
+        match self {
+            Backend::Resident => {
+                pool::set_num_threads(None);
+                pool::set_pool_mode(Some(PoolMode::Resident));
+            }
+            Backend::Spawn => {
+                pool::set_num_threads(None);
+                pool::set_pool_mode(Some(PoolMode::Spawn));
+            }
+            Backend::Serial => {
+                // num_threads() == 1 short-circuits every parallel entry
+                // point to the inline serial path, whatever the mode.
+                pool::set_num_threads(Some(1));
+                pool::set_pool_mode(Some(PoolMode::Resident));
+            }
+        }
+    }
+}
+
+/// Largest elementwise |a − b|² across two packed groups.
+fn max_abs_sq_diff<E: Field>(a: &BatchMat<E>, b: &BatchMat<E>) -> f64 {
+    a.as_slice()
+        .iter()
+        .zip(b.as_slice())
+        .map(|(&x, &y)| (x - y).abs_sq().to_f64())
+        .fold(0.0, f64::max)
+}
+
+/// Unit-scaled random gradient (keeps the Thm 3.5 step regime).
+fn random_grad<E: Field>(p: usize, n: usize, rng: &mut Rng) -> Mat<E> {
+    let g = Mat::<E>::randn(p, n, rng);
+    let nn = g.norm().to_f64().max(1e-30);
+    g.scale(E::from_f64(0.3 / nn))
+}
+
+/// Step the same initial group with the same gradient sequence under one
+/// backend and return the final iterate tensor (plus the last λ report).
+fn trajectory<E: Field>(
+    backend: Backend,
+    make_opt: &dyn Fn() -> BatchedHost<E>,
+    x0: &BatchMat<E>,
+    grads: &[BatchMat<E>],
+) -> (BatchMat<E>, Option<f64>) {
+    backend.engage();
+    let mut x = x0.clone();
+    let mut opt = make_opt();
+    for g in grads {
+        opt.step_batch(&mut x, g).unwrap();
+    }
+    (x, opt.last_lambda())
+}
+
+/// Compare resident vs spawn vs serial trajectories on one rule, at one
+/// shape crossing the fused-parallel threshold and one staying below it.
+fn assert_backend_parity<E: Field>(
+    make_opt: &dyn Fn() -> BatchedHost<E>,
+    random_point: &dyn Fn(usize, usize, &mut Rng) -> Mat<E>,
+    seed: u64,
+) {
+    // (4, 8) at B = 1024: 12·B·p²·n ≈ 1.57M flops — above FUSED_PAR_FLOPS
+    // (2²⁰), so the fused sweep genuinely shards across the pool.
+    // (3, 3) at B = 64 stays far below every threshold (serial regime).
+    for (p, n, b, steps) in [(4usize, 8usize, 1024usize, 3usize), (3, 3, 64, 4)] {
+        let mut rng = Rng::seed_from_u64(seed ^ (p * 100 + n * 10 + b) as u64);
+        let xs: Vec<Mat<E>> = (0..b).map(|_| random_point(p, n, &mut rng)).collect();
+        let x0 = BatchMat::from_mats(&xs);
+        let grads: Vec<BatchMat<E>> = (0..steps)
+            .map(|_| {
+                let gs: Vec<Mat<E>> = (0..b).map(|_| random_grad(p, n, &mut rng)).collect();
+                BatchMat::from_mats(&gs)
+            })
+            .collect();
+
+        let (x_res, lam_res) = trajectory(Backend::Resident, make_opt, &x0, &grads);
+        let (x_spawn, lam_spawn) = trajectory(Backend::Spawn, make_opt, &x0, &grads);
+        let (x_serial, lam_serial) = trajectory(Backend::Serial, make_opt, &x0, &grads);
+
+        let d_spawn = max_abs_sq_diff(&x_res, &x_spawn);
+        assert!(
+            d_spawn == 0.0,
+            "resident diverged from spawn by |Δ|²={d_spawn} at ({p}, {n}) B={b}"
+        );
+        let d_serial = max_abs_sq_diff(&x_res, &x_serial);
+        assert!(
+            d_serial == 0.0,
+            "resident diverged from serial by |Δ|²={d_serial} at ({p}, {n}) B={b}"
+        );
+        assert_eq!(lam_res, lam_spawn, "λ report differs resident vs spawn");
+        assert_eq!(lam_res, lam_serial, "λ report differs resident vs serial");
+        for m in x_res.to_mats() {
+            assert!(m.all_finite());
+        }
+    }
+}
+
+fn real_point<S: Scalar>(p: usize, n: usize, rng: &mut Rng) -> Mat<S> {
+    stiefel::random_point_t::<S>(p, n, rng)
+}
+
+fn complex_point<S: Scalar>(p: usize, n: usize, rng: &mut Rng) -> Mat<Complex<S>> {
+    stiefel::random_point_complex::<S>(p, n, rng)
+}
+
+#[test]
+fn pogo_find_root_f64_parity_across_backends() {
+    let _g = OVERRIDE_LOCK.lock().unwrap();
+    let _r = Restore;
+    // FindRoot exercises the deepest fused stack: per-matrix gram
+    // residuals → slice-form quartic coefficients → fixed-storage solver,
+    // all inside pool workers with thread-local scratch.
+    assert_backend_parity::<f64>(
+        &|| BatchedHost::pogo(0.1, LambdaPolicy::FindRoot, BaseOptKind::Sgd),
+        &real_point::<f64>,
+        1,
+    );
+}
+
+#[test]
+fn pogo_half_momentum_f32_parity_across_backends() {
+    let _g = OVERRIDE_LOCK.lock().unwrap();
+    let _r = Restore;
+    // Momentum base: the batched base-optimizer state update (scale +
+    // axpy, elementwise-sharded on large buffers) rides the pool too.
+    assert_backend_parity::<f32>(
+        &|| BatchedHost::pogo(0.1, LambdaPolicy::Half, BaseOptKind::momentum(0.9)),
+        &real_point::<f32>,
+        2,
+    );
+}
+
+#[test]
+fn landing_f64_parity_across_backends() {
+    let _g = OVERRIDE_LOCK.lock().unwrap();
+    let _r = Restore;
+    assert_backend_parity::<f64>(
+        &|| BatchedHost::landing(0.1, 1.0, BaseOptKind::Sgd),
+        &real_point::<f64>,
+        3,
+    );
+}
+
+#[test]
+fn pogo_half_complex_parity_across_backends() {
+    let _g = OVERRIDE_LOCK.lock().unwrap();
+    let _r = Restore;
+    // The unitary manifold through the same engine: complex multiplies
+    // are componentwise-commutative, so bit-exactness holds there too.
+    assert_backend_parity::<Complex<f32>>(
+        &|| BatchedHost::pogo(0.1, LambdaPolicy::Half, BaseOptKind::Sgd),
+        &complex_point::<f32>,
+        4,
+    );
+}
+
+#[test]
+fn naive_path_parity_across_backends() {
+    let _g = OVERRIDE_LOCK.lock().unwrap();
+    let _r = Restore;
+    // The 5-pass naive composition (per-product pool dispatches) must be
+    // backend-invisible as well — it shares parallel_rows with matmul.
+    use pogo::linalg::KernelChoice;
+    assert_backend_parity::<f64>(
+        &|| {
+            BatchedHost::pogo(0.1, LambdaPolicy::Half, BaseOptKind::Sgd)
+                .with_kernel(KernelChoice::Naive)
+        },
+        &real_point::<f64>,
+        5,
+    );
+}
