@@ -1,0 +1,111 @@
+//! Flight-recorder overhead harness: fused POGO steps with `POGO_OBS`
+//! off vs on, pinning the "<3% regression" contract from the issue.
+//!
+//! The enabled path adds, per *batched* step (never per matrix): two
+//! `Instant::now` reads and one wait-free histogram record through a
+//! cached `&'static Hist` handle — plus, when the pool engages, the
+//! dispatch-wait/run clock pairs in `util::pool`. Both regimes are
+//! measured:
+//!
+//! 1. **Serial** — small shapes below every parallel threshold, where a
+//!    step is microseconds and fixed overhead is proportionally largest.
+//! 2. **Pool-engaged** — the paper's B≫1 regime, where dispatch timing
+//!    joins in but amortizes over much more work.
+//!
+//! Writes `BENCH_obs.json`; CI runs this quick and reads
+//! `overhead_pct` per cell (gate lives in the workflow, not here, so a
+//! noisy laptop run prints rather than fails).
+
+use pogo::bench::{bench_items, print_table, BenchOpts, Stats};
+use pogo::linalg::{BatchMat, Mat, Scalar};
+use pogo::manifold::stiefel;
+use pogo::optim::base::BaseOptKind;
+use pogo::optim::batched::BatchedHost;
+use pogo::optim::pogo::LambdaPolicy;
+use pogo::optim::Orthoptimizer;
+use pogo::rng::Rng;
+use pogo::util::json::Json;
+use pogo::util::pool::{self, PoolMode};
+
+fn make_packed<S: Scalar>(
+    b: usize,
+    p: usize,
+    n: usize,
+    rng: &mut Rng,
+) -> (BatchMat<S>, BatchMat<S>) {
+    let xs: Vec<Mat<S>> = (0..b).map(|_| stiefel::random_point_t::<S>(p, n, rng)).collect();
+    let gs: Vec<Mat<S>> = (0..b)
+        .map(|_| {
+            let g = Mat::<S>::randn(p, n, rng);
+            let nn = g.norm().to_f64().max(1e-6);
+            g.scale(S::from_f64(0.3 / nn))
+        })
+        .collect();
+    (BatchMat::from_mats(&xs), BatchMat::from_mats(&gs))
+}
+
+/// Mean seconds per `step_batch` at one (shape, batch) cell under the
+/// current obs switch. A fresh host per measurement keeps the cached
+/// histogram handle's one-time registration inside the warmup.
+fn measure<S: Scalar>(
+    opts: BenchOpts,
+    tag: &str,
+    b: usize,
+    p: usize,
+    n: usize,
+    rng: &mut Rng,
+) -> Stats {
+    let mut opt: BatchedHost<S> = BatchedHost::pogo(0.05, LambdaPolicy::Half, BaseOptKind::Sgd);
+    let (mut xb, gb) = make_packed::<S>(b, p, n, rng);
+    opt.step_batch(&mut xb, &gb).unwrap(); // warm-up (pool, scratch, handle)
+    bench_items(&format!("pogo-f32 {p}x{n} B={b} obs={tag}"), opts, b as f64, || {
+        opt.step_batch(&mut xb, &gb).unwrap();
+    })
+}
+
+fn main() {
+    pogo::util::logging::init();
+    let opts = BenchOpts::from_env();
+    let mut rng = Rng::seed_from_u64(0);
+
+    pool::set_pool_mode(Some(PoolMode::Resident));
+    pool::warm_pool();
+
+    // (p, n, B): serial tiny, serial small, pool-engaged.
+    let cells: &[(usize, usize, usize)] = &[(3, 3, 64), (16, 16, 256), (16, 16, 4096)];
+
+    let mut stats: Vec<Stats> = Vec::new();
+    let mut rows: Vec<Json> = Vec::new();
+    for &(p, n, b) in cells {
+        // Off first, on second, interleaved per cell so slow thermal /
+        // frequency drift hits both sides of each ratio about equally.
+        pogo::obs::set_enabled(Some(false));
+        let off = measure::<f32>(opts, "off", b, p, n, &mut rng);
+        pogo::obs::set_enabled(Some(true));
+        let on = measure::<f32>(opts, "on", b, p, n, &mut rng);
+        pogo::obs::set_enabled(None);
+
+        let overhead_pct = (on.mean / off.mean - 1.0) * 100.0;
+        println!("  {p}x{n} B={b}: obs overhead {overhead_pct:+.2}% (contract: < 3%)");
+        rows.push(Json::obj(vec![
+            ("p", Json::num(p as f64)),
+            ("n", Json::num(n as f64)),
+            ("batch", Json::num(b as f64)),
+            ("us_per_step_off", Json::num(off.mean * 1e6)),
+            ("us_per_step_on", Json::num(on.mean * 1e6)),
+            ("overhead_pct", Json::num(overhead_pct)),
+        ]));
+        stats.push(off);
+        stats.push(on);
+    }
+    pool::set_pool_mode(None);
+
+    print_table("fused POGO steps, flight recorder off vs on", &stats);
+
+    let out = Json::obj(vec![("cells", Json::Arr(rows))]);
+    let path = pogo::repo_root().join("BENCH_obs.json");
+    match std::fs::write(&path, out.to_string_pretty() + "\n") {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("failed to write BENCH_obs.json: {e}"),
+    }
+}

@@ -106,6 +106,7 @@ pub fn load(path: &Path) -> Result<(ParamStore, usize)> {
 
 /// Save a store (+ step counter) at any checkpointable dtype.
 pub fn save_t<S: CkptDtype>(store: &ParamStore<S>, step: usize, path: &Path) -> Result<()> {
+    let t0 = crate::obs::enabled().then(std::time::Instant::now);
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
@@ -158,6 +159,9 @@ pub fn save_t<S: CkptDtype>(store: &ParamStore<S>, step: usize, path: &Path) -> 
     }
     std::fs::rename(&tmp, path)
         .with_context(|| format!("renaming {} into place", tmp.display()))?;
+    if let Some(t0) = t0 {
+        crate::obs::hist::CHECKPOINT_IO_SECONDS.hist(&["save"]).record_since(t0);
+    }
     Ok(())
 }
 
@@ -165,6 +169,7 @@ pub fn save_t<S: CkptDtype>(store: &ParamStore<S>, step: usize, path: &Path) -> 
 /// written at a different dtype is rejected (convert explicitly via
 /// `Mat::cast` after loading at the stored dtype — never reinterpreted).
 pub fn load_t<S: CkptDtype>(path: &Path) -> Result<(ParamStore<S>, usize)> {
+    let t0 = crate::obs::enabled().then(std::time::Instant::now);
     let mut f = std::fs::File::open(path)
         .with_context(|| format!("opening {}", path.display()))?;
     let mut len_buf = [0u8; 4];
@@ -229,6 +234,9 @@ pub fn load_t<S: CkptDtype>(path: &Path) -> Result<(ParamStore<S>, usize)> {
     }
     if off != blob.len() {
         return Err(anyhow!("trailing bytes in checkpoint blob"));
+    }
+    if let Some(t0) = t0 {
+        crate::obs::hist::CHECKPOINT_IO_SECONDS.hist(&["restore"]).record_since(t0);
     }
     Ok((store, step))
 }

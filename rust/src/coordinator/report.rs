@@ -282,6 +282,49 @@ pub fn artifact_store_lines(dir: &Path) -> Vec<String> {
     }
 }
 
+/// Printable span tree from a flight-recorder trace — the JSON shape of
+/// `GET /v2/jobs/:id/trace` / `JobTrace::tree_json` — indented two
+/// spaces per nesting level, with total and self times in ms. What
+/// `pogo trace` prints after writing the Chrome trace file.
+pub fn trace_summary_lines(trace: &Json) -> Vec<String> {
+    fn walk(node: &Json, depth: usize, out: &mut Vec<String>) {
+        let name = node.get("name").as_str().unwrap_or("?");
+        // Sampled step windows carry their covered range.
+        let label = match node.get("steps").as_arr() {
+            Some(r) if r.len() == 2 => format!(
+                "{name} {}..{}",
+                r[0].as_usize().unwrap_or(0),
+                r[1].as_usize().unwrap_or(0)
+            ),
+            _ => name.to_string(),
+        };
+        let dur_ms = node.get("dur_us").as_f64().unwrap_or(0.0) / 1000.0;
+        let self_ms = node.get("self_us").as_f64().unwrap_or(0.0) / 1000.0;
+        let indented = format!("{:indent$}{label}", "", indent = depth * 2);
+        out.push(format!("{indented:<28} {dur_ms:>10.3} ms  (self {self_ms:.3} ms)"));
+        if let Some(children) = node.get("children").as_arr() {
+            for c in children {
+                walk(c, depth + 1, out);
+            }
+        }
+    }
+    let mut out = Vec::new();
+    match trace.get("spans").as_arr() {
+        Some(spans) if !spans.is_empty() => {
+            for s in spans {
+                walk(s, 0, &mut out);
+            }
+        }
+        _ => out.push("(no spans recorded — is POGO_OBS off?)".to_string()),
+    }
+    if let Some(dropped) = trace.get("dropped").as_usize() {
+        if dropped > 0 {
+            out.push(format!("({dropped} inner spans dropped past the buffer cap)"));
+        }
+    }
+    out
+}
+
 /// Machine-readable report (one JSON object per series) for tooling.
 pub fn report_json(dir: &Path) -> Result<String> {
     let mut out = Vec::new();
@@ -335,6 +378,29 @@ mod tests {
         report(&d, None).unwrap();
         report(&d, Some("pogo")).unwrap();
         std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn trace_summary_renders_an_indented_tree() {
+        let t = crate::obs::JobTrace::new();
+        t.record_span("admit", 0, 2, 1);
+        t.record_span("queued", 2, 8, 1);
+        t.record_span_full("steps", 12, 40, 3, Some((0, 8)));
+        t.record_span("steps", 12, 83, 2);
+        t.record_span("run", 10, 90, 1);
+        t.record_span("job", 0, 100, 0);
+        let lines = trace_summary_lines(&t.tree_json());
+        assert_eq!(lines.len(), 6);
+        assert!(lines[0].starts_with("job"), "{lines:?}");
+        assert!(lines[1].starts_with("  admit"), "{lines:?}");
+        assert!(lines[3].starts_with("  run"), "{lines:?}");
+        assert!(lines[4].starts_with("    steps"), "{lines:?}");
+        assert!(lines[5].contains("steps 0..8"), "window range in the label: {lines:?}");
+        assert!(lines[0].contains("0.100 ms"), "total in ms: {lines:?}");
+        // An empty trace says so instead of printing nothing.
+        let empty = trace_summary_lines(&crate::obs::JobTrace::new().tree_json());
+        assert_eq!(empty.len(), 1);
+        assert!(empty[0].contains("no spans"), "{empty:?}");
     }
 
     #[test]

@@ -133,6 +133,7 @@ impl<E: Field> OptimSession<E> {
     /// per-matrix clones on either side of the step. Everything else
     /// keeps the per-matrix `step_group` path.
     pub fn apply(&mut self, store: &mut ParamStore<E>, grads: &[Mat<E>]) -> Result<()> {
+        let t0 = crate::obs::enabled().then(std::time::Instant::now);
         for (g, stepper) in self.groups.iter().zip(&mut self.steppers) {
             let ctx = || {
                 format!(
@@ -157,6 +158,9 @@ impl<E: Field> OptimSession<E> {
                 stepper.step_group(&mut xs, &gs).with_context(ctx)?;
                 store.write_group(g, xs);
             }
+        }
+        if let Some(t0) = t0 {
+            crate::obs::hist::SESSION_APPLY_SECONDS.hist0().record_since(t0);
         }
         Ok(())
     }

@@ -70,6 +70,7 @@ pub mod data;
 pub mod experiments;
 pub mod linalg;
 pub mod manifold;
+pub mod obs;
 pub mod optim;
 pub mod rng;
 pub mod runtime;

@@ -55,7 +55,8 @@ pub use matmul::{
     matmul_ah_b, matmul_ah_b_into, matmul_at_b, matmul_at_b_into, matmul_into, Op,
 };
 pub use step_kernel::{
-    with_step_scratch, KernelChoice, LandingParams, PogoLambda, StepKernel, StepScratch, PORTABLE,
+    shape_class, with_step_scratch, KernelChoice, LandingParams, PogoLambda, StepKernel,
+    StepScratch, PORTABLE,
 };
 pub use norms::{frob_norm, spectral_norm_est};
 pub use polar::{polar_project, polar_project_complex, PolarOpts};

@@ -73,6 +73,21 @@ impl KernelChoice {
     }
 }
 
+/// Coarse shape class of a `p×n` batch element, used as the low-arity
+/// `shape` label on the per-step latency histogram
+/// (`crate::obs::hist::STEP_SECONDS`) — labeling by exact `(p, n)` would
+/// make series cardinality unbounded. Bounds follow the paper's regimes:
+/// `tiny` covers Fig. 1's 3×3 kernels, `small` the 16×16 attention heads,
+/// `medium` O-ViT-sized blocks, `large` everything beyond.
+pub fn shape_class(p: usize, n: usize) -> &'static str {
+    match p * n {
+        0..=64 => "tiny",
+        65..=1024 => "small",
+        1025..=16384 => "medium",
+        _ => "large",
+    }
+}
+
 /// Per-matrix λ policy for the fused POGO step.
 pub enum PogoLambda<'a, E: Field> {
     /// Fixed normal-step size (the paper's λ = ½ default).
@@ -425,6 +440,16 @@ mod tests {
     use super::*;
     use crate::linalg::{matmul as mm, Complex, Mat};
     use crate::rng::Rng;
+
+    #[test]
+    fn shape_classes_cover_paper_regimes() {
+        assert_eq!(shape_class(3, 3), "tiny");
+        assert_eq!(shape_class(8, 8), "tiny");
+        assert_eq!(shape_class(16, 16), "small");
+        assert_eq!(shape_class(4, 8), "tiny");
+        assert_eq!(shape_class(64, 128), "medium");
+        assert_eq!(shape_class(256, 512), "large");
+    }
 
     #[test]
     fn kernel_choice_round_trips() {

@@ -12,6 +12,8 @@
 //!                               # seal inline problem data into an artifact
 //! pogo artifact inspect <file.pogoart> [--json]
 //! pogo artifact verify <file.pogoart>
+//! pogo trace <job.json> [--out trace.json]
+//!                               # run one job under the flight recorder
 //! pogo list                     # experiments + their paper figures
 //! pogo info [--artifacts DIR]   # artifact registry contents
 //! pogo report [--dir DIR]       # summarize results CSVs + BENCH_*.json
@@ -35,6 +37,7 @@ fn main() {
         "serve" => cmd_serve(),
         "compile" => cmd_compile(),
         "artifact" => cmd_artifact(),
+        "trace" => cmd_trace(),
         "list" => cmd_list(),
         "info" => cmd_info(),
         "report" => cmd_report(),
@@ -67,6 +70,8 @@ fn print_help() {
          \x20 compile            seal a job's inline problem data into a\n\
          \x20                    .pogoart artifact (--job FILE --out FILE)\n\
          \x20 artifact           inspect | verify a sealed .pogoart artifact\n\
+         \x20 trace              run one job spec under the flight recorder and\n\
+         \x20                    write Chrome trace-event JSON (--out trace.json)\n\
          \x20 list               list experiments\n\
          \x20 info               inspect the AOT artifact registry\n\
          \x20 report             summarize results/*.csv and BENCH_*.json\n\
@@ -276,6 +281,65 @@ fn compile_artifact(
         let path = out.unwrap_or(&default);
         art.write_file(path)?;
         println!("{hash}  {} bytes  {}", art.encoded_len(), path.display());
+    }
+    Ok(())
+}
+
+fn cmd_trace() -> i32 {
+    let cli = Cli::new(
+        "pogo trace",
+        "run one job spec under the flight recorder and write a Chrome trace",
+    )
+    .flag("out", "trace.json", "output file (load in chrome://tracing or ui.perfetto.dev)");
+    let a = cli.parse_env_or_exit(1);
+    let Some(job) = a.positional().first().cloned() else {
+        eprintln!("usage: pogo trace <job.json> [--out trace.json]\n\n{}", cli.usage());
+        return 2;
+    };
+    let out = a.get_or("out", "trace.json");
+    match run_trace(std::path::Path::new(&job), std::path::Path::new(&out)) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+/// Run `job_path`'s spec in-process with a [`pogo::obs::JobTrace`] wired
+/// through [`pogo::serve::RunCtl`] — the same flight recorder the daemon
+/// attaches to every queued job — then write the Chrome trace-event JSON
+/// and print the span tree. Observability is forced on for the run: a
+/// trace command that silently recorded nothing would be useless.
+fn run_trace(job_path: &std::path::Path, out: &std::path::Path) -> anyhow::Result<()> {
+    use anyhow::Context;
+    let text = std::fs::read_to_string(job_path)
+        .with_context(|| format!("reading {}", job_path.display()))?;
+    let parsed = pogo::util::json::Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e}", job_path.display()))?;
+    let spec = pogo::serve::JobSpec::from_json(&parsed)?;
+    pogo::obs::set_enabled(Some(true));
+    let trace = pogo::obs::JobTrace::new();
+    let ctl = pogo::serve::RunCtl { trace: Some(&trace), ..Default::default() };
+    let t_run = trace.now_us();
+    let (outcome, _iterate) = pogo::serve::run_job_with(&spec, &ctl, None)?;
+    let now = trace.now_us();
+    trace.record_span("run", t_run, now - t_run, 1);
+    trace.record_span("job", 0, now, 0);
+    std::fs::write(out, trace.chrome_json().to_string_pretty() + "\n")
+        .with_context(|| format!("writing {}", out.display()))?;
+    let r = match &outcome {
+        pogo::serve::JobOutcome::Done(r) | pogo::serve::JobOutcome::Cancelled(r) => r,
+    };
+    println!(
+        "{} steps in {:.3} s (final loss {:.6e}); trace written to {}",
+        r.steps_done,
+        now as f64 / 1e6,
+        r.final_loss,
+        out.display()
+    );
+    for line in pogo::coordinator::report::trace_summary_lines(&trace.tree_json()) {
+        println!("{line}");
     }
     Ok(())
 }

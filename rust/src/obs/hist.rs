@@ -1,0 +1,423 @@
+//! Log-linear latency histograms with lock-free recording.
+//!
+//! A [`Hist`] is a fixed 1-2-5 bucket ladder over microseconds (1 µs to
+//! 500 s, 27 finite bounds plus +Inf) backed by relaxed `AtomicU64`
+//! counters: recording is a linear scan over 27 integers plus two
+//! `fetch_add`s — no locks, no allocation, wait-free. Two histograms on
+//! the same ladder are mergeable by adding counters ([`Hist::merge_from`]).
+//!
+//! A [`Family`] groups histograms under one Prometheus metric name with a
+//! fixed set of label *names* and dynamically registered label *values*.
+//! Label values must be `&'static str` (routes, kernel names, shape
+//! classes — all small closed sets), so series lookup compares pointers
+//! and lengths without building keys: after a series' one-time
+//! registration, the record path allocates nothing. Hot sites should call
+//! [`Family::hist`] once and cache the returned `&'static Hist`.
+//!
+//! [`render_prometheus`] walks the crate-wide [`FAMILIES`] registry and
+//! appends every family in Prometheus text exposition format. The
+//! rendered `_count` (and the `+Inf` bucket) is computed by summing the
+//! bucket counters, so `+Inf == _count` holds exactly even while other
+//! threads record concurrently.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Finite bucket upper bounds in microseconds: a 1-2-5 ladder per decade
+/// from 1 µs to 5·10⁸ µs (500 s). Everything slower lands in +Inf.
+pub const BOUNDS_US: [u64; 27] = [
+    1,
+    2,
+    5,
+    10,
+    20,
+    50,
+    100,
+    200,
+    500,
+    1_000,
+    2_000,
+    5_000,
+    10_000,
+    20_000,
+    50_000,
+    100_000,
+    200_000,
+    500_000,
+    1_000_000,
+    2_000_000,
+    5_000_000,
+    10_000_000,
+    20_000_000,
+    50_000_000,
+    100_000_000,
+    200_000_000,
+    500_000_000,
+];
+
+/// The same bounds as Prometheus `le` strings in *seconds*, precomputed
+/// so rendering never formats floats for bucket bounds.
+const LE_SECONDS: [&str; 27] = [
+    "0.000001", "0.000002", "0.000005", "0.00001", "0.00002", "0.00005", "0.0001", "0.0002",
+    "0.0005", "0.001", "0.002", "0.005", "0.01", "0.02", "0.05", "0.1", "0.2", "0.5", "1", "2",
+    "5", "10", "20", "50", "100", "200", "500",
+];
+
+/// Number of counters: the finite bounds plus the +Inf overflow bucket.
+pub const N_BUCKETS: usize = BOUNDS_US.len() + 1;
+
+/// One log-linear histogram. Construction is `const`, so histograms can
+/// live in statics; recording is wait-free.
+pub struct Hist {
+    buckets: [AtomicU64; N_BUCKETS],
+    sum_us: AtomicU64,
+}
+
+impl Hist {
+    pub const fn new() -> Hist {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const Z: AtomicU64 = AtomicU64::new(0);
+        Hist { buckets: [Z; N_BUCKETS], sum_us: AtomicU64::new(0) }
+    }
+
+    /// Record one observation of `us` microseconds. Allocation-free.
+    pub fn record_us(&self, us: u64) {
+        let mut idx = BOUNDS_US.len();
+        for (i, &b) in BOUNDS_US.iter().enumerate() {
+            if us <= b {
+                idx = i;
+                break;
+            }
+        }
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn record(&self, d: Duration) {
+        self.record_us(d.as_micros().min(u64::MAX as u128) as u64);
+    }
+
+    /// Record the elapsed time since `t0`.
+    pub fn record_since(&self, t0: Instant) {
+        self.record(t0.elapsed());
+    }
+
+    /// Total observations (sum of all bucket counters).
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Sum of observed durations, in microseconds.
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// Per-bucket (non-cumulative) counts, +Inf last.
+    pub fn snapshot(&self) -> [u64; N_BUCKETS] {
+        let mut out = [0u64; N_BUCKETS];
+        for (dst, src) in out.iter_mut().zip(self.buckets.iter()) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        out
+    }
+
+    /// Fold another histogram (same ladder by construction) into this one.
+    pub fn merge_from(&self, other: &Hist) {
+        for (dst, src) in self.buckets.iter().zip(other.buckets.iter()) {
+            dst.fetch_add(src.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        self.sum_us.fetch_add(other.sum_us.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+}
+
+impl Default for Hist {
+    fn default() -> Hist {
+        Hist::new()
+    }
+}
+
+struct Series {
+    labels: Vec<&'static str>,
+    hist: &'static Hist,
+}
+
+/// A named histogram family with fixed label names and dynamically
+/// registered label-value combinations. `Family::new` is `const`; the
+/// crate's families live in statics (see [`FAMILIES`]).
+pub struct Family {
+    name: &'static str,
+    help: &'static str,
+    label_names: &'static [&'static str],
+    series: Mutex<Vec<Series>>,
+    /// Cached handle for label-less families (the common hot case).
+    unlabeled: OnceLock<&'static Hist>,
+}
+
+impl Family {
+    pub const fn new(
+        name: &'static str,
+        help: &'static str,
+        label_names: &'static [&'static str],
+    ) -> Family {
+        Family { name, help, label_names, series: Mutex::new(Vec::new()), unlabeled: OnceLock::new() }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// The histogram for one label-value combination, registering it on
+    /// first use (the registration allocates once; the handle is
+    /// process-lived, so hot sites should cache it).
+    pub fn hist(&self, labels: &[&'static str]) -> &'static Hist {
+        debug_assert_eq!(labels.len(), self.label_names.len(), "{}", self.name);
+        let mut series = self.series.lock().unwrap();
+        if let Some(s) = series.iter().find(|s| s.labels == labels) {
+            return s.hist;
+        }
+        let hist: &'static Hist = Box::leak(Box::new(Hist::new()));
+        series.push(Series { labels: labels.to_vec(), hist });
+        hist
+    }
+
+    /// The histogram of a label-less family, cached so steady-state
+    /// recording skips the series lock entirely.
+    pub fn hist0(&'static self) -> &'static Hist {
+        self.unlabeled.get_or_init(|| self.hist(&[]))
+    }
+
+    /// Record `us` if observability is on (convenience for cold paths;
+    /// hot paths gate on [`super::enabled`] and cache the handle).
+    pub fn record_us(&self, labels: &[&'static str], us: u64) {
+        if super::enabled() {
+            self.hist(labels).record_us(us);
+        }
+    }
+
+    /// Record the time since `t0` if observability is on.
+    pub fn record_since(&self, labels: &[&'static str], t0: Instant) {
+        if super::enabled() {
+            self.hist(labels).record_since(t0);
+        }
+    }
+
+    /// Append this family in Prometheus text format. Emits the
+    /// `# HELP`/`# TYPE` preamble always, then one
+    /// `_bucket`/`_sum`/`_count` block per registered series with
+    /// *cumulative* bucket counts.
+    pub fn render_into(&self, out: &mut String) {
+        out.push_str("# HELP ");
+        out.push_str(self.name);
+        out.push(' ');
+        out.push_str(self.help);
+        out.push_str("\n# TYPE ");
+        out.push_str(self.name);
+        out.push_str(" histogram\n");
+        let series = self.series.lock().unwrap();
+        for s in series.iter() {
+            let mut prefix = String::new();
+            for (i, (k, v)) in self.label_names.iter().zip(s.labels.iter()).enumerate() {
+                if i > 0 {
+                    prefix.push(',');
+                }
+                prefix.push_str(k);
+                prefix.push_str("=\"");
+                prefix.push_str(v);
+                prefix.push('"');
+            }
+            let counts = s.hist.snapshot();
+            let mut cum = 0u64;
+            for (i, &c) in counts.iter().enumerate() {
+                cum += c;
+                let le = if i < BOUNDS_US.len() { LE_SECONDS[i] } else { "+Inf" };
+                if prefix.is_empty() {
+                    out.push_str(&format!("{}_bucket{{le=\"{le}\"}} {cum}\n", self.name));
+                } else {
+                    out.push_str(&format!(
+                        "{}_bucket{{{prefix},le=\"{le}\"}} {cum}\n",
+                        self.name
+                    ));
+                }
+            }
+            let sum_s = s.hist.sum_us() as f64 / 1e6;
+            if prefix.is_empty() {
+                out.push_str(&format!("{}_sum {sum_s:.6}\n", self.name));
+                out.push_str(&format!("{}_count {cum}\n", self.name));
+            } else {
+                out.push_str(&format!("{}_sum{{{prefix}}} {sum_s:.6}\n", self.name));
+                out.push_str(&format!("{}_count{{{prefix}}} {cum}\n", self.name));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The crate's histogram families.
+// ---------------------------------------------------------------------------
+
+/// HTTP request duration by normalized route and status class.
+pub static HTTP_REQUEST_SECONDS: Family = Family::new(
+    "pogo_serve_http_request_duration_seconds",
+    "HTTP request duration by normalized route and status class.",
+    &["route", "status"],
+);
+
+/// Admission → worker claim.
+pub static JOB_QUEUE_WAIT_SECONDS: Family = Family::new(
+    "pogo_serve_job_queue_wait_seconds",
+    "Time from job admission to a worker claiming it.",
+    &[],
+);
+
+/// Worker claim → terminal state.
+pub static JOB_RUN_SECONDS: Family = Family::new(
+    "pogo_serve_job_run_seconds",
+    "Time from worker claim to the job reaching a terminal state.",
+    &[],
+);
+
+/// Checkpoint save/restore wall time.
+pub static CHECKPOINT_IO_SECONDS: Family = Family::new(
+    "pogo_checkpoint_io_seconds",
+    "Checkpoint save/restore wall time by operation.",
+    &["op"],
+);
+
+/// One batched optimizer step, by engine, kernel and shape class.
+pub static STEP_SECONDS: Family = Family::new(
+    "pogo_step_duration_seconds",
+    "Batched optimizer step duration by engine, kernel and shape class.",
+    &["engine", "kernel", "shape"],
+);
+
+/// One `OptimSession::apply` (all shape groups of one training step).
+pub static SESSION_APPLY_SECONDS: Family = Family::new(
+    "pogo_session_apply_seconds",
+    "OptimSession apply duration (all shape groups of one step).",
+    &[],
+);
+
+/// Wait to acquire the resident pool's dispatch lock.
+pub static POOL_DISPATCH_WAIT_SECONDS: Family = Family::new(
+    "pogo_pool_dispatch_wait_seconds",
+    "Wait to acquire the worker pool dispatch lock.",
+    &[],
+);
+
+/// One parallel region, dispatch to barrier.
+pub static POOL_RUN_SECONDS: Family = Family::new(
+    "pogo_pool_run_seconds",
+    "Parallel region wall time from dispatch to barrier completion.",
+    &[],
+);
+
+/// Every family `/metrics` exports, in render order.
+pub static FAMILIES: &[&Family] = &[
+    &HTTP_REQUEST_SECONDS,
+    &JOB_QUEUE_WAIT_SECONDS,
+    &JOB_RUN_SECONDS,
+    &CHECKPOINT_IO_SECONDS,
+    &STEP_SECONDS,
+    &SESSION_APPLY_SECONDS,
+    &POOL_DISPATCH_WAIT_SECONDS,
+    &POOL_RUN_SECONDS,
+];
+
+/// Append every registered family in Prometheus text format.
+pub fn render_prometheus(out: &mut String) {
+    for f in FAMILIES {
+        f.render_into(out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_is_strictly_increasing() {
+        for w in BOUNDS_US.windows(2) {
+            assert!(w[0] < w[1], "{w:?}");
+        }
+        assert_eq!(BOUNDS_US.len(), LE_SECONDS.len());
+    }
+
+    #[test]
+    fn le_strings_match_bounds() {
+        for (&us, le) in BOUNDS_US.iter().zip(LE_SECONDS.iter()) {
+            let parsed: f64 = le.parse().unwrap();
+            let diff = (parsed - us as f64 / 1e6).abs();
+            assert!(diff < 1e-12, "{us} vs {le}");
+        }
+    }
+
+    #[test]
+    fn records_land_in_the_right_bucket() {
+        let h = Hist::new();
+        h.record_us(0); // below the first bound
+        h.record_us(1);
+        h.record_us(2);
+        h.record_us(3); // -> le=5
+        h.record_us(1_000_000); // 1 s exactly
+        h.record_us(u64::MAX); // +Inf
+        let snap = h.snapshot();
+        assert_eq!(snap[0], 2); // 0 and 1
+        assert_eq!(snap[1], 1); // 2
+        assert_eq!(snap[2], 1); // 3
+        assert_eq!(snap[18], 1); // 1 s bound
+        assert_eq!(snap[N_BUCKETS - 1], 1); // +Inf
+        assert_eq!(h.count(), 6);
+    }
+
+    #[test]
+    fn merge_adds_counters() {
+        let a = Hist::new();
+        let b = Hist::new();
+        a.record_us(10);
+        b.record_us(10);
+        b.record_us(99);
+        a.merge_from(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.sum_us(), 119);
+    }
+
+    #[test]
+    fn family_render_is_cumulative_with_inf_equal_count() {
+        static F: Family = Family::new("test_render_seconds", "Test family.", &["k"]);
+        let h = F.hist(&["a"]);
+        h.record_us(1);
+        h.record_us(3);
+        h.record_us(7);
+        let mut out = String::new();
+        F.render_into(&mut out);
+        assert!(out.starts_with("# HELP test_render_seconds Test family.\n"));
+        assert!(out.contains("# TYPE test_render_seconds histogram\n"));
+        // Cumulative and monotone; +Inf == _count.
+        let mut last = 0u64;
+        let mut inf = None;
+        for line in out.lines() {
+            if let Some(rest) = line.strip_prefix("test_render_seconds_bucket{") {
+                let v: u64 = rest.rsplit(' ').next().unwrap().parse().unwrap();
+                assert!(v >= last, "{line}");
+                last = v;
+                if rest.contains("le=\"+Inf\"") {
+                    inf = Some(v);
+                }
+            }
+        }
+        assert_eq!(inf, Some(3));
+        assert!(out.contains("test_render_seconds_count{k=\"a\"} 3"));
+        assert!(out.contains("test_render_seconds_sum{k=\"a\"} 0.000011"));
+    }
+
+    #[test]
+    fn hist_handles_are_stable_and_per_label() {
+        static F: Family = Family::new("test_handles_seconds", "Test family.", &["x"]);
+        let a1 = F.hist(&["a"]) as *const Hist;
+        let a2 = F.hist(&["a"]) as *const Hist;
+        let b = F.hist(&["b"]) as *const Hist;
+        assert_eq!(a1, a2);
+        assert_ne!(a1, b);
+    }
+}

@@ -1,0 +1,81 @@
+//! Zero-dependency observability: latency histograms, span tracing, and
+//! the `POGO_OBS` kill switch.
+//!
+//! Two instruments, one contract:
+//!
+//! - [`hist`] — log-linear latency histograms (lock-free atomics, fixed
+//!   1-2-5 bucket ladder) behind a crate-wide family registry, exported
+//!   in Prometheus text format from the daemon's `/metrics`.
+//! - [`trace`] — per-job flight recorder: bounded span buffers over
+//!   `Instant`, rendered as a span tree (`GET /v2/jobs/:id/trace`) or as
+//!   Chrome trace-event JSON (`pogo trace`).
+//!
+//! **Overhead contract.** Hot paths (the batched step, pool dispatch)
+//! check [`enabled`] — one relaxed atomic load — before touching a clock,
+//! and record through cached `&'static Hist` handles: atomics only, no
+//! locks, no allocation in steady state. Span recording happens at job
+//! lifecycle boundaries and sampled step windows (every k steps), never
+//! per step. `POGO_OBS=off` turns every instrument into that single
+//! atomic load; `tests/alloc_steady_state.rs` pins the off path (and the
+//! cached-handle on path) allocation-free.
+
+pub mod hist;
+pub mod trace;
+
+pub use hist::{render_prometheus, Family, Hist, FAMILIES};
+pub use trace::JobTrace;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// In-process override: 0 = unset (env decides), 1 = on, 2 = off.
+static OBS_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+/// Is observability recording on? On by default; `POGO_OBS=off` (or `0`
+/// or `false`) disables it. The env var is read once; tests and benches
+/// flip [`set_enabled`] instead.
+pub fn enabled() -> bool {
+    match OBS_OVERRIDE.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => {
+            static FROM_ENV: OnceLock<bool> = OnceLock::new();
+            *FROM_ENV.get_or_init(|| {
+                !matches!(
+                    std::env::var("POGO_OBS").ok().as_deref(),
+                    Some("off") | Some("0") | Some("false")
+                )
+            })
+        }
+    }
+}
+
+/// Force observability on/off in-process (`None` returns control to the
+/// `POGO_OBS` env var). For tests and benches.
+pub fn set_enabled(on: Option<bool>) {
+    OBS_OVERRIDE.store(match on { Some(true) => 1, Some(false) => 2, None => 0 }, Ordering::Relaxed);
+}
+
+/// Serializes unit tests that flip process-global overrides (the obs
+/// switch, pool mode, thread count). Cargo runs a crate's tests on
+/// parallel threads in one process, so every test that calls
+/// [`set_enabled`] or the pool overrides must hold this first.
+#[cfg(test)]
+pub(crate) static TEST_OVERRIDE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn override_wins_and_resets() {
+        let _g = TEST_OVERRIDE_LOCK.lock().unwrap();
+        set_enabled(Some(false));
+        assert!(!enabled());
+        set_enabled(Some(true));
+        assert!(enabled());
+        set_enabled(None);
+        // Whatever the env says, the call must not panic.
+        let _ = enabled();
+    }
+}

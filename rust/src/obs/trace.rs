@@ -1,0 +1,293 @@
+//! Per-job flight recorder: a bounded buffer of completed spans over one
+//! `Instant` origin.
+//!
+//! A [`JobTrace`] is created when a job is admitted (its origin) and
+//! shared by everyone who touches the job afterwards: the admission path
+//! records `admit`, the worker records `queued`/`run`/`job` around the
+//! lifecycle, and the engine-side hooks in `serve/job.rs` record the
+//! `build`/`resume`/`steps`/`checkpoint` segments inside the run. Spans
+//! carry an explicit nesting `depth` instead of a thread-local stack —
+//! a job's lifecycle is sequential but crosses threads (HTTP handler →
+//! queue → worker), so stack-based scoping would lie about parentage.
+//!
+//! The buffer is bounded: lifecycle spans (depth ≤ 1) are always kept,
+//! inner spans are dropped (and counted) once [`SPAN_CAP`] is reached, so
+//! a million-step job cannot grow its trace without bound.
+//!
+//! Two renderings: [`JobTrace::tree_json`] nests spans by depth with
+//! self/total times (the `GET /v2/jobs/:id/trace` payload), and
+//! [`JobTrace::chrome_json`] emits the Chrome trace-event array
+//! (`ph: "X"` complete events) that `pogo trace` writes for
+//! chrome://tracing / perfetto.
+
+use crate::util::json::Json;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Maximum retained spans per job; inner spans past this are counted in
+/// `dropped` instead of stored.
+pub const SPAN_CAP: usize = 512;
+
+#[derive(Clone, Debug)]
+struct SpanRec {
+    name: &'static str,
+    start_us: u64,
+    dur_us: u64,
+    depth: u32,
+    /// For sampled step-window spans: the covered `[start, end)` steps.
+    steps: Option<(u64, u64)>,
+}
+
+struct TraceInner {
+    spans: Vec<SpanRec>,
+    dropped: u64,
+}
+
+/// One job's span recorder. Cheap to share (`Arc<JobTrace>`); recording
+/// takes a short mutex — acceptable because spans are recorded at
+/// lifecycle boundaries and sampled step windows, never per step.
+pub struct JobTrace {
+    origin: Instant,
+    inner: Mutex<TraceInner>,
+}
+
+impl JobTrace {
+    pub fn new() -> JobTrace {
+        JobTrace {
+            origin: Instant::now(),
+            inner: Mutex::new(TraceInner { spans: Vec::new(), dropped: 0 }),
+        }
+    }
+
+    /// Microseconds since this trace's origin (span timestamps).
+    pub fn now_us(&self) -> u64 {
+        self.origin.elapsed().as_micros().min(u64::MAX as u128) as u64
+    }
+
+    /// Record one completed span. `depth` 0 is the root; children carry
+    /// `parent depth + 1`. Inner spans (depth ≥ 2) are dropped once the
+    /// buffer holds [`SPAN_CAP`] spans.
+    pub fn record_span(&self, name: &'static str, start_us: u64, dur_us: u64, depth: u32) {
+        self.record_span_full(name, start_us, dur_us, depth, None);
+    }
+
+    /// [`record_span`](Self::record_span) with a step-window annotation.
+    pub fn record_span_full(
+        &self,
+        name: &'static str,
+        start_us: u64,
+        dur_us: u64,
+        depth: u32,
+        steps: Option<(u64, u64)>,
+    ) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.spans.len() >= SPAN_CAP && depth >= 2 {
+            inner.dropped += 1;
+            return;
+        }
+        inner.spans.push(SpanRec { name, start_us, dur_us, depth, steps });
+    }
+
+    /// Number of recorded spans.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().spans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Spans dropped to the buffer cap.
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
+    }
+
+    /// The span tree: `{"spans": [...], "span_count": n, "dropped": d}`
+    /// where each node is `{"name", "start_us", "dur_us", "self_us",
+    /// "children"}` (plus `"steps": [a, b]` on sampled step windows).
+    /// `self_us` is the span's duration minus its direct children's.
+    pub fn tree_json(&self) -> Json {
+        let inner = self.inner.lock().unwrap();
+        let mut order: Vec<usize> = (0..inner.spans.len()).collect();
+        // Sort by start time, shallower first on ties: parents (which are
+        // recorded at completion, i.e. after their children) come before
+        // their children in render order.
+        order.sort_by_key(|&i| (inner.spans[i].start_us, inner.spans[i].depth));
+
+        // Parent of a span = the most recent earlier span one level up.
+        // A job's recording is sequential, so this reconstruction is exact.
+        let mut child_dur: Vec<u64> = vec![0; order.len()];
+        let mut children: Vec<Vec<usize>> = vec![Vec::new(); order.len()];
+        let mut roots: Vec<usize> = Vec::new();
+        let mut last_at_depth: Vec<Option<usize>> = Vec::new();
+        for (pos, &i) in order.iter().enumerate() {
+            let s = &inner.spans[i];
+            let d = s.depth as usize;
+            if last_at_depth.len() <= d {
+                last_at_depth.resize(d + 1, None);
+            }
+            last_at_depth[d] = Some(pos);
+            last_at_depth.truncate(d + 1);
+            match d.checked_sub(1).and_then(|pd| last_at_depth.get(pd).copied().flatten()) {
+                Some(parent) => {
+                    children[parent].push(pos);
+                    child_dur[parent] += s.dur_us;
+                }
+                None => roots.push(pos),
+            }
+        }
+        // Children always sort after their parent (later start, or equal
+        // start at greater depth), so a reverse pass builds leaf-to-root.
+        let mut nodes: Vec<Json> = (0..order.len()).map(|_| Json::Null).collect();
+        for pos in (0..order.len()).rev() {
+            let s = &inner.spans[order[pos]];
+            let kids: Vec<Json> = children[pos]
+                .iter()
+                .map(|&c| std::mem::replace(&mut nodes[c], Json::Null))
+                .collect();
+            let mut fields = vec![
+                ("name", Json::str(s.name)),
+                ("start_us", Json::num(s.start_us as f64)),
+                ("dur_us", Json::num(s.dur_us as f64)),
+                ("self_us", Json::num(s.dur_us.saturating_sub(child_dur[pos]) as f64)),
+            ];
+            if let Some((a, b)) = s.steps {
+                fields.push(("steps", Json::arr(vec![Json::num(a as f64), Json::num(b as f64)])));
+            }
+            fields.push(("children", Json::arr(kids)));
+            nodes[pos] = Json::obj(fields);
+        }
+        let root_nodes: Vec<Json> =
+            roots.iter().map(|&r| std::mem::replace(&mut nodes[r], Json::Null)).collect();
+        Json::obj(vec![
+            ("spans", Json::arr(root_nodes)),
+            ("span_count", Json::num(inner.spans.len() as f64)),
+            ("dropped", Json::num(inner.dropped as f64)),
+        ])
+    }
+
+    /// Chrome trace-event JSON: a flat array of `ph: "X"` complete
+    /// events (µs timestamps), loadable by chrome://tracing and perfetto.
+    pub fn chrome_json(&self) -> Json {
+        let inner = self.inner.lock().unwrap();
+        let mut order: Vec<usize> = (0..inner.spans.len()).collect();
+        order.sort_by_key(|&i| (inner.spans[i].start_us, inner.spans[i].depth));
+        let events: Vec<Json> = order
+            .iter()
+            .map(|&i| {
+                let s = &inner.spans[i];
+                let name = match s.steps {
+                    Some((a, b)) => format!("{} {a}..{b}", s.name),
+                    None => s.name.to_string(),
+                };
+                Json::obj(vec![
+                    ("name", Json::str(name)),
+                    ("cat", Json::str("job")),
+                    ("ph", Json::str("X")),
+                    ("ts", Json::num(s.start_us as f64)),
+                    ("dur", Json::num(s.dur_us as f64)),
+                    ("pid", Json::num(1.0)),
+                    ("tid", Json::num(1.0)),
+                ])
+            })
+            .collect();
+        Json::arr(events)
+    }
+}
+
+impl Default for JobTrace {
+    fn default() -> JobTrace {
+        JobTrace::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A synthetic lifecycle: job(0..100) > admit(0..2), queued(2..10),
+    /// run(10..100) > steps(12..95) > two sampled windows.
+    fn lifecycle() -> JobTrace {
+        let t = JobTrace::new();
+        t.record_span("admit", 0, 2, 1);
+        t.record_span("queued", 2, 8, 1);
+        t.record_span_full("steps", 12, 40, 3, Some((0, 8)));
+        t.record_span_full("steps", 52, 43, 3, Some((8, 16)));
+        t.record_span("steps", 12, 83, 2);
+        t.record_span("run", 10, 90, 1);
+        t.record_span("job", 0, 100, 0);
+        t
+    }
+
+    #[test]
+    fn tree_nests_by_depth_and_computes_self_time() {
+        let j = lifecycle().tree_json();
+        assert_eq!(j.get("span_count").as_usize(), Some(7));
+        assert_eq!(j.get("dropped").as_usize(), Some(0));
+        let roots = j.get("spans").as_arr().unwrap();
+        assert_eq!(roots.len(), 1);
+        let job = &roots[0];
+        assert_eq!(job.get("name").as_str(), Some("job"));
+        // job's children: admit, queued, run (in start order).
+        let kids = job.get("children").as_arr().unwrap();
+        let names: Vec<&str> = kids.iter().map(|k| k.get("name").as_str().unwrap()).collect();
+        assert_eq!(names, ["admit", "queued", "run"]);
+        // self = 100 - (2 + 8 + 90) = 0.
+        assert_eq!(job.get("self_us").as_usize(), Some(0));
+        let run = &kids[2];
+        let run_kids = run.get("children").as_arr().unwrap();
+        assert_eq!(run_kids.len(), 1);
+        let steps = &run_kids[0];
+        assert_eq!(steps.get("name").as_str(), Some("steps"));
+        let windows = steps.get("children").as_arr().unwrap();
+        assert_eq!(windows.len(), 2);
+        assert_eq!(windows[1].get("steps").as_arr().unwrap()[1].as_usize(), Some(16));
+        // steps self = 83 - 40 - 43 = 0; run self = 90 - 83 = 7.
+        assert_eq!(steps.get("self_us").as_usize(), Some(0));
+        assert_eq!(run.get("self_us").as_usize(), Some(7));
+    }
+
+    #[test]
+    fn span_total_at_least_children_self_sum() {
+        fn check(node: &Json) {
+            let total = node.get("dur_us").as_f64().unwrap();
+            let mut child_self = 0.0;
+            for k in node.get("children").as_arr().unwrap() {
+                child_self += k.get("self_us").as_f64().unwrap();
+                check(k);
+            }
+            assert!(total + 1e-9 >= child_self, "{node:?}");
+        }
+        let j = lifecycle().tree_json();
+        for root in j.get("spans").as_arr().unwrap() {
+            check(root);
+        }
+    }
+
+    #[test]
+    fn cap_drops_inner_spans_only() {
+        let t = JobTrace::new();
+        for i in 0..(SPAN_CAP + 10) {
+            t.record_span("inner", i as u64, 1, 3);
+        }
+        assert_eq!(t.len(), SPAN_CAP);
+        assert_eq!(t.dropped(), 10);
+        // Lifecycle spans still land past the cap.
+        t.record_span("job", 0, 1_000_000, 0);
+        assert_eq!(t.len(), SPAN_CAP + 1);
+    }
+
+    #[test]
+    fn chrome_events_are_complete_events() {
+        let j = lifecycle().chrome_json();
+        let events = j.as_arr().unwrap();
+        assert_eq!(events.len(), 7);
+        assert_eq!(events[0].get("ph").as_str(), Some("X"));
+        assert_eq!(events[0].get("name").as_str(), Some("job"));
+        assert!(events[0].get("dur").as_f64().unwrap() > 0.0);
+        // Step windows carry their range in the name.
+        assert!(events
+            .iter()
+            .any(|e| e.get("name").as_str().map(|s| s.contains("8..16")).unwrap_or(false)));
+    }
+}

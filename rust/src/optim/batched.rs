@@ -44,10 +44,11 @@ use super::pogo::{landing_coeffs, landing_coeffs_slice, with_coeff_scratch, Lamb
 use super::quartic::solve_landing_quartic;
 use super::Orthoptimizer;
 use crate::linalg::{
-    batch_a_bh, batch_matmul, for_each_mat_fused, fused_step_flops, with_step_scratch, BatchMat,
-    Field, KernelChoice, LandingParams, Mat, PogoLambda, Scalar,
+    batch_a_bh, batch_matmul, for_each_mat_fused, fused_step_flops, shape_class,
+    with_step_scratch, BatchMat, Field, KernelChoice, LandingParams, Mat, PogoLambda, Scalar,
 };
 use anyhow::{ensure, Result};
+use std::time::Instant;
 
 /// Which update rule a [`BatchedHost`] runs.
 #[derive(Clone, Copy, Debug)]
@@ -239,6 +240,10 @@ pub struct BatchedHost<E: Field = f32> {
     /// (FindRoot's −λ scales, Landing's −η / −ηλ pairs).
     coef_a: Vec<E>,
     coef_b: Vec<E>,
+    /// Cached per-step histogram handle (`pogo_step_duration_seconds`).
+    /// A host owns one shape group and one kernel choice, so the labels —
+    /// and therefore the series — never change after the first step.
+    step_hist: Option<&'static crate::obs::Hist>,
 }
 
 impl<E: Field> BatchedHost<E> {
@@ -258,6 +263,7 @@ impl<E: Field> BatchedHost<E> {
             lam_buf: Vec::new(),
             coef_a: Vec::new(),
             coef_b: Vec::new(),
+            step_hist: None,
         }
     }
 
@@ -285,6 +291,7 @@ impl<E: Field> BatchedHost<E> {
             lam_buf: Vec::new(),
             coef_a: Vec::new(),
             coef_b: Vec::new(),
+            step_hist: None,
         }
     }
 
@@ -305,6 +312,7 @@ impl<E: Field> BatchedHost<E> {
             lam_buf: Vec::new(),
             coef_a: Vec::new(),
             coef_b: Vec::new(),
+            step_hist: None,
         }
     }
 
@@ -320,6 +328,7 @@ impl<E: Field> BatchedHost<E> {
             lam_buf: Vec::new(),
             coef_a: Vec::new(),
             coef_b: Vec::new(),
+            step_hist: None,
         }
     }
 
@@ -335,6 +344,7 @@ impl<E: Field> BatchedHost<E> {
             lam_buf: Vec::new(),
             coef_a: Vec::new(),
             coef_b: Vec::new(),
+            step_hist: None,
         }
     }
 
@@ -427,6 +437,9 @@ impl<E: Field> BatchedHost<E> {
         if x.batch() == 0 {
             return Ok(());
         }
+        // Observability: one clock pair per batched step (never per batch
+        // element), gated so a disabled run does not read the clock.
+        let t0 = crate::obs::enabled().then(Instant::now);
         let g = self.base.transform(g0)?;
         let eta = self.lr;
         let fused = !matches!(self.kernel, KernelChoice::Naive);
@@ -554,6 +567,18 @@ impl<E: Field> BatchedHost<E> {
             Rule::Adam => {
                 x.axpy(E::from_f64(-eta), g);
             }
+        }
+        if let Some(t0) = t0 {
+            let rule = self.rule;
+            let hist = *self.step_hist.get_or_insert_with(|| {
+                let kernel = match rule {
+                    Rule::Pogo { .. } | Rule::Landing { .. } if fused => E::step_kernel().name(),
+                    _ => "naive",
+                };
+                let (_, p, n) = x.shape();
+                crate::obs::hist::STEP_SECONDS.hist(&["batched-host", kernel, shape_class(p, n)])
+            });
+            hist.record_since(t0);
         }
         Ok(())
     }

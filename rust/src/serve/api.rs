@@ -17,6 +17,7 @@
 //! | GET    | `/v2/jobs/:id`        | status + tenant/cost/series length      |
 //! | GET    | `/v2/jobs/:id/events` | live SSE progress stream                |
 //! | GET    | `/v2/jobs/:id/result` | full loss series + final iterate        |
+//! | GET    | `/v2/jobs/:id/trace`  | flight-recorder span tree               |
 //! | DELETE | `/v2/jobs/:id`        | cancel                                  |
 //! | GET    | `/v2/problems`        | the problem-source registry             |
 //! | POST   | `/v2/artifacts`       | upload a sealed artifact (binary body)  |
@@ -252,24 +253,60 @@ enum Routed {
 }
 
 fn handle_conn(mut stream: TcpStream, queue: &JobQueue, metrics: &ServeMetrics) {
-    metrics.requests.fetch_add(1, Ordering::Relaxed);
-    let routed = match http::read_request(&stream) {
-        Ok(req) => route(&req, queue, metrics),
+    let t0 = crate::obs::enabled().then(std::time::Instant::now);
+    let (label, routed) = match http::read_request(&stream) {
+        Ok(req) => (route_label(&req.path), route(&req, queue, metrics)),
         Err(e) => match e.response() {
-            Some(resp) => Routed::Plain(resp),
+            // A protocol violation we could answer: count it under the
+            // "unparsed" route (there is no trustworthy path to label).
+            Some(resp) => ("unparsed", Routed::Plain(resp)),
             None => {
+                // Transport-level failure before a request existed:
+                // nothing to label, nothing to time.
                 log::debug!("client went away mid-request: {e}");
                 return;
             }
         },
     };
-    match routed {
+    let status = match routed {
         Routed::Plain(resp) => {
             if let Err(e) = http::write_response(&mut stream, &resp) {
                 log::debug!("client went away mid-response: {e}");
             }
+            resp.status
         }
+        // SSE durations cover the whole stream lifetime, keepalives
+        // included — they land in the top histogram buckets by design.
         Routed::Events(id, bus) => stream_events(&mut stream, id, &bus, metrics),
+    };
+    let class = http::status_class(status);
+    metrics.count_request(label, class);
+    if let Some(t0) = t0 {
+        crate::obs::hist::HTTP_REQUEST_SECONDS.hist(&[label, class]).record_since(t0);
+    }
+}
+
+/// Normalize a request path to one of a fixed set of route labels so the
+/// route-labelled metrics (and their histogram series) stay bounded no
+/// matter what clients send: id/hash segments collapse to `:id`/`:hash`,
+/// unknown paths to `other`.
+fn route_label(path: &str) -> &'static str {
+    let segs: Vec<&str> = path.split('/').filter(|s| !s.is_empty()).collect();
+    match segs.as_slice() {
+        ["healthz"] => "/healthz",
+        ["metrics"] => "/metrics",
+        ["v1", "jobs"] => "/v1/jobs",
+        ["v1", "jobs", _] => "/v1/jobs/:id",
+        ["v1", "jobs", _, "result"] => "/v1/jobs/:id/result",
+        ["v2", "jobs"] => "/v2/jobs",
+        ["v2", "jobs", _] => "/v2/jobs/:id",
+        ["v2", "jobs", _, "result"] => "/v2/jobs/:id/result",
+        ["v2", "jobs", _, "events"] => "/v2/jobs/:id/events",
+        ["v2", "jobs", _, "trace"] => "/v2/jobs/:id/trace",
+        ["v2", "problems"] => "/v2/problems",
+        ["v2", "artifacts"] => "/v2/artifacts",
+        ["v2", "artifacts", _] => "/v2/artifacts/:hash",
+        _ => "other",
     }
 }
 
@@ -308,6 +345,8 @@ fn route(req: &Request, queue: &JobQueue, metrics: &ServeMetrics) -> Routed {
                 pool_mode: pool.mode,
                 pool_workers: pool.resident_workers,
                 pool_dispatches: pool.dispatches,
+                pool_busy_ns: pool.busy_ns,
+                pool_idle_ns: pool.idle_ns,
             };
             plain(Response::text(200, metrics.render(&gauges)))
         }
@@ -334,6 +373,13 @@ fn route(req: &Request, queue: &JobQueue, metrics: &ServeMetrics) -> Routed {
         }),
         ("GET", ["v2", "jobs", id, "result"]) => plain(match parse_id(id) {
             Some(id) => result_v2(id, queue),
+            None => Response::error(400, format!("bad job id '{id}'")),
+        }),
+        ("GET", ["v2", "jobs", id, "trace"]) => plain(match parse_id(id) {
+            Some(id) => match queue.trace_json(id) {
+                Some(j) => Response::json(200, &j),
+                None => Response::error(404, format!("no job {id}")),
+            },
             None => Response::error(400, format!("bad job id '{id}'")),
         }),
         ("GET", ["v2", "jobs", id, "events"]) => match parse_id(id) {
@@ -639,8 +685,14 @@ fn result_v2(id: u64, queue: &JobQueue) -> Response {
 /// transfer-encoding. Late subscribers replay the bus's buffered tail
 /// (monotone, gap-free within the buffer window); the stream closes with
 /// a terminal `state` event. Keepalive comments hold the connection
-/// through quiet stretches.
-fn stream_events(stream: &mut TcpStream, id: u64, bus: &ProgressBus, metrics: &ServeMetrics) {
+/// through quiet stretches. Returns the HTTP status it answered with,
+/// for the caller's request accounting.
+fn stream_events(
+    stream: &mut TcpStream,
+    id: u64,
+    bus: &ProgressBus,
+    metrics: &ServeMetrics,
+) -> u16 {
     // Long-lived streams get their own budget (see [`MAX_SSE`]).
     // Increment-then-check: a check-then-increment race would let a
     // burst of subscribers sail past the cap together.
@@ -649,14 +701,14 @@ fn stream_events(stream: &mut TcpStream, id: u64, bus: &ProgressBus, metrics: &S
         let resp = Response::error(503, "too many event subscribers")
             .with_header("Retry-After", "1");
         http::write_response(stream, &resp).ok();
-        return;
+        return 503;
     }
     let _guard = SseGuard(metrics);
     let id_text = id.to_string();
     if http::write_stream_head(stream, 200, "text/event-stream", &[("X-Job-Id", &id_text)])
         .is_err()
     {
-        return;
+        return 200;
     }
     let mut cursor = 0u64;
     loop {
@@ -686,10 +738,11 @@ fn stream_events(stream: &mut TcpStream, id: u64, bus: &ProgressBus, metrics: &S
             BusPoll::Closed => break,
         };
         if http::write_chunk(stream, chunk.as_bytes()).is_err() {
-            return; // subscriber went away
+            return 200; // subscriber went away
         }
     }
     http::finish_chunked(stream).ok();
+    200
 }
 
 #[cfg(test)]
@@ -738,6 +791,9 @@ mod tests {
         let (code, _) =
             http::request(client.addr(), "GET", "/v2/jobs/999/events", None).unwrap();
         assert_eq!(code, 404);
+        let (code, _) =
+            http::request(client.addr(), "GET", "/v2/jobs/999/trace", None).unwrap();
+        assert_eq!(code, 404);
         let (code, _) = http::request(client.addr(), "GET", "/v1/jobs/xyz", None).unwrap();
         assert_eq!(code, 400);
         let (code, _) = http::request(client.addr(), "POST", "/metrics", None).unwrap();
@@ -763,6 +819,23 @@ mod tests {
         assert_eq!(code, 404);
         assert!(body.contains("--artifact-dir"), "{body}");
         server.shutdown();
+    }
+
+    #[test]
+    fn route_labels_are_a_fixed_set() {
+        for (path, label) in [
+            ("/healthz", "/healthz"),
+            ("/metrics", "/metrics"),
+            ("/v1/jobs/7", "/v1/jobs/:id"),
+            ("/v1/jobs/7/result", "/v1/jobs/:id/result"),
+            ("/v2/jobs/123/trace", "/v2/jobs/:id/trace"),
+            ("/v2/jobs/123/events", "/v2/jobs/:id/events"),
+            ("/v2/artifacts/abcdef", "/v2/artifacts/:hash"),
+            ("/totally/unknown", "other"),
+            ("/v1/jobs/../../etc/passwd", "other"),
+        ] {
+            assert_eq!(route_label(path), label, "{path}");
+        }
     }
 
     #[test]

@@ -135,6 +135,20 @@ impl Response {
     }
 }
 
+/// Status class label for metrics (`"2xx"`, `"4xx"`, …). Anything
+/// outside 100–599 is `"other"` (can only arise from a bug, but metrics
+/// must never panic).
+pub fn status_class(status: u16) -> &'static str {
+    match status {
+        100..=199 => "1xx",
+        200..=299 => "2xx",
+        300..=399 => "3xx",
+        400..=499 => "4xx",
+        500..=599 => "5xx",
+        _ => "other",
+    }
+}
+
 pub fn status_reason(status: u16) -> &'static str {
     match status {
         200 => "OK",
@@ -863,5 +877,14 @@ mod tests {
         for code in [200, 201, 202, 400, 404, 405, 409, 413, 429, 431, 500, 503] {
             assert_ne!(status_reason(code), "Unknown", "{code}");
         }
+    }
+
+    #[test]
+    fn status_classes() {
+        assert_eq!(status_class(200), "2xx");
+        assert_eq!(status_class(202), "2xx");
+        assert_eq!(status_class(404), "4xx");
+        assert_eq!(status_class(503), "5xx");
+        assert_eq!(status_class(0), "other");
     }
 }

@@ -399,6 +399,11 @@ pub struct RunCtl<'a> {
     pub on_step: Option<&'a dyn Fn(usize, f64)>,
     /// Where to checkpoint/resume (`checkpoint_every > 0`; either domain).
     pub checkpoint_path: Option<PathBuf>,
+    /// Flight recorder for this job, if anyone wants the timeline: the
+    /// run records `build`/`resume`/`steps` segments plus sampled step
+    /// windows and checkpoint spans into it. Ignored when observability
+    /// is off ([`crate::obs::enabled`]).
+    pub trace: Option<&'a crate::obs::JobTrace>,
 }
 
 /// Execute a job to completion (or cancellation). Deterministic given the
@@ -457,6 +462,8 @@ where
     I: FnOnce(&mut ParamStore<E>, &mut Rng),
     B: FnOnce(&OptimizerSpec, &ParamStore<E>) -> Result<OptimSession<E>>,
 {
+    let trace = ctl.trace.filter(|_| crate::obs::enabled());
+    let t_build = trace.map(|tr| tr.now_us());
     let mut rng = Rng::seed_from_u64(spec.seed);
     let mut store: ParamStore<E> = ParamStore::new();
     init(&mut store, &mut rng);
@@ -470,6 +477,7 @@ where
     let ckpt = if spec.checkpoint_every > 0 { ctl.checkpoint_path.clone() } else { None };
     if let Some(path) = &ckpt {
         if path.exists() {
+            let t_resume = trace.map(|tr| tr.now_us());
             // A bad checkpoint degrades to a fresh start instead of
             // failing the job: the spec is still valid, only the saved
             // progress is lost (saves are write-then-rename, so this is
@@ -495,10 +503,16 @@ where
                     path.display()
                 ),
             }
+            if let (Some(tr), Some(t0)) = (trace, t_resume) {
+                tr.record_span("resume", t0, tr.now_us() - t0, 3);
+            }
         }
     }
 
     let mut session = build_session(&spec.optimizer, &store)?;
+    if let (Some(tr), Some(t0)) = (trace, t_build) {
+        tr.record_span("build", t0, tr.now_us() - t0, 2);
+    }
     // `ckpt` is Some exactly when checkpointing applies (path given AND
     // checkpoint_every > 0, resolved above) — the single gate.
     let ckpt_for_save = ckpt.clone();
@@ -544,10 +558,24 @@ fn drive<E: Field>(
     let clock = crate::util::Stopwatch::start();
     let mut steps_done = start_step;
     let mut last_ortho = f64::NAN;
+    // Flight recorder: one `steps` span for the whole loop, sampled
+    // window spans every `win` steps (never per step), and a span per
+    // checkpoint save. All trace reads are behind one Option check.
+    let trace = ctl.trace.filter(|_| crate::obs::enabled());
+    let t_steps = trace.map(|tr| tr.now_us());
+    let win = (spec.steps / 32).max(16);
+    let mut win_from_us = t_steps;
+    let mut win_from_step = start_step;
+    let close_steps_span = |tr: &crate::obs::JobTrace, t0: u64| {
+        tr.record_span("steps", t0, tr.now_us() - t0, 2);
+    };
     for step in start_step..spec.steps {
         if let Some(flag) = ctl.cancel {
             if flag.load(Ordering::Relaxed) {
                 let loss = problem.loss(spec, step, store);
+                if let (Some(tr), Some(t0)) = (trace, t_steps) {
+                    close_steps_span(tr, t0);
+                }
                 return Ok(JobOutcome::Cancelled(JobResult {
                     final_loss: loss,
                     ortho_error: store.max_stiefel_distance(),
@@ -577,13 +605,54 @@ fn drive<E: Field>(
                 wall_s: clock.seconds(),
             });
         }
+        if let (Some(tr), Some(t0)) = (trace, win_from_us) {
+            if steps_done - win_from_step >= win || steps_done == spec.steps {
+                let now = tr.now_us();
+                tr.record_span_full(
+                    "steps",
+                    t0,
+                    now - t0,
+                    3,
+                    Some((win_from_step as u64, steps_done as u64)),
+                );
+                win_from_us = Some(now);
+                win_from_step = steps_done;
+            }
+        }
         if let Some(s) = save.as_mut() {
             if spec.checkpoint_every > 0 && steps_done % spec.checkpoint_every == 0 {
+                // Close the in-flight window before the save so window and
+                // checkpoint spans never overlap (child self-times must
+                // not double-count under the `steps` parent).
+                let t_ck = trace.map(|tr| {
+                    let now = tr.now_us();
+                    if let Some(t0) = win_from_us {
+                        if win_from_step < steps_done {
+                            tr.record_span_full(
+                                "steps",
+                                t0,
+                                now - t0,
+                                3,
+                                Some((win_from_step as u64, steps_done as u64)),
+                            );
+                        }
+                    }
+                    now
+                });
                 s(store, steps_done)?;
+                if let (Some(tr), Some(t0)) = (trace, t_ck) {
+                    let now = tr.now_us();
+                    tr.record_span("checkpoint", t0, now - t0, 3);
+                    win_from_us = Some(now);
+                    win_from_step = steps_done;
+                }
             }
         }
     }
     let final_loss = problem.loss(spec, spec.steps, store);
+    if let (Some(tr), Some(t0)) = (trace, t_steps) {
+        close_steps_span(tr, t0);
+    }
     Ok(JobOutcome::Done(JobResult {
         final_loss,
         ortho_error: store.max_stiefel_distance(),
@@ -1025,7 +1094,8 @@ mod tests {
                 cancel.store(true, Ordering::Relaxed);
             }
         };
-        let ctl = RunCtl { cancel: Some(&cancel), on_step: Some(&on_step), checkpoint_path: None };
+        let ctl =
+            RunCtl { cancel: Some(&cancel), on_step: Some(&on_step), ..Default::default() };
         let JobOutcome::Cancelled(r) = run_job(&spec, &ctl).unwrap() else {
             panic!("expected cancellation")
         };
@@ -1075,6 +1145,7 @@ mod tests {
             cancel: Some(&cancel),
             on_step: Some(&on_step),
             checkpoint_path: Some(path.clone()),
+            ..Default::default()
         };
         let JobOutcome::Cancelled(_) = run_job(&spec, &ctl).unwrap() else {
             panic!("expected cancellation")
@@ -1084,7 +1155,7 @@ mod tests {
 
         // Second attempt resumes from the checkpoint and completes.
         let ctl =
-            RunCtl { cancel: None, on_step: None, checkpoint_path: Some(path.clone()) };
+            RunCtl { checkpoint_path: Some(path.clone()), ..Default::default() };
         let JobOutcome::Done(r) = run_job(&spec, &ctl).unwrap() else { panic!() };
         assert_eq!(r.steps_done, spec.steps);
         assert!(r.ortho_error <= 1e-3);
@@ -1128,6 +1199,7 @@ mod tests {
             cancel: Some(&cancel),
             on_step: Some(&on_step),
             checkpoint_path: Some(path.clone()),
+            ..Default::default()
         };
         let JobOutcome::Cancelled(_) = run_job(&spec, &ctl).unwrap() else {
             panic!("expected cancellation")

@@ -10,6 +10,7 @@
 //! bumps.
 
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
 
 /// Queue-side gauge snapshot, sampled under the queue lock by the caller.
@@ -33,6 +34,11 @@ pub struct QueueGauges {
     pub pool_workers: usize,
     /// Parallel dispatches into the compute pool since startup.
     pub pool_dispatches: u64,
+    /// Cumulative ns pool workers spent executing shards (accrues only
+    /// while `POGO_OBS` is on; see `util::pool`).
+    pub pool_busy_ns: u64,
+    /// Cumulative ns pool workers spent parked between jobs (same gate).
+    pub pool_idle_ns: u64,
 }
 
 /// Monotonic counters for one daemon lifetime.
@@ -52,8 +58,17 @@ pub struct ServeMetrics {
     pub rejected_artifact: AtomicU64,
     /// Optimizer steps applied across all jobs.
     pub steps: AtomicU64,
-    /// HTTP requests handled (any endpoint, any status).
+    /// HTTP requests handled (any endpoint, any status — the aggregate
+    /// every labelled route/status cell also bumps).
     pub requests: AtomicU64,
+    /// HTTP requests by `(normalized route, status class)`. Both label
+    /// values come from small fixed sets (`api::route_label`,
+    /// `http::status_class`), so this table tops out at a few dozen rows;
+    /// one short lock per request is noise next to the socket work.
+    requests_by: Mutex<Vec<(&'static str, &'static str, u64)>>,
+    /// Worker threads that panicked while running a job (the job turns
+    /// `failed`; the daemon keeps serving).
+    pub worker_panics: AtomicU64,
     /// Progress events written to SSE subscribers.
     pub events_streamed: AtomicU64,
     /// Artifact-store cache hits (job admissions and inline dedupe served
@@ -92,6 +107,8 @@ impl ServeMetrics {
             rejected_artifact: AtomicU64::new(0),
             steps: AtomicU64::new(0),
             requests: AtomicU64::new(0),
+            requests_by: Mutex::new(Vec::new()),
+            worker_panics: AtomicU64::new(0),
             events_streamed: AtomicU64::new(0),
             artifact_hits: AtomicU64::new(0),
             artifact_misses: AtomicU64::new(0),
@@ -102,6 +119,17 @@ impl ServeMetrics {
 
     pub fn uptime_s(&self) -> f64 {
         self.started.elapsed().as_secs_f64()
+    }
+
+    /// Count one handled HTTP request under its normalized route and
+    /// status class ("2xx".."5xx"). Bumps the aggregate too.
+    pub fn count_request(&self, route: &'static str, class: &'static str) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let mut t = self.requests_by.lock().unwrap();
+        match t.iter_mut().find(|(r, c, _)| *r == route && *c == class) {
+            Some(row) => row.2 += 1,
+            None => t.push((route, class, 1)),
+        }
     }
 
     /// Render the Prometheus exposition text.
@@ -178,12 +206,25 @@ impl ServeMetrics {
             "Optimizer steps applied across all jobs.",
             self.steps.load(Ordering::Relaxed) as f64,
         );
+        // HTTP requests — one labelled family, split by normalized route
+        // and status class. Sorted so scrapes are deterministic.
+        out.push_str(
+            "# HELP pogo_serve_http_requests_total HTTP requests handled, by route and \
+             status class.\n# TYPE pogo_serve_http_requests_total counter\n",
+        );
+        let mut rows = self.requests_by.lock().unwrap().clone();
+        rows.sort_unstable();
+        for (route, class, n) in rows {
+            out.push_str(&format!(
+                "pogo_serve_http_requests_total{{route=\"{route}\",status=\"{class}\"}} {n}\n"
+            ));
+        }
         metric(
             &mut out,
-            "pogo_serve_http_requests_total",
+            "pogo_serve_worker_panics_total",
             "counter",
-            "HTTP requests handled.",
-            self.requests.load(Ordering::Relaxed) as f64,
+            "Worker threads that panicked while running a job.",
+            self.worker_panics.load(Ordering::Relaxed) as f64,
         );
         metric(
             &mut out,
@@ -274,6 +315,31 @@ impl ServeMetrics {
             "Parallel dispatches into the shared compute pool.",
             q.pool_dispatches as f64,
         );
+        metric(
+            &mut out,
+            "pogo_serve_pool_busy_seconds_total",
+            "counter",
+            "Pool worker time spent executing shards (accrues while POGO_OBS is on).",
+            q.pool_busy_ns as f64 / 1e9,
+        );
+        metric(
+            &mut out,
+            "pogo_serve_pool_idle_seconds_total",
+            "counter",
+            "Pool worker time spent parked between jobs (accrues while POGO_OBS is on).",
+            q.pool_idle_ns as f64 / 1e9,
+        );
+        let pool_total = q.pool_busy_ns.saturating_add(q.pool_idle_ns);
+        metric(
+            &mut out,
+            "pogo_serve_pool_utilization",
+            "gauge",
+            "Lifetime fraction of observed pool worker time spent busy.",
+            if pool_total == 0 { 0.0 } else { q.pool_busy_ns as f64 / pool_total as f64 },
+        );
+        // The crate-wide latency histograms (HTTP, queue wait, run time,
+        // checkpoint I/O, per-step, pool dispatch) ride the same scrape.
+        crate::obs::render_prometheus(&mut out);
         out
     }
 }
@@ -299,6 +365,8 @@ mod tests {
             pool_mode: "resident",
             pool_workers: 3,
             pool_dispatches: 42,
+            pool_busy_ns: 3_000_000_000,
+            pool_idle_ns: 1_000_000_000,
         }
     }
 
@@ -312,6 +380,10 @@ mod tests {
         m.artifact_hits.fetch_add(5, Ordering::Relaxed);
         m.artifact_misses.fetch_add(2, Ordering::Relaxed);
         m.sse_clients.fetch_add(1, Ordering::Relaxed);
+        m.count_request("/metrics", "2xx");
+        m.count_request("/metrics", "2xx");
+        m.count_request("/v1/jobs", "4xx");
+        m.worker_panics.fetch_add(1, Ordering::Relaxed);
         let text = m.render(&gauges());
         for name in [
             "pogo_serve_uptime_seconds",
@@ -330,6 +402,12 @@ mod tests {
             "pogo_serve_admission_outstanding_cost 4800",
             "pogo_serve_pool_workers{mode=\"resident\"} 3",
             "pogo_serve_pool_dispatches_total 42",
+            "pogo_serve_pool_busy_seconds_total 3",
+            "pogo_serve_pool_idle_seconds_total 1",
+            "pogo_serve_pool_utilization 0.75",
+            "pogo_serve_http_requests_total{route=\"/metrics\",status=\"2xx\"} 2",
+            "pogo_serve_http_requests_total{route=\"/v1/jobs\",status=\"4xx\"} 1",
+            "pogo_serve_worker_panics_total 1",
             "pogo_serve_sse_clients 1",
             "pogo_serve_sse_events_total 0",
             "pogo_serve_artifact_cache_hits_total 5",

@@ -292,6 +292,13 @@ struct Entry {
     iterate: Option<Arc<FinalIterate>>,
     bus: Arc<ProgressBus>,
     cancel: Arc<AtomicBool>,
+    /// Flight recorder: this job's bounded span buffer (epoch = the
+    /// submission instant). In-memory only — a recovered job starts a
+    /// fresh, empty trace.
+    trace: Arc<crate::obs::JobTrace>,
+    /// Trace-relative µs at which the job entered the FIFO (the end of
+    /// its `admit` span); the `queued` span runs from here to claim.
+    queued_from_us: u64,
 }
 
 #[derive(Default)]
@@ -424,6 +431,11 @@ impl JobQueue {
         mut spec: JobSpec,
         tenant: &str,
     ) -> std::result::Result<JobId, SubmitError> {
+        // The flight recorder's epoch is the submission instant, so the
+        // `admit` span below covers everything admission does (payload
+        // validation, artifact resolution, inline dedupe). Rejected
+        // submissions drop the trace with the error.
+        let trace = Arc::new(crate::obs::JobTrace::new());
         let reject = |counter: &std::sync::atomic::AtomicU64, err: SubmitError| {
             self.inner.metrics.rejected.fetch_add(1, Ordering::Relaxed);
             counter.fetch_add(1, Ordering::Relaxed);
@@ -487,6 +499,13 @@ impl JobQueue {
             let id = st.next_id;
             st.next_id += 1;
             st.admit_accounting(tenant, cost);
+            let queued_from_us = if crate::obs::enabled() {
+                let t = trace.now_us();
+                trace.record_span("admit", 0, t, 1);
+                t
+            } else {
+                0
+            };
             st.jobs.insert(
                 id,
                 Entry {
@@ -503,6 +522,8 @@ impl JobQueue {
                     iterate: None,
                     bus: ProgressBus::new(),
                     cancel: Arc::new(AtomicBool::new(false)),
+                    trace,
+                    queued_from_us,
                 },
             );
             st.pending.push_back(id);
@@ -660,6 +681,27 @@ impl JobQueue {
         let series_len =
             e.series_final.as_ref().map(|s| s.len()).unwrap_or_else(|| e.series.len());
         map.insert("series_len".to_string(), Json::num(series_len as f64));
+        Some(Json::Obj(map))
+    }
+
+    /// Flight-recorder timeline for one job (`None` for unknown ids):
+    /// the span tree from [`crate::obs::JobTrace::tree_json`] plus the
+    /// job's id, state, and wall-clock age in µs. Served by
+    /// `GET /v2/jobs/:id/trace`; live jobs answer with whatever spans
+    /// have closed so far.
+    pub fn trace_json(&self, id: JobId) -> Option<Json> {
+        let (trace, state) = {
+            let st = self.inner.state.lock().unwrap();
+            let e = st.jobs.get(&id)?;
+            (e.trace.clone(), e.state)
+        };
+        let mut map = match trace.tree_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!("tree_json returns an object"),
+        };
+        map.insert("id".to_string(), Json::num(id as f64));
+        map.insert("state".to_string(), Json::str(state.name()));
+        map.insert("wall_us".to_string(), Json::num(trace.now_us() as f64));
         Some(Json::Obj(map))
     }
 
@@ -1000,6 +1042,11 @@ impl Inner {
                         ProgressBus::closed_with(state)
                     },
                     cancel: Arc::new(AtomicBool::new(false)),
+                    // Spans don't survive a restart: a re-queued job gets
+                    // a fresh recorder (its re-run is traced normally), a
+                    // terminal one an empty trace.
+                    trace: Arc::new(crate::obs::JobTrace::new()),
+                    queued_from_us: 0,
                 },
             );
             if requeue {
@@ -1025,7 +1072,7 @@ fn worker_loop(inner: Arc<Inner>) {
                     let claim = match st.jobs.get_mut(&id) {
                         Some(e) => {
                             e.state = JobState::Running;
-                            (id, e.spec.clone(), e.cancel.clone())
+                            (id, e.spec.clone(), e.cancel.clone(), e.trace.clone(), e.queued_from_us)
                         }
                         None => continue, // stale id; keep looking
                     };
@@ -1035,8 +1082,17 @@ fn worker_loop(inner: Arc<Inner>) {
                 st = inner.cv.wait(st).unwrap();
             }
         };
-        let Some((id, mut spec, cancel)) = claimed else { return };
+        let Some((id, mut spec, cancel, trace, queued_from_us)) = claimed else { return };
         inner.persist(id);
+
+        // Close the `queued` span (admission end → claim) and open `run`.
+        let run_from_us = crate::obs::enabled().then(|| {
+            let t = trace.now_us();
+            let waited = t.saturating_sub(queued_from_us);
+            trace.record_span("queued", queued_from_us, waited, 1);
+            crate::obs::hist::JOB_QUEUE_WAIT_SECONDS.hist0().record_us(waited);
+            t
+        });
 
         // Run the job. The observer records the loss series and feeds the
         // job's progress bus — the SSE stream — on every applied step.
@@ -1048,6 +1104,7 @@ fn worker_loop(inner: Arc<Inner>) {
             cancel: Some(&cancel),
             on_step: None,
             checkpoint_path: inner.checkpoint_path(id, &spec),
+            trace: Some(&trace),
         };
         let outcome = match inner.resolve_artifact(&mut spec) {
             Ok(()) => std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
@@ -1055,6 +1112,15 @@ fn worker_loop(inner: Arc<Inner>) {
             })),
             Err(e) => Ok(Err(e)),
         };
+
+        // Close `run` and the root `job` span; the trace is complete from
+        // here on (the tree under `run` came from run_job_with).
+        if let Some(t_run) = run_from_us {
+            let now = trace.now_us();
+            trace.record_span("run", t_run, now.saturating_sub(t_run), 1);
+            trace.record_span("job", 0, now, 0);
+            crate::obs::hist::JOB_RUN_SECONDS.hist0().record_us(now.saturating_sub(t_run));
+        }
 
         let bus = {
             let mut st = inner.state.lock().unwrap();
@@ -1087,9 +1153,11 @@ fn worker_loop(inner: Arc<Inner>) {
                             .map(String::as_str)
                             .or_else(|| panic.downcast_ref::<&str>().copied())
                             .unwrap_or("worker panicked");
+                        log::error!("job {id} failed: worker panicked: {msg}");
                         e.state = JobState::Failed;
                         e.error = Some(format!("panic: {msg}"));
                         inner.metrics.failed.fetch_add(1, Ordering::Relaxed);
+                        inner.metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
                     }
                 }
                 // Freeze the series so result reads never copy it under
@@ -1161,6 +1229,38 @@ mod tests {
         let v2 = q.status_v2_json(a).unwrap();
         assert_eq!(v2.get("series_len").as_usize(), Some(20));
         assert_eq!(v2.get("tenant").as_str(), Some("anonymous"));
+        q.shutdown();
+    }
+
+    #[test]
+    fn terminal_job_answers_a_trace() {
+        let _g = crate::obs::TEST_OVERRIDE_LOCK.lock().unwrap();
+        crate::obs::set_enabled(Some(true));
+        let q = start(1, 4);
+        let id = q.submit(quick_spec(40)).unwrap();
+        assert_eq!(q.wait_terminal(id, Duration::from_secs(30)), Some(JobState::Done));
+        crate::obs::set_enabled(None);
+        let t = q.trace_json(id).unwrap();
+        assert_eq!(t.get("id").as_usize(), Some(id as usize));
+        assert_eq!(t.get("state").as_str(), Some("done"));
+        // One root — the depth-0 `job` span — with the lifecycle under it.
+        let spans = t.get("spans").as_arr().unwrap();
+        assert_eq!(spans.len(), 1, "{}", t.to_string());
+        let job = &spans[0];
+        assert_eq!(job.get("name").as_str(), Some("job"));
+        let kids = job.get("children").as_arr().unwrap();
+        let names: Vec<&str> = kids.iter().filter_map(|c| c.get("name").as_str()).collect();
+        assert_eq!(names, ["admit", "queued", "run"]);
+        // The run span carries the in-job tree from run_job_with.
+        let run_kids: Vec<&str> = kids[2]
+            .get("children")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter_map(|c| c.get("name").as_str())
+            .collect();
+        assert!(run_kids.contains(&"steps"), "{run_kids:?}");
+        assert!(q.trace_json(9999).is_none(), "unknown ids answer None");
         q.shutdown();
     }
 

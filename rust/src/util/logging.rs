@@ -1,4 +1,5 @@
-//! Tiny `log`-facade backend writing to stderr with wall-clock offsets.
+//! Tiny `log`-facade backend writing to stderr with wall-clock offsets
+//! and the emitting module (`target`) in every line.
 
 use log::{Level, LevelFilter, Log, Metadata, Record};
 use std::sync::OnceLock;
@@ -25,7 +26,7 @@ impl Log for StderrLogger {
             Level::Debug => "DEBUG",
             Level::Trace => "TRACE",
         };
-        eprintln!("[{t:>9.3}s {lvl}] {}", record.args());
+        eprintln!("[{t:>9.3}s {lvl} {}] {}", record.target(), record.args());
     }
 
     fn flush(&self) {}
@@ -33,28 +34,67 @@ impl Log for StderrLogger {
 
 static LOGGER: OnceLock<StderrLogger> = OnceLock::new();
 
-/// Install the logger. Level comes from `POGO_LOG` (error|warn|info|debug|
-/// trace), defaulting to `info`. Idempotent.
+/// Parse one `POGO_LOG` value. Public so the doc/tests can pin the
+/// accepted set: error | warn | info | debug | trace | off.
+pub fn parse_level(s: &str) -> Option<LevelFilter> {
+    match s {
+        "error" => Some(LevelFilter::Error),
+        "warn" => Some(LevelFilter::Warn),
+        "info" => Some(LevelFilter::Info),
+        "debug" => Some(LevelFilter::Debug),
+        "trace" => Some(LevelFilter::Trace),
+        "off" => Some(LevelFilter::Off),
+        _ => None,
+    }
+}
+
+/// Install the logger. Level comes from `POGO_LOG` (error|warn|info|
+/// debug|trace|off), defaulting to `info`. An unrecognized value still
+/// defaults to `info` but warns once naming the bad value, instead of
+/// silently eating it. Idempotent.
 pub fn init() {
     let logger = LOGGER.get_or_init(|| StderrLogger { start: Instant::now() });
-    let level = match std::env::var("POGO_LOG").as_deref() {
-        Ok("error") => LevelFilter::Error,
-        Ok("warn") => LevelFilter::Warn,
-        Ok("debug") => LevelFilter::Debug,
-        Ok("trace") => LevelFilter::Trace,
-        _ => LevelFilter::Info,
+    let var = std::env::var("POGO_LOG").ok();
+    let (level, bad) = match var.as_deref() {
+        None => (LevelFilter::Info, None),
+        Some(v) => match parse_level(v) {
+            Some(l) => (l, None),
+            None => (LevelFilter::Info, Some(v.to_string())),
+        },
     };
     // set_logger errors if called twice; that's fine.
-    let _ = log::set_logger(logger);
+    let first = log::set_logger(logger).is_ok();
     log::set_max_level(level);
+    if first {
+        if let Some(bad) = bad {
+            log::warn!(
+                "unrecognized POGO_LOG value '{bad}' (want error|warn|info|debug|trace|off); \
+                 defaulting to info"
+            );
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_is_idempotent() {
         super::init();
         super::init();
         log::info!("logging smoke");
+    }
+
+    #[test]
+    fn parses_every_documented_level() {
+        assert_eq!(parse_level("error"), Some(LevelFilter::Error));
+        assert_eq!(parse_level("warn"), Some(LevelFilter::Warn));
+        assert_eq!(parse_level("info"), Some(LevelFilter::Info));
+        assert_eq!(parse_level("debug"), Some(LevelFilter::Debug));
+        assert_eq!(parse_level("trace"), Some(LevelFilter::Trace));
+        assert_eq!(parse_level("off"), Some(LevelFilter::Off));
+        assert_eq!(parse_level("verbose"), None);
+        assert_eq!(parse_level("INFO"), None); // case-sensitive, like before
     }
 }

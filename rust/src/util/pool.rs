@@ -31,6 +31,7 @@ use std::cell::Cell;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
 
 /// Number of worker threads to use (min(available_parallelism, 16),
 /// overridable via `POGO_THREADS`). The environment read is cached after
@@ -138,15 +139,27 @@ pub struct PoolStats {
     pub resident_workers: usize,
     /// Jobs dispatched through the resident pool since process start.
     pub dispatches: u64,
+    /// Cumulative nanoseconds resident workers spent claiming shards.
+    /// Accumulated only while observability is enabled (`POGO_OBS`), so it
+    /// reads 0 when the clock reads on the hot path are switched off.
+    pub busy_ns: u64,
+    /// Cumulative nanoseconds resident workers spent parked between jobs.
+    /// Same `POGO_OBS` gating as `busy_ns`.
+    pub idle_ns: u64,
 }
 
 /// Stats for the process-global pool. Does not force pool initialization.
 pub fn pool_stats() -> PoolStats {
-    let (resident_workers, dispatches) = match POOL.get() {
-        Some(p) => (p.spawned.load(Ordering::Relaxed), p.dispatches.load(Ordering::Relaxed)),
-        None => (0, 0),
+    let (resident_workers, dispatches, busy_ns, idle_ns) = match POOL.get() {
+        Some(p) => (
+            p.spawned.load(Ordering::Relaxed),
+            p.dispatches.load(Ordering::Relaxed),
+            p.shared.busy_ns.load(Ordering::Relaxed),
+            p.shared.idle_ns.load(Ordering::Relaxed),
+        ),
+        None => (0, 0, 0, 0),
     };
-    PoolStats { mode: pool_mode().name(), resident_workers, dispatches }
+    PoolStats { mode: pool_mode().name(), resident_workers, dispatches, busy_ns, idle_ns }
 }
 
 /// Eagerly spawn the resident workers (normally they spawn on first job).
@@ -198,6 +211,11 @@ struct PoolShared {
     done_cv: Condvar,
     /// Shard claim counter, reset before each post.
     next: AtomicUsize,
+    /// Cumulative worker claim-loop nanoseconds (observability only; stays
+    /// 0 while `POGO_OBS` is off so workers never read the clock).
+    busy_ns: AtomicU64,
+    /// Cumulative worker parked nanoseconds (same gating as `busy_ns`).
+    idle_ns: AtomicU64,
 }
 
 struct Pool {
@@ -219,6 +237,8 @@ fn pool() -> &'static Pool {
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
             next: AtomicUsize::new(0),
+            busy_ns: AtomicU64::new(0),
+            idle_ns: AtomicU64::new(0),
         }),
         run_lock: Mutex::new(()),
         spawned: AtomicUsize::new(0),
@@ -248,6 +268,9 @@ fn worker_loop(shared: Arc<PoolShared>) {
     IS_POOL_WORKER.with(|c| c.set(true));
     let mut seen_epoch = 0u64;
     loop {
+        // Observability: time the park (idle) and the claim loop (busy).
+        // Gated so a disabled run never reads the clock on this path.
+        let parked_at = crate::obs::enabled().then(Instant::now);
         let job = {
             let mut st = lock(&shared.state);
             loop {
@@ -260,6 +283,10 @@ fn worker_loop(shared: Arc<PoolShared>) {
                 st = shared.work_cv.wait(st).unwrap_or_else(|e| e.into_inner());
             }
         };
+        let claimed_at = parked_at.map(|t| {
+            shared.idle_ns.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            Instant::now()
+        });
         // SAFETY: the submitter blocks until this worker passes the barrier
         // below, so the closure behind `job.f` is alive for the whole claim
         // loop.
@@ -271,6 +298,9 @@ fn worker_loop(shared: Arc<PoolShared>) {
             }
             f(i);
         }));
+        if let Some(t) = claimed_at {
+            shared.busy_ns.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
         let mut st = lock(&shared.state);
         if result.is_err() {
             st.panicked = true;
@@ -303,13 +333,24 @@ impl Pool {
     /// calling thread, blocking until all shards complete. Panics (after
     /// the barrier) if any shard panicked.
     fn run(&self, shards: usize, f: &(dyn Fn(usize) + Sync)) {
+        // Observability: how long this submitter queued behind other jobs
+        // (`run_lock` acquisition) and how long the dispatched job took to
+        // clear the barrier. Both clock reads are gated on `POGO_OBS`.
+        let wait_from = crate::obs::enabled().then(Instant::now);
         let _guard = lock(&self.run_lock);
+        let run_from = wait_from.map(|t| {
+            crate::obs::hist::POOL_DISPATCH_WAIT_SECONDS.hist0().record_since(t);
+            Instant::now()
+        });
         self.dispatches.fetch_add(1, Ordering::Relaxed);
         self.grow_locked(num_threads().saturating_sub(1));
         let workers = self.spawned.load(Ordering::Relaxed);
         if workers == 0 {
             for i in 0..shards {
                 f(i);
+            }
+            if let Some(t) = run_from {
+                crate::obs::hist::POOL_RUN_SECONDS.hist0().record_since(t);
             }
             return;
         }
@@ -340,6 +381,9 @@ impl Pool {
             st.job = None;
             st.panicked
         };
+        if let Some(t) = run_from {
+            crate::obs::hist::POOL_RUN_SECONDS.hist0().record_since(t);
+        }
         if let Err(p) = caller {
             resume_unwind(p);
         }
@@ -681,8 +725,9 @@ pub fn with_scratch<V: Any, R>(
 mod tests {
     use super::*;
 
-    /// Serializes tests that flip process-global overrides.
-    static OVERRIDE_LOCK: Mutex<()> = Mutex::new(());
+    /// Serializes tests that flip process-global overrides (shared with
+    /// the obs tests, which toggle the same observability switch).
+    use crate::obs::TEST_OVERRIDE_LOCK as OVERRIDE_LOCK;
 
     #[test]
     fn parallel_rows_covers_all() {
@@ -880,5 +925,37 @@ mod tests {
             assert!(stats.resident_workers >= 1, "warming spawns resident workers");
         }
         set_pool_mode(None);
+    }
+
+    #[test]
+    fn pool_stats_accumulates_idle_and_busy_when_observed() {
+        let _g = OVERRIDE_LOCK.lock().unwrap();
+        if num_threads() <= 1 {
+            return;
+        }
+        set_pool_mode(Some(PoolMode::Resident));
+        // Job A parks the workers afterwards; the gap before job B is the
+        // idle time each worker records when it wakes for B. Workers record
+        // idle BEFORE entering the claim loop, and the submitter only
+        // returns once every worker passed the barrier, so by the time
+        // job B returns the idle from the inter-job park is visible.
+        // Retried for scheduler-timing slack, not correctness.
+        crate::obs::set_enabled(Some(true));
+        let mut grew = false;
+        for _ in 0..20 {
+            parallel_shards(num_threads() * 2, |_| {
+                std::thread::sleep(std::time::Duration::from_micros(100));
+            });
+            let before = pool_stats().idle_ns;
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            parallel_shards(num_threads() * 2, |_| {});
+            if pool_stats().idle_ns > before {
+                grew = true;
+                break;
+            }
+        }
+        crate::obs::set_enabled(None);
+        set_pool_mode(None);
+        assert!(grew, "workers parked between jobs accrue idle time");
     }
 }

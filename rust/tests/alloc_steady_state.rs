@@ -106,6 +106,11 @@ fn steady_state_steps_do_not_allocate() {
     // points and must be clean too.
     pogo::util::pool::set_pool_mode(Some(pogo::util::pool::PoolMode::Resident));
     pogo::util::pool::warm_pool();
+    // Pin the POGO_OBS=off contract: with the flight recorder disabled the
+    // step/dispatch hot paths must not even read the clock, let alone
+    // allocate. (The obs-on window at the end covers the cached-handle
+    // path separately.)
+    pogo::obs::set_enabled(Some(false));
     let mut rng = Rng::seed_from_u64(7);
 
     {
@@ -152,5 +157,19 @@ fn steady_state_steps_do_not_allocate() {
         });
     }
 
+    {
+        // Obs ON: after the first step leaks its interned histogram handle
+        // (covered by warm-up), recording is clock reads + atomic adds —
+        // the enabled path must also settle to zero allocations.
+        pogo::obs::set_enabled(Some(true));
+        let mut opt: BatchedHost<f32> =
+            BatchedHost::pogo(0.05, LambdaPolicy::Half, BaseOptKind::Sgd);
+        let (mut x, g) = make_packed::<f32>(1024, 16, 16, &mut rng);
+        assert_settles("fused pogo-half f32 (16,16) B=1024 obs-on", || {
+            opt.step_batch(&mut x, &g).unwrap();
+        });
+    }
+
+    pogo::obs::set_enabled(None);
     pogo::util::pool::set_pool_mode(None);
 }

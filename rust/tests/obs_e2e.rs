@@ -1,0 +1,289 @@
+//! Flight-recorder end-to-end: Prometheus conformance of the full
+//! `/metrics` scrape and span-tree invariants of `/v2/jobs/:id/trace`.
+//!
+//! The conformance check is deliberately schema-free: it parses every
+//! line of the exposition text and asserts the format rules Prometheus
+//! itself enforces — exactly one `# HELP` and one `# TYPE` per family,
+//! every sample attributable to a declared family, histogram buckets
+//! cumulative and monotone in declaration order ending at `+Inf`, and
+//! `+Inf == _count` per series. New metrics added later are covered
+//! automatically; a malformed one fails here before a scraper sees it.
+//!
+//! This is an integration test (its own process), so it may force the
+//! flight recorder on without racing the unit suite's override tests.
+
+use pogo::coordinator::OptimizerSpec;
+use pogo::optim::{Engine, Method};
+use pogo::serve::{JobDomain, JobSpec, ProblemKind, ServeClient, ServeConfig, Server};
+use pogo::util::json::Json;
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+const WAIT: Duration = Duration::from_secs(120);
+
+fn start_server(state_dir: Option<std::path::PathBuf>) -> (Server, ServeClient) {
+    let server = Server::start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        capacity: 16,
+        state_dir,
+    })
+    .expect("server should bind an ephemeral port");
+    let client = ServeClient::new(server.addr().to_string());
+    (server, client)
+}
+
+fn spec(seed: u64) -> JobSpec {
+    let mut s = JobSpec::new(ProblemKind::Procrustes, 4, 3, 6);
+    s.name = format!("obs-e2e-{seed}");
+    s.domain = JobDomain::Real;
+    s.steps = 60;
+    s.seed = seed;
+    s.optimizer = OptimizerSpec::new(Method::Pogo, 0.05).with_engine(Engine::BatchedHost);
+    s
+}
+
+// ---------------------------------------------------------------------------
+// Prometheus text-format conformance.
+// ---------------------------------------------------------------------------
+
+/// `metric{a="x",le="0.005"} 12` → (name, labels-without-le, le, value).
+fn parse_sample(line: &str) -> (String, String, Option<String>, f64) {
+    let (metric, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("bad sample: {line}"));
+    let value: f64 = value.parse().unwrap_or_else(|_| panic!("bad value: {line}"));
+    let (name, labels) = match metric.split_once('{') {
+        Some((n, rest)) => (n, rest.strip_suffix('}').unwrap_or_else(|| panic!("{line}"))),
+        None => (metric, ""),
+    };
+    // Label values here are routes, states and `le` bounds — none contain
+    // commas or escaped quotes, so a flat split is exact.
+    let mut le = None;
+    let mut rest: Vec<&str> = Vec::new();
+    for part in labels.split(',').filter(|p| !p.is_empty()) {
+        match part.strip_prefix("le=\"") {
+            Some(v) => le = Some(v.trim_end_matches('"').to_string()),
+            None => rest.push(part),
+        }
+    }
+    (name.to_string(), rest.join(","), le, value)
+}
+
+/// Assert the exposition rules over the whole scrape; return the set of
+/// `histogram`-typed family names and each series' `_count` value.
+fn assert_prometheus_conformant(text: &str) -> (Vec<String>, BTreeMap<(String, String), f64>) {
+    let mut help: BTreeMap<&str, usize> = BTreeMap::new();
+    let mut types: BTreeMap<&str, (&str, usize)> = BTreeMap::new();
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split_whitespace().next().expect("HELP names a metric");
+            *help.entry(name).or_insert(0) += 1;
+        } else if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().expect("TYPE names a metric");
+            let kind = it.next().expect("TYPE declares a kind");
+            let e = types.entry(name).or_insert((kind, 0));
+            assert_eq!(e.0, kind, "{name}: conflicting TYPE declarations");
+            e.1 += 1;
+        }
+    }
+    for (name, n) in &help {
+        assert_eq!(*n, 1, "{name}: {n} HELP lines");
+        assert!(types.contains_key(name), "{name}: HELP without TYPE");
+    }
+    for (name, (_, n)) in &types {
+        assert_eq!(*n, 1, "{name}: {n} TYPE lines");
+        assert!(help.contains_key(name), "{name}: TYPE without HELP");
+    }
+
+    // Every sample must belong to a declared family; histogram suffixes
+    // resolve to their base name.
+    let family_of = |metric: &str| -> Option<String> {
+        for suffix in ["_bucket", "_sum", "_count"] {
+            if let Some(base) = metric.strip_suffix(suffix) {
+                if types.get(base).is_some_and(|(k, _)| *k == "histogram") {
+                    return Some(base.to_string());
+                }
+            }
+        }
+        types.contains_key(metric).then(|| metric.to_string())
+    };
+
+    // (family, labels) → in-order cumulative bucket values / count value.
+    let mut buckets: BTreeMap<(String, String), Vec<(Option<String>, f64)>> = BTreeMap::new();
+    let mut counts: BTreeMap<(String, String), f64> = BTreeMap::new();
+    for line in text.lines() {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (name, labels, le, value) = parse_sample(line);
+        let family = family_of(&name)
+            .unwrap_or_else(|| panic!("sample {name} has no HELP/TYPE declaration"));
+        if name == format!("{family}_bucket") {
+            buckets.entry((family, labels)).or_default().push((le, value));
+        } else if name == format!("{family}_count") {
+            counts.insert((family, labels), value);
+        }
+    }
+    for ((family, labels), series) in &buckets {
+        let mut last = 0.0;
+        for (le, v) in series {
+            assert!(le.is_some(), "{family}{{{labels}}}: bucket without le");
+            assert!(*v >= last, "{family}{{{labels}}}: non-monotone bucket {v} after {last}");
+            last = *v;
+        }
+        let (last_le, inf) = series.last().expect("non-empty series");
+        assert_eq!(last_le.as_deref(), Some("+Inf"), "{family}{{{labels}}}");
+        let count = counts
+            .get(&(family.clone(), labels.clone()))
+            .unwrap_or_else(|| panic!("{family}{{{labels}}}: buckets without _count"));
+        assert_eq!(*inf, *count, "{family}{{{labels}}}: +Inf bucket != _count");
+    }
+
+    let hist_families =
+        types.iter().filter(|(_, (k, _))| *k == "histogram").map(|(n, _)| n.to_string()).collect();
+    (hist_families, counts)
+}
+
+#[test]
+fn metrics_scrape_is_prometheus_conformant_and_histograms_fill() {
+    pogo::obs::set_enabled(Some(true));
+    let dir = std::env::temp_dir().join(format!("pogo_obs_e2e_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let (server, client) = start_server(Some(dir.clone()));
+
+    // One checkpointed job exercises queue wait, run time, step timing,
+    // session apply and checkpoint save in a single pass.
+    let mut job = spec(51);
+    job.checkpoint_every = 20;
+    let id = client.submit(&job).expect("submit");
+    client.wait_result(id, WAIT).expect("result");
+
+    // A request's duration is recorded after its response is written, so
+    // warm the /metrics route with one scrape and parse the second.
+    client.metrics().expect("warm-up scrape");
+    let text = client.metrics().expect("metrics");
+    let (hist_families, counts) = assert_prometheus_conformant(&text);
+
+    // The flight recorder exports its full ladder set (ISSUE floor: >= 4).
+    for family in [
+        "pogo_serve_http_request_duration_seconds",
+        "pogo_serve_job_queue_wait_seconds",
+        "pogo_serve_job_run_seconds",
+        "pogo_checkpoint_io_seconds",
+        "pogo_step_duration_seconds",
+        "pogo_session_apply_seconds",
+        "pogo_pool_dispatch_wait_seconds",
+        "pogo_pool_run_seconds",
+    ] {
+        assert!(hist_families.iter().any(|f| f == family), "{family} missing:\n{text}");
+    }
+    assert!(hist_families.len() >= 4, "{hist_families:?}");
+
+    // And the job actually filled them: at least one observation each.
+    let total = |family: &str| -> f64 {
+        counts.iter().filter(|((f, _), _)| f == family).map(|(_, v)| *v).sum()
+    };
+    assert!(total("pogo_serve_job_queue_wait_seconds") >= 1.0, "{text}");
+    assert!(total("pogo_serve_job_run_seconds") >= 1.0, "{text}");
+    assert!(total("pogo_step_duration_seconds") >= 1.0, "{text}");
+    assert!(total("pogo_session_apply_seconds") >= 1.0, "{text}");
+    assert!(total("pogo_checkpoint_io_seconds") >= 1.0, "checkpointed job saved:\n{text}");
+    // The scrape request itself was timed under its normalized route.
+    let scrape = counts
+        .iter()
+        .filter(|((f, l), _)| {
+            f == "pogo_serve_http_request_duration_seconds" && l.contains("route=\"/metrics\"")
+        })
+        .map(|(_, v)| *v)
+        .sum::<f64>();
+    assert!(scrape >= 1.0, "{text}");
+
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Per-job trace endpoint.
+// ---------------------------------------------------------------------------
+
+/// Recursively assert the self/total invariant and count spans.
+fn check_node(node: &Json) -> usize {
+    let dur = node.get("dur_us").as_f64().expect("dur_us") as i64;
+    let self_us = node.get("self_us").as_f64().expect("self_us") as i64;
+    let children = node.get("children").as_arr().unwrap_or(&[]);
+    let child_sum: i64 =
+        children.iter().map(|c| c.get("dur_us").as_f64().unwrap() as i64).sum();
+    let name = node.get("name").as_str().unwrap_or("?");
+    assert!(child_sum <= dur, "{name}: children ({child_sum} us) exceed span ({dur} us)");
+    assert_eq!(self_us, dur - child_sum, "{name}: self time is total minus children");
+    1 + children.iter().map(check_node).sum::<usize>()
+}
+
+#[test]
+fn terminal_job_trace_nests_and_accounts_for_wall_time() {
+    pogo::obs::set_enabled(Some(true));
+    let (server, client) = start_server(None);
+    let id = client.submit(&spec(52)).expect("submit");
+    client.wait_result(id, WAIT).expect("result");
+
+    let (code, _, body) = pogo::serve::http::request_full(
+        &server.addr().to_string(),
+        "GET",
+        &format!("/v2/jobs/{id}/trace"),
+        None,
+        &[],
+    )
+    .expect("trace request");
+    assert_eq!(code, 200, "{body}");
+    let trace = Json::parse(&body).expect("trace JSON");
+    assert_eq!(trace.get("id").as_f64(), Some(id as f64));
+    assert_eq!(trace.get("state").as_str(), Some("done"));
+
+    let roots = trace.get("spans").as_arr().expect("spans");
+    assert_eq!(roots.len(), 1, "one job root: {body}");
+    let job = &roots[0];
+    assert_eq!(job.get("name").as_str(), Some("job"));
+    let total_spans: usize = check_node(job);
+    assert!(total_spans >= 3, "expected a real span tree, got {total_spans}: {body}");
+    assert_eq!(total_spans, trace.get("span_count").as_usize().expect("span_count"));
+
+    // The lifecycle segments under the root cover its wall time: admission
+    // + queue wait + run account for the job span within 5%.
+    let children = job.get("children").as_arr().expect("children");
+    let seg = |name: &str| -> f64 {
+        children
+            .iter()
+            .find(|c| c.get("name").as_str() == Some(name))
+            .unwrap_or_else(|| panic!("missing {name} segment: {body}"))
+            .get("dur_us")
+            .as_f64()
+            .unwrap()
+    };
+    let covered = seg("admit") + seg("queued") + seg("run");
+    let wall = job.get("dur_us").as_f64().expect("job dur");
+    assert!(
+        (covered - wall).abs() <= 0.05 * wall.max(1.0),
+        "admit+queued+run = {covered} us vs job = {wall} us"
+    );
+
+    // The run segment carries the engine-side detail (steps windows).
+    let run = children.iter().find(|c| c.get("name").as_str() == Some("run")).unwrap();
+    let run_children = run.get("children").as_arr().unwrap_or(&[]);
+    assert!(
+        run_children.iter().any(|c| c.get("name").as_str() == Some("steps")),
+        "run should nest a steps span: {body}"
+    );
+
+    // Unknown ids answer 404, not an empty trace.
+    let (code, _, _) = pogo::serve::http::request_full(
+        &server.addr().to_string(),
+        "GET",
+        "/v2/jobs/999999/trace",
+        None,
+        &[],
+    )
+    .expect("trace request");
+    assert_eq!(code, 404);
+    server.shutdown();
+}

@@ -208,6 +208,7 @@ fn restart_recovers_and_resumes_checkpointed_jobs() {
             cancel: Some(&cancel),
             on_step: Some(&on_step),
             checkpoint_path: Some(ckpt.clone()),
+            ..Default::default()
         };
         let JobOutcome::Cancelled(_) = run_job(&job, &ctl).expect("interrupted run") else {
             panic!("expected the simulated crash to stop mid-run")
@@ -401,6 +402,7 @@ fn restart_resumes_complex_jobs_from_c64_checkpoints() {
             cancel: Some(&cancel),
             on_step: Some(&on_step),
             checkpoint_path: Some(ckpt.clone()),
+            ..Default::default()
         };
         let JobOutcome::Cancelled(_) = run_job(&job, &ctl).expect("interrupted run") else {
             panic!("expected the simulated crash to stop mid-run")

@@ -54,9 +54,11 @@ impl Metadata {
     }
 }
 
-/// One log record: metadata plus preformatted arguments.
+/// One log record: metadata, the emitting module (`target`), and
+/// preformatted arguments.
 pub struct Record<'a> {
     metadata: Metadata,
+    target: &'static str,
     args: fmt::Arguments<'a>,
 }
 
@@ -67,6 +69,12 @@ impl<'a> Record<'a> {
 
     pub fn metadata(&self) -> &Metadata {
         &self.metadata
+    }
+
+    /// The module that emitted this record (`module_path!` at the macro
+    /// call site — same as the real facade's default target).
+    pub fn target(&self) -> &'static str {
+        self.target
     }
 
     pub fn args(&self) -> &fmt::Arguments<'a> {
@@ -118,12 +126,12 @@ pub fn max_level() -> LevelFilter {
 
 /// Macro plumbing — not public API.
 #[doc(hidden)]
-pub fn __log(level: Level, args: fmt::Arguments) {
+pub fn __log(level: Level, target: &'static str, args: fmt::Arguments) {
     if (level as usize) > (max_level() as usize) {
         return;
     }
     if let Some(logger) = LOGGER.get().copied() {
-        let record = Record { metadata: Metadata { level }, args };
+        let record = Record { metadata: Metadata { level }, target, args };
         if logger.enabled(&record.metadata) {
             logger.log(&record);
         }
@@ -132,27 +140,27 @@ pub fn __log(level: Level, args: fmt::Arguments) {
 
 #[macro_export]
 macro_rules! error {
-    ($($arg:tt)+) => { $crate::__log($crate::Level::Error, format_args!($($arg)+)) };
+    ($($arg:tt)+) => { $crate::__log($crate::Level::Error, module_path!(), format_args!($($arg)+)) };
 }
 
 #[macro_export]
 macro_rules! warn {
-    ($($arg:tt)+) => { $crate::__log($crate::Level::Warn, format_args!($($arg)+)) };
+    ($($arg:tt)+) => { $crate::__log($crate::Level::Warn, module_path!(), format_args!($($arg)+)) };
 }
 
 #[macro_export]
 macro_rules! info {
-    ($($arg:tt)+) => { $crate::__log($crate::Level::Info, format_args!($($arg)+)) };
+    ($($arg:tt)+) => { $crate::__log($crate::Level::Info, module_path!(), format_args!($($arg)+)) };
 }
 
 #[macro_export]
 macro_rules! debug {
-    ($($arg:tt)+) => { $crate::__log($crate::Level::Debug, format_args!($($arg)+)) };
+    ($($arg:tt)+) => { $crate::__log($crate::Level::Debug, module_path!(), format_args!($($arg)+)) };
 }
 
 #[macro_export]
 macro_rules! trace {
-    ($($arg:tt)+) => { $crate::__log($crate::Level::Trace, format_args!($($arg)+)) };
+    ($($arg:tt)+) => { $crate::__log($crate::Level::Trace, module_path!(), format_args!($($arg)+)) };
 }
 
 #[cfg(test)]
@@ -191,5 +199,31 @@ mod tests {
         info!("counted {}", 1);
         debug!("not counted");
         assert_eq!(HITS.load(Ordering::Relaxed), before + 1);
+    }
+
+    #[test]
+    fn records_carry_the_call_site_module() {
+        struct Probe;
+        static SEEN: AtomicUsize = AtomicUsize::new(0);
+        impl Log for Probe {
+            fn enabled(&self, _m: &Metadata) -> bool {
+                true
+            }
+            fn log(&self, r: &Record) {
+                if r.target().ends_with("::tests") {
+                    SEEN.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            fn flush(&self) {}
+        }
+        static PROBE: Probe = Probe;
+        // Either this test's Probe or the sibling test's Counter is the
+        // installed logger (first set_logger wins); only assert when we
+        // won the race.
+        if set_logger(&PROBE).is_ok() {
+            set_max_level(LevelFilter::Info);
+            info!("probe");
+            assert_eq!(SEEN.load(Ordering::Relaxed), 1);
+        }
     }
 }
