@@ -1,0 +1,161 @@
+//! Load generator for the federated front door: two in-process
+//! `pogo serve` backends behind one `pogo front`, hammered by 1/4/16
+//! concurrent v2 clients submitting B = 1024 POGO jobs and streaming to
+//! `done`. Every level is measured twice — through the front and
+//! directly against a single backend — so `BENCH_front.json` quantifies
+//! exactly what the extra hop (routing, placement table, SSE relay)
+//! costs in jobs/s and p50/p95 latency.
+//!
+//! Redirect: `POGO_BENCH_JSON_FRONT`; `POGO_BENCH_QUICK=1` shrinks
+//! budgets for CI's `front-smoke` job, which gates on the file being
+//! well-formed.
+
+use pogo::bench::FrontLoadRow;
+use pogo::coordinator::OptimizerSpec;
+use pogo::federate::{Front, FrontAdmission, FrontConfig};
+use pogo::optim::{Engine, Method};
+use pogo::serve::{JobSpec, ProblemKind, ServeClient, ServeConfig, Server};
+use pogo::util::Stopwatch;
+use std::sync::Mutex;
+use std::time::Duration;
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn job_spec(client: usize, j: usize, steps: usize, tag: &str) -> JobSpec {
+    let mut spec = JobSpec::new(ProblemKind::Quartic, 1024, 3, 3);
+    spec.name = format!("front-load-{tag}-c{client}-j{j}");
+    spec.steps = steps;
+    spec.seed = (client as u64) * 2003 + j as u64;
+    spec.optimizer = OptimizerSpec::new(Method::Pogo, 0.05).with_engine(Engine::BatchedHost);
+    spec
+}
+
+/// One concurrency level against `addr` (a front or a backend — both
+/// speak the same v2 surface). Returns (wall_s, sorted latency ms).
+fn run_level(
+    addr: &str,
+    clients: usize,
+    jobs_per_client: usize,
+    steps: usize,
+    tag: &str,
+) -> (f64, Vec<f64>) {
+    let latencies: Mutex<Vec<f64>> = Mutex::new(Vec::new());
+    let wall = Stopwatch::start();
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let addr = addr.to_string();
+            let latencies = &latencies;
+            scope.spawn(move || {
+                let client = ServeClient::new(addr);
+                for j in 0..jobs_per_client {
+                    let spec = job_spec(c, j, steps, tag);
+                    let t = Stopwatch::start();
+                    let id = client.submit_v2(&spec).expect("submit");
+                    client
+                        .wait_result_v2(id, Duration::from_secs(600))
+                        .expect("job should reach done");
+                    latencies.lock().unwrap().push(t.seconds() * 1e3);
+                }
+            });
+        }
+    });
+    let wall_s = wall.seconds();
+    let mut lat = latencies.into_inner().unwrap();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (wall_s, lat)
+}
+
+fn main() {
+    pogo::util::logging::init();
+    let quick = std::env::var("POGO_BENCH_QUICK").is_ok();
+    let steps = if quick { 5 } else { 50 };
+    let jobs_per_client = if quick { 2 } else { 4 };
+    let workers = pogo::util::pool::num_threads().clamp(2, 4);
+
+    let b1 = Server::start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers,
+        capacity: 1024,
+        state_dir: None,
+    })
+    .expect("backend 1");
+    let b2 = Server::start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers,
+        capacity: 1024,
+        state_dir: None,
+    })
+    .expect("backend 2");
+    // The direct baseline runs against its own, non-federated backend so
+    // neither path's queue depth pollutes the other's numbers.
+    let direct = Server::start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers,
+        capacity: 1024,
+        state_dir: None,
+    })
+    .expect("direct baseline backend");
+    let front = Front::start(FrontConfig {
+        addr: "127.0.0.1:0".to_string(),
+        backends: vec![b1.addr().to_string(), b2.addr().to_string()],
+        probe_interval: Duration::from_millis(500),
+        fail_after: 2,
+        admission: FrontAdmission::default(),
+        state_dir: None,
+    })
+    .expect("front over two backends");
+    let front_addr = front.addr().to_string();
+    let direct_addr = direct.addr().to_string();
+    println!(
+        "front_load: front on {front_addr} over 2 backends ({workers} workers each), \
+         B=1024 POGO[batched] x {steps} steps"
+    );
+
+    let mut rows: Vec<FrontLoadRow> = Vec::new();
+    for &clients in &[1usize, 4, 16] {
+        let (front_wall, front_lat) =
+            run_level(&front_addr, clients, jobs_per_client, steps, "front");
+        let (direct_wall, direct_lat) =
+            run_level(&direct_addr, clients, jobs_per_client, steps, "direct");
+        let jobs = clients * jobs_per_client;
+        let row = FrontLoadRow {
+            clients,
+            jobs,
+            front_jobs_per_s: jobs as f64 / front_wall,
+            front_p50_ms: percentile(&front_lat, 0.50),
+            front_p95_ms: percentile(&front_lat, 0.95),
+            direct_jobs_per_s: jobs as f64 / direct_wall,
+            direct_p50_ms: percentile(&direct_lat, 0.50),
+            direct_p95_ms: percentile(&direct_lat, 0.95),
+        };
+        println!(
+            "  {:>2} client(s): {:>4} jobs  front {:7.2} jobs/s (p50 {:6.1} / p95 {:6.1} ms)  \
+             direct {:7.2} jobs/s (p50 {:6.1} / p95 {:6.1} ms)",
+            row.clients,
+            row.jobs,
+            row.front_jobs_per_s,
+            row.front_p50_ms,
+            row.front_p95_ms,
+            row.direct_jobs_per_s,
+            row.direct_p50_ms,
+            row.direct_p95_ms
+        );
+        rows.push(row);
+    }
+
+    let default_json = pogo::repo_root().join("BENCH_front.json");
+    match pogo::bench::write_front_json(&default_json, &rows) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("failed to write BENCH_front.json: {e}"),
+    }
+    front.shutdown();
+    b1.shutdown();
+    b2.shutdown();
+    direct.shutdown();
+}

@@ -357,6 +357,64 @@ pub fn write_serve_json(
     serve_report(rows).write("POGO_BENCH_JSON_SERVE", default_path)
 }
 
+/// One row of the federation benchmark (`BENCH_front.json`): end-to-end
+/// v2 job throughput and latency at one client concurrency, measured
+/// twice — through a `pogo front` door and directly against a backend —
+/// so the report quantifies the proxy hop.
+#[derive(Clone, Debug)]
+pub struct FrontLoadRow {
+    /// Concurrent clients submitting jobs.
+    pub clients: usize,
+    /// Total jobs completed at this concurrency (per path).
+    pub jobs: usize,
+    /// Jobs/s through the front door.
+    pub front_jobs_per_s: f64,
+    /// Median submit→done latency through the front, milliseconds.
+    pub front_p50_ms: f64,
+    /// 95th-percentile latency through the front, milliseconds.
+    pub front_p95_ms: f64,
+    /// Jobs/s straight against one backend (no front hop).
+    pub direct_jobs_per_s: f64,
+    /// Median direct latency, milliseconds.
+    pub direct_p50_ms: f64,
+    /// 95th-percentile direct latency, milliseconds.
+    pub direct_p95_ms: f64,
+}
+
+/// Machine-readable federation load report. CI's `front-smoke` job gates
+/// on this file being well-formed (rows present, positive throughput).
+pub fn front_json(rows: &[FrontLoadRow]) -> crate::util::json::Json {
+    front_report(rows).to_json()
+}
+
+fn front_report(rows: &[FrontLoadRow]) -> BenchReport {
+    use crate::util::json::Json;
+    BenchReport::new("jobs_per_s_and_latency_ms").field(
+        "rows",
+        Json::arr(rows.iter().map(|r| {
+            Json::obj(vec![
+                ("clients", Json::num(r.clients as f64)),
+                ("jobs", Json::num(r.jobs as f64)),
+                ("front_jobs_per_s", Json::num(r.front_jobs_per_s)),
+                ("front_p50_ms", Json::num(r.front_p50_ms)),
+                ("front_p95_ms", Json::num(r.front_p95_ms)),
+                ("direct_jobs_per_s", Json::num(r.direct_jobs_per_s)),
+                ("direct_p50_ms", Json::num(r.direct_p50_ms)),
+                ("direct_p95_ms", Json::num(r.direct_p95_ms)),
+            ])
+        })),
+    )
+}
+
+/// `BENCH_front.json` (federated front-door load; redirect:
+/// `POGO_BENCH_JSON_FRONT`). Emitted by `cargo bench --bench front_load`.
+pub fn write_front_json(
+    default_path: &std::path::Path,
+    rows: &[FrontLoadRow],
+) -> std::io::Result<std::path::PathBuf> {
+    front_report(rows).write("POGO_BENCH_JSON_FRONT", default_path)
+}
+
 /// One row of the artifact I/O benchmark (`BENCH_artifact.json`): how
 /// fast one artifact operation (`seal`, `encode`, `decode`, `verify`,
 /// `store`) moves one payload size.

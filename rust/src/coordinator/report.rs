@@ -5,7 +5,8 @@
 //!
 //! Also picks up the machine-readable benchmark reports —
 //! `BENCH_scale.json`, `BENCH_born.json`, `BENCH_kernels.json`,
-//! `BENCH_pool.json`, `BENCH_serve.json` and `BENCH_artifact.json` —
+//! `BENCH_pool.json`, `BENCH_serve.json`, `BENCH_front.json` and
+//! `BENCH_artifact.json` —
 //! from the results directory or the repo root,
 //! so one `pogo report` shows training series and engine/daemon
 //! performance side by side, and (with `--artifact-dir`) summarizes a
@@ -171,6 +172,7 @@ pub fn bench_report_lines(dir: &Path) -> Vec<String> {
             "BENCH_kernels.json",
             "BENCH_pool.json",
             "BENCH_serve.json",
+            "BENCH_front.json",
             "BENCH_artifact.json",
         ] {
             let path = d.join(name);
@@ -206,6 +208,20 @@ fn summarize_bench(name: &str, path: &Path, j: &Json) -> Vec<String> {
                 ));
             }
             out.push(line);
+        }
+    } else if name == "BENCH_front.json" {
+        for row in j.get("rows").as_arr().unwrap_or(&[]) {
+            out.push(format!(
+                "  {:>3} client(s): front {:8.2} jobs/s (p50 {:7.1} / p95 {:7.1} ms)   \
+                 direct {:8.2} jobs/s (p50 {:7.1} / p95 {:7.1} ms)",
+                row.get("clients").as_usize().unwrap_or(0),
+                row.get("front_jobs_per_s").as_f64().unwrap_or(f64::NAN),
+                row.get("front_p50_ms").as_f64().unwrap_or(f64::NAN),
+                row.get("front_p95_ms").as_f64().unwrap_or(f64::NAN),
+                row.get("direct_jobs_per_s").as_f64().unwrap_or(f64::NAN),
+                row.get("direct_p50_ms").as_f64().unwrap_or(f64::NAN),
+                row.get("direct_p95_ms").as_f64().unwrap_or(f64::NAN),
+            ));
         }
     } else if name == "BENCH_artifact.json" {
         for row in j.get("rows").as_arr().unwrap_or(&[]) {
@@ -429,6 +445,16 @@ mod tests {
         )
         .unwrap();
         std::fs::write(
+            d.join("BENCH_front.json"),
+            r#"{"unit": "jobs_per_s_and_latency_ms",
+                "rows": [{"clients": 4, "jobs": 16,
+                          "front_jobs_per_s": 10.2, "front_p50_ms": 44.0,
+                          "front_p95_ms": 101.0,
+                          "direct_jobs_per_s": 11.5, "direct_p50_ms": 40.5,
+                          "direct_p95_ms": 92.0}]}"#,
+        )
+        .unwrap();
+        std::fs::write(
             d.join("BENCH_artifact.json"),
             r#"{"unit": "ms_and_mib_per_s",
                 "rows": [{"op": "seal", "payload_mb": 8.0, "ms": 12.5,
@@ -456,6 +482,9 @@ mod tests {
         assert!(text.contains("jobs/s"), "{text}");
         assert!(text.contains("B=4096"), "{text}");
         assert!(text.contains("2.50x"), "{text}");
+        assert!(text.contains("BENCH_front.json"), "{text}");
+        assert!(text.contains("front    10.20 jobs/s"), "{text}");
+        assert!(text.contains("direct    11.50 jobs/s"), "{text}");
         assert!(text.contains("BENCH_artifact.json"), "{text}");
         assert!(text.contains("seal"), "{text}");
         assert!(text.contains("MiB/s"), "{text}");

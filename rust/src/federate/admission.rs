@@ -1,0 +1,139 @@
+//! Split admission: the global half of quota enforcement.
+//!
+//! Each backend still enforces its *local* `Admission` caps; the front
+//! door enforces per-tenant quotas and the cost budget **across all
+//! shards**, using its placement [`Table`](super::table::Table) as the
+//! ledger. Without this, a tenant with quota N could hold N jobs on
+//! every backend. The decision is pure bookkeeping here; the front
+//! refreshes stale ledger entries (lazily, only when a rejection is on
+//! the line) before trusting a reject.
+
+use super::table::Table;
+use crate::serve::queue;
+
+/// Global caps, mirroring the per-backend `serve::queue::Admission`
+/// semantics: `0` = unlimited.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FrontAdmission {
+    /// Max active (queued + running) jobs per tenant, summed across all
+    /// backends.
+    pub tenant_quota: usize,
+    /// Max outstanding `B·p·n·steps` cost units across all backends.
+    pub cost_cap: u64,
+}
+
+/// Why the front door refused a submission.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Refusal {
+    Quota { tenant: String, active: usize, quota: usize },
+    Cost { outstanding: u64, job: u64, cap: u64 },
+}
+
+impl std::fmt::Display for Refusal {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Refusal::Quota { tenant, active, quota } => write!(
+                f,
+                "tenant '{tenant}' has {active} active jobs across the federation \
+                 (global quota {quota})"
+            ),
+            Refusal::Cost { outstanding, job, cap } => write!(
+                f,
+                "job cost {job} would push the federation's outstanding cost past \
+                 {cap} (currently {outstanding})"
+            ),
+        }
+    }
+}
+
+impl FrontAdmission {
+    /// Check `tenant`'s submission of a job costing `cost` against the
+    /// ledger. Callers should refresh the table first when this rejects
+    /// — a stale active entry must not 429 a live client.
+    pub fn check(&self, table: &Table, tenant: &str, cost: u64) -> Result<(), Refusal> {
+        if self.tenant_quota > 0 {
+            let active = table.active_for(tenant).len();
+            if active >= self.tenant_quota {
+                return Err(Refusal::Quota {
+                    tenant: tenant.to_string(),
+                    active,
+                    quota: self.tenant_quota,
+                });
+            }
+        }
+        if self.cost_cap > 0 {
+            let outstanding = table.outstanding_cost();
+            if outstanding.saturating_add(cost) > self.cost_cap {
+                return Err(Refusal::Cost { outstanding, job: cost, cap: self.cost_cap });
+            }
+        }
+        Ok(())
+    }
+
+    /// The `Retry-After` seconds for a refusal — the same
+    /// histogram-derived estimate the backends use (falling back to the
+    /// pending-count heuristic until this process has observed jobs).
+    pub fn retry_after_s(&self, table: &Table, workers_up: usize) -> u64 {
+        let (_, active) = table.counts();
+        queue::retry_after_hint(active, workers_up.max(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::federate::table::Placement;
+
+    fn seed(table: &Table, id: u64, tenant: &str, cost: u64) {
+        table.insert(Placement {
+            id,
+            node: "a:1".to_string(),
+            tenant: tenant.to_string(),
+            cost,
+            spec: String::new(),
+            resubmitted: false,
+            terminal: false,
+        });
+    }
+
+    #[test]
+    fn quota_counts_across_every_node() {
+        let table = Table::open(None).unwrap();
+        seed(&table, 1, "alice", 10);
+        seed(&table, 2, "alice", 10);
+        // Spread over two nodes: still two active jobs for alice.
+        table.reassign(2, "b:2");
+        let adm = FrontAdmission { tenant_quota: 2, cost_cap: 0 };
+        assert!(matches!(
+            adm.check(&table, "alice", 10),
+            Err(Refusal::Quota { active: 2, quota: 2, .. })
+        ));
+        assert!(adm.check(&table, "bob", 10).is_ok());
+        // A terminal job frees the slot.
+        table.mark_terminal(1);
+        assert!(adm.check(&table, "alice", 10).is_ok());
+    }
+
+    #[test]
+    fn cost_cap_is_federation_wide() {
+        let table = Table::open(None).unwrap();
+        seed(&table, 1, "alice", 600);
+        seed(&table, 2, "bob", 300);
+        let adm = FrontAdmission { tenant_quota: 0, cost_cap: 1000 };
+        assert!(adm.check(&table, "carol", 100).is_ok());
+        assert_eq!(
+            adm.check(&table, "carol", 200),
+            Err(Refusal::Cost { outstanding: 900, job: 200, cap: 1000 })
+        );
+    }
+
+    #[test]
+    fn zero_caps_admit_everything() {
+        let table = Table::open(None).unwrap();
+        for i in 0..50 {
+            seed(&table, i, "alice", u64::MAX / 64);
+        }
+        let adm = FrontAdmission::default();
+        assert!(adm.check(&table, "alice", u64::MAX).is_ok());
+    }
+}

@@ -1,0 +1,870 @@
+//! `pogo front` — the federated front door daemon.
+//!
+//! Speaks the existing v2 wire contract to clients and fans out to N
+//! backend `pogo serve` daemons:
+//!
+//! - **control plane** — a [`Registry`] seeded from `--backend`, probed
+//!   every `probe_interval` (with the shared transport-retry helper);
+//!   `fail_after` consecutive failures turn a node `Down`, which evicts
+//!   its pooled connections and triggers re-listing of its queued jobs;
+//! - **data plane** — submissions place by rendezvous hashing
+//!   ([`super::ring`]) with the id pinned via `X-Pogo-Job-Id`; reads
+//!   route by the placement [`Table`] (hash-ring fallback for ids this
+//!   replica never saw, so every front replica answers for every job);
+//!   the SSE relay forwards event blocks byte-for-bit and reconnects —
+//!   deduplicating replayed steps — when a backend drops mid-stream;
+//! - **split admission** — global per-tenant quota and cost caps over
+//!   the placement table, refreshed lazily before any rejection.
+//!
+//! The v1 surface is deliberately **not** federated: v2 is the
+//! federation surface (it carries the durable series results and the
+//! event stream); v1 stays a single-daemon contract.
+
+use super::admission::{FrontAdmission, Refusal};
+use super::metrics::FrontMetrics;
+use super::proxy::{passthrough, ConnPool};
+use super::registry::{NodeState, Probe, Registry};
+use super::ring;
+use super::table::{Placement, Table};
+use crate::serve::client::retry_transport;
+use crate::serve::http::{self, ReadError, Request, Response};
+use crate::serve::job::JobSpec;
+use crate::serve::problem;
+use crate::serve::queue::JobId;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Max simultaneous connection-handler threads (same rationale as the
+/// backend's cap).
+const MAX_CONNS: usize = 64;
+
+/// How long one SSE relay keeps trying (reconnects included) before
+/// giving up on a terminal event.
+const SSE_RELAY_DEADLINE: Duration = Duration::from_secs(600);
+
+/// Pause between SSE reconnect attempts while a backend is down and its
+/// jobs re-list.
+const SSE_RECONNECT_PAUSE: Duration = Duration::from_millis(200);
+
+/// Probe attempts per node per tick (rides the shared
+/// [`retry_transport`] helper — probes are idempotent GETs).
+const PROBE_ATTEMPTS: u32 = 2;
+
+/// Bound on id-collision retries at submit time (each 409 walks the id
+/// forward past backend-locally-assigned ids).
+const MAX_ID_RETRIES: u32 = 32;
+
+/// Front-door configuration (`pogo front` flags map 1:1).
+#[derive(Clone, Debug)]
+pub struct FrontConfig {
+    /// `HOST:PORT`; port 0 binds an ephemeral port (tests/benches).
+    pub addr: String,
+    /// Backend `pogo serve` addresses (`--backend a:7070,b:7070`).
+    pub backends: Vec<String>,
+    pub probe_interval: Duration,
+    /// Consecutive probe failures before a backend is `Down`.
+    pub fail_after: u32,
+    /// Global (cross-shard) admission caps.
+    pub admission: FrontAdmission,
+    /// Placement-table persistence directory.
+    pub state_dir: Option<PathBuf>,
+}
+
+impl Default for FrontConfig {
+    fn default() -> Self {
+        FrontConfig {
+            addr: "127.0.0.1:7071".to_string(),
+            backends: Vec::new(),
+            probe_interval: Duration::from_secs(1),
+            fail_after: 2,
+            admission: FrontAdmission::default(),
+            state_dir: None,
+        }
+    }
+}
+
+struct FrontState {
+    cfg: FrontConfig,
+    registry: Registry,
+    table: Table,
+    pool: ConnPool,
+    metrics: FrontMetrics,
+    next_id: AtomicU64,
+    stop: Arc<AtomicBool>,
+}
+
+/// A running front door. `shutdown` stops the accept and probe loops.
+pub struct Front {
+    state: Arc<FrontState>,
+    local: SocketAddr,
+    accept: Option<std::thread::JoinHandle<()>>,
+    probe: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Front {
+    pub fn start(cfg: FrontConfig) -> Result<Front> {
+        anyhow::ensure!(!cfg.backends.is_empty(), "pogo front needs at least one --backend");
+        let table = Table::open(cfg.state_dir.as_deref())?;
+        let next_id = AtomicU64::new(table.next_id_floor());
+        let registry = Registry::new(&cfg.backends, cfg.fail_after);
+        let stop = Arc::new(AtomicBool::new(false));
+        let state = Arc::new(FrontState {
+            registry,
+            table,
+            pool: ConnPool::new(),
+            metrics: FrontMetrics::new(),
+            next_id,
+            stop: stop.clone(),
+            cfg,
+        });
+
+        let listener = TcpListener::bind(&state.cfg.addr)
+            .with_context(|| format!("binding {}", state.cfg.addr))?;
+        let local = listener.local_addr()?;
+
+        let st = state.clone();
+        let accept = std::thread::Builder::new()
+            .name("pogo-front-accept".to_string())
+            .spawn(move || {
+                let active = Arc::new(AtomicUsize::new(0));
+                for conn in listener.incoming() {
+                    if st.stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match conn {
+                        Ok(mut stream) => {
+                            if active.load(Ordering::Relaxed) >= MAX_CONNS {
+                                let resp = Response::error(503, "too many connections");
+                                http::write_response(&mut stream, &resp).ok();
+                                continue;
+                            }
+                            active.fetch_add(1, Ordering::Relaxed);
+                            let st = st.clone();
+                            let active = active.clone();
+                            let spawned = std::thread::Builder::new()
+                                .name("pogo-front-conn".to_string())
+                                .spawn(move || {
+                                    handle_conn(stream, &st);
+                                    active.fetch_sub(1, Ordering::Relaxed);
+                                });
+                            if let Err(e) = spawned {
+                                active.fetch_sub(1, Ordering::Relaxed);
+                                log::warn!("failed to spawn front handler: {e}");
+                            }
+                        }
+                        Err(e) => log::warn!("front accept error: {e}"),
+                    }
+                }
+            })
+            .context("spawning front accept loop")?;
+
+        let st = state.clone();
+        let probe = std::thread::Builder::new()
+            .name("pogo-front-probe".to_string())
+            .spawn(move || probe_loop(&st))
+            .context("spawning front probe loop")?;
+
+        log::info!(
+            "pogo front listening on http://{local} over {} backends",
+            state.cfg.backends.len()
+        );
+        Ok(Front { state, local, accept: Some(accept), probe: Some(probe) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Force one probe + re-list pass right now (tests use this instead
+    /// of waiting out the probe interval).
+    pub fn probe_now(&self) {
+        probe_tick(&self.state);
+    }
+
+    /// Block until the accept loop exits (the daemon entry point parks
+    /// here; absent signal handling a kill stops the process, and a
+    /// restart with the same `--state-dir` keeps routing its placements).
+    pub fn wait(mut self) {
+        if let Some(h) = self.accept.take() {
+            h.join().ok();
+        }
+        if let Some(h) = self.probe.take() {
+            h.join().ok();
+        }
+    }
+
+    pub fn shutdown(mut self) {
+        self.state.stop.store(true, Ordering::SeqCst);
+        TcpStream::connect(self.local).ok();
+        if let Some(h) = self.accept.take() {
+            h.join().ok();
+        }
+        if let Some(h) = self.probe.take() {
+            h.join().ok();
+        }
+    }
+}
+
+impl Drop for Front {
+    fn drop(&mut self) {
+        if !self.state.stop.swap(true, Ordering::SeqCst) {
+            TcpStream::connect(self.local).ok();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Control plane: probing + re-listing
+// ---------------------------------------------------------------------
+
+fn probe_loop(st: &Arc<FrontState>) {
+    while !st.stop.load(Ordering::SeqCst) {
+        probe_tick(st);
+        // Sleep in short slices so shutdown is prompt.
+        let deadline = Instant::now() + st.cfg.probe_interval;
+        while Instant::now() < deadline && !st.stop.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+}
+
+/// One control-plane pass: probe every node, then re-list anything
+/// stranded on a `Down` node. Re-listing is level-triggered — it retries
+/// every tick until each stranded job lands somewhere — so a transient
+/// failure of the *target* node cannot permanently orphan a job.
+fn probe_tick(st: &Arc<FrontState>) {
+    for node in st.registry.all() {
+        let addr = node.addr.clone();
+        let probe = match retry_transport(PROBE_ATTEMPTS, || {
+            http::request_full(&addr, "GET", "/healthz", None, &[])
+        }) {
+            Ok((200, _, body)) => match Json::parse(&body) {
+                Ok(j) if j.get("status").as_str() == Some("draining") => Probe::Draining,
+                Ok(_) => Probe::Healthy,
+                Err(e) => Probe::Failed(format!("unparseable healthz: {e}")),
+            },
+            Ok((status, _, _)) => Probe::Failed(format!("healthz answered HTTP {status}")),
+            Err(e) => Probe::Failed(e.to_string()),
+        };
+        if matches!(probe, Probe::Failed(_)) {
+            st.metrics.probe_failures.fetch_add(1, Ordering::Relaxed);
+        }
+        if st.registry.record(&addr, probe) {
+            log::warn!("backend {addr} is down; re-listing its queued jobs");
+            st.pool.evict(&addr);
+        }
+    }
+    relist_stranded(st);
+}
+
+fn relist_stranded(st: &Arc<FrontState>) {
+    let down: Vec<String> = st
+        .registry
+        .all()
+        .into_iter()
+        .filter(|n| n.state == NodeState::Down)
+        .map(|n| n.addr)
+        .collect();
+    if down.is_empty() {
+        return;
+    }
+    let placeable = st.registry.placeable();
+    for dead in &down {
+        for p in st.table.active_on(dead) {
+            let id_text = p.id.to_string();
+            for cand in ring::candidates(&placeable, p.id) {
+                let headers = [
+                    ("X-Pogo-Job-Id", id_text.as_str()),
+                    ("X-Pogo-Resubmitted", "1"),
+                    ("X-Api-Key", p.tenant.as_str()),
+                ];
+                match st.pool.roundtrip(
+                    &cand,
+                    "POST",
+                    "/v2/jobs",
+                    "application/json",
+                    p.spec.as_bytes(),
+                    &headers,
+                ) {
+                    // 202 = placed; 409 = a previous (raced) re-list
+                    // already landed it here — both mean "it lives there".
+                    Ok((202 | 409, _, _)) => {
+                        st.table.reassign(p.id, &cand);
+                        st.metrics.relists.fetch_add(1, Ordering::Relaxed);
+                        log::info!("re-listed job {} from {dead} onto {cand}", p.id);
+                        break;
+                    }
+                    Ok((status, _, body)) => {
+                        log::warn!(
+                            "re-list of job {} onto {cand}: HTTP {status}: {:.120}",
+                            p.id,
+                            String::from_utf8_lossy(&body)
+                        );
+                        continue;
+                    }
+                    Err(e) => {
+                        log::debug!("re-list of job {} onto {cand}: {e}", p.id);
+                        continue;
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Data plane
+// ---------------------------------------------------------------------
+
+enum Routed {
+    Plain(Response),
+    /// Relay `GET /v2/jobs/:id/events` (needs the socket).
+    Events(JobId),
+}
+
+fn handle_conn(mut stream: TcpStream, st: &Arc<FrontState>) {
+    let req = match http::read_request(&stream) {
+        Ok(req) => req,
+        Err(e) => {
+            if let Some(resp) = e.response() {
+                http::write_response(&mut stream, &resp).ok();
+            }
+            return;
+        }
+    };
+    match route(&req, st) {
+        Routed::Plain(resp) => {
+            http::write_response(&mut stream, &resp).ok();
+        }
+        Routed::Events(id) => relay_events(&mut stream, id, st),
+    }
+}
+
+fn route(req: &Request, st: &Arc<FrontState>) -> Routed {
+    let segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+    let plain = Routed::Plain;
+    match (req.method.as_str(), segs.as_slice()) {
+        ("GET", ["healthz"]) => {
+            let up = st.registry.placeable().len();
+            plain(Response::json(
+                200,
+                &Json::obj(vec![
+                    ("status", Json::str(if up > 0 { "ok" } else { "degraded" })),
+                    ("role", Json::str("front")),
+                    ("version", Json::str(crate::VERSION)),
+                    ("backends", Json::num(st.cfg.backends.len() as f64)),
+                    ("backends_up", Json::num(up as f64)),
+                ]),
+            ))
+        }
+        ("GET", ["metrics"]) => {
+            let (tracked, active) = st.table.counts();
+            plain(Response::text(
+                200,
+                st.metrics.render(&st.registry.all(), tracked, active),
+            ))
+        }
+        ("GET", ["front", "nodes"]) => {
+            plain(Response::json(200, &st.registry.snapshot_json()))
+        }
+        ("GET", ["v2", "problems"]) => plain(Response::json(200, &problem::registry_json())),
+        ("POST", ["v2", "jobs"]) => plain(submit(req, st)),
+        ("GET", ["v2", "jobs"]) => plain(list_jobs(st)),
+        ("GET", ["v2", "jobs", id]) => plain(match parse_id(id) {
+            Some(id) => proxy_job_read(id, "", st),
+            None => Response::error(400, format!("bad job id '{id}'")),
+        }),
+        ("GET", ["v2", "jobs", id, "result"]) => plain(match parse_id(id) {
+            Some(id) => proxy_job_read(id, "/result", st),
+            None => Response::error(400, format!("bad job id '{id}'")),
+        }),
+        ("GET", ["v2", "jobs", id, "trace"]) => plain(match parse_id(id) {
+            Some(id) => proxy_job_read(id, "/trace", st),
+            None => Response::error(400, format!("bad job id '{id}'")),
+        }),
+        ("GET", ["v2", "jobs", id, "events"]) => match parse_id(id) {
+            Some(id) => Routed::Events(id),
+            None => plain(Response::error(400, format!("bad job id '{id}'"))),
+        },
+        ("DELETE", ["v2", "jobs", id]) => plain(match parse_id(id) {
+            Some(id) => cancel_job(id, st),
+            None => Response::error(400, format!("bad job id '{id}'")),
+        }),
+        ("POST", ["v2", "artifacts"]) => plain(upload_artifact(req, st)),
+        ("GET", ["v2", "artifacts"]) => plain(proxy_any("GET", "/v2/artifacts", st)),
+        ("GET", ["v2", "artifacts", hash]) => {
+            plain(proxy_any("GET", &format!("/v2/artifacts/{hash}"), st))
+        }
+        (_, ["v1", ..]) => plain(Response::error(
+            404,
+            "the front door federates the v2 surface only — talk v1 to a backend directly",
+        )),
+        _ => plain(Response::error(
+            404,
+            format!("no front route for {} {}", req.method, req.path),
+        )),
+    }
+}
+
+fn parse_id(s: &str) -> Option<JobId> {
+    s.parse::<JobId>().ok()
+}
+
+/// The node a job routes to: its placement if this front (or its state
+/// file) saw the submission, else the rendezvous owner among readable
+/// nodes — the deterministic fallback that lets any front replica answer
+/// for any job.
+fn route_node(id: JobId, st: &FrontState) -> Option<(String, bool)> {
+    if let Some(p) = st.table.get(id) {
+        // A placement naming a node that is no longer configured (the
+        // fleet was re-addressed between front restarts) routes like an
+        // unknown id: by the ring, onto the current node set.
+        if st.registry.state_of(&p.node).is_some() {
+            return Some((p.node, p.resubmitted));
+        }
+        let readable = st.registry.readable();
+        return ring::owner(&readable, id).map(|n| (n.to_string(), p.resubmitted));
+    }
+    let readable = st.registry.readable();
+    ring::owner(&readable, id).map(|n| (n.to_string(), false))
+}
+
+fn submit(req: &Request, st: &Arc<FrontState>) -> Response {
+    let body = match req.body_utf8() {
+        Ok(b) => b.to_string(),
+        Err(e) => return Response::error(400, format!("{e:#}")),
+    };
+    let parsed = match Json::parse(&body) {
+        Ok(j) => j,
+        Err(e) => return Response::error(400, format!("bad JSON: {e}")),
+    };
+    let spec = match JobSpec::from_json(&parsed) {
+        Ok(s) => s,
+        Err(e) => return Response::error(400, format!("{e:#}")),
+    };
+    let tenant = tenant_of(req);
+    let cost = spec.cost();
+
+    // Global admission: on a would-reject, refresh the ledger from the
+    // backends first — never 429 off stale bookkeeping.
+    if st.cfg.admission.check(&st.table, &tenant, cost).is_err() {
+        refresh_ledger(st, &tenant);
+    }
+    if let Err(refusal) = st.cfg.admission.check(&st.table, &tenant, cost) {
+        let counter = match &refusal {
+            Refusal::Quota { .. } => &st.metrics.rejected_quota,
+            Refusal::Cost { .. } => &st.metrics.rejected_cost,
+        };
+        counter.fetch_add(1, Ordering::Relaxed);
+        let retry = st
+            .cfg
+            .admission
+            .retry_after_s(&st.table, st.registry.placeable().len());
+        return Response::error(429, refusal.to_string())
+            .with_header("Retry-After", retry.to_string());
+    }
+
+    let placeable = st.registry.placeable();
+    if placeable.is_empty() {
+        return Response::error(503, "no backends are up").with_header("Retry-After", "1");
+    }
+
+    // Allocate an id, place on the ring, forward. A 409 means that id is
+    // taken on the target backend (e.g. direct-to-backend submissions);
+    // walk the id forward — with exponentially growing strides, so a
+    // backend whose local counter ran far ahead is caught in a few
+    // round-trips — and re-place.
+    for attempt in 0..MAX_ID_RETRIES {
+        let id = st.next_id.fetch_add(1 << attempt.min(16), Ordering::SeqCst);
+        let id_text = id.to_string();
+        let mut last_transport: Option<ReadError> = None;
+        let mut took_id = false;
+        for cand in ring::candidates(&placeable, id) {
+            let headers =
+                [("X-Pogo-Job-Id", id_text.as_str()), ("X-Api-Key", tenant.as_str())];
+            match st.pool.roundtrip(
+                &cand,
+                "POST",
+                "/v2/jobs",
+                "application/json",
+                body.as_bytes(),
+                &headers,
+            ) {
+                Ok((202, resp_headers, resp_body)) => {
+                    st.table.insert(Placement {
+                        id,
+                        node: cand.clone(),
+                        tenant: tenant.clone(),
+                        cost,
+                        spec: body,
+                        resubmitted: false,
+                        terminal: false,
+                    });
+                    st.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+                    return passthrough(
+                        202,
+                        &resp_headers,
+                        resp_body,
+                        &[("X-Pogo-Backend", cand)],
+                    );
+                }
+                Ok((409, _, _)) => {
+                    took_id = true;
+                    break; // new id, try again
+                }
+                // Backend-local refusal (429/503/400/413/404): the
+                // contract answer, passed through verbatim.
+                Ok((status, resp_headers, resp_body)) => {
+                    return passthrough(status, &resp_headers, resp_body, &[]);
+                }
+                Err(e) => {
+                    last_transport = Some(e);
+                    continue; // next ring candidate
+                }
+            }
+        }
+        if !took_id {
+            return Response::error(
+                503,
+                format!(
+                    "no backend reachable for placement: {}",
+                    last_transport.map(|e| e.to_string()).unwrap_or_default()
+                ),
+            )
+            .with_header("Retry-After", "1");
+        }
+    }
+    Response::error(503, "could not allocate an unclaimed job id")
+}
+
+fn list_jobs(st: &Arc<FrontState>) -> Response {
+    let mut rows: Vec<Json> = Vec::new();
+    for node in st.registry.readable() {
+        st.metrics.proxied.fetch_add(1, Ordering::Relaxed);
+        if let Ok((200, _, body)) =
+            st.pool.roundtrip(&node, "GET", "/v2/jobs", "application/json", b"", &[])
+        {
+            if let Ok(Json::Arr(list)) = Json::parse(&String::from_utf8_lossy(&body)) {
+                rows.extend(list);
+            }
+        }
+    }
+    rows.sort_by_key(|j| j.get("id").as_usize().unwrap_or(usize::MAX));
+    Response::json(200, &Json::arr(rows))
+}
+
+fn proxy_job_read(id: JobId, suffix: &str, st: &Arc<FrontState>) -> Response {
+    let Some((node, resubmitted)) = route_node(id, st) else {
+        return Response::error(503, "no backends are up");
+    };
+    st.metrics.proxied.fetch_add(1, Ordering::Relaxed);
+    let path = format!("/v2/jobs/{id}{suffix}");
+    match retry_transport(2, || {
+        st.pool.roundtrip(&node, "GET", &path, "application/json", b"", &[])
+    }) {
+        Ok((status, headers, body)) => {
+            // Keep the ledger fresh for free on status/result reads.
+            if status == 200 && (suffix.is_empty() || suffix == "/result") {
+                if let Ok(j) = Json::parse(&String::from_utf8_lossy(&body)) {
+                    if matches!(
+                        j.get("state").as_str(),
+                        Some("done" | "failed" | "cancelled")
+                    ) {
+                        st.table.mark_terminal(id);
+                    }
+                }
+            }
+            let extra: Vec<(&'static str, String)> = if resubmitted {
+                vec![("X-Pogo-Resubmitted", "1".to_string())]
+            } else {
+                Vec::new()
+            };
+            passthrough(status, &headers, body, &extra)
+        }
+        Err(e) => Response::error(503, format!("backend {node} unreachable: {e}")),
+    }
+}
+
+fn cancel_job(id: JobId, st: &Arc<FrontState>) -> Response {
+    let Some((node, _)) = route_node(id, st) else {
+        return Response::error(503, "no backends are up");
+    };
+    st.metrics.proxied.fetch_add(1, Ordering::Relaxed);
+    let path = format!("/v2/jobs/{id}");
+    match st.pool.roundtrip(&node, "DELETE", &path, "application/json", b"", &[]) {
+        Ok((status, headers, body)) => {
+            if status == 200 {
+                st.table.mark_terminal(id);
+            }
+            passthrough(status, &headers, body, &[])
+        }
+        Err(e) => Response::error(503, format!("backend {node} unreachable: {e}")),
+    }
+}
+
+/// Artifact upload fan-out: replicate the (content-addressed, idempotent)
+/// artifact to every placeable backend so any ring placement can run
+/// jobs that reference it. `201`/`409` both count as stored.
+fn upload_artifact(req: &Request, st: &Arc<FrontState>) -> Response {
+    let nodes = st.registry.placeable();
+    if nodes.is_empty() {
+        return Response::error(503, "no backends are up");
+    }
+    let mut stored: Option<(u16, Vec<(String, String)>, Vec<u8>)> = None;
+    let mut failure: Option<Response> = None;
+    let mut replicas = 0usize;
+    for node in &nodes {
+        st.metrics.proxied.fetch_add(1, Ordering::Relaxed);
+        match st.pool.roundtrip(
+            node,
+            "POST",
+            "/v2/artifacts",
+            "application/octet-stream",
+            &req.body,
+            &[],
+        ) {
+            Ok((status @ (201 | 409), headers, body)) => {
+                replicas += 1;
+                // Prefer reporting the first fresh store over a 409.
+                if stored.is_none() || status == 201 {
+                    stored = Some((status, headers, body));
+                }
+            }
+            Ok((status, headers, body)) => {
+                failure = Some(passthrough(status, &headers, body, &[]));
+            }
+            Err(e) => {
+                failure =
+                    Some(Response::error(503, format!("backend {node} unreachable: {e}")));
+            }
+        }
+    }
+    match stored {
+        Some((status, headers, body)) => passthrough(
+            status,
+            &headers,
+            body,
+            &[("X-Pogo-Replicas", replicas.to_string())],
+        ),
+        // Nothing accepted it: surface the last backend answer.
+        None => failure.unwrap_or_else(|| Response::error(503, "no backends are up")),
+    }
+}
+
+/// Proxy a read to the first readable backend that answers.
+fn proxy_any(method: &str, path: &str, st: &Arc<FrontState>) -> Response {
+    let nodes = st.registry.readable();
+    for node in &nodes {
+        st.metrics.proxied.fetch_add(1, Ordering::Relaxed);
+        match st.pool.roundtrip(node, method, path, "application/json", b"", &[]) {
+            Ok((status, headers, body)) => return passthrough(status, &headers, body, &[]),
+            Err(_) => continue,
+        }
+    }
+    Response::error(503, "no backends are up")
+}
+
+/// The tenant identity (same rule as the backend's `tenant_of`, so the
+/// front and its shards account under identical keys).
+fn tenant_of(req: &Request) -> String {
+    let raw = req.header("x-api-key").unwrap_or("").trim();
+    if raw.is_empty() {
+        "anonymous".to_string()
+    } else {
+        raw.chars().take(64).collect()
+    }
+}
+
+/// Refresh the admission ledger from the backends: every active
+/// placement (for `tenant`, plus everything when a cost cap is set) gets
+/// one status read; terminal — or vanished — jobs stop counting. Called
+/// only when a rejection is on the line, so the steady-state submit path
+/// costs no extra round-trips.
+fn refresh_ledger(st: &Arc<FrontState>, tenant: &str) {
+    let mut targets = st.table.active_for(tenant);
+    if st.cfg.admission.cost_cap > 0 {
+        for node in st.registry.readable() {
+            for p in st.table.active_on(&node) {
+                if p.tenant != tenant {
+                    targets.push(p);
+                }
+            }
+        }
+    }
+    for p in targets {
+        match st.pool.roundtrip(
+            &p.node,
+            "GET",
+            &format!("/v2/jobs/{}", p.id),
+            "application/json",
+            b"",
+            &[],
+        ) {
+            Ok((200, _, body)) => {
+                if let Ok(j) = Json::parse(&String::from_utf8_lossy(&body)) {
+                    if matches!(
+                        j.get("state").as_str(),
+                        Some("done" | "failed" | "cancelled")
+                    ) {
+                        st.table.mark_terminal(p.id);
+                    }
+                }
+            }
+            // The backend no longer knows the job (restarted without
+            // state): it must not pin quota forever.
+            Ok((404, _, _)) => st.table.mark_terminal(p.id),
+            _ => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// SSE relay
+// ---------------------------------------------------------------------
+
+/// Relay one job's event stream, reconnecting across backend drops.
+///
+/// Blocks are forwarded byte-for-bit ([`http::relay_sse_blocks`]
+/// preserves boundaries); after a reconnect, progress events whose step
+/// is ≤ the last forwarded one are dropped — the backend replays its
+/// buffered tail to late subscribers, and after a re-list the surviving
+/// node re-runs the job from step 1.
+fn relay_events(stream: &mut TcpStream, id: JobId, st: &Arc<FrontState>) {
+    // Unknown ids answer a clean 404 *before* the stream head goes out.
+    let Some((first_node, resubmitted)) = route_node(id, st) else {
+        http::write_response(stream, &Response::error(503, "no backends are up")).ok();
+        return;
+    };
+    {
+        let probe = st.pool.roundtrip(
+            &first_node,
+            "GET",
+            &format!("/v2/jobs/{id}"),
+            "application/json",
+            b"",
+            &[],
+        );
+        if let Ok((404, headers, body)) = probe {
+            http::write_response(stream, &passthrough(404, &headers, body, &[])).ok();
+            return;
+        }
+    }
+    let id_text = id.to_string();
+    let mut head = vec![("X-Job-Id", id_text.as_str())];
+    if resubmitted {
+        head.push(("X-Pogo-Resubmitted", "1"));
+    }
+    if http::write_stream_head(stream, 200, "text/event-stream", &head).is_err() {
+        return;
+    }
+
+    let deadline = Instant::now() + SSE_RELAY_DEADLINE;
+    let mut last_step: Option<usize> = None;
+    let mut finished = false;
+    let mut first_attempt = true;
+    while !finished && Instant::now() < deadline && !st.stop.load(Ordering::SeqCst) {
+        if !first_attempt {
+            st.metrics.sse_reconnects.fetch_add(1, Ordering::Relaxed);
+            // Keep the client's read timeout alive while the backend
+            // recovers / the job re-lists.
+            if http::write_chunk(stream, b": reconnecting\n\n").is_err() {
+                return;
+            }
+            std::thread::sleep(SSE_RECONNECT_PAUSE);
+        }
+        first_attempt = false;
+        let Some((node, _)) = route_node(id, st) else {
+            continue;
+        };
+        let path = format!("/v2/jobs/{id}/events");
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        let mut client_gone = false;
+        let result = http::relay_sse_blocks(&node, &path, &[], remaining, &mut |block| {
+            match classify_block(block) {
+                Block::Progress(step) => {
+                    if last_step.is_some_and(|last| step <= last) {
+                        return true; // replayed after reconnect: drop
+                    }
+                    last_step = Some(step);
+                }
+                Block::Terminal => finished = true,
+                Block::Other => {}
+            }
+            if http::write_chunk(stream, block).is_err() {
+                client_gone = true;
+                return false;
+            }
+            !finished
+        });
+        if client_gone {
+            return;
+        }
+        match result {
+            // Clean end: terminal seen, or the backend finished the
+            // stream (it only does so after its terminal event).
+            Ok(()) => finished = true,
+            Err(ReadError::Transport(e)) => {
+                log::debug!("SSE relay for job {id} lost {node}: {e}; reconnecting");
+            }
+            Err(ReadError::Protocol { status, .. }) => {
+                // The job is (momentarily) unknown there — e.g. mid
+                // re-list. Retry until the deadline.
+                log::debug!("SSE relay for job {id}: {node} answered {status}; retrying");
+            }
+        }
+    }
+    http::finish_chunked(stream).ok();
+}
+
+enum Block {
+    Progress(usize),
+    Terminal,
+    Other,
+}
+
+/// Classify one raw SSE block (comment blocks and anything unparseable
+/// are `Other` — forwarded, never deduplicated).
+fn classify_block(block: &[u8]) -> Block {
+    let text = String::from_utf8_lossy(block);
+    let mut event = "";
+    let mut data = "";
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("event:") {
+            event = rest.trim();
+        } else if let Some(rest) = line.strip_prefix("data:") {
+            data = rest.trim();
+        }
+    }
+    match event {
+        "progress" => match Json::parse(data).ok().and_then(|j| j.get("step").as_usize()) {
+            Some(step) => Block::Progress(step),
+            None => Block::Other,
+        },
+        "state" => Block::Terminal,
+        _ => Block::Other,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_recognizes_the_wire_blocks() {
+        assert!(matches!(
+            classify_block(b"event: progress\ndata: {\"step\":7,\"loss\":0.5}\n\n"),
+            Block::Progress(7)
+        ));
+        assert!(matches!(
+            classify_block(b"event: state\ndata: {\"id\":1,\"state\":\"done\"}\n\n"),
+            Block::Terminal
+        ));
+        assert!(matches!(classify_block(b": keepalive\n\n"), Block::Other));
+        assert!(matches!(classify_block(b"event: progress\ndata: junk\n\n"), Block::Other));
+    }
+}

@@ -1,0 +1,189 @@
+//! Front-door counters and gauges, rendered as Prometheus text for the
+//! front's own `GET /metrics` (the backends keep their `pogo_serve_*`
+//! families; everything here is `pogo_front_*`).
+
+use super::registry::{Node, NodeState};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+pub struct FrontMetrics {
+    started: Instant,
+    /// Requests proxied to a backend (any route).
+    pub proxied: AtomicU64,
+    /// Submissions placed through the hash ring.
+    pub submitted: AtomicU64,
+    /// Jobs re-listed from a down node onto the next ring candidate.
+    pub relists: AtomicU64,
+    /// Probe attempts that failed (before and after a Down transition).
+    pub probe_failures: AtomicU64,
+    /// SSE relays that reconnected after a backend dropped mid-stream.
+    pub sse_reconnects: AtomicU64,
+    /// Global-admission rejections by cause.
+    pub rejected_quota: AtomicU64,
+    pub rejected_cost: AtomicU64,
+}
+
+impl Default for FrontMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FrontMetrics {
+    pub fn new() -> FrontMetrics {
+        FrontMetrics {
+            started: Instant::now(),
+            proxied: AtomicU64::new(0),
+            submitted: AtomicU64::new(0),
+            relists: AtomicU64::new(0),
+            probe_failures: AtomicU64::new(0),
+            sse_reconnects: AtomicU64::new(0),
+            rejected_quota: AtomicU64::new(0),
+            rejected_cost: AtomicU64::new(0),
+        }
+    }
+
+    /// Render the exposition text. `nodes` is the registry snapshot;
+    /// `(tracked, active)` the placement-table counts.
+    pub fn render(&self, nodes: &[Node], tracked: usize, active: usize) -> String {
+        fn metric(out: &mut String, name: &str, kind: &str, help: &str, value: f64) {
+            out.push_str(&format!(
+                "# HELP {name} {help}\n# TYPE {name} {kind}\n{name} {value}\n"
+            ));
+        }
+        let mut out = String::with_capacity(2048);
+        metric(
+            &mut out,
+            "pogo_front_uptime_seconds",
+            "gauge",
+            "Seconds since the front door started.",
+            self.started.elapsed().as_secs_f64(),
+        );
+        // Per-backend liveness — the gauge the failover proof asserts on.
+        out.push_str(
+            "# HELP pogo_front_backend_up Backend liveness (1 up, 0 down) by address.\n\
+             # TYPE pogo_front_backend_up gauge\n",
+        );
+        for n in nodes {
+            let up = (n.state != NodeState::Down) as u8;
+            out.push_str(&format!(
+                "pogo_front_backend_up{{backend=\"{}\"}} {up}\n",
+                n.addr
+            ));
+        }
+        out.push_str(
+            "# HELP pogo_front_backend_state Backend state by address (1 = in this state).\n\
+             # TYPE pogo_front_backend_state gauge\n",
+        );
+        for n in nodes {
+            for state in ["up", "draining", "down"] {
+                out.push_str(&format!(
+                    "pogo_front_backend_state{{backend=\"{}\",state=\"{state}\"}} {}\n",
+                    n.addr,
+                    (n.state.name() == state) as u8
+                ));
+            }
+        }
+        metric(
+            &mut out,
+            "pogo_front_jobs_tracked",
+            "gauge",
+            "Placements in the routing table (terminal included).",
+            tracked as f64,
+        );
+        metric(
+            &mut out,
+            "pogo_front_jobs_active",
+            "gauge",
+            "Non-terminal placements counted against global admission.",
+            active as f64,
+        );
+        metric(
+            &mut out,
+            "pogo_front_proxied_total",
+            "counter",
+            "Requests proxied to a backend.",
+            self.proxied.load(Ordering::Relaxed) as f64,
+        );
+        metric(
+            &mut out,
+            "pogo_front_jobs_submitted_total",
+            "counter",
+            "Jobs placed through the hash ring.",
+            self.submitted.load(Ordering::Relaxed) as f64,
+        );
+        metric(
+            &mut out,
+            "pogo_front_relists_total",
+            "counter",
+            "Jobs re-listed from a down backend onto the next ring candidate.",
+            self.relists.load(Ordering::Relaxed) as f64,
+        );
+        metric(
+            &mut out,
+            "pogo_front_probe_failures_total",
+            "counter",
+            "Health probes that failed.",
+            self.probe_failures.load(Ordering::Relaxed) as f64,
+        );
+        metric(
+            &mut out,
+            "pogo_front_sse_reconnects_total",
+            "counter",
+            "SSE relays resumed after a backend dropped mid-stream.",
+            self.sse_reconnects.load(Ordering::Relaxed) as f64,
+        );
+        out.push_str(
+            "# HELP pogo_front_admission_rejected_total Submissions refused by global \
+             admission, by cause.\n# TYPE pogo_front_admission_rejected_total counter\n",
+        );
+        for (cause, counter) in
+            [("quota", &self.rejected_quota), ("cost", &self.rejected_cost)]
+        {
+            out.push_str(&format!(
+                "pogo_front_admission_rejected_total{{cause=\"{cause}\"}} {}\n",
+                counter.load(Ordering::Relaxed)
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_backend_gauges_and_counters() {
+        let m = FrontMetrics::new();
+        m.relists.fetch_add(2, Ordering::Relaxed);
+        m.rejected_quota.fetch_add(1, Ordering::Relaxed);
+        let nodes = vec![
+            Node {
+                addr: "a:1".to_string(),
+                state: NodeState::Up,
+                failures: 0,
+                last_error: None,
+            },
+            Node {
+                addr: "b:2".to_string(),
+                state: NodeState::Down,
+                failures: 3,
+                last_error: Some("x".into()),
+            },
+        ];
+        let text = m.render(&nodes, 5, 3);
+        for want in [
+            "pogo_front_backend_up{backend=\"a:1\"} 1",
+            "pogo_front_backend_up{backend=\"b:2\"} 0",
+            "pogo_front_backend_state{backend=\"b:2\",state=\"down\"} 1",
+            "pogo_front_relists_total 2",
+            "pogo_front_jobs_tracked 5",
+            "pogo_front_jobs_active 3",
+            "pogo_front_admission_rejected_total{cause=\"quota\"} 1",
+            "pogo_front_admission_rejected_total{cause=\"cost\"} 0",
+        ] {
+            assert!(text.contains(want), "missing {want} in:\n{text}");
+        }
+    }
+}

@@ -1,0 +1,36 @@
+//! `pogo front` — a federated front door for [`crate::serve`].
+//!
+//! One or more front daemons sit in front of N backend `pogo serve`
+//! daemons and present the **same v2 wire contract** clients already
+//! speak; pointing a client at a front instead of a backend changes
+//! nothing about the bytes it sends or receives. Behind that surface:
+//!
+//! - [`ring`] — rendezvous (highest-random-weight) hashing of job id →
+//!   backend. Pure and deterministic: every front replica computes the
+//!   same placement from the same node list, with no coordination and
+//!   minimal reshuffling when a node leaves.
+//! - [`registry`] — the probed node state machine (`Up` / `Draining` /
+//!   `Down`).
+//! - [`table`] — the replicated job state: placement, tenant, cost, and
+//!   the verbatim spec each job can be re-listed from.
+//! - [`admission`] — the global half of split admission (per-tenant
+//!   quotas and cost caps across all shards; backends keep their local
+//!   caps).
+//! - [`proxy`] — pooled keep-alive connections to the backends plus the
+//!   response pass-through filter.
+//! - [`metrics`] — `pogo_front_*` Prometheus families.
+//! - [`front`] — the daemon tying it together: routing, placement,
+//!   SSE relay with reconnect, probe loop, and down-node re-listing.
+
+pub mod admission;
+pub mod front;
+pub mod metrics;
+pub mod proxy;
+pub mod registry;
+pub mod ring;
+pub mod table;
+
+pub use admission::FrontAdmission;
+pub use front::{Front, FrontConfig};
+pub use registry::{Node, NodeState, Probe, Registry};
+pub use table::{Placement, Table};

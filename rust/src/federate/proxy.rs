@@ -1,0 +1,171 @@
+//! The data plane's connection pool: one warm keep-alive socket per
+//! backend instead of a TCP connect per proxied request.
+//!
+//! Built on [`http::Conn`]. Connections check out of the pool for one
+//! round-trip and return on success; any transport error poisons the
+//! connection (it is simply dropped). A request that fails on a *reused*
+//! connection retries once on a fresh one — the backend may have
+//! legitimately hung up between requests (idle timeout, its per-conn
+//! request cap), and a request written into a closing socket was never
+//! processed.
+
+use crate::serve::http::{self, Conn, ReadError};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Pooled idle connections per backend (beyond this, extras just close).
+const POOL_PER_BACKEND: usize = 8;
+
+#[derive(Default)]
+pub struct ConnPool {
+    idle: Mutex<HashMap<String, Vec<Conn>>>,
+}
+
+impl ConnPool {
+    pub fn new() -> ConnPool {
+        ConnPool::default()
+    }
+
+    /// One proxied round-trip to `addr`; returns (status, headers, body).
+    pub fn roundtrip(
+        &self,
+        addr: &str,
+        method: &str,
+        path: &str,
+        content_type: &str,
+        body: &[u8],
+        headers: &[(&str, &str)],
+    ) -> Result<(u16, Vec<(String, String)>, Vec<u8>), ReadError> {
+        let pooled = self.take(addr);
+        let reused = pooled.is_some();
+        let mut conn = match pooled {
+            Some(c) => c,
+            None => Conn::connect(addr)?,
+        };
+        match conn.roundtrip(method, path, content_type, body, headers) {
+            Ok(resp) => {
+                self.put(addr, conn);
+                Ok(resp)
+            }
+            Err(ReadError::Transport(_)) if reused => {
+                // Stale pooled socket; one fresh attempt.
+                let mut fresh = Conn::connect(addr)?;
+                let resp = fresh.roundtrip(method, path, content_type, body, headers)?;
+                self.put(addr, fresh);
+                Ok(resp)
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Drop every pooled connection to `addr` (the node went down).
+    pub fn evict(&self, addr: &str) {
+        self.idle.lock().unwrap().remove(addr);
+    }
+
+    fn take(&self, addr: &str) -> Option<Conn> {
+        self.idle.lock().unwrap().get_mut(addr)?.pop()
+    }
+
+    fn put(&self, addr: &str, conn: Conn) {
+        let mut idle = self.idle.lock().unwrap();
+        let pool = idle.entry(addr.to_string()).or_default();
+        if pool.len() < POOL_PER_BACKEND {
+            pool.push(conn);
+        }
+    }
+}
+
+/// Forward a backend response to the front's client as-is: status, the
+/// relay-relevant headers, and the body verbatim. Hop-scoped headers
+/// (`Connection`, lengths) are re-derived by the writer.
+pub fn passthrough(
+    status: u16,
+    headers: &[(String, String)],
+    body: Vec<u8>,
+    extra: &[(&'static str, String)],
+) -> http::Response {
+    let mut resp = http::Response {
+        status,
+        content_type: "application/json",
+        headers: Vec::new(),
+        body,
+    };
+    for (k, v) in headers {
+        // Forward the API-meaningful headers only; framing is re-done
+        // per hop. The static-name table keeps Response's `&'static str`
+        // header keys (and bounds what a backend can inject).
+        for known in ["Retry-After", "X-Quota-Remaining", "X-Cost-Remaining", "X-Job-Id"] {
+            if k.eq_ignore_ascii_case(known) {
+                resp = resp.with_header(known, v.clone());
+            }
+        }
+    }
+    for (k, v) in extra {
+        resp = resp.with_header(k, v.clone());
+    }
+    resp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::http::{read_request, wants_keep_alive, write_response_conn, Response};
+    use crate::util::json::Json;
+    use std::net::TcpListener;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    fn spawn_keepalive_echo() -> (String, Arc<AtomicUsize>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let conns = Arc::new(AtomicUsize::new(0));
+        let counter = conns.clone();
+        std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                let Ok(mut stream) = conn else { break };
+                counter.fetch_add(1, Ordering::SeqCst);
+                loop {
+                    let Ok(req) = read_request(&stream) else { break };
+                    let keep = wants_keep_alive(&req);
+                    let resp = Response::json(
+                        200,
+                        &Json::obj(vec![("path", Json::str(req.path.clone()))]),
+                    );
+                    if write_response_conn(&mut stream, &resp, keep).is_err() || !keep {
+                        break;
+                    }
+                }
+            }
+        });
+        (addr, conns)
+    }
+
+    #[test]
+    fn pool_reuses_one_connection_per_backend() {
+        let (addr, conns) = spawn_keepalive_echo();
+        let pool = ConnPool::new();
+        for i in 0..6 {
+            let (status, _, body) = pool
+                .roundtrip(&addr, "GET", &format!("/v2/jobs/{i}"), "application/json", b"", &[])
+                .unwrap();
+            assert_eq!(status, 200);
+            assert!(String::from_utf8(body).unwrap().contains(&format!("/v2/jobs/{i}")));
+        }
+        assert_eq!(conns.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn passthrough_keeps_api_headers_only() {
+        let headers = vec![
+            ("Retry-After".to_string(), "7".to_string()),
+            ("Connection".to_string(), "keep-alive".to_string()),
+            ("X-Evil".to_string(), "1".to_string()),
+        ];
+        let resp = passthrough(429, &headers, b"{}".to_vec(), &[("X-Pogo-Resubmitted", "1".to_string())]);
+        assert_eq!(resp.status, 429);
+        assert!(resp.headers.iter().any(|(k, v)| *k == "Retry-After" && v == "7"));
+        assert!(resp.headers.iter().any(|(k, v)| *k == "X-Pogo-Resubmitted" && v == "1"));
+        assert!(!resp.headers.iter().any(|(k, _)| *k == "Connection" || *k == "X-Evil"));
+    }
+}

@@ -1,0 +1,204 @@
+//! The front door's control plane: which backends exist and whether
+//! they are taking traffic.
+//!
+//! Nodes are seeded from `--backend` and probed periodically (the probe
+//! loop lives in [`super::front`]; this module is the pure state
+//! machine). A node is `Up` until `fail_after` consecutive probe
+//! failures mark it `Down`; a backend whose `/healthz` reports
+//! `"draining"` turns `Draining` — it keeps serving reads and its
+//! in-flight jobs, but placement skips it. One successful probe brings
+//! any node straight back to `Up`: the job table, not the registry,
+//! remembers what was re-listed away in the meantime.
+
+use crate::util::json::Json;
+use std::sync::Mutex;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeState {
+    Up,
+    Draining,
+    Down,
+}
+
+impl NodeState {
+    pub fn name(self) -> &'static str {
+        match self {
+            NodeState::Up => "up",
+            NodeState::Draining => "draining",
+            NodeState::Down => "down",
+        }
+    }
+}
+
+/// One backend as the registry sees it.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub addr: String,
+    pub state: NodeState,
+    /// Consecutive failed probes (reset by any success).
+    pub failures: u32,
+    /// The last probe error, for `/front/nodes` diagnostics.
+    pub last_error: Option<String>,
+}
+
+/// What one probe observed about a backend.
+#[derive(Clone, Debug)]
+pub enum Probe {
+    /// `/healthz` answered `"ok"`.
+    Healthy,
+    /// `/healthz` answered `"draining"`.
+    Draining,
+    /// The probe failed (transport or a non-200).
+    Failed(String),
+}
+
+pub struct Registry {
+    nodes: Mutex<Vec<Node>>,
+    /// Consecutive failures before a node is declared `Down`.
+    fail_after: u32,
+}
+
+impl Registry {
+    pub fn new(addrs: &[String], fail_after: u32) -> Registry {
+        let nodes = addrs
+            .iter()
+            .map(|a| Node {
+                addr: a.clone(),
+                state: NodeState::Up,
+                failures: 0,
+                last_error: None,
+            })
+            .collect();
+        Registry { nodes: Mutex::new(nodes), fail_after: fail_after.max(1) }
+    }
+
+    /// Addresses eligible for new placements (state `Up`).
+    pub fn placeable(&self) -> Vec<String> {
+        self.nodes
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|n| n.state == NodeState::Up)
+            .map(|n| n.addr.clone())
+            .collect()
+    }
+
+    /// Addresses still answering reads (`Up` or `Draining`).
+    pub fn readable(&self) -> Vec<String> {
+        self.nodes
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|n| n.state != NodeState::Down)
+            .map(|n| n.addr.clone())
+            .collect()
+    }
+
+    pub fn all(&self) -> Vec<Node> {
+        self.nodes.lock().unwrap().clone()
+    }
+
+    pub fn state_of(&self, addr: &str) -> Option<NodeState> {
+        self.nodes.lock().unwrap().iter().find(|n| n.addr == addr).map(|n| n.state)
+    }
+
+    /// Fold one probe observation in. Returns `true` when this probe
+    /// *transitioned* the node to `Down` — the edge the front door
+    /// re-lists on (level-triggered retries happen elsewhere).
+    pub fn record(&self, addr: &str, probe: Probe) -> bool {
+        let mut nodes = self.nodes.lock().unwrap();
+        let Some(node) = nodes.iter_mut().find(|n| n.addr == addr) else {
+            return false;
+        };
+        match probe {
+            Probe::Healthy => {
+                node.failures = 0;
+                node.last_error = None;
+                node.state = NodeState::Up;
+                false
+            }
+            Probe::Draining => {
+                node.failures = 0;
+                node.last_error = None;
+                node.state = NodeState::Draining;
+                false
+            }
+            Probe::Failed(err) => {
+                node.failures = node.failures.saturating_add(1);
+                node.last_error = Some(err);
+                if node.failures >= self.fail_after && node.state != NodeState::Down {
+                    node.state = NodeState::Down;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// The `GET /front/nodes` body.
+    pub fn snapshot_json(&self) -> Json {
+        Json::arr(self.nodes.lock().unwrap().iter().map(|n| {
+            Json::obj(vec![
+                ("addr", Json::str(n.addr.clone())),
+                ("state", Json::str(n.state.name())),
+                ("failures", Json::num(n.failures as f64)),
+                (
+                    "last_error",
+                    match &n.last_error {
+                        Some(e) => Json::str(e.clone()),
+                        None => Json::Null,
+                    },
+                ),
+            ])
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn registry() -> Registry {
+        Registry::new(&["a:1".to_string(), "b:2".to_string()], 2)
+    }
+
+    #[test]
+    fn down_after_consecutive_failures_only() {
+        let r = registry();
+        assert!(!r.record("a:1", Probe::Failed("boom".into())));
+        assert_eq!(r.state_of("a:1"), Some(NodeState::Up));
+        // A success in between resets the streak.
+        assert!(!r.record("a:1", Probe::Healthy));
+        assert!(!r.record("a:1", Probe::Failed("boom".into())));
+        assert_eq!(r.state_of("a:1"), Some(NodeState::Up));
+        // Two in a row: the transition fires exactly once.
+        assert!(r.record("a:1", Probe::Failed("boom".into())));
+        assert_eq!(r.state_of("a:1"), Some(NodeState::Down));
+        assert!(!r.record("a:1", Probe::Failed("still down".into())));
+        assert_eq!(r.placeable(), vec!["b:2".to_string()]);
+    }
+
+    #[test]
+    fn draining_blocks_placement_but_not_reads() {
+        let r = registry();
+        r.record("b:2", Probe::Draining);
+        assert_eq!(r.placeable(), vec!["a:1".to_string()]);
+        assert_eq!(r.readable().len(), 2);
+        // Recovery goes straight back to Up.
+        r.record("b:2", Probe::Healthy);
+        assert_eq!(r.placeable().len(), 2);
+    }
+
+    #[test]
+    fn snapshot_carries_state_and_last_error() {
+        let r = registry();
+        r.record("a:1", Probe::Failed("connection refused".into()));
+        let snap = r.snapshot_json();
+        let rows = snap.as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("state").as_str(), Some("up"));
+        assert_eq!(rows[0].get("last_error").as_str(), Some("connection refused"));
+        assert_eq!(rows[1].get("last_error"), &Json::Null);
+    }
+}

@@ -1,0 +1,129 @@
+//! Rendezvous (highest-random-weight) hashing: job id → backend node.
+//!
+//! Every placement decision is a pure function of `(node address, job
+//! id)`, so any front-door replica — or a fresh one started an hour
+//! later — computes the same owner from the same node list with no
+//! coordination. Compared to a classic token ring, rendezvous hashing
+//! needs no virtual-node bookkeeping and loses only `1/N` of placements
+//! when a node leaves: the surviving order of `candidates` is exactly
+//! the failover sequence the re-list path walks.
+
+use crate::serve::queue::JobId;
+
+/// 64-bit FNV-1a — the same tiny hash the checkpoint framing uses for
+/// its content checksum; deterministic across platforms and builds.
+fn fnv1a(seed: u64, bytes: &[u8]) -> u64 {
+    let mut h = seed;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// The placement score of one `(node, job)` pair. Higher wins.
+fn score(node: &str, job: JobId) -> u64 {
+    let h = fnv1a(0xcbf2_9ce4_8422_2325, node.as_bytes());
+    fnv1a(h, &job.to_le_bytes())
+}
+
+/// The owner of `job` among `nodes` — the highest-scoring node. `None`
+/// only when `nodes` is empty. Ties (astronomically unlikely with
+/// distinct addresses) break toward the lexicographically smaller
+/// address so the answer stays total-ordered and replica-independent.
+pub fn owner<'a>(nodes: &'a [String], job: JobId) -> Option<&'a str> {
+    nodes
+        .iter()
+        .max_by(|a, b| {
+            score(a, job).cmp(&score(b, job)).then_with(|| b.as_str().cmp(a.as_str()))
+        })
+        .map(|s| s.as_str())
+}
+
+/// All of `nodes` ordered by descending placement score for `job`: the
+/// first entry is the owner, the rest are the failover sequence a
+/// re-list walks when the owner is down.
+pub fn candidates(nodes: &[String], job: JobId) -> Vec<String> {
+    let mut ranked: Vec<&String> = nodes.iter().collect();
+    ranked.sort_by(|a, b| {
+        score(b, job).cmp(&score(a, job)).then_with(|| a.as_str().cmp(b.as_str()))
+    });
+    ranked.into_iter().cloned().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nodes(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("10.0.0.{i}:7070")).collect()
+    }
+
+    #[test]
+    fn placement_is_deterministic_and_node_order_free() {
+        let a = nodes(5);
+        let mut b = a.clone();
+        b.reverse();
+        for job in 0..200u64 {
+            assert_eq!(owner(&a, job), owner(&b, job), "job {job}");
+            assert_eq!(candidates(&a, job), candidates(&b, job), "job {job}");
+        }
+    }
+
+    #[test]
+    fn candidates_lead_with_the_owner_and_cover_every_node() {
+        let ns = nodes(4);
+        for job in 0..50u64 {
+            let ranked = candidates(&ns, job);
+            assert_eq!(ranked.len(), ns.len());
+            assert_eq!(Some(ranked[0].as_str()), owner(&ns, job));
+            let mut sorted = ranked.clone();
+            sorted.sort();
+            let mut all = ns.clone();
+            all.sort();
+            assert_eq!(sorted, all, "every node appears exactly once");
+        }
+    }
+
+    #[test]
+    fn load_spreads_across_nodes() {
+        let ns = nodes(4);
+        let mut counts = vec![0usize; ns.len()];
+        for job in 0..4000u64 {
+            let o = owner(&ns, job).unwrap();
+            counts[ns.iter().position(|n| n == o).unwrap()] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (500..=1500).contains(&c),
+                "node {i} got {c} of 4000 placements — far from uniform: {counts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn removing_a_node_only_moves_its_own_jobs() {
+        let all = nodes(4);
+        let survivors: Vec<String> = all[..3].to_vec();
+        for job in 0..500u64 {
+            let before = owner(&all, job).unwrap().to_string();
+            let after = owner(&survivors, job).unwrap().to_string();
+            if before != *all.last().unwrap() {
+                assert_eq!(before, after, "job {job} moved although its owner survived");
+            } else {
+                // Orphaned jobs land on their next-ranked candidate.
+                assert_eq!(
+                    after,
+                    candidates(&all, job)[1].clone(),
+                    "job {job} must fail over to its second candidate"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_node_list_has_no_owner() {
+        assert_eq!(owner(&[], 7), None);
+        assert!(candidates(&[], 7).is_empty());
+    }
+}

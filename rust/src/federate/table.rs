@@ -1,0 +1,264 @@
+//! The front door's replicated job state: which backend owns which job,
+//! under which tenant, at what admission cost.
+//!
+//! The table is the front's authoritative routing and accounting record:
+//! reads route by it (with the hash ring as fallback for ids it has
+//! never seen), global admission counts active placements in it, and the
+//! re-list path walks it when a backend goes down. With `--state-dir` it
+//! persists as `front-jobs.json` (write-then-rename, same discipline as
+//! the queue's `jobs.json`) so a restarted front keeps routing the jobs
+//! it placed before.
+
+use crate::serve::queue::JobId;
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// One job the front has placed (or inherited from its state file).
+#[derive(Clone, Debug)]
+pub struct Placement {
+    pub id: JobId,
+    /// The backend currently owning the job.
+    pub node: String,
+    pub tenant: String,
+    /// Admission cost units (`B·p·n·steps`) counted against the global cap.
+    pub cost: u64,
+    /// The submitted spec, verbatim JSON — what a re-list re-posts.
+    pub spec: String,
+    /// Set once the job has been re-listed onto a different node; reads
+    /// answer with `X-Pogo-Resubmitted: 1` so clients can tell.
+    pub resubmitted: bool,
+    /// Terminal placements stop counting against quotas/cost but stay
+    /// routable (results live on the backend, spilled to its state dir).
+    pub terminal: bool,
+}
+
+pub struct Table {
+    path: Option<PathBuf>,
+    inner: Mutex<BTreeMap<JobId, Placement>>,
+}
+
+impl Table {
+    /// An empty table, persisted under `state_dir` when given (loading
+    /// whatever a previous front left there).
+    pub fn open(state_dir: Option<&Path>) -> Result<Table> {
+        let path = state_dir.map(|d| d.join("front-jobs.json"));
+        let mut jobs = BTreeMap::new();
+        if let Some(p) = &path {
+            if p.exists() {
+                let text = std::fs::read_to_string(p)
+                    .with_context(|| format!("reading {}", p.display()))?;
+                for row in Json::parse(&text)
+                    .with_context(|| format!("parsing {}", p.display()))?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("{} is not a JSON array", p.display()))?
+                {
+                    let placement = Placement {
+                        id: row.get("id").as_usize().ok_or_else(|| anyhow!("row without id"))?
+                            as JobId,
+                        node: row
+                            .get("node")
+                            .as_str()
+                            .ok_or_else(|| anyhow!("row without node"))?
+                            .to_string(),
+                        tenant: row.get("tenant").as_str().unwrap_or("anonymous").to_string(),
+                        cost: row.get("cost").as_f64().unwrap_or(0.0) as u64,
+                        spec: row.get("spec").as_str().unwrap_or("").to_string(),
+                        resubmitted: row.get("resubmitted").as_bool().unwrap_or(false),
+                        terminal: row.get("terminal").as_bool().unwrap_or(false),
+                    };
+                    jobs.insert(placement.id, placement);
+                }
+            }
+        }
+        Ok(Table { path, inner: Mutex::new(jobs) })
+    }
+
+    /// The first id a fresh front should hand out: one past anything it
+    /// has ever placed (backend-side `X-Pogo-Job-Id` collisions with
+    /// directly-submitted jobs still answer 409 and bump further).
+    pub fn next_id_floor(&self) -> JobId {
+        self.inner.lock().unwrap().keys().next_back().map(|&id| id + 1).unwrap_or(1)
+    }
+
+    pub fn insert(&self, p: Placement) {
+        self.inner.lock().unwrap().insert(p.id, p);
+        self.persist();
+    }
+
+    pub fn get(&self, id: JobId) -> Option<Placement> {
+        self.inner.lock().unwrap().get(&id).cloned()
+    }
+
+    /// Move a job to a new node (a successful re-list).
+    pub fn reassign(&self, id: JobId, node: &str) {
+        if let Some(p) = self.inner.lock().unwrap().get_mut(&id) {
+            p.node = node.to_string();
+            p.resubmitted = true;
+        }
+        self.persist();
+    }
+
+    pub fn mark_terminal(&self, id: JobId) {
+        let changed = {
+            let mut jobs = self.inner.lock().unwrap();
+            match jobs.get_mut(&id) {
+                Some(p) if !p.terminal => {
+                    p.terminal = true;
+                    true
+                }
+                _ => false,
+            }
+        };
+        if changed {
+            self.persist();
+        }
+    }
+
+    /// Non-terminal placements currently routed to `node` — what a
+    /// `Down` transition re-lists.
+    pub fn active_on(&self, node: &str) -> Vec<Placement> {
+        self.inner
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|p| !p.terminal && p.node == node)
+            .cloned()
+            .collect()
+    }
+
+    /// Non-terminal placements for one tenant (global quota accounting).
+    pub fn active_for(&self, tenant: &str) -> Vec<Placement> {
+        self.inner
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|p| !p.terminal && p.tenant == tenant)
+            .cloned()
+            .collect()
+    }
+
+    /// Total non-terminal admission cost across every tenant and shard.
+    pub fn outstanding_cost(&self) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|p| !p.terminal)
+            .map(|p| p.cost)
+            .fold(0u64, u64::saturating_add)
+    }
+
+    /// (tracked, active) counts for `/metrics`.
+    pub fn counts(&self) -> (usize, usize) {
+        let jobs = self.inner.lock().unwrap();
+        let active = jobs.values().filter(|p| !p.terminal).count();
+        (jobs.len(), active)
+    }
+
+    fn persist(&self) {
+        let Some(path) = &self.path else { return };
+        let rows: Vec<Json> = self
+            .inner
+            .lock()
+            .unwrap()
+            .values()
+            .map(|p| {
+                Json::obj(vec![
+                    ("id", Json::num(p.id as f64)),
+                    ("node", Json::str(p.node.clone())),
+                    ("tenant", Json::str(p.tenant.clone())),
+                    ("cost", Json::num(p.cost as f64)),
+                    ("spec", Json::str(p.spec.clone())),
+                    ("resubmitted", Json::Bool(p.resubmitted)),
+                    ("terminal", Json::Bool(p.terminal)),
+                ])
+            })
+            .collect();
+        let text = Json::arr(rows).to_string_pretty() + "\n";
+        let tmp = path.with_extension("json.tmp");
+        let write = std::fs::write(&tmp, text)
+            .and_then(|()| std::fs::rename(&tmp, path));
+        if let Err(e) = write {
+            log::warn!("failed to persist {}: {e}", path.display());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn placement(id: JobId, node: &str, tenant: &str, cost: u64) -> Placement {
+        Placement {
+            id,
+            node: node.to_string(),
+            tenant: tenant.to_string(),
+            cost,
+            spec: format!("{{\"job\":{id}}}"),
+            resubmitted: false,
+            terminal: false,
+        }
+    }
+
+    #[test]
+    fn accounting_views_skip_terminal_jobs() {
+        let t = Table::open(None).unwrap();
+        t.insert(placement(1, "a:1", "alice", 100));
+        t.insert(placement(2, "a:1", "alice", 200));
+        t.insert(placement(3, "b:2", "bob", 400));
+        assert_eq!(t.active_for("alice").len(), 2);
+        assert_eq!(t.outstanding_cost(), 700);
+        assert_eq!(t.active_on("a:1").len(), 2);
+        t.mark_terminal(1);
+        assert_eq!(t.active_for("alice").len(), 1);
+        assert_eq!(t.outstanding_cost(), 600);
+        assert_eq!(t.counts(), (3, 2));
+        // Terminal jobs stay routable.
+        assert_eq!(t.get(1).unwrap().node, "a:1");
+    }
+
+    #[test]
+    fn reassign_marks_the_resubmit() {
+        let t = Table::open(None).unwrap();
+        t.insert(placement(7, "a:1", "alice", 10));
+        t.reassign(7, "b:2");
+        let p = t.get(7).unwrap();
+        assert_eq!(p.node, "b:2");
+        assert!(p.resubmitted);
+        assert_eq!(t.active_on("a:1").len(), 0);
+        assert_eq!(t.active_on("b:2").len(), 1);
+    }
+
+    #[test]
+    fn persists_and_reloads() {
+        let dir = std::env::temp_dir().join(format!("pogo_front_table_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        {
+            let t = Table::open(Some(&dir)).unwrap();
+            t.insert(placement(4, "a:1", "alice", 64));
+            t.reassign(4, "b:2");
+            t.insert(placement(9, "b:2", "bob", 32));
+            t.mark_terminal(9);
+        }
+        let t = Table::open(Some(&dir)).unwrap();
+        assert_eq!(t.next_id_floor(), 10);
+        let p = t.get(4).unwrap();
+        assert_eq!((p.node.as_str(), p.resubmitted, p.terminal), ("b:2", true, false));
+        assert_eq!(p.tenant, "alice");
+        assert_eq!(p.spec, "{\"job\":4}");
+        let q = t.get(9).unwrap();
+        assert!(q.terminal);
+        assert_eq!(t.outstanding_cost(), 64);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_table_starts_ids_at_one() {
+        let t = Table::open(None).unwrap();
+        assert_eq!(t.next_id_floor(), 1);
+    }
+}

@@ -68,6 +68,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
+pub mod federate;
 pub mod linalg;
 pub mod manifold;
 pub mod obs;

@@ -8,6 +8,9 @@
 //!            [--state-dir DIR] [--tenant-quota N] [--cost-cap UNITS]
 //!            [--max-inline-bytes B] [--artifact-dir DIR]
 //!            [--artifact-cap-mb MB]  # multi-tenant optimization job daemon
+//! pogo front --backend H:P[,H:P...] [--addr HOST:PORT] [--probe-interval-ms MS]
+//!            [--fail-after N] [--tenant-quota N] [--cost-cap UNITS]
+//!            [--state-dir DIR]      # federated front door over N backends
 //! pogo compile --job FILE.json [--out FILE.pogoart | --artifact-dir DIR]
 //!                               # seal inline problem data into an artifact
 //! pogo artifact inspect <file.pogoart> [--json]
@@ -35,6 +38,7 @@ fn main() {
     let code = match cmd {
         "run" => cmd_run(),
         "serve" => cmd_serve(),
+        "front" => cmd_front(),
         "compile" => cmd_compile(),
         "artifact" => cmd_artifact(),
         "trace" => cmd_trace(),
@@ -67,6 +71,9 @@ fn print_help() {
          \x20                    v2: inline problem uploads, SSE event streams,\n\
          \x20                    per-tenant quotas + cost-aware admission,\n\
          \x20                    --artifact-dir: content-addressed problem store)\n\
+         \x20 front              federated front door over N serve backends\n\
+         \x20                    (consistent-hash placement, health probing +\n\
+         \x20                    failover re-listing, global quotas, SSE relay)\n\
          \x20 compile            seal a job's inline problem data into a\n\
          \x20                    .pogoart artifact (--job FILE --out FILE)\n\
          \x20 artifact           inspect | verify a sealed .pogoart artifact\n\
@@ -202,6 +209,62 @@ fn cmd_serve() -> i32 {
             // immediately. With --state-dir the next start recovers and
             // resumes unfinished jobs from their checkpoints.
             server.wait();
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_front() -> i32 {
+    let cli = Cli::new("pogo front", "federated front door over N pogo serve backends")
+        .flag("addr", "127.0.0.1:7071", "listen address (HOST:PORT; port 0 = ephemeral)")
+        .flag_opt("backend", "comma-separated backend addresses (HOST:PORT,...) — required")
+        .flag("probe-interval-ms", "1000", "health-probe period per backend")
+        .flag("fail-after", "2", "consecutive probe failures before a backend is down")
+        .flag("tenant-quota", "0", "global max active jobs per tenant across all backends (0 = unlimited)")
+        .flag("cost-cap", "0", "global max outstanding B*p*n*steps cost units (0 = unlimited)")
+        .flag_opt("state-dir", "persist the placement table here (front restart keeps routing)");
+    let a = cli.parse_env_or_exit(1);
+    let backends: Vec<String> = a
+        .get("backend")
+        .map(|b| {
+            b.split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(String::from)
+                .collect()
+        })
+        .unwrap_or_default();
+    if backends.is_empty() {
+        eprintln!("error: pogo front needs --backend HOST:PORT[,HOST:PORT...]");
+        return 1;
+    }
+    let cfg = pogo::federate::FrontConfig {
+        addr: a.get_or("addr", "127.0.0.1:7071"),
+        backends,
+        probe_interval: std::time::Duration::from_millis(
+            a.get_u64("probe-interval-ms").unwrap_or(1000).max(10),
+        ),
+        fail_after: a.get_u64("fail-after").unwrap_or(2).max(1) as u32,
+        admission: pogo::federate::FrontAdmission {
+            tenant_quota: a.get_usize("tenant-quota").unwrap_or(0),
+            cost_cap: a.get_u64("cost-cap").unwrap_or(0),
+        },
+        state_dir: a.get("state-dir").map(std::path::PathBuf::from),
+    };
+    match pogo::federate::Front::start(cfg) {
+        Ok(front) => {
+            println!("pogo front listening on http://{}", front.addr());
+            println!(
+                "federating the v2 surface: POST /v2/jobs (rendezvous-hash placement) · \
+                 GET /v2/jobs[/:id[/result|/trace|/events]] · DELETE /v2/jobs/:id · \
+                 POST|GET /v2/artifacts[/:hash] (fan-out) · \
+                 GET /front/nodes · GET /healthz · GET /metrics"
+            );
+            front.wait();
             0
         }
         Err(e) => {

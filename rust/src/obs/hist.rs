@@ -122,6 +122,29 @@ impl Hist {
         out
     }
 
+    /// Upper bound (µs) of the bucket holding the `q`-quantile of the
+    /// recorded observations, by a cumulative walk of the ladder. Returns
+    /// `None` when nothing has been recorded; observations in the +Inf
+    /// bucket clamp to the last finite bound, so the estimate is always a
+    /// usable duration. `q` is clamped to `[0, 1]`.
+    pub fn quantile_us(&self, q: f64) -> Option<u64> {
+        let snap = self.snapshot();
+        let total: u64 = snap.iter().sum();
+        if total == 0 {
+            return None;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, &c) in snap.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return Some(BOUNDS_US[i.min(BOUNDS_US.len() - 1)]);
+            }
+        }
+        Some(BOUNDS_US[BOUNDS_US.len() - 1])
+    }
+
     /// Fold another histogram (same ladder by construction) into this one.
     pub fn merge_from(&self, other: &Hist) {
         for (dst, src) in self.buckets.iter().zip(other.buckets.iter()) {
@@ -380,6 +403,24 @@ mod tests {
         a.merge_from(&b);
         assert_eq!(a.count(), 3);
         assert_eq!(a.sum_us(), 119);
+    }
+
+    #[test]
+    fn quantiles_walk_the_cumulative_ladder() {
+        let h = Hist::new();
+        assert_eq!(h.quantile_us(0.5), None, "empty histogram has no quantiles");
+        for _ in 0..9 {
+            h.record_us(100);
+        }
+        h.record_us(2_000_000);
+        assert_eq!(h.quantile_us(0.0), Some(100));
+        assert_eq!(h.quantile_us(0.5), Some(100));
+        assert_eq!(h.quantile_us(0.95), Some(2_000_000));
+        assert_eq!(h.quantile_us(1.0), Some(2_000_000));
+        // +Inf observations clamp to the last finite bound.
+        let inf = Hist::new();
+        inf.record_us(u64::MAX);
+        assert_eq!(inf.quantile_us(0.5), Some(*BOUNDS_US.last().unwrap()));
     }
 
     #[test]

@@ -2,8 +2,11 @@
 //! threads, and the `/v1` (frozen) + `/v2` job routes over the
 //! [`JobQueue`].
 //!
-//! Endpoints (JSON bodies unless noted; `Connection: close` everywhere,
-//! the v2 event stream uses chunked transfer-encoding):
+//! Endpoints (JSON bodies unless noted; connections close after one
+//! request unless the client sends `Connection: keep-alive` — proxies
+//! like `pogo front` do, to reuse one warm socket per backend; the v2
+//! event stream uses chunked transfer-encoding and always consumes its
+//! connection):
 //!
 //! | method | path                  | what                                    |
 //! |--------|-----------------------|-----------------------------------------|
@@ -252,38 +255,65 @@ enum Routed {
     Events(u64, Arc<ProgressBus>),
 }
 
+/// Requests served per kept-alive connection before the daemon hangs up
+/// anyway — a bound so one client cannot pin a connection slot forever.
+const MAX_REQS_PER_CONN: usize = 256;
+
 fn handle_conn(mut stream: TcpStream, queue: &JobQueue, metrics: &ServeMetrics) {
+    for _ in 0..MAX_REQS_PER_CONN {
+        if !handle_one(&mut stream, queue, metrics) {
+            return;
+        }
+    }
+}
+
+/// Serve one request off the connection; `true` keeps it open for the
+/// next one (the client opted in with `Connection: keep-alive` and the
+/// response went out whole). Each request gets its own metrics count and
+/// latency sample — a reused socket must look identical to fresh ones in
+/// the histograms.
+fn handle_one(stream: &mut TcpStream, queue: &JobQueue, metrics: &ServeMetrics) -> bool {
     let t0 = crate::obs::enabled().then(std::time::Instant::now);
-    let (label, routed) = match http::read_request(&stream) {
-        Ok(req) => (route_label(&req.path), route(&req, queue, metrics)),
+    let (label, mut keep, routed) = match http::read_request(stream) {
+        Ok(req) => {
+            (route_label(&req.path), http::wants_keep_alive(&req), route(&req, queue, metrics))
+        }
         Err(e) => match e.response() {
             // A protocol violation we could answer: count it under the
-            // "unparsed" route (there is no trustworthy path to label).
-            Some(resp) => ("unparsed", Routed::Plain(resp)),
+            // "unparsed" route (there is no trustworthy path to label)
+            // and close — framing may be out of sync past this point.
+            Some(resp) => ("unparsed", false, Routed::Plain(resp)),
             None => {
                 // Transport-level failure before a request existed:
-                // nothing to label, nothing to time.
+                // nothing to label, nothing to time. On a kept-alive
+                // connection this is also the normal way clients leave.
                 log::debug!("client went away mid-request: {e}");
-                return;
+                return false;
             }
         },
     };
     let status = match routed {
         Routed::Plain(resp) => {
-            if let Err(e) = http::write_response(&mut stream, &resp) {
+            if let Err(e) = http::write_response_conn(stream, &resp, keep) {
                 log::debug!("client went away mid-response: {e}");
+                keep = false;
             }
             resp.status
         }
         // SSE durations cover the whole stream lifetime, keepalives
         // included — they land in the top histogram buckets by design.
-        Routed::Events(id, bus) => stream_events(&mut stream, id, &bus, metrics),
+        // The chunked stream consumes the connection.
+        Routed::Events(id, bus) => {
+            keep = false;
+            stream_events(stream, id, &bus, metrics)
+        }
     };
     let class = http::status_class(status);
     metrics.count_request(label, class);
     if let Some(t0) = t0 {
         crate::obs::hist::HTTP_REQUEST_SECONDS.hist(&[label, class]).record_since(t0);
     }
+    keep
 }
 
 /// Normalize a request path to one of a fixed set of route labels so the
@@ -325,13 +355,18 @@ fn route(req: &Request, queue: &JobQueue, metrics: &ServeMetrics) -> Routed {
     let segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
     let plain = |resp: Response| Routed::Plain(resp);
     match (req.method.as_str(), segs.as_slice()) {
-        ("GET", ["healthz"]) => plain(Response::json(
-            200,
-            &Json::obj(vec![
-                ("status", Json::str("ok")),
-                ("version", Json::str(crate::VERSION)),
-            ]),
-        )),
+        ("GET", ["healthz"]) => {
+            // `status` flips to "draining" during shutdown so a front
+            // door stops placing new jobs here while reads still work.
+            let draining = queue.is_draining();
+            plain(Response::json(
+                200,
+                &Json::obj(vec![
+                    ("status", Json::str(if draining { "draining" } else { "ok" })),
+                    ("version", Json::str(crate::VERSION)),
+                ]),
+            ))
+        }
         ("GET", ["metrics"]) => {
             let (depth, running) = queue.depth_running();
             let pool = crate::util::pool::pool_stats();
@@ -437,7 +472,17 @@ fn submit(req: &Request, queue: &JobQueue, v2: bool) -> Response {
         Err(e) => return Response::error(400, format!("{e:#}")),
     };
     let tenant = tenant_of(req);
-    match queue.submit_as(spec, &tenant) {
+    // A federated front door pins placement by assigning the id up
+    // front (`X-Pogo-Job-Id`) so every replica and re-list lands on the
+    // same id. Plain clients never send it.
+    let requested = match req.header("x-pogo-job-id") {
+        Some(v) => match v.trim().parse::<u64>() {
+            Ok(rid) => Some(rid),
+            Err(_) => return Response::error(400, format!("bad X-Pogo-Job-Id '{v:.40}'")),
+        },
+        None => None,
+    };
+    match queue.submit_with_id(spec, &tenant, requested) {
         Ok(id) => {
             let mut resp = Response::json(
                 202,
@@ -477,6 +522,8 @@ fn submit(req: &Request, queue: &JobQueue, v2: bool) -> Response {
                     .with_header("Retry-After", retry_after_s.to_string()),
                 SubmitError::InlineTooLarge { .. } => Response::error(413, msg),
                 SubmitError::ArtifactMissing { .. } => Response::error(404, msg),
+                // Replayed re-lists treat this as "already placed".
+                SubmitError::IdTaken(_) => Response::error(409, msg),
             }
         }
     }

@@ -15,6 +15,50 @@ use crate::util::json::Json;
 use anyhow::{anyhow, Result};
 use std::time::{Duration, Instant};
 
+/// First-retry backoff for [`retry_transport`]; doubles per attempt.
+const RETRY_BASE: Duration = Duration::from_millis(50);
+/// Backoff ceiling — retries never sleep longer than this.
+const RETRY_MAX_SLEEP: Duration = Duration::from_secs(2);
+
+/// Run `op` up to `attempts` times, retrying **only** on
+/// [`http::ReadError::Transport`] — the class where the peer vanished
+/// and the request provably did not change server state. Protocol
+/// errors (a real HTTP answer) return immediately: the server spoke,
+/// retrying would just repeat the answer. Backoff doubles from
+/// [`RETRY_BASE`] with a random jitter so a fleet of front doors
+/// probing the same dead backend does not reconnect in lockstep.
+///
+/// Callers must only route idempotent work through this (GETs, health
+/// probes). Submissions and cancels go through the single-shot path —
+/// a POST whose response was lost may still have been applied.
+pub fn retry_transport<T>(
+    attempts: u32,
+    mut op: impl FnMut() -> Result<T, http::ReadError>,
+) -> Result<T, http::ReadError> {
+    let mut delay = RETRY_BASE;
+    for attempt in 1.. {
+        match op() {
+            Ok(v) => return Ok(v),
+            Err(http::ReadError::Transport(_)) if attempt < attempts.max(1) => {
+                std::thread::sleep(jittered(delay, attempt));
+                delay = (delay * 2).min(RETRY_MAX_SLEEP);
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    unreachable!("loop returns on the final attempt");
+}
+
+/// `delay/2 .. delay`, seeded from the process-random hasher state so
+/// no clock or RNG dependency is needed.
+fn jittered(delay: Duration, attempt: u32) -> Duration {
+    use std::hash::{BuildHasher, Hasher};
+    let mut h = std::collections::hash_map::RandomState::new().build_hasher();
+    h.write_u32(attempt);
+    let half_ms = (delay.as_millis() as u64 / 2).max(1);
+    delay / 2 + Duration::from_millis(h.finish() % (half_ms + 1))
+}
+
 /// One decoded `event: progress` record from the v2 stream.
 #[derive(Clone, Copy, Debug)]
 pub struct StreamedStep {
@@ -29,16 +73,24 @@ pub struct StreamedStep {
 pub struct ServeClient {
     addr: String,
     api_key: Option<String>,
+    retries: u32,
 }
 
 impl ServeClient {
     pub fn new(addr: impl Into<String>) -> ServeClient {
-        ServeClient { addr: addr.into(), api_key: None }
+        ServeClient { addr: addr.into(), api_key: None, retries: 1 }
     }
 
     /// Attach an API key (the daemon's tenant identity) to every call.
     pub fn with_api_key(mut self, key: impl Into<String>) -> ServeClient {
         self.api_key = Some(key.into());
+        self
+    }
+
+    /// Allow up to `attempts` tries for idempotent GETs (transport
+    /// failures only — see [`retry_transport`]). Writes never retry.
+    pub fn with_retries(mut self, attempts: u32) -> ServeClient {
+        self.retries = attempts.max(1);
         self
     }
 
@@ -54,8 +106,10 @@ impl ServeClient {
     }
 
     fn call(&self, method: &str, path: &str, body: Option<&str>) -> Result<Json> {
-        let (code, _, text) =
-            http::request_full(&self.addr, method, path, body, &self.headers())?;
+        let attempts = if method == "GET" { self.retries } else { 1 };
+        let (code, _, text) = retry_transport(attempts, || {
+            http::request_full(&self.addr, method, path, body, &self.headers())
+        })?;
         let parsed = Json::parse(&text)
             .map_err(|e| anyhow!("{method} {path}: HTTP {code} with non-JSON body: {e}"))?;
         if !(200..300).contains(&code) {
@@ -127,6 +181,12 @@ impl ServeClient {
     /// Cancel; returns the state after the call.
     pub fn cancel(&self, id: JobId) -> Result<Json> {
         self.call("DELETE", &format!("/v1/jobs/{id}"), None)
+    }
+
+    /// v2 cancel (`DELETE /v2/jobs/:id`) — the route a federated front
+    /// door proxies; same state semantics as [`ServeClient::cancel`].
+    pub fn cancel_v2(&self, id: JobId) -> Result<Json> {
+        self.call("DELETE", &format!("/v2/jobs/{id}"), None)
     }
 
     /// All jobs, compact.
@@ -228,5 +288,103 @@ impl ServeClient {
             )),
             None => Err(anyhow!("job {id} status has no state")),
         }
+    }
+
+    /// [`ServeClient::wait_terminal`] over the v2 surface — the only
+    /// surface a federated front door (`pogo front`) proxies.
+    pub fn wait_terminal_v2(&self, id: JobId, timeout: Duration) -> Result<Json> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let status = self.status_v2(id)?;
+            match status.get("state").as_str() {
+                Some("done" | "failed" | "cancelled") => return Ok(status),
+                Some(_) if Instant::now() < deadline => {
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Some(s) => return Err(anyhow!("job {id} still '{s}' after {timeout:?}")),
+                None => return Err(anyhow!("job {id} status has no state")),
+            }
+        }
+    }
+
+    /// [`ServeClient::wait_result`] over the v2 surface.
+    pub fn wait_result_v2(&self, id: JobId, timeout: Duration) -> Result<Json> {
+        let status = self.wait_terminal_v2(id, timeout)?;
+        match status.get("state").as_str() {
+            Some("done") => self.result_v2(id),
+            Some(other) => Err(anyhow!(
+                "job {id} ended as '{other}': {}",
+                status.get("error").as_str().unwrap_or("(no error recorded)")
+            )),
+            None => Err(anyhow!("job {id} status has no state")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::net::TcpListener;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    /// A listener that drops its first `flaky_for` connections on the
+    /// floor (accept, then hang up — the classic restarting-backend
+    /// window) and answers every later request with 200 JSON. Returns
+    /// (addr, connection counter).
+    fn spawn_flaky(flaky_for: usize) -> (String, Arc<AtomicUsize>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let conns = Arc::new(AtomicUsize::new(0));
+        let counter = conns.clone();
+        std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                let Ok(mut stream) = conn else { break };
+                let n = counter.fetch_add(1, Ordering::SeqCst);
+                if n < flaky_for {
+                    drop(stream); // EOF before any status line: Transport
+                    continue;
+                }
+                if http::read_request(&stream).is_err() {
+                    continue;
+                }
+                let body = "{\"ok\": true}";
+                let resp = format!(
+                    "HTTP/1.1 200 OK\r\nContent-Type: application/json\r\n\
+                     Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+                    body.len()
+                );
+                stream.write_all(resp.as_bytes()).ok();
+            }
+        });
+        (addr, conns)
+    }
+
+    #[test]
+    fn flaky_listener_succeeds_on_retry() {
+        let (addr, conns) = spawn_flaky(2);
+        let client = ServeClient::new(&addr).with_retries(4);
+        let j = client.healthz().expect("retries should ride out two dropped connections");
+        assert_eq!(j.get("ok").as_bool(), Some(true));
+        assert_eq!(conns.load(Ordering::SeqCst), 3, "two drops + one success");
+    }
+
+    #[test]
+    fn post_is_never_retried() {
+        let (addr, conns) = spawn_flaky(usize::MAX);
+        let client = ServeClient::new(&addr).with_retries(4);
+        let spec = JobSpec::new(super::super::job::ProblemKind::Quartic, 2, 2, 4);
+        let err = client.submit_v2(&spec).expect_err("dead listener must fail the POST");
+        assert!(err.to_string().contains("transport"), "{err:#}");
+        assert_eq!(conns.load(Ordering::SeqCst), 1, "a POST gets exactly one attempt");
+    }
+
+    #[test]
+    fn exhausted_retries_surface_the_transport_error() {
+        let (addr, conns) = spawn_flaky(usize::MAX);
+        let client = ServeClient::new(&addr).with_retries(3);
+        client.healthz().expect_err("every attempt drops");
+        assert_eq!(conns.load(Ordering::SeqCst), 3);
     }
 }

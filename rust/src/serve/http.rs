@@ -10,8 +10,18 @@
 //! [`write_stream_head`] / [`write_chunk`] / [`finish_chunked`] stream a
 //! chunked response (the v2 SSE event feed). Client side: [`request`]
 //! performs one buffered round-trip and [`stream_sse`] consumes a live
-//! `text/event-stream`. Every connection carries exactly one
-//! request/response pair.
+//! `text/event-stream`.
+//!
+//! By default every connection carries exactly one request/response
+//! pair. Connection reuse is **opt-in by explicit
+//! `Connection: keep-alive`** (HTTP/1.0 style): the one-shot clients
+//! here read responses to EOF, so default-on HTTP/1.1 persistence would
+//! hang them. [`Conn`] is the persistent counterpart — it sends the
+//! header and frames responses by `Content-Length` — and the server
+//! loop honors it via [`wants_keep_alive`]. That pair is what the
+//! federated front door's proxy data plane rides: one warm TCP
+//! connection per backend instead of a connect per proxied request,
+//! plus [`relay_sse_blocks`] to pass SSE streams through byte-for-byte.
 
 use anyhow::{anyhow, Context, Result};
 use std::io::{BufRead, BufReader, Read, Write};
@@ -86,6 +96,10 @@ impl std::fmt::Display for ReadError {
         }
     }
 }
+
+// `?` promotes a ReadError into anyhow::Error at call sites that do not
+// care about the Protocol/Transport split.
+impl std::error::Error for ReadError {}
 
 /// One response about to be written.
 #[derive(Debug)]
@@ -342,12 +356,25 @@ pub fn read_request(stream: &TcpStream) -> Result<Request, ReadError> {
 
 /// Write one `Connection: close` response.
 pub fn write_response(stream: &mut TcpStream, resp: &Response) -> std::io::Result<()> {
+    write_response_conn(stream, resp, false)
+}
+
+/// [`write_response`] with the connection token chosen by the caller's
+/// keep-alive decision (see [`wants_keep_alive`]). The `Content-Length`
+/// is always present, so a persistent peer can frame the body without
+/// waiting for EOF.
+pub fn write_response_conn(
+    stream: &mut TcpStream,
+    resp: &Response,
+    keep_alive: bool,
+) -> std::io::Result<()> {
     let mut head = format!(
-        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n",
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n",
         resp.status,
         status_reason(resp.status),
         resp.content_type,
-        resp.body.len()
+        resp.body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
     );
     for (name, value) in &resp.headers {
         head.push_str(&format!("{name}: {value}\r\n"));
@@ -356,6 +383,15 @@ pub fn write_response(stream: &mut TcpStream, resp: &Response) -> std::io::Resul
     stream.write_all(head.as_bytes())?;
     stream.write_all(&resp.body)?;
     stream.flush()
+}
+
+/// Whether the peer explicitly opted into connection reuse. Persistence
+/// here is HTTP/1.0-style opt-in — only a literal
+/// `Connection: keep-alive` request header keeps the connection open,
+/// anything else (including its absence) closes after one response — so
+/// existing read-to-EOF clients and `curl` keep working unchanged.
+pub fn wants_keep_alive(req: &Request) -> bool {
+    req.header("connection").map(|v| v.eq_ignore_ascii_case("keep-alive")).unwrap_or(false)
 }
 
 /// Begin a chunked streaming response (what the SSE endpoint emits);
@@ -412,37 +448,24 @@ fn parse_status_line(line: &str) -> Option<u16> {
 
 /// Client side: one request/response round-trip. Returns (status, body).
 pub fn request(addr: &str, method: &str, path: &str, body: Option<&str>) -> Result<(u16, String)> {
-    let (status, _, body) = request_full(addr, method, path, body, &[])?;
+    let (status, _, body) =
+        request_full(addr, method, path, body, &[]).map_err(|e| anyhow!("{e}"))?;
     Ok((status, body))
 }
 
 /// [`request`] with extra request headers (e.g. `X-Api-Key`); returns
-/// (status, response headers, body).
+/// (status, response headers, body). Errors are typed:
+/// [`ReadError::Transport`] for connect/IO failures and vanished peers
+/// (the retryable class — see `client::retry_transport`), never for a
+/// well-formed HTTP error response (those return `Ok` with the status).
 pub fn request_full(
     addr: &str,
     method: &str,
     path: &str,
     body: Option<&str>,
     headers: &[(&str, &str)],
-) -> Result<(u16, Vec<(String, String)>, String)> {
-    let mut stream =
-        TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
-    stream.set_read_timeout(Some(IO_TIMEOUT)).ok();
-    stream.set_write_timeout(Some(IO_TIMEOUT)).ok();
-    let body = body.unwrap_or("");
-    let mut head = client_head(method, path, addr);
-    head.push_str(&format!(
-        "Content-Type: application/json\r\nContent-Length: {}\r\n",
-        body.len()
-    ));
-    for (name, value) in headers {
-        head.push_str(&format!("{name}: {value}\r\n"));
-    }
-    head.push_str("\r\n");
-    stream.write_all(head.as_bytes())?;
-    stream.write_all(body.as_bytes())?;
-    stream.flush()?;
-    read_client_response(stream, addr)
+) -> Result<(u16, Vec<(String, String)>, String), ReadError> {
+    request_typed(addr, method, path, "application/json", body.unwrap_or("").as_bytes(), headers)
 }
 
 /// [`request_full`] with a binary body sent as `application/octet-stream`
@@ -454,40 +477,53 @@ pub fn request_bytes(
     path: &str,
     body: &[u8],
     headers: &[(&str, &str)],
-) -> Result<(u16, Vec<(String, String)>, String)> {
-    let mut stream =
-        TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+) -> Result<(u16, Vec<(String, String)>, String), ReadError> {
+    request_typed(addr, method, path, "application/octet-stream", body, headers)
+}
+
+/// The shared one-shot client: connect, send, drain to EOF.
+fn request_typed(
+    addr: &str,
+    method: &str,
+    path: &str,
+    content_type: &str,
+    body: &[u8],
+    headers: &[(&str, &str)],
+) -> Result<(u16, Vec<(String, String)>, String), ReadError> {
+    let transport = |e: std::io::Error| ReadError::Transport(anyhow!("{method} {addr}: {e}"));
+    let mut stream = TcpStream::connect(addr)
+        .map_err(|e| ReadError::Transport(anyhow!("connecting to {addr}: {e}")))?;
     stream.set_read_timeout(Some(IO_TIMEOUT)).ok();
     stream.set_write_timeout(Some(IO_TIMEOUT)).ok();
     let mut head = client_head(method, path, addr);
-    head.push_str(&format!(
-        "Content-Type: application/octet-stream\r\nContent-Length: {}\r\n",
-        body.len()
-    ));
+    head.push_str(&format!("Content-Type: {content_type}\r\nContent-Length: {}\r\n", body.len()));
     for (name, value) in headers {
         head.push_str(&format!("{name}: {value}\r\n"));
     }
     head.push_str("\r\n");
-    stream.write_all(head.as_bytes())?;
-    stream.write_all(body)?;
-    stream.flush()?;
+    stream.write_all(head.as_bytes()).map_err(transport)?;
+    stream.write_all(body).map_err(transport)?;
+    stream.flush().map_err(transport)?;
     read_client_response(stream, addr)
 }
 
 /// Drain and parse one buffered `Connection: close` response — the
-/// shared tail of [`request_full`] and [`request_bytes`].
+/// shared tail of [`request_full`] and [`request_bytes`]. A peer that
+/// closes without a parseable status line is a transport failure (it
+/// accepted the connection and died — the flaky-listener case retries
+/// care about), not a protocol one: the client has no one to answer.
 fn read_client_response(
     mut stream: TcpStream,
     addr: &str,
-) -> Result<(u16, Vec<(String, String)>, String)> {
+) -> Result<(u16, Vec<(String, String)>, String), ReadError> {
     let mut raw = Vec::new();
-    stream.read_to_end(&mut raw).context("reading response")?;
+    stream
+        .read_to_end(&mut raw)
+        .map_err(|e| ReadError::Transport(anyhow!("reading response from {addr}: {e}")))?;
     let text = String::from_utf8_lossy(&raw);
-    let status = text
-        .lines()
-        .next()
-        .and_then(parse_status_line)
-        .ok_or_else(|| anyhow!("malformed response from {addr}: {:.120}", text))?;
+    let status = text.lines().next().and_then(parse_status_line).ok_or_else(|| {
+        ReadError::Transport(anyhow!("no usable response from {addr}: '{:.120}'", text))
+    })?;
     let (head_text, payload) = match text.find("\r\n\r\n") {
         Some(i) => (text[..i].to_string(), text[i + 4..].to_string()),
         None => (text.to_string(), String::new()),
@@ -499,6 +535,104 @@ fn read_client_response(
         .map(|(k, v)| (k.trim().to_string(), v.trim().to_string()))
         .collect();
     Ok((status, resp_headers, payload))
+}
+
+/// A persistent client connection: every request carries
+/// `Connection: keep-alive` and responses are framed by their
+/// `Content-Length`, so sequential round-trips reuse one TCP socket.
+/// This is the front door's data-plane primitive — one warm connection
+/// per backend instead of a connect per proxied request. Any transport
+/// error poisons the connection; callers reconnect (the socket is cheap,
+/// the type just makes reuse the common case).
+pub struct Conn {
+    addr: String,
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Conn {
+    pub fn connect(addr: &str) -> Result<Conn, ReadError> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| ReadError::Transport(anyhow!("connecting to {addr}: {e}")))?;
+        stream.set_read_timeout(Some(IO_TIMEOUT)).ok();
+        stream.set_write_timeout(Some(IO_TIMEOUT)).ok();
+        let writer = stream
+            .try_clone()
+            .map_err(|e| ReadError::Transport(anyhow!("cloning connection: {e}")))?;
+        Ok(Conn { addr: addr.to_string(), reader: BufReader::new(stream), writer })
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// One buffered round-trip on the persistent connection; returns
+    /// (status, response headers, body bytes). A transport error means
+    /// the connection is dead — drop the `Conn` and reconnect.
+    pub fn roundtrip(
+        &mut self,
+        method: &str,
+        path: &str,
+        content_type: &str,
+        body: &[u8],
+        headers: &[(&str, &str)],
+    ) -> Result<(u16, Vec<(String, String)>, Vec<u8>), ReadError> {
+        let addr = self.addr.clone();
+        let transport = |e: std::io::Error| ReadError::Transport(anyhow!("{method} {addr}: {e}"));
+        let mut head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: {}\r\nConnection: keep-alive\r\n\
+             Content-Type: {content_type}\r\nContent-Length: {}\r\n",
+            self.addr,
+            body.len()
+        );
+        for (name, value) in headers {
+            head.push_str(&format!("{name}: {value}\r\n"));
+        }
+        head.push_str("\r\n");
+        self.writer.write_all(head.as_bytes()).map_err(transport)?;
+        self.writer.write_all(body).map_err(transport)?;
+        self.writer.flush().map_err(transport)?;
+
+        let status_line = read_line_capped(&mut self.reader, "status line")?;
+        let status = parse_status_line(&status_line).ok_or_else(|| {
+            ReadError::Transport(anyhow!(
+                "no usable response from {} ('{:.120}')",
+                self.addr,
+                status_line.trim_end()
+            ))
+        })?;
+        let mut resp_headers = Vec::new();
+        let mut content_length = 0usize;
+        for _ in 0..=MAX_HEADERS {
+            let h = read_line_capped(&mut self.reader, "response header")?;
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = h.split_once(':') {
+                let (k, v) = (k.trim().to_string(), v.trim().to_string());
+                if k.eq_ignore_ascii_case("content-length") {
+                    content_length = v.parse().map_err(|_| {
+                        ReadError::Transport(anyhow!(
+                            "malformed Content-Length '{v}' from {}",
+                            self.addr
+                        ))
+                    })?;
+                }
+                resp_headers.push((k, v));
+            }
+        }
+        if content_length > MAX_BODY {
+            return Err(ReadError::Transport(anyhow!(
+                "response body of {content_length} bytes exceeds the {MAX_BODY} cap"
+            )));
+        }
+        let mut body_out = vec![0u8; content_length];
+        self.reader.read_exact(&mut body_out).map_err(|e| {
+            ReadError::Transport(anyhow!("truncated response from {}: {e}", self.addr))
+        })?;
+        Ok((status, resp_headers, body_out))
+    }
 }
 
 /// Client side: open a streaming GET and hand each SSE event to
@@ -598,6 +732,104 @@ pub fn stream_sse(
                 continue; // pure keepalive block
             }
             if !on_event(event, &data) {
+                return Ok(());
+            }
+        }
+    }
+}
+
+/// Relay-grade SSE client: like [`stream_sse`] but hands over each raw
+/// blank-line-terminated block — *including* its trailing `\n\n` and any
+/// comment/keepalive lines — so a proxy hop can forward the stream
+/// byte-for-bit without re-encoding. Two behavioural differences from
+/// `stream_sse` matter to the front door: keepalive comment blocks are
+/// delivered (the next hop's client needs them to keep its own read
+/// timeout alive), and a mid-stream EOF without the terminating 0-chunk
+/// is a [`ReadError::Transport`] error rather than a clean return — that
+/// is the failover cue that the backend died under the stream. A non-200
+/// answer surfaces as [`ReadError::Protocol`] carrying the proxied
+/// status and body so the relay can answer its own client verbatim.
+pub fn relay_sse_blocks(
+    addr: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    deadline: Duration,
+    on_block: &mut dyn FnMut(&[u8]) -> bool,
+) -> Result<(), ReadError> {
+    let transport = |msg: String| ReadError::Transport(anyhow!(msg));
+    let stream = TcpStream::connect(addr)
+        .map_err(|e| ReadError::Transport(anyhow!("connecting to {addr}: {e}")))?;
+    stream.set_read_timeout(Some(IO_TIMEOUT)).ok();
+    stream.set_write_timeout(Some(IO_TIMEOUT)).ok();
+    let mut out = stream
+        .try_clone()
+        .map_err(|e| ReadError::Transport(anyhow!("cloning connection: {e}")))?;
+    let mut head = client_head("GET", path, addr);
+    head.push_str("Accept: text/event-stream\r\n");
+    for (name, value) in headers {
+        head.push_str(&format!("{name}: {value}\r\n"));
+    }
+    head.push_str("\r\n");
+    out.write_all(head.as_bytes())
+        .and_then(|()| out.flush())
+        .map_err(|e| ReadError::Transport(anyhow!("GET {addr}{path}: {e}")))?;
+
+    let until = Instant::now() + deadline;
+    let mut reader = BufReader::new(stream);
+    let status_line = read_line_capped(&mut reader, "status line")?;
+    let status = parse_status_line(&status_line)
+        .ok_or_else(|| transport(format!("no usable SSE response from {addr}")))?;
+    let mut chunked = false;
+    for _ in 0..=MAX_HEADERS {
+        let h = read_line_capped(&mut reader, "header")?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("transfer-encoding")
+                && v.to_ascii_lowercase().contains("chunked")
+            {
+                chunked = true;
+            }
+        }
+    }
+    if status != 200 {
+        let mut body = String::new();
+        (&mut reader).take(4096).read_to_string(&mut body).ok();
+        return Err(ReadError::protocol(status, body.trim()));
+    }
+    if !chunked {
+        return Err(transport(format!("GET {path}: expected a chunked event stream")));
+    }
+
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        if Instant::now() > until {
+            return Err(transport(format!(
+                "SSE relay on {path}: no terminal event after {deadline:?}"
+            )));
+        }
+        let size_line = read_line_capped(&mut reader, "chunk size")?;
+        if size_line.trim().is_empty() {
+            // EOF mid-stream: the backend vanished without the 0-chunk
+            // goodbye. This is what re-list failover keys on.
+            return Err(transport(format!("SSE stream from {addr} dropped mid-flight")));
+        }
+        let size = parse_chunk_size(&size_line)
+            .ok_or_else(|| transport(format!("malformed SSE chunk size from {addr}")))?;
+        if size == 0 {
+            return Ok(());
+        }
+        let mut chunk = vec![0u8; size + 2]; // data + CRLF
+        reader
+            .read_exact(&mut chunk)
+            .map_err(|e| transport(format!("truncated SSE chunk from {addr}: {e}")))?;
+        buf.extend_from_slice(&chunk[..size]);
+        while let Some(split) = buf.windows(2).position(|w| w == b"\n\n") {
+            let rest = buf.split_off(split + 2);
+            let block = std::mem::replace(&mut buf, rest);
+            if !on_block(&block) {
                 return Ok(());
             }
         }
@@ -870,6 +1102,124 @@ mod tests {
         assert!(seen[..3].iter().all(|(e, _)| e == "progress"));
         assert_eq!(seen[3].0, "state");
         assert!(seen[3].1.contains("done"));
+    }
+
+    #[test]
+    fn keep_alive_reuses_one_connection() {
+        // A server that honours `Connection: keep-alive` the way the
+        // daemon does: loop read_request → respond → hang up only when
+        // the client didn't opt in. The accept counter proves reuse.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let conns = Arc::new(AtomicUsize::new(0));
+        let conns_srv = conns.clone();
+        std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                let Ok(mut stream) = conn else { break };
+                conns_srv.fetch_add(1, Ordering::SeqCst);
+                loop {
+                    let req = match read_request(&stream) {
+                        Ok(req) => req,
+                        Err(_) => break,
+                    };
+                    let keep = wants_keep_alive(&req);
+                    let resp = Response::json(
+                        200,
+                        &crate::util::json::Json::obj(vec![(
+                            "path",
+                            crate::util::json::Json::str(req.path.clone()),
+                        )]),
+                    );
+                    if write_response_conn(&mut stream, &resp, keep).is_err() || !keep {
+                        break;
+                    }
+                }
+            }
+        });
+
+        let mut conn = Conn::connect(&addr).unwrap();
+        for i in 0..5 {
+            let path = format!("/v2/jobs/{i}");
+            let (status, _, body) = conn.roundtrip("GET", &path, "application/json", b"", &[])
+                .unwrap();
+            assert_eq!(status, 200);
+            let j = crate::util::json::Json::parse(&String::from_utf8(body).unwrap()).unwrap();
+            assert_eq!(j.get("path").as_str(), Some(path.as_str()));
+        }
+        assert_eq!(
+            conns.load(Ordering::SeqCst),
+            1,
+            "five sequential round-trips should share one TCP connection"
+        );
+
+        // One-shot clients still close per request.
+        let (status, _, _) = request_full(&addr, "GET", "/healthz", None, &[]).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(conns.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn sse_relay_preserves_event_boundaries_through_a_second_hop() {
+        // Origin → hop → client. The origin writes four known blocks in
+        // fixed 7-byte chunk slices so chunk boundaries never line up
+        // with event boundaries; the hop re-emits whatever
+        // relay_sse_blocks hands it. The client must see the original
+        // blocks byte-for-bit — keepalive comments included.
+        let blocks: Vec<&[u8]> = vec![
+            b": keepalive\n\n",
+            b"event: progress\ndata: {\"step\":1,\"loss\":0.5}\n\n",
+            b"event: progress\ndata: {\"step\":2,\"loss\":0.25}\n\n",
+            b"event: state\ndata: {\"id\":7,\"state\":\"done\"}\n\n",
+        ];
+        let stream_bytes: Vec<u8> = blocks.concat();
+
+        let origin = TcpListener::bind("127.0.0.1:0").unwrap();
+        let origin_addr = origin.local_addr().unwrap().to_string();
+        std::thread::spawn(move || {
+            let (mut stream, _) = origin.accept().unwrap();
+            read_request(&stream).unwrap();
+            write_stream_head(&mut stream, 200, "text/event-stream", &[]).unwrap();
+            for piece in stream_bytes.chunks(7) {
+                write_chunk(&mut stream, piece).unwrap();
+            }
+            finish_chunked(&mut stream).unwrap();
+        });
+
+        // The relay hop: consume from the origin, re-chunk each block
+        // onto its own downstream client untouched.
+        let hop = TcpListener::bind("127.0.0.1:0").unwrap();
+        let hop_addr = hop.local_addr().unwrap().to_string();
+        std::thread::spawn(move || {
+            let (mut stream, _) = hop.accept().unwrap();
+            read_request(&stream).unwrap();
+            write_stream_head(&mut stream, 200, "text/event-stream", &[]).unwrap();
+            relay_sse_blocks(
+                &origin_addr,
+                "/v2/jobs/7/events",
+                &[],
+                Duration::from_secs(10),
+                &mut |block| write_chunk(&mut stream, block).is_ok(),
+            )
+            .unwrap();
+            finish_chunked(&mut stream).unwrap();
+        });
+
+        let mut relayed: Vec<Vec<u8>> = Vec::new();
+        relay_sse_blocks(
+            &hop_addr,
+            "/v2/jobs/7/events",
+            &[],
+            Duration::from_secs(10),
+            &mut |block| {
+                relayed.push(block.to_vec());
+                true
+            },
+        )
+        .unwrap();
+        let want: Vec<Vec<u8>> = blocks.iter().map(|b| b.to_vec()).collect();
+        assert_eq!(relayed, want, "relay must preserve block boundaries byte-for-bit");
     }
 
     #[test]

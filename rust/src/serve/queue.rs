@@ -19,22 +19,29 @@
 //! Shutdown is graceful: workers stop claiming new jobs and drain the
 //! ones they are running; still-queued jobs stay queued (and, with a
 //! state dir, persisted for the next daemon). With a `state_dir`, every
-//! job's spec + state lands in `job-<id>.json` and jobs with
+//! job's spec + state lands in `job-<id>.json`, jobs with
 //! `checkpoint_every > 0` (either domain — complex stores checkpoint as
-//! interleaved `c64` pairs) checkpoint to `job-<id>.ckpt`; a restarted
-//! queue re-lists unfinished jobs and resumes them from their
-//! checkpoints.
+//! interleaved `c64` pairs) checkpoint to `job-<id>.ckpt`, and every
+//! terminal job spills its full loss series + final iterate to
+//! `job-<id>.series.ckpt` (POGO-CKPT framing, f64). A restarted queue
+//! re-lists unfinished jobs, resumes them from their checkpoints, and
+//! serves recovered terminal jobs' v2 results — series and iterate
+//! bit-identical — from the spill, which is what lets the federated
+//! front door treat a backend restart as a non-event.
 
 use super::job::{
-    self, FinalIterate, JobOutcome, JobResult, JobSpec, JobState, RunCtl, StepProgress,
+    self, FinalIterate, JobDomain, JobOutcome, JobResult, JobSpec, JobState, RunCtl, StepProgress,
 };
 use super::metrics::ServeMetrics;
 use super::problem::ProblemSource;
 use crate::artifact::{Artifact, ArtifactStore, Provenance};
+use crate::coordinator::{checkpoint, ParamStore};
+use crate::linalg::Mat;
+use crate::obs::hist::Hist;
 use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
 use std::collections::{BTreeMap, VecDeque};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -129,6 +136,9 @@ pub enum SubmitError {
     InlineTooLarge { bytes: usize, cap: usize },
     /// The referenced artifact hash is not in the daemon's store.
     ArtifactMissing { hash: String },
+    /// A submission requested an explicit id that is already tracked
+    /// (federated re-list/replay collisions map to `409`).
+    IdTaken(JobId),
 }
 
 impl std::fmt::Display for SubmitError {
@@ -156,8 +166,40 @@ impl std::fmt::Display for SubmitError {
                      or `pogo compile`)"
                 )
             }
+            SubmitError::IdTaken(id) => {
+                write!(f, "job id {id} already exists on this daemon")
+            }
         }
     }
+}
+
+/// `Retry-After` hint (seconds) for admission rejections. Once the
+/// process has observed queue waits and run times (the PR-9 `obs::hist`
+/// families), a new arrival is estimated to ride out the median queue
+/// wait plus the backlog ahead of it draining at one median run per
+/// worker slot. Before any observation — cold start, or a daemon running
+/// without `POGO_OBS=1` — it falls back to the old backlog-scaled
+/// constant. Clamped to `[1, 600]` seconds.
+pub fn retry_after_hint(pending: usize, workers: usize) -> u64 {
+    retry_after_from(
+        pending,
+        workers,
+        crate::obs::hist::JOB_QUEUE_WAIT_SECONDS.hist0(),
+        crate::obs::hist::JOB_RUN_SECONDS.hist0(),
+    )
+}
+
+/// [`retry_after_hint`] against explicit histograms (unit-testable
+/// without touching the process-wide families).
+fn retry_after_from(pending: usize, workers: usize, wait: &Hist, run: &Hist) -> u64 {
+    if wait.count() == 0 && run.count() == 0 {
+        return 1 + (pending as u64).min(59);
+    }
+    let p50_wait_us = wait.quantile_us(0.5).unwrap_or(0);
+    let p50_run_us = run.quantile_us(0.5).unwrap_or(0);
+    let backlog_us = (pending as u64).saturating_mul(p50_run_us) / workers.max(1) as u64;
+    let est_s = p50_wait_us.saturating_add(backlog_us).div_ceil(1_000_000);
+    est_s.clamp(1, 600)
 }
 
 /// One event on a job's progress bus.
@@ -281,14 +323,15 @@ struct Entry {
     /// Last [`TAIL_LEN`] (step, wall_s, loss) records (v1 status tail).
     tail: VecDeque<(usize, f64, f64)>,
     /// Live (step, loss) series, bounded at [`SERIES_CAP`] points (the
-    /// oldest drop first past the cap). In-memory only: a restarted
-    /// daemon keeps the result scalars (from the state file) but not
-    /// the series.
+    /// oldest drop first past the cap).
     series: VecDeque<(usize, f64)>,
     /// The series, frozen into an `Arc` at the terminal transition so
-    /// result reads are O(1) under the queue lock.
+    /// result reads are O(1) under the queue lock. With a state dir it
+    /// is also spilled to `job-<id>.series.ckpt` and recovered on
+    /// restart, so the v2 result surface survives the daemon.
     series_final: Option<Arc<Vec<(usize, f64)>>>,
-    /// Final iterate (v2 result surface; in-memory only).
+    /// Final iterate (v2 result surface; spilled and recovered alongside
+    /// the series).
     iterate: Option<Arc<FinalIterate>>,
     bus: Arc<ProgressBus>,
     cancel: Arc<AtomicBool>,
@@ -428,8 +471,22 @@ impl JobQueue {
     /// FIFO.
     pub fn submit_as(
         &self,
+        spec: JobSpec,
+        tenant: &str,
+    ) -> std::result::Result<JobId, SubmitError> {
+        self.submit_with_id(spec, tenant, None)
+    }
+
+    /// [`submit_as`](Self::submit_as) with an optional caller-chosen id.
+    /// The federated front door assigns ids itself (so the public id is
+    /// identical on whichever backend the job lands on, including after a
+    /// re-list) and passes them down via `X-Pogo-Job-Id`; a requested id
+    /// that is already tracked is refused with [`SubmitError::IdTaken`].
+    pub fn submit_with_id(
+        &self,
         mut spec: JobSpec,
         tenant: &str,
+        requested: Option<JobId>,
     ) -> std::result::Result<JobId, SubmitError> {
         // The flight recorder's epoch is the submission instant, so the
         // `admit` span below covers everything admission does (payload
@@ -466,9 +523,10 @@ impl JobQueue {
                 self.inner.metrics.rejected.fetch_add(1, Ordering::Relaxed);
                 return Err(SubmitError::Draining);
             }
-            // Retry hint: admission pressure drains one backlog slot at a
-            // time, so scale the hint with the backlog (bounded, seconds).
-            let retry_after_s = 1 + (st.pending.len() as u64).min(59);
+            // Retry hint: estimated from the observed queue-wait/run-time
+            // histograms when they have data; the old backlog-scaled
+            // constant covers the cold start (see retry_after_hint).
+            let retry_after_s = retry_after_hint(st.pending.len(), self.inner.cfg.workers);
             if adm.tenant_quota > 0 {
                 let active = st.active_by_tenant.get(tenant).copied().unwrap_or(0);
                 if active >= adm.tenant_quota {
@@ -496,8 +554,24 @@ impl JobQueue {
                 self.inner.metrics.rejected.fetch_add(1, Ordering::Relaxed);
                 return Err(SubmitError::Full(self.inner.cfg.capacity));
             }
-            let id = st.next_id;
-            st.next_id += 1;
+            let id = match requested {
+                Some(rid) => {
+                    if st.jobs.contains_key(&rid) {
+                        drop(st);
+                        return reject(
+                            &self.inner.metrics.rejected_invalid,
+                            SubmitError::IdTaken(rid),
+                        );
+                    }
+                    st.next_id = st.next_id.max(rid + 1);
+                    rid
+                }
+                None => {
+                    let id = st.next_id;
+                    st.next_id += 1;
+                    id
+                }
+            };
             st.admit_accounting(tenant, cost);
             let queued_from_us = if crate::obs::enabled() {
                 let t = trace.now_us();
@@ -804,6 +878,13 @@ impl JobQueue {
         }
     }
 
+    /// Whether the queue has begun draining — surfaced through
+    /// `/healthz` so a federated front door stops placing new jobs here
+    /// while still proxying reads.
+    pub fn is_draining(&self) -> bool {
+        self.inner.state.lock().unwrap().draining
+    }
+
     /// Flip the queue into draining (workers stop claiming and exit once
     /// idle) without blocking on them — what `Server`'s `Drop` uses.
     pub fn begin_drain(&self) {
@@ -859,6 +940,66 @@ fn entry_json(id: JobId, e: &Entry, with_tail: bool) -> Json {
         ));
     }
     Json::obj(fields)
+}
+
+/// Name prefix of the iterate parameter inside a series spill. The
+/// iterate's shape metadata rides the parameter *name*
+/// (`iterate/<domain>/<batch>/<p>/<n>`), so the POGO-CKPT header needs
+/// no extension for the spill to be self-describing.
+const SPILL_ITERATE_PREFIX: &str = "iterate/";
+
+/// Encode a terminal job's series + iterate as a `ParamStore<f64>` for
+/// the POGO-CKPT container: `series` is a 2×k free matrix (row 0 the
+/// step numbers — exact in f64 below 2⁵³ — row 1 the losses) and the
+/// iterate a 1×W free matrix of its f32 words, widened to f64 (exact,
+/// so the round-trip back to f32 is bit-identical).
+fn spill_store(series: &[(usize, f64)], iterate: Option<&FinalIterate>) -> ParamStore<f64> {
+    let mut store: ParamStore<f64> = ParamStore::new();
+    if !series.is_empty() {
+        let mut data = Vec::with_capacity(2 * series.len());
+        data.extend(series.iter().map(|&(step, _)| step as f64));
+        data.extend(series.iter().map(|&(_, loss)| loss));
+        store.add_free("series", Mat::from_vec(2, series.len(), data));
+    }
+    if let Some(it) = iterate {
+        let name = format!(
+            "{SPILL_ITERATE_PREFIX}{}/{}/{}/{}",
+            it.domain.name(),
+            it.batch,
+            it.p,
+            it.n
+        );
+        let wide: Vec<f64> = it.data.iter().map(|&w| w as f64).collect();
+        store.add_free(name, Mat::from_vec(1, wide.len(), wide));
+    }
+    store
+}
+
+/// Decode a series spill written by [`spill_store`].
+fn read_spill(path: &Path) -> Result<(Vec<(usize, f64)>, Option<FinalIterate>)> {
+    let (store, _step) = checkpoint::load_t::<f64>(path)?;
+    let mut series = Vec::new();
+    let mut iterate = None;
+    for prm in store.params() {
+        if prm.name == "series" {
+            let k = prm.mat.cols();
+            let d = prm.mat.as_slice();
+            series = (0..k).map(|i| (d[i] as usize, d[k + i])).collect();
+        } else if let Some(meta) = prm.name.strip_prefix(SPILL_ITERATE_PREFIX) {
+            let parts: Vec<&str> = meta.split('/').collect();
+            if parts.len() != 4 {
+                return Err(anyhow!("bad iterate metadata '{meta}' in {}", path.display()));
+            }
+            let domain = JobDomain::parse(parts[0])
+                .ok_or_else(|| anyhow!("bad iterate domain '{}'", parts[0]))?;
+            let batch: usize = parts[1].parse()?;
+            let p: usize = parts[2].parse()?;
+            let n: usize = parts[3].parse()?;
+            let data: Vec<f32> = prm.mat.as_slice().iter().map(|&v| v as f32).collect();
+            iterate = Some(FinalIterate { domain, batch, p, n, data });
+        }
+    }
+    Ok((series, iterate))
 }
 
 impl Inner {
@@ -919,6 +1060,54 @@ impl Inner {
         self.cfg.state_dir.as_ref().map(|d| d.join(format!("job-{id}.ckpt")))
     }
 
+    /// Sidecar path for a terminal job's spilled series + iterate.
+    fn spill_path(&self, id: JobId) -> Option<PathBuf> {
+        self.cfg.state_dir.as_ref().map(|d| d.join(format!("job-{id}.series.ckpt")))
+    }
+
+    /// Spill a terminal job's frozen series + final iterate to
+    /// `job-<id>.series.ckpt` in the POGO-CKPT dtype-tagged framing, so
+    /// the v2 result surface survives a restart (and the federated front
+    /// door can re-read results after a backend comes back). Best effort,
+    /// like [`persist`](Self::persist): a full disk degrades durability,
+    /// never the daemon.
+    fn spill(&self, id: JobId) {
+        let Some(path) = self.spill_path(id) else { return };
+        let (series, iterate, steps_done) = {
+            let st = self.state.lock().unwrap();
+            let Some(e) = st.jobs.get(&id) else { return };
+            if !e.state.is_terminal() {
+                return;
+            }
+            (e.series_final.clone(), e.iterate.clone(), e.steps_done)
+        };
+        let series = series.unwrap_or_default();
+        if series.is_empty() && iterate.is_none() {
+            return; // nothing beyond the state file to keep
+        }
+        let store = spill_store(&series, iterate.as_deref());
+        if let Err(e) = checkpoint::save_t::<f64>(&store, steps_done, &path) {
+            log::warn!("failed to spill job {id} series to {}: {e:#}", path.display());
+        }
+    }
+
+    /// Reload a terminal job's spilled series + iterate on recovery.
+    /// Missing or unreadable spills degrade to the pre-durability
+    /// behaviour (scalars only), never fail recovery.
+    fn load_spill(&self, id: JobId) -> (Option<Arc<Vec<(usize, f64)>>>, Option<Arc<FinalIterate>>) {
+        let Some(path) = self.spill_path(id) else { return (None, None) };
+        if !path.exists() {
+            return (None, None);
+        }
+        match read_spill(&path) {
+            Ok((series, iterate)) => (Some(Arc::new(series)), iterate.map(Arc::new)),
+            Err(e) => {
+                log::warn!("ignoring unreadable series spill {}: {e:#}", path.display());
+                (None, None)
+            }
+        }
+    }
+
     /// Persist one job's spec + state to the state dir (best effort: a
     /// full disk must not take the daemon down).
     fn persist(&self, id: JobId) {
@@ -965,9 +1154,9 @@ impl Inner {
     /// running at the previous daemon's death) are re-queued — their
     /// checkpoints, if any, make the re-run resume instead of restart —
     /// and re-held against their tenant's quota and the cost budget.
-    /// Terminal jobs stay queryable (series/iterate are in-memory
-    /// surfaces and do not survive a restart). Malformed files are
-    /// skipped with a warning, never fatal.
+    /// Terminal jobs stay queryable, with their full series + final
+    /// iterate reloaded from the `job-<id>.series.ckpt` spill when one
+    /// exists. Malformed files are skipped with a warning, never fatal.
     fn recover(&self) {
         let Some(dir) = &self.cfg.state_dir else { return };
         let Ok(entries) = std::fs::read_dir(dir) else { return };
@@ -1022,6 +1211,8 @@ impl Inner {
             if requeue {
                 st.admit_accounting(&tenant, cost);
             }
+            let (series_final, iterate) =
+                if requeue { (None, None) } else { self.load_spill(id) };
             st.jobs.insert(
                 id,
                 Entry {
@@ -1034,8 +1225,8 @@ impl Inner {
                     steps_done,
                     tail: VecDeque::new(),
                     series: VecDeque::new(),
-                    series_final: None,
-                    iterate: None,
+                    series_final,
+                    iterate,
                     bus: if requeue {
                         ProgressBus::new()
                     } else {
@@ -1173,6 +1364,7 @@ fn worker_loop(inner: Arc<Inner>) {
             bus.close(state);
         }
         inner.persist(id);
+        inner.spill(id);
         inner.prune();
         inner.cv.notify_all();
     }
@@ -1610,6 +1802,9 @@ mod tests {
         // Fresh ids don't collide with recovered ones.
         let c = q2.submit(quick_spec(5)).unwrap();
         assert!(c > b);
+        let before = q2.result_view(a).unwrap();
+        assert_eq!(before.series.len(), 10);
+        let before_iter = before.iterate.clone().expect("iterate present before restart");
         // Terminal states were persisted for the third daemon.
         q2.shutdown();
         let q3 = JobQueue::start(
@@ -1625,12 +1820,64 @@ mod tests {
         let (state, result, _) = q3.snapshot(a).unwrap();
         assert_eq!(state, JobState::Done);
         assert!(result.unwrap().ortho_error <= 1e-3);
-        // Series/iterate are in-memory surfaces: gone after restart,
-        // while the result scalars survive.
+        // The v2 surfaces were spilled at the terminal transition in
+        // POGO-CKPT framing: the full series and the final iterate
+        // survive the restart bit-for-bit alongside the result scalars.
         let view = q3.result_view(a).unwrap();
-        assert!(view.series.is_empty());
-        assert!(view.iterate.is_none());
+        assert_eq!(view.series.len(), before.series.len());
+        for (x, y) in before.series.iter().zip(view.series.iter()) {
+            assert_eq!(x.0, y.0);
+            assert_eq!(x.1.to_bits(), y.1.to_bits());
+        }
+        let it = view.iterate.expect("iterate recovered from spill");
+        assert_eq!(it.domain, before_iter.domain);
+        assert_eq!((it.batch, it.p, it.n), (before_iter.batch, before_iter.p, before_iter.n));
+        assert_eq!(
+            it.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            before_iter.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
         q3.shutdown();
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn retry_after_scales_with_observed_load() {
+        // Cold start (no observations): the old backlog-scaled constant.
+        let wait = Hist::new();
+        let run = Hist::new();
+        assert_eq!(retry_after_from(0, 2, &wait, &run), 1);
+        assert_eq!(retry_after_from(10, 2, &wait, &run), 11);
+        assert_eq!(retry_after_from(1000, 2, &wait, &run), 60);
+        // Observed short waits/runs on an idle queue: a small hint.
+        for _ in 0..10 {
+            wait.record_us(2_000);
+            run.record_us(50_000);
+        }
+        let idle = retry_after_from(0, 2, &wait, &run);
+        // The same latency profile with a deep backlog: a larger hint.
+        let loaded = retry_after_from(64, 2, &wait, &run);
+        assert!(loaded > idle, "loaded {loaded} vs idle {idle}");
+        // Slower jobs push it up further; the hint is capped at 600 s.
+        let slow_wait = Hist::new();
+        let slow_run = Hist::new();
+        for _ in 0..10 {
+            slow_wait.record_us(5_000_000);
+            slow_run.record_us(10_000_000);
+        }
+        assert!(retry_after_from(64, 2, &slow_wait, &slow_run) > loaded);
+        assert_eq!(retry_after_from(1_000_000, 1, &slow_wait, &slow_run), 600);
+    }
+
+    #[test]
+    fn requested_ids_are_honored_and_collisions_refused() {
+        let q = start(0, 8);
+        assert_eq!(q.submit_with_id(quick_spec(10), "front", Some(7)).unwrap(), 7);
+        match q.submit_with_id(quick_spec(10), "front", Some(7)) {
+            Err(SubmitError::IdTaken(7)) => {}
+            other => panic!("expected IdTaken, got {other:?}"),
+        }
+        // The id counter advanced past the requested id.
+        assert_eq!(q.submit(quick_spec(10)).unwrap(), 8);
+        q.shutdown();
     }
 }

@@ -1,0 +1,403 @@
+//! End-to-end tests for `pogo front`: a real federated front door over
+//! real `pogo serve` backends, all on ephemeral loopback ports.
+//!
+//! The headline contracts:
+//! - a job submitted **through the front** lands bit-identically to a
+//!   direct `run_job` of the same spec (the federation adds routing, not
+//!   numerics), with the SSE stream relayed intact;
+//! - placement is deterministic: a second front replica that never saw
+//!   the submission answers for the job via the hash ring;
+//! - per-tenant quotas hold **globally** across shards;
+//! - a killed backend's queued jobs re-list onto a survivor and
+//!   complete, with the re-list visible in `/metrics`;
+//! - spilled results survive a backend restart and re-read through a
+//!   restarted front, byte-for-byte.
+
+use pogo::coordinator::OptimizerSpec;
+use pogo::federate::{Front, FrontAdmission, FrontConfig};
+use pogo::optim::{Engine, Method};
+use pogo::serve::{
+    run_job, JobDomain, JobOutcome, JobSpec, ProblemKind, RunCtl, ServeClient, ServeConfig,
+    Server,
+};
+use std::time::Duration;
+
+const WAIT: Duration = Duration::from_secs(120);
+
+fn start_backend(workers: usize, state_dir: Option<std::path::PathBuf>) -> Server {
+    Server::start(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers,
+        capacity: 64,
+        state_dir,
+    })
+    .expect("backend should bind an ephemeral port")
+}
+
+/// A front over `backends` with manual probing: the interval is parked
+/// at an hour so tests drive node-state transitions deterministically
+/// via `probe_now()`.
+fn start_front(backends: Vec<String>, admission: FrontAdmission) -> Front {
+    Front::start(FrontConfig {
+        addr: "127.0.0.1:0".to_string(),
+        backends,
+        probe_interval: Duration::from_secs(3600),
+        fail_after: 2,
+        admission,
+        state_dir: None,
+    })
+    .expect("front should bind an ephemeral port")
+}
+
+fn spec(problem: ProblemKind, seed: u64) -> JobSpec {
+    let mut s = JobSpec::new(problem, 4, 3, 6);
+    s.name = format!("front-{}-{seed}", problem.name());
+    s.steps = 40;
+    s.seed = seed;
+    s.optimizer = OptimizerSpec::new(Method::Pogo, 0.05).with_engine(Engine::Rust);
+    s
+}
+
+fn counter(metrics: &str, name: &str) -> f64 {
+    metrics
+        .lines()
+        .find(|l| l.starts_with(name))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|v| v.parse::<f64>().ok())
+        .unwrap_or_else(|| panic!("{name} missing from:\n{metrics}"))
+}
+
+/// Jobs through the front behave exactly like jobs against a backend:
+/// SSE streams relay with monotone steps to the terminal state, and the
+/// result is bit-identical to a direct in-process `run_job`.
+#[test]
+fn jobs_through_the_front_match_direct_runs_bit_for_bit() {
+    let b1 = start_backend(2, None);
+    let b2 = start_backend(2, None);
+    let front =
+        start_front(vec![b1.addr().to_string(), b2.addr().to_string()], FrontAdmission::default());
+    let client = ServeClient::new(front.addr().to_string());
+
+    for seed in [101u64, 102, 103, 104] {
+        let job = spec(ProblemKind::Procrustes, seed);
+        let id = client.submit_v2(&job).expect("submit through front");
+        // Follow the relayed SSE stream to its terminal state.
+        let mut steps: Vec<usize> = Vec::new();
+        let terminal = client
+            .stream_events(id, WAIT, |s| {
+                assert!(s.loss.is_finite());
+                steps.push(s.step);
+                true
+            })
+            .expect("relayed SSE stream");
+        assert_eq!(terminal, "done");
+        assert!(steps.windows(2).all(|w| w[0] < w[1]), "steps monotone: {steps:?}");
+        assert_eq!(*steps.last().unwrap(), job.steps);
+
+        let result = client.result_v2(id).expect("result through front");
+        let JobOutcome::Done(direct) = run_job(&job, &RunCtl::default()).expect("direct run")
+        else {
+            panic!("direct run not done")
+        };
+        assert_eq!(
+            result.get("final_loss").as_f64().unwrap().to_bits(),
+            direct.final_loss.to_bits(),
+            "seed {seed}: the front changed the numbers"
+        );
+        assert_eq!(result.get("series").as_arr().unwrap().len(), job.steps);
+    }
+
+    // The front's own surfaces are live: healthz names the role, metrics
+    // carries the per-backend gauges, /front/nodes lists both nodes up.
+    let (code, _, body) =
+        pogo::serve::http::request_full(&front.addr().to_string(), "GET", "/healthz", None, &[])
+            .unwrap();
+    assert_eq!(code, 200);
+    let health = pogo::util::json::Json::parse(&body).unwrap();
+    assert_eq!(health.get("role").as_str(), Some("front"));
+    assert_eq!(health.get("backends_up").as_usize(), Some(2));
+    let metrics = client.metrics().expect("front metrics");
+    assert!(metrics.contains(&format!("pogo_front_backend_up{{backend=\"{}\"}} 1", b1.addr())));
+    assert!(metrics.contains(&format!("pogo_front_backend_up{{backend=\"{}\"}} 1", b2.addr())));
+    assert_eq!(counter(&metrics, "pogo_front_jobs_submitted_total"), 4.0);
+
+    front.shutdown();
+    b1.shutdown();
+    b2.shutdown();
+}
+
+/// Placement is a pure function of (node set, job id): a second front
+/// replica that never saw the submission resolves the same owner through
+/// the hash ring and serves reads for it.
+#[test]
+fn any_front_replica_answers_for_any_job() {
+    let b1 = start_backend(2, None);
+    let b2 = start_backend(2, None);
+    let backends = vec![b1.addr().to_string(), b2.addr().to_string()];
+    let front_a = start_front(backends.clone(), FrontAdmission::default());
+    // Replica B sees the same node set in a different order — rendezvous
+    // hashing is node-order-free.
+    let front_b = start_front(
+        backends.iter().rev().cloned().collect(),
+        FrontAdmission::default(),
+    );
+
+    let job = spec(ProblemKind::Pca, 201);
+    let client_a = ServeClient::new(front_a.addr().to_string());
+    let client_b = ServeClient::new(front_b.addr().to_string());
+
+    // Submit through A; the receipt names the backend A placed on.
+    let (code, headers, body) = pogo::serve::http::request_full(
+        &front_a.addr().to_string(),
+        "POST",
+        "/v2/jobs",
+        Some(&job.to_json().to_string()),
+        &[],
+    )
+    .unwrap();
+    assert_eq!(code, 202, "{body}");
+    let placed_on = headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case("x-pogo-backend"))
+        .map(|(_, v)| v.clone())
+        .expect("submit receipt names the placement");
+    let id = pogo::util::json::Json::parse(&body).unwrap().get("id").as_usize().unwrap() as u64;
+
+    // The ring agrees with the receipt, from either replica's node list.
+    assert_eq!(pogo::federate::ring::owner(&backends, id), Some(placed_on.as_str()));
+
+    // Replica B — which never saw the submission — serves the job.
+    let status = client_b.wait_terminal_v2(id, WAIT).expect("status via replica B");
+    assert_eq!(status.get("state").as_str(), Some("done"));
+    let via_b = client_b.result_v2(id).expect("result via replica B");
+    let via_a = client_a.result_v2(id).expect("result via replica A");
+    assert_eq!(
+        via_a.get("final_loss").as_f64().unwrap().to_bits(),
+        via_b.get("final_loss").as_f64().unwrap().to_bits()
+    );
+
+    front_a.shutdown();
+    front_b.shutdown();
+    b1.shutdown();
+    b2.shutdown();
+}
+
+/// The global half of split admission: a tenant quota of 2 holds across
+/// both shards — the third submission 429s at the front with a
+/// `Retry-After`, even though each backend individually has room.
+#[test]
+fn tenant_quota_is_enforced_globally_across_shards() {
+    let b1 = start_backend(1, None);
+    let b2 = start_backend(1, None);
+    let front = start_front(
+        vec![b1.addr().to_string(), b2.addr().to_string()],
+        FrontAdmission { tenant_quota: 2, cost_cap: 0 },
+    );
+    let addr = front.addr().to_string();
+    let alice = ServeClient::new(addr.clone()).with_api_key("alice");
+
+    let mut long = spec(ProblemKind::Replay, 301);
+    long.steps = 500_000;
+    let id_a = alice.submit_v2(&long).expect("first");
+    let id_b = alice.submit_v2(&long).expect("second");
+
+    // Third submission: refused at the front door, before any backend.
+    let (code, headers, body) = pogo::serve::http::request_full(
+        &addr,
+        "POST",
+        "/v2/jobs",
+        Some(&long.to_json().to_string()),
+        &[("X-Api-Key", "alice")],
+    )
+    .unwrap();
+    assert_eq!(code, 429, "{body}");
+    assert!(body.contains("federation"), "{body}");
+    let retry_after = headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case("retry-after"))
+        .and_then(|(_, v)| v.parse::<u64>().ok())
+        .expect("429 carries Retry-After");
+    assert!(retry_after >= 1);
+
+    // A different tenant is unaffected.
+    let bob = ServeClient::new(addr.clone()).with_api_key("bob");
+    let ok = bob.submit_v2(&spec(ProblemKind::Quartic, 302)).expect("bob submits");
+    bob.wait_terminal_v2(ok, WAIT).expect("bob's job terminal");
+
+    // The refusals are counted, and cancelling frees the slots globally.
+    let metrics = alice.metrics().expect("metrics");
+    assert!(
+        metrics.contains("pogo_front_admission_rejected_total{cause=\"quota\"} 1"),
+        "{metrics}"
+    );
+    alice.cancel_v2(id_a).expect("cancel a");
+    alice.cancel_v2(id_b).expect("cancel b");
+    let id_c = alice.submit_v2(&spec(ProblemKind::Quartic, 303)).expect("after release");
+    alice.wait_terminal_v2(id_c, WAIT).expect("terminal");
+
+    front.shutdown();
+    b1.shutdown();
+    b2.shutdown();
+}
+
+/// The failover proof: two backends, the owner of a queued job killed
+/// (listener closed mid-queue, the exact crash shape of `kill -9`), the
+/// job re-listed onto the survivor with its original id pinned, and the
+/// result through the front bit-identical to a direct run. The front's
+/// `/metrics` counts the re-list and drops the dead node's gauge to 0.
+#[test]
+fn killed_backend_jobs_relist_onto_the_survivor_and_complete() {
+    let b1 = start_backend(1, None);
+    let b2 = start_backend(1, None);
+    let addr1 = b1.addr().to_string();
+    let addr2 = b2.addr().to_string();
+    let front =
+        start_front(vec![addr1.clone(), addr2.clone()], FrontAdmission::default());
+    let front_addr = front.addr().to_string();
+    let client = ServeClient::new(front_addr.clone());
+
+    // Pin both single-worker backends with direct (non-federated)
+    // blocker jobs so anything placed through the front queues. The
+    // blockers also hold each backend's local id 1, forcing the front's
+    // id-collision (409) retry path on submit.
+    let mut blocker = spec(ProblemKind::Replay, 900);
+    blocker.steps = 5_000_000;
+    let direct1 = ServeClient::new(addr1.clone());
+    let direct2 = ServeClient::new(addr2.clone());
+    let blocker1 = direct1.submit_v2(&blocker).expect("blocker on b1");
+    let blocker2 = direct2.submit_v2(&blocker).expect("blocker on b2");
+
+    let victim = spec(ProblemKind::Procrustes, 901);
+    let id = client.submit_v2(&victim).expect("victim through front");
+    let status = client.status_v2(id).expect("victim status");
+    assert_eq!(status.get("state").as_str(), Some("queued"), "victim should be waiting");
+
+    // Kill the victim's owner: dropping the Server closes its listener
+    // at once (drain only begins; the queued victim is never claimed).
+    let owner = pogo::federate::ring::owner(&[addr1.clone(), addr2.clone()], id)
+        .expect("two nodes up")
+        .to_string();
+    let (survivor_client, survivor_blocker, survivor_addr) = if owner == addr1 {
+        drop(b1);
+        (direct2, blocker2, addr2.clone())
+    } else {
+        drop(b2);
+        (direct1, blocker1, addr1.clone())
+    };
+    // Free the survivor's worker so the re-listed victim can run.
+    survivor_client.cancel_v2(survivor_blocker).expect("cancel survivor blocker");
+
+    // Two failed probes mark the owner Down and re-list its jobs.
+    front.probe_now();
+    front.probe_now();
+
+    let metrics = client.metrics().expect("front metrics");
+    assert!(
+        metrics.contains(&format!("pogo_front_backend_up{{backend=\"{owner}\"}} 0")),
+        "{metrics}"
+    );
+    assert!(
+        metrics.contains(&format!("pogo_front_backend_up{{backend=\"{survivor_addr}\"}} 1")),
+        "{metrics}"
+    );
+    assert!(counter(&metrics, "pogo_front_relists_total") >= 1.0, "{metrics}");
+
+    // The job completes on the survivor, reachable under its original id
+    // through the front, flagged as resubmitted, and bit-identical to a
+    // direct run of the same spec.
+    let result = client.wait_result_v2(id, WAIT).expect("failover result");
+    let JobOutcome::Done(direct) = run_job(&victim, &RunCtl::default()).expect("direct run")
+    else {
+        panic!("direct run not done")
+    };
+    assert_eq!(
+        result.get("final_loss").as_f64().unwrap().to_bits(),
+        direct.final_loss.to_bits(),
+        "failover changed the numbers"
+    );
+    let (code, headers, _) = pogo::serve::http::request_full(
+        &front_addr,
+        "GET",
+        &format!("/v2/jobs/{id}"),
+        None,
+        &[],
+    )
+    .unwrap();
+    assert_eq!(code, 200);
+    assert!(
+        headers
+            .iter()
+            .any(|(k, v)| k.eq_ignore_ascii_case("x-pogo-resubmitted") && v == "1"),
+        "{headers:?}"
+    );
+
+    front.shutdown();
+    // The survivor still holds a worker slot; shut it down gracefully.
+    survivor_client.cancel_v2(id).ok();
+}
+
+/// Durability: results spilled to a backend's `--state-dir` survive a
+/// full backend restart (on a new port) *and* a front restart — the
+/// restarted front re-reads the same series byte-for-byte through its
+/// persisted placement table plus ring fallback.
+#[test]
+fn spilled_results_survive_backend_and_front_restarts() {
+    let base = std::env::temp_dir().join(format!("pogo_federate_e2e_{}", std::process::id()));
+    let backend_dir = base.join("backend");
+    let front_dir = base.join("front");
+    std::fs::remove_dir_all(&base).ok();
+    std::fs::create_dir_all(&backend_dir).unwrap();
+    std::fs::create_dir_all(&front_dir).unwrap();
+
+    let job = spec(ProblemKind::Procrustes, 401);
+    let (id, series_before) = {
+        let backend = start_backend(2, Some(backend_dir.clone()));
+        let front = Front::start(FrontConfig {
+            addr: "127.0.0.1:0".to_string(),
+            backends: vec![backend.addr().to_string()],
+            probe_interval: Duration::from_secs(3600),
+            fail_after: 2,
+            admission: FrontAdmission::default(),
+            state_dir: Some(front_dir.clone()),
+        })
+        .expect("front");
+        let client = ServeClient::new(front.addr().to_string());
+        let id = client.submit_v2(&job).expect("submit");
+        let result = client.wait_result_v2(id, WAIT).expect("result");
+        let series = result.get("series").clone();
+        front.shutdown();
+        backend.shutdown();
+        (id, series)
+    };
+    assert_eq!(series_before.as_arr().unwrap().len(), job.steps);
+
+    // Everything restarts: the backend on a NEW port (recovering its
+    // spilled series), the front from its persisted placement table.
+    let backend = start_backend(2, Some(backend_dir.clone()));
+    let front = Front::start(FrontConfig {
+        addr: "127.0.0.1:0".to_string(),
+        backends: vec![backend.addr().to_string()],
+        probe_interval: Duration::from_secs(3600),
+        fail_after: 2,
+        admission: FrontAdmission::default(),
+        state_dir: Some(front_dir.clone()),
+    })
+    .expect("restarted front");
+    let client = ServeClient::new(front.addr().to_string());
+
+    let result = client.result_v2(id).expect("re-read spilled result through front");
+    assert_eq!(result.get("state").as_str(), Some("done"));
+    assert_eq!(
+        result.get("series").to_string(),
+        series_before.to_string(),
+        "spilled series must re-read byte-for-byte"
+    );
+    // A restarted front also keeps allocating ids above what it placed.
+    let fresh = client.submit_v2(&spec(ProblemKind::Quartic, 402)).expect("fresh submit");
+    assert!(fresh > id);
+    client.wait_terminal_v2(fresh, WAIT).expect("fresh job");
+
+    front.shutdown();
+    backend.shutdown();
+    std::fs::remove_dir_all(&base).ok();
+}
